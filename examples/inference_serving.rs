@@ -1,0 +1,126 @@
+//! END-TO-END driver: model serving through the full three-layer stack.
+//!
+//! Proves all layers compose on a real workload:
+//!   L1/L2 — the Pallas-kernel transformer, AOT-compiled by
+//!           `make artifacts` into `artifacts/*.hlo.txt`;
+//!   runtime — Rust loads the HLO text and compiles it once on the PJRT
+//!           CPU client (Python is NOT running);
+//!   L3    — RDMAvisor's lock-free shared-memory channels carry request
+//!           descriptors from real client threads to the daemon-side
+//!           batcher, which forms dynamic batches and executes the model.
+//!
+//! Reports wall-clock latency percentiles, throughput, and batch shape —
+//! the serving metrics a deployment would watch. Recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example inference_serving`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rdmavisor::apps::inference::InferenceEngine;
+use rdmavisor::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let n_clients = args.usize_or("clients", 4);
+    let per_client = args.u64_or("requests", 64);
+    let window = args.usize_or("window", 4);
+    let dir = args.str_or("artifacts", "artifacts");
+
+    let engine = InferenceEngine::new(&dir, n_clients, 1024);
+    println!(
+        "engine up: {} client channels, seq_len {}",
+        n_clients,
+        engine.seq_len()
+    );
+
+    // daemon-side serving thread (owns the PJRT executor)
+    let server = {
+        let engine = engine.clone();
+        std::thread::spawn(move || engine.serve_loop())
+    };
+
+    // warm-up request so PJRT compilation cost doesn't pollute latencies
+    engine.submit(0, u64::MAX);
+    let warm = Instant::now();
+    loop {
+        if engine.reap(0).iter().any(|&t| t == u64::MAX) {
+            break;
+        }
+        if warm.elapsed().as_secs() > 120 {
+            panic!("warmup timed out");
+        }
+        std::thread::yield_now();
+    }
+    println!("warmup done in {:.2?} (artifact compile + first batch)", warm.elapsed());
+
+    // real client threads: closed loop with `window` outstanding each
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let engine: Arc<InferenceEngine> = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut lats = Vec::with_capacity(per_client as usize);
+            let mut outstanding: Vec<(u64, Instant)> = Vec::new();
+            let mut next = 0u64;
+            let mut done = 0u64;
+            while done < per_client {
+                while outstanding.len() < window && next < per_client {
+                    let tag = (c as u64) << 32 | next;
+                    if engine.submit(c, tag) {
+                        outstanding.push((tag, Instant::now()));
+                        next += 1;
+                    }
+                }
+                for tag in engine.reap(c) {
+                    if let Some(pos) = outstanding.iter().position(|(t, _)| *t == tag) {
+                        let (_, t) = outstanding.remove(pos);
+                        lats.push(t.elapsed().as_micros() as u64);
+                        done += 1;
+                    }
+                }
+                std::thread::yield_now();
+            }
+            lats
+        }));
+    }
+
+    let mut lats: Vec<u64> = Vec::new();
+    for h in handles {
+        lats.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed();
+    engine.stop();
+    // wake the server if it is blocked on a doorbell
+    engine.channels[0].submit_bell.ring();
+    let _ = server.join();
+
+    lats.sort_unstable();
+    let pct = |q: f64| lats[((lats.len() - 1) as f64 * q) as usize];
+    let st = engine.stats.lock().unwrap();
+    let total = lats.len() as u64;
+    println!("\n== end-to-end serving results ==");
+    println!("requests      : {total} across {n_clients} clients (window {window})");
+    println!("wall time     : {wall:.2?}");
+    println!("throughput    : {:.1} req/s", total as f64 / wall.as_secs_f64());
+    println!(
+        "latency       : p50 {} µs   p90 {} µs   p99 {} µs",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99)
+    );
+    println!(
+        "batching      : {} batches, mean size {:.2}",
+        st.batches,
+        st.mean_batch()
+    );
+    println!(
+        "model compute : {:.1} ms total ({:.2} ms per batch)",
+        st.model_ns as f64 / 1e6,
+        st.model_ns as f64 / 1e6 / st.batches.max(1) as f64
+    );
+    assert_eq!(total, per_client * n_clients as u64);
+    println!("inference_serving OK");
+}

@@ -1,0 +1,114 @@
+"""AOT export: lower the L2 serving model to HLO text for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per model variant (batch size) plus a ``manifest.json``
+the Rust runtime reads to learn shapes/dtypes, and per-artifact flop/VMEM
+estimates used by EXPERIMENTS.md §Perf.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import attention as attn_k
+from .kernels import mlp as mlp_k
+
+# Serving variants compiled ahead of time: one executable per batch size,
+# selected at runtime by the RaaS inference app's dynamic batcher.
+BATCH_VARIANTS = (1, 4, 8)
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flops_estimate(cfg: model.ModelConfig, batch: int) -> int:
+    """Forward-pass MAC*2 estimate (matmuls only) for §Perf roofline math."""
+    d, f, s, h = cfg.d_model, cfg.d_ff, cfg.seq, cfg.n_heads
+    per_layer = (
+        4 * s * d * d * 2          # q,k,v,o projections
+        + 2 * h * s * s * cfg.head_dim * 2  # qk^T and pv
+        + 2 * s * d * f * 2        # mlp
+    )
+    total = cfg.n_layers * per_layer + s * d * cfg.vocab * 2  # unembed
+    return batch * total
+
+
+def export_variant(cfg: model.ModelConfig, batch: int, out_dir: str) -> dict:
+    """Lower one batch variant and write `<name>.hlo.txt`; return manifest row."""
+    fn, example = model.serving_fn(cfg, batch, seed=SEED, use_kernels=True)
+    lowered = jax.jit(fn).lower(*example)
+    text = to_hlo_text(lowered)
+    name = cfg.variant_name(batch)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "batch": batch,
+        "seq": cfg.seq,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "d_ff": cfg.d_ff,
+        "input": {"shape": [batch, cfg.seq], "dtype": "i32"},
+        "output": {"shape": [batch, cfg.seq, cfg.vocab], "dtype": "f32"},
+        "flops_fwd": flops_estimate(cfg, batch),
+        "vmem_attn_bytes": attn_k.vmem_bytes(
+            cfg.n_heads, cfg.seq, cfg.seq, cfg.head_dim, cfg.block_q
+        ),
+        "vmem_mlp_bytes": mlp_k.vmem_bytes(cfg.block_m, cfg.d_model, cfg.d_ff),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file mode: also write the b1 variant here")
+    ap.add_argument("--batches", default=",".join(map(str, BATCH_VARIANTS)))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = model.ModelConfig()
+    rows = []
+    for b in [int(x) for x in args.batches.split(",") if x]:
+        row = export_variant(cfg, b, args.out_dir)
+        rows.append(row)
+        print(f"wrote {row['file']} ({row['sha256'][:12]}, "
+              f"{row['flops_fwd']/1e6:.1f} MFLOP/fwd)")
+
+    manifest = {"seed": SEED, "dtype": cfg.dtype, "variants": rows}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote manifest.json with {len(rows)} variants")
+
+    if args.out:
+        import shutil
+        shutil.copy(os.path.join(args.out_dir, rows[0]["file"]), args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for the RDMAvisor application payload compute.
+
+These kernels implement the compute hot-spots of the model served *through*
+the RaaS layer in the end-to-end serving example: a fused scaled-dot-product
+attention kernel and a tiled two-layer MLP kernel.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the interpret path is both the correctness
+oracle target and the artifact path. Real-TPU performance is *estimated* from
+the BlockSpec schedule (see DESIGN.md §5 and EXPERIMENTS.md §Perf).
+"""
+
+from . import attention, mlp, ref  # noqa: F401

@@ -1,0 +1,142 @@
+"""Fused scaled-dot-product attention as a Pallas kernel.
+
+TPU-minded design (see DESIGN.md §Hardware-Adaptation): the grid iterates
+over (head, q-block); each program instance loads a [BLOCK_Q, head_dim] query
+tile plus the full [seq_k, head_dim] K/V panels for its head into VMEM via
+``BlockSpec``, computes logits on the MXU, applies a numerically-stable
+softmax in f32, and writes the [BLOCK_Q, head_dim] output tile. For the
+serving shapes used here (seq ≤ 256, head_dim ≤ 128) the K/V panels fit VMEM
+comfortably (seq_k × head_dim × 4 B ≤ 128 KiB per operand), so no K-blocking /
+online-softmax pass is needed; ``flash`` variants below add K-blocking with a
+running max/denominator for longer sequences.
+
+Everything is lowered with ``interpret=True`` — see kernels/__init__.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One (head, q-block) program instance: full-K fused attention."""
+    q = q_ref[0]  # [block_q, d]
+    k = k_ref[0]  # [seq_k, d]
+    v = v_ref[0]  # [seq_k, d]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p.astype(v.dtype), v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def attention(q, k, v, *, block_q=DEFAULT_BLOCK_Q, scale=None, interpret=True):
+    """Fused attention over [heads, seq, head_dim] inputs.
+
+    Grid: (heads, seq_q // block_q). K/V panels are indexed by head only, so
+    the HBM->VMEM schedule re-streams K/V once per q-block (the classic
+    non-flash schedule; fine while seq_k*d fits VMEM).
+    """
+    heads, seq_q, d = q.shape
+    seq_k = k.shape[1]
+    if seq_q % block_q != 0:
+        block_q = seq_q  # fall back to one block per head
+    if scale is None:
+        scale = float(1.0 / (d**0.5))
+
+    grid = (heads, seq_q // block_q)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, seq_k, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, seq_k, d), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, seq_q, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, seq_k):
+    """Online-softmax (flash) variant: K/V streamed in block_k chunks.
+
+    Keeps a running (max, denominator, accumulator) triple so VMEM holds only
+    one K/V block at a time — the schedule the paper's GPU-era analogues
+    express with thread-block staging of shared memory.
+    """
+    q = q_ref[0].astype(jnp.float32)  # [block_q, d]
+    block_q, d = q.shape
+    nblk = seq_k // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[0], i * block_k, block_k).astype(
+            jnp.float32
+        )
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[0], i * block_k, block_k).astype(
+            jnp.float32
+        )
+        s = jnp.dot(q, k_blk.T) * scale  # [block_q, block_k]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, v_blk)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    _, l_fin, acc = jax.lax.fori_loop(0, nblk, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l_fin).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, *, block_q=DEFAULT_BLOCK_Q, block_k=64, scale=None, interpret=True
+):
+    """Flash-style attention with K-blocking for sequences beyond VMEM."""
+    heads, seq_q, d = q.shape
+    seq_k = k.shape[1]
+    if seq_q % block_q != 0:
+        block_q = seq_q
+    if seq_k % block_k != 0:
+        block_k = seq_k
+    if scale is None:
+        scale = float(1.0 / (d**0.5))
+
+    grid = (heads, seq_q // block_q)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_k=block_k, seq_k=seq_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, seq_k, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, seq_k, d), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, seq_q, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(heads, seq_q, seq_k, d, block_q=DEFAULT_BLOCK_Q, dtype_bytes=4):
+    """Static VMEM footprint estimate for one program instance (fused path).
+
+    Used by DESIGN.md/EXPERIMENTS.md §Perf to check the schedule against the
+    ~16 MiB/core VMEM budget without TPU hardware.
+    """
+    block_q = min(block_q, seq_q)
+    q_tile = block_q * d * dtype_bytes
+    kv_panels = 2 * seq_k * d * dtype_bytes
+    logits = block_q * seq_k * 4  # f32 accumulation
+    out_tile = block_q * d * dtype_bytes
+    return q_tile + kv_panels + logits + out_tile

@@ -1,0 +1,116 @@
+"""Tiled matmul + fused 2-layer GELU MLP as Pallas kernels.
+
+The matmul kernel is the canonical MXU-shaped tiling: grid over
+(M/block_m, N/block_n, K/block_k) with an f32 VMEM accumulator tile; the K
+axis is the innermost (sequential) grid dimension so the accumulator tile is
+revisited, matching the TPU's preferred stationary-output schedule.
+
+The fused MLP kernel keeps the [block_m, d_ff] hidden activation tile in VMEM
+between the two matmuls, avoiding an HBM round-trip for the activation —
+this is the kernel-level fusion win the serving payload benefits from.
+
+Lowered with ``interpret=True`` (see kernels/__init__.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, nk):
+    """Grid (i, j, k): accumulate a[i,k] @ b[k,j] into the revisited out tile.
+
+    K is the innermost (sequential) grid axis, so o_ref maps to the same
+    [block_m, block_n] tile for all k — the stationary-output schedule. The
+    tile is zeroed at k==0 and accumulated in place (f32 output dtype).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul(a, b, *, block_m=128, block_n=128, block_k=128, interpret=True):
+    """Tiled a[M,K] @ b[K,N] with an f32 scratch accumulator in VMEM."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"shapes ({m},{k})x({k},{n}) not divisible by blocks "
+        f"({block_m},{block_n},{block_k})"
+    )
+    nk = k // block_k
+    grid = (m // block_m, n // block_n, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One row-block program: full fused x@w1 -> gelu -> @w2 in VMEM."""
+    x = x_ref[...]
+    h = (
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...].astype(jnp.float32)
+    ).astype(x.dtype)
+    h = ref.gelu(h)
+    o_ref[...] = (
+        jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def mlp(x, w1, b1, w2, b2, *, block_m=64, interpret=True):
+    """Fused 2-layer GELU MLP over x[seq, d]; weights stay resident per block.
+
+    Grid: (seq // block_m,). The [d, d_ff] / [d_ff, d] weight panels are
+    re-streamed per row block; the hidden tile never touches HBM.
+    """
+    m, d = x.shape
+    d_ff = w1.shape[1]
+    if m % block_m != 0:
+        block_m = m
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d_ff), lambda i: (0, 0)),
+            pl.BlockSpec((d_ff,), lambda i: (0,)),
+            pl.BlockSpec((d_ff, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def vmem_bytes(block_m, d, d_ff, dtype_bytes=4):
+    """Static VMEM estimate for one fused-MLP program instance."""
+    x_tile = block_m * d * dtype_bytes
+    w = (d * d_ff + d_ff * d + d_ff + d) * dtype_bytes
+    hidden = block_m * d_ff * 4
+    out_tile = block_m * d * dtype_bytes
+    return x_tile + w + hidden + out_tile

@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float assoc.)
+reference here; pytest asserts allclose between the two across a hypothesis
+sweep of shapes and dtypes. The references are also used by the L2 model
+tests to validate the full forward pass.
+"""
+
+import jax.numpy as jnp
+
+
+def softmax(x, axis=-1):
+    """Numerically-stable softmax (explicit, so the oracle has no surprises)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention(q, k, v, scale=None):
+    """Reference scaled-dot-product attention.
+
+    q, k, v: [heads, seq, head_dim] (single sequence; batch is vmapped by
+    the caller). Causal masking is NOT applied — the serving workload is
+    full-context encoding of the request payload.
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    probs = softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def causal_attention(q, k, v, scale=None):
+    """Reference causal attention (used by the decode-style variant)."""
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    seq_q, seq_k = q.shape[-2], k.shape[-2]
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((seq_q, seq_k), dtype=bool), k=seq_k - seq_q)
+    logits = jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+    probs = softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def gelu(x):
+    """tanh-approx GELU, matching the kernel (keep both sides identical)."""
+    c = jnp.asarray(0.7978845608028654, x.dtype)  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def mlp(x, w1, b1, w2, b2):
+    """Reference 2-layer GELU MLP: x[seq, d] @ w1[d, f] -> gelu -> @ w2[f, d]."""
+    h = x @ w1 + b1
+    h = gelu(h)
+    return h @ w2 + b2
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    """Reference LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def matmul(a, b):
+    """Reference matmul for the tiled-matmul kernel."""
+    return a @ b

@@ -1,0 +1,168 @@
+"""Layer-2 JAX model: the application payload compute served through RaaS.
+
+A small encoder-style transformer that the end-to-end serving example runs
+on every RPC payload: token ids -> embedding -> N blocks (LN -> fused Pallas
+attention -> residual -> LN -> fused Pallas MLP -> residual) -> final LN ->
+logits. Weights are generated deterministically from a seed and **baked into
+the HLO as constants**, so the Rust runtime only feeds token ids — no weight
+plumbing across the FFI boundary.
+
+The same forward is available with the pure-jnp reference ops
+(`use_kernels=False`) so pytest can assert the Pallas path matches.
+"""
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import mlp as mlp_k
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Serving-model hyperparameters. Defaults are the e2e example's size."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    seq: int = 64
+    dtype: str = "float32"
+    block_q: int = 32  # pallas attention q-block
+    block_m: int = 32  # pallas mlp row-block
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    def variant_name(self, batch):
+        return f"model_b{batch}"
+
+
+# ~100M-param training-scale config used by examples/train_loop (L2-only,
+# reference path; the serving artifacts use ModelConfig above).
+BIG = ModelConfig(
+    vocab=32000, d_model=768, n_heads=12, n_layers=12, d_ff=3072, seq=512
+)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic parameter pytree (scaled-normal init)."""
+    key = jax.random.PRNGKey(seed)
+    dtype = jnp.dtype(cfg.dtype)
+    n_keys = 4 + cfg.n_layers * 10
+    keys = iter(jax.random.split(key, n_keys))
+
+    def norm(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    d, f, h = cfg.d_model, cfg.d_ff, cfg.n_heads
+    params = {
+        "embed": norm(next(keys), (cfg.vocab, d), 0.02),
+        "pos": norm(next(keys), (cfg.seq, d), 0.02),
+        "ln_f": {"gamma": jnp.ones((d,), dtype), "beta": jnp.zeros((d,), dtype)},
+        "unembed": norm(next(keys), (d, cfg.vocab), d**-0.5),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "ln1": {"gamma": jnp.ones((d,), dtype), "beta": jnp.zeros((d,), dtype)},
+            "wq": norm(next(keys), (d, d), d**-0.5),
+            "wk": norm(next(keys), (d, d), d**-0.5),
+            "wv": norm(next(keys), (d, d), d**-0.5),
+            "wo": norm(next(keys), (d, d), d**-0.5),
+            "ln2": {"gamma": jnp.ones((d,), dtype), "beta": jnp.zeros((d,), dtype)},
+            "w1": norm(next(keys), (d, f), d**-0.5),
+            "b1": jnp.zeros((f,), dtype),
+            "w2": norm(next(keys), (f, d), f**-0.5),
+            "b2": jnp.zeros((d,), dtype),
+        }
+        params["layers"].append(layer)
+        for _ in range(4):  # consume the per-layer key budget deterministically
+            next(keys)
+    return params
+
+
+def _split_heads(x, n_heads):
+    seq, d = x.shape
+    return x.reshape(seq, n_heads, d // n_heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    h, seq, hd = x.shape
+    return x.transpose(1, 0, 2).reshape(seq, h * hd)
+
+
+def block_forward(x, layer, cfg: ModelConfig, use_kernels: bool):
+    """One transformer block over x[seq, d_model]."""
+    h = ref.layer_norm(x, layer["ln1"]["gamma"], layer["ln1"]["beta"])
+    q = _split_heads(h @ layer["wq"], cfg.n_heads)
+    k = _split_heads(h @ layer["wk"], cfg.n_heads)
+    v = _split_heads(h @ layer["wv"], cfg.n_heads)
+    if use_kernels:
+        o = attn_k.attention(q, k, v, block_q=cfg.block_q)
+    else:
+        o = ref.attention(q, k, v)
+    x = x + _merge_heads(o) @ layer["wo"]
+
+    h = ref.layer_norm(x, layer["ln2"]["gamma"], layer["ln2"]["beta"])
+    if use_kernels:
+        m = mlp_k.mlp(h, layer["w1"], layer["b1"], layer["w2"], layer["b2"],
+                      block_m=cfg.block_m)
+    else:
+        m = ref.mlp(h, layer["w1"], layer["b1"], layer["w2"], layer["b2"])
+    return x + m
+
+
+def forward_tokens(tokens, params, cfg: ModelConfig, use_kernels: bool = True):
+    """Single-sequence forward: tokens[seq] int32 -> logits[seq, vocab]."""
+    x = params["embed"][tokens] + params["pos"]
+    for layer in params["layers"]:
+        x = block_forward(x, layer, cfg, use_kernels)
+    x = ref.layer_norm(x, params["ln_f"]["gamma"], params["ln_f"]["beta"])
+    return x @ params["unembed"]
+
+
+def batched_forward(tokens, params, cfg: ModelConfig, use_kernels: bool = True):
+    """tokens[batch, seq] -> logits[batch, seq, vocab] (vmap over batch)."""
+    fn = functools.partial(
+        forward_tokens, params=params, cfg=cfg, use_kernels=use_kernels
+    )
+    return jax.vmap(fn)(tokens)
+
+
+def serving_fn(cfg: ModelConfig, batch: int, seed: int = 0, use_kernels: bool = True):
+    """Build the AOT-export function: params closed over (baked as consts).
+
+    Returns (fn, example_args). fn(tokens[batch, seq] i32) ->
+    (logits[batch, seq, vocab] f32,).
+    """
+    params = init_params(cfg, seed)
+
+    def fn(tokens):
+        return (batched_forward(tokens, params, cfg, use_kernels),)
+
+    example = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    return fn, (example,)
+
+
+def loss_fn(params, tokens, cfg: ModelConfig):
+    """Next-token cross-entropy (reference path) — used by the training example."""
+    logits = batched_forward(tokens, params, cfg, use_kernels=False)
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(params, tokens, cfg: ModelConfig, lr: float = 3e-4):
+    """One SGD step; returns (new_params, loss). Used by examples/train_loop."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, cfg)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new_params, loss

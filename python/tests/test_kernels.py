@@ -1,0 +1,192 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes (as mandated); every case asserts allclose
+against kernels/ref.py. interpret=True everywhere (CPU).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # environment without hypothesis: parametrized fallback
+    HAVE_HYPOTHESIS = False
+
+from compile.kernels import attention as attn_k
+from compile.kernels import mlp as mlp_k
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+TOL = {"float32": dict(rtol=2e-5, atol=2e-5), "bfloat16": dict(rtol=5e-2, atol=5e-2)}
+
+
+# ---------------------------------------------------------------- attention
+
+@pytest.mark.parametrize("heads,seq,d", [(1, 16, 8), (2, 32, 16), (4, 64, 32)])
+@pytest.mark.parametrize("block_q", [8, 16, 1000])
+def test_attention_matches_ref(heads, seq, d, block_q):
+    kq, kk, kv = keys(42, 3)
+    q, k, v = rand(kq, (heads, seq, d)), rand(kk, (heads, seq, d)), rand(kv, (heads, seq, d))
+    out = attn_k.attention(q, k, v, block_q=block_q)
+    expect = ref.attention(q, k, v)
+    np.testing.assert_allclose(out, expect, **TOL["float32"])
+
+
+@pytest.mark.parametrize("heads,seq,d", [(2, 32, 16), (4, 64, 32)])
+@pytest.mark.parametrize("block_k", [8, 16])
+def test_flash_attention_matches_ref(heads, seq, d, block_k):
+    kq, kk, kv = keys(7, 3)
+    q, k, v = rand(kq, (heads, seq, d)), rand(kk, (heads, seq, d)), rand(kv, (heads, seq, d))
+    out = attn_k.flash_attention(q, k, v, block_q=16, block_k=block_k)
+    expect = ref.attention(q, k, v)
+    np.testing.assert_allclose(out, expect, **TOL["float32"])
+
+
+def test_flash_equals_fused():
+    kq, kk, kv = keys(3, 3)
+    q, k, v = (rand(k_, (2, 64, 16)) for k_ in (kq, kk, kv))
+    a = attn_k.attention(q, k, v, block_q=32)
+    b = attn_k.flash_attention(q, k, v, block_q=32, block_k=16)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_kv_longer_than_q():
+    """Cross-attention shape: seq_k != seq_q."""
+    kq, kk, kv = keys(11, 3)
+    q = rand(kq, (2, 16, 8))
+    k = rand(kk, (2, 48, 8))
+    v = rand(kv, (2, 48, 8))
+    out = attn_k.attention(q, k, v, block_q=8)
+    np.testing.assert_allclose(out, ref.attention(q, k, v), **TOL["float32"])
+
+
+def test_attention_scale_override():
+    kq, kk, kv = keys(12, 3)
+    q, k, v = (rand(k_, (1, 16, 8)) for k_ in (kq, kk, kv))
+    out = attn_k.attention(q, k, v, scale=0.25)
+    np.testing.assert_allclose(out, ref.attention(q, k, v, scale=0.25), **TOL["float32"])
+
+
+def test_attention_softmax_rows_bounded():
+    """Output rows are convex combos of V rows -> within [min(V), max(V)]."""
+    kq, kk, kv = keys(13, 3)
+    q, k, v = (rand(k_, (2, 32, 8)) for k_ in (kq, kk, kv))
+    out = np.asarray(attn_k.attention(q, k, v))
+    assert out.max() <= np.asarray(v).max() + 1e-4
+    assert out.min() >= np.asarray(v).min() - 1e-4
+
+
+def test_attention_extreme_logits_stable():
+    """Large-magnitude Q/K must not produce NaN (stable softmax)."""
+    kq, kk, kv = keys(14, 3)
+    q = rand(kq, (1, 16, 8), scale=50.0)
+    k = rand(kk, (1, 16, 8), scale=50.0)
+    v = rand(kv, (1, 16, 8))
+    out = np.asarray(attn_k.attention(q, k, v))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, ref.attention(q, k, v), rtol=1e-4, atol=1e-4)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        heads=st.sampled_from([1, 2, 4]),
+        seq_pow=st.integers(3, 6),
+        d=st.sampled_from([8, 16, 32]),
+        block_pow=st.integers(2, 5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_attention_hypothesis_sweep(heads, seq_pow, d, block_pow, seed):
+        seq, block_q = 2**seq_pow, 2**block_pow
+        kq, kk, kv = keys(seed, 3)
+        q, k, v = (rand(k_, (heads, seq, d)) for k_ in (kq, kk, kv))
+        out = attn_k.attention(q, k, v, block_q=block_q)
+        np.testing.assert_allclose(out, ref.attention(q, k, v), **TOL["float32"])
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m_pow=st.integers(3, 6),
+        d=st.sampled_from([8, 16, 32]),
+        ff_mult=st.sampled_from([2, 4]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_mlp_hypothesis_sweep(m_pow, d, ff_mult, seed):
+        m, f = 2**m_pow, d * ff_mult
+        ks = keys(seed, 5)
+        x = rand(ks[0], (m, d))
+        w1, b1 = rand(ks[1], (d, f)), rand(ks[2], (f,), scale=0.1)
+        w2, b2 = rand(ks[3], (f, d)), rand(ks[4], (d,), scale=0.1)
+        out = mlp_k.mlp(x, w1, b1, w2, b2, block_m=min(16, m))
+        np.testing.assert_allclose(
+            out, ref.mlp(x, w1, b1, w2, b2), rtol=1e-4, atol=1e-4
+        )
+
+
+# ---------------------------------------------------------------- mlp/matmul
+
+@pytest.mark.parametrize("m,k,n", [(16, 16, 16), (64, 32, 48), (128, 128, 128)])
+def test_matmul_matches_ref(m, k, n):
+    ka, kb = keys(5, 2)
+    a, b = rand(ka, (m, k)), rand(kb, (k, n))
+    out = mlp_k.matmul(a, b, block_m=16, block_n=16, block_k=16)
+    np.testing.assert_allclose(out, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_single_block():
+    ka, kb = keys(6, 2)
+    a, b = rand(ka, (8, 8)), rand(kb, (8, 8))
+    out = mlp_k.matmul(a, b, block_m=8, block_n=8, block_k=8)
+    np.testing.assert_allclose(out, ref.matmul(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_nondivisible():
+    ka, kb = keys(8, 2)
+    a, b = rand(ka, (10, 8)), rand(kb, (8, 8))
+    with pytest.raises(AssertionError):
+        mlp_k.matmul(a, b, block_m=4, block_n=4, block_k=4)
+
+
+@pytest.mark.parametrize("m,d,f,block_m", [(16, 8, 32, 8), (64, 32, 64, 16), (32, 16, 64, 1000)])
+def test_mlp_matches_ref(m, d, f, block_m):
+    ks = keys(9, 5)
+    x = rand(ks[0], (m, d))
+    w1, b1 = rand(ks[1], (d, f)), rand(ks[2], (f,), scale=0.1)
+    w2, b2 = rand(ks[3], (f, d)), rand(ks[4], (d,), scale=0.1)
+    out = mlp_k.mlp(x, w1, b1, w2, b2, block_m=block_m)
+    np.testing.assert_allclose(out, ref.mlp(x, w1, b1, w2, b2), rtol=1e-4, atol=1e-4)
+
+
+def test_gelu_matches_jax_nn():
+    x = jnp.linspace(-4, 4, 101)
+    np.testing.assert_allclose(ref.gelu(x), jax.nn.gelu(x, approximate=True),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- vmem budgets
+
+def test_attention_vmem_within_budget():
+    """The exported serving config's attention tile fits a 16 MiB VMEM."""
+    from compile.model import ModelConfig
+    cfg = ModelConfig()
+    assert attn_k.vmem_bytes(cfg.n_heads, cfg.seq, cfg.seq, cfg.head_dim,
+                             cfg.block_q) < 16 * 2**20
+
+
+def test_mlp_vmem_within_budget():
+    from compile.model import ModelConfig
+    cfg = ModelConfig()
+    assert mlp_k.vmem_bytes(cfg.block_m, cfg.d_model, cfg.d_ff) < 16 * 2**20

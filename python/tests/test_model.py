@@ -1,0 +1,114 @@
+"""L2 correctness: model forward (kernel path vs reference path), shapes,
+determinism, and the training step used by the train-loop example."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.ModelConfig(vocab=64, d_model=32, n_heads=2, n_layers=2, d_ff=64,
+                        seq=16, block_q=8, block_m=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+def toks(key, batch, seq, vocab):
+    return jax.random.randint(key, (batch, seq), 0, vocab, jnp.int32)
+
+
+def test_forward_shape(params):
+    t = toks(jax.random.PRNGKey(0), 2, CFG.seq, CFG.vocab)
+    logits = model.batched_forward(t, params, CFG, use_kernels=False)
+    assert logits.shape == (2, CFG.seq, CFG.vocab)
+
+
+def test_kernel_path_matches_reference(params):
+    """The Pallas-kernel forward must equal the pure-jnp forward."""
+    t = toks(jax.random.PRNGKey(1), 2, CFG.seq, CFG.vocab)
+    a = model.batched_forward(t, params, CFG, use_kernels=True)
+    b = model.batched_forward(t, params, CFG, use_kernels=False)
+    np.testing.assert_allclose(a, b, rtol=5e-5, atol=5e-5)
+
+
+def test_forward_deterministic(params):
+    t = toks(jax.random.PRNGKey(2), 1, CFG.seq, CFG.vocab)
+    a = model.batched_forward(t, params, CFG)
+    b = model.batched_forward(t, params, CFG)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_init_deterministic():
+    p1 = model.init_params(CFG, seed=7)
+    p2 = model.init_params(CFG, seed=7)
+    flat1 = jax.tree_util.tree_leaves(p1)
+    flat2 = jax.tree_util.tree_leaves(p2)
+    for a, b in zip(flat1, flat2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_init_seed_changes_params():
+    p1 = model.init_params(CFG, seed=0)
+    p2 = model.init_params(CFG, seed=1)
+    assert not np.allclose(p1["embed"], p2["embed"])
+
+
+def test_batch_consistency(params):
+    """Row i of a batched forward equals the single-sequence forward."""
+    t = toks(jax.random.PRNGKey(3), 3, CFG.seq, CFG.vocab)
+    batched = model.batched_forward(t, params, CFG, use_kernels=False)
+    for i in range(3):
+        single = model.forward_tokens(t[i], params, CFG, use_kernels=False)
+        np.testing.assert_allclose(batched[i], single, rtol=1e-6, atol=1e-6)
+
+
+def test_serving_fn_signature():
+    fn, example = model.serving_fn(CFG, batch=4)
+    assert example[0].shape == (4, CFG.seq)
+    assert example[0].dtype == jnp.int32
+    out = fn(toks(jax.random.PRNGKey(4), 4, CFG.seq, CFG.vocab))
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (4, CFG.seq, CFG.vocab)
+
+
+def test_logits_finite(params):
+    t = toks(jax.random.PRNGKey(5), 2, CFG.seq, CFG.vocab)
+    logits = model.batched_forward(t, params, CFG)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_layer_norm_normalizes():
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 32)) * 5 + 3
+    y = ref.layer_norm(x, jnp.ones((32,)), jnp.zeros((32,)))
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.std(y, -1)), 1, atol=1e-2)
+
+
+def test_loss_decreases_under_sgd():
+    """A few SGD steps on a fixed batch must reduce the loss (trainability)."""
+    cfg = CFG
+    params = model.init_params(cfg, seed=0)
+    t = toks(jax.random.PRNGKey(8), 4, cfg.seq, cfg.vocab)
+    step = jax.jit(lambda p: model.train_step(p, t, cfg, lr=1e-2))
+    l0 = None
+    p = params
+    for i in range(5):
+        p, loss = step(p)
+        if l0 is None:
+            l0 = float(loss)
+    assert float(loss) < l0, f"loss did not decrease: {l0} -> {float(loss)}"
+
+
+def test_loss_near_uniform_at_init():
+    """Scaled init => initial loss ~ ln(vocab)."""
+    p = model.init_params(CFG, seed=0)
+    t = toks(jax.random.PRNGKey(9), 4, CFG.seq, CFG.vocab)
+    loss = float(model.loss_fn(p, t, CFG))
+    assert abs(loss - np.log(CFG.vocab)) < 1.0

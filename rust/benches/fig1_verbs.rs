@@ -1,0 +1,25 @@
+//! cargo bench: regenerate Fig 1 (verbs throughput vs message size) and
+//! time the harness itself. RDMAVISOR_BENCH_QUICK=1 shrinks the sweep.
+use rdmavisor::figures::{fig1, print_fig1, Budget};
+use rdmavisor::util::bench::Bencher;
+
+fn main() {
+    let budget = Budget::from_env();
+    let rows = fig1(budget);
+    println!("{}", print_fig1(&rows));
+    // paper-shape checks (who wins, where the knees are)
+    let large = rows.iter().find(|r| r.msg_bytes == 1 << 20).unwrap();
+    assert!((large.rc_read - large.rc_write).abs() < 2.0, "RC READ ≈ RC WRITE at 1MB");
+    assert!(large.rc_write > 34.0, "1MB hits line rate");
+    let small = rows.iter().find(|r| r.msg_bytes == 64).unwrap();
+    assert!(small.rc_write < 10.0, "64B is overhead-bound");
+    let mut b = Bencher::from_env();
+    b.bench_with_metric("fig1/rc_write_64k_point", "gbps", || {
+        rdmavisor::workload::scenarios::verbs_sweep_point(
+            rdmavisor::fabric::types::QpTransport::Rc,
+            rdmavisor::fabric::types::Verb::Write,
+            64 << 10, 16, rdmavisor::fabric::time::Ns::from_ms(2),
+        )
+    });
+    b.write_tsv("results/bench_fig1.tsv").ok();
+}

@@ -1,0 +1,15 @@
+//! cargo bench: regenerate Fig 5 (scalability) and assert the paper shape.
+use rdmavisor::figures::{fig5, print_fig5, Budget};
+
+fn main() {
+    let rows = fig5(Budget::from_env());
+    println!("{}", print_fig5(&rows));
+    let low = rows.iter().find(|r| r.conns <= 100).unwrap();
+    let high = rows.iter().max_by_key(|r| r.conns).unwrap();
+    assert!(high.naive.gbps < low.naive.gbps * 0.6, "naive collapses beyond 400 QPs");
+    assert!(high.raas.gbps > low.raas.gbps * 0.9, "RaaS stays stable");
+    std::fs::create_dir_all("results").ok();
+    let mut s = rdmavisor::metrics::Series::new("fig5_scalability", "conns", &["naive", "raas"]);
+    for r in &rows { s.push(r.conns as f64, vec![r.naive.gbps, r.raas.gbps]); }
+    s.write_tsv("results").ok();
+}

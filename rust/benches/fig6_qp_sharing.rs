@@ -1,0 +1,16 @@
+//! cargo bench: regenerate Fig 6 (lock-free vs locked QP sharing).
+use rdmavisor::figures::{fig6, print_fig6, Budget};
+
+fn main() {
+    let rows = fig6(Budget::from_env());
+    println!("{}", print_fig6(&rows));
+    // at the lock-bound point (12 threads) the paper's ordering must hold
+    if let Some(r) = rows.iter().find(|r| r.threads == 12) {
+        assert!(r.locked_q6.mops < r.locked_q3.mops, "q=6 below q=3");
+        assert!(r.raas.mops >= r.locked_q3.mops * 0.95, "RaaS not behind q=3");
+    }
+    std::fs::create_dir_all("results").ok();
+    let mut s = rdmavisor::metrics::Series::new("fig6_qp_sharing", "threads", &["raas", "q3", "q6"]);
+    for r in &rows { s.push(r.threads as f64, vec![r.raas.mops, r.locked_q3.mops, r.locked_q6.mops]); }
+    s.write_tsv("results").ok();
+}

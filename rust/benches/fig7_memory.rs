@@ -1,0 +1,14 @@
+//! cargo bench: regenerate Fig 7 (normalized memory vs #applications).
+use rdmavisor::figures::{fig78, print_fig7, Budget};
+
+fn main() {
+    let rows = fig78(Budget::from_env());
+    println!("{}", print_fig7(&rows));
+    let last = rows.last().unwrap();
+    assert!(last.naive_mem > last.apps as f64 * 0.75, "naive memory grows ~linearly");
+    assert!(last.raas_mem < last.naive_mem / 2.0, "RaaS memory sublinear");
+    std::fs::create_dir_all("results").ok();
+    let mut s = rdmavisor::metrics::Series::new("fig7_memory", "apps", &["naive", "raas"]);
+    for r in &rows { s.push(r.apps as f64, vec![r.naive_mem, r.raas_mem]); }
+    s.write_tsv("results").ok();
+}

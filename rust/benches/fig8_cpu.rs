@@ -1,0 +1,14 @@
+//! cargo bench: regenerate Fig 8 (normalized CPU vs #applications).
+use rdmavisor::figures::{fig78, print_fig8, Budget};
+
+fn main() {
+    let rows = fig78(Budget::from_env());
+    println!("{}", print_fig8(&rows));
+    let last = rows.last().unwrap();
+    assert!(last.naive_cpu > last.apps as f64 * 0.75, "naive CPU grows ~linearly (poll thread per app)");
+    assert!(last.raas_cpu < last.naive_cpu / 2.0, "RaaS CPU ~flat (2 service threads)");
+    std::fs::create_dir_all("results").ok();
+    let mut s = rdmavisor::metrics::Series::new("fig8_cpu", "apps", &["naive", "raas"]);
+    for r in &rows { s.push(r.apps as f64, vec![r.naive_cpu, r.raas_cpu]); }
+    s.write_tsv("results").ok();
+}

@@ -1,0 +1,7 @@
+//! Example applications written against the RaaS API — the workloads the
+//! paper's introduction motivates (key-value stores, RPC services, and the
+//! model-serving application used by the end-to-end example).
+
+pub mod kv;
+pub mod rpc;
+pub mod inference;

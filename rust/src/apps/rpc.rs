@@ -1,0 +1,116 @@
+//! A request/response RPC service over the RaaS API (FaSST-style [12]).
+//!
+//! Requests ride the adaptive `send` path; the server replies on the same
+//! logical connection (the peer vQPN routes the response back). Used by
+//! the quickstart example and as the traffic shape for the serving demo.
+
+use crate::fabric::sim::Sim;
+use crate::raas::api::{Flags, RaasError};
+use crate::raas::daemon::{Daemon, Delivery};
+use crate::raas::transport::HostLoad;
+use crate::raas::vqpn::Vqpn;
+
+/// Echo-style RPC server: replies `resp_bytes` to every request.
+pub struct RpcServer {
+    pub app: u32,
+    pub resp_bytes: u64,
+    pub served: u64,
+    /// Accepted connections (server side of each logical conn).
+    pub conns: Vec<Vqpn>,
+    port: u16,
+}
+
+impl RpcServer {
+    pub fn new(daemon: &mut Daemon, port: u16, resp_bytes: u64) -> RpcServer {
+        let app = daemon.register_app();
+        daemon.listen(app, port);
+        RpcServer { app, resp_bytes, served: 0, conns: Vec::new(), port }
+    }
+
+    /// Accept new conns, serve pending requests (one reply per request).
+    pub fn service(&mut self, sim: &mut Sim, daemon: &mut Daemon) -> Result<(), RaasError> {
+        while let Some(c) = daemon.accept(self.app, self.port) {
+            self.conns.push(c);
+        }
+        while let Some(d) = daemon.recv_zero_copy(sim, self.app) {
+            if let Delivery::Message { conn, .. } = d {
+                daemon.send(sim, conn, self.resp_bytes, Flags::default(), 0, HostLoad::default())?;
+                self.served += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// RPC client: issues requests, counts responses.
+pub struct RpcClient {
+    pub app: u32,
+    pub conn: Vqpn,
+    pub req_bytes: u64,
+    pub sent: u64,
+    pub responses: u64,
+}
+
+impl RpcClient {
+    pub fn new(app: u32, conn: Vqpn, req_bytes: u64) -> RpcClient {
+        RpcClient { app, conn, req_bytes, sent: 0, responses: 0 }
+    }
+
+    pub fn call(&mut self, sim: &mut Sim, daemon: &mut Daemon) -> Result<(), RaasError> {
+        daemon.send(sim, self.conn, self.req_bytes, Flags::default(), self.sent, HostLoad::default())?;
+        self.sent += 1;
+        Ok(())
+    }
+
+    /// Drain deliveries; responses are `Message`s from the server.
+    pub fn drain(&mut self, sim: &mut Sim, daemon: &mut Daemon) -> u64 {
+        let mut got = 0;
+        while let Some(d) = daemon.recv(sim, self.app) {
+            if matches!(d, Delivery::Message { .. }) {
+                got += 1;
+            }
+        }
+        self.responses += got;
+        got
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::sim::FabricConfig;
+    use crate::fabric::types::NodeId;
+    use crate::raas::daemon::{connect_via, DaemonConfig};
+
+    #[test]
+    fn request_response_round_trip() {
+        let mut sim = Sim::new(FabricConfig::default());
+        let mut daemons: Vec<Daemon> = (0..2)
+            .map(|i| Daemon::start(&mut sim, NodeId(i), DaemonConfig::default()))
+            .collect();
+        let mut server = RpcServer::new(&mut daemons[1], 5000, 256);
+        let capp = daemons[0].register_app();
+        let conn = connect_via(&mut sim, &mut daemons, 0, capp, 1, 5000).unwrap();
+        let mut client = RpcClient::new(capp, conn, 128);
+
+        for _ in 0..8 {
+            client.call(&mut sim, &mut daemons[0]).unwrap();
+        }
+        for _ in 0..400_000 {
+            daemons[0].pump(&mut sim);
+            server.service(&mut sim, &mut daemons[1]).unwrap();
+            daemons[1].pump(&mut sim);
+            if sim.step().is_none() {
+                daemons[0].pump(&mut sim);
+                server.service(&mut sim, &mut daemons[1]).unwrap();
+                daemons[1].pump(&mut sim);
+                if sim.pending_events() == 0 {
+                    break;
+                }
+            }
+        }
+        client.drain(&mut sim, &mut daemons[0]);
+        assert_eq!(server.served, 8);
+        assert_eq!(client.responses, 8, "every request answered");
+    }
+}

@@ -1,0 +1,204 @@
+//! FaRM-style locked QP sharing [8]: each QP shared by `q` threads.
+//!
+//! QP count drops to `threads / q` (good for the NIC cache), but every
+//! post serializes through the QP's mutex and the lock cache line bounces
+//! between the `q` contending cores — the degradation Fig 6 shows for
+//! q=3 vs q=6, which RDMAvisor's lock-free rings avoid.
+//!
+//! The lock is modeled with [`MutexModel`]: single-server queueing at the
+//! lock plus a per-contender coherence penalty. A thread whose completion
+//! arrives at `t` re-posts at `lock_grant(t) + hold`; the driver gets the
+//! grant times through [`Sim::schedule`] timers.
+
+use crate::fabric::cpu::MutexModel;
+use crate::fabric::mr::{Access, MemoryRegion};
+use crate::fabric::sim::Sim;
+use crate::fabric::time::Ns;
+use crate::fabric::types::{Cqn, NodeId, QpTransport, Qpn};
+use crate::fabric::verbs;
+use crate::fabric::wqe::SendWr;
+
+/// One worker thread bound to a shared QP.
+pub struct LockedThread {
+    pub qp_index: usize,
+    pub remote: NodeId,
+    pub inflight: u32,
+    pub completed_ops: u64,
+}
+
+/// One shared QP with its mutex.
+pub struct SharedQp {
+    pub qpn: Qpn,
+    pub remote: NodeId,
+    pub mutex: MutexModel,
+    pub remote_buf: MemoryRegion,
+}
+
+/// The locked-sharing client stack.
+pub struct LockedSystem {
+    pub node: NodeId,
+    pub cq: Cqn,
+    pub q: usize,
+    pub qps: Vec<SharedQp>,
+    pub threads: Vec<LockedThread>,
+    pub local_buf: MemoryRegion,
+    /// CPU ns each post burns while holding the lock (WQE build + doorbell).
+    pub hold_ns: u64,
+    /// Time threads spent blocked on locks (Fig 6's wasted CPU).
+    pub lock_wait_ns: u64,
+}
+
+impl LockedSystem {
+    /// `threads` worker threads share QPs in groups of `q`; QPs fan out
+    /// round-robin over `servers`.
+    pub fn setup(
+        sim: &mut Sim,
+        client: NodeId,
+        servers: &[NodeId],
+        threads: usize,
+        q: usize,
+        buf_bytes: u64,
+    ) -> LockedSystem {
+        assert!(q >= 1);
+        let cq = sim.create_cq(client, 65_536);
+        // one polling thread for the app (same as RaaS's poller budget)
+        sim.node_mut(client).cpu.polling_threads += 1;
+        let n_qps = threads.div_ceil(q);
+        let local_buf = sim.reg_mr(client, (threads as u64) * buf_bytes, Access::REMOTE_RW, true);
+        let mut qps = Vec::new();
+        for i in 0..n_qps {
+            let remote = servers[i % servers.len()];
+            let server_cq = sim.create_cq(remote, 4096);
+            let pair = verbs::create_connected_pair(
+                sim, QpTransport::Rc, client, remote, cq, cq, server_cq, server_cq,
+            );
+            let remote_buf = sim.reg_mr(remote, buf_bytes * q as u64, Access::REMOTE_RW, true);
+            qps.push(SharedQp { qpn: pair.a.1, remote, mutex: MutexModel::new(), remote_buf });
+        }
+        let threads = (0..threads)
+            .map(|t| LockedThread {
+                qp_index: t / q,
+                remote: qps[t / q].remote,
+                inflight: 0,
+                completed_ops: 0,
+            })
+            .collect();
+        LockedSystem { node: client, cq, q, qps, threads, local_buf, hold_ns: 400, lock_wait_ns: 0 }
+    }
+
+    /// Thread `t` wants to post a READ *now*; it must win the QP mutex
+    /// first. Returns the lock-grant time — call [`Self::post_read_at`]
+    /// when the sim reaches it (via a [`Sim::schedule`] timer).
+    pub fn acquire_for_post(&mut self, now: Ns, t: usize) -> Ns {
+        let thread = &self.threads[t];
+        let qp = &mut self.qps[thread.qp_index];
+        let (start, end) = qp.mutex.acquire(now, self.hold_ns, self.q);
+        self.lock_wait_ns += start.0.saturating_sub(now.0);
+        end
+    }
+
+    /// Execute the post after the lock was granted.
+    pub fn post_read_at(&mut self, sim: &mut Sim, t: usize, len: u64, offset: u64) {
+        let thread = &mut self.threads[t];
+        let qp = &self.qps[thread.qp_index];
+        let off = offset % (qp.remote_buf.len - len).max(1);
+        let wr = SendWr::read(
+            t as u64,
+            len,
+            self.local_buf.key,
+            self.local_buf.addr + (t as u64) * len,
+            qp.remote_buf.key,
+            qp.remote_buf.addr + off,
+        );
+        // the critical section burns CPU on the posting core
+        sim.node_mut(self.node).cpu.charge(self.hold_ns + 25);
+        sim.post_send(self.node, qp.qpn, wr).expect("locked post_read");
+        thread.inflight += 1;
+    }
+
+    /// Poll the shared CQ; returns thread ids whose ops completed.
+    pub fn poll(&mut self, sim: &mut Sim) -> Vec<usize> {
+        let mut ready = Vec::new();
+        for cqe in sim.poll_cq(self.node, self.cq, 64) {
+            let t = cqe.wr_id as usize;
+            if let Some(thread) = self.threads.get_mut(t) {
+                thread.inflight = thread.inflight.saturating_sub(1);
+                thread.completed_ops += 1;
+                ready.push(t);
+            }
+        }
+        ready
+    }
+
+    pub fn qp_count(&self) -> usize {
+        self.qps.len()
+    }
+
+    /// Aggregate contended time across all QP mutexes.
+    pub fn total_contended_ns(&self) -> u64 {
+        self.qps.iter().map(|q| q.mutex.contended_ns_total).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::sim::FabricConfig;
+
+    #[test]
+    fn qp_count_is_threads_over_q() {
+        let mut sim = Sim::new(FabricConfig::default());
+        let servers = [NodeId(1), NodeId(2), NodeId(3)];
+        let sys = LockedSystem::setup(&mut sim, NodeId(0), &servers, 12, 3, 64 << 10);
+        assert_eq!(sys.qp_count(), 4);
+        let sys6 = LockedSystem::setup(&mut sim, NodeId(0), &servers, 12, 6, 64 << 10);
+        assert_eq!(sys6.qp_count(), 2);
+    }
+
+    #[test]
+    fn lock_serializes_concurrent_posters() {
+        let mut sim = Sim::new(FabricConfig::default());
+        let servers = [NodeId(1)];
+        let mut sys = LockedSystem::setup(&mut sim, NodeId(0), &servers, 6, 6, 64 << 10);
+        // all six threads try to post at t=0 on the same QP
+        let grants: Vec<Ns> = (0..6).map(|t| sys.acquire_for_post(Ns(0), t)).collect();
+        for w in grants.windows(2) {
+            assert!(w[1] > w[0], "grants must serialize: {grants:?}");
+        }
+        assert!(sys.lock_wait_ns > 0);
+        // per-grant spacing grows with q (coherence penalty)
+        let spacing_q6 = grants[1].0 - grants[0].0;
+        let mut sys3 = LockedSystem::setup(&mut sim, NodeId(0), &servers, 6, 3, 64 << 10);
+        let g3: Vec<Ns> = (0..3).map(|t| sys3.acquire_for_post(Ns(0), t)).collect();
+        let spacing_q3 = g3[1].0 - g3[0].0;
+        assert!(spacing_q6 > spacing_q3, "q=6 lock slower than q=3");
+    }
+
+    #[test]
+    fn end_to_end_read_through_locked_qp() {
+        let mut sim = Sim::new(FabricConfig::default());
+        let servers = [NodeId(1)];
+        let mut sys = LockedSystem::setup(&mut sim, NodeId(0), &servers, 3, 3, 256 << 10);
+        // post via the lock protocol: acquire, schedule, post on grant
+        for t in 0..3 {
+            let grant = sys.acquire_for_post(sim.now(), t);
+            sim.schedule(grant, t as u64);
+        }
+        let mut completed = 0;
+        for _ in 0..200_000 {
+            let Some(notes) = sim.step() else { break };
+            for n in notes {
+                match n {
+                    crate::fabric::sim::Notification::Timer { token } => {
+                        sys.post_read_at(&mut sim, token as usize, 64 << 10, 0);
+                    }
+                    crate::fabric::sim::Notification::CqeReady { .. } => {
+                        completed += sys.poll(&mut sim).len();
+                    }
+                }
+            }
+        }
+        completed += sys.poll(&mut sim).len();
+        assert_eq!(completed, 3);
+    }
+}

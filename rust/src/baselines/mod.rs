@@ -1,0 +1,13 @@
+//! The comparison systems of the paper's evaluation.
+//!
+//! * [`naive`] — "naive RDMA": one exclusive RC QP per connection, per-app
+//!   CQ with a dedicated busy-poll thread, per-connection registered
+//!   buffers. This is what Fig 5 collapses beyond ~400 QPs (NIC ICM cache
+//!   thrash) and what Figs 7/8 show growing linearly per application.
+//! * [`locked`] — FaRM-style QP sharing [8]: each QP is shared by `q`
+//!   threads guarded by a mutex. Cuts the QP count (fixing Fig 5's cache
+//!   problem) but serializes posts through locks, which Fig 6 shows
+//!   degrading as `q` grows. RDMAvisor's lock-free vQPN design avoids both.
+
+pub mod naive;
+pub mod locked;

@@ -1,0 +1,198 @@
+//! Naive RDMA baseline: one QP per connection, no sharing.
+//!
+//! Every logical connection gets its own RC QP pair, its own registered
+//! staging buffer on each side, and each *application* runs its own
+//! busy-polling completion thread over its own CQ. This is the "naive
+//! RDMA Read verbs where the QPs are not shared by connections" system of
+//! Fig 5 and the per-application resource fleet of Figs 7/8.
+
+use crate::fabric::mr::{Access, MemoryRegion};
+use crate::fabric::sim::Sim;
+use crate::fabric::types::{Cqn, NodeId, QpTransport, Qpn};
+use crate::fabric::verbs;
+use crate::fabric::wqe::SendWr;
+
+/// One naive connection: exclusive QP + buffers.
+pub struct NaiveConn {
+    pub app: u32,
+    pub remote: NodeId,
+    pub qpn: Qpn,
+    pub local_buf: MemoryRegion,
+    pub remote_buf: MemoryRegion,
+    pub inflight: u32,
+    pub completed_ops: u64,
+}
+
+/// The naive client stack on one node.
+pub struct NaiveSystem {
+    pub node: NodeId,
+    /// One CQ per application (polled by that app's dedicated thread).
+    pub app_cqs: Vec<Cqn>,
+    pub conns: Vec<NaiveConn>,
+    /// Per-conn buffer bytes (both sides), for the memory ledger.
+    pub buf_bytes_per_conn: u64,
+}
+
+impl NaiveSystem {
+    /// Stand up `n_apps` applications on `client`; each opens
+    /// `conns_per_app` connections spread round-robin over `servers`.
+    /// Every app's polling thread pins a core (Fig 8's linear growth).
+    pub fn setup(
+        sim: &mut Sim,
+        client: NodeId,
+        servers: &[NodeId],
+        n_apps: u32,
+        conns_per_app: u32,
+        buf_bytes: u64,
+    ) -> NaiveSystem {
+        let mut app_cqs = Vec::new();
+        let mut conns = Vec::new();
+        for app in 0..n_apps {
+            let cq = sim.create_cq(client, 4096);
+            app_cqs.push(cq);
+            // each app burns one busy-poll core (its Poller-equivalent)
+            sim.node_mut(client).cpu.polling_threads += 1;
+            for c in 0..conns_per_app {
+                let remote = servers[((app * conns_per_app + c) as usize) % servers.len()];
+                let server_cq = sim.create_cq(remote, 4096);
+                let pair = verbs::create_connected_pair(
+                    sim,
+                    QpTransport::Rc,
+                    client,
+                    remote,
+                    cq,
+                    cq,
+                    server_cq,
+                    server_cq,
+                );
+                let local_buf = sim.reg_mr(client, buf_bytes, Access::REMOTE_RW, true);
+                let remote_buf = sim.reg_mr(remote, buf_bytes, Access::REMOTE_RW, true);
+                conns.push(NaiveConn {
+                    app,
+                    remote,
+                    qpn: pair.a.1,
+                    local_buf,
+                    remote_buf,
+                    inflight: 0,
+                    completed_ops: 0,
+                });
+            }
+        }
+        NaiveSystem { node: client, app_cqs, conns, buf_bytes_per_conn: 2 * buf_bytes }
+    }
+
+    /// Post one READ on connection `idx` at `offset`.
+    pub fn post_read(&mut self, sim: &mut Sim, idx: usize, len: u64, offset: u64) {
+        let conn = &mut self.conns[idx];
+        let off = offset % (conn.remote_buf.len - len).max(1);
+        let wr = SendWr::read(
+            idx as u64,
+            len,
+            conn.local_buf.key,
+            conn.local_buf.addr,
+            conn.remote_buf.key,
+            conn.remote_buf.addr + off,
+        );
+        sim.post_send(self.node, conn.qpn, wr).expect("naive post_read");
+        conn.inflight += 1;
+    }
+
+    /// Post one WRITE on connection `idx`.
+    pub fn post_write(&mut self, sim: &mut Sim, idx: usize, len: u64, offset: u64) {
+        let conn = &mut self.conns[idx];
+        let off = offset % (conn.remote_buf.len - len).max(1);
+        let wr = SendWr::write(
+            idx as u64,
+            len,
+            conn.local_buf.key,
+            conn.local_buf.addr,
+            conn.remote_buf.key,
+            conn.remote_buf.addr + off,
+        );
+        sim.post_send(self.node, conn.qpn, wr).expect("naive post_write");
+        conn.inflight += 1;
+    }
+
+    /// Poll every app CQ once; returns indices of connections whose ops
+    /// completed (the driver re-posts on them — closed loop).
+    pub fn poll(&mut self, sim: &mut Sim) -> Vec<usize> {
+        let mut ready = Vec::new();
+        for cq in self.app_cqs.clone() {
+            for cqe in sim.poll_cq(self.node, cq, 64) {
+                let idx = cqe.wr_id as usize;
+                if let Some(conn) = self.conns.get_mut(idx) {
+                    conn.inflight = conn.inflight.saturating_sub(1);
+                    conn.completed_ops += 1;
+                    ready.push(idx);
+                }
+            }
+        }
+        ready
+    }
+
+    /// Memory the naive stack consumes on the client (Fig 7): per-conn QP
+    /// rings + contexts, per-app CQs, per-conn registered buffers + MTT.
+    pub fn client_mem_bytes(&self, sim: &Sim) -> u64 {
+        // all fabric objects + registered regions on the client node belong
+        // to this stack (each connection owns its private buffer fleet)
+        let node = sim.node(self.node);
+        node.fabric_mem_bytes() + node.mrs.registered_bytes
+    }
+
+    /// Cores consumed on the client (Fig 8).
+    pub fn client_cpu_cores(&self, sim: &Sim) -> f64 {
+        let node = sim.node(self.node);
+        node.cpu.cores_used(sim.now())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::sim::FabricConfig;
+
+    fn servers() -> Vec<NodeId> {
+        vec![NodeId(1), NodeId(2), NodeId(3)]
+    }
+
+    #[test]
+    fn setup_creates_qp_per_connection() {
+        let mut sim = Sim::new(FabricConfig::default());
+        let sys = NaiveSystem::setup(&mut sim, NodeId(0), &servers(), 2, 10, 64 << 10);
+        assert_eq!(sys.conns.len(), 20);
+        assert_eq!(sim.node(NodeId(0)).qps.len(), 20, "one QP per conn");
+        assert_eq!(sys.app_cqs.len(), 2);
+        assert_eq!(sim.node(NodeId(0)).cpu.polling_threads, 2);
+    }
+
+    #[test]
+    fn closed_loop_read_completes() {
+        let mut sim = Sim::new(FabricConfig::default());
+        let mut sys = NaiveSystem::setup(&mut sim, NodeId(0), &servers(), 1, 4, 256 << 10);
+        for i in 0..4 {
+            sys.post_read(&mut sim, i, 64 << 10, 0);
+        }
+        let mut done = 0;
+        for _ in 0..100_000 {
+            if sim.step().is_none() {
+                break;
+            }
+            done += sys.poll(&mut sim).len();
+        }
+        done += sys.poll(&mut sim).len();
+        assert_eq!(done, 4);
+        assert_eq!(sim.completed_bytes, 4 * (64 << 10));
+    }
+
+    #[test]
+    fn memory_scales_linearly_with_conns() {
+        let mut sim1 = Sim::new(FabricConfig::default());
+        let s1 = NaiveSystem::setup(&mut sim1, NodeId(0), &servers(), 1, 10, 64 << 10);
+        let mut sim2 = Sim::new(FabricConfig::default());
+        let s2 = NaiveSystem::setup(&mut sim2, NodeId(0), &servers(), 1, 40, 64 << 10);
+        let m1 = s1.client_mem_bytes(&sim1);
+        let m2 = s2.client_mem_bytes(&sim2);
+        let ratio = m2 as f64 / m1 as f64;
+        assert!(ratio > 3.0, "4x conns should be ~4x memory, got {ratio:.2}x");
+    }
+}

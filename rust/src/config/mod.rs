@@ -1,0 +1,171 @@
+//! Experiment / cluster configuration: TOML-subset files → typed configs.
+//!
+//! `rdmavisor --config cluster.toml <subcommand>` lets every knob of the
+//! fabric, daemon and scenarios be set from a file; CLI flags override.
+//! See `examples/cluster.toml` (written by `rdmavisor init-config`).
+
+use crate::fabric::nic::NicConfig;
+use crate::fabric::sim::FabricConfig;
+use crate::fabric::time::Ns;
+use crate::raas::daemon::DaemonConfig;
+use crate::util::tomlmini::{parse, Table};
+use crate::workload::scenarios::ScenarioCfg;
+
+/// Top-level typed configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub fabric: FabricConfig,
+    pub daemon: DaemonConfig,
+    pub scenario: ScenarioCfg,
+}
+
+/// Parse a config document; unknown keys are rejected to catch typos.
+pub fn from_str(doc: &str) -> Result<Config, String> {
+    let t = parse(doc)?;
+    validate_keys(&t)?;
+    let mut cfg = Config {
+        fabric: FabricConfig::default(),
+        daemon: DaemonConfig::default(),
+        scenario: ScenarioCfg::default(),
+    };
+    apply(&t, &mut cfg);
+    Ok(cfg)
+}
+
+pub fn from_file(path: &str) -> Result<Config, String> {
+    let doc = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    from_str(&doc)
+}
+
+const KNOWN_KEYS: &[&str] = &[
+    "fabric.nodes",
+    "fabric.cores_per_node",
+    "fabric.link_gbps",
+    "fabric.mtu",
+    "fabric.switch_latency_ns",
+    "fabric.sq_depth",
+    "fabric.rq_depth",
+    "fabric.max_outstanding",
+    "nic.engine_frame_ns",
+    "nic.engine_wqe_ns",
+    "nic.doorbell_ns",
+    "nic.icm_cache_entries",
+    "nic.icm_miss_ns",
+    "nic.cqe_delay_ns",
+    "daemon.srq_capacity",
+    "daemon.srq_watermark",
+    "daemon.recv_slot_bytes",
+    "daemon.batch_max",
+    "daemon.service_threads",
+    "scenario.conns",
+    "scenario.apps",
+    "scenario.msg_bytes",
+    "scenario.window",
+    "scenario.duration_ms",
+    "scenario.seed",
+];
+
+fn validate_keys(t: &Table) -> Result<(), String> {
+    for k in t.keys() {
+        if !KNOWN_KEYS.contains(&k.as_str()) {
+            return Err(format!("unknown config key: {k}"));
+        }
+    }
+    Ok(())
+}
+
+fn apply(t: &Table, cfg: &mut Config) {
+    let f = &mut cfg.fabric;
+    f.nodes = t.int_or("fabric.nodes", f.nodes as i64) as usize;
+    f.cores_per_node = t.int_or("fabric.cores_per_node", f.cores_per_node as i64) as u32;
+    f.link_gbps = t.float_or("fabric.link_gbps", f.link_gbps);
+    f.mtu = t.int_or("fabric.mtu", f.mtu as i64) as u64;
+    f.switch_latency_ns = t.int_or("fabric.switch_latency_ns", f.switch_latency_ns as i64) as u64;
+    f.sq_depth = t.int_or("fabric.sq_depth", f.sq_depth as i64) as usize;
+    f.rq_depth = t.int_or("fabric.rq_depth", f.rq_depth as i64) as usize;
+    f.max_outstanding = t.int_or("fabric.max_outstanding", f.max_outstanding as i64) as usize;
+
+    let n: &mut NicConfig = &mut f.nic;
+    n.engine_frame_ns = t.int_or("nic.engine_frame_ns", n.engine_frame_ns as i64) as u64;
+    n.engine_wqe_ns = t.int_or("nic.engine_wqe_ns", n.engine_wqe_ns as i64) as u64;
+    n.doorbell_ns = t.int_or("nic.doorbell_ns", n.doorbell_ns as i64) as u64;
+    n.icm_cache_entries = t.int_or("nic.icm_cache_entries", n.icm_cache_entries as i64) as usize;
+    n.icm_miss_ns = t.int_or("nic.icm_miss_ns", n.icm_miss_ns as i64) as u64;
+    n.cqe_delay_ns = t.int_or("nic.cqe_delay_ns", n.cqe_delay_ns as i64) as u64;
+
+    let d = &mut cfg.daemon;
+    d.srq_capacity = t.int_or("daemon.srq_capacity", d.srq_capacity as i64) as usize;
+    d.srq_watermark = t.int_or("daemon.srq_watermark", d.srq_watermark as i64) as usize;
+    d.recv_slot_bytes = t.int_or("daemon.recv_slot_bytes", d.recv_slot_bytes as i64) as u64;
+    d.batch_max = t.int_or("daemon.batch_max", d.batch_max as i64) as usize;
+    d.service_threads = t.int_or("daemon.service_threads", d.service_threads as i64) as u32;
+
+    let s = &mut cfg.scenario;
+    s.conns = t.int_or("scenario.conns", s.conns as i64) as usize;
+    s.apps = t.int_or("scenario.apps", s.apps as i64) as u32;
+    s.msg_bytes = t.int_or("scenario.msg_bytes", s.msg_bytes as i64) as u64;
+    s.window = t.int_or("scenario.window", s.window as i64) as u32;
+    s.duration = Ns::from_ms(t.int_or("scenario.duration_ms", 20) as u64);
+    s.seed = t.int_or("scenario.seed", s.seed as i64) as u64;
+    s.fabric = cfg.fabric.clone();
+}
+
+/// A documented sample config (written by `rdmavisor init-config`).
+pub const SAMPLE: &str = r#"# rdmavisor cluster + experiment configuration
+[fabric]
+nodes = 4               # paper testbed: 4 machines
+cores_per_node = 24     # 4x Xeon, 24 cores total
+link_gbps = 40.0        # 40 Gb ConnectX-3 RoCE
+mtu = 4096
+switch_latency_ns = 1000
+
+[nic]
+icm_cache_entries = 400 # QP-context cache capacity (Fig 5's knee)
+icm_miss_ns = 2500      # PCIe fetch + writeback pipeline stall
+
+[daemon]
+srq_capacity = 4096
+batch_max = 32
+service_threads = 2
+
+[scenario]
+conns = 1000
+msg_bytes = 65536
+window = 1
+duration_ms = 20
+seed = 42
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_parses() {
+        let cfg = from_str(SAMPLE).unwrap();
+        assert_eq!(cfg.fabric.nodes, 4);
+        assert_eq!(cfg.fabric.nic.icm_cache_entries, 400);
+        assert_eq!(cfg.scenario.conns, 1000);
+        assert_eq!(cfg.scenario.duration.0, 20_000_000);
+    }
+
+    #[test]
+    fn defaults_survive_partial_config() {
+        let cfg = from_str("[scenario]\nconns = 7\n").unwrap();
+        assert_eq!(cfg.scenario.conns, 7);
+        assert_eq!(cfg.fabric.link_gbps, 40.0);
+        assert_eq!(cfg.daemon.batch_max, 32);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let err = from_str("[fabric]\nbogus = 1\n").unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
+    }
+
+    #[test]
+    fn scenario_inherits_fabric() {
+        let cfg = from_str("[fabric]\nlink_gbps = 100.0\n").unwrap();
+        assert_eq!(cfg.scenario.fabric.link_gbps, 100.0);
+    }
+}

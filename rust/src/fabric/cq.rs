@@ -1,0 +1,120 @@
+//! Completion queues.
+
+use std::collections::VecDeque;
+
+use super::types::Cqn;
+use super::wqe::Cqe;
+
+/// A completion queue with bounded capacity; overflow is recorded (real
+/// RNICs raise a fatal async event — we latch a flag and count drops).
+#[derive(Debug)]
+pub struct Cq {
+    pub cqn: Cqn,
+    queue: VecDeque<Cqe>,
+    capacity: usize,
+    pub overflowed: bool,
+    pub dropped: u64,
+    /// Lifetime count of CQEs pushed (metrics).
+    pub total: u64,
+}
+
+impl Cq {
+    pub fn new(cqn: Cqn, capacity: usize) -> Self {
+        Cq {
+            cqn,
+            queue: VecDeque::with_capacity(capacity.min(1024)),
+            capacity,
+            overflowed: false,
+            dropped: 0,
+            total: 0,
+        }
+    }
+
+    /// NIC-side push.
+    pub fn push(&mut self, cqe: Cqe) {
+        if self.queue.len() >= self.capacity {
+            self.overflowed = true;
+            self.dropped += 1;
+            return;
+        }
+        self.total += 1;
+        self.queue.push_back(cqe);
+    }
+
+    /// Consumer-side poll of up to `n` completions.
+    pub fn poll(&mut self, n: usize) -> Vec<Cqe> {
+        let k = n.min(self.queue.len());
+        self.queue.drain(..k).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Memory footprint of this CQ (ledger input): entries × CQE size.
+    pub fn mem_bytes(&self) -> u64 {
+        (self.capacity as u64) * CQE_BYTES
+    }
+}
+
+/// Hardware CQE size (ConnectX family: 64 B).
+pub const CQE_BYTES: u64 = 64;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::types::{Qpn, WcStatus};
+    use crate::fabric::wqe::CqeKind;
+
+    fn cqe(wr_id: u64) -> Cqe {
+        Cqe {
+            wr_id,
+            kind: CqeKind::Recv,
+            status: WcStatus::Success,
+            len: 0,
+            imm_data: None,
+            qpn: Qpn(1),
+            src: None,
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut cq = Cq::new(Cqn(0), 16);
+        for i in 0..5 {
+            cq.push(cqe(i));
+        }
+        let got = cq.poll(3);
+        assert_eq!(got.iter().map(|c| c.wr_id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(cq.len(), 2);
+    }
+
+    #[test]
+    fn poll_more_than_present() {
+        let mut cq = Cq::new(Cqn(0), 16);
+        cq.push(cqe(1));
+        assert_eq!(cq.poll(10).len(), 1);
+        assert!(cq.poll(10).is_empty());
+    }
+
+    #[test]
+    fn overflow_latches_and_drops() {
+        let mut cq = Cq::new(Cqn(0), 2);
+        cq.push(cqe(1));
+        cq.push(cqe(2));
+        cq.push(cqe(3));
+        assert!(cq.overflowed);
+        assert_eq!(cq.dropped, 1);
+        assert_eq!(cq.len(), 2);
+    }
+
+    #[test]
+    fn mem_accounting() {
+        let cq = Cq::new(Cqn(0), 1024);
+        assert_eq!(cq.mem_bytes(), 1024 * 64);
+    }
+}

@@ -1,0 +1,123 @@
+//! Discrete-event queue with deterministic FIFO tie-breaking.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::Ns;
+
+struct Entry<E> {
+    at: Ns,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap: earlier time first; FIFO within the same instant.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Pending-event queue of a simulation.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, at: Ns, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at, seq, event });
+    }
+
+    pub fn pop(&mut self) -> Option<(Ns, E)> {
+        self.heap.pop().map(|e| (e.at, e.event))
+    }
+
+    pub fn peek_time(&self) -> Option<Ns> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(Ns(30), "c");
+        q.push(Ns(10), "a");
+        q.push(Ns(20), "b");
+        assert_eq!(q.pop(), Some((Ns(10), "a")));
+        assert_eq!(q.pop(), Some((Ns(20), "b")));
+        assert_eq!(q.pop(), Some((Ns(30), "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_within_same_instant() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(Ns(5), i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((Ns(5), i)));
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(Ns(10), 1);
+        q.push(Ns(5), 0);
+        assert_eq!(q.pop(), Some((Ns(5), 0)));
+        q.push(Ns(7), 2);
+        assert_eq!(q.pop(), Some((Ns(7), 2)));
+        assert_eq!(q.pop(), Some((Ns(10), 1)));
+    }
+
+    #[test]
+    fn peek_time() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(Ns(42), ());
+        assert_eq!(q.peek_time(), Some(Ns(42)));
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,41 @@
+//! Simulated RDMA fabric — the substrate substituting for the paper's
+//! 4-node ConnectX-3 RoCE testbed (see DESIGN.md §Hardware gate).
+//!
+//! A deterministic discrete-event simulator with nanosecond virtual time.
+//! The model captures exactly the mechanisms the paper's evaluation
+//! exercises:
+//!
+//! * **RNIC engine** ([`nic`]) — WQE fetch/processing with per-WQE and
+//!   per-frame costs, doorbell batching, DMA, ACK generation.
+//! * **QP-context (ICM) cache** ([`cache`]) — the finite on-NIC cache whose
+//!   thrashing beyond ~400 QPs causes Fig 5's throughput collapse.
+//! * **Transports** ([`qp`]) — RC / UC / UD with the capability matrix of
+//!   Table 1 enforced (UC: no READ; UD: max message = MTU).
+//! * **Links** ([`switchfab`]) — 40 Gb/s full-duplex ports, MTU framing,
+//!   per-frame wire overhead, propagation; a non-blocking switch.
+//! * **Verbs** ([`verbs`]) — an ibverbs-like façade (`post_send`,
+//!   `post_recv`, `poll_cq`, …) the RaaS layer and baselines are written
+//!   against, exactly as the real prototype is written against libibverbs.
+//! * **CPU ledger** ([`cpu`]) — virtual per-core accounting including a
+//!   mutex contention model (Fig 6) and busy-poll thread costs (Fig 8).
+//!
+//! Everything is seeded and replayable; two runs with the same config
+//! produce bit-identical results.
+
+pub mod time;
+pub mod event;
+pub mod types;
+pub mod mr;
+pub mod wqe;
+pub mod cq;
+pub mod srq;
+pub mod qp;
+pub mod cache;
+pub mod switchfab;
+pub mod cpu;
+pub mod nic;
+pub mod sim;
+pub mod verbs;
+
+pub use sim::{FabricConfig, Sim};
+pub use types::{NodeId, QpTransport, Verb};

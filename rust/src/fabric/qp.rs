@@ -1,0 +1,294 @@
+//! Queue pairs: state machine, send/receive queues, transport rules.
+//!
+//! Enforces the Table-1 capability matrix at post time (UC rejects READ,
+//! UD rejects anything over MTU, …) and models the RC requester's
+//! outstanding-window so reads pipeline realistically.
+
+use std::collections::VecDeque;
+
+use super::srq::RECV_WQE_BYTES;
+use super::types::{max_msg_size, supports, NodeId, QpTransport, Qpn, Srqn, Cqn};
+use super::wqe::{RecvWr, SendWr};
+
+/// Hardware send WQE size (ConnectX family: 64 B typical with one SGE).
+pub const SEND_WQE_BYTES: u64 = 64;
+/// On-NIC QP context size (QPC ~ 256 B in ConnectX parts).
+pub const QP_CONTEXT_BYTES: u64 = 256;
+
+/// QP state machine (subset: the states the verbs path exercises).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QpState {
+    Reset,
+    Init,
+    /// Ready To Receive.
+    Rtr,
+    /// Ready To Send (fully connected).
+    Rts,
+    Error,
+}
+
+/// Errors surfaced by post-time validation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PostError {
+    BadState(QpState),
+    UnsupportedVerb(QpTransport),
+    TooLong { len: u64, max: u64 },
+    SqFull,
+    RqFull,
+    MissingUdDest,
+    MissingRemoteKey,
+}
+
+impl std::fmt::Display for PostError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PostError::BadState(s) => write!(f, "QP not ready (state {s:?})"),
+            PostError::UnsupportedVerb(t) => write!(f, "verb unsupported on {t}"),
+            PostError::TooLong { len, max } => write!(f, "message {len} B > max {max} B"),
+            PostError::SqFull => write!(f, "send queue full"),
+            PostError::RqFull => write!(f, "receive queue full"),
+            PostError::MissingUdDest => write!(f, "UD send without address handle"),
+            PostError::MissingRemoteKey => write!(f, "one-sided verb without rkey"),
+        }
+    }
+}
+
+/// A queue pair.
+#[derive(Debug)]
+pub struct Qp {
+    pub qpn: Qpn,
+    pub transport: QpTransport,
+    pub state: QpState,
+    /// Connected peer (RC/UC); UD resolves per-WR address handles.
+    pub peer: Option<(NodeId, Qpn)>,
+    /// Completion queue for send-side CQEs.
+    pub send_cq: Cqn,
+    /// Completion queue for recv-side CQEs.
+    pub recv_cq: Cqn,
+    /// Receive WQEs come from the SRQ if set, else the private RQ.
+    pub srq: Option<Srqn>,
+    pub sq: VecDeque<SendWr>,
+    pub rq: VecDeque<RecvWr>,
+    pub sq_depth: usize,
+    pub rq_depth: usize,
+    /// RC requester window: max outstanding (un-acked / un-responded) msgs.
+    pub max_outstanding: usize,
+    pub outstanding: usize,
+    /// Lifetime counters (metrics / tests).
+    pub posted_send: u64,
+    pub posted_recv: u64,
+    pub completed: u64,
+}
+
+impl Qp {
+    pub fn new(
+        qpn: Qpn,
+        transport: QpTransport,
+        send_cq: Cqn,
+        recv_cq: Cqn,
+        sq_depth: usize,
+        rq_depth: usize,
+        max_outstanding: usize,
+    ) -> Self {
+        Qp {
+            qpn,
+            transport,
+            state: QpState::Reset,
+            peer: None,
+            send_cq,
+            recv_cq,
+            srq: None,
+            sq: VecDeque::new(),
+            rq: VecDeque::new(),
+            sq_depth,
+            rq_depth,
+            max_outstanding,
+            outstanding: 0,
+            posted_send: 0,
+            posted_recv: 0,
+            completed: 0,
+        }
+    }
+
+    /// INIT → RTR (responder resources ready).
+    pub fn to_rtr(&mut self) {
+        debug_assert!(matches!(self.state, QpState::Reset | QpState::Init));
+        self.state = QpState::Rtr;
+    }
+
+    /// RTR → RTS, binding the peer for connected transports.
+    pub fn to_rts(&mut self, peer: Option<(NodeId, Qpn)>) {
+        self.state = QpState::Rts;
+        if self.transport != QpTransport::Ud {
+            debug_assert!(peer.is_some(), "connected transport requires a peer");
+        }
+        self.peer = peer;
+    }
+
+    /// Validate + enqueue a send WR (does not start NIC processing — the
+    /// [`super::nic`] engine pulls from the SQ).
+    pub fn post_send(&mut self, wr: SendWr, mtu: u64) -> Result<(), PostError> {
+        if self.state != QpState::Rts {
+            return Err(PostError::BadState(self.state));
+        }
+        if !supports(self.transport, wr.verb) {
+            return Err(PostError::UnsupportedVerb(self.transport));
+        }
+        let max = max_msg_size(self.transport, mtu);
+        if wr.len > max {
+            return Err(PostError::TooLong { len: wr.len, max });
+        }
+        if self.sq.len() >= self.sq_depth {
+            return Err(PostError::SqFull);
+        }
+        if self.transport == QpTransport::Ud && wr.ud_dest.is_none() {
+            return Err(PostError::MissingUdDest);
+        }
+        if matches!(wr.verb, super::types::Verb::Write | super::types::Verb::Read)
+            && wr.rkey.is_none()
+        {
+            return Err(PostError::MissingRemoteKey);
+        }
+        self.posted_send += 1;
+        self.sq.push_back(wr);
+        Ok(())
+    }
+
+    /// Validate + enqueue a receive WR on the private RQ.
+    pub fn post_recv(&mut self, wr: RecvWr) -> Result<(), PostError> {
+        if matches!(self.state, QpState::Reset | QpState::Error) {
+            return Err(PostError::BadState(self.state));
+        }
+        if self.srq.is_some() {
+            // Verbs spec: QPs attached to an SRQ must not post to the RQ.
+            return Err(PostError::RqFull);
+        }
+        if self.rq.len() >= self.rq_depth {
+            return Err(PostError::RqFull);
+        }
+        self.posted_recv += 1;
+        self.rq.push_back(wr);
+        Ok(())
+    }
+
+    /// Can the NIC start another message from this SQ (RC window check)?
+    pub fn can_issue(&self) -> bool {
+        !self.sq.is_empty()
+            && (self.transport != QpTransport::Rc || self.outstanding < self.max_outstanding)
+    }
+
+    /// Memory footprint of the QP (ledger): SQ+RQ rings + on-NIC context.
+    pub fn mem_bytes(&self) -> u64 {
+        self.sq_depth as u64 * SEND_WQE_BYTES
+            + self.rq_depth as u64 * RECV_WQE_BYTES
+            + QP_CONTEXT_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::types::{Mrkey, Verb};
+
+    fn mk(t: QpTransport) -> Qp {
+        let mut qp = Qp::new(Qpn(1), t, Cqn(0), Cqn(0), 128, 128, 16);
+        qp.to_rtr();
+        qp.to_rts(if t == QpTransport::Ud { None } else { Some((NodeId(1), Qpn(2))) });
+        qp
+    }
+
+    fn send(len: u64) -> SendWr {
+        SendWr::send(1, len, Mrkey(1), 0, 0)
+    }
+
+    #[test]
+    fn rc_accepts_all_verbs() {
+        let mut qp = mk(QpTransport::Rc);
+        assert!(qp.post_send(send(1024), 4096).is_ok());
+        assert!(qp
+            .post_send(SendWr::write(1, 1024, Mrkey(1), 0, Mrkey(2), 0), 4096)
+            .is_ok());
+        assert!(qp
+            .post_send(SendWr::read(1, 1024, Mrkey(1), 0, Mrkey(2), 0), 4096)
+            .is_ok());
+    }
+
+    #[test]
+    fn uc_rejects_read() {
+        let mut qp = mk(QpTransport::Uc);
+        let err = qp
+            .post_send(SendWr::read(1, 1024, Mrkey(1), 0, Mrkey(2), 0), 4096)
+            .unwrap_err();
+        assert_eq!(err, PostError::UnsupportedVerb(QpTransport::Uc));
+    }
+
+    #[test]
+    fn ud_rejects_over_mtu_and_needs_ah() {
+        let mut qp = mk(QpTransport::Ud);
+        let err = qp.post_send(send(8192).to_ud(NodeId(1), Qpn(2)), 4096).unwrap_err();
+        assert!(matches!(err, PostError::TooLong { .. }));
+        let err = qp.post_send(send(1024), 4096).unwrap_err();
+        assert_eq!(err, PostError::MissingUdDest);
+        assert!(qp.post_send(send(1024).to_ud(NodeId(1), Qpn(2)), 4096).is_ok());
+    }
+
+    #[test]
+    fn connected_max_1gb() {
+        let mut qp = mk(QpTransport::Rc);
+        assert!(qp
+            .post_send(SendWr::write(1, 1 << 30, Mrkey(1), 0, Mrkey(2), 0), 4096)
+            .is_ok());
+        assert!(matches!(
+            qp.post_send(SendWr::write(1, (1 << 30) + 1, Mrkey(1), 0, Mrkey(2), 0), 4096),
+            Err(PostError::TooLong { .. })
+        ));
+    }
+
+    #[test]
+    fn post_requires_rts() {
+        let mut qp = Qp::new(Qpn(1), QpTransport::Rc, Cqn(0), Cqn(0), 8, 8, 4);
+        assert!(matches!(qp.post_send(send(64), 4096), Err(PostError::BadState(_))));
+    }
+
+    #[test]
+    fn sq_depth_enforced() {
+        let mut qp = mk(QpTransport::Rc);
+        qp.sq_depth = 2;
+        assert!(qp.post_send(send(64), 4096).is_ok());
+        assert!(qp.post_send(send(64), 4096).is_ok());
+        assert_eq!(qp.post_send(send(64), 4096), Err(PostError::SqFull));
+    }
+
+    #[test]
+    fn srq_attached_rejects_rq_post() {
+        let mut qp = mk(QpTransport::Rc);
+        qp.srq = Some(Srqn(0));
+        let wr = RecvWr { wr_id: 1, lkey: Mrkey(1), laddr: 0, len: 64 };
+        assert!(qp.post_recv(wr).is_err());
+    }
+
+    #[test]
+    fn rc_window_gates_issue() {
+        let mut qp = mk(QpTransport::Rc);
+        qp.max_outstanding = 1;
+        qp.post_send(send(64), 4096).unwrap();
+        qp.post_send(send(64), 4096).unwrap();
+        assert!(qp.can_issue());
+        qp.outstanding = 1;
+        assert!(!qp.can_issue());
+    }
+
+    #[test]
+    fn one_sided_requires_rkey() {
+        let mut qp = mk(QpTransport::Rc);
+        let mut wr = SendWr::write(1, 64, Mrkey(1), 0, Mrkey(2), 0);
+        wr.rkey = None;
+        assert_eq!(qp.post_send(wr, 4096), Err(PostError::MissingRemoteKey));
+    }
+
+    #[test]
+    fn mem_footprint() {
+        let qp = Qp::new(Qpn(1), QpTransport::Rc, Cqn(0), Cqn(0), 128, 128, 16);
+        assert_eq!(qp.mem_bytes(), 128 * 64 + 128 * 16 + 256);
+    }
+}

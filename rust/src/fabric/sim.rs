@@ -1,0 +1,1099 @@
+//! The discrete-event simulator: nodes, NIC engines, the event loop.
+//!
+//! Drivers (workload generators, the RaaS daemon, baselines) interact with
+//! the sim through the verbs-style API (`create_qp`, `post_send`,
+//! `poll_cq`, …) and advance virtual time by calling [`Sim::step`], which
+//! processes one event and reports completion notifications. Everything is
+//! deterministic: same calls + same seeds ⇒ identical timelines.
+//!
+//! ### Engine model
+//!
+//! Each NIC has one processing engine that serially executes
+//! [`WorkItem`]s with costs from [`NicConfig`]. Multi-frame messages are
+//! emitted **one frame per work item**, re-enqueuing the remainder at the
+//! tail — so concurrent messages interleave frame-by-frame exactly like a
+//! real RNIC's processing units, which is what makes the receiver's ICM
+//! cache thrash under high QP counts (Fig 5's mechanism).
+
+use std::collections::{HashMap, VecDeque};
+
+use super::cache::{IcmCache, IcmKey};
+use super::cq::Cq;
+use super::cpu::CpuLedger;
+use super::event::EventQueue;
+use super::mr::{Access, MemoryRegion, MrTable};
+use super::nic::{Frame, FrameKind, NicConfig, WorkItem, CTRL_FRAME_BYTES};
+use super::qp::{PostError, Qp};
+use super::srq::Srq;
+use super::switchfab::Fabric;
+use super::time::Ns;
+use super::types::{Cqn, NodeId, QpTransport, Qpn, Srqn, Verb, WcStatus};
+use super::wqe::{Cqe, CqeKind, RecvWr, SendWr};
+
+/// Whole-fabric configuration.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    pub nodes: usize,
+    pub cores_per_node: u32,
+    pub link_gbps: f64,
+    pub mtu: u64,
+    /// One-way propagation + switch latency.
+    pub switch_latency_ns: u64,
+    pub nic: NicConfig,
+    /// Default queue depths.
+    pub sq_depth: usize,
+    pub rq_depth: usize,
+    /// RC requester window (outstanding messages per QP).
+    pub max_outstanding: usize,
+    /// CPU cost of a post_send/post_recv call (driver side).
+    pub post_cpu_ns: u64,
+    /// CPU cost of a poll_cq call + per-CQE handling.
+    pub poll_cpu_ns: u64,
+    pub per_cqe_cpu_ns: u64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            nodes: 4,
+            cores_per_node: 24,
+            link_gbps: 40.0,
+            mtu: 4096,
+            switch_latency_ns: 1000,
+            nic: NicConfig::default(),
+            sq_depth: 256,
+            rq_depth: 256,
+            max_outstanding: 16,
+            post_cpu_ns: 150,
+            poll_cpu_ns: 80,
+            per_cqe_cpu_ns: 50,
+        }
+    }
+}
+
+/// Events on the simulator's timeline.
+enum Event {
+    EngineCheck(NodeId),
+    FrameDelivered(Frame),
+    CqeDeliver { node: NodeId, cqn: Cqn, cqe: Cqe },
+    RetrySend { node: NodeId, qpn: Qpn, wr: SendWr },
+    /// Driver-scheduled timer (lock-grant wakeups, open-loop arrivals…).
+    AppTimer { token: u64 },
+}
+
+/// What [`Sim::step`] reports back to the driver.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Notification {
+    /// A CQE landed in (node, cqn) — the driver should poll it.
+    CqeReady { node: NodeId, cqn: Cqn },
+    /// A timer scheduled via [`Sim::schedule`] fired.
+    Timer { token: u64 },
+}
+
+/// Per-message requester-side bookkeeping (ACK matching, RNR retry).
+struct InFlight {
+    wr: SendWr,
+    qpn: Qpn,
+}
+
+/// One machine.
+pub struct NodeState {
+    pub id: NodeId,
+    pub qps: HashMap<u32, Qp>,
+    pub cqs: HashMap<u32, Cq>,
+    pub srqs: HashMap<u32, Srq>,
+    pub mrs: MrTable,
+    pub cache: IcmCache,
+    pub cpu: CpuLedger,
+    engine_busy_until: Ns,
+    engine_queue: VecDeque<WorkItem>,
+    engine_scheduled: bool,
+    /// QPs with a queued IssueFromQp item (doorbell coalescing).
+    issue_armed: std::collections::HashSet<u32>,
+    next_qpn: u32,
+    next_cqn: u32,
+    next_srqn: u32,
+    next_msg_id: u64,
+    /// Requester-side in-flight messages keyed by msg_id.
+    inflight: HashMap<u64, InFlight>,
+    /// Responder-side recv WQE held from first to last frame of a message,
+    /// keyed by (src node, src qpn, msg id).
+    pending_recv: HashMap<(u32, u32, u64), RecvWr>,
+    /// Messages dropped mid-flight (RNR/protection) — suppress completion.
+    dropped_msgs: std::collections::HashSet<(u32, u32, u64)>,
+    /// Counters.
+    pub protection_errors: u64,
+    pub rnr_naks_sent: u64,
+    /// Payload bytes of data-bearing frames processed by this NIC's rx
+    /// path — the smooth wire-level goodput counter the scenario drivers
+    /// measure (message-completion counters clump and bias short windows).
+    pub rx_data_bytes: u64,
+}
+
+impl NodeState {
+    fn new(id: NodeId, cfg: &FabricConfig) -> Self {
+        NodeState {
+            id,
+            qps: HashMap::new(),
+            cqs: HashMap::new(),
+            srqs: HashMap::new(),
+            mrs: MrTable::new(),
+            cache: IcmCache::new(cfg.nic.icm_cache_entries),
+            cpu: CpuLedger::new(cfg.cores_per_node),
+            engine_busy_until: Ns::ZERO,
+            engine_queue: VecDeque::new(),
+            engine_scheduled: false,
+            issue_armed: std::collections::HashSet::new(),
+            next_qpn: 1,
+            next_cqn: 1,
+            next_srqn: 1,
+            next_msg_id: 1,
+            inflight: HashMap::new(),
+            pending_recv: HashMap::new(),
+            dropped_msgs: std::collections::HashSet::new(),
+            protection_errors: 0,
+            rnr_naks_sent: 0,
+            rx_data_bytes: 0,
+        }
+    }
+
+    /// Engine work-queue depth (diagnostics).
+    pub fn engine_queue_len(&self) -> usize {
+        self.engine_queue.len()
+    }
+
+    /// Total fabric-level memory charged to this node (ledger for Fig 7):
+    /// QP rings + contexts, CQ rings, SRQ rings, registered regions' MTT.
+    pub fn fabric_mem_bytes(&self) -> u64 {
+        let qp: u64 = self.qps.values().map(|q| q.mem_bytes()).sum();
+        let cq: u64 = self.cqs.values().map(|c| c.mem_bytes()).sum();
+        let srq: u64 = self.srqs.values().map(|s| s.mem_bytes()).sum();
+        let mtt = self.mrs.total_mtt_entries * 8; // 8 B per MTT entry
+        qp + cq + srq + mtt
+    }
+}
+
+/// The simulator.
+pub struct Sim {
+    pub cfg: FabricConfig,
+    clock: Ns,
+    events: EventQueue<Event>,
+    pub nodes: Vec<NodeState>,
+    pub fabric: Fabric,
+    /// Completed payload bytes (data verbs), for quick aggregate throughput.
+    pub completed_bytes: u64,
+    pub completed_msgs: u64,
+    steps: u64,
+}
+
+impl Sim {
+    pub fn new(cfg: FabricConfig) -> Self {
+        let fabric = Fabric::new(cfg.nodes, cfg.link_gbps, cfg.mtu, Ns(cfg.switch_latency_ns));
+        let nodes = (0..cfg.nodes)
+            .map(|i| NodeState::new(NodeId(i as u32), &cfg))
+            .collect();
+        Sim {
+            cfg,
+            clock: Ns::ZERO,
+            events: EventQueue::new(),
+            nodes,
+            fabric,
+            completed_bytes: 0,
+            completed_msgs: 0,
+            steps: 0,
+        }
+    }
+
+    pub fn now(&self) -> Ns {
+        self.clock
+    }
+
+    pub fn node(&self, id: NodeId) -> &NodeState {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut NodeState {
+        &mut self.nodes[id.0 as usize]
+    }
+
+    // ------------------------------------------------------------ verbs API
+
+    pub fn create_cq(&mut self, node: NodeId, capacity: usize) -> Cqn {
+        let n = self.node_mut(node);
+        let cqn = Cqn(n.next_cqn);
+        n.next_cqn += 1;
+        n.cqs.insert(cqn.0, Cq::new(cqn, capacity));
+        cqn
+    }
+
+    pub fn create_srq(&mut self, node: NodeId, capacity: usize, watermark: usize) -> Srqn {
+        let n = self.node_mut(node);
+        let srqn = Srqn(n.next_srqn);
+        n.next_srqn += 1;
+        n.srqs.insert(srqn.0, Srq::new(srqn, capacity, watermark));
+        srqn
+    }
+
+    pub fn create_qp(
+        &mut self,
+        node: NodeId,
+        transport: QpTransport,
+        send_cq: Cqn,
+        recv_cq: Cqn,
+    ) -> Qpn {
+        let (sq, rq, win) = (self.cfg.sq_depth, self.cfg.rq_depth, self.cfg.max_outstanding);
+        let n = self.node_mut(node);
+        let qpn = Qpn(n.next_qpn);
+        n.next_qpn += 1;
+        n.qps.insert(qpn.0, Qp::new(qpn, transport, send_cq, recv_cq, sq, rq, win));
+        qpn
+    }
+
+    pub fn attach_srq(&mut self, node: NodeId, qpn: Qpn, srqn: Srqn) {
+        let n = self.node_mut(node);
+        n.qps.get_mut(&qpn.0).expect("no such qp").srq = Some(srqn);
+    }
+
+    pub fn reg_mr(&mut self, node: NodeId, len: u64, access: Access, huge: bool) -> MemoryRegion {
+        self.node_mut(node).mrs.register(len, access, huge)
+    }
+
+    /// Transition both QPs to RTS, bound to each other (RC/UC connect).
+    pub fn connect(&mut self, a: NodeId, a_qpn: Qpn, b: NodeId, b_qpn: Qpn) {
+        {
+            let qp = self.node_mut(a).qps.get_mut(&a_qpn.0).expect("no qp a");
+            qp.to_rtr();
+            qp.to_rts(Some((b, b_qpn)));
+        }
+        {
+            let qp = self.node_mut(b).qps.get_mut(&b_qpn.0).expect("no qp b");
+            qp.to_rtr();
+            qp.to_rts(Some((a, a_qpn)));
+        }
+    }
+
+    /// Bring a UD QP up (no peer binding).
+    pub fn activate_ud(&mut self, node: NodeId, qpn: Qpn) {
+        let qp = self.node_mut(node).qps.get_mut(&qpn.0).expect("no qp");
+        debug_assert_eq!(qp.transport, QpTransport::Ud);
+        qp.to_rtr();
+        qp.to_rts(None);
+    }
+
+    /// Post a send WR and ring the doorbell. Charges driver CPU.
+    pub fn post_send(&mut self, node: NodeId, qpn: Qpn, wr: SendWr) -> Result<(), PostError> {
+        let mtu = self.cfg.mtu;
+        let post_cpu = self.cfg.post_cpu_ns;
+        let n = self.node_mut(node);
+        n.cpu.charge_post(post_cpu);
+        let qp = n.qps.get_mut(&qpn.0).ok_or(PostError::BadState(super::qp::QpState::Error))?;
+        qp.post_send(wr, mtu)?;
+        self.ring_doorbell(node, qpn);
+        Ok(())
+    }
+
+    /// Post a chain of WRs with ONE doorbell (WR batching — §2.3's
+    /// "sharing QP promotes the probability of batching WRs").
+    pub fn post_send_batch(
+        &mut self,
+        node: NodeId,
+        qpn: Qpn,
+        wrs: Vec<SendWr>,
+    ) -> Result<usize, PostError> {
+        let mtu = self.cfg.mtu;
+        let post_cpu = self.cfg.post_cpu_ns;
+        let n = self.node_mut(node);
+        // one syscall-ish driver cost + small per-WR marshalling cost
+        n.cpu.charge_post(post_cpu + 30 * wrs.len() as u64);
+        let qp = n.qps.get_mut(&qpn.0).ok_or(PostError::BadState(super::qp::QpState::Error))?;
+        let mut accepted = 0;
+        for wr in wrs {
+            match qp.post_send(wr, mtu) {
+                Ok(()) => accepted += 1,
+                Err(e) => {
+                    if accepted == 0 {
+                        return Err(e);
+                    }
+                    break;
+                }
+            }
+        }
+        self.ring_doorbell(node, qpn);
+        Ok(accepted)
+    }
+
+    pub fn post_recv(&mut self, node: NodeId, qpn: Qpn, wr: RecvWr) -> Result<(), PostError> {
+        let post_cpu = self.cfg.post_cpu_ns;
+        let n = self.node_mut(node);
+        n.cpu.charge_post(post_cpu);
+        n.qps
+            .get_mut(&qpn.0)
+            .ok_or(PostError::BadState(super::qp::QpState::Error))?
+            .post_recv(wr)
+    }
+
+    pub fn post_srq_recv(&mut self, node: NodeId, srqn: Srqn, wr: RecvWr) -> bool {
+        let post_cpu = self.cfg.post_cpu_ns;
+        let n = self.node_mut(node);
+        n.cpu.charge_post(post_cpu);
+        n.srqs.get_mut(&srqn.0).map(|s| s.post(wr)).unwrap_or(false)
+    }
+
+    /// Free send-queue slots on a QP (drivers use this to size batches).
+    pub fn sq_free(&self, node: NodeId, qpn: Qpn) -> usize {
+        self.node(node)
+            .qps
+            .get(&qpn.0)
+            .map(|qp| qp.sq_depth.saturating_sub(qp.sq.len()))
+            .unwrap_or(0)
+    }
+
+    /// Poll up to `n` CQEs; charges poller CPU.
+    pub fn poll_cq(&mut self, node: NodeId, cqn: Cqn, max: usize) -> Vec<Cqe> {
+        let (poll_cpu, per_cqe) = (self.cfg.poll_cpu_ns, self.cfg.per_cqe_cpu_ns);
+        let n = self.node_mut(node);
+        let out = n
+            .cqs
+            .get_mut(&cqn.0)
+            .map(|cq| cq.poll(max))
+            .unwrap_or_default();
+        n.cpu.charge_poll(poll_cpu + per_cqe * out.len() as u64);
+        out
+    }
+
+    // -------------------------------------------------------------- engine
+
+    fn ring_doorbell(&mut self, node: NodeId, qpn: Qpn) {
+        let nic_doorbell = self.cfg.nic.doorbell_ns;
+        let clock = self.clock;
+        let n = self.node_mut(node);
+        if n.issue_armed.insert(qpn.0) {
+            n.engine_queue.push_back(WorkItem::IssueFromQp(qpn));
+            // doorbell MMIO handling occupies the engine briefly
+            n.engine_busy_until = n.engine_busy_until.max(clock) + Ns(nic_doorbell);
+            self.kick_engine(node);
+        }
+    }
+
+    fn kick_engine(&mut self, node: NodeId) {
+        let clock = self.clock;
+        let n = self.node_mut(node);
+        if !n.engine_scheduled && !n.engine_queue.is_empty() {
+            n.engine_scheduled = true;
+            let at = n.engine_busy_until.max(clock);
+            self.events.push(at, Event::EngineCheck(node));
+        }
+    }
+
+    /// Re-arm a QP's issue item after a completion freed window space.
+    fn rearm_issue(&mut self, node: NodeId, qpn: Qpn) {
+        let n = self.node_mut(node);
+        let can = n
+            .qps
+            .get(&qpn.0)
+            .map(|qp| qp.can_issue())
+            .unwrap_or(false);
+        if can && n.issue_armed.insert(qpn.0) {
+            n.engine_queue.push_back(WorkItem::IssueFromQp(qpn));
+            self.kick_engine(node);
+        }
+    }
+
+    // ---------------------------------------------------------- event loop
+
+    /// Process one event; returns notifications, or None when the timeline
+    /// is exhausted.
+    pub fn step(&mut self) -> Option<Vec<Notification>> {
+        let (at, ev) = self.events.pop()?;
+        debug_assert!(at >= self.clock, "time went backwards");
+        self.clock = at;
+        self.steps += 1;
+        let mut notes = Vec::new();
+        match ev {
+            Event::EngineCheck(node) => self.on_engine_check(node),
+            Event::FrameDelivered(frame) => self.on_frame_delivered(frame),
+            Event::CqeDeliver { node, cqn, cqe } => {
+                if let Some(cq) = self.node_mut(node).cqs.get_mut(&cqn.0) {
+                    cq.push(cqe);
+                    notes.push(Notification::CqeReady { node, cqn });
+                }
+            }
+            Event::RetrySend { node, qpn, wr } => {
+                // RNR retry: put the message back at the head of the SQ.
+                if let Some(qp) = self.node_mut(node).qps.get_mut(&qpn.0) {
+                    qp.sq.push_front(wr);
+                }
+                self.rearm_issue(node, qpn);
+            }
+            Event::AppTimer { token } => notes.push(Notification::Timer { token }),
+        }
+        Some(notes)
+    }
+
+    /// Schedule a driver timer at absolute time `at` (clamped to now).
+    pub fn schedule(&mut self, at: Ns, token: u64) {
+        self.events.push(at.max(self.clock), Event::AppTimer { token });
+    }
+
+    /// Run until the event queue drains or `deadline` passes; collect all
+    /// notifications.
+    pub fn run_until(&mut self, deadline: Ns) -> Vec<Notification> {
+        let mut out = Vec::new();
+        while let Some(t) = self.events.peek_time() {
+            if t > deadline {
+                break;
+            }
+            if let Some(mut notes) = self.step() {
+                out.append(&mut notes);
+            }
+        }
+        self.clock = self.clock.max(deadline);
+        out
+    }
+
+    /// Drain every pending event (quiescence).
+    pub fn run_to_quiescence(&mut self) -> Vec<Notification> {
+        let mut out = Vec::new();
+        while let Some(mut notes) = self.step() {
+            out.append(&mut notes);
+        }
+        out
+    }
+
+    pub fn pending_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Total data payload delivered across all NICs (see
+    /// [`NodeState::rx_data_bytes`]).
+    pub fn total_rx_data_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.rx_data_bytes).sum()
+    }
+
+    fn on_engine_check(&mut self, node: NodeId) {
+        {
+            let clock = self.clock;
+            let n = self.node_mut(node);
+            n.engine_scheduled = false;
+            if clock < n.engine_busy_until {
+                // engine still busy (doorbell bumped the horizon): re-check.
+                self.kick_engine(node);
+                return;
+            }
+        }
+        let item = match self.node_mut(node).engine_queue.pop_front() {
+            Some(i) => i,
+            None => return,
+        };
+        let cost = self.process_item(node, item);
+        let clock = self.clock;
+        let n = self.node_mut(node);
+        n.engine_busy_until = clock + Ns(cost);
+        self.kick_engine(node);
+    }
+
+    /// Execute one engine work item; returns engine occupancy in ns.
+    fn process_item(&mut self, node: NodeId, item: WorkItem) -> u64 {
+        match item {
+            WorkItem::IssueFromQp(qpn) => self.issue_from_qp(node, qpn),
+            WorkItem::RxFrame(frame) => self.rx_frame(node, frame),
+            WorkItem::ReadRespond { requester, requester_qpn, responder_qpn, msg_id, len, wr_id } => {
+                self.read_respond(node, requester, requester_qpn, responder_qpn, msg_id, len, wr_id)
+            }
+        }
+    }
+
+    /// Engine backpressure: extra stall (ns) before the engine can hand the
+    /// next frame to the egress port, given the tx FIFO depth.
+    fn tx_stall(&self, node: NodeId, at: Ns) -> u64 {
+        let fifo = Ns(self.cfg.nic.tx_fifo_frames
+            * super::time::wire_time(self.cfg.mtu + super::switchfab::FRAME_OVERHEAD_BYTES, self.cfg.link_gbps).0);
+        let backlog = self.fabric.egress_busy_until(node).saturating_sub(at);
+        backlog.saturating_sub(fifo).0
+    }
+
+    /// ICM cache touch: returns the stall cost (0 on hit).
+    fn icm_touch(&mut self, node: NodeId, key: IcmKey) -> u64 {
+        let miss_ns = self.cfg.nic.icm_miss_ns;
+        if self.node_mut(node).cache.touch(key) {
+            0
+        } else {
+            miss_ns
+        }
+    }
+
+    // -------------------------------------------------- requester-side tx
+
+    /// Issue ONE message from this QP's send queue, then re-enqueue the
+    /// issue item (frame-level fairness is provided by message streaming —
+    /// large messages stream via `TxContinue`-style re-enqueue below).
+    fn issue_from_qp(&mut self, node: NodeId, qpn: Qpn) -> u64 {
+        let nic = self.cfg.nic;
+
+        // Pull the next WR if the window allows.
+        let (wr, peer, transport) = {
+            let n = self.node_mut(node);
+            n.issue_armed.remove(&qpn.0);
+            let qp = match n.qps.get_mut(&qpn.0) {
+                Some(qp) => qp,
+                None => return 0,
+            };
+            if !qp.can_issue() {
+                return 0; // window-blocked; re-armed on completion
+            }
+            let wr = qp.sq.pop_front().unwrap();
+            let peer = match qp.transport {
+                QpTransport::Ud => wr.ud_dest,
+                _ => qp.peer,
+            };
+            if qp.transport == QpTransport::Rc {
+                qp.outstanding += 1;
+            }
+            (wr, peer, qp.transport)
+        };
+        let (peer_node, peer_qpn) = match peer {
+            Some(p) => p,
+            None => return nic.engine_wqe_ns, // unroutable; swallow
+        };
+
+        let mut cost = nic.engine_wqe_ns + nic.dma_setup_ns;
+        cost += self.icm_touch(node, IcmKey::Qpc(qpn.0));
+        // local buffer translation (MTT) once per message
+        if let Some(block) = self.node(node).mrs.mtt_block(wr.lkey, wr.laddr) {
+            cost += self.icm_touch(node, IcmKey::Mtt(wr.lkey.0, block));
+        }
+
+        let msg_id = {
+            let n = self.node_mut(node);
+            let id = n.next_msg_id;
+            n.next_msg_id += 1;
+            id
+        };
+
+        match wr.verb {
+            Verb::Read => {
+                // header-only request; the responder streams the data back.
+                let frame = Frame {
+                    kind: FrameKind::ReadReq,
+                    src: node,
+                    dst: peer_node,
+                    dst_qpn: peer_qpn,
+                    src_qpn: qpn,
+                    transport,
+                    msg_id,
+                    bytes: CTRL_FRAME_BYTES,
+                    msg_len: wr.len,
+                    is_first: true,
+                    is_last: true,
+                    wr_id: wr.wr_id,
+                    imm: None,
+                    rkey: wr.rkey,
+                    raddr: wr.raddr,
+                };
+                cost += nic.engine_frame_ns;
+                let deliver = self.fabric.send_frame(self.clock + Ns(cost), node, peer_node, frame.bytes);
+                self.events.push(deliver, Event::FrameDelivered(frame));
+                self.node_mut(node).inflight.insert(msg_id, InFlight { wr, qpn });
+            }
+            Verb::Write | Verb::Send => {
+                let kind = if wr.verb == Verb::Write {
+                    FrameKind::WriteData
+                } else {
+                    FrameKind::SendData
+                };
+                let frames = self.fabric.frames_for(wr.len.max(1));
+                let total = frames.len();
+                let mut handoff = self.clock + Ns(cost);
+                for (i, bytes) in frames.into_iter().enumerate() {
+                    cost += nic.engine_frame_ns;
+                    handoff += Ns(nic.engine_frame_ns);
+                    // tx FIFO backpressure (see read_respond)
+                    let stall = self.tx_stall(node, handoff);
+                    cost += stall;
+                    handoff += Ns(stall);
+                    let frame = Frame {
+                        kind,
+                        src: node,
+                        dst: peer_node,
+                        dst_qpn: peer_qpn,
+                        src_qpn: qpn,
+                        transport,
+                        msg_id,
+                        bytes,
+                        msg_len: wr.len,
+                        is_first: i == 0,
+                        is_last: i == total - 1,
+                        wr_id: wr.wr_id,
+                        imm: wr.imm_data,
+                        rkey: wr.rkey,
+                        raddr: wr.raddr,
+                    };
+                    let deliver = self.fabric.send_frame(handoff, node, peer_node, bytes);
+                    self.events.push(deliver, Event::FrameDelivered(frame));
+                }
+                match transport {
+                    QpTransport::Rc => {
+                        // completion on ACK
+                        self.node_mut(node).inflight.insert(msg_id, InFlight { wr, qpn });
+                    }
+                    QpTransport::Uc | QpTransport::Ud => {
+                        // local completion once the message is on the wire
+                        if wr.signaled {
+                            let (send_cq, _) = {
+                                let qp = &self.node(node).qps[&qpn.0];
+                                (qp.send_cq, ())
+                            };
+                            let cqe = Cqe {
+                                wr_id: wr.wr_id,
+                                kind: CqeKind::SendDone(wr.verb),
+                                status: WcStatus::Success,
+                                len: wr.len,
+                                imm_data: None,
+                                qpn,
+                                src: None,
+                            };
+                            let at = self.clock + Ns(cost + nic.cqe_delay_ns);
+                            let cqc = self.icm_touch(node, IcmKey::Cqc(send_cq.0));
+                            cost += cqc;
+                            self.events.push(at + Ns(cqc), Event::CqeDeliver { node, cqn: send_cq, cqe });
+                            self.node_mut(node).qps.get_mut(&qpn.0).unwrap().completed += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // round-robin: more WQEs pending? re-arm at the tail.
+        self.rearm_issue(node, qpn);
+        cost
+    }
+
+    // -------------------------------------------------- responder-side
+
+    /// Stream ONE frame of a READ response per engine pass; re-enqueue the
+    /// job until done. This interleaves concurrent responses frame-by-frame
+    /// (the access pattern that thrashes the requester's ICM cache).
+    #[allow(clippy::too_many_arguments)]
+    fn read_respond(
+        &mut self,
+        node: NodeId,
+        requester: NodeId,
+        requester_qpn: Qpn,
+        responder_qpn: Qpn,
+        msg_id: u64,
+        remaining: u64,
+        wr_id: u64,
+    ) -> u64 {
+        let nic = self.cfg.nic;
+        let mtu = self.cfg.mtu;
+        let _ = mtu;
+        // note: `remaining` is re-encoded in `len` across re-enqueues, so
+        // msg_len on response frames tracks bytes-left; completion uses the
+        // requester's in-flight record for the true length.
+        let total_len = remaining; // note: we re-encode remaining in `len`
+        let bytes = remaining.min(mtu);
+        let left = remaining - bytes;
+        let mut cost = nic.engine_frame_ns;
+        cost += self.icm_touch(node, IcmKey::Qpc(responder_qpn.0));
+        // wire backpressure: stall until the tx FIFO has room — this paces
+        // response streaming to line rate so concurrent responses interleave
+        cost += self.tx_stall(node, self.clock + Ns(cost));
+
+        let frame = Frame {
+            kind: FrameKind::ReadResp,
+            src: node,
+            dst: requester,
+            dst_qpn: requester_qpn,
+            src_qpn: responder_qpn,
+            transport: QpTransport::Rc,
+            msg_id,
+            bytes,
+            msg_len: total_len,
+            is_first: false,
+            is_last: left == 0,
+            wr_id,
+            imm: None,
+            rkey: None,
+            raddr: 0,
+        };
+        let deliver = self.fabric.send_frame(self.clock + Ns(cost), node, requester, bytes);
+        self.events.push(deliver, Event::FrameDelivered(frame));
+
+        if left > 0 {
+            self.node_mut(node).engine_queue.push_back(WorkItem::ReadRespond {
+                requester,
+                requester_qpn,
+                responder_qpn,
+                msg_id,
+                len: left,
+                wr_id,
+            });
+        }
+        cost
+    }
+
+    // ---------------------------------------------------------- rx path
+
+    fn on_frame_delivered(&mut self, frame: Frame) {
+        let dst = frame.dst;
+        if frame.kind.carries_data() {
+            // wire-level goodput counter: counted at delivery, not at engine
+            // processing (the engine can burst-drain backlog and overshoot)
+            self.node_mut(dst).rx_data_bytes += frame.bytes;
+        }
+        self.node_mut(dst).engine_queue.push_back(WorkItem::RxFrame(frame));
+        self.kick_engine(dst);
+    }
+
+    fn rx_frame(&mut self, node: NodeId, frame: Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let mut cost = nic.engine_frame_ns;
+        // every frame needs the QP context — THE Fig 5 mechanism.
+        cost += self.icm_touch(node, IcmKey::Qpc(frame.dst_qpn.0));
+
+        match frame.kind {
+            FrameKind::ReadReq => {
+                // validate remote access then start streaming the response
+                let ok = frame
+                    .rkey
+                    .map(|k| self.node(node).mrs.check_remote(k, frame.raddr, frame.msg_len, false))
+                    .unwrap_or(false);
+                if !ok {
+                    self.node_mut(node).protection_errors += 1;
+                    // NAK → requester completes in error
+                    self.complete_requester_error(frame, WcStatus::RemoteAccessError);
+                    return cost;
+                }
+                if let Some(rk) = frame.rkey {
+                    if let Some(block) = self.node(node).mrs.mtt_block(rk, frame.raddr) {
+                        cost += self.icm_touch(node, IcmKey::Mtt(rk.0, block));
+                    }
+                }
+                self.node_mut(node).engine_queue.push_back(WorkItem::ReadRespond {
+                    requester: frame.src,
+                    requester_qpn: frame.src_qpn,
+                    responder_qpn: frame.dst_qpn,
+                    msg_id: frame.msg_id,
+                    len: frame.msg_len,
+                    wr_id: frame.wr_id,
+                });
+            }
+            FrameKind::ReadResp => {
+                if frame.is_last {
+                    cost += self.complete_read(node, &frame);
+                }
+            }
+            FrameKind::WriteData => {
+                cost += self.rx_write_data(node, &frame);
+            }
+            FrameKind::SendData => {
+                cost += self.rx_send_data(node, &frame);
+            }
+            FrameKind::Ack => {
+                cost += self.rx_ack(node, &frame);
+            }
+            FrameKind::RnrNak => {
+                // retry the whole message after backoff
+                let key = frame.msg_id;
+                if let Some(inf) = self.node_mut(node).inflight.remove(&key) {
+                    if let Some(qp) = self.node_mut(node).qps.get_mut(&inf.qpn.0) {
+                        qp.outstanding = qp.outstanding.saturating_sub(1);
+                    }
+                    self.events.push(
+                        self.clock + Ns(nic.rnr_retry_ns),
+                        Event::RetrySend { node, qpn: inf.qpn, wr: inf.wr },
+                    );
+                }
+            }
+        }
+        cost
+    }
+
+    fn rx_write_data(&mut self, node: NodeId, frame: &Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let mut cost = 0;
+        let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
+        if frame.is_first {
+            let ok = frame
+                .rkey
+                .map(|k| self.node(node).mrs.check_remote(k, frame.raddr, frame.msg_len, true))
+                .unwrap_or(false);
+            if !ok {
+                self.node_mut(node).protection_errors += 1;
+                self.node_mut(node).dropped_msgs.insert(key);
+            } else if let Some(rk) = frame.rkey {
+                if let Some(block) = self.node(node).mrs.mtt_block(rk, frame.raddr) {
+                    cost += self.icm_touch(node, IcmKey::Mtt(rk.0, block));
+                }
+            }
+        }
+        if frame.is_last {
+            let dropped = self.node_mut(node).dropped_msgs.remove(&key);
+            if dropped {
+                if frame.transport == QpTransport::Rc {
+                    self.complete_requester_error(frame.clone(), WcStatus::RemoteAccessError);
+                }
+                return cost;
+            }
+            // write-with-imm consumes a receive WQE and raises a CQE
+            if frame.imm.is_some() {
+                if let Some((recv_cq, wr)) = self.consume_recv_wqe(node, frame) {
+                    let cqe = Cqe {
+                        wr_id: wr.map(|w| w.wr_id).unwrap_or(0),
+                        kind: CqeKind::RecvRdmaWithImm,
+                        status: WcStatus::Success,
+                        len: frame.msg_len,
+                        imm_data: frame.imm,
+                        qpn: frame.dst_qpn,
+                        src: Some((frame.src, frame.src_qpn)),
+                    };
+                    cost += self.icm_touch(node, IcmKey::Cqc(recv_cq.0));
+                    self.events.push(
+                        self.clock + Ns(cost + nic.cqe_delay_ns),
+                        Event::CqeDeliver { node, cqn: recv_cq, cqe },
+                    );
+                } else {
+                    // RNR on write-with-imm (no recv WQE)
+                    self.send_rnr_nak(node, frame);
+                    return cost;
+                }
+            }
+            if frame.transport == QpTransport::Rc {
+                cost += self.send_ack(node, frame);
+            } else {
+                // UC: delivered without ACK — count at the receiver
+                self.completed_bytes += frame.msg_len;
+                self.completed_msgs += 1;
+            }
+        }
+        cost
+    }
+
+    fn rx_send_data(&mut self, node: NodeId, frame: &Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let mut cost = 0;
+        let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
+        if frame.is_first {
+            match self.consume_recv_wqe_wr(node, frame) {
+                Some(wr) => {
+                    // local buffer translation for the landing buffer
+                    if let Some(block) = self.node(node).mrs.mtt_block(wr.lkey, wr.laddr) {
+                        cost += self.icm_touch(node, IcmKey::Mtt(wr.lkey.0, block));
+                    }
+                    self.node_mut(node).pending_recv.insert(key, wr);
+                }
+                None => {
+                    self.node_mut(node).dropped_msgs.insert(key);
+                    if frame.transport == QpTransport::Rc {
+                        self.send_rnr_nak(node, frame);
+                    }
+                    // UC/UD: silent drop
+                }
+            }
+        }
+        if frame.is_last {
+            if self.node_mut(node).dropped_msgs.remove(&key) {
+                return cost;
+            }
+            let wr = match self.node_mut(node).pending_recv.remove(&key) {
+                Some(wr) => wr,
+                None => return cost, // first frame never consumed (shouldn't happen)
+            };
+            let recv_cq = self
+                .node(node)
+                .qps
+                .get(&frame.dst_qpn.0)
+                .map(|qp| qp.recv_cq)
+                .unwrap_or(Cqn(0));
+            let cqe = Cqe {
+                wr_id: wr.wr_id,
+                kind: CqeKind::Recv,
+                status: WcStatus::Success,
+                len: frame.msg_len,
+                imm_data: frame.imm,
+                qpn: frame.dst_qpn,
+                src: Some((frame.src, frame.src_qpn)),
+            };
+            cost += self.icm_touch(node, IcmKey::Cqc(recv_cq.0));
+            self.events.push(
+                self.clock + Ns(cost + nic.cqe_delay_ns),
+                Event::CqeDeliver { node, cqn: recv_cq, cqe },
+            );
+            if frame.transport == QpTransport::Rc {
+                cost += self.send_ack(node, frame);
+            } else {
+                // UC/UD: delivered without ACK — count at the receiver
+                self.completed_bytes += frame.msg_len;
+                self.completed_msgs += 1;
+            }
+        }
+        cost
+    }
+
+    /// Consume a recv WQE (SRQ if attached, else private RQ); returns the
+    /// recv CQ and the WR if one was available.
+    fn consume_recv_wqe(&mut self, node: NodeId, frame: &Frame) -> Option<(Cqn, Option<RecvWr>)> {
+        let (srq, recv_cq) = {
+            let qp = self.node(node).qps.get(&frame.dst_qpn.0)?;
+            (qp.srq, qp.recv_cq)
+        };
+        let wr = match srq {
+            Some(srqn) => self.node_mut(node).srqs.get_mut(&srqn.0)?.consume(),
+            None => {
+                let qp = self.node_mut(node).qps.get_mut(&frame.dst_qpn.0)?;
+                qp.rq.pop_front()
+            }
+        };
+        wr.map(|w| (recv_cq, Some(w)))
+    }
+
+    fn consume_recv_wqe_wr(&mut self, node: NodeId, frame: &Frame) -> Option<RecvWr> {
+        self.consume_recv_wqe(node, frame).and_then(|(_, wr)| wr)
+    }
+
+    fn send_ack(&mut self, node: NodeId, frame: &Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let cost = nic.engine_frame_ns;
+        let ack = Frame {
+            kind: FrameKind::Ack,
+            src: node,
+            dst: frame.src,
+            dst_qpn: frame.src_qpn,
+            src_qpn: frame.dst_qpn,
+            transport: QpTransport::Rc,
+            msg_id: frame.msg_id,
+            bytes: CTRL_FRAME_BYTES,
+            msg_len: frame.msg_len,
+            is_first: true,
+            is_last: true,
+            wr_id: frame.wr_id,
+            imm: None,
+            rkey: None,
+            raddr: 0,
+        };
+        let deliver = self.fabric.send_frame(self.clock + Ns(cost), node, frame.src, ack.bytes);
+        self.events.push(deliver, Event::FrameDelivered(ack));
+        cost
+    }
+
+    fn send_rnr_nak(&mut self, node: NodeId, frame: &Frame) {
+        self.node_mut(node).rnr_naks_sent += 1;
+        let nak = Frame {
+            kind: FrameKind::RnrNak,
+            src: node,
+            dst: frame.src,
+            dst_qpn: frame.src_qpn,
+            src_qpn: frame.dst_qpn,
+            transport: QpTransport::Rc,
+            msg_id: frame.msg_id,
+            bytes: CTRL_FRAME_BYTES,
+            msg_len: frame.msg_len,
+            is_first: true,
+            is_last: true,
+            wr_id: frame.wr_id,
+            imm: None,
+            rkey: None,
+            raddr: 0,
+        };
+        let deliver = self.fabric.send_frame(self.clock, node, frame.src, nak.bytes);
+        self.events.push(deliver, Event::FrameDelivered(nak));
+    }
+
+    /// ACK received at the requester: complete the in-flight RC message.
+    fn rx_ack(&mut self, node: NodeId, frame: &Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let mut cost = 0;
+        let inf = match self.node_mut(node).inflight.remove(&frame.msg_id) {
+            Some(i) => i,
+            None => return 0, // duplicate/stale ack
+        };
+        let (send_cq, signaled) = {
+            let qp = self.node_mut(node).qps.get_mut(&inf.qpn.0).unwrap();
+            qp.outstanding = qp.outstanding.saturating_sub(1);
+            qp.completed += 1;
+            (qp.send_cq, inf.wr.signaled)
+        };
+        self.completed_bytes += inf.wr.len;
+        self.completed_msgs += 1;
+        if signaled {
+            let cqe = Cqe {
+                wr_id: inf.wr.wr_id,
+                kind: CqeKind::SendDone(inf.wr.verb),
+                status: WcStatus::Success,
+                len: inf.wr.len,
+                imm_data: None,
+                qpn: inf.qpn,
+                src: None,
+            };
+            cost += self.icm_touch(node, IcmKey::Cqc(send_cq.0));
+            self.events.push(
+                self.clock + Ns(cost + nic.cqe_delay_ns),
+                Event::CqeDeliver { node, cqn: send_cq, cqe },
+            );
+        }
+        self.rearm_issue(node, inf.qpn);
+        cost
+    }
+
+    /// Last READ response frame landed: complete at the requester.
+    fn complete_read(&mut self, node: NodeId, frame: &Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let mut cost = 0;
+        let inf = match self.node_mut(node).inflight.remove(&frame.msg_id) {
+            Some(i) => i,
+            None => return 0,
+        };
+        let send_cq = {
+            let qp = self.node_mut(node).qps.get_mut(&inf.qpn.0).unwrap();
+            qp.outstanding = qp.outstanding.saturating_sub(1);
+            qp.completed += 1;
+            qp.send_cq
+        };
+        self.completed_bytes += inf.wr.len;
+        self.completed_msgs += 1;
+        if inf.wr.signaled {
+            let cqe = Cqe {
+                wr_id: inf.wr.wr_id,
+                kind: CqeKind::SendDone(Verb::Read),
+                status: WcStatus::Success,
+                len: inf.wr.len,
+                imm_data: None,
+                qpn: inf.qpn,
+                src: None,
+            };
+            cost += self.icm_touch(node, IcmKey::Cqc(send_cq.0));
+            self.events.push(
+                self.clock + Ns(cost + nic.cqe_delay_ns),
+                Event::CqeDeliver { node, cqn: send_cq, cqe },
+            );
+        }
+        self.rearm_issue(node, inf.qpn);
+        cost
+    }
+
+    /// Requester-side error completion (protection/NAK).
+    fn complete_requester_error(&mut self, frame: Frame, status: WcStatus) {
+        let node = frame.src;
+        let inf = match self.node_mut(node).inflight.remove(&frame.msg_id) {
+            Some(i) => i,
+            None => return,
+        };
+        let send_cq = {
+            let qp = self.node_mut(node).qps.get_mut(&inf.qpn.0).unwrap();
+            qp.outstanding = qp.outstanding.saturating_sub(1);
+            qp.send_cq
+        };
+        let cqe = Cqe {
+            wr_id: inf.wr.wr_id,
+            kind: CqeKind::SendDone(inf.wr.verb),
+            status,
+            len: 0,
+            imm_data: None,
+            qpn: inf.qpn,
+            src: None,
+        };
+        let at = self.clock + Ns(self.cfg.nic.cqe_delay_ns);
+        self.events.push(at, Event::CqeDeliver { node, cqn: send_cq, cqe });
+        self.rearm_issue(node, inf.qpn);
+    }
+}

@@ -1,0 +1,138 @@
+//! Shared receive queues.
+//!
+//! An SRQ pools receive WQEs across many QPs; §1.2 of the paper extends the
+//! idea across *applications*: RDMAvisor posts one host-wide SRQ per NIC so
+//! every application's two-sided traffic draws from one buffer pool. The
+//! starvation watermark models the paper's "data sink consumer may be
+//! unaware that the RQ is starving" concern — consumers can query it.
+
+use std::collections::VecDeque;
+
+use super::types::Srqn;
+use super::wqe::RecvWr;
+
+/// Hardware receive WQE size (ConnectX family: 16 B per SGE slot, one SGE).
+pub const RECV_WQE_BYTES: u64 = 16;
+
+#[derive(Debug)]
+pub struct Srq {
+    pub srqn: Srqn,
+    queue: VecDeque<RecvWr>,
+    capacity: usize,
+    /// Below this many posted WQEs the SRQ reports "starving" (limit event).
+    pub watermark: usize,
+    /// Lifetime counters.
+    pub consumed: u64,
+    pub starved_events: u64,
+    /// Incoming SENDs that found no WQE (-> RNR at the requester).
+    pub rnr_drops: u64,
+}
+
+impl Srq {
+    pub fn new(srqn: Srqn, capacity: usize, watermark: usize) -> Self {
+        Srq {
+            srqn,
+            queue: VecDeque::new(),
+            capacity,
+            watermark,
+            consumed: 0,
+            starved_events: 0,
+            rnr_drops: 0,
+        }
+    }
+
+    /// Post a receive WQE; returns false if the SRQ is full.
+    pub fn post(&mut self, wr: RecvWr) -> bool {
+        if self.queue.len() >= self.capacity {
+            return false;
+        }
+        self.queue.push_back(wr);
+        true
+    }
+
+    /// NIC consumes one WQE for an arriving SEND; None => RNR.
+    pub fn consume(&mut self) -> Option<RecvWr> {
+        match self.queue.pop_front() {
+            Some(wr) => {
+                self.consumed += 1;
+                if self.queue.len() < self.watermark {
+                    self.starved_events += 1;
+                }
+                Some(wr)
+            }
+            None => {
+                self.rnr_drops += 1;
+                None
+            }
+        }
+    }
+
+    pub fn posted(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_starving(&self) -> bool {
+        self.queue.len() < self.watermark
+    }
+
+    /// Memory footprint (ledger): capacity × WQE size (the WQE ring is
+    /// allocated up front by the provider).
+    pub fn mem_bytes(&self) -> u64 {
+        self.capacity as u64 * RECV_WQE_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::types::Mrkey;
+
+    fn wr(id: u64) -> RecvWr {
+        RecvWr { wr_id: id, lkey: Mrkey(1), laddr: 0, len: 4096 }
+    }
+
+    #[test]
+    fn post_consume_fifo() {
+        let mut s = Srq::new(Srqn(0), 8, 2);
+        assert!(s.post(wr(1)));
+        assert!(s.post(wr(2)));
+        assert_eq!(s.consume().unwrap().wr_id, 1);
+        assert_eq!(s.consume().unwrap().wr_id, 2);
+        assert_eq!(s.consumed, 2);
+    }
+
+    #[test]
+    fn rnr_when_empty() {
+        let mut s = Srq::new(Srqn(0), 8, 0);
+        assert!(s.consume().is_none());
+        assert_eq!(s.rnr_drops, 1);
+    }
+
+    #[test]
+    fn capacity_bound() {
+        let mut s = Srq::new(Srqn(0), 2, 0);
+        assert!(s.post(wr(1)));
+        assert!(s.post(wr(2)));
+        assert!(!s.post(wr(3)));
+        assert_eq!(s.posted(), 2);
+    }
+
+    #[test]
+    fn starvation_watermark() {
+        let mut s = Srq::new(Srqn(0), 8, 3);
+        for i in 0..4 {
+            s.post(wr(i));
+        }
+        assert!(!s.is_starving());
+        s.consume();
+        s.consume();
+        assert!(s.is_starving());
+        assert!(s.starved_events > 0);
+    }
+
+    #[test]
+    fn mem_bytes() {
+        let s = Srq::new(Srqn(0), 1024, 16);
+        assert_eq!(s.mem_bytes(), 1024 * RECV_WQE_BYTES);
+    }
+}

@@ -1,0 +1,204 @@
+//! Network: per-node full-duplex ports through a non-blocking switch.
+//!
+//! Each node has one egress and one ingress port at line rate. A frame
+//! leaves the source when its egress port is free (serialization at
+//! `link_gbps`), crosses the switch (fixed propagation + switching delay),
+//! and is delivered when the destination's ingress port has absorbed it.
+//! For a 4-node cluster with a single ToR this is exact; per-port queues
+//! give us backpressure and fan-in contention (3 readers hitting one
+//! responder node share that node's egress on the response path — visible
+//! in Fig 5's plateau).
+
+use super::time::{wire_time, Ns};
+use super::types::NodeId;
+
+/// Per-frame wire overhead on RoCEv2: Eth(14+4) + IPv4(20) + UDP(8) +
+/// BTH(12) + ICRC(4) + preamble/IFG(20) = 82 B. We fold it into each frame.
+pub const FRAME_OVERHEAD_BYTES: u64 = 82;
+
+/// One direction of a port: models serialization as a busy-until horizon.
+#[derive(Clone, Debug, Default)]
+pub struct Port {
+    busy_until: Ns,
+    pub bytes: u64,
+    pub frames: u64,
+}
+
+impl Port {
+    /// Occupy the port for `duration` starting no earlier than `earliest`;
+    /// returns the completion time.
+    fn occupy(&mut self, earliest: Ns, duration: Ns, wire_bytes: u64) -> Ns {
+        let start = self.busy_until.max(earliest);
+        let done = start + duration;
+        self.busy_until = done;
+        self.bytes += wire_bytes;
+        self.frames += 1;
+        done
+    }
+
+    pub fn busy_until(&self) -> Ns {
+        self.busy_until
+    }
+
+    /// Utilization of this port over `[0, horizon]`.
+    pub fn utilization(&self, horizon: Ns, gbps: f64) -> f64 {
+        if horizon.0 == 0 {
+            return 0.0;
+        }
+        (wire_time(self.bytes, gbps).0 as f64 / horizon.0 as f64).min(1.0)
+    }
+}
+
+/// The cluster network: per-node ingress/egress ports + fixed latency.
+#[derive(Debug)]
+pub struct Fabric {
+    pub gbps: f64,
+    pub mtu: u64,
+    /// Propagation + switch latency, one way.
+    pub base_latency: Ns,
+    /// Per-port switch buffering before PFC pauses the senders. RoCE
+    /// fabrics run lossless: once a destination port's queue exceeds this,
+    /// upstream transmitters pause (modeled as delayed egress start).
+    pub switch_buffer_bytes: u64,
+    egress: Vec<Port>,
+    ingress: Vec<Port>,
+}
+
+impl Fabric {
+    pub fn new(nodes: usize, gbps: f64, mtu: u64, base_latency: Ns) -> Self {
+        Fabric {
+            gbps,
+            mtu,
+            base_latency,
+            switch_buffer_bytes: 256 << 10,
+            egress: vec![Port::default(); nodes],
+            ingress: vec![Port::default(); nodes],
+        }
+    }
+
+    /// Send one frame of `payload_bytes` from `src` to `dst` starting no
+    /// earlier than `now`; returns the delivery (last-bit-in) time at `dst`.
+    ///
+    /// First bit leaves `src` when its egress port frees up; it reaches the
+    /// destination `base_latency` later (cut-through switch); the ingress
+    /// port then absorbs the frame at line rate, queueing behind any fan-in
+    /// traffic already arriving there.
+    pub fn send_frame(&mut self, now: Ns, src: NodeId, dst: NodeId, payload_bytes: u64) -> Ns {
+        debug_assert!(payload_bytes <= self.mtu, "frame exceeds MTU");
+        let wire_bytes = payload_bytes + FRAME_OVERHEAD_BYTES;
+        let frame_time = wire_time(wire_bytes, self.gbps);
+        // PFC backpressure: if the destination port's queue is more than
+        // `switch_buffer_bytes` deep (in time: its busy horizon is that far
+        // ahead of now), the source is paused until it drains below the
+        // threshold. This is what makes 3:1 fan-in actually slow the
+        // responders down instead of queueing unboundedly in the switch.
+        let buffer_time = wire_time(self.switch_buffer_bytes, self.gbps);
+        let pfc_gate = self.ingress[dst.0 as usize]
+            .busy_until()
+            .saturating_sub(buffer_time + self.base_latency);
+        let tx_start = self.egress[src.0 as usize].busy_until().max(now).max(pfc_gate);
+        self.egress[src.0 as usize].occupy(tx_start, frame_time, wire_bytes);
+        let first_bit_at_dst = tx_start + self.base_latency;
+        self.ingress[dst.0 as usize].occupy(first_bit_at_dst, frame_time, wire_bytes)
+    }
+
+    /// Split a message into MTU-sized frames (Table 1's framing note).
+    pub fn frames_for(&self, len: u64) -> Vec<u64> {
+        if len == 0 {
+            return vec![0];
+        }
+        let mut out = Vec::with_capacity((len / self.mtu + 1) as usize);
+        let mut left = len;
+        while left > 0 {
+            let f = left.min(self.mtu);
+            out.push(f);
+            left -= f;
+        }
+        out
+    }
+
+    pub fn egress_stats(&self, node: NodeId) -> &Port {
+        &self.egress[node.0 as usize]
+    }
+
+    /// When this node's egress port frees up (engine backpressure input).
+    pub fn egress_busy_until(&self, node: NodeId) -> Ns {
+        self.egress[node.0 as usize].busy_until()
+    }
+
+    pub fn ingress_stats(&self, node: NodeId) -> &Port {
+        &self.ingress[node.0 as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fab() -> Fabric {
+        Fabric::new(4, 40.0, 4096, Ns(1000))
+    }
+
+    #[test]
+    fn frame_latency_includes_serialization_and_prop() {
+        let mut f = fab();
+        let t = f.send_frame(Ns(0), NodeId(0), NodeId(1), 4096);
+        // ~ (4096+82)*8/40 ns tx + 1000 ns prop + rx absorption
+        assert!(t.0 > 1000 + 835, "t={t}");
+        assert!(t.0 < 4000, "t={t}");
+    }
+
+    #[test]
+    fn egress_serializes_back_to_back() {
+        let mut f = fab();
+        let t1 = f.send_frame(Ns(0), NodeId(0), NodeId(1), 4096);
+        let t2 = f.send_frame(Ns(0), NodeId(0), NodeId(1), 4096);
+        let gap = t2.0 - t1.0;
+        let frame_ns = wire_time(4096 + FRAME_OVERHEAD_BYTES, 40.0).0;
+        assert!((gap as i64 - frame_ns as i64).unsigned_abs() <= 2, "gap={gap}");
+    }
+
+    #[test]
+    fn ingress_fanin_contention() {
+        // two sources to one sink: deliveries can't overlap at the sink port
+        let mut f = fab();
+        let a = f.send_frame(Ns(0), NodeId(0), NodeId(2), 4096);
+        let b = f.send_frame(Ns(0), NodeId(1), NodeId(2), 4096);
+        let frame_ns = wire_time(4096 + FRAME_OVERHEAD_BYTES, 40.0).0;
+        assert!(
+            (b.0 as i64 - a.0 as i64).unsigned_abs() >= frame_ns - 2,
+            "a={a} b={b}"
+        );
+    }
+
+    #[test]
+    fn distinct_destinations_dont_contend_at_ingress() {
+        let mut f = fab();
+        let a = f.send_frame(Ns(0), NodeId(0), NodeId(1), 4096);
+        // different egress AND ingress => same timing as a alone
+        let b = f.send_frame(Ns(0), NodeId(2), NodeId(3), 4096);
+        assert_eq!(a.0, b.0);
+    }
+
+    #[test]
+    fn framing_mtu() {
+        let f = fab();
+        assert_eq!(f.frames_for(4096), vec![4096]);
+        assert_eq!(f.frames_for(10000), vec![4096, 4096, 1808]);
+        assert_eq!(f.frames_for(0), vec![0]);
+        assert_eq!(f.frames_for(64 << 10).len(), 16);
+    }
+
+    #[test]
+    fn sustained_rate_is_line_rate() {
+        let mut f = fab();
+        let n = 1000u64;
+        let mut last = Ns(0);
+        for _ in 0..n {
+            last = f.send_frame(Ns(0), NodeId(0), NodeId(1), 4096);
+        }
+        let goodput = super::super::time::gbps(4096 * n, last);
+        // payload goodput slightly below 40G due to per-frame overhead
+        assert!(goodput > 38.0 && goodput < 40.0, "goodput={goodput}");
+    }
+}

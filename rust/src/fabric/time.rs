@@ -1,0 +1,124 @@
+//! Virtual time: nanosecond clock and rate arithmetic.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point (or span) in virtual time, in nanoseconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Ns(pub u64);
+
+impl Ns {
+    pub const ZERO: Ns = Ns(0);
+
+    pub fn from_us(us: u64) -> Ns {
+        Ns(us * 1_000)
+    }
+
+    pub fn from_ms(ms: u64) -> Ns {
+        Ns(ms * 1_000_000)
+    }
+
+    pub fn from_secs_f64(s: f64) -> Ns {
+        Ns((s * 1e9) as u64)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn as_us_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+
+    pub fn max(self, other: Ns) -> Ns {
+        Ns(self.0.max(other.0))
+    }
+
+    pub fn saturating_sub(self, other: Ns) -> Ns {
+        Ns(self.0.saturating_sub(other.0))
+    }
+}
+
+impl Add for Ns {
+    type Output = Ns;
+    fn add(self, rhs: Ns) -> Ns {
+        Ns(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Ns {
+    fn add_assign(&mut self, rhs: Ns) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Ns {
+    type Output = Ns;
+    fn sub(self, rhs: Ns) -> Ns {
+        Ns(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for Ns {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 < 1_000 {
+            write!(f, "{}ns", self.0)
+        } else if self.0 < 1_000_000 {
+            write!(f, "{:.2}µs", self.0 as f64 / 1e3)
+        } else if self.0 < 1_000_000_000 {
+            write!(f, "{:.2}ms", self.0 as f64 / 1e6)
+        } else {
+            write!(f, "{:.3}s", self.0 as f64 / 1e9)
+        }
+    }
+}
+
+/// Time to serialize `bytes` at `gbps` gigabits per second.
+pub fn wire_time(bytes: u64, gbps: f64) -> Ns {
+    // ns = bytes*8 / (gbps * 1e9) * 1e9 = bytes*8 / gbps
+    Ns((bytes as f64 * 8.0 / gbps).ceil() as u64)
+}
+
+/// Throughput in Gb/s for `bytes` over `elapsed`.
+pub fn gbps(bytes: u64, elapsed: Ns) -> f64 {
+    if elapsed.0 == 0 {
+        return 0.0;
+    }
+    bytes as f64 * 8.0 / elapsed.0 as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_time_40g() {
+        // 4096 B at 40 Gb/s = 819.2 ns
+        assert_eq!(wire_time(4096, 40.0), Ns(820));
+        // 1 GB at 40 Gb/s = 0.2 s
+        let t = wire_time(1_000_000_000, 40.0);
+        assert!((t.as_secs_f64() - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gbps_roundtrip() {
+        let t = wire_time(1_000_000, 40.0);
+        let g = gbps(1_000_000, t);
+        assert!((g - 40.0).abs() < 0.1, "g={g}");
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", Ns(500)), "500ns");
+        assert_eq!(format!("{}", Ns(2_500)), "2.50µs");
+        assert_eq!(format!("{}", Ns(3_000_000)), "3.00ms");
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(Ns(5) + Ns(7), Ns(12));
+        assert_eq!(Ns(9) - Ns(4), Ns(5));
+        assert_eq!(Ns(3).max(Ns(8)), Ns(8));
+        assert_eq!(Ns(3).saturating_sub(Ns(8)), Ns(0));
+    }
+}

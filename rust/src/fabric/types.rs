@@ -1,0 +1,142 @@
+//! Core identifiers, transports, opcodes and the Table-1 capability matrix.
+
+use std::fmt;
+
+/// A physical machine in the cluster.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// Queue-pair number, unique per node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Qpn(pub u32);
+
+/// Completion-queue id, unique per node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Cqn(pub u32);
+
+/// Shared-receive-queue id, unique per node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Srqn(pub u32);
+
+/// Memory-region key (both lkey and rkey in this simulator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Mrkey(pub u32);
+
+/// RDMA transport service types (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QpTransport {
+    /// Reliable Connection: acked, ordered, SEND/WRITE/READ, ≤1 GB messages.
+    Rc,
+    /// Unreliable Connection: unacked, SEND/WRITE only, ≤1 GB messages.
+    Uc,
+    /// Unreliable Datagram: unacked, SEND only, ≤MTU messages, one QP may
+    /// address many remote QPs.
+    Ud,
+}
+
+impl fmt::Display for QpTransport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QpTransport::Rc => write!(f, "RC"),
+            QpTransport::Uc => write!(f, "UC"),
+            QpTransport::Ud => write!(f, "UD"),
+        }
+    }
+}
+
+/// Verb opcodes used by work requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Verb {
+    /// Two-sided send (channel semantics); consumes a remote RQ/SRQ WQE.
+    Send,
+    /// One-sided RDMA WRITE (optionally with immediate data).
+    Write,
+    /// One-sided RDMA READ.
+    Read,
+}
+
+impl fmt::Display for Verb {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Verb::Send => write!(f, "SEND"),
+            Verb::Write => write!(f, "WRITE"),
+            Verb::Read => write!(f, "READ"),
+        }
+    }
+}
+
+/// Maximum message size for connected transports (Table 1: 1 GB).
+pub const MAX_CONNECTED_MSG: u64 = 1 << 30;
+
+/// Table 1: does `transport` support `verb`?
+pub fn supports(transport: QpTransport, verb: Verb) -> bool {
+    matches!(
+        (transport, verb),
+        (QpTransport::Rc, _)
+            | (QpTransport::Uc, Verb::Send)
+            | (QpTransport::Uc, Verb::Write)
+            | (QpTransport::Ud, Verb::Send)
+    )
+}
+
+/// Table 1: maximum message size for `transport` given the fabric MTU.
+pub fn max_msg_size(transport: QpTransport, mtu: u64) -> u64 {
+    match transport {
+        QpTransport::Rc | QpTransport::Uc => MAX_CONNECTED_MSG,
+        QpTransport::Ud => mtu,
+    }
+}
+
+/// Completion status codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WcStatus {
+    Success,
+    /// RQ/SRQ had no posted WQE for an incoming SEND.
+    RnrRetryExceeded,
+    /// Access outside a registered region / bad rkey.
+    RemoteAccessError,
+    /// Message exceeded the transport's max size.
+    InvalidLength,
+    /// Local protection error (bad lkey).
+    LocalProtectionError,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_capability_matrix() {
+        use QpTransport::*;
+        use Verb::*;
+        // RC: everything
+        assert!(supports(Rc, Send) && supports(Rc, Write) && supports(Rc, Read));
+        // UC: no READ
+        assert!(supports(Uc, Send) && supports(Uc, Write));
+        assert!(!supports(Uc, Read));
+        // UD: SEND only
+        assert!(supports(Ud, Send));
+        assert!(!supports(Ud, Write) && !supports(Ud, Read));
+    }
+
+    #[test]
+    fn table1_max_sizes() {
+        let mtu = 4096;
+        assert_eq!(max_msg_size(QpTransport::Rc, mtu), 1 << 30);
+        assert_eq!(max_msg_size(QpTransport::Uc, mtu), 1 << 30);
+        assert_eq!(max_msg_size(QpTransport::Ud, mtu), 4096);
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(format!("{}", QpTransport::Rc), "RC");
+        assert_eq!(format!("{}", Verb::Read), "READ");
+        assert_eq!(format!("{}", NodeId(3)), "n3");
+    }
+}

@@ -1,0 +1,216 @@
+//! ibverbs-style convenience layer over [`Sim`].
+//!
+//! The RaaS daemon and both baselines are written against this façade the
+//! same way the real RDMAvisor prototype is written against libibverbs.
+//! It adds: connected-QP-pair setup in one call, UD endpoint setup, recv
+//! buffer/WQE replenishing helpers, and the Table-1 capability probe used
+//! by the conformance tests and `figures --table1`.
+
+use super::mr::{Access, MemoryRegion};
+use super::qp::PostError;
+use super::sim::Sim;
+use super::types::{max_msg_size, supports, Cqn, NodeId, QpTransport, Qpn, Srqn, Verb};
+use super::wqe::{RecvWr, SendWr};
+
+/// A fully-connected (RTS↔RTS) QP pair.
+#[derive(Clone, Copy, Debug)]
+pub struct QpPair {
+    pub a: (NodeId, Qpn),
+    pub b: (NodeId, Qpn),
+}
+
+/// Create CQs + QPs on both ends and connect them (RC/UC).
+pub fn create_connected_pair(
+    sim: &mut Sim,
+    transport: QpTransport,
+    a: NodeId,
+    b: NodeId,
+    a_send_cq: Cqn,
+    a_recv_cq: Cqn,
+    b_send_cq: Cqn,
+    b_recv_cq: Cqn,
+) -> QpPair {
+    assert_ne!(transport, QpTransport::Ud, "UD is connectionless; use create_ud");
+    let qa = sim.create_qp(a, transport, a_send_cq, a_recv_cq);
+    let qb = sim.create_qp(b, transport, b_send_cq, b_recv_cq);
+    sim.connect(a, qa, b, qb);
+    QpPair { a: (a, qa), b: (b, qb) }
+}
+
+/// Create and activate a UD endpoint.
+pub fn create_ud(sim: &mut Sim, node: NodeId, send_cq: Cqn, recv_cq: Cqn) -> Qpn {
+    let qpn = sim.create_qp(node, QpTransport::Ud, send_cq, recv_cq);
+    sim.activate_ud(node, qpn);
+    qpn
+}
+
+/// Keep `target` receive WQEs posted on a private RQ, drawing buffers from
+/// `mr` in fixed `slot` strides. Returns how many were posted.
+pub fn replenish_rq(
+    sim: &mut Sim,
+    node: NodeId,
+    qpn: Qpn,
+    mr: &MemoryRegion,
+    slot_bytes: u64,
+    target: usize,
+    next_wr_id: &mut u64,
+) -> usize {
+    let mut posted = 0;
+    loop {
+        let cur = sim.node(node).qps.get(&qpn.0).map(|q| q.rq.len()).unwrap_or(0);
+        if cur >= target {
+            break;
+        }
+        let slot = (*next_wr_id as u64) % (mr.len / slot_bytes).max(1);
+        let wr = RecvWr {
+            wr_id: *next_wr_id,
+            lkey: mr.key,
+            laddr: mr.addr + slot * slot_bytes,
+            len: slot_bytes,
+        };
+        *next_wr_id += 1;
+        if sim.post_recv(node, qpn, wr).is_err() {
+            break;
+        }
+        posted += 1;
+    }
+    posted
+}
+
+/// Keep `target` receive WQEs posted on an SRQ.
+pub fn replenish_srq(
+    sim: &mut Sim,
+    node: NodeId,
+    srqn: Srqn,
+    mr: &MemoryRegion,
+    slot_bytes: u64,
+    target: usize,
+    next_wr_id: &mut u64,
+) -> usize {
+    let mut posted = 0;
+    loop {
+        let cur = sim.node(node).srqs.get(&srqn.0).map(|s| s.posted()).unwrap_or(0);
+        if cur >= target {
+            break;
+        }
+        let slot = *next_wr_id % (mr.len / slot_bytes).max(1);
+        let wr = RecvWr {
+            wr_id: *next_wr_id,
+            lkey: mr.key,
+            laddr: mr.addr + slot * slot_bytes,
+            len: slot_bytes,
+        };
+        *next_wr_id += 1;
+        if !sim.post_srq_recv(node, srqn, wr) {
+            break;
+        }
+        posted += 1;
+    }
+    posted
+}
+
+/// One row of the Table-1 capability probe.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CapabilityRow {
+    pub transport: QpTransport,
+    pub send_recv: bool,
+    pub write: bool,
+    pub read: bool,
+    pub max_msg: u64,
+}
+
+/// Probe the simulator's enforced capability matrix (must equal Table 1).
+pub fn capability_matrix(mtu: u64) -> Vec<CapabilityRow> {
+    [QpTransport::Rc, QpTransport::Uc, QpTransport::Ud]
+        .into_iter()
+        .map(|t| CapabilityRow {
+            transport: t,
+            send_recv: supports(t, Verb::Send),
+            write: supports(t, Verb::Write),
+            read: supports(t, Verb::Read),
+            max_msg: max_msg_size(t, mtu),
+        })
+        .collect()
+}
+
+/// Convenience: post a send and panic with context on validation failure
+/// (test/example use).
+pub fn must_post(sim: &mut Sim, node: NodeId, qpn: Qpn, wr: SendWr) {
+    if let Err(e) = sim.post_send(node, qpn, wr) {
+        panic!("post_send failed on {node}/{qpn:?}: {e}");
+    }
+}
+
+/// Register a remote-accessible buffer with huge pages (the default for
+/// all systems in this reproduction, as the paper's implementation does).
+pub fn reg_buffer(sim: &mut Sim, node: NodeId, len: u64) -> MemoryRegion {
+    sim.reg_mr(node, len, Access::REMOTE_RW, true)
+}
+
+/// Validation error re-export for API users.
+pub type VerbsError = PostError;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::sim::FabricConfig;
+
+    #[test]
+    fn capability_matrix_matches_table1() {
+        let rows = capability_matrix(4096);
+        let rc = &rows[0];
+        assert!(rc.send_recv && rc.write && rc.read);
+        assert_eq!(rc.max_msg, 1 << 30);
+        let uc = &rows[1];
+        assert!(uc.send_recv && uc.write && !uc.read);
+        assert_eq!(uc.max_msg, 1 << 30);
+        let ud = &rows[2];
+        assert!(ud.send_recv && !ud.write && !ud.read);
+        assert_eq!(ud.max_msg, 4096);
+    }
+
+    #[test]
+    fn connected_pair_reaches_rts() {
+        let mut sim = Sim::new(FabricConfig::default());
+        let cq0 = sim.create_cq(NodeId(0), 64);
+        let cq1 = sim.create_cq(NodeId(1), 64);
+        let pair = create_connected_pair(
+            &mut sim,
+            QpTransport::Rc,
+            NodeId(0),
+            NodeId(1),
+            cq0,
+            cq0,
+            cq1,
+            cq1,
+        );
+        let qp = &sim.node(NodeId(0)).qps[&pair.a.1 .0];
+        assert_eq!(qp.state, crate::fabric::qp::QpState::Rts);
+        assert_eq!(qp.peer, Some((NodeId(1), pair.b.1)));
+    }
+
+    #[test]
+    fn replenish_fills_to_target() {
+        let mut sim = Sim::new(FabricConfig::default());
+        let cq = sim.create_cq(NodeId(0), 64);
+        let qpn = sim.create_qp(NodeId(0), QpTransport::Rc, cq, cq);
+        sim.node_mut(NodeId(0)).qps.get_mut(&qpn.0).unwrap().to_rtr();
+        let mr = reg_buffer(&mut sim, NodeId(0), 1 << 20);
+        let mut next = 0;
+        let posted = replenish_rq(&mut sim, NodeId(0), qpn, &mr, 4096, 32, &mut next);
+        assert_eq!(posted, 32);
+        // idempotent: already at target
+        let posted2 = replenish_rq(&mut sim, NodeId(0), qpn, &mr, 4096, 32, &mut next);
+        assert_eq!(posted2, 0);
+    }
+
+    #[test]
+    fn srq_replenish() {
+        let mut sim = Sim::new(FabricConfig::default());
+        let srqn = sim.create_srq(NodeId(0), 128, 8);
+        let mr = reg_buffer(&mut sim, NodeId(0), 1 << 20);
+        let mut next = 0;
+        assert_eq!(replenish_srq(&mut sim, NodeId(0), srqn, &mr, 4096, 64, &mut next), 64);
+        assert_eq!(sim.node(NodeId(0)).srqs[&srqn.0].posted(), 64);
+    }
+}

@@ -1,0 +1,186 @@
+//! Work queue elements (WQEs) and completion queue elements (CQEs).
+//!
+//! The `wr_id` and `imm_data` fields are the paper's vQPN carriers (Fig 4):
+//! RDMAvisor stamps the virtual QPN of a logical connection into `wr_id` for
+//! one-sided verbs (visible only to the initiator's CQE) and into `imm_data`
+//! for two-sided verbs (travels on the wire to the responder's CQE).
+
+use super::types::{Mrkey, NodeId, Qpn, Verb, WcStatus};
+
+/// A send work request, as submitted via `post_send`.
+#[derive(Clone, Debug)]
+pub struct SendWr {
+    /// Opaque 64-bit id returned in the initiator's CQE. RDMAvisor packs the
+    /// vQPN into the low 32 bits (Fig 4).
+    pub wr_id: u64,
+    pub verb: Verb,
+    /// Payload length in bytes (the simulator tracks extents, not bytes).
+    pub len: u64,
+    /// Local buffer (lkey + offset within the region).
+    pub lkey: Mrkey,
+    pub laddr: u64,
+    /// Remote buffer for one-sided verbs (ignored for SEND).
+    pub rkey: Option<Mrkey>,
+    pub raddr: u64,
+    /// 4-byte immediate travelling with the message (SEND / WRITE-with-imm);
+    /// RDMAvisor's vQPN carrier for two-sided traffic.
+    pub imm_data: Option<u32>,
+    /// UD only: destination address handle (node + remote QPN).
+    pub ud_dest: Option<(NodeId, Qpn)>,
+    /// Suppress the local completion (unsignaled WR) — halves CQE traffic
+    /// on the RaaS hot path for WRITEs that the protocol acks elsewhere.
+    pub signaled: bool,
+}
+
+impl SendWr {
+    /// A SEND with immediate data.
+    pub fn send(wr_id: u64, len: u64, lkey: Mrkey, laddr: u64, imm: u32) -> SendWr {
+        SendWr {
+            wr_id,
+            verb: Verb::Send,
+            len,
+            lkey,
+            laddr,
+            rkey: None,
+            raddr: 0,
+            imm_data: Some(imm),
+            ud_dest: None,
+            signaled: true,
+        }
+    }
+
+    /// A one-sided WRITE.
+    pub fn write(
+        wr_id: u64,
+        len: u64,
+        lkey: Mrkey,
+        laddr: u64,
+        rkey: Mrkey,
+        raddr: u64,
+    ) -> SendWr {
+        SendWr {
+            wr_id,
+            verb: Verb::Write,
+            len,
+            lkey,
+            laddr,
+            rkey: Some(rkey),
+            raddr,
+            imm_data: None,
+            ud_dest: None,
+            signaled: true,
+        }
+    }
+
+    /// A one-sided READ.
+    pub fn read(
+        wr_id: u64,
+        len: u64,
+        lkey: Mrkey,
+        laddr: u64,
+        rkey: Mrkey,
+        raddr: u64,
+    ) -> SendWr {
+        SendWr {
+            wr_id,
+            verb: Verb::Read,
+            len,
+            lkey,
+            laddr,
+            rkey: Some(rkey),
+            raddr,
+            imm_data: None,
+            ud_dest: None,
+            signaled: true,
+        }
+    }
+
+    pub fn with_imm(mut self, imm: u32) -> SendWr {
+        self.imm_data = Some(imm);
+        self
+    }
+
+    pub fn unsignaled(mut self) -> SendWr {
+        self.signaled = false;
+        self
+    }
+
+    pub fn to_ud(mut self, node: NodeId, qpn: Qpn) -> SendWr {
+        self.ud_dest = Some((node, qpn));
+        self
+    }
+}
+
+/// A receive work request (posted to an RQ or SRQ).
+#[derive(Clone, Debug)]
+pub struct RecvWr {
+    pub wr_id: u64,
+    pub lkey: Mrkey,
+    pub laddr: u64,
+    pub len: u64,
+}
+
+/// Which side/op a completion describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CqeKind {
+    /// Initiator-side completion of a send-queue WR.
+    SendDone(Verb),
+    /// Responder-side completion of a consumed receive WQE (SEND arrived).
+    Recv,
+    /// Responder-side completion for WRITE-with-imm (consumes an RQ WQE).
+    RecvRdmaWithImm,
+}
+
+/// A completion queue element.
+#[derive(Clone, Debug)]
+pub struct Cqe {
+    pub wr_id: u64,
+    pub kind: CqeKind,
+    pub status: WcStatus,
+    /// Bytes transferred.
+    pub len: u64,
+    /// Immediate data, if the message carried one (vQPN for two-sided).
+    pub imm_data: Option<u32>,
+    /// Local QP this completion belongs to.
+    pub qpn: Qpn,
+    /// For Recv completions on UD: the source (node, qpn).
+    pub src: Option<(NodeId, Qpn)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_set_fields() {
+        let wr = SendWr::write(7, 64 << 10, Mrkey(1), 0x1000, Mrkey(2), 0x2000);
+        assert_eq!(wr.verb, Verb::Write);
+        assert_eq!(wr.rkey, Some(Mrkey(2)));
+        assert!(wr.signaled);
+        let wr = wr.with_imm(0xDEAD).unsignaled();
+        assert_eq!(wr.imm_data, Some(0xDEAD));
+        assert!(!wr.signaled);
+    }
+
+    #[test]
+    fn send_carries_imm() {
+        let wr = SendWr::send(1, 128, Mrkey(1), 0, 42);
+        assert_eq!(wr.imm_data, Some(42));
+        assert_eq!(wr.verb, Verb::Send);
+        assert!(wr.rkey.is_none());
+    }
+
+    #[test]
+    fn ud_dest() {
+        let wr = SendWr::send(1, 128, Mrkey(1), 0, 0).to_ud(NodeId(2), Qpn(9));
+        assert_eq!(wr.ud_dest, Some((NodeId(2), Qpn(9))));
+    }
+
+    #[test]
+    fn wr_id_carries_32bit_vqpn() {
+        // Fig 4: vQPN rides in the low 32 bits of wr_id
+        let vqpn: u32 = 0xABCD_1234;
+        let wr = SendWr::read(vqpn as u64, 4096, Mrkey(1), 0, Mrkey(2), 0);
+        assert_eq!(wr.wr_id as u32, vqpn);
+    }
+}

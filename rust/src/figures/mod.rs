@@ -1,0 +1,404 @@
+//! Regeneration harness for every table and figure of the evaluation (§3).
+//!
+//! Each function sweeps the paper's parameter range, runs the deterministic
+//! scenario drivers, and returns the series as rows; `print_*` renders the
+//! paper-shaped table to stdout and optionally TSV. The criterion-style
+//! benches in `rust/benches/` call the same functions, so `cargo bench`
+//! and `rdmavisor figures --all` produce identical numbers.
+
+use crate::fabric::sim::FabricConfig;
+use crate::fabric::time::Ns;
+use crate::fabric::types::{QpTransport, Verb};
+use crate::fabric::verbs::capability_matrix;
+use crate::workload::scenarios::{
+    locked_random_read, naive_random_read, raas_random_read, verbs_sweep_point, RunStats,
+    ScenarioCfg,
+};
+
+/// Message sizes swept in Fig 1 (64 B … 1 MB).
+pub const FIG1_SIZES: &[u64] = &[
+    64,
+    256,
+    1 << 10,
+    4 << 10,
+    16 << 10,
+    64 << 10,
+    256 << 10,
+    1 << 20,
+];
+
+/// Connection counts swept in Fig 5 (up to 1000, knee at ~400).
+pub const FIG5_CONNS: &[usize] = &[50, 100, 200, 300, 400, 500, 600, 700, 800, 1000];
+
+/// Thread counts swept in Fig 6.
+pub const FIG6_THREADS: &[usize] = &[6, 12, 18, 24, 36, 48];
+
+/// Application counts swept in Figs 7/8.
+pub const FIG78_APPS: &[u32] = &[1, 2, 4, 8, 16, 32];
+
+/// Short-run mode for tests/CI; full mode for the recorded experiments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Budget {
+    Quick,
+    Full,
+}
+
+impl Budget {
+    pub fn from_env() -> Budget {
+        if std::env::var("RDMAVISOR_BENCH_QUICK").is_ok() {
+            Budget::Quick
+        } else {
+            Budget::Full
+        }
+    }
+
+    fn duration(self) -> Ns {
+        match self {
+            Budget::Quick => Ns::from_ms(4),
+            Budget::Full => Ns::from_ms(20),
+        }
+    }
+}
+
+// ------------------------------------------------------------------ Table 1
+
+/// Print the Table-1 capability matrix as enforced by the fabric.
+pub fn table1() -> String {
+    let mut out = String::new();
+    out.push_str("Table 1: operations & max message size per transport\n");
+    out.push_str(&format!(
+        "{:<6} {:>10} {:>7} {:>6} {:>12}\n",
+        "", "SEND/RECV", "WRITE", "READ", "Max Message"
+    ));
+    for row in capability_matrix(4096) {
+        let fmt_b = |b: bool| if b { "yes" } else { "-" };
+        let max = if row.max_msg == 1 << 30 {
+            "1GB".to_string()
+        } else {
+            format!("{} (MTU)", row.max_msg)
+        };
+        out.push_str(&format!(
+            "{:<6} {:>10} {:>7} {:>6} {:>12}\n",
+            row.transport.to_string(),
+            fmt_b(row.send_recv),
+            fmt_b(row.write),
+            fmt_b(row.read),
+            max
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------------- Fig 1
+
+/// One Fig-1 series point: (size, Gb/s).
+#[derive(Clone, Copy, Debug)]
+pub struct Fig1Row {
+    pub msg_bytes: u64,
+    pub rc_read: f64,
+    pub rc_write: f64,
+    pub uc_write: f64,
+    /// NaN above MTU (UD cannot carry it — Table 1).
+    pub ud_send: f64,
+}
+
+pub fn fig1(budget: Budget) -> Vec<Fig1Row> {
+    let d = budget.duration();
+    let window = 16;
+    FIG1_SIZES
+        .iter()
+        .map(|&sz| Fig1Row {
+            msg_bytes: sz,
+            rc_read: verbs_sweep_point(QpTransport::Rc, Verb::Read, sz, window, d),
+            rc_write: verbs_sweep_point(QpTransport::Rc, Verb::Write, sz, window, d),
+            uc_write: verbs_sweep_point(QpTransport::Uc, Verb::Write, sz, window, d),
+            ud_send: if sz <= 4096 {
+                verbs_sweep_point(QpTransport::Ud, Verb::Send, sz, window, d)
+            } else {
+                f64::NAN
+            },
+        })
+        .collect()
+}
+
+pub fn print_fig1(rows: &[Fig1Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 1: throughput (Gb/s) vs message size, single QP pair, window 16\n");
+    out.push_str(&format!(
+        "{:>10} {:>9} {:>9} {:>9} {:>9}\n",
+        "size", "RC READ", "RC WRITE", "UC WRITE", "UD SEND"
+    ));
+    for r in rows {
+        let ud = if r.ud_send.is_nan() { "n/a".into() } else { format!("{:.2}", r.ud_send) };
+        out.push_str(&format!(
+            "{:>10} {:>9.2} {:>9.2} {:>9.2} {:>9}\n",
+            human_size(r.msg_bytes),
+            r.rc_read,
+            r.rc_write,
+            r.uc_write,
+            ud
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------------- Fig 5
+
+#[derive(Clone, Copy, Debug)]
+pub struct Fig5Row {
+    pub conns: usize,
+    pub naive: RunStats,
+    pub raas: RunStats,
+}
+
+pub fn fig5(budget: Budget) -> Vec<Fig5Row> {
+    let conns: Vec<usize> = match budget {
+        Budget::Quick => vec![50, 200, 400, 600, 800],
+        Budget::Full => FIG5_CONNS.to_vec(),
+    };
+    conns
+        .into_iter()
+        .map(|c| {
+            let mut cfg = ScenarioCfg::default();
+            cfg.conns = c;
+            // fig 5 always runs a long window: with hundreds of outstanding
+            // 64 KB reads one closed-loop round takes ~10 ms, and the
+            // ICM-thrash regime develops only after reposts become
+            // engine-gated
+            cfg.duration = Ns::from_ms(40);
+            cfg.warmup_frac = 0.4;
+            Fig5Row { conns: c, naive: naive_random_read(&cfg), raas: raas_random_read(&cfg) }
+        })
+        .collect()
+}
+
+pub fn print_fig5(rows: &[Fig5Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 5: scalability — random 64 KB READ, throughput (Gb/s) vs #connections\n");
+    out.push_str(&format!(
+        "{:>7} {:>11} {:>11} {:>12} {:>12}\n",
+        "conns", "naive Gb/s", "RaaS Gb/s", "naive cache", "RaaS cache"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:>7} {:>11.2} {:>11.2} {:>11.1}% {:>11.1}%\n",
+            r.conns,
+            r.naive.gbps,
+            r.raas.gbps,
+            r.naive.cache_hit_rate * 100.0,
+            r.raas.cache_hit_rate * 100.0
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------------- Fig 6
+
+#[derive(Clone, Copy, Debug)]
+pub struct Fig6Row {
+    pub threads: usize,
+    pub raas: RunStats,
+    pub locked_q3: RunStats,
+    pub locked_q6: RunStats,
+}
+
+/// Fig 6 uses small (512 B) random reads so per-op costs (and therefore
+/// lock serialization) dominate; the paper does not state the size — this
+/// assumption is recorded in EXPERIMENTS.md.
+pub fn fig6(budget: Budget) -> Vec<Fig6Row> {
+    let threads: Vec<usize> = match budget {
+        Budget::Quick => vec![6, 12, 24],
+        Budget::Full => FIG6_THREADS.to_vec(),
+    };
+    threads
+        .into_iter()
+        .map(|t| {
+            let mut cfg = ScenarioCfg::default();
+            cfg.conns = t;
+            cfg.msg_bytes = 512;
+            cfg.window = 4;
+            cfg.duration = budget.duration();
+            Fig6Row {
+                threads: t,
+                raas: raas_random_read(&cfg),
+                locked_q3: locked_random_read(&cfg, 3),
+                locked_q6: locked_random_read(&cfg, 6),
+            }
+        })
+        .collect()
+}
+
+pub fn print_fig6(rows: &[Fig6Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 6: QP sharing — random 512 B READ, Mops vs worker threads\n");
+    out.push_str(&format!(
+        "{:>8} {:>10} {:>12} {:>12} {:>14}\n",
+        "threads", "RaaS Mops", "lock q=3", "lock q=6", "q6 lock-wait"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:>8} {:>10.3} {:>12.3} {:>12.3} {:>12.2}ms\n",
+            r.threads, r.raas.mops, r.locked_q3.mops, r.locked_q6.mops, r.locked_q6.lock_wait_ms
+        ));
+    }
+    out
+}
+
+// --------------------------------------------------------------- Figs 7/8
+
+#[derive(Clone, Copy, Debug)]
+pub struct Fig78Row {
+    pub apps: u32,
+    pub naive_mem: f64,
+    pub raas_mem: f64,
+    pub naive_cpu: f64,
+    pub raas_cpu: f64,
+}
+
+/// Figs 7 & 8: normalized memory/CPU vs number of applications. One unit =
+/// the resources one naive application consumes (the paper's normalization).
+pub fn fig78(budget: Budget) -> Vec<Fig78Row> {
+    let conns_per_app = 16;
+    let run = |apps: u32| -> (RunStats, RunStats) {
+        let mut cfg = ScenarioCfg::default();
+        cfg.apps = apps;
+        cfg.conns = (apps * conns_per_app) as usize;
+        cfg.duration = budget.duration();
+        (naive_random_read(&cfg), raas_random_read(&cfg))
+    };
+    // normalization unit: one naive app
+    let (n1, _) = run(1);
+    let unit_mem = n1.mem_bytes.max(1) as f64;
+    let unit_cpu = n1.cpu_cores.max(1e-9);
+
+    let apps: Vec<u32> = match budget {
+        Budget::Quick => vec![1, 4, 16],
+        Budget::Full => FIG78_APPS.to_vec(),
+    };
+    apps.into_iter()
+        .map(|a| {
+            let (n, r) = run(a);
+            Fig78Row {
+                apps: a,
+                naive_mem: n.mem_bytes as f64 / unit_mem,
+                raas_mem: r.mem_bytes as f64 / unit_mem,
+                naive_cpu: n.cpu_cores / unit_cpu,
+                raas_cpu: r.cpu_cores / unit_cpu,
+            }
+        })
+        .collect()
+}
+
+pub fn print_fig7(rows: &[Fig78Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 7: normalized memory usage vs #applications (unit = 1 naive app)\n");
+    out.push_str(&format!("{:>6} {:>12} {:>12}\n", "apps", "naive", "RaaS"));
+    for r in rows {
+        out.push_str(&format!("{:>6} {:>12.2} {:>12.2}\n", r.apps, r.naive_mem, r.raas_mem));
+    }
+    out
+}
+
+pub fn print_fig8(rows: &[Fig78Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 8: normalized CPU consumption vs #applications (unit = 1 naive app)\n");
+    out.push_str(&format!("{:>6} {:>12} {:>12}\n", "apps", "naive", "RaaS"));
+    for r in rows {
+        out.push_str(&format!("{:>6} {:>12.2} {:>12.2}\n", r.apps, r.naive_cpu, r.raas_cpu));
+    }
+    out
+}
+
+// ------------------------------------------------------- §2.2 ablation
+
+/// memcpy-vs-memreg staging crossover (Frey & Alonso [9]); the ablation
+/// behind RDMAvisor's decision not to offer send_zero_copy.
+pub fn send_staging_sweep() -> String {
+    use crate::raas::buffer::{Staging, StagingCosts};
+    let costs = StagingCosts::default();
+    let mut out = String::new();
+    out.push_str("§2.2 send staging: memcpy vs memreg cost (ns) by size\n");
+    out.push_str(&format!("{:>10} {:>10} {:>10} {:>8}\n", "size", "memcpy", "memreg", "choice"));
+    for &sz in &[4096u64, 16 << 10, 64 << 10, 128 << 10, 150_000, 256 << 10, 1 << 20, 4 << 20] {
+        let choice = costs.choose(sz);
+        out.push_str(&format!(
+            "{:>10} {:>10} {:>10} {:>8}\n",
+            human_size(sz),
+            costs.cost_ns(Staging::Memcpy, sz),
+            costs.cost_ns(Staging::Memreg, sz),
+            match choice {
+                Staging::Memcpy => "memcpy",
+                Staging::Memreg => "memreg",
+            }
+        ));
+    }
+    out.push_str(&format!("crossover = {} bytes\n", costs.crossover_bytes()));
+    out
+}
+
+/// WR-batching ablation: RaaS with batch_max=1 vs default (the §2.3 claim
+/// that QP sharing raises batching opportunity and thus throughput).
+pub fn batching_ablation(budget: Budget) -> String {
+    use crate::raas::daemon::DaemonConfig;
+    let mut out = String::new();
+    out.push_str("Ablation: WR batching (RaaS, 400 conns, 4 KB reads)\n");
+    for (label, batch) in [("batch=1", 1usize), ("batch=32", 32)] {
+        let mut cfg = ScenarioCfg::default();
+        cfg.conns = 400;
+        cfg.msg_bytes = 4096;
+        cfg.window = 2;
+        cfg.duration = budget.duration();
+        let st = crate::workload::scenarios::raas_random_read_with_daemon(
+            &cfg,
+            DaemonConfig { batch_max: batch, ..DaemonConfig::default() },
+        );
+        out.push_str(&format!("  {label:<10} {:>8.2} Gb/s  {:>8.3} Mops\n", st.gbps, st.mops));
+    }
+    out
+}
+
+pub fn human_size(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{}MB", b >> 20)
+    } else if b >= 1 << 10 {
+        format!("{}KB", b >> 10)
+    } else {
+        format!("{b}B")
+    }
+}
+
+/// Default fabric config accessor for the CLI.
+pub fn default_fabric() -> FabricConfig {
+    FabricConfig::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_the_matrix() {
+        let t = table1();
+        assert!(t.contains("RC"));
+        assert!(t.contains("1GB"));
+        assert!(t.contains("MTU"));
+        // UC row must not claim READ support
+        let uc_line = t.lines().find(|l| l.starts_with("UC")).unwrap();
+        assert!(uc_line.contains('-'));
+    }
+
+    #[test]
+    fn human_sizes() {
+        assert_eq!(human_size(64), "64B");
+        assert_eq!(human_size(4096), "4KB");
+        assert_eq!(human_size(1 << 20), "1MB");
+    }
+
+    #[test]
+    fn staging_sweep_has_crossover() {
+        let s = send_staging_sweep();
+        assert!(s.contains("memcpy"));
+        assert!(s.contains("memreg"));
+        assert!(s.contains("crossover = 150000"));
+    }
+}

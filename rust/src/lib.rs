@@ -1,0 +1,40 @@
+//! # rdmavisor — RDMA-as-a-Service, reproduced
+//!
+//! Reproduction of *"RDMAvisor: Toward Deploying Scalable and Simple RDMA as
+//! a Service in Datacenters"* (Wang et al., Nanjing University / Huawei,
+//! CS.DC 2018).
+//!
+//! The crate is organised in three tiers (see `DESIGN.md`):
+//!
+//! * [`fabric`] — a deterministic discrete-event **simulated RDMA fabric**
+//!   (QPs, CQs, SRQs, memory regions, an RNIC with a finite QP-context
+//!   cache, 40 GbE links, a switch). This substitutes for the paper's
+//!   ConnectX-3 RoCE testbed, which we do not have.
+//! * [`raas`] — the paper's contribution: the RDMAvisor daemon. Socket-like
+//!   API, lock-free QP sharing via vQPNs, shared-memory rings + eventfd
+//!   doorbells, Worker/Poller threads, adaptive transport selection,
+//!   registered buffer pools, host-wide SRQ sharing, CPU/memory telemetry.
+//! * [`baselines`] — the comparison systems of the evaluation: *naive* RDMA
+//!   (one QP per connection) and FaRM-style *locked* QP sharing.
+//!
+//! Supporting tiers: [`runtime`] loads AOT-compiled JAX/Pallas artifacts via
+//! PJRT and executes them from the serving example's hot path; [`apps`] are
+//! example applications written against the RaaS API; [`workload`] and
+//! [`metrics`] generate traffic and account results; [`figures`] regenerates
+//! every table/figure of the paper's evaluation; [`util`] contains the
+//! substrates the offline environment forced us to build ourselves (CLI,
+//! bench harness, property testing, config parsing, stats).
+
+pub mod util;
+pub mod fabric;
+pub mod raas;
+pub mod baselines;
+pub mod runtime;
+pub mod apps;
+pub mod workload;
+pub mod metrics;
+pub mod config;
+pub mod figures;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,247 @@
+//! rdmavisor — CLI entrypoint.
+//!
+//! Subcommands:
+//! * `figures`   — regenerate the paper's tables/figures (`--all`,
+//!   `--table1`, `--fig1`, `--fig5`, `--fig6`, `--fig7`, `--fig8`,
+//!   `--send-staging`, `--batching`); `--tsv DIR` also writes TSVs.
+//! * `bench`     — one scenario run with explicit knobs (conns, size, …).
+//! * `serve`     — live serving smoke: load artifacts, run a batched
+//!   inference workload through the RaaS channels, report latency.
+//! * `init-config` — write a documented sample cluster config.
+//! * `info`      — print fabric/daemon defaults and artifact status.
+
+use rdmavisor::config;
+use rdmavisor::figures::{self, Budget};
+use rdmavisor::metrics::Series;
+use rdmavisor::util::cli::Args;
+use rdmavisor::util::logging;
+use rdmavisor::workload::scenarios::{
+    locked_random_read, naive_random_read, raas_random_read, ScenarioCfg,
+};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse_with_subcommand(&argv);
+    logging::set_level_from_str(&args.str_or("log", "info"));
+
+    match args.subcommand.as_deref() {
+        Some("figures") => figures_cmd(&args),
+        Some("bench") => bench_cmd(&args),
+        Some("serve") => serve_cmd(&args),
+        Some("init-config") => {
+            let path = args.str_or("out", "cluster.toml");
+            std::fs::write(&path, config::SAMPLE).expect("write config");
+            println!("wrote {path}");
+        }
+        Some("info") => info_cmd(),
+        _ => {
+            eprintln!(
+                "usage: rdmavisor <figures|bench|serve|init-config|info> [--help]\n\
+                 \n  figures --all | --table1 --fig1 --fig5 --fig6 --fig7 --fig8 \
+                 --send-staging --batching [--quick] [--tsv DIR]\
+                 \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
+                 [--window N] [--duration-ms MS] [--q N] [--config FILE]\
+                 \n  serve [--clients N] [--requests N] [--artifacts DIR]\
+                 \n  init-config [--out FILE]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn budget(args: &Args) -> Budget {
+    if args.flag("quick") {
+        Budget::Quick
+    } else {
+        Budget::from_env()
+    }
+}
+
+fn figures_cmd(args: &Args) {
+    let b = budget(args);
+    let all = args.flag("all");
+    let tsv_dir = args.get("tsv").map(|s| s.to_string());
+    let mut series: Vec<Series> = Vec::new();
+
+    if all || args.flag("table1") {
+        println!("{}", figures::table1());
+    }
+    if all || args.flag("fig1") {
+        let rows = figures::fig1(b);
+        println!("{}", figures::print_fig1(&rows));
+        let mut s = Series::new(
+            "fig1_verbs",
+            "msg_bytes",
+            &["rc_read", "rc_write", "uc_write", "ud_send"],
+        );
+        for r in &rows {
+            s.push(r.msg_bytes as f64, vec![r.rc_read, r.rc_write, r.uc_write, r.ud_send]);
+        }
+        series.push(s);
+    }
+    if all || args.flag("fig5") {
+        let rows = figures::fig5(b);
+        println!("{}", figures::print_fig5(&rows));
+        let mut s = Series::new("fig5_scalability", "conns", &["naive_gbps", "raas_gbps"]);
+        for r in &rows {
+            s.push(r.conns as f64, vec![r.naive.gbps, r.raas.gbps]);
+        }
+        series.push(s);
+    }
+    if all || args.flag("fig6") {
+        let rows = figures::fig6(b);
+        println!("{}", figures::print_fig6(&rows));
+        let mut s = Series::new(
+            "fig6_qp_sharing",
+            "threads",
+            &["raas_mops", "lock_q3_mops", "lock_q6_mops"],
+        );
+        for r in &rows {
+            s.push(r.threads as f64, vec![r.raas.mops, r.locked_q3.mops, r.locked_q6.mops]);
+        }
+        series.push(s);
+    }
+    if all || args.flag("fig7") || args.flag("fig8") {
+        let rows = figures::fig78(b);
+        if all || args.flag("fig7") {
+            println!("{}", figures::print_fig7(&rows));
+        }
+        if all || args.flag("fig8") {
+            println!("{}", figures::print_fig8(&rows));
+        }
+        let mut s = Series::new(
+            "fig78_resources",
+            "apps",
+            &["naive_mem", "raas_mem", "naive_cpu", "raas_cpu"],
+        );
+        for r in &rows {
+            s.push(r.apps as f64, vec![r.naive_mem, r.raas_mem, r.naive_cpu, r.raas_cpu]);
+        }
+        series.push(s);
+    }
+    if all || args.flag("send-staging") {
+        println!("{}", figures::send_staging_sweep());
+    }
+    if all || args.flag("batching") {
+        println!("{}", figures::batching_ablation(b));
+    }
+    if let Some(dir) = tsv_dir {
+        for s in &series {
+            match s.write_tsv(&dir) {
+                Ok(p) => println!("wrote {p}"),
+                Err(e) => eprintln!("tsv write failed: {e}"),
+            }
+        }
+    }
+}
+
+fn bench_cmd(args: &Args) {
+    let mut cfg = match args.get("config") {
+        Some(path) => config::from_file(path).expect("config").scenario,
+        None => ScenarioCfg::default(),
+    };
+    cfg.conns = args.usize_or("conns", cfg.conns);
+    cfg.apps = args.u64_or("apps", cfg.apps as u64) as u32;
+    cfg.msg_bytes = args.u64_or("size", cfg.msg_bytes);
+    cfg.window = args.u64_or("window", cfg.window as u64) as u32;
+    cfg.duration = rdmavisor::fabric::time::Ns::from_ms(args.u64_or("duration-ms", 20));
+    cfg.seed = args.u64_or("seed", cfg.seed);
+
+    let system = args.str_or("system", "raas");
+    let st = match system.as_str() {
+        "naive" => naive_random_read(&cfg),
+        "locked" => locked_random_read(&cfg, args.usize_or("q", 3)),
+        _ => raas_random_read(&cfg),
+    };
+    println!(
+        "{system}: conns={} size={} -> {:.2} Gb/s  {:.3} Mops  p50={:.1}µs p99={:.1}µs  \
+         mem={:.1}MB cpu={:.2} cores  cache={:.1}%",
+        cfg.conns,
+        figures::human_size(cfg.msg_bytes),
+        st.gbps,
+        st.mops,
+        st.p50_us,
+        st.p99_us,
+        st.mem_bytes as f64 / 1e6,
+        st.cpu_cores,
+        st.cache_hit_rate * 100.0
+    );
+}
+
+fn serve_cmd(args: &Args) {
+    use rdmavisor::apps::inference::InferenceEngine;
+    use std::time::Instant;
+
+    let dir = args.str_or("artifacts", "artifacts");
+    let clients = args.usize_or("clients", 4);
+    let requests = args.u64_or("requests", 64);
+
+    let manifest = rdmavisor::runtime::Manifest::load(&dir)
+        .expect("load artifacts (run `make artifacts` first)");
+    println!(
+        "variants={:?}",
+        manifest.variants.iter().map(|v| v.name.clone()).collect::<Vec<_>>()
+    );
+    let engine = InferenceEngine::new(&dir, clients, 1024);
+
+    let server = {
+        let engine = engine.clone();
+        std::thread::spawn(move || engine.serve_loop())
+    };
+
+    let t0 = Instant::now();
+    let mut latencies = Vec::new();
+    let mut outstanding: Vec<Vec<(u64, Instant)>> = vec![Vec::new(); clients];
+    let mut done = 0u64;
+    let mut next_tag = 0u64;
+    let total = requests * clients as u64;
+    while done < total {
+        for c in 0..clients {
+            if outstanding[c].len() < 4 && next_tag < total && engine.submit(c, next_tag) {
+                outstanding[c].push((next_tag, Instant::now()));
+                next_tag += 1;
+            }
+            for tag in engine.reap(c) {
+                if let Some(pos) = outstanding[c].iter().position(|(t, _)| *t == tag) {
+                    let (_, t) = outstanding[c].remove(pos);
+                    latencies.push(t.elapsed().as_micros() as u64);
+                    done += 1;
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    engine.stop();
+    let _ = server.join();
+
+    latencies.sort_unstable();
+    let p = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+    let st = engine.stats.lock().unwrap();
+    println!(
+        "served {} requests in {:.2?}: {:.0} req/s, p50={}µs p99={}µs, \
+         mean batch={:.2}, model time {:.1}ms total",
+        done,
+        wall,
+        done as f64 / wall.as_secs_f64(),
+        p(0.5),
+        p(0.99),
+        st.mean_batch(),
+        st.model_ns as f64 / 1e6
+    );
+}
+
+fn info_cmd() {
+    let f = figures::default_fabric();
+    println!(
+        "fabric: {} nodes × {} cores, {} Gb/s, MTU {}",
+        f.nodes, f.cores_per_node, f.link_gbps, f.mtu
+    );
+    println!(
+        "nic: icm_cache={} entries, miss={}ns, frame={}ns",
+        f.nic.icm_cache_entries, f.nic.icm_miss_ns, f.nic.engine_frame_ns
+    );
+    match rdmavisor::runtime::Manifest::load("artifacts") {
+        Ok(m) => println!("artifacts: {} variants (seed {})", m.variants.len(), m.seed),
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+}

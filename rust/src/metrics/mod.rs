@@ -1,0 +1,152 @@
+//! Result recording: series tables, TSV/markdown emit, rate meters.
+//!
+//! The figure harnesses collect [`Series`] tables and write them under
+//! `results/` so EXPERIMENTS.md can cite stable artifacts.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+use crate::fabric::time::Ns;
+
+/// A named table: one x column + named y series, row-major.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub x_label: String,
+    pub y_labels: Vec<String>,
+    pub rows: Vec<(f64, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(name: &str, x_label: &str, y_labels: &[&str]) -> Series {
+        Series {
+            name: name.to_string(),
+            x_label: x_label.to_string(),
+            y_labels: y_labels.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.y_labels.len(), "row width mismatch");
+        self.rows.push((x, ys));
+    }
+
+    pub fn to_tsv(&self) -> String {
+        let mut s = format!("{}\t{}\n", self.x_label, self.y_labels.join("\t"));
+        for (x, ys) in &self.rows {
+            s.push_str(&format!(
+                "{}\t{}\n",
+                x,
+                ys.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join("\t")
+            ));
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("| {} | {} |\n", self.x_label, self.y_labels.join(" | "));
+        s.push_str(&format!("|{}|\n", "---|".repeat(self.y_labels.len() + 1)));
+        for (x, ys) in &self.rows {
+            s.push_str(&format!(
+                "| {} | {} |\n",
+                x,
+                ys.iter().map(|v| format!("{v:.3}")).collect::<Vec<_>>().join(" | ")
+            ));
+        }
+        s
+    }
+
+    pub fn write_tsv(&self, dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.tsv", self.name);
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.to_tsv().as_bytes())?;
+        Ok(path)
+    }
+
+    /// The y value of series `label` at the row nearest to `x`.
+    pub fn value_at(&self, label: &str, x: f64) -> Option<f64> {
+        let col = self.y_labels.iter().position(|l| l == label)?;
+        self.rows
+            .iter()
+            .min_by(|a, b| {
+                (a.0 - x).abs().partial_cmp(&(b.0 - x).abs()).unwrap()
+            })
+            .map(|(_, ys)| ys[col])
+    }
+}
+
+/// Windowed rate meter for live dashboards (used by the serving example).
+#[derive(Clone, Debug)]
+pub struct RateMeter {
+    window: Ns,
+    events: BTreeMap<u64, u64>, // bucket start ns -> count
+    bucket: u64,
+}
+
+impl RateMeter {
+    pub fn new(window: Ns, buckets: u64) -> RateMeter {
+        RateMeter { window, events: BTreeMap::new(), bucket: (window.0 / buckets).max(1) }
+    }
+
+    pub fn tick(&mut self, now: Ns) {
+        *self.events.entry(now.0 / self.bucket).or_insert(0) += 1;
+        let cutoff = now.0.saturating_sub(self.window.0) / self.bucket;
+        self.events = self.events.split_off(&cutoff);
+    }
+
+    /// Events/second over the window ending at `now`.
+    pub fn rate(&self, now: Ns) -> f64 {
+        let cutoff = now.0.saturating_sub(self.window.0) / self.bucket;
+        let n: u64 = self.events.range(cutoff..).map(|(_, c)| c).sum();
+        n as f64 * 1e9 / self.window.0 as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_tsv_and_markdown() {
+        let mut s = Series::new("fig5", "conns", &["naive", "raas"]);
+        s.push(100.0, vec![36.1, 38.2]);
+        s.push(1000.0, vec![19.8, 38.0]);
+        let tsv = s.to_tsv();
+        assert!(tsv.starts_with("conns\tnaive\traas\n"));
+        assert!(tsv.contains("1000\t"));
+        let md = s.to_markdown();
+        assert!(md.contains("| conns | naive | raas |"));
+    }
+
+    #[test]
+    fn value_at_nearest() {
+        let mut s = Series::new("t", "x", &["y"]);
+        s.push(1.0, vec![10.0]);
+        s.push(5.0, vec![50.0]);
+        assert_eq!(s.value_at("y", 4.4), Some(50.0));
+        assert_eq!(s.value_at("y", 0.0), Some(10.0));
+        assert_eq!(s.value_at("nope", 1.0), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut s = Series::new("t", "x", &["a", "b"]);
+        s.push(1.0, vec![1.0]);
+    }
+
+    #[test]
+    fn rate_meter_windows() {
+        let mut m = RateMeter::new(Ns(1_000_000), 10);
+        for i in 0..100 {
+            m.tick(Ns(i * 10_000));
+        }
+        let r = m.rate(Ns(1_000_000));
+        assert!(r > 50_000.0, "rate={r}");
+        // events age out
+        let r_late = m.rate(Ns(10_000_000));
+        assert!(r_late < r);
+    }
+}

@@ -1,0 +1,170 @@
+//! The socket-like RaaS interface (paper Fig 3).
+//!
+//! ```text
+//! int connect(Target* t, int FLAGS);
+//! int listen(Target* t, int FLAGS);
+//! int accept(int fd, int FLAGS);
+//! int send(int fd, void* buf, int len, int FLAGS);
+//! int recv(int fd, void* buf, int len, int FLAGS);
+//! int recv_zero_copy(int fd, void** buf_addr, int len, int FLAGS);
+//! ```
+//!
+//! Normal users call `send`/`recv` and let RDMAvisor pick the RDMA
+//! operation; knowledgeable users pin one with `FLAGS` (e.g. `RC | WRITE`).
+
+use crate::fabric::types::{NodeId, QpTransport, Verb};
+
+/// The FLAGS bitset of Fig 3. `0` (`Flags::default()`) means "let the
+/// daemon decide" — RC transport, verb chosen adaptively.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Flags(pub u32);
+
+impl Flags {
+    pub const RC: Flags = Flags(1 << 0);
+    pub const UC: Flags = Flags(1 << 1);
+    pub const UD: Flags = Flags(1 << 2);
+    pub const SEND: Flags = Flags(1 << 3);
+    pub const WRITE: Flags = Flags(1 << 4);
+    pub const READ: Flags = Flags(1 << 5);
+    /// recv-side: deliver in place from the registered pool (no copy-out).
+    pub const ZERO_COPY: Flags = Flags(1 << 6);
+    /// send-side: block until remotely acknowledged (default is async).
+    pub const SYNC: Flags = Flags(1 << 7);
+
+    #[inline]
+    pub fn contains(self, other: Flags) -> bool {
+        self.0 & other.0 == other.0
+    }
+
+    /// Explicit transport, if the user pinned one.
+    pub fn transport(self) -> Option<QpTransport> {
+        if self.contains(Flags::RC) {
+            Some(QpTransport::Rc)
+        } else if self.contains(Flags::UC) {
+            Some(QpTransport::Uc)
+        } else if self.contains(Flags::UD) {
+            Some(QpTransport::Ud)
+        } else {
+            None
+        }
+    }
+
+    /// Explicit verb, if the user pinned one.
+    pub fn verb(self) -> Option<Verb> {
+        if self.contains(Flags::SEND) {
+            Some(Verb::Send)
+        } else if self.contains(Flags::WRITE) {
+            Some(Verb::Write)
+        } else if self.contains(Flags::READ) {
+            Some(Verb::Read)
+        } else {
+            None
+        }
+    }
+}
+
+impl std::ops::BitOr for Flags {
+    type Output = Flags;
+    fn bitor(self, rhs: Flags) -> Flags {
+        Flags(self.0 | rhs.0)
+    }
+}
+
+/// Unified host addressing (§2.2): IPv4, IPv6, or native RDMA GID/LID.
+/// In the simulated cluster every form resolves to a [`NodeId`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Target {
+    Ipv4([u8; 4], u16),
+    Ipv6([u16; 8], u16),
+    /// RoCE global id (we carry just the low 64 bits in the simulator).
+    Gid(u64),
+    /// InfiniBand local id.
+    Lid(u16),
+    /// Direct simulator node reference.
+    Node(NodeId),
+}
+
+impl Target {
+    /// Resolve to a simulator node. The convention used throughout the
+    /// reproduction: the host part of any address form is the node index.
+    pub fn resolve(&self) -> NodeId {
+        match self {
+            Target::Ipv4(octets, _) => NodeId(octets[3] as u32),
+            Target::Ipv6(groups, _) => NodeId(groups[7] as u32),
+            Target::Gid(g) => NodeId((*g & 0xFFFF_FFFF) as u32),
+            Target::Lid(l) => NodeId(*l as u32),
+            Target::Node(n) => *n,
+        }
+    }
+}
+
+/// Errors surfaced by the RaaS API.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RaasError {
+    UnknownConnection,
+    ConnectionClosed,
+    /// User pinned an (op, transport) combo Table 1 forbids.
+    UnsupportedCombination(QpTransport, Verb),
+    /// Message too large for the pinned transport.
+    TooLong { len: u64, max: u64 },
+    /// No registered buffer space available.
+    PoolExhausted,
+    /// Nothing to receive (non-blocking recv).
+    WouldBlock,
+    Fabric(String),
+}
+
+impl std::fmt::Display for RaasError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RaasError::UnknownConnection => write!(f, "unknown connection"),
+            RaasError::ConnectionClosed => write!(f, "connection closed"),
+            RaasError::UnsupportedCombination(t, v) => {
+                write!(f, "{v} not supported on {t} (Table 1)")
+            }
+            RaasError::TooLong { len, max } => write!(f, "len {len} > max {max}"),
+            RaasError::PoolExhausted => write!(f, "registered buffer pool exhausted"),
+            RaasError::WouldBlock => write!(f, "would block"),
+            RaasError::Fabric(s) => write!(f, "fabric: {s}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_compose_like_the_paper_example() {
+        // the paper's example: RC|WRITE pins reliable-connected RDMA WRITE
+        let f = Flags::RC | Flags::WRITE;
+        assert_eq!(f.transport(), Some(QpTransport::Rc));
+        assert_eq!(f.verb(), Some(Verb::Write));
+        assert!(!f.contains(Flags::ZERO_COPY));
+    }
+
+    #[test]
+    fn default_flags_delegate_to_daemon() {
+        let f = Flags::default();
+        assert_eq!(f.transport(), None);
+        assert_eq!(f.verb(), None);
+    }
+
+    #[test]
+    fn targets_resolve_uniformly() {
+        assert_eq!(Target::Ipv4([10, 0, 0, 2], 7000).resolve(), NodeId(2));
+        assert_eq!(Target::Lid(3).resolve(), NodeId(3));
+        assert_eq!(Target::Gid(0x1).resolve(), NodeId(1));
+        assert_eq!(Target::Node(NodeId(0)).resolve(), NodeId(0));
+        let mut groups = [0u16; 8];
+        groups[7] = 2;
+        assert_eq!(Target::Ipv6(groups, 1).resolve(), NodeId(2));
+    }
+
+    #[test]
+    fn flag_precedence_order() {
+        // if multiple transports are set (user error), highest priority wins
+        let f = Flags::RC | Flags::UD;
+        assert_eq!(f.transport(), Some(QpTransport::Rc));
+    }
+}

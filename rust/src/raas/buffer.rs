@@ -1,0 +1,262 @@
+//! Registered buffer pools: slab classes over huge-page memory regions.
+//!
+//! §1.2's third challenge: per-application buffer fleets waste memory. The
+//! daemon owns ONE pool per NIC, registered once with huge pages, carved
+//! into power-of-two slab classes; every application's staging and receive
+//! buffers come from it. Pool occupancy feeds Fig 7 and the adaptive
+//! selector's memory-pressure input.
+//!
+//! Also implements the send-side staging policy from Frey & Alonso [9]
+//! (§2.2): small payloads are **memcpy**'d into the pre-registered pool,
+//! large payloads are **memreg**'d in place (register-on-the-fly), because
+//! copy cost scales with size while registration cost is ~flat. The
+//! crossover is measured by the `--send-staging` ablation.
+
+use crate::fabric::mr::{Access, MemoryRegion};
+use crate::fabric::sim::Sim;
+use crate::fabric::types::NodeId;
+
+/// One outstanding buffer lease.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lease {
+    /// Slab class index.
+    pub class: usize,
+    /// Slot within the class.
+    pub slot: u32,
+    /// Address within the pool MR.
+    pub addr: u64,
+    pub len: u64,
+}
+
+/// A slab class: fixed-size slots with a free list.
+#[derive(Debug)]
+struct SlabClass {
+    slot_bytes: u64,
+    base: u64,
+    free: Vec<u32>,
+    total: u32,
+    /// High-water mark of simultaneously leased slots.
+    pub hwm: u32,
+}
+
+/// The daemon's registered buffer pool.
+#[derive(Debug)]
+pub struct BufferPool {
+    pub mr: MemoryRegion,
+    classes: Vec<SlabClass>,
+    pub leased_bytes: u64,
+    pub lease_ops: u64,
+    pub exhausted: u64,
+}
+
+/// Slab layout: (slot size, slot count). Sized for thousands of in-flight
+/// 64 KB operations plus small-message staging.
+pub const DEFAULT_LAYOUT: &[(u64, u32)] = &[
+    (4 << 10, 4096),   // 16 MB of 4K slots
+    (64 << 10, 2048),  // 128 MB of 64K slots
+    (1 << 20, 64),     // 64 MB of 1M slots
+];
+
+impl BufferPool {
+    /// Carve a pool out of one huge-page MR on `node`.
+    pub fn new(sim: &mut Sim, node: NodeId, layout: &[(u64, u32)]) -> Self {
+        let total: u64 = layout.iter().map(|(s, c)| s * *c as u64).sum();
+        let mr = sim.reg_mr(node, total, Access::REMOTE_RW, true);
+        let mut classes = Vec::new();
+        let mut base = mr.addr;
+        for &(slot_bytes, count) in layout {
+            classes.push(SlabClass {
+                slot_bytes,
+                base,
+                free: (0..count).rev().collect(),
+                total: count,
+                hwm: 0,
+            });
+            base += slot_bytes * count as u64;
+        }
+        BufferPool { mr, classes, leased_bytes: 0, lease_ops: 0, exhausted: 0 }
+    }
+
+    /// Smallest class that fits `len`.
+    fn class_for(&self, len: u64) -> Option<usize> {
+        self.classes.iter().position(|c| c.slot_bytes >= len)
+    }
+
+    /// Lease a buffer ≥ `len` bytes.
+    pub fn lease(&mut self, len: u64) -> Option<Lease> {
+        let ci = self.class_for(len)?;
+        // try the exact class, then spill upward
+        for class in ci..self.classes.len() {
+            let c = &mut self.classes[class];
+            if let Some(slot) = c.free.pop() {
+                let used = c.total - c.free.len() as u32;
+                c.hwm = c.hwm.max(used);
+                self.leased_bytes += c.slot_bytes;
+                self.lease_ops += 1;
+                return Some(Lease {
+                    class,
+                    slot,
+                    addr: c.base + slot as u64 * c.slot_bytes,
+                    len: c.slot_bytes,
+                });
+            }
+        }
+        self.exhausted += 1;
+        None
+    }
+
+    pub fn release(&mut self, lease: Lease) {
+        let c = &mut self.classes[lease.class];
+        debug_assert!(lease.slot < c.total);
+        debug_assert!(!c.free.contains(&lease.slot), "double free");
+        c.free.push(lease.slot);
+        self.leased_bytes -= c.slot_bytes;
+    }
+
+    /// Pool bytes currently leased / total (the selector's `mem` input).
+    pub fn pressure(&self) -> f64 {
+        self.leased_bytes as f64 / self.mr.len as f64
+    }
+
+    /// Memory actually *touched* (high-water): what Fig 7 charges RaaS for,
+    /// since untouched pool pages stay unbacked.
+    pub fn hwm_bytes(&self) -> u64 {
+        self.classes.iter().map(|c| c.hwm as u64 * c.slot_bytes).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.mr.len
+    }
+}
+
+/// Send-staging policy [9]: memcpy below the crossover, memreg above.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Staging {
+    /// Copy into the pre-registered pool (cost ∝ len).
+    Memcpy,
+    /// Register the caller's buffer on the fly (flat cost, ~µs).
+    Memreg,
+}
+
+/// Cost model for the staging decision; values from [9]-era hardware,
+/// exposed for the ablation bench.
+#[derive(Clone, Copy, Debug)]
+pub struct StagingCosts {
+    /// Single-core copy bandwidth, bytes per ns (~10 GB/s).
+    pub memcpy_bytes_per_ns: f64,
+    /// Flat cost of ibv_reg_mr + invalidation, ns.
+    pub memreg_ns: u64,
+}
+
+impl Default for StagingCosts {
+    fn default() -> Self {
+        StagingCosts { memcpy_bytes_per_ns: 10.0, memreg_ns: 15_000 }
+    }
+}
+
+impl StagingCosts {
+    pub fn memcpy_ns(&self, len: u64) -> u64 {
+        (len as f64 / self.memcpy_bytes_per_ns).ceil() as u64
+    }
+
+    /// The size at which registering beats copying.
+    pub fn crossover_bytes(&self) -> u64 {
+        (self.memreg_ns as f64 * self.memcpy_bytes_per_ns) as u64
+    }
+
+    pub fn choose(&self, len: u64) -> Staging {
+        if len < self.crossover_bytes() {
+            Staging::Memcpy
+        } else {
+            Staging::Memreg
+        }
+    }
+
+    pub fn cost_ns(&self, staging: Staging, len: u64) -> u64 {
+        match staging {
+            Staging::Memcpy => self.memcpy_ns(len),
+            Staging::Memreg => self.memreg_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::sim::FabricConfig;
+
+    fn pool() -> (Sim, BufferPool) {
+        let mut sim = Sim::new(FabricConfig::default());
+        let layout = [(4096u64, 8u32), (65536, 4)];
+        let p = BufferPool::new(&mut sim, NodeId(0), &layout);
+        (sim, p)
+    }
+
+    #[test]
+    fn lease_picks_smallest_fitting_class() {
+        let (_s, mut p) = pool();
+        let a = p.lease(100).unwrap();
+        assert_eq!(a.len, 4096);
+        let b = p.lease(5000).unwrap();
+        assert_eq!(b.len, 65536);
+    }
+
+    #[test]
+    fn lease_release_roundtrip() {
+        let (_s, mut p) = pool();
+        let before = p.leased_bytes;
+        let l = p.lease(4096).unwrap();
+        assert_eq!(p.leased_bytes, before + 4096);
+        p.release(l);
+        assert_eq!(p.leased_bytes, before);
+    }
+
+    #[test]
+    fn exhaustion_spills_then_fails() {
+        let (_s, mut p) = pool();
+        let mut leases = Vec::new();
+        for _ in 0..8 {
+            leases.push(p.lease(4096).unwrap());
+        }
+        // 4K class empty: spills into 64K class
+        let spilled = p.lease(4096).unwrap();
+        assert_eq!(spilled.len, 65536);
+        for _ in 0..3 {
+            leases.push(p.lease(65536).unwrap());
+        }
+        assert!(p.lease(4096).is_none(), "everything exhausted");
+        assert_eq!(p.exhausted, 1);
+    }
+
+    #[test]
+    fn distinct_addresses_within_mr() {
+        let (_s, mut p) = pool();
+        let a = p.lease(4096).unwrap();
+        let b = p.lease(4096).unwrap();
+        assert_ne!(a.addr, b.addr);
+        assert!(p.mr.contains(a.addr, a.len));
+        assert!(p.mr.contains(b.addr, b.len));
+    }
+
+    #[test]
+    fn hwm_tracks_touched_not_total() {
+        let (_s, mut p) = pool();
+        let l1 = p.lease(4096).unwrap();
+        let l2 = p.lease(4096).unwrap();
+        p.release(l1);
+        p.release(l2);
+        assert_eq!(p.hwm_bytes(), 2 * 4096);
+        assert!(p.hwm_bytes() < p.total_bytes());
+    }
+
+    #[test]
+    fn staging_crossover_matches_model() {
+        let c = StagingCosts::default();
+        // 10 GB/s copy vs 15 µs reg => crossover at 150 KB
+        assert_eq!(c.crossover_bytes(), 150_000);
+        assert_eq!(c.choose(4096), Staging::Memcpy);
+        assert_eq!(c.choose(1 << 20), Staging::Memreg);
+        assert!(c.cost_ns(Staging::Memcpy, 4096) < c.cost_ns(Staging::Memreg, 4096));
+        assert!(c.cost_ns(Staging::Memcpy, 10 << 20) > c.cost_ns(Staging::Memreg, 10 << 20));
+    }
+}

@@ -1,0 +1,808 @@
+//! The RDMAvisor daemon (Fig 2): Worker + Poller over the simulated fabric.
+//!
+//! One daemon per machine owns: one shared RC QP per remote node, one
+//! host-wide SRQ, one registered buffer pool, one send CQ + one recv CQ,
+//! and the vQPN connection table. Applications talk to it through
+//! shared-memory rings ([`super::shmem`]); in the simulator the ring/
+//! doorbell costs are charged in virtual time via [`ShmCosts`].
+//!
+//! Data path (all lock-free):
+//! * app `send/read/write` → ring push → **Worker** drains, builds WRs
+//!   (vQPN stamped per Fig 4), and posts them **in batches** to the shared
+//!   QP (one doorbell per batch — §2.3's WR-batching win);
+//! * **Poller** drains both CQs, demuxes by vQPN (`wr_id` for one-sided,
+//!   `imm_data` for two-sided), releases staging leases, replenishes the
+//!   SRQ, and delivers results to the owning app's completion ring.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::fabric::sim::Sim;
+use crate::fabric::types::{Cqn, NodeId, Qpn, Srqn, Verb, WcStatus};
+use crate::fabric::wqe::{Cqe, SendWr};
+
+use super::api::{Flags, RaasError, Target};
+use super::buffer::{BufferPool, Lease, Staging, StagingCosts, DEFAULT_LAYOUT};
+use super::shmem::ShmCosts;
+use super::telemetry::Telemetry;
+use super::transport::{HostLoad, Selector, SelectorConfig};
+use super::vqpn::{pack_wr_id, unpack_vqpn, ConnTable, Vqpn};
+
+/// Daemon tunables.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// SRQ depth + refill watermark (host-wide, shared by all apps — §1.2).
+    pub srq_capacity: usize,
+    pub srq_watermark: usize,
+    /// Receive slot size drawn from the pool for SRQ WQEs.
+    pub recv_slot_bytes: u64,
+    /// Max WRs posted per doorbell (Worker batch size).
+    pub batch_max: usize,
+    /// Daemon service threads (Worker + Poller) — busy-poll cores.
+    pub service_threads: u32,
+    pub shm: ShmCosts,
+    pub staging: StagingCosts,
+    pub selector: SelectorConfig,
+    /// Pool slab layout.
+    pub pool_layout: Vec<(u64, u32)>,
+    /// Per-WR build cost on the Worker (translate request → WQE).
+    pub wr_build_ns: u64,
+    /// Per-CQE demux cost on the Poller (vQPN lookup + ring push).
+    pub demux_ns: u64,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            srq_capacity: 4096,
+            srq_watermark: 256,
+            recv_slot_bytes: 64 << 10,
+            batch_max: 32,
+            service_threads: 2,
+            shm: ShmCosts::default(),
+            staging: StagingCosts::default(),
+            selector: SelectorConfig::default(),
+            pool_layout: DEFAULT_LAYOUT.to_vec(),
+            wr_build_ns: 60,
+            demux_ns: 40,
+        }
+    }
+}
+
+/// What the Poller delivers into an app's completion ring.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Delivery {
+    /// A send/read/write this app issued finished.
+    OpComplete { conn: Vqpn, tag: u64, len: u64, ok: bool },
+    /// A two-sided message arrived on this connection.
+    Message { conn: Vqpn, len: u64, zero_copy: bool },
+}
+
+/// Aggregate daemon statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DaemonStats {
+    pub ops_submitted: u64,
+    pub ops_completed: u64,
+    pub msgs_delivered: u64,
+    pub batches_posted: u64,
+    pub wrs_posted: u64,
+    pub bytes_completed: u64,
+    pub send_staged_memcpy: u64,
+    pub send_staged_memreg: u64,
+}
+
+/// Info about a peer daemon's pool we can one-sidedly address.
+#[derive(Clone, Copy, Debug)]
+struct RemotePool {
+    rkey: crate::fabric::types::Mrkey,
+    base: u64,
+    len: u64,
+}
+
+/// The per-machine RDMAvisor daemon.
+pub struct Daemon {
+    pub node: NodeId,
+    pub cfg: DaemonConfig,
+    pub conns: ConnTable,
+    pub pool: BufferPool,
+    pub telemetry: Telemetry,
+    pub selector: Selector,
+    pub stats: DaemonStats,
+    send_cq: Cqn,
+    recv_cq: Cqn,
+    srq: Srqn,
+    /// remote node -> shared QP to it (THE §2.3 structure).
+    shared_qps: HashMap<u32, Qpn>,
+    remote_pools: HashMap<u32, RemotePool>,
+    /// Worker-side pending WR batches, per remote node.
+    pending: HashMap<u32, Vec<SendWr>>,
+    /// Leases to release when a wr_id completes; `bool` = deliver-to-app
+    /// copy required (non-zero-copy read landing).
+    open_leases: HashMap<u64, (Lease, bool)>,
+    /// Per-app completion inboxes (stand-in for the completion rings).
+    inboxes: HashMap<u32, VecDeque<Delivery>>,
+    /// Listening "ports": port -> owning app.
+    listeners: HashMap<u16, u32>,
+    /// Accepted-but-not-yet-claimed connections per (app, port).
+    accept_queues: HashMap<(u32, u16), VecDeque<Vqpn>>,
+    next_seq: u32,
+    srq_wr_seq: u64,
+}
+
+impl Daemon {
+    /// Bring the daemon up on `node`: CQs, SRQ (pre-filled), buffer pool.
+    pub fn start(sim: &mut Sim, node: NodeId, cfg: DaemonConfig) -> Daemon {
+        let send_cq = sim.create_cq(node, 65_536);
+        let recv_cq = sim.create_cq(node, 65_536);
+        let srq = sim.create_srq(node, cfg.srq_capacity, cfg.srq_watermark);
+        let mut pool = BufferPool::new(sim, node, &cfg.pool_layout);
+        let mut srq_wr_seq = 0;
+        // pre-post the SRQ from the pool
+        Self::fill_srq(sim, node, srq, &mut pool, &cfg, &mut srq_wr_seq);
+        let telemetry = Telemetry::new(cfg.service_threads);
+        sim.node_mut(node).cpu.polling_threads += cfg.service_threads;
+        Daemon {
+            node,
+            selector: Selector::new(cfg.selector.clone()),
+            conns: ConnTable::new(),
+            pool,
+            telemetry,
+            stats: DaemonStats::default(),
+            send_cq,
+            recv_cq,
+            srq,
+            shared_qps: HashMap::new(),
+            remote_pools: HashMap::new(),
+            pending: HashMap::new(),
+            open_leases: HashMap::new(),
+            inboxes: HashMap::new(),
+            listeners: HashMap::new(),
+            accept_queues: HashMap::new(),
+            next_seq: 0,
+            srq_wr_seq,
+            cfg,
+        }
+    }
+
+    fn fill_srq(
+        sim: &mut Sim,
+        node: NodeId,
+        srq: Srqn,
+        pool: &mut BufferPool,
+        cfg: &DaemonConfig,
+        seq: &mut u64,
+    ) {
+        loop {
+            let posted = sim.node(node).srqs[&srq.0].posted();
+            if posted >= cfg.srq_capacity {
+                break;
+            }
+            let lease = match pool.lease(cfg.recv_slot_bytes) {
+                Some(l) => l,
+                None => break,
+            };
+            let wr = crate::fabric::wqe::RecvWr {
+                wr_id: *seq,
+                lkey: pool.mr.key,
+                laddr: lease.addr,
+                len: lease.len,
+            };
+            *seq += 1;
+            if !sim.post_srq_recv(node, srq, wr) {
+                pool.release(lease);
+                break;
+            }
+            // SRQ recv leases are recycled in place on delivery; we release
+            // immediately so pool pressure reflects in-flight ops, while
+            // hwm_bytes still charges the touched slots (Fig 7).
+            pool.release(lease);
+        }
+    }
+
+    /// Register an application session (rings + eventfds accounted).
+    pub fn register_app(&mut self) -> u32 {
+        let app = self.telemetry.add_session();
+        self.inboxes.insert(app, VecDeque::new());
+        app
+    }
+
+    /// `listen(Target, FLAGS)` — Fig 3. Binds a port to an app.
+    pub fn listen(&mut self, app: u32, port: u16) {
+        self.listeners.insert(port, app);
+        self.accept_queues.entry((app, port)).or_default();
+    }
+
+    /// `accept(fd, FLAGS)` — Fig 3. Non-blocking: pops an accepted conn.
+    pub fn accept(&mut self, app: u32, port: u16) -> Option<Vqpn> {
+        self.accept_queues.get_mut(&(app, port))?.pop_front()
+    }
+
+    /// The daemon's current load snapshot (what it advertises to peers).
+    pub fn load(&self, sim: &Sim) -> HostLoad {
+        let mut l = self.telemetry.load(sim.now(), sim.cfg.cores_per_node);
+        l.mem = self.pool.pressure();
+        l
+    }
+
+    // ------------------------------------------------------- data plane
+
+    /// App-side submit cost (ring push + possible doorbell), charged to the
+    /// app's core on the sim node.
+    fn charge_submit(&mut self, sim: &mut Sim) {
+        let c = self.cfg.shm.ring_push_ns + self.cfg.shm.doorbell_ns / 8; // amortized doorbell
+        sim.node_mut(self.node).cpu.charge(c);
+        self.stats.ops_submitted += 1;
+        self.telemetry.ops_submitted += 1;
+    }
+
+    /// One-sided READ of `len` bytes from the peer pool at `remote_offset`
+    /// (the Fig 5/6 workload primitive). Returns the user tag.
+    pub fn read(
+        &mut self,
+        sim: &mut Sim,
+        conn: Vqpn,
+        len: u64,
+        remote_offset: u64,
+        tag: u64,
+    ) -> Result<u64, RaasError> {
+        self.one_sided(sim, conn, Verb::Read, len, remote_offset, tag, Flags::default())
+    }
+
+    /// One-sided WRITE.
+    pub fn write(
+        &mut self,
+        sim: &mut Sim,
+        conn: Vqpn,
+        len: u64,
+        remote_offset: u64,
+        tag: u64,
+    ) -> Result<u64, RaasError> {
+        self.one_sided(sim, conn, Verb::Write, len, remote_offset, tag, Flags::default())
+    }
+
+    fn one_sided(
+        &mut self,
+        sim: &mut Sim,
+        conn: Vqpn,
+        verb: Verb,
+        len: u64,
+        remote_offset: u64,
+        tag: u64,
+        _flags: Flags,
+    ) -> Result<u64, RaasError> {
+        self.charge_submit(sim);
+        let entry = self.conns.lookup(conn).ok_or(RaasError::UnknownConnection)?;
+        let remote = entry.remote;
+        let rp = *self
+            .remote_pools
+            .get(&remote.0)
+            .ok_or(RaasError::UnknownConnection)?;
+        if remote_offset + len > rp.len {
+            return Err(RaasError::TooLong { len, max: rp.len - remote_offset });
+        }
+        let lease = self.pool.lease(len).ok_or(RaasError::PoolExhausted)?;
+        let seq = self.bump_seq();
+        let wr_id = pack_wr_id(conn, seq);
+        let wr = match verb {
+            Verb::Read => SendWr::read(wr_id, len, self.pool.mr.key, lease.addr, rp.rkey, rp.base + remote_offset),
+            Verb::Write => SendWr::write(wr_id, len, self.pool.mr.key, lease.addr, rp.rkey, rp.base + remote_offset),
+            Verb::Send => unreachable!(),
+        };
+        // reads land in the lease; deliver (copy) unless app opted zero-copy
+        self.open_leases.insert(wr_id, (lease, verb == Verb::Read));
+        self.enqueue_wr(sim, remote, wr, tag)?;
+        Ok(tag)
+    }
+
+    /// `send(fd, buf, len, FLAGS)` — Fig 3. Adaptive path: small → SEND,
+    /// large → WRITE(+imm) per the selector; `FLAGS` pins components.
+    pub fn send(
+        &mut self,
+        sim: &mut Sim,
+        conn: Vqpn,
+        len: u64,
+        flags: Flags,
+        tag: u64,
+        remote_load: HostLoad,
+    ) -> Result<Verb, RaasError> {
+        self.charge_submit(sim);
+        let local_load = self.load(sim);
+        let mtu = sim.cfg.mtu;
+        let choice = self.selector.choose(len, flags, local_load, remote_load, mtu)?;
+        let entry = self.conns.lookup(conn).ok_or(RaasError::UnknownConnection)?;
+        let (remote, peer_vqpn) = (entry.remote, entry.peer_vqpn);
+
+        // stage the payload: memcpy into the pool vs register-on-the-fly [9]
+        let staging = self.cfg.staging.choose(len);
+        let cost = self.cfg.staging.cost_ns(staging, len);
+        sim.node_mut(self.node).cpu.charge(cost);
+        match staging {
+            Staging::Memcpy => self.stats.send_staged_memcpy += 1,
+            Staging::Memreg => self.stats.send_staged_memreg += 1,
+        }
+        let lease = self.pool.lease(len).ok_or(RaasError::PoolExhausted)?;
+
+        let seq = self.bump_seq();
+        let wr_id = pack_wr_id(conn, seq);
+        // `send` pushes data: a READ preference from the selector (local
+        // host busier than remote) degrades to WRITE — pull-mode is only
+        // available through the explicit `read` entry point.
+        let verb = if choice.verb == Verb::Read { Verb::Write } else { choice.verb };
+        let wr = match verb {
+            Verb::Send => {
+                // two-sided: vQPN rides in imm_data (Fig 4)
+                SendWr::send(wr_id, len, self.pool.mr.key, lease.addr, peer_vqpn.0)
+            }
+            Verb::Write => {
+                // large adaptive sends become WRITE-with-imm into the peer's
+                // pool so the peer still gets a consumer notification
+                let rp = *self
+                    .remote_pools
+                    .get(&remote.0)
+                    .ok_or(RaasError::UnknownConnection)?;
+                let lease_off = lease.addr - self.pool.mr.addr;
+                let dst = lease_off % rp.len.max(1);
+                SendWr::write(wr_id, len, self.pool.mr.key, lease.addr, rp.rkey, rp.base + dst)
+                    .with_imm(peer_vqpn.0)
+            }
+            Verb::Read => unreachable!("degraded above"),
+        };
+        self.open_leases.insert(wr_id, (lease, false));
+        self.enqueue_wr(sim, remote, wr, tag)?;
+        Ok(verb)
+    }
+
+    fn bump_seq(&mut self) -> u32 {
+        self.next_seq = self.next_seq.wrapping_add(1);
+        self.next_seq
+    }
+
+    /// Worker-side: append to the per-remote batch; flush at batch_max.
+    fn enqueue_wr(
+        &mut self,
+        sim: &mut Sim,
+        remote: NodeId,
+        wr: SendWr,
+        _tag: u64,
+    ) -> Result<(), RaasError> {
+        self.telemetry.charge(self.cfg.shm.ring_pop_ns + self.cfg.wr_build_ns);
+        let batch = self.pending.entry(remote.0).or_default();
+        batch.push(wr);
+        if batch.len() >= self.cfg.batch_max {
+            self.flush_remote(sim, remote)?;
+        }
+        Ok(())
+    }
+
+    fn flush_remote(&mut self, sim: &mut Sim, remote: NodeId) -> Result<(), RaasError> {
+        let qpn = match self.shared_qps.get(&remote.0) {
+            Some(q) => *q,
+            None => return Err(RaasError::UnknownConnection),
+        };
+        // never overrun the SQ: post what fits, keep the rest pending
+        // (the Worker retries on the next pump — daemon-side backpressure)
+        let free = sim.sq_free(self.node, qpn);
+        let Some(batch) = self.pending.get_mut(&remote.0) else {
+            return Ok(());
+        };
+        if batch.is_empty() || free == 0 {
+            return Ok(());
+        }
+        let take = batch.len().min(free);
+        let wrs: Vec<SendWr> = batch.drain(..take).collect();
+        let n = wrs.len() as u64;
+        self.stats.batches_posted += 1;
+        self.stats.wrs_posted += n;
+        sim.post_send_batch(self.node, qpn, wrs)
+            .map_err(|e| RaasError::Fabric(e.to_string()))?;
+        Ok(())
+    }
+
+    /// One Worker+Poller iteration: flush batches, drain CQs, deliver.
+    /// Drivers call this each loop turn (it is what the daemon's service
+    /// threads do continuously in the live implementation).
+    pub fn pump(&mut self, sim: &mut Sim) {
+        // Worker: flush all pending batches
+        let remotes: Vec<u32> = self.pending.keys().copied().collect();
+        for r in remotes {
+            let _ = self.flush_remote(sim, NodeId(r));
+        }
+        // Poller: send-side completions
+        loop {
+            let cqes = sim.poll_cq(self.node, self.send_cq, 64);
+            if cqes.is_empty() {
+                break;
+            }
+            for cqe in cqes {
+                self.on_send_cqe(sim, cqe);
+            }
+        }
+        // Poller: receive-side (two-sided arrivals)
+        loop {
+            let cqes = sim.poll_cq(self.node, self.recv_cq, 64);
+            if cqes.is_empty() {
+                break;
+            }
+            for cqe in cqes {
+                self.on_recv_cqe(sim, cqe);
+            }
+        }
+        // SRQ refill
+        Self::fill_srq(sim, self.node, self.srq, &mut self.pool, &self.cfg, &mut self.srq_wr_seq);
+        self.telemetry.pool_pressure = self.pool.pressure();
+    }
+
+    fn on_send_cqe(&mut self, sim: &mut Sim, cqe: Cqe) {
+        self.telemetry.charge(self.cfg.demux_ns);
+        let vqpn = unpack_vqpn(cqe.wr_id);
+        let ok = cqe.status == WcStatus::Success;
+        if let Some((lease, deliver_copy)) = self.open_leases.remove(&cqe.wr_id) {
+            if deliver_copy && ok {
+                // copy read payload out to the app's private buffer
+                sim.node_mut(self.node).cpu.charge_memcpy(cqe.len, 10.0);
+            }
+            self.pool.release(lease);
+        }
+        self.stats.ops_completed += 1;
+        self.telemetry.ops_completed += 1;
+        if ok {
+            self.stats.bytes_completed += cqe.len;
+        }
+        if let Some(entry) = self.conns.lookup(vqpn) {
+            let app = entry.app;
+            self.telemetry.charge(self.cfg.shm.ring_push_ns);
+            self.inboxes.entry(app).or_default().push_back(Delivery::OpComplete {
+                conn: vqpn,
+                tag: cqe.wr_id,
+                len: cqe.len,
+                ok,
+            });
+        }
+    }
+
+    fn on_recv_cqe(&mut self, sim: &mut Sim, cqe: Cqe) {
+        self.telemetry.charge(self.cfg.demux_ns);
+        let Some(imm) = cqe.imm_data else { return };
+        let vqpn = Vqpn(imm);
+        let Some(entry) = self.conns.lookup(vqpn) else { return };
+        let app = entry.app;
+        // deliver: default path copies out of the shared pool; zero-copy
+        // apps read in place (recv_zero_copy — Fig 3)
+        self.stats.msgs_delivered += 1;
+        self.telemetry.charge(self.cfg.shm.ring_push_ns);
+        self.inboxes.entry(app).or_default().push_back(Delivery::Message {
+            conn: vqpn,
+            len: cqe.len,
+            zero_copy: false,
+        });
+        let _ = sim; // copy cost charged at recv()/recv_zero_copy()
+    }
+
+    /// `recv(fd, buf, len, FLAGS)` — pops the next delivery for `app`,
+    /// charging the copy-out.
+    pub fn recv(&mut self, sim: &mut Sim, app: u32) -> Option<Delivery> {
+        let d = self.inboxes.get_mut(&app)?.pop_front()?;
+        sim.node_mut(self.node).cpu.charge(self.cfg.shm.ring_pop_ns);
+        if let Delivery::Message { len, .. } = d {
+            sim.node_mut(self.node).cpu.charge_memcpy(len, 10.0);
+        }
+        Some(d)
+    }
+
+    /// `recv_zero_copy(fd, &buf_addr, len, FLAGS)` — no copy-out; the app
+    /// reads the registered buffer in place (Fig 3's blocking-mode path).
+    pub fn recv_zero_copy(&mut self, sim: &mut Sim, app: u32) -> Option<Delivery> {
+        let mut d = self.inboxes.get_mut(&app)?.pop_front()?;
+        sim.node_mut(self.node).cpu.charge(self.cfg.shm.ring_pop_ns);
+        if let Delivery::Message { ref mut zero_copy, .. } = d {
+            *zero_copy = true;
+        }
+        Some(d)
+    }
+
+    /// Pending deliveries for an app (diagnostics).
+    pub fn inbox_len(&self, app: u32) -> usize {
+        self.inboxes.get(&app).map(|q| q.len()).unwrap_or(0)
+    }
+
+    pub fn shared_qp_count(&self) -> usize {
+        self.shared_qps.len()
+    }
+
+    /// Rolled-up resource usage (Figs 7/8).
+    pub fn snapshot(&self, sim: &Sim) -> super::telemetry::ResourceSnapshot {
+        let node = sim.node(self.node);
+        super::telemetry::ResourceSnapshot {
+            mem_bytes: self.telemetry.ring_bytes() + self.pool.hwm_bytes() + node.fabric_mem_bytes(),
+            cpu_cores: self.telemetry.cpu_cores(sim.now())
+                + node.cpu.busy_ns as f64 / sim.now().0.max(1) as f64,
+            apps: self.telemetry.sessions.len() as u32,
+            conns: self.conns.active() as u32,
+            shared_qps: self.shared_qps.len() as u32,
+        }
+    }
+}
+
+/// Control plane: open a logical connection from `daemons[a]` (app
+/// `a_app`) to the listener on `port` at `daemons[b]`. Reuses the shared
+/// QP between the two machines if it exists, else creates it (§2.3).
+/// Mirrors `connect()` + `accept()` of Fig 3 for the in-sim deployment.
+pub fn connect_via(
+    sim: &mut Sim,
+    daemons: &mut [Daemon],
+    a: usize,
+    a_app: u32,
+    b: usize,
+    port: u16,
+) -> Result<Vqpn, RaasError> {
+    assert_ne!(a, b, "loopback connections don't need RDMA");
+    // split borrows
+    let (da, db) = if a < b {
+        let (l, r) = daemons.split_at_mut(b);
+        (&mut l[a], &mut r[0])
+    } else {
+        let (l, r) = daemons.split_at_mut(a);
+        (&mut r[0], &mut l[b])
+    };
+
+    let b_app = *db.listeners.get(&port).ok_or(RaasError::UnknownConnection)?;
+
+    // shared QP pair between the machines, created once
+    if !da.shared_qps.contains_key(&db.node.0) {
+        let qa = sim.create_qp(da.node, crate::fabric::types::QpTransport::Rc, da.send_cq, da.recv_cq);
+        let qb = sim.create_qp(db.node, crate::fabric::types::QpTransport::Rc, db.send_cq, db.recv_cq);
+        sim.connect(da.node, qa, db.node, qb);
+        sim.attach_srq(da.node, qa, da.srq);
+        sim.attach_srq(db.node, qb, db.srq);
+        da.shared_qps.insert(db.node.0, qa);
+        db.shared_qps.insert(da.node.0, qb);
+        // exchange pool credentials (one-sided addressing)
+        da.remote_pools.insert(
+            db.node.0,
+            RemotePool { rkey: db.pool.mr.key, base: db.pool.mr.addr, len: db.pool.mr.len },
+        );
+        db.remote_pools.insert(
+            da.node.0,
+            RemotePool { rkey: da.pool.mr.key, base: da.pool.mr.addr, len: da.pool.mr.len },
+        );
+    }
+
+    // allocate the vQPN pair
+    let va = da.conns.open(a_app, db.node, Vqpn(0));
+    let vb = db.conns.open(b_app, da.node, va);
+    da.conns.set_peer(va, vb);
+    db.accept_queues.entry((b_app, port)).or_default().push_back(vb);
+    db.inboxes.entry(b_app).or_default();
+    Ok(va)
+}
+
+/// Resolve a [`Target`] then connect (the public `connect(Target*, FLAGS)`
+/// form of Fig 3).
+pub fn connect_target(
+    sim: &mut Sim,
+    daemons: &mut [Daemon],
+    a: usize,
+    a_app: u32,
+    target: Target,
+    port: u16,
+) -> Result<Vqpn, RaasError> {
+    let node = target.resolve();
+    let b = daemons
+        .iter()
+        .position(|d| d.node == node)
+        .ok_or(RaasError::UnknownConnection)?;
+    connect_via(sim, daemons, a, a_app, b, port)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::sim::FabricConfig;
+
+    fn cluster(n: usize) -> (Sim, Vec<Daemon>) {
+        let mut cfg = FabricConfig::default();
+        cfg.nodes = n;
+        let mut sim = Sim::new(cfg);
+        let daemons = (0..n)
+            .map(|i| Daemon::start(&mut sim, NodeId(i as u32), DaemonConfig::default()))
+            .collect();
+        (sim, daemons)
+    }
+
+    fn pump_all(sim: &mut Sim, daemons: &mut [Daemon]) {
+        // drive until quiescent: alternate sim progress and daemon pumps
+        for _ in 0..10_000 {
+            for d in daemons.iter_mut() {
+                d.pump(sim);
+            }
+            if sim.step().is_none() {
+                // one more pump round to drain freshly-landed CQEs
+                for d in daemons.iter_mut() {
+                    d.pump(sim);
+                }
+                if sim.pending_events() == 0 {
+                    return;
+                }
+            }
+        }
+        panic!("did not quiesce");
+    }
+
+    #[test]
+    fn connect_creates_one_shared_qp_per_remote() {
+        let (mut sim, mut daemons) = cluster(3);
+        let app = daemons[0].register_app();
+        let sapp = daemons[1].register_app();
+        daemons[1].listen(sapp, 7000);
+        let sapp2 = daemons[2].register_app();
+        daemons[2].listen(sapp2, 7000);
+
+        for _ in 0..50 {
+            connect_via(&mut sim, &mut daemons, 0, app, 1, 7000).unwrap();
+        }
+        for _ in 0..50 {
+            connect_via(&mut sim, &mut daemons, 0, app, 2, 7000).unwrap();
+        }
+        assert_eq!(daemons[0].conns.active(), 100);
+        assert_eq!(daemons[0].shared_qp_count(), 2, "one QP per remote node");
+        assert_eq!(sim.node(NodeId(0)).qps.len(), 2);
+    }
+
+    #[test]
+    fn accept_pairs_with_connect() {
+        let (mut sim, mut daemons) = cluster(2);
+        let c_app = daemons[0].register_app();
+        let s_app = daemons[1].register_app();
+        daemons[1].listen(s_app, 9000);
+        let va = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 9000).unwrap();
+        let vb = daemons[1].accept(s_app, 9000).expect("accept should yield");
+        assert_eq!(daemons[0].conns.lookup(va).unwrap().peer_vqpn, vb);
+        assert_eq!(daemons[1].conns.lookup(vb).unwrap().peer_vqpn, va);
+        assert!(daemons[1].accept(s_app, 9000).is_none());
+    }
+
+    #[test]
+    fn read_completes_and_releases_lease() {
+        let (mut sim, mut daemons) = cluster(2);
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+
+        daemons[0].read(&mut sim, conn, 64 << 10, 0, 42).unwrap();
+        pump_all(&mut sim, &mut daemons);
+
+        let d = daemons[0].recv(&mut sim, app).expect("completion delivered");
+        match d {
+            Delivery::OpComplete { conn: c, len, ok, .. } => {
+                assert_eq!(c, conn);
+                assert_eq!(len, 64 << 10);
+                assert!(ok);
+            }
+            _ => panic!("unexpected delivery {d:?}"),
+        }
+        assert_eq!(daemons[0].pool.leased_bytes, 0, "lease released");
+        assert_eq!(daemons[0].stats.ops_completed, 1);
+    }
+
+    #[test]
+    fn small_send_arrives_as_message_with_vqpn_routing() {
+        let (mut sim, mut daemons) = cluster(2);
+        let c_app = daemons[0].register_app();
+        let s_app = daemons[1].register_app();
+        daemons[1].listen(s_app, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+        let peer = daemons[0].conns.lookup(conn).unwrap().peer_vqpn;
+
+        let verb = daemons[0]
+            .send(&mut sim, conn, 512, Flags::default(), 7, HostLoad::default())
+            .unwrap();
+        assert_eq!(verb, Verb::Send, "small message → two-sided SEND");
+        pump_all(&mut sim, &mut daemons);
+
+        let d = daemons[1].recv(&mut sim, s_app).expect("message delivered");
+        assert_eq!(d, Delivery::Message { conn: peer, len: 512, zero_copy: false });
+        // sender's completion arrived too
+        assert!(daemons[0].recv(&mut sim, c_app).is_some());
+    }
+
+    #[test]
+    fn large_send_uses_write_with_imm() {
+        let (mut sim, mut daemons) = cluster(2);
+        let c_app = daemons[0].register_app();
+        let s_app = daemons[1].register_app();
+        daemons[1].listen(s_app, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+
+        let verb = daemons[0]
+            .send(&mut sim, conn, 256 << 10, Flags::default(), 7, HostLoad::default())
+            .unwrap();
+        assert_eq!(verb, Verb::Write, "large message → one-sided WRITE");
+        pump_all(&mut sim, &mut daemons);
+        let d = daemons[1].recv(&mut sim, s_app).unwrap();
+        assert!(matches!(d, Delivery::Message { len, .. } if len == 256 << 10));
+    }
+
+    #[test]
+    fn zero_copy_recv_skips_copy_cost() {
+        let (mut sim, mut daemons) = cluster(2);
+        let c_app = daemons[0].register_app();
+        let s_app = daemons[1].register_app();
+        daemons[1].listen(s_app, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+
+        daemons[0]
+            .send(&mut sim, conn, 2048, Flags::default(), 1, HostLoad::default())
+            .unwrap();
+        pump_all(&mut sim, &mut daemons);
+        let before = sim.node(NodeId(1)).cpu.memcpy_bytes;
+        let d = daemons[1].recv_zero_copy(&mut sim, s_app).unwrap();
+        assert!(matches!(d, Delivery::Message { zero_copy: true, .. }));
+        assert_eq!(sim.node(NodeId(1)).cpu.memcpy_bytes, before, "no copy-out");
+    }
+
+    #[test]
+    fn batching_coalesces_doorbells() {
+        let (mut sim, mut daemons) = cluster(2);
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+
+        for i in 0..64 {
+            daemons[0].read(&mut sim, conn, 4096, (i * 4096) as u64, i).unwrap();
+        }
+        daemons[0].pump(&mut sim);
+        // 64 WRs, batch_max=32 → at most a handful of doorbells
+        assert!(daemons[0].stats.batches_posted <= 4, "batches={}", daemons[0].stats.batches_posted);
+        assert_eq!(daemons[0].stats.wrs_posted, 64);
+        pump_all(&mut sim, &mut daemons);
+        assert_eq!(daemons[0].stats.ops_completed, 64);
+    }
+
+    #[test]
+    fn snapshot_counts_resources() {
+        let (mut sim, mut daemons) = cluster(2);
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        for _ in 0..10 {
+            connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+        }
+        let snap = daemons[0].snapshot(&sim);
+        assert_eq!(snap.apps, 1);
+        assert_eq!(snap.conns, 10);
+        assert_eq!(snap.shared_qps, 1);
+        assert!(snap.mem_bytes > 0);
+    }
+
+    #[test]
+    fn pool_exhaustion_reported() {
+        // dedicated cluster with a tiny pool on node 0
+        let mut fcfg = FabricConfig::default();
+        fcfg.nodes = 2;
+        let mut sim = Sim::new(fcfg);
+        let mut cfg0 = DaemonConfig::default();
+        cfg0.pool_layout = vec![(64 << 10, 4)];
+        cfg0.srq_capacity = 2;
+        let mut daemons = vec![
+            Daemon::start(&mut sim, NodeId(0), cfg0),
+            Daemon::start(&mut sim, NodeId(1), DaemonConfig::default()),
+        ];
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+        let mut got_exhausted = false;
+        for i in 0..10 {
+            match daemons[0].read(&mut sim, conn, 64 << 10, 0, i) {
+                Err(RaasError::PoolExhausted) => {
+                    got_exhausted = true;
+                    break;
+                }
+                Ok(_) => {}
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(got_exhausted, "tiny pool must exhaust");
+    }
+}

@@ -1,0 +1,34 @@
+//! RaaS — RDMA as a Service. The paper's system contribution.
+//!
+//! RDMAvisor runs as one daemon per machine, owning every RDMA resource on
+//! the host and exposing a socket-like API to all applications:
+//!
+//! * [`api`] — `connect/listen/accept/send/recv/recv_zero_copy` + `Flags`
+//!   (Fig 3), with `Target` encapsulating IPv4/IPv6/GID/LID addressing.
+//! * [`vqpn`] — virtual QPNs: all logical connections to the same remote
+//!   node share one RC QP; the vQPN travels in `wr_id` (one-sided) or
+//!   `imm_data` (two-sided) and the Poller demultiplexes completions
+//!   (Figs 2 & 4, §2.3).
+//! * [`shmem`] — the lock-free app↔daemon channel: real SPSC rings with
+//!   eventfd doorbells (used on the live serving path), plus the cost
+//!   model constants the simulator charges for them.
+//! * [`transport`] — adaptive transport/verb selection from message size
+//!   and end-host CPU/memory telemetry (§2.2), overridable via `Flags`.
+//! * [`buffer`] — registered send/recv buffer pools with slab classes,
+//!   huge-page registration, and the memcpy-vs-memreg staging policy [9].
+//! * [`daemon`] — the Worker/Poller engine over the simulated fabric:
+//!   WR batching per shared QP, host-wide SRQ, per-app session state.
+//! * [`telemetry`] — the CPU/memory ledger behind Figs 7/8 and the
+//!   adaptive selector's inputs.
+
+pub mod api;
+pub mod vqpn;
+pub mod shmem;
+pub mod transport;
+pub mod buffer;
+pub mod daemon;
+pub mod telemetry;
+
+pub use api::{Flags, Target};
+pub use daemon::{Daemon, DaemonConfig};
+pub use vqpn::{ConnId, Vqpn};

@@ -1,0 +1,368 @@
+//! Lock-free app↔daemon shared-memory channel (§2.3).
+//!
+//! "Applications write send-requests to shared memory, use eventfd to
+//! notify RDMAvisor, and read the same eventfd to get the send result" —
+//! the producer/consumer design that keeps the whole submit path in user
+//! space with zero locks.
+//!
+//! This module is the **real** implementation (used by the live serving
+//! example and the hot-path benches): a cache-padded SPSC ring over a boxed
+//! slice with acquire/release atomics, plus an eventfd doorbell (Linux
+//! `eventfd(2)` via libc) with busy-poll fast path. The simulator charges
+//! the [`ShmCosts`] constants for the same operations in virtual time.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Cost constants the DES charges for ring ops (measured on this machine by
+/// `benches/hotpath.rs`; see EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug)]
+pub struct ShmCosts {
+    pub ring_push_ns: u64,
+    pub ring_pop_ns: u64,
+    /// eventfd write+read pair when the consumer was asleep.
+    pub doorbell_ns: u64,
+}
+
+impl Default for ShmCosts {
+    fn default() -> Self {
+        ShmCosts { ring_push_ns: 25, ring_pop_ns: 20, doorbell_ns: 700 }
+    }
+}
+
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+/// A fixed-size 64-byte request descriptor — what actually crosses the
+/// app/daemon boundary (payloads stay in the registered pool).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Descriptor {
+    pub conn: u32,
+    pub opcode: u32,
+    pub len: u64,
+    pub addr: u64,
+    pub user_tag: u64,
+    pub flags: u32,
+    pub status: u32,
+    pub _pad: [u64; 3],
+}
+
+impl Descriptor {
+    pub fn new(conn: u32, opcode: u32, len: u64, addr: u64, tag: u64) -> Self {
+        Descriptor {
+            conn,
+            opcode,
+            len,
+            addr,
+            user_tag: tag,
+            flags: 0,
+            status: 0,
+            _pad: [0; 3],
+        }
+    }
+}
+
+/// Single-producer single-consumer lock-free ring.
+///
+/// Invariants (property-tested in `tests/proptest_invariants.rs`):
+/// * every pushed descriptor is popped exactly once, in FIFO order,
+/// * push fails (backpressure) iff the ring holds `capacity` items,
+/// * no data race: producer writes a slot strictly before publishing via
+///   the tail store (Release), consumer reads after the head load (Acquire).
+pub struct SpscRing<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    mask: u64,
+    head: CachePadded<AtomicU64>, // consumer cursor
+    tail: CachePadded<AtomicU64>, // producer cursor
+    /// Producer-private cache of `head`: reloaded only when the ring looks
+    /// full. Avoids a cross-core cache-line read on every push (§Perf: this
+    /// took the cross-thread stream from 0.5 M msg/s to >10 M msg/s).
+    head_cache: CachePadded<UnsafeCell<u64>>,
+    /// Consumer-private cache of `tail`, symmetric.
+    tail_cache: CachePadded<UnsafeCell<u64>>,
+}
+
+unsafe impl<T: Send> Send for SpscRing<T> {}
+unsafe impl<T: Send> Sync for SpscRing<T> {}
+
+impl<T> SpscRing<T> {
+    /// `capacity` must be a power of two.
+    pub fn new(capacity: usize) -> Arc<Self> {
+        assert!(capacity.is_power_of_two() && capacity >= 2);
+        let buf = (0..capacity)
+            .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Arc::new(SpscRing {
+            buf,
+            mask: capacity as u64 - 1,
+            head: CachePadded(AtomicU64::new(0)),
+            tail: CachePadded(AtomicU64::new(0)),
+            head_cache: CachePadded(UnsafeCell::new(0)),
+            tail_cache: CachePadded(UnsafeCell::new(0)),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mask as usize + 1
+    }
+
+    pub fn len(&self) -> usize {
+        let t = self.tail.0.load(Ordering::Acquire);
+        let h = self.head.0.load(Ordering::Acquire);
+        (t - h) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Producer side. Returns the value back on a full ring.
+    pub fn push(&self, value: T) -> Result<(), T> {
+        let tail = self.tail.0.load(Ordering::Relaxed);
+        // fast path: use the cached head (producer-private; no coherence
+        // traffic). Only reload the real head when the ring looks full.
+        let head_cache = self.head_cache.0.get();
+        let mut head = unsafe { *head_cache };
+        if tail - head >= self.buf.len() as u64 {
+            head = self.head.0.load(Ordering::Acquire);
+            unsafe { *head_cache = head };
+            if tail - head >= self.buf.len() as u64 {
+                return Err(value);
+            }
+        }
+        unsafe {
+            (*self.buf[(tail & self.mask) as usize].get()).write(value);
+        }
+        self.tail.0.store(tail + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side.
+    pub fn pop(&self) -> Option<T> {
+        let head = self.head.0.load(Ordering::Relaxed);
+        let tail_cache = self.tail_cache.0.get();
+        let mut tail = unsafe { *tail_cache };
+        if head == tail {
+            tail = self.tail.0.load(Ordering::Acquire);
+            unsafe { *tail_cache = tail };
+            if head == tail {
+                return None;
+            }
+        }
+        let value = unsafe { (*self.buf[(head & self.mask) as usize].get()).assume_init_read() };
+        self.head.0.store(head + 1, Ordering::Release);
+        Some(value)
+    }
+
+    /// Consumer: drain up to `max` items into `out` (one cursor publish —
+    /// the worker's batch-drain fast path).
+    pub fn pop_batch(&self, out: &mut Vec<T>, max: usize) -> usize {
+        let head = self.head.0.load(Ordering::Relaxed);
+        let tail = self.tail.0.load(Ordering::Acquire);
+        unsafe { *self.tail_cache.0.get() = tail };
+        let n = ((tail - head) as usize).min(max);
+        for i in 0..n {
+            out.push(unsafe {
+                (*self.buf[((head + i as u64) & self.mask) as usize].get()).assume_init_read()
+            });
+        }
+        if n > 0 {
+            self.head.0.store(head + n as u64, Ordering::Release);
+        }
+        n
+    }
+}
+
+impl<T> Drop for SpscRing<T> {
+    fn drop(&mut self) {
+        // drain any unconsumed items so their Drop runs
+        while self.pop().is_some() {}
+    }
+}
+
+/// eventfd doorbell: producer `ring()`s when the consumer may be asleep;
+/// consumer `wait()`s when it has spun long enough without work.
+pub struct Doorbell {
+    fd: i32,
+}
+
+impl Doorbell {
+    pub fn new() -> std::io::Result<Doorbell> {
+        // EFD_SEMAPHORE not needed: we reset on read.
+        let fd = unsafe { libc::eventfd(0, libc::EFD_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Doorbell { fd })
+    }
+
+    /// Producer-side notify (a single 8-byte write syscall).
+    pub fn ring(&self) {
+        let one: u64 = 1;
+        unsafe {
+            libc::write(self.fd, &one as *const u64 as *const libc::c_void, 8);
+        }
+    }
+
+    /// Consumer-side block until rung (reads & resets the counter).
+    pub fn wait(&self) {
+        let mut buf: u64 = 0;
+        unsafe {
+            libc::read(self.fd, &mut buf as *mut u64 as *mut libc::c_void, 8);
+        }
+    }
+
+    /// Non-blocking poll with timeout (ms); true if rung.
+    pub fn wait_timeout(&self, timeout_ms: i32) -> bool {
+        let mut pfd = libc::pollfd { fd: self.fd, events: libc::POLLIN, revents: 0 };
+        let r = unsafe { libc::poll(&mut pfd, 1, timeout_ms) };
+        if r > 0 && pfd.revents & libc::POLLIN != 0 {
+            self.wait();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Drop for Doorbell {
+    fn drop(&mut self) {
+        unsafe {
+            libc::close(self.fd);
+        }
+    }
+}
+
+/// One app↔daemon session channel: submit ring, completion ring, doorbells.
+pub struct Channel {
+    pub submit: Arc<SpscRing<Descriptor>>,
+    pub complete: Arc<SpscRing<Descriptor>>,
+    pub submit_bell: Doorbell,
+    pub complete_bell: Doorbell,
+}
+
+impl Channel {
+    pub fn new(depth: usize) -> std::io::Result<Channel> {
+        Ok(Channel {
+            submit: SpscRing::new(depth),
+            complete: SpscRing::new(depth),
+            submit_bell: Doorbell::new()?,
+            complete_bell: Doorbell::new()?,
+        })
+    }
+
+    /// Shared-memory footprint of this channel (Fig 7 input).
+    pub fn mem_bytes(&self) -> u64 {
+        (self.submit.capacity() + self.complete.capacity()) as u64
+            * std::mem::size_of::<Descriptor>() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn descriptor_is_64_bytes() {
+        assert_eq!(std::mem::size_of::<Descriptor>(), 64);
+    }
+
+    #[test]
+    fn fifo_single_thread() {
+        let r = SpscRing::new(8);
+        for i in 0..8u64 {
+            r.push(i).unwrap();
+        }
+        assert!(r.push(99).is_err(), "full ring must reject");
+        for i in 0..8u64 {
+            assert_eq!(r.pop(), Some(i));
+        }
+        assert_eq!(r.pop(), None);
+    }
+
+    #[test]
+    fn pop_batch_drains_in_order() {
+        let r = SpscRing::new(16);
+        for i in 0..10u64 {
+            r.push(i).unwrap();
+        }
+        let mut out = Vec::new();
+        assert_eq!(r.pop_batch(&mut out, 4), 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(r.pop_batch(&mut out, 100), 6);
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn cross_thread_transfer_exact() {
+        let r: Arc<SpscRing<u64>> = SpscRing::new(1024);
+        let n = 200_000u64;
+        let prod = {
+            let r = Arc::clone(&r);
+            thread::spawn(move || {
+                for i in 0..n {
+                    loop {
+                        if r.push(i).is_ok() {
+                            break;
+                        }
+                        std::hint::spin_loop();
+                    }
+                }
+            })
+        };
+        let mut expect = 0u64;
+        let mut sum = 0u64;
+        while expect < n {
+            if let Some(v) = r.pop() {
+                assert_eq!(v, expect, "FIFO order violated");
+                sum = sum.wrapping_add(v);
+                expect += 1;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        prod.join().unwrap();
+        assert_eq!(sum, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn doorbell_wakes_waiter() {
+        let c = Channel::new(16).unwrap();
+        assert!(!c.submit_bell.wait_timeout(0), "not rung yet");
+        c.submit_bell.ring();
+        assert!(c.submit_bell.wait_timeout(100));
+        assert!(!c.submit_bell.wait_timeout(0), "counter reset after read");
+    }
+
+    #[test]
+    fn doorbell_cross_thread() {
+        let c = std::sync::Arc::new(Channel::new(16).unwrap());
+        let c2 = std::sync::Arc::clone(&c);
+        let t = thread::spawn(move || {
+            c2.submit.push(Descriptor::new(1, 2, 3, 4, 5)).unwrap();
+            c2.submit_bell.ring();
+        });
+        assert!(c.submit_bell.wait_timeout(2000), "doorbell must wake us");
+        let d = c.submit.pop().unwrap();
+        assert_eq!(d.conn, 1);
+        assert_eq!(d.user_tag, 5);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn channel_memory_accounting() {
+        let c = Channel::new(4096).unwrap();
+        assert_eq!(c.mem_bytes(), 2 * 4096 * 64);
+    }
+
+    #[test]
+    fn drop_with_items_is_safe() {
+        let r = SpscRing::new(8);
+        r.push(String::from("leak-check")).unwrap();
+        drop(r); // must drop the unconsumed String
+    }
+}

@@ -1,0 +1,127 @@
+//! The daemon's CPU/memory ledger (Figs 7 & 8) and the load snapshots the
+//! adaptive selector consumes (§2.2).
+//!
+//! Everything here is *measured from the actual structures*: registered
+//! bytes come from the MR table, ring bytes from the sessions that exist,
+//! thread counts from the threads the daemon actually runs. Nothing is a
+//! fudge constant.
+
+use crate::fabric::time::Ns;
+
+use super::transport::HostLoad;
+
+/// Per-application session resources (one app talking to the daemon).
+#[derive(Clone, Debug)]
+pub struct SessionResources {
+    /// Submit + completion ring bytes (shared memory with the app).
+    pub ring_bytes: u64,
+    /// eventfd pair — kernel object, counted as a constant overhead.
+    pub eventfd_bytes: u64,
+}
+
+impl Default for SessionResources {
+    fn default() -> Self {
+        // 2 rings × 4096 slots × 64 B descriptors + 2 eventfds
+        SessionResources { ring_bytes: 2 * 4096 * 64, eventfd_bytes: 2 * 128 }
+    }
+}
+
+/// Rolled-up daemon resource usage at one instant.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResourceSnapshot {
+    /// Bytes: rings + pool HWM + fabric objects (QPs/CQs/SRQ/MTT).
+    pub mem_bytes: u64,
+    /// Cores-equivalent: daemon threads + itemized work.
+    pub cpu_cores: f64,
+    pub apps: u32,
+    pub conns: u32,
+    pub shared_qps: u32,
+}
+
+/// The daemon's accounting state.
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    pub sessions: Vec<SessionResources>,
+    /// Daemon service threads that busy-poll (Worker + Poller).
+    pub service_threads: u32,
+    /// Itemized CPU charged by daemon work (ring ops, WR builds, demux).
+    pub busy_ns: u64,
+    /// Observation window start (for utilization).
+    pub window_start: Ns,
+    /// Decision inputs maintained incrementally.
+    pub pool_pressure: f64,
+    pub ops_submitted: u64,
+    pub ops_completed: u64,
+}
+
+impl Telemetry {
+    pub fn new(service_threads: u32) -> Self {
+        Telemetry { service_threads, ..Default::default() }
+    }
+
+    pub fn add_session(&mut self) -> u32 {
+        self.sessions.push(SessionResources::default());
+        self.sessions.len() as u32 - 1
+    }
+
+    pub fn charge(&mut self, ns: u64) {
+        self.busy_ns += ns;
+    }
+
+    pub fn ring_bytes(&self) -> u64 {
+        self.sessions.iter().map(|s| s.ring_bytes + s.eventfd_bytes).sum()
+    }
+
+    /// Cores-equivalent over `[window_start, now]`.
+    pub fn cpu_cores(&self, now: Ns) -> f64 {
+        let span = now.saturating_sub(self.window_start).0.max(1);
+        self.service_threads as f64 + self.busy_ns as f64 / span as f64
+    }
+
+    /// The selector's local-load input. CPU utilization needs a minimum
+    /// observation window (1 ms) before it is meaningful; early in a run we
+    /// report only the fixed service-thread load.
+    pub fn load(&self, now: Ns, total_cores: u32) -> HostLoad {
+        let span = now.saturating_sub(self.window_start);
+        let cpu_cores = if span.0 < 1_000_000 {
+            self.service_threads as f64
+        } else {
+            self.cpu_cores(now)
+        };
+        HostLoad {
+            cpu: (cpu_cores / total_cores.max(1) as f64).min(1.0),
+            mem: self.pool_pressure,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sessions_add_ring_memory() {
+        let mut t = Telemetry::new(2);
+        assert_eq!(t.ring_bytes(), 0);
+        t.add_session();
+        t.add_session();
+        assert_eq!(t.ring_bytes(), 2 * (2 * 4096 * 64 + 256));
+    }
+
+    #[test]
+    fn cpu_counts_threads_plus_items() {
+        let mut t = Telemetry::new(2);
+        t.charge(500_000); // 0.5 ms of itemized work
+        let cores = t.cpu_cores(Ns(1_000_000)); // over 1 ms
+        assert!((cores - 2.5).abs() < 1e-9, "cores={cores}");
+    }
+
+    #[test]
+    fn load_normalizes_by_core_count() {
+        let mut t = Telemetry::new(6);
+        t.pool_pressure = 0.4;
+        let load = t.load(Ns(1_000_000), 24);
+        assert!((load.cpu - 0.25).abs() < 1e-9);
+        assert!((load.mem - 0.4).abs() < 1e-9);
+    }
+}

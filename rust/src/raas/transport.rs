@@ -1,0 +1,246 @@
+//! Adaptive transport & verb selection (§2.2).
+//!
+//! RDMAvisor mitigates the "no one-size-fits-all" problem: normal users
+//! call `send(fd, buf, len, 0)` and the daemon picks the RDMA operation:
+//!
+//! * **small messages** → two-sided SEND/RECV (lower latency at small
+//!   sizes; the SRQ supplies buffers; no rendezvous needed),
+//! * **large messages** → one-sided WRITE (or READ on the pull side),
+//!   which bypasses the remote CPU,
+//! * **WRITE vs READ** — chosen from the *current CPU and memory pressure
+//!   at both end-hosts*, measured by the daemons: pushing (WRITE) costs
+//!   initiator CPU, pulling (READ) costs responder NIC+memory bandwidth;
+//!   the selector steers work toward the less-loaded side,
+//! * **UC never chosen by default**: UC QPs cannot attach to an SRQ [1],
+//!   which would wreck the shared-buffer design — RC is the connected
+//!   default (§2.1), and our microbench (Fig 1) shows RC WRITE ≈ UC WRITE.
+//!
+//! Knowledgeable users override everything with `Flags` (e.g. `RC|WRITE`).
+
+use crate::fabric::types::{supports, QpTransport, Verb};
+
+use super::api::{Flags, RaasError};
+
+/// Host-load snapshot the selector consumes (produced by [`super::telemetry`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HostLoad {
+    /// CPU utilization in [0, 1] (cores busy / cores total).
+    pub cpu: f64,
+    /// Registered-memory pressure in [0, 1] (pool in use / pool size).
+    pub mem: f64,
+}
+
+/// Tunables for the adaptive policy.
+#[derive(Clone, Debug)]
+pub struct SelectorConfig {
+    /// At or below this size, two-sided SEND wins (inline-able, one DMA).
+    pub small_msg_bytes: u64,
+    /// Hysteresis band around the threshold to avoid flapping.
+    pub hysteresis: f64,
+    /// Load difference needed before we flip WRITE→READ or back.
+    pub load_margin: f64,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> Self {
+        SelectorConfig { small_msg_bytes: 4096, hysteresis: 0.25, load_margin: 0.15 }
+    }
+}
+
+/// The decision for one message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Choice {
+    pub transport: QpTransport,
+    pub verb: Verb,
+}
+
+/// Stateful per-connection selector (keeps hysteresis state).
+#[derive(Clone, Debug)]
+pub struct Selector {
+    cfg: SelectorConfig,
+    /// Last size-class decision (true = small/SEND side), for hysteresis.
+    last_small: Option<bool>,
+    /// Decision counters (exported to metrics/ablation).
+    pub chose_send: u64,
+    pub chose_write: u64,
+    pub chose_read: u64,
+}
+
+impl Selector {
+    pub fn new(cfg: SelectorConfig) -> Self {
+        Selector { cfg, last_small: None, chose_send: 0, chose_write: 0, chose_read: 0 }
+    }
+
+    /// Pick (transport, verb) for a message of `len` bytes given both ends'
+    /// load. `flags` pins any component the user specified; combinations
+    /// that violate Table 1 are rejected.
+    pub fn choose(
+        &mut self,
+        len: u64,
+        flags: Flags,
+        local: HostLoad,
+        remote: HostLoad,
+        mtu: u64,
+    ) -> Result<Choice, RaasError> {
+        // ---- user-pinned components win
+        let pinned_t = flags.transport();
+        let pinned_v = flags.verb();
+        if let (Some(t), Some(v)) = (pinned_t, pinned_v) {
+            if !supports(t, v) {
+                return Err(RaasError::UnsupportedCombination(t, v));
+            }
+            self.count(v);
+            return Ok(Choice { transport: t, verb: v });
+        }
+
+        // ---- size class with hysteresis
+        let small = self.size_class(len);
+
+        // a pinned verb constrains the size-class default
+        let verb = match pinned_v {
+            Some(v) => v,
+            None if small => Verb::Send,
+            None => {
+                // large: one-sided; WRITE by default, READ when the local
+                // host is markedly busier than the remote (push the DMA
+                // work to the idler side — §2.2's CPU-aware selection).
+                if local.cpu > remote.cpu + self.cfg.load_margin
+                    || local.mem > remote.mem + self.cfg.load_margin
+                {
+                    Verb::Read
+                } else {
+                    Verb::Write
+                }
+            }
+        };
+
+        // ---- transport: RC unless pinned (UC has no SRQ; UD only fits
+        // sub-MTU sends)
+        let transport = match pinned_t {
+            Some(t) => t,
+            None => {
+                if verb == Verb::Send && len <= mtu && small && remote.cpu < 0.9 {
+                    // tiny datagrams could ride UD, but RC keeps ordering and
+                    // the SRQ; stay RC per §2.1 unless the user pins UD.
+                    QpTransport::Rc
+                } else {
+                    QpTransport::Rc
+                }
+            }
+        };
+
+        if !supports(transport, verb) {
+            return Err(RaasError::UnsupportedCombination(transport, verb));
+        }
+        self.count(verb);
+        Ok(Choice { transport, verb })
+    }
+
+    fn size_class(&mut self, len: u64) -> bool {
+        let t = self.cfg.small_msg_bytes as f64;
+        let small = match self.last_small {
+            // hysteresis: once large, need to drop below t*(1-h) to flip
+            Some(true) => (len as f64) <= t * (1.0 + self.cfg.hysteresis),
+            Some(false) => (len as f64) < t * (1.0 - self.cfg.hysteresis),
+            None => len <= self.cfg.small_msg_bytes,
+        };
+        self.last_small = Some(small);
+        small
+    }
+
+    fn count(&mut self, v: Verb) {
+        match v {
+            Verb::Send => self.chose_send += 1,
+            Verb::Write => self.chose_write += 1,
+            Verb::Read => self.chose_read += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sel() -> Selector {
+        Selector::new(SelectorConfig::default())
+    }
+
+    fn idle() -> HostLoad {
+        HostLoad { cpu: 0.1, mem: 0.1 }
+    }
+
+    #[test]
+    fn small_messages_use_send() {
+        let c = sel().choose(256, Flags::default(), idle(), idle(), 4096).unwrap();
+        assert_eq!(c.verb, Verb::Send);
+        assert_eq!(c.transport, QpTransport::Rc);
+    }
+
+    #[test]
+    fn large_messages_use_write_when_idle() {
+        let c = sel().choose(64 << 10, Flags::default(), idle(), idle(), 4096).unwrap();
+        assert_eq!(c.verb, Verb::Write);
+        assert_eq!(c.transport, QpTransport::Rc);
+    }
+
+    #[test]
+    fn busy_local_host_prefers_read() {
+        let busy = HostLoad { cpu: 0.9, mem: 0.2 };
+        let c = sel().choose(64 << 10, Flags::default(), busy, idle(), 4096).unwrap();
+        assert_eq!(c.verb, Verb::Read, "pull from the idle side");
+    }
+
+    #[test]
+    fn memory_pressure_also_flips_to_read() {
+        let squeezed = HostLoad { cpu: 0.1, mem: 0.9 };
+        let c = sel().choose(64 << 10, Flags::default(), squeezed, idle(), 4096).unwrap();
+        assert_eq!(c.verb, Verb::Read);
+    }
+
+    #[test]
+    fn user_pin_overrides_policy() {
+        let c = sel()
+            .choose(64, Flags::RC | Flags::WRITE, idle(), idle(), 4096)
+            .unwrap();
+        assert_eq!(c.verb, Verb::Write, "pin beats the small-msg default");
+    }
+
+    #[test]
+    fn illegal_pin_rejected_by_table1() {
+        let err = sel()
+            .choose(64, Flags::UC | Flags::READ, idle(), idle(), 4096)
+            .unwrap_err();
+        assert_eq!(
+            err,
+            RaasError::UnsupportedCombination(QpTransport::Uc, Verb::Read)
+        );
+        let err = sel()
+            .choose(64, Flags::UD | Flags::WRITE, idle(), idle(), 4096)
+            .unwrap_err();
+        assert!(matches!(err, RaasError::UnsupportedCombination(..)));
+    }
+
+    #[test]
+    fn hysteresis_prevents_flapping() {
+        let mut s = sel();
+        // establish "small"
+        assert_eq!(s.choose(4096, Flags::default(), idle(), idle(), 4096).unwrap().verb, Verb::Send);
+        // slightly over the threshold stays small inside the band
+        assert_eq!(s.choose(4608, Flags::default(), idle(), idle(), 4096).unwrap().verb, Verb::Send);
+        // far over flips to large
+        assert_eq!(s.choose(64 << 10, Flags::default(), idle(), idle(), 4096).unwrap().verb, Verb::Write);
+        // slightly under the threshold stays large inside the band
+        assert_eq!(s.choose(4000, Flags::default(), idle(), idle(), 4096).unwrap().verb, Verb::Write);
+        // far under flips back
+        assert_eq!(s.choose(64, Flags::default(), idle(), idle(), 4096).unwrap().verb, Verb::Send);
+    }
+
+    #[test]
+    fn decision_counters_accumulate() {
+        let mut s = sel();
+        s.choose(64, Flags::default(), idle(), idle(), 4096).unwrap();
+        s.choose(64 << 10, Flags::default(), idle(), idle(), 4096).unwrap();
+        assert_eq!(s.chose_send, 1);
+        assert_eq!(s.chose_write, 1);
+    }
+}

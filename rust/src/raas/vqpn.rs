@@ -1,0 +1,211 @@
+//! Virtual QPNs: the lock-free QP-sharing demultiplexer (§2.3, Fig 4).
+//!
+//! All logical connections targeting the same remote node share one RC QP.
+//! Each connection gets a 4-byte **vQPN**; RDMAvisor stamps it into the
+//! `wr_id` field of one-sided WRs (returned in the initiator's CQE) and
+//! into `imm_data` for two-sided WRs (travels to the responder's CQE).
+//! Completion routing is then a single array lookup — no locks anywhere on
+//! the path.
+
+use std::collections::HashMap;
+
+use crate::fabric::types::NodeId;
+
+/// A virtual queue pair number — identifies one logical connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Vqpn(pub u32);
+
+/// Handle applications hold for a logical connection.
+pub type ConnId = Vqpn;
+
+/// Pack (vqpn, op-sequence) into a 64-bit wr_id: vQPN in the low 32 bits
+/// exactly as Fig 4 shows, sequence in the high bits for dedup/debugging.
+#[inline]
+pub fn pack_wr_id(vqpn: Vqpn, seq: u32) -> u64 {
+    ((seq as u64) << 32) | vqpn.0 as u64
+}
+
+/// Extract the vQPN from a completion's wr_id.
+#[inline]
+pub fn unpack_vqpn(wr_id: u64) -> Vqpn {
+    Vqpn(wr_id as u32)
+}
+
+#[inline]
+pub fn unpack_seq(wr_id: u64) -> u32 {
+    (wr_id >> 32) as u32
+}
+
+/// State of one logical connection.
+#[derive(Clone, Debug)]
+pub struct ConnEntry {
+    pub vqpn: Vqpn,
+    /// Owning application (session) on this host.
+    pub app: u32,
+    /// Remote machine this connection targets.
+    pub remote: NodeId,
+    /// Peer's vQPN for this connection (stamped into imm_data so the peer's
+    /// Poller can route two-sided deliveries).
+    pub peer_vqpn: Vqpn,
+    pub closed: bool,
+}
+
+/// The connection table: vQPN allocator + routing index.
+///
+/// Dense `Vec` storage so the Poller's demux is one bounds-checked index —
+/// the hot path the paper makes lock-free.
+#[derive(Debug, Default)]
+pub struct ConnTable {
+    entries: Vec<Option<ConnEntry>>,
+    free: Vec<u32>,
+    /// Connections per remote node (drives shared-QP reuse stats).
+    per_remote: HashMap<u32, u32>,
+    pub opened: u64,
+    pub closed: u64,
+}
+
+impl ConnTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a vQPN for a new connection. vQPNs are recycled after close
+    /// (the 4-byte space must last the daemon's lifetime).
+    pub fn open(&mut self, app: u32, remote: NodeId, peer_vqpn: Vqpn) -> Vqpn {
+        self.opened += 1;
+        *self.per_remote.entry(remote.0).or_insert(0) += 1;
+        match self.free.pop() {
+            Some(idx) => {
+                let vqpn = Vqpn(idx);
+                self.entries[idx as usize] =
+                    Some(ConnEntry { vqpn, app, remote, peer_vqpn, closed: false });
+                vqpn
+            }
+            None => {
+                let vqpn = Vqpn(self.entries.len() as u32);
+                self.entries.push(Some(ConnEntry {
+                    vqpn,
+                    app,
+                    remote,
+                    peer_vqpn,
+                    closed: false,
+                }));
+                vqpn
+            }
+        }
+    }
+
+    /// Bind the peer's vQPN once the control-plane handshake returns it.
+    pub fn set_peer(&mut self, vqpn: Vqpn, peer: Vqpn) {
+        if let Some(Some(e)) = self.entries.get_mut(vqpn.0 as usize) {
+            e.peer_vqpn = peer;
+        }
+    }
+
+    pub fn close(&mut self, vqpn: Vqpn) -> bool {
+        match self.entries.get_mut(vqpn.0 as usize) {
+            Some(slot @ Some(_)) => {
+                let e = slot.take().unwrap();
+                self.closed += 1;
+                if let Some(c) = self.per_remote.get_mut(&e.remote.0) {
+                    *c -= 1;
+                }
+                self.free.push(vqpn.0);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// The Poller's demux: O(1).
+    #[inline]
+    pub fn lookup(&self, vqpn: Vqpn) -> Option<&ConnEntry> {
+        self.entries.get(vqpn.0 as usize).and_then(|e| e.as_ref())
+    }
+
+    pub fn active(&self) -> usize {
+        (self.opened - self.closed) as usize
+    }
+
+    pub fn conns_to(&self, remote: NodeId) -> u32 {
+        self.per_remote.get(&remote.0).copied().unwrap_or(0)
+    }
+
+    /// Distinct remote nodes with ≥1 connection = number of shared QPs the
+    /// daemon needs (the whole point of §2.3).
+    pub fn active_remotes(&self) -> usize {
+        self.per_remote.values().filter(|&&c| c > 0).count()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ConnEntry> {
+        self.entries.iter().filter_map(|e| e.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wr_id_roundtrip() {
+        let id = pack_wr_id(Vqpn(0xDEAD_BEEF), 7);
+        assert_eq!(unpack_vqpn(id), Vqpn(0xDEAD_BEEF));
+        assert_eq!(unpack_seq(id), 7);
+    }
+
+    #[test]
+    fn open_assigns_unique_vqpns() {
+        let mut t = ConnTable::new();
+        let a = t.open(1, NodeId(1), Vqpn(0));
+        let b = t.open(1, NodeId(2), Vqpn(0));
+        let c = t.open(2, NodeId(1), Vqpn(0));
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert_eq!(t.active(), 3);
+    }
+
+    #[test]
+    fn close_recycles_vqpn() {
+        let mut t = ConnTable::new();
+        let a = t.open(1, NodeId(1), Vqpn(0));
+        assert!(t.close(a));
+        assert!(!t.close(a), "double close must fail");
+        let b = t.open(1, NodeId(1), Vqpn(0));
+        assert_eq!(a, b, "vqpn must be recycled");
+        assert_eq!(t.active(), 1);
+    }
+
+    #[test]
+    fn lookup_routes_by_vqpn() {
+        let mut t = ConnTable::new();
+        let a = t.open(3, NodeId(2), Vqpn(77));
+        let e = t.lookup(a).unwrap();
+        assert_eq!(e.app, 3);
+        assert_eq!(e.remote, NodeId(2));
+        assert_eq!(e.peer_vqpn, Vqpn(77));
+        assert!(t.lookup(Vqpn(999)).is_none());
+    }
+
+    #[test]
+    fn shared_qp_count_tracks_distinct_remotes() {
+        let mut t = ConnTable::new();
+        for _ in 0..100 {
+            t.open(1, NodeId(1), Vqpn(0));
+        }
+        for _ in 0..50 {
+            t.open(1, NodeId(2), Vqpn(0));
+        }
+        // 150 logical connections, but only 2 shared QPs needed
+        assert_eq!(t.active(), 150);
+        assert_eq!(t.active_remotes(), 2);
+        assert_eq!(t.conns_to(NodeId(1)), 100);
+    }
+
+    #[test]
+    fn set_peer_updates() {
+        let mut t = ConnTable::new();
+        let a = t.open(1, NodeId(1), Vqpn(0));
+        t.set_peer(a, Vqpn(42));
+        assert_eq!(t.lookup(a).unwrap().peer_vqpn, Vqpn(42));
+    }
+}

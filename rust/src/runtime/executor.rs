@@ -1,0 +1,124 @@
+//! PJRT executor: compile-once, execute-many over the CPU client.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compiled executable per model
+//! variant; token-id inputs in, logits out.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, Variant};
+
+/// Output of one forward pass.
+#[derive(Clone, Debug)]
+pub struct ModelOutput {
+    /// Flattened logits [batch * seq * vocab].
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl ModelOutput {
+    /// Argmax token at (row, pos) — what the serving example replies with.
+    pub fn argmax(&self, row: usize, pos: usize) -> usize {
+        let base = (row * self.seq + pos) * self.vocab;
+        let slice = &self.logits[base..base + self.vocab];
+        slice
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Compile-once executor over all manifest variants.
+pub struct Executor {
+    client: xla::PjRtClient,
+    variants: HashMap<String, (Variant, xla::PjRtLoadedExecutable)>,
+    pub manifest: Manifest,
+    pub executions: u64,
+}
+
+impl Executor {
+    /// Load + compile every artifact in `dir` (one-time startup cost).
+    pub fn load(dir: &str) -> Result<Executor> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut variants = HashMap::new();
+        for v in &manifest.variants {
+            let path = format!("{dir}/{}", v.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {}", v.name))?;
+            variants.insert(v.name.clone(), (v.clone(), exe));
+        }
+        Ok(Executor { client, variants, manifest, executions: 0 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn variant_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.variants.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Execute variant `name` on `tokens` (row-major [batch, seq] i32).
+    /// Short batches are padded with token 0; extra rows are ignored by the
+    /// caller (the batcher slices real rows out of the output).
+    pub fn run(&mut self, name: &str, tokens: &[i32]) -> Result<ModelOutput> {
+        let (variant, exe) = self
+            .variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown variant {name}"))?;
+        let want = variant.batch * variant.seq;
+        let mut input = tokens.to_vec();
+        if input.len() > want {
+            return Err(anyhow!("batch overflow: {} > {}", input.len(), want));
+        }
+        input.resize(want, 0);
+        let lit = xla::Literal::vec1(&input)
+            .reshape(&[variant.batch as i64, variant.seq as i64])
+            .context("reshape input")?;
+        let result = exe.execute::<xla::Literal>(&[lit]).context("execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1().context("untuple")?;
+        let logits = out.to_vec::<f32>().context("logits to vec")?;
+        self.executions += 1;
+        Ok(ModelOutput {
+            logits,
+            batch: variant.batch,
+            seq: variant.seq,
+            vocab: variant.vocab,
+        })
+    }
+
+    /// Pick the variant for `n` requests and run (dynamic batcher entry).
+    pub fn run_batched(&mut self, tokens_rows: &[Vec<i32>]) -> Result<(String, ModelOutput)> {
+        let n = tokens_rows.len();
+        let name = self
+            .manifest
+            .variant_for_batch(n)
+            .ok_or_else(|| anyhow!("no variants loaded"))?
+            .name
+            .clone();
+        let seq = self.variants[&name].0.seq;
+        let mut flat = Vec::with_capacity(n * seq);
+        for row in tokens_rows {
+            let mut r = row.clone();
+            r.resize(seq, 0);
+            flat.extend_from_slice(&r);
+        }
+        let out = self.run(&name, &flat)?;
+        Ok((name, out))
+    }
+}

@@ -1,0 +1,137 @@
+//! `artifacts/manifest.json` — shapes/dtypes of each AOT model variant.
+
+use crate::util::jsonmini::{parse, Json};
+
+/// One compiled model variant (one batch size).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variant {
+    pub name: String,
+    pub file: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub flops_fwd: u64,
+    pub vmem_attn_bytes: u64,
+    pub vmem_mlp_bytes: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub seed: u64,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn parse(doc: &str) -> Result<Manifest, String> {
+        let v = parse(doc)?;
+        let variants = v
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing 'variants'")?
+            .iter()
+            .map(parse_variant)
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Manifest {
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            variants,
+        })
+    }
+
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = format!("{dir}/manifest.json");
+        let doc = std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&doc)
+    }
+
+    /// Smallest variant whose batch ≥ `n` (the dynamic batcher's pick),
+    /// else the largest available.
+    pub fn variant_for_batch(&self, n: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.batch >= n)
+            .min_by_key(|v| v.batch)
+            .or_else(|| self.variants.iter().max_by_key(|v| v.batch))
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+}
+
+fn parse_variant(v: &Json) -> Result<Variant, String> {
+    let get_u = |k: &str| v.get(k).and_then(Json::as_u64).ok_or(format!("variant missing {k}"));
+    Ok(Variant {
+        name: v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("variant missing name")?
+            .to_string(),
+        file: v
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or("variant missing file")?
+            .to_string(),
+        batch: get_u("batch")? as usize,
+        seq: get_u("seq")? as usize,
+        vocab: get_u("vocab")? as usize,
+        flops_fwd: get_u("flops_fwd")?,
+        vmem_attn_bytes: get_u("vmem_attn_bytes").unwrap_or(0),
+        vmem_mlp_bytes: get_u("vmem_mlp_bytes").unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "seed": 0, "dtype": "float32",
+      "variants": [
+        {"name":"model_b1","file":"model_b1.hlo.txt","batch":1,"seq":64,"vocab":256,
+         "flops_fwd":58700000,"vmem_attn_bytes":100000,"vmem_mlp_bytes":200000,
+         "input":{"shape":[1,64],"dtype":"i32"}},
+        {"name":"model_b8","file":"model_b8.hlo.txt","batch":8,"seq":64,"vocab":256,
+         "flops_fwd":469800000,"vmem_attn_bytes":100000,"vmem_mlp_bytes":200000,
+         "input":{"shape":[8,64],"dtype":"i32"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.variants[0].name, "model_b1");
+        assert_eq!(m.variants[1].batch, 8);
+    }
+
+    #[test]
+    fn variant_selection_for_batching() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.variant_for_batch(1).unwrap().batch, 1);
+        assert_eq!(m.variant_for_batch(2).unwrap().batch, 8);
+        assert_eq!(m.variant_for_batch(8).unwrap().batch, 8);
+        // over the largest: fall back to the largest (caller splits)
+        assert_eq!(m.variant_for_batch(100).unwrap().batch, 8);
+    }
+
+    #[test]
+    fn by_name() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert!(m.by_name("model_b8").is_some());
+        assert!(m.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // when `make artifacts` has run, validate the real file end-to-end
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(!m.variants.is_empty());
+            for v in &m.variants {
+                assert!(std::path::Path::new(&format!("artifacts/{}", v.file)).exists());
+                // VMEM estimates must fit a 16 MiB TPU core budget
+                assert!(v.vmem_attn_bytes < 16 << 20);
+                assert!(v.vmem_mlp_bytes < 16 << 20);
+            }
+        }
+    }
+}

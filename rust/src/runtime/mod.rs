@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them.
+//!
+//! `make artifacts` lowers the L2 serving model (python/compile) to **HLO
+//! text** (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
+//! protos; the text parser reassigns ids). This module loads every variant
+//! listed in `artifacts/manifest.json`, compiles each once on the PJRT CPU
+//! client, and serves execute calls from the coordinator's hot path —
+//! Python never runs at request time.
+
+pub mod manifest;
+pub mod executor;
+
+pub use executor::{Executor, ModelOutput};
+pub use manifest::{Manifest, Variant};

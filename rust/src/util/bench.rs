@@ -1,0 +1,257 @@
+//! Criterion-style micro/macro benchmark harness (criterion is unavailable
+//! offline). Warms up, runs timed iterations until the mean converges or an
+//! iteration budget is hit, and reports mean/p50/p99 plus derived throughput.
+//!
+//! The `[[bench]]` targets in Cargo.toml use `harness = false` and call
+//! [`Bencher`] from `main`, so `cargo bench` runs these directly.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{Histogram, Summary};
+
+/// One benchmark result row.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    /// Optional user-supplied scalar (e.g. simulated Gb/s) reported alongside.
+    pub metric: Option<(String, f64)>,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        let metric = match &self.metric {
+            Some((name, v)) => format!("  {name}={v:.3}"),
+            None => String::new(),
+        };
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}{}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns as f64),
+            fmt_ns(self.p99_ns as f64),
+            metric
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub max_time: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    /// Convergence: stop when the relative stderr of the mean drops below this.
+    pub target_rse: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            max_time: Duration::from_secs(3),
+            min_iters: 10,
+            max_iters: 1_000_000,
+            target_rse: 0.01,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode harness for CI (`RDMAVISOR_BENCH_QUICK=1`): tighter budgets.
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if std::env::var("RDMAVISOR_BENCH_QUICK").is_ok() {
+            b.warmup = Duration::from_millis(20);
+            b.max_time = Duration::from_millis(300);
+            b.min_iters = 3;
+        }
+        b
+    }
+
+    /// Time `f` repeatedly; each call is one iteration.
+    pub fn bench<F: FnMut() -> R, R>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Timed.
+        let mut sum = Summary::new();
+        let mut hist = Histogram::new();
+        let t0 = Instant::now();
+        let mut iters = 0;
+        while iters < self.max_iters {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            let ns = s.elapsed().as_nanos() as u64;
+            sum.add(ns as f64);
+            hist.record(ns);
+            iters += 1;
+            if iters >= self.min_iters
+                && (t0.elapsed() > self.max_time || sum.rel_stderr() < self.target_rse)
+            {
+                break;
+            }
+        }
+        self.push(BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: sum.mean(),
+            p50_ns: hist.p50(),
+            p99_ns: hist.p99(),
+            min_ns: hist.min(),
+            max_ns: hist.max(),
+            metric: None,
+        })
+    }
+
+    /// Benchmark where `f` returns a user metric to aggregate (mean).
+    pub fn bench_with_metric<F>(&mut self, name: &str, metric_name: &str, mut f: F) -> &BenchResult
+    where
+        F: FnMut() -> f64,
+    {
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut sum = Summary::new();
+        let mut hist = Histogram::new();
+        let mut msum = Summary::new();
+        let t0 = Instant::now();
+        let mut iters = 0;
+        while iters < self.max_iters {
+            let s = Instant::now();
+            let m = f();
+            let ns = s.elapsed().as_nanos() as u64;
+            msum.add(m);
+            sum.add(ns as f64);
+            hist.record(ns);
+            iters += 1;
+            if iters >= self.min_iters && t0.elapsed() > self.max_time {
+                break;
+            }
+        }
+        let metric = Some((metric_name.to_string(), msum.mean()));
+        self.push(BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: sum.mean(),
+            p50_ns: hist.p50(),
+            p99_ns: hist.p99(),
+            min_ns: hist.min(),
+            max_ns: hist.max(),
+            metric,
+        })
+    }
+
+    fn push(&mut self, r: BenchResult) -> &BenchResult {
+        r.print();
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write all rows as TSV (consumed by EXPERIMENTS.md tables).
+    pub fn write_tsv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name\titers\tmean_ns\tp50_ns\tp99_ns\tmin_ns\tmax_ns\tmetric")?;
+        for r in &self.results {
+            let metric = r
+                .metric
+                .as_ref()
+                .map(|(k, v)| format!("{k}={v}"))
+                .unwrap_or_default();
+            writeln!(
+                f,
+                "{}\t{}\t{:.1}\t{}\t{}\t{}\t{}\t{}",
+                r.name, r.iters, r.mean_ns, r.p50_ns, r.p99_ns, r.min_ns, r.max_ns, metric
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            max_time: Duration::from_millis(30),
+            min_iters: 5,
+            ..Default::default()
+        };
+        let r = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn metric_aggregated() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            max_time: Duration::from_millis(10),
+            min_iters: 3,
+            ..Default::default()
+        };
+        let r = b.bench_with_metric("m", "gbps", || 37.5);
+        let (name, v) = r.metric.clone().unwrap();
+        assert_eq!(name, "gbps");
+        assert!((v - 37.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tsv_written() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            max_time: Duration::from_millis(5),
+            min_iters: 2,
+            ..Default::default()
+        };
+        b.bench("x", || 1);
+        let path = std::env::temp_dir().join("rdmavisor_bench_test.tsv");
+        b.write_tsv(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("name\t"));
+        assert!(body.contains('x'));
+    }
+}

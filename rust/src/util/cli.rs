@@ -1,0 +1,161 @@
+//! Minimal argv parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Typed getters parse on demand and report friendly errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse, treating the first non-option token as the subcommand.
+    pub fn parse_with_subcommand(argv: &[String]) -> Args {
+        Self::parse_inner(argv, true)
+    }
+
+    /// Parse with no subcommand concept.
+    pub fn parse(argv: &[String]) -> Args {
+        Self::parse_inner(argv, false)
+    }
+
+    fn parse_inner(argv: &[String], want_sub: bool) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options
+                        .entry(body.to_string())
+                        .or_default()
+                        .push(argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if want_sub && out.subcommand.is_none() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.parse_or(name, default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.parse_or(name, default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.parse_or(name, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("warning: --{name}={s} not parseable; using default");
+                std::process::exit(2)
+            }),
+        }
+    }
+
+    /// Parse a comma-separated list of integers, e.g. `--sizes 64,4096,65536`.
+    pub fn u64_list(&self, name: &str, default: &[u64]) -> Vec<u64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| t.trim().parse().expect("bad integer list"))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        // note the documented ambiguity rule: `--key tok` binds tok as the
+        // value of key, so positionals go before flag-style options.
+        let a = Args::parse_with_subcommand(&argv("bench out.csv --conns 100 --verbose"));
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.u64_or("conns", 1), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&argv("--size=4096 --name=x"));
+        assert_eq!(a.u64_or("size", 0), 4096);
+        assert_eq!(a.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn last_value_wins() {
+        let a = Args::parse(&argv("--n 1 --n 2"));
+        assert_eq!(a.u64_or("n", 0), 2);
+        assert_eq!(a.get_all("n"), vec!["1", "2"]);
+    }
+
+    #[test]
+    fn integer_list() {
+        let a = Args::parse(&argv("--sizes 64,128,4096"));
+        assert_eq!(a.u64_list("sizes", &[1]), vec![64, 128, 4096]);
+        assert_eq!(a.u64_list("other", &[7]), vec![7]);
+    }
+
+    #[test]
+    fn defaults_when_absent() {
+        let a = Args::parse(&argv(""));
+        assert_eq!(a.u64_or("x", 9), 9);
+        assert_eq!(a.str_or("s", "d"), "d");
+        assert!(!a.flag("v"));
+    }
+
+    #[test]
+    fn trailing_flag_no_value() {
+        let a = Args::parse(&argv("--verbose"));
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Home-grown substrates.
+//!
+//! The build environment has no crates.io access beyond the `xla` crate's
+//! dependency closure, so the usual ecosystem crates (clap, criterion,
+//! proptest, serde, rand) are unavailable. Per the reproduction's
+//! build-everything rule these modules implement the required functionality
+//! from scratch; each is small, tested, and used across the crate.
+
+pub mod rng;
+pub mod stats;
+pub mod cli;
+pub mod bench;
+pub mod prop;
+pub mod tomlmini;
+pub mod jsonmini;
+pub mod logging;

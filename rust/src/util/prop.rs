@@ -1,0 +1,201 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! A property runs against `cases` random inputs drawn from a generator; on
+//! failure the harness greedily *shrinks* the failing input via the
+//! generator's `shrink` candidates and reports the minimal reproducer plus
+//! the seed that regenerates it.
+
+use super::rng::Rng;
+
+/// A generator of values of type `T` with shrinking.
+pub trait Gen<T> {
+    fn gen(&self, rng: &mut Rng) -> T;
+    /// Candidate smaller values; default: no shrinking.
+    fn shrink(&self, _value: &T) -> Vec<T> {
+        Vec::new()
+    }
+}
+
+/// Uniform u64 in [lo, hi].
+pub struct U64Range(pub u64, pub u64);
+
+impl Gen<u64> for U64Range {
+    fn gen(&self, rng: &mut Rng) -> u64 {
+        let span = self.1.wrapping_sub(self.0).wrapping_add(1);
+        if span == 0 {
+            // full-u64 range: every value is valid
+            return rng.next_u64();
+        }
+        self.0 + rng.gen_range(span)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            let span = *v - self.0;
+            // binary-style descent candidates: lo, then successive
+            // fractions of the way back toward v, then v-1
+            out.push(self.0);
+            out.push(self.0 + span / 2);
+            out.push(self.0 + span * 3 / 4);
+            out.push(self.0 + span * 7 / 8);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen<usize> for UsizeRange {
+    fn gen(&self, rng: &mut Rng) -> usize {
+        U64Range(self.0 as u64, self.1 as u64).gen(rng) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        U64Range(self.0 as u64, self.1 as u64)
+            .shrink(&(*v as u64))
+            .into_iter()
+            .map(|x| x as usize)
+            .collect()
+    }
+}
+
+/// Vec of T with length in [min_len, max_len].
+pub struct VecGen<G> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecGen<G> {
+    fn gen(&self, rng: &mut Rng) -> Vec<T> {
+        let len = UsizeRange(self.min_len, self.max_len).gen(rng);
+        (0..len).map(|_| self.elem.gen(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // drop back half, drop one element
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            let mut one_less = v.clone();
+            one_less.pop();
+            out.push(one_less);
+        }
+        // shrink each element (first few positions only to bound work)
+        for i in 0..v.len().min(4) {
+            for cand in self.elem.shrink(&v[i]) {
+                let mut w = v.clone();
+                w[i] = cand;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Result of a property run.
+pub struct PropReport<T> {
+    pub cases: usize,
+    pub failure: Option<(T, String, u64)>, // minimal input, message, seed
+}
+
+/// Run `prop` against `cases` random values from `gen`. Panics with the
+/// minimal failing input (property-test style) unless `soft` reporting is
+/// used via [`check_report`].
+pub fn check<T, G, F>(seed: u64, cases: usize, gen: &G, prop: F)
+where
+    T: Clone + std::fmt::Debug,
+    G: Gen<T>,
+    F: Fn(&T) -> Result<(), String>,
+{
+    if let Some((min, msg, s)) = check_report(seed, cases, gen, &prop).failure {
+        panic!("property failed (seed={s}): {msg}\nminimal input: {min:?}");
+    }
+}
+
+/// Like [`check`] but returns the report instead of panicking.
+pub fn check_report<T, G, F>(seed: u64, cases: usize, gen: &G, prop: &F) -> PropReport<T>
+where
+    T: Clone + std::fmt::Debug,
+    G: Gen<T>,
+    F: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min, msg) = shrink_loop(gen, prop, input, msg);
+            return PropReport { cases: case + 1, failure: Some((min, msg, seed)) };
+        }
+    }
+    PropReport { cases, failure: None }
+}
+
+fn shrink_loop<T, G, F>(gen: &G, prop: &F, mut cur: T, mut msg: String) -> (T, String)
+where
+    T: Clone + std::fmt::Debug,
+    G: Gen<T>,
+    F: Fn(&T) -> Result<(), String>,
+{
+    // Greedy descent, bounded to avoid pathological generators.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in gen.shrink(&cur) {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (cur, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, &U64Range(0, 1000), |&x| {
+            if x <= 1000 { Ok(()) } else { Err("out of range".into()) }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let report = check_report(2, 500, &U64Range(0, 1000), &|&x: &u64| {
+            if x < 500 { Ok(()) } else { Err(format!("{x} >= 500")) }
+        });
+        let (min, _, _) = report.failure.expect("should fail");
+        // greedy shrink should land on or near the boundary
+        assert!(min >= 500 && min <= 520, "min={min}");
+    }
+
+    #[test]
+    fn vec_gen_respects_len_bounds() {
+        let g = VecGen { elem: U64Range(0, 9), min_len: 2, max_len: 5 };
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = g.gen(&mut rng);
+            assert!((2..=5).contains(&v.len()));
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let r1 = check_report(7, 50, &U64Range(0, 100), &|&x: &u64| {
+            if x != 73 { Ok(()) } else { Err("hit".into()) }
+        });
+        let r2 = check_report(7, 50, &U64Range(0, 100), &|&x: &u64| {
+            if x != 73 { Ok(()) } else { Err("hit".into()) }
+        });
+        assert_eq!(r1.failure.is_some(), r2.failure.is_some());
+    }
+}

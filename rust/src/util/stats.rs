@@ -1,0 +1,231 @@
+//! Statistics: streaming summaries and HDR-style latency histograms.
+
+/// Streaming mean/variance (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 { self.n }
+    pub fn mean(&self) -> f64 { self.mean }
+    pub fn min(&self) -> f64 { if self.n == 0 { 0.0 } else { self.min } }
+    pub fn max(&self) -> f64 { if self.n == 0 { 0.0 } else { self.max } }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn stddev(&self) -> f64 { self.variance().sqrt() }
+
+    /// Relative standard error of the mean — bench convergence criterion.
+    pub fn rel_stderr(&self) -> f64 {
+        if self.n < 2 || self.mean == 0.0 { return f64::INFINITY; }
+        (self.stddev() / (self.n as f64).sqrt()) / self.mean.abs()
+    }
+}
+
+/// Log-bucketed histogram: 64 major (power-of-two) × `SUB` minor buckets,
+/// ~1.6% relative error — an HdrHistogram work-alike for latency percentiles.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    total: u128,
+    min: u64,
+    max: u64,
+}
+
+const SUB_BITS: u32 = 5; // 32 sub-buckets per power of two
+const SUB: usize = 1 << SUB_BITS;
+
+impl Default for Histogram {
+    fn default() -> Self { Self::new() }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { buckets: vec![0; 64 * SUB], count: 0, total: 0, min: u64::MAX, max: 0 }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let exp = 63 - v.leading_zeros(); // floor(log2 v) >= SUB_BITS
+        let sub = (v >> (exp - SUB_BITS)) as usize & (SUB - 1);
+        ((exp - SUB_BITS + 1) as usize) * SUB + sub
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.total += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 { self.count }
+    pub fn min(&self) -> u64 { if self.count == 0 { 0 } else { self.min } }
+    pub fn max(&self) -> u64 { self.max }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.total as f64 / self.count as f64 }
+    }
+
+    /// Approximate value at quantile `q ∈ [0,1]` (returns bucket lower bound).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 { return 0; }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::lower_bound(i);
+            }
+        }
+        self.max
+    }
+
+    fn lower_bound(idx: usize) -> u64 {
+        let major = idx / SUB;
+        let minor = (idx % SUB) as u64;
+        if major == 0 {
+            return minor;
+        }
+        let exp = major as u32 + SUB_BITS - 1;
+        (1u64 << exp) | (minor << (exp - SUB_BITS))
+    }
+
+    pub fn p50(&self) -> u64 { self.quantile(0.50) }
+    pub fn p90(&self) -> u64 { self.quantile(0.90) }
+    pub fn p99(&self) -> u64 { self.quantile(0.99) }
+    pub fn p999(&self) -> u64 { self.quantile(0.999) }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-window throughput accumulator (events and bytes per window).
+#[derive(Clone, Debug, Default)]
+pub struct Throughput {
+    pub events: u64,
+    pub bytes: u64,
+}
+
+impl Throughput {
+    pub fn add(&mut self, bytes: u64) {
+        self.events += 1;
+        self.bytes += bytes;
+    }
+
+    /// Gb/s given an elapsed time in nanoseconds.
+    pub fn gbps(&self, elapsed_ns: u64) -> f64 {
+        if elapsed_ns == 0 { return 0.0; }
+        (self.bytes as f64 * 8.0) / elapsed_ns as f64
+    }
+
+    /// Million events per second.
+    pub fn mops(&self, elapsed_ns: u64) -> f64 {
+        if elapsed_ns == 0 { return 0.0; }
+        self.events as f64 * 1e3 / elapsed_ns as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_mean_var() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-9);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn histogram_exact_small_values() {
+        let mut h = Histogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 31);
+        assert_eq!(h.count(), 32);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        let (p50, p90, p99) = (h.p50(), h.p90(), h.p99());
+        assert!(p50 <= p90 && p90 <= p99);
+        // ~2% relative error bound on the log buckets
+        assert!((p50 as f64 - 50_000.0).abs() / 50_000.0 < 0.05, "p50={p50}");
+        assert!((p99 as f64 - 99_000.0).abs() / 99_000.0 < 0.05, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for v in 1..1000u64 {
+            if v % 2 == 0 { a.record(v) } else { b.record(v) }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.p50(), c.p50());
+        assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut t = Throughput::default();
+        t.add(125_000_000); // 1 Gbit
+        assert!((t.gbps(1_000_000_000) - 1.0).abs() < 1e-9);
+        // 1 event in 1 µs = 1 M events/s
+        assert!((t.mops(1_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_edges() {
+        let mut h = Histogram::new();
+        h.record(500);
+        assert_eq!(h.quantile(0.0), h.quantile(1.0));
+        assert_eq!(h.count(), 1);
+    }
+}

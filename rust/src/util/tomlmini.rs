@@ -1,0 +1,222 @@
+//! Minimal TOML-subset parser for experiment/cluster config files.
+//!
+//! Supports: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / flat-array values, `#` comments.
+//! Keys are flattened to `section.sub.key` in one map — enough for our
+//! config surface, with precise error lines for anything unsupported.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    map: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Parse a TOML-subset document. Errors carry the 1-based line number.
+pub fn parse(input: &str) -> Result<Table, String> {
+    let mut table = Table::default();
+    let mut prefix = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(body) = line.strip_prefix('[') {
+            let name = body
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            prefix = format!("{name}.");
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = format!("{prefix}{}", k.trim());
+        let value = parse_value(v.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        table.map.insert(key, value);
+    }
+    Ok(table)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: no '#' inside our string values
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(tok: &str) -> Result<Value, String> {
+    if tok.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = tok.strip_prefix('"') {
+        let inner = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if tok == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = tok.strip_prefix('[') {
+        let inner = body.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|t| parse_value(t.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    let clean = tok.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("unparseable value: {tok}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let t = parse("a = 1\nb = \"x\"\nc = 2.5\nd = true\n").unwrap();
+        assert_eq!(t.int_or("a", 0), 1);
+        assert_eq!(t.str_or("b", ""), "x");
+        assert!((t.float_or("c", 0.0) - 2.5).abs() < 1e-12);
+        assert!(t.bool_or("d", false));
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let t = parse("[nic]\ncache = 400\n[link.a]\nrate = 40\n").unwrap();
+        assert_eq!(t.int_or("nic.cache", 0), 400);
+        assert_eq!(t.int_or("link.a.rate", 0), 40);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let t = parse("# header\n\na = 1  # trailing\n").unwrap();
+        assert_eq!(t.int_or("a", 0), 1);
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse("sizes = [64, 4096, 65536]\n").unwrap();
+        let arr = t.get("sizes").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_int(), Some(65536));
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let t = parse("n = 1_000_000\n").unwrap();
+        assert_eq!(t.int_or("n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn error_lines_reported() {
+        let err = parse("a = 1\nbogus line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(t.str_or("s", ""), "a#b");
+    }
+}

@@ -1,0 +1,207 @@
+//! Seeded workload generators: offsets, sizes, arrivals, traces.
+
+use crate::fabric::time::Ns;
+use crate::util::rng::{Rng, Zipf};
+
+/// Access-pattern generator for remote offsets within a buffer.
+#[derive(Clone, Debug)]
+pub enum OffsetGen {
+    /// Uniform random block-aligned offsets (the paper's "randomly read").
+    Uniform { region: u64, align: u64 },
+    /// Zipf-distributed block popularity (KV-style skew).
+    Zipf { region: u64, align: u64, dist: Zipf },
+    /// Pure sequential streaming.
+    Sequential { region: u64, align: u64, cursor: u64 },
+}
+
+impl OffsetGen {
+    pub fn uniform(region: u64, align: u64) -> OffsetGen {
+        OffsetGen::Uniform { region, align }
+    }
+
+    pub fn zipf(region: u64, align: u64, theta: f64) -> OffsetGen {
+        let blocks = (region / align).max(1);
+        OffsetGen::Zipf { region, align, dist: Zipf::new(blocks, theta) }
+    }
+
+    pub fn sequential(region: u64, align: u64) -> OffsetGen {
+        OffsetGen::Sequential { region, align, cursor: 0 }
+    }
+
+    pub fn next(&mut self, rng: &mut Rng, len: u64) -> u64 {
+        match self {
+            OffsetGen::Uniform { region, align } => {
+                let blocks = ((*region - len.min(*region)) / *align).max(1);
+                rng.gen_range(blocks) * *align
+            }
+            OffsetGen::Zipf { region, align, dist } => {
+                let off = dist.sample(rng) * *align;
+                off.min(region.saturating_sub(len))
+            }
+            OffsetGen::Sequential { region, align, cursor } => {
+                let off = *cursor;
+                *cursor = (*cursor + *align) % region.saturating_sub(len).max(1);
+                off
+            }
+        }
+    }
+}
+
+/// Message-size distribution.
+#[derive(Clone, Debug)]
+pub enum SizeGen {
+    Fixed(u64),
+    /// Log-uniform between lo and hi (heavy small-message tail).
+    LogUniform { lo: u64, hi: u64 },
+    /// Bimodal: small with probability p, else large (RPC req/resp shape).
+    Bimodal { small: u64, large: u64, p_small: f64 },
+}
+
+impl SizeGen {
+    pub fn next(&self, rng: &mut Rng) -> u64 {
+        match self {
+            SizeGen::Fixed(n) => *n,
+            SizeGen::LogUniform { lo, hi } => {
+                let (l, h) = ((*lo as f64).ln(), (*hi as f64).ln());
+                (l + rng.f64() * (h - l)).exp() as u64
+            }
+            SizeGen::Bimodal { small, large, p_small } => {
+                if rng.chance(*p_small) {
+                    *small
+                } else {
+                    *large
+                }
+            }
+        }
+    }
+}
+
+/// Open-loop Poisson arrivals.
+#[derive(Clone, Debug)]
+pub struct Arrivals {
+    mean_gap_ns: f64,
+    next_at: Ns,
+}
+
+impl Arrivals {
+    pub fn poisson(rate_per_sec: f64) -> Arrivals {
+        Arrivals { mean_gap_ns: 1e9 / rate_per_sec, next_at: Ns::ZERO }
+    }
+
+    /// Next arrival at or after `now`.
+    pub fn next(&mut self, rng: &mut Rng, now: Ns) -> Ns {
+        let gap = rng.exp(self.mean_gap_ns) as u64;
+        self.next_at = Ns(self.next_at.0.max(now.0) + gap);
+        self.next_at
+    }
+}
+
+/// A recorded operation for trace replay.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceOp {
+    pub at: Ns,
+    pub conn: u32,
+    pub len: u64,
+    pub offset: u64,
+}
+
+/// Fixed-capacity trace recorder (ring, keeps the tail).
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+    cap: usize,
+}
+
+impl Trace {
+    pub fn with_capacity(cap: usize) -> Trace {
+        Trace { ops: Vec::with_capacity(cap.min(1 << 20)), cap }
+    }
+
+    pub fn record(&mut self, op: TraceOp) {
+        if self.ops.len() < self.cap {
+            self.ops.push(op);
+        }
+    }
+
+    /// Serialize as TSV for offline analysis.
+    pub fn to_tsv(&self) -> String {
+        let mut s = String::from("at_ns\tconn\tlen\toffset\n");
+        for op in &self.ops {
+            s.push_str(&format!("{}\t{}\t{}\t{}\n", op.at.0, op.conn, op.len, op.offset));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_offsets_block_aligned_in_range() {
+        let mut g = OffsetGen::uniform(1 << 20, 4096);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let off = g.next(&mut rng, 64 << 10);
+            assert_eq!(off % 4096, 0);
+            assert!(off + (64 << 10) <= 1 << 20);
+        }
+    }
+
+    #[test]
+    fn zipf_offsets_skewed() {
+        let mut g = OffsetGen::zipf(1 << 20, 4096, 0.99);
+        let mut rng = Rng::new(2);
+        let mut first_block = 0;
+        for _ in 0..1000 {
+            if g.next(&mut rng, 4096) == 0 {
+                first_block += 1;
+            }
+        }
+        assert!(first_block > 50, "zipf head should repeat: {first_block}");
+    }
+
+    #[test]
+    fn sequential_wraps() {
+        let mut g = OffsetGen::sequential(16 << 10, 4096);
+        let mut rng = Rng::new(3);
+        let offs: Vec<u64> = (0..4).map(|_| g.next(&mut rng, 4096)).collect();
+        assert_eq!(offs, vec![0, 4096, 8192, 0]);
+    }
+
+    #[test]
+    fn size_generators_in_bounds() {
+        let mut rng = Rng::new(4);
+        let lu = SizeGen::LogUniform { lo: 64, hi: 65536 };
+        for _ in 0..1000 {
+            let s = lu.next(&mut rng);
+            assert!((64..=65536).contains(&s), "{s}");
+        }
+        let bi = SizeGen::Bimodal { small: 128, large: 1 << 20, p_small: 0.9 };
+        let smalls = (0..1000).filter(|_| bi.next(&mut rng) == 128).count();
+        assert!(smalls > 800);
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let mut a = Arrivals::poisson(1_000_000.0);
+        let mut rng = Rng::new(5);
+        let mut last = Ns::ZERO;
+        for _ in 0..100 {
+            let t = a.next(&mut rng, last);
+            assert!(t >= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn trace_records_and_serializes() {
+        let mut t = Trace::with_capacity(2);
+        t.record(TraceOp { at: Ns(1), conn: 2, len: 3, offset: 4 });
+        t.record(TraceOp { at: Ns(5), conn: 6, len: 7, offset: 8 });
+        t.record(TraceOp { at: Ns(9), conn: 0, len: 0, offset: 0 }); // dropped
+        assert_eq!(t.ops.len(), 2);
+        let tsv = t.to_tsv();
+        assert!(tsv.contains("1\t2\t3\t4"));
+    }
+}

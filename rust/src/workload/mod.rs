@@ -1,0 +1,11 @@
+//! Workload generation and the evaluation scenario drivers.
+//!
+//! * [`generator`] — seeded offset/size/key generators (uniform + zipf),
+//!   open-loop arrival processes, trace recording/replay.
+//! * [`scenarios`] — the paper's evaluation workloads as closed-loop
+//!   drivers over the simulator: random READ fan-out for naive / locked /
+//!   RaaS clients (Figs 5 & 6), the verbs-level size sweep (Fig 1), and
+//!   the per-application resource scenario (Figs 7 & 8).
+
+pub mod generator;
+pub mod scenarios;

@@ -1,0 +1,520 @@
+//! The paper's evaluation workloads as deterministic closed-loop drivers.
+//!
+//! Testbed shape mirrors §3: a 4-node cluster (24 cores, 40 Gb NICs); one
+//! node hosts the client stack under test and "randomly reads 64 KB data
+//! from other machines". Each driver returns a [`RunStats`] row; the
+//! figure harnesses sweep parameters and print the paper-shaped series.
+
+use crate::baselines::locked::LockedSystem;
+use crate::baselines::naive::NaiveSystem;
+use crate::fabric::sim::{FabricConfig, Notification, Sim};
+use crate::fabric::time::{gbps, Ns};
+use crate::fabric::types::NodeId;
+use crate::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery};
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+
+use super::generator::OffsetGen;
+
+/// Common scenario parameters.
+#[derive(Clone, Debug)]
+pub struct ScenarioCfg {
+    /// Logical connections (or worker threads) on the client machine.
+    pub conns: usize,
+    /// Applications the connections are divided among.
+    pub apps: u32,
+    pub msg_bytes: u64,
+    /// Outstanding ops per connection (closed loop window).
+    pub window: u32,
+    /// Virtual run length.
+    pub duration: Ns,
+    /// Fraction of the run treated as warmup (excluded from stats).
+    pub warmup_frac: f64,
+    pub seed: u64,
+    pub fabric: FabricConfig,
+}
+
+impl Default for ScenarioCfg {
+    fn default() -> Self {
+        let mut fabric = FabricConfig::default();
+        fabric.sq_depth = 8192; // shared QPs carry many conns' WRs
+        ScenarioCfg {
+            conns: 100,
+            apps: 1,
+            msg_bytes: 64 << 10,
+            window: 1,
+            duration: Ns::from_ms(20),
+            warmup_frac: 0.25,
+            seed: 42,
+            fabric,
+        }
+    }
+}
+
+/// One measured run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunStats {
+    pub gbps: f64,
+    pub mops: f64,
+    pub ops: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mem_bytes: u64,
+    pub cpu_cores: f64,
+    /// Client-NIC ICM cache hit rate over the measured window.
+    pub cache_hit_rate: f64,
+    /// Lock wait (locked baseline only).
+    pub lock_wait_ms: f64,
+}
+
+fn servers(cfg: &ScenarioCfg) -> Vec<NodeId> {
+    (1..cfg.fabric.nodes as u32).map(NodeId).collect()
+}
+
+/// Measurement window bookkeeping shared by the drivers.
+struct Window {
+    warmup_end: Ns,
+    started: bool,
+    bytes0: u64,
+    ops0: u64,
+    t0: Ns,
+    lat: Histogram,
+}
+
+impl Window {
+    fn new(cfg: &ScenarioCfg) -> Window {
+        Window {
+            warmup_end: Ns((cfg.duration.0 as f64 * cfg.warmup_frac) as u64),
+            started: false,
+            bytes0: 0,
+            ops0: 0,
+            t0: Ns::ZERO,
+            lat: Histogram::new(),
+        }
+    }
+
+    fn maybe_start(&mut self, sim: &Sim) {
+        if !self.started && sim.now() >= self.warmup_end {
+            self.started = true;
+            // measure wire-level delivered payload, not message completions
+            // (completions clump: a message's bytes cross the wire long
+            // before its CQE, which biases short windows)
+            self.bytes0 = sim.total_rx_data_bytes();
+            self.ops0 = sim.completed_msgs;
+            self.t0 = sim.now();
+        }
+    }
+
+    fn record_latency(&mut self, ns: u64) {
+        if self.started {
+            self.lat.record(ns);
+        }
+    }
+
+    fn finish(&self, sim: &Sim) -> (f64, f64, u64, f64, f64) {
+        let span = sim.now().saturating_sub(self.t0);
+        let bytes = sim.total_rx_data_bytes() - self.bytes0;
+        let ops = sim.completed_msgs - self.ops0;
+        (
+            gbps(bytes, span),
+            if span.0 == 0 { 0.0 } else { ops as f64 * 1e3 / span.0 as f64 },
+            ops,
+            self.lat.p50() as f64 / 1e3,
+            self.lat.p99() as f64 / 1e3,
+        )
+    }
+}
+
+/// Fig 5 (naive series): one QP per connection, random 64 KB READs.
+pub fn naive_random_read(cfg: &ScenarioCfg) -> RunStats {
+    let mut sim = Sim::new(cfg.fabric.clone());
+    let srv = servers(cfg);
+    let conns_per_app = (cfg.conns as u32).div_ceil(cfg.apps);
+    let mut sys = NaiveSystem::setup(
+        &mut sim,
+        NodeId(0),
+        &srv,
+        cfg.apps,
+        conns_per_app,
+        (cfg.msg_bytes * 4).max(256 << 10),
+    );
+    let n = sys.conns.len().min(cfg.conns);
+    let mut rng = Rng::new(cfg.seed);
+    let mut offgen = OffsetGen::uniform((cfg.msg_bytes * 3).max(256 << 10), 4096);
+    let mut posted_at: Vec<Ns> = vec![Ns::ZERO; n];
+    let mut win = Window::new(cfg);
+
+    for i in 0..n {
+        for _ in 0..cfg.window {
+            let off = offgen.next(&mut rng, cfg.msg_bytes);
+            posted_at[i] = sim.now();
+            sys.post_read(&mut sim, i, cfg.msg_bytes, off);
+        }
+    }
+    // reset cache stats after connection churn
+    sim.node_mut(NodeId(0)).cache.reset_stats();
+
+    while sim.now() < cfg.duration {
+        win.maybe_start(&sim);
+        let Some(notes) = sim.step() else { break };
+        let mut any_cqe = false;
+        for note in notes {
+            if matches!(note, Notification::CqeReady { node, .. } if node == NodeId(0)) {
+                any_cqe = true;
+            }
+        }
+        if any_cqe {
+            for idx in sys.poll(&mut sim) {
+                win.record_latency(sim.now().saturating_sub(posted_at[idx]).0);
+                let off = offgen.next(&mut rng, cfg.msg_bytes);
+                posted_at[idx] = sim.now();
+                sys.post_read(&mut sim, idx, cfg.msg_bytes, off);
+            }
+        }
+    }
+
+    let (gbps, mops, ops, p50, p99) = win.finish(&sim);
+    RunStats {
+        gbps,
+        mops,
+        ops,
+        p50_us: p50,
+        p99_us: p99,
+        mem_bytes: sys.client_mem_bytes(&sim),
+        cpu_cores: sys.client_cpu_cores(&sim),
+        cache_hit_rate: sim.node(NodeId(0)).cache.hit_rate(),
+        lock_wait_ms: 0.0,
+    }
+}
+
+/// Fig 5/6 (RaaS series) + Figs 7/8 (RaaS resource scaling): shared QPs,
+/// lock-free vQPN demux, WR batching.
+pub fn raas_random_read(cfg: &ScenarioCfg) -> RunStats {
+    raas_random_read_with_daemon(cfg, DaemonConfig::default())
+}
+
+/// RaaS run with a custom daemon config (ablation entry point).
+pub fn raas_random_read_with_daemon(cfg: &ScenarioCfg, dcfg: DaemonConfig) -> RunStats {
+    let mut sim = Sim::new(cfg.fabric.clone());
+    let n_nodes = cfg.fabric.nodes;
+    let mut daemons: Vec<Daemon> = (0..n_nodes)
+        .map(|i| Daemon::start(&mut sim, NodeId(i as u32), dcfg.clone()))
+        .collect();
+
+    // server side: one service app listening per server daemon
+    for d in daemons.iter_mut().skip(1) {
+        let app = d.register_app();
+        d.listen(app, 7000);
+    }
+    // client side: apps with conns spread across servers
+    let mut client_apps = Vec::new();
+    for _ in 0..cfg.apps {
+        client_apps.push(daemons[0].register_app());
+    }
+    let mut conns = Vec::new();
+    for i in 0..cfg.conns {
+        let app = client_apps[i % client_apps.len()];
+        let server = 1 + (i % (n_nodes - 1));
+        let c = connect_via(&mut sim, &mut daemons, 0, app, server, 7000).unwrap();
+        conns.push((c, app));
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut offgen = OffsetGen::uniform(64 << 20, 4096);
+    let mut posted_at: std::collections::HashMap<u32, (Ns, usize)> = std::collections::HashMap::new();
+    let mut win = Window::new(cfg);
+
+    for (i, (c, _)) in conns.iter().enumerate() {
+        for _ in 0..cfg.window {
+            let off = offgen.next(&mut rng, cfg.msg_bytes);
+            daemons[0].read(&mut sim, *c, cfg.msg_bytes, off, i as u64).unwrap();
+            posted_at.insert(c.0, (sim.now(), i));
+        }
+    }
+    daemons[0].pump(&mut sim);
+    sim.node_mut(NodeId(0)).cache.reset_stats();
+
+    while sim.now() < cfg.duration {
+        win.maybe_start(&sim);
+        let Some(notes) = sim.step() else { break };
+        let client_cqe = notes.iter().any(
+            |n| matches!(n, Notification::CqeReady { node, .. } if *node == NodeId(0)),
+        );
+        if client_cqe {
+            daemons[0].pump(&mut sim);
+            // drain app inboxes and re-post (closed loop)
+            for &app in &client_apps {
+                while let Some(d) = daemons[0].recv_zero_copy(&mut sim, app) {
+                    if let Delivery::OpComplete { conn, .. } = d {
+                        if let Some((t, _i)) = posted_at.get(&conn.0) {
+                            win.record_latency(sim.now().saturating_sub(*t).0);
+                        }
+                        let off = offgen.next(&mut rng, cfg.msg_bytes);
+                        let _ = daemons[0].read(&mut sim, conn, cfg.msg_bytes, off, 0);
+                        posted_at.insert(conn.0, (sim.now(), 0));
+                    }
+                }
+            }
+            daemons[0].pump(&mut sim);
+        }
+    }
+
+    let (gbps, mops, ops, p50, p99) = win.finish(&sim);
+    let snap = daemons[0].snapshot(&sim);
+    RunStats {
+        gbps,
+        mops,
+        ops,
+        p50_us: p50,
+        p99_us: p99,
+        mem_bytes: snap.mem_bytes,
+        cpu_cores: snap.cpu_cores,
+        cache_hit_rate: sim.node(NodeId(0)).cache.hit_rate(),
+        lock_wait_ms: 0.0,
+    }
+}
+
+/// Fig 6 (locked series): FaRM-style mutex-shared QPs, q threads per QP.
+pub fn locked_random_read(cfg: &ScenarioCfg, q: usize) -> RunStats {
+    let mut sim = Sim::new(cfg.fabric.clone());
+    let srv = servers(cfg);
+    let mut sys = LockedSystem::setup(
+        &mut sim,
+        NodeId(0),
+        &srv,
+        cfg.conns,
+        q,
+        (cfg.msg_bytes * 4).max(256 << 10),
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let mut offgen = OffsetGen::uniform((cfg.msg_bytes * 2).max(128 << 10), 4096);
+    let mut posted_at: Vec<Ns> = vec![Ns::ZERO; cfg.conns];
+    let mut win = Window::new(cfg);
+
+    // initial posts go through the lock protocol
+    for t in 0..cfg.conns {
+        for _ in 0..cfg.window {
+            let grant = sys.acquire_for_post(sim.now(), t);
+            sim.schedule(grant, t as u64);
+        }
+    }
+    sim.node_mut(NodeId(0)).cache.reset_stats();
+
+    while sim.now() < cfg.duration {
+        win.maybe_start(&sim);
+        let Some(notes) = sim.step() else { break };
+        for note in notes {
+            match note {
+                Notification::Timer { token } => {
+                    let t = token as usize;
+                    let off = offgen.next(&mut rng, cfg.msg_bytes);
+                    posted_at[t] = sim.now();
+                    sys.post_read_at(&mut sim, t, cfg.msg_bytes, off);
+                }
+                Notification::CqeReady { node, .. } if node == NodeId(0) => {
+                    for t in sys.poll(&mut sim) {
+                        win.record_latency(sim.now().saturating_sub(posted_at[t]).0);
+                        let grant = sys.acquire_for_post(sim.now(), t);
+                        sim.schedule(grant, t as u64);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let (gbps, mops, ops, p50, p99) = win.finish(&sim);
+    RunStats {
+        gbps,
+        mops,
+        ops,
+        p50_us: p50,
+        p99_us: p99,
+        mem_bytes: sim.node(NodeId(0)).fabric_mem_bytes()
+            + sim.node(NodeId(0)).mrs.registered_bytes,
+        cpu_cores: sim.node(NodeId(0)).cpu.cores_used(sim.now()),
+        cache_hit_rate: sim.node(NodeId(0)).cache.hit_rate(),
+        lock_wait_ms: sys.lock_wait_ns as f64 / 1e6,
+    }
+}
+
+/// Fig 1: verbs-level single-pair throughput sweep for one (transport,
+/// verb) combination at one message size.
+pub fn verbs_sweep_point(
+    transport: crate::fabric::types::QpTransport,
+    verb: crate::fabric::types::Verb,
+    msg_bytes: u64,
+    window: u32,
+    duration: Ns,
+) -> f64 {
+    use crate::fabric::mr::Access;
+    use crate::fabric::types::{QpTransport, Verb};
+    use crate::fabric::verbs as fv;
+    use crate::fabric::wqe::SendWr;
+
+    let mut fabric = FabricConfig::default();
+    fabric.max_outstanding = window as usize;
+    fabric.sq_depth = 4 * window as usize + 16;
+    let mut sim = Sim::new(fabric);
+    let cq0 = sim.create_cq(NodeId(0), 65_536);
+    let cq1 = sim.create_cq(NodeId(1), 65_536);
+
+    let local = sim.reg_mr(NodeId(0), 256 << 20, Access::REMOTE_RW, true);
+    let remote = sim.reg_mr(NodeId(1), 256 << 20, Access::REMOTE_RW, true);
+
+    let make_wr = |i: u64, qpn_is_ud: Option<(NodeId, crate::fabric::types::Qpn)>| -> SendWr {
+        let wr = match verb {
+            Verb::Read => SendWr::read(i, msg_bytes, local.key, local.addr, remote.key, remote.addr),
+            Verb::Write => SendWr::write(i, msg_bytes, local.key, local.addr, remote.key, remote.addr),
+            Verb::Send => SendWr::send(i, msg_bytes, local.key, local.addr, i as u32),
+        };
+        match qpn_is_ud {
+            Some((n, q)) => wr.to_ud(n, q),
+            None => wr,
+        }
+    };
+
+    let (qpn, ud_dest, recv_qpn) = if transport == QpTransport::Ud {
+        let ud0 = fv::create_ud(&mut sim, NodeId(0), cq0, cq0);
+        let ud1 = fv::create_ud(&mut sim, NodeId(1), cq1, cq1);
+        (ud0, Some((NodeId(1), ud1)), ud1)
+    } else {
+        let pair = fv::create_connected_pair(
+            &mut sim, transport, NodeId(0), NodeId(1), cq0, cq0, cq1, cq1,
+        );
+        (pair.a.1, None, pair.b.1)
+    };
+
+    // receiver WQEs for two-sided traffic
+    let needs_recv = verb == Verb::Send;
+    let mut recv_seq = 0u64;
+    let mut replenish = |sim: &mut Sim| {
+        if needs_recv {
+            fv::replenish_rq(sim, NodeId(1), recv_qpn, &remote, msg_bytes.max(64), 512, &mut recv_seq);
+        }
+    };
+    replenish(&mut sim);
+
+    let mut next = 0u64;
+    for _ in 0..window {
+        sim.post_send(NodeId(0), qpn, make_wr(next, ud_dest)).unwrap();
+        next += 1;
+    }
+
+    let warmup = Ns(duration.0 / 5);
+    let mut started = false;
+    let (mut bytes0, mut t0) = (0u64, Ns::ZERO);
+    while sim.now() < duration {
+        if !started && sim.now() >= warmup {
+            started = true;
+            bytes0 = sim.total_rx_data_bytes();
+            t0 = sim.now();
+        }
+        let Some(notes) = sim.step() else { break };
+        let mut repost = 0;
+        for n in notes {
+            match n {
+                Notification::CqeReady { node, cqn } if node == NodeId(0) && cqn == cq0 => {
+                    repost += sim.poll_cq(NodeId(0), cq0, 64).len();
+                }
+                Notification::CqeReady { node, cqn } if node == NodeId(1) && cqn == cq1 => {
+                    // receiver drains its CQ (keeps it from overflowing)
+                    sim.poll_cq(NodeId(1), cq1, 64);
+                    replenish(&mut sim);
+                }
+                _ => {}
+            }
+        }
+        for _ in 0..repost {
+            let _ = sim.post_send(NodeId(0), qpn, make_wr(next, ud_dest));
+            next += 1;
+        }
+    }
+    gbps(sim.total_rx_data_bytes() - bytes0, sim.now().saturating_sub(t0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::types::{QpTransport, Verb};
+
+    fn quick(conns: usize) -> ScenarioCfg {
+        let mut cfg = ScenarioCfg::default();
+        cfg.conns = conns;
+        cfg.duration = Ns::from_ms(4);
+        cfg
+    }
+
+    #[test]
+    fn naive_healthy_at_low_conns() {
+        let st = naive_random_read(&quick(32));
+        assert!(st.gbps > 30.0, "expected near line rate, got {:.1}", st.gbps);
+        assert!(st.cache_hit_rate > 0.9, "cache should be hot: {}", st.cache_hit_rate);
+    }
+
+    #[test]
+    fn naive_collapses_beyond_cache_capacity() {
+        // needs a long window: with 800 outstanding 64 KB reads the first
+        // closed-loop round alone takes ~10 ms, and the ICM-thrash regime
+        // only develops once reposts are engine-gated
+        let mut lo_cfg = quick(100);
+        lo_cfg.duration = Ns::from_ms(30);
+        lo_cfg.warmup_frac = 0.4;
+        let mut hi_cfg = quick(800);
+        hi_cfg.duration = Ns::from_ms(30);
+        hi_cfg.warmup_frac = 0.4;
+        let low = naive_random_read(&lo_cfg);
+        let high = naive_random_read(&hi_cfg);
+        assert!(
+            high.gbps < low.gbps * 0.75,
+            "800 conns ({:.1} Gb/s) must be well below 100 conns ({:.1} Gb/s)",
+            high.gbps,
+            low.gbps
+        );
+        assert!(high.cache_hit_rate < 0.7);
+    }
+
+    #[test]
+    fn raas_stable_at_high_conns() {
+        let low = raas_random_read(&quick(100));
+        let high = raas_random_read(&quick(800));
+        assert!(low.gbps > 30.0, "raas low: {:.1}", low.gbps);
+        assert!(
+            high.gbps > low.gbps * 0.85,
+            "raas must stay stable: {:.1} vs {:.1}",
+            high.gbps,
+            low.gbps
+        );
+        assert!(high.cache_hit_rate > 0.95, "shared QPs stay cached");
+    }
+
+    #[test]
+    fn locked_q6_worse_than_q3() {
+        // 12 worker threads: q=6 leaves only 2 QPs, so the lock becomes the
+        // bottleneck; q=3 still has 4 lock domains.
+        let mut cfg = quick(12);
+        cfg.msg_bytes = 512;
+        cfg.window = 4;
+        let q3 = locked_random_read(&cfg, 3);
+        let q6 = locked_random_read(&cfg, 6);
+        assert!(
+            q6.mops < q3.mops,
+            "q=6 ({:.2} Mops) must underperform q=3 ({:.2} Mops)",
+            q6.mops,
+            q3.mops
+        );
+        assert!(q6.lock_wait_ms > 0.0);
+    }
+
+    #[test]
+    fn verbs_sweep_large_msgs_hit_line_rate() {
+        let g = verbs_sweep_point(QpTransport::Rc, Verb::Write, 1 << 20, 8, Ns::from_ms(4));
+        assert!(g > 34.0, "RC WRITE 1MB: {g:.1} Gb/s");
+    }
+
+    #[test]
+    fn verbs_sweep_small_msgs_overhead_bound() {
+        let g = verbs_sweep_point(QpTransport::Rc, Verb::Write, 64, 8, Ns::from_ms(2));
+        assert!(g < 10.0, "64 B writes can't reach line rate: {g:.1}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration: applications (KV store, RPC) over RaaS across nodes,
+//! plus the live inference engine round-trip when artifacts exist.
+
+use rdmavisor::apps::kv::{KvClient, KvLayout, KvServer};
+use rdmavisor::apps::rpc::{RpcClient, RpcServer};
+use rdmavisor::fabric::sim::{FabricConfig, Sim};
+use rdmavisor::fabric::types::NodeId;
+use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig};
+
+fn cluster(n: usize) -> (Sim, Vec<Daemon>) {
+    let mut cfg = FabricConfig::default();
+    cfg.nodes = n;
+    cfg.sq_depth = 8192;
+    let mut sim = Sim::new(cfg);
+    let daemons = (0..n)
+        .map(|i| Daemon::start(&mut sim, NodeId(i as u32), DaemonConfig::default()))
+        .collect();
+    (sim, daemons)
+}
+
+fn drive(sim: &mut Sim, daemons: &mut [Daemon], iters: usize) {
+    for _ in 0..iters {
+        for d in daemons.iter_mut() {
+            d.pump(sim);
+        }
+        if sim.step().is_none() {
+            for d in daemons.iter_mut() {
+                d.pump(sim);
+            }
+            if sim.pending_events() == 0 {
+                return;
+            }
+        }
+    }
+}
+
+#[test]
+fn kv_multiclient_gets_and_puts() {
+    let (mut sim, mut daemons) = cluster(4);
+    let layout = KvLayout { slots: 4096, slot_bytes: 1024 };
+    let mut server = KvServer::new(&mut daemons[0], 6000, layout);
+
+    let mut clients = Vec::new();
+    for node in 1..4usize {
+        let app = daemons[node].register_app();
+        let conn = connect_via(&mut sim, &mut daemons, node, app, 0, 6000).unwrap();
+        clients.push((node, KvClient::new(app, conn, layout, node as u64, 0.99)));
+    }
+    for (node, c) in clients.iter_mut() {
+        for _ in 0..10 {
+            c.get(&mut sim, &mut daemons[*node]).unwrap();
+        }
+        c.put(&mut sim, &mut daemons[*node], 512).unwrap();
+    }
+    drive(&mut sim, &mut daemons, 3_000_000);
+    server.service(&mut sim, &mut daemons[0]);
+    let mut total_done = 0;
+    for (node, c) in clients.iter_mut() {
+        total_done += c.drain(&mut sim, &mut daemons[*node]);
+    }
+    assert_eq!(total_done, 3 * 11, "10 gets + 1 put per client");
+    assert_eq!(server.puts_applied, 3);
+    // GETs are one-sided: server daemon never saw them as messages
+    assert_eq!(daemons[0].stats.msgs_delivered, 3);
+}
+
+#[test]
+fn rpc_many_clients_one_server() {
+    let (mut sim, mut daemons) = cluster(3);
+    let mut server = RpcServer::new(&mut daemons[0], 5000, 128);
+    let mut clients = Vec::new();
+    for node in 1..3usize {
+        for _ in 0..4 {
+            let app = daemons[node].register_app();
+            let conn = connect_via(&mut sim, &mut daemons, node, app, 0, 5000).unwrap();
+            clients.push((node, RpcClient::new(app, conn, 64)));
+        }
+    }
+    for (node, c) in clients.iter_mut() {
+        for _ in 0..5 {
+            c.call(&mut sim, &mut daemons[*node]).unwrap();
+        }
+    }
+    // drive with server servicing inline
+    for _ in 0..3_000_000 {
+        for d in daemons.iter_mut() {
+            d.pump(&mut sim);
+        }
+        server.service(&mut sim, &mut daemons[0]).unwrap();
+        if sim.step().is_none() {
+            for d in daemons.iter_mut() {
+                d.pump(&mut sim);
+            }
+            server.service(&mut sim, &mut daemons[0]).unwrap();
+            if sim.pending_events() == 0 {
+                break;
+            }
+        }
+    }
+    let mut responses = 0;
+    for (node, c) in clients.iter_mut() {
+        responses += c.drain(&mut sim, &mut daemons[*node]);
+    }
+    assert_eq!(server.served, 40);
+    assert_eq!(responses, 40, "every rpc answered");
+    // 8 logical connections, but the server holds only 2 shared QPs
+    assert_eq!(daemons[0].shared_qp_count(), 2);
+}
+
+#[test]
+fn live_inference_engine_round_trip() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    use rdmavisor::apps::inference::InferenceEngine;
+    let engine = InferenceEngine::new("artifacts", 2, 64);
+    let server = {
+        let e = engine.clone();
+        std::thread::spawn(move || e.serve_loop())
+    };
+    for tag in 0..6u64 {
+        assert!(engine.submit((tag % 2) as usize, tag));
+    }
+    let t0 = std::time::Instant::now();
+    let mut got = std::collections::BTreeSet::new();
+    while got.len() < 6 {
+        for c in 0..2 {
+            for t in engine.reap(c) {
+                got.insert(t);
+            }
+        }
+        assert!(t0.elapsed().as_secs() < 300, "serving timed out; got {got:?}");
+        std::thread::yield_now();
+    }
+    engine.stop();
+    engine.channels[0].submit_bell.ring();
+    let _ = server.join();
+    assert_eq!(got, (0..6).collect());
+    let st = engine.stats.lock().unwrap();
+    assert_eq!(st.requests, 6);
+    assert!(st.batches >= 1);
+}

@@ -1,0 +1,108 @@
+//! Integration: baseline systems vs RaaS — the paper's comparative claims,
+//! asserted as tests (the figure harnesses print the full sweeps).
+
+use rdmavisor::fabric::time::Ns;
+use rdmavisor::workload::scenarios::{
+    locked_random_read, naive_random_read, raas_random_read, ScenarioCfg,
+};
+
+fn cfg(conns: usize, ms: u64) -> ScenarioCfg {
+    let mut c = ScenarioCfg::default();
+    c.conns = conns;
+    c.duration = Ns::from_ms(ms);
+    c.warmup_frac = 0.4;
+    c
+}
+
+#[test]
+fn fig5_claim_naive_drops_raas_stable() {
+    let naive_low = naive_random_read(&cfg(100, 30));
+    let naive_high = naive_random_read(&cfg(1000, 30));
+    let raas_low = raas_random_read(&cfg(100, 30));
+    let raas_high = raas_random_read(&cfg(1000, 30));
+
+    // "the throughput of naive RDMA starts to drop when the size of
+    //  connections exceeds 400"
+    assert!(
+        naive_high.gbps < naive_low.gbps * 0.6,
+        "naive should collapse: {:.1} -> {:.1} Gb/s",
+        naive_low.gbps,
+        naive_high.gbps
+    );
+    // "RaaS shows stable performance"
+    assert!(
+        raas_high.gbps > raas_low.gbps * 0.9,
+        "raas should be stable: {:.1} -> {:.1} Gb/s",
+        raas_low.gbps,
+        raas_high.gbps
+    );
+    // and RaaS beats naive at scale
+    assert!(raas_high.gbps > naive_high.gbps * 1.5);
+}
+
+#[test]
+fn fig5_mechanism_is_the_nic_cache() {
+    let naive = naive_random_read(&cfg(1000, 30));
+    let raas = raas_random_read(&cfg(1000, 30));
+    assert!(naive.cache_hit_rate < 0.6, "naive thrashes: {}", naive.cache_hit_rate);
+    assert!(raas.cache_hit_rate > 0.95, "raas stays hot: {}", raas.cache_hit_rate);
+}
+
+#[test]
+fn fig6_claim_lock_contention_ordering() {
+    // 512 B reads, 12 worker threads: the q=6 lock domain serializes
+    let mut c = cfg(12, 10);
+    c.msg_bytes = 512;
+    c.window = 4;
+    let raas = raas_random_read(&c);
+    let q3 = locked_random_read(&c, 3);
+    let q6 = locked_random_read(&c, 6);
+    assert!(q6.mops < q3.mops, "q6 {:.2} !< q3 {:.2}", q6.mops, q3.mops);
+    assert!(raas.mops >= q3.mops * 0.95, "raas {:.2} vs q3 {:.2}", raas.mops, q3.mops);
+    assert!(q6.lock_wait_ms > 0.0);
+}
+
+#[test]
+fn fig7_claim_memory_scaling() {
+    let apps = |n: u32| {
+        let mut c = cfg((n * 16) as usize, 8);
+        c.apps = n;
+        c
+    };
+    let n1 = naive_random_read(&apps(1));
+    let n8 = naive_random_read(&apps(8));
+    let r1 = raas_random_read(&apps(1));
+    let r8 = raas_random_read(&apps(8));
+    let naive_growth = n8.mem_bytes as f64 / n1.mem_bytes as f64;
+    let raas_growth = r8.mem_bytes as f64 / r1.mem_bytes as f64;
+    assert!(naive_growth > 6.0, "naive mem should ~8x: {naive_growth:.2}");
+    assert!(raas_growth < naive_growth / 2.0, "raas sublinear: {raas_growth:.2}");
+}
+
+#[test]
+fn fig8_claim_cpu_scaling() {
+    let apps = |n: u32| {
+        let mut c = cfg((n * 16) as usize, 8);
+        c.apps = n;
+        c
+    };
+    let n1 = naive_random_read(&apps(1));
+    let n8 = naive_random_read(&apps(8));
+    let r1 = raas_random_read(&apps(1));
+    let r8 = raas_random_read(&apps(8));
+    let naive_growth = n8.cpu_cores / n1.cpu_cores;
+    let raas_growth = r8.cpu_cores / r1.cpu_cores;
+    assert!(naive_growth > 6.0, "naive cpu ~8x: {naive_growth:.2}");
+    assert!(raas_growth < 1.5, "raas cpu ~flat: {raas_growth:.2}");
+}
+
+#[test]
+fn runs_are_deterministic() {
+    let a = naive_random_read(&cfg(300, 8));
+    let b = naive_random_read(&cfg(300, 8));
+    assert_eq!(a.gbps, b.gbps);
+    assert_eq!(a.ops, b.ops);
+    let a = raas_random_read(&cfg(300, 8));
+    let b = raas_random_read(&cfg(300, 8));
+    assert_eq!(a.gbps, b.gbps);
+}

@@ -1,0 +1,312 @@
+//! Integration tests: end-to-end verb flows over the simulated fabric.
+
+use rdmavisor::fabric::mr::Access;
+use rdmavisor::fabric::sim::{FabricConfig, Notification, Sim};
+use rdmavisor::fabric::time::{gbps, Ns};
+use rdmavisor::fabric::types::{NodeId, QpTransport, Verb, WcStatus};
+use rdmavisor::fabric::verbs;
+use rdmavisor::fabric::wqe::{CqeKind, RecvWr, SendWr};
+
+fn two_node_rc() -> (
+    Sim,
+    rdmavisor::fabric::verbs::QpPair,
+    rdmavisor::fabric::types::Cqn,
+    rdmavisor::fabric::types::Cqn,
+) {
+    let mut sim = Sim::new(FabricConfig::default());
+    let cq0 = sim.create_cq(NodeId(0), 4096);
+    let cq1 = sim.create_cq(NodeId(1), 4096);
+    let pair = verbs::create_connected_pair(
+        &mut sim, QpTransport::Rc, NodeId(0), NodeId(1), cq0, cq0, cq1, cq1,
+    );
+    (sim, pair, cq0, cq1)
+}
+
+#[test]
+fn rc_write_completes_with_ack() {
+    let (mut sim, pair, cq0, _cq1) = two_node_rc();
+    let local = sim.reg_mr(NodeId(0), 1 << 20, Access::REMOTE_RW, true);
+    let remote = sim.reg_mr(NodeId(1), 1 << 20, Access::REMOTE_RW, true);
+
+    sim.post_send(
+        NodeId(0),
+        pair.a.1,
+        SendWr::write(7, 64 << 10, local.key, local.addr, remote.key, remote.addr),
+    )
+    .unwrap();
+
+    let notes = sim.run_to_quiescence();
+    assert!(notes.contains(&Notification::CqeReady { node: NodeId(0), cqn: cq0 }));
+    let cqes = sim.poll_cq(NodeId(0), cq0, 16);
+    assert_eq!(cqes.len(), 1);
+    assert_eq!(cqes[0].wr_id, 7);
+    assert_eq!(cqes[0].kind, CqeKind::SendDone(Verb::Write));
+    assert_eq!(cqes[0].status, WcStatus::Success);
+    assert_eq!(sim.completed_bytes, 64 << 10);
+}
+
+#[test]
+fn rc_read_round_trip() {
+    let (mut sim, pair, cq0, _cq1) = two_node_rc();
+    let local = sim.reg_mr(NodeId(0), 1 << 20, Access::REMOTE_RW, true);
+    let remote = sim.reg_mr(NodeId(1), 1 << 20, Access::REMOTE_RW, true);
+
+    sim.post_send(
+        NodeId(0),
+        pair.a.1,
+        SendWr::read(42, 64 << 10, local.key, local.addr, remote.key, remote.addr),
+    )
+    .unwrap();
+    sim.run_to_quiescence();
+
+    let cqes = sim.poll_cq(NodeId(0), cq0, 16);
+    assert_eq!(cqes.len(), 1);
+    assert_eq!(cqes[0].kind, CqeKind::SendDone(Verb::Read));
+    assert_eq!(cqes[0].len, 64 << 10);
+    // read took at least the wire time of 64 KB at 40 Gb/s (~13 µs)
+    assert!(sim.now() > Ns(13_000), "completed too fast: {}", sim.now());
+}
+
+#[test]
+fn rc_send_recv_delivers_imm_vqpn() {
+    let (mut sim, pair, cq0, cq1) = two_node_rc();
+    let local = sim.reg_mr(NodeId(0), 1 << 20, Access::REMOTE_RW, true);
+    let rbuf = sim.reg_mr(NodeId(1), 1 << 20, Access::REMOTE_RW, true);
+    let mut next_id = 100;
+    verbs::replenish_rq(&mut sim, NodeId(1), pair.b.1, &rbuf, 8192, 16, &mut next_id);
+
+    // vQPN 0xBEEF rides in imm_data (the paper's two-sided demux, Fig 4)
+    sim.post_send(NodeId(0), pair.a.1, SendWr::send(1, 4096, local.key, local.addr, 0xBEEF))
+        .unwrap();
+    sim.run_to_quiescence();
+
+    let recv = sim.poll_cq(NodeId(1), cq1, 16);
+    assert_eq!(recv.len(), 1);
+    assert_eq!(recv[0].kind, CqeKind::Recv);
+    assert_eq!(recv[0].imm_data, Some(0xBEEF));
+    assert_eq!(recv[0].len, 4096);
+    assert_eq!(recv[0].src, Some((NodeId(0), pair.a.1)));
+    // sender got its ack-completion too
+    let sent = sim.poll_cq(NodeId(0), cq0, 16);
+    assert_eq!(sent.len(), 1);
+}
+
+#[test]
+fn send_without_recv_wqe_rnr_retries_rc() {
+    let (mut sim, pair, cq0, cq1) = two_node_rc();
+    let local = sim.reg_mr(NodeId(0), 1 << 20, Access::REMOTE_RW, true);
+    let rbuf = sim.reg_mr(NodeId(1), 1 << 20, Access::REMOTE_RW, true);
+
+    sim.post_send(NodeId(0), pair.a.1, SendWr::send(1, 4096, local.key, local.addr, 1))
+        .unwrap();
+    // no recv posted yet: the message RNR-NAKs; post the recv during backoff
+    for _ in 0..2000 {
+        if sim.step().is_none() {
+            break;
+        }
+        if sim.node(NodeId(1)).rnr_naks_sent > 0 {
+            break;
+        }
+    }
+    assert!(sim.node(NodeId(1)).rnr_naks_sent > 0, "expected an RNR NAK");
+    sim.post_recv(
+        NodeId(1),
+        pair.b.1,
+        RecvWr { wr_id: 9, lkey: rbuf.key, laddr: rbuf.addr, len: 8192 },
+    )
+    .unwrap();
+    sim.run_to_quiescence();
+    let recv = sim.poll_cq(NodeId(1), cq1, 16);
+    assert_eq!(recv.len(), 1, "retried send must be delivered");
+    assert_eq!(recv[0].wr_id, 9);
+    let sent = sim.poll_cq(NodeId(0), cq0, 16);
+    assert_eq!(sent.len(), 1);
+}
+
+#[test]
+fn read_from_unreadable_region_errors() {
+    let (mut sim, pair, cq0, _cq1) = two_node_rc();
+    let local = sim.reg_mr(NodeId(0), 1 << 20, Access::REMOTE_RW, true);
+    // remote region deliberately NOT remote-readable
+    let remote = sim.reg_mr(NodeId(1), 1 << 20, Access::LOCAL_ONLY, true);
+
+    sim.post_send(
+        NodeId(0),
+        pair.a.1,
+        SendWr::read(1, 4096, local.key, local.addr, remote.key, remote.addr),
+    )
+    .unwrap();
+    sim.run_to_quiescence();
+    let cqes = sim.poll_cq(NodeId(0), cq0, 16);
+    assert_eq!(cqes.len(), 1);
+    assert_eq!(cqes[0].status, WcStatus::RemoteAccessError);
+    assert_eq!(sim.node(NodeId(1)).protection_errors, 1);
+}
+
+#[test]
+fn large_write_saturates_line_rate() {
+    let (mut sim, pair, cq0, _cq1) = two_node_rc();
+    let local = sim.reg_mr(NodeId(0), 64 << 20, Access::REMOTE_RW, true);
+    let remote = sim.reg_mr(NodeId(1), 64 << 20, Access::REMOTE_RW, true);
+
+    // pipeline 64 × 1 MB writes
+    let n = 64u64;
+    let len = 1 << 20;
+    for i in 0..n {
+        sim.post_send(
+            NodeId(0),
+            pair.a.1,
+            SendWr::write(i, len, local.key, local.addr, remote.key, remote.addr),
+        )
+        .unwrap();
+    }
+    sim.run_to_quiescence();
+    let cqes = sim.poll_cq(NodeId(0), cq0, 4096);
+    assert_eq!(cqes.len() as u64, n);
+    let g = gbps(n * len, sim.now());
+    assert!(g > 34.0 && g <= 40.0, "throughput {g} Gb/s not near 40G line rate");
+}
+
+#[test]
+fn uc_write_no_ack_local_completion() {
+    let mut sim = Sim::new(FabricConfig::default());
+    let cq0 = sim.create_cq(NodeId(0), 256);
+    let cq1 = sim.create_cq(NodeId(1), 256);
+    let pair = verbs::create_connected_pair(
+        &mut sim, QpTransport::Uc, NodeId(0), NodeId(1), cq0, cq0, cq1, cq1,
+    );
+    let local = sim.reg_mr(NodeId(0), 1 << 20, Access::REMOTE_RW, true);
+    let remote = sim.reg_mr(NodeId(1), 1 << 20, Access::REMOTE_RW, true);
+    sim.post_send(
+        NodeId(0),
+        pair.a.1,
+        SendWr::write(5, 64 << 10, local.key, local.addr, remote.key, remote.addr),
+    )
+    .unwrap();
+    sim.run_to_quiescence();
+    let cqes = sim.poll_cq(NodeId(0), cq0, 16);
+    assert_eq!(cqes.len(), 1, "UC write completes locally without ACK");
+    assert_eq!(cqes[0].kind, CqeKind::SendDone(Verb::Write));
+}
+
+#[test]
+fn ud_send_one_qp_to_many_peers() {
+    let mut sim = Sim::new(FabricConfig::default());
+    let cq0 = sim.create_cq(NodeId(0), 256);
+    let ud0 = verbs::create_ud(&mut sim, NodeId(0), cq0, cq0);
+    let local = sim.reg_mr(NodeId(0), 1 << 20, Access::REMOTE_RW, true);
+
+    // one UD QP on node 0 talks to UD QPs on nodes 1..3 (connectionless)
+    let mut peer_cqs = Vec::new();
+    let mut peers = Vec::new();
+    for n in 1..4u32 {
+        let cq = sim.create_cq(NodeId(n), 256);
+        let ud = verbs::create_ud(&mut sim, NodeId(n), cq, cq);
+        let buf = sim.reg_mr(NodeId(n), 1 << 20, Access::REMOTE_RW, true);
+        let mut id = 0;
+        verbs::replenish_rq(&mut sim, NodeId(n), ud, &buf, 4096, 8, &mut id);
+        peer_cqs.push(cq);
+        peers.push(ud);
+    }
+    for (i, n) in (1..4u32).enumerate() {
+        sim.post_send(
+            NodeId(0),
+            ud0,
+            SendWr::send(i as u64, 2048, local.key, local.addr, i as u32)
+                .to_ud(NodeId(n), peers[i]),
+        )
+        .unwrap();
+    }
+    sim.run_to_quiescence();
+    for (i, n) in (1..4u32).enumerate() {
+        let cqes = sim.poll_cq(NodeId(n), peer_cqs[i], 16);
+        assert_eq!(cqes.len(), 1, "peer {n} should receive one datagram");
+        assert_eq!(cqes[0].src, Some((NodeId(0), ud0)));
+    }
+}
+
+#[test]
+fn srq_shared_across_qps() {
+    let mut sim = Sim::new(FabricConfig::default());
+    let cq0 = sim.create_cq(NodeId(0), 256);
+    let cq1 = sim.create_cq(NodeId(1), 256);
+    let srq = sim.create_srq(NodeId(1), 128, 4);
+    let rbuf = sim.reg_mr(NodeId(1), 1 << 20, Access::REMOTE_RW, true);
+    let mut id = 0;
+    verbs::replenish_srq(&mut sim, NodeId(1), srq, &rbuf, 8192, 16, &mut id);
+
+    // two QPs on node1 share the SRQ
+    let p1 = verbs::create_connected_pair(
+        &mut sim, QpTransport::Rc, NodeId(0), NodeId(1), cq0, cq0, cq1, cq1,
+    );
+    let p2 = verbs::create_connected_pair(
+        &mut sim, QpTransport::Rc, NodeId(0), NodeId(1), cq0, cq0, cq1, cq1,
+    );
+    sim.attach_srq(NodeId(1), p1.b.1, srq);
+    sim.attach_srq(NodeId(1), p2.b.1, srq);
+
+    let local = sim.reg_mr(NodeId(0), 1 << 20, Access::REMOTE_RW, true);
+    sim.post_send(NodeId(0), p1.a.1, SendWr::send(1, 1024, local.key, local.addr, 11))
+        .unwrap();
+    sim.post_send(NodeId(0), p2.a.1, SendWr::send(2, 1024, local.key, local.addr, 22))
+        .unwrap();
+    sim.run_to_quiescence();
+
+    let recv = sim.poll_cq(NodeId(1), cq1, 16);
+    assert_eq!(recv.len(), 2);
+    assert_eq!(sim.node(NodeId(1)).srqs[&srq.0].consumed, 2);
+    let imms: Vec<_> = recv.iter().filter_map(|c| c.imm_data).collect();
+    assert!(imms.contains(&11) && imms.contains(&22));
+}
+
+#[test]
+fn deterministic_replay() {
+    let run = || {
+        let (mut sim, pair, cq0, _cq1) = two_node_rc();
+        let local = sim.reg_mr(NodeId(0), 1 << 20, Access::REMOTE_RW, true);
+        let remote = sim.reg_mr(NodeId(1), 1 << 20, Access::REMOTE_RW, true);
+        for i in 0..50 {
+            sim.post_send(
+                NodeId(0),
+                pair.a.1,
+                SendWr::write(i, 16 << 10, local.key, local.addr, remote.key, remote.addr),
+            )
+            .unwrap();
+        }
+        sim.run_to_quiescence();
+        let polled = sim.poll_cq(NodeId(0), cq0, 1024).len();
+        (sim.now(), sim.completed_bytes, polled)
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn window_limits_outstanding_reads() {
+    let mut cfg = FabricConfig::default();
+    cfg.max_outstanding = 2;
+    let mut sim = Sim::new(cfg);
+    let cq0 = sim.create_cq(NodeId(0), 4096);
+    let cq1 = sim.create_cq(NodeId(1), 4096);
+    let pair = verbs::create_connected_pair(
+        &mut sim, QpTransport::Rc, NodeId(0), NodeId(1), cq0, cq0, cq1, cq1,
+    );
+    let local = sim.reg_mr(NodeId(0), 16 << 20, Access::REMOTE_RW, true);
+    let remote = sim.reg_mr(NodeId(1), 16 << 20, Access::REMOTE_RW, true);
+    for i in 0..8 {
+        sim.post_send(
+            NodeId(0),
+            pair.a.1,
+            SendWr::read(i, 64 << 10, local.key, local.addr, remote.key, remote.addr),
+        )
+        .unwrap();
+    }
+    // at any instant, outstanding ≤ 2
+    loop {
+        let out = sim.node(NodeId(0)).qps[&pair.a.1 .0].outstanding;
+        assert!(out <= 2, "outstanding={out}");
+        if sim.step().is_none() {
+            break;
+        }
+    }
+    assert_eq!(sim.poll_cq(NodeId(0), cq0, 64).len(), 8);
+}

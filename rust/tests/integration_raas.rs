@@ -1,0 +1,212 @@
+//! Integration: RDMAvisor daemon over the fabric — multi-node, multi-app.
+
+use rdmavisor::fabric::sim::{FabricConfig, Sim};
+use rdmavisor::fabric::types::{NodeId, Verb};
+use rdmavisor::raas::api::{Flags, RaasError, Target};
+use rdmavisor::raas::daemon::{connect_target, connect_via, Daemon, DaemonConfig, Delivery};
+use rdmavisor::raas::transport::HostLoad;
+
+fn cluster(n: usize) -> (Sim, Vec<Daemon>) {
+    let mut cfg = FabricConfig::default();
+    cfg.nodes = n;
+    cfg.sq_depth = 8192;
+    let mut sim = Sim::new(cfg);
+    let daemons = (0..n)
+        .map(|i| Daemon::start(&mut sim, NodeId(i as u32), DaemonConfig::default()))
+        .collect();
+    (sim, daemons)
+}
+
+fn settle(sim: &mut Sim, daemons: &mut [Daemon]) {
+    for _ in 0..2_000_000 {
+        for d in daemons.iter_mut() {
+            d.pump(sim);
+        }
+        if sim.step().is_none() {
+            for d in daemons.iter_mut() {
+                d.pump(sim);
+            }
+            if sim.pending_events() == 0 {
+                return;
+            }
+        }
+    }
+    panic!("no quiescence");
+}
+
+#[test]
+fn thousand_connections_three_shared_qps() {
+    let (mut sim, mut daemons) = cluster(4);
+    for i in 1..4 {
+        let app = daemons[i].register_app();
+        daemons[i].listen(app, 1);
+    }
+    let app = daemons[0].register_app();
+    let mut conns = Vec::new();
+    for i in 0..1000usize {
+        let server = 1 + i % 3;
+        conns.push(connect_via(&mut sim, &mut daemons, 0, app, server, 1).unwrap());
+    }
+    assert_eq!(daemons[0].conns.active(), 1000);
+    assert_eq!(daemons[0].shared_qp_count(), 3, "1000 conns, 3 QPs");
+    assert_eq!(sim.node(NodeId(0)).qps.len(), 3);
+
+    // every connection can actually move data
+    for (i, c) in conns.iter().enumerate().take(50) {
+        daemons[0].read(&mut sim, *c, 4096, (i * 4096) as u64, i as u64).unwrap();
+    }
+    settle(&mut sim, &mut daemons);
+    let mut ok = 0;
+    while let Some(d) = daemons[0].recv_zero_copy(&mut sim, app) {
+        if matches!(d, Delivery::OpComplete { ok: true, .. }) {
+            ok += 1;
+        }
+    }
+    assert_eq!(ok, 50);
+}
+
+#[test]
+fn connect_via_target_address_forms() {
+    let (mut sim, mut daemons) = cluster(3);
+    let sapp = daemons[2].register_app();
+    daemons[2].listen(sapp, 9);
+    let app = daemons[0].register_app();
+    // IPv4 host byte routes to node 2
+    let c = connect_target(&mut sim, &mut daemons, 0, app, Target::Ipv4([10, 0, 0, 2], 9), 9)
+        .unwrap();
+    assert_eq!(daemons[0].conns.lookup(c).unwrap().remote, NodeId(2));
+    // LID form
+    let c2 = connect_target(&mut sim, &mut daemons, 0, app, Target::Lid(2), 9).unwrap();
+    assert_eq!(daemons[0].conns.lookup(c2).unwrap().remote, NodeId(2));
+    // both reuse ONE shared QP
+    assert_eq!(daemons[0].shared_qp_count(), 1);
+}
+
+#[test]
+fn flags_pin_rejected_combinations() {
+    let (mut sim, mut daemons) = cluster(2);
+    let sapp = daemons[1].register_app();
+    daemons[1].listen(sapp, 1);
+    let app = daemons[0].register_app();
+    let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+    let err = daemons[0]
+        .send(&mut sim, conn, 64, Flags::UC | Flags::READ, 0, HostLoad::default())
+        .unwrap_err();
+    assert!(matches!(err, RaasError::UnsupportedCombination(..)));
+}
+
+#[test]
+fn bidirectional_traffic_same_shared_qp() {
+    let (mut sim, mut daemons) = cluster(2);
+    let sapp = daemons[1].register_app();
+    daemons[1].listen(sapp, 1);
+    let capp = daemons[0].register_app();
+    let conn = connect_via(&mut sim, &mut daemons, 0, capp, 1, 1).unwrap();
+    let sconn = daemons[1].accept(sapp, 1).unwrap();
+
+    daemons[0]
+        .send(&mut sim, conn, 1024, Flags::default(), 1, HostLoad::default())
+        .unwrap();
+    daemons[1]
+        .send(&mut sim, sconn, 2048, Flags::default(), 2, HostLoad::default())
+        .unwrap();
+    settle(&mut sim, &mut daemons);
+
+    let to_server = daemons[1].recv_zero_copy(&mut sim, sapp);
+    assert!(matches!(to_server, Some(Delivery::Message { len: 1024, .. })), "{to_server:?}");
+    // drain client inbox: should contain its own OpComplete AND the reply
+    let mut got_msg = false;
+    while let Some(d) = daemons[0].recv(&mut sim, capp) {
+        if matches!(d, Delivery::Message { len: 2048, .. }) {
+            got_msg = true;
+        }
+    }
+    assert!(got_msg, "server->client message must arrive");
+    assert_eq!(daemons[0].shared_qp_count(), 1);
+    assert_eq!(daemons[1].shared_qp_count(), 1);
+}
+
+#[test]
+fn many_apps_share_daemon_resources() {
+    let (mut sim, mut daemons) = cluster(2);
+    let sapp = daemons[1].register_app();
+    daemons[1].listen(sapp, 1);
+    let mut apps = Vec::new();
+    for _ in 0..16 {
+        let a = daemons[0].register_app();
+        let c = connect_via(&mut sim, &mut daemons, 0, a, 1, 1).unwrap();
+        apps.push((a, c));
+    }
+    let snap = daemons[0].snapshot(&sim);
+    assert_eq!(snap.apps, 16);
+    assert_eq!(snap.shared_qps, 1, "16 apps, still one QP to the peer");
+
+    for (i, (_, c)) in apps.iter().enumerate() {
+        daemons[0].read(&mut sim, *c, 8192, (i * 8192) as u64, i as u64).unwrap();
+    }
+    settle(&mut sim, &mut daemons);
+    for (a, _) in &apps {
+        let d = daemons[0].recv_zero_copy(&mut sim, *a);
+        assert!(
+            matches!(d, Some(Delivery::OpComplete { ok: true, .. })),
+            "app {a} delivery: {d:?}"
+        );
+    }
+}
+
+#[test]
+fn adaptive_selection_end_to_end() {
+    let (mut sim, mut daemons) = cluster(2);
+    let sapp = daemons[1].register_app();
+    daemons[1].listen(sapp, 1);
+    let app = daemons[0].register_app();
+    let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+
+    let v_small = daemons[0]
+        .send(&mut sim, conn, 256, Flags::default(), 1, HostLoad::default())
+        .unwrap();
+    let v_large = daemons[0]
+        .send(&mut sim, conn, 512 << 10, Flags::default(), 2, HostLoad::default())
+        .unwrap();
+    assert_eq!(v_small, Verb::Send);
+    assert_eq!(v_large, Verb::Write);
+    assert_eq!(daemons[0].selector.chose_send, 1);
+    assert_eq!(daemons[0].selector.chose_write, 1);
+    settle(&mut sim, &mut daemons);
+    let mut lens = Vec::new();
+    while let Some(Delivery::Message { len, .. }) = daemons[1].recv_zero_copy(&mut sim, sapp) {
+        lens.push(len);
+    }
+    lens.sort_unstable();
+    assert_eq!(lens, vec![256, 512 << 10]);
+}
+
+#[test]
+fn srq_shared_across_all_apps_on_host() {
+    // the §1.2 observation: SRQs shared among applications on one machine
+    let (mut sim, mut daemons) = cluster(2);
+    let s1 = daemons[1].register_app();
+    daemons[1].listen(s1, 1);
+    let s2 = daemons[1].register_app();
+    daemons[1].listen(s2, 2);
+
+    let a = daemons[0].register_app();
+    let c1 = connect_via(&mut sim, &mut daemons, 0, a, 1, 1).unwrap();
+    let c2 = connect_via(&mut sim, &mut daemons, 0, a, 1, 2).unwrap();
+
+    daemons[0].send(&mut sim, c1, 100, Flags::default(), 1, HostLoad::default()).unwrap();
+    daemons[0].send(&mut sim, c2, 200, Flags::default(), 2, HostLoad::default()).unwrap();
+    settle(&mut sim, &mut daemons);
+
+    // both apps' messages consumed WQEs from the ONE host-wide SRQ
+    assert_eq!(sim.node(NodeId(1)).srqs.len(), 1);
+    assert!(sim.node(NodeId(1)).srqs.values().next().unwrap().consumed >= 2);
+    assert!(matches!(
+        daemons[1].recv_zero_copy(&mut sim, s1),
+        Some(Delivery::Message { len: 100, .. })
+    ));
+    assert!(matches!(
+        daemons[1].recv_zero_copy(&mut sim, s2),
+        Some(Delivery::Message { len: 200, .. })
+    ));
+}

@@ -1,0 +1,96 @@
+//! Integration: PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (the Makefile dependency ensures
+//! this under `make test`); tests are skipped gracefully when absent so
+//! `cargo test` alone still passes on a fresh checkout.
+
+use rdmavisor::runtime::{Executor, Manifest};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn manifest_loads_and_names_variants() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    assert!(!m.variants.is_empty());
+    for v in &m.variants {
+        assert!(v.batch >= 1);
+        assert!(v.seq >= 1);
+        assert!(v.flops_fwd > 0);
+    }
+}
+
+#[test]
+fn executor_runs_all_variants() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut exe = Executor::load("artifacts").expect("compile artifacts");
+    for name in exe.variant_names() {
+        let v = exe.manifest.by_name(&name).unwrap().clone();
+        let tokens: Vec<i32> = (0..v.batch * v.seq).map(|i| (i % v.vocab) as i32).collect();
+        let out = exe.run(&name, &tokens).expect("execute");
+        assert_eq!(out.logits.len(), v.batch * v.seq * v.vocab);
+        assert!(out.logits.iter().all(|x| x.is_finite()), "{name}: non-finite logits");
+    }
+    assert_eq!(exe.executions as usize, exe.variant_names().len());
+}
+
+#[test]
+fn executor_is_deterministic() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut exe = Executor::load("artifacts").unwrap();
+    let name = exe.variant_names()[0].clone();
+    let v = exe.manifest.by_name(&name).unwrap().clone();
+    let tokens: Vec<i32> = (0..v.batch * v.seq).map(|i| ((i * 7) % v.vocab) as i32).collect();
+    let a = exe.run(&name, &tokens).unwrap();
+    let b = exe.run(&name, &tokens).unwrap();
+    assert_eq!(a.logits, b.logits, "same input must give identical logits");
+}
+
+#[test]
+fn batcher_picks_smallest_fitting_variant() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut exe = Executor::load("artifacts").unwrap();
+    let seq = exe.manifest.variants[0].seq;
+    let rows = vec![vec![1i32; seq]; 2];
+    let (name, out) = exe.run_batched(&rows).unwrap();
+    let v = exe.manifest.by_name(&name).unwrap();
+    assert!(v.batch >= 2, "picked variant {name} too small");
+    // row 0 and row 1 have identical inputs => identical logits
+    let row = out.seq * out.vocab;
+    assert_eq!(out.logits[..row], out.logits[row..2 * row]);
+}
+
+#[test]
+fn argmax_helper_consistent() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut exe = Executor::load("artifacts").unwrap();
+    let name = exe.variant_names()[0].clone();
+    let v = exe.manifest.by_name(&name).unwrap().clone();
+    let tokens: Vec<i32> = (0..v.batch * v.seq).map(|i| (i % 17) as i32).collect();
+    let out = exe.run(&name, &tokens).unwrap();
+    let am = out.argmax(0, v.seq - 1);
+    assert!(am < v.vocab);
+    // manual check
+    let base = (v.seq - 1) * v.vocab;
+    let manual = (0..v.vocab)
+        .max_by(|&a, &b| out.logits[base + a].partial_cmp(&out.logits[base + b]).unwrap())
+        .unwrap();
+    assert_eq!(am, manual);
+}

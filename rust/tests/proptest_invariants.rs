@@ -1,0 +1,217 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! rings, cache, conservation) using the in-crate prop harness.
+
+use rdmavisor::fabric::cache::{IcmCache, IcmKey};
+use rdmavisor::fabric::sim::{FabricConfig, Sim};
+use rdmavisor::fabric::time::Ns;
+use rdmavisor::fabric::types::NodeId;
+use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery};
+use rdmavisor::raas::shmem::SpscRing;
+use rdmavisor::raas::vqpn::{pack_wr_id, unpack_seq, unpack_vqpn, ConnTable, Vqpn};
+use rdmavisor::util::prop::{check, Gen, U64Range, UsizeRange, VecGen};
+use rdmavisor::util::rng::Rng;
+
+#[test]
+fn prop_wr_id_packing_roundtrips() {
+    // ∀ (vqpn, seq): unpack(pack(vqpn, seq)) == (vqpn, seq)
+    check(11, 500, &U64Range(0, u64::MAX), |&x| {
+        let vqpn = Vqpn(x as u32);
+        let seq = (x >> 32) as u32;
+        let id = pack_wr_id(vqpn, seq);
+        if unpack_vqpn(id) == vqpn && unpack_seq(id) == seq {
+            Ok(())
+        } else {
+            Err(format!("roundtrip failed for {x:#x}"))
+        }
+    });
+}
+
+#[test]
+fn prop_conn_table_routing_total() {
+    // open/close sequences never mis-route: every live vqpn looks up to its
+    // own entry; closed vqpns never resolve.
+    let gen = VecGen { elem: U64Range(0, 99), min_len: 1, max_len: 200 };
+    check(13, 100, &gen, |ops: &Vec<u64>| {
+        let mut t = ConnTable::new();
+        let mut live: Vec<(Vqpn, u32)> = Vec::new();
+        for (i, &op) in ops.iter().enumerate() {
+            if op < 60 || live.is_empty() {
+                let app = (op % 7) as u32;
+                let v = t.open(app, NodeId((op % 3) as u32), Vqpn(0));
+                live.push((v, app));
+            } else {
+                let idx = (op as usize + i) % live.len();
+                let (v, _) = live.swap_remove(idx);
+                if !t.close(v) {
+                    return Err(format!("close of live conn {v:?} failed"));
+                }
+            }
+            // routing totality check
+            for (v, app) in &live {
+                match t.lookup(*v) {
+                    Some(e) if e.app == *app => {}
+                    other => return Err(format!("lookup {v:?} -> {other:?}")),
+                }
+            }
+        }
+        if t.active() != live.len() {
+            return Err(format!("active {} != live {}", t.active(), live.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spsc_ring_conserves_fifo() {
+    // any interleaving of pushes/pops preserves FIFO and loses nothing
+    let gen = VecGen { elem: U64Range(0, 1), min_len: 1, max_len: 400 };
+    check(17, 60, &gen, |ops: &Vec<u64>| {
+        let ring = SpscRing::new(64);
+        let mut next_in = 0u64;
+        let mut next_out = 0u64;
+        for &op in ops {
+            if op == 0 {
+                if ring.push(next_in).is_ok() {
+                    next_in += 1;
+                } else if ring.len() != 64 {
+                    return Err("push failed but ring not full".into());
+                }
+            } else if let Some(v) = ring.pop() {
+                if v != next_out {
+                    return Err(format!("FIFO violated: got {v}, want {next_out}"));
+                }
+                next_out += 1;
+            }
+        }
+        // drain
+        while let Some(v) = ring.pop() {
+            if v != next_out {
+                return Err("drain order".into());
+            }
+            next_out += 1;
+        }
+        if next_out != next_in {
+            return Err(format!("lost items: in {next_in} out {next_out}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lru_cache_never_exceeds_capacity_and_keeps_hot_keys() {
+    let gen = VecGen { elem: U64Range(0, 600), min_len: 10, max_len: 800 };
+    check(19, 60, &gen, |touches: &Vec<u64>| {
+        let mut c = IcmCache::new(128);
+        for &k in touches {
+            c.touch(IcmKey::Qpc(k as u32));
+            if c.len() > 128 {
+                return Err("capacity exceeded".into());
+            }
+        }
+        // most-recently-touched key must be resident
+        if let Some(&last) = touches.last() {
+            if !c.contains(&IcmKey::Qpc(last as u32)) {
+                return Err("MRU key evicted".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_daemon_batching_conserves_ops() {
+    // for any op count and batch_max, every submitted read completes
+    // exactly once and every lease is returned.
+    struct Cfg;
+    impl Gen<(usize, usize)> for Cfg {
+        fn gen(&self, rng: &mut Rng) -> (usize, usize) {
+            (UsizeRange(1, 120).gen(rng), UsizeRange(1, 64).gen(rng))
+        }
+    }
+    check(23, 25, &Cfg, |&(ops, batch_max)| {
+        let mut fcfg = FabricConfig::default();
+        fcfg.nodes = 2;
+        fcfg.sq_depth = 4096;
+        let mut sim = Sim::new(fcfg);
+        let dcfg = DaemonConfig { batch_max, ..DaemonConfig::default() };
+        let mut daemons = vec![
+            Daemon::start(&mut sim, NodeId(0), dcfg.clone()),
+            Daemon::start(&mut sim, NodeId(1), dcfg),
+        ];
+        let sapp = daemons[1].register_app();
+        daemons[1].listen(sapp, 1);
+        let app = daemons[0].register_app();
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+        for i in 0..ops {
+            daemons[0]
+                .read(&mut sim, conn, 4096, (i * 4096) as u64 % (1 << 20), i as u64)
+                .map_err(|e| format!("read {i}: {e}"))?;
+        }
+        for _ in 0..3_000_000 {
+            for d in daemons.iter_mut() {
+                d.pump(&mut sim);
+            }
+            if sim.step().is_none() {
+                for d in daemons.iter_mut() {
+                    d.pump(&mut sim);
+                }
+                if sim.pending_events() == 0 {
+                    break;
+                }
+            }
+        }
+        let mut completions = 0;
+        while let Some(d) = daemons[0].recv_zero_copy(&mut sim, app) {
+            if matches!(d, Delivery::OpComplete { ok: true, .. }) {
+                completions += 1;
+            }
+        }
+        if completions != ops {
+            return Err(format!("ops={ops} batch={batch_max}: {completions} completed"));
+        }
+        if daemons[0].pool.leased_bytes != 0 {
+            return Err(format!("leaked leases: {} bytes", daemons[0].pool.leased_bytes));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_time_monotonic_under_random_traffic() {
+    use rdmavisor::fabric::mr::Access;
+    use rdmavisor::fabric::types::QpTransport;
+    use rdmavisor::fabric::verbs;
+    use rdmavisor::fabric::wqe::SendWr;
+
+    let gen = VecGen { elem: U64Range(1, 64 << 10), min_len: 1, max_len: 60 };
+    check(29, 30, &gen, |sizes: &Vec<u64>| {
+        let mut sim = Sim::new(FabricConfig::default());
+        let cq0 = sim.create_cq(NodeId(0), 8192);
+        let cq1 = sim.create_cq(NodeId(1), 8192);
+        let pair = verbs::create_connected_pair(
+            &mut sim, QpTransport::Rc, NodeId(0), NodeId(1), cq0, cq0, cq1, cq1,
+        );
+        let local = sim.reg_mr(NodeId(0), 32 << 20, Access::REMOTE_RW, true);
+        let remote = sim.reg_mr(NodeId(1), 32 << 20, Access::REMOTE_RW, true);
+        for (i, &len) in sizes.iter().enumerate() {
+            sim.post_send(
+                NodeId(0),
+                pair.a.1,
+                SendWr::write(i as u64, len, local.key, local.addr, remote.key, remote.addr),
+            )
+            .map_err(|e| format!("post {i}: {e}"))?;
+        }
+        let mut last = Ns::ZERO;
+        while sim.step().is_some() {
+            if sim.now() < last {
+                return Err("time went backwards".into());
+            }
+            last = sim.now();
+        }
+        let cqes = sim.poll_cq(NodeId(0), cq0, 10_000);
+        if cqes.len() != sizes.len() {
+            return Err(format!("{} of {} completed", cqes.len(), sizes.len()));
+        }
+        Ok(())
+    });
+}
