@@ -1,11 +1,13 @@
-//! The live model-serving engine: RaaS shared-memory channels + PJRT.
+//! The live model-serving engine: RaaS shared-memory channels + the model
+//! [`Executor`].
 //!
 //! This is the end-to-end example's core (real threads, wall-clock time):
 //! client threads submit token payloads through RDMAvisor's lock-free
 //! [`Channel`]s (the same structures the daemon uses on a real host), a
 //! batcher thread collects requests into dynamic batches, executes the
-//! AOT-compiled transformer via [`Executor`], and pushes replies back
-//! through each client's completion ring. Python never runs here.
+//! transformer via [`Executor`] (simulated offline — see
+//! [`crate::runtime`]), and pushes replies back through each client's
+//! completion ring. Python never runs here.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -32,13 +34,18 @@ impl Default for BatchPolicy {
 /// Serving statistics (wall clock).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeStats {
+    /// Requests answered.
     pub requests: u64,
+    /// Forward passes executed.
     pub batches: u64,
+    /// Sum of batch sizes (for the mean).
     pub sum_batch: u64,
+    /// Wall-clock nanoseconds spent inside the model executor.
     pub model_ns: u64,
 }
 
 impl ServeStats {
+    /// Mean requests per executed batch.
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -55,20 +62,24 @@ struct Gathered {
     tokens: Vec<i32>,
 }
 
-/// The serving engine: client channels + stats. The PJRT [`Executor`] is
-/// NOT stored here — the xla client is not `Send`, so the executor is
-/// created and owned entirely by the server thread inside
-/// [`InferenceEngine::serve_loop`] (exactly the daemon-owns-the-NIC
-/// discipline of the paper).
+/// The serving engine: client channels + stats. The [`Executor`] is NOT
+/// stored here — it is created and owned entirely by the server thread
+/// inside [`InferenceEngine::serve_loop`] (exactly the daemon-owns-the-NIC
+/// discipline of the paper; on the PJRT deployment build the client is
+/// additionally not `Send`, which forces the same structure).
 pub struct InferenceEngine {
+    /// One submit/complete channel pair per client.
     pub channels: Vec<Arc<Channel>>,
     artifacts_dir: String,
     seq_len: usize,
+    /// Aggregate serving statistics (locked; read by the driver).
     pub stats: Mutex<ServeStats>,
     stop: AtomicBool,
 }
 
 impl InferenceEngine {
+    /// Create the engine: one channel per client; sequence length comes
+    /// from the artifact manifest (64 with the synthetic fallback).
     pub fn new(artifacts_dir: &str, n_clients: usize, ring_depth: usize) -> Arc<Self> {
         let seq_len = crate::runtime::Manifest::load(artifacts_dir)
             .ok()
@@ -86,10 +97,12 @@ impl InferenceEngine {
         })
     }
 
+    /// Sequence length requests are padded to.
     pub fn seq_len(&self) -> usize {
         self.seq_len
     }
 
+    /// Ask [`InferenceEngine::serve_loop`] to exit after its current batch.
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
     }

@@ -15,11 +15,14 @@ use crate::util::rng::{Rng, Zipf};
 /// Fixed-slot value table layout (power-of-two slots over the pool).
 #[derive(Clone, Copy, Debug)]
 pub struct KvLayout {
+    /// Number of fixed-size value slots.
     pub slots: u64,
+    /// Bytes per slot.
     pub slot_bytes: u64,
 }
 
 impl KvLayout {
+    /// Pool offset of `key`'s slot.
     pub fn offset(&self, key: u64) -> u64 {
         (key % self.slots) * self.slot_bytes
     }
@@ -27,12 +30,16 @@ impl KvLayout {
 
 /// Server-side state: owns the layout + applies PUTs from deliveries.
 pub struct KvServer {
+    /// Server app session id on its daemon.
     pub app: u32,
+    /// Value-table layout served from the registered pool.
     pub layout: KvLayout,
+    /// PUT messages applied to the table.
     pub puts_applied: u64,
 }
 
 impl KvServer {
+    /// Register the server app and start listening on `port`.
     pub fn new(daemon: &mut Daemon, port: u16, layout: KvLayout) -> KvServer {
         let app = daemon.register_app();
         daemon.listen(app, port);
@@ -53,17 +60,24 @@ impl KvServer {
 
 /// Client-side handle: zipf-keyed GET/PUT issue + completion counting.
 pub struct KvClient {
+    /// Client app session id on its daemon.
     pub app: u32,
+    /// Logical connection to the server.
     pub conn: Vqpn,
+    /// Server table layout (for GET offset math).
     pub layout: KvLayout,
     keys: Zipf,
     rng: Rng,
+    /// GETs issued so far.
     pub gets_issued: u64,
+    /// PUTs issued so far.
     pub puts_issued: u64,
+    /// Completed ops observed by [`KvClient::drain`].
     pub gets_done: u64,
 }
 
 impl KvClient {
+    /// Create a client over an open connection with a Zipf(θ) key stream.
     pub fn new(app: u32, conn: Vqpn, layout: KvLayout, seed: u64, theta: f64) -> KvClient {
         KvClient {
             app,

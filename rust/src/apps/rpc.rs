@@ -12,8 +12,11 @@ use crate::raas::vqpn::Vqpn;
 
 /// Echo-style RPC server: replies `resp_bytes` to every request.
 pub struct RpcServer {
+    /// Server app session id on its daemon.
     pub app: u32,
+    /// Reply payload size.
     pub resp_bytes: u64,
+    /// Requests answered so far.
     pub served: u64,
     /// Accepted connections (server side of each logical conn).
     pub conns: Vec<Vqpn>,
@@ -21,6 +24,7 @@ pub struct RpcServer {
 }
 
 impl RpcServer {
+    /// Register the server app and start listening on `port`.
     pub fn new(daemon: &mut Daemon, port: u16, resp_bytes: u64) -> RpcServer {
         let app = daemon.register_app();
         daemon.listen(app, port);
@@ -44,18 +48,25 @@ impl RpcServer {
 
 /// RPC client: issues requests, counts responses.
 pub struct RpcClient {
+    /// Client app session id on its daemon.
     pub app: u32,
+    /// Logical connection to the server.
     pub conn: Vqpn,
+    /// Request payload size.
     pub req_bytes: u64,
+    /// Requests issued so far.
     pub sent: u64,
+    /// Responses received so far.
     pub responses: u64,
 }
 
 impl RpcClient {
+    /// Create a client over an open connection.
     pub fn new(app: u32, conn: Vqpn, req_bytes: u64) -> RpcClient {
         RpcClient { app, conn, req_bytes, sent: 0, responses: 0 }
     }
 
+    /// Issue one request on the adaptive send path.
     pub fn call(&mut self, sim: &mut Sim, daemon: &mut Daemon) -> Result<(), RaasError> {
         daemon.send(sim, self.conn, self.req_bytes, Flags::default(), self.sent, HostLoad::default())?;
         self.sent += 1;

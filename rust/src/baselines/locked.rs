@@ -20,27 +20,41 @@ use crate::fabric::wqe::SendWr;
 
 /// One worker thread bound to a shared QP.
 pub struct LockedThread {
+    /// Index into [`LockedSystem::qps`] this thread posts on.
     pub qp_index: usize,
+    /// Remote node this thread's QP targets.
     pub remote: NodeId,
+    /// Outstanding ops posted by this thread.
     pub inflight: u32,
+    /// Lifetime completions for this thread.
     pub completed_ops: u64,
 }
 
 /// One shared QP with its mutex.
 pub struct SharedQp {
+    /// The shared QP.
     pub qpn: Qpn,
+    /// Remote node the QP connects to.
     pub remote: NodeId,
+    /// The contended post lock (Fig 6's bottleneck).
     pub mutex: MutexModel,
+    /// Server-side buffer the q sharers read from.
     pub remote_buf: MemoryRegion,
 }
 
 /// The locked-sharing client stack.
 pub struct LockedSystem {
+    /// Client node the stack runs on.
     pub node: NodeId,
+    /// One shared CQ for all threads (single poller).
     pub cq: Cqn,
+    /// Threads sharing each QP.
     pub q: usize,
+    /// The shared QPs (`threads / q` of them).
     pub qps: Vec<SharedQp>,
+    /// Worker-thread states.
     pub threads: Vec<LockedThread>,
+    /// One client-side landing buffer shared by all threads.
     pub local_buf: MemoryRegion,
     /// CPU ns each post burns while holding the lock (WQE build + doorbell).
     pub hold_ns: u64,
@@ -130,6 +144,7 @@ impl LockedSystem {
         ready
     }
 
+    /// Number of shared QPs (`threads / q`, rounded up).
     pub fn qp_count(&self) -> usize {
         self.qps.len()
     }

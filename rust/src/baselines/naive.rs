@@ -14,20 +14,29 @@ use crate::fabric::wqe::SendWr;
 
 /// One naive connection: exclusive QP + buffers.
 pub struct NaiveConn {
+    /// Owning application.
     pub app: u32,
+    /// Remote node this connection targets.
     pub remote: NodeId,
+    /// The connection's exclusive QP.
     pub qpn: Qpn,
+    /// Private client-side registered buffer.
     pub local_buf: MemoryRegion,
+    /// Private server-side registered buffer.
     pub remote_buf: MemoryRegion,
+    /// Outstanding ops on this connection.
     pub inflight: u32,
+    /// Lifetime completions on this connection.
     pub completed_ops: u64,
 }
 
 /// The naive client stack on one node.
 pub struct NaiveSystem {
+    /// Client node the stack runs on.
     pub node: NodeId,
     /// One CQ per application (polled by that app's dedicated thread).
     pub app_cqs: Vec<Cqn>,
+    /// All connections, across all apps.
     pub conns: Vec<NaiveConn>,
     /// Per-conn buffer bytes (both sides), for the memory ledger.
     pub buf_bytes_per_conn: u64,

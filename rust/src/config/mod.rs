@@ -14,8 +14,11 @@ use crate::workload::scenarios::ScenarioCfg;
 /// Top-level typed configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Simulated-fabric parameters.
     pub fabric: FabricConfig,
+    /// RDMAvisor daemon tunables.
     pub daemon: DaemonConfig,
+    /// Scenario-driver parameters (inherits `fabric`).
     pub scenario: ScenarioCfg,
 }
 
@@ -32,6 +35,7 @@ pub fn from_str(doc: &str) -> Result<Config, String> {
     Ok(cfg)
 }
 
+/// Read and parse a config file (see [`from_str`]).
 pub fn from_file(path: &str) -> Result<Config, String> {
     let doc = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
     from_str(&doc)

@@ -41,12 +41,16 @@ pub struct IcmCache {
     head: u32, // most-recently used
     tail: u32, // least-recently used
     capacity: usize,
+    /// Lookups that found their entry resident.
     pub hits: u64,
+    /// Lookups that had to install (and maybe evict).
     pub misses: u64,
+    /// LRU entries displaced by installs.
     pub evictions: u64,
 }
 
 impl IcmCache {
+    /// Create an empty cache holding at most `capacity` entries.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         IcmCache {
@@ -62,14 +66,17 @@ impl IcmCache {
         }
     }
 
+    /// Maximum resident entries.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Currently resident entries.
     pub fn len(&self) -> usize {
         self.index.len()
     }
 
+    /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.index.is_empty()
     }
@@ -100,6 +107,7 @@ impl IcmCache {
         }
     }
 
+    /// Hits / (hits + misses) since the last [`IcmCache::reset_stats`].
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -109,6 +117,7 @@ impl IcmCache {
         }
     }
 
+    /// Zero the hit/miss/eviction counters (contents preserved).
     pub fn reset_stats(&mut self) {
         self.hits = 0;
         self.misses = 0;

@@ -17,6 +17,7 @@ use super::time::Ns;
 /// Per-node CPU ledger.
 #[derive(Clone, Debug)]
 pub struct CpuLedger {
+    /// Physical cores on the node.
     pub cores: u32,
     /// Accumulated busy nanoseconds from discrete work items.
     pub busy_ns: u64,
@@ -24,11 +25,14 @@ pub struct CpuLedger {
     pub polling_threads: u32,
     /// Work-item counters by class (diagnostics).
     pub post_ops: u64,
+    /// poll_cq calls charged.
     pub poll_ops: u64,
+    /// Bytes copied by charged memcpys.
     pub memcpy_bytes: u64,
 }
 
 impl CpuLedger {
+    /// Fresh ledger for a node with `cores` cores.
     pub fn new(cores: u32) -> Self {
         CpuLedger {
             cores,
@@ -45,11 +49,13 @@ impl CpuLedger {
         self.busy_ns += ns;
     }
 
+    /// Charge a post_send/post_recv driver call.
     pub fn charge_post(&mut self, ns: u64) {
         self.post_ops += 1;
         self.charge(ns);
     }
 
+    /// Charge a poll_cq driver call.
     pub fn charge_poll(&mut self, ns: u64) {
         self.poll_ops += 1;
         self.charge(ns);
@@ -83,11 +89,15 @@ impl CpuLedger {
 /// * holders serialize: the lock is a single-server queue.
 #[derive(Clone, Debug)]
 pub struct MutexModel {
+    /// Uncontended acquire+release cost.
     pub uncontended_ns: u64,
+    /// Added coherence cost per extra contending thread.
     pub per_contender_ns: u64,
     /// Single-server horizon: next time the lock is free.
     free_at: Ns,
+    /// Lifetime acquisitions.
     pub acquisitions: u64,
+    /// Total time acquirers spent queued behind the lock.
     pub contended_ns_total: u64,
 }
 
@@ -104,6 +114,7 @@ impl Default for MutexModel {
 }
 
 impl MutexModel {
+    /// Model with the default calibrated costs.
     pub fn new() -> Self {
         Self::default()
     }

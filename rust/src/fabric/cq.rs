@@ -9,16 +9,20 @@ use super::wqe::Cqe;
 /// RNICs raise a fatal async event — we latch a flag and count drops).
 #[derive(Debug)]
 pub struct Cq {
+    /// This CQ's id on its node.
     pub cqn: Cqn,
     queue: VecDeque<Cqe>,
     capacity: usize,
+    /// Latched on the first overflow (fatal on real RNICs).
     pub overflowed: bool,
+    /// CQEs dropped by overflow.
     pub dropped: u64,
     /// Lifetime count of CQEs pushed (metrics).
     pub total: u64,
 }
 
 impl Cq {
+    /// Create a CQ with `capacity` entries.
     pub fn new(cqn: Cqn, capacity: usize) -> Self {
         Cq {
             cqn,
@@ -47,10 +51,12 @@ impl Cq {
         self.queue.drain(..k).collect()
     }
 
+    /// Completions waiting to be polled.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when no completions are pending.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

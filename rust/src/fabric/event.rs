@@ -47,28 +47,34 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// Empty queue.
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), seq: 0 }
     }
 
+    /// Schedule `event` at absolute time `at`.
     pub fn push(&mut self, at: Ns, event: E) {
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Entry { at, seq, event });
     }
 
+    /// Remove and return the earliest event (FIFO within an instant).
     pub fn pop(&mut self) -> Option<(Ns, E)> {
         self.heap.pop().map(|e| (e.at, e.event))
     }
 
+    /// Time of the earliest pending event.
     pub fn peek_time(&self) -> Option<Ns> {
         self.heap.peek().map(|e| e.at)
     }
 
+    /// Pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// True when the timeline is drained.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

@@ -10,22 +10,30 @@ use std::collections::BTreeMap;
 
 use super::types::Mrkey;
 
+/// Base page size (one MTT entry per 4 KiB without huge pages).
 pub const PAGE_4K: u64 = 4 << 10;
+/// Huge page size (one MTT entry per 2 MiB).
 pub const PAGE_HUGE_2M: u64 = 2 << 20;
 
 /// Access flags for a registered region.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Access {
+    /// Local writes (recv landing) allowed.
     pub local_write: bool,
+    /// Remote RDMA READ allowed.
     pub remote_read: bool,
+    /// Remote RDMA WRITE allowed.
     pub remote_write: bool,
 }
 
 impl Access {
+    /// Local read/write only; no remote access.
     pub const LOCAL_ONLY: Access =
         Access { local_write: true, remote_read: false, remote_write: false };
+    /// Remote READ + WRITE allowed (the pool default).
     pub const REMOTE_RW: Access =
         Access { local_write: true, remote_read: true, remote_write: true };
+    /// Remote READ only.
     pub const REMOTE_RO: Access =
         Access { local_write: true, remote_read: true, remote_write: false };
 }
@@ -33,15 +41,22 @@ impl Access {
 /// One registered memory region.
 #[derive(Clone, Debug)]
 pub struct MemoryRegion {
+    /// The region's lkey/rkey.
     pub key: Mrkey,
+    /// Base address in the node's flat virtual space.
     pub addr: u64,
+    /// Registered length in bytes.
     pub len: u64,
+    /// Permission flags checked on every remote op.
     pub access: Access,
+    /// Registered with 2 MiB pages (512× fewer MTT entries).
     pub huge_pages: bool,
+    /// Page-table entries this region pins (ICM pressure input).
     pub mtt_entries: u64,
 }
 
 impl MemoryRegion {
+    /// Does `[addr, addr+len)` fall entirely inside this region?
     pub fn contains(&self, addr: u64, len: u64) -> bool {
         addr >= self.addr && addr.saturating_add(len) <= self.addr + self.len
     }
@@ -61,6 +76,7 @@ pub struct MrTable {
 }
 
 impl MrTable {
+    /// Empty table with a fresh key/address allocator.
     pub fn new() -> Self {
         MrTable { regions: BTreeMap::new(), next_key: 1, next_addr: 0x1000, ..Default::default() }
     }
@@ -82,6 +98,7 @@ impl MrTable {
         mr
     }
 
+    /// Remove a region; false if the key is unknown.
     pub fn deregister(&mut self, key: Mrkey) -> bool {
         if let Some(mr) = self.regions.remove(&key.0) {
             self.registered_bytes -= mr.len;
@@ -92,6 +109,7 @@ impl MrTable {
         }
     }
 
+    /// Look a region up by key.
     pub fn get(&self, key: Mrkey) -> Option<&MemoryRegion> {
         self.regions.get(&key.0)
     }
@@ -120,6 +138,7 @@ impl MrTable {
         })
     }
 
+    /// Number of live regions.
     pub fn region_count(&self) -> usize {
         self.regions.len()
     }

@@ -18,24 +18,34 @@ pub const QP_CONTEXT_BYTES: u64 = 256;
 /// QP state machine (subset: the states the verbs path exercises).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QpState {
+    /// Freshly created; not usable yet.
     Reset,
+    /// Initialized (access rights set).
     Init,
     /// Ready To Receive.
     Rtr,
     /// Ready To Send (fully connected).
     Rts,
+    /// Fatal error; all posts rejected.
     Error,
 }
 
 /// Errors surfaced by post-time validation.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum PostError {
+    /// QP is not in a postable state.
     BadState(QpState),
+    /// Verb not in the transport's Table-1 row.
     UnsupportedVerb(QpTransport),
+    /// Message exceeds the transport's maximum size.
     TooLong { len: u64, max: u64 },
+    /// Send queue at capacity.
     SqFull,
+    /// Receive queue at capacity (or the QP uses an SRQ).
     RqFull,
+    /// UD send without an address handle.
     MissingUdDest,
+    /// One-sided verb without an rkey.
     MissingRemoteKey,
 }
 
@@ -56,8 +66,11 @@ impl std::fmt::Display for PostError {
 /// A queue pair.
 #[derive(Debug)]
 pub struct Qp {
+    /// This QP's number on its node.
     pub qpn: Qpn,
+    /// Service type (RC/UC/UD).
     pub transport: QpTransport,
+    /// Current state-machine state.
     pub state: QpState,
     /// Connected peer (RC/UC); UD resolves per-WR address handles.
     pub peer: Option<(NodeId, Qpn)>,
@@ -67,20 +80,28 @@ pub struct Qp {
     pub recv_cq: Cqn,
     /// Receive WQEs come from the SRQ if set, else the private RQ.
     pub srq: Option<Srqn>,
+    /// Send queue (WQEs awaiting NIC issue).
     pub sq: VecDeque<SendWr>,
+    /// Private receive queue (unused when an SRQ is attached).
     pub rq: VecDeque<RecvWr>,
+    /// Send-queue capacity.
     pub sq_depth: usize,
+    /// Receive-queue capacity.
     pub rq_depth: usize,
     /// RC requester window: max outstanding (un-acked / un-responded) msgs.
     pub max_outstanding: usize,
+    /// Currently un-acked / un-responded messages.
     pub outstanding: usize,
     /// Lifetime counters (metrics / tests).
     pub posted_send: u64,
+    /// Lifetime receive WRs posted.
     pub posted_recv: u64,
+    /// Lifetime send-side completions.
     pub completed: u64,
 }
 
 impl Qp {
+    /// Create a QP in the Reset state.
     pub fn new(
         qpn: Qpn,
         transport: QpTransport,

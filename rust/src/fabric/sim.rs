@@ -33,15 +33,21 @@ use super::wqe::{Cqe, CqeKind, RecvWr, SendWr};
 /// Whole-fabric configuration.
 #[derive(Clone, Debug)]
 pub struct FabricConfig {
+    /// Machines in the cluster.
     pub nodes: usize,
+    /// CPU cores per machine.
     pub cores_per_node: u32,
+    /// Per-port line rate.
     pub link_gbps: f64,
+    /// Maximum frame payload.
     pub mtu: u64,
     /// One-way propagation + switch latency.
     pub switch_latency_ns: u64,
+    /// RNIC engine cost/capacity model.
     pub nic: NicConfig,
     /// Default queue depths.
     pub sq_depth: usize,
+    /// Default receive-queue depth.
     pub rq_depth: usize,
     /// RC requester window (outstanding messages per QP).
     pub max_outstanding: usize,
@@ -49,6 +55,7 @@ pub struct FabricConfig {
     pub post_cpu_ns: u64,
     /// CPU cost of a poll_cq call + per-CQE handling.
     pub poll_cpu_ns: u64,
+    /// CPU cost per CQE handled after a poll.
     pub per_cqe_cpu_ns: u64,
 }
 
@@ -98,12 +105,19 @@ struct InFlight {
 
 /// One machine.
 pub struct NodeState {
+    /// This node's id.
     pub id: NodeId,
+    /// Queue pairs by QPN.
     pub qps: HashMap<u32, Qp>,
+    /// Completion queues by CQN.
     pub cqs: HashMap<u32, Cq>,
+    /// Shared receive queues by SRQN.
     pub srqs: HashMap<u32, Srq>,
+    /// Registered memory regions.
     pub mrs: MrTable,
+    /// The NIC's on-chip context cache (Fig 5's mechanism).
     pub cache: IcmCache,
+    /// Per-node CPU accounting.
     pub cpu: CpuLedger,
     engine_busy_until: Ns,
     engine_queue: VecDeque<WorkItem>,
@@ -123,6 +137,7 @@ pub struct NodeState {
     dropped_msgs: std::collections::HashSet<(u32, u32, u64)>,
     /// Counters.
     pub protection_errors: u64,
+    /// RNR NAKs this node's NIC generated.
     pub rnr_naks_sent: u64,
     /// Payload bytes of data-bearing frames processed by this NIC's rx
     /// path — the smooth wire-level goodput counter the scenario drivers
@@ -175,18 +190,23 @@ impl NodeState {
 
 /// The simulator.
 pub struct Sim {
+    /// The configuration the fabric was built from.
     pub cfg: FabricConfig,
     clock: Ns,
     events: EventQueue<Event>,
+    /// Per-machine state, indexed by [`NodeId`].
     pub nodes: Vec<NodeState>,
+    /// The switch + ports.
     pub fabric: Fabric,
     /// Completed payload bytes (data verbs), for quick aggregate throughput.
     pub completed_bytes: u64,
+    /// Completed data messages (companion counter).
     pub completed_msgs: u64,
     steps: u64,
 }
 
 impl Sim {
+    /// Build a quiescent cluster at virtual time zero.
     pub fn new(cfg: FabricConfig) -> Self {
         let fabric = Fabric::new(cfg.nodes, cfg.link_gbps, cfg.mtu, Ns(cfg.switch_latency_ns));
         let nodes = (0..cfg.nodes)
@@ -204,20 +224,24 @@ impl Sim {
         }
     }
 
+    /// Current virtual time.
     pub fn now(&self) -> Ns {
         self.clock
     }
 
+    /// A node's state.
     pub fn node(&self, id: NodeId) -> &NodeState {
         &self.nodes[id.0 as usize]
     }
 
+    /// A node's state, mutably.
     pub fn node_mut(&mut self, id: NodeId) -> &mut NodeState {
         &mut self.nodes[id.0 as usize]
     }
 
     // ------------------------------------------------------------ verbs API
 
+    /// Create a completion queue on `node`.
     pub fn create_cq(&mut self, node: NodeId, capacity: usize) -> Cqn {
         let n = self.node_mut(node);
         let cqn = Cqn(n.next_cqn);
@@ -226,6 +250,7 @@ impl Sim {
         cqn
     }
 
+    /// Create a shared receive queue on `node`.
     pub fn create_srq(&mut self, node: NodeId, capacity: usize, watermark: usize) -> Srqn {
         let n = self.node_mut(node);
         let srqn = Srqn(n.next_srqn);
@@ -234,6 +259,7 @@ impl Sim {
         srqn
     }
 
+    /// Create a QP on `node` (Reset state; connect/activate it next).
     pub fn create_qp(
         &mut self,
         node: NodeId,
@@ -249,11 +275,13 @@ impl Sim {
         qpn
     }
 
+    /// Point a QP's receive side at an SRQ.
     pub fn attach_srq(&mut self, node: NodeId, qpn: Qpn, srqn: Srqn) {
         let n = self.node_mut(node);
         n.qps.get_mut(&qpn.0).expect("no such qp").srq = Some(srqn);
     }
 
+    /// Register a memory region on `node`.
     pub fn reg_mr(&mut self, node: NodeId, len: u64, access: Access, huge: bool) -> MemoryRegion {
         self.node_mut(node).mrs.register(len, access, huge)
     }
@@ -322,6 +350,7 @@ impl Sim {
         Ok(accepted)
     }
 
+    /// Post a receive WR on a QP's private RQ. Charges driver CPU.
     pub fn post_recv(&mut self, node: NodeId, qpn: Qpn, wr: RecvWr) -> Result<(), PostError> {
         let post_cpu = self.cfg.post_cpu_ns;
         let n = self.node_mut(node);
@@ -332,6 +361,7 @@ impl Sim {
             .post_recv(wr)
     }
 
+    /// Post a receive WR on an SRQ; false when full. Charges driver CPU.
     pub fn post_srq_recv(&mut self, node: NodeId, srqn: Srqn, wr: RecvWr) -> bool {
         let post_cpu = self.cfg.post_cpu_ns;
         let n = self.node_mut(node);
@@ -460,6 +490,7 @@ impl Sim {
         out
     }
 
+    /// Events still on the timeline.
     pub fn pending_events(&self) -> usize {
         self.events.len()
     }

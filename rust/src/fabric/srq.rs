@@ -14,8 +14,10 @@ use super::wqe::RecvWr;
 /// Hardware receive WQE size (ConnectX family: 16 B per SGE slot, one SGE).
 pub const RECV_WQE_BYTES: u64 = 16;
 
+/// A shared receive queue: a pool of receive WQEs many QPs draw from.
 #[derive(Debug)]
 pub struct Srq {
+    /// This SRQ's id on its node.
     pub srqn: Srqn,
     queue: VecDeque<RecvWr>,
     capacity: usize,
@@ -23,12 +25,14 @@ pub struct Srq {
     pub watermark: usize,
     /// Lifetime counters.
     pub consumed: u64,
+    /// Times a consume left the queue below the watermark.
     pub starved_events: u64,
     /// Incoming SENDs that found no WQE (-> RNR at the requester).
     pub rnr_drops: u64,
 }
 
 impl Srq {
+    /// Create an empty SRQ with `capacity` slots and a starvation `watermark`.
     pub fn new(srqn: Srqn, capacity: usize, watermark: usize) -> Self {
         Srq {
             srqn,
@@ -67,10 +71,12 @@ impl Srq {
         }
     }
 
+    /// Receive WQEs currently posted.
     pub fn posted(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when posted WQEs are below the watermark (limit event).
     pub fn is_starving(&self) -> bool {
         self.queue.len() < self.watermark
     }

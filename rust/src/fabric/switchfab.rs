@@ -20,7 +20,9 @@ pub const FRAME_OVERHEAD_BYTES: u64 = 82;
 #[derive(Clone, Debug, Default)]
 pub struct Port {
     busy_until: Ns,
+    /// Wire bytes through this port (incl. per-frame overhead).
     pub bytes: u64,
+    /// Frames through this port.
     pub frames: u64,
 }
 
@@ -36,6 +38,7 @@ impl Port {
         done
     }
 
+    /// When the port finishes serializing its current backlog.
     pub fn busy_until(&self) -> Ns {
         self.busy_until
     }
@@ -52,7 +55,9 @@ impl Port {
 /// The cluster network: per-node ingress/egress ports + fixed latency.
 #[derive(Debug)]
 pub struct Fabric {
+    /// Per-port line rate.
     pub gbps: f64,
+    /// Maximum frame payload.
     pub mtu: u64,
     /// Propagation + switch latency, one way.
     pub base_latency: Ns,
@@ -65,6 +70,7 @@ pub struct Fabric {
 }
 
 impl Fabric {
+    /// Build a fabric of `nodes` ports at `gbps` line rate.
     pub fn new(nodes: usize, gbps: f64, mtu: u64, base_latency: Ns) -> Self {
         Fabric {
             gbps,
@@ -117,6 +123,7 @@ impl Fabric {
         out
     }
 
+    /// This node's egress-port counters.
     pub fn egress_stats(&self, node: NodeId) -> &Port {
         &self.egress[node.0 as usize]
     }
@@ -126,6 +133,7 @@ impl Fabric {
         self.egress[node.0 as usize].busy_until()
     }
 
+    /// This node's ingress-port counters.
     pub fn ingress_stats(&self, node: NodeId) -> &Port {
         &self.ingress[node.0 as usize]
     }

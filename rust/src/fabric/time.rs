@@ -8,32 +8,40 @@ use std::ops::{Add, AddAssign, Sub};
 pub struct Ns(pub u64);
 
 impl Ns {
+    /// Time zero.
     pub const ZERO: Ns = Ns(0);
 
+    /// Microseconds → [`Ns`].
     pub fn from_us(us: u64) -> Ns {
         Ns(us * 1_000)
     }
 
+    /// Milliseconds → [`Ns`].
     pub fn from_ms(ms: u64) -> Ns {
         Ns(ms * 1_000_000)
     }
 
+    /// Seconds (f64) → [`Ns`].
     pub fn from_secs_f64(s: f64) -> Ns {
         Ns((s * 1e9) as u64)
     }
 
+    /// This span in seconds.
     pub fn as_secs_f64(self) -> f64 {
         self.0 as f64 / 1e9
     }
 
+    /// This span in microseconds.
     pub fn as_us_f64(self) -> f64 {
         self.0 as f64 / 1e3
     }
 
+    /// Later of the two instants.
     pub fn max(self, other: Ns) -> Ns {
         Ns(self.0.max(other.0))
     }
 
+    /// `self - other`, clamped at zero.
     pub fn saturating_sub(self, other: Ns) -> Ns {
         Ns(self.0.saturating_sub(other.0))
     }

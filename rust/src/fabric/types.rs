@@ -96,6 +96,7 @@ pub fn max_msg_size(transport: QpTransport, mtu: u64) -> u64 {
 /// Completion status codes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WcStatus {
+    /// Operation completed successfully.
     Success,
     /// RQ/SRQ had no posted WQE for an incoming SEND.
     RnrRetryExceeded,

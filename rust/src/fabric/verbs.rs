@@ -15,7 +15,9 @@ use super::wqe::{RecvWr, SendWr};
 /// A fully-connected (RTS↔RTS) QP pair.
 #[derive(Clone, Copy, Debug)]
 pub struct QpPair {
+    /// End A: (node, QPN).
     pub a: (NodeId, Qpn),
+    /// End B: (node, QPN).
     pub b: (NodeId, Qpn),
 }
 
@@ -112,10 +114,15 @@ pub fn replenish_srq(
 /// One row of the Table-1 capability probe.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CapabilityRow {
+    /// The probed transport.
     pub transport: QpTransport,
+    /// Two-sided SEND/RECV supported.
     pub send_recv: bool,
+    /// One-sided WRITE supported.
     pub write: bool,
+    /// One-sided READ supported.
     pub read: bool,
+    /// Maximum message size on this transport.
     pub max_msg: u64,
 }
 

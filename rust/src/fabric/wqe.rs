@@ -13,14 +13,17 @@ pub struct SendWr {
     /// Opaque 64-bit id returned in the initiator's CQE. RDMAvisor packs the
     /// vQPN into the low 32 bits (Fig 4).
     pub wr_id: u64,
+    /// Operation to perform.
     pub verb: Verb,
     /// Payload length in bytes (the simulator tracks extents, not bytes).
     pub len: u64,
     /// Local buffer (lkey + offset within the region).
     pub lkey: Mrkey,
+    /// Local buffer address.
     pub laddr: u64,
     /// Remote buffer for one-sided verbs (ignored for SEND).
     pub rkey: Option<Mrkey>,
+    /// Remote buffer address (one-sided verbs).
     pub raddr: u64,
     /// 4-byte immediate travelling with the message (SEND / WRITE-with-imm);
     /// RDMAvisor's vQPN carrier for two-sided traffic.
@@ -95,16 +98,19 @@ impl SendWr {
         }
     }
 
+    /// Attach immediate data (WRITE-with-imm / SEND).
     pub fn with_imm(mut self, imm: u32) -> SendWr {
         self.imm_data = Some(imm);
         self
     }
 
+    /// Suppress the local completion.
     pub fn unsignaled(mut self) -> SendWr {
         self.signaled = false;
         self
     }
 
+    /// Address a UD datagram (per-WR address handle).
     pub fn to_ud(mut self, node: NodeId, qpn: Qpn) -> SendWr {
         self.ud_dest = Some((node, qpn));
         self
@@ -114,9 +120,13 @@ impl SendWr {
 /// A receive work request (posted to an RQ or SRQ).
 #[derive(Clone, Debug)]
 pub struct RecvWr {
+    /// Returned in the responder-side CQE on consumption.
     pub wr_id: u64,
+    /// Landing buffer's local key.
     pub lkey: Mrkey,
+    /// Landing buffer address.
     pub laddr: u64,
+    /// Landing buffer capacity.
     pub len: u64,
 }
 
@@ -134,8 +144,11 @@ pub enum CqeKind {
 /// A completion queue element.
 #[derive(Clone, Debug)]
 pub struct Cqe {
+    /// The originating WR's id (vQPN carrier for one-sided verbs).
     pub wr_id: u64,
+    /// Which side/op this completion describes.
     pub kind: CqeKind,
+    /// Success or the failure class.
     pub status: WcStatus,
     /// Bytes transferred.
     pub len: u64,

@@ -2,9 +2,10 @@
 //!
 //! Each function sweeps the paper's parameter range, runs the deterministic
 //! scenario drivers, and returns the series as rows; `print_*` renders the
-//! paper-shaped table to stdout and optionally TSV. The criterion-style
-//! benches in `rust/benches/` call the same functions, so `cargo bench`
-//! and `rdmavisor figures --all` produce identical numbers.
+//! paper-shaped table and [`crate::metrics::Series`] handles TSV. The
+//! criterion-style benches in `rust/benches/` call the same functions, so
+//! `cargo bench`, `rdmavisor fig --id N` (JSON output) and
+//! `rdmavisor figures --all` all produce identical numbers.
 
 use crate::fabric::sim::FabricConfig;
 use crate::fabric::time::Ns;
@@ -39,11 +40,14 @@ pub const FIG78_APPS: &[u32] = &[1, 2, 4, 8, 16, 32];
 /// Short-run mode for tests/CI; full mode for the recorded experiments.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Budget {
+    /// Shrunken sweeps for tests/CI (`--quick` / RDMAVISOR_BENCH_QUICK).
     Quick,
+    /// The paper-scale sweeps.
     Full,
 }
 
 impl Budget {
+    /// Quick iff `RDMAVISOR_BENCH_QUICK` is set.
     pub fn from_env() -> Budget {
         if std::env::var("RDMAVISOR_BENCH_QUICK").is_ok() {
             Budget::Quick
@@ -94,14 +98,19 @@ pub fn table1() -> String {
 /// One Fig-1 series point: (size, Gb/s).
 #[derive(Clone, Copy, Debug)]
 pub struct Fig1Row {
+    /// Message size of this sweep point.
     pub msg_bytes: u64,
+    /// RC READ throughput, Gb/s.
     pub rc_read: f64,
+    /// RC WRITE throughput, Gb/s.
     pub rc_write: f64,
+    /// UC WRITE throughput, Gb/s.
     pub uc_write: f64,
     /// NaN above MTU (UD cannot carry it — Table 1).
     pub ud_send: f64,
 }
 
+/// Fig 1: single-QP-pair throughput vs message size, per (transport, verb).
 pub fn fig1(budget: Budget) -> Vec<Fig1Row> {
     let d = budget.duration();
     let window = 16;
@@ -121,6 +130,7 @@ pub fn fig1(budget: Budget) -> Vec<Fig1Row> {
         .collect()
 }
 
+/// Render the Fig-1 table.
 pub fn print_fig1(rows: &[Fig1Row]) -> String {
     let mut out = String::new();
     out.push_str("Fig 1: throughput (Gb/s) vs message size, single QP pair, window 16\n");
@@ -144,13 +154,18 @@ pub fn print_fig1(rows: &[Fig1Row]) -> String {
 
 // ------------------------------------------------------------------- Fig 5
 
+/// One Fig-5 sweep point: naive vs RaaS at one connection count.
 #[derive(Clone, Copy, Debug)]
 pub struct Fig5Row {
+    /// Connection count of this sweep point.
     pub conns: usize,
+    /// One-QP-per-connection baseline stats.
     pub naive: RunStats,
+    /// RDMAvisor shared-QP stats.
     pub raas: RunStats,
 }
 
+/// Fig 5: scalability — random 64 KB READ throughput vs #connections.
 pub fn fig5(budget: Budget) -> Vec<Fig5Row> {
     let conns: Vec<usize> = match budget {
         Budget::Quick => vec![50, 200, 400, 600, 800],
@@ -172,6 +187,7 @@ pub fn fig5(budget: Budget) -> Vec<Fig5Row> {
         .collect()
 }
 
+/// Render the Fig-5 table.
 pub fn print_fig5(rows: &[Fig5Row]) -> String {
     let mut out = String::new();
     out.push_str("Fig 5: scalability — random 64 KB READ, throughput (Gb/s) vs #connections\n");
@@ -194,11 +210,16 @@ pub fn print_fig5(rows: &[Fig5Row]) -> String {
 
 // ------------------------------------------------------------------- Fig 6
 
+/// One Fig-6 sweep point: lock-free vs locked sharing at one thread count.
 #[derive(Clone, Copy, Debug)]
 pub struct Fig6Row {
+    /// Worker threads of this sweep point.
     pub threads: usize,
+    /// RDMAvisor lock-free sharing stats.
     pub raas: RunStats,
+    /// FaRM-style locked sharing, 3 threads per QP.
     pub locked_q3: RunStats,
+    /// FaRM-style locked sharing, 6 threads per QP.
     pub locked_q6: RunStats,
 }
 
@@ -228,6 +249,7 @@ pub fn fig6(budget: Budget) -> Vec<Fig6Row> {
         .collect()
 }
 
+/// Render the Fig-6 table.
 pub fn print_fig6(rows: &[Fig6Row]) -> String {
     let mut out = String::new();
     out.push_str("Fig 6: QP sharing — random 512 B READ, Mops vs worker threads\n");
@@ -246,12 +268,18 @@ pub fn print_fig6(rows: &[Fig6Row]) -> String {
 
 // --------------------------------------------------------------- Figs 7/8
 
+/// One Figs-7/8 sweep point: normalized resources at one app count.
 #[derive(Clone, Copy, Debug)]
 pub struct Fig78Row {
+    /// Applications of this sweep point.
     pub apps: u32,
+    /// Naive memory, in units of one naive app.
     pub naive_mem: f64,
+    /// RaaS memory, in units of one naive app.
     pub raas_mem: f64,
+    /// Naive CPU, in units of one naive app.
     pub naive_cpu: f64,
+    /// RaaS CPU, in units of one naive app.
     pub raas_cpu: f64,
 }
 
@@ -289,6 +317,7 @@ pub fn fig78(budget: Budget) -> Vec<Fig78Row> {
         .collect()
 }
 
+/// Render the Fig-7 (memory) table.
 pub fn print_fig7(rows: &[Fig78Row]) -> String {
     let mut out = String::new();
     out.push_str("Fig 7: normalized memory usage vs #applications (unit = 1 naive app)\n");
@@ -299,6 +328,7 @@ pub fn print_fig7(rows: &[Fig78Row]) -> String {
     out
 }
 
+/// Render the Fig-8 (CPU) table.
 pub fn print_fig8(rows: &[Fig78Row]) -> String {
     let mut out = String::new();
     out.push_str("Fig 8: normalized CPU consumption vs #applications (unit = 1 naive app)\n");
@@ -357,6 +387,7 @@ pub fn batching_ablation(budget: Budget) -> String {
     out
 }
 
+/// `4096` → `"4KB"` — the tables' size formatter.
 pub fn human_size(b: u64) -> String {
     if b >= 1 << 20 {
         format!("{}MB", b >> 20)

@@ -17,13 +17,19 @@
 //! * [`baselines`] — the comparison systems of the evaluation: *naive* RDMA
 //!   (one QP per connection) and FaRM-style *locked* QP sharing.
 //!
-//! Supporting tiers: [`runtime`] loads AOT-compiled JAX/Pallas artifacts via
-//! PJRT and executes them from the serving example's hot path; [`apps`] are
-//! example applications written against the RaaS API; [`workload`] and
-//! [`metrics`] generate traffic and account results; [`figures`] regenerates
-//! every table/figure of the paper's evaluation; [`util`] contains the
-//! substrates the offline environment forced us to build ourselves (CLI,
-//! bench harness, property testing, config parsing, stats).
+//! Supporting tiers: [`runtime`] loads AOT-lowered model artifacts and
+//! executes them (simulated offline — see its module docs) from the serving
+//! example's hot path; [`apps`] are example applications written against
+//! the RaaS API; [`workload`] and [`metrics`] generate traffic and account
+//! results; [`figures`] regenerates every table/figure of the paper's
+//! evaluation; [`util`] contains the substrates the offline environment
+//! forced us to build ourselves (error type, CLI, bench harness, property
+//! testing, config parsing, stats).
+//!
+//! The crate compiles with **zero external dependencies** — std only; see
+//! `scripts/verify.sh` for the enforcement check.
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod fabric;
@@ -36,5 +42,7 @@ pub mod metrics;
 pub mod config;
 pub mod figures;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide error type (see [`util::error`]).
+pub use util::error::Error;
+/// Crate-wide result type (see [`util::error`]).
+pub type Result<T> = util::error::Result<T>;

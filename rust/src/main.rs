@@ -1,22 +1,35 @@
-//! rdmavisor — CLI entrypoint.
+//! rdmavisor — the experiment-runner CLI.
 //!
-//! Subcommands:
-//! * `figures`   — regenerate the paper's tables/figures (`--all`,
-//!   `--table1`, `--fig1`, `--fig5`, `--fig6`, `--fig7`, `--fig8`,
-//!   `--send-staging`, `--batching`); `--tsv DIR` also writes TSVs.
-//! * `bench`     — one scenario run with explicit knobs (conns, size, …).
-//! * `serve`     — live serving smoke: load artifacts, run a batched
-//!   inference workload through the RaaS channels, report latency.
+//! One binary drives the whole reproduction. Subcommands:
+//!
+//! * `fig --id {1,5,6,7,8}` — regenerate a paper figure and print the
+//!   series as JSON on stdout (human-readable table on stderr). `--all`
+//!   runs every figure; `--quick` shrinks the sweeps; `--tsv DIR` also
+//!   writes TSVs.
+//! * `bench hotpath` — the hot-path microbenchmarks (SPSC ring, doorbell,
+//!   ICM cache, daemon submit) with JSON results.
+//! * `bench` — one scenario run with explicit knobs (`--system
+//!   raas|naive|locked`, `--conns`, `--size`, …), JSON result on stdout.
+//! * `demo {kv,rpc,inference}` — the example applications end-to-end over
+//!   the simulated fabric (inference uses real threads + the simulated
+//!   model executor), JSON stats on stdout.
+//! * `figures` — the legacy all-tables report (`--all`, `--table1`,
+//!   `--fig1` … `--send-staging`, `--batching`).
+//! * `serve` — live serving smoke: batched inference through the RaaS
+//!   channels, latency report.
 //! * `init-config` — write a documented sample cluster config.
-//! * `info`      — print fabric/daemon defaults and artifact status.
+//! * `info` — print fabric/daemon defaults and artifact status.
+
+use std::time::Instant;
 
 use rdmavisor::config;
 use rdmavisor::figures::{self, Budget};
 use rdmavisor::metrics::Series;
 use rdmavisor::util::cli::Args;
+use rdmavisor::util::jsonmini::{obj, Json};
 use rdmavisor::util::logging;
 use rdmavisor::workload::scenarios::{
-    locked_random_read, naive_random_read, raas_random_read, ScenarioCfg,
+    locked_random_read, naive_random_read, raas_random_read, RunStats, ScenarioCfg,
 };
 
 fn main() {
@@ -25,8 +38,10 @@ fn main() {
     logging::set_level_from_str(&args.str_or("log", "info"));
 
     match args.subcommand.as_deref() {
+        Some("fig") => fig_cmd(&args),
         Some("figures") => figures_cmd(&args),
         Some("bench") => bench_cmd(&args),
+        Some("demo") => demo_cmd(&args),
         Some("serve") => serve_cmd(&args),
         Some("init-config") => {
             let path = args.str_or("out", "cluster.toml");
@@ -36,11 +51,14 @@ fn main() {
         Some("info") => info_cmd(),
         _ => {
             eprintln!(
-                "usage: rdmavisor <figures|bench|serve|init-config|info> [--help]\n\
-                 \n  figures --all | --table1 --fig1 --fig5 --fig6 --fig7 --fig8 \
-                 --send-staging --batching [--quick] [--tsv DIR]\
+                "usage: rdmavisor <fig|figures|bench|demo|serve|init-config|info> [--help]\n\
+                 \n  fig --id 1|5|6|7|8 [--all] [--quick] [--tsv DIR]   (JSON on stdout)\
+                 \n  bench hotpath [--quick]                            (JSON on stdout)\
                  \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
                  [--window N] [--duration-ms MS] [--q N] [--config FILE]\
+                 \n  demo kv|rpc|inference [--gets N] [--calls N] [--requests N]\
+                 \n  figures --all | --table1 --fig1 --fig5 --fig6 --fig7 --fig8 \
+                 --send-staging --batching [--quick] [--tsv DIR]\
                  \n  serve [--clients N] [--requests N] [--artifacts DIR]\
                  \n  init-config [--out FILE]"
             );
@@ -57,6 +75,185 @@ fn budget(args: &Args) -> Budget {
     }
 }
 
+// ---------------------------------------------------------------- JSON glue
+
+/// JSON number that degrades NaN/inf to null (strict-JSON safe).
+fn num(f: f64) -> Json {
+    if f.is_finite() {
+        Json::Num(f)
+    } else {
+        Json::Null
+    }
+}
+
+fn series_to_json(s: &Series) -> Json {
+    obj(vec![
+        ("name", Json::Str(s.name.clone())),
+        ("x", Json::Str(s.x_label.clone())),
+        (
+            "series",
+            Json::Arr(s.y_labels.iter().map(|l| Json::Str(l.clone())).collect()),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                s.rows
+                    .iter()
+                    .map(|(x, ys)| {
+                        let mut row = vec![num(*x)];
+                        row.extend(ys.iter().map(|y| num(*y)));
+                        Json::Arr(row)
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn run_stats_json(st: &RunStats) -> Json {
+    obj(vec![
+        ("gbps", num(st.gbps)),
+        ("mops", num(st.mops)),
+        ("ops", Json::Num(st.ops as f64)),
+        ("p50_us", num(st.p50_us)),
+        ("p99_us", num(st.p99_us)),
+        ("mem_bytes", Json::Num(st.mem_bytes as f64)),
+        ("cpu_cores", num(st.cpu_cores)),
+        ("cache_hit_rate", num(st.cache_hit_rate)),
+        ("lock_wait_ms", num(st.lock_wait_ms)),
+    ])
+}
+
+// ------------------------------------------------------------------- `fig`
+
+/// Run one figure id; returns its [`Series`] plus the rendered
+/// paper-shaped table (callers choose the stream it goes to). Figures 7
+/// and 8 come from one shared sweep, memoized in `fig78_cache` so asking
+/// for both runs it once.
+fn run_fig(id: u64, b: Budget, fig78_cache: &mut Option<Vec<figures::Fig78Row>>) -> (Series, String) {
+    match id {
+        1 => {
+            let rows = figures::fig1(b);
+            let table = figures::print_fig1(&rows);
+            let mut s = Series::new(
+                "fig1_verbs",
+                "msg_bytes",
+                &["rc_read", "rc_write", "uc_write", "ud_send"],
+            );
+            for r in &rows {
+                s.push(r.msg_bytes as f64, vec![r.rc_read, r.rc_write, r.uc_write, r.ud_send]);
+            }
+            (s, table)
+        }
+        5 => {
+            let rows = figures::fig5(b);
+            let table = figures::print_fig5(&rows);
+            let mut s = Series::new(
+                "fig5_scalability",
+                "conns",
+                &["naive_gbps", "raas_gbps", "naive_cache", "raas_cache"],
+            );
+            for r in &rows {
+                s.push(
+                    r.conns as f64,
+                    vec![r.naive.gbps, r.raas.gbps, r.naive.cache_hit_rate, r.raas.cache_hit_rate],
+                );
+            }
+            (s, table)
+        }
+        6 => {
+            let rows = figures::fig6(b);
+            let table = figures::print_fig6(&rows);
+            let mut s = Series::new(
+                "fig6_qp_sharing",
+                "threads",
+                &["raas_mops", "lock_q3_mops", "lock_q6_mops"],
+            );
+            for r in &rows {
+                s.push(r.threads as f64, vec![r.raas.mops, r.locked_q3.mops, r.locked_q6.mops]);
+            }
+            (s, table)
+        }
+        7 => {
+            let rows = fig78_cache.get_or_insert_with(|| figures::fig78(b)).clone();
+            let table = figures::print_fig7(&rows);
+            let mut s = Series::new("fig7_memory", "apps", &["naive_mem", "raas_mem"]);
+            for r in &rows {
+                s.push(r.apps as f64, vec![r.naive_mem, r.raas_mem]);
+            }
+            (s, table)
+        }
+        8 => {
+            let rows = fig78_cache.get_or_insert_with(|| figures::fig78(b)).clone();
+            let table = figures::print_fig8(&rows);
+            let mut s = Series::new("fig8_cpu", "apps", &["naive_cpu", "raas_cpu"]);
+            for r in &rows {
+                s.push(r.apps as f64, vec![r.naive_cpu, r.raas_cpu]);
+            }
+            (s, table)
+        }
+        other => {
+            eprintln!("unknown figure id {other}: expected 1, 5, 6, 7 or 8");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn fig_cmd(args: &Args) {
+    let b = budget(args);
+    let mut ids: Vec<u64> = if args.flag("all") {
+        vec![1, 5, 6, 7, 8]
+    } else {
+        args.u64_list("id", &[])
+    };
+    // also accept bare positional ids: `rdmavisor fig 5`
+    for p in &args.positional {
+        if let Ok(n) = p.parse::<u64>() {
+            ids.push(n);
+        }
+    }
+    // order-preserving dedup (Vec::dedup only removes adjacent repeats)
+    let mut seen = std::collections::BTreeSet::new();
+    ids.retain(|id| seen.insert(*id));
+    if ids.is_empty() {
+        eprintln!("usage: rdmavisor fig --id 1|5|6|7|8 [--all] [--quick] [--tsv DIR]");
+        std::process::exit(2);
+    }
+
+    let t0 = Instant::now();
+    let mut series = Vec::new();
+    let mut figs = Vec::new();
+    let mut fig78_cache = None;
+    for &id in &ids {
+        let (s, table) = run_fig(id, b, &mut fig78_cache);
+        eprint!("{table}");
+        let mut f = series_to_json(&s);
+        if let Json::Obj(m) = &mut f {
+            m.insert("id".to_string(), Json::Num(id as f64));
+        }
+        figs.push(f);
+        series.push(s);
+    }
+    if let Some(dir) = args.get("tsv") {
+        for s in &series {
+            match s.write_tsv(dir) {
+                Ok(p) => eprintln!("wrote {p}"),
+                Err(e) => eprintln!("tsv write failed: {e}"),
+            }
+        }
+    }
+    let budget_name = if b == Budget::Quick { "quick" } else { "full" };
+    let doc = obj(vec![
+        ("command", Json::Str("fig".into())),
+        ("budget", Json::Str(budget_name.to_string())),
+        ("wall_ms", num(t0.elapsed().as_secs_f64() * 1e3)),
+        ("figures", Json::Arr(figs)),
+    ]);
+    println!("{}", doc.to_string());
+}
+
+// --------------------------------------------------------------- `figures`
+
 fn figures_cmd(args: &Args) {
     let b = budget(args);
     let all = args.flag("all");
@@ -66,58 +263,13 @@ fn figures_cmd(args: &Args) {
     if all || args.flag("table1") {
         println!("{}", figures::table1());
     }
-    if all || args.flag("fig1") {
-        let rows = figures::fig1(b);
-        println!("{}", figures::print_fig1(&rows));
-        let mut s = Series::new(
-            "fig1_verbs",
-            "msg_bytes",
-            &["rc_read", "rc_write", "uc_write", "ud_send"],
-        );
-        for r in &rows {
-            s.push(r.msg_bytes as f64, vec![r.rc_read, r.rc_write, r.uc_write, r.ud_send]);
+    let mut fig78_cache = None;
+    for (flag, id) in [("fig1", 1u64), ("fig5", 5), ("fig6", 6), ("fig7", 7), ("fig8", 8)] {
+        if all || args.flag(flag) {
+            let (s, table) = run_fig(id, b, &mut fig78_cache);
+            print!("{table}");
+            series.push(s);
         }
-        series.push(s);
-    }
-    if all || args.flag("fig5") {
-        let rows = figures::fig5(b);
-        println!("{}", figures::print_fig5(&rows));
-        let mut s = Series::new("fig5_scalability", "conns", &["naive_gbps", "raas_gbps"]);
-        for r in &rows {
-            s.push(r.conns as f64, vec![r.naive.gbps, r.raas.gbps]);
-        }
-        series.push(s);
-    }
-    if all || args.flag("fig6") {
-        let rows = figures::fig6(b);
-        println!("{}", figures::print_fig6(&rows));
-        let mut s = Series::new(
-            "fig6_qp_sharing",
-            "threads",
-            &["raas_mops", "lock_q3_mops", "lock_q6_mops"],
-        );
-        for r in &rows {
-            s.push(r.threads as f64, vec![r.raas.mops, r.locked_q3.mops, r.locked_q6.mops]);
-        }
-        series.push(s);
-    }
-    if all || args.flag("fig7") || args.flag("fig8") {
-        let rows = figures::fig78(b);
-        if all || args.flag("fig7") {
-            println!("{}", figures::print_fig7(&rows));
-        }
-        if all || args.flag("fig8") {
-            println!("{}", figures::print_fig8(&rows));
-        }
-        let mut s = Series::new(
-            "fig78_resources",
-            "apps",
-            &["naive_mem", "raas_mem", "naive_cpu", "raas_cpu"],
-        );
-        for r in &rows {
-            s.push(r.apps as f64, vec![r.naive_mem, r.raas_mem, r.naive_cpu, r.raas_cpu]);
-        }
-        series.push(s);
     }
     if all || args.flag("send-staging") {
         println!("{}", figures::send_staging_sweep());
@@ -135,7 +287,13 @@ fn figures_cmd(args: &Args) {
     }
 }
 
+// ----------------------------------------------------------------- `bench`
+
 fn bench_cmd(args: &Args) {
+    if args.positional.first().map(|s| s.as_str()) == Some("hotpath") {
+        bench_hotpath(args);
+        return;
+    }
     let mut cfg = match args.get("config") {
         Some(path) => config::from_file(path).expect("config").scenario,
         None => ScenarioCfg::default(),
@@ -153,7 +311,7 @@ fn bench_cmd(args: &Args) {
         "locked" => locked_random_read(&cfg, args.usize_or("q", 3)),
         _ => raas_random_read(&cfg),
     };
-    println!(
+    eprintln!(
         "{system}: conns={} size={} -> {:.2} Gb/s  {:.3} Mops  p50={:.1}µs p99={:.1}µs  \
          mem={:.1}MB cpu={:.2} cores  cache={:.1}%",
         cfg.conns,
@@ -166,24 +324,267 @@ fn bench_cmd(args: &Args) {
         st.cpu_cores,
         st.cache_hit_rate * 100.0
     );
+    let doc = obj(vec![
+        ("command", Json::Str("bench".into())),
+        ("system", Json::Str(system)),
+        ("conns", Json::Num(cfg.conns as f64)),
+        ("msg_bytes", Json::Num(cfg.msg_bytes as f64)),
+        ("window", Json::Num(cfg.window as f64)),
+        ("stats", run_stats_json(&st)),
+    ]);
+    println!("{}", doc.to_string());
 }
 
-fn serve_cmd(args: &Args) {
+fn bench_hotpath(args: &Args) {
+    use rdmavisor::fabric::cache::{IcmCache, IcmKey};
+    use rdmavisor::fabric::sim::{FabricConfig, Sim};
+    use rdmavisor::fabric::types::NodeId;
+    use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig};
+    use rdmavisor::raas::shmem::{Channel, Descriptor, SpscRing};
+    use rdmavisor::util::bench::Bencher;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let mut b = Bencher::from_env();
+    if args.flag("quick") {
+        b.warmup = Duration::from_millis(20);
+        b.max_time = Duration::from_millis(300);
+        b.min_iters = 3;
+    }
+
+    // lock-free SPSC ring, single-threaded round trip
+    let ring: Arc<SpscRing<Descriptor>> = SpscRing::new(4096);
+    b.bench("shmem/spsc_push_pop", || {
+        ring.push(Descriptor::new(1, 2, 3, 4, 5)).unwrap();
+        ring.pop().unwrap()
+    });
+
+    // doorbell ring + non-blocking wait
+    let ch = Channel::new(16).unwrap();
+    b.bench("shmem/doorbell_ring_wait", || {
+        ch.submit_bell.ring();
+        ch.submit_bell.wait_timeout(100)
+    });
+
+    // ICM cache touch (hit path)
+    let mut cache = IcmCache::new(400);
+    for i in 0..400u32 {
+        cache.touch(IcmKey::Qpc(i));
+    }
+    let mut i = 0u32;
+    b.bench("fabric/icm_touch_hit", || {
+        i = (i + 1) % 400;
+        cache.touch(IcmKey::Qpc(i))
+    });
+
+    // daemon submit path (ring + selector + lease + batch append)
+    {
+        let mut fcfg = FabricConfig::default();
+        fcfg.nodes = 2;
+        fcfg.sq_depth = 1 << 20;
+        let mut sim = Sim::new(fcfg);
+        let mut daemons = vec![
+            Daemon::start(&mut sim, NodeId(0), DaemonConfig::default()),
+            Daemon::start(&mut sim, NodeId(1), DaemonConfig::default()),
+        ];
+        let sapp = daemons[1].register_app();
+        daemons[1].listen(sapp, 1);
+        let app = daemons[0].register_app();
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+        let mut tag = 0u64;
+        b.bench("raas/submit_read", || {
+            tag += 1;
+            let r = daemons[0].read(&mut sim, conn, 4096, (tag * 4096) % (1 << 20), tag);
+            if tag % 1024 == 0 {
+                daemons[0].pump(&mut sim);
+                while sim.step().is_some() {}
+                daemons[0].pump(&mut sim);
+                while daemons[0].recv_zero_copy(&mut sim, app).is_some() {}
+            }
+            r.is_ok()
+        });
+    }
+
+    let results: Vec<Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            let mut pairs = vec![
+                ("name", Json::Str(r.name.clone())),
+                ("iters", Json::Num(r.iters as f64)),
+                ("mean_ns", num(r.mean_ns)),
+                ("p50_ns", Json::Num(r.p50_ns as f64)),
+                ("p99_ns", Json::Num(r.p99_ns as f64)),
+            ];
+            if let Some((k, v)) = &r.metric {
+                pairs.push(("metric", obj(vec![(k.as_str(), num(*v))])));
+            }
+            obj(pairs)
+        })
+        .collect();
+    let doc = obj(vec![
+        ("command", Json::Str("bench".into())),
+        ("mode", Json::Str("hotpath".into())),
+        ("results", Json::Arr(results)),
+    ]);
+    println!("{}", doc.to_string());
+}
+
+// ------------------------------------------------------------------ `demo`
+
+fn demo_cmd(args: &Args) {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("kv") => demo_kv(args),
+        Some("rpc") => demo_rpc(args),
+        Some("inference") => demo_inference(args),
+        _ => {
+            eprintln!("usage: rdmavisor demo kv|rpc|inference");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Alternate sim progress and daemon pumps until the timeline drains.
+fn settle(sim: &mut rdmavisor::fabric::sim::Sim, daemons: &mut [rdmavisor::raas::daemon::Daemon]) {
+    for _ in 0..2_000_000 {
+        for d in daemons.iter_mut() {
+            d.pump(sim);
+        }
+        if sim.step().is_none() {
+            for d in daemons.iter_mut() {
+                d.pump(sim);
+            }
+            if sim.pending_events() == 0 {
+                return;
+            }
+        }
+    }
+    eprintln!("warning: demo did not quiesce");
+}
+
+fn two_node_cluster() -> (rdmavisor::fabric::sim::Sim, Vec<rdmavisor::raas::daemon::Daemon>) {
+    use rdmavisor::fabric::sim::{FabricConfig, Sim};
+    use rdmavisor::fabric::types::NodeId;
+    use rdmavisor::raas::daemon::{Daemon, DaemonConfig};
+    let mut fcfg = FabricConfig::default();
+    fcfg.nodes = 2;
+    fcfg.sq_depth = 8192;
+    let mut sim = Sim::new(fcfg);
+    let daemons = (0..2)
+        .map(|i| Daemon::start(&mut sim, NodeId(i), DaemonConfig::default()))
+        .collect();
+    (sim, daemons)
+}
+
+fn demo_kv(args: &Args) {
+    use rdmavisor::apps::kv::{KvClient, KvLayout, KvServer};
+    use rdmavisor::raas::daemon::connect_via;
+
+    let gets = args.u64_or("gets", 512);
+    let puts = args.u64_or("puts", 16);
+    let seed = args.u64_or("seed", 7);
+    let t0 = Instant::now();
+
+    let (mut sim, mut daemons) = two_node_cluster();
+    let layout = KvLayout { slots: 4096, slot_bytes: 1024 };
+    let mut server = KvServer::new(&mut daemons[1], 6000, layout);
+    let capp = daemons[0].register_app();
+    let conn = connect_via(&mut sim, &mut daemons, 0, capp, 1, 6000).unwrap();
+    let mut client = KvClient::new(capp, conn, layout, seed, 0.99);
+
+    for _ in 0..gets {
+        client.get(&mut sim, &mut daemons[0]).expect("kv get");
+    }
+    for _ in 0..puts {
+        client.put(&mut sim, &mut daemons[0], 512).expect("kv put");
+    }
+    settle(&mut sim, &mut daemons);
+    client.drain(&mut sim, &mut daemons[0]);
+    server.service(&mut sim, &mut daemons[1]);
+
+    let sim_s = sim.now().as_secs_f64();
+    let doc = obj(vec![
+        ("command", Json::Str("demo".into())),
+        ("app", Json::Str("kv".into())),
+        ("gets_issued", Json::Num(client.gets_issued as f64)),
+        ("puts_issued", Json::Num(client.puts_issued as f64)),
+        ("ops_completed", Json::Num(client.gets_done as f64)),
+        ("puts_applied", Json::Num(server.puts_applied as f64)),
+        ("sim_ms", num(sim_s * 1e3)),
+        (
+            "mops",
+            num(if sim_s > 0.0 { client.gets_done as f64 / sim_s / 1e6 } else { 0.0 }),
+        ),
+        ("wall_ms", num(t0.elapsed().as_secs_f64() * 1e3)),
+    ]);
+    println!("{}", doc.to_string());
+}
+
+fn demo_rpc(args: &Args) {
+    use rdmavisor::apps::rpc::{RpcClient, RpcServer};
+    use rdmavisor::raas::daemon::connect_via;
+
+    let calls = args.u64_or("calls", 256);
+    let req_bytes = args.u64_or("req-bytes", 128);
+    let resp_bytes = args.u64_or("resp-bytes", 256);
+    let t0 = Instant::now();
+
+    let (mut sim, mut daemons) = two_node_cluster();
+    let mut server = RpcServer::new(&mut daemons[1], 5000, resp_bytes);
+    let capp = daemons[0].register_app();
+    let conn = connect_via(&mut sim, &mut daemons, 0, capp, 1, 5000).unwrap();
+    let mut client = RpcClient::new(capp, conn, req_bytes);
+
+    for _ in 0..calls {
+        client.call(&mut sim, &mut daemons[0]).expect("rpc call");
+    }
+    // drive: the server must get service() turns to reply
+    for _ in 0..2_000_000 {
+        daemons[0].pump(&mut sim);
+        server.service(&mut sim, &mut daemons[1]).expect("rpc service");
+        daemons[1].pump(&mut sim);
+        if sim.step().is_none() {
+            daemons[0].pump(&mut sim);
+            server.service(&mut sim, &mut daemons[1]).expect("rpc service");
+            daemons[1].pump(&mut sim);
+            if sim.pending_events() == 0 {
+                break;
+            }
+        }
+    }
+    client.drain(&mut sim, &mut daemons[0]);
+
+    let sim_s = sim.now().as_secs_f64();
+    let doc = obj(vec![
+        ("command", Json::Str("demo".into())),
+        ("app", Json::Str("rpc".into())),
+        ("calls", Json::Num(client.sent as f64)),
+        ("served", Json::Num(server.served as f64)),
+        ("responses", Json::Num(client.responses as f64)),
+        ("sim_ms", num(sim_s * 1e3)),
+        (
+            "krps",
+            num(if sim_s > 0.0 { client.responses as f64 / sim_s / 1e3 } else { 0.0 }),
+        ),
+        ("wall_ms", num(t0.elapsed().as_secs_f64() * 1e3)),
+    ]);
+    println!("{}", doc.to_string());
+}
+
+/// Wall-clock serving stats shared by `serve` and `demo inference`.
+struct ServeRun {
+    done: u64,
+    wall_s: f64,
+    p50_us: u64,
+    p99_us: u64,
+    mean_batch: f64,
+    model_ms: f64,
+}
+
+fn run_serving(artifacts: &str, clients: usize, requests_per_client: u64) -> ServeRun {
     use rdmavisor::apps::inference::InferenceEngine;
-    use std::time::Instant;
 
-    let dir = args.str_or("artifacts", "artifacts");
-    let clients = args.usize_or("clients", 4);
-    let requests = args.u64_or("requests", 64);
-
-    let manifest = rdmavisor::runtime::Manifest::load(&dir)
-        .expect("load artifacts (run `make artifacts` first)");
-    println!(
-        "variants={:?}",
-        manifest.variants.iter().map(|v| v.name.clone()).collect::<Vec<_>>()
-    );
-    let engine = InferenceEngine::new(&dir, clients, 1024);
-
+    let engine = InferenceEngine::new(artifacts, clients, 1024);
     let server = {
         let engine = engine.clone();
         std::thread::spawn(move || engine.serve_loop())
@@ -194,7 +595,7 @@ fn serve_cmd(args: &Args) {
     let mut outstanding: Vec<Vec<(u64, Instant)>> = vec![Vec::new(); clients];
     let mut done = 0u64;
     let mut next_tag = 0u64;
-    let total = requests * clients as u64;
+    let total = requests_per_client * clients as u64;
     while done < total {
         for c in 0..clients {
             if outstanding[c].len() < 4 && next_tag < total && engine.submit(c, next_tag) {
@@ -215,20 +616,70 @@ fn serve_cmd(args: &Args) {
     let _ = server.join();
 
     latencies.sort_unstable();
-    let p = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+    let p = |q: f64| {
+        if latencies.is_empty() {
+            0
+        } else {
+            latencies[((latencies.len() - 1) as f64 * q) as usize]
+        }
+    };
     let st = engine.stats.lock().unwrap();
-    println!(
-        "served {} requests in {:.2?}: {:.0} req/s, p50={}µs p99={}µs, \
-         mean batch={:.2}, model time {:.1}ms total",
+    ServeRun {
         done,
-        wall,
-        done as f64 / wall.as_secs_f64(),
-        p(0.5),
-        p(0.99),
-        st.mean_batch(),
-        st.model_ns as f64 / 1e6
+        wall_s: wall.as_secs_f64(),
+        p50_us: p(0.5),
+        p99_us: p(0.99),
+        mean_batch: st.mean_batch(),
+        model_ms: st.model_ns as f64 / 1e6,
+    }
+}
+
+fn demo_inference(args: &Args) {
+    let clients = args.usize_or("clients", 2);
+    let requests = args.u64_or("requests", 64);
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let r = run_serving(&artifacts, clients, requests);
+    let doc = obj(vec![
+        ("command", Json::Str("demo".into())),
+        ("app", Json::Str("inference".into())),
+        ("clients", Json::Num(clients as f64)),
+        ("requests", Json::Num(r.done as f64)),
+        ("rps", num(r.done as f64 / r.wall_s.max(1e-9))),
+        ("p50_us", Json::Num(r.p50_us as f64)),
+        ("p99_us", Json::Num(r.p99_us as f64)),
+        ("mean_batch", num(r.mean_batch)),
+        ("model_ms", num(r.model_ms)),
+    ]);
+    println!("{}", doc.to_string());
+}
+
+// ----------------------------------------------------------------- `serve`
+
+fn serve_cmd(args: &Args) {
+    let dir = args.str_or("artifacts", "artifacts");
+    let clients = args.usize_or("clients", 4);
+    let requests = args.u64_or("requests", 64);
+
+    let manifest = rdmavisor::runtime::Manifest::load_or_synthetic(&dir);
+    println!(
+        "variants={:?}",
+        manifest.variants.iter().map(|v| v.name.clone()).collect::<Vec<_>>()
+    );
+    let r = run_serving(&dir, clients, requests);
+    println!(
+        "served {} requests in {:.2}s: {:.0} req/s, p50={}µs p99={}µs, \
+         mean batch={:.2}, model time {:.1}ms total",
+        r.done,
+        r.wall_s,
+        r.done as f64 / r.wall_s.max(1e-9),
+        r.p50_us,
+        r.p99_us,
+        r.mean_batch,
+        r.model_ms
     );
 }
+
+// ------------------------------------------------------------------ `info`
 
 fn info_cmd() {
     let f = figures::default_fabric();
@@ -242,6 +693,9 @@ fn info_cmd() {
     );
     match rdmavisor::runtime::Manifest::load("artifacts") {
         Ok(m) => println!("artifacts: {} variants (seed {})", m.variants.len(), m.seed),
-        Err(e) => println!("artifacts: not built ({e})"),
+        Err(e) => println!(
+            "artifacts: not built ({e}); the simulated executor will use the \
+             built-in synthetic manifest"
+        ),
     }
 }

@@ -11,13 +11,18 @@ use crate::fabric::time::Ns;
 /// A named table: one x column + named y series, row-major.
 #[derive(Clone, Debug, Default)]
 pub struct Series {
+    /// Table name (also the TSV filename stem).
     pub name: String,
+    /// Name of the x column.
     pub x_label: String,
+    /// Names of the y series.
     pub y_labels: Vec<String>,
+    /// Rows: (x, one value per y series).
     pub rows: Vec<(f64, Vec<f64>)>,
 }
 
 impl Series {
+    /// Empty series table.
     pub fn new(name: &str, x_label: &str, y_labels: &[&str]) -> Series {
         Series {
             name: name.to_string(),
@@ -27,11 +32,13 @@ impl Series {
         }
     }
 
+    /// Append a row; `ys` must match the series count.
     pub fn push(&mut self, x: f64, ys: Vec<f64>) {
         assert_eq!(ys.len(), self.y_labels.len(), "row width mismatch");
         self.rows.push((x, ys));
     }
 
+    /// Render as tab-separated values with a header row.
     pub fn to_tsv(&self) -> String {
         let mut s = format!("{}\t{}\n", self.x_label, self.y_labels.join("\t"));
         for (x, ys) in &self.rows {
@@ -44,6 +51,7 @@ impl Series {
         s
     }
 
+    /// Render as a GitHub-flavored markdown table.
     pub fn to_markdown(&self) -> String {
         let mut s = format!("| {} | {} |\n", self.x_label, self.y_labels.join(" | "));
         s.push_str(&format!("|{}|\n", "---|".repeat(self.y_labels.len() + 1)));
@@ -57,6 +65,7 @@ impl Series {
         s
     }
 
+    /// Write `<dir>/<name>.tsv`; returns the path.
     pub fn write_tsv(&self, dir: &str) -> std::io::Result<String> {
         std::fs::create_dir_all(dir)?;
         let path = format!("{dir}/{}.tsv", self.name);
@@ -86,10 +95,12 @@ pub struct RateMeter {
 }
 
 impl RateMeter {
+    /// Meter over a sliding `window`, bucketed `buckets` ways.
     pub fn new(window: Ns, buckets: u64) -> RateMeter {
         RateMeter { window, events: BTreeMap::new(), bucket: (window.0 / buckets).max(1) }
     }
 
+    /// Record one event at `now` and age out old buckets.
     pub fn tick(&mut self, now: Ns) {
         *self.events.entry(now.0 / self.bucket).or_insert(0) += 1;
         let cutoff = now.0.saturating_sub(self.window.0) / self.bucket;

@@ -11,6 +11,53 @@
 //!
 //! Normal users call `send`/`recv` and let RDMAvisor pick the RDMA
 //! operation; knowledgeable users pin one with `FLAGS` (e.g. `RC | WRITE`).
+//!
+//! The whole socket-like flow against a two-node simulated cluster:
+//!
+//! ```
+//! use rdmavisor::fabric::sim::{FabricConfig, Sim};
+//! use rdmavisor::fabric::types::NodeId;
+//! use rdmavisor::raas::api::{Flags, Target};
+//! use rdmavisor::raas::daemon::{connect_target, Daemon, DaemonConfig, Delivery};
+//! use rdmavisor::raas::transport::HostLoad;
+//!
+//! let mut sim = Sim::new(FabricConfig::default());
+//! let mut daemons: Vec<Daemon> = (0..2)
+//!     .map(|i| Daemon::start(&mut sim, NodeId(i), DaemonConfig::default()))
+//!     .collect();
+//!
+//! // server side: listen(Target, FLAGS) binds a port, accept() pops conns
+//! let server_app = daemons[1].register_app();
+//! daemons[1].listen(server_app, 7000);
+//!
+//! // client side: connect(Target, FLAGS) — the IPv4 host byte names node 1
+//! let client_app = daemons[0].register_app();
+//! let conn = connect_target(
+//!     &mut sim, &mut daemons, 0, client_app,
+//!     Target::Ipv4([10, 0, 0, 1], 7000), 7000,
+//! ).unwrap();
+//! let server_conn = daemons[1].accept(server_app, 7000).unwrap();
+//!
+//! // send(fd, buf, 256, 0): FLAGS=0 lets the daemon pick the verb —
+//! // 256 B is small, so it rides two-sided SEND over the shared RC QP
+//! daemons[0]
+//!     .send(&mut sim, conn, 256, Flags::default(), 1, HostLoad::default())
+//!     .unwrap();
+//!
+//! // drive the simulated fabric until the timeline drains
+//! for _ in 0..100_000 {
+//!     for d in daemons.iter_mut() { d.pump(&mut sim); }
+//!     if sim.step().is_none() {
+//!         for d in daemons.iter_mut() { d.pump(&mut sim); }
+//!         if sim.pending_events() == 0 { break; }
+//!     }
+//! }
+//!
+//! // recv(fd, ...) on the server: the message arrived on its conn
+//! let delivery = daemons[1].recv(&mut sim, server_app).unwrap();
+//! assert!(matches!(delivery, Delivery::Message { len: 256, .. }));
+//! # let _ = server_conn;
+//! ```
 
 use crate::fabric::types::{NodeId, QpTransport, Verb};
 
@@ -20,17 +67,24 @@ use crate::fabric::types::{NodeId, QpTransport, Verb};
 pub struct Flags(pub u32);
 
 impl Flags {
+    /// Pin the Reliable Connection transport.
     pub const RC: Flags = Flags(1 << 0);
+    /// Pin the Unreliable Connection transport.
     pub const UC: Flags = Flags(1 << 1);
+    /// Pin the Unreliable Datagram transport.
     pub const UD: Flags = Flags(1 << 2);
+    /// Pin the two-sided SEND verb.
     pub const SEND: Flags = Flags(1 << 3);
+    /// Pin the one-sided WRITE verb.
     pub const WRITE: Flags = Flags(1 << 4);
+    /// Pin the one-sided READ verb.
     pub const READ: Flags = Flags(1 << 5);
     /// recv-side: deliver in place from the registered pool (no copy-out).
     pub const ZERO_COPY: Flags = Flags(1 << 6);
     /// send-side: block until remotely acknowledged (default is async).
     pub const SYNC: Flags = Flags(1 << 7);
 
+    /// Are all of `other`'s bits set?
     #[inline]
     pub fn contains(self, other: Flags) -> bool {
         self.0 & other.0 == other.0
@@ -74,7 +128,9 @@ impl std::ops::BitOr for Flags {
 /// In the simulated cluster every form resolves to a [`NodeId`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Target {
+    /// IPv4 address + port.
     Ipv4([u8; 4], u16),
+    /// IPv6 address + port.
     Ipv6([u16; 8], u16),
     /// RoCE global id (we carry just the low 64 bits in the simulator).
     Gid(u64),
@@ -101,7 +157,9 @@ impl Target {
 /// Errors surfaced by the RaaS API.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum RaasError {
+    /// The vQPN does not name a live connection.
     UnknownConnection,
+    /// The connection was closed by either side.
     ConnectionClosed,
     /// User pinned an (op, transport) combo Table 1 forbids.
     UnsupportedCombination(QpTransport, Verb),
@@ -111,6 +169,7 @@ pub enum RaasError {
     PoolExhausted,
     /// Nothing to receive (non-blocking recv).
     WouldBlock,
+    /// An error surfaced by the fabric layer.
     Fabric(String),
 }
 

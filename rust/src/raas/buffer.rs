@@ -25,6 +25,7 @@ pub struct Lease {
     pub slot: u32,
     /// Address within the pool MR.
     pub addr: u64,
+    /// Usable bytes (the slot size, ≥ the requested length).
     pub len: u64,
 }
 
@@ -42,10 +43,14 @@ struct SlabClass {
 /// The daemon's registered buffer pool.
 #[derive(Debug)]
 pub struct BufferPool {
+    /// The one huge-page MR backing every slab class.
     pub mr: MemoryRegion,
     classes: Vec<SlabClass>,
+    /// Bytes currently leased out.
     pub leased_bytes: u64,
+    /// Lifetime successful leases.
     pub lease_ops: u64,
+    /// Lease attempts that found every class empty.
     pub exhausted: u64,
 }
 
@@ -105,6 +110,7 @@ impl BufferPool {
         None
     }
 
+    /// Return a lease to its slab class.
     pub fn release(&mut self, lease: Lease) {
         let c = &mut self.classes[lease.class];
         debug_assert!(lease.slot < c.total);
@@ -124,6 +130,7 @@ impl BufferPool {
         self.classes.iter().map(|c| c.hwm as u64 * c.slot_bytes).sum()
     }
 
+    /// Total pool size (the registered MR length).
     pub fn total_bytes(&self) -> u64 {
         self.mr.len
     }
@@ -155,6 +162,7 @@ impl Default for StagingCosts {
 }
 
 impl StagingCosts {
+    /// Cost of copying `len` bytes into the pool.
     pub fn memcpy_ns(&self, len: u64) -> u64 {
         (len as f64 / self.memcpy_bytes_per_ns).ceil() as u64
     }
@@ -164,6 +172,7 @@ impl StagingCosts {
         (self.memreg_ns as f64 * self.memcpy_bytes_per_ns) as u64
     }
 
+    /// Pick the cheaper staging strategy for `len` bytes.
     pub fn choose(&self, len: u64) -> Staging {
         if len < self.crossover_bytes() {
             Staging::Memcpy
@@ -172,6 +181,7 @@ impl StagingCosts {
         }
     }
 
+    /// Cost of the given staging strategy for `len` bytes.
     pub fn cost_ns(&self, staging: Staging, len: u64) -> u64 {
         match staging {
             Staging::Memcpy => self.memcpy_ns(len),

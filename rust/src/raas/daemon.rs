@@ -32,6 +32,7 @@ use super::vqpn::{pack_wr_id, unpack_vqpn, ConnTable, Vqpn};
 pub struct DaemonConfig {
     /// SRQ depth + refill watermark (host-wide, shared by all apps — §1.2).
     pub srq_capacity: usize,
+    /// Refill the SRQ when posted WQEs drop below this.
     pub srq_watermark: usize,
     /// Receive slot size drawn from the pool for SRQ WQEs.
     pub recv_slot_bytes: u64,
@@ -39,8 +40,11 @@ pub struct DaemonConfig {
     pub batch_max: usize,
     /// Daemon service threads (Worker + Poller) — busy-poll cores.
     pub service_threads: u32,
+    /// Ring/doorbell cost constants charged in virtual time.
     pub shm: ShmCosts,
+    /// Send-side memcpy-vs-memreg cost model.
     pub staging: StagingCosts,
+    /// Adaptive transport-selection tunables.
     pub selector: SelectorConfig,
     /// Pool slab layout.
     pub pool_layout: Vec<(u64, u32)>,
@@ -80,13 +84,21 @@ pub enum Delivery {
 /// Aggregate daemon statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DaemonStats {
+    /// send/read/write calls accepted.
     pub ops_submitted: u64,
+    /// Initiator-side completions delivered.
     pub ops_completed: u64,
+    /// Two-sided messages delivered to apps.
     pub msgs_delivered: u64,
+    /// Doorbells rung (WR batches posted).
     pub batches_posted: u64,
+    /// WRs posted across all batches.
     pub wrs_posted: u64,
+    /// Payload bytes of successful completions.
     pub bytes_completed: u64,
+    /// Sends staged by copying into the pool.
     pub send_staged_memcpy: u64,
+    /// Sends staged by register-on-the-fly.
     pub send_staged_memreg: u64,
 }
 
@@ -100,12 +112,19 @@ struct RemotePool {
 
 /// The per-machine RDMAvisor daemon.
 pub struct Daemon {
+    /// The machine this daemon owns.
     pub node: NodeId,
+    /// Tunables the daemon was started with.
     pub cfg: DaemonConfig,
+    /// vQPN allocator + completion-routing index.
     pub conns: ConnTable,
+    /// The host-wide registered buffer pool.
     pub pool: BufferPool,
+    /// CPU/memory ledger + load snapshots.
     pub telemetry: Telemetry,
+    /// Adaptive transport/verb selector.
     pub selector: Selector,
+    /// Aggregate data-path counters.
     pub stats: DaemonStats,
     send_cq: Cqn,
     recv_cq: Cqn,
@@ -504,6 +523,7 @@ impl Daemon {
         self.inboxes.get(&app).map(|q| q.len()).unwrap_or(0)
     }
 
+    /// Shared QPs this daemon holds (one per active remote node).
     pub fn shared_qp_count(&self) -> usize {
         self.shared_qps.len()
     }

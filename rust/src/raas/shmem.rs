@@ -7,20 +7,27 @@
 //!
 //! This module is the **real** implementation (used by the live serving
 //! example and the hot-path benches): a cache-padded SPSC ring over a boxed
-//! slice with acquire/release atomics, plus an eventfd doorbell (Linux
-//! `eventfd(2)` via libc) with busy-poll fast path. The simulator charges
-//! the [`ShmCosts`] constants for the same operations in virtual time.
+//! slice with acquire/release atomics, plus a [`Doorbell`] with a busy-poll
+//! fast path. On a real deployment the doorbell is a Linux `eventfd(2)`;
+//! the offline build has no `libc`, so it is modeled with the identical
+//! counter semantics over `Mutex`+`Condvar` (8-byte write to ring, read
+//! resets — same contract, same cost class: one syscall-ish wakeup). The
+//! simulator charges the [`ShmCosts`] constants for the same operations in
+//! virtual time.
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 /// Cost constants the DES charges for ring ops (measured on this machine by
 /// `benches/hotpath.rs`; see EXPERIMENTS.md §Perf).
 #[derive(Clone, Copy, Debug)]
 pub struct ShmCosts {
+    /// Producer-side ring push.
     pub ring_push_ns: u64,
+    /// Consumer-side ring pop.
     pub ring_pop_ns: u64,
     /// eventfd write+read pair when the consumer was asleep.
     pub doorbell_ns: u64,
@@ -39,17 +46,26 @@ struct CachePadded<T>(T);
 /// app/daemon boundary (payloads stay in the registered pool).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Descriptor {
+    /// Logical connection (vQPN) the request targets.
     pub conn: u32,
+    /// Operation code (app-defined; e.g. submit vs completion).
     pub opcode: u32,
+    /// Payload length in the registered pool.
     pub len: u64,
+    /// Payload address in the registered pool.
     pub addr: u64,
+    /// Opaque tag echoed back in the completion.
     pub user_tag: u64,
+    /// Fig-3 FLAGS bits for this request.
     pub flags: u32,
+    /// Completion status (0 = success).
     pub status: u32,
+    /// Padding up to the 64-byte descriptor size.
     pub _pad: [u64; 3],
 }
 
 impl Descriptor {
+    /// Descriptor with zeroed flags/status.
     pub fn new(conn: u32, opcode: u32, len: u64, addr: u64, tag: u64) -> Self {
         Descriptor {
             conn,
@@ -105,16 +121,19 @@ impl<T> SpscRing<T> {
         })
     }
 
+    /// Ring capacity (a power of two).
     pub fn capacity(&self) -> usize {
         self.mask as usize + 1
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         let t = self.tail.0.load(Ordering::Acquire);
         let h = self.head.0.load(Ordering::Acquire);
         (t - h) as usize
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -183,44 +202,57 @@ impl<T> Drop for SpscRing<T> {
     }
 }
 
-/// eventfd doorbell: producer `ring()`s when the consumer may be asleep;
-/// consumer `wait()`s when it has spun long enough without work.
+/// Doorbell with eventfd counter semantics: the producer `ring()`s when the
+/// consumer may be asleep; the consumer `wait()`s when it has spun long
+/// enough without work. A read resets the counter, exactly like reading a
+/// non-semaphore eventfd.
 pub struct Doorbell {
-    fd: i32,
+    count: Mutex<u64>,
+    rung: Condvar,
 }
 
 impl Doorbell {
+    /// Create an unrung doorbell. (`io::Result` kept for API compatibility
+    /// with the eventfd-backed deployment build, which can fail on fd
+    /// exhaustion; this implementation is infallible.)
     pub fn new() -> std::io::Result<Doorbell> {
-        // EFD_SEMAPHORE not needed: we reset on read.
-        let fd = unsafe { libc::eventfd(0, libc::EFD_CLOEXEC) };
-        if fd < 0 {
-            return Err(std::io::Error::last_os_error());
-        }
-        Ok(Doorbell { fd })
+        Ok(Doorbell { count: Mutex::new(0), rung: Condvar::new() })
     }
 
-    /// Producer-side notify (a single 8-byte write syscall).
+    /// Producer-side notify (the 8-byte eventfd write).
     pub fn ring(&self) {
-        let one: u64 = 1;
-        unsafe {
-            libc::write(self.fd, &one as *const u64 as *const libc::c_void, 8);
-        }
+        let mut c = self.count.lock().unwrap();
+        *c += 1;
+        self.rung.notify_one();
     }
 
     /// Consumer-side block until rung (reads & resets the counter).
     pub fn wait(&self) {
-        let mut buf: u64 = 0;
-        unsafe {
-            libc::read(self.fd, &mut buf as *mut u64 as *mut libc::c_void, 8);
+        let mut c = self.count.lock().unwrap();
+        while *c == 0 {
+            c = self.rung.wait(c).unwrap();
         }
+        *c = 0;
     }
 
-    /// Non-blocking poll with timeout (ms); true if rung.
+    /// Poll with a timeout in milliseconds; true if rung (counter reset).
+    /// A non-positive timeout is a pure non-blocking poll.
     pub fn wait_timeout(&self, timeout_ms: i32) -> bool {
-        let mut pfd = libc::pollfd { fd: self.fd, events: libc::POLLIN, revents: 0 };
-        let r = unsafe { libc::poll(&mut pfd, 1, timeout_ms) };
-        if r > 0 && pfd.revents & libc::POLLIN != 0 {
-            self.wait();
+        let mut c = self.count.lock().unwrap();
+        if *c > 0 {
+            *c = 0;
+            return true;
+        }
+        if timeout_ms <= 0 {
+            return false;
+        }
+        let deadline = Duration::from_millis(timeout_ms as u64);
+        let (mut c, _timed_out) = self
+            .rung
+            .wait_timeout_while(c, deadline, |c| *c == 0)
+            .unwrap();
+        if *c > 0 {
+            *c = 0;
             true
         } else {
             false
@@ -228,23 +260,20 @@ impl Doorbell {
     }
 }
 
-impl Drop for Doorbell {
-    fn drop(&mut self) {
-        unsafe {
-            libc::close(self.fd);
-        }
-    }
-}
-
 /// One app↔daemon session channel: submit ring, completion ring, doorbells.
 pub struct Channel {
+    /// App → daemon request ring.
     pub submit: Arc<SpscRing<Descriptor>>,
+    /// Daemon → app completion ring.
     pub complete: Arc<SpscRing<Descriptor>>,
+    /// Rung by the app after pushing a request.
     pub submit_bell: Doorbell,
+    /// Rung by the daemon after pushing a completion.
     pub complete_bell: Doorbell,
 }
 
 impl Channel {
+    /// Channel with two `depth`-deep rings and their doorbells.
     pub fn new(depth: usize) -> std::io::Result<Channel> {
         Ok(Channel {
             submit: SpscRing::new(depth),

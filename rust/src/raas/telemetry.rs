@@ -33,14 +33,18 @@ pub struct ResourceSnapshot {
     pub mem_bytes: u64,
     /// Cores-equivalent: daemon threads + itemized work.
     pub cpu_cores: f64,
+    /// Registered application sessions.
     pub apps: u32,
+    /// Live logical connections.
     pub conns: u32,
+    /// Shared QPs (one per active remote node).
     pub shared_qps: u32,
 }
 
 /// The daemon's accounting state.
 #[derive(Clone, Debug, Default)]
 pub struct Telemetry {
+    /// Per-app session resources.
     pub sessions: Vec<SessionResources>,
     /// Daemon service threads that busy-poll (Worker + Poller).
     pub service_threads: u32,
@@ -50,24 +54,30 @@ pub struct Telemetry {
     pub window_start: Ns,
     /// Decision inputs maintained incrementally.
     pub pool_pressure: f64,
+    /// Data-plane ops accepted.
     pub ops_submitted: u64,
+    /// Initiator-side completions delivered.
     pub ops_completed: u64,
 }
 
 impl Telemetry {
+    /// Ledger for a daemon running `service_threads` busy-poll threads.
     pub fn new(service_threads: u32) -> Self {
         Telemetry { service_threads, ..Default::default() }
     }
 
+    /// Account a new app session; returns its id.
     pub fn add_session(&mut self) -> u32 {
         self.sessions.push(SessionResources::default());
         self.sessions.len() as u32 - 1
     }
 
+    /// Charge `ns` of itemized daemon work.
     pub fn charge(&mut self, ns: u64) {
         self.busy_ns += ns;
     }
 
+    /// Shared-memory bytes across all sessions (rings + eventfds).
     pub fn ring_bytes(&self) -> u64 {
         self.sessions.iter().map(|s| s.ring_bytes + s.eventfd_bytes).sum()
     }

@@ -50,7 +50,9 @@ impl Default for SelectorConfig {
 /// The decision for one message.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Choice {
+    /// Transport to use.
     pub transport: QpTransport,
+    /// Verb to use.
     pub verb: Verb,
 }
 
@@ -62,11 +64,14 @@ pub struct Selector {
     last_small: Option<bool>,
     /// Decision counters (exported to metrics/ablation).
     pub chose_send: u64,
+    /// Times one-sided WRITE was chosen.
     pub chose_write: u64,
+    /// Times one-sided READ was chosen.
     pub chose_read: u64,
 }
 
 impl Selector {
+    /// Selector with fresh hysteresis state and zeroed counters.
     pub fn new(cfg: SelectorConfig) -> Self {
         Selector { cfg, last_small: None, chose_send: 0, chose_write: 0, chose_read: 0 }
     }

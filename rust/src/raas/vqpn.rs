@@ -31,6 +31,7 @@ pub fn unpack_vqpn(wr_id: u64) -> Vqpn {
     Vqpn(wr_id as u32)
 }
 
+/// Extract the op sequence number from a completion's wr_id.
 #[inline]
 pub fn unpack_seq(wr_id: u64) -> u32 {
     (wr_id >> 32) as u32
@@ -39,6 +40,7 @@ pub fn unpack_seq(wr_id: u64) -> u32 {
 /// State of one logical connection.
 #[derive(Clone, Debug)]
 pub struct ConnEntry {
+    /// This connection's own vQPN.
     pub vqpn: Vqpn,
     /// Owning application (session) on this host.
     pub app: u32,
@@ -47,6 +49,7 @@ pub struct ConnEntry {
     /// Peer's vQPN for this connection (stamped into imm_data so the peer's
     /// Poller can route two-sided deliveries).
     pub peer_vqpn: Vqpn,
+    /// Set once the connection is closed.
     pub closed: bool,
 }
 
@@ -60,11 +63,14 @@ pub struct ConnTable {
     free: Vec<u32>,
     /// Connections per remote node (drives shared-QP reuse stats).
     per_remote: HashMap<u32, u32>,
+    /// Lifetime opens.
     pub opened: u64,
+    /// Lifetime closes.
     pub closed: u64,
 }
 
 impl ConnTable {
+    /// Empty table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -102,6 +108,7 @@ impl ConnTable {
         }
     }
 
+    /// Close a connection; false if it was not live. The vQPN is recycled.
     pub fn close(&mut self, vqpn: Vqpn) -> bool {
         match self.entries.get_mut(vqpn.0 as usize) {
             Some(slot @ Some(_)) => {
@@ -123,10 +130,12 @@ impl ConnTable {
         self.entries.get(vqpn.0 as usize).and_then(|e| e.as_ref())
     }
 
+    /// Live connections.
     pub fn active(&self) -> usize {
         (self.opened - self.closed) as usize
     }
 
+    /// Live connections targeting `remote`.
     pub fn conns_to(&self, remote: NodeId) -> u32 {
         self.per_remote.get(&remote.0).copied().unwrap_or(0)
     }
@@ -137,6 +146,7 @@ impl ConnTable {
         self.per_remote.values().filter(|&&c| c > 0).count()
     }
 
+    /// Iterate over live connections.
     pub fn iter(&self) -> impl Iterator<Item = &ConnEntry> {
         self.entries.iter().filter_map(|e| e.as_ref())
     }

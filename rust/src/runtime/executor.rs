@@ -1,23 +1,32 @@
-//! PJRT executor: compile-once, execute-many over the CPU client.
+//! Simulated model executor: compile-once, execute-many, zero dependencies.
 //!
-//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. One compiled executable per model
-//! variant; token-id inputs in, logits out.
+//! Earlier revisions executed real AOT-compiled HLO through PJRT via the
+//! `xla` crate. That crate (and its C++ runtime) is unreachable in this
+//! offline environment, so the executor now *simulates* a forward pass: it
+//! keeps the exact external contract (load a [`Manifest`], one "compiled"
+//! program per variant, token-ids in, logits out) while deriving the logits
+//! deterministically from the input tokens with a splitmix-style hash.
+//! Same input ⇒ bit-identical logits, which is all the serving path,
+//! batcher, and tests observe. When `artifacts/manifest.json` is absent a
+//! built-in synthetic manifest is used so the demo/serve commands run on a
+//! fresh checkout.
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Error, Result};
 
 use super::manifest::{Manifest, Variant};
 
 /// Output of one forward pass.
 #[derive(Clone, Debug)]
 pub struct ModelOutput {
-    /// Flattened logits [batch * seq * vocab].
+    /// Flattened logits `[batch * seq * vocab]`.
     pub logits: Vec<f32>,
+    /// Rows in the batch (includes padding rows).
     pub batch: usize,
+    /// Sequence length of the variant.
     pub seq: usize,
+    /// Vocabulary size of the variant.
     pub vocab: usize,
 }
 
@@ -35,64 +44,107 @@ impl ModelOutput {
     }
 }
 
+/// SplitMix64 finalizer: the per-position mixing function of the simulated
+/// model. Cheap, stateless, and avalanche-complete — every token of a row
+/// perturbs every logit of that row.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Compile-once executor over all manifest variants.
 pub struct Executor {
-    client: xla::PjRtClient,
-    variants: HashMap<String, (Variant, xla::PjRtLoadedExecutable)>,
+    /// Per-variant "compiled program": the variant shape plus a fixed weight
+    /// seed derived at load time (stands in for the compiled executable).
+    variants: HashMap<String, (Variant, u64)>,
+    /// The manifest the variants were loaded from.
     pub manifest: Manifest,
+    /// Forward passes executed since load.
     pub executions: u64,
 }
 
 impl Executor {
-    /// Load + compile every artifact in `dir` (one-time startup cost).
+    /// Load every variant in `dir` (one-time startup cost). Falls back to a
+    /// built-in synthetic manifest when `dir` has none, so a fresh checkout
+    /// can still serve (`rdmavisor demo inference`).
     pub fn load(dir: &str) -> Result<Executor> {
-        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let manifest = Manifest::load_or_synthetic(dir);
+        Self::from_manifest(manifest)
+    }
+
+    /// Load from `dir`, failing (rather than synthesizing) when the
+    /// manifest is absent or malformed.
+    pub fn load_strict(dir: &str) -> Result<Executor> {
+        let manifest = Manifest::load(dir).map_err(Error::msg).context("load manifest")?;
+        Self::from_manifest(manifest)
+    }
+
+    /// "Compile" every variant of an already-parsed manifest.
+    pub fn from_manifest(manifest: Manifest) -> Result<Executor> {
+        if manifest.variants.is_empty() {
+            return Err(Error::msg("manifest has no variants"));
+        }
         let mut variants = HashMap::new();
         for v in &manifest.variants {
-            let path = format!("{dir}/{}", v.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parse {path}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compile {}", v.name))?;
-            variants.insert(v.name.clone(), (v.clone(), exe));
+            // weight seed: a stable function of the manifest seed and the
+            // variant shape, fixed for the executor's lifetime
+            let weights = mix(manifest.seed)
+                ^ mix(v.batch as u64)
+                ^ mix((v.seq as u64) << 16)
+                ^ mix((v.vocab as u64) << 32);
+            variants.insert(v.name.clone(), (v.clone(), weights));
         }
-        Ok(Executor { client, variants, manifest, executions: 0 })
+        Ok(Executor { variants, manifest, executions: 0 })
     }
 
+    /// Name of the backing execution platform.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "sim-cpu".to_string()
     }
 
+    /// Sorted names of the loaded variants.
     pub fn variant_names(&self) -> Vec<String> {
         let mut v: Vec<String> = self.variants.keys().cloned().collect();
         v.sort();
         v
     }
 
-    /// Execute variant `name` on `tokens` (row-major [batch, seq] i32).
+    /// Execute variant `name` on `tokens` (row-major `[batch, seq]` i32).
     /// Short batches are padded with token 0; extra rows are ignored by the
     /// caller (the batcher slices real rows out of the output).
     pub fn run(&mut self, name: &str, tokens: &[i32]) -> Result<ModelOutput> {
-        let (variant, exe) = self
+        let (variant, weights) = self
             .variants
             .get(name)
-            .ok_or_else(|| anyhow!("unknown variant {name}"))?;
+            .with_context(|| format!("unknown variant {name}"))?;
+        let (variant, weights) = (variant.clone(), *weights);
         let want = variant.batch * variant.seq;
         let mut input = tokens.to_vec();
         if input.len() > want {
-            return Err(anyhow!("batch overflow: {} > {}", input.len(), want));
+            return Err(Error::msg(format!("batch overflow: {} > {}", input.len(), want)));
         }
         input.resize(want, 0);
-        let lit = xla::Literal::vec1(&input)
-            .reshape(&[variant.batch as i64, variant.seq as i64])
-            .context("reshape input")?;
-        let result = exe.execute::<xla::Literal>(&[lit]).context("execute")?[0][0]
-            .to_literal_sync()
-            .context("fetch result")?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-        let out = result.to_tuple1().context("untuple")?;
-        let logits = out.to_vec::<f32>().context("logits to vec")?;
+
+        let mut logits = Vec::with_capacity(want * variant.vocab);
+        for row in input.chunks_exact(variant.seq) {
+            // row state: order-sensitive rolling hash of the row's tokens
+            let mut state = weights;
+            for (i, &t) in row.iter().enumerate() {
+                state = mix(state ^ mix((t as u64) << 1) ^ (i as u64));
+            }
+            for pos in 0..variant.seq {
+                let pos_state = mix(state ^ (pos as u64));
+                for v in 0..variant.vocab {
+                    // map the 64-bit hash to a finite logit in [-1, 1)
+                    let h = mix(pos_state ^ ((v as u64) << 7));
+                    let unit = (h >> 11) as f32 / (1u64 << 53) as f32;
+                    logits.push(unit * 2.0 - 1.0);
+                }
+            }
+        }
         self.executions += 1;
         Ok(ModelOutput {
             logits,
@@ -108,7 +160,7 @@ impl Executor {
         let name = self
             .manifest
             .variant_for_batch(n)
-            .ok_or_else(|| anyhow!("no variants loaded"))?
+            .context("no variants loaded")?
             .name
             .clone();
         let seq = self.variants[&name].0.seq;
@@ -120,5 +172,62 @@ impl Executor {
         }
         let out = self.run(&name, &flat)?;
         Ok((name, out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exe() -> Executor {
+        Executor::from_manifest(Manifest::synthetic()).unwrap()
+    }
+
+    #[test]
+    fn synthetic_manifest_loads_and_runs() {
+        let mut e = exe();
+        assert!(!e.variant_names().is_empty());
+        let name = e.variant_names()[0].clone();
+        let v = e.manifest.by_name(&name).unwrap().clone();
+        let tokens: Vec<i32> = (0..v.batch * v.seq).map(|i| (i % v.vocab) as i32).collect();
+        let out = e.run(&name, &tokens).unwrap();
+        assert_eq!(out.logits.len(), v.batch * v.seq * v.vocab);
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+        assert_eq!(e.executions, 1);
+    }
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        let mut e = exe();
+        let name = e.variant_names()[0].clone();
+        let v = e.manifest.by_name(&name).unwrap().clone();
+        let a: Vec<i32> = (0..v.batch * v.seq).map(|i| (i % 17) as i32).collect();
+        let mut b = a.clone();
+        b[0] ^= 1;
+        let ra1 = e.run(&name, &a).unwrap();
+        let ra2 = e.run(&name, &a).unwrap();
+        let rb = e.run(&name, &b).unwrap();
+        assert_eq!(ra1.logits, ra2.logits, "same input, same logits");
+        assert_ne!(ra1.logits, rb.logits, "different input, different logits");
+    }
+
+    #[test]
+    fn identical_rows_get_identical_logits() {
+        let mut e = exe();
+        let seq = e.manifest.variants[0].seq;
+        let rows = vec![vec![7i32; seq]; 2];
+        let (_, out) = e.run_batched(&rows).unwrap();
+        let row = out.seq * out.vocab;
+        assert_eq!(out.logits[..row], out.logits[row..2 * row]);
+    }
+
+    #[test]
+    fn batch_overflow_rejected() {
+        let mut e = exe();
+        let name = e.variant_names()[0].clone();
+        let v = e.manifest.by_name(&name).unwrap().clone();
+        let too_many = vec![0i32; v.batch * v.seq + 1];
+        assert!(e.run(&name, &too_many).is_err());
+        assert!(e.run("nope", &[]).is_err());
     }
 }

@@ -5,23 +5,35 @@ use crate::util::jsonmini::{parse, Json};
 /// One compiled model variant (one batch size).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Variant {
+    /// Variant name (e.g. `model_b8`).
     pub name: String,
+    /// Artifact file name within the artifacts directory.
     pub file: String,
+    /// Compiled batch size.
     pub batch: usize,
+    /// Compiled sequence length.
     pub seq: usize,
+    /// Vocabulary size of the logits.
     pub vocab: usize,
+    /// Estimated FLOPs per forward pass.
     pub flops_fwd: u64,
+    /// Attention-kernel VMEM estimate.
     pub vmem_attn_bytes: u64,
+    /// MLP-kernel VMEM estimate.
     pub vmem_mlp_bytes: u64,
 }
 
+/// The artifact set: all compiled variants plus the generation seed.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Seed the artifacts were generated with.
     pub seed: u64,
+    /// All compiled variants.
     pub variants: Vec<Variant>,
 }
 
 impl Manifest {
+    /// Parse a manifest document.
     pub fn parse(doc: &str) -> Result<Manifest, String> {
         let v = parse(doc)?;
         let variants = v
@@ -37,10 +49,34 @@ impl Manifest {
         })
     }
 
+    /// Read and parse `<dir>/manifest.json`.
     pub fn load(dir: &str) -> Result<Manifest, String> {
         let path = format!("{dir}/manifest.json");
         let doc = std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
         Self::parse(&doc)
+    }
+
+    /// A built-in two-variant manifest (batch 1 and batch 8, seq 64,
+    /// vocab 256) used when no artifacts are on disk, so the serving demo
+    /// runs end-to-end on a fresh checkout.
+    pub fn synthetic() -> Manifest {
+        let mk = |name: &str, batch: usize| Variant {
+            name: name.to_string(),
+            file: format!("{name}.hlo.txt"),
+            batch,
+            seq: 64,
+            vocab: 256,
+            flops_fwd: 58_700_000 * batch as u64,
+            vmem_attn_bytes: 100_000,
+            vmem_mlp_bytes: 200_000,
+        };
+        Manifest { seed: 0, variants: vec![mk("model_b1", 1), mk("model_b8", 8)] }
+    }
+
+    /// [`Manifest::load`], falling back to [`Manifest::synthetic`] when the
+    /// directory has no (or a malformed) manifest.
+    pub fn load_or_synthetic(dir: &str) -> Manifest {
+        Self::load(dir).unwrap_or_else(|_| Self::synthetic())
     }
 
     /// Smallest variant whose batch ≥ `n` (the dynamic batcher's pick),
@@ -53,6 +89,7 @@ impl Manifest {
             .or_else(|| self.variants.iter().max_by_key(|v| v.batch))
     }
 
+    /// Variant by exact name.
     pub fn by_name(&self, name: &str) -> Option<&Variant> {
         self.variants.iter().find(|v| v.name == name)
     }

@@ -1,11 +1,13 @@
-//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them.
+//! Model runtime: load AOT-lowered artifacts and execute them.
 //!
-//! `make artifacts` lowers the L2 serving model (python/compile) to **HLO
-//! text** (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
-//! protos; the text parser reassigns ids). This module loads every variant
-//! listed in `artifacts/manifest.json`, compiles each once on the PJRT CPU
-//! client, and serves execute calls from the coordinator's hot path —
-//! Python never runs at request time.
+//! `python/compile` lowers the serving model to HLO text plus an
+//! `artifacts/manifest.json` describing each batch-size variant. In this
+//! offline reproduction the [`executor`] *simulates* execution (PJRT and
+//! the `xla` crate are unreachable here — see the module docs): it loads
+//! the same manifest, honours the same shapes, and produces deterministic
+//! logits, so the serving hot path, dynamic batcher and demos behave
+//! identically with zero external dependencies. Python never runs at
+//! request time.
 
 pub mod manifest;
 pub mod executor;

@@ -12,18 +12,26 @@ use super::stats::{Histogram, Summary};
 /// One benchmark result row.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Timed iterations executed.
     pub iters: u64,
+    /// Mean iteration time, ns.
     pub mean_ns: f64,
+    /// Median iteration time, ns.
     pub p50_ns: u64,
+    /// 99th-percentile iteration time, ns.
     pub p99_ns: u64,
+    /// Fastest iteration, ns.
     pub min_ns: u64,
+    /// Slowest iteration, ns.
     pub max_ns: u64,
     /// Optional user-supplied scalar (e.g. simulated Gb/s) reported alongside.
     pub metric: Option<(String, f64)>,
 }
 
 impl BenchResult {
+    /// Print the row in the harness's standard format.
     pub fn print(&self) {
         let metric = match &self.metric {
             Some((name, v)) => format!("  {name}={v:.3}"),
@@ -41,6 +49,7 @@ impl BenchResult {
     }
 }
 
+/// Human formatting for a nanosecond quantity (`1234.0` → `"1.23 µs"`).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
@@ -56,9 +65,13 @@ pub fn fmt_ns(ns: f64) -> String {
 /// Harness configuration.
 #[derive(Clone, Debug)]
 pub struct Bencher {
+    /// Untimed warmup budget before measurement.
     pub warmup: Duration,
+    /// Wall-clock budget for the timed phase.
     pub max_time: Duration,
+    /// Never stop before this many iterations.
     pub min_iters: u64,
+    /// Hard iteration cap.
     pub max_iters: u64,
     /// Convergence: stop when the relative stderr of the mean drops below this.
     pub target_rse: f64,
@@ -79,6 +92,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Default harness (see [`Default`]).
     pub fn new() -> Self {
         Self::default()
     }
@@ -176,6 +190,7 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// All rows recorded by this harness.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

@@ -5,9 +5,13 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, positionals, `--key value` options
+/// and bare `--flag`s.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// First non-option token (when parsed with a subcommand).
     pub subcommand: Option<String>,
+    /// Non-option tokens after the subcommand.
     pub positional: Vec<String>,
     options: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
@@ -51,14 +55,17 @@ impl Args {
         out
     }
 
+    /// Was `--name` given (as a flag or with a value)?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
     }
 
+    /// Last value given for `--name`.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
     }
 
+    /// Every value given for `--name`, in order.
     pub fn get_all(&self, name: &str) -> Vec<&str> {
         self.options
             .get(name)
@@ -66,18 +73,22 @@ impl Args {
             .unwrap_or_default()
     }
 
+    /// String value of `--name`, or `default`.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// u64 value of `--name`, or `default`; exits with a message on junk.
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.parse_or(name, default)
     }
 
+    /// usize value of `--name`, or `default`; exits with a message on junk.
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.parse_or(name, default)
     }
 
+    /// f64 value of `--name`, or `default`; exits with a message on junk.
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.parse_or(name, default)
     }

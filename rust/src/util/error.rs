@@ -1,0 +1,143 @@
+//! Crate-wide error type (anyhow is unavailable offline).
+//!
+//! A deliberately small work-alike for the slice of `anyhow` this crate
+//! used: a string-backed [`Error`] with an optional context chain, the
+//! [`Context`] extension trait for decorating fallible calls, and the
+//! crate-wide [`Result`] alias re-exported from `lib.rs`. `{e}` prints the
+//! outermost message; `{e:#}` prints the whole chain (`a: b: c`), matching
+//! the anyhow formatting the binaries already relied on.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of context messages.
+#[derive(Clone, Debug)]
+pub struct Error {
+    /// Context chain, outermost first; always at least one entry.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(mut self, m: impl fmt::Display) -> Error {
+        self.chain.insert(0, m.to_string());
+        self
+    }
+
+    /// The context chain, outermost message first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (re-exported as `rdmavisor::Result`).
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `anyhow::Context`-style extension for decorating fallible calls.
+pub trait Context<T> {
+    /// Wrap the error with a static context message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    // `{e:#}` so an inner crate `Error` contributes its WHOLE chain (plain
+    // `{}` would print only its outermost entry); for other error types
+    // alternate display is normally identical to the default.
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(msg))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e = Error::msg("root cause").context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: root cause");
+    }
+
+    #[test]
+    fn context_trait_on_results() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        let ok: std::result::Result<u32, String> = Ok(7);
+        assert_eq!(ok.context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn nested_context_keeps_the_whole_chain() {
+        // a crate Error re-wrapped through the trait must not lose its root
+        let inner: Result<()> = Err(Error::msg("root").context("mid"));
+        let e = inner.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+    }
+
+    #[test]
+    fn context_trait_on_options() {
+        let none: Option<u32> = None;
+        let e = none.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("gone"));
+    }
+}

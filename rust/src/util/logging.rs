@@ -2,21 +2,29 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Log severity, most severe first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but survivable conditions.
     Warn = 1,
+    /// High-level progress (the default).
     Info = 2,
+    /// Detailed internal state.
     Debug = 3,
+    /// Per-event firehose.
     Trace = 4,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
+/// Set the global log level.
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Set the global level from a CLI string (unknown → Info).
 pub fn set_level_from_str(s: &str) {
     let level = match s {
         "error" => Level::Error,
@@ -29,11 +37,13 @@ pub fn set_level_from_str(s: &str) {
     set_level(level);
 }
 
+/// Would a message at `level` currently print?
 #[inline]
 pub fn enabled(level: Level) -> bool {
     level as u8 <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Print a message to stderr if `level` is enabled (macro backend).
 pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if enabled(level) {
         let tag = match level {
@@ -47,6 +57,7 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Log at Info level with `format!` syntax.
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -58,6 +69,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log at Warn level with `format!` syntax.
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => {
@@ -69,6 +81,7 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at Debug level with `format!` syntax.
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => {

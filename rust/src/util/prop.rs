@@ -9,6 +9,7 @@ use super::rng::Rng;
 
 /// A generator of values of type `T` with shrinking.
 pub trait Gen<T> {
+    /// Draw one random value.
     fn gen(&self, rng: &mut Rng) -> T;
     /// Candidate smaller values; default: no shrinking.
     fn shrink(&self, _value: &T) -> Vec<T> {
@@ -63,8 +64,11 @@ impl Gen<usize> for UsizeRange {
 
 /// Vec of T with length in [min_len, max_len].
 pub struct VecGen<G> {
+    /// Element generator.
     pub elem: G,
+    /// Minimum generated length.
     pub min_len: usize,
+    /// Maximum generated length.
     pub max_len: usize,
 }
 
@@ -96,7 +100,9 @@ impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecGen<G> {
 
 /// Result of a property run.
 pub struct PropReport<T> {
+    /// Cases executed before stopping.
     pub cases: usize,
+    /// Minimal failing input + message + seed, if the property failed.
     pub failure: Option<(T, String, u64)>, // minimal input, message, seed
 }
 

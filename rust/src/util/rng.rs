@@ -23,6 +23,7 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
@@ -97,6 +98,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Sampler over `{0..n-1}` with skew θ (θ≠1, θ>0).
     pub fn new(n: u64, theta: f64) -> Self {
         assert!(n > 0 && theta > 0.0 && (theta - 1.0).abs() > 1e-9);
         let h = |x: f64, t: f64| ((x).powf(1.0 - t)) / (1.0 - t);
@@ -113,6 +115,7 @@ impl Zipf {
         }
     }
 
+    /// Draw one key (head-skewed toward small values).
     pub fn sample(&self, rng: &mut Rng) -> u64 {
         let h_inv = |x: f64| ((1.0 - self.theta) * x).powf(1.0 / (1.0 - self.theta));
         loop {

@@ -11,10 +11,12 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty summary.
     pub fn new() -> Self {
         Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one observation in.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -24,15 +26,21 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Observations folded in.
     pub fn count(&self) -> u64 { self.n }
+    /// Running mean.
     pub fn mean(&self) -> f64 { self.mean }
+    /// Smallest observation (0 when empty).
     pub fn min(&self) -> f64 { if self.n == 0 { 0.0 } else { self.min } }
+    /// Largest observation (0 when empty).
     pub fn max(&self) -> f64 { if self.n == 0 { 0.0 } else { self.max } }
 
+    /// Sample variance (Bessel-corrected).
     pub fn variance(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
 
+    /// Sample standard deviation.
     pub fn stddev(&self) -> f64 { self.variance().sqrt() }
 
     /// Relative standard error of the mean — bench convergence criterion.
@@ -61,6 +69,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Histogram { buckets: vec![0; 64 * SUB], count: 0, total: 0, min: u64::MAX, max: 0 }
     }
@@ -75,6 +84,7 @@ impl Histogram {
         ((exp - SUB_BITS + 1) as usize) * SUB + sub
     }
 
+    /// Record one value.
     pub fn record(&mut self, v: u64) {
         self.buckets[Self::index(v)] += 1;
         self.count += 1;
@@ -83,10 +93,14 @@ impl Histogram {
         self.max = self.max.max(v);
     }
 
+    /// Values recorded.
     pub fn count(&self) -> u64 { self.count }
+    /// Smallest recorded value (0 when empty).
     pub fn min(&self) -> u64 { if self.count == 0 { 0 } else { self.min } }
+    /// Largest recorded value.
     pub fn max(&self) -> u64 { self.max }
 
+    /// Exact mean of all recorded values.
     pub fn mean(&self) -> f64 {
         if self.count == 0 { 0.0 } else { self.total as f64 / self.count as f64 }
     }
@@ -115,11 +129,16 @@ impl Histogram {
         (1u64 << exp) | (minor << (exp - SUB_BITS))
     }
 
+    /// Median.
     pub fn p50(&self) -> u64 { self.quantile(0.50) }
+    /// 90th percentile.
     pub fn p90(&self) -> u64 { self.quantile(0.90) }
+    /// 99th percentile.
     pub fn p99(&self) -> u64 { self.quantile(0.99) }
+    /// 99.9th percentile.
     pub fn p999(&self) -> u64 { self.quantile(0.999) }
 
+    /// Fold another histogram's buckets into this one.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;
@@ -134,11 +153,14 @@ impl Histogram {
 /// Fixed-window throughput accumulator (events and bytes per window).
 #[derive(Clone, Debug, Default)]
 pub struct Throughput {
+    /// Events accumulated.
     pub events: u64,
+    /// Bytes accumulated.
     pub bytes: u64,
 }
 
 impl Throughput {
+    /// Count one event of `bytes` bytes.
     pub fn add(&mut self, bytes: u64) {
         self.events += 1;
         self.bytes += bytes;

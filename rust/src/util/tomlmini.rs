@@ -1,34 +1,46 @@
-//! Minimal TOML-subset parser for experiment/cluster config files.
+//! Minimal TOML-subset parser + writer for experiment/cluster config files.
 //!
 //! Supports: `[section]` and `[section.sub]` headers, `key = value` with
 //! string / integer / float / bool / flat-array values, `#` comments.
 //! Keys are flattened to `section.sub.key` in one map — enough for our
 //! config surface, with precise error lines for anything unsupported.
+//! [`write`] serializes a [`Table`] back to parseable text, so configs
+//! round-trip (`parse(write(parse(doc))) == parse(doc)` — covered by
+//! `tests/minilang_roundtrip.rs`).
 
 use std::collections::BTreeMap;
 
+/// A TOML-subset value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A double-quoted string (no escape sequences in the subset).
     Str(String),
+    /// An integer (underscore separators accepted).
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat array of values.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The integer value, if this is an integer.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// The numeric value (floats and integers both coerce).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -36,12 +48,14 @@ impl Value {
             _ => None,
         }
     }
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(v) => Some(v),
@@ -50,42 +64,123 @@ impl Value {
     }
 }
 
-#[derive(Clone, Debug, Default)]
+/// A parsed document: flattened `section.sub.key -> value` map.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Table {
     map: BTreeMap<String, Value>,
 }
 
 impl Table {
+    /// Value of a flattened `section.key`.
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.map.get(key)
     }
 
+    /// String at `key`, or `default`.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
     }
 
+    /// Integer at `key`, or `default`.
     pub fn int_or(&self, key: &str, default: i64) -> i64 {
         self.get(key).and_then(Value::as_int).unwrap_or(default)
     }
 
+    /// Float (or integer) at `key`, or `default`.
     pub fn float_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(Value::as_float).unwrap_or(default)
     }
 
+    /// Boolean at `key`, or `default`.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(Value::as_bool).unwrap_or(default)
     }
 
+    /// All flattened keys, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.map.keys()
     }
 
+    /// Number of entries.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when the table has no entries.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+
+    /// Insert (or overwrite) a flattened `section.key` entry.
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.map.insert(key.to_string(), value);
+    }
+}
+
+/// Serialize a [`Table`] back to TOML-subset text that [`parse`] accepts.
+///
+/// Dot-free keys come first (top level); the rest are grouped under
+/// `[section]` headers (the section is everything up to the last dot).
+/// Floats always carry a decimal point so their type survives re-parsing.
+/// Values the subset grammar cannot represent are degraded so the output
+/// still parses: string characters that would break the quoting (`"`,
+/// newlines; `,`/`]` inside arrays) become `_`, and non-finite floats
+/// become `0.0`.
+pub fn write(table: &Table) -> String {
+    let mut out = String::new();
+    let mut sections: BTreeMap<&str, Vec<(&str, &Value)>> = BTreeMap::new();
+    for (k, v) in &table.map {
+        match k.rfind('.') {
+            None => out.push_str(&format!("{k} = {}\n", write_value(v))),
+            Some(dot) => sections
+                .entry(&k[..dot])
+                .or_default()
+                .push((&k[dot + 1..], v)),
+        }
+    }
+    for (section, entries) in sections {
+        out.push_str(&format!("[{section}]\n"));
+        for (k, v) in entries {
+            out.push_str(&format!("{k} = {}\n", write_value(v)));
+        }
+    }
+    out
+}
+
+fn write_value(v: &Value) -> String {
+    write_value_at(v, false)
+}
+
+fn write_value_at(v: &Value, in_array: bool) -> String {
+    match v {
+        Value::Str(s) => {
+            // the subset grammar has no escapes: degrade characters that
+            // would break the quoting (or array splitting) to '_'
+            let safe: String = s
+                .chars()
+                .map(|c| match c {
+                    '"' | '\n' | '\r' => '_',
+                    ',' | ']' if in_array => '_',
+                    c => c,
+                })
+                .collect();
+            format!("\"{safe}\"")
+        }
+        Value::Int(i) => format!("{i}"),
+        Value::Float(f) => {
+            if !f.is_finite() {
+                "0.0".to_string()
+            } else if f.fract() == 0.0 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        Value::Bool(b) => format!("{b}"),
+        Value::Array(items) => {
+            let body: Vec<String> = items.iter().map(|x| write_value_at(x, true)).collect();
+            format!("[{}]", body.join(", "))
+        }
     }
 }
 
@@ -218,5 +313,40 @@ mod tests {
     fn hash_inside_string_kept() {
         let t = parse("s = \"a#b\"\n").unwrap();
         assert_eq!(t.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn writer_roundtrips_sample_config() {
+        let t = parse(crate::config::SAMPLE).unwrap();
+        let again = parse(&write(&t)).unwrap();
+        assert_eq!(t, again, "parse→write→parse must be identity");
+    }
+
+    #[test]
+    fn writer_preserves_value_types() {
+        let mut t = Table::default();
+        t.set("top", Value::Int(3));
+        t.set("fabric.rate", Value::Float(40.0));
+        t.set("fabric.name", Value::Str("tor".into()));
+        t.set("fabric.lossless", Value::Bool(true));
+        t.set("scenario.sizes", Value::Array(vec![Value::Int(64), Value::Int(4096)]));
+        let doc = write(&t);
+        let back = parse(&doc).unwrap();
+        assert_eq!(back, t, "doc was:\n{doc}");
+        // a whole float must re-parse as Float, not Int
+        assert!(matches!(back.get("fabric.rate"), Some(Value::Float(_))));
+    }
+
+    #[test]
+    fn writer_degrades_unrepresentable_values_but_stays_parseable() {
+        let mut t = Table::default();
+        t.set("s", Value::Str("a\"b\nc".into()));
+        t.set("nan", Value::Float(f64::NAN));
+        t.set("arr", Value::Array(vec![Value::Str("x,y]z".into())]));
+        let back = parse(&write(&t)).expect("degraded output must still parse");
+        assert_eq!(back.str_or("s", ""), "a_b_c");
+        assert_eq!(back.get("nan"), Some(&Value::Float(0.0)));
+        let arr = back.get("arr").unwrap().as_array().unwrap();
+        assert_eq!(arr[0].as_str(), Some("x_y_z"));
     }
 }

@@ -15,19 +15,23 @@ pub enum OffsetGen {
 }
 
 impl OffsetGen {
+    /// Uniform block-aligned offsets over `region` bytes.
     pub fn uniform(region: u64, align: u64) -> OffsetGen {
         OffsetGen::Uniform { region, align }
     }
 
+    /// Zipf(θ)-popular blocks over `region` bytes.
     pub fn zipf(region: u64, align: u64, theta: f64) -> OffsetGen {
         let blocks = (region / align).max(1);
         OffsetGen::Zipf { region, align, dist: Zipf::new(blocks, theta) }
     }
 
+    /// Sequential streaming over `region` bytes.
     pub fn sequential(region: u64, align: u64) -> OffsetGen {
         OffsetGen::Sequential { region, align, cursor: 0 }
     }
 
+    /// Next offset for an op of `len` bytes (always fits the region).
     pub fn next(&mut self, rng: &mut Rng, len: u64) -> u64 {
         match self {
             OffsetGen::Uniform { region, align } => {
@@ -50,6 +54,7 @@ impl OffsetGen {
 /// Message-size distribution.
 #[derive(Clone, Debug)]
 pub enum SizeGen {
+    /// Constant size.
     Fixed(u64),
     /// Log-uniform between lo and hi (heavy small-message tail).
     LogUniform { lo: u64, hi: u64 },
@@ -58,6 +63,7 @@ pub enum SizeGen {
 }
 
 impl SizeGen {
+    /// Draw the next message size.
     pub fn next(&self, rng: &mut Rng) -> u64 {
         match self {
             SizeGen::Fixed(n) => *n,
@@ -84,6 +90,7 @@ pub struct Arrivals {
 }
 
 impl Arrivals {
+    /// Poisson arrivals at `rate_per_sec` events/second.
     pub fn poisson(rate_per_sec: f64) -> Arrivals {
         Arrivals { mean_gap_ns: 1e9 / rate_per_sec, next_at: Ns::ZERO }
     }
@@ -99,24 +106,31 @@ impl Arrivals {
 /// A recorded operation for trace replay.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TraceOp {
+    /// Virtual time the op was issued.
     pub at: Ns,
+    /// Connection the op ran on.
     pub conn: u32,
+    /// Payload size.
     pub len: u64,
+    /// Remote offset.
     pub offset: u64,
 }
 
 /// Fixed-capacity trace recorder (ring, keeps the tail).
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
+    /// Recorded operations, in issue order.
     pub ops: Vec<TraceOp>,
     cap: usize,
 }
 
 impl Trace {
+    /// Trace that keeps at most `cap` ops.
     pub fn with_capacity(cap: usize) -> Trace {
         Trace { ops: Vec::with_capacity(cap.min(1 << 20)), cap }
     }
 
+    /// Record an op (dropped once the trace is full).
     pub fn record(&mut self, op: TraceOp) {
         if self.ops.len() < self.cap {
             self.ops.push(op);

@@ -23,6 +23,7 @@ pub struct ScenarioCfg {
     pub conns: usize,
     /// Applications the connections are divided among.
     pub apps: u32,
+    /// Operation payload size.
     pub msg_bytes: u64,
     /// Outstanding ops per connection (closed loop window).
     pub window: u32,
@@ -30,7 +31,9 @@ pub struct ScenarioCfg {
     pub duration: Ns,
     /// Fraction of the run treated as warmup (excluded from stats).
     pub warmup_frac: f64,
+    /// Workload RNG seed (runs replay bit-identically).
     pub seed: u64,
+    /// Fabric the scenario runs on.
     pub fabric: FabricConfig,
 }
 
@@ -54,12 +57,19 @@ impl Default for ScenarioCfg {
 /// One measured run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RunStats {
+    /// Delivered payload throughput, Gb/s.
     pub gbps: f64,
+    /// Completed operations, millions per second.
     pub mops: f64,
+    /// Operations completed inside the measured window.
     pub ops: u64,
+    /// Median op latency, microseconds.
     pub p50_us: f64,
+    /// 99th-percentile op latency, microseconds.
     pub p99_us: f64,
+    /// Client-side memory footprint (Fig 7 input).
     pub mem_bytes: u64,
+    /// Client-side cores-equivalent consumed (Fig 8 input).
     pub cpu_cores: f64,
     /// Client-NIC ICM cache hit rate over the measured window.
     pub cache_hit_rate: f64,

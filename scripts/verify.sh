@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Tier-1 verification + repo hygiene. Run from the repository root.
+#
+#   scripts/verify.sh            # full: build, test, benches, docs, dep check
+#   scripts/verify.sh --quick    # shrink the simulated sweeps (CI)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--quick" ]]; then
+    export RDMAVISOR_BENCH_QUICK=1
+fi
+
+echo "== zero-dependency check =="
+# The crate must keep compiling offline with std only: no ecosystem crate
+# may be imported anywhere in the Rust tree. Match import/path forms, not
+# prose (comments legitimately mention the crates we replaced).
+banned='^[[:space:]]*(pub[[:space:]]+)?use[[:space:]]+(anyhow|serde|serde_json|tokio|libc|xla|rand|clap|criterion|proptest)(::|;| )|(anyhow|serde_json|tokio|libc|xla)::'
+if git grep -nE "$banned" -- 'rust/src' 'rust/tests' 'rust/benches' 'examples'; then
+    echo "FAIL: banned external-crate import found (see above)" >&2
+    exit 1
+fi
+echo "ok: no external-crate imports"
+
+echo "== manifest declares no dependencies =="
+if awk '/^\[dependencies\]/{f=1;next} /^\[/{f=0} f && NF && $1 !~ /^#/' rust/Cargo.toml | grep -q .; then
+    echo "FAIL: rust/Cargo.toml [dependencies] is not empty" >&2
+    exit 1
+fi
+echo "ok: [dependencies] empty"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== bench targets compile =="
+cargo build --benches
+
+echo "== rustdoc (missing_docs surface) =="
+cargo doc --no-deps
+
+echo "== smoke: figure runner emits JSON =="
+out="$(cargo run --quiet --release -- fig --id 1 --quick 2>/dev/null)"
+case "$out" in
+    '{"budget"'*|'{'*'"command":"fig"'*) echo "ok: fig --id 1 printed JSON" ;;
+    *) echo "FAIL: unexpected fig output: ${out:0:120}" >&2; exit 1 ;;
+esac
+
+echo "ALL CHECKS PASSED"
