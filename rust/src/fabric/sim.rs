@@ -281,6 +281,14 @@ impl Sim {
         n.qps.get_mut(&qpn.0).expect("no such qp").srq = Some(srqn);
     }
 
+    /// Resize a QP's send-queue capacity after creation (e.g. the RaaS
+    /// daemon's host-wide UD QP, which multiplexes every migrated
+    /// destination and needs a far deeper SQ than the per-peer default).
+    pub fn set_sq_depth(&mut self, node: NodeId, qpn: Qpn, depth: usize) {
+        let n = self.node_mut(node);
+        n.qps.get_mut(&qpn.0).expect("no such qp").sq_depth = depth;
+    }
+
     /// Register a memory region on `node`.
     pub fn reg_mr(&mut self, node: NodeId, len: u64, access: Access, huge: bool) -> MemoryRegion {
         self.node_mut(node).mrs.register(len, access, huge)

@@ -11,9 +11,10 @@ use crate::fabric::sim::FabricConfig;
 use crate::fabric::time::Ns;
 use crate::fabric::types::{QpTransport, Verb};
 use crate::fabric::verbs::capability_matrix;
+use crate::metrics::Series;
 use crate::workload::scenarios::{
-    locked_random_read, naive_random_read, raas_random_read, verbs_sweep_point, RunStats,
-    ScenarioCfg,
+    locked_random_read, naive_random_read, raas_random_read, scale_send, verbs_sweep_point,
+    RunStats, ScaleCfg, ScaleRun, ScenarioCfg,
 };
 
 /// Message sizes swept in Fig 1 (64 B … 1 MB).
@@ -337,6 +338,229 @@ pub fn print_fig8(rows: &[Fig78Row]) -> String {
         out.push_str(&format!("{:>6} {:>12.2} {:>12.2}\n", r.apps, r.naive_cpu, r.raas_cpu));
     }
     out
+}
+
+// ------------------------------------------------------------------- Fig 9
+
+/// Connection counts swept in the Fig-9 scale experiment (2 → 8192; the
+/// destination fan-out caps at [`FIG9_MAX_SERVERS`], so the ICM knee sits
+/// where destinations pass the cache's RC budget).
+pub const FIG9_CONNS: &[usize] = &[2, 64, 256, 512, 1024, 2048, 4096, 8192];
+
+/// Destination-daemon cap of the Fig-9 sweep.
+pub const FIG9_MAX_SERVERS: usize = 1024;
+
+/// One Fig-9 sweep point: adaptive migration vs the RC-only ablation.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig9Row {
+    /// Connection count of this sweep point.
+    pub conns: usize,
+    /// Adaptive RC↔UD migration run (None in the `--rc-only` ablation).
+    pub adaptive: Option<ScaleRun>,
+    /// RC-only ablation run.
+    pub rc_only: ScaleRun,
+}
+
+fn fig9_cfg(conns: usize, budget: Budget, rc_only: bool) -> ScaleCfg {
+    let mut cfg = ScaleCfg::default();
+    cfg.conns = conns;
+    cfg.max_servers = FIG9_MAX_SERVERS;
+    cfg.rc_only = rc_only;
+    cfg.duration = match budget {
+        Budget::Quick => Ns::from_ms(4),
+        Budget::Full => Ns::from_ms(10),
+    };
+    cfg
+}
+
+fn fig9_conns(budget: Budget) -> Vec<usize> {
+    match budget {
+        Budget::Quick => vec![2, 256, 2048],
+        Budget::Full => FIG9_CONNS.to_vec(),
+    }
+}
+
+/// Fig 9: thousand-connection scale — adaptive RC↔UD migration vs the
+/// RC-only ablation, 64 B–4 KB closed-loop `send()` traffic.
+pub fn fig9(budget: Budget) -> Vec<Fig9Row> {
+    fig9_conns(budget)
+        .into_iter()
+        .map(|c| Fig9Row {
+            conns: c,
+            adaptive: Some(scale_send(&fig9_cfg(c, budget, false))),
+            rc_only: scale_send(&fig9_cfg(c, budget, true)),
+        })
+        .collect()
+}
+
+/// The `--rc-only` ablation alone (adaptive column omitted).
+pub fn fig9_rc_only(budget: Budget) -> Vec<Fig9Row> {
+    fig9_conns(budget)
+        .into_iter()
+        .map(|c| Fig9Row {
+            conns: c,
+            adaptive: None,
+            rc_only: scale_send(&fig9_cfg(c, budget, true)),
+        })
+        .collect()
+}
+
+/// Render the Fig-9 table.
+pub fn print_fig9(rows: &[Fig9Row]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Fig 9: scale — adaptive RC\u{2194}UD migration vs RC-only, 64B-4KB sends\n",
+    );
+    out.push_str(&format!(
+        "{:>7} {:>8} {:>10} {:>11} {:>8} {:>10} {:>11} {:>10}\n",
+        "conns", "servers", "adpt Gb/s", "rc-only G/s", "UD frac", "adpt hit", "rc-only hit", "migrations"
+    ));
+    for r in rows {
+        let (ag, af, ah, am) = match &r.adaptive {
+            Some(a) => (
+                format!("{:.2}", a.gbps),
+                format!("{:.2}", a.ud_fraction),
+                format!("{:.1}%", a.cache_hit_rate * 100.0),
+                format!("{}", a.migrations_to_ud),
+            ),
+            None => ("-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        out.push_str(&format!(
+            "{:>7} {:>8} {:>10} {:>11.2} {:>8} {:>10} {:>10.1}% {:>10}\n",
+            r.conns,
+            r.rc_only.servers,
+            ag,
+            r.rc_only.gbps,
+            af,
+            ah,
+            r.rc_only.cache_hit_rate * 100.0,
+            am
+        ));
+    }
+    out
+}
+
+/// The Fig-9 [`Series`] (shared by the CLI and the determinism tests).
+pub fn fig9_series(rows: &[Fig9Row]) -> Series {
+    let mut s = Series::new(
+        "fig9_scale",
+        "conns",
+        &[
+            "adaptive_gbps",
+            "rc_only_gbps",
+            "adaptive_mops",
+            "rc_only_mops",
+            "ud_fraction",
+            "adaptive_cache",
+            "rc_only_cache",
+            "adaptive_cpu",
+            "rc_only_cpu",
+            "adaptive_mem_bytes",
+            "rc_only_mem_bytes",
+        ],
+    );
+    for r in rows {
+        let a = r.adaptive;
+        let pick = |f: fn(&ScaleRun) -> f64| a.as_ref().map(f).unwrap_or(f64::NAN);
+        s.push(
+            r.conns as f64,
+            vec![
+                pick(|x| x.gbps),
+                r.rc_only.gbps,
+                pick(|x| x.mops),
+                r.rc_only.mops,
+                pick(|x| x.ud_fraction),
+                pick(|x| x.cache_hit_rate),
+                r.rc_only.cache_hit_rate,
+                pick(|x| x.cpu_cores),
+                r.rc_only.cpu_cores,
+                pick(|x| x.fabric_mem_bytes as f64),
+                r.rc_only.fabric_mem_bytes as f64,
+            ],
+        );
+    }
+    s
+}
+
+// --------------------------------------------------------- figure runner
+
+/// Run one figure id end-to-end; returns its [`Series`] plus the rendered
+/// paper-shaped table (callers choose the stream the table goes to).
+/// Figures 7 and 8 come from one shared sweep, memoized in `fig78_cache`
+/// so asking for both runs it once. Unknown ids return None.
+pub fn run_fig(
+    id: u64,
+    b: Budget,
+    fig78_cache: &mut Option<Vec<Fig78Row>>,
+) -> Option<(Series, String)> {
+    match id {
+        1 => {
+            let rows = fig1(b);
+            let table = print_fig1(&rows);
+            let mut s = Series::new(
+                "fig1_verbs",
+                "msg_bytes",
+                &["rc_read", "rc_write", "uc_write", "ud_send"],
+            );
+            for r in &rows {
+                s.push(r.msg_bytes as f64, vec![r.rc_read, r.rc_write, r.uc_write, r.ud_send]);
+            }
+            Some((s, table))
+        }
+        5 => {
+            let rows = fig5(b);
+            let table = print_fig5(&rows);
+            let mut s = Series::new(
+                "fig5_scalability",
+                "conns",
+                &["naive_gbps", "raas_gbps", "naive_cache", "raas_cache"],
+            );
+            for r in &rows {
+                s.push(
+                    r.conns as f64,
+                    vec![r.naive.gbps, r.raas.gbps, r.naive.cache_hit_rate, r.raas.cache_hit_rate],
+                );
+            }
+            Some((s, table))
+        }
+        6 => {
+            let rows = fig6(b);
+            let table = print_fig6(&rows);
+            let mut s = Series::new(
+                "fig6_qp_sharing",
+                "threads",
+                &["raas_mops", "lock_q3_mops", "lock_q6_mops"],
+            );
+            for r in &rows {
+                s.push(r.threads as f64, vec![r.raas.mops, r.locked_q3.mops, r.locked_q6.mops]);
+            }
+            Some((s, table))
+        }
+        7 => {
+            let rows = fig78_cache.get_or_insert_with(|| fig78(b)).clone();
+            let table = print_fig7(&rows);
+            let mut s = Series::new("fig7_memory", "apps", &["naive_mem", "raas_mem"]);
+            for r in &rows {
+                s.push(r.apps as f64, vec![r.naive_mem, r.raas_mem]);
+            }
+            Some((s, table))
+        }
+        8 => {
+            let rows = fig78_cache.get_or_insert_with(|| fig78(b)).clone();
+            let table = print_fig8(&rows);
+            let mut s = Series::new("fig8_cpu", "apps", &["naive_cpu", "raas_cpu"]);
+            for r in &rows {
+                s.push(r.apps as f64, vec![r.naive_cpu, r.raas_cpu]);
+            }
+            Some((s, table))
+        }
+        9 => {
+            let rows = fig9(b);
+            let table = print_fig9(&rows);
+            Some((fig9_series(&rows), table))
+        }
+        _ => None,
+    }
 }
 
 // ------------------------------------------------------- §2.2 ablation

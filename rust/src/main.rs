@@ -2,10 +2,11 @@
 //!
 //! One binary drives the whole reproduction. Subcommands:
 //!
-//! * `fig --id {1,5,6,7,8}` — regenerate a paper figure and print the
-//!   series as JSON on stdout (human-readable table on stderr). `--all`
-//!   runs every figure; `--quick` shrinks the sweeps; `--tsv DIR` also
-//!   writes TSVs.
+//! * `fig --id {1,5,6,7,8,9}` — regenerate a paper figure (9 = the
+//!   RC↔UD-migration scale extension) and print the series as JSON on
+//!   stdout (human-readable table on stderr). `--all` runs every figure;
+//!   `--quick` shrinks the sweeps; `--rc-only` restricts figure 9 to the
+//!   ablation; `--tsv DIR` also writes TSVs.
 //! * `bench hotpath` — the hot-path microbenchmarks (SPSC ring, doorbell,
 //!   ICM cache, daemon submit) with JSON results.
 //! * `bench` — one scenario run with explicit knobs (`--system
@@ -52,12 +53,12 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: rdmavisor <fig|figures|bench|demo|serve|init-config|info> [--help]\n\
-                 \n  fig --id 1|5|6|7|8 [--all] [--quick] [--tsv DIR]   (JSON on stdout)\
+                 \n  fig --id 1|5|6|7|8|9 [--all] [--quick] [--rc-only] [--tsv DIR]   (JSON on stdout)\
                  \n  bench hotpath [--quick]                            (JSON on stdout)\
                  \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
                  [--window N] [--duration-ms MS] [--q N] [--config FILE]\
                  \n  demo kv|rpc|inference [--gets N] [--calls N] [--requests N]\
-                 \n  figures --all | --table1 --fig1 --fig5 --fig6 --fig7 --fig8 \
+                 \n  figures --all | --table1 --fig1 --fig5 --fig6 --fig7 --fig8 --fig9 \
                  --send-staging --batching [--quick] [--tsv DIR]\
                  \n  serve [--clients N] [--requests N] [--artifacts DIR]\
                  \n  init-config [--out FILE]"
@@ -86,30 +87,6 @@ fn num(f: f64) -> Json {
     }
 }
 
-fn series_to_json(s: &Series) -> Json {
-    obj(vec![
-        ("name", Json::Str(s.name.clone())),
-        ("x", Json::Str(s.x_label.clone())),
-        (
-            "series",
-            Json::Arr(s.y_labels.iter().map(|l| Json::Str(l.clone())).collect()),
-        ),
-        (
-            "rows",
-            Json::Arr(
-                s.rows
-                    .iter()
-                    .map(|(x, ys)| {
-                        let mut row = vec![num(*x)];
-                        row.extend(ys.iter().map(|y| num(*y)));
-                        Json::Arr(row)
-                    })
-                    .collect(),
-            ),
-        ),
-    ])
-}
-
 fn run_stats_json(st: &RunStats) -> Json {
     obj(vec![
         ("gbps", num(st.gbps)),
@@ -126,83 +103,10 @@ fn run_stats_json(st: &RunStats) -> Json {
 
 // ------------------------------------------------------------------- `fig`
 
-/// Run one figure id; returns its [`Series`] plus the rendered
-/// paper-shaped table (callers choose the stream it goes to). Figures 7
-/// and 8 come from one shared sweep, memoized in `fig78_cache` so asking
-/// for both runs it once.
-fn run_fig(id: u64, b: Budget, fig78_cache: &mut Option<Vec<figures::Fig78Row>>) -> (Series, String) {
-    match id {
-        1 => {
-            let rows = figures::fig1(b);
-            let table = figures::print_fig1(&rows);
-            let mut s = Series::new(
-                "fig1_verbs",
-                "msg_bytes",
-                &["rc_read", "rc_write", "uc_write", "ud_send"],
-            );
-            for r in &rows {
-                s.push(r.msg_bytes as f64, vec![r.rc_read, r.rc_write, r.uc_write, r.ud_send]);
-            }
-            (s, table)
-        }
-        5 => {
-            let rows = figures::fig5(b);
-            let table = figures::print_fig5(&rows);
-            let mut s = Series::new(
-                "fig5_scalability",
-                "conns",
-                &["naive_gbps", "raas_gbps", "naive_cache", "raas_cache"],
-            );
-            for r in &rows {
-                s.push(
-                    r.conns as f64,
-                    vec![r.naive.gbps, r.raas.gbps, r.naive.cache_hit_rate, r.raas.cache_hit_rate],
-                );
-            }
-            (s, table)
-        }
-        6 => {
-            let rows = figures::fig6(b);
-            let table = figures::print_fig6(&rows);
-            let mut s = Series::new(
-                "fig6_qp_sharing",
-                "threads",
-                &["raas_mops", "lock_q3_mops", "lock_q6_mops"],
-            );
-            for r in &rows {
-                s.push(r.threads as f64, vec![r.raas.mops, r.locked_q3.mops, r.locked_q6.mops]);
-            }
-            (s, table)
-        }
-        7 => {
-            let rows = fig78_cache.get_or_insert_with(|| figures::fig78(b)).clone();
-            let table = figures::print_fig7(&rows);
-            let mut s = Series::new("fig7_memory", "apps", &["naive_mem", "raas_mem"]);
-            for r in &rows {
-                s.push(r.apps as f64, vec![r.naive_mem, r.raas_mem]);
-            }
-            (s, table)
-        }
-        8 => {
-            let rows = fig78_cache.get_or_insert_with(|| figures::fig78(b)).clone();
-            let table = figures::print_fig8(&rows);
-            let mut s = Series::new("fig8_cpu", "apps", &["naive_cpu", "raas_cpu"]);
-            for r in &rows {
-                s.push(r.apps as f64, vec![r.naive_cpu, r.raas_cpu]);
-            }
-            (s, table)
-        }
-        other => {
-            eprintln!("unknown figure id {other}: expected 1, 5, 6, 7 or 8");
-            std::process::exit(2);
-        }
-    }
-}
-
 fn fig_cmd(args: &Args) {
     let b = budget(args);
     let mut ids: Vec<u64> = if args.flag("all") {
-        vec![1, 5, 6, 7, 8]
+        vec![1, 5, 6, 7, 8, 9]
     } else {
         args.u64_list("id", &[])
     };
@@ -216,7 +120,7 @@ fn fig_cmd(args: &Args) {
     let mut seen = std::collections::BTreeSet::new();
     ids.retain(|id| seen.insert(*id));
     if ids.is_empty() {
-        eprintln!("usage: rdmavisor fig --id 1|5|6|7|8 [--all] [--quick] [--tsv DIR]");
+        eprintln!("usage: rdmavisor fig --id 1|5|6|7|8|9 [--all] [--quick] [--rc-only] [--tsv DIR]");
         std::process::exit(2);
     }
 
@@ -225,9 +129,21 @@ fn fig_cmd(args: &Args) {
     let mut figs = Vec::new();
     let mut fig78_cache = None;
     for &id in &ids {
-        let (s, table) = run_fig(id, b, &mut fig78_cache);
+        // `fig --id 9 --rc-only` runs just the ablation series
+        let (s, table) = if id == 9 && args.flag("rc-only") {
+            let rows = figures::fig9_rc_only(b);
+            (figures::fig9_series(&rows), figures::print_fig9(&rows))
+        } else {
+            match figures::run_fig(id, b, &mut fig78_cache) {
+                Some(r) => r,
+                None => {
+                    eprintln!("unknown figure id {id}: expected 1, 5, 6, 7, 8 or 9");
+                    std::process::exit(2);
+                }
+            }
+        };
         eprint!("{table}");
-        let mut f = series_to_json(&s);
+        let mut f = s.to_json();
         if let Json::Obj(m) = &mut f {
             m.insert("id".to_string(), Json::Num(id as f64));
         }
@@ -264,9 +180,12 @@ fn figures_cmd(args: &Args) {
         println!("{}", figures::table1());
     }
     let mut fig78_cache = None;
-    for (flag, id) in [("fig1", 1u64), ("fig5", 5), ("fig6", 6), ("fig7", 7), ("fig8", 8)] {
+    for (flag, id) in
+        [("fig1", 1u64), ("fig5", 5), ("fig6", 6), ("fig7", 7), ("fig8", 8), ("fig9", 9)]
+    {
         if all || args.flag(flag) {
-            let (s, table) = run_fig(id, b, &mut fig78_cache);
+            let (s, table) =
+                figures::run_fig(id, b, &mut fig78_cache).expect("known figure id");
             print!("{table}");
             series.push(s);
         }

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 use std::io::Write;
 
 use crate::fabric::time::Ns;
+use crate::util::jsonmini::{obj, Json};
 
 /// A named table: one x column + named y series, row-major.
 #[derive(Clone, Debug, Default)]
@@ -63,6 +64,35 @@ impl Series {
             ));
         }
         s
+    }
+
+    /// Render as a JSON document: `{name, x, series, rows}` with NaN/inf
+    /// degraded to `null` (strict-JSON safe). Keys are sorted and rows
+    /// kept in insertion order, so equal series serialize byte-identically
+    /// — the determinism tests compare exactly this string.
+    pub fn to_json(&self) -> Json {
+        let num = |f: f64| if f.is_finite() { Json::Num(f) } else { Json::Null };
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("x", Json::Str(self.x_label.clone())),
+            (
+                "series",
+                Json::Arr(self.y_labels.iter().map(|l| Json::Str(l.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|(x, ys)| {
+                            let mut row = vec![num(*x)];
+                            row.extend(ys.iter().map(|y| num(*y)));
+                            Json::Arr(row)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 
     /// Write `<dir>/<name>.tsv`; returns the path.
@@ -129,6 +159,17 @@ mod tests {
         assert!(tsv.contains("1000\t"));
         let md = s.to_markdown();
         assert!(md.contains("| conns | naive | raas |"));
+    }
+
+    #[test]
+    fn series_json_degrades_nan_to_null() {
+        let mut s = Series::new("t", "x", &["a"]);
+        s.push(1.0, vec![f64::NAN]);
+        s.push(2.0, vec![0.5]);
+        let j = s.to_json().to_string();
+        assert!(j.contains("[1,null]"), "{j}");
+        assert!(j.contains("[2,0.5]"), "{j}");
+        assert!(j.starts_with("{\"name\":\"t\""), "{j}");
     }
 
     #[test]

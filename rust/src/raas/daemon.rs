@@ -13,15 +13,28 @@
 //! * **Poller** drains both CQs, demuxes by vQPN (`wr_id` for one-sided,
 //!   `imm_data` for two-sided), releases staging leases, replenishes the
 //!   SRQ, and delivers results to the owning app's completion ring.
+//!
+//! Alongside the per-remote shared RC QPs the daemon owns **one host-wide
+//! UD QP**: destinations whose RC contexts would thrash the NIC's ICM
+//! cache are migrated onto it by the [`super::migrate::TransportManager`]
+//! (telemetry-driven, hysteretic, drained before the flip). UD is
+//! SEND-only and MTU-capped, so migrated messages are fragmented with a
+//! per-vQPN sequence header in `imm_data` and reassembled by the peer's
+//! Poller before delivery.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use crate::fabric::sim::Sim;
-use crate::fabric::types::{Cqn, NodeId, Qpn, Srqn, Verb, WcStatus};
+use crate::fabric::time::Ns;
+use crate::fabric::types::{Cqn, NodeId, QpTransport, Qpn, Srqn, Verb, WcStatus};
 use crate::fabric::wqe::{Cqe, SendWr};
 
 use super::api::{Flags, RaasError, Target};
 use super::buffer::{BufferPool, Lease, Staging, StagingCosts, DEFAULT_LAYOUT};
+use super::migrate::{
+    pack_ud_imm, ud_max_msg_bytes, unpack_ud_imm, DestState, MigrationConfig, Reassembler,
+    TransportManager,
+};
 use super::shmem::ShmCosts;
 use super::telemetry::Telemetry;
 use super::transport::{HostLoad, Selector, SelectorConfig};
@@ -52,6 +65,12 @@ pub struct DaemonConfig {
     pub wr_build_ns: u64,
     /// Per-CQE demux cost on the Poller (vQPN lookup + ring push).
     pub demux_ns: u64,
+    /// RC↔UD migration policy (see [`super::migrate`]).
+    pub migration: MigrationConfig,
+    /// Send-queue depth of the host-wide UD QP. It multiplexes every
+    /// migrated destination, so it needs far more slots than the
+    /// per-peer fabric default.
+    pub ud_sq_depth: usize,
 }
 
 impl Default for DaemonConfig {
@@ -68,6 +87,8 @@ impl Default for DaemonConfig {
             pool_layout: DEFAULT_LAYOUT.to_vec(),
             wr_build_ns: 60,
             demux_ns: 40,
+            migration: MigrationConfig::default(),
+            ud_sq_depth: 8192,
         }
     }
 }
@@ -100,6 +121,12 @@ pub struct DaemonStats {
     pub send_staged_memcpy: u64,
     /// Sends staged by register-on-the-fly.
     pub send_staged_memreg: u64,
+    /// `send()` calls routed over a shared RC QP.
+    pub sent_rc: u64,
+    /// `send()` calls routed over the host-wide UD QP (migrated or pinned).
+    pub sent_ud: u64,
+    /// UD fragments emitted by the segmentation layer.
+    pub ud_fragments: u64,
 }
 
 /// Info about a peer daemon's pool we can one-sidedly address.
@@ -124,16 +151,41 @@ pub struct Daemon {
     pub telemetry: Telemetry,
     /// Adaptive transport/verb selector.
     pub selector: Selector,
+    /// RC↔UD migration engine (per-destination states + hysteresis).
+    pub migrate: TransportManager,
+    /// Poller-side reassembly of fragmented UD messages.
+    pub reassembly: Reassembler,
     /// Aggregate data-path counters.
     pub stats: DaemonStats,
     send_cq: Cqn,
     recv_cq: Cqn,
     srq: Srqn,
+    /// The host-wide UD QP every migrated destination shares.
+    ud_qp: Qpn,
     /// remote node -> shared QP to it (THE §2.3 structure).
     shared_qps: HashMap<u32, Qpn>,
+    /// remote node -> its daemon's UD QPN (exchanged at connect).
+    remote_ud: HashMap<u32, Qpn>,
     remote_pools: HashMap<u32, RemotePool>,
-    /// Worker-side pending WR batches, per remote node.
-    pending: HashMap<u32, Vec<SendWr>>,
+    /// Worker-side pending WR batches, per remote node. Flush order is
+    /// carried by `dirty_remotes` (submission order), never by map
+    /// iteration — a HashMap's iteration order would leak the hasher
+    /// seed into the event timeline. BTreeMap is belt-and-braces for any
+    /// future iteration of this map.
+    pending: BTreeMap<u32, Vec<SendWr>>,
+    /// Worker-side pending UD fragments (one batch, one QP).
+    ud_pending: Vec<SendWr>,
+    /// Remotes whose batch went non-empty since the last pump, in
+    /// submission order (so pump flushes O(dirty), not O(all remotes)).
+    dirty_remotes: Vec<u32>,
+    /// wr_id -> remote node for in-flight RC WRs (drain accounting).
+    rc_inflight_remote: HashMap<u64, u32>,
+    /// wr_id of a fragmented message's signaled last fragment -> logical
+    /// message length (the CQE only carries the fragment's own length).
+    ud_msg_len: HashMap<u64, u64>,
+    /// Last ICM sample: (virtual time, hits, misses); None before the
+    /// first pump.
+    icm_sample: Option<(Ns, u64, u64)>,
     /// Leases to release when a wr_id completes; `bool` = deliver-to-app
     /// copy required (non-zero-copy read landing).
     open_leases: HashMap<u64, (Lease, bool)>,
@@ -148,11 +200,17 @@ pub struct Daemon {
 }
 
 impl Daemon {
-    /// Bring the daemon up on `node`: CQs, SRQ (pre-filled), buffer pool.
+    /// Bring the daemon up on `node`: CQs, SRQ (pre-filled), buffer pool,
+    /// and the host-wide UD QP (created up front — its context cost is
+    /// O(1) regardless of how many destinations later migrate onto it).
     pub fn start(sim: &mut Sim, node: NodeId, cfg: DaemonConfig) -> Daemon {
         let send_cq = sim.create_cq(node, 65_536);
         let recv_cq = sim.create_cq(node, 65_536);
         let srq = sim.create_srq(node, cfg.srq_capacity, cfg.srq_watermark);
+        let ud_qp = sim.create_qp(node, QpTransport::Ud, send_cq, recv_cq);
+        sim.activate_ud(node, ud_qp);
+        sim.attach_srq(node, ud_qp, srq);
+        sim.set_sq_depth(node, ud_qp, cfg.ud_sq_depth);
         let mut pool = BufferPool::new(sim, node, &cfg.pool_layout);
         let mut srq_wr_seq = 0;
         // pre-post the SRQ from the pool
@@ -162,6 +220,8 @@ impl Daemon {
         Daemon {
             node,
             selector: Selector::new(cfg.selector.clone()),
+            migrate: TransportManager::new(cfg.migration),
+            reassembly: Reassembler::new(),
             conns: ConnTable::new(),
             pool,
             telemetry,
@@ -169,9 +229,16 @@ impl Daemon {
             send_cq,
             recv_cq,
             srq,
+            ud_qp,
             shared_qps: HashMap::new(),
+            remote_ud: HashMap::new(),
             remote_pools: HashMap::new(),
-            pending: HashMap::new(),
+            pending: BTreeMap::new(),
+            ud_pending: Vec::new(),
+            dirty_remotes: Vec::new(),
+            rc_inflight_remote: HashMap::new(),
+            ud_msg_len: HashMap::new(),
+            icm_sample: None,
             open_leases: HashMap::new(),
             inboxes: HashMap::new(),
             listeners: HashMap::new(),
@@ -314,6 +381,9 @@ impl Daemon {
 
     /// `send(fd, buf, len, FLAGS)` — Fig 3. Adaptive path: small → SEND,
     /// large → WRITE(+imm) per the selector; `FLAGS` pins components.
+    /// Destinations the [`TransportManager`] has migrated (and unpinned
+    /// `Flags::UD` traffic) ride the host-wide UD QP instead, fragmented
+    /// at the MTU.
     pub fn send(
         &mut self,
         sim: &mut Sim,
@@ -324,21 +394,22 @@ impl Daemon {
         remote_load: HostLoad,
     ) -> Result<Verb, RaasError> {
         self.charge_submit(sim);
-        let local_load = self.load(sim);
-        let mtu = sim.cfg.mtu;
-        let choice = self.selector.choose(len, flags, local_load, remote_load, mtu)?;
         let entry = self.conns.lookup(conn).ok_or(RaasError::UnknownConnection)?;
         let (remote, peer_vqpn) = (entry.remote, entry.peer_vqpn);
-
-        // stage the payload: memcpy into the pool vs register-on-the-fly [9]
-        let staging = self.cfg.staging.choose(len);
-        let cost = self.cfg.staging.cost_ns(staging, len);
-        sim.node_mut(self.node).cpu.charge(cost);
-        match staging {
-            Staging::Memcpy => self.stats.send_staged_memcpy += 1,
-            Staging::Memreg => self.stats.send_staged_memreg += 1,
+        let local_load = self.load(sim);
+        let mtu = sim.cfg.mtu;
+        // only fully migrated destinations route new sends onto UD; a
+        // draining destination keeps RC so per-connection order holds
+        // across the transition (see [`super::migrate`])
+        let prefer_ud = self.migrate.state_of(remote.0) == DestState::Ud;
+        let choice =
+            self.selector
+                .choose_adaptive(len, flags, local_load, remote_load, mtu, prefer_ud)?;
+        if choice.transport == QpTransport::Ud {
+            return self.send_ud(sim, conn, remote, peer_vqpn, len);
         }
-        let lease = self.pool.lease(len).ok_or(RaasError::PoolExhausted)?;
+
+        let lease = self.stage_payload(sim, len)?;
 
         let seq = self.bump_seq();
         let wr_id = pack_wr_id(conn, seq);
@@ -366,8 +437,97 @@ impl Daemon {
             Verb::Read => unreachable!("degraded above"),
         };
         self.open_leases.insert(wr_id, (lease, false));
+        self.stats.sent_rc += 1;
         self.enqueue_wr(sim, remote, wr, tag)?;
         Ok(verb)
+    }
+
+    /// Stage an outgoing payload into the registered pool: pick the
+    /// memcpy-vs-memreg strategy [9], charge its CPU cost, and lease a
+    /// slot (shared by the RC and UD send paths).
+    fn stage_payload(&mut self, sim: &mut Sim, len: u64) -> Result<Lease, RaasError> {
+        let staging = self.cfg.staging.choose(len);
+        let cost = self.cfg.staging.cost_ns(staging, len);
+        sim.node_mut(self.node).cpu.charge(cost);
+        match staging {
+            Staging::Memcpy => self.stats.send_staged_memcpy += 1,
+            Staging::Memreg => self.stats.send_staged_memreg += 1,
+        }
+        self.pool.lease(len.max(1)).ok_or(RaasError::PoolExhausted)
+    }
+
+    /// Datagram-mode send: fragment at the MTU, stamp each fragment with
+    /// the per-vQPN sequence header ([`pack_ud_imm`]), post the chain to
+    /// the host-wide UD QP. Only the last fragment is signaled, so the
+    /// initiator sees exactly one completion (and the one staging lease is
+    /// released) per logical message.
+    fn send_ud(
+        &mut self,
+        sim: &mut Sim,
+        conn: Vqpn,
+        remote: NodeId,
+        peer_vqpn: Vqpn,
+        len: u64,
+    ) -> Result<Verb, RaasError> {
+        let mtu = sim.cfg.mtu;
+        let max = ud_max_msg_bytes(mtu);
+        if len > max {
+            return Err(RaasError::TooLong { len, max });
+        }
+        let ud_peer = *self
+            .remote_ud
+            .get(&remote.0)
+            .ok_or(RaasError::UnknownConnection)?;
+
+        let lease = self.stage_payload(sim, len)?;
+
+        let nfrags = len.div_ceil(mtu).max(1);
+        let mut last_wr_id = 0;
+        for k in 0..nfrags {
+            let frag_len = if k == nfrags - 1 { len - k * mtu } else { mtu };
+            let seq = self.bump_seq();
+            let wr_id = pack_wr_id(conn, seq);
+            let imm = pack_ud_imm(peer_vqpn, k as u16, k == nfrags - 1);
+            let mut wr =
+                SendWr::send(wr_id, frag_len, self.pool.mr.key, lease.addr + k * mtu, imm)
+                    .to_ud(remote, ud_peer);
+            if k != nfrags - 1 {
+                wr = wr.unsignaled();
+            }
+            last_wr_id = wr_id;
+            self.telemetry.charge(self.cfg.shm.ring_pop_ns + self.cfg.wr_build_ns);
+            self.ud_pending.push(wr);
+        }
+        self.open_leases.insert(last_wr_id, (lease, false));
+        if nfrags > 1 {
+            self.ud_msg_len.insert(last_wr_id, len);
+        }
+        self.stats.sent_ud += 1;
+        self.stats.ud_fragments += nfrags;
+        if self.ud_pending.len() >= self.cfg.batch_max {
+            self.flush_ud(sim)?;
+        }
+        Ok(Verb::Send)
+    }
+
+    /// Flush the pending UD fragment batch — one doorbell, bounded by the
+    /// UD QP's free SQ slots (leftovers stay pending: daemon-side
+    /// backpressure, same as the RC batches).
+    fn flush_ud(&mut self, sim: &mut Sim) -> Result<(), RaasError> {
+        if self.ud_pending.is_empty() {
+            return Ok(());
+        }
+        let free = sim.sq_free(self.node, self.ud_qp);
+        if free == 0 {
+            return Ok(());
+        }
+        let take = self.ud_pending.len().min(free);
+        let wrs: Vec<SendWr> = self.ud_pending.drain(..take).collect();
+        self.stats.batches_posted += 1;
+        self.stats.wrs_posted += wrs.len() as u64;
+        sim.post_send_batch(self.node, self.ud_qp, wrs)
+            .map_err(|e| RaasError::Fabric(e.to_string()))?;
+        Ok(())
     }
 
     fn bump_seq(&mut self) -> u32 {
@@ -376,6 +536,8 @@ impl Daemon {
     }
 
     /// Worker-side: append to the per-remote batch; flush at batch_max.
+    /// All WRs through here ride a shared RC QP, so they are accounted as
+    /// in-flight RC work for the migration engine's drain bookkeeping.
     fn enqueue_wr(
         &mut self,
         sim: &mut Sim,
@@ -384,7 +546,12 @@ impl Daemon {
         _tag: u64,
     ) -> Result<(), RaasError> {
         self.telemetry.charge(self.cfg.shm.ring_pop_ns + self.cfg.wr_build_ns);
+        self.rc_inflight_remote.insert(wr.wr_id, remote.0);
+        self.migrate.on_rc_submitted(remote.0);
         let batch = self.pending.entry(remote.0).or_default();
+        if batch.is_empty() {
+            self.dirty_remotes.push(remote.0);
+        }
         batch.push(wr);
         if batch.len() >= self.cfg.batch_max {
             self.flush_remote(sim, remote)?;
@@ -420,11 +587,17 @@ impl Daemon {
     /// Drivers call this each loop turn (it is what the daemon's service
     /// threads do continuously in the live implementation).
     pub fn pump(&mut self, sim: &mut Sim) {
-        // Worker: flush all pending batches
-        let remotes: Vec<u32> = self.pending.keys().copied().collect();
+        // Worker: flush batches that received WRs since the last pump
+        // (submission order — deterministic); a batch the SQ couldn't
+        // absorb stays dirty for the next pump
+        let remotes = std::mem::take(&mut self.dirty_remotes);
         for r in remotes {
             let _ = self.flush_remote(sim, NodeId(r));
+            if self.pending.get(&r).is_some_and(|b| !b.is_empty()) {
+                self.dirty_remotes.push(r);
+            }
         }
+        let _ = self.flush_ud(sim);
         // Poller: send-side completions
         loop {
             let cqes = sim.poll_cq(self.node, self.send_cq, 64);
@@ -448,12 +621,56 @@ impl Daemon {
         // SRQ refill
         Self::fill_srq(sim, self.node, self.srq, &mut self.pool, &self.cfg, &mut self.srq_wr_seq);
         self.telemetry.pool_pressure = self.pool.pressure();
+        // migration signals: sample the NIC cache, re-evaluate destinations
+        self.sample_migration(sim);
+    }
+
+    /// Fold the NIC's ICM counters into telemetry at the configured
+    /// cadence and let the migration engine re-evaluate every
+    /// destination. The very first pump evaluates immediately (structural
+    /// pressure needs no observation window), so a freshly connected
+    /// thousand-destination daemon migrates its tail before flooding the
+    /// cache rather than after.
+    fn sample_migration(&mut self, sim: &Sim) {
+        self.telemetry.active_qps = self.shared_qps.len() as u32 + 1;
+        if !self.cfg.migration.enabled {
+            return;
+        }
+        let now = sim.now();
+        let cache = &sim.node(self.node).cache;
+        let capacity = sim.cfg.nic.icm_cache_entries;
+        match self.icm_sample {
+            None => {
+                self.migrate.evaluate(capacity, now);
+                self.icm_sample = Some((now, cache.hits, cache.misses));
+            }
+            Some((t0, h0, m0)) => {
+                if cache.hits < h0 || cache.misses < m0 {
+                    // someone reset the cache stats: rebase the window
+                    self.icm_sample = Some((now, cache.hits, cache.misses));
+                    return;
+                }
+                if now.saturating_sub(t0).0 < self.cfg.migration.sample_ns {
+                    return;
+                }
+                let rate = self.telemetry.sample_icm(cache.hits - h0, cache.misses - m0);
+                self.migrate.observe_hit_rate(rate);
+                self.migrate.evaluate(capacity, now);
+                self.icm_sample = Some((now, cache.hits, cache.misses));
+            }
+        }
     }
 
     fn on_send_cqe(&mut self, sim: &mut Sim, cqe: Cqe) {
         self.telemetry.charge(self.cfg.demux_ns);
         let vqpn = unpack_vqpn(cqe.wr_id);
         let ok = cqe.status == WcStatus::Success;
+        // a fragmented UD message's CQE carries only the last fragment's
+        // length; report the logical message length to the app
+        let len = self.ud_msg_len.remove(&cqe.wr_id).unwrap_or(cqe.len);
+        if let Some(remote) = self.rc_inflight_remote.remove(&cqe.wr_id) {
+            self.migrate.on_rc_completed(remote);
+        }
         if let Some((lease, deliver_copy)) = self.open_leases.remove(&cqe.wr_id) {
             if deliver_copy && ok {
                 // copy read payload out to the app's private buffer
@@ -464,7 +681,7 @@ impl Daemon {
         self.stats.ops_completed += 1;
         self.telemetry.ops_completed += 1;
         if ok {
-            self.stats.bytes_completed += cqe.len;
+            self.stats.bytes_completed += len;
         }
         if let Some(entry) = self.conns.lookup(vqpn) {
             let app = entry.app;
@@ -472,7 +689,7 @@ impl Daemon {
             self.inboxes.entry(app).or_default().push_back(Delivery::OpComplete {
                 conn: vqpn,
                 tag: cqe.wr_id,
-                len: cqe.len,
+                len,
                 ok,
             });
         }
@@ -481,7 +698,23 @@ impl Daemon {
     fn on_recv_cqe(&mut self, sim: &mut Sim, cqe: Cqe) {
         self.telemetry.charge(self.cfg.demux_ns);
         let Some(imm) = cqe.imm_data else { return };
-        let vqpn = Vqpn(imm);
+        // UD arrivals land on the host-wide UD QP; their imm carries the
+        // fragment header, not a bare vQPN — reassemble before delivery.
+        let vqpn = if cqe.qpn == self.ud_qp {
+            let (vqpn, seq, last) = unpack_ud_imm(imm);
+            match self.reassembly.accept(vqpn, seq, last, cqe.len) {
+                Some(total) => return self.deliver_message(sim, vqpn, total),
+                None => return, // mid-message fragment (or datagram drop)
+            }
+        } else {
+            Vqpn(imm)
+        };
+        self.deliver_message(sim, vqpn, cqe.len)
+    }
+
+    /// Route a fully received two-sided message to its owning app's
+    /// completion ring.
+    fn deliver_message(&mut self, sim: &mut Sim, vqpn: Vqpn, len: u64) {
         let Some(entry) = self.conns.lookup(vqpn) else { return };
         let app = entry.app;
         // deliver: default path copies out of the shared pool; zero-copy
@@ -490,7 +723,7 @@ impl Daemon {
         self.telemetry.charge(self.cfg.shm.ring_push_ns);
         self.inboxes.entry(app).or_default().push_back(Delivery::Message {
             conn: vqpn,
-            len: cqe.len,
+            len,
             zero_copy: false,
         });
         let _ = sim; // copy cost charged at recv()/recv_zero_copy()
@@ -526,6 +759,21 @@ impl Daemon {
     /// Shared QPs this daemon holds (one per active remote node).
     pub fn shared_qp_count(&self) -> usize {
         self.shared_qps.len()
+    }
+
+    /// The host-wide UD QP every migrated destination shares.
+    pub fn ud_qpn(&self) -> Qpn {
+        self.ud_qp
+    }
+
+    /// Fraction of `send()` calls that rode the UD QP (0 when idle).
+    pub fn ud_send_fraction(&self) -> f64 {
+        let total = self.stats.sent_rc + self.stats.sent_ud;
+        if total == 0 {
+            0.0
+        } else {
+            self.stats.sent_ud as f64 / total as f64
+        }
     }
 
     /// Rolled-up resource usage (Figs 7/8).
@@ -584,6 +832,12 @@ pub fn connect_via(
             da.node.0,
             RemotePool { rkey: da.pool.mr.key, base: da.pool.mr.addr, len: da.pool.mr.len },
         );
+        // exchange UD addressing + register the destination with each
+        // side's migration engine (first-use rank)
+        da.remote_ud.insert(db.node.0, db.ud_qp);
+        db.remote_ud.insert(da.node.0, da.ud_qp);
+        da.migrate.register_dest(db.node.0);
+        db.migrate.register_dest(da.node.0);
     }
 
     // allocate the vQPN pair
@@ -664,7 +918,8 @@ mod tests {
         }
         assert_eq!(daemons[0].conns.active(), 100);
         assert_eq!(daemons[0].shared_qp_count(), 2, "one QP per remote node");
-        assert_eq!(sim.node(NodeId(0)).qps.len(), 2);
+        // 2 shared RC QPs + the daemon's host-wide UD QP
+        assert_eq!(sim.node(NodeId(0)).qps.len(), 3);
     }
 
     #[test]
@@ -793,6 +1048,172 @@ mod tests {
         assert_eq!(snap.conns, 10);
         assert_eq!(snap.shared_qps, 1);
         assert!(snap.mem_bytes > 0);
+    }
+
+    #[test]
+    fn pinned_ud_send_arrives_via_datagram_qp() {
+        let (mut sim, mut daemons) = cluster(2);
+        let c_app = daemons[0].register_app();
+        let s_app = daemons[1].register_app();
+        daemons[1].listen(s_app, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+        let peer = daemons[0].conns.lookup(conn).unwrap().peer_vqpn;
+
+        let verb = daemons[0]
+            .send(&mut sim, conn, 512, Flags::UD, 7, HostLoad::default())
+            .unwrap();
+        assert_eq!(verb, Verb::Send);
+        assert_eq!(daemons[0].stats.sent_ud, 1);
+        assert_eq!(daemons[0].stats.ud_fragments, 1);
+        pump_all(&mut sim, &mut daemons);
+
+        let d = daemons[1].recv(&mut sim, s_app).expect("message delivered");
+        assert_eq!(d, Delivery::Message { conn: peer, len: 512, zero_copy: false });
+        // sender got exactly one completion and released its lease
+        assert!(daemons[0].recv(&mut sim, c_app).is_some());
+        assert_eq!(daemons[0].pool.leased_bytes, 0);
+        // the datagram rode the UD QP, not the shared RC QP
+        let ud = daemons[0].ud_qpn();
+        assert_eq!(sim.node(NodeId(0)).qps[&ud.0].posted_send, 1);
+    }
+
+    #[test]
+    fn oversize_ud_send_is_fragmented_and_reassembled() {
+        let (mut sim, mut daemons) = cluster(2);
+        let c_app = daemons[0].register_app();
+        let s_app = daemons[1].register_app();
+        daemons[1].listen(s_app, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+
+        // 64 KB over a 4 KB MTU => 16 UD fragments, one logical message
+        daemons[0]
+            .send(&mut sim, conn, 64 << 10, Flags::UD, 7, HostLoad::default())
+            .unwrap();
+        assert_eq!(daemons[0].stats.ud_fragments, 16);
+        pump_all(&mut sim, &mut daemons);
+
+        let d = daemons[1].recv(&mut sim, s_app).expect("reassembled message");
+        assert!(matches!(d, Delivery::Message { len, .. } if len == 64 << 10));
+        assert_eq!(daemons[1].reassembly.completed, 1);
+        assert_eq!(daemons[1].reassembly.dropped, 0);
+        // exactly one initiator completion, reporting the LOGICAL length
+        // (the wire CQE only carries the last fragment's 4 KB)
+        assert_eq!(daemons[0].stats.ops_completed, 1);
+        let c = daemons[0].recv(&mut sim, c_app).expect("initiator completion");
+        assert!(
+            matches!(c, Delivery::OpComplete { len, ok: true, .. } if len == 64 << 10),
+            "{c:?}"
+        );
+        assert_eq!(daemons[0].stats.bytes_completed, 64 << 10);
+        assert_eq!(daemons[0].pool.leased_bytes, 0);
+    }
+
+    #[test]
+    fn ud_send_beyond_segmentation_limit_rejected() {
+        let (mut sim, mut daemons) = cluster(2);
+        let c_app = daemons[0].register_app();
+        let s_app = daemons[1].register_app();
+        daemons[1].listen(s_app, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+        let too_big = crate::raas::migrate::ud_max_msg_bytes(sim.cfg.mtu) + 1;
+        let err = daemons[0]
+            .send(&mut sim, conn, too_big, Flags::UD, 0, HostLoad::default())
+            .unwrap_err();
+        assert!(matches!(err, RaasError::TooLong { .. }));
+    }
+
+    #[test]
+    fn migration_under_pressure_rides_ud_and_honors_rc_pin() {
+        let mut fcfg = FabricConfig::default();
+        fcfg.nodes = 5;
+        let mut sim = Sim::new(fcfg);
+        let mut dcfg = DaemonConfig::default();
+        // 400-entry cache × 0.005 => RC budget 2: four destinations put
+        // the working-set pressure at 3/2 = 1.5 ≥ enter_ud, so the whole
+        // set migrates on the first evaluation
+        dcfg.migration.rc_share = 0.005;
+        let mut daemons: Vec<Daemon> = (0..5)
+            .map(|i| {
+                let cfg = if i == 0 { dcfg.clone() } else { DaemonConfig::default() };
+                Daemon::start(&mut sim, NodeId(i as u32), cfg)
+            })
+            .collect();
+        let app = daemons[0].register_app();
+        let mut conns = Vec::new();
+        for s in 1..5 {
+            let sapp = daemons[s].register_app();
+            daemons[s].listen(sapp, 1);
+            conns.push(connect_via(&mut sim, &mut daemons, 0, app, s, 1).unwrap());
+        }
+        // first pump evaluates structural pressure immediately
+        daemons[0].pump(&mut sim);
+        use crate::raas::migrate::DestState;
+        for remote in 1..5u32 {
+            assert_eq!(daemons[0].migrate.state_of(remote), DestState::Ud);
+        }
+        assert_eq!(daemons[0].migrate.to_ud, 4);
+
+        // unpinned sends to migrated destinations ride UD…
+        daemons[0]
+            .send(&mut sim, conns[2], 256, Flags::default(), 0, HostLoad::default())
+            .unwrap();
+        daemons[0]
+            .send(&mut sim, conns[0], 256, Flags::default(), 0, HostLoad::default())
+            .unwrap();
+        assert_eq!(daemons[0].stats.sent_ud, 2);
+        // …but an RC pin to a migrated destination is still honored
+        daemons[0]
+            .send(&mut sim, conns[2], 256, Flags::RC, 0, HostLoad::default())
+            .unwrap();
+        assert_eq!(daemons[0].stats.sent_rc, 1);
+
+        pump_all(&mut sim, &mut daemons);
+        assert_eq!(daemons[0].stats.ops_completed, 3, "no completion lost");
+        assert_eq!(daemons[0].pool.leased_bytes, 0);
+    }
+
+    #[test]
+    fn draining_destination_flips_after_inflight_completes() {
+        let mut fcfg = FabricConfig::default();
+        fcfg.nodes = 3;
+        let mut sim = Sim::new(fcfg);
+        let mut dcfg = DaemonConfig::default();
+        // budget 2: two destinations are safe structurally (pressure 0.5)
+        // but flip once the observed-thrash boost doubles it to 1.0
+        dcfg.migration.rc_share = 0.005;
+        let mut daemons = vec![
+            Daemon::start(&mut sim, NodeId(0), dcfg),
+            Daemon::start(&mut sim, NodeId(1), DaemonConfig::default()),
+            Daemon::start(&mut sim, NodeId(2), DaemonConfig::default()),
+        ];
+        let app = daemons[0].register_app();
+        let s1 = daemons[1].register_app();
+        daemons[1].listen(s1, 1);
+        let c1 = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+        let s2 = daemons[2].register_app();
+        daemons[2].listen(s2, 1);
+        let _c2 = connect_via(&mut sim, &mut daemons, 0, app, 2, 1).unwrap();
+
+        // put RC traffic in flight to node 1 BEFORE the pressure rises
+        daemons[0]
+            .send(&mut sim, c1, 256, Flags::default(), 0, HostLoad::default())
+            .unwrap();
+        daemons[0].pump(&mut sim); // evaluates: pressure 0.5 => stay Rc
+        use crate::raas::migrate::DestState;
+        assert_eq!(daemons[0].migrate.state_of(1), DestState::Rc);
+
+        // observed thrash doubles the pressure: 1×2/2 = 1.0 ≥ enter_ud,
+        // but the in-flight RC WR holds the drain open
+        daemons[0].migrate.observe_hit_rate(Some(0.0));
+        daemons[0].migrate.evaluate(sim.cfg.nic.icm_cache_entries, sim.now());
+        assert_eq!(
+            daemons[0].migrate.state_of(1),
+            DestState::DrainingToUd,
+            "in-flight RC WR holds the drain open"
+        );
+        // completing the WR promotes the destination to Ud
+        pump_all(&mut sim, &mut daemons);
+        assert_eq!(daemons[0].migrate.state_of(1), DestState::Ud);
     }
 
     #[test]

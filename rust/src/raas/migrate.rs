@@ -1,0 +1,638 @@
+//! Adaptive RC ↔ UD transport migration (the abstract's headline claim).
+//!
+//! RC is the right default — ordered, acked, SRQ-attachable — but every RC
+//! connection pins a QP context in the NIC's ICM cache, and past a few
+//! hundred *destinations* the context working set thrashes (Fig 5's
+//! mechanism, [`crate::fabric::cache`]). UD has the opposite shape: one
+//! host-wide QP addresses every peer, so its context cost is O(1) in the
+//! cluster size — at the price of SEND-only verbs and an MTU message cap.
+//!
+//! The [`TransportManager`] holds a per-destination state machine
+//!
+//! ```text
+//!            pressure ≥ enter_ud
+//!    Rc ───────────────────────────▶ DrainingToUd
+//!     ▲                                   │ in-flight RC WRs = 0
+//!     │ pressure ≤ exit_ud                │ (or the drain deadline)
+//!     └────────────────────────────────  Ud
+//! ```
+//!
+//! driven by two telemetry signals the daemon samples each pump:
+//!
+//! * **active-QP-count pressure** — destinations this daemon talks to
+//!   against the share of the ICM cache budgeted to RC contexts. Within
+//!   the budget every destination keeps RC; once the working set
+//!   overflows it, the set migrates (each destination via its own state
+//!   machine — see [`TransportManager::pressure`] for why the signal is
+//!   host-global rather than per-rank). The signal is *structural* (it
+//!   counts destinations, not QPs currently in RC), so fully migrating
+//!   does not collapse the signal and re-trigger the reverse flip — that
+//!   is what makes the hysteresis band flap-free.
+//! * **ICM hit rate** — observed thrash. When the windowed hit rate drops
+//!   below [`MigrationConfig::thrash_hit_rate`] the pressure is doubled,
+//!   migrating harder than the structural estimate alone would (the
+//!   estimate cannot see MTT/CQC competition); the boost latches and only
+//!   releases well above the threshold *while everything runs on RC* —
+//!   see [`TransportManager::observe_hit_rate`] for why releasing on the
+//!   post-migration recovery would limit-cycle.
+//!
+//! Migration is per destination and **lossless**: a destination leaving RC
+//! first drains — new sends stay on RC (preserving per-connection message
+//! order across the transition) while in-flight RC WRs run to completion
+//! on the shared QP — and only once the last completes does traffic flip
+//! to UD. Sustained pipelined traffic could hold the in-flight count above
+//! zero forever, so the drain is bounded by
+//! [`MigrationConfig::drain_max_ns`]; past the deadline the flip is forced
+//! and ordering across it becomes best-effort (datagram semantics — no
+//! completion is ever lost). Because UD is MTU-capped, the daemon
+//! fragments large messages with a per-vQPN sequence header packed into
+//! `imm_data` ([`pack_ud_imm`]) and the peer's Poller reassembles
+//! ([`Reassembler`]) before delivery.
+//!
+//! User pins always win: `Flags::RC` keeps a destination on RC at any
+//! pressure, `Flags::UD` rides datagrams even when the cache is cold, and
+//! explicit one-sided `read`/`write` calls stay on RC (Table 1: UD cannot
+//! carry them).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::fabric::time::Ns;
+
+use super::vqpn::Vqpn;
+
+/// Bits of `imm_data` carrying the destination vQPN of a UD fragment.
+pub const UD_IMM_VQPN_BITS: u32 = 20;
+/// Bits of `imm_data` carrying the fragment sequence number.
+pub const UD_IMM_SEQ_BITS: u32 = 11;
+/// Largest vQPN addressable through the UD fragment header.
+pub const UD_MAX_VQPN: u32 = (1 << UD_IMM_VQPN_BITS) - 1;
+/// Largest fragment count of one UD-migrated message.
+pub const UD_MAX_FRAGS: u64 = 1 << UD_IMM_SEQ_BITS;
+
+/// Largest message the UD segmentation layer can carry at `mtu`.
+pub fn ud_max_msg_bytes(mtu: u64) -> u64 {
+    UD_MAX_FRAGS * mtu
+}
+
+/// Pack the UD fragment header into a 4-byte immediate: destination vQPN
+/// in the low [`UD_IMM_VQPN_BITS`], fragment sequence above it, last-flag
+/// in the top bit. Panics (debug) if either field overflows its lane.
+#[inline]
+pub fn pack_ud_imm(vqpn: Vqpn, seq: u16, last: bool) -> u32 {
+    debug_assert!(vqpn.0 <= UD_MAX_VQPN, "vQPN {} exceeds UD header lane", vqpn.0);
+    debug_assert!((seq as u64) < UD_MAX_FRAGS, "fragment seq {seq} exceeds header lane");
+    vqpn.0 | ((seq as u32) << UD_IMM_VQPN_BITS) | ((last as u32) << 31)
+}
+
+/// Unpack a UD fragment header: (destination vQPN, fragment seq, last?).
+#[inline]
+pub fn unpack_ud_imm(imm: u32) -> (Vqpn, u16, bool) {
+    let vqpn = Vqpn(imm & UD_MAX_VQPN);
+    let seq = ((imm >> UD_IMM_VQPN_BITS) & (UD_MAX_FRAGS as u32 - 1)) as u16;
+    let last = imm >> 31 == 1;
+    (vqpn, seq, last)
+}
+
+/// Where one destination's unpinned two-sided traffic currently rides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DestState {
+    /// Connected mode: the shared RC QP to this destination.
+    Rc,
+    /// Migration to UD decided; new sends stay on RC (order-preserving)
+    /// while in-flight RC WRs drain. Promotes to [`DestState::Ud`] when
+    /// the last completes or the drain deadline passes.
+    DrainingToUd,
+    /// Datagram mode: the host-wide UD QP.
+    Ud,
+}
+
+/// Tunables of the migration policy.
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationConfig {
+    /// Master switch (`false` = the `--rc-only` ablation).
+    pub enabled: bool,
+    /// Fraction of the NIC's ICM cache budgeted to RC QP contexts (the
+    /// rest is left for CQ contexts and MTT blocks).
+    pub rc_share: f64,
+    /// A destination migrates to UD when its pressure reaches this.
+    pub enter_ud: f64,
+    /// A UD destination returns to RC when its pressure falls to this.
+    /// Must be below [`MigrationConfig::enter_ud`]; the gap is the
+    /// hysteresis band in which no transition fires.
+    pub exit_ud: f64,
+    /// Windowed ICM hit rate below which observed thrash doubles the
+    /// structural pressure estimate.
+    pub thrash_hit_rate: f64,
+    /// Virtual-time cadence (ns) at which the daemon samples telemetry and
+    /// re-evaluates destination states.
+    pub sample_ns: u64,
+    /// Longest a destination may sit in [`DestState::DrainingToUd`]
+    /// before the flip is forced. While draining, new sends stay on RC to
+    /// preserve per-connection ordering across the transition — but under
+    /// sustained closed-loop traffic the in-flight count may never reach
+    /// zero, so past this deadline the destination flips anyway (ordering
+    /// across the flip becomes best-effort, which is datagram semantics;
+    /// no completion is ever lost).
+    pub drain_max_ns: u64,
+}
+
+impl Default for MigrationConfig {
+    fn default() -> Self {
+        MigrationConfig {
+            enabled: true,
+            rc_share: 0.5,
+            enter_ud: 1.0,
+            exit_ud: 0.7,
+            thrash_hit_rate: 0.5,
+            sample_ns: 100_000,
+            drain_max_ns: 1_000_000,
+        }
+    }
+}
+
+/// The pure hysteresis decision: next state for a destination at
+/// `pressure`, given its current state. Monotone in `pressure` (higher
+/// pressure never moves *toward* RC) and identity inside the
+/// `(exit_ud, enter_ud)` band — both properties are pinned by
+/// `tests/proptest_invariants.rs`.
+pub fn decide(state: DestState, pressure: f64, cfg: &MigrationConfig) -> DestState {
+    match state {
+        DestState::Rc if pressure >= cfg.enter_ud => DestState::DrainingToUd,
+        DestState::DrainingToUd if pressure <= cfg.exit_ud => DestState::Rc,
+        DestState::Ud if pressure <= cfg.exit_ud => DestState::Rc,
+        s => s,
+    }
+}
+
+/// Per-destination migration state.
+#[derive(Clone, Copy, Debug)]
+pub struct DestEntry {
+    /// Current transport state.
+    pub state: DestState,
+    /// First-use registration order (diagnostics; the count of registered
+    /// destinations is the pressure signal).
+    pub rank: u32,
+    /// RC WRs submitted to this destination and not yet completed.
+    pub inflight_rc: u64,
+    /// When the current drain started (None outside
+    /// [`DestState::DrainingToUd`]).
+    pub draining_since: Option<Ns>,
+}
+
+/// The daemon's per-destination transport ledger and migration engine.
+#[derive(Clone, Debug, Default)]
+pub struct TransportManager {
+    /// Policy knobs this manager runs with.
+    pub cfg: MigrationConfig,
+    dests: BTreeMap<u32, DestEntry>,
+    next_rank: u32,
+    /// Latched observed-thrash flag (second hysteresis band).
+    thrash: bool,
+    /// Lifetime RC→UD migrations initiated.
+    pub to_ud: u64,
+    /// Lifetime UD→RC returns.
+    pub to_rc: u64,
+}
+
+impl TransportManager {
+    /// Manager with the given policy and no known destinations.
+    pub fn new(cfg: MigrationConfig) -> Self {
+        TransportManager {
+            cfg,
+            dests: BTreeMap::new(),
+            next_rank: 0,
+            thrash: false,
+            to_ud: 0,
+            to_rc: 0,
+        }
+    }
+
+    /// Register a destination at first connect (idempotent). New
+    /// destinations start on RC — the optimistic default — and migrate on
+    /// the next [`TransportManager::evaluate`] if they land past the
+    /// budget.
+    pub fn register_dest(&mut self, remote: u32) {
+        let next_rank = &mut self.next_rank;
+        self.dests.entry(remote).or_insert_with(|| {
+            let rank = *next_rank;
+            *next_rank += 1;
+            DestEntry { state: DestState::Rc, rank, inflight_rc: 0, draining_since: None }
+        });
+    }
+
+    /// The structural working-set pressure against an ICM cache of
+    /// `capacity` entries: `n` destinations need `n` resident RC
+    /// contexts, which overflows the budget exactly when
+    /// `(n - 1) / budget ≥ 1` — so at `enter_ud = 1.0` up to `budget`
+    /// destinations stay connected and the knee sits one past it.
+    /// Observed thrash doubles the estimate.
+    ///
+    /// The signal is deliberately host-global rather than per-rank: the
+    /// NIC engine arbitrates issue slots per QP, so keeping a "head" of
+    /// RC QPs hot while a tail shares one UD QP would hand the UD side
+    /// ~1/(RC QPs) of the issue bandwidth and starve most connections.
+    /// Migrating the whole working set once it overflows keeps
+    /// per-connection fairness through the UD SQ's FIFO. Migration is
+    /// still executed per destination: each drains independently and
+    /// user-pinned traffic keeps individual destinations connected.
+    pub fn pressure(&self, capacity: usize) -> f64 {
+        let budget = (capacity as f64 * self.cfg.rc_share).max(1.0);
+        let boost = if self.thrash { 2.0 } else { 1.0 };
+        self.next_rank.saturating_sub(1) as f64 * boost / budget
+    }
+
+    /// Feed the windowed ICM hit rate (None when the window had too few
+    /// lookups to be meaningful). Latches the thrash boost below
+    /// [`MigrationConfig::thrash_hit_rate`]; releases it only once the
+    /// rate recovers well above the threshold **and every destination is
+    /// back on RC**. A recovered hit rate while destinations ride UD is
+    /// the *expected outcome* of migrating, not evidence that RC is safe
+    /// again — releasing on it would un-migrate the set, re-create the
+    /// thrash, and limit-cycle through the drain machinery. So once the
+    /// boost migrates a working set, it stays migrated until the
+    /// *structural* pressure shrinks enough for the boosted value to pass
+    /// `exit_ud` (destinations closing), which is a real change in load.
+    pub fn observe_hit_rate(&mut self, hit_rate: Option<f64>) {
+        if let Some(r) = hit_rate {
+            if r < self.cfg.thrash_hit_rate {
+                self.thrash = true;
+            } else if r > self.cfg.thrash_hit_rate + 0.25
+                && self.dests.values().all(|e| e.state == DestState::Rc)
+            {
+                self.thrash = false;
+            }
+        }
+    }
+
+    /// Re-run [`decide`] for every destination against the current
+    /// host-global pressure at virtual time `now`. `capacity` is the
+    /// NIC's ICM cache entry count. Draining destinations promote to UD
+    /// when their in-flight RC count reaches zero or their drain exceeds
+    /// [`MigrationConfig::drain_max_ns`] (bounded wait — see that knob).
+    pub fn evaluate(&mut self, capacity: usize, now: Ns) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let pressure = self.pressure(capacity);
+        for e in self.dests.values_mut() {
+            let next = decide(e.state, pressure, &self.cfg);
+            if next != e.state {
+                match (e.state, next) {
+                    (DestState::Rc, DestState::DrainingToUd) => {
+                        self.to_ud += 1;
+                        e.draining_since = Some(now);
+                    }
+                    (DestState::Ud, DestState::Rc) => self.to_rc += 1,
+                    // a cancelled drain is not a completed migration
+                    (DestState::DrainingToUd, DestState::Rc) => {
+                        self.to_ud -= 1;
+                        e.draining_since = None;
+                    }
+                    _ => {}
+                }
+                e.state = next;
+            }
+            if e.state == DestState::DrainingToUd {
+                let expired = e
+                    .draining_since
+                    .map(|t| now.saturating_sub(t).0 >= self.cfg.drain_max_ns)
+                    .unwrap_or(true);
+                // an idle destination needs no drain phase; a stuck one is
+                // force-flipped at the deadline
+                if e.inflight_rc == 0 || expired {
+                    e.state = DestState::Ud;
+                    e.draining_since = None;
+                }
+            }
+        }
+    }
+
+    /// The transport state governing new unpinned traffic to `remote`.
+    /// Unknown destinations (or a disabled manager) report RC.
+    pub fn state_of(&self, remote: u32) -> DestState {
+        if !self.cfg.enabled {
+            return DestState::Rc;
+        }
+        self.dests.get(&remote).map(|e| e.state).unwrap_or(DestState::Rc)
+    }
+
+    /// Account an RC WR submitted toward `remote` (drain bookkeeping).
+    pub fn on_rc_submitted(&mut self, remote: u32) {
+        if let Some(e) = self.dests.get_mut(&remote) {
+            e.inflight_rc += 1;
+        }
+    }
+
+    /// Account an RC completion from `remote`; promotes a fully drained
+    /// destination to UD.
+    pub fn on_rc_completed(&mut self, remote: u32) {
+        if let Some(e) = self.dests.get_mut(&remote) {
+            e.inflight_rc = e.inflight_rc.saturating_sub(1);
+            if e.state == DestState::DrainingToUd && e.inflight_rc == 0 {
+                e.state = DestState::Ud;
+                e.draining_since = None;
+            }
+        }
+    }
+
+    /// Destinations currently in each state: (rc, draining, ud).
+    pub fn state_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for e in self.dests.values() {
+            match e.state {
+                DestState::Rc => c.0 += 1,
+                DestState::DrainingToUd => c.1 += 1,
+                DestState::Ud => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Known destinations.
+    pub fn dest_count(&self) -> usize {
+        self.dests.len()
+    }
+
+    /// Is the thrash boost currently latched?
+    pub fn thrash_latched(&self) -> bool {
+        self.thrash
+    }
+
+    /// Inspect one destination's entry (tests/diagnostics).
+    pub fn dest(&self, remote: u32) -> Option<&DestEntry> {
+        self.dests.get(&remote)
+    }
+}
+
+/// In-flight reassembly of one fragmented UD message.
+#[derive(Clone, Copy, Debug)]
+struct Partial {
+    next_seq: u16,
+    bytes: u64,
+}
+
+/// Poller-side reassembly of fragmented UD messages, keyed by the local
+/// vQPN the fragments address. Fragments of one message arrive in order
+/// on the simulated fabric (single path, FIFO ports); a sequence gap means
+/// the partial message is dropped — datagram semantics — and counted.
+#[derive(Clone, Debug, Default)]
+pub struct Reassembler {
+    partial: HashMap<u32, Partial>,
+    /// Messages fully reassembled and delivered.
+    pub completed: u64,
+    /// Partial messages discarded on a sequence gap or restart.
+    pub dropped: u64,
+    /// Fragments with no partial in progress (the message's FIRST
+    /// fragment was lost, so every later fragment arrives orphaned —
+    /// an N-fragment message lost this way shows up as N−1 orphans, not
+    /// as a `dropped` increment).
+    pub orphan_fragments: u64,
+}
+
+impl Reassembler {
+    /// Fresh reassembler with zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accept one fragment; returns the total message length when the
+    /// fragment completes its message.
+    pub fn accept(&mut self, vqpn: Vqpn, seq: u16, last: bool, len: u64) -> Option<u64> {
+        if seq == 0 {
+            if self.partial.remove(&vqpn.0).is_some() {
+                // a new message started before the previous one finished
+                self.dropped += 1;
+            }
+            if last {
+                self.completed += 1;
+                return Some(len);
+            }
+            self.partial.insert(vqpn.0, Partial { next_seq: 1, bytes: len });
+            return None;
+        }
+        match self.partial.get_mut(&vqpn.0) {
+            Some(p) if p.next_seq == seq => {
+                p.bytes += len;
+                if last {
+                    let total = p.bytes;
+                    self.partial.remove(&vqpn.0);
+                    self.completed += 1;
+                    Some(total)
+                } else {
+                    p.next_seq += 1;
+                    None
+                }
+            }
+            _ => {
+                // gap or orphan fragment: drop any partial state
+                if self.partial.remove(&vqpn.0).is_some() {
+                    self.dropped += 1;
+                } else {
+                    self.orphan_fragments += 1;
+                }
+                None
+            }
+        }
+    }
+
+    /// Messages currently mid-reassembly.
+    pub fn in_progress(&self) -> usize {
+        self.partial.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MigrationConfig {
+        MigrationConfig::default()
+    }
+
+    #[test]
+    fn imm_header_roundtrips() {
+        for &(v, s, l) in &[(0u32, 0u16, true), (7, 3, false), (UD_MAX_VQPN, 2047, true)] {
+            let imm = pack_ud_imm(Vqpn(v), s, l);
+            assert_eq!(unpack_ud_imm(imm), (Vqpn(v), s, l));
+        }
+    }
+
+    #[test]
+    fn decide_has_hysteresis_band() {
+        let c = cfg();
+        // inside the band nothing moves
+        for &s in &[DestState::Rc, DestState::Ud, DestState::DrainingToUd] {
+            assert_eq!(decide(s, 0.85, &c), s);
+        }
+        // at/above enter_ud RC starts draining; at/below exit_ud UD returns
+        assert_eq!(decide(DestState::Rc, 1.0, &c), DestState::DrainingToUd);
+        assert_eq!(decide(DestState::Ud, 0.7, &c), DestState::Rc);
+        assert_eq!(decide(DestState::Ud, 1.5, &c), DestState::Ud);
+    }
+
+    #[test]
+    fn working_set_within_budget_stays_rc() {
+        let mut tm = TransportManager::new(cfg());
+        // 400-entry cache, rc_share 0.5 => budget 200 RC destinations
+        for r in 0..200u32 {
+            tm.register_dest(r);
+        }
+        tm.evaluate(400, Ns::ZERO);
+        // 200 destinations fit the budget exactly: pressure 199/200 < 1
+        assert_eq!(tm.state_counts(), (200, 0, 0));
+        assert_eq!(tm.to_ud, 0);
+    }
+
+    #[test]
+    fn overflowing_working_set_migrates_to_ud() {
+        let mut tm = TransportManager::new(cfg());
+        for r in 0..300u32 {
+            tm.register_dest(r);
+        }
+        tm.evaluate(400, Ns::ZERO);
+        // 300 destinations: pressure 299/200 ≈ 1.5 ≥ enter_ud — the whole
+        // working set migrates (idle destinations promote straight to Ud)
+        assert_eq!(tm.state_of(0), DestState::Ud);
+        assert_eq!(tm.state_of(299), DestState::Ud);
+        assert_eq!(tm.state_counts(), (0, 0, 300));
+        assert_eq!(tm.to_ud, 300);
+    }
+
+    #[test]
+    fn draining_waits_for_inflight_rc() {
+        let mut tm = TransportManager::new(cfg());
+        for r in 0..250u32 {
+            tm.register_dest(r);
+        }
+        // destination 249 has traffic in flight when the flip is decided
+        tm.on_rc_submitted(249);
+        tm.on_rc_submitted(249);
+        tm.evaluate(400, Ns::ZERO);
+        assert_eq!(tm.state_of(249), DestState::DrainingToUd);
+        assert_eq!(tm.state_of(0), DestState::Ud, "idle dests flip immediately");
+        tm.on_rc_completed(249);
+        assert_eq!(tm.state_of(249), DestState::DrainingToUd, "one WR still out");
+        tm.on_rc_completed(249);
+        assert_eq!(tm.state_of(249), DestState::Ud, "drained => datagram mode");
+    }
+
+    #[test]
+    fn stuck_drain_is_forced_at_the_deadline() {
+        let mut tm = TransportManager::new(cfg());
+        for r in 0..250u32 {
+            tm.register_dest(r);
+        }
+        // sustained traffic: destination 3 never reaches zero in flight
+        tm.on_rc_submitted(3);
+        tm.evaluate(400, Ns::ZERO);
+        assert_eq!(tm.state_of(3), DestState::DrainingToUd);
+        // before the deadline the drain holds…
+        tm.evaluate(400, Ns(cfg().drain_max_ns - 1));
+        assert_eq!(tm.state_of(3), DestState::DrainingToUd);
+        // …at the deadline the flip is forced (bounded wait)
+        tm.evaluate(400, Ns(cfg().drain_max_ns));
+        assert_eq!(tm.state_of(3), DestState::Ud);
+        // the straggler RC completion is still accounted, not lost
+        tm.on_rc_completed(3);
+        assert_eq!(tm.dest(3).unwrap().inflight_rc, 0);
+    }
+
+    #[test]
+    fn thrash_boost_migration_is_sticky_no_limit_cycle() {
+        let mut tm = TransportManager::new(cfg());
+        for r in 0..120u32 {
+            tm.register_dest(r);
+        }
+        tm.evaluate(400, Ns::ZERO);
+        assert_eq!(tm.state_counts().2, 0, "120 dests fit a 200 budget");
+        // observed thrash doubles the pressure to 1.19 ≥ enter_ud
+        tm.observe_hit_rate(Some(0.2));
+        tm.evaluate(400, Ns::ZERO);
+        assert_eq!(tm.state_counts().2, 120);
+        // the migration cured the thrash — but a recovered hit rate while
+        // the set rides UD must NOT release the latch (it would
+        // un-migrate, re-thrash, and limit-cycle)
+        tm.observe_hit_rate(Some(0.95));
+        assert!(tm.thrash_latched());
+        tm.evaluate(400, Ns::ZERO);
+        assert_eq!(tm.state_counts().2, 120, "no flap back to RC");
+        assert_eq!(tm.to_rc, 0);
+    }
+
+    #[test]
+    fn thrash_latch_releases_once_back_on_rc() {
+        let mut tm = TransportManager::new(cfg());
+        // 60 dests: even boosted pressure 59×2/200 = 0.59 stays under
+        // enter_ud, so a transient thrash migrates nothing
+        for r in 0..60u32 {
+            tm.register_dest(r);
+        }
+        tm.observe_hit_rate(Some(0.2));
+        tm.evaluate(400, Ns::ZERO);
+        assert_eq!(tm.state_counts(), (60, 0, 0));
+        assert!(tm.thrash_latched());
+        // recovering just above the threshold keeps the latch…
+        tm.observe_hit_rate(Some(0.6));
+        assert!(tm.thrash_latched());
+        // …well above it, with everything on RC, releases it
+        tm.observe_hit_rate(Some(0.9));
+        assert!(!tm.thrash_latched());
+    }
+
+    #[test]
+    fn disabled_manager_reports_rc() {
+        let mut c = cfg();
+        c.enabled = false;
+        let mut tm = TransportManager::new(c);
+        for r in 0..1000u32 {
+            tm.register_dest(r);
+        }
+        tm.evaluate(400, Ns::ZERO);
+        assert_eq!(tm.state_of(999), DestState::Rc);
+        assert_eq!(tm.to_ud, 0);
+    }
+
+    #[test]
+    fn reassembler_joins_in_order_fragments() {
+        let mut r = Reassembler::new();
+        let v = Vqpn(5);
+        assert_eq!(r.accept(v, 0, false, 4096), None);
+        assert_eq!(r.accept(v, 1, false, 4096), None);
+        assert_eq!(r.accept(v, 2, true, 1000), Some(9192));
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.in_progress(), 0);
+    }
+
+    #[test]
+    fn reassembler_single_fragment_fast_path() {
+        let mut r = Reassembler::new();
+        assert_eq!(r.accept(Vqpn(1), 0, true, 512), Some(512));
+        assert_eq!(r.in_progress(), 0);
+    }
+
+    #[test]
+    fn reassembler_drops_on_gap() {
+        let mut r = Reassembler::new();
+        let v = Vqpn(9);
+        assert_eq!(r.accept(v, 0, false, 4096), None);
+        // fragment 1 lost; fragment 2 arrives => partial dropped
+        assert_eq!(r.accept(v, 2, true, 4096), None);
+        assert_eq!(r.dropped, 1);
+        // a fresh message still reassembles
+        assert_eq!(r.accept(v, 0, true, 64), Some(64));
+    }
+
+    #[test]
+    fn reassembler_interleaves_across_connections() {
+        let mut r = Reassembler::new();
+        assert_eq!(r.accept(Vqpn(1), 0, false, 4096), None);
+        assert_eq!(r.accept(Vqpn(2), 0, false, 4096), None);
+        assert_eq!(r.accept(Vqpn(2), 1, true, 100), Some(4196));
+        assert_eq!(r.accept(Vqpn(1), 1, true, 200), Some(4296));
+    }
+
+    #[test]
+    fn ud_max_msg_scales_with_mtu() {
+        assert_eq!(ud_max_msg_bytes(4096), 2048 * 4096);
+    }
+}

@@ -14,6 +14,10 @@
 //!   model constants the simulator charges for them.
 //! * [`transport`] — adaptive transport/verb selection from message size
 //!   and end-host CPU/memory telemetry (§2.2), overridable via `Flags`.
+//! * [`migrate`] — per-destination RC↔UD transport migration: the daemon
+//!   tracks ICM-cache pressure and moves overflowing destination working
+//!   sets onto one host-wide UD QP (hysteretic, order-preserving bounded
+//!   drain, MTU fragmentation/reassembly).
 //! * [`buffer`] — registered send/recv buffer pools with slab classes,
 //!   huge-page registration, and the memcpy-vs-memreg staging policy [9].
 //! * [`daemon`] — the Worker/Poller engine over the simulated fabric:
@@ -25,10 +29,12 @@ pub mod api;
 pub mod vqpn;
 pub mod shmem;
 pub mod transport;
+pub mod migrate;
 pub mod buffer;
 pub mod daemon;
 pub mod telemetry;
 
 pub use api::{Flags, Target};
 pub use daemon::{Daemon, DaemonConfig};
+pub use migrate::{DestState, MigrationConfig, TransportManager};
 pub use vqpn::{ConnId, Vqpn};

@@ -58,12 +58,37 @@ pub struct Telemetry {
     pub ops_submitted: u64,
     /// Initiator-side completions delivered.
     pub ops_completed: u64,
+    /// Windowed ICM-cache hit rate sampled from the local NIC (input to
+    /// the RC↔UD migration policy — [`super::migrate`]). 1.0 until the
+    /// first window with enough lookups.
+    pub icm_hit_rate: f64,
+    /// QPs this daemon holds open on the local NIC (shared RC QPs + the
+    /// host-wide UD QP) — the migration policy's structural signal.
+    pub active_qps: u32,
 }
+
+/// Minimum ICM lookups in a sampling window before the hit rate is
+/// considered meaningful.
+pub const ICM_SAMPLE_MIN_LOOKUPS: u64 = 64;
 
 impl Telemetry {
     /// Ledger for a daemon running `service_threads` busy-poll threads.
     pub fn new(service_threads: u32) -> Self {
-        Telemetry { service_threads, ..Default::default() }
+        Telemetry { service_threads, icm_hit_rate: 1.0, ..Default::default() }
+    }
+
+    /// Fold one ICM sampling window (`hits`/`misses` deltas over the
+    /// window) into the ledger; windows with fewer than
+    /// [`ICM_SAMPLE_MIN_LOOKUPS`] lookups are discarded as noise. Returns
+    /// the window's rate when it was accepted.
+    pub fn sample_icm(&mut self, hits: u64, misses: u64) -> Option<f64> {
+        let total = hits + misses;
+        if total < ICM_SAMPLE_MIN_LOOKUPS {
+            return None;
+        }
+        let rate = hits as f64 / total as f64;
+        self.icm_hit_rate = rate;
+        Some(rate)
     }
 
     /// Account a new app session; returns its id.
@@ -124,6 +149,16 @@ mod tests {
         t.charge(500_000); // 0.5 ms of itemized work
         let cores = t.cpu_cores(Ns(1_000_000)); // over 1 ms
         assert!((cores - 2.5).abs() < 1e-9, "cores={cores}");
+    }
+
+    #[test]
+    fn icm_window_ignores_tiny_samples() {
+        let mut t = Telemetry::new(2);
+        assert!((t.icm_hit_rate - 1.0).abs() < 1e-12, "optimistic before data");
+        assert_eq!(t.sample_icm(3, 2), None, "5 lookups is noise");
+        assert!((t.icm_hit_rate - 1.0).abs() < 1e-12);
+        assert_eq!(t.sample_icm(25, 75), Some(0.25));
+        assert!((t.icm_hit_rate - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -87,6 +87,24 @@ impl Selector {
         remote: HostLoad,
         mtu: u64,
     ) -> Result<Choice, RaasError> {
+        self.choose_adaptive(len, flags, local, remote, mtu, false)
+    }
+
+    /// [`Selector::choose`] with the migration engine's input: when
+    /// `prefer_ud` is set (the destination has migrated to datagram mode —
+    /// [`super::migrate`]) and the user pinned nothing that contradicts
+    /// it, the choice is UD SEND; the daemon's segmentation layer lifts
+    /// the MTU cap. User pins always win: a pinned transport or a pinned
+    /// one-sided verb keeps the connected path regardless of pressure.
+    pub fn choose_adaptive(
+        &mut self,
+        len: u64,
+        flags: Flags,
+        local: HostLoad,
+        remote: HostLoad,
+        mtu: u64,
+        prefer_ud: bool,
+    ) -> Result<Choice, RaasError> {
         // ---- user-pinned components win
         let pinned_t = flags.transport();
         let pinned_v = flags.verb();
@@ -96,6 +114,26 @@ impl Selector {
             }
             self.count(v);
             return Ok(Choice { transport: t, verb: v });
+        }
+
+        // ---- datagram mode: a pinned UD transport, or a migrated
+        // destination with no contradicting pin, rides UD SEND (the only
+        // verb Table 1 allows there; size is handled by segmentation).
+        // Migration must stay transparent, so unpinned messages beyond
+        // the segmentation cap keep the connected path (RC carries up to
+        // 1 GB) instead of surfacing an error the app never caused — only
+        // an explicit `Flags::UD` pin is allowed to hit the UD limit.
+        if pinned_t == Some(QpTransport::Ud)
+            || (pinned_t.is_none()
+                && prefer_ud
+                && len <= super::migrate::ud_max_msg_bytes(mtu)
+                && matches!(pinned_v, None | Some(Verb::Send)))
+        {
+            // keep the size-class hysteresis state advancing so a later
+            // return to RC resumes from a consistent classification
+            let _ = self.size_class(len);
+            self.count(Verb::Send);
+            return Ok(Choice { transport: QpTransport::Ud, verb: Verb::Send });
         }
 
         // ---- size class with hysteresis
@@ -238,6 +276,50 @@ mod tests {
         assert_eq!(s.choose(4000, Flags::default(), idle(), idle(), 4096).unwrap().verb, Verb::Write);
         // far under flips back
         assert_eq!(s.choose(64, Flags::default(), idle(), idle(), 4096).unwrap().verb, Verb::Send);
+    }
+
+    #[test]
+    fn pinned_ud_without_verb_forces_send() {
+        // the only Table-1-legal verb on UD; the daemon's segmentation
+        // layer carries sizes past the MTU
+        let c = sel().choose(64 << 10, Flags::UD, idle(), idle(), 4096).unwrap();
+        assert_eq!(c.transport, QpTransport::Ud);
+        assert_eq!(c.verb, Verb::Send);
+    }
+
+    #[test]
+    fn migrated_destination_rides_ud() {
+        let c = sel()
+            .choose_adaptive(256, Flags::default(), idle(), idle(), 4096, true)
+            .unwrap();
+        assert_eq!(c.transport, QpTransport::Ud);
+        assert_eq!(c.verb, Verb::Send);
+    }
+
+    #[test]
+    fn migration_preference_spares_messages_beyond_ud_cap() {
+        // unpinned 16 MB > the 8 MB UD segmentation cap at 4 KB MTU:
+        // migration must stay transparent, so the connected path carries it
+        let c = sel()
+            .choose_adaptive(16 << 20, Flags::default(), idle(), idle(), 4096, true)
+            .unwrap();
+        assert_eq!(c.transport, QpTransport::Rc);
+        assert_eq!(c.verb, Verb::Write);
+    }
+
+    #[test]
+    fn verb_pin_beats_migration_preference() {
+        // a pinned one-sided verb cannot ride UD: the connected path wins
+        let c = sel()
+            .choose_adaptive(256, Flags::WRITE, idle(), idle(), 4096, true)
+            .unwrap();
+        assert_eq!(c.verb, Verb::Write);
+        assert_ne!(c.transport, QpTransport::Ud);
+        // a pinned RC transport also beats the preference
+        let c = sel()
+            .choose_adaptive(256, Flags::RC, idle(), idle(), 4096, true)
+            .unwrap();
+        assert_eq!(c.transport, QpTransport::Rc);
     }
 
     #[test]

@@ -10,11 +10,13 @@ use crate::baselines::naive::NaiveSystem;
 use crate::fabric::sim::{FabricConfig, Notification, Sim};
 use crate::fabric::time::{gbps, Ns};
 use crate::fabric::types::NodeId;
+use crate::raas::api::Flags;
 use crate::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery};
+use crate::raas::transport::HostLoad;
 use crate::util::rng::Rng;
 use crate::util::stats::Histogram;
 
-use super::generator::OffsetGen;
+use super::generator::{OffsetGen, SizeGen};
 
 /// Common scenario parameters.
 #[derive(Clone, Debug)]
@@ -345,6 +347,238 @@ pub fn locked_random_read(cfg: &ScenarioCfg, q: usize) -> RunStats {
         cpu_cores: sim.node(NodeId(0)).cpu.cores_used(sim.now()),
         cache_hit_rate: sim.node(NodeId(0)).cache.hit_rate(),
         lock_wait_ms: sys.lock_wait_ns as f64 / 1e6,
+    }
+}
+
+// ------------------------------------------------- Fig 9 (scale sweep)
+
+/// Config for the thousand-connection scale experiment (Fig 9): one
+/// client daemon sending 64 B–4 KB messages over `conns` logical
+/// connections fanned out across up to `max_servers` destination
+/// daemons. Each destination needs its own shared RC QP, so past the
+/// ICM-cache capacity the RC working set thrashes — the regime the
+/// adaptive RC↔UD migration ([`crate::raas::migrate`]) exists for.
+#[derive(Clone, Debug)]
+pub struct ScaleCfg {
+    /// Logical connections on the client machine.
+    pub conns: usize,
+    /// Cap on distinct destination daemons (cluster size - 1).
+    pub max_servers: usize,
+    /// Smallest message size drawn (log-uniform).
+    pub msg_lo: u64,
+    /// Largest message size drawn (log-uniform). Must not exceed the
+    /// fabric MTU: `sim.completed_msgs` counts one per *wire message*,
+    /// and a UD message above the MTU fragments into several, which
+    /// would inflate the adaptive run's mops against the RC-only
+    /// ablation. `scale_send` asserts this.
+    pub msg_hi: u64,
+    /// Virtual run length.
+    pub duration: Ns,
+    /// Fraction of the run treated as warmup (excluded from stats).
+    pub warmup_frac: f64,
+    /// Workload RNG seed.
+    pub seed: u64,
+    /// Ablation: disable migration, everything stays on RC.
+    pub rc_only: bool,
+}
+
+impl Default for ScaleCfg {
+    fn default() -> Self {
+        ScaleCfg {
+            conns: 256,
+            max_servers: 1024,
+            msg_lo: 64,
+            msg_hi: 4096,
+            duration: Ns::from_ms(10),
+            warmup_frac: 0.3,
+            seed: 42,
+            rc_only: false,
+        }
+    }
+}
+
+/// One measured scale-sweep point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScaleRun {
+    /// Logical connections of this point.
+    pub conns: usize,
+    /// Distinct destination daemons of this point.
+    pub servers: usize,
+    /// Delivered payload throughput, Gb/s.
+    pub gbps: f64,
+    /// Completed messages, millions per second.
+    pub mops: f64,
+    /// Messages completed inside the measured window.
+    pub ops: u64,
+    /// Client cores-equivalent (daemon threads + itemized work).
+    pub cpu_cores: f64,
+    /// Client fabric memory: QP/CQ/SRQ rings + MTT + pool high-water.
+    pub fabric_mem_bytes: u64,
+    /// Fraction of `send()` calls that rode the UD QP.
+    pub ud_fraction: f64,
+    /// Client-NIC ICM hit rate over the measured window.
+    pub cache_hit_rate: f64,
+    /// RC→UD migrations the client daemon performed.
+    pub migrations_to_ud: u64,
+    /// Destinations on RC at the end of the run.
+    pub rc_dests: usize,
+    /// Destinations on UD at the end of the run.
+    pub ud_dests: usize,
+}
+
+/// Client daemon config for the scale sweep: a 4 KB-slab pool deep
+/// enough for `conns` outstanding small sends, a UD SQ that can hold the
+/// whole closed-loop window, and migration switched per the ablation.
+fn scale_client_cfg(cfg: &ScaleCfg) -> DaemonConfig {
+    let mut d = DaemonConfig::default();
+    d.pool_layout = vec![(4096, (2 * cfg.conns).max(2048) as u32)];
+    d.recv_slot_bytes = 4096;
+    d.srq_capacity = 64;
+    d.srq_watermark = 16;
+    d.ud_sq_depth = (2 * cfg.conns).max(8192);
+    d.migration.enabled = !cfg.rc_only;
+    d
+}
+
+/// Server daemon config: small per-node footprint so a 1000-server
+/// cluster stays cheap to simulate.
+fn scale_server_cfg() -> DaemonConfig {
+    let mut d = DaemonConfig::default();
+    d.pool_layout = vec![(4096, 1024)];
+    d.recv_slot_bytes = 4096;
+    d.srq_capacity = 512;
+    d.srq_watermark = 64;
+    d.ud_sq_depth = 64;
+    d.service_threads = 1;
+    d
+}
+
+/// Fig 9: closed-loop `send()` fan-out across `cfg.conns` connections.
+/// With migration on, a destination working set past the ICM budget
+/// rides the host-wide UD QP; with `rc_only`, every destination keeps
+/// its shared RC QP and the client NIC thrashes its context cache (the
+/// Fig-5 collapse, now at the *destination* axis).
+pub fn scale_send(cfg: &ScaleCfg) -> ScaleRun {
+    let servers = cfg.conns.min(cfg.max_servers).max(1);
+    let mut fabric = FabricConfig::default();
+    fabric.nodes = servers + 1;
+    fabric.sq_depth = 1024;
+    assert!(
+        cfg.msg_hi <= fabric.mtu,
+        "msg_hi {} > MTU {}: fragmented UD messages would be counted once \
+         per fragment, skewing the adaptive-vs-rc_only mops comparison",
+        cfg.msg_hi,
+        fabric.mtu
+    );
+    let mut sim = Sim::new(fabric);
+
+    let mut daemons: Vec<Daemon> = Vec::with_capacity(servers + 1);
+    daemons.push(Daemon::start(&mut sim, NodeId(0), scale_client_cfg(cfg)));
+    for s in 0..servers {
+        daemons.push(Daemon::start(&mut sim, NodeId(s as u32 + 1), scale_server_cfg()));
+    }
+    let mut server_apps = vec![0u32; servers + 1];
+    for (s, d) in daemons.iter_mut().enumerate().skip(1) {
+        let app = d.register_app();
+        d.listen(app, 7000);
+        server_apps[s] = app;
+    }
+    let app = daemons[0].register_app();
+    let mut conns = Vec::with_capacity(cfg.conns);
+    for i in 0..cfg.conns {
+        let server = 1 + i % servers;
+        conns.push(connect_via(&mut sim, &mut daemons, 0, app, server, 7000).unwrap());
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    let sizes = SizeGen::LogUniform { lo: cfg.msg_lo, hi: cfg.msg_hi };
+    let mut win = Window::new(&ScenarioCfg {
+        duration: cfg.duration,
+        warmup_frac: cfg.warmup_frac,
+        ..ScenarioCfg::default()
+    });
+
+    // first pump evaluates migration before the initial burst
+    daemons[0].pump(&mut sim);
+    for (i, c) in conns.iter().enumerate() {
+        let len = sizes.next(&mut rng).clamp(cfg.msg_lo, cfg.msg_hi);
+        daemons[0]
+            .send(&mut sim, *c, len, Flags::default(), i as u64, HostLoad::default())
+            .unwrap();
+    }
+    daemons[0].pump(&mut sim);
+    sim.node_mut(NodeId(0)).cache.reset_stats();
+
+    let mut server_nodes: Vec<u32> = Vec::new();
+    // ICM counters at window start, so the reported hit rate covers the
+    // measured window only (warmup excluded, like bytes/ops)
+    let mut icm0: Option<(u64, u64)> = None;
+    while sim.now() < cfg.duration {
+        win.maybe_start(&sim);
+        if win.started && icm0.is_none() {
+            let c = &sim.node(NodeId(0)).cache;
+            icm0 = Some((c.hits, c.misses));
+        }
+        let Some(notes) = sim.step() else { break };
+        let mut client_cqe = false;
+        server_nodes.clear();
+        for n in &notes {
+            if let Notification::CqeReady { node, .. } = n {
+                if node.0 == 0 {
+                    client_cqe = true;
+                } else {
+                    server_nodes.push(node.0);
+                }
+            }
+        }
+        // dedup needs sorted input (Vec::dedup only removes adjacent
+        // repeats); pump order across distinct servers does not affect
+        // the client-side measurement
+        server_nodes.sort_unstable();
+        server_nodes.dedup();
+        for &s in &server_nodes {
+            let d = &mut daemons[s as usize];
+            d.pump(&mut sim);
+            while d.recv_zero_copy(&mut sim, server_apps[s as usize]).is_some() {}
+        }
+        if client_cqe {
+            daemons[0].pump(&mut sim);
+            while let Some(d) = daemons[0].recv_zero_copy(&mut sim, app) {
+                if let Delivery::OpComplete { conn, .. } = d {
+                    let len = sizes.next(&mut rng).clamp(cfg.msg_lo, cfg.msg_hi);
+                    let _ = daemons[0].send(
+                        &mut sim,
+                        conn,
+                        len,
+                        Flags::default(),
+                        0,
+                        HostLoad::default(),
+                    );
+                }
+            }
+            daemons[0].pump(&mut sim);
+        }
+    }
+
+    let (gbps, mops, ops, _p50, _p99) = win.finish(&sim);
+    let snap = daemons[0].snapshot(&sim);
+    let (rc, draining, ud) = daemons[0].migrate.state_counts();
+    let cache = &sim.node(NodeId(0)).cache;
+    let (h0, m0) = icm0.unwrap_or((0, 0));
+    let (wh, wm) = (cache.hits - h0, cache.misses - m0);
+    ScaleRun {
+        conns: cfg.conns,
+        servers,
+        gbps,
+        mops,
+        ops,
+        cpu_cores: snap.cpu_cores,
+        fabric_mem_bytes: snap.mem_bytes,
+        ud_fraction: daemons[0].ud_send_fraction(),
+        cache_hit_rate: if wh + wm == 0 { 0.0 } else { wh as f64 / (wh + wm) as f64 },
+        migrations_to_ud: daemons[0].migrate.to_ud,
+        rc_dests: rc + draining,
+        ud_dests: ud,
     }
 }
 

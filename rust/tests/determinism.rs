@@ -1,0 +1,126 @@
+//! Determinism: every scenario driver and every `fig --id N` harness must
+//! replay byte-identically from the same seed. Catches hidden
+//! HashMap-iteration order leaking into the event timeline, wall-clock
+//! time sneaking into results, and any other nondeterministic state.
+//!
+//! Figures run at `Budget::Quick`; scenario drivers run tiny dedicated
+//! configs. Comparison is on serialized bytes (`Series::to_json` + the
+//! rendered table for figures, `{:?}` for raw stat rows), so even a
+//! single bit of f64 drift fails the test.
+
+use rdmavisor::fabric::time::Ns;
+use rdmavisor::figures::{self, Budget};
+use rdmavisor::workload::scenarios::{
+    locked_random_read, naive_random_read, raas_random_read, scale_send, verbs_sweep_point,
+    ScaleCfg, ScenarioCfg,
+};
+
+/// Run one figure id end-to-end and serialize everything it produces.
+fn fig_bytes(id: u64) -> String {
+    let mut cache = None;
+    let (series, table) =
+        figures::run_fig(id, Budget::Quick, &mut cache).expect("known figure id");
+    format!("{}\n{}", series.to_json().to_string(), table)
+}
+
+fn assert_fig_deterministic(id: u64) {
+    let a = fig_bytes(id);
+    let b = fig_bytes(id);
+    assert_eq!(a, b, "fig --id {id} differed between two identical runs");
+}
+
+#[test]
+fn fig1_replays_byte_identically() {
+    assert_fig_deterministic(1);
+}
+
+#[test]
+fn fig5_replays_byte_identically() {
+    assert_fig_deterministic(5);
+}
+
+#[test]
+fn fig6_replays_byte_identically() {
+    assert_fig_deterministic(6);
+}
+
+#[test]
+fn fig7_replays_byte_identically() {
+    assert_fig_deterministic(7);
+}
+
+#[test]
+fn fig8_replays_byte_identically() {
+    assert_fig_deterministic(8);
+}
+
+#[test]
+fn fig9_replays_byte_identically() {
+    assert_fig_deterministic(9);
+}
+
+// ------------------------------------------------------ scenario drivers
+
+fn tiny_scenario(conns: usize) -> ScenarioCfg {
+    let mut cfg = ScenarioCfg::default();
+    cfg.conns = conns;
+    cfg.duration = Ns::from_ms(3);
+    cfg.seed = 7;
+    cfg
+}
+
+#[test]
+fn naive_scenario_replays_byte_identically() {
+    let cfg = tiny_scenario(64);
+    let a = format!("{:?}", naive_random_read(&cfg));
+    let b = format!("{:?}", naive_random_read(&cfg));
+    assert_eq!(a, b);
+}
+
+#[test]
+fn raas_scenario_replays_byte_identically() {
+    // multiple remotes: this is the path where HashMap-ordered batch
+    // flushing used to leak the hasher seed into the timeline
+    let cfg = tiny_scenario(96);
+    let a = format!("{:?}", raas_random_read(&cfg));
+    let b = format!("{:?}", raas_random_read(&cfg));
+    assert_eq!(a, b);
+}
+
+#[test]
+fn locked_scenario_replays_byte_identically() {
+    let mut cfg = tiny_scenario(12);
+    cfg.msg_bytes = 512;
+    cfg.window = 4;
+    let a = format!("{:?}", locked_random_read(&cfg, 3));
+    let b = format!("{:?}", locked_random_read(&cfg, 3));
+    assert_eq!(a, b);
+}
+
+#[test]
+fn verbs_sweep_replays_byte_identically() {
+    use rdmavisor::fabric::types::{QpTransport, Verb};
+    let run = || {
+        verbs_sweep_point(QpTransport::Rc, Verb::Write, 16 << 10, 8, Ns::from_ms(2))
+    };
+    assert_eq!(format!("{:?}", run()), format!("{:?}", run()));
+}
+
+#[test]
+fn scale_scenario_replays_byte_identically() {
+    // 300 destinations > the 200-dest RC budget: the adaptive run
+    // migrates its working set to UD (exercising the whole migration
+    // machinery), the rc-only run below covers the connected path
+    let mut cfg = ScaleCfg::default();
+    cfg.conns = 300;
+    cfg.duration = Ns::from_ms(2);
+    let a = format!("{:?}", scale_send(&cfg));
+    let b = format!("{:?}", scale_send(&cfg));
+    assert_eq!(a, b);
+
+    // the rc-only ablation too
+    cfg.rc_only = true;
+    let a = format!("{:?}", scale_send(&cfg));
+    let b = format!("{:?}", scale_send(&cfg));
+    assert_eq!(a, b);
+}

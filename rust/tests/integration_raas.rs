@@ -49,7 +49,8 @@ fn thousand_connections_three_shared_qps() {
     }
     assert_eq!(daemons[0].conns.active(), 1000);
     assert_eq!(daemons[0].shared_qp_count(), 3, "1000 conns, 3 QPs");
-    assert_eq!(sim.node(NodeId(0)).qps.len(), 3);
+    // 3 shared RC QPs + the daemon's host-wide UD QP
+    assert_eq!(sim.node(NodeId(0)).qps.len(), 4);
 
     // every connection can actually move data
     for (i, c) in conns.iter().enumerate().take(50) {
@@ -179,6 +180,88 @@ fn adaptive_selection_end_to_end() {
     }
     lens.sort_unstable();
     assert_eq!(lens, vec![256, 512 << 10]);
+}
+
+#[test]
+fn srq_driven_below_watermark_refills_and_pool_exhaustion_backpressures() {
+    // Receiver with a small SRQ: a burst of sends drives the posted WQE
+    // count below the watermark; the next pump must refill to capacity.
+    // Sender with a tiny pool: once every slab slot is leased, send()
+    // must return PoolExhausted — an error, not a drop or a deadlock.
+    let mut fcfg = FabricConfig::default();
+    fcfg.nodes = 2;
+    fcfg.sq_depth = 8192;
+    let mut sim = Sim::new(fcfg);
+
+    let mut sender_cfg = DaemonConfig::default();
+    // 8 × 4 KB slots and nothing else; SRQ recv leases are recycled in
+    // place, so all 8 slots are available to stage outgoing sends
+    sender_cfg.pool_layout = vec![(4096, 8)];
+    sender_cfg.recv_slot_bytes = 4096;
+    sender_cfg.srq_capacity = 4;
+    let mut receiver_cfg = DaemonConfig::default();
+    receiver_cfg.srq_capacity = 8;
+    receiver_cfg.srq_watermark = 4;
+
+    let mut daemons = vec![
+        Daemon::start(&mut sim, NodeId(0), sender_cfg),
+        Daemon::start(&mut sim, NodeId(1), receiver_cfg),
+    ];
+    let sapp = daemons[1].register_app();
+    daemons[1].listen(sapp, 1);
+    let app = daemons[0].register_app();
+    let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+
+    let srqn = *sim.node(NodeId(1)).srqs.keys().next().unwrap();
+    assert_eq!(sim.node(NodeId(1)).srqs[&srqn].posted(), 8, "pre-filled");
+
+    // burst of 6 sends: consumes 6 receiver WQEs => below the watermark
+    for i in 0..6 {
+        daemons[0]
+            .send(&mut sim, conn, 1024, Flags::default(), i, HostLoad::default())
+            .unwrap();
+    }
+    daemons[0].pump(&mut sim);
+    while sim.step().is_some() {}
+    let srq = &sim.node(NodeId(1)).srqs[&srqn];
+    assert!(srq.consumed >= 6, "consumed={}", srq.consumed);
+    assert!(srq.starved_events > 0, "burst must dip below the watermark");
+    assert!(srq.posted() < 4, "drained before the Poller refills");
+
+    // receiver pump refills the SRQ back to capacity from the pool
+    daemons[1].pump(&mut sim);
+    assert_eq!(sim.node(NodeId(1)).srqs[&srqn].posted(), 8, "refilled");
+    assert!(!sim.node(NodeId(1)).srqs[&srqn].is_starving());
+
+    // drain the sender's completions so the first burst's leases return
+    settle(&mut sim, &mut daemons);
+    assert_eq!(daemons[0].pool.leased_bytes, 0, "burst leases released");
+
+    // sender-side exhaustion: 8 slots, keep sends in flight without
+    // pumping so leases accumulate; the 9th must error out cleanly
+    let mut sent = 0;
+    let mut exhausted = false;
+    for i in 0..16 {
+        match daemons[0].send(&mut sim, conn, 1024, Flags::default(), i, HostLoad::default()) {
+            Ok(_) => sent += 1,
+            Err(RaasError::PoolExhausted) => {
+                exhausted = true;
+                break;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(sent, 8, "exactly the slab capacity");
+    assert!(exhausted, "9th lease must fail with PoolExhausted");
+    assert_eq!(daemons[0].pool.exhausted, 1);
+
+    // backpressure recovers: complete the in-flight sends, then send again
+    settle(&mut sim, &mut daemons);
+    assert_eq!(daemons[0].pool.leased_bytes, 0, "all leases released");
+    daemons[0]
+        .send(&mut sim, conn, 1024, Flags::default(), 99, HostLoad::default())
+        .expect("pool recovered after completions");
+    settle(&mut sim, &mut daemons);
 }
 
 #[test]

@@ -4,9 +4,12 @@
 use rdmavisor::fabric::cache::{IcmCache, IcmKey};
 use rdmavisor::fabric::sim::{FabricConfig, Sim};
 use rdmavisor::fabric::time::Ns;
-use rdmavisor::fabric::types::NodeId;
+use rdmavisor::fabric::types::{NodeId, QpTransport, Verb};
+use rdmavisor::raas::api::Flags;
 use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery};
+use rdmavisor::raas::migrate::{decide, DestState, MigrationConfig};
 use rdmavisor::raas::shmem::SpscRing;
+use rdmavisor::raas::transport::{HostLoad, Selector, SelectorConfig};
 use rdmavisor::raas::vqpn::{pack_wr_id, unpack_seq, unpack_vqpn, ConnTable, Vqpn};
 use rdmavisor::util::prop::{check, Gen, U64Range, UsizeRange, VecGen};
 use rdmavisor::util::rng::Rng;
@@ -112,6 +115,113 @@ fn prop_lru_cache_never_exceeds_capacity_and_keeps_hot_keys() {
         if let Some(&last) = touches.last() {
             if !c.contains(&IcmKey::Qpc(last as u32)) {
                 return Err("MRU key evicted".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selector_honors_user_pins() {
+    // ∀ (len, pinned transport+verb combo): a Table-1-legal pin is
+    // returned verbatim; an illegal pin is rejected — the selector never
+    // substitutes its own preference for the user's.
+    struct PinCase;
+    impl Gen<(u64, u8, u8)> for PinCase {
+        fn gen(&self, rng: &mut Rng) -> (u64, u8, u8) {
+            (
+                U64Range(0, 2 << 20).gen(rng),
+                UsizeRange(0, 2).gen(rng) as u8, // transport index
+                UsizeRange(0, 2).gen(rng) as u8, // verb index
+            )
+        }
+    }
+    check(31, 400, &PinCase, |&(len, t, v)| {
+        let (tf, transport) = match t {
+            0 => (Flags::RC, QpTransport::Rc),
+            1 => (Flags::UC, QpTransport::Uc),
+            _ => (Flags::UD, QpTransport::Ud),
+        };
+        let (vf, verb) = match v {
+            0 => (Flags::SEND, Verb::Send),
+            1 => (Flags::WRITE, Verb::Write),
+            _ => (Flags::READ, Verb::Read),
+        };
+        let legal = rdmavisor::fabric::types::supports(transport, verb);
+        let mut s = Selector::new(SelectorConfig::default());
+        // migration preference must NOT override an explicit pin
+        let got = s.choose_adaptive(len, tf | vf, HostLoad::default(), HostLoad::default(), 4096, true);
+        match (legal, got) {
+            (true, Ok(c)) if c.transport == transport && c.verb == verb => Ok(()),
+            (false, Err(_)) => Ok(()),
+            (_, r) => Err(format!("pin ({transport},{verb}) len {len} -> {r:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_selector_hysteresis_never_flaps_in_band() {
+    // After any initial classification, message sizes inside the closed
+    // hysteresis band [t(1-h), t(1+h)] never flip the size class.
+    let gen = VecGen { elem: U64Range(3072, 5120), min_len: 2, max_len: 60 };
+    check(37, 120, &gen, |lens: &Vec<u64>| {
+        let cfg = SelectorConfig::default(); // t = 4096, h = 0.25
+        let mut s = Selector::new(cfg);
+        let idle = HostLoad::default();
+        let first = s
+            .choose(lens[0], Flags::default(), idle, idle, 4096)
+            .map_err(|e| e.to_string())?
+            .verb;
+        for &len in &lens[1..] {
+            // 3072..=5120 ⊆ [4096·0.75, 4096·1.25] — always in the band
+            let got = s
+                .choose(len, Flags::default(), idle, idle, 4096)
+                .map_err(|e| e.to_string())?
+                .verb;
+            if got != first {
+                return Err(format!("flapped {first:?} -> {got:?} at len {len}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_migration_decision_monotone_in_pressure() {
+    // ∀ state, p1 ≤ p2: pressure only ever pushes *toward* UD — if the
+    // decision at p1 already leaves RC, the decision at p2 does too, and
+    // if p2 stays RC then p1 must as well. Plus: inside the hysteresis
+    // band the decision is the identity.
+    struct Pressures;
+    impl Gen<(f64, f64, u8)> for Pressures {
+        fn gen(&self, rng: &mut Rng) -> (f64, f64, u8) {
+            let a = U64Range(0, 2000).gen(rng) as f64 / 1000.0;
+            let b = U64Range(0, 2000).gen(rng) as f64 / 1000.0;
+            (a.min(b), a.max(b), UsizeRange(0, 2).gen(rng) as u8)
+        }
+    }
+    fn toward_ud(s: DestState) -> u8 {
+        match s {
+            DestState::Rc => 0,
+            DestState::DrainingToUd | DestState::Ud => 1,
+        }
+    }
+    check(41, 500, &Pressures, |&(p1, p2, st)| {
+        let cfg = MigrationConfig::default();
+        let state = match st {
+            0 => DestState::Rc,
+            1 => DestState::DrainingToUd,
+            _ => DestState::Ud,
+        };
+        let d1 = decide(state, p1, &cfg);
+        let d2 = decide(state, p2, &cfg);
+        if toward_ud(d1) > toward_ud(d2) {
+            return Err(format!("{state:?}: p1={p1} -> {d1:?} but p2={p2} -> {d2:?}"));
+        }
+        // band identity: strictly inside (exit_ud, enter_ud) nothing moves
+        for &p in &[p1, p2] {
+            if p > cfg.exit_ud && p < cfg.enter_ud && decide(state, p, &cfg) != state {
+                return Err(format!("{state:?} moved inside the band at p={p}"));
             }
         }
         Ok(())
