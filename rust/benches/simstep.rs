@@ -1,0 +1,31 @@
+//! DES scheduler throughput (EXPERIMENTS.md §Perf): events/sec through
+//! the timing-wheel event loop on a daemon-free QP WRITE storm — the raw
+//! budget behind every figure sweep. `cargo bench --bench simstep`, or
+//! `rdmavisor bench simstep` for the JSON form; quick mode via
+//! `RDMAVISOR_BENCH_QUICK=1`.
+
+use rdmavisor::fabric::time::Ns;
+use rdmavisor::util::bench::Bencher;
+use rdmavisor::workload::scenarios::event_storm;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let quick = std::env::var("RDMAVISOR_BENCH_QUICK").is_ok();
+    let (pairs, sim_ms) = if quick { (64, 2) } else { (256, 8) };
+
+    b.bench_with_metric("sim/event_storm_events_per_sec", "meps", || {
+        let t0 = std::time::Instant::now();
+        let events = event_storm(pairs, 8, 4096, Ns::from_ms(sim_ms));
+        events as f64 / t0.elapsed().as_secs_f64() / 1e6
+    });
+
+    // small-message storm: more events per byte, stresses queue churn
+    b.bench_with_metric("sim/event_storm_256B_events_per_sec", "meps", || {
+        let t0 = std::time::Instant::now();
+        let events = event_storm(pairs, 8, 256, Ns::from_ms(sim_ms));
+        events as f64 / t0.elapsed().as_secs_f64() / 1e6
+    });
+
+    std::fs::create_dir_all("results").ok();
+    b.write_tsv("results/bench_simstep.tsv").ok();
+}

@@ -60,6 +60,8 @@ pub struct LockedSystem {
     pub hold_ns: u64,
     /// Time threads spent blocked on locks (Fig 6's wasted CPU).
     pub lock_wait_ns: u64,
+    /// Poll scratch buffer reused across calls (zero-alloc CQ drain).
+    cqe_buf: Vec<crate::fabric::wqe::Cqe>,
 }
 
 impl LockedSystem {
@@ -97,7 +99,17 @@ impl LockedSystem {
                 completed_ops: 0,
             })
             .collect();
-        LockedSystem { node: client, cq, q, qps, threads, local_buf, hold_ns: 400, lock_wait_ns: 0 }
+        LockedSystem {
+            node: client,
+            cq,
+            q,
+            qps,
+            threads,
+            local_buf,
+            hold_ns: 400,
+            lock_wait_ns: 0,
+            cqe_buf: Vec::new(),
+        }
     }
 
     /// Thread `t` wants to post a READ *now*; it must win the QP mutex
@@ -133,7 +145,9 @@ impl LockedSystem {
     /// Poll the shared CQ; returns thread ids whose ops completed.
     pub fn poll(&mut self, sim: &mut Sim) -> Vec<usize> {
         let mut ready = Vec::new();
-        for cqe in sim.poll_cq(self.node, self.cq, 64) {
+        self.cqe_buf.clear();
+        sim.poll_cq_into(self.node, self.cq, 64, &mut self.cqe_buf);
+        for cqe in &self.cqe_buf {
             let t = cqe.wr_id as usize;
             if let Some(thread) = self.threads.get_mut(t) {
                 thread.inflight = thread.inflight.saturating_sub(1);

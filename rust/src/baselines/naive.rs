@@ -40,6 +40,8 @@ pub struct NaiveSystem {
     pub conns: Vec<NaiveConn>,
     /// Per-conn buffer bytes (both sides), for the memory ledger.
     pub buf_bytes_per_conn: u64,
+    /// Poll scratch buffer reused across calls (zero-alloc CQ drain).
+    cqe_buf: Vec<crate::fabric::wqe::Cqe>,
 }
 
 impl NaiveSystem {
@@ -87,7 +89,13 @@ impl NaiveSystem {
                 });
             }
         }
-        NaiveSystem { node: client, app_cqs, conns, buf_bytes_per_conn: 2 * buf_bytes }
+        NaiveSystem {
+            node: client,
+            app_cqs,
+            conns,
+            buf_bytes_per_conn: 2 * buf_bytes,
+            cqe_buf: Vec::new(),
+        }
     }
 
     /// Post one READ on connection `idx` at `offset`.
@@ -126,8 +134,11 @@ impl NaiveSystem {
     /// completed (the driver re-posts on them — closed loop).
     pub fn poll(&mut self, sim: &mut Sim) -> Vec<usize> {
         let mut ready = Vec::new();
-        for cq in self.app_cqs.clone() {
-            for cqe in sim.poll_cq(self.node, cq, 64) {
+        for i in 0..self.app_cqs.len() {
+            let cq = self.app_cqs[i];
+            self.cqe_buf.clear();
+            sim.poll_cq_into(self.node, cq, 64, &mut self.cqe_buf);
+            for cqe in &self.cqe_buf {
                 let idx = cqe.wr_id as usize;
                 if let Some(conn) = self.conns.get_mut(idx) {
                     conn.inflight = conn.inflight.saturating_sub(1);

@@ -51,6 +51,16 @@ impl Cq {
         self.queue.drain(..k).collect()
     }
 
+    /// Consumer-side poll of up to `n` completions into a caller-provided
+    /// buffer (appended; the caller clears). Returns how many were
+    /// appended — the zero-alloc twin of [`Cq::poll`] for the pollers
+    /// that run once per simulated event.
+    pub fn poll_into(&mut self, n: usize, out: &mut Vec<Cqe>) -> usize {
+        let k = n.min(self.queue.len());
+        out.extend(self.queue.drain(..k));
+        k
+    }
+
     /// Completions waiting to be polled.
     pub fn len(&self) -> usize {
         self.queue.len()

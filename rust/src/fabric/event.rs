@@ -1,42 +1,66 @@
 //! Discrete-event queue with deterministic FIFO tie-breaking.
+//!
+//! Implemented as a **hierarchical timing wheel** (64-slot levels, 1 ns
+//! finest granularity) with a sorted overflow level for events beyond the
+//! wheel span. Replaces the original `BinaryHeap`: pushes and pops are
+//! O(1) amortized instead of O(log n) sift operations over ~100-byte
+//! entries, which is what made the event loop the bottleneck of the
+//! thousand-connection sweeps.
+//!
+//! ### Exact order equivalence
+//!
+//! Pop order is **identical** to the heap it replaced: ascending event
+//! time, FIFO (ascending sequence number) within the same instant. Three
+//! structural invariants make this exact, not approximate:
+//!
+//! * the finest level has 1 ns slots, so every entry in a level-0 slot
+//!   shares one exact timestamp and FIFO falls out of seq order;
+//! * every slot (and overflow bucket) keeps its entries sorted by seq —
+//!   inserts scan from the back, so in-order pushes stay O(1) while a
+//!   [`EventQueue::push_at_seq`] replay with a previously reserved seq
+//!   lands in its original position;
+//! * level *l* holds only times within the cursor's level-(*l*+1) block,
+//!   so all level-*l* entries precede all level-(*l*+1) entries and the
+//!   earliest event is always in the lowest occupied level's lowest
+//!   occupied slot (or, with an empty wheel, the overflow's first bucket).
+//!
+//! The seq counter is the same push-ordered counter the heap used;
+//! [`EventQueue::reserve_seqs`] lets a caller claim a contiguous block up
+//! front and replay it later (the simulator's coalesced frame streams),
+//! which preserves the exact order an eager push-per-frame would have had.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, VecDeque};
 
 use super::time::Ns;
 
+/// log2 of the slot count per wheel level.
+const SLOT_BITS: u32 = 6;
+/// Slots per level.
+const SLOTS: usize = 1 << SLOT_BITS;
+/// Wheel levels; spans `2^(SLOT_BITS*LEVELS)` ns ≈ 1.07 s at 6×5.
+const LEVELS: usize = 5;
+/// Total bits of time the wheel covers; beyond this is the overflow level.
+const WHEEL_BITS: u32 = SLOT_BITS * LEVELS as u32;
+
 struct Entry<E> {
-    at: Ns,
+    at: u64,
     seq: u64,
     event: E,
 }
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl<E> Eq for Entry<E> {}
-
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap: earlier time first; FIFO within the same instant.
-        other
-            .at
-            .cmp(&self.at)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
 /// Pending-event queue of a simulation.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    /// Cursor: the time of the last popped event (all earlier times are
+    /// fully drained). Slot membership is computed relative to this.
+    horizon: u64,
+    /// `LEVELS × SLOTS` slot deques, level-major.
+    levels: Vec<VecDeque<Entry<E>>>,
+    /// Per-level occupancy bitmap (bit i = slot i non-empty).
+    occ: [u64; LEVELS],
+    /// Sorted overflow level: time → seq-ordered entries, for events
+    /// beyond the wheel span. Migrated into the wheel block-wise.
+    overflow: BTreeMap<u64, VecDeque<Entry<E>>>,
+    len: usize,
     seq: u64,
 }
 
@@ -49,40 +73,186 @@ impl<E> Default for EventQueue<E> {
 impl<E> EventQueue<E> {
     /// Empty queue.
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+        let mut levels = Vec::with_capacity(LEVELS * SLOTS);
+        levels.resize_with(LEVELS * SLOTS, VecDeque::new);
+        EventQueue {
+            horizon: 0,
+            levels,
+            occ: [0; LEVELS],
+            overflow: BTreeMap::new(),
+            len: 0,
+            seq: 0,
+        }
     }
 
-    /// Schedule `event` at absolute time `at`.
+    /// Schedule `event` at absolute time `at` with the next sequence
+    /// number (FIFO within an instant).
     pub fn push(&mut self, at: Ns, event: E) {
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Entry { at, seq, event });
+        self.push_at_seq(at, seq, event);
+    }
+
+    /// Claim `n` consecutive sequence numbers and return the first.
+    ///
+    /// A caller that would otherwise push `n` events back-to-back can
+    /// reserve their seqs up front and replay them one at a time via
+    /// [`EventQueue::push_at_seq`]; pop order is identical to the eager
+    /// pushes (the simulator's coalesced multi-frame message streams).
+    pub fn reserve_seqs(&mut self, n: u64) -> u64 {
+        let s = self.seq;
+        self.seq += n;
+        s
+    }
+
+    /// Schedule `event` at `at` under an explicitly reserved sequence
+    /// number (see [`EventQueue::reserve_seqs`]). `at` must not precede
+    /// the last popped event — that is a caller bug (debug assert);
+    /// release builds clamp to it as a safety net so the wheel's slot
+    /// invariants cannot be corrupted.
+    pub fn push_at_seq(&mut self, at: Ns, seq: u64, event: E) {
+        debug_assert!(at.0 >= self.horizon, "push into the drained past");
+        let t = at.0.max(self.horizon);
+        let e = Entry { at: t, seq, event };
+        self.len += 1;
+        if (t ^ self.horizon) >> WHEEL_BITS != 0 {
+            // beyond the wheel span: sorted overflow level
+            let d = self.overflow.entry(t).or_default();
+            let mut i = d.len();
+            while i > 0 && d[i - 1].seq > seq {
+                i -= 1;
+            }
+            d.insert(i, e);
+        } else {
+            self.wheel_insert(e);
+        }
+    }
+
+    /// Place an in-span entry in the correct level/slot, keeping the slot
+    /// seq-sorted (in-order pushes append in O(1)).
+    fn wheel_insert(&mut self, e: Entry<E>) {
+        let x = e.at ^ self.horizon;
+        let lvl = if x == 0 {
+            0
+        } else {
+            (63 - x.leading_zeros()) as usize / SLOT_BITS as usize
+        };
+        debug_assert!(lvl < LEVELS);
+        let idx = ((e.at >> (SLOT_BITS * lvl as u32)) & (SLOTS as u64 - 1)) as usize;
+        let d = &mut self.levels[lvl * SLOTS + idx];
+        let mut i = d.len();
+        while i > 0 && d[i - 1].seq > e.seq {
+            i -= 1;
+        }
+        d.insert(i, e);
+        self.occ[lvl] |= 1u64 << idx;
     }
 
     /// Remove and return the earliest event (FIFO within an instant).
     pub fn pop(&mut self) -> Option<(Ns, E)> {
-        self.heap.pop().map(|e| (e.at, e.event))
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            // Level 0: 1 ns slots — every entry in the slot shares one
+            // exact timestamp, and the deque is seq-sorted.
+            if self.occ[0] != 0 {
+                let idx = self.occ[0].trailing_zeros() as usize;
+                let d = &mut self.levels[idx];
+                let e = d.pop_front().expect("occupied level-0 slot");
+                if d.is_empty() {
+                    self.occ[0] &= !(1u64 << idx);
+                }
+                self.horizon = e.at;
+                self.len -= 1;
+                return Some((Ns(e.at), e.event));
+            }
+            // Cascade the lowest occupied slot of the lowest non-empty
+            // level down: advance the cursor to that slot's range start
+            // and re-insert its entries (they land in strictly lower
+            // levels, so this terminates).
+            let mut cascaded = false;
+            for lvl in 1..LEVELS {
+                if self.occ[lvl] == 0 {
+                    continue;
+                }
+                let idx = self.occ[lvl].trailing_zeros() as usize;
+                let mut d = std::mem::take(&mut self.levels[lvl * SLOTS + idx]);
+                self.occ[lvl] &= !(1u64 << idx);
+                let span = SLOT_BITS * (lvl as u32 + 1);
+                let base = (self.horizon >> span) << span;
+                self.horizon = base | ((idx as u64) << (SLOT_BITS * lvl as u32));
+                for e in d.drain(..) {
+                    self.wheel_insert(e);
+                }
+                // hand the (now empty) deque's capacity back to the slot
+                self.levels[lvl * SLOTS + idx] = d;
+                cascaded = true;
+                break;
+            }
+            if cascaded {
+                continue;
+            }
+            // Wheel empty: migrate the earliest overflow block in.
+            let (&t0, _) = self
+                .overflow
+                .iter()
+                .next()
+                .expect("len > 0 with empty wheel and empty overflow");
+            self.horizon = t0;
+            let block = t0 >> WHEEL_BITS;
+            loop {
+                let Some((&t, _)) = self.overflow.iter().next() else { break };
+                if t >> WHEEL_BITS != block {
+                    break;
+                }
+                let d = self.overflow.remove(&t).expect("present key");
+                for e in d {
+                    self.wheel_insert(e);
+                }
+            }
+        }
     }
 
     /// Time of the earliest pending event.
     pub fn peek_time(&self) -> Option<Ns> {
-        self.heap.peek().map(|e| e.at)
+        if self.len == 0 {
+            return None;
+        }
+        for lvl in 0..LEVELS {
+            if self.occ[lvl] == 0 {
+                continue;
+            }
+            let idx = self.occ[lvl].trailing_zeros() as usize;
+            let d = &self.levels[lvl * SLOTS + idx];
+            return if lvl == 0 {
+                // one exact timestamp per level-0 slot
+                d.front().map(|e| Ns(e.at))
+            } else {
+                // coarser slots mix timestamps (seq-sorted): scan for min
+                d.iter().map(|e| e.at).min().map(Ns)
+            };
+        }
+        self.overflow.keys().next().copied().map(Ns)
     }
 
     /// Pending events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     /// True when the timeline is drained.
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
 
     #[test]
     fn pops_in_time_order() {
@@ -125,5 +295,216 @@ mod tests {
         q.push(Ns(42), ());
         assert_eq!(q.peek_time(), Some(Ns(42)));
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn peek_across_levels_and_overflow() {
+        let mut q = EventQueue::new();
+        q.push(Ns(1 << 40), "overflow");
+        assert_eq!(q.peek_time(), Some(Ns(1 << 40)));
+        q.push(Ns(70_000), "level2");
+        assert_eq!(q.peek_time(), Some(Ns(70_000)));
+        q.push(Ns(3), "level0");
+        assert_eq!(q.peek_time(), Some(Ns(3)));
+        assert_eq!(q.pop(), Some((Ns(3), "level0")));
+        assert_eq!(q.pop(), Some((Ns(70_000), "level2")));
+        assert_eq!(q.pop(), Some((Ns(1 << 40), "overflow")));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn far_future_overflow_entries_pop_in_order() {
+        let mut q = EventQueue::new();
+        // several distinct overflow blocks plus near-term wheel entries
+        q.push(Ns(5 << 30), 4u32);
+        q.push(Ns((1 << 30) + 7), 2);
+        q.push(Ns(12), 0);
+        q.push(Ns((1 << 30) + 7), 3); // same overflow instant: FIFO
+        q.push(Ns(900), 1);
+        q.push(Ns(9 << 35), 5);
+        let mut got = Vec::new();
+        while let Some((_, e)) = q.pop() {
+            got.push(e);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    // ------------------------------------------------ reference equivalence
+
+    /// The exact structure this wheel replaced: a BinaryHeap ordered by
+    /// (time asc, seq asc).
+    struct RefEntry {
+        at: u64,
+        seq: u64,
+        id: u64,
+    }
+    impl PartialEq for RefEntry {
+        fn eq(&self, other: &Self) -> bool {
+            self.at == other.at && self.seq == other.seq
+        }
+    }
+    impl Eq for RefEntry {}
+    impl PartialOrd for RefEntry {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for RefEntry {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+        }
+    }
+
+    /// Property: under a random interleaved push/pop workload — including
+    /// same-instant bursts, far-future overflow entries and reserved-seq
+    /// stream replays — the wheel pops byte-identically to the reference
+    /// heap.
+    #[test]
+    fn property_matches_reference_heap() {
+        for seed in 0..12u64 {
+            let mut rng = Rng::new(0xE_u64.wrapping_mul(seed).wrapping_add(seed + 1));
+            let mut wheel: EventQueue<u64> = EventQueue::new();
+            let mut heap: BinaryHeap<RefEntry> = BinaryHeap::new();
+            let mut ref_seq = 0u64;
+            // reserved-seq streams the wheel replays lazily: id -> (next
+            // push index, times, base seq). The reference pushed all of a
+            // stream's entries eagerly at reservation time.
+            let mut streams: std::collections::HashMap<u64, (usize, Vec<u64>, u64)> =
+                std::collections::HashMap::new();
+            let mut clock = 0u64; // mirrors the sim: pushes never precede
+            let mut next_id = 0u64; // the last popped time
+            let mut popped = 0u64;
+            // ids: plain events are (id << 8) | 0xFF; stream frame k of
+            // stream s is (s << 8) | k with k < 6 — disjoint low bytes, so
+            // the pop-side resolver can tell them apart.
+            let plain_id = |next_id: &mut u64| {
+                let id = (*next_id << 8) | 0xFF;
+                *next_id += 1;
+                id
+            };
+
+            for _ in 0..4000 {
+                match rng.gen_range(100) {
+                    // plain push, near horizon
+                    0..=39 => {
+                        let at = clock + rng.gen_range(1 << 14);
+                        let id = plain_id(&mut next_id);
+                        heap.push(RefEntry { at, seq: ref_seq, id });
+                        ref_seq += 1;
+                        wheel.push(Ns(at), id);
+                    }
+                    // same-instant burst
+                    40..=54 => {
+                        let at = clock + rng.gen_range(1 << 10);
+                        for _ in 0..rng.usize_in(2, 40) {
+                            let id = plain_id(&mut next_id);
+                            heap.push(RefEntry { at, seq: ref_seq, id });
+                            ref_seq += 1;
+                            wheel.push(Ns(at), id);
+                        }
+                    }
+                    // far-future (overflow level) push
+                    55..=62 => {
+                        let at = clock + (1 << WHEEL_BITS) + rng.gen_range(1 << 40);
+                        let id = plain_id(&mut next_id);
+                        heap.push(RefEntry { at, seq: ref_seq, id });
+                        ref_seq += 1;
+                        wheel.push(Ns(at), id);
+                    }
+                    // stream reservation: the reference pushes all n
+                    // frames now; the wheel pushes only the first and
+                    // replays the rest on pop with the reserved seqs
+                    63..=74 => {
+                        let n = rng.usize_in(2, 6);
+                        let mut at = clock + 1 + rng.gen_range(1 << 12);
+                        let mut times = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            times.push(at);
+                            at += 1 + rng.gen_range(1 << 8);
+                        }
+                        let base = ref_seq;
+                        for (k, &t) in times.iter().enumerate() {
+                            heap.push(RefEntry {
+                                at: t,
+                                seq: base + k as u64,
+                                id: (next_id << 8) | k as u64,
+                            });
+                        }
+                        ref_seq += n as u64;
+                        assert_eq!(wheel.reserve_seqs(n as u64), base);
+                        wheel.push_at_seq(Ns(times[0]), base, next_id << 8);
+                        streams.insert(next_id, (0, times, base));
+                        next_id += 1;
+                    }
+                    // pop and compare
+                    _ => {
+                        let w = wheel.pop();
+                        let h = heap.pop();
+                        match (w, h) {
+                            (None, None) => {}
+                            (Some((wt, wid)), Some(r)) => {
+                                popped += 1;
+                                clock = clock.max(wt.0);
+                                assert_eq!(wt.0, r.at, "time diverged (seed {seed})");
+                                // resolve stream frames to their ref id
+                                let sid = wid >> 8;
+                                let resolved = match streams.get_mut(&sid) {
+                                    Some((k, times, base)) if (wid & 0xFF) == *k as u64 => {
+                                        let id = (sid << 8) | *k as u64;
+                                        *k += 1;
+                                        if *k < times.len() {
+                                            wheel.push_at_seq(
+                                                Ns(times[*k]),
+                                                *base + *k as u64,
+                                                (sid << 8) | *k as u64,
+                                            );
+                                        }
+                                        id
+                                    }
+                                    _ => wid,
+                                };
+                                assert_eq!(resolved, r.id, "order diverged (seed {seed})");
+                            }
+                            (w, h) => panic!(
+                                "length diverged (seed {seed}): wheel={:?} heap={:?}",
+                                w.map(|x| x.0),
+                                h.map(|x| x.at)
+                            ),
+                        }
+                    }
+                }
+            }
+            // drain both completely
+            loop {
+                let w = wheel.pop();
+                let h = heap.pop();
+                match (w, h) {
+                    (None, None) => break,
+                    (Some((wt, wid)), Some(r)) => {
+                        popped += 1;
+                        assert_eq!(wt.0, r.at, "drain time diverged (seed {seed})");
+                        let sid = wid >> 8;
+                        let resolved = match streams.get_mut(&sid) {
+                            Some((k, times, base)) if (wid & 0xFF) == *k as u64 => {
+                                let id = (sid << 8) | *k as u64;
+                                *k += 1;
+                                if *k < times.len() {
+                                    wheel.push_at_seq(
+                                        Ns(times[*k]),
+                                        *base + *k as u64,
+                                        (sid << 8) | *k as u64,
+                                    );
+                                }
+                                id
+                            }
+                            _ => wid,
+                        };
+                        assert_eq!(resolved, r.id, "drain order diverged (seed {seed})");
+                    }
+                    _ => panic!("drain length diverged (seed {seed})"),
+                }
+            }
+            assert!(popped > 100, "workload too small to mean anything");
+        }
     }
 }

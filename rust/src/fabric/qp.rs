@@ -92,6 +92,10 @@ pub struct Qp {
     pub max_outstanding: usize,
     /// Currently un-acked / un-responded messages.
     pub outstanding: usize,
+    /// An `IssueFromQp` work item is queued on the engine for this QP
+    /// (doorbell coalescing — replaces the per-node hash set of armed
+    /// QPNs with a flag in the dense QP slot).
+    pub issue_armed: bool,
     /// Lifetime counters (metrics / tests).
     pub posted_send: u64,
     /// Lifetime receive WRs posted.
@@ -125,6 +129,7 @@ impl Qp {
             rq_depth,
             max_outstanding,
             outstanding: 0,
+            issue_armed: false,
             posted_send: 0,
             posted_recv: 0,
             completed: 0,

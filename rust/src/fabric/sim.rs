@@ -2,9 +2,10 @@
 //!
 //! Drivers (workload generators, the RaaS daemon, baselines) interact with
 //! the sim through the verbs-style API (`create_qp`, `post_send`,
-//! `poll_cq`, …) and advance virtual time by calling [`Sim::step`], which
-//! processes one event and reports completion notifications. Everything is
-//! deterministic: same calls + same seeds ⇒ identical timelines.
+//! `poll_cq`, …) and advance virtual time by calling [`Sim::step`] (or the
+//! zero-alloc [`Sim::step_into`]), which processes one event and reports
+//! completion notifications. Everything is deterministic: same calls +
+//! same seeds ⇒ identical timelines.
 //!
 //! ### Engine model
 //!
@@ -14,6 +15,16 @@
 //! tail — so concurrent messages interleave frame-by-frame exactly like a
 //! real RNIC's processing units, which is what makes the receiver's ICM
 //! cache thrash under high QP counts (Fig 5's mechanism).
+//!
+//! ### Hot-path layout
+//!
+//! The event queue is a hierarchical timing wheel ([`super::event`]);
+//! QPs/CQs/SRQs live in dense id-indexed vectors ([`DenseTable`]) so the
+//! per-frame context lookups are an index, not a hash; frames are `Copy`;
+//! and a requester-side multi-frame message occupies **one** pooled
+//! in-queue event that replays each frame at its precomputed delivery
+//! time under a reserved seq block — byte-identical pop order to the
+//! push-per-frame it replaces, at a fraction of the queue traffic.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -27,7 +38,7 @@ use super::qp::{PostError, Qp};
 use super::srq::Srq;
 use super::switchfab::Fabric;
 use super::time::Ns;
-use super::types::{Cqn, NodeId, QpTransport, Qpn, Srqn, Verb, WcStatus};
+use super::types::{Cqn, DenseTable, NodeId, QpTransport, Qpn, Srqn, Verb, WcStatus};
 use super::wqe::{Cqe, CqeKind, RecvWr, SendWr};
 
 /// Whole-fabric configuration.
@@ -82,10 +93,28 @@ impl Default for FabricConfig {
 enum Event {
     EngineCheck(NodeId),
     FrameDelivered(Frame),
+    /// One frame of a coalesced multi-frame message stream (see
+    /// [`FrameStreamState`]): replays `FrameDelivered` semantics at each
+    /// precomputed delivery time while keeping a single event in-queue.
+    FrameStream { stream: u32 },
     CqeDeliver { node: NodeId, cqn: Cqn, cqe: Cqe },
     RetrySend { node: NodeId, qpn: Qpn, wr: SendWr },
     /// Driver-scheduled timer (lock-grant wakeups, open-loop arrivals…).
     AppTimer { token: u64 },
+}
+
+/// Requester-side multi-frame message in flight: the template frame plus
+/// the delivery schedule computed eagerly at issue time (port state is
+/// mutated then, so the times are fixed). Pooled in [`Sim::streams`] and
+/// reused — steady-state zero allocation. The seq block reserved at issue
+/// makes the replayed pops byte-identical to eager per-frame pushes.
+struct FrameStreamState {
+    template: Frame,
+    /// `wr.len.max(1)` — what the frames were sized from.
+    payload_len: u64,
+    deliveries: Vec<Ns>,
+    next: u64,
+    base_seq: u64,
 }
 
 /// What [`Sim::step`] reports back to the driver.
@@ -107,12 +136,12 @@ struct InFlight {
 pub struct NodeState {
     /// This node's id.
     pub id: NodeId,
-    /// Queue pairs by QPN.
-    pub qps: HashMap<u32, Qp>,
-    /// Completion queues by CQN.
-    pub cqs: HashMap<u32, Cq>,
-    /// Shared receive queues by SRQN.
-    pub srqs: HashMap<u32, Srq>,
+    /// Queue pairs, dense-indexed by QPN.
+    pub qps: DenseTable<Qp>,
+    /// Completion queues, dense-indexed by CQN.
+    pub cqs: DenseTable<Cq>,
+    /// Shared receive queues, dense-indexed by SRQN.
+    pub srqs: DenseTable<Srq>,
     /// Registered memory regions.
     pub mrs: MrTable,
     /// The NIC's on-chip context cache (Fig 5's mechanism).
@@ -122,11 +151,6 @@ pub struct NodeState {
     engine_busy_until: Ns,
     engine_queue: VecDeque<WorkItem>,
     engine_scheduled: bool,
-    /// QPs with a queued IssueFromQp item (doorbell coalescing).
-    issue_armed: std::collections::HashSet<u32>,
-    next_qpn: u32,
-    next_cqn: u32,
-    next_srqn: u32,
     next_msg_id: u64,
     /// Requester-side in-flight messages keyed by msg_id.
     inflight: HashMap<u64, InFlight>,
@@ -149,19 +173,15 @@ impl NodeState {
     fn new(id: NodeId, cfg: &FabricConfig) -> Self {
         NodeState {
             id,
-            qps: HashMap::new(),
-            cqs: HashMap::new(),
-            srqs: HashMap::new(),
+            qps: DenseTable::new(),
+            cqs: DenseTable::new(),
+            srqs: DenseTable::new(),
             mrs: MrTable::new(),
             cache: IcmCache::new(cfg.nic.icm_cache_entries),
             cpu: CpuLedger::new(cfg.cores_per_node),
             engine_busy_until: Ns::ZERO,
             engine_queue: VecDeque::new(),
             engine_scheduled: false,
-            issue_armed: std::collections::HashSet::new(),
-            next_qpn: 1,
-            next_cqn: 1,
-            next_srqn: 1,
             next_msg_id: 1,
             inflight: HashMap::new(),
             pending_recv: HashMap::new(),
@@ -180,9 +200,9 @@ impl NodeState {
     /// Total fabric-level memory charged to this node (ledger for Fig 7):
     /// QP rings + contexts, CQ rings, SRQ rings, registered regions' MTT.
     pub fn fabric_mem_bytes(&self) -> u64 {
-        let qp: u64 = self.qps.values().map(|q| q.mem_bytes()).sum();
-        let cq: u64 = self.cqs.values().map(|c| c.mem_bytes()).sum();
-        let srq: u64 = self.srqs.values().map(|s| s.mem_bytes()).sum();
+        let qp: u64 = self.qps.iter().map(|q| q.mem_bytes()).sum();
+        let cq: u64 = self.cqs.iter().map(|c| c.mem_bytes()).sum();
+        let srq: u64 = self.srqs.iter().map(|s| s.mem_bytes()).sum();
         let mtt = self.mrs.total_mtt_entries * 8; // 8 B per MTT entry
         qp + cq + srq + mtt
     }
@@ -203,6 +223,9 @@ pub struct Sim {
     /// Completed data messages (companion counter).
     pub completed_msgs: u64,
     steps: u64,
+    /// Pooled multi-frame message streams (slab + free list).
+    streams: Vec<FrameStreamState>,
+    free_streams: Vec<u32>,
 }
 
 impl Sim {
@@ -221,12 +244,20 @@ impl Sim {
             completed_bytes: 0,
             completed_msgs: 0,
             steps: 0,
+            streams: Vec::new(),
+            free_streams: Vec::new(),
         }
     }
 
     /// Current virtual time.
     pub fn now(&self) -> Ns {
         self.clock
+    }
+
+    /// Events processed since construction (the DES throughput metric the
+    /// `bench simstep` / `bench fig9` targets report).
+    pub fn steps_processed(&self) -> u64 {
+        self.steps
     }
 
     /// A node's state.
@@ -244,18 +275,16 @@ impl Sim {
     /// Create a completion queue on `node`.
     pub fn create_cq(&mut self, node: NodeId, capacity: usize) -> Cqn {
         let n = self.node_mut(node);
-        let cqn = Cqn(n.next_cqn);
-        n.next_cqn += 1;
-        n.cqs.insert(cqn.0, Cq::new(cqn, capacity));
+        let cqn = Cqn(n.cqs.next_id());
+        n.cqs.insert(Cq::new(cqn, capacity));
         cqn
     }
 
     /// Create a shared receive queue on `node`.
     pub fn create_srq(&mut self, node: NodeId, capacity: usize, watermark: usize) -> Srqn {
         let n = self.node_mut(node);
-        let srqn = Srqn(n.next_srqn);
-        n.next_srqn += 1;
-        n.srqs.insert(srqn.0, Srq::new(srqn, capacity, watermark));
+        let srqn = Srqn(n.srqs.next_id());
+        n.srqs.insert(Srq::new(srqn, capacity, watermark));
         srqn
     }
 
@@ -269,16 +298,15 @@ impl Sim {
     ) -> Qpn {
         let (sq, rq, win) = (self.cfg.sq_depth, self.cfg.rq_depth, self.cfg.max_outstanding);
         let n = self.node_mut(node);
-        let qpn = Qpn(n.next_qpn);
-        n.next_qpn += 1;
-        n.qps.insert(qpn.0, Qp::new(qpn, transport, send_cq, recv_cq, sq, rq, win));
+        let qpn = Qpn(n.qps.next_id());
+        n.qps.insert(Qp::new(qpn, transport, send_cq, recv_cq, sq, rq, win));
         qpn
     }
 
     /// Point a QP's receive side at an SRQ.
     pub fn attach_srq(&mut self, node: NodeId, qpn: Qpn, srqn: Srqn) {
         let n = self.node_mut(node);
-        n.qps.get_mut(&qpn.0).expect("no such qp").srq = Some(srqn);
+        n.qps.get_mut(qpn.0).expect("no such qp").srq = Some(srqn);
     }
 
     /// Resize a QP's send-queue capacity after creation (e.g. the RaaS
@@ -286,7 +314,7 @@ impl Sim {
     /// destination and needs a far deeper SQ than the per-peer default).
     pub fn set_sq_depth(&mut self, node: NodeId, qpn: Qpn, depth: usize) {
         let n = self.node_mut(node);
-        n.qps.get_mut(&qpn.0).expect("no such qp").sq_depth = depth;
+        n.qps.get_mut(qpn.0).expect("no such qp").sq_depth = depth;
     }
 
     /// Register a memory region on `node`.
@@ -297,12 +325,12 @@ impl Sim {
     /// Transition both QPs to RTS, bound to each other (RC/UC connect).
     pub fn connect(&mut self, a: NodeId, a_qpn: Qpn, b: NodeId, b_qpn: Qpn) {
         {
-            let qp = self.node_mut(a).qps.get_mut(&a_qpn.0).expect("no qp a");
+            let qp = self.node_mut(a).qps.get_mut(a_qpn.0).expect("no qp a");
             qp.to_rtr();
             qp.to_rts(Some((b, b_qpn)));
         }
         {
-            let qp = self.node_mut(b).qps.get_mut(&b_qpn.0).expect("no qp b");
+            let qp = self.node_mut(b).qps.get_mut(b_qpn.0).expect("no qp b");
             qp.to_rtr();
             qp.to_rts(Some((a, a_qpn)));
         }
@@ -310,7 +338,7 @@ impl Sim {
 
     /// Bring a UD QP up (no peer binding).
     pub fn activate_ud(&mut self, node: NodeId, qpn: Qpn) {
-        let qp = self.node_mut(node).qps.get_mut(&qpn.0).expect("no qp");
+        let qp = self.node_mut(node).qps.get_mut(qpn.0).expect("no qp");
         debug_assert_eq!(qp.transport, QpTransport::Ud);
         qp.to_rtr();
         qp.to_rts(None);
@@ -322,7 +350,7 @@ impl Sim {
         let post_cpu = self.cfg.post_cpu_ns;
         let n = self.node_mut(node);
         n.cpu.charge_post(post_cpu);
-        let qp = n.qps.get_mut(&qpn.0).ok_or(PostError::BadState(super::qp::QpState::Error))?;
+        let qp = n.qps.get_mut(qpn.0).ok_or(PostError::BadState(super::qp::QpState::Error))?;
         qp.post_send(wr, mtu)?;
         self.ring_doorbell(node, qpn);
         Ok(())
@@ -341,7 +369,7 @@ impl Sim {
         let n = self.node_mut(node);
         // one syscall-ish driver cost + small per-WR marshalling cost
         n.cpu.charge_post(post_cpu + 30 * wrs.len() as u64);
-        let qp = n.qps.get_mut(&qpn.0).ok_or(PostError::BadState(super::qp::QpState::Error))?;
+        let qp = n.qps.get_mut(qpn.0).ok_or(PostError::BadState(super::qp::QpState::Error))?;
         let mut accepted = 0;
         for wr in wrs {
             match qp.post_send(wr, mtu) {
@@ -364,7 +392,7 @@ impl Sim {
         let n = self.node_mut(node);
         n.cpu.charge_post(post_cpu);
         n.qps
-            .get_mut(&qpn.0)
+            .get_mut(qpn.0)
             .ok_or(PostError::BadState(super::qp::QpState::Error))?
             .post_recv(wr)
     }
@@ -374,29 +402,43 @@ impl Sim {
         let post_cpu = self.cfg.post_cpu_ns;
         let n = self.node_mut(node);
         n.cpu.charge_post(post_cpu);
-        n.srqs.get_mut(&srqn.0).map(|s| s.post(wr)).unwrap_or(false)
+        n.srqs.get_mut(srqn.0).map(|s| s.post(wr)).unwrap_or(false)
     }
 
     /// Free send-queue slots on a QP (drivers use this to size batches).
     pub fn sq_free(&self, node: NodeId, qpn: Qpn) -> usize {
         self.node(node)
             .qps
-            .get(&qpn.0)
+            .get(qpn.0)
             .map(|qp| qp.sq_depth.saturating_sub(qp.sq.len()))
             .unwrap_or(0)
     }
 
-    /// Poll up to `n` CQEs; charges poller CPU.
+    /// Poll up to `max` CQEs; charges poller CPU.
     pub fn poll_cq(&mut self, node: NodeId, cqn: Cqn, max: usize) -> Vec<Cqe> {
+        let mut out = Vec::new();
+        self.poll_cq_into(node, cqn, max, &mut out);
+        out
+    }
+
+    /// Poll up to `max` CQEs into a caller-provided buffer (appended; the
+    /// caller clears between polls). Returns how many were appended.
+    /// Charges poller CPU — the zero-alloc form the hot pollers use.
+    pub fn poll_cq_into(
+        &mut self,
+        node: NodeId,
+        cqn: Cqn,
+        max: usize,
+        out: &mut Vec<Cqe>,
+    ) -> usize {
         let (poll_cpu, per_cqe) = (self.cfg.poll_cpu_ns, self.cfg.per_cqe_cpu_ns);
         let n = self.node_mut(node);
-        let out = n
-            .cqs
-            .get_mut(&cqn.0)
-            .map(|cq| cq.poll(max))
-            .unwrap_or_default();
-        n.cpu.charge_poll(poll_cpu + per_cqe * out.len() as u64);
-        out
+        let got = match n.cqs.get_mut(cqn.0) {
+            Some(cq) => cq.poll_into(max, out),
+            None => 0,
+        };
+        n.cpu.charge_poll(poll_cpu + per_cqe * got as u64);
+        got
     }
 
     // -------------------------------------------------------------- engine
@@ -405,7 +447,9 @@ impl Sim {
         let nic_doorbell = self.cfg.nic.doorbell_ns;
         let clock = self.clock;
         let n = self.node_mut(node);
-        if n.issue_armed.insert(qpn.0) {
+        let Some(qp) = n.qps.get_mut(qpn.0) else { return };
+        if !qp.issue_armed {
+            qp.issue_armed = true;
             n.engine_queue.push_back(WorkItem::IssueFromQp(qpn));
             // doorbell MMIO handling occupies the engine briefly
             n.engine_busy_until = n.engine_busy_until.max(clock) + Ns(nic_doorbell);
@@ -426,12 +470,9 @@ impl Sim {
     /// Re-arm a QP's issue item after a completion freed window space.
     fn rearm_issue(&mut self, node: NodeId, qpn: Qpn) {
         let n = self.node_mut(node);
-        let can = n
-            .qps
-            .get(&qpn.0)
-            .map(|qp| qp.can_issue())
-            .unwrap_or(false);
-        if can && n.issue_armed.insert(qpn.0) {
+        let Some(qp) = n.qps.get_mut(qpn.0) else { return };
+        if qp.can_issue() && !qp.issue_armed {
+            qp.issue_armed = true;
             n.engine_queue.push_back(WorkItem::IssueFromQp(qpn));
             self.kick_engine(node);
         }
@@ -440,32 +481,47 @@ impl Sim {
     // ---------------------------------------------------------- event loop
 
     /// Process one event; returns notifications, or None when the timeline
-    /// is exhausted.
+    /// is exhausted. Allocating convenience form of [`Sim::step_into`].
     pub fn step(&mut self) -> Option<Vec<Notification>> {
-        let (at, ev) = self.events.pop()?;
+        let mut notes = Vec::new();
+        if self.step_into(&mut notes) {
+            Some(notes)
+        } else {
+            None
+        }
+    }
+
+    /// Process one event, **appending** notifications to `notes` (the
+    /// caller clears between steps and reuses the buffer — zero-alloc in
+    /// steady state). Returns false when the timeline is exhausted.
+    pub fn step_into(&mut self, notes: &mut Vec<Notification>) -> bool {
+        let Some((at, ev)) = self.events.pop() else { return false };
         debug_assert!(at >= self.clock, "time went backwards");
         self.clock = at;
         self.steps += 1;
-        let mut notes = Vec::new();
         match ev {
             Event::EngineCheck(node) => self.on_engine_check(node),
             Event::FrameDelivered(frame) => self.on_frame_delivered(frame),
+            Event::FrameStream { stream } => {
+                let frame = self.next_stream_frame(stream);
+                self.on_frame_delivered(frame);
+            }
             Event::CqeDeliver { node, cqn, cqe } => {
-                if let Some(cq) = self.node_mut(node).cqs.get_mut(&cqn.0) {
+                if let Some(cq) = self.node_mut(node).cqs.get_mut(cqn.0) {
                     cq.push(cqe);
                     notes.push(Notification::CqeReady { node, cqn });
                 }
             }
             Event::RetrySend { node, qpn, wr } => {
                 // RNR retry: put the message back at the head of the SQ.
-                if let Some(qp) = self.node_mut(node).qps.get_mut(&qpn.0) {
+                if let Some(qp) = self.node_mut(node).qps.get_mut(qpn.0) {
                     qp.sq.push_front(wr);
                 }
                 self.rearm_issue(node, qpn);
             }
             Event::AppTimer { token } => notes.push(Notification::Timer { token }),
         }
-        Some(notes)
+        true
     }
 
     /// Schedule a driver timer at absolute time `at` (clamped to now).
@@ -481,9 +537,7 @@ impl Sim {
             if t > deadline {
                 break;
             }
-            if let Some(mut notes) = self.step() {
-                out.append(&mut notes);
-            }
+            self.step_into(&mut out);
         }
         self.clock = self.clock.max(deadline);
         out
@@ -492,9 +546,7 @@ impl Sim {
     /// Drain every pending event (quiescence).
     pub fn run_to_quiescence(&mut self) -> Vec<Notification> {
         let mut out = Vec::new();
-        while let Some(mut notes) = self.step() {
-            out.append(&mut notes);
-        }
+        while self.step_into(&mut out) {}
         out
     }
 
@@ -561,6 +613,65 @@ impl Sim {
         }
     }
 
+    // ----------------------------------------------------- frame streams
+
+    /// Pool a new stream slot (reusing a freed one when available).
+    fn alloc_stream(&mut self, template: Frame, payload_len: u64, base_seq: u64) -> u32 {
+        match self.free_streams.pop() {
+            Some(h) => {
+                let st = &mut self.streams[h as usize];
+                debug_assert!(st.deliveries.is_empty());
+                st.template = template;
+                st.payload_len = payload_len;
+                st.next = 0;
+                st.base_seq = base_seq;
+                h
+            }
+            None => {
+                self.streams.push(FrameStreamState {
+                    template,
+                    payload_len,
+                    deliveries: Vec::new(),
+                    next: 0,
+                    base_seq,
+                });
+                (self.streams.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Materialize the stream's next frame; re-arm the stream's single
+    /// in-queue event at the following delivery time (with its reserved
+    /// seq) or retire the slot to the free list.
+    fn next_stream_frame(&mut self, handle: u32) -> Frame {
+        let (frame, next, base_seq, next_at) = {
+            let st = &mut self.streams[handle as usize];
+            let n = st.deliveries.len() as u64;
+            let i = st.next;
+            debug_assert!(i < n);
+            let mut frame = st.template;
+            frame.is_first = i == 0;
+            frame.is_last = i + 1 == n;
+            // same sizing the delivery schedule was computed from
+            frame.bytes = self.fabric.frame_bytes(st.payload_len, i, n);
+            st.next += 1;
+            let next_at =
+                if st.next < n { Some(st.deliveries[st.next as usize]) } else { None };
+            (frame, st.next, st.base_seq, next_at)
+        };
+        match next_at {
+            Some(at) => {
+                self.events
+                    .push_at_seq(at, base_seq + next, Event::FrameStream { stream: handle });
+            }
+            None => {
+                self.streams[handle as usize].deliveries.clear();
+                self.free_streams.push(handle);
+            }
+        }
+        frame
+    }
+
     // -------------------------------------------------- requester-side tx
 
     /// Issue ONE message from this QP's send queue, then re-enqueue the
@@ -572,11 +683,11 @@ impl Sim {
         // Pull the next WR if the window allows.
         let (wr, peer, transport) = {
             let n = self.node_mut(node);
-            n.issue_armed.remove(&qpn.0);
-            let qp = match n.qps.get_mut(&qpn.0) {
+            let qp = match n.qps.get_mut(qpn.0) {
                 Some(qp) => qp,
                 None => return 0,
             };
+            qp.issue_armed = false;
             if !qp.can_issue() {
                 return 0; // window-blocked; re-armed on completion
             }
@@ -640,35 +751,59 @@ impl Sim {
                 } else {
                     FrameKind::SendData
                 };
-                let frames = self.fabric.frames_for(wr.len.max(1));
-                let total = frames.len();
+                let payload_len = wr.len.max(1);
+                let total = self.fabric.frame_count(payload_len);
+                let template = Frame {
+                    kind,
+                    src: node,
+                    dst: peer_node,
+                    dst_qpn: peer_qpn,
+                    src_qpn: qpn,
+                    transport,
+                    msg_id,
+                    bytes: 0, // set per frame
+                    msg_len: wr.len,
+                    is_first: false,
+                    is_last: false,
+                    wr_id: wr.wr_id,
+                    imm: wr.imm_data,
+                    rkey: wr.rkey,
+                    raddr: wr.raddr,
+                };
                 let mut handoff = self.clock + Ns(cost);
-                for (i, bytes) in frames.into_iter().enumerate() {
+                if total == 1 {
                     cost += nic.engine_frame_ns;
                     handoff += Ns(nic.engine_frame_ns);
-                    // tx FIFO backpressure (see read_respond)
                     let stall = self.tx_stall(node, handoff);
                     cost += stall;
                     handoff += Ns(stall);
-                    let frame = Frame {
-                        kind,
-                        src: node,
-                        dst: peer_node,
-                        dst_qpn: peer_qpn,
-                        src_qpn: qpn,
-                        transport,
-                        msg_id,
-                        bytes,
-                        msg_len: wr.len,
-                        is_first: i == 0,
-                        is_last: i == total - 1,
-                        wr_id: wr.wr_id,
-                        imm: wr.imm_data,
-                        rkey: wr.rkey,
-                        raddr: wr.raddr,
-                    };
-                    let deliver = self.fabric.send_frame(handoff, node, peer_node, bytes);
+                    let mut frame = template;
+                    frame.bytes = payload_len;
+                    frame.is_first = true;
+                    frame.is_last = true;
+                    let deliver = self.fabric.send_frame(handoff, node, peer_node, frame.bytes);
                     self.events.push(deliver, Event::FrameDelivered(frame));
+                } else {
+                    // Coalesced stream: reserve the seq block the eager
+                    // per-frame pushes would have used, compute every
+                    // delivery time now (port state must advance at issue
+                    // time), and keep ONE event in-queue that replays them.
+                    let base_seq = self.events.reserve_seqs(total);
+                    let handle = self.alloc_stream(template, payload_len, base_seq);
+                    for i in 0..total {
+                        cost += nic.engine_frame_ns;
+                        handoff += Ns(nic.engine_frame_ns);
+                        // tx FIFO backpressure (see read_respond)
+                        let stall = self.tx_stall(node, handoff);
+                        cost += stall;
+                        handoff += Ns(stall);
+                        let bytes = self.fabric.frame_bytes(payload_len, i, total);
+                        let deliver = self.fabric.send_frame(handoff, node, peer_node, bytes);
+                        self.streams[handle as usize].deliveries.push(deliver);
+                    }
+                    let first_at = self.streams[handle as usize].deliveries[0];
+                    self.events
+                        .push_at_seq(first_at, base_seq, Event::FrameStream { stream: handle });
                 }
                 match transport {
                     QpTransport::Rc => {
@@ -678,10 +813,7 @@ impl Sim {
                     QpTransport::Uc | QpTransport::Ud => {
                         // local completion once the message is on the wire
                         if wr.signaled {
-                            let (send_cq, _) = {
-                                let qp = &self.node(node).qps[&qpn.0];
-                                (qp.send_cq, ())
-                            };
+                            let send_cq = self.node(node).qps[qpn.0].send_cq;
                             let cqe = Cqe {
                                 wr_id: wr.wr_id,
                                 kind: CqeKind::SendDone(wr.verb),
@@ -695,7 +827,7 @@ impl Sim {
                             let cqc = self.icm_touch(node, IcmKey::Cqc(send_cq.0));
                             cost += cqc;
                             self.events.push(at + Ns(cqc), Event::CqeDeliver { node, cqn: send_cq, cqe });
-                            self.node_mut(node).qps.get_mut(&qpn.0).unwrap().completed += 1;
+                            self.node_mut(node).qps.get_mut(qpn.0).unwrap().completed += 1;
                         }
                     }
                 }
@@ -725,7 +857,6 @@ impl Sim {
     ) -> u64 {
         let nic = self.cfg.nic;
         let mtu = self.cfg.mtu;
-        let _ = mtu;
         // note: `remaining` is re-encoded in `len` across re-enqueues, so
         // msg_len on response frames tracks bytes-left; completion uses the
         // requester's in-flight record for the true length.
@@ -835,7 +966,7 @@ impl Sim {
                 // retry the whole message after backoff
                 let key = frame.msg_id;
                 if let Some(inf) = self.node_mut(node).inflight.remove(&key) {
-                    if let Some(qp) = self.node_mut(node).qps.get_mut(&inf.qpn.0) {
+                    if let Some(qp) = self.node_mut(node).qps.get_mut(inf.qpn.0) {
                         qp.outstanding = qp.outstanding.saturating_sub(1);
                     }
                     self.events.push(
@@ -870,7 +1001,7 @@ impl Sim {
             let dropped = self.node_mut(node).dropped_msgs.remove(&key);
             if dropped {
                 if frame.transport == QpTransport::Rc {
-                    self.complete_requester_error(frame.clone(), WcStatus::RemoteAccessError);
+                    self.complete_requester_error(*frame, WcStatus::RemoteAccessError);
                 }
                 return cost;
             }
@@ -941,7 +1072,7 @@ impl Sim {
             let recv_cq = self
                 .node(node)
                 .qps
-                .get(&frame.dst_qpn.0)
+                .get(frame.dst_qpn.0)
                 .map(|qp| qp.recv_cq)
                 .unwrap_or(Cqn(0));
             let cqe = Cqe {
@@ -973,13 +1104,13 @@ impl Sim {
     /// recv CQ and the WR if one was available.
     fn consume_recv_wqe(&mut self, node: NodeId, frame: &Frame) -> Option<(Cqn, Option<RecvWr>)> {
         let (srq, recv_cq) = {
-            let qp = self.node(node).qps.get(&frame.dst_qpn.0)?;
+            let qp = self.node(node).qps.get(frame.dst_qpn.0)?;
             (qp.srq, qp.recv_cq)
         };
         let wr = match srq {
-            Some(srqn) => self.node_mut(node).srqs.get_mut(&srqn.0)?.consume(),
+            Some(srqn) => self.node_mut(node).srqs.get_mut(srqn.0)?.consume(),
             None => {
-                let qp = self.node_mut(node).qps.get_mut(&frame.dst_qpn.0)?;
+                let qp = self.node_mut(node).qps.get_mut(frame.dst_qpn.0)?;
                 qp.rq.pop_front()
             }
         };
@@ -1047,7 +1178,7 @@ impl Sim {
             None => return 0, // duplicate/stale ack
         };
         let (send_cq, signaled) = {
-            let qp = self.node_mut(node).qps.get_mut(&inf.qpn.0).unwrap();
+            let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
             qp.outstanding = qp.outstanding.saturating_sub(1);
             qp.completed += 1;
             (qp.send_cq, inf.wr.signaled)
@@ -1083,7 +1214,7 @@ impl Sim {
             None => return 0,
         };
         let send_cq = {
-            let qp = self.node_mut(node).qps.get_mut(&inf.qpn.0).unwrap();
+            let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
             qp.outstanding = qp.outstanding.saturating_sub(1);
             qp.completed += 1;
             qp.send_cq
@@ -1110,7 +1241,8 @@ impl Sim {
         cost
     }
 
-    /// Requester-side error completion (protection/NAK).
+    /// Requester-side error completion (protection/NAK). Takes the frame
+    /// by value — `Frame` is `Copy`, no clone on this path.
     fn complete_requester_error(&mut self, frame: Frame, status: WcStatus) {
         let node = frame.src;
         let inf = match self.node_mut(node).inflight.remove(&frame.msg_id) {
@@ -1118,7 +1250,7 @@ impl Sim {
             None => return,
         };
         let send_cq = {
-            let qp = self.node_mut(node).qps.get_mut(&inf.qpn.0).unwrap();
+            let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
             qp.outstanding = qp.outstanding.saturating_sub(1);
             qp.send_cq
         };

@@ -108,19 +108,32 @@ impl Fabric {
         self.ingress[dst.0 as usize].occupy(first_bit_at_dst, frame_time, wire_bytes)
     }
 
-    /// Split a message into MTU-sized frames (Table 1's framing note).
+    /// Number of MTU-sized frames a `len`-byte message needs (Table 1's
+    /// framing note; a 0-byte message still takes one header frame).
+    #[inline]
+    pub fn frame_count(&self, len: u64) -> u64 {
+        len.div_ceil(self.mtu).max(1)
+    }
+
+    /// Payload bytes of frame `i` of an `n`-frame, `len`-byte message:
+    /// full MTU frames followed by the remainder. With
+    /// [`Fabric::frame_count`] this replaces the per-message `Vec` the
+    /// old `frames_for` allocated on the issue hot path.
+    #[inline]
+    pub fn frame_bytes(&self, len: u64, i: u64, n: u64) -> u64 {
+        if i + 1 < n {
+            self.mtu
+        } else {
+            len - (n - 1) * self.mtu
+        }
+    }
+
+    /// Split a message into MTU-sized frames (allocating convenience form
+    /// of [`Fabric::frame_count`] + [`Fabric::frame_bytes`]; tests and
+    /// cold paths only).
     pub fn frames_for(&self, len: u64) -> Vec<u64> {
-        if len == 0 {
-            return vec![0];
-        }
-        let mut out = Vec::with_capacity((len / self.mtu + 1) as usize);
-        let mut left = len;
-        while left > 0 {
-            let f = left.min(self.mtu);
-            out.push(f);
-            left -= f;
-        }
-        out
+        let n = self.frame_count(len);
+        (0..n).map(|i| self.frame_bytes(len, i, n)).collect()
     }
 
     /// This node's egress-port counters.

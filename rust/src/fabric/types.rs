@@ -93,6 +93,77 @@ pub fn max_msg_size(transport: QpTransport, mtu: u64) -> u64 {
     }
 }
 
+/// Dense id-indexed object table.
+///
+/// QPNs/CQNs/SRQNs are allocated sequentially from 1 and objects are
+/// never destroyed mid-run, so the per-node object tables are plain
+/// vectors indexed by `id - 1` instead of hash maps — the per-frame
+/// QP/CQ/SRQ lookups on the simulator's hot path become a bounds check
+/// and an add, with no hashing and no pointer chase.
+#[derive(Debug)]
+pub struct DenseTable<T> {
+    items: Vec<T>,
+}
+
+impl<T> Default for DenseTable<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> DenseTable<T> {
+    /// Empty table.
+    pub fn new() -> Self {
+        DenseTable { items: Vec::new() }
+    }
+
+    /// The id the next [`DenseTable::insert`] will assign (ids start at 1;
+    /// 0 is reserved as a null id).
+    pub fn next_id(&self) -> u32 {
+        self.items.len() as u32 + 1
+    }
+
+    /// Append an object; returns its id.
+    pub fn insert(&mut self, item: T) -> u32 {
+        self.items.push(item);
+        self.items.len() as u32
+    }
+
+    /// Look up by id (None for 0 or out of range).
+    #[inline]
+    pub fn get(&self, id: u32) -> Option<&T> {
+        self.items.get((id.wrapping_sub(1)) as usize)
+    }
+
+    /// Mutable lookup by id.
+    #[inline]
+    pub fn get_mut(&mut self, id: u32) -> Option<&mut T> {
+        self.items.get_mut((id.wrapping_sub(1)) as usize)
+    }
+
+    /// Objects stored.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when no object was ever inserted.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Iterate the objects in id order.
+    pub fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.items.iter()
+    }
+}
+
+impl<T> std::ops::Index<u32> for DenseTable<T> {
+    type Output = T;
+    fn index(&self, id: u32) -> &T {
+        self.get(id).expect("no object with this id")
+    }
+}
+
 /// Completion status codes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WcStatus {
@@ -132,6 +203,22 @@ mod tests {
         assert_eq!(max_msg_size(QpTransport::Rc, mtu), 1 << 30);
         assert_eq!(max_msg_size(QpTransport::Uc, mtu), 1 << 30);
         assert_eq!(max_msg_size(QpTransport::Ud, mtu), 4096);
+    }
+
+    #[test]
+    fn dense_table_ids_from_one() {
+        let mut t: DenseTable<&str> = DenseTable::new();
+        assert!(t.is_empty());
+        assert_eq!(t.next_id(), 1);
+        assert_eq!(t.insert("a"), 1);
+        assert_eq!(t.insert("b"), 2);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(0), None, "0 is the null id");
+        assert_eq!(t.get(1), Some(&"a"));
+        assert_eq!(t[2], "b");
+        assert_eq!(t.get(3), None);
+        *t.get_mut(1).unwrap() = "c";
+        assert_eq!(t.iter().copied().collect::<Vec<_>>(), vec!["c", "b"]);
     }
 
     #[test]

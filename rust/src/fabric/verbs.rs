@@ -59,7 +59,7 @@ pub fn replenish_rq(
 ) -> usize {
     let mut posted = 0;
     loop {
-        let cur = sim.node(node).qps.get(&qpn.0).map(|q| q.rq.len()).unwrap_or(0);
+        let cur = sim.node(node).qps.get(qpn.0).map(|q| q.rq.len()).unwrap_or(0);
         if cur >= target {
             break;
         }
@@ -91,7 +91,7 @@ pub fn replenish_srq(
 ) -> usize {
     let mut posted = 0;
     loop {
-        let cur = sim.node(node).srqs.get(&srqn.0).map(|s| s.posted()).unwrap_or(0);
+        let cur = sim.node(node).srqs.get(srqn.0).map(|s| s.posted()).unwrap_or(0);
         if cur >= target {
             break;
         }
@@ -191,7 +191,7 @@ mod tests {
             cq1,
             cq1,
         );
-        let qp = &sim.node(NodeId(0)).qps[&pair.a.1 .0];
+        let qp = &sim.node(NodeId(0)).qps[pair.a.1 .0];
         assert_eq!(qp.state, crate::fabric::qp::QpState::Rts);
         assert_eq!(qp.peer, Some((NodeId(1), pair.b.1)));
     }
@@ -201,7 +201,7 @@ mod tests {
         let mut sim = Sim::new(FabricConfig::default());
         let cq = sim.create_cq(NodeId(0), 64);
         let qpn = sim.create_qp(NodeId(0), QpTransport::Rc, cq, cq);
-        sim.node_mut(NodeId(0)).qps.get_mut(&qpn.0).unwrap().to_rtr();
+        sim.node_mut(NodeId(0)).qps.get_mut(qpn.0).unwrap().to_rtr();
         let mr = reg_buffer(&mut sim, NodeId(0), 1 << 20);
         let mut next = 0;
         let posted = replenish_rq(&mut sim, NodeId(0), qpn, &mr, 4096, 32, &mut next);
@@ -218,6 +218,6 @@ mod tests {
         let mr = reg_buffer(&mut sim, NodeId(0), 1 << 20);
         let mut next = 0;
         assert_eq!(replenish_srq(&mut sim, NodeId(0), srqn, &mr, 4096, 64, &mut next), 64);
-        assert_eq!(sim.node(NodeId(0)).srqs[&srqn.0].posted(), 64);
+        assert_eq!(sim.node(NodeId(0)).srqs[srqn.0].posted(), 64);
     }
 }

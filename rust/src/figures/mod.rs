@@ -342,10 +342,12 @@ pub fn print_fig8(rows: &[Fig78Row]) -> String {
 
 // ------------------------------------------------------------------- Fig 9
 
-/// Connection counts swept in the Fig-9 scale experiment (2 → 8192; the
+/// Connection counts swept in the Fig-9 scale experiment (2 → 32768; the
 /// destination fan-out caps at [`FIG9_MAX_SERVERS`], so the ICM knee sits
-/// where destinations pass the cache's RC budget).
-pub const FIG9_CONNS: &[usize] = &[2, 64, 256, 512, 1024, 2048, 4096, 8192];
+/// where destinations pass the cache's RC budget). The 16k/32k points
+/// became affordable with the timing-wheel/dense-state event loop (PR 3).
+pub const FIG9_CONNS: &[usize] =
+    &[2, 64, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768];
 
 /// Destination-daemon cap of the Fig-9 sweep.
 pub const FIG9_MAX_SERVERS: usize = 1024;
@@ -361,7 +363,10 @@ pub struct Fig9Row {
     pub rc_only: ScaleRun,
 }
 
-fn fig9_cfg(conns: usize, budget: Budget, rc_only: bool) -> ScaleCfg {
+/// The Fig-9 [`ScaleCfg`] for one sweep point (shared with the `bench
+/// fig9` wall-clock benchmark so BENCH_PR3.json times exactly the runs
+/// the figure makes).
+pub fn fig9_cfg(conns: usize, budget: Budget, rc_only: bool) -> ScaleCfg {
     let mut cfg = ScaleCfg::default();
     cfg.conns = conns;
     cfg.max_servers = FIG9_MAX_SERVERS;
@@ -373,7 +378,8 @@ fn fig9_cfg(conns: usize, budget: Budget, rc_only: bool) -> ScaleCfg {
     cfg
 }
 
-fn fig9_conns(budget: Budget) -> Vec<usize> {
+/// The Fig-9 connection counts for a budget (shared with `bench fig9`).
+pub fn fig9_conns(budget: Budget) -> Vec<usize> {
     match budget {
         Budget::Quick => vec![2, 256, 2048],
         Budget::Full => FIG9_CONNS.to_vec(),

@@ -9,6 +9,10 @@
 //!   ablation; `--tsv DIR` also writes TSVs.
 //! * `bench hotpath` — the hot-path microbenchmarks (SPSC ring, doorbell,
 //!   ICM cache, daemon submit) with JSON results.
+//! * `bench simstep` — raw discrete-event-scheduler throughput
+//!   (events/sec) on a daemon-free QP storm.
+//! * `bench fig9 [--out FILE]` — wall-clock of the Fig-9 scale sweep per
+//!   connection count, written as `BENCH_PR3.json` (the CI perf artifact).
 //! * `bench` — one scenario run with explicit knobs (`--system
 //!   raas|naive|locked`, `--conns`, `--size`, …), JSON result on stdout.
 //! * `demo {kv,rpc,inference}` — the example applications end-to-end over
@@ -54,7 +58,8 @@ fn main() {
             eprintln!(
                 "usage: rdmavisor <fig|figures|bench|demo|serve|init-config|info> [--help]\n\
                  \n  fig --id 1|5|6|7|8|9 [--all] [--quick] [--rc-only] [--tsv DIR]   (JSON on stdout)\
-                 \n  bench hotpath [--quick]                            (JSON on stdout)\
+                 \n  bench hotpath|simstep [--quick]                    (JSON on stdout)\
+                 \n  bench fig9 [--quick] [--out FILE]    (fig-9 wall clock -> BENCH_PR3.json)\
                  \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
                  [--window N] [--duration-ms MS] [--q N] [--config FILE]\
                  \n  demo kv|rpc|inference [--gets N] [--calls N] [--requests N]\
@@ -209,9 +214,11 @@ fn figures_cmd(args: &Args) {
 // ----------------------------------------------------------------- `bench`
 
 fn bench_cmd(args: &Args) {
-    if args.positional.first().map(|s| s.as_str()) == Some("hotpath") {
-        bench_hotpath(args);
-        return;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("hotpath") => return bench_hotpath(args),
+        Some("simstep") => return bench_simstep(args),
+        Some("fig9") => return bench_fig9(args),
+        _ => {}
     }
     let mut cfg = match args.get("config") {
         Some(path) => config::from_file(path).expect("config").scenario,
@@ -347,6 +354,115 @@ fn bench_hotpath(args: &Args) {
         ("results", Json::Arr(results)),
     ]);
     println!("{}", doc.to_string());
+}
+
+/// Measure raw discrete-event-scheduler throughput: a QP-fanout WRITE
+/// storm with no daemon layer, so the number is the event loop + engine +
+/// port model + dense context tables and nothing else. Shared by `bench
+/// simstep` and the `simstep` section of `bench fig9`/BENCH_PR3.json.
+fn simstep_measure(quick: bool) -> Json {
+    use rdmavisor::fabric::time::Ns;
+    use rdmavisor::workload::scenarios::event_storm;
+
+    let (pairs, window, msg, sim_ms, reps) =
+        if quick { (64, 8, 4096, 2, 2) } else { (256, 8, 4096, 10, 3) };
+    let mut best_eps = 0.0f64;
+    let mut events = 0u64;
+    let mut total_wall = 0.0f64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        events = event_storm(pairs, window, msg, Ns::from_ms(sim_ms));
+        let w = t0.elapsed().as_secs_f64();
+        total_wall += w;
+        best_eps = best_eps.max(events as f64 / w.max(1e-9));
+    }
+    eprintln!(
+        "simstep: {pairs} QPs × window {window} × {msg} B for {sim_ms} sim-ms -> \
+         {events} events, best {best_eps:.0} events/s"
+    );
+    obj(vec![
+        ("pairs", Json::Num(pairs as f64)),
+        ("window", Json::Num(window as f64)),
+        ("msg_bytes", Json::Num(msg as f64)),
+        ("sim_ms", Json::Num(sim_ms as f64)),
+        ("events", Json::Num(events as f64)),
+        ("events_per_sec", num(best_eps)),
+        ("wall_ms", num(total_wall * 1e3)),
+    ])
+}
+
+/// `bench simstep` — the scheduler-throughput perf trajectory future
+/// scheduler changes regress against (see [`simstep_measure`]).
+fn bench_simstep(args: &Args) {
+    let quick = args.flag("quick") || std::env::var("RDMAVISOR_BENCH_QUICK").is_ok();
+    let result = simstep_measure(quick);
+    let doc = obj(vec![
+        ("command", Json::Str("bench".into())),
+        ("mode", Json::Str("simstep".into())),
+        ("result", result),
+    ]);
+    println!("{}", doc.to_string());
+}
+
+/// `bench fig9` — wall-clock of the Fig-9 scale sweep, per connection
+/// count (adaptive + rc-only, exactly the runs `fig --id 9` makes).
+/// Writes the result to `--out` (default BENCH_PR3.json) so CI archives a
+/// perf trajectory for future PRs to regress against.
+fn bench_fig9(args: &Args) {
+    use rdmavisor::workload::scenarios::scale_send;
+
+    let b = budget(args);
+    let out_path = args.str_or("out", "BENCH_PR3.json");
+    let mut points = Vec::new();
+    let mut total_wall = 0.0f64;
+    let mut total_events = 0u64;
+    for conns in figures::fig9_conns(b) {
+        let t0 = Instant::now();
+        let adaptive = scale_send(&figures::fig9_cfg(conns, b, false));
+        let rc_only = scale_send(&figures::fig9_cfg(conns, b, true));
+        let wall = t0.elapsed().as_secs_f64();
+        let events = adaptive.events + rc_only.events;
+        total_wall += wall;
+        total_events += events;
+        let eps = events as f64 / wall.max(1e-9);
+        eprintln!(
+            "fig9 conns={conns:>6}: {:>9} events in {:>8.1} ms  ({:>11.0} events/s)",
+            events,
+            wall * 1e3,
+            eps
+        );
+        points.push(obj(vec![
+            ("conns", Json::Num(conns as f64)),
+            ("servers", Json::Num(adaptive.servers as f64)),
+            ("wall_ms", num(wall * 1e3)),
+            ("events", Json::Num(events as f64)),
+            ("events_per_sec", num(eps)),
+            ("adaptive_gbps", num(adaptive.gbps)),
+            ("rc_only_gbps", num(rc_only.gbps)),
+        ]));
+    }
+    let budget_name = if b == Budget::Quick { "quick" } else { "full" };
+    let doc = obj(vec![
+        ("command", Json::Str("bench".into())),
+        ("mode", Json::Str("fig9".into())),
+        ("budget", Json::Str(budget_name.to_string())),
+        ("points", Json::Arr(points)),
+        ("total_wall_ms", num(total_wall * 1e3)),
+        ("total_events", Json::Num(total_events as f64)),
+        (
+            "events_per_sec",
+            num(total_events as f64 / total_wall.max(1e-9)),
+        ),
+        // raw scheduler throughput rides along so BENCH_PR3.json is one
+        // self-contained perf artifact (no external JSON merging)
+        ("simstep", simstep_measure(b == Budget::Quick)),
+    ]);
+    let text = doc.to_string();
+    match std::fs::write(&out_path, &text) {
+        Ok(()) => eprintln!("wrote {out_path}"),
+        Err(e) => eprintln!("write {out_path} failed: {e}"),
+    }
+    println!("{text}");
 }
 
 // ------------------------------------------------------------------ `demo`

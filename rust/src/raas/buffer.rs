@@ -35,9 +35,31 @@ struct SlabClass {
     slot_bytes: u64,
     base: u64,
     free: Vec<u32>,
+    /// One bit per slot, set while leased: O(1) double-free/double-lease
+    /// detection (replaces the O(n) `free.contains` scan `release` used
+    /// to run under debug asserts).
+    leased: Vec<u64>,
     total: u32,
     /// High-water mark of simultaneously leased slots.
     pub hwm: u32,
+}
+
+impl SlabClass {
+    #[inline]
+    fn leased_bit(&self, slot: u32) -> bool {
+        self.leased[(slot >> 6) as usize] & (1u64 << (slot & 63)) != 0
+    }
+
+    #[inline]
+    fn set_leased(&mut self, slot: u32, on: bool) {
+        let w = (slot >> 6) as usize;
+        let b = 1u64 << (slot & 63);
+        if on {
+            self.leased[w] |= b;
+        } else {
+            self.leased[w] &= !b;
+        }
+    }
 }
 
 /// The daemon's registered buffer pool.
@@ -74,6 +96,7 @@ impl BufferPool {
                 slot_bytes,
                 base,
                 free: (0..count).rev().collect(),
+                leased: vec![0; count.div_ceil(64) as usize],
                 total: count,
                 hwm: 0,
             });
@@ -94,6 +117,8 @@ impl BufferPool {
         for class in ci..self.classes.len() {
             let c = &mut self.classes[class];
             if let Some(slot) = c.free.pop() {
+                debug_assert!(!c.leased_bit(slot), "slot leased while on the free list");
+                c.set_leased(slot, true);
                 let used = c.total - c.free.len() as u32;
                 c.hwm = c.hwm.max(used);
                 self.leased_bytes += c.slot_bytes;
@@ -110,11 +135,14 @@ impl BufferPool {
         None
     }
 
-    /// Return a lease to its slab class.
+    /// Return a lease to its slab class. Double frees are caught by the
+    /// per-slot leased bitmap in O(1) (the old debug assert scanned the
+    /// whole free list).
     pub fn release(&mut self, lease: Lease) {
         let c = &mut self.classes[lease.class];
         debug_assert!(lease.slot < c.total);
-        debug_assert!(!c.free.contains(&lease.slot), "double free");
+        debug_assert!(c.leased_bit(lease.slot), "double free");
+        c.set_leased(lease.slot, false);
         c.free.push(lease.slot);
         self.leased_bytes -= c.slot_bytes;
     }

@@ -197,6 +197,8 @@ pub struct Daemon {
     accept_queues: HashMap<(u32, u16), VecDeque<Vqpn>>,
     next_seq: u32,
     srq_wr_seq: u64,
+    /// Poller scratch buffer reused across pumps (zero-alloc CQ drain).
+    cqe_buf: Vec<Cqe>,
 }
 
 impl Daemon {
@@ -245,6 +247,7 @@ impl Daemon {
             accept_queues: HashMap::new(),
             next_seq: 0,
             srq_wr_seq,
+            cqe_buf: Vec::new(),
             cfg,
         }
     }
@@ -258,7 +261,7 @@ impl Daemon {
         seq: &mut u64,
     ) {
         loop {
-            let posted = sim.node(node).srqs[&srq.0].posted();
+            let posted = sim.node(node).srqs[srq.0].posted();
             if posted >= cfg.srq_capacity {
                 break;
             }
@@ -598,26 +601,31 @@ impl Daemon {
             }
         }
         let _ = self.flush_ud(sim);
-        // Poller: send-side completions
+        // Poller: drain both CQs through the reusable scratch buffer (the
+        // buffer is moved out while CQE handlers run, then handed back —
+        // no allocation once it reaches its high-water capacity)
+        let mut buf = std::mem::take(&mut self.cqe_buf);
+        // send-side completions
         loop {
-            let cqes = sim.poll_cq(self.node, self.send_cq, 64);
-            if cqes.is_empty() {
+            buf.clear();
+            if sim.poll_cq_into(self.node, self.send_cq, 64, &mut buf) == 0 {
                 break;
             }
-            for cqe in cqes {
+            for cqe in buf.drain(..) {
                 self.on_send_cqe(sim, cqe);
             }
         }
-        // Poller: receive-side (two-sided arrivals)
+        // receive-side (two-sided arrivals)
         loop {
-            let cqes = sim.poll_cq(self.node, self.recv_cq, 64);
-            if cqes.is_empty() {
+            buf.clear();
+            if sim.poll_cq_into(self.node, self.recv_cq, 64, &mut buf) == 0 {
                 break;
             }
-            for cqe in cqes {
+            for cqe in buf.drain(..) {
                 self.on_recv_cqe(sim, cqe);
             }
         }
+        self.cqe_buf = buf;
         // SRQ refill
         Self::fill_srq(sim, self.node, self.srq, &mut self.pool, &self.cfg, &mut self.srq_wr_seq);
         self.telemetry.pool_pressure = self.pool.pressure();
@@ -1074,7 +1082,7 @@ mod tests {
         assert_eq!(daemons[0].pool.leased_bytes, 0);
         // the datagram rode the UD QP, not the shared RC QP
         let ud = daemons[0].ud_qpn();
-        assert_eq!(sim.node(NodeId(0)).qps[&ud.0].posted_send, 1);
+        assert_eq!(sim.node(NodeId(0)).qps[ud.0].posted_send, 1);
     }
 
     #[test]

@@ -166,15 +166,16 @@ pub fn naive_random_read(cfg: &ScenarioCfg) -> RunStats {
     // reset cache stats after connection churn
     sim.node_mut(NodeId(0)).cache.reset_stats();
 
+    let mut notes: Vec<Notification> = Vec::new();
     while sim.now() < cfg.duration {
         win.maybe_start(&sim);
-        let Some(notes) = sim.step() else { break };
-        let mut any_cqe = false;
-        for note in notes {
-            if matches!(note, Notification::CqeReady { node, .. } if node == NodeId(0)) {
-                any_cqe = true;
-            }
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
         }
+        let any_cqe = notes
+            .iter()
+            .any(|n| matches!(n, Notification::CqeReady { node, .. } if *node == NodeId(0)));
         if any_cqe {
             for idx in sys.poll(&mut sim) {
                 win.record_latency(sim.now().saturating_sub(posted_at[idx]).0);
@@ -246,9 +247,13 @@ pub fn raas_random_read_with_daemon(cfg: &ScenarioCfg, dcfg: DaemonConfig) -> Ru
     daemons[0].pump(&mut sim);
     sim.node_mut(NodeId(0)).cache.reset_stats();
 
+    let mut notes: Vec<Notification> = Vec::new();
     while sim.now() < cfg.duration {
         win.maybe_start(&sim);
-        let Some(notes) = sim.step() else { break };
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
+        }
         let client_cqe = notes.iter().any(
             |n| matches!(n, Notification::CqeReady { node, .. } if *node == NodeId(0)),
         );
@@ -312,10 +317,14 @@ pub fn locked_random_read(cfg: &ScenarioCfg, q: usize) -> RunStats {
     }
     sim.node_mut(NodeId(0)).cache.reset_stats();
 
+    let mut notes: Vec<Notification> = Vec::new();
     while sim.now() < cfg.duration {
         win.maybe_start(&sim);
-        let Some(notes) = sim.step() else { break };
-        for note in notes {
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
+        }
+        for note in notes.drain(..) {
             match note {
                 Notification::Timer { token } => {
                     let t = token as usize;
@@ -424,6 +433,9 @@ pub struct ScaleRun {
     pub rc_dests: usize,
     /// Destinations on UD at the end of the run.
     pub ud_dests: usize,
+    /// Simulator events processed over the whole run (deterministic; the
+    /// wall-clock benches divide by this for events/sec).
+    pub events: u64,
 }
 
 /// Client daemon config for the scale sweep: a 4 KB-slab pool deep
@@ -510,6 +522,7 @@ pub fn scale_send(cfg: &ScaleCfg) -> ScaleRun {
     sim.node_mut(NodeId(0)).cache.reset_stats();
 
     let mut server_nodes: Vec<u32> = Vec::new();
+    let mut notes: Vec<Notification> = Vec::new();
     // ICM counters at window start, so the reported hit rate covers the
     // measured window only (warmup excluded, like bytes/ops)
     let mut icm0: Option<(u64, u64)> = None;
@@ -519,7 +532,10 @@ pub fn scale_send(cfg: &ScaleCfg) -> ScaleRun {
             let c = &sim.node(NodeId(0)).cache;
             icm0 = Some((c.hits, c.misses));
         }
-        let Some(notes) = sim.step() else { break };
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
+        }
         let mut client_cqe = false;
         server_nodes.clear();
         for n in &notes {
@@ -579,7 +595,82 @@ pub fn scale_send(cfg: &ScaleCfg) -> ScaleRun {
         migrations_to_ud: daemons[0].migrate.to_ud,
         rc_dests: rc + draining,
         ud_dests: ud,
+        events: sim.steps_processed(),
     }
+}
+
+/// Scheduler microbench workload for `bench simstep`: `pairs` RC QPs on
+/// one client streaming closed-loop WRITEs of `msg_bytes` at `window`
+/// outstanding each, across the default 4-node fabric. No daemon layer —
+/// this isolates the event loop + engine + port model + dense context
+/// tables. Returns events processed (deterministic; callers time the
+/// call and divide for events/sec).
+pub fn event_storm(pairs: usize, window: u32, msg_bytes: u64, duration: Ns) -> u64 {
+    use crate::fabric::mr::Access;
+    use crate::fabric::verbs as fv;
+    use crate::fabric::wqe::SendWr;
+
+    let mut fabric = FabricConfig::default();
+    fabric.max_outstanding = window as usize;
+    fabric.sq_depth = 4 * window as usize + 16;
+    let servers = fabric.nodes - 1;
+    let mut sim = Sim::new(fabric);
+    let cq0 = sim.create_cq(NodeId(0), 1 << 16);
+    let local = sim.reg_mr(NodeId(0), 256 << 20, Access::REMOTE_RW, true);
+
+    let mut qpns = Vec::with_capacity(pairs);
+    let mut remotes = Vec::with_capacity(pairs);
+    for i in 0..pairs {
+        let server = NodeId(1 + (i % servers) as u32);
+        let server_cq = sim.create_cq(server, 4096);
+        let pair = fv::create_connected_pair(
+            &mut sim,
+            crate::fabric::types::QpTransport::Rc,
+            NodeId(0),
+            server,
+            cq0,
+            cq0,
+            server_cq,
+            server_cq,
+        );
+        let remote = sim.reg_mr(server, 16 << 20, Access::REMOTE_RW, true);
+        qpns.push(pair.a.1);
+        remotes.push(remote);
+    }
+    let post = |sim: &mut Sim, qpns: &[crate::fabric::types::Qpn], i: usize| {
+        let wr = SendWr::write(
+            i as u64,
+            msg_bytes,
+            local.key,
+            local.addr + (i as u64 * msg_bytes) % (128 << 20),
+            remotes[i].key,
+            remotes[i].addr,
+        );
+        let _ = sim.post_send(NodeId(0), qpns[i], wr);
+    };
+    for i in 0..pairs {
+        for _ in 0..window {
+            post(&mut sim, &qpns, i);
+        }
+    }
+    let mut notes: Vec<Notification> = Vec::new();
+    let mut cqes: Vec<crate::fabric::wqe::Cqe> = Vec::new();
+    while sim.now() < duration {
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
+        }
+        for n in notes.drain(..) {
+            if matches!(n, Notification::CqeReady { node, .. } if node == NodeId(0)) {
+                cqes.clear();
+                sim.poll_cq_into(NodeId(0), cq0, 256, &mut cqes);
+                for cqe in &cqes {
+                    post(&mut sim, &qpns, cqe.wr_id as usize % pairs);
+                }
+            }
+        }
+    }
+    sim.steps_processed()
 }
 
 /// Fig 1: verbs-level single-pair throughput sweep for one (transport,
@@ -648,15 +739,19 @@ pub fn verbs_sweep_point(
     let warmup = Ns(duration.0 / 5);
     let mut started = false;
     let (mut bytes0, mut t0) = (0u64, Ns::ZERO);
+    let mut notes: Vec<Notification> = Vec::new();
     while sim.now() < duration {
         if !started && sim.now() >= warmup {
             started = true;
             bytes0 = sim.total_rx_data_bytes();
             t0 = sim.now();
         }
-        let Some(notes) = sim.step() else { break };
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
+        }
         let mut repost = 0;
-        for n in notes {
+        for n in notes.drain(..) {
             match n {
                 Notification::CqeReady { node, cqn } if node == NodeId(0) && cqn == cq0 => {
                     repost += sim.poll_cq(NodeId(0), cq0, 64).len();

@@ -59,6 +59,21 @@ fn fig9_replays_byte_identically() {
     assert_fig_deterministic(9);
 }
 
+#[test]
+fn fig9_rc_only_replays_byte_identically() {
+    // the `fig --id 9 --rc-only` CLI path (ablation series alone), at the
+    // same quick budget the CI smoke uses
+    let run = || {
+        let rows = figures::fig9_rc_only(Budget::Quick);
+        format!(
+            "{}\n{}",
+            figures::fig9_series(&rows).to_json().to_string(),
+            figures::print_fig9(&rows)
+        )
+    };
+    assert_eq!(run(), run(), "fig --id 9 --rc-only differed between runs");
+}
+
 // ------------------------------------------------------ scenario drivers
 
 fn tiny_scenario(conns: usize) -> ScenarioCfg {

@@ -254,7 +254,7 @@ fn srq_shared_across_qps() {
 
     let recv = sim.poll_cq(NodeId(1), cq1, 16);
     assert_eq!(recv.len(), 2);
-    assert_eq!(sim.node(NodeId(1)).srqs[&srq.0].consumed, 2);
+    assert_eq!(sim.node(NodeId(1)).srqs[srq.0].consumed, 2);
     let imms: Vec<_> = recv.iter().filter_map(|c| c.imm_data).collect();
     assert!(imms.contains(&11) && imms.contains(&22));
 }
@@ -302,7 +302,7 @@ fn window_limits_outstanding_reads() {
     }
     // at any instant, outstanding ≤ 2
     loop {
-        let out = sim.node(NodeId(0)).qps[&pair.a.1 .0].outstanding;
+        let out = sim.node(NodeId(0)).qps[pair.a.1 .0].outstanding;
         assert!(out <= 2, "outstanding={out}");
         if sim.step().is_none() {
             break;

@@ -212,8 +212,8 @@ fn srq_driven_below_watermark_refills_and_pool_exhaustion_backpressures() {
     let app = daemons[0].register_app();
     let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
 
-    let srqn = *sim.node(NodeId(1)).srqs.keys().next().unwrap();
-    assert_eq!(sim.node(NodeId(1)).srqs[&srqn].posted(), 8, "pre-filled");
+    let srqn = sim.node(NodeId(1)).srqs.iter().next().unwrap().srqn.0;
+    assert_eq!(sim.node(NodeId(1)).srqs[srqn].posted(), 8, "pre-filled");
 
     // burst of 6 sends: consumes 6 receiver WQEs => below the watermark
     for i in 0..6 {
@@ -223,15 +223,15 @@ fn srq_driven_below_watermark_refills_and_pool_exhaustion_backpressures() {
     }
     daemons[0].pump(&mut sim);
     while sim.step().is_some() {}
-    let srq = &sim.node(NodeId(1)).srqs[&srqn];
+    let srq = &sim.node(NodeId(1)).srqs[srqn];
     assert!(srq.consumed >= 6, "consumed={}", srq.consumed);
     assert!(srq.starved_events > 0, "burst must dip below the watermark");
     assert!(srq.posted() < 4, "drained before the Poller refills");
 
     // receiver pump refills the SRQ back to capacity from the pool
     daemons[1].pump(&mut sim);
-    assert_eq!(sim.node(NodeId(1)).srqs[&srqn].posted(), 8, "refilled");
-    assert!(!sim.node(NodeId(1)).srqs[&srqn].is_starving());
+    assert_eq!(sim.node(NodeId(1)).srqs[srqn].posted(), 8, "refilled");
+    assert!(!sim.node(NodeId(1)).srqs[srqn].is_starving());
 
     // drain the sender's completions so the first burst's leases return
     settle(&mut sim, &mut daemons);
@@ -283,7 +283,7 @@ fn srq_shared_across_all_apps_on_host() {
 
     // both apps' messages consumed WQEs from the ONE host-wide SRQ
     assert_eq!(sim.node(NodeId(1)).srqs.len(), 1);
-    assert!(sim.node(NodeId(1)).srqs.values().next().unwrap().consumed >= 2);
+    assert!(sim.node(NodeId(1)).srqs.iter().next().unwrap().consumed >= 2);
     assert!(matches!(
         daemons[1].recv_zero_copy(&mut sim, s1),
         Some(Delivery::Message { len: 100, .. })

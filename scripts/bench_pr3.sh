@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Produce BENCH_PR3.json: the fig-9 wall-clock benchmark (events/sec and
+# wall clock per connection count) with the raw scheduler throughput
+# embedded under its "simstep" key — one self-contained perf artifact.
+# CI runs this with --quick and uploads BENCH_PR3.json so every future PR
+# has a perf trajectory to regress against; run it with no arguments on a
+# quiet machine for the full-sweep numbers quoted in README.md.
+#
+#   scripts/bench_pr3.sh [--quick] [OUT.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+quick=""
+out="BENCH_PR3.json"
+for arg in "$@"; do
+    case "$arg" in
+        --quick) quick="--quick" ;;
+        *) out="$arg" ;;
+    esac
+done
+
+cargo build --release
+cargo run --quiet --release -- bench fig9 $quick --out "$out" >/dev/null
+
+echo "wrote $out"

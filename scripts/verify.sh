@@ -73,4 +73,11 @@ case "$out9" in
     *) echo "FAIL: unexpected fig 9 output: ${out9:0:120}" >&2; exit 1 ;;
 esac
 
+echo "== smoke: bench simstep (DES scheduler throughput) =="
+outs="$(cargo run --quiet --release -- bench simstep --quick 2>/dev/null)"
+case "$outs" in
+    *'"mode":"simstep"'*'"events_per_sec"'*) echo "ok: bench simstep printed events/sec JSON" ;;
+    *) echo "FAIL: unexpected bench simstep output: ${outs:0:120}" >&2; exit 1 ;;
+esac
+
 echo "ALL CHECKS PASSED"
