@@ -61,6 +61,13 @@ impl Cq {
         k
     }
 
+    /// Drop every unpolled completion (node soft-restart): work that
+    /// finished but was never observed is gone, which is why the daemon
+    /// needs its stale-lease reclaim.
+    pub fn clear(&mut self) {
+        self.queue.clear();
+    }
+
     /// Completions waiting to be polled.
     pub fn len(&self) -> usize {
         self.queue.len()

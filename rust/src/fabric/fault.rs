@@ -1,0 +1,353 @@
+//! Deterministic fault injection: lossy links, burst loss, delay jitter,
+//! link flaps, node restarts.
+//!
+//! The simulated fabric is lossless by construction ([`super::switchfab`]),
+//! which leaves RDMA's hardest operational edges — lost frames, RC retry
+//! exhaustion, UD silent drops tearing holes in reassembly — untested and
+//! unreachable. A [`FaultConfig`] describes a *seeded* fault plan; the
+//! simulator compiles it into a [`FaultState`] it consults once per frame
+//! at delivery time (the moment the frame would be handed to the
+//! destination NIC). All randomness comes from a dedicated xoshiro stream
+//! forked off the plan seed, and every draw happens at a point whose order
+//! is fixed by the (deterministic) event timeline — so identical seeds
+//! replay identical fault timelines, bit for bit.
+//!
+//! ### The null-plan identity
+//!
+//! A plan with zero drop probability, zero jitter, no flaps and no
+//! restarts is **null**: `Sim::install_faults` (see [`super::sim::Sim`])
+//! refuses to install it, no RNG is ever created, no retransmission timer
+//! is ever armed, and the simulator is byte-identical to one that never
+//! heard of this module. `fig --id 10` at loss 0 rides this path — that
+//! is the determinism gate's loss-0 clause.
+//!
+//! ### What each fault means
+//!
+//! * **iid drop** (`drop_p`) — the frame is discarded at the destination
+//!   port (transmitted, then lost in the switch/wire; egress and ingress
+//!   serialization already happened, which is what real loss looks like
+//!   to the sender's pacing).
+//! * **burst loss** (`burst_p`, `burst_len`) — an iid drop escalates into
+//!   an episode: the next `burst_len`-drawn frames on that *link* are
+//!   dropped too (correlated loss, the pattern that defeats naive
+//!   single-retry schemes).
+//! * **delay jitter** (`jitter_p`, `jitter_ns`) — the frame is held for a
+//!   drawn extra delay and re-delivered (switch queueing excursions; can
+//!   reorder frames, which the RC go-back-N discipline and the UD
+//!   reassembler's gap-discard both have to survive).
+//! * **link flap** ([`Flap`]) — a directed link drops *everything* inside
+//!   a time window (cable pull / LAG rebalance). Flap windows outlasting
+//!   the RC retry budget are how `RetryExceeded` completions are
+//!   reliably produced.
+//! * **node restart** (`restarts`) — at the given instant the node's NIC
+//!   soft-restarts: engine queue, SQ/RQ/SRQ/CQ contents and in-flight
+//!   requester state vanish (connection state survives — the daemon is
+//!   assumed to re-establish its QPs out of band). Posted work that died
+//!   silently is exactly what the daemon's stale-lease reclaim exists for.
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+use super::time::Ns;
+use super::types::NodeId;
+
+/// One directed link-down window: every frame from `src` to `dst` with a
+/// delivery time in `[from, until)` is dropped.
+#[derive(Clone, Copy, Debug)]
+pub struct Flap {
+    /// Transmitting node of the affected direction.
+    pub src: NodeId,
+    /// Receiving node of the affected direction.
+    pub dst: NodeId,
+    /// Window start (inclusive).
+    pub from: Ns,
+    /// Window end (exclusive).
+    pub until: Ns,
+}
+
+/// A seeded fault plan. See the module docs for the semantics of each
+/// knob; `..Default::default()` gives an all-zero (null) plan to build on.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Seed of the fault layer's private RNG stream (split off the
+    /// scenario seed by the caller so workload draws and fault draws
+    /// never interleave).
+    pub seed: u64,
+    /// Per-frame iid drop probability at delivery.
+    pub drop_p: f64,
+    /// Probability that an iid drop starts a burst episode on its link.
+    pub burst_p: f64,
+    /// Burst episode length range `[lo, hi]`, in frames, drawn uniformly.
+    pub burst_len: (u32, u32),
+    /// Per-frame probability of extra delivery delay.
+    pub jitter_p: f64,
+    /// Extra delay range `[lo, hi]` ns, drawn uniformly.
+    pub jitter_ns: (u64, u64),
+    /// Directed link-down windows.
+    pub flaps: Vec<Flap>,
+    /// Node soft-restart instants: `(node id, virtual time ns)`.
+    pub restarts: Vec<(u32, u64)>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            drop_p: 0.0,
+            burst_p: 0.0,
+            burst_len: (2, 8),
+            jitter_p: 0.0,
+            jitter_ns: (200, 2000),
+            flaps: Vec::new(),
+            restarts: Vec::new(),
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when this plan can never perturb the timeline: installing it
+    /// is a no-op and the simulator stays byte-identical to the lossless
+    /// build (the loss-0 determinism clause).
+    pub fn is_null(&self) -> bool {
+        self.drop_p <= 0.0
+            && self.jitter_p <= 0.0
+            && self.flaps.is_empty()
+            && self.restarts.is_empty()
+    }
+}
+
+/// What the fault layer decided for one frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Discard the frame (it was transmitted; it never arrives).
+    Drop,
+    /// Hold the frame for this extra delay, then deliver it.
+    Delay(Ns),
+}
+
+/// Aggregate fault counters (diagnostics + the fig-10 row).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    /// Frames discarded, all causes.
+    pub frames_dropped: u64,
+    /// Of which: iid draws.
+    pub drops_iid: u64,
+    /// Of which: burst-episode continuations.
+    pub drops_burst: u64,
+    /// Of which: link-flap windows.
+    pub drops_flap: u64,
+    /// Frames held back by delay jitter.
+    pub frames_delayed: u64,
+    /// Node soft-restarts executed.
+    pub restarts: u64,
+}
+
+/// The compiled, running fault plan. Owned by the simulator; consulted
+/// once per frame at delivery time.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    cfg: FaultConfig,
+    rng: Rng,
+    /// Remaining forced drops per directed link `(src, dst)` — the live
+    /// burst episodes. Keyed access only (no iteration), so the map's
+    /// order can never leak into the timeline.
+    burst_left: HashMap<(u32, u32), u32>,
+    /// Counters.
+    pub stats: FaultStats,
+}
+
+impl FaultState {
+    /// Compile a (non-null) plan. The RNG is forked from the plan seed
+    /// through a domain constant so a scenario reusing its workload seed
+    /// still gets an independent stream.
+    pub fn new(cfg: FaultConfig) -> Self {
+        let rng = Rng::new(cfg.seed ^ 0xFA11_7EC7_0000_0001);
+        FaultState { cfg, rng, burst_left: HashMap::new(), stats: FaultStats::default() }
+    }
+
+    /// The plan this state was compiled from.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Link-flap check alone — no RNG involved, so it is also re-applied
+    /// to jitter-*redelivered* frames (whose probabilistic draws already
+    /// happened): a flap window is a property of the link at the moment
+    /// of delivery, and a delayed frame landing inside one must die too.
+    pub fn flap_drop(&mut self, now: Ns, src: NodeId, dst: NodeId) -> bool {
+        for f in &self.cfg.flaps {
+            if f.src == src && f.dst == dst && now >= f.from && now < f.until {
+                self.stats.frames_dropped += 1;
+                self.stats.drops_flap += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Decide the fate of one frame delivered on `src → dst` at `now`.
+    /// `None` means deliver normally. Draw order per frame is fixed
+    /// (flap check → burst check → drop draw → jitter draw), so the
+    /// stream stays aligned across replays.
+    pub fn action(&mut self, now: Ns, src: NodeId, dst: NodeId) -> Option<FaultAction> {
+        // 1. link-flap windows: no RNG involved
+        if self.flap_drop(now, src, dst) {
+            return Some(FaultAction::Drop);
+        }
+        // 2. live burst episode on this link
+        let link = (src.0, dst.0);
+        if let Some(left) = self.burst_left.get_mut(&link) {
+            *left -= 1;
+            if *left == 0 {
+                self.burst_left.remove(&link);
+            }
+            self.stats.frames_dropped += 1;
+            self.stats.drops_burst += 1;
+            return Some(FaultAction::Drop);
+        }
+        // 3. iid drop, possibly escalating into a burst
+        if self.cfg.drop_p > 0.0 && self.rng.chance(self.cfg.drop_p) {
+            if self.cfg.burst_p > 0.0 && self.rng.chance(self.cfg.burst_p) {
+                let (lo, hi) = self.cfg.burst_len;
+                let len = lo + self.rng.gen_range((hi - lo + 1) as u64) as u32;
+                if len > 0 {
+                    self.burst_left.insert(link, len);
+                }
+            }
+            self.stats.frames_dropped += 1;
+            self.stats.drops_iid += 1;
+            return Some(FaultAction::Drop);
+        }
+        // 4. delay jitter
+        if self.cfg.jitter_p > 0.0 && self.rng.chance(self.cfg.jitter_p) {
+            let (lo, hi) = self.cfg.jitter_ns;
+            let extra = lo + self.rng.gen_range(hi.saturating_sub(lo).max(1));
+            self.stats.frames_delayed += 1;
+            return Some(FaultAction::Delay(Ns(extra)));
+        }
+        None
+    }
+
+    /// Record an executed node restart (the simulator performs the actual
+    /// state clearing; this keeps the tally in one place).
+    pub fn note_restart(&mut self) {
+        self.stats.restarts += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lossy(seed: u64, p: f64) -> FaultState {
+        FaultState::new(FaultConfig { seed, drop_p: p, ..FaultConfig::default() })
+    }
+
+    #[test]
+    fn null_plan_detection() {
+        assert!(FaultConfig::default().is_null());
+        assert!(!FaultConfig { drop_p: 0.01, ..FaultConfig::default() }.is_null());
+        assert!(!FaultConfig { jitter_p: 0.5, ..FaultConfig::default() }.is_null());
+        let f = Flap { src: NodeId(0), dst: NodeId(1), from: Ns(0), until: Ns(1) };
+        assert!(!FaultConfig { flaps: vec![f], ..FaultConfig::default() }.is_null());
+        assert!(!FaultConfig { restarts: vec![(0, 5)], ..FaultConfig::default() }.is_null());
+        // burst knobs alone never fire without a drop probability
+        assert!(FaultConfig { burst_p: 1.0, ..FaultConfig::default() }.is_null());
+    }
+
+    #[test]
+    fn same_seed_same_fault_timeline() {
+        let mut a = lossy(7, 0.3);
+        let mut b = lossy(7, 0.3);
+        for i in 0..10_000u64 {
+            let t = Ns(i * 100);
+            assert_eq!(
+                a.action(t, NodeId(0), NodeId(1)),
+                b.action(t, NodeId(0), NodeId(1)),
+                "diverged at frame {i}"
+            );
+        }
+        assert_eq!(a.stats.frames_dropped, b.stats.frames_dropped);
+    }
+
+    #[test]
+    fn drop_rate_tracks_probability() {
+        let mut s = lossy(3, 0.1);
+        let n = 50_000u64;
+        for i in 0..n {
+            let _ = s.action(Ns(i), NodeId(0), NodeId(1));
+        }
+        let rate = s.stats.frames_dropped as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn flap_window_drops_only_its_link_and_time() {
+        let mut s = FaultState::new(FaultConfig {
+            seed: 1,
+            flaps: vec![Flap { src: NodeId(0), dst: NodeId(1), from: Ns(100), until: Ns(200) }],
+            ..FaultConfig::default()
+        });
+        assert_eq!(s.action(Ns(99), NodeId(0), NodeId(1)), None);
+        assert_eq!(s.action(Ns(100), NodeId(0), NodeId(1)), Some(FaultAction::Drop));
+        assert_eq!(s.action(Ns(199), NodeId(0), NodeId(1)), Some(FaultAction::Drop));
+        assert_eq!(s.action(Ns(200), NodeId(0), NodeId(1)), None);
+        // the reverse direction is unaffected
+        assert_eq!(s.action(Ns(150), NodeId(1), NodeId(0)), None);
+        assert_eq!(s.stats.drops_flap, 2);
+    }
+
+    #[test]
+    fn bursts_drop_consecutive_frames_on_one_link() {
+        let mut s = FaultState::new(FaultConfig {
+            seed: 11,
+            drop_p: 0.05,
+            burst_p: 1.0,
+            burst_len: (3, 3),
+            ..FaultConfig::default()
+        });
+        // drive until an iid drop starts a burst, then the next 3 frames
+        // on that link must drop while the other link is untouched
+        let mut i = 0u64;
+        loop {
+            i += 1;
+            assert!(i < 10_000, "no drop in 10k frames at p=0.05?");
+            if s.action(Ns(i), NodeId(0), NodeId(1)) == Some(FaultAction::Drop) {
+                break;
+            }
+        }
+        // the episode is per-link: a frame on another link may take its
+        // own iid draw, but never a burst continuation
+        let mut other = s.clone();
+        let _ = other.action(Ns(i + 1), NodeId(2), NodeId(3));
+        assert_eq!(other.stats.drops_burst, 0, "burst leaked to another link");
+        for k in 0..3 {
+            assert_eq!(
+                s.action(Ns(i + 1 + k), NodeId(0), NodeId(1)),
+                Some(FaultAction::Drop),
+                "burst frame {k} not dropped"
+            );
+        }
+        assert_eq!(s.stats.drops_burst, 3);
+    }
+
+    #[test]
+    fn jitter_delays_within_range() {
+        let mut s = FaultState::new(FaultConfig {
+            seed: 5,
+            jitter_p: 1.0,
+            jitter_ns: (100, 400),
+            ..FaultConfig::default()
+        });
+        for i in 0..1000u64 {
+            match s.action(Ns(i), NodeId(0), NodeId(1)) {
+                Some(FaultAction::Delay(d)) => {
+                    assert!((100..=400).contains(&d.0), "delay {d} out of range")
+                }
+                other => panic!("expected delay, got {other:?}"),
+            }
+        }
+        assert_eq!(s.stats.frames_delayed, 1000);
+    }
+}

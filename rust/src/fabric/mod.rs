@@ -24,6 +24,7 @@
 
 pub mod time;
 pub mod event;
+pub mod fault;
 pub mod types;
 pub mod mr;
 pub mod wqe;

@@ -96,6 +96,14 @@ pub struct Qp {
     /// (doorbell coalescing — replaces the per-node hash set of armed
     /// QPNs with a flag in the dense QP slot).
     pub issue_armed: bool,
+    /// Requester-side RC go-back-N: sequence the next issued message gets
+    /// (assigned at first issue, reused on retransmission). Advances in
+    /// issue order, which is SQ order.
+    pub next_msg_seq: u64,
+    /// Responder-side RC go-back-N: the only message sequence this QP
+    /// accepts next. Lower = duplicate (re-ACK, don't re-deliver);
+    /// higher = discard (the requester will retransmit in order).
+    pub expected_msg_seq: u64,
     /// Lifetime counters (metrics / tests).
     pub posted_send: u64,
     /// Lifetime receive WRs posted.
@@ -130,6 +138,8 @@ impl Qp {
             max_outstanding,
             outstanding: 0,
             issue_armed: false,
+            next_msg_seq: 0,
+            expected_msg_seq: 0,
             posted_send: 0,
             posted_recv: 0,
             completed: 0,
@@ -201,6 +211,19 @@ impl Qp {
     pub fn can_issue(&self) -> bool {
         !self.sq.is_empty()
             && (self.transport != QpTransport::Rc || self.outstanding < self.max_outstanding)
+    }
+
+    /// Node soft-restart ([`crate::fabric::fault`]): queued-but-unissued
+    /// work and the requester window vanish; connection state (peer
+    /// binding, RTS, go-back-N sequence counters) survives — the daemon
+    /// is assumed to re-establish its QPs out of band, and keeping the
+    /// sequence counters is what lets in-flight peers recover by
+    /// retransmission instead of deadlocking the accept discipline.
+    pub fn reset_soft(&mut self) {
+        self.sq.clear();
+        self.rq.clear();
+        self.outstanding = 0;
+        self.issue_armed = false;
     }
 
     /// Memory footprint of the QP (ledger): SQ+RQ rings + on-NIC context.

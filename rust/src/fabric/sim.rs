@@ -32,6 +32,7 @@ use super::cache::{IcmCache, IcmKey};
 use super::cq::Cq;
 use super::cpu::CpuLedger;
 use super::event::EventQueue;
+use super::fault::{FaultAction, FaultConfig, FaultState, FaultStats};
 use super::mr::{Access, MemoryRegion, MrTable};
 use super::nic::{Frame, FrameKind, NicConfig, WorkItem, CTRL_FRAME_BYTES};
 use super::qp::{PostError, Qp};
@@ -101,6 +102,15 @@ enum Event {
     RetrySend { node: NodeId, qpn: Qpn, wr: SendWr },
     /// Driver-scheduled timer (lock-grant wakeups, open-loop arrivals…).
     AppTimer { token: u64 },
+    /// A frame held back by injected delay jitter lands here; it already
+    /// passed the fault gate and must not be re-drawn.
+    FrameRedelivered(Frame),
+    /// RC requester ACK timeout for `(msg_id, attempt)` — armed only
+    /// under an installed fault plan. Stale timers (message acked, or a
+    /// newer attempt in flight) no-op.
+    AckTimeout { node: NodeId, qpn: Qpn, msg_id: u64, attempt: u32 },
+    /// Fault-plan node soft-restart.
+    NodeRestart { node: NodeId },
 }
 
 /// Requester-side multi-frame message in flight: the template frame plus
@@ -126,10 +136,22 @@ pub enum Notification {
     Timer { token: u64 },
 }
 
-/// Per-message requester-side bookkeeping (ACK matching, RNR retry).
+/// Per-message requester-side bookkeeping (ACK matching, RNR retry,
+/// go-back-N retransmission).
 struct InFlight {
     wr: SendWr,
     qpn: Qpn,
+    /// Go-back-N sequence assigned at first issue; retransmissions reuse
+    /// it (the responder's dedup key).
+    msg_seq: u64,
+    /// Transmissions so far minus one. An [`Event::AckTimeout`] only acts
+    /// when its recorded attempt still matches.
+    attempt: u32,
+    /// Fault mode, READs only: which response-frame indices have arrived
+    /// (bitmap for responses of <= 64 frames, plain count above that) —
+    /// the last response frame only completes the READ when the response
+    /// arrived with no holes.
+    resp_seen: u64,
 }
 
 /// One machine.
@@ -157,12 +179,35 @@ pub struct NodeState {
     /// Responder-side recv WQE held from first to last frame of a message,
     /// keyed by (src node, src qpn, msg id).
     pending_recv: HashMap<(u32, u32, u64), RecvWr>,
+    /// Fault mode only: data frames of a multi-frame RC message seen so
+    /// far, keyed like `pending_recv`. The last frame only completes the
+    /// message when every frame of one attempt arrived — a lost MIDDLE
+    /// frame must not ACK a message with a hole in it.
+    rc_frames_seen: HashMap<(u32, u32, u64), u64>,
     /// Messages dropped mid-flight (RNR/protection) — suppress completion.
     dropped_msgs: std::collections::HashSet<(u32, u32, u64)>,
     /// Counters.
     pub protection_errors: u64,
     /// RNR NAKs this node's NIC generated.
     pub rnr_naks_sent: u64,
+    /// RC message retransmissions this node's NIC performed (requester
+    /// side; go-back-N under an installed fault plan).
+    pub retransmits: u64,
+    /// RC messages that exhausted their retry budget and completed with
+    /// [`WcStatus::RetryExceeded`].
+    pub retry_exceeded: u64,
+    /// RC data frames discarded by the responder's go-back-N discipline
+    /// (sequence ahead of the expected one — an earlier message is lost).
+    pub gbn_discards: u64,
+    /// RC last-frames that arrived with earlier frames of their attempt
+    /// missing: the message was NOT delivered or ACKed (the requester
+    /// retransmits the whole message instead).
+    pub rc_incomplete_msgs: u64,
+    /// Duplicate RC messages re-ACKed without re-delivery (the original
+    /// ACK was lost; exactly-once delivery held).
+    pub gbn_dup_acks: u64,
+    /// Fault-plan soft-restarts executed on this node.
+    pub restarts: u64,
     /// Payload bytes of data-bearing frames processed by this NIC's rx
     /// path — the smooth wire-level goodput counter the scenario drivers
     /// measure (message-completion counters clump and bias short windows).
@@ -185,9 +230,16 @@ impl NodeState {
             next_msg_id: 1,
             inflight: HashMap::new(),
             pending_recv: HashMap::new(),
+            rc_frames_seen: HashMap::new(),
             dropped_msgs: std::collections::HashSet::new(),
             protection_errors: 0,
             rnr_naks_sent: 0,
+            retransmits: 0,
+            retry_exceeded: 0,
+            gbn_discards: 0,
+            rc_incomplete_msgs: 0,
+            gbn_dup_acks: 0,
+            restarts: 0,
             rx_data_bytes: 0,
         }
     }
@@ -226,6 +278,11 @@ pub struct Sim {
     /// Pooled multi-frame message streams (slab + free list).
     streams: Vec<FrameStreamState>,
     free_streams: Vec<u32>,
+    /// Installed fault plan, if any. `None` (the default, and the result
+    /// of installing a null plan) keeps every fault hook dormant: no RNG,
+    /// no retransmission timers, no go-back-N gating — the lossless
+    /// simulator, byte for byte.
+    faults: Option<FaultState>,
 }
 
 impl Sim {
@@ -246,7 +303,39 @@ impl Sim {
             steps: 0,
             streams: Vec::new(),
             free_streams: Vec::new(),
+            faults: None,
         }
+    }
+
+    /// Install a seeded fault plan ([`super::fault`]). A null plan (zero
+    /// rates, no flaps, no restarts) installs nothing, which is the
+    /// loss-0 byte-identity guarantee. Must be called before any traffic
+    /// is driven: the RC go-back-N discipline assumes sequence counters
+    /// and the fault gate switch on together.
+    pub fn install_faults(&mut self, cfg: FaultConfig) {
+        if cfg.is_null() {
+            return;
+        }
+        assert!(
+            self.steps == 0 && self.events.is_empty(),
+            "install_faults must run before the first event"
+        );
+        for &(node, at) in &cfg.restarts {
+            debug_assert!((node as usize) < self.nodes.len(), "restart of unknown node");
+            self.events
+                .push(Ns(at).max(self.clock), Event::NodeRestart { node: NodeId(node) });
+        }
+        self.faults = Some(FaultState::new(cfg));
+    }
+
+    /// Is a (non-null) fault plan installed?
+    pub fn faults_active(&self) -> bool {
+        self.faults.is_some()
+    }
+
+    /// Snapshot of the fault layer's counters (None without a plan).
+    pub fn fault_stats(&self) -> Option<FaultStats> {
+        self.faults.as_ref().map(|f| f.stats)
     }
 
     /// Current virtual time.
@@ -501,10 +590,11 @@ impl Sim {
         self.steps += 1;
         match ev {
             Event::EngineCheck(node) => self.on_engine_check(node),
-            Event::FrameDelivered(frame) => self.on_frame_delivered(frame),
+            Event::FrameDelivered(frame) => self.deliver_frame(frame, true),
+            Event::FrameRedelivered(frame) => self.deliver_frame(frame, false),
             Event::FrameStream { stream } => {
                 let frame = self.next_stream_frame(stream);
-                self.on_frame_delivered(frame);
+                self.deliver_frame(frame, true);
             }
             Event::CqeDeliver { node, cqn, cqe } => {
                 if let Some(cq) = self.node_mut(node).cqs.get_mut(cqn.0) {
@@ -520,6 +610,10 @@ impl Sim {
                 self.rearm_issue(node, qpn);
             }
             Event::AppTimer { token } => notes.push(Notification::Timer { token }),
+            Event::AckTimeout { node, qpn, msg_id, attempt } => {
+                self.on_ack_timeout(node, qpn, msg_id, attempt)
+            }
+            Event::NodeRestart { node } => self.on_node_restart(node),
         }
         true
     }
@@ -588,9 +682,17 @@ impl Sim {
         match item {
             WorkItem::IssueFromQp(qpn) => self.issue_from_qp(node, qpn),
             WorkItem::RxFrame(frame) => self.rx_frame(node, frame),
-            WorkItem::ReadRespond { requester, requester_qpn, responder_qpn, msg_id, len, wr_id } => {
-                self.read_respond(node, requester, requester_qpn, responder_qpn, msg_id, len, wr_id)
-            }
+            WorkItem::ReadRespond {
+                requester,
+                requester_qpn,
+                responder_qpn,
+                msg_id,
+                len,
+                wr_id,
+                idx,
+            } => self
+                .read_respond(node, requester, requester_qpn, responder_qpn, msg_id, len, wr_id, idx),
+            WorkItem::Retransmit { qpn, msg_id } => self.retransmit_msg(node, qpn, msg_id),
         }
     }
 
@@ -652,6 +754,7 @@ impl Sim {
             let mut frame = st.template;
             frame.is_first = i == 0;
             frame.is_last = i + 1 == n;
+            frame.frame_idx = i;
             // same sizing the delivery schedule was computed from
             frame.bytes = self.fabric.frame_bytes(st.payload_len, i, n);
             st.next += 1;
@@ -681,7 +784,7 @@ impl Sim {
         let nic = self.cfg.nic;
 
         // Pull the next WR if the window allows.
-        let (wr, peer, transport) = {
+        let (wr, peer, transport, msg_seq) = {
             let n = self.node_mut(node);
             let qp = match n.qps.get_mut(qpn.0) {
                 Some(qp) => qp,
@@ -696,10 +799,15 @@ impl Sim {
                 QpTransport::Ud => wr.ud_dest,
                 _ => qp.peer,
             };
-            if qp.transport == QpTransport::Rc {
+            let msg_seq = if qp.transport == QpTransport::Rc {
                 qp.outstanding += 1;
-            }
-            (wr, peer, qp.transport)
+                let s = qp.next_msg_seq;
+                qp.next_msg_seq += 1;
+                s
+            } else {
+                0
+            };
+            (wr, peer, qp.transport, msg_seq)
         };
         let (peer_node, peer_qpn) = match peer {
             Some(p) => p,
@@ -731,6 +839,8 @@ impl Sim {
                     src_qpn: qpn,
                     transport,
                     msg_id,
+                    msg_seq,
+                    frame_idx: 0,
                     bytes: CTRL_FRAME_BYTES,
                     msg_len: wr.len,
                     is_first: true,
@@ -743,7 +853,11 @@ impl Sim {
                 cost += nic.engine_frame_ns;
                 let deliver = self.fabric.send_frame(self.clock + Ns(cost), node, peer_node, frame.bytes);
                 self.events.push(deliver, Event::FrameDelivered(frame));
-                self.node_mut(node).inflight.insert(msg_id, InFlight { wr, qpn });
+                let eta = deliver + self.read_response_eta(wr.len);
+                self.node_mut(node)
+                    .inflight
+                    .insert(msg_id, InFlight { wr, qpn, msg_seq, attempt: 0, resp_seen: 0 });
+                self.arm_rc_timer(node, qpn, msg_id, 0, eta);
             }
             Verb::Write | Verb::Send => {
                 let kind = if wr.verb == Verb::Write {
@@ -761,6 +875,8 @@ impl Sim {
                     src_qpn: qpn,
                     transport,
                     msg_id,
+                    msg_seq,
+                    frame_idx: 0, // set per frame (stream replay / single)
                     bytes: 0, // set per frame
                     msg_len: wr.len,
                     is_first: false,
@@ -771,6 +887,7 @@ impl Sim {
                     raddr: wr.raddr,
                 };
                 let mut handoff = self.clock + Ns(cost);
+                let last_deliver;
                 if total == 1 {
                     cost += nic.engine_frame_ns;
                     handoff += Ns(nic.engine_frame_ns);
@@ -783,6 +900,7 @@ impl Sim {
                     frame.is_last = true;
                     let deliver = self.fabric.send_frame(handoff, node, peer_node, frame.bytes);
                     self.events.push(deliver, Event::FrameDelivered(frame));
+                    last_deliver = deliver;
                 } else {
                     // Coalesced stream: reserve the seq block the eager
                     // per-frame pushes would have used, compute every
@@ -802,13 +920,17 @@ impl Sim {
                         self.streams[handle as usize].deliveries.push(deliver);
                     }
                     let first_at = self.streams[handle as usize].deliveries[0];
+                    last_deliver = *self.streams[handle as usize].deliveries.last().unwrap();
                     self.events
                         .push_at_seq(first_at, base_seq, Event::FrameStream { stream: handle });
                 }
                 match transport {
                     QpTransport::Rc => {
                         // completion on ACK
-                        self.node_mut(node).inflight.insert(msg_id, InFlight { wr, qpn });
+                        self.node_mut(node)
+                            .inflight
+                            .insert(msg_id, InFlight { wr, qpn, msg_seq, attempt: 0, resp_seen: 0 });
+                        self.arm_rc_timer(node, qpn, msg_id, 0, last_deliver);
                     }
                     QpTransport::Uc | QpTransport::Ud => {
                         // local completion once the message is on the wire
@@ -854,6 +976,7 @@ impl Sim {
         msg_id: u64,
         remaining: u64,
         wr_id: u64,
+        idx: u64,
     ) -> u64 {
         let nic = self.cfg.nic;
         let mtu = self.cfg.mtu;
@@ -877,6 +1000,8 @@ impl Sim {
             src_qpn: responder_qpn,
             transport: QpTransport::Rc,
             msg_id,
+            msg_seq: 0,
+            frame_idx: idx,
             bytes,
             msg_len: total_len,
             is_first: false,
@@ -897,6 +1022,7 @@ impl Sim {
                 msg_id,
                 len: left,
                 wr_id,
+                idx: idx + 1,
             });
         }
         cost
@@ -904,7 +1030,38 @@ impl Sim {
 
     // ---------------------------------------------------------- rx path
 
-    fn on_frame_delivered(&mut self, frame: Frame) {
+    /// Hand a frame to its destination NIC. `check_faults` is false only
+    /// for re-deliveries of jitter-delayed frames, which already passed
+    /// the gate — every frame consults the fault plan exactly once, so
+    /// the RNG stream stays aligned across replays.
+    fn deliver_frame(&mut self, frame: Frame, check_faults: bool) {
+        if check_faults {
+            if let Some(f) = self.faults.as_mut() {
+                match f.action(self.clock, frame.src, frame.dst) {
+                    Some(FaultAction::Drop) => {
+                        // transmitted, then lost in the switch/wire: both
+                        // ports already serialized it, only delivery (and
+                        // the goodput counter) is suppressed
+                        self.fabric.note_drop(frame.dst);
+                        return;
+                    }
+                    Some(FaultAction::Delay(extra)) => {
+                        let at = self.clock + extra;
+                        self.events.push(at, Event::FrameRedelivered(frame));
+                        return;
+                    }
+                    None => {}
+                }
+            }
+        } else if let Some(f) = self.faults.as_mut() {
+            // jitter-redelivered frame: its probabilistic draws already
+            // happened, but a flap window is a property of the link at
+            // delivery time — a delayed frame landing inside one dies too
+            if f.flap_drop(self.clock, frame.src, frame.dst) {
+                self.fabric.note_drop(frame.dst);
+                return;
+            }
+        }
         let dst = frame.dst;
         if frame.kind.carries_data() {
             // wire-level goodput counter: counted at delivery, not at engine
@@ -923,6 +1080,25 @@ impl Sim {
 
         match frame.kind {
             FrameKind::ReadReq => {
+                // go-back-N: a READ request occupies a slot in its QP's
+                // ordered message stream like any other RC message. Ahead
+                // of the expected sequence → discard (an earlier message
+                // is missing; the requester retransmits in order). Behind
+                // it → a duplicate request whose response was lost:
+                // re-execute (idempotent; the requester dedups by msg_id).
+                if self.faults.is_some() {
+                    let expected = self
+                        .node(node)
+                        .qps
+                        .get(frame.dst_qpn.0)
+                        .map(|q| q.expected_msg_seq)
+                        .unwrap_or(0);
+                    if frame.msg_seq > expected {
+                        self.node_mut(node).gbn_discards += 1;
+                        return cost;
+                    }
+                    self.gbn_advance(node, &frame);
+                }
                 // validate remote access then start streaming the response
                 let ok = frame
                     .rkey
@@ -946,10 +1122,14 @@ impl Sim {
                     msg_id: frame.msg_id,
                     len: frame.msg_len,
                     wr_id: frame.wr_id,
+                    idx: 0,
                 });
             }
             FrameKind::ReadResp => {
-                if frame.is_last {
+                // under faults, the last frame only completes the READ
+                // when every response frame actually arrived
+                let complete = self.read_resp_complete(node, &frame);
+                if frame.is_last && complete {
                     cost += self.complete_read(node, &frame);
                 }
             }
@@ -963,9 +1143,27 @@ impl Sim {
                 cost += self.rx_ack(node, &frame);
             }
             FrameKind::RnrNak => {
-                // retry the whole message after backoff
                 let key = frame.msg_id;
-                if let Some(inf) = self.node_mut(node).inflight.remove(&key) {
+                if self.faults.is_some() {
+                    // fault mode: retransmit IN PLACE after the backoff —
+                    // same msg_id and msg_seq, through the ACK-timeout
+                    // machinery (counts against the retry budget). A
+                    // re-post with a fresh sequence would leave a hole
+                    // the responder's go-back-N discipline waits on
+                    // forever.
+                    let n = self.node_mut(node);
+                    if let Some(inf) = n.inflight.get(&key) {
+                        let (qpn, attempt) = (inf.qpn, inf.attempt);
+                        self.events.push(
+                            self.clock + Ns(nic.rnr_retry_ns),
+                            Event::AckTimeout { node, qpn, msg_id: key, attempt },
+                        );
+                    }
+                } else if let Some(inf) = self.node_mut(node).inflight.remove(&key) {
+                    // lossless mode: retry the whole message after backoff
+                    // by re-posting it at the head of the SQ (it re-issues
+                    // with a fresh msg_id — fine when nothing is gated on
+                    // sequence numbers)
                     if let Some(qp) = self.node_mut(node).qps.get_mut(inf.qpn.0) {
                         qp.outstanding = qp.outstanding.saturating_sub(1);
                     }
@@ -982,6 +1180,11 @@ impl Sim {
     fn rx_write_data(&mut self, node: NodeId, frame: &Frame) -> u64 {
         let nic = self.cfg.nic;
         let mut cost = 0;
+        let (gcost, proceed) = self.gbn_admit(node, frame);
+        if !proceed {
+            return gcost;
+        }
+        let attempt_complete = self.rc_attempt_complete(node, frame);
         let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
         if frame.is_first {
             let ok = frame
@@ -1000,9 +1203,18 @@ impl Sim {
         if frame.is_last {
             let dropped = self.node_mut(node).dropped_msgs.remove(&key);
             if dropped {
+                // protection error: the requester completes in error, so
+                // this message's go-back-N slot is closed for good
+                self.gbn_advance(node, frame);
                 if frame.transport == QpTransport::Rc {
                     self.complete_requester_error(*frame, WcStatus::RemoteAccessError);
                 }
+                return cost;
+            }
+            if !attempt_complete {
+                // a non-terminal frame of this attempt was lost: no
+                // delivery, no ACK, no sequence advance — the requester's
+                // timer retransmits the whole message
                 return cost;
             }
             // write-with-imm consumes a receive WQE and raises a CQE
@@ -1029,6 +1241,7 @@ impl Sim {
                 }
             }
             if frame.transport == QpTransport::Rc {
+                self.gbn_advance(node, frame);
                 cost += self.send_ack(node, frame);
             } else {
                 // UC: delivered without ACK — count at the receiver
@@ -1042,27 +1255,49 @@ impl Sim {
     fn rx_send_data(&mut self, node: NodeId, frame: &Frame) -> u64 {
         let nic = self.cfg.nic;
         let mut cost = 0;
+        let (gcost, proceed) = self.gbn_admit(node, frame);
+        if !proceed {
+            return gcost;
+        }
+        let attempt_complete = self.rc_attempt_complete(node, frame);
         let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
         if frame.is_first {
-            match self.consume_recv_wqe_wr(node, frame) {
-                Some(wr) => {
-                    // local buffer translation for the landing buffer
-                    if let Some(block) = self.node(node).mrs.mtt_block(wr.lkey, wr.laddr) {
-                        cost += self.icm_touch(node, IcmKey::Mtt(wr.lkey.0, block));
+            // retransmitted first frames must be idempotent: clear any
+            // stale drop marker from a prior attempt, and never consume a
+            // second recv WQE for a message already mid-assembly
+            let already = if self.faults.is_some() {
+                self.node_mut(node).dropped_msgs.remove(&key);
+                // WQE already held from a prior attempt? then skip consume
+                self.node(node).pending_recv.contains_key(&key)
+            } else {
+                false
+            };
+            if !already {
+                match self.consume_recv_wqe_wr(node, frame) {
+                    Some(wr) => {
+                        // local buffer translation for the landing buffer
+                        if let Some(block) = self.node(node).mrs.mtt_block(wr.lkey, wr.laddr) {
+                            cost += self.icm_touch(node, IcmKey::Mtt(wr.lkey.0, block));
+                        }
+                        self.node_mut(node).pending_recv.insert(key, wr);
                     }
-                    self.node_mut(node).pending_recv.insert(key, wr);
-                }
-                None => {
-                    self.node_mut(node).dropped_msgs.insert(key);
-                    if frame.transport == QpTransport::Rc {
-                        self.send_rnr_nak(node, frame);
+                    None => {
+                        self.node_mut(node).dropped_msgs.insert(key);
+                        if frame.transport == QpTransport::Rc {
+                            self.send_rnr_nak(node, frame);
+                        }
+                        // UC/UD: silent drop
                     }
-                    // UC/UD: silent drop
                 }
             }
         }
         if frame.is_last {
             if self.node_mut(node).dropped_msgs.remove(&key) {
+                return cost;
+            }
+            if !attempt_complete {
+                // hole in this attempt (a middle frame was lost): keep
+                // the held recv WQE and wait for the retransmission
                 return cost;
             }
             let wr = match self.node_mut(node).pending_recv.remove(&key) {
@@ -1090,6 +1325,7 @@ impl Sim {
                 Event::CqeDeliver { node, cqn: recv_cq, cqe },
             );
             if frame.transport == QpTransport::Rc {
+                self.gbn_advance(node, frame);
                 cost += self.send_ack(node, frame);
             } else {
                 // UC/UD: delivered without ACK — count at the receiver
@@ -1132,6 +1368,8 @@ impl Sim {
             src_qpn: frame.dst_qpn,
             transport: QpTransport::Rc,
             msg_id: frame.msg_id,
+            msg_seq: frame.msg_seq,
+            frame_idx: 0,
             bytes: CTRL_FRAME_BYTES,
             msg_len: frame.msg_len,
             is_first: true,
@@ -1156,6 +1394,8 @@ impl Sim {
             src_qpn: frame.dst_qpn,
             transport: QpTransport::Rc,
             msg_id: frame.msg_id,
+            msg_seq: frame.msg_seq,
+            frame_idx: 0,
             bytes: CTRL_FRAME_BYTES,
             msg_len: frame.msg_len,
             is_first: true,
@@ -1266,5 +1506,370 @@ impl Sim {
         let at = self.clock + Ns(self.cfg.nic.cqe_delay_ns);
         self.events.push(at, Event::CqeDeliver { node, cqn: send_cq, cqe });
         self.rearm_issue(node, inf.qpn);
+    }
+
+    // -------------------------------------- fault layer: RC go-back-N
+
+    /// Responder-side go-back-N admission for an RC data frame: `(extra
+    /// cost, may proceed)`. Dormant (always admit) without a fault plan —
+    /// on the lossless fabric frames cannot arrive out of sequence.
+    fn gbn_admit(&mut self, node: NodeId, frame: &Frame) -> (u64, bool) {
+        if self.faults.is_none() || frame.transport != QpTransport::Rc {
+            return (0, true);
+        }
+        let expected = self
+            .node(node)
+            .qps
+            .get(frame.dst_qpn.0)
+            .map(|q| q.expected_msg_seq)
+            .unwrap_or(0);
+        if frame.msg_seq > expected {
+            // an earlier message is missing: discard; the requester
+            // retransmits everything from the hole, in order
+            self.node_mut(node).gbn_discards += 1;
+            return (0, false);
+        }
+        if frame.msg_seq < expected {
+            // duplicate of a message this QP already consumed — its ACK
+            // was evidently lost. Re-ACK the last frame so the requester
+            // can complete; NEVER re-deliver (exactly-once).
+            let mut cost = 0;
+            if frame.is_last {
+                self.node_mut(node).gbn_dup_acks += 1;
+                cost += self.send_ack(node, frame);
+            }
+            return (cost, false);
+        }
+        (0, true)
+    }
+
+    /// An accepted RC message closed its go-back-N slot: the QP expects
+    /// the next sequence. No-op without a fault plan (counters would be
+    /// meaningless there — the lossless RNR path re-issues under fresh
+    /// sequences).
+    fn gbn_advance(&mut self, node: NodeId, frame: &Frame) {
+        if self.faults.is_none() || frame.transport != QpTransport::Rc {
+            return;
+        }
+        if let Some(qp) = self.node_mut(node).qps.get_mut(frame.dst_qpn.0) {
+            qp.expected_msg_seq = qp.expected_msg_seq.max(frame.msg_seq + 1);
+        }
+    }
+
+    /// Fault mode, RC multi-frame data messages: record one *admitted*
+    /// frame (call after [`Sim::gbn_admit`]) and, on the last frame,
+    /// report whether the message arrived with no holes — a lost MIDDLE
+    /// frame must not let the last frame deliver/ACK a message missing
+    /// bytes. Coverage is a per-index bitmap for messages of ≤ 64 frames
+    /// (every workload here; dropped duplicates stay idempotent) and a
+    /// plain frame count above that. The tracker is consumed on the last
+    /// frame either way; an incomplete attempt leaves the requester's
+    /// timer to retransmit the whole message.
+    fn rc_attempt_complete(&mut self, node: NodeId, frame: &Frame) -> bool {
+        if self.faults.is_none() || frame.transport != QpTransport::Rc {
+            return true;
+        }
+        let total = self.fabric.frame_count(frame.msg_len.max(1));
+        if total <= 1 {
+            return true;
+        }
+        let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
+        let n = self.node_mut(node);
+        let seen = {
+            let e = n.rc_frames_seen.entry(key).or_insert(0);
+            if total <= 64 {
+                *e |= 1u64 << frame.frame_idx.min(63);
+            } else {
+                *e += 1;
+            }
+            *e
+        };
+        if !frame.is_last {
+            return true;
+        }
+        n.rc_frames_seen.remove(&key);
+        let complete = if total <= 64 {
+            let mask = if total == 64 { u64::MAX } else { (1u64 << total) - 1 };
+            seen & mask == mask
+        } else {
+            seen >= total
+        };
+        if !complete {
+            n.rc_incomplete_msgs += 1;
+        }
+        complete
+    }
+
+    /// Fault mode: record one ReadResp frame against its in-flight READ;
+    /// on the last frame, true iff the response arrived complete (same
+    /// bitmap/count scheme as [`Sim::rc_attempt_complete`], accumulated
+    /// in the in-flight entry so duplicate response streams union up).
+    fn read_resp_complete(&mut self, node: NodeId, frame: &Frame) -> bool {
+        if self.faults.is_none() {
+            return true;
+        }
+        let len = match self.node(node).inflight.get(&frame.msg_id) {
+            Some(inf) => inf.wr.len.max(1),
+            None => return true, // stale duplicate; complete_read will no-op
+        };
+        let total = self.fabric.frame_count(len);
+        if total <= 1 {
+            return true;
+        }
+        let n = self.node_mut(node);
+        let complete = {
+            let inf = n.inflight.get_mut(&frame.msg_id).expect("checked above");
+            if total <= 64 {
+                inf.resp_seen |= 1u64 << frame.frame_idx.min(63);
+            } else {
+                inf.resp_seen += 1;
+            }
+            if !frame.is_last {
+                return true;
+            }
+            if total <= 64 {
+                let mask = if total == 64 { u64::MAX } else { (1u64 << total) - 1 };
+                inf.resp_seen & mask == mask
+            } else {
+                inf.resp_seen >= total
+            }
+        };
+        if !complete {
+            n.rc_incomplete_msgs += 1;
+        }
+        complete
+    }
+
+    /// Schedule the ACK timeout for `attempt` of an in-flight RC message.
+    /// `expected_done` is when its last frame lands (for READs: when the
+    /// response should have finished streaming); the margin backs off
+    /// exponentially per attempt, capped at 8×. Dormant without faults.
+    fn arm_rc_timer(&mut self, node: NodeId, qpn: Qpn, msg_id: u64, attempt: u32, expected_done: Ns) {
+        if self.faults.is_none() {
+            return;
+        }
+        let margin = self.cfg.nic.retransmit_timeout_ns << attempt.min(3);
+        let at = expected_done + Ns(2 * self.cfg.switch_latency_ns + margin);
+        self.events.push(at, Event::AckTimeout { node, qpn, msg_id, attempt });
+    }
+
+    /// Rough time for a READ response of `len` bytes to stream back:
+    /// serialization of payload + per-frame overhead, responder engine
+    /// touches, one-way propagation.
+    fn read_response_eta(&self, len: u64) -> Ns {
+        let payload = len.max(1);
+        let frames = self.fabric.frame_count(payload);
+        let wire = super::time::wire_time(
+            payload + frames * super::switchfab::FRAME_OVERHEAD_BYTES,
+            self.cfg.link_gbps,
+        );
+        Ns(wire.0 + frames * self.cfg.nic.engine_frame_ns + self.cfg.switch_latency_ns)
+    }
+
+    /// An ACK timeout fired. Acts only when the message is still in
+    /// flight under the same attempt (otherwise it was acked, completed,
+    /// superseded by a newer attempt, or its node restarted).
+    fn on_ack_timeout(&mut self, node: NodeId, qpn: Qpn, msg_id: u64, attempt: u32) {
+        let retry_cnt = self.cfg.nic.retry_cnt;
+        {
+            let n = self.node_mut(node);
+            match n.inflight.get(&msg_id) {
+                Some(inf) if inf.attempt == attempt => {}
+                _ => return,
+            }
+        }
+        if attempt >= retry_cnt {
+            self.complete_retry_exceeded(node, msg_id);
+            return;
+        }
+        // bump the attempt NOW, not when the engine gets to the work item:
+        // a second timer armed under the same attempt (the RNR path arms
+        // one alongside the issue-time timer) must see the mismatch and
+        // no-op instead of double-retransmitting and burning the budget
+        if let Some(inf) = self.node_mut(node).inflight.get_mut(&msg_id) {
+            inf.attempt += 1;
+        }
+        // retransmission is engine work like everything else
+        self.node_mut(node).engine_queue.push_back(WorkItem::Retransmit { qpn, msg_id });
+        self.kick_engine(node);
+    }
+
+    /// Re-emit every frame of a timed-out RC message — go-back-N at
+    /// message granularity, same msg_id and msg_seq as the original
+    /// transmission so the responder can deduplicate. Returns engine
+    /// occupancy.
+    fn retransmit_msg(&mut self, node: NodeId, qpn: Qpn, msg_id: u64) -> u64 {
+        let nic = self.cfg.nic;
+        let (wr, msg_seq, attempt) = {
+            // the attempt was already bumped by the timeout that queued
+            // this work item — read, don't re-bump
+            let Some(inf) = self.node(node).inflight.get(&msg_id) else { return 0 };
+            (inf.wr.clone(), inf.msg_seq, inf.attempt)
+        };
+        let Some((peer_node, peer_qpn)) = self.node(node).qps.get(qpn.0).and_then(|q| q.peer)
+        else {
+            return 0;
+        };
+        self.node_mut(node).retransmits += 1;
+        let mut cost = nic.engine_wqe_ns;
+        cost += self.icm_touch(node, IcmKey::Qpc(qpn.0));
+
+        match wr.verb {
+            Verb::Read => {
+                let frame = Frame {
+                    kind: FrameKind::ReadReq,
+                    src: node,
+                    dst: peer_node,
+                    dst_qpn: peer_qpn,
+                    src_qpn: qpn,
+                    transport: QpTransport::Rc,
+                    msg_id,
+                    msg_seq,
+                    frame_idx: 0,
+                    bytes: CTRL_FRAME_BYTES,
+                    msg_len: wr.len,
+                    is_first: true,
+                    is_last: true,
+                    wr_id: wr.wr_id,
+                    imm: None,
+                    rkey: wr.rkey,
+                    raddr: wr.raddr,
+                };
+                cost += nic.engine_frame_ns;
+                let deliver =
+                    self.fabric.send_frame(self.clock + Ns(cost), node, peer_node, frame.bytes);
+                self.events.push(deliver, Event::FrameDelivered(frame));
+                let eta = deliver + self.read_response_eta(wr.len);
+                self.arm_rc_timer(node, qpn, msg_id, attempt, eta);
+            }
+            Verb::Write | Verb::Send => {
+                let kind = if wr.verb == Verb::Write {
+                    FrameKind::WriteData
+                } else {
+                    FrameKind::SendData
+                };
+                let payload = wr.len.max(1);
+                let total = self.fabric.frame_count(payload);
+                let mut handoff = self.clock + Ns(cost);
+                let mut last = self.clock;
+                // retransmissions are rare: eager per-frame pushes, no
+                // stream coalescing
+                for i in 0..total {
+                    cost += nic.engine_frame_ns;
+                    handoff += Ns(nic.engine_frame_ns);
+                    let stall = self.tx_stall(node, handoff);
+                    cost += stall;
+                    handoff += Ns(stall);
+                    let bytes = self.fabric.frame_bytes(payload, i, total);
+                    let frame = Frame {
+                        kind,
+                        src: node,
+                        dst: peer_node,
+                        dst_qpn: peer_qpn,
+                        src_qpn: qpn,
+                        transport: QpTransport::Rc,
+                        msg_id,
+                        msg_seq,
+                        frame_idx: i,
+                        bytes,
+                        msg_len: wr.len,
+                        is_first: i == 0,
+                        is_last: i + 1 == total,
+                        wr_id: wr.wr_id,
+                        imm: wr.imm_data,
+                        rkey: wr.rkey,
+                        raddr: wr.raddr,
+                    };
+                    last = self.fabric.send_frame(handoff, node, peer_node, bytes);
+                    self.events.push(last, Event::FrameDelivered(frame));
+                }
+                self.arm_rc_timer(node, qpn, msg_id, attempt, last);
+            }
+        }
+        cost
+    }
+
+    /// The retry budget ran out. Real RC transitions the QP to Error and
+    /// FLUSHES every outstanding WR — modeled here by completing every
+    /// in-flight message of the QP with [`WcStatus::RetryExceeded`]. The
+    /// responder's expected sequence is then resynced to the requester's
+    /// next issue (the out-of-band re-establishment a daemon performs
+    /// after a fatal retry): without both, one dead message would make
+    /// the responder discard everything after it forever, and a
+    /// partial resync could dup-ACK a message that was never delivered.
+    fn complete_retry_exceeded(&mut self, node: NodeId, msg_id: u64) {
+        let qpn = match self.node(node).inflight.get(&msg_id) {
+            Some(inf) => inf.qpn,
+            None => return,
+        };
+        // flush in ascending msg_id order — never HashMap order
+        let mut ids: Vec<u64> = self
+            .node(node)
+            .inflight
+            .iter()
+            .filter(|(_, inf)| inf.qpn == qpn)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        for id in ids {
+            let inf = self.node_mut(node).inflight.remove(&id).expect("collected id");
+            let send_cq = {
+                let n = self.node_mut(node);
+                n.retry_exceeded += 1;
+                let qp = n.qps.get_mut(qpn.0).expect("qp of in-flight msg");
+                qp.outstanding = qp.outstanding.saturating_sub(1);
+                qp.send_cq
+            };
+            let cqe = Cqe {
+                wr_id: inf.wr.wr_id,
+                kind: CqeKind::SendDone(inf.wr.verb),
+                status: WcStatus::RetryExceeded,
+                len: 0,
+                imm_data: None,
+                qpn,
+                src: None,
+            };
+            let at = self.clock + Ns(self.cfg.nic.cqe_delay_ns);
+            self.events.push(at, Event::CqeDeliver { node, cqn: send_cq, cqe });
+        }
+        // resync the responder past every issued (now dead or delivered)
+        // sequence so post-recovery traffic is accepted again
+        let (next_seq, peer) = {
+            let qp = self.node(node).qps.get(qpn.0).expect("qp exists");
+            (qp.next_msg_seq, qp.peer)
+        };
+        if let Some((peer_node, peer_qpn)) = peer {
+            if let Some(pq) = self.node_mut(peer_node).qps.get_mut(peer_qpn.0) {
+                pq.expected_msg_seq = pq.expected_msg_seq.max(next_seq);
+            }
+        }
+        self.rearm_issue(node, qpn);
+    }
+
+    /// Fault-plan node soft-restart: queued engine work, SQ/RQ/SRQ/CQ
+    /// contents and requester in-flight state vanish; connection state
+    /// (peer bindings, go-back-N counters) survives so peers recover by
+    /// retransmission. Work that died without a completion is what the
+    /// daemon's stale-lease reclaim exists for.
+    fn on_node_restart(&mut self, node: NodeId) {
+        if let Some(f) = self.faults.as_mut() {
+            f.note_restart();
+        }
+        let n = self.node_mut(node);
+        n.restarts += 1;
+        n.engine_queue.clear();
+        n.inflight.clear();
+        n.pending_recv.clear();
+        n.rc_frames_seen.clear();
+        n.dropped_msgs.clear();
+        for qp in n.qps.iter_mut() {
+            qp.reset_soft();
+        }
+        for srq in n.srqs.iter_mut() {
+            srq.clear();
+        }
+        for cq in n.cqs.iter_mut() {
+            cq.clear();
+        }
     }
 }

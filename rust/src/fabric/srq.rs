@@ -76,6 +76,13 @@ impl Srq {
         self.queue.len()
     }
 
+    /// Drop every posted WQE (node soft-restart). The owning daemon's
+    /// next pump refills from its pool, exactly like a daemon process
+    /// coming back up.
+    pub fn clear(&mut self) {
+        self.queue.clear();
+    }
+
     /// True when posted WQEs are below the watermark (limit event).
     pub fn is_starving(&self) -> bool {
         self.queue.len() < self.watermark

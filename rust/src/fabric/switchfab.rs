@@ -24,6 +24,10 @@ pub struct Port {
     pub bytes: u64,
     /// Frames through this port.
     pub frames: u64,
+    /// Frames the fault layer discarded after this port absorbed them
+    /// (injected loss — see [`crate::fabric::fault`]; always 0 on the
+    /// lossless fabric).
+    pub dropped: u64,
 }
 
 impl Port {
@@ -134,6 +138,14 @@ impl Fabric {
     pub fn frames_for(&self, len: u64) -> Vec<u64> {
         let n = self.frame_count(len);
         (0..n).map(|i| self.frame_bytes(len, i, n)).collect()
+    }
+
+    /// Record an injected-loss discard at `dst`'s ingress port. The frame
+    /// already occupied both ports (it was transmitted and then lost in
+    /// the switch/wire), so only the drop tally changes — the sender's
+    /// pacing saw a normal transmission, as it would on real hardware.
+    pub fn note_drop(&mut self, dst: NodeId) {
+        self.ingress[dst.0 as usize].dropped += 1;
     }
 
     /// This node's egress-port counters.

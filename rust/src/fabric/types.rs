@@ -155,6 +155,12 @@ impl<T> DenseTable<T> {
     pub fn iter(&self) -> std::slice::Iter<'_, T> {
         self.items.iter()
     }
+
+    /// Iterate the objects mutably in id order (node restarts sweep every
+    /// QP/SRQ/CQ of a node).
+    pub fn iter_mut(&mut self) -> std::slice::IterMut<'_, T> {
+        self.items.iter_mut()
+    }
 }
 
 impl<T> std::ops::Index<u32> for DenseTable<T> {
@@ -171,6 +177,9 @@ pub enum WcStatus {
     Success,
     /// RQ/SRQ had no posted WQE for an incoming SEND.
     RnrRetryExceeded,
+    /// RC transport retry budget exhausted (ACK never arrived within
+    /// `retry_cnt` retransmissions — lost peer or flapping link).
+    RetryExceeded,
     /// Access outside a registered region / bad rkey.
     RemoteAccessError,
     /// Message exceeded the transport's max size.

@@ -13,8 +13,8 @@ use crate::fabric::types::{QpTransport, Verb};
 use crate::fabric::verbs::capability_matrix;
 use crate::metrics::Series;
 use crate::workload::scenarios::{
-    locked_random_read, naive_random_read, raas_random_read, scale_send, verbs_sweep_point,
-    RunStats, ScaleCfg, ScaleRun, ScenarioCfg,
+    chaos_send, locked_random_read, naive_random_read, raas_random_read, scale_send,
+    verbs_sweep_point, ChaosCfg, ChaosRun, RunStats, ScaleCfg, ScaleRun, ScenarioCfg,
 };
 
 /// Message sizes swept in Fig 1 (64 B … 1 MB).
@@ -488,6 +488,171 @@ pub fn fig9_series(rows: &[Fig9Row]) -> Series {
     s
 }
 
+// ------------------------------------------------------------------ Fig 10
+
+/// Loss rates swept in the fig-10 chaos experiment (fraction of frames
+/// dropped iid; burst episodes and link flaps ride along at loss > 0).
+pub const FIG10_LOSS: &[f64] = &[0.0, 0.001, 0.005, 0.02, 0.05];
+
+/// The fig-10 loss rates for a budget (shared with the determinism gate).
+pub fn fig10_loss_rates(budget: Budget) -> Vec<f64> {
+    match budget {
+        Budget::Quick => vec![0.0, 0.01, 0.05],
+        Budget::Full => FIG10_LOSS.to_vec(),
+    }
+}
+
+/// The fig-10 [`ChaosCfg`] for one sweep point. Loss 0 carries no flaps
+/// either, so its plan is null and the run is byte-identical to the
+/// lossless simulator; lossy points add link flaps long enough to
+/// exhaust the RC retry budget.
+pub fn fig10_cfg(loss: f64, budget: Budget, rc_only: bool) -> ChaosCfg {
+    let mut cfg = ChaosCfg::default();
+    cfg.loss = loss;
+    cfg.rc_only = rc_only;
+    cfg.conns = match budget {
+        Budget::Quick => 96,
+        Budget::Full => 192,
+    };
+    cfg.duration = match budget {
+        Budget::Quick => Ns::from_ms(4),
+        Budget::Full => Ns::from_ms(12),
+    };
+    cfg.flaps = if loss > 0.0 {
+        match budget {
+            Budget::Quick => 3,
+            Budget::Full => 6,
+        }
+    } else {
+        0
+    };
+    cfg
+}
+
+/// One fig-10 sweep point: adaptive migration vs the RC-only ablation at
+/// one injected loss rate.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig10Row {
+    /// Injected per-frame loss rate.
+    pub loss: f64,
+    /// Adaptive RC↔UD run (None in the `--rc-only` ablation).
+    pub adaptive: Option<ChaosRun>,
+    /// RC-only ablation run.
+    pub rc_only: ChaosRun,
+}
+
+/// Fig 10: goodput + p99 vs injected loss rate, adaptive vs RC-only.
+/// RC pays for loss with retransmissions and (inside flap windows) retry
+/// exhaustion; UD pays with silently discarded fragmented messages.
+pub fn fig10(budget: Budget) -> Vec<Fig10Row> {
+    fig10_loss_rates(budget)
+        .into_iter()
+        .map(|loss| Fig10Row {
+            loss,
+            adaptive: Some(chaos_send(&fig10_cfg(loss, budget, false))),
+            rc_only: chaos_send(&fig10_cfg(loss, budget, true)),
+        })
+        .collect()
+}
+
+/// The `--rc-only` ablation alone (adaptive column omitted).
+pub fn fig10_rc_only(budget: Budget) -> Vec<Fig10Row> {
+    fig10_loss_rates(budget)
+        .into_iter()
+        .map(|loss| Fig10Row {
+            loss,
+            adaptive: None,
+            rc_only: chaos_send(&fig10_cfg(loss, budget, true)),
+        })
+        .collect()
+}
+
+/// Render the Fig-10 table.
+pub fn print_fig10(rows: &[Fig10Row]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Fig 10: chaos — goodput/p99 vs injected loss, adaptive RC\u{2194}UD vs RC-only\n",
+    );
+    out.push_str(&format!(
+        "{:>7} {:>10} {:>11} {:>9} {:>9} {:>8} {:>8} {:>9} {:>9}\n",
+        "loss", "adpt Gb/s", "rc-only G/s", "adpt p99", "rc p99", "retrans", "rexceed", "ud drops", "reclaimed"
+    ));
+    for r in rows {
+        let (ag, ap, ud, rec) = match &r.adaptive {
+            Some(a) => (
+                format!("{:.2}", a.gbps),
+                format!("{:.1}", a.p99_us),
+                format!("{}", a.ud_dropped + a.ud_orphans + a.ud_expired),
+                format!("{}", a.leases_reclaimed + r.rc_only.leases_reclaimed),
+            ),
+            None => ("-".into(), "-".into(), "-".into(), format!("{}", r.rc_only.leases_reclaimed)),
+        };
+        let retrans = r.rc_only.retransmits + r.adaptive.map(|a| a.retransmits).unwrap_or(0);
+        let rexceed = r.rc_only.retry_exceeded + r.adaptive.map(|a| a.retry_exceeded).unwrap_or(0);
+        out.push_str(&format!(
+            "{:>6.3}% {:>10} {:>11.2} {:>9} {:>8.1} {:>8} {:>8} {:>9} {:>9}\n",
+            r.loss * 100.0,
+            ag,
+            r.rc_only.gbps,
+            ap,
+            r.rc_only.p99_us,
+            retrans,
+            rexceed,
+            ud,
+            rec
+        ));
+    }
+    out
+}
+
+/// The Fig-10 [`Series`] (shared by the CLI and the determinism tests).
+pub fn fig10_series(rows: &[Fig10Row]) -> Series {
+    let mut s = Series::new(
+        "fig10_chaos",
+        "loss",
+        &[
+            "adaptive_gbps",
+            "rc_only_gbps",
+            "adaptive_p99_us",
+            "rc_only_p99_us",
+            "adaptive_mops",
+            "rc_only_mops",
+            "ud_fraction",
+            "adaptive_failed_ops",
+            "rc_only_failed_ops",
+            "retransmits",
+            "retry_exceeded",
+            "ud_reassembly_discards",
+            "frames_dropped",
+            "leases_reclaimed",
+        ],
+    );
+    for r in rows {
+        let a = r.adaptive;
+        let pick = |f: fn(&ChaosRun) -> f64| a.as_ref().map(f).unwrap_or(f64::NAN);
+        s.push(
+            r.loss,
+            vec![
+                pick(|x| x.gbps),
+                r.rc_only.gbps,
+                pick(|x| x.p99_us),
+                r.rc_only.p99_us,
+                pick(|x| x.mops),
+                r.rc_only.mops,
+                pick(|x| x.ud_fraction),
+                pick(|x| x.failed_ops as f64),
+                r.rc_only.failed_ops as f64,
+                (r.rc_only.retransmits + a.map(|x| x.retransmits).unwrap_or(0)) as f64,
+                (r.rc_only.retry_exceeded + a.map(|x| x.retry_exceeded).unwrap_or(0)) as f64,
+                pick(|x| (x.ud_dropped + x.ud_orphans + x.ud_expired) as f64),
+                (r.rc_only.frames_dropped + a.map(|x| x.frames_dropped).unwrap_or(0)) as f64,
+                (r.rc_only.leases_reclaimed + a.map(|x| x.leases_reclaimed).unwrap_or(0)) as f64,
+            ],
+        );
+    }
+    s
+}
+
 // --------------------------------------------------------- figure runner
 
 /// Run one figure id end-to-end; returns its [`Series`] plus the rendered
@@ -564,6 +729,11 @@ pub fn run_fig(
             let rows = fig9(b);
             let table = print_fig9(&rows);
             Some((fig9_series(&rows), table))
+        }
+        10 => {
+            let rows = fig10(b);
+            let table = print_fig10(&rows);
+            Some((fig10_series(&rows), table))
         }
         _ => None,
     }

@@ -2,11 +2,12 @@
 //!
 //! One binary drives the whole reproduction. Subcommands:
 //!
-//! * `fig --id {1,5,6,7,8,9}` — regenerate a paper figure (9 = the
-//!   RC↔UD-migration scale extension) and print the series as JSON on
-//!   stdout (human-readable table on stderr). `--all` runs every figure;
-//!   `--quick` shrinks the sweeps; `--rc-only` restricts figure 9 to the
-//!   ablation; `--tsv DIR` also writes TSVs.
+//! * `fig --id {1,5,6,7,8,9,10}` — regenerate a paper figure (9 = the
+//!   RC↔UD-migration scale extension, 10 = the fault-injection chaos
+//!   sweep) and print the series as JSON on stdout (human-readable table
+//!   on stderr). `--all` runs every figure; `--quick` shrinks the
+//!   sweeps; `--rc-only` restricts figures 9/10 to the ablation;
+//!   `--tsv DIR` also writes TSVs.
 //! * `bench hotpath` — the hot-path microbenchmarks (SPSC ring, doorbell,
 //!   ICM cache, daemon submit) with JSON results.
 //! * `bench simstep` — raw discrete-event-scheduler throughput
@@ -57,14 +58,14 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: rdmavisor <fig|figures|bench|demo|serve|init-config|info> [--help]\n\
-                 \n  fig --id 1|5|6|7|8|9 [--all] [--quick] [--rc-only] [--tsv DIR]   (JSON on stdout)\
+                 \n  fig --id 1|5|6|7|8|9|10 [--all] [--quick] [--rc-only] [--tsv DIR]   (JSON on stdout)\
                  \n  bench hotpath|simstep [--quick]                    (JSON on stdout)\
                  \n  bench fig9 [--quick] [--out FILE]    (fig-9 wall clock -> BENCH_PR3.json)\
                  \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
                  [--window N] [--duration-ms MS] [--q N] [--config FILE]\
                  \n  demo kv|rpc|inference [--gets N] [--calls N] [--requests N]\
                  \n  figures --all | --table1 --fig1 --fig5 --fig6 --fig7 --fig8 --fig9 \
-                 --send-staging --batching [--quick] [--tsv DIR]\
+                 --fig10 --send-staging --batching [--quick] [--tsv DIR]\
                  \n  serve [--clients N] [--requests N] [--artifacts DIR]\
                  \n  init-config [--out FILE]"
             );
@@ -111,7 +112,7 @@ fn run_stats_json(st: &RunStats) -> Json {
 fn fig_cmd(args: &Args) {
     let b = budget(args);
     let mut ids: Vec<u64> = if args.flag("all") {
-        vec![1, 5, 6, 7, 8, 9]
+        vec![1, 5, 6, 7, 8, 9, 10]
     } else {
         args.u64_list("id", &[])
     };
@@ -125,7 +126,9 @@ fn fig_cmd(args: &Args) {
     let mut seen = std::collections::BTreeSet::new();
     ids.retain(|id| seen.insert(*id));
     if ids.is_empty() {
-        eprintln!("usage: rdmavisor fig --id 1|5|6|7|8|9 [--all] [--quick] [--rc-only] [--tsv DIR]");
+        eprintln!(
+            "usage: rdmavisor fig --id 1|5|6|7|8|9|10 [--all] [--quick] [--rc-only] [--tsv DIR]"
+        );
         std::process::exit(2);
     }
 
@@ -134,15 +137,18 @@ fn fig_cmd(args: &Args) {
     let mut figs = Vec::new();
     let mut fig78_cache = None;
     for &id in &ids {
-        // `fig --id 9 --rc-only` runs just the ablation series
+        // `fig --id 9|10 --rc-only` runs just the ablation series
         let (s, table) = if id == 9 && args.flag("rc-only") {
             let rows = figures::fig9_rc_only(b);
             (figures::fig9_series(&rows), figures::print_fig9(&rows))
+        } else if id == 10 && args.flag("rc-only") {
+            let rows = figures::fig10_rc_only(b);
+            (figures::fig10_series(&rows), figures::print_fig10(&rows))
         } else {
             match figures::run_fig(id, b, &mut fig78_cache) {
                 Some(r) => r,
                 None => {
-                    eprintln!("unknown figure id {id}: expected 1, 5, 6, 7, 8 or 9");
+                    eprintln!("unknown figure id {id}: expected 1, 5, 6, 7, 8, 9 or 10");
                     std::process::exit(2);
                 }
             }
@@ -185,9 +191,15 @@ fn figures_cmd(args: &Args) {
         println!("{}", figures::table1());
     }
     let mut fig78_cache = None;
-    for (flag, id) in
-        [("fig1", 1u64), ("fig5", 5), ("fig6", 6), ("fig7", 7), ("fig8", 8), ("fig9", 9)]
-    {
+    for (flag, id) in [
+        ("fig1", 1u64),
+        ("fig5", 5),
+        ("fig6", 6),
+        ("fig7", 7),
+        ("fig8", 8),
+        ("fig9", 9),
+        ("fig10", 10),
+    ] {
         if all || args.flag(flag) {
             let (s, table) =
                 figures::run_fig(id, b, &mut fig78_cache).expect("known figure id");

@@ -71,6 +71,20 @@ pub struct DaemonConfig {
     /// migrated destination, so it needs far more slots than the
     /// per-peer fabric default.
     pub ud_sq_depth: usize,
+    /// Stale-lease reclaim horizon (0 = disabled, the default). When an
+    /// op's completion never arrives — a node restart cleared the SQ or
+    /// CQ under it — the Poller releases its staging lease after this
+    /// long and reports the op failed, instead of leaking pool slots
+    /// forever. Must comfortably exceed the RC retry span; only fault
+    /// scenarios enable it, so fault-free daemons are bit-identical to
+    /// before it existed.
+    pub lease_timeout_ns: u64,
+    /// UD reassembly fragment timeout (0 = disabled, the default): a
+    /// partial message whose fragments stop arriving for this long is
+    /// discarded ([`Reassembler::expire_stale`]). Enabled by fault
+    /// scenarios, where a dropped LAST fragment would otherwise pin the
+    /// partial until the next message on that vQPN.
+    pub reassembly_timeout_ns: u64,
 }
 
 impl Default for DaemonConfig {
@@ -89,6 +103,8 @@ impl Default for DaemonConfig {
             demux_ns: 40,
             migration: MigrationConfig::default(),
             ud_sq_depth: 8192,
+            lease_timeout_ns: 0,
+            reassembly_timeout_ns: 0,
         }
     }
 }
@@ -127,6 +143,13 @@ pub struct DaemonStats {
     pub sent_ud: u64,
     /// UD fragments emitted by the segmentation layer.
     pub ud_fragments: u64,
+    /// Ops whose completion reported failure (RC retry exhaustion,
+    /// protection errors) or whose lease had to be reclaimed.
+    pub ops_failed: u64,
+    /// Staging leases released by the stale-lease reclaim instead of a
+    /// completion (their CQE never arrived — e.g. a node restart cleared
+    /// the queues under the op).
+    pub leases_reclaimed: u64,
 }
 
 /// Info about a peer daemon's pool we can one-sidedly address.
@@ -135,6 +158,16 @@ struct RemotePool {
     rkey: crate::fabric::types::Mrkey,
     base: u64,
     len: u64,
+}
+
+/// A staging lease held open until its op's completion arrives.
+#[derive(Clone, Copy, Debug)]
+struct OpenLease {
+    lease: Lease,
+    /// Deliver-to-app copy required (non-zero-copy READ landing).
+    deliver_copy: bool,
+    /// When the op was submitted — the stale-lease reclaim's clock.
+    opened_at: Ns,
 }
 
 /// The per-machine RDMAvisor daemon.
@@ -183,12 +216,19 @@ pub struct Daemon {
     /// wr_id of a fragmented message's signaled last fragment -> logical
     /// message length (the CQE only carries the fragment's own length).
     ud_msg_len: HashMap<u64, u64>,
+    /// Per-connection mod-64 UD message tag (the anti-splicing id every
+    /// fragment of one message carries — see [`pack_ud_imm`]).
+    ud_msg_counter: HashMap<u32, u8>,
+    /// wr_ids whose lease was reclaimed (op already reported failed). A
+    /// completion that limps in afterwards is dropped here, so the app
+    /// sees exactly ONE OpComplete per op and the counters never double.
+    reclaimed_wr_ids: std::collections::HashSet<u64>,
     /// Last ICM sample: (virtual time, hits, misses); None before the
     /// first pump.
     icm_sample: Option<(Ns, u64, u64)>,
-    /// Leases to release when a wr_id completes; `bool` = deliver-to-app
-    /// copy required (non-zero-copy read landing).
-    open_leases: HashMap<u64, (Lease, bool)>,
+    /// Leases to release when a wr_id completes (or, under a fault plan,
+    /// when the stale-lease reclaim gives up on the completion).
+    open_leases: HashMap<u64, OpenLease>,
     /// Per-app completion inboxes (stand-in for the completion rings).
     inboxes: HashMap<u32, VecDeque<Delivery>>,
     /// Listening "ports": port -> owning app.
@@ -240,6 +280,8 @@ impl Daemon {
             dirty_remotes: Vec::new(),
             rc_inflight_remote: HashMap::new(),
             ud_msg_len: HashMap::new(),
+            ud_msg_counter: HashMap::new(),
+            reclaimed_wr_ids: std::collections::HashSet::new(),
             icm_sample: None,
             open_leases: HashMap::new(),
             inboxes: HashMap::new(),
@@ -377,7 +419,10 @@ impl Daemon {
             Verb::Send => unreachable!(),
         };
         // reads land in the lease; deliver (copy) unless app opted zero-copy
-        self.open_leases.insert(wr_id, (lease, verb == Verb::Read));
+        self.open_leases.insert(
+            wr_id,
+            OpenLease { lease, deliver_copy: verb == Verb::Read, opened_at: sim.now() },
+        );
         self.enqueue_wr(sim, remote, wr, tag)?;
         Ok(tag)
     }
@@ -439,7 +484,8 @@ impl Daemon {
             }
             Verb::Read => unreachable!("degraded above"),
         };
-        self.open_leases.insert(wr_id, (lease, false));
+        self.open_leases
+            .insert(wr_id, OpenLease { lease, deliver_copy: false, opened_at: sim.now() });
         self.stats.sent_rc += 1;
         self.enqueue_wr(sim, remote, wr, tag)?;
         Ok(verb)
@@ -485,12 +531,20 @@ impl Daemon {
         let lease = self.stage_payload(sim, len)?;
 
         let nfrags = len.div_ceil(mtu).max(1);
+        // mod-64 message tag: lets the peer's reassembler reject a
+        // fragment train spliced across two messages after losses
+        let msg_tag = {
+            let c = self.ud_msg_counter.entry(conn.0).or_insert(0);
+            let tag = *c;
+            *c = (*c + 1) % super::migrate::UD_MSG_MOD as u8;
+            tag
+        };
         let mut last_wr_id = 0;
         for k in 0..nfrags {
             let frag_len = if k == nfrags - 1 { len - k * mtu } else { mtu };
             let seq = self.bump_seq();
             let wr_id = pack_wr_id(conn, seq);
-            let imm = pack_ud_imm(peer_vqpn, k as u16, k == nfrags - 1);
+            let imm = pack_ud_imm(peer_vqpn, msg_tag, k as u16, k == nfrags - 1);
             let mut wr =
                 SendWr::send(wr_id, frag_len, self.pool.mr.key, lease.addr + k * mtu, imm)
                     .to_ud(remote, ud_peer);
@@ -501,7 +555,8 @@ impl Daemon {
             self.telemetry.charge(self.cfg.shm.ring_pop_ns + self.cfg.wr_build_ns);
             self.ud_pending.push(wr);
         }
-        self.open_leases.insert(last_wr_id, (lease, false));
+        self.open_leases
+            .insert(last_wr_id, OpenLease { lease, deliver_copy: false, opened_at: sim.now() });
         if nfrags > 1 {
             self.ud_msg_len.insert(last_wr_id, len);
         }
@@ -626,11 +681,63 @@ impl Daemon {
             }
         }
         self.cqe_buf = buf;
+        // fault hygiene: stale reassembly partials and orphaned leases
+        // (both disabled at timeout 0 — the fault-free default)
+        self.reassembly
+            .expire_stale(sim.now(), Ns(self.cfg.reassembly_timeout_ns));
+        self.reclaim_stale_leases(sim);
         // SRQ refill
         Self::fill_srq(sim, self.node, self.srq, &mut self.pool, &self.cfg, &mut self.srq_wr_seq);
         self.telemetry.pool_pressure = self.pool.pressure();
         // migration signals: sample the NIC cache, re-evaluate destinations
         self.sample_migration(sim);
+    }
+
+    /// Release staging leases whose completion never came (the op's CQE
+    /// died with a node restart, or the fabric lost it beyond recovery),
+    /// reporting the op failed to its app so closed loops keep moving.
+    /// Reclaimed wr_ids are processed in sorted order — HashMap iteration
+    /// order must never dictate inbox delivery order.
+    fn reclaim_stale_leases(&mut self, sim: &mut Sim) {
+        if self.cfg.lease_timeout_ns == 0 || self.open_leases.is_empty() {
+            return;
+        }
+        let now = sim.now();
+        let timeout = Ns(self.cfg.lease_timeout_ns);
+        let mut stale: Vec<u64> = self
+            .open_leases
+            .iter()
+            .filter(|(_, o)| now.saturating_sub(o.opened_at) >= timeout)
+            .map(|(&id, _)| id)
+            .collect();
+        if stale.is_empty() {
+            return;
+        }
+        stale.sort_unstable();
+        for wr_id in stale {
+            let o = self.open_leases.remove(&wr_id).expect("stale id present");
+            self.pool.release(o.lease);
+            self.reclaimed_wr_ids.insert(wr_id);
+            self.stats.leases_reclaimed += 1;
+            self.stats.ops_failed += 1;
+            self.telemetry.ops_failed += 1;
+            self.ud_msg_len.remove(&wr_id);
+            // keep the migration drain ledger honest: the RC WR is gone
+            if let Some(remote) = self.rc_inflight_remote.remove(&wr_id) {
+                self.migrate.on_rc_completed(remote);
+            }
+            let vqpn = unpack_vqpn(wr_id);
+            if let Some(entry) = self.conns.lookup(vqpn) {
+                let app = entry.app;
+                self.telemetry.charge(self.cfg.shm.ring_push_ns);
+                self.inboxes.entry(app).or_default().push_back(Delivery::OpComplete {
+                    conn: vqpn,
+                    tag: wr_id,
+                    len: 0,
+                    ok: false,
+                });
+            }
+        }
     }
 
     /// Fold the NIC's ICM counters into telemetry at the configured
@@ -671,6 +778,12 @@ impl Daemon {
 
     fn on_send_cqe(&mut self, sim: &mut Sim, cqe: Cqe) {
         self.telemetry.charge(self.cfg.demux_ns);
+        if self.reclaimed_wr_ids.remove(&cqe.wr_id) {
+            // the stale-lease reclaim already reported this op failed and
+            // released its lease; drop the late completion so the app
+            // never sees two OpCompletes for one op
+            return;
+        }
         let vqpn = unpack_vqpn(cqe.wr_id);
         let ok = cqe.status == WcStatus::Success;
         // a fragmented UD message's CQE carries only the last fragment's
@@ -679,17 +792,20 @@ impl Daemon {
         if let Some(remote) = self.rc_inflight_remote.remove(&cqe.wr_id) {
             self.migrate.on_rc_completed(remote);
         }
-        if let Some((lease, deliver_copy)) = self.open_leases.remove(&cqe.wr_id) {
-            if deliver_copy && ok {
+        if let Some(o) = self.open_leases.remove(&cqe.wr_id) {
+            if o.deliver_copy && ok {
                 // copy read payload out to the app's private buffer
                 sim.node_mut(self.node).cpu.charge_memcpy(cqe.len, 10.0);
             }
-            self.pool.release(lease);
+            self.pool.release(o.lease);
         }
         self.stats.ops_completed += 1;
         self.telemetry.ops_completed += 1;
         if ok {
             self.stats.bytes_completed += len;
+        } else {
+            self.stats.ops_failed += 1;
+            self.telemetry.ops_failed += 1;
         }
         if let Some(entry) = self.conns.lookup(vqpn) {
             let app = entry.app;
@@ -709,8 +825,8 @@ impl Daemon {
         // UD arrivals land on the host-wide UD QP; their imm carries the
         // fragment header, not a bare vQPN — reassemble before delivery.
         let vqpn = if cqe.qpn == self.ud_qp {
-            let (vqpn, seq, last) = unpack_ud_imm(imm);
-            match self.reassembly.accept(vqpn, seq, last, cqe.len) {
+            let (vqpn, msg, seq, last) = unpack_ud_imm(imm);
+            match self.reassembly.accept(vqpn, msg, seq, last, cqe.len, sim.now()) {
                 Some(total) => return self.deliver_message(sim, vqpn, total),
                 None => return, // mid-message fragment (or datagram drop)
             }

@@ -45,9 +45,11 @@
 //! [`MigrationConfig::drain_max_ns`]; past the deadline the flip is forced
 //! and ordering across it becomes best-effort (datagram semantics — no
 //! completion is ever lost). Because UD is MTU-capped, the daemon
-//! fragments large messages with a per-vQPN sequence header packed into
-//! `imm_data` ([`pack_ud_imm`]) and the peer's Poller reassembles
-//! ([`Reassembler`]) before delivery.
+//! fragments large messages with a per-vQPN fragment header packed into
+//! `imm_data` ([`pack_ud_imm`]: vqpn:20 | msg-tag:6 | seq:5 | last:1)
+//! and the peer's Poller reassembles ([`Reassembler`]) before delivery;
+//! under an injected fault plan lost fragments surface as reassembly
+//! gap-discards, orphans, and fragment-timeout expiries.
 //!
 //! User pins always win: `Flags::RC` keeps a destination on RC at any
 //! pressure, `Flags::UD` rides datagrams even when the cache is cold, and
@@ -62,35 +64,53 @@ use super::vqpn::Vqpn;
 
 /// Bits of `imm_data` carrying the destination vQPN of a UD fragment.
 pub const UD_IMM_VQPN_BITS: u32 = 20;
+/// Bits of `imm_data` carrying the message id (mod-64 tag). Without it,
+/// a lost tail + lost head could splice fragments of two *different*
+/// messages into one "successful" reassembly whenever the sequence
+/// numbers happened to line up — a silently corrupted delivery. The tag
+/// makes adjacent-message aliasing detectable (a 64-message wraparound
+/// coincidence with an uninterrupted stale partial is the only residue).
+pub const UD_IMM_MSG_BITS: u32 = 6;
 /// Bits of `imm_data` carrying the fragment sequence number.
-pub const UD_IMM_SEQ_BITS: u32 = 11;
+pub const UD_IMM_SEQ_BITS: u32 = 5;
 /// Largest vQPN addressable through the UD fragment header.
 pub const UD_MAX_VQPN: u32 = (1 << UD_IMM_VQPN_BITS) - 1;
+/// Message-id modulus of the UD fragment header.
+pub const UD_MSG_MOD: u32 = 1 << UD_IMM_MSG_BITS;
 /// Largest fragment count of one UD-migrated message.
 pub const UD_MAX_FRAGS: u64 = 1 << UD_IMM_SEQ_BITS;
 
-/// Largest message the UD segmentation layer can carry at `mtu`.
+/// Largest message the UD segmentation layer can carry at `mtu`
+/// (32 fragments — 128 KB at a 4 KB MTU; larger unpinned messages keep
+/// the connected path, which carries up to 1 GB).
 pub fn ud_max_msg_bytes(mtu: u64) -> u64 {
     UD_MAX_FRAGS * mtu
 }
 
 /// Pack the UD fragment header into a 4-byte immediate: destination vQPN
-/// in the low [`UD_IMM_VQPN_BITS`], fragment sequence above it, last-flag
-/// in the top bit. Panics (debug) if either field overflows its lane.
+/// in the low [`UD_IMM_VQPN_BITS`], the mod-64 message id above it, the
+/// fragment sequence above that, last-flag in the top bit. Panics
+/// (debug) if a field overflows its lane.
 #[inline]
-pub fn pack_ud_imm(vqpn: Vqpn, seq: u16, last: bool) -> u32 {
+pub fn pack_ud_imm(vqpn: Vqpn, msg: u8, seq: u16, last: bool) -> u32 {
     debug_assert!(vqpn.0 <= UD_MAX_VQPN, "vQPN {} exceeds UD header lane", vqpn.0);
+    debug_assert!((msg as u32) < UD_MSG_MOD, "message id {msg} exceeds header lane");
     debug_assert!((seq as u64) < UD_MAX_FRAGS, "fragment seq {seq} exceeds header lane");
-    vqpn.0 | ((seq as u32) << UD_IMM_VQPN_BITS) | ((last as u32) << 31)
+    vqpn.0
+        | ((msg as u32) << UD_IMM_VQPN_BITS)
+        | ((seq as u32) << (UD_IMM_VQPN_BITS + UD_IMM_MSG_BITS))
+        | ((last as u32) << 31)
 }
 
-/// Unpack a UD fragment header: (destination vQPN, fragment seq, last?).
+/// Unpack a UD fragment header: (destination vQPN, message id, fragment
+/// seq, last?).
 #[inline]
-pub fn unpack_ud_imm(imm: u32) -> (Vqpn, u16, bool) {
+pub fn unpack_ud_imm(imm: u32) -> (Vqpn, u8, u16, bool) {
     let vqpn = Vqpn(imm & UD_MAX_VQPN);
-    let seq = ((imm >> UD_IMM_VQPN_BITS) & (UD_MAX_FRAGS as u32 - 1)) as u16;
+    let msg = ((imm >> UD_IMM_VQPN_BITS) & (UD_MSG_MOD - 1)) as u8;
+    let seq = ((imm >> (UD_IMM_VQPN_BITS + UD_IMM_MSG_BITS)) & (UD_MAX_FRAGS as u32 - 1)) as u16;
     let last = imm >> 31 == 1;
-    (vqpn, seq, last)
+    (vqpn, msg, seq, last)
 }
 
 /// Where one destination's unpinned two-sided traffic currently rides.
@@ -367,14 +387,23 @@ impl TransportManager {
 /// In-flight reassembly of one fragmented UD message.
 #[derive(Clone, Copy, Debug)]
 struct Partial {
+    /// The mod-64 message tag every fragment must match.
+    msg_id: u8,
     next_seq: u16,
     bytes: u64,
+    /// When the latest fragment arrived (virtual time) — the fragment
+    /// timeout's clock.
+    last_frag_at: Ns,
 }
 
 /// Poller-side reassembly of fragmented UD messages, keyed by the local
 /// vQPN the fragments address. Fragments of one message arrive in order
-/// on the simulated fabric (single path, FIFO ports); a sequence gap means
-/// the partial message is dropped — datagram semantics — and counted.
+/// on the lossless simulated fabric; under an injected fault plan
+/// fragments can be dropped, delayed out of order, or never followed by
+/// their tail. A sequence gap discards the partial message — datagram
+/// semantics — and a partial whose fragments stop arriving is reclaimed
+/// by [`Reassembler::expire_stale`] (the Poller calls it every pump), so
+/// a dropped LAST fragment cannot pin reassembly state forever.
 #[derive(Clone, Debug, Default)]
 pub struct Reassembler {
     partial: HashMap<u32, Partial>,
@@ -387,6 +416,10 @@ pub struct Reassembler {
     /// an N-fragment message lost this way shows up as N−1 orphans, not
     /// as a `dropped` increment).
     pub orphan_fragments: u64,
+    /// Partial messages reclaimed by the fragment timeout (tail lost and
+    /// the connection went quiet — no later fragment ever exposed the
+    /// gap).
+    pub expired: u64,
 }
 
 impl Reassembler {
@@ -395,24 +428,38 @@ impl Reassembler {
         Self::default()
     }
 
-    /// Accept one fragment; returns the total message length when the
-    /// fragment completes its message.
-    pub fn accept(&mut self, vqpn: Vqpn, seq: u16, last: bool, len: u64) -> Option<u64> {
+    /// Accept one fragment at virtual time `now`; returns the total
+    /// message length when the fragment completes its message. A
+    /// fragment whose message tag does not match the open partial kills
+    /// the partial (gap semantics) — the tag is what stops a lost tail +
+    /// lost head from splicing two messages together.
+    pub fn accept(
+        &mut self,
+        vqpn: Vqpn,
+        msg: u8,
+        seq: u16,
+        last: bool,
+        len: u64,
+        now: Ns,
+    ) -> Option<u64> {
         if seq == 0 {
             if self.partial.remove(&vqpn.0).is_some() {
                 // a new message started before the previous one finished
+                // (sender restart, or the previous tail was lost)
                 self.dropped += 1;
             }
             if last {
                 self.completed += 1;
                 return Some(len);
             }
-            self.partial.insert(vqpn.0, Partial { next_seq: 1, bytes: len });
+            self.partial
+                .insert(vqpn.0, Partial { msg_id: msg, next_seq: 1, bytes: len, last_frag_at: now });
             return None;
         }
         match self.partial.get_mut(&vqpn.0) {
-            Some(p) if p.next_seq == seq => {
+            Some(p) if p.msg_id == msg && p.next_seq == seq => {
                 p.bytes += len;
+                p.last_frag_at = now;
                 if last {
                     let total = p.bytes;
                     self.partial.remove(&vqpn.0);
@@ -424,7 +471,7 @@ impl Reassembler {
                 }
             }
             _ => {
-                // gap or orphan fragment: drop any partial state
+                // gap, tag mismatch, or orphan fragment: drop any partial
                 if self.partial.remove(&vqpn.0).is_some() {
                     self.dropped += 1;
                 } else {
@@ -433,6 +480,21 @@ impl Reassembler {
                 None
             }
         }
+    }
+
+    /// Reclaim partials whose latest fragment is older than `timeout`
+    /// (0 disables). Returns how many were expired. Removal is pure
+    /// bookkeeping — it touches no simulator state, so the map's
+    /// iteration order cannot leak into the event timeline.
+    pub fn expire_stale(&mut self, now: Ns, timeout: Ns) -> u64 {
+        if timeout.0 == 0 || self.partial.is_empty() {
+            return 0;
+        }
+        let before = self.partial.len();
+        self.partial.retain(|_, p| now.saturating_sub(p.last_frag_at) < timeout);
+        let expired = (before - self.partial.len()) as u64;
+        self.expired += expired;
+        expired
     }
 
     /// Messages currently mid-reassembly.
@@ -451,10 +513,28 @@ mod tests {
 
     #[test]
     fn imm_header_roundtrips() {
-        for &(v, s, l) in &[(0u32, 0u16, true), (7, 3, false), (UD_MAX_VQPN, 2047, true)] {
-            let imm = pack_ud_imm(Vqpn(v), s, l);
-            assert_eq!(unpack_ud_imm(imm), (Vqpn(v), s, l));
+        for &(v, m, s, l) in &[
+            (0u32, 0u8, 0u16, true),
+            (7, 3, 3, false),
+            (UD_MAX_VQPN, 63, 31, true),
+        ] {
+            let imm = pack_ud_imm(Vqpn(v), m, s, l);
+            assert_eq!(unpack_ud_imm(imm), (Vqpn(v), m, s, l));
         }
+    }
+
+    #[test]
+    fn stale_partial_never_splices_onto_the_next_message() {
+        // message A loses its tail, message B loses its head: without
+        // the message tag, B's surviving fragment 1 would have continued
+        // A's partial and "completed" a spliced message
+        let mut r = Reassembler::new();
+        let v = Vqpn(6);
+        assert_eq!(r.accept(v, 0, 0, false, 4096, Ns(0)), None); // A frag 0
+        // A frag 1 (last) lost; B frag 0 lost; B frag 1 (last) arrives
+        assert_eq!(r.accept(v, 1, 1, true, 100, Ns(1)), None, "tag mismatch must not complete");
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.dropped, 1, "A's partial is discarded");
     }
 
     #[test]
@@ -596,9 +676,9 @@ mod tests {
     fn reassembler_joins_in_order_fragments() {
         let mut r = Reassembler::new();
         let v = Vqpn(5);
-        assert_eq!(r.accept(v, 0, false, 4096), None);
-        assert_eq!(r.accept(v, 1, false, 4096), None);
-        assert_eq!(r.accept(v, 2, true, 1000), Some(9192));
+        assert_eq!(r.accept(v, 0, 0, false, 4096, Ns(10)), None);
+        assert_eq!(r.accept(v, 0, 1, false, 4096, Ns(20)), None);
+        assert_eq!(r.accept(v, 0, 2, true, 1000, Ns(30)), Some(9192));
         assert_eq!(r.completed, 1);
         assert_eq!(r.in_progress(), 0);
     }
@@ -606,7 +686,7 @@ mod tests {
     #[test]
     fn reassembler_single_fragment_fast_path() {
         let mut r = Reassembler::new();
-        assert_eq!(r.accept(Vqpn(1), 0, true, 512), Some(512));
+        assert_eq!(r.accept(Vqpn(1), 0, 0, true, 512, Ns(0)), Some(512));
         assert_eq!(r.in_progress(), 0);
     }
 
@@ -614,25 +694,76 @@ mod tests {
     fn reassembler_drops_on_gap() {
         let mut r = Reassembler::new();
         let v = Vqpn(9);
-        assert_eq!(r.accept(v, 0, false, 4096), None);
+        assert_eq!(r.accept(v, 0, 0, false, 4096, Ns(0)), None);
         // fragment 1 lost; fragment 2 arrives => partial dropped
-        assert_eq!(r.accept(v, 2, true, 4096), None);
+        assert_eq!(r.accept(v, 0, 2, true, 4096, Ns(1)), None);
         assert_eq!(r.dropped, 1);
         // a fresh message still reassembles
-        assert_eq!(r.accept(v, 0, true, 64), Some(64));
+        assert_eq!(r.accept(v, 1, 0, true, 64, Ns(2)), Some(64));
+    }
+
+    #[test]
+    fn reassembler_drops_on_duplicate_fragment() {
+        // a jitter-reordered duplicate is indistinguishable from a gap:
+        // the partial is discarded, never double-counted into the total
+        let mut r = Reassembler::new();
+        let v = Vqpn(4);
+        assert_eq!(r.accept(v, 0, 0, false, 4096, Ns(0)), None);
+        assert_eq!(r.accept(v, 0, 1, false, 4096, Ns(1)), None);
+        assert_eq!(r.accept(v, 0, 1, false, 4096, Ns(2)), None, "duplicate of frag 1");
+        assert_eq!(r.dropped, 1);
+        assert_eq!(r.in_progress(), 0);
+        // the (now orphaned) tail is counted as such
+        assert_eq!(r.accept(v, 0, 2, true, 100, Ns(3)), None);
+        assert_eq!(r.orphan_fragments, 1);
+        assert_eq!(r.completed, 0);
+    }
+
+    #[test]
+    fn reassembler_restart_mid_message() {
+        // sender restarts mid-train: a fresh seq-0 supersedes the stale
+        // partial (counted dropped) and the new message reassembles
+        let mut r = Reassembler::new();
+        let v = Vqpn(7);
+        assert_eq!(r.accept(v, 0, 0, false, 4096, Ns(0)), None);
+        assert_eq!(r.accept(v, 0, 1, false, 4096, Ns(1)), None);
+        assert_eq!(r.accept(v, 1, 0, false, 2048, Ns(2)), None, "restarted message");
+        assert_eq!(r.dropped, 1);
+        assert_eq!(r.accept(v, 1, 1, true, 100, Ns(3)), Some(2148));
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.in_progress(), 0);
+    }
+
+    #[test]
+    fn reassembler_fragment_timeout_reclaims_stale_partials() {
+        let mut r = Reassembler::new();
+        assert_eq!(r.accept(Vqpn(1), 0, 0, false, 4096, Ns(1_000)), None); // tail never arrives
+        assert_eq!(r.accept(Vqpn(2), 0, 0, false, 4096, Ns(900_000)), None); // still fresh
+        assert_eq!(r.in_progress(), 2);
+        // before the timeout nothing expires
+        assert_eq!(r.expire_stale(Ns(500_000), Ns(1_000_000)), 0);
+        assert_eq!(r.expire_stale(Ns(1_200_000), Ns(1_000_000)), 1);
+        assert_eq!(r.expired, 1);
+        assert_eq!(r.in_progress(), 1, "fresh partial survives");
+        // timeout 0 disables expiry entirely
+        assert_eq!(r.expire_stale(Ns(u64::MAX / 2), Ns(0)), 0);
+        assert_eq!(r.in_progress(), 1);
+        // a late tail for the expired message is an orphan, not a crash
+        assert_eq!(r.accept(Vqpn(1), 0, 1, true, 64, Ns(1_300_000)), None);
+        assert_eq!(r.orphan_fragments, 1);
     }
 
     #[test]
     fn reassembler_interleaves_across_connections() {
         let mut r = Reassembler::new();
-        assert_eq!(r.accept(Vqpn(1), 0, false, 4096), None);
-        assert_eq!(r.accept(Vqpn(2), 0, false, 4096), None);
-        assert_eq!(r.accept(Vqpn(2), 1, true, 100), Some(4196));
-        assert_eq!(r.accept(Vqpn(1), 1, true, 200), Some(4296));
+        assert_eq!(r.accept(Vqpn(1), 0, 0, false, 4096, Ns(0)), None);
+        assert_eq!(r.accept(Vqpn(2), 0, 0, false, 4096, Ns(1)), None);
+        assert_eq!(r.accept(Vqpn(2), 0, 1, true, 100, Ns(2)), Some(4196));
+        assert_eq!(r.accept(Vqpn(1), 0, 1, true, 200, Ns(3)), Some(4296));
     }
 
     #[test]
     fn ud_max_msg_scales_with_mtu() {
-        assert_eq!(ud_max_msg_bytes(4096), 2048 * 4096);
+        assert_eq!(ud_max_msg_bytes(4096), 32 * 4096);
     }
 }

@@ -58,6 +58,9 @@ pub struct Telemetry {
     pub ops_submitted: u64,
     /// Initiator-side completions delivered.
     pub ops_completed: u64,
+    /// Ops that completed in failure or were reclaimed without a
+    /// completion (fault runs; always 0 on the lossless fabric).
+    pub ops_failed: u64,
     /// Windowed ICM-cache hit rate sampled from the local NIC (input to
     /// the RC↔UD migration policy — [`super::migrate`]). 1.0 until the
     /// first window with enough lookups.

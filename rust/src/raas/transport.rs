@@ -298,7 +298,7 @@ mod tests {
 
     #[test]
     fn migration_preference_spares_messages_beyond_ud_cap() {
-        // unpinned 16 MB > the 8 MB UD segmentation cap at 4 KB MTU:
+        // unpinned 16 MB > the 128 KB UD segmentation cap at 4 KB MTU:
         // migration must stay transparent, so the connected path carries it
         let c = sel()
             .choose_adaptive(16 << 20, Flags::default(), idle(), idle(), 4096, true)

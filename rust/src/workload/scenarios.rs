@@ -599,6 +599,368 @@ pub fn scale_send(cfg: &ScaleCfg) -> ScaleRun {
     }
 }
 
+// ------------------------------------------------ Fig 10 (chaos sweep)
+
+/// Config for the fault-injection chaos experiment (fig 10): closed-loop
+/// `send()` fan-out like [`ScaleCfg`], but over a seeded lossy fabric —
+/// iid + burst frame loss, delay jitter, link-flap windows and optional
+/// server restarts ([`crate::fabric::fault`]). Message sizes deliberately
+/// exceed the MTU so UD-migrated traffic fragments: a lost fragment then
+/// tears a hole RC would have retransmitted around, which is the
+/// adaptive-vs-`--rc-only` story the figure tells.
+#[derive(Clone, Debug)]
+pub struct ChaosCfg {
+    /// Logical connections on the client machine.
+    pub conns: usize,
+    /// Cap on distinct destination daemons.
+    pub max_servers: usize,
+    /// Smallest message size drawn (log-uniform).
+    pub msg_lo: u64,
+    /// Largest message size drawn (log-uniform; MAY exceed the MTU —
+    /// goodput is measured as daemon-level delivered messages, so
+    /// fragment counting cannot skew the comparison).
+    pub msg_hi: u64,
+    /// Virtual run length.
+    pub duration: Ns,
+    /// Fraction of the run treated as warmup (excluded from stats).
+    pub warmup_frac: f64,
+    /// Workload seed; the fault plan's RNG stream is split off it.
+    pub seed: u64,
+    /// Ablation: disable migration, everything stays on RC.
+    pub rc_only: bool,
+    /// Per-frame iid drop probability (0.0 + no flaps/restarts = the
+    /// null plan: the fault layer is not even installed).
+    pub loss: f64,
+    /// Link-down windows drawn on client↔server links (1–2 ms, long
+    /// enough to exhaust the RC retry budget).
+    pub flaps: u32,
+    /// Server soft-restarts scheduled mid-run.
+    pub server_restarts: u32,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> Self {
+        ChaosCfg {
+            conns: 128,
+            max_servers: 16,
+            msg_lo: 64,
+            msg_hi: 16 << 10,
+            duration: Ns::from_ms(10),
+            warmup_frac: 0.25,
+            seed: 42,
+            rc_only: false,
+            loss: 0.0,
+            flaps: 0,
+            server_restarts: 0,
+        }
+    }
+}
+
+/// One measured chaos point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChaosRun {
+    /// Logical connections of this point.
+    pub conns: usize,
+    /// Distinct destination daemons.
+    pub servers: usize,
+    /// The injected per-frame loss rate.
+    pub loss: f64,
+    /// Application-level goodput, Gb/s: bytes of fully delivered
+    /// messages counted at the receiving daemons (wire-level rx bytes
+    /// would credit fragments of messages reassembly later discards).
+    pub gbps: f64,
+    /// Delivered messages, millions per second.
+    pub mops: f64,
+    /// Messages delivered inside the measured window.
+    pub ops: u64,
+    /// Median successful-op latency, microseconds.
+    pub p50_us: f64,
+    /// 99th-percentile successful-op latency, microseconds.
+    pub p99_us: f64,
+    /// Fraction of `send()` calls that rode the UD QP.
+    pub ud_fraction: f64,
+    /// Client ops that completed in failure or were reclaimed.
+    pub failed_ops: u64,
+    /// RC message retransmissions (go-back-N), all nodes.
+    pub retransmits: u64,
+    /// RC messages that exhausted their retry budget.
+    pub retry_exceeded: u64,
+    /// RC data frames discarded by the responder go-back-N discipline.
+    pub gbn_discards: u64,
+    /// Frames the fault layer dropped (iid + burst + flap).
+    pub frames_dropped: u64,
+    /// Frames the fault layer jitter-delayed.
+    pub frames_delayed: u64,
+    /// UD partial messages discarded on a reassembly gap or sender
+    /// restart, summed over the server daemons.
+    pub ud_dropped: u64,
+    /// UD fragments that arrived with no partial in progress.
+    pub ud_orphans: u64,
+    /// UD partials reclaimed by the fragment timeout.
+    pub ud_expired: u64,
+    /// Staging leases reclaimed without a completion, all daemons.
+    pub leases_reclaimed: u64,
+    /// Node soft-restarts executed.
+    pub restarts: u64,
+    /// RC→UD migrations the client daemon performed.
+    pub migrations_to_ud: u64,
+    /// Simulator events processed over the whole run.
+    pub events: u64,
+}
+
+/// Build the seeded fault plan for one chaos run: flap windows and
+/// restart instants are drawn from a stream split off the scenario seed
+/// (never the workload stream), and only links that actually carry
+/// traffic (client↔server) can flap.
+fn chaos_fault_cfg(cfg: &ChaosCfg, servers: usize) -> crate::fabric::fault::FaultConfig {
+    use crate::fabric::fault::{FaultConfig, Flap};
+    let mut rng = Rng::new(cfg.seed ^ 0xC4A0_5FA0_0017);
+    let mut flaps = Vec::new();
+    for _ in 0..cfg.flaps {
+        let server = 1 + rng.gen_range(servers as u64) as u32;
+        // half the flaps kill the data direction, half the ACK direction
+        let (src, dst) = if rng.chance(0.5) { (0u32, server) } else { (server, 0u32) };
+        let lo = cfg.duration.0 / 8;
+        let hi = (cfg.duration.0 * 5 / 8).max(lo + 1);
+        let start = lo + rng.gen_range(hi - lo);
+        let down = 1_000_000 + rng.gen_range(1_000_000); // 1–2 ms
+        flaps.push(Flap {
+            src: NodeId(src),
+            dst: NodeId(dst),
+            from: Ns(start),
+            until: Ns(start + down),
+        });
+    }
+    let mut restarts = Vec::new();
+    for _ in 0..cfg.server_restarts {
+        let server = 1 + rng.gen_range(servers as u64) as u32;
+        let lo = cfg.duration.0 / 4;
+        let hi = (cfg.duration.0 * 3 / 4).max(lo + 1);
+        restarts.push((server, lo + rng.gen_range(hi - lo)));
+    }
+    FaultConfig {
+        seed: rng.next_u64(),
+        drop_p: cfg.loss,
+        burst_p: if cfg.loss > 0.0 { 0.1 } else { 0.0 },
+        burst_len: (4, 16),
+        jitter_p: if cfg.loss > 0.0 { 0.02 } else { 0.0 },
+        jitter_ns: (200, 4000),
+        flaps,
+        restarts,
+    }
+}
+
+/// Client daemon config for the chaos runs. The RC context budget is
+/// shrunk so the 16-server destination working set overflows it and the
+/// adaptive run actually rides UD — the same regime fig 9 reaches with a
+/// thousand servers, at a cluster size cheap enough to sweep loss rates.
+/// Fault hygiene (stale-lease reclaim) is on; it must outlast the RC
+/// retry span (~1 ms) by a wide margin.
+fn chaos_client_cfg(cfg: &ChaosCfg) -> DaemonConfig {
+    let mut d = DaemonConfig::default();
+    let slots = (2 * cfg.conns).max(1024) as u32;
+    d.pool_layout = vec![(4096, slots), (16 << 10, slots)];
+    d.recv_slot_bytes = 4096;
+    d.srq_capacity = 64;
+    d.srq_watermark = 16;
+    d.ud_sq_depth = (4 * cfg.conns).max(8192);
+    d.migration.enabled = !cfg.rc_only;
+    d.migration.rc_share = 0.02; // budget: 8 of 400 ICM entries
+    d.lease_timeout_ns = 5_000_000;
+    d
+}
+
+/// Server daemon config for the chaos runs: reassembly fragment timeout
+/// and lease reclaim on, small footprint.
+fn chaos_server_cfg() -> DaemonConfig {
+    let mut d = DaemonConfig::default();
+    d.pool_layout = vec![(4096, 1024), (16 << 10, 256)];
+    d.recv_slot_bytes = 4096;
+    d.srq_capacity = 512;
+    d.srq_watermark = 64;
+    d.ud_sq_depth = 64;
+    d.service_threads = 1;
+    d.lease_timeout_ns = 5_000_000;
+    d.reassembly_timeout_ns = 2_000_000;
+    d
+}
+
+/// Fig 10: closed-loop `send()` fan-out under a seeded fault plan —
+/// goodput and tail latency vs injected loss rate, adaptive RC↔UD
+/// migration vs the `--rc-only` ablation. At loss 0 the plan is null and
+/// this is byte-identical to the lossless simulator (no timers, no RNG,
+/// no gating). Under loss, RC traffic retransmits (and exhausts its
+/// retry budget inside flap windows — `retry_exceeded`), while
+/// UD-migrated traffic loses fragments silently and the peer's
+/// reassembler discards the partials (`ud_dropped`/`ud_orphans`).
+pub fn chaos_send(cfg: &ChaosCfg) -> ChaosRun {
+    let servers = cfg.conns.min(cfg.max_servers).max(1);
+    let mut fabric = FabricConfig::default();
+    fabric.nodes = servers + 1;
+    fabric.sq_depth = 1024;
+    let mut sim = Sim::new(fabric);
+    // before any traffic: the go-back-N discipline and the fault gate
+    // must switch on together
+    sim.install_faults(chaos_fault_cfg(cfg, servers));
+
+    let mut daemons: Vec<Daemon> = Vec::with_capacity(servers + 1);
+    daemons.push(Daemon::start(&mut sim, NodeId(0), chaos_client_cfg(cfg)));
+    for s in 0..servers {
+        daemons.push(Daemon::start(&mut sim, NodeId(s as u32 + 1), chaos_server_cfg()));
+    }
+    let mut server_apps = vec![0u32; servers + 1];
+    for (s, d) in daemons.iter_mut().enumerate().skip(1) {
+        let app = d.register_app();
+        d.listen(app, 7000);
+        server_apps[s] = app;
+    }
+    let app = daemons[0].register_app();
+    let mut conns = Vec::with_capacity(cfg.conns);
+    for i in 0..cfg.conns {
+        let server = 1 + i % servers;
+        conns.push(connect_via(&mut sim, &mut daemons, 0, app, server, 7000).unwrap());
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    let sizes = SizeGen::LogUniform { lo: cfg.msg_lo, hi: cfg.msg_hi };
+    let mut win = Window::new(&ScenarioCfg {
+        duration: cfg.duration,
+        warmup_frac: cfg.warmup_frac,
+        ..ScenarioCfg::default()
+    });
+
+    // goodput numerator: fully delivered messages at the server daemons
+    let mut delivered_bytes = 0u64;
+    let mut delivered_msgs = 0u64;
+    let (mut win_bytes0, mut win_msgs0) = (0u64, 0u64);
+    let mut win_snapped = false;
+    let mut posted_at: std::collections::HashMap<u32, Ns> = std::collections::HashMap::new();
+
+    daemons[0].pump(&mut sim);
+    for (i, c) in conns.iter().enumerate() {
+        let len = sizes.next(&mut rng).clamp(cfg.msg_lo, cfg.msg_hi);
+        posted_at.insert(c.0, sim.now());
+        let _ = daemons[0].send(&mut sim, *c, len, Flags::default(), i as u64, HostLoad::default());
+    }
+    daemons[0].pump(&mut sim);
+    sim.node_mut(NodeId(0)).cache.reset_stats();
+
+    // periodic heartbeat so server daemons pump even when no CQE lands —
+    // a restarted server's SRQ is empty, so WITHOUT this its refill (and
+    // therefore its recovery) would wait on a completion that can never
+    // arrive. The live daemon busy-polls; this is the sim equivalent.
+    const HEARTBEAT: u64 = u64::MAX;
+    const HEARTBEAT_NS: u64 = 100_000;
+    sim.schedule(Ns(HEARTBEAT_NS), HEARTBEAT);
+
+    let mut server_nodes: Vec<u32> = Vec::new();
+    let mut notes: Vec<Notification> = Vec::new();
+    while sim.now() < cfg.duration {
+        win.maybe_start(&sim);
+        if win.started && !win_snapped {
+            win_snapped = true;
+            win_bytes0 = delivered_bytes;
+            win_msgs0 = delivered_msgs;
+        }
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
+        }
+        let mut client_cqe = false;
+        let mut heartbeat = false;
+        server_nodes.clear();
+        for n in &notes {
+            match n {
+                Notification::CqeReady { node, .. } => {
+                    if node.0 == 0 {
+                        client_cqe = true;
+                    } else {
+                        server_nodes.push(node.0);
+                    }
+                }
+                Notification::Timer { token } if *token == HEARTBEAT => heartbeat = true,
+                _ => {}
+            }
+        }
+        if heartbeat {
+            for s in 1..=servers {
+                server_nodes.push(s as u32);
+            }
+            sim.schedule(sim.now() + Ns(HEARTBEAT_NS), HEARTBEAT);
+        }
+        server_nodes.sort_unstable();
+        server_nodes.dedup();
+        for &s in &server_nodes {
+            let d = &mut daemons[s as usize];
+            d.pump(&mut sim);
+            while let Some(del) = d.recv_zero_copy(&mut sim, server_apps[s as usize]) {
+                if let Delivery::Message { len, .. } = del {
+                    delivered_bytes += len;
+                    delivered_msgs += 1;
+                }
+            }
+        }
+        if client_cqe || heartbeat {
+            daemons[0].pump(&mut sim);
+            while let Some(del) = daemons[0].recv_zero_copy(&mut sim, app) {
+                if let Delivery::OpComplete { conn, ok, .. } = del {
+                    if ok {
+                        if let Some(t) = posted_at.get(&conn.0) {
+                            win.record_latency(sim.now().saturating_sub(*t).0);
+                        }
+                    }
+                    // closed loop continues through failures
+                    let len = sizes.next(&mut rng).clamp(cfg.msg_lo, cfg.msg_hi);
+                    posted_at.insert(conn.0, sim.now());
+                    let _ = daemons[0].send(
+                        &mut sim,
+                        conn,
+                        len,
+                        Flags::default(),
+                        0,
+                        HostLoad::default(),
+                    );
+                }
+            }
+            daemons[0].pump(&mut sim);
+        }
+    }
+
+    let span = sim.now().saturating_sub(win.t0);
+    let ops = delivered_msgs - win_msgs0;
+    let fstats = sim.fault_stats().unwrap_or_default();
+    let (mut ud_dropped, mut ud_orphans, mut ud_expired) = (0u64, 0u64, 0u64);
+    for d in daemons.iter().skip(1) {
+        ud_dropped += d.reassembly.dropped;
+        ud_orphans += d.reassembly.orphan_fragments;
+        ud_expired += d.reassembly.expired;
+    }
+    ChaosRun {
+        conns: cfg.conns,
+        servers,
+        loss: cfg.loss,
+        gbps: gbps(delivered_bytes - win_bytes0, span),
+        mops: if span.0 == 0 { 0.0 } else { ops as f64 * 1e3 / span.0 as f64 },
+        ops,
+        p50_us: win.lat.p50() as f64 / 1e3,
+        p99_us: win.lat.p99() as f64 / 1e3,
+        ud_fraction: daemons[0].ud_send_fraction(),
+        failed_ops: daemons[0].stats.ops_failed,
+        retransmits: sim.nodes.iter().map(|n| n.retransmits).sum(),
+        retry_exceeded: sim.nodes.iter().map(|n| n.retry_exceeded).sum(),
+        gbn_discards: sim.nodes.iter().map(|n| n.gbn_discards).sum(),
+        frames_dropped: fstats.frames_dropped,
+        frames_delayed: fstats.frames_delayed,
+        ud_dropped,
+        ud_orphans,
+        ud_expired,
+        leases_reclaimed: daemons.iter().map(|d| d.stats.leases_reclaimed).sum(),
+        restarts: sim.nodes.iter().map(|n| n.restarts).sum(),
+        migrations_to_ud: daemons[0].migrate.to_ud,
+        events: sim.steps_processed(),
+    }
+}
+
 /// Scheduler microbench workload for `bench simstep`: `pairs` RC QPs on
 /// one client streaming closed-loop WRITEs of `msg_bytes` at `window`
 /// outstanding each, across the default 4-node fabric. No daemon layer —
@@ -843,6 +1205,53 @@ mod tests {
             q3.mops
         );
         assert!(q6.lock_wait_ms > 0.0);
+    }
+
+    fn chaos_quick(loss: f64) -> ChaosCfg {
+        let mut cfg = ChaosCfg::default();
+        cfg.conns = 48;
+        cfg.duration = Ns::from_ms(3);
+        cfg.loss = loss;
+        cfg
+    }
+
+    #[test]
+    fn chaos_at_loss_zero_is_the_lossless_simulator() {
+        // null plan: the fault layer is not even installed, so every
+        // fault counter must be exactly zero and traffic must flow
+        let r = chaos_send(&chaos_quick(0.0));
+        assert!(r.gbps > 0.0, "no goodput at loss 0: {r:?}");
+        assert!(r.ops > 0);
+        assert_eq!(r.frames_dropped + r.frames_delayed, 0);
+        assert_eq!(r.retransmits + r.retry_exceeded + r.gbn_discards, 0);
+        assert_eq!(r.ud_dropped + r.ud_orphans + r.ud_expired, 0);
+        assert_eq!(r.failed_ops + r.leases_reclaimed + r.restarts, 0);
+    }
+
+    #[test]
+    fn chaos_lossy_run_retransmits_and_degrades() {
+        let clean = chaos_send(&chaos_quick(0.0));
+        let mut cfg = chaos_quick(0.05);
+        cfg.flaps = 2;
+        // adaptive: the migrated (UD) traffic pays for loss with torn
+        // reassemblies, not retransmissions
+        let dirty = chaos_send(&cfg);
+        assert!(dirty.frames_dropped > 0, "{dirty:?}");
+        assert!(
+            dirty.ud_dropped + dirty.ud_orphans > 0,
+            "fragmented UD messages must lose fragments: {dirty:?}"
+        );
+        assert!(
+            dirty.gbps < clean.gbps,
+            "5% loss must cost goodput: {:.2} vs {:.2}",
+            dirty.gbps,
+            clean.gbps
+        );
+        // rc-only: the connected path pays with go-back-N retransmissions
+        cfg.rc_only = true;
+        let rc = chaos_send(&cfg);
+        assert!(rc.retransmits > 0, "RC must retransmit under loss: {rc:?}");
+        assert_eq!(rc.ud_dropped + rc.ud_orphans, 0, "no UD traffic in the ablation");
     }
 
     #[test]

@@ -11,8 +11,8 @@
 use rdmavisor::fabric::time::Ns;
 use rdmavisor::figures::{self, Budget};
 use rdmavisor::workload::scenarios::{
-    locked_random_read, naive_random_read, raas_random_read, scale_send, verbs_sweep_point,
-    ScaleCfg, ScenarioCfg,
+    chaos_send, locked_random_read, naive_random_read, raas_random_read, scale_send,
+    verbs_sweep_point, ChaosCfg, ScaleCfg, ScenarioCfg,
 };
 
 /// Run one figure id end-to-end and serialize everything it produces.
@@ -57,6 +57,47 @@ fn fig8_replays_byte_identically() {
 #[test]
 fn fig9_replays_byte_identically() {
     assert_fig_deterministic(9);
+}
+
+#[test]
+fn fig10_replays_byte_identically() {
+    // the whole fault machinery — drop/jitter RNG stream, burst episodes,
+    // flap windows, RC retransmission timers, reassembly discards —
+    // under the determinism gate: same seed ⇒ byte-identical JSON
+    assert_fig_deterministic(10);
+}
+
+#[test]
+fn fig10_rc_only_replays_byte_identically() {
+    let run = || {
+        let rows = figures::fig10_rc_only(Budget::Quick);
+        format!(
+            "{}\n{}",
+            figures::fig10_series(&rows).to_json().to_string(),
+            figures::print_fig10(&rows)
+        )
+    };
+    assert_eq!(run(), run(), "fig --id 10 --rc-only differed between runs");
+}
+
+#[test]
+fn fig10_chaos_point_exercises_both_failure_families() {
+    // the acceptance gate: at the lossy quick point, the adaptive run's
+    // UD traffic must tear reassemblies and the rc-only run must exhaust
+    // RC retry budgets inside the flap windows — both nonzero, on top of
+    // the byte-identity the tests above pin
+    let adaptive = chaos_send(&figures::fig10_cfg(0.05, Budget::Quick, false));
+    assert!(adaptive.frames_dropped > 0, "{adaptive:?}");
+    assert!(
+        adaptive.ud_dropped + adaptive.ud_orphans + adaptive.ud_expired > 0,
+        "UD reassembly-discard counters must be nonzero: {adaptive:?}"
+    );
+    let rc_only = chaos_send(&figures::fig10_cfg(0.05, Budget::Quick, true));
+    assert!(rc_only.retransmits > 0, "{rc_only:?}");
+    assert!(
+        rc_only.retry_exceeded > 0,
+        "RC retry-exceeded counter must be nonzero: {rc_only:?}"
+    );
 }
 
 #[test]
@@ -119,6 +160,38 @@ fn verbs_sweep_replays_byte_identically() {
         verbs_sweep_point(QpTransport::Rc, Verb::Write, 16 << 10, 8, Ns::from_ms(2))
     };
     assert_eq!(format!("{:?}", run()), format!("{:?}", run()));
+}
+
+#[test]
+fn chaos_scenario_replays_byte_identically() {
+    // lossy + flapping + restarting: the hardest determinism case — the
+    // fault RNG stream, retransmission timers and restart events must
+    // all replay bit-identically from the seed
+    let mut cfg = ChaosCfg::default();
+    cfg.conns = 64;
+    cfg.duration = Ns::from_ms(2);
+    cfg.loss = 0.03;
+    cfg.flaps = 2;
+    cfg.server_restarts = 1;
+    let a = format!("{:?}", chaos_send(&cfg));
+    let b = format!("{:?}", chaos_send(&cfg));
+    assert_eq!(a, b);
+
+    // the rc-only ablation too
+    cfg.rc_only = true;
+    let a = format!("{:?}", chaos_send(&cfg));
+    let b = format!("{:?}", chaos_send(&cfg));
+    assert_eq!(a, b);
+
+    // and the loss-0 null plan (the lossless-identity clause): zero fault
+    // counters, still deterministic
+    cfg.rc_only = false;
+    cfg.loss = 0.0;
+    cfg.flaps = 0;
+    cfg.server_restarts = 0;
+    let r = chaos_send(&cfg);
+    assert_eq!(format!("{r:?}"), format!("{:?}", chaos_send(&cfg)));
+    assert_eq!(r.frames_dropped + r.frames_delayed + r.retransmits + r.restarts, 0);
 }
 
 #[test]

@@ -1,0 +1,424 @@
+//! Fault-injection integration: lossy links, RC go-back-N retransmission,
+//! retry exhaustion under link flaps, exactly-once delivery when ACKs are
+//! lost, jitter-induced reordering, node restarts, UD fragment loss and
+//! the daemon's stale-lease reclaim.
+
+use rdmavisor::fabric::fault::{FaultConfig, Flap};
+use rdmavisor::fabric::mr::Access;
+use rdmavisor::fabric::sim::{FabricConfig, Sim};
+use rdmavisor::fabric::time::Ns;
+use rdmavisor::fabric::types::{NodeId, QpTransport, WcStatus};
+use rdmavisor::fabric::verbs;
+use rdmavisor::fabric::wqe::SendWr;
+use rdmavisor::raas::api::{Flags, RaasError};
+use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery};
+use rdmavisor::raas::transport::HostLoad;
+
+/// Two-node RC harness: (cq0, cq1, qpn0, qpn1, local mr, remote mr).
+struct RcPair {
+    cq0: rdmavisor::fabric::types::Cqn,
+    cq1: rdmavisor::fabric::types::Cqn,
+    q0: rdmavisor::fabric::types::Qpn,
+    q1: rdmavisor::fabric::types::Qpn,
+    local: rdmavisor::fabric::mr::MemoryRegion,
+    remote: rdmavisor::fabric::mr::MemoryRegion,
+}
+
+fn rc_pair(sim: &mut Sim) -> RcPair {
+    let cq0 = sim.create_cq(NodeId(0), 1 << 14);
+    let cq1 = sim.create_cq(NodeId(1), 1 << 14);
+    let pair = verbs::create_connected_pair(
+        sim,
+        QpTransport::Rc,
+        NodeId(0),
+        NodeId(1),
+        cq0,
+        cq0,
+        cq1,
+        cq1,
+    );
+    let local = sim.reg_mr(NodeId(0), 64 << 20, Access::REMOTE_RW, true);
+    let remote = sim.reg_mr(NodeId(1), 64 << 20, Access::REMOTE_RW, true);
+    RcPair { cq0, cq1, q0: pair.a.1, q1: pair.b.1, local, remote }
+}
+
+fn drain(sim: &mut Sim) {
+    let mut guard = 0u64;
+    while sim.step().is_some() {
+        guard += 1;
+        assert!(guard < 20_000_000, "simulation did not quiesce");
+    }
+}
+
+#[test]
+fn drops_are_recovered_by_retransmission() {
+    let mut sim = Sim::new(FabricConfig::default());
+    sim.install_faults(FaultConfig { seed: 11, drop_p: 0.08, ..FaultConfig::default() });
+    let h = rc_pair(&mut sim);
+    let n = 40u64;
+    for i in 0..n {
+        sim.post_send(
+            NodeId(0),
+            h.q0,
+            SendWr::write(i, 8 << 10, h.local.key, h.local.addr, h.remote.key, h.remote.addr),
+        )
+        .unwrap();
+    }
+    drain(&mut sim);
+    let cqes = sim.poll_cq(NodeId(0), h.cq0, 10_000);
+    assert_eq!(cqes.len() as u64, n, "every message completes exactly once");
+    let mut seen = std::collections::HashSet::new();
+    let mut ok = 0;
+    for c in &cqes {
+        assert!(seen.insert(c.wr_id), "wr {} completed twice", c.wr_id);
+        if c.status == WcStatus::Success {
+            ok += 1;
+        } else {
+            assert_eq!(c.status, WcStatus::RetryExceeded);
+        }
+    }
+    assert!(ok >= n - 2, "8% loss should rarely exhaust 7 retries: {ok}/{n} ok");
+    assert!(sim.node(NodeId(0)).retransmits > 0, "loss must force retransmissions");
+    let fs = sim.fault_stats().expect("plan installed");
+    assert!(fs.frames_dropped > 0);
+}
+
+#[test]
+fn permanent_flap_exhausts_the_retry_budget() {
+    let mut sim = Sim::new(FabricConfig::default());
+    sim.install_faults(FaultConfig {
+        seed: 1,
+        flaps: vec![Flap {
+            src: NodeId(0),
+            dst: NodeId(1),
+            from: Ns(0),
+            until: Ns(1_000_000_000),
+        }],
+        ..FaultConfig::default()
+    });
+    let h = rc_pair(&mut sim);
+    let n = 5u64;
+    for i in 0..n {
+        sim.post_send(
+            NodeId(0),
+            h.q0,
+            SendWr::write(i, 4096, h.local.key, h.local.addr, h.remote.key, h.remote.addr),
+        )
+        .unwrap();
+    }
+    drain(&mut sim);
+    let cqes = sim.poll_cq(NodeId(0), h.cq0, 100);
+    assert_eq!(cqes.len() as u64, n, "RetryExceeded must complete the window, not hang it");
+    for c in &cqes {
+        assert_eq!(c.status, WcStatus::RetryExceeded, "{c:?}");
+        assert_eq!(c.len, 0);
+    }
+    assert_eq!(sim.node(NodeId(0)).retry_exceeded, n);
+    // the first exhaustion error-flushes the whole QP (real RC flushes
+    // outstanding WRs when the QP faults), so the trigger message burned
+    // its full budget and the rest burned most of theirs
+    let retransmits = sim.node(NodeId(0)).retransmits;
+    let retry_cnt = sim.cfg.nic.retry_cnt as u64;
+    assert!(
+        retransmits >= retry_cnt && retransmits <= n * retry_cnt,
+        "retransmits={retransmits}"
+    );
+    assert_eq!(sim.node(NodeId(0)).qps[h.q0.0].outstanding, 0, "window fully released");
+}
+
+#[test]
+fn lost_acks_are_reacked_without_redelivery() {
+    // flap the ACK direction only, shorter than the retry budget: data
+    // arrives once, duplicates get re-ACKed, the requester completes,
+    // and the responder never delivers twice
+    let mut sim = Sim::new(FabricConfig::default());
+    sim.install_faults(FaultConfig {
+        seed: 3,
+        flaps: vec![Flap { src: NodeId(1), dst: NodeId(0), from: Ns(0), until: Ns(200_000) }],
+        ..FaultConfig::default()
+    });
+    let h = rc_pair(&mut sim);
+    // receive WQEs for the SENDs
+    let mut next = 0u64;
+    verbs::replenish_rq(&mut sim, NodeId(1), h.q1, &h.remote, 8192, 64, &mut next);
+    let n = 8u64;
+    for i in 0..n {
+        sim.post_send(
+            NodeId(0),
+            h.q0,
+            SendWr::send(i, 2048, h.local.key, h.local.addr, i as u32),
+        )
+        .unwrap();
+    }
+    drain(&mut sim);
+    let reqs = sim.poll_cq(NodeId(0), h.cq0, 100);
+    assert_eq!(reqs.len() as u64, n);
+    for c in &reqs {
+        assert_eq!(c.status, WcStatus::Success, "{c:?}");
+    }
+    // exactly-once delivery at the responder
+    let recvs = sim.poll_cq(NodeId(1), h.cq1, 100);
+    assert_eq!(recvs.len() as u64, n, "each message delivered exactly once");
+    let imms: std::collections::HashSet<u32> =
+        recvs.iter().map(|c| c.imm_data.expect("send carries imm")).collect();
+    assert_eq!(imms.len() as u64, n, "no duplicate deliveries");
+    assert!(sim.node(NodeId(1)).gbn_dup_acks > 0, "retransmits must have been re-ACKed");
+    assert!(sim.node(NodeId(0)).retransmits > 0);
+}
+
+#[test]
+fn jitter_reordering_is_recovered_in_order() {
+    let mut sim = Sim::new(FabricConfig::default());
+    sim.install_faults(FaultConfig {
+        seed: 7,
+        jitter_p: 0.3,
+        jitter_ns: (500, 20_000),
+        ..FaultConfig::default()
+    });
+    let h = rc_pair(&mut sim);
+    let mut next = 0u64;
+    verbs::replenish_rq(&mut sim, NodeId(1), h.q1, &h.remote, 16 << 10, 128, &mut next);
+    let n = 30u64;
+    for i in 0..n {
+        sim.post_send(
+            NodeId(0),
+            h.q0,
+            SendWr::send(i, 12 << 10, h.local.key, h.local.addr, i as u32),
+        )
+        .unwrap();
+    }
+    drain(&mut sim);
+    let reqs = sim.poll_cq(NodeId(0), h.cq0, 1000);
+    assert_eq!(reqs.len() as u64, n);
+    for c in &reqs {
+        assert_eq!(c.status, WcStatus::Success, "{c:?}");
+    }
+    let recvs = sim.poll_cq(NodeId(1), h.cq1, 1000);
+    assert_eq!(recvs.len() as u64, n, "reordering must not lose or duplicate messages");
+    let fs = sim.fault_stats().unwrap();
+    assert!(fs.frames_delayed > 0, "jitter plan must actually delay frames");
+}
+
+#[test]
+fn read_responses_survive_loss() {
+    let mut sim = Sim::new(FabricConfig::default());
+    sim.install_faults(FaultConfig { seed: 23, drop_p: 0.1, ..FaultConfig::default() });
+    let h = rc_pair(&mut sim);
+    let n = 10u64;
+    for i in 0..n {
+        sim.post_send(
+            NodeId(0),
+            h.q0,
+            SendWr::read(i, 16 << 10, h.local.key, h.local.addr, h.remote.key, h.remote.addr),
+        )
+        .unwrap();
+    }
+    drain(&mut sim);
+    let cqes = sim.poll_cq(NodeId(0), h.cq0, 100);
+    assert_eq!(cqes.len() as u64, n, "every READ completes exactly once");
+    let ok = cqes.iter().filter(|c| c.status == WcStatus::Success).count() as u64;
+    assert!(ok >= n - 1, "10% loss should rarely exhaust the budget: {ok}/{n}");
+    assert!(sim.node(NodeId(0)).retransmits > 0);
+}
+
+#[test]
+fn node_restart_clears_queued_work_and_quiesces() {
+    let mut sim = Sim::new(FabricConfig::default());
+    sim.install_faults(FaultConfig {
+        seed: 5,
+        restarts: vec![(0, 5_000)],
+        ..FaultConfig::default()
+    });
+    let h = rc_pair(&mut sim);
+    let n = 50u64;
+    for i in 0..n {
+        sim.post_send(
+            NodeId(0),
+            h.q0,
+            SendWr::write(i, 8 << 10, h.local.key, h.local.addr, h.remote.key, h.remote.addr),
+        )
+        .unwrap();
+    }
+    drain(&mut sim);
+    assert_eq!(sim.node(NodeId(0)).restarts, 1);
+    assert_eq!(sim.fault_stats().unwrap().restarts, 1);
+    // messages queued or in flight at the restart never complete; the
+    // rest completed before it — either way the timeline drains and the
+    // window is not wedged
+    let cqes = sim.poll_cq(NodeId(0), h.cq0, 1000);
+    assert!((cqes.len() as u64) < n, "the restart must have killed queued work");
+    assert_eq!(sim.node(NodeId(0)).qps[h.q0.0].outstanding, 0);
+    assert!(sim.node(NodeId(0)).engine_queue_len() == 0);
+}
+
+// ------------------------------------------------------- daemon layer
+
+fn lossy_cluster(fault: FaultConfig, client: DaemonConfig, server: DaemonConfig) -> (Sim, Vec<Daemon>) {
+    let mut fcfg = FabricConfig::default();
+    fcfg.nodes = 2;
+    fcfg.sq_depth = 8192;
+    let mut sim = Sim::new(fcfg);
+    sim.install_faults(fault);
+    let daemons = vec![
+        Daemon::start(&mut sim, NodeId(0), client),
+        Daemon::start(&mut sim, NodeId(1), server),
+    ];
+    (sim, daemons)
+}
+
+fn pump_to_quiescence(sim: &mut Sim, daemons: &mut [Daemon]) {
+    for _ in 0..200_000 {
+        for d in daemons.iter_mut() {
+            d.pump(sim);
+        }
+        if sim.step().is_none() {
+            for d in daemons.iter_mut() {
+                d.pump(sim);
+            }
+            if sim.pending_events() == 0 {
+                return;
+            }
+        }
+    }
+    panic!("daemon cluster did not quiesce");
+}
+
+#[test]
+fn ud_fragment_loss_discards_partials_and_balances_leases() {
+    let mut server_cfg = DaemonConfig::default();
+    server_cfg.reassembly_timeout_ns = 500_000;
+    let (mut sim, mut daemons) = lossy_cluster(
+        FaultConfig { seed: 19, drop_p: 0.15, ..FaultConfig::default() },
+        DaemonConfig::default(),
+        server_cfg,
+    );
+    let c_app = daemons[0].register_app();
+    let s_app = daemons[1].register_app();
+    daemons[1].listen(s_app, 1);
+    let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+
+    // 30 × 64 KB pinned-UD messages = 480 fragments at 15% loss: many
+    // messages lose a fragment and must be discarded by reassembly
+    let n = 30u64;
+    for i in 0..n {
+        daemons[0]
+            .send(&mut sim, conn, 64 << 10, Flags::UD, i, HostLoad::default())
+            .unwrap();
+    }
+    pump_to_quiescence(&mut sim, &mut daemons);
+
+    // the sender's completions are LOCAL — UD loss never hangs them, so
+    // every staging lease comes back through the normal path
+    assert_eq!(daemons[0].stats.ops_completed, n);
+    assert_eq!(daemons[0].pool.leased_bytes, 0, "no lease leaked");
+    // delivered + torn = sent
+    let delivered = daemons[1].stats.msgs_delivered;
+    let torn = daemons[1].reassembly.dropped
+        + daemons[1].reassembly.expired
+        + daemons[1].reassembly.in_progress() as u64;
+    assert!(delivered < n, "15% fragment loss must tear some messages");
+    assert!(
+        daemons[1].reassembly.dropped + daemons[1].reassembly.orphan_fragments > 0,
+        "losses must surface in the reassembly counters: {:?}",
+        daemons[1].reassembly
+    );
+    assert!(delivered + torn <= n, "a message is delivered at most once");
+}
+
+#[test]
+fn client_restart_reclaims_stale_leases_and_fails_the_ops() {
+    let mut client_cfg = DaemonConfig::default();
+    client_cfg.lease_timeout_ns = 200_000;
+    let (mut sim, mut daemons) = lossy_cluster(
+        FaultConfig { seed: 2, restarts: vec![(0, 5_000)], ..FaultConfig::default() },
+        client_cfg,
+        DaemonConfig::default(),
+    );
+    let c_app = daemons[0].register_app();
+    let s_app = daemons[1].register_app();
+    daemons[1].listen(s_app, 1);
+    let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+
+    // 200 small RC sends: far more than can complete before the 5 µs
+    // restart clears the SQ and CQs under them
+    let n = 200u64;
+    for i in 0..n {
+        match daemons[0].send(&mut sim, conn, 1024, Flags::default(), i, HostLoad::default()) {
+            Ok(_) | Err(RaasError::PoolExhausted) => {}
+            Err(e) => panic!("send {i}: {e}"),
+        }
+    }
+    daemons[0].pump(&mut sim);
+    pump_to_quiescence(&mut sim, &mut daemons);
+    // advance virtual time past the lease deadline, then pump to reclaim
+    sim.schedule(Ns(1_000_000), 1);
+    while sim.step().is_some() {}
+    daemons[0].pump(&mut sim);
+
+    assert_eq!(daemons[0].pool.leased_bytes, 0, "all leases back");
+    assert!(daemons[0].stats.leases_reclaimed > 0, "restart must strand some leases");
+    assert_eq!(sim.node(NodeId(0)).restarts, 1);
+    // every reclaimed op surfaced to the app as a failed completion
+    let mut failed = 0;
+    while let Some(d) = daemons[0].recv(&mut sim, c_app) {
+        if matches!(d, Delivery::OpComplete { ok: false, .. }) {
+            failed += 1;
+        }
+    }
+    assert_eq!(failed, daemons[0].stats.leases_reclaimed, "failure deliveries match reclaims");
+}
+
+#[test]
+fn server_restart_recovers_and_client_completes_everything() {
+    // server soft-restarts mid-run; its daemon refills the SRQ on later
+    // pumps and the client's RC machinery (RNR + go-back-N retransmit)
+    // either delivers or fails each op — nothing hangs, nothing leaks
+    let (mut sim, mut daemons) = lossy_cluster(
+        FaultConfig { seed: 4, restarts: vec![(1, 40_000)], ..FaultConfig::default() },
+        DaemonConfig::default(),
+        DaemonConfig::default(),
+    );
+    let c_app = daemons[0].register_app();
+    let s_app = daemons[1].register_app();
+    daemons[1].listen(s_app, 1);
+    let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+
+    let n = 100u64;
+    for i in 0..n {
+        daemons[0]
+            .send(&mut sim, conn, 512, Flags::default(), i, HostLoad::default())
+            .unwrap();
+    }
+    pump_to_quiescence(&mut sim, &mut daemons);
+    assert_eq!(sim.node(NodeId(1)).restarts, 1);
+    assert_eq!(
+        daemons[0].stats.ops_completed,
+        n,
+        "every op completes (ok or failed), none hangs"
+    );
+    assert_eq!(daemons[0].pool.leased_bytes, 0);
+}
+
+#[test]
+fn null_plan_is_not_installed() {
+    let mut sim = Sim::new(FabricConfig::default());
+    sim.install_faults(FaultConfig::default());
+    assert!(!sim.faults_active(), "null plan must leave the lossless simulator untouched");
+    assert!(sim.fault_stats().is_none());
+
+    // and a lossless run on it behaves exactly like one that never heard
+    // of the fault layer: no retransmits, no discards, no timers
+    let h = rc_pair(&mut sim);
+    for i in 0..10u64 {
+        sim.post_send(
+            NodeId(0),
+            h.q0,
+            SendWr::write(i, 8 << 10, h.local.key, h.local.addr, h.remote.key, h.remote.addr),
+        )
+        .unwrap();
+    }
+    drain(&mut sim);
+    assert_eq!(sim.poll_cq(NodeId(0), h.cq0, 100).len(), 10);
+    let n0 = sim.node(NodeId(0));
+    assert_eq!(n0.retransmits + n0.retry_exceeded + n0.gbn_discards + n0.gbn_dup_acks, 0);
+}

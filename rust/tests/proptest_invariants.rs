@@ -2,12 +2,13 @@
 //! rings, cache, conservation) using the in-crate prop harness.
 
 use rdmavisor::fabric::cache::{IcmCache, IcmKey};
+use rdmavisor::fabric::fault::FaultConfig;
 use rdmavisor::fabric::sim::{FabricConfig, Sim};
 use rdmavisor::fabric::time::Ns;
-use rdmavisor::fabric::types::{NodeId, QpTransport, Verb};
+use rdmavisor::fabric::types::{NodeId, QpTransport, Verb, WcStatus};
 use rdmavisor::raas::api::Flags;
 use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery};
-use rdmavisor::raas::migrate::{decide, DestState, MigrationConfig};
+use rdmavisor::raas::migrate::{decide, DestState, MigrationConfig, Reassembler};
 use rdmavisor::raas::shmem::SpscRing;
 use rdmavisor::raas::transport::{HostLoad, Selector, SelectorConfig};
 use rdmavisor::raas::vqpn::{pack_wr_id, unpack_seq, unpack_vqpn, ConnTable, Vqpn};
@@ -281,6 +282,160 @@ fn prop_daemon_batching_conserves_ops() {
         }
         if daemons[0].pool.leased_bytes != 0 {
             return Err(format!("leaked leases: {} bytes", daemons[0].pool.leased_bytes));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rc_exactly_once_under_random_drop_plans() {
+    use rdmavisor::fabric::verbs;
+    use rdmavisor::fabric::wqe::SendWr;
+
+    // ∀ (fault seed, loss rate ≤ 12%, message count): every RC message
+    // completes at the requester EXACTLY once (success or RetryExceeded),
+    // the responder delivers every message AT MOST once, and a success
+    // implies a delivery. Loss, bursts and jitter reordering included.
+    struct Case;
+    impl Gen<(u64, u64, usize)> for Case {
+        fn gen(&self, rng: &mut Rng) -> (u64, u64, usize) {
+            (
+                rng.next_u64(),                 // fault stream seed
+                U64Range(0, 120).gen(rng),      // loss in millis
+                UsizeRange(1, 24).gen(rng),     // messages
+            )
+        }
+    }
+    check(53, 25, &Case, |&(fseed, loss_m, n)| {
+        let mut sim = Sim::new(FabricConfig::default());
+        sim.install_faults(FaultConfig {
+            seed: fseed,
+            drop_p: loss_m as f64 / 1000.0,
+            burst_p: 0.2,
+            burst_len: (2, 6),
+            jitter_p: 0.05,
+            jitter_ns: (200, 3000),
+            ..FaultConfig::default()
+        });
+        let cq0 = sim.create_cq(NodeId(0), 8192);
+        let cq1 = sim.create_cq(NodeId(1), 8192);
+        let pair = verbs::create_connected_pair(
+            &mut sim, QpTransport::Rc, NodeId(0), NodeId(1), cq0, cq0, cq1, cq1,
+        );
+        let local = sim.reg_mr(NodeId(0), 32 << 20, rdmavisor::fabric::mr::Access::REMOTE_RW, true);
+        let remote =
+            sim.reg_mr(NodeId(1), 32 << 20, rdmavisor::fabric::mr::Access::REMOTE_RW, true);
+        let mut next_recv = 0u64;
+        verbs::replenish_rq(&mut sim, NodeId(1), pair.b.1, &remote, 8192, 200, &mut next_recv);
+        for i in 0..n {
+            let len = 1 + (i as u64 * 977) % 8000;
+            sim.post_send(
+                NodeId(0),
+                pair.a.1,
+                SendWr::send(i as u64, len, local.key, local.addr, i as u32),
+            )
+            .map_err(|e| format!("post {i}: {e}"))?;
+        }
+        let mut guard = 0u64;
+        while sim.step().is_some() {
+            guard += 1;
+            if guard > 10_000_000 {
+                return Err("did not quiesce (retransmission livelock?)".into());
+            }
+        }
+        let reqs = sim.poll_cq(NodeId(0), cq0, 100_000);
+        if reqs.len() != n {
+            return Err(format!("{} of {n} requester completions", reqs.len()));
+        }
+        let mut seen = std::collections::HashSet::new();
+        let mut success = std::collections::HashSet::new();
+        for c in &reqs {
+            if !seen.insert(c.wr_id) {
+                return Err(format!("wr {} completed twice", c.wr_id));
+            }
+            match c.status {
+                WcStatus::Success => {
+                    success.insert(c.wr_id as u32);
+                }
+                WcStatus::RetryExceeded => {}
+                other => return Err(format!("unexpected status {other:?}")),
+            }
+        }
+        let mut delivered = std::collections::HashSet::new();
+        for c in sim.poll_cq(NodeId(1), cq1, 100_000) {
+            let imm = c.imm_data.ok_or("recv CQE without imm")?;
+            if !delivered.insert(imm) {
+                return Err(format!("message {imm} delivered twice (exactly-once broken)"));
+            }
+        }
+        for s in &success {
+            if !delivered.contains(s) {
+                return Err(format!("message {s} succeeded but was never delivered"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reassembler_completes_exactly_the_undamaged_messages() {
+    use rdmavisor::raas::vqpn::Vqpn;
+
+    // ∀ (fragment-count vector, drop plan): feeding the surviving
+    // fragments in order (single path, distinct mod-64 tags), a message
+    // reassembles iff NO fragment of it was dropped, and the reported
+    // total is the sum of its fragment lengths. Orphans/drops never
+    // produce a completion.
+    struct Plan;
+    impl Gen<(Vec<u64>, u64, u64)> for Plan {
+        fn gen(&self, rng: &mut Rng) -> (Vec<u64>, u64, u64) {
+            let counts = VecGen { elem: U64Range(1, 6), min_len: 1, max_len: 12 }.gen(rng);
+            (counts, rng.next_u64(), U64Range(0, 400).gen(rng))
+        }
+    }
+    check(59, 150, &Plan, |(counts, drop_seed, p_millis)| {
+        let p = *p_millis as f64 / 1000.0;
+        let mut drop_rng = Rng::new(*drop_seed);
+        let mut r = Reassembler::new();
+        let v = Vqpn(3);
+        let mut t = 0u64;
+        let mut expected_completed = 0u64;
+        for (m, &frags) in counts.iter().enumerate() {
+            let sizes: Vec<u64> = (0..frags).map(|k| 1000 + (m as u64 * 7 + k)).collect();
+            let survived: Vec<bool> = (0..frags).map(|_| !drop_rng.chance(p)).collect();
+            let intact = survived.iter().all(|&s| s);
+            if intact {
+                expected_completed += 1;
+            }
+            let mut got = None;
+            for (k, &ok) in survived.iter().enumerate() {
+                if !ok {
+                    continue;
+                }
+                t += 1;
+                got = r.accept(
+                    v,
+                    (m % 64) as u8,
+                    k as u16,
+                    k as u64 + 1 == frags,
+                    sizes[k],
+                    Ns(t),
+                );
+            }
+            if intact {
+                let total: u64 = sizes.iter().sum();
+                if got != Some(total) {
+                    return Err(format!("msg {m}: expected Some({total}), got {got:?}"));
+                }
+            } else if got.is_some() {
+                return Err(format!("msg {m} lost a fragment yet completed: {got:?}"));
+            }
+        }
+        if r.completed != expected_completed {
+            return Err(format!(
+                "completed {} != undamaged {}",
+                r.completed, expected_completed
+            ));
         }
         Ok(())
     });

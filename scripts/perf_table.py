@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Render BENCH_PR3.json (from `rdmavisor bench fig9` / bench_pr3.sh) as
+the markdown perf table README.md quotes. Stdlib only.
+
+    python3 scripts/perf_table.py BENCH_PR3.json > BENCH_PR3.md
+
+CI runs this on every push so the artifact carries both the raw JSON and
+the human-readable table; paste the table into README.md's Performance
+section when refreshing the recorded numbers.
+"""
+import json
+import sys
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR3.json"
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+
+    budget = doc.get("budget", "?")
+    points = doc.get("points", [])
+    print(f"### Fig-9 wall clock per connection count (budget: {budget})\n")
+    print("| conns | servers | wall ms | events | events/sec | adaptive Gb/s | rc-only Gb/s |")
+    print("|---:|---:|---:|---:|---:|---:|---:|")
+    for p in points:
+        print(
+            "| {conns:.0f} | {servers:.0f} | {wall_ms:.1f} | {events:.0f} "
+            "| {eps:.0f} | {ag:.2f} | {rg:.2f} |".format(
+                conns=p.get("conns", 0),
+                servers=p.get("servers", 0),
+                wall_ms=p.get("wall_ms", 0),
+                events=p.get("events", 0),
+                eps=p.get("events_per_sec", 0) or 0,
+                ag=p.get("adaptive_gbps", 0) or 0,
+                rg=p.get("rc_only_gbps", 0) or 0,
+            )
+        )
+    total_events = doc.get("total_events", 0)
+    total_wall = doc.get("total_wall_ms", 0)
+    eps = doc.get("events_per_sec", 0) or 0
+    print(
+        f"\nTotal: {total_events:.0f} events in {total_wall:.0f} ms "
+        f"({eps:.0f} events/sec aggregate)."
+    )
+    ss = doc.get("simstep")
+    if ss:
+        print(
+            "\n### Raw scheduler throughput (`bench simstep`)\n\n"
+            "| QP pairs | window | msg bytes | sim ms | events | best events/sec |\n"
+            "|---:|---:|---:|---:|---:|---:|\n"
+            "| {pairs:.0f} | {window:.0f} | {msg:.0f} | {sim_ms:.0f} "
+            "| {events:.0f} | {eps:.0f} |".format(
+                pairs=ss.get("pairs", 0),
+                window=ss.get("window", 0),
+                msg=ss.get("msg_bytes", 0),
+                sim_ms=ss.get("sim_ms", 0),
+                events=ss.get("events", 0),
+                eps=ss.get("events_per_sec", 0) or 0,
+            )
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

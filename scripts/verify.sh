@@ -33,6 +33,18 @@ if awk '/^\[dependencies\]/{f=1;next} /^\[/{f=0} f && NF && $1 !~ /^#/' rust/Car
 fi
 echo "ok: [dependencies] empty"
 
+echo "== toolchain present =="
+# Fail LOUDLY, not silently: every cargo stage below is the actual gate,
+# and an environment without a toolchain must read as a failure (three
+# PRs shipped on static review because this was easy to miss).
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "FAIL: cargo not found on PATH — the tier-1 build/test/clippy stages" >&2
+    echo "      CANNOT run. Install a Rust toolchain (rustup.rs) and re-run;" >&2
+    echo "      do NOT treat this verify as passed." >&2
+    exit 1
+fi
+cargo --version
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
@@ -71,6 +83,17 @@ case "$out9" in
             *) echo "FAIL: fig 9 JSON lacks the fig9_scale series: ${out9:0:160}" >&2; exit 1 ;;
         esac ;;
     *) echo "FAIL: unexpected fig 9 output: ${out9:0:120}" >&2; exit 1 ;;
+esac
+
+echo "== smoke: fig 10 (fault-injection chaos sweep) =="
+out10="$(cargo run --quiet --release -- fig --id 10 --quick 2>/dev/null)"
+case "$out10" in
+    '{"budget"'*|'{'*'"command":"fig"'*)
+        case "$out10" in
+            *'"fig10_chaos"'*) echo "ok: fig --id 10 printed the fig10_chaos series" ;;
+            *) echo "FAIL: fig 10 JSON lacks the fig10_chaos series: ${out10:0:160}" >&2; exit 1 ;;
+        esac ;;
+    *) echo "FAIL: unexpected fig 10 output: ${out10:0:120}" >&2; exit 1 ;;
 esac
 
 echo "== smoke: bench simstep (DES scheduler throughput) =="
