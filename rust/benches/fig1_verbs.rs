@@ -5,7 +5,7 @@ use rdmavisor::util::bench::Bencher;
 
 fn main() {
     let budget = Budget::from_env();
-    let rows = fig1(budget);
+    let rows = fig1(budget, rdmavisor::util::parallel::jobs_from_env());
     println!("{}", print_fig1(&rows));
     // paper-shape checks (who wins, where the knees are)
     let large = rows.iter().find(|r| r.msg_bytes == 1 << 20).unwrap();

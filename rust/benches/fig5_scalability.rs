@@ -2,7 +2,7 @@
 use rdmavisor::figures::{fig5, print_fig5, Budget};
 
 fn main() {
-    let rows = fig5(Budget::from_env());
+    let rows = fig5(Budget::from_env(), rdmavisor::util::parallel::jobs_from_env());
     println!("{}", print_fig5(&rows));
     let low = rows.iter().find(|r| r.conns <= 100).unwrap();
     let high = rows.iter().max_by_key(|r| r.conns).unwrap();

@@ -2,7 +2,7 @@
 use rdmavisor::figures::{fig6, print_fig6, Budget};
 
 fn main() {
-    let rows = fig6(Budget::from_env());
+    let rows = fig6(Budget::from_env(), rdmavisor::util::parallel::jobs_from_env());
     println!("{}", print_fig6(&rows));
     // at the lock-bound point (12 threads) the paper's ordering must hold
     if let Some(r) = rows.iter().find(|r| r.threads == 12) {

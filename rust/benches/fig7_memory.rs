@@ -2,7 +2,7 @@
 use rdmavisor::figures::{fig78, print_fig7, Budget};
 
 fn main() {
-    let rows = fig78(Budget::from_env());
+    let rows = fig78(Budget::from_env(), rdmavisor::util::parallel::jobs_from_env());
     println!("{}", print_fig7(&rows));
     let last = rows.last().unwrap();
     assert!(last.naive_mem > last.apps as f64 * 0.75, "naive memory grows ~linearly");

@@ -2,7 +2,7 @@
 use rdmavisor::figures::{fig78, print_fig8, Budget};
 
 fn main() {
-    let rows = fig78(Budget::from_env());
+    let rows = fig78(Budget::from_env(), rdmavisor::util::parallel::jobs_from_env());
     println!("{}", print_fig8(&rows));
     let last = rows.last().unwrap();
     assert!(last.naive_cpu > last.apps as f64 * 0.75, "naive CPU grows ~linearly (poll thread per app)");

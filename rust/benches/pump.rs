@@ -1,0 +1,34 @@
+//! Daemon data-plane throughput (EXPERIMENTS.md §Perf): ops/sec through
+//! one daemon's pump loop — Worker batch flush, Poller CQ drain,
+//! wr_id-slab completion, inbox delivery, SRQ refill — on a closed-loop
+//! READ storm. The number the dense-table/op-slab densification moves
+//! (`bench simstep` isolates the fabric below it). `cargo bench --bench
+//! pump`, or `rdmavisor bench pump` for the JSON form; quick mode via
+//! `RDMAVISOR_BENCH_QUICK=1`.
+
+use rdmavisor::fabric::time::Ns;
+use rdmavisor::util::bench::Bencher;
+use rdmavisor::workload::scenarios::pump_storm;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let quick = std::env::var("RDMAVISOR_BENCH_QUICK").is_ok();
+    let (conns, sim_ms) = if quick { (128, 2) } else { (512, 8) };
+
+    b.bench_with_metric("raas/pump_storm_ops_per_sec", "mops", || {
+        let t0 = std::time::Instant::now();
+        let (ops, _events) = pump_storm(conns, 4096, 4, Ns::from_ms(sim_ms));
+        ops as f64 / t0.elapsed().as_secs_f64() / 1e6
+    });
+
+    // small messages: more ops per byte, stresses the per-op slab and
+    // inbox paths instead of the copy model
+    b.bench_with_metric("raas/pump_storm_512B_ops_per_sec", "mops", || {
+        let t0 = std::time::Instant::now();
+        let (ops, _events) = pump_storm(conns, 512, 4, Ns::from_ms(sim_ms));
+        ops as f64 / t0.elapsed().as_secs_f64() / 1e6
+    });
+
+    std::fs::create_dir_all("results").ok();
+    b.write_tsv("results/bench_pump.tsv").ok();
+}

@@ -170,6 +170,129 @@ impl<T> std::ops::Index<u32> for DenseTable<T> {
     }
 }
 
+/// Dense id-keyed map for externally assigned small ids.
+///
+/// The daemon's per-remote state (shared QPs, peer pool credentials,
+/// pending WR batches, migration entries) and per-vQPN state (UD message
+/// tags, reassembly partials) are keyed by node ids / vQPNs, which are
+/// small and dense but — unlike [`DenseTable`] ids — assigned by the
+/// caller and insertable in any order. `IdMap` stores them in a
+/// `Vec<Option<T>>` indexed directly by the id: lookups on the per-op
+/// data plane are one bounds check, no hashing, and iteration is always
+/// in ascending id order, so nothing about the backing store can leak
+/// into the deterministic event timeline.
+#[derive(Clone, Debug)]
+pub struct IdMap<T> {
+    slots: Vec<Option<T>>,
+    live: usize,
+}
+
+impl<T> Default for IdMap<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> IdMap<T> {
+    /// Empty map.
+    pub fn new() -> Self {
+        IdMap { slots: Vec::new(), live: 0 }
+    }
+
+    /// Insert (or replace) the entry for `id`, growing the backing
+    /// vector as needed; returns the previous value, if any.
+    pub fn insert(&mut self, id: u32, value: T) -> Option<T> {
+        let idx = id as usize;
+        if idx >= self.slots.len() {
+            self.slots.resize_with(idx + 1, || None);
+        }
+        let old = self.slots[idx].replace(value);
+        if old.is_none() {
+            self.live += 1;
+        }
+        old
+    }
+
+    /// Look up by id.
+    #[inline]
+    pub fn get(&self, id: u32) -> Option<&T> {
+        self.slots.get(id as usize).and_then(|s| s.as_ref())
+    }
+
+    /// Mutable lookup by id.
+    #[inline]
+    pub fn get_mut(&mut self, id: u32) -> Option<&mut T> {
+        self.slots.get_mut(id as usize).and_then(|s| s.as_mut())
+    }
+
+    /// Mutable access to `id`, inserting `T::default()` when vacant.
+    pub fn entry_or_default(&mut self, id: u32) -> &mut T
+    where
+        T: Default,
+    {
+        let idx = id as usize;
+        if idx >= self.slots.len() {
+            self.slots.resize_with(idx + 1, || None);
+        }
+        if self.slots[idx].is_none() {
+            self.slots[idx] = Some(T::default());
+            self.live += 1;
+        }
+        self.slots[idx].as_mut().expect("just populated")
+    }
+
+    /// Remove and return the entry for `id`.
+    pub fn remove(&mut self, id: u32) -> Option<T> {
+        let old = self.slots.get_mut(id as usize).and_then(|s| s.take());
+        if old.is_some() {
+            self.live -= 1;
+        }
+        old
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    /// True when no entry is present.
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Iterate `(id, &value)` in ascending id order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &T)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|v| (i as u32, v)))
+    }
+
+    /// Iterate `(id, &mut value)` in ascending id order.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (u32, &mut T)> {
+        self.slots
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_mut().map(|v| (i as u32, v)))
+    }
+
+    /// Keep only the entries for which `f` returns true (ascending id
+    /// order); returns how many were dropped.
+    pub fn retain(&mut self, mut f: impl FnMut(u32, &T) -> bool) -> usize {
+        let mut dropped = 0;
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(v) = slot {
+                if !f(i as u32, v) {
+                    *slot = None;
+                    dropped += 1;
+                }
+            }
+        }
+        self.live -= dropped;
+        dropped
+    }
+}
+
 /// Completion status codes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WcStatus {
@@ -228,6 +351,39 @@ mod tests {
         assert_eq!(t.get(3), None);
         *t.get_mut(1).unwrap() = "c";
         assert_eq!(t.iter().copied().collect::<Vec<_>>(), vec!["c", "b"]);
+    }
+
+    #[test]
+    fn id_map_basics() {
+        let mut m: IdMap<&str> = IdMap::new();
+        assert!(m.is_empty());
+        assert_eq!(m.insert(5, "a"), None);
+        assert_eq!(m.insert(1, "b"), None);
+        assert_eq!(m.insert(5, "c"), Some("a"));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get(5), Some(&"c"));
+        assert_eq!(m.get(0), None);
+        assert_eq!(m.get(99), None);
+        // iteration is ascending-id, never insertion order
+        let ids: Vec<u32> = m.iter().map(|(i, _)| i).collect();
+        assert_eq!(ids, vec![1, 5]);
+        assert_eq!(m.remove(1), Some("b"));
+        assert_eq!(m.remove(1), None);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn id_map_entry_and_retain() {
+        let mut m: IdMap<Vec<u32>> = IdMap::new();
+        m.entry_or_default(3).push(7);
+        m.entry_or_default(3).push(8);
+        m.entry_or_default(0).push(1);
+        assert_eq!(m.get(3), Some(&vec![7, 8]));
+        assert_eq!(m.len(), 2);
+        let dropped = m.retain(|id, _| id != 3);
+        assert_eq!(dropped, 1);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.get(3), None);
     }
 
     #[test]

@@ -6,12 +6,20 @@
 //! criterion-style benches in `rust/benches/` call the same functions, so
 //! `cargo bench`, `rdmavisor fig --id N` (JSON output) and
 //! `rdmavisor figures --all` all produce identical numbers.
+//!
+//! Every sweep function takes a `jobs` count (the CLI's `--jobs N`):
+//! each independent sweep point runs its own `Sim` on its own thread via
+//! [`crate::util::parallel::map_indexed`] and the rows are merged in
+//! index order, so the serialized output of `--jobs N` is byte-for-byte
+//! the output of the serial runner (`--jobs 1`, the exact old code
+//! path) — `tests/determinism.rs` gates this.
 
 use crate::fabric::sim::FabricConfig;
 use crate::fabric::time::Ns;
 use crate::fabric::types::{QpTransport, Verb};
 use crate::fabric::verbs::capability_matrix;
 use crate::metrics::Series;
+use crate::util::parallel;
 use crate::workload::scenarios::{
     chaos_send, locked_random_read, naive_random_read, raas_random_read, scale_send,
     verbs_sweep_point, ChaosCfg, ChaosRun, RunStats, ScaleCfg, ScaleRun, ScenarioCfg,
@@ -111,24 +119,22 @@ pub struct Fig1Row {
     pub ud_send: f64,
 }
 
-/// Fig 1: single-QP-pair throughput vs message size, per (transport, verb).
-pub fn fig1(budget: Budget) -> Vec<Fig1Row> {
+/// Fig 1: single-QP-pair throughput vs message size, per (transport,
+/// verb), one size point per worker at `jobs > 1`.
+pub fn fig1(budget: Budget, jobs: usize) -> Vec<Fig1Row> {
     let d = budget.duration();
     let window = 16;
-    FIG1_SIZES
-        .iter()
-        .map(|&sz| Fig1Row {
-            msg_bytes: sz,
-            rc_read: verbs_sweep_point(QpTransport::Rc, Verb::Read, sz, window, d),
-            rc_write: verbs_sweep_point(QpTransport::Rc, Verb::Write, sz, window, d),
-            uc_write: verbs_sweep_point(QpTransport::Uc, Verb::Write, sz, window, d),
-            ud_send: if sz <= 4096 {
-                verbs_sweep_point(QpTransport::Ud, Verb::Send, sz, window, d)
-            } else {
-                f64::NAN
-            },
-        })
-        .collect()
+    parallel::map_indexed(FIG1_SIZES.to_vec(), jobs, |_, sz| Fig1Row {
+        msg_bytes: sz,
+        rc_read: verbs_sweep_point(QpTransport::Rc, Verb::Read, sz, window, d),
+        rc_write: verbs_sweep_point(QpTransport::Rc, Verb::Write, sz, window, d),
+        uc_write: verbs_sweep_point(QpTransport::Uc, Verb::Write, sz, window, d),
+        ud_send: if sz <= 4096 {
+            verbs_sweep_point(QpTransport::Ud, Verb::Send, sz, window, d)
+        } else {
+            f64::NAN
+        },
+    })
 }
 
 /// Render the Fig-1 table.
@@ -167,25 +173,22 @@ pub struct Fig5Row {
 }
 
 /// Fig 5: scalability — random 64 KB READ throughput vs #connections.
-pub fn fig5(budget: Budget) -> Vec<Fig5Row> {
+pub fn fig5(budget: Budget, jobs: usize) -> Vec<Fig5Row> {
     let conns: Vec<usize> = match budget {
         Budget::Quick => vec![50, 200, 400, 600, 800],
         Budget::Full => FIG5_CONNS.to_vec(),
     };
-    conns
-        .into_iter()
-        .map(|c| {
-            let mut cfg = ScenarioCfg::default();
-            cfg.conns = c;
-            // fig 5 always runs a long window: with hundreds of outstanding
-            // 64 KB reads one closed-loop round takes ~10 ms, and the
-            // ICM-thrash regime develops only after reposts become
-            // engine-gated
-            cfg.duration = Ns::from_ms(40);
-            cfg.warmup_frac = 0.4;
-            Fig5Row { conns: c, naive: naive_random_read(&cfg), raas: raas_random_read(&cfg) }
-        })
-        .collect()
+    parallel::map_indexed(conns, jobs, |_, c| {
+        let mut cfg = ScenarioCfg::default();
+        cfg.conns = c;
+        // fig 5 always runs a long window: with hundreds of outstanding
+        // 64 KB reads one closed-loop round takes ~10 ms, and the
+        // ICM-thrash regime develops only after reposts become
+        // engine-gated
+        cfg.duration = Ns::from_ms(40);
+        cfg.warmup_frac = 0.4;
+        Fig5Row { conns: c, naive: naive_random_read(&cfg), raas: raas_random_read(&cfg) }
+    })
 }
 
 /// Render the Fig-5 table.
@@ -227,27 +230,24 @@ pub struct Fig6Row {
 /// Fig 6 uses small (512 B) random reads so per-op costs (and therefore
 /// lock serialization) dominate; the paper does not state the size — this
 /// assumption is recorded in EXPERIMENTS.md.
-pub fn fig6(budget: Budget) -> Vec<Fig6Row> {
+pub fn fig6(budget: Budget, jobs: usize) -> Vec<Fig6Row> {
     let threads: Vec<usize> = match budget {
         Budget::Quick => vec![6, 12, 24],
         Budget::Full => FIG6_THREADS.to_vec(),
     };
-    threads
-        .into_iter()
-        .map(|t| {
-            let mut cfg = ScenarioCfg::default();
-            cfg.conns = t;
-            cfg.msg_bytes = 512;
-            cfg.window = 4;
-            cfg.duration = budget.duration();
-            Fig6Row {
-                threads: t,
-                raas: raas_random_read(&cfg),
-                locked_q3: locked_random_read(&cfg, 3),
-                locked_q6: locked_random_read(&cfg, 6),
-            }
-        })
-        .collect()
+    parallel::map_indexed(threads, jobs, |_, t| {
+        let mut cfg = ScenarioCfg::default();
+        cfg.conns = t;
+        cfg.msg_bytes = 512;
+        cfg.window = 4;
+        cfg.duration = budget.duration();
+        Fig6Row {
+            threads: t,
+            raas: raas_random_read(&cfg),
+            locked_q3: locked_random_read(&cfg, 3),
+            locked_q6: locked_random_read(&cfg, 6),
+        }
+    })
 }
 
 /// Render the Fig-6 table.
@@ -286,7 +286,7 @@ pub struct Fig78Row {
 
 /// Figs 7 & 8: normalized memory/CPU vs number of applications. One unit =
 /// the resources one naive application consumes (the paper's normalization).
-pub fn fig78(budget: Budget) -> Vec<Fig78Row> {
+pub fn fig78(budget: Budget, jobs: usize) -> Vec<Fig78Row> {
     let conns_per_app = 16;
     let run = |apps: u32| -> (RunStats, RunStats) {
         let mut cfg = ScenarioCfg::default();
@@ -304,18 +304,16 @@ pub fn fig78(budget: Budget) -> Vec<Fig78Row> {
         Budget::Quick => vec![1, 4, 16],
         Budget::Full => FIG78_APPS.to_vec(),
     };
-    apps.into_iter()
-        .map(|a| {
-            let (n, r) = run(a);
-            Fig78Row {
-                apps: a,
-                naive_mem: n.mem_bytes as f64 / unit_mem,
-                raas_mem: r.mem_bytes as f64 / unit_mem,
-                naive_cpu: n.cpu_cores / unit_cpu,
-                raas_cpu: r.cpu_cores / unit_cpu,
-            }
-        })
-        .collect()
+    parallel::map_indexed(apps, jobs, |_, a| {
+        let (n, r) = run(a);
+        Fig78Row {
+            apps: a,
+            naive_mem: n.mem_bytes as f64 / unit_mem,
+            raas_mem: r.mem_bytes as f64 / unit_mem,
+            naive_cpu: n.cpu_cores / unit_cpu,
+            raas_cpu: r.cpu_cores / unit_cpu,
+        }
+    })
 }
 
 /// Render the Fig-7 (memory) table.
@@ -387,28 +385,33 @@ pub fn fig9_conns(budget: Budget) -> Vec<usize> {
 }
 
 /// Fig 9: thousand-connection scale — adaptive RC↔UD migration vs the
-/// RC-only ablation, 64 B–4 KB closed-loop `send()` traffic.
-pub fn fig9(budget: Budget) -> Vec<Fig9Row> {
-    fig9_conns(budget)
+/// RC-only ablation, 64 B–4 KB closed-loop `send()` traffic. Each
+/// (connection count, ablation) pair is its own independent `Sim`, so
+/// the parallel runner schedules them as separate work items.
+pub fn fig9(budget: Budget, jobs: usize) -> Vec<Fig9Row> {
+    let conns = fig9_conns(budget);
+    let mut items = Vec::with_capacity(conns.len() * 2);
+    for &c in &conns {
+        items.push((c, false));
+        items.push((c, true));
+    }
+    let runs = parallel::map_indexed(items, jobs, |_, (c, rc_only)| {
+        scale_send(&fig9_cfg(c, budget, rc_only))
+    });
+    conns
         .into_iter()
-        .map(|c| Fig9Row {
-            conns: c,
-            adaptive: Some(scale_send(&fig9_cfg(c, budget, false))),
-            rc_only: scale_send(&fig9_cfg(c, budget, true)),
-        })
+        .enumerate()
+        .map(|(i, c)| Fig9Row { conns: c, adaptive: Some(runs[2 * i]), rc_only: runs[2 * i + 1] })
         .collect()
 }
 
 /// The `--rc-only` ablation alone (adaptive column omitted).
-pub fn fig9_rc_only(budget: Budget) -> Vec<Fig9Row> {
-    fig9_conns(budget)
-        .into_iter()
-        .map(|c| Fig9Row {
-            conns: c,
-            adaptive: None,
-            rc_only: scale_send(&fig9_cfg(c, budget, true)),
-        })
-        .collect()
+pub fn fig9_rc_only(budget: Budget, jobs: usize) -> Vec<Fig9Row> {
+    parallel::map_indexed(fig9_conns(budget), jobs, |_, c| Fig9Row {
+        conns: c,
+        adaptive: None,
+        rc_only: scale_send(&fig9_cfg(c, budget, true)),
+    })
 }
 
 /// Render the Fig-9 table.
@@ -544,27 +547,34 @@ pub struct Fig10Row {
 /// Fig 10: goodput + p99 vs injected loss rate, adaptive vs RC-only.
 /// RC pays for loss with retransmissions and (inside flap windows) retry
 /// exhaustion; UD pays with silently discarded fragmented messages.
-pub fn fig10(budget: Budget) -> Vec<Fig10Row> {
-    fig10_loss_rates(budget)
+pub fn fig10(budget: Budget, jobs: usize) -> Vec<Fig10Row> {
+    let losses = fig10_loss_rates(budget);
+    let mut items = Vec::with_capacity(losses.len() * 2);
+    for &loss in &losses {
+        items.push((loss, false));
+        items.push((loss, true));
+    }
+    let runs = parallel::map_indexed(items, jobs, |_, (loss, rc_only)| {
+        chaos_send(&fig10_cfg(loss, budget, rc_only))
+    });
+    losses
         .into_iter()
-        .map(|loss| Fig10Row {
+        .enumerate()
+        .map(|(i, loss)| Fig10Row {
             loss,
-            adaptive: Some(chaos_send(&fig10_cfg(loss, budget, false))),
-            rc_only: chaos_send(&fig10_cfg(loss, budget, true)),
+            adaptive: Some(runs[2 * i]),
+            rc_only: runs[2 * i + 1],
         })
         .collect()
 }
 
 /// The `--rc-only` ablation alone (adaptive column omitted).
-pub fn fig10_rc_only(budget: Budget) -> Vec<Fig10Row> {
-    fig10_loss_rates(budget)
-        .into_iter()
-        .map(|loss| Fig10Row {
-            loss,
-            adaptive: None,
-            rc_only: chaos_send(&fig10_cfg(loss, budget, true)),
-        })
-        .collect()
+pub fn fig10_rc_only(budget: Budget, jobs: usize) -> Vec<Fig10Row> {
+    parallel::map_indexed(fig10_loss_rates(budget), jobs, |_, loss| Fig10Row {
+        loss,
+        adaptive: None,
+        rc_only: chaos_send(&fig10_cfg(loss, budget, true)),
+    })
 }
 
 /// Render the Fig-10 table.
@@ -658,15 +668,18 @@ pub fn fig10_series(rows: &[Fig10Row]) -> Series {
 /// Run one figure id end-to-end; returns its [`Series`] plus the rendered
 /// paper-shaped table (callers choose the stream the table goes to).
 /// Figures 7 and 8 come from one shared sweep, memoized in `fig78_cache`
-/// so asking for both runs it once. Unknown ids return None.
+/// so asking for both runs it once. `jobs` fans the sweep points out
+/// across threads (1 = the serial runner, byte-identical output either
+/// way). Unknown ids return None.
 pub fn run_fig(
     id: u64,
     b: Budget,
     fig78_cache: &mut Option<Vec<Fig78Row>>,
+    jobs: usize,
 ) -> Option<(Series, String)> {
     match id {
         1 => {
-            let rows = fig1(b);
+            let rows = fig1(b, jobs);
             let table = print_fig1(&rows);
             let mut s = Series::new(
                 "fig1_verbs",
@@ -679,7 +692,7 @@ pub fn run_fig(
             Some((s, table))
         }
         5 => {
-            let rows = fig5(b);
+            let rows = fig5(b, jobs);
             let table = print_fig5(&rows);
             let mut s = Series::new(
                 "fig5_scalability",
@@ -695,7 +708,7 @@ pub fn run_fig(
             Some((s, table))
         }
         6 => {
-            let rows = fig6(b);
+            let rows = fig6(b, jobs);
             let table = print_fig6(&rows);
             let mut s = Series::new(
                 "fig6_qp_sharing",
@@ -708,7 +721,7 @@ pub fn run_fig(
             Some((s, table))
         }
         7 => {
-            let rows = fig78_cache.get_or_insert_with(|| fig78(b)).clone();
+            let rows = fig78_cache.get_or_insert_with(|| fig78(b, jobs)).clone();
             let table = print_fig7(&rows);
             let mut s = Series::new("fig7_memory", "apps", &["naive_mem", "raas_mem"]);
             for r in &rows {
@@ -717,7 +730,7 @@ pub fn run_fig(
             Some((s, table))
         }
         8 => {
-            let rows = fig78_cache.get_or_insert_with(|| fig78(b)).clone();
+            let rows = fig78_cache.get_or_insert_with(|| fig78(b, jobs)).clone();
             let table = print_fig8(&rows);
             let mut s = Series::new("fig8_cpu", "apps", &["naive_cpu", "raas_cpu"]);
             for r in &rows {
@@ -726,12 +739,12 @@ pub fn run_fig(
             Some((s, table))
         }
         9 => {
-            let rows = fig9(b);
+            let rows = fig9(b, jobs);
             let table = print_fig9(&rows);
             Some((fig9_series(&rows), table))
         }
         10 => {
-            let rows = fig10(b);
+            let rows = fig10(b, jobs);
             let table = print_fig10(&rows);
             Some((fig10_series(&rows), table))
         }

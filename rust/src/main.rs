@@ -7,13 +7,18 @@
 //!   sweep) and print the series as JSON on stdout (human-readable table
 //!   on stderr). `--all` runs every figure; `--quick` shrinks the
 //!   sweeps; `--rc-only` restricts figures 9/10 to the ablation;
-//!   `--tsv DIR` also writes TSVs.
+//!   `--jobs N` runs the independent sweep points on N threads (0 = all
+//!   cores) with byte-identical output; `--tsv DIR` also writes TSVs.
 //! * `bench hotpath` — the hot-path microbenchmarks (SPSC ring, doorbell,
 //!   ICM cache, daemon submit) with JSON results.
 //! * `bench simstep` — raw discrete-event-scheduler throughput
 //!   (events/sec) on a daemon-free QP storm.
-//! * `bench fig9 [--out FILE]` — wall-clock of the Fig-9 scale sweep per
-//!   connection count, written as `BENCH_PR3.json` (the CI perf artifact).
+//! * `bench pump` — daemon data-plane throughput (ops/sec through one
+//!   daemon's pump loop: batch flush, CQ drain, slab completion, SRQ
+//!   refill).
+//! * `bench fig9 [--out FILE] [--jobs N]` — wall-clock of the Fig-9
+//!   scale sweep per connection count, written as `BENCH_PR5.json` (the
+//!   CI perf artifact; `bench pump` + `bench simstep` sections embedded).
 //! * `bench` — one scenario run with explicit knobs (`--system
 //!   raas|naive|locked`, `--conns`, `--size`, …), JSON result on stdout.
 //! * `demo {kv,rpc,inference}` — the example applications end-to-end over
@@ -34,6 +39,7 @@ use rdmavisor::metrics::Series;
 use rdmavisor::util::cli::Args;
 use rdmavisor::util::jsonmini::{obj, Json};
 use rdmavisor::util::logging;
+use rdmavisor::util::parallel;
 use rdmavisor::workload::scenarios::{
     locked_random_read, naive_random_read, raas_random_read, RunStats, ScenarioCfg,
 };
@@ -58,9 +64,9 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: rdmavisor <fig|figures|bench|demo|serve|init-config|info> [--help]\n\
-                 \n  fig --id 1|5|6|7|8|9|10 [--all] [--quick] [--rc-only] [--tsv DIR]   (JSON on stdout)\
-                 \n  bench hotpath|simstep [--quick]                    (JSON on stdout)\
-                 \n  bench fig9 [--quick] [--out FILE]    (fig-9 wall clock -> BENCH_PR3.json)\
+                 \n  fig --id 1|5|6|7|8|9|10 [--all] [--quick] [--rc-only] [--jobs N] [--tsv DIR]   (JSON on stdout)\
+                 \n  bench hotpath|simstep|pump [--quick]               (JSON on stdout)\
+                 \n  bench fig9 [--quick] [--jobs N] [--out FILE]    (fig-9 wall clock -> BENCH_PR5.json)\
                  \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
                  [--window N] [--duration-ms MS] [--q N] [--config FILE]\
                  \n  demo kv|rpc|inference [--gets N] [--calls N] [--requests N]\
@@ -80,6 +86,11 @@ fn budget(args: &Args) -> Budget {
     } else {
         Budget::from_env()
     }
+}
+
+/// Resolve `--jobs N` (default 1 = the serial runner; 0 = all cores).
+fn jobs(args: &Args) -> usize {
+    parallel::effective_jobs(args.usize_or("jobs", 1))
 }
 
 // ---------------------------------------------------------------- JSON glue
@@ -111,6 +122,7 @@ fn run_stats_json(st: &RunStats) -> Json {
 
 fn fig_cmd(args: &Args) {
     let b = budget(args);
+    let jobs = jobs(args);
     let mut ids: Vec<u64> = if args.flag("all") {
         vec![1, 5, 6, 7, 8, 9, 10]
     } else {
@@ -127,7 +139,8 @@ fn fig_cmd(args: &Args) {
     ids.retain(|id| seen.insert(*id));
     if ids.is_empty() {
         eprintln!(
-            "usage: rdmavisor fig --id 1|5|6|7|8|9|10 [--all] [--quick] [--rc-only] [--tsv DIR]"
+            "usage: rdmavisor fig --id 1|5|6|7|8|9|10 [--all] [--quick] [--rc-only] \
+             [--jobs N] [--tsv DIR]"
         );
         std::process::exit(2);
     }
@@ -139,13 +152,13 @@ fn fig_cmd(args: &Args) {
     for &id in &ids {
         // `fig --id 9|10 --rc-only` runs just the ablation series
         let (s, table) = if id == 9 && args.flag("rc-only") {
-            let rows = figures::fig9_rc_only(b);
+            let rows = figures::fig9_rc_only(b, jobs);
             (figures::fig9_series(&rows), figures::print_fig9(&rows))
         } else if id == 10 && args.flag("rc-only") {
-            let rows = figures::fig10_rc_only(b);
+            let rows = figures::fig10_rc_only(b, jobs);
             (figures::fig10_series(&rows), figures::print_fig10(&rows))
         } else {
-            match figures::run_fig(id, b, &mut fig78_cache) {
+            match figures::run_fig(id, b, &mut fig78_cache, jobs) {
                 Some(r) => r,
                 None => {
                     eprintln!("unknown figure id {id}: expected 1, 5, 6, 7, 8, 9 or 10");
@@ -183,6 +196,7 @@ fn fig_cmd(args: &Args) {
 
 fn figures_cmd(args: &Args) {
     let b = budget(args);
+    let jobs = jobs(args);
     let all = args.flag("all");
     let tsv_dir = args.get("tsv").map(|s| s.to_string());
     let mut series: Vec<Series> = Vec::new();
@@ -202,7 +216,7 @@ fn figures_cmd(args: &Args) {
     ] {
         if all || args.flag(flag) {
             let (s, table) =
-                figures::run_fig(id, b, &mut fig78_cache).expect("known figure id");
+                figures::run_fig(id, b, &mut fig78_cache, jobs).expect("known figure id");
             print!("{table}");
             series.push(s);
         }
@@ -229,6 +243,7 @@ fn bench_cmd(args: &Args) {
     match args.positional.first().map(|s| s.as_str()) {
         Some("hotpath") => return bench_hotpath(args),
         Some("simstep") => return bench_simstep(args),
+        Some("pump") => return bench_pump(args),
         Some("fig9") => return bench_fig9(args),
         _ => {}
     }
@@ -380,13 +395,15 @@ fn simstep_measure(quick: bool) -> Json {
         if quick { (64, 8, 4096, 2, 2) } else { (256, 8, 4096, 10, 3) };
     let mut best_eps = 0.0f64;
     let mut events = 0u64;
-    let mut total_wall = 0.0f64;
+    // best rep's wall: events is deterministic (identical every rep), so
+    // events / wall_ms == events_per_sec — mutually consistent fields
+    let mut best_wall = f64::INFINITY;
     for _ in 0..reps {
         let t0 = Instant::now();
         events = event_storm(pairs, window, msg, Ns::from_ms(sim_ms));
-        let w = t0.elapsed().as_secs_f64();
-        total_wall += w;
-        best_eps = best_eps.max(events as f64 / w.max(1e-9));
+        let w = t0.elapsed().as_secs_f64().max(1e-9);
+        best_wall = best_wall.min(w);
+        best_eps = best_eps.max(events as f64 / w);
     }
     eprintln!(
         "simstep: {pairs} QPs × window {window} × {msg} B for {sim_ms} sim-ms -> \
@@ -399,7 +416,7 @@ fn simstep_measure(quick: bool) -> Json {
         ("sim_ms", Json::Num(sim_ms as f64)),
         ("events", Json::Num(events as f64)),
         ("events_per_sec", num(best_eps)),
-        ("wall_ms", num(total_wall * 1e3)),
+        ("wall_ms", num(best_wall * 1e3)),
     ])
 }
 
@@ -416,23 +433,86 @@ fn bench_simstep(args: &Args) {
     println!("{}", doc.to_string());
 }
 
+/// Measure daemon data-plane throughput: ops/sec through ONE daemon's
+/// pump loop (Worker batch flush → Poller CQ drain → slab completion →
+/// SRQ refill) on a closed-loop READ storm. This is the number the
+/// wr_id-slab/dense-table densification moves; `bench simstep` isolates
+/// the fabric below it. Shared by `bench pump` and the `pump` section of
+/// `bench fig9`/BENCH_PR5.json.
+fn pump_measure(quick: bool) -> Json {
+    use rdmavisor::fabric::time::Ns;
+    use rdmavisor::workload::scenarios::pump_storm;
+
+    let (conns, window, msg, sim_ms, reps) =
+        if quick { (128, 4, 4096, 2, 2) } else { (512, 4, 4096, 10, 3) };
+    let mut best_ops = 0.0f64;
+    let (mut ops, mut events) = (0u64, 0u64);
+    // wall_ms is the BEST rep's wall (ops and events are deterministic,
+    // identical every rep), so ops / wall_ms == ops_per_sec and the
+    // artifact's fields stay mutually consistent
+    let mut best_wall = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = pump_storm(conns, msg, window, Ns::from_ms(sim_ms));
+        ops = r.0;
+        events = r.1;
+        let w = t0.elapsed().as_secs_f64().max(1e-9);
+        best_wall = best_wall.min(w);
+        best_ops = best_ops.max(ops as f64 / w);
+    }
+    eprintln!(
+        "pump: {conns} conns × window {window} × {msg} B for {sim_ms} sim-ms -> \
+         {ops} ops ({events} events), best {best_ops:.0} ops/s"
+    );
+    obj(vec![
+        ("conns", Json::Num(conns as f64)),
+        ("window", Json::Num(window as f64)),
+        ("msg_bytes", Json::Num(msg as f64)),
+        ("sim_ms", Json::Num(sim_ms as f64)),
+        ("ops", Json::Num(ops as f64)),
+        ("events", Json::Num(events as f64)),
+        ("ops_per_sec", num(best_ops)),
+        ("wall_ms", num(best_wall * 1e3)),
+    ])
+}
+
+/// `bench pump` — the daemon-pump perf trajectory future data-plane
+/// changes regress against (see [`pump_measure`]).
+fn bench_pump(args: &Args) {
+    let quick = args.flag("quick") || std::env::var("RDMAVISOR_BENCH_QUICK").is_ok();
+    let result = pump_measure(quick);
+    let doc = obj(vec![
+        ("command", Json::Str("bench".into())),
+        ("mode", Json::Str("pump".into())),
+        ("result", result),
+    ]);
+    println!("{}", doc.to_string());
+}
+
 /// `bench fig9` — wall-clock of the Fig-9 scale sweep, per connection
 /// count (adaptive + rc-only, exactly the runs `fig --id 9` makes).
-/// Writes the result to `--out` (default BENCH_PR3.json) so CI archives a
-/// perf trajectory for future PRs to regress against.
+/// Writes the result to `--out` (default BENCH_PR5.json) so CI archives
+/// a perf trajectory for future PRs to regress against. `--jobs N` runs
+/// the sweep points concurrently — total wall clock drops, but the
+/// per-point wall numbers then measure *contended* time, so recorded
+/// trajectories should stay at the serial default.
 fn bench_fig9(args: &Args) {
     use rdmavisor::workload::scenarios::scale_send;
 
     let b = budget(args);
-    let out_path = args.str_or("out", "BENCH_PR3.json");
-    let mut points = Vec::new();
-    let mut total_wall = 0.0f64;
-    let mut total_events = 0u64;
-    for conns in figures::fig9_conns(b) {
+    let j = jobs(args);
+    let out_path = args.str_or("out", "BENCH_PR5.json");
+    let t_all = Instant::now();
+    let measured = parallel::map_indexed(figures::fig9_conns(b), j, |_, conns| {
         let t0 = Instant::now();
         let adaptive = scale_send(&figures::fig9_cfg(conns, b, false));
         let rc_only = scale_send(&figures::fig9_cfg(conns, b, true));
-        let wall = t0.elapsed().as_secs_f64();
+        (conns, adaptive, rc_only, t0.elapsed().as_secs_f64())
+    });
+    let mut points = Vec::new();
+    let mut total_wall = 0.0f64;
+    let mut total_events = 0u64;
+    for (conns, adaptive, rc_only, wall) in measured {
         let events = adaptive.events + rc_only.events;
         total_wall += wall;
         total_events += events;
@@ -453,11 +533,17 @@ fn bench_fig9(args: &Args) {
             ("rc_only_gbps", num(rc_only.gbps)),
         ]));
     }
+    // at --jobs 1 the sum of per-point walls IS the elapsed time; at
+    // jobs > 1 report the overlapped elapsed wall instead
+    if j > 1 {
+        total_wall = t_all.elapsed().as_secs_f64();
+    }
     let budget_name = if b == Budget::Quick { "quick" } else { "full" };
     let doc = obj(vec![
         ("command", Json::Str("bench".into())),
         ("mode", Json::Str("fig9".into())),
         ("budget", Json::Str(budget_name.to_string())),
+        ("jobs", Json::Num(j as f64)),
         ("points", Json::Arr(points)),
         ("total_wall_ms", num(total_wall * 1e3)),
         ("total_events", Json::Num(total_events as f64)),
@@ -465,8 +551,10 @@ fn bench_fig9(args: &Args) {
             "events_per_sec",
             num(total_events as f64 / total_wall.max(1e-9)),
         ),
-        // raw scheduler throughput rides along so BENCH_PR3.json is one
-        // self-contained perf artifact (no external JSON merging)
+        // the daemon-pump and raw scheduler throughputs ride along so
+        // BENCH_PR5.json is one self-contained perf artifact (no
+        // external JSON merging)
+        ("pump", pump_measure(b == Budget::Quick)),
         ("simstep", simstep_measure(b == Budget::Quick)),
     ]);
     let text = doc.to_string();

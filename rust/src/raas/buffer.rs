@@ -68,6 +68,15 @@ pub struct BufferPool {
     /// The one huge-page MR backing every slab class.
     pub mr: MemoryRegion,
     classes: Vec<SlabClass>,
+    /// size→class table indexed by `len.next_power_of_two()`'s exponent:
+    /// `class_by_pow2[k]` is the smallest class whose slots hold `2^k`
+    /// bytes. Every lease used to linear-scan the class list; with the
+    /// (power-of-two) layouts the daemons actually run, the scan is now
+    /// one shift + one index. Non-power-of-two layouts fall back to the
+    /// scan so the smallest-fitting-class semantics stay exact.
+    class_by_pow2: Vec<Option<usize>>,
+    /// True when every class size is a power of two (table usable).
+    pow2_layout: bool,
     /// Bytes currently leased out.
     pub leased_bytes: u64,
     /// Lifetime successful leases.
@@ -102,11 +111,35 @@ impl BufferPool {
             });
             base += slot_bytes * count as u64;
         }
-        BufferPool { mr, classes, leased_bytes: 0, lease_ops: 0, exhausted: 0 }
+        let pow2_layout = classes.iter().all(|c| c.slot_bytes.is_power_of_two());
+        let max_k = classes
+            .iter()
+            .map(|c| c.slot_bytes.next_power_of_two().trailing_zeros() as usize)
+            .max()
+            .unwrap_or(0);
+        let class_by_pow2 = (0..=max_k)
+            .map(|k| classes.iter().position(|c| c.slot_bytes >= 1u64 << k))
+            .collect();
+        BufferPool {
+            mr,
+            classes,
+            class_by_pow2,
+            pow2_layout,
+            leased_bytes: 0,
+            lease_ops: 0,
+            exhausted: 0,
+        }
     }
 
-    /// Smallest class that fits `len`.
+    /// Smallest class that fits `len`: a shift + table index for the
+    /// power-of-two layouts the daemons run (every `len` in the bucket
+    /// `(2^(k-1), 2^k]` fits exactly the classes that fit `2^k` when all
+    /// class sizes are powers of two), a linear scan otherwise.
     fn class_for(&self, len: u64) -> Option<usize> {
+        if self.pow2_layout {
+            let k = len.max(1).next_power_of_two().trailing_zeros() as usize;
+            return *self.class_by_pow2.get(k)?;
+        }
         self.classes.iter().position(|c| c.slot_bytes >= len)
     }
 
@@ -285,6 +318,23 @@ mod tests {
         p.release(l2);
         assert_eq!(p.hwm_bytes(), 2 * 4096);
         assert!(p.hwm_bytes() < p.total_bytes());
+    }
+
+    #[test]
+    fn class_table_matches_smallest_fit() {
+        // pow2 layout: the shift+index table path
+        let (_s, mut p) = pool();
+        assert_eq!(p.lease(1).unwrap().len, 4096);
+        assert_eq!(p.lease(4096).unwrap().len, 4096);
+        assert_eq!(p.lease(4097).unwrap().len, 65536);
+        assert_eq!(p.lease(65536).unwrap().len, 65536);
+        assert!(p.lease(65537).is_none(), "beyond the largest class");
+        // non-pow2 layout: exact smallest-fit via the scan fallback
+        let mut sim = Sim::new(FabricConfig::default());
+        let mut q = BufferPool::new(&mut sim, NodeId(0), &[(6000, 2), (10000, 2)]);
+        assert_eq!(q.lease(5000).unwrap().len, 6000);
+        assert_eq!(q.lease(6001).unwrap().len, 10000);
+        assert!(q.lease(10001).is_none());
     }
 
     #[test]

@@ -21,12 +21,20 @@
 //! SEND-only and MTU-capped, so migrated messages are fragmented with a
 //! per-vQPN sequence header in `imm_data` and reassembled by the peer's
 //! Poller before delivery.
+//!
+//! The data plane is **lookup- and allocation-free per op** (PR 5, the
+//! daemon-side twin of PR 3's fabric densification): per-remote state
+//! (shared QPs, peer pools, pending batches) lives in node-id-indexed
+//! [`IdMap`]s, per-app inboxes in an app-id-indexed `Vec`, and every
+//! in-flight op in the wr_id-addressed [`OpSlab`] — `pump()` completes
+//! an op with two array indexes (slab slot, conn table) and zero
+//! hashing. DESIGN.md §10 has the wr_id encoding.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::fabric::sim::Sim;
 use crate::fabric::time::Ns;
-use crate::fabric::types::{Cqn, NodeId, QpTransport, Qpn, Srqn, Verb, WcStatus};
+use crate::fabric::types::{Cqn, IdMap, NodeId, QpTransport, Qpn, Srqn, Verb, WcStatus};
 use crate::fabric::wqe::{Cqe, SendWr};
 
 use super::api::{Flags, RaasError, Target};
@@ -35,10 +43,11 @@ use super::migrate::{
     pack_ud_imm, ud_max_msg_bytes, unpack_ud_imm, DestState, MigrationConfig, Reassembler,
     TransportManager,
 };
+use super::opslab::{untracked_wr_id, OpSlab};
 use super::shmem::ShmCosts;
 use super::telemetry::Telemetry;
 use super::transport::{HostLoad, Selector, SelectorConfig};
-use super::vqpn::{pack_wr_id, unpack_vqpn, ConnTable, Vqpn};
+use super::vqpn::{ConnTable, Vqpn};
 
 /// Daemon tunables.
 #[derive(Clone, Debug)]
@@ -160,14 +169,22 @@ struct RemotePool {
     len: u64,
 }
 
-/// A staging lease held open until its op's completion arrives.
+/// Everything the Poller needs to finish one in-flight op, stored in the
+/// wr_id-addressed [`OpSlab`] (one slab entry per signaled WR).
 #[derive(Clone, Copy, Debug)]
-struct OpenLease {
+struct InflightOp {
+    /// The staging lease held open until the completion arrives.
     lease: Lease,
     /// Deliver-to-app copy required (non-zero-copy READ landing).
     deliver_copy: bool,
     /// When the op was submitted — the stale-lease reclaim's clock.
     opened_at: Ns,
+    /// Remote node when the op rides a shared RC QP (the migration
+    /// engine's drain ledger); None on the UD path.
+    rc_remote: Option<u32>,
+    /// Logical message length of a fragmented UD send — the wire CQE
+    /// only carries the last fragment's length.
+    ud_msg_len: Option<u64>,
 }
 
 /// The per-machine RDMAvisor daemon.
@@ -195,47 +212,45 @@ pub struct Daemon {
     srq: Srqn,
     /// The host-wide UD QP every migrated destination shares.
     ud_qp: Qpn,
-    /// remote node -> shared QP to it (THE §2.3 structure).
-    shared_qps: HashMap<u32, Qpn>,
+    /// remote node -> shared QP to it (THE §2.3 structure), node-indexed.
+    shared_qps: IdMap<Qpn>,
     /// remote node -> its daemon's UD QPN (exchanged at connect).
-    remote_ud: HashMap<u32, Qpn>,
-    remote_pools: HashMap<u32, RemotePool>,
+    remote_ud: IdMap<Qpn>,
+    /// remote node -> its daemon's pool credentials (one-sided verbs).
+    remote_pools: IdMap<RemotePool>,
     /// Worker-side pending WR batches, per remote node. Flush order is
     /// carried by `dirty_remotes` (submission order), never by map
-    /// iteration — a HashMap's iteration order would leak the hasher
-    /// seed into the event timeline. BTreeMap is belt-and-braces for any
-    /// future iteration of this map.
-    pending: BTreeMap<u32, Vec<SendWr>>,
+    /// iteration — and `IdMap` iteration is id-ordered anyway, so no
+    /// backing-store order can leak into the event timeline.
+    pending: IdMap<Vec<SendWr>>,
     /// Worker-side pending UD fragments (one batch, one QP).
     ud_pending: Vec<SendWr>,
     /// Remotes whose batch went non-empty since the last pump, in
     /// submission order (so pump flushes O(dirty), not O(all remotes)).
     dirty_remotes: Vec<u32>,
-    /// wr_id -> remote node for in-flight RC WRs (drain accounting).
-    rc_inflight_remote: HashMap<u64, u32>,
-    /// wr_id of a fragmented message's signaled last fragment -> logical
-    /// message length (the CQE only carries the fragment's own length).
-    ud_msg_len: HashMap<u64, u64>,
+    /// Every in-flight op (staging lease, drain ledger, UD logical
+    /// length), addressed by the slot+generation packed into its wr_id —
+    /// the Poller's zero-hash completion path. The generation check also
+    /// drops completions that limp in after the stale-lease reclaim
+    /// already reported the op failed, so the app sees exactly ONE
+    /// OpComplete per op.
+    ops: OpSlab<InflightOp>,
     /// Per-connection mod-64 UD message tag (the anti-splicing id every
-    /// fragment of one message carries — see [`pack_ud_imm`]).
-    ud_msg_counter: HashMap<u32, u8>,
-    /// wr_ids whose lease was reclaimed (op already reported failed). A
-    /// completion that limps in afterwards is dropped here, so the app
-    /// sees exactly ONE OpComplete per op and the counters never double.
-    reclaimed_wr_ids: std::collections::HashSet<u64>,
+    /// fragment of one message carries — see [`pack_ud_imm`]),
+    /// vQPN-indexed.
+    ud_msg_counter: IdMap<u8>,
     /// Last ICM sample: (virtual time, hits, misses); None before the
     /// first pump.
     icm_sample: Option<(Ns, u64, u64)>,
-    /// Leases to release when a wr_id completes (or, under a fault plan,
-    /// when the stale-lease reclaim gives up on the completion).
-    open_leases: HashMap<u64, OpenLease>,
-    /// Per-app completion inboxes (stand-in for the completion rings).
-    inboxes: HashMap<u32, VecDeque<Delivery>>,
-    /// Listening "ports": port -> owning app.
-    listeners: HashMap<u16, u32>,
-    /// Accepted-but-not-yet-claimed connections per (app, port).
-    accept_queues: HashMap<(u32, u16), VecDeque<Vqpn>>,
-    next_seq: u32,
+    /// Per-app completion inboxes (stand-in for the completion rings),
+    /// indexed by the sequential app id.
+    inboxes: Vec<VecDeque<Delivery>>,
+    /// Listening "ports" (control plane): (port, owning app); last
+    /// `listen` on a port wins.
+    listeners: Vec<(u16, u32)>,
+    /// Accepted-but-not-yet-claimed connections per (app, port)
+    /// (control plane; linear scan over the few live listeners).
+    accept_queues: Vec<((u32, u16), VecDeque<Vqpn>)>,
     srq_wr_seq: u64,
     /// Poller scratch buffer reused across pumps (zero-alloc CQ drain).
     cqe_buf: Vec<Cqe>,
@@ -272,22 +287,18 @@ impl Daemon {
             recv_cq,
             srq,
             ud_qp,
-            shared_qps: HashMap::new(),
-            remote_ud: HashMap::new(),
-            remote_pools: HashMap::new(),
-            pending: BTreeMap::new(),
+            shared_qps: IdMap::new(),
+            remote_ud: IdMap::new(),
+            remote_pools: IdMap::new(),
+            pending: IdMap::new(),
             ud_pending: Vec::new(),
             dirty_remotes: Vec::new(),
-            rc_inflight_remote: HashMap::new(),
-            ud_msg_len: HashMap::new(),
-            ud_msg_counter: HashMap::new(),
-            reclaimed_wr_ids: std::collections::HashSet::new(),
+            ops: OpSlab::new(),
+            ud_msg_counter: IdMap::new(),
             icm_sample: None,
-            open_leases: HashMap::new(),
-            inboxes: HashMap::new(),
-            listeners: HashMap::new(),
-            accept_queues: HashMap::new(),
-            next_seq: 0,
+            inboxes: Vec::new(),
+            listeners: Vec::new(),
+            accept_queues: Vec::new(),
             srq_wr_seq,
             cqe_buf: Vec::new(),
             cfg,
@@ -332,19 +343,44 @@ impl Daemon {
     /// Register an application session (rings + eventfds accounted).
     pub fn register_app(&mut self) -> u32 {
         let app = self.telemetry.add_session();
-        self.inboxes.insert(app, VecDeque::new());
+        self.inbox_mut(app);
         app
+    }
+
+    /// The app's completion inbox, growing the table to cover `app`.
+    fn inbox_mut(&mut self, app: u32) -> &mut VecDeque<Delivery> {
+        let idx = app as usize;
+        if idx >= self.inboxes.len() {
+            self.inboxes.resize_with(idx + 1, VecDeque::new);
+        }
+        &mut self.inboxes[idx]
     }
 
     /// `listen(Target, FLAGS)` — Fig 3. Binds a port to an app.
     pub fn listen(&mut self, app: u32, port: u16) {
-        self.listeners.insert(port, app);
-        self.accept_queues.entry((app, port)).or_default();
+        match self.listeners.iter_mut().find(|(p, _)| *p == port) {
+            Some(entry) => entry.1 = app,
+            None => self.listeners.push((port, app)),
+        }
+        self.accept_queue_mut(app, port);
+    }
+
+    /// The accept queue for `(app, port)`, created on first use.
+    fn accept_queue_mut(&mut self, app: u32, port: u16) -> &mut VecDeque<Vqpn> {
+        if let Some(i) = self.accept_queues.iter().position(|(k, _)| *k == (app, port)) {
+            return &mut self.accept_queues[i].1;
+        }
+        self.accept_queues.push(((app, port), VecDeque::new()));
+        &mut self.accept_queues.last_mut().expect("just pushed").1
     }
 
     /// `accept(fd, FLAGS)` — Fig 3. Non-blocking: pops an accepted conn.
     pub fn accept(&mut self, app: u32, port: u16) -> Option<Vqpn> {
-        self.accept_queues.get_mut(&(app, port))?.pop_front()
+        self.accept_queues
+            .iter_mut()
+            .find(|(k, _)| *k == (app, port))?
+            .1
+            .pop_front()
     }
 
     /// The daemon's current load snapshot (what it advertises to peers).
@@ -405,24 +441,28 @@ impl Daemon {
         let remote = entry.remote;
         let rp = *self
             .remote_pools
-            .get(&remote.0)
+            .get(remote.0)
             .ok_or(RaasError::UnknownConnection)?;
         if remote_offset + len > rp.len {
             return Err(RaasError::TooLong { len, max: rp.len - remote_offset });
         }
         let lease = self.pool.lease(len).ok_or(RaasError::PoolExhausted)?;
-        let seq = self.bump_seq();
-        let wr_id = pack_wr_id(conn, seq);
+        // reads land in the lease; deliver (copy) unless app opted zero-copy
+        let wr_id = self.ops.insert(
+            conn,
+            InflightOp {
+                lease,
+                deliver_copy: verb == Verb::Read,
+                opened_at: sim.now(),
+                rc_remote: Some(remote.0),
+                ud_msg_len: None,
+            },
+        );
         let wr = match verb {
             Verb::Read => SendWr::read(wr_id, len, self.pool.mr.key, lease.addr, rp.rkey, rp.base + remote_offset),
             Verb::Write => SendWr::write(wr_id, len, self.pool.mr.key, lease.addr, rp.rkey, rp.base + remote_offset),
             Verb::Send => unreachable!(),
         };
-        // reads land in the lease; deliver (copy) unless app opted zero-copy
-        self.open_leases.insert(
-            wr_id,
-            OpenLease { lease, deliver_copy: verb == Verb::Read, opened_at: sim.now() },
-        );
         self.enqueue_wr(sim, remote, wr, tag)?;
         Ok(tag)
     }
@@ -459,8 +499,16 @@ impl Daemon {
 
         let lease = self.stage_payload(sim, len)?;
 
-        let seq = self.bump_seq();
-        let wr_id = pack_wr_id(conn, seq);
+        let wr_id = self.ops.insert(
+            conn,
+            InflightOp {
+                lease,
+                deliver_copy: false,
+                opened_at: sim.now(),
+                rc_remote: Some(remote.0),
+                ud_msg_len: None,
+            },
+        );
         // `send` pushes data: a READ preference from the selector (local
         // host busier than remote) degrades to WRITE — pull-mode is only
         // available through the explicit `read` entry point.
@@ -473,10 +521,14 @@ impl Daemon {
             Verb::Write => {
                 // large adaptive sends become WRITE-with-imm into the peer's
                 // pool so the peer still gets a consumer notification
-                let rp = *self
-                    .remote_pools
-                    .get(&remote.0)
-                    .ok_or(RaasError::UnknownConnection)?;
+                let rp = match self.remote_pools.get(remote.0) {
+                    Some(rp) => *rp,
+                    None => {
+                        let op = self.ops.take(wr_id).expect("just inserted");
+                        self.pool.release(op.lease);
+                        return Err(RaasError::UnknownConnection);
+                    }
+                };
                 let lease_off = lease.addr - self.pool.mr.addr;
                 let dst = lease_off % rp.len.max(1);
                 SendWr::write(wr_id, len, self.pool.mr.key, lease.addr, rp.rkey, rp.base + dst)
@@ -484,8 +536,6 @@ impl Daemon {
             }
             Verb::Read => unreachable!("degraded above"),
         };
-        self.open_leases
-            .insert(wr_id, OpenLease { lease, deliver_copy: false, opened_at: sim.now() });
         self.stats.sent_rc += 1;
         self.enqueue_wr(sim, remote, wr, tag)?;
         Ok(verb)
@@ -525,7 +575,7 @@ impl Daemon {
         }
         let ud_peer = *self
             .remote_ud
-            .get(&remote.0)
+            .get(remote.0)
             .ok_or(RaasError::UnknownConnection)?;
 
         let lease = self.stage_payload(sim, len)?;
@@ -534,31 +584,37 @@ impl Daemon {
         // mod-64 message tag: lets the peer's reassembler reject a
         // fragment train spliced across two messages after losses
         let msg_tag = {
-            let c = self.ud_msg_counter.entry(conn.0).or_insert(0);
+            let c = self.ud_msg_counter.entry_or_default(conn.0);
             let tag = *c;
             *c = (*c + 1) % super::migrate::UD_MSG_MOD as u8;
             tag
         };
-        let mut last_wr_id = 0;
+        // one slab entry per logical message, stamped on the signaled
+        // LAST fragment; unsignaled fragments never produce a CQE, so
+        // they carry the untracked (null-slot) wr_id form
+        let last_wr_id = self.ops.insert(
+            conn,
+            InflightOp {
+                lease,
+                deliver_copy: false,
+                opened_at: sim.now(),
+                rc_remote: None,
+                ud_msg_len: if nfrags > 1 { Some(len) } else { None },
+            },
+        );
         for k in 0..nfrags {
-            let frag_len = if k == nfrags - 1 { len - k * mtu } else { mtu };
-            let seq = self.bump_seq();
-            let wr_id = pack_wr_id(conn, seq);
-            let imm = pack_ud_imm(peer_vqpn, msg_tag, k as u16, k == nfrags - 1);
+            let last = k == nfrags - 1;
+            let frag_len = if last { len - k * mtu } else { mtu };
+            let wr_id = if last { last_wr_id } else { untracked_wr_id(conn) };
+            let imm = pack_ud_imm(peer_vqpn, msg_tag, k as u16, last);
             let mut wr =
                 SendWr::send(wr_id, frag_len, self.pool.mr.key, lease.addr + k * mtu, imm)
                     .to_ud(remote, ud_peer);
-            if k != nfrags - 1 {
+            if !last {
                 wr = wr.unsignaled();
             }
-            last_wr_id = wr_id;
             self.telemetry.charge(self.cfg.shm.ring_pop_ns + self.cfg.wr_build_ns);
             self.ud_pending.push(wr);
-        }
-        self.open_leases
-            .insert(last_wr_id, OpenLease { lease, deliver_copy: false, opened_at: sim.now() });
-        if nfrags > 1 {
-            self.ud_msg_len.insert(last_wr_id, len);
         }
         self.stats.sent_ud += 1;
         self.stats.ud_fragments += nfrags;
@@ -588,14 +644,10 @@ impl Daemon {
         Ok(())
     }
 
-    fn bump_seq(&mut self) -> u32 {
-        self.next_seq = self.next_seq.wrapping_add(1);
-        self.next_seq
-    }
-
     /// Worker-side: append to the per-remote batch; flush at batch_max.
     /// All WRs through here ride a shared RC QP, so they are accounted as
-    /// in-flight RC work for the migration engine's drain bookkeeping.
+    /// in-flight RC work for the migration engine's drain bookkeeping
+    /// (the per-op remote also lives in the op's slab entry).
     fn enqueue_wr(
         &mut self,
         sim: &mut Sim,
@@ -604,9 +656,8 @@ impl Daemon {
         _tag: u64,
     ) -> Result<(), RaasError> {
         self.telemetry.charge(self.cfg.shm.ring_pop_ns + self.cfg.wr_build_ns);
-        self.rc_inflight_remote.insert(wr.wr_id, remote.0);
         self.migrate.on_rc_submitted(remote.0);
-        let batch = self.pending.entry(remote.0).or_default();
+        let batch = self.pending.entry_or_default(remote.0);
         if batch.is_empty() {
             self.dirty_remotes.push(remote.0);
         }
@@ -618,14 +669,14 @@ impl Daemon {
     }
 
     fn flush_remote(&mut self, sim: &mut Sim, remote: NodeId) -> Result<(), RaasError> {
-        let qpn = match self.shared_qps.get(&remote.0) {
+        let qpn = match self.shared_qps.get(remote.0) {
             Some(q) => *q,
             None => return Err(RaasError::UnknownConnection),
         };
         // never overrun the SQ: post what fits, keep the rest pending
         // (the Worker retries on the next pump — daemon-side backpressure)
         let free = sim.sq_free(self.node, qpn);
-        let Some(batch) = self.pending.get_mut(&remote.0) else {
+        let Some(batch) = self.pending.get_mut(remote.0) else {
             return Ok(());
         };
         if batch.is_empty() || free == 0 {
@@ -651,7 +702,7 @@ impl Daemon {
         let remotes = std::mem::take(&mut self.dirty_remotes);
         for r in remotes {
             let _ = self.flush_remote(sim, NodeId(r));
-            if self.pending.get(&r).is_some_and(|b| !b.is_empty()) {
+            if self.pending.get(r).is_some_and(|b| !b.is_empty()) {
                 self.dirty_remotes.push(r);
             }
         }
@@ -696,41 +747,36 @@ impl Daemon {
     /// Release staging leases whose completion never came (the op's CQE
     /// died with a node restart, or the fabric lost it beyond recovery),
     /// reporting the op failed to its app so closed loops keep moving.
-    /// Reclaimed wr_ids are processed in sorted order — HashMap iteration
-    /// order must never dictate inbox delivery order.
+    /// The slab iterates in slot order — a fixed, deterministic inbox
+    /// delivery order. Taking the op bumps its slot generation, so a
+    /// completion that limps in later misses the slab and is dropped.
     fn reclaim_stale_leases(&mut self, sim: &mut Sim) {
-        if self.cfg.lease_timeout_ns == 0 || self.open_leases.is_empty() {
+        if self.cfg.lease_timeout_ns == 0 || self.ops.is_empty() {
             return;
         }
         let now = sim.now();
         let timeout = Ns(self.cfg.lease_timeout_ns);
-        let mut stale: Vec<u64> = self
-            .open_leases
+        let stale: Vec<u64> = self
+            .ops
             .iter()
-            .filter(|(_, o)| now.saturating_sub(o.opened_at) >= timeout)
-            .map(|(&id, _)| id)
+            .filter(|(_, op)| now.saturating_sub(op.opened_at) >= timeout)
+            .map(|(id, _)| id)
             .collect();
-        if stale.is_empty() {
-            return;
-        }
-        stale.sort_unstable();
         for wr_id in stale {
-            let o = self.open_leases.remove(&wr_id).expect("stale id present");
-            self.pool.release(o.lease);
-            self.reclaimed_wr_ids.insert(wr_id);
+            let op = self.ops.take(wr_id).expect("stale id is live");
+            self.pool.release(op.lease);
             self.stats.leases_reclaimed += 1;
             self.stats.ops_failed += 1;
             self.telemetry.ops_failed += 1;
-            self.ud_msg_len.remove(&wr_id);
             // keep the migration drain ledger honest: the RC WR is gone
-            if let Some(remote) = self.rc_inflight_remote.remove(&wr_id) {
+            if let Some(remote) = op.rc_remote {
                 self.migrate.on_rc_completed(remote);
             }
-            let vqpn = unpack_vqpn(wr_id);
+            let vqpn = crate::raas::vqpn::unpack_vqpn(wr_id);
             if let Some(entry) = self.conns.lookup(vqpn) {
                 let app = entry.app;
                 self.telemetry.charge(self.cfg.shm.ring_push_ns);
-                self.inboxes.entry(app).or_default().push_back(Delivery::OpComplete {
+                self.inbox_mut(app).push_back(Delivery::OpComplete {
                     conn: vqpn,
                     tag: wr_id,
                     len: 0,
@@ -776,29 +822,32 @@ impl Daemon {
         }
     }
 
+    /// The Poller's per-completion hot path: ONE slab index resolves the
+    /// op (lease, drain ledger, UD logical length, late-completion dedup
+    /// via the generation check) and ONE conn-table index routes the
+    /// delivery — zero hashing, zero allocation.
     fn on_send_cqe(&mut self, sim: &mut Sim, cqe: Cqe) {
         self.telemetry.charge(self.cfg.demux_ns);
-        if self.reclaimed_wr_ids.remove(&cqe.wr_id) {
-            // the stale-lease reclaim already reported this op failed and
-            // released its lease; drop the late completion so the app
-            // never sees two OpCompletes for one op
+        let Some(op) = self.ops.take(cqe.wr_id) else {
+            // stale generation / vacated slot: the stale-lease reclaim
+            // already reported this op failed and released its lease;
+            // drop the late completion so the app never sees two
+            // OpCompletes for one op
             return;
-        }
-        let vqpn = unpack_vqpn(cqe.wr_id);
+        };
+        let vqpn = crate::raas::vqpn::unpack_vqpn(cqe.wr_id);
         let ok = cqe.status == WcStatus::Success;
         // a fragmented UD message's CQE carries only the last fragment's
         // length; report the logical message length to the app
-        let len = self.ud_msg_len.remove(&cqe.wr_id).unwrap_or(cqe.len);
-        if let Some(remote) = self.rc_inflight_remote.remove(&cqe.wr_id) {
+        let len = op.ud_msg_len.unwrap_or(cqe.len);
+        if let Some(remote) = op.rc_remote {
             self.migrate.on_rc_completed(remote);
         }
-        if let Some(o) = self.open_leases.remove(&cqe.wr_id) {
-            if o.deliver_copy && ok {
-                // copy read payload out to the app's private buffer
-                sim.node_mut(self.node).cpu.charge_memcpy(cqe.len, 10.0);
-            }
-            self.pool.release(o.lease);
+        if op.deliver_copy && ok {
+            // copy read payload out to the app's private buffer
+            sim.node_mut(self.node).cpu.charge_memcpy(cqe.len, 10.0);
         }
+        self.pool.release(op.lease);
         self.stats.ops_completed += 1;
         self.telemetry.ops_completed += 1;
         if ok {
@@ -810,7 +859,7 @@ impl Daemon {
         if let Some(entry) = self.conns.lookup(vqpn) {
             let app = entry.app;
             self.telemetry.charge(self.cfg.shm.ring_push_ns);
-            self.inboxes.entry(app).or_default().push_back(Delivery::OpComplete {
+            self.inbox_mut(app).push_back(Delivery::OpComplete {
                 conn: vqpn,
                 tag: cqe.wr_id,
                 len,
@@ -845,7 +894,7 @@ impl Daemon {
         // apps read in place (recv_zero_copy — Fig 3)
         self.stats.msgs_delivered += 1;
         self.telemetry.charge(self.cfg.shm.ring_push_ns);
-        self.inboxes.entry(app).or_default().push_back(Delivery::Message {
+        self.inbox_mut(app).push_back(Delivery::Message {
             conn: vqpn,
             len,
             zero_copy: false,
@@ -856,7 +905,7 @@ impl Daemon {
     /// `recv(fd, buf, len, FLAGS)` — pops the next delivery for `app`,
     /// charging the copy-out.
     pub fn recv(&mut self, sim: &mut Sim, app: u32) -> Option<Delivery> {
-        let d = self.inboxes.get_mut(&app)?.pop_front()?;
+        let d = self.inboxes.get_mut(app as usize)?.pop_front()?;
         sim.node_mut(self.node).cpu.charge(self.cfg.shm.ring_pop_ns);
         if let Delivery::Message { len, .. } = d {
             sim.node_mut(self.node).cpu.charge_memcpy(len, 10.0);
@@ -867,7 +916,7 @@ impl Daemon {
     /// `recv_zero_copy(fd, &buf_addr, len, FLAGS)` — no copy-out; the app
     /// reads the registered buffer in place (Fig 3's blocking-mode path).
     pub fn recv_zero_copy(&mut self, sim: &mut Sim, app: u32) -> Option<Delivery> {
-        let mut d = self.inboxes.get_mut(&app)?.pop_front()?;
+        let mut d = self.inboxes.get_mut(app as usize)?.pop_front()?;
         sim.node_mut(self.node).cpu.charge(self.cfg.shm.ring_pop_ns);
         if let Delivery::Message { ref mut zero_copy, .. } = d {
             *zero_copy = true;
@@ -877,7 +926,7 @@ impl Daemon {
 
     /// Pending deliveries for an app (diagnostics).
     pub fn inbox_len(&self, app: u32) -> usize {
-        self.inboxes.get(&app).map(|q| q.len()).unwrap_or(0)
+        self.inboxes.get(app as usize).map(|q| q.len()).unwrap_or(0)
     }
 
     /// Shared QPs this daemon holds (one per active remote node).
@@ -936,10 +985,15 @@ pub fn connect_via(
         (&mut r[0], &mut l[b])
     };
 
-    let b_app = *db.listeners.get(&port).ok_or(RaasError::UnknownConnection)?;
+    let b_app = db
+        .listeners
+        .iter()
+        .find(|(p, _)| *p == port)
+        .map(|&(_, app)| app)
+        .ok_or(RaasError::UnknownConnection)?;
 
     // shared QP pair between the machines, created once
-    if !da.shared_qps.contains_key(&db.node.0) {
+    if da.shared_qps.get(db.node.0).is_none() {
         let qa = sim.create_qp(da.node, crate::fabric::types::QpTransport::Rc, da.send_cq, da.recv_cq);
         let qb = sim.create_qp(db.node, crate::fabric::types::QpTransport::Rc, db.send_cq, db.recv_cq);
         sim.connect(da.node, qa, db.node, qb);
@@ -968,8 +1022,8 @@ pub fn connect_via(
     let va = da.conns.open(a_app, db.node, Vqpn(0));
     let vb = db.conns.open(b_app, da.node, va);
     da.conns.set_peer(va, vb);
-    db.accept_queues.entry((b_app, port)).or_default().push_back(vb);
-    db.inboxes.entry(b_app).or_default();
+    db.accept_queue_mut(b_app, port).push_back(vb);
+    db.inbox_mut(b_app);
     Ok(va)
 }
 

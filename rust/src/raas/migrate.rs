@@ -56,9 +56,8 @@
 //! explicit one-sided `read`/`write` calls stay on RC (Table 1: UD cannot
 //! carry them).
 
-use std::collections::{BTreeMap, HashMap};
-
 use crate::fabric::time::Ns;
+use crate::fabric::types::IdMap;
 
 use super::vqpn::Vqpn;
 
@@ -204,7 +203,11 @@ pub struct DestEntry {
 pub struct TransportManager {
     /// Policy knobs this manager runs with.
     pub cfg: MigrationConfig,
-    dests: BTreeMap<u32, DestEntry>,
+    /// Per-destination entries, node-id-indexed ([`IdMap`]): the per-op
+    /// drain bookkeeping (`on_rc_submitted`/`on_rc_completed`) is a
+    /// bounds check, not a tree walk; iteration stays ascending-id like
+    /// the `BTreeMap` this replaced, so evaluation order is unchanged.
+    dests: IdMap<DestEntry>,
     next_rank: u32,
     /// Latched observed-thrash flag (second hysteresis band).
     thrash: bool,
@@ -219,7 +222,7 @@ impl TransportManager {
     pub fn new(cfg: MigrationConfig) -> Self {
         TransportManager {
             cfg,
-            dests: BTreeMap::new(),
+            dests: IdMap::new(),
             next_rank: 0,
             thrash: false,
             to_ud: 0,
@@ -232,12 +235,14 @@ impl TransportManager {
     /// the next [`TransportManager::evaluate`] if they land past the
     /// budget.
     pub fn register_dest(&mut self, remote: u32) {
-        let next_rank = &mut self.next_rank;
-        self.dests.entry(remote).or_insert_with(|| {
-            let rank = *next_rank;
-            *next_rank += 1;
-            DestEntry { state: DestState::Rc, rank, inflight_rc: 0, draining_since: None }
-        });
+        if self.dests.get(remote).is_none() {
+            let rank = self.next_rank;
+            self.next_rank += 1;
+            self.dests.insert(
+                remote,
+                DestEntry { state: DestState::Rc, rank, inflight_rc: 0, draining_since: None },
+            );
+        }
     }
 
     /// The structural working-set pressure against an ICM cache of
@@ -277,7 +282,7 @@ impl TransportManager {
             if r < self.cfg.thrash_hit_rate {
                 self.thrash = true;
             } else if r > self.cfg.thrash_hit_rate + 0.25
-                && self.dests.values().all(|e| e.state == DestState::Rc)
+                && self.dests.iter().all(|(_, e)| e.state == DestState::Rc)
             {
                 self.thrash = false;
             }
@@ -294,7 +299,7 @@ impl TransportManager {
             return;
         }
         let pressure = self.pressure(capacity);
-        for e in self.dests.values_mut() {
+        for (_, e) in self.dests.iter_mut() {
             let next = decide(e.state, pressure, &self.cfg);
             if next != e.state {
                 match (e.state, next) {
@@ -333,12 +338,12 @@ impl TransportManager {
         if !self.cfg.enabled {
             return DestState::Rc;
         }
-        self.dests.get(&remote).map(|e| e.state).unwrap_or(DestState::Rc)
+        self.dests.get(remote).map(|e| e.state).unwrap_or(DestState::Rc)
     }
 
     /// Account an RC WR submitted toward `remote` (drain bookkeeping).
     pub fn on_rc_submitted(&mut self, remote: u32) {
-        if let Some(e) = self.dests.get_mut(&remote) {
+        if let Some(e) = self.dests.get_mut(remote) {
             e.inflight_rc += 1;
         }
     }
@@ -346,7 +351,7 @@ impl TransportManager {
     /// Account an RC completion from `remote`; promotes a fully drained
     /// destination to UD.
     pub fn on_rc_completed(&mut self, remote: u32) {
-        if let Some(e) = self.dests.get_mut(&remote) {
+        if let Some(e) = self.dests.get_mut(remote) {
             e.inflight_rc = e.inflight_rc.saturating_sub(1);
             if e.state == DestState::DrainingToUd && e.inflight_rc == 0 {
                 e.state = DestState::Ud;
@@ -358,7 +363,7 @@ impl TransportManager {
     /// Destinations currently in each state: (rc, draining, ud).
     pub fn state_counts(&self) -> (usize, usize, usize) {
         let mut c = (0, 0, 0);
-        for e in self.dests.values() {
+        for (_, e) in self.dests.iter() {
             match e.state {
                 DestState::Rc => c.0 += 1,
                 DestState::DrainingToUd => c.1 += 1,
@@ -380,7 +385,7 @@ impl TransportManager {
 
     /// Inspect one destination's entry (tests/diagnostics).
     pub fn dest(&self, remote: u32) -> Option<&DestEntry> {
-        self.dests.get(&remote)
+        self.dests.get(remote)
     }
 }
 
@@ -406,7 +411,11 @@ struct Partial {
 /// a dropped LAST fragment cannot pin reassembly state forever.
 #[derive(Clone, Debug, Default)]
 pub struct Reassembler {
-    partial: HashMap<u32, Partial>,
+    /// Open partials, vQPN-indexed ([`IdMap`]): the per-fragment accept
+    /// path on the Poller is an array index, and `expire_stale` sweeps
+    /// in ascending-vQPN order (deterministic by construction, not by
+    /// argument).
+    partial: IdMap<Partial>,
     /// Messages fully reassembled and delivered.
     pub completed: u64,
     /// Partial messages discarded on a sequence gap or restart.
@@ -443,7 +452,7 @@ impl Reassembler {
         now: Ns,
     ) -> Option<u64> {
         if seq == 0 {
-            if self.partial.remove(&vqpn.0).is_some() {
+            if self.partial.remove(vqpn.0).is_some() {
                 // a new message started before the previous one finished
                 // (sender restart, or the previous tail was lost)
                 self.dropped += 1;
@@ -456,13 +465,13 @@ impl Reassembler {
                 .insert(vqpn.0, Partial { msg_id: msg, next_seq: 1, bytes: len, last_frag_at: now });
             return None;
         }
-        match self.partial.get_mut(&vqpn.0) {
+        match self.partial.get_mut(vqpn.0) {
             Some(p) if p.msg_id == msg && p.next_seq == seq => {
                 p.bytes += len;
                 p.last_frag_at = now;
                 if last {
                     let total = p.bytes;
-                    self.partial.remove(&vqpn.0);
+                    self.partial.remove(vqpn.0);
                     self.completed += 1;
                     Some(total)
                 } else {
@@ -472,7 +481,7 @@ impl Reassembler {
             }
             _ => {
                 // gap, tag mismatch, or orphan fragment: drop any partial
-                if self.partial.remove(&vqpn.0).is_some() {
+                if self.partial.remove(vqpn.0).is_some() {
                     self.dropped += 1;
                 } else {
                     self.orphan_fragments += 1;
@@ -483,16 +492,16 @@ impl Reassembler {
     }
 
     /// Reclaim partials whose latest fragment is older than `timeout`
-    /// (0 disables). Returns how many were expired. Removal is pure
-    /// bookkeeping — it touches no simulator state, so the map's
-    /// iteration order cannot leak into the event timeline.
+    /// (0 disables). Returns how many were expired. The sweep runs in
+    /// ascending-vQPN order (and is pure bookkeeping anyway — it touches
+    /// no simulator state), so nothing about the backing store can leak
+    /// into the event timeline.
     pub fn expire_stale(&mut self, now: Ns, timeout: Ns) -> u64 {
         if timeout.0 == 0 || self.partial.is_empty() {
             return 0;
         }
-        let before = self.partial.len();
-        self.partial.retain(|_, p| now.saturating_sub(p.last_frag_at) < timeout);
-        let expired = (before - self.partial.len()) as u64;
+        let expired =
+            self.partial.retain(|_, p| now.saturating_sub(p.last_frag_at) < timeout) as u64;
         self.expired += expired;
         expired
     }

@@ -20,6 +20,9 @@
 //!   drain, MTU fragmentation/reassembly).
 //! * [`buffer`] — registered send/recv buffer pools with slab classes,
 //!   huge-page registration, and the memcpy-vs-memreg staging policy [9].
+//! * [`opslab`] — the in-flight op slab: slot + generation packed into
+//!   the wr_id, so the Poller completes an op with two array indexes and
+//!   zero hashing.
 //! * [`daemon`] — the Worker/Poller engine over the simulated fabric:
 //!   WR batching per shared QP, host-wide SRQ, per-app session state.
 //! * [`telemetry`] — the CPU/memory ledger behind Figs 7/8 and the
@@ -32,6 +35,7 @@ pub mod transport;
 pub mod migrate;
 pub mod buffer;
 pub mod daemon;
+pub mod opslab;
 pub mod telemetry;
 
 pub use api::{Flags, Target};

@@ -1,0 +1,231 @@
+//! The daemon's in-flight op slab: wr_id-addressed, zero-hash completion.
+//!
+//! Before this module the daemon tracked every in-flight op in three
+//! wr_id-keyed `HashMap`s (`open_leases`, `rc_inflight_remote`,
+//! `ud_msg_len`) plus a `HashSet` of reclaimed wr_ids — four hash
+//! lookups on the Poller's per-completion path. The slab replaces all
+//! of them: an op's slot index and a generation counter are packed
+//! **into the wr_id itself**, so completing an op is two array indexes
+//! (slab slot, then the vQPN connection table) and zero hashing or
+//! allocation (Storm's lookup-free dataplane argument — see PAPERS.md).
+//!
+//! ## wr_id encoding
+//!
+//! ```text
+//!   63      52 51          32 31             0
+//!  +----------+--------------+----------------+
+//!  | gen (12) | slot+1 (20)  |   vQPN (32)    |
+//!  +----------+--------------+----------------+
+//! ```
+//!
+//! * The vQPN keeps the low 32 bits exactly as Fig 4 prescribes (and as
+//!   [`super::vqpn::unpack_vqpn`] expects) — completion routing still
+//!   reads it straight out of the CQE.
+//! * `slot+1` addresses the slab; the all-zeros field is the **null
+//!   slot** used by WRs that never produce a CQE (unsignaled UD
+//!   fragments), so "untracked" is representable without a map.
+//! * `gen` is the slot's generation, bumped on every release. A CQE
+//!   that limps in after the stale-lease reclaim freed its op carries a
+//!   stale generation and misses the slab — exactly the late-completion
+//!   dedup the old `reclaimed_wr_ids` hash set performed, now for free.
+//!   (The 12-bit counter wraps at 4096; a false match would need one
+//!   slot to be recycled 4096 times while a single CQE is in flight,
+//!   orders of magnitude beyond the simulator's retry horizons.)
+
+use crate::raas::vqpn::Vqpn;
+
+/// Bits of the wr_id carrying `slot + 1` (≈1M concurrent ops).
+pub const SLOT_BITS: u32 = 20;
+/// Bits of the wr_id carrying the slot generation.
+pub const GEN_BITS: u32 = 12;
+/// Most ops a slab can hold live at once (one wr_id slot field is the
+/// reserved null).
+pub const MAX_LIVE_OPS: usize = (1 << SLOT_BITS) - 1;
+const SLOT_MASK: u64 = (1 << SLOT_BITS) - 1;
+const GEN_MASK: u16 = (1 << GEN_BITS) - 1;
+
+/// Pack `(slot, gen, vqpn)` into a wr_id. `slot` must be below
+/// [`MAX_LIVE_OPS`] and `gen` below `1 << `[`GEN_BITS`].
+#[inline]
+pub fn pack_op_wr_id(slot: u32, gen: u16, vqpn: Vqpn) -> u64 {
+    debug_assert!((slot as usize) < MAX_LIVE_OPS);
+    debug_assert!(gen <= GEN_MASK);
+    ((gen as u64) << (32 + SLOT_BITS)) | (((slot as u64) + 1) << 32) | vqpn.0 as u64
+}
+
+/// A wr_id carrying only a vQPN (null slot): the form stamped on WRs
+/// that never complete (unsignaled UD fragments).
+#[inline]
+pub fn untracked_wr_id(vqpn: Vqpn) -> u64 {
+    vqpn.0 as u64
+}
+
+/// Extract the slab slot from a wr_id (None for the null slot).
+#[inline]
+pub fn unpack_op_slot(wr_id: u64) -> Option<u32> {
+    (((wr_id >> 32) & SLOT_MASK) as u32).checked_sub(1)
+}
+
+/// Extract the slot generation from a wr_id.
+#[inline]
+pub fn unpack_op_gen(wr_id: u64) -> u16 {
+    ((wr_id >> (32 + SLOT_BITS)) as u16) & GEN_MASK
+}
+
+#[derive(Clone, Debug)]
+struct Slot<T> {
+    gen: u16,
+    vqpn: Vqpn,
+    val: Option<T>,
+}
+
+/// Generational slab of in-flight ops addressed by the wr_ids it mints.
+///
+/// `insert` returns the wr_id to stamp on the WR; `take` (the completion
+/// path) resolves a CQE's wr_id in O(1) and rejects stale generations.
+/// Freed slots are recycled LIFO, so the backing vector's length is the
+/// high-water mark of concurrent ops, not the lifetime count.
+#[derive(Clone, Debug, Default)]
+pub struct OpSlab<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<T> OpSlab<T> {
+    /// Empty slab.
+    pub fn new() -> Self {
+        OpSlab { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    /// Track a new op for `vqpn`; returns the wr_id carrying its slot.
+    pub fn insert(&mut self, vqpn: Vqpn, val: T) -> u64 {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let sl = &mut self.slots[s as usize];
+                sl.vqpn = vqpn;
+                sl.val = Some(val);
+                s
+            }
+            None => {
+                assert!(
+                    self.slots.len() < MAX_LIVE_OPS,
+                    "op slab full: {} concurrent in-flight ops",
+                    MAX_LIVE_OPS
+                );
+                self.slots.push(Slot { gen: 0, vqpn, val: Some(val) });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.live += 1;
+        pack_op_wr_id(slot, self.slots[slot as usize].gen, vqpn)
+    }
+
+    /// Resolve a live op by its wr_id (None for null slot, stale
+    /// generation, vQPN mismatch, or a freed slot).
+    #[inline]
+    pub fn get(&self, wr_id: u64) -> Option<&T> {
+        let s = unpack_op_slot(wr_id)?;
+        let slot = self.slots.get(s as usize)?;
+        if slot.gen != unpack_op_gen(wr_id) || slot.vqpn.0 != wr_id as u32 {
+            return None;
+        }
+        slot.val.as_ref()
+    }
+
+    /// Complete an op: remove and return it, bumping the slot generation
+    /// so any later CQE carrying this wr_id dies here.
+    pub fn take(&mut self, wr_id: u64) -> Option<T> {
+        let s = unpack_op_slot(wr_id)?;
+        let slot = self.slots.get_mut(s as usize)?;
+        if slot.gen != unpack_op_gen(wr_id) || slot.vqpn.0 != wr_id as u32 {
+            return None;
+        }
+        let val = slot.val.take()?;
+        slot.gen = (slot.gen + 1) & GEN_MASK;
+        self.free.push(s);
+        self.live -= 1;
+        Some(val)
+    }
+
+    /// Live ops.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    /// True when no op is in flight.
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Iterate live ops as `(wr_id, &op)` in ascending slot order — a
+    /// deterministic order for the stale-lease reclaim, never hash order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &T)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| {
+            s.val
+                .as_ref()
+                .map(|v| (pack_op_wr_id(i as u32, s.gen, s.vqpn), v))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wr_id_fields_roundtrip() {
+        let id = pack_op_wr_id(12345, 0x9AB, Vqpn(0xDEAD_BEEF));
+        assert_eq!(unpack_op_slot(id), Some(12345));
+        assert_eq!(unpack_op_gen(id), 0x9AB);
+        assert_eq!(crate::raas::vqpn::unpack_vqpn(id), Vqpn(0xDEAD_BEEF));
+    }
+
+    #[test]
+    fn null_slot_is_untracked() {
+        let id = untracked_wr_id(Vqpn(77));
+        assert_eq!(unpack_op_slot(id), None);
+        let slab: OpSlab<u8> = OpSlab::new();
+        assert!(slab.get(id).is_none());
+    }
+
+    #[test]
+    fn insert_take_roundtrip() {
+        let mut slab = OpSlab::new();
+        let a = slab.insert(Vqpn(1), "a");
+        let b = slab.insert(Vqpn(2), "b");
+        assert_ne!(a, b);
+        assert_eq!(slab.len(), 2);
+        assert_eq!(slab.get(a), Some(&"a"));
+        assert_eq!(slab.take(b), Some("b"));
+        assert_eq!(slab.take(b), None, "double take must miss");
+        assert_eq!(slab.take(a), Some("a"));
+        assert!(slab.is_empty());
+    }
+
+    #[test]
+    fn stale_generation_is_rejected() {
+        let mut slab = OpSlab::new();
+        let old = slab.insert(Vqpn(9), 1u32);
+        assert_eq!(slab.take(old), Some(1));
+        // the slot is recycled with a bumped generation: the old wr_id
+        // must not resolve to the new op
+        let new = slab.insert(Vqpn(9), 2u32);
+        assert_ne!(old, new);
+        assert!(slab.get(old).is_none());
+        assert_eq!(slab.take(old), None);
+        assert_eq!(slab.take(new), Some(2));
+    }
+
+    #[test]
+    fn iter_is_slot_ordered() {
+        let mut slab = OpSlab::new();
+        let ids: Vec<u64> = (0..5).map(|i| slab.insert(Vqpn(i), i)).collect();
+        slab.take(ids[2]);
+        let live: Vec<u32> = slab.iter().map(|(_, &v)| v).collect();
+        assert_eq!(live, vec![0, 1, 3, 4]);
+        for (wr_id, &v) in slab.iter() {
+            assert_eq!(slab.get(wr_id), Some(&v), "iterated wr_id resolves");
+        }
+    }
+}

@@ -9,6 +9,7 @@
 //! zero-dependency property enforced.
 
 pub mod error;
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 pub mod cli;

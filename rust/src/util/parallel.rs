@@ -1,0 +1,126 @@
+//! Zero-dependency ordered parallel map for the sweep harnesses.
+//!
+//! Every figure/bench sweep point runs an **independent** `Sim` — no
+//! shared state, same seed, same config — so the rows can be computed on
+//! worker threads and merged back in index order without changing a
+//! single output byte. [`map_indexed`] is that executor: it hands items
+//! to `jobs` scoped threads off a shared atomic cursor, each worker
+//! writes its result into the slot matching the item's index, and the
+//! caller receives the results in the original order. With `jobs <= 1`
+//! (or a single item) it degenerates to a plain in-order loop on the
+//! calling thread — the exact serial code path, not a one-thread pool —
+//! so `--jobs 1` is byte-for-byte the old runner by construction.
+//!
+//! Determinism argument: a sweep point's result is a pure function of
+//! its config (the simulator takes no wall-clock, no global RNG, no
+//! cross-`Sim` state), and the merge is by index, so the output of
+//! `--jobs N` equals the output of `--jobs 1` for every N. The
+//! `tests/determinism.rs` `*_parallel_matches_serial` cases gate this
+//! byte-for-byte.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a `--jobs` request: `0` means "use every available core"
+/// (`std::thread::available_parallelism`), anything else is taken as-is.
+pub fn effective_jobs(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// The bench binaries' jobs knob: `RDMAVISOR_JOBS` (0 = all cores),
+/// defaulting to 1 (serial) so recorded numbers stay comparable.
+pub fn jobs_from_env() -> usize {
+    std::env::var("RDMAVISOR_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .map(effective_jobs)
+        .unwrap_or(1)
+}
+
+/// Run `f(index, item)` over every item, on up to `jobs` threads, and
+/// return the results **in item order**. `jobs <= 1` runs the items
+/// sequentially on the calling thread (the exact serial path). A panic
+/// in any worker propagates to the caller once the scope joins.
+pub fn map_indexed<I, T, F>(items: Vec<I>, jobs: usize, f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(usize, I) -> T + Sync,
+{
+    let n = items.len();
+    let jobs = jobs.clamp(1, n.max(1));
+    if jobs <= 1 {
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+
+    // Work items and result slots are index-addressed: workers only ever
+    // touch disjoint slots, the Mutexes exist to satisfy the borrow
+    // checker across threads (they are uncontended by construction).
+    let work: Vec<Mutex<Option<I>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i]
+                    .lock()
+                    .expect("work slot poisoned")
+                    .take()
+                    .expect("work item taken once");
+                let r = f(i, item);
+                *slots[i].lock().expect("result slot poisoned") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("result slot poisoned")
+                .expect("every index produced a result")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_and_parallel_agree_in_order() {
+        let items: Vec<u64> = (0..57).collect();
+        let serial = map_indexed(items.clone(), 1, |i, x| (i as u64) * 1000 + x * x);
+        let par4 = map_indexed(items.clone(), 4, |i, x| (i as u64) * 1000 + x * x);
+        let par_many = map_indexed(items, 32, |i, x| (i as u64) * 1000 + x * x);
+        assert_eq!(serial, par4);
+        assert_eq!(serial, par_many);
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let none: Vec<u32> = map_indexed(Vec::<u32>::new(), 8, |_, x| x);
+        assert!(none.is_empty());
+        let one = map_indexed(vec![7u32], 8, |i, x| x + i as u32);
+        assert_eq!(one, vec![7]);
+    }
+
+    #[test]
+    fn jobs_zero_resolves_to_cores() {
+        assert!(effective_jobs(0) >= 1);
+        assert_eq!(effective_jobs(3), 3);
+    }
+
+    #[test]
+    fn index_matches_item_position() {
+        let got = map_indexed(vec![10, 20, 30], 2, |i, x| (i, x));
+        assert_eq!(got, vec![(0, 10), (1, 20), (2, 30)]);
+    }
+}

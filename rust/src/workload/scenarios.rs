@@ -1035,6 +1035,65 @@ pub fn event_storm(pairs: usize, window: u32, msg_bytes: u64, duration: Ns) -> u
     sim.steps_processed()
 }
 
+/// Daemon-pump microbench workload for `bench pump`: `conns` logical
+/// connections from one client daemon to one server daemon, closed-loop
+/// READs of `msg_bytes` at `window` outstanding each. Unlike
+/// [`event_storm`] (which has no daemon layer) this exercises exactly
+/// the per-op daemon data plane — Worker batch flush, Poller CQ drain,
+/// wr_id-slab completion, inbox delivery, SRQ refill — so it is the perf
+/// trajectory for daemon densification work. Returns (ops completed by
+/// the client daemon, simulator events); both are deterministic, callers
+/// time the call and divide for ops/sec.
+pub fn pump_storm(conns: usize, msg_bytes: u64, window: u32, duration: Ns) -> (u64, u64) {
+    let mut fabric = FabricConfig::default();
+    fabric.nodes = 2;
+    fabric.sq_depth = 8192;
+    let mut sim = Sim::new(fabric);
+    let mut daemons = vec![
+        Daemon::start(&mut sim, NodeId(0), DaemonConfig::default()),
+        Daemon::start(&mut sim, NodeId(1), DaemonConfig::default()),
+    ];
+    let sapp = daemons[1].register_app();
+    daemons[1].listen(sapp, 7000);
+    let app = daemons[0].register_app();
+    let mut handles = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        handles.push(connect_via(&mut sim, &mut daemons, 0, app, 1, 7000).unwrap());
+    }
+
+    let mut rng = Rng::new(42);
+    let mut offgen = OffsetGen::uniform(64 << 20, 4096);
+    for (i, c) in handles.iter().enumerate() {
+        for _ in 0..window {
+            let off = offgen.next(&mut rng, msg_bytes);
+            let _ = daemons[0].read(&mut sim, *c, msg_bytes, off, i as u64);
+        }
+    }
+    daemons[0].pump(&mut sim);
+
+    let mut notes: Vec<Notification> = Vec::new();
+    while sim.now() < duration {
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
+        }
+        let client_cqe = notes
+            .iter()
+            .any(|n| matches!(n, Notification::CqeReady { node, .. } if node.0 == 0));
+        if client_cqe {
+            daemons[0].pump(&mut sim);
+            while let Some(d) = daemons[0].recv_zero_copy(&mut sim, app) {
+                if let Delivery::OpComplete { conn, .. } = d {
+                    let off = offgen.next(&mut rng, msg_bytes);
+                    let _ = daemons[0].read(&mut sim, conn, msg_bytes, off, 0);
+                }
+            }
+            daemons[0].pump(&mut sim);
+        }
+    }
+    (daemons[0].stats.ops_completed, sim.steps_processed())
+}
+
 /// Fig 1: verbs-level single-pair throughput sweep for one (transport,
 /// verb) combination at one message size.
 pub fn verbs_sweep_point(
@@ -1252,6 +1311,15 @@ mod tests {
         let rc = chaos_send(&cfg);
         assert!(rc.retransmits > 0, "RC must retransmit under loss: {rc:?}");
         assert_eq!(rc.ud_dropped + rc.ud_orphans, 0, "no UD traffic in the ablation");
+    }
+
+    #[test]
+    fn pump_storm_completes_ops_deterministically() {
+        let a = pump_storm(64, 4096, 2, Ns::from_ms(2));
+        let b = pump_storm(64, 4096, 2, Ns::from_ms(2));
+        assert!(a.0 > 0, "the closed loop must complete ops: {a:?}");
+        assert!(a.1 > 0);
+        assert_eq!(a, b, "pump storm must replay identically");
     }
 
     #[test]

@@ -15,12 +15,18 @@ use rdmavisor::workload::scenarios::{
     verbs_sweep_point, ChaosCfg, ScaleCfg, ScenarioCfg,
 };
 
-/// Run one figure id end-to-end and serialize everything it produces.
-fn fig_bytes(id: u64) -> String {
+/// Run one figure id end-to-end on `jobs` threads and serialize
+/// everything it produces.
+fn fig_bytes_jobs(id: u64, jobs: usize) -> String {
     let mut cache = None;
     let (series, table) =
-        figures::run_fig(id, Budget::Quick, &mut cache).expect("known figure id");
+        figures::run_fig(id, Budget::Quick, &mut cache, jobs).expect("known figure id");
     format!("{}\n{}", series.to_json().to_string(), table)
+}
+
+/// The serial runner (`--jobs 1` — the exact old code path).
+fn fig_bytes(id: u64) -> String {
+    fig_bytes_jobs(id, 1)
 }
 
 fn assert_fig_deterministic(id: u64) {
@@ -70,7 +76,7 @@ fn fig10_replays_byte_identically() {
 #[test]
 fn fig10_rc_only_replays_byte_identically() {
     let run = || {
-        let rows = figures::fig10_rc_only(Budget::Quick);
+        let rows = figures::fig10_rc_only(Budget::Quick, 1);
         format!(
             "{}\n{}",
             figures::fig10_series(&rows).to_json().to_string(),
@@ -105,7 +111,7 @@ fn fig9_rc_only_replays_byte_identically() {
     // the `fig --id 9 --rc-only` CLI path (ablation series alone), at the
     // same quick budget the CI smoke uses
     let run = || {
-        let rows = figures::fig9_rc_only(Budget::Quick);
+        let rows = figures::fig9_rc_only(Budget::Quick, 1);
         format!(
             "{}\n{}",
             figures::fig9_series(&rows).to_json().to_string(),
@@ -113,6 +119,54 @@ fn fig9_rc_only_replays_byte_identically() {
         )
     };
     assert_eq!(run(), run(), "fig --id 9 --rc-only differed between runs");
+}
+
+// ------------------------------------------------- parallel sweep harness
+
+/// The PR-5 acceptance gate: the parallel sweep executor must merge
+/// per-point results in index order with NOTHING shared between the
+/// per-point Sims, so `--jobs 4` output is byte-for-byte the serial
+/// runner's. Figures 1, 9 and 10 cover the three sweep shapes (raw
+/// verbs points, the daemon-scale sweep, the fault-injection sweep).
+#[test]
+fn fig1_parallel_matches_serial() {
+    assert_eq!(fig_bytes_jobs(1, 1), fig_bytes_jobs(1, 4), "fig 1: --jobs 4 != --jobs 1");
+}
+
+#[test]
+fn fig9_parallel_matches_serial() {
+    assert_eq!(fig_bytes_jobs(9, 1), fig_bytes_jobs(9, 4), "fig 9: --jobs 4 != --jobs 1");
+}
+
+#[test]
+fn fig9_rc_only_parallel_matches_serial() {
+    let run = |jobs| {
+        let rows = figures::fig9_rc_only(Budget::Quick, jobs);
+        format!(
+            "{}\n{}",
+            figures::fig9_series(&rows).to_json().to_string(),
+            figures::print_fig9(&rows)
+        )
+    };
+    assert_eq!(run(1), run(4), "fig 9 --rc-only: --jobs 4 != --jobs 1");
+}
+
+#[test]
+fn fig10_parallel_matches_serial() {
+    assert_eq!(fig_bytes_jobs(10, 1), fig_bytes_jobs(10, 4), "fig 10: --jobs 4 != --jobs 1");
+}
+
+#[test]
+fn fig10_rc_only_parallel_matches_serial() {
+    let run = |jobs| {
+        let rows = figures::fig10_rc_only(Budget::Quick, jobs);
+        format!(
+            "{}\n{}",
+            figures::fig10_series(&rows).to_json().to_string(),
+            figures::print_fig10(&rows)
+        )
+    };
+    assert_eq!(run(1), run(4), "fig 10 --rc-only: --jobs 4 != --jobs 1");
 }
 
 // ------------------------------------------------------ scenario drivers

@@ -9,6 +9,7 @@ use rdmavisor::fabric::types::{NodeId, QpTransport, Verb, WcStatus};
 use rdmavisor::raas::api::Flags;
 use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery};
 use rdmavisor::raas::migrate::{decide, DestState, MigrationConfig, Reassembler};
+use rdmavisor::raas::opslab::{unpack_op_slot, untracked_wr_id, OpSlab};
 use rdmavisor::raas::shmem::SpscRing;
 use rdmavisor::raas::transport::{HostLoad, Selector, SelectorConfig};
 use rdmavisor::raas::vqpn::{pack_wr_id, unpack_seq, unpack_vqpn, ConnTable, Vqpn};
@@ -27,6 +28,74 @@ fn prop_wr_id_packing_roundtrips() {
         } else {
             Err(format!("roundtrip failed for {x:#x}"))
         }
+    });
+}
+
+#[test]
+fn prop_op_slab_wr_ids_roundtrip_and_never_collide() {
+    // Random insert/take sequences against the daemon's in-flight op
+    // slab. Invariants after every step:
+    //  - the wr_id minted for a live op decodes back to it (get/take
+    //    resolve the payload inserted under it) and carries its vQPN in
+    //    the low 32 bits;
+    //  - live wr_ids are pairwise distinct AND distinct from every
+    //    wr_id whose op completed (slot reuse bumps the generation, so
+    //    a recycled slot's new wr_id can never collide with the old);
+    //  - completed (stale) wr_ids and untracked (null-slot) wr_ids
+    //    never resolve to a live op.
+    let gen = VecGen { elem: U64Range(0, 999), min_len: 1, max_len: 250 };
+    check(17, 60, &gen, |ops: &Vec<u64>| {
+        let mut slab: OpSlab<u64> = OpSlab::new();
+        let mut live: Vec<(u64, u64)> = Vec::new(); // (wr_id, payload)
+        let mut dead: Vec<u64> = Vec::new();
+        let mut payload = 0u64;
+        for (i, &op) in ops.iter().enumerate() {
+            if op < 600 || live.is_empty() {
+                payload += 1;
+                let vqpn = Vqpn((op % 50) as u32);
+                let id = slab.insert(vqpn, payload);
+                if unpack_vqpn(id) != vqpn {
+                    return Err(format!("wr_id {id:#x} lost its vqpn {vqpn:?}"));
+                }
+                if unpack_op_slot(id).is_none() {
+                    return Err(format!("live op minted the null slot: {id:#x}"));
+                }
+                live.push((id, payload));
+            } else {
+                let idx = (op as usize + i) % live.len();
+                let (id, want) = live.swap_remove(idx);
+                match slab.take(id) {
+                    Some(got) if got == want => {}
+                    other => return Err(format!("take({id:#x}) -> {other:?}, want {want}")),
+                }
+                dead.push(id);
+            }
+            if slab.len() != live.len() {
+                return Err(format!("len {} != live {}", slab.len(), live.len()));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for &(id, want) in &live {
+                if !seen.insert(id) {
+                    return Err(format!("duplicate live wr_id {id:#x}"));
+                }
+                match slab.get(id) {
+                    Some(&got) if got == want => {}
+                    other => return Err(format!("get({id:#x}) -> {other:?}, want {want}")),
+                }
+            }
+            for &id in &dead {
+                if seen.contains(&id) {
+                    return Err(format!("completed wr_id {id:#x} collides with a live op"));
+                }
+                if slab.get(id).is_some() || slab.take(id).is_some() {
+                    return Err(format!("stale wr_id {id:#x} resolved to a live op"));
+                }
+            }
+            if slab.get(untracked_wr_id(Vqpn(op as u32))).is_some() {
+                return Err("untracked wr_id resolved to a live op".into());
+            }
+        }
+        Ok(())
     });
 }
 

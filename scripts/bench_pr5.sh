@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Produce BENCH_PR5.json: the fig-9 wall-clock benchmark with the daemon
+# data-plane throughput (`bench pump`) and the raw scheduler throughput
+# (`bench simstep`) embedded — one self-contained perf artifact for the
+# PR-5 daemon-densification + parallel-harness trajectory. CI runs this
+# with --quick and uploads the JSON plus the rendered markdown
+# (scripts/perf_table.py takes any number of BENCH_*.json inputs); run
+# it with no arguments on a quiet machine for the full-sweep numbers
+# quoted in README.md. Measurement stays at --jobs 1 (the serial runner)
+# so the per-point wall clocks are uncontended.
+#
+#   scripts/bench_pr5.sh [--quick] [OUT.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+quick=""
+out="BENCH_PR5.json"
+for arg in "$@"; do
+    case "$arg" in
+        --quick) quick="--quick" ;;
+        *) out="$arg" ;;
+    esac
+done
+
+cargo build --release
+cargo run --quiet --release -- bench fig9 $quick --out "$out" >/dev/null
+
+echo "wrote $out"

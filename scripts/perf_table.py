@@ -1,29 +1,33 @@
 #!/usr/bin/env python3
-"""Render BENCH_PR3.json (from `rdmavisor bench fig9` / bench_pr3.sh) as
-the markdown perf table README.md quotes. Stdlib only.
+"""Render one or more BENCH_*.json artifacts (from `rdmavisor bench
+fig9` / bench_pr3.sh / bench_pr5.sh) as the markdown perf tables
+README.md quotes. Stdlib only.
 
-    python3 scripts/perf_table.py BENCH_PR3.json > BENCH_PR3.md
+    python3 scripts/perf_table.py BENCH_PR3.json BENCH_PR5.json > BENCH_PR5.md
 
-CI runs this on every push so the artifact carries both the raw JSON and
-the human-readable table; paste the table into README.md's Performance
+Each input gets its own section (headed by the file name), so one
+markdown artifact can carry the whole recorded perf trajectory. CI runs
+this on every push; paste the tables into README.md's Performance
 section when refreshing the recorded numbers.
 """
 import json
 import sys
 
 
-def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR3.json"
+def render(path: str) -> bool:
     try:
         with open(path, encoding="utf-8") as f:
             doc = json.load(f)
     except (OSError, ValueError) as e:
         print(f"error: cannot read {path}: {e}", file=sys.stderr)
-        return 1
+        return False
 
     budget = doc.get("budget", "?")
+    jobs = doc.get("jobs")
     points = doc.get("points", [])
-    print(f"### Fig-9 wall clock per connection count (budget: {budget})\n")
+    print(f"## {path}\n")
+    suffix = f", jobs: {jobs:.0f}" if jobs is not None else ""
+    print(f"### Fig-9 wall clock per connection count (budget: {budget}{suffix})\n")
     print("| conns | servers | wall ms | events | events/sec | adaptive Gb/s | rc-only Gb/s |")
     print("|---:|---:|---:|---:|---:|---:|---:|")
     for p in points:
@@ -46,6 +50,22 @@ def main() -> int:
         f"\nTotal: {total_events:.0f} events in {total_wall:.0f} ms "
         f"({eps:.0f} events/sec aggregate)."
     )
+    pump = doc.get("pump")
+    if pump:
+        print(
+            "\n### Daemon data-plane throughput (`bench pump`)\n\n"
+            "| conns | window | msg bytes | sim ms | ops | best ops/sec |\n"
+            "|---:|---:|---:|---:|---:|---:|\n"
+            "| {conns:.0f} | {window:.0f} | {msg:.0f} | {sim_ms:.0f} "
+            "| {ops:.0f} | {ops_s:.0f} |".format(
+                conns=pump.get("conns", 0),
+                window=pump.get("window", 0),
+                msg=pump.get("msg_bytes", 0),
+                sim_ms=pump.get("sim_ms", 0),
+                ops=pump.get("ops", 0),
+                ops_s=pump.get("ops_per_sec", 0) or 0,
+            )
+        )
     ss = doc.get("simstep")
     if ss:
         print(
@@ -62,7 +82,17 @@ def main() -> int:
                 eps=ss.get("events_per_sec", 0) or 0,
             )
         )
-    return 0
+    return True
+
+
+def main() -> int:
+    paths = sys.argv[1:] if len(sys.argv) > 1 else ["BENCH_PR5.json"]
+    ok = True
+    for i, path in enumerate(paths):
+        if i:
+            print()
+        ok = render(path) and ok
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -85,6 +85,17 @@ case "$out9" in
     *) echo "FAIL: unexpected fig 9 output: ${out9:0:120}" >&2; exit 1 ;;
 esac
 
+echo "== smoke: fig 9 --jobs 2 (parallel sweep harness, byte-identical) =="
+# the parallel executor must not change a single output byte; only the
+# top-level wall_ms field legitimately varies run to run, so strip it
+out9j="$(cargo run --quiet --release -- fig --id 9 --quick --jobs 2 2>/dev/null)"
+strip_wall() { printf '%s' "$1" | sed -E 's/"wall_ms":[^,}]+//g'; }
+if [[ "$(strip_wall "$out9j")" != "$(strip_wall "$out9")" ]]; then
+    echo "FAIL: fig 9 --jobs 2 JSON differs from the serial runner" >&2
+    exit 1
+fi
+echo "ok: fig --id 9 --jobs 2 matches the serial series byte-for-byte"
+
 echo "== smoke: fig 10 (fault-injection chaos sweep) =="
 out10="$(cargo run --quiet --release -- fig --id 10 --quick 2>/dev/null)"
 case "$out10" in
@@ -101,6 +112,13 @@ outs="$(cargo run --quiet --release -- bench simstep --quick 2>/dev/null)"
 case "$outs" in
     *'"mode":"simstep"'*'"events_per_sec"'*) echo "ok: bench simstep printed events/sec JSON" ;;
     *) echo "FAIL: unexpected bench simstep output: ${outs:0:120}" >&2; exit 1 ;;
+esac
+
+echo "== smoke: bench pump (daemon data-plane throughput) =="
+outp="$(cargo run --quiet --release -- bench pump --quick 2>/dev/null)"
+case "$outp" in
+    *'"mode":"pump"'*'"ops_per_sec"'*) echo "ok: bench pump printed ops/sec JSON" ;;
+    *) echo "FAIL: unexpected bench pump output: ${outp:0:120}" >&2; exit 1 ;;
 esac
 
 echo "ALL CHECKS PASSED"
