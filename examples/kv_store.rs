@@ -1,14 +1,18 @@
 //! KV-store demo: a HERD-style key-value service on RaaS.
 //!
-//! One server node holds a 64 Mslot value table in its daemon pool; three
-//! client nodes run zipf-skewed GET (one-sided READ, zero server CPU) and
-//! PUT (adaptive send) workloads. Reports per-client throughput, GET
-//! latency percentiles, and the server's CPU ledger — demonstrating the
-//! paper's point that one-sided GETs leave the server cores idle.
+//! One server node holds a 64 MB value table in its daemon pool; three
+//! client nodes run zipf-skewed GET/PUT rounds against it. Each client
+//! registers a remote window once, then GETs are single one-sided READ
+//! RTTs (zero server CPU — the Storm repeat-get pattern) and PUT bursts
+//! coalesce into one doorbell group (RDMAbox request merging). Reports
+//! per-client throughput, round latency percentiles, and the server's
+//! CPU ledger — demonstrating the paper's point that one-sided ops leave
+//! the server cores idle. `--rpc` flips every client to the SEND-RPC
+//! baseline for comparison.
 //!
-//! Run: `cargo run --release --example kv_store [--gets N] [--put-ratio PCT]`
+//! Run: `cargo run --release --example kv_store [--rounds N] [--put-ratio PCT] [--rpc]`
 
-use rdmavisor::apps::kv::{KvClient, KvLayout, KvServer};
+use rdmavisor::apps::kv::{KvClient, KvLayout, KvMode, KvServer};
 use rdmavisor::fabric::sim::{FabricConfig, Notification, Sim};
 use rdmavisor::fabric::time::Ns;
 use rdmavisor::fabric::types::NodeId;
@@ -19,8 +23,9 @@ use rdmavisor::util::stats::Histogram;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
-    let target_gets: u64 = args.u64_or("gets", 2000);
-    let put_pct: u64 = args.u64_or("put-ratio", 5);
+    let target_rounds: u64 = args.u64_or("rounds", 2000);
+    let put_pct: u64 = args.u64_or("put-ratio", 5).min(100);
+    let mode = if args.flag("rpc") { KvMode::Rpc } else { KvMode::OneSided };
 
     let mut sim = Sim::new(FabricConfig::default());
     let mut daemons: Vec<Daemon> = (0..4)
@@ -28,37 +33,40 @@ fn main() {
         .collect();
 
     let layout = KvLayout { slots: 65_536, slot_bytes: 1024 };
-    let mut server = KvServer::new(&mut daemons[0], 6000, layout);
+    let mut server = KvServer::new(&mut daemons[0], 6000, layout, mode, 1);
 
-    // three client machines, 8 connections each
+    // three client machines, 8 closed-loop clients each
     let mut clients = Vec::new();
     for node in 1..4usize {
         for c in 0..8u64 {
             let app = daemons[node].register_app();
             let conn = connect_via(&mut sim, &mut daemons, node, app, 0, 6000).unwrap();
-            clients.push((node, KvClient::new(app, conn, layout, node as u64 * 100 + c, 0.99)));
+            let seed = node as u64 * 100 + c;
+            let mut client =
+                KvClient::new(app, conn, layout, seed, 0.99, mode, (100 - put_pct) as u32, 4);
+            client.register(&mut sim, &mut daemons[node]).expect("register window");
+            clients.push((node, client));
         }
     }
-    println!("cluster up: {} clients over {} shared QPs at the server",
-        clients.len(), daemons[0].shared_qp_count());
+    println!(
+        "cluster up: {} clients over {} shared QPs at the server ({} mode)",
+        clients.len(),
+        daemons[0].shared_qp_count(),
+        if mode == KvMode::Rpc { "SEND-RPC" } else { "one-sided" }
+    );
 
-    // closed loop: every client keeps 4 ops outstanding
-    let mut issued = 0u64;
+    // closed loop: every client keeps one GET/PUT round in flight
     for (node, client) in clients.iter_mut() {
-        for _ in 0..4 {
-            if issued % 100 < put_pct {
-                client.put(&mut sim, &mut daemons[*node], 1024).unwrap();
-            } else {
-                client.get(&mut sim, &mut daemons[*node]).unwrap();
-            }
-            issued += 1;
-        }
+        client.issue(&mut sim, &mut daemons[*node]).expect("issue");
+    }
+    for node in 1..4usize {
+        daemons[node].pump(&mut sim);
     }
 
     let mut lat = Histogram::new();
     let mut done = 0u64;
     let mut last_issue: Vec<Ns> = vec![sim.now(); clients.len()];
-    while done < target_gets {
+    while done < target_rounds {
         let Some(notes) = sim.step() else { break };
         let mut touched = false;
         for n in &notes {
@@ -71,18 +79,22 @@ fn main() {
                 d.pump(&mut sim);
             }
             server.service(&mut sim, &mut daemons[0]);
+            daemons[0].pump(&mut sim); // flush any RPC replies now
             for (i, (node, client)) in clients.iter_mut().enumerate() {
-                let completed = client.drain(&mut sim, &mut daemons[*node]);
-                for _ in 0..completed {
+                let mut rounds = 0u32;
+                while let Some(d) = daemons[*node].recv_zero_copy(&mut sim, client.app) {
+                    if client.on_delivery(&d) {
+                        rounds += 1;
+                    }
+                }
+                for _ in 0..rounds {
                     lat.record(sim.now().saturating_sub(last_issue[i]).0);
                     done += 1;
-                    if issued % 100 < put_pct {
-                        client.put(&mut sim, &mut daemons[*node], 1024).unwrap();
-                    } else {
-                        client.get(&mut sim, &mut daemons[*node]).unwrap();
-                    }
-                    issued += 1;
                     last_issue[i] = sim.now();
+                    client.issue(&mut sim, &mut daemons[*node]).expect("issue");
+                }
+                if rounds > 0 {
+                    daemons[*node].pump(&mut sim);
                 }
             }
         }
@@ -91,21 +103,33 @@ fn main() {
     let elapsed = sim.now();
     let server_cpu = daemons[0].snapshot(&sim).cpu_cores;
     println!("\n== results ==");
-    println!("ops completed : {done} ({put_pct}% puts) in {elapsed}");
+    println!("rounds done   : {done} ({put_pct}% put rounds) in {elapsed}");
+    println!("throughput    : {:.2} Mops/s", done as f64 * 1e3 / elapsed.0.max(1) as f64);
     println!(
-        "throughput    : {:.2} Mops/s",
-        done as f64 * 1e3 / elapsed.0.max(1) as f64
-    );
-    println!(
-        "GET latency   : p50 {:.1} µs   p99 {:.1} µs",
+        "round latency : p50 {:.1} µs   p99 {:.1} µs",
         lat.p50() as f64 / 1e3,
         lat.p99() as f64 / 1e3
     );
     println!(
-        "server CPU    : {:.2} cores-equivalent (one-sided GETs bypass the CPU)",
+        "server CPU    : {:.2} cores-equivalent (one-sided ops bypass the CPU)",
         server_cpu
     );
-    println!("server PUTs   : {} applied", server.puts_applied);
-    assert!(done >= target_gets);
+    println!(
+        "server PUTs   : {} applied (0 = one-sided writes landed directly)",
+        server.puts_applied
+    );
+    let totals: (u64, u64) =
+        clients.iter().fold((0, 0), |(g, p), (_, c)| (g + c.gets_issued, p + c.puts_issued));
+    println!("client issue  : {} GETs, {} PUT values", totals.0, totals.1);
+    for node in 1..4usize {
+        let s = &daemons[node].stats;
+        if s.window_flushes > 0 {
+            println!(
+                "node {node} doorbell: {} flushes, {} writes coalesced",
+                s.window_flushes, s.writes_coalesced
+            );
+        }
+    }
+    assert!(done >= target_rounds);
     println!("kv_store OK");
 }

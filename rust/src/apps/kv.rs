@@ -1,23 +1,51 @@
-//! A HERD-style key-value store over the RaaS API.
+//! A HERD-style key-value store over the RaaS API — the remote-data-
+//! structure tier the one-sided window data plane exists for (fig 11).
 //!
-//! The server materializes its value table inside its daemon's registered
-//! pool; clients GET with one-sided READs at `slot(key)` (zero server CPU —
-//! the RDMA pattern from [11]) and PUT with adaptive `send` (small values
-//! ride SEND, large ride WRITE-with-imm; the server's Poller applies them).
+//! The server materializes a fixed-slot value table inside its daemon's
+//! registered pool. Two access modes, the figure's ablation axis:
+//!
+//! * **One-sided** ([`KvMode::OneSided`]): the client registers a remote
+//!   window over the whole table once, then GETs with
+//!   [`crate::raas::daemon::Daemon::window_read`] (one RTT, zero server
+//!   CPU — the Storm repeat-get pattern) and PUTs with doorbell-coalesced
+//!   [`crate::raas::daemon::Daemon::window_write`] bursts (RDMAbox
+//!   request merging: N writes, one doorbell, one CQE). The server is
+//!   fully passive on the data path.
+//! * **RPC** ([`KvMode::Rpc`]): GET is a 48-byte SEND request the server
+//!   answers with a value-sized SEND (two wire legs + server CPU per
+//!   GET); PUT is an adaptive `send` of the value the server's Poller
+//!   applies. This is the SEND/RECV baseline the paper's daemon already
+//!   had.
+//!
+//! Keys are Zipfian ([`Zipf`]), values span the buffer classes
+//! (64 B–128 KB, hashed per key), so the popular head stays hot while the
+//! tail exercises every pool class.
+
+use std::collections::VecDeque;
 
 use crate::fabric::sim::Sim;
 use crate::raas::api::{Flags, RaasError};
-use crate::raas::daemon::{Daemon, Delivery};
+use crate::raas::daemon::{Daemon, Delivery, WindowToken};
 use crate::raas::transport::HostLoad;
 use crate::raas::vqpn::Vqpn;
 use crate::util::rng::{Rng, Zipf};
 
-/// Fixed-slot value table layout (power-of-two slots over the pool).
+/// Value-size classes a key's value is hashed into (64 B hot counters up
+/// to 128 KB blobs — one per pool buffer class worth exercising).
+pub const VALUE_CLASSES: &[u64] = &[64, 1 << 10, 16 << 10, 128 << 10];
+
+/// Wire size of an RPC GET request (key + header). Deliberately below
+/// the smallest value class so the server can tell requests from PUT
+/// payloads by length (the simulator carries extents, not bytes).
+pub const GET_REQ_BYTES: u64 = 48;
+
+/// Fixed-slot value table layout (the server's pool-resident table).
 #[derive(Clone, Copy, Debug)]
 pub struct KvLayout {
     /// Number of fixed-size value slots.
     pub slots: u64,
-    /// Bytes per slot.
+    /// Bytes per slot (also the window's max-op bound). Must exceed
+    /// [`GET_REQ_BYTES`] so RPC requests stay distinguishable.
     pub slot_bytes: u64,
 }
 
@@ -26,102 +54,270 @@ impl KvLayout {
     pub fn offset(&self, key: u64) -> u64 {
         (key % self.slots) * self.slot_bytes
     }
+
+    /// Total table span in bytes (the window registration span).
+    pub fn bytes(&self) -> u64 {
+        self.slots * self.slot_bytes
+    }
+
+    /// The value size stored under `key`: a per-key hash picks one of
+    /// [`VALUE_CLASSES`], capped at the slot size.
+    pub fn value_len(&self, key: u64) -> u64 {
+        let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        VALUE_CLASSES[(h >> 61) as usize % VALUE_CLASSES.len()].min(self.slot_bytes)
+    }
 }
 
-/// Server-side state: owns the layout + applies PUTs from deliveries.
+/// GET/PUT access mode — fig 11's ablation axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvMode {
+    /// One-sided READ gets + doorbell-coalesced WRITE puts through a
+    /// registered window.
+    OneSided,
+    /// SEND-RPC gets (request + reply) + adaptive-send puts.
+    Rpc,
+}
+
+/// Server-side state: owns the layout, applies PUTs, answers RPC GETs.
 pub struct KvServer {
     /// Server app session id on its daemon.
     pub app: u32,
     /// Value-table layout served from the registered pool.
     pub layout: KvLayout,
-    /// PUT messages applied to the table.
+    /// Access mode this server expects from its clients.
+    pub mode: KvMode,
+    /// PUT values applied to the table.
     pub puts_applied: u64,
+    /// RPC GET requests answered with a value reply.
+    pub gets_served: u64,
+    /// Reply value sizes: the simulator carries extents, not bytes, so
+    /// the requested key cannot ride the wire — replies draw from the
+    /// server's own Zipf stream, the same popularity-weighted class mix
+    /// the clients request (statistically equivalent, deterministic).
+    keys: Zipf,
+    rng: Rng,
+    /// GETs accepted but not yet answered (send backpressure defers the
+    /// reply to the next service turn instead of stalling the client
+    /// forever).
+    reply_queue: VecDeque<Vqpn>,
+    port: u16,
 }
 
 impl KvServer {
     /// Register the server app and start listening on `port`.
-    pub fn new(daemon: &mut Daemon, port: u16, layout: KvLayout) -> KvServer {
+    pub fn new(daemon: &mut Daemon, port: u16, layout: KvLayout, mode: KvMode, seed: u64) -> KvServer {
         let app = daemon.register_app();
         daemon.listen(app, port);
-        KvServer { app, layout, puts_applied: 0 }
+        KvServer {
+            app,
+            layout,
+            mode,
+            puts_applied: 0,
+            gets_served: 0,
+            keys: Zipf::new(layout.slots, 0.99),
+            rng: Rng::new(seed),
+            reply_queue: VecDeque::new(),
+            port,
+        }
     }
 
-    /// Drain deliveries (PUT messages); GETs never reach the CPU.
+    /// One server turn: drain deliveries (PUT values, RPC GET requests),
+    /// answer queued GETs, accept pending connections. In one-sided mode
+    /// the data path never lands here — GETs read and PUTs write the
+    /// table memory directly.
     pub fn service(&mut self, sim: &mut Sim, daemon: &mut Daemon) {
         while let Some(d) = daemon.recv_zero_copy(sim, self.app) {
-            if let Delivery::Message { .. } = d {
-                self.puts_applied += 1;
+            match d {
+                Delivery::Message { conn, len, .. } => {
+                    if self.mode == KvMode::Rpc && len == GET_REQ_BYTES {
+                        self.reply_queue.push_back(conn);
+                    } else {
+                        self.puts_applied += 1;
+                    }
+                }
+                // our own reply sends completing — nothing to do
+                Delivery::OpComplete { .. } => {}
             }
         }
-        // accept any pending connections
-        while daemon.accept(self.app, 0).is_some() {}
+        while let Some(&conn) = self.reply_queue.front() {
+            let key = self.keys.sample(&mut self.rng);
+            let len = self.layout.value_len(key);
+            match daemon.send(sim, conn, len, Flags::default(), key, HostLoad::default()) {
+                Ok(_) => {
+                    self.reply_queue.pop_front();
+                    self.gets_served += 1;
+                }
+                // backpressure (pool/SQ exhausted): retry next turn
+                Err(_) => break,
+            }
+        }
+        while daemon.accept(self.app, self.port).is_some() {}
     }
 }
 
-/// Client-side handle: zipf-keyed GET/PUT issue + completion counting.
+/// Closed-loop client: one logical op in flight (a GET, or a PUT burst),
+/// re-issued by the driver when [`KvClient::on_delivery`] reports the
+/// round drained.
 pub struct KvClient {
     /// Client app session id on its daemon.
     pub app: u32,
     /// Logical connection to the server.
     pub conn: Vqpn,
-    /// Server table layout (for GET offset math).
+    /// Server table layout (offset + value-size math).
     pub layout: KvLayout,
+    /// Access mode (must match the server's).
+    pub mode: KvMode,
+    /// Percent of issued ops that are GETs (95 = read-mostly, 50 =
+    /// write-heavy).
+    pub read_pct: u32,
+    /// WRITEs per PUT round — the doorbell-coalescing group size in
+    /// one-sided mode (every burst flushes as one group).
+    pub put_burst: u32,
+    /// GET ops issued.
+    pub gets_issued: u64,
+    /// PUT values issued.
+    pub puts_issued: u64,
+    /// Logical rounds fully completed (the app-level ops fig 11 counts).
+    pub ops_done: u64,
     keys: Zipf,
     rng: Rng,
-    /// GETs issued so far.
-    pub gets_issued: u64,
-    /// PUTs issued so far.
-    pub puts_issued: u64,
-    /// Completed ops observed by [`KvClient::drain`].
-    pub gets_done: u64,
+    /// The registered remote window (one-sided mode, set by `register`).
+    window: Option<WindowToken>,
+    /// Local completions outstanding for the current round.
+    pending_ops: u32,
+    /// Server reply Messages outstanding (RPC GETs only).
+    awaiting_reply: u32,
 }
 
 impl KvClient {
     /// Create a client over an open connection with a Zipf(θ) key stream.
-    pub fn new(app: u32, conn: Vqpn, layout: KvLayout, seed: u64, theta: f64) -> KvClient {
+    pub fn new(
+        app: u32,
+        conn: Vqpn,
+        layout: KvLayout,
+        seed: u64,
+        theta: f64,
+        mode: KvMode,
+        read_pct: u32,
+        put_burst: u32,
+    ) -> KvClient {
         KvClient {
             app,
             conn,
             layout,
-            keys: Zipf::new(layout.slots, theta),
-            rng: Rng::new(seed),
+            mode,
+            read_pct: read_pct.min(100),
+            put_burst: put_burst.max(1),
             gets_issued: 0,
             puts_issued: 0,
-            gets_done: 0,
+            ops_done: 0,
+            keys: Zipf::new(layout.slots, theta),
+            rng: Rng::new(seed),
+            window: None,
+            pending_ops: 0,
+            awaiting_reply: 0,
         }
     }
 
-    /// GET: one-sided READ of the key's slot.
+    /// One-sided setup: register the remote window over the whole table
+    /// (one standing lease; every later GET/PUT skips the per-op lease
+    /// path). No-op in RPC mode.
+    pub fn register(&mut self, sim: &mut Sim, daemon: &mut Daemon) -> Result<(), RaasError> {
+        if self.mode == KvMode::OneSided && self.window.is_none() {
+            self.window =
+                Some(daemon.register_window(sim, self.conn, 0, self.layout.bytes(), self.layout.slot_bytes)?);
+        }
+        Ok(())
+    }
+
+    /// GET the value under the next Zipf key.
     pub fn get(&mut self, sim: &mut Sim, daemon: &mut Daemon) -> Result<(), RaasError> {
         let key = self.keys.sample(&mut self.rng);
-        let off = self.layout.offset(key);
-        daemon.read(sim, self.conn, self.layout.slot_bytes, off, key)?;
+        let len = self.layout.value_len(key);
+        match self.mode {
+            KvMode::OneSided => {
+                let win = self.window.ok_or(RaasError::StaleWindow)?;
+                daemon.window_read(sim, win, len, self.layout.offset(key), key)?;
+                self.pending_ops += 1;
+            }
+            KvMode::Rpc => {
+                daemon.send(sim, self.conn, GET_REQ_BYTES, Flags::default(), key, HostLoad::default())?;
+                self.pending_ops += 1;
+                self.awaiting_reply += 1;
+            }
+        }
         self.gets_issued += 1;
         Ok(())
     }
 
-    /// PUT: adaptive send of a value (SEND small / WRITE-with-imm large).
-    pub fn put(
-        &mut self,
-        sim: &mut Sim,
-        daemon: &mut Daemon,
-        value_bytes: u64,
-    ) -> Result<(), RaasError> {
-        daemon.send(sim, self.conn, value_bytes, Flags::default(), 0, HostLoad::default())?;
-        self.puts_issued += 1;
+    /// PUT a burst of `put_burst` values (one doorbell group one-sided;
+    /// `put_burst` adaptive sends in RPC mode). An error before anything
+    /// was posted propagates (the driver retries the round later); an
+    /// error mid-burst just truncates the burst — the posted values are
+    /// already in flight and the round completes with what it has.
+    pub fn put(&mut self, sim: &mut Sim, daemon: &mut Daemon) -> Result<(), RaasError> {
+        let mut posted = 0u32;
+        for _ in 0..self.put_burst {
+            let key = self.keys.sample(&mut self.rng);
+            let len = self.layout.value_len(key);
+            let res = match self.mode {
+                KvMode::OneSided => {
+                    let win = self.window.ok_or(RaasError::StaleWindow)?;
+                    daemon.window_write(sim, win, len, self.layout.offset(key), key)
+                }
+                KvMode::Rpc => {
+                    daemon.send(sim, self.conn, len, Flags::default(), key, HostLoad::default())
+                }
+            };
+            match res {
+                Ok(()) => {
+                    self.pending_ops += 1;
+                    self.puts_issued += 1;
+                    posted += 1;
+                }
+                Err(e) if posted == 0 => return Err(e),
+                Err(_) => break,
+            }
+        }
+        if let (KvMode::OneSided, Some(win)) = (self.mode, self.window) {
+            daemon.window_flush(sim, win)?;
+        }
         Ok(())
     }
 
-    /// Count finished ops from the app inbox (GET reads and PUT sends both
-    /// complete as `OpComplete`); returns how many completed.
-    pub fn drain(&mut self, sim: &mut Sim, daemon: &mut Daemon) -> u64 {
-        let mut done = 0;
-        while let Some(d) = daemon.recv_zero_copy(sim, self.app) {
-            if let Delivery::OpComplete { ok: true, .. } = d {
-                done += 1;
+    /// Issue the next closed-loop round: GET with probability `read_pct`,
+    /// else a PUT burst.
+    pub fn issue(&mut self, sim: &mut Sim, daemon: &mut Daemon) -> Result<(), RaasError> {
+        if self.rng.next_u64() % 100 < self.read_pct as u64 {
+            self.get(sim, daemon)
+        } else {
+            self.put(sim, daemon)
+        }
+    }
+
+    /// Account one delivery routed to this client. Returns `true` when
+    /// the current round fully drained (the driver records latency and
+    /// re-issues). Failed completions drain the round too, so closed
+    /// loops keep moving under faults.
+    pub fn on_delivery(&mut self, d: &Delivery) -> bool {
+        match d {
+            Delivery::OpComplete { .. } => {
+                if self.pending_ops == 0 {
+                    return false;
+                }
+                self.pending_ops -= 1;
+            }
+            Delivery::Message { .. } => {
+                if self.awaiting_reply == 0 {
+                    return false;
+                }
+                self.awaiting_reply -= 1;
             }
         }
-        self.gets_done += done;
+        let done = self.pending_ops == 0 && self.awaiting_reply == 0;
+        if done {
+            self.ops_done += 1;
+        }
         done
     }
 }
@@ -141,48 +337,124 @@ mod tests {
         (sim, daemons)
     }
 
+    fn quiesce(sim: &mut Sim, daemons: &mut [Daemon]) {
+        for _ in 0..200_000 {
+            for d in daemons.iter_mut() {
+                d.pump(sim);
+            }
+            if sim.step().is_none() {
+                for d in daemons.iter_mut() {
+                    d.pump(sim);
+                }
+                if sim.pending_events() == 0 {
+                    return;
+                }
+            }
+        }
+        panic!("did not quiesce");
+    }
+
+    fn drain_client(sim: &mut Sim, daemon: &mut Daemon, client: &mut KvClient) -> u32 {
+        let mut rounds = 0;
+        while let Some(d) = daemon.recv_zero_copy(sim, client.app) {
+            if client.on_delivery(&d) {
+                rounds += 1;
+            }
+        }
+        rounds
+    }
+
     #[test]
-    fn get_put_round_trip() {
+    fn one_sided_get_put_round_trip() {
         let (mut sim, mut daemons) = setup();
         let layout = KvLayout { slots: 1024, slot_bytes: 1024 };
-        let mut server = KvServer::new(&mut daemons[1], 6000, layout);
+        let mut server = KvServer::new(&mut daemons[1], 6000, layout, KvMode::OneSided, 9);
         let capp = daemons[0].register_app();
         let conn = connect_via(&mut sim, &mut daemons, 0, capp, 1, 6000).unwrap();
-        let mut client = KvClient::new(capp, conn, layout, 7, 0.99);
+        let mut client = KvClient::new(capp, conn, layout, 7, 0.99, KvMode::OneSided, 95, 4);
+        client.register(&mut sim, &mut daemons[0]).unwrap();
 
-        for _ in 0..16 {
-            client.get(&mut sim, &mut daemons[0]).unwrap();
-        }
-        client.put(&mut sim, &mut daemons[0], 512).unwrap();
+        client.get(&mut sim, &mut daemons[0]).unwrap();
+        quiesce(&mut sim, &mut daemons);
+        assert_eq!(drain_client(&mut sim, &mut daemons[0], &mut client), 1);
+        assert_eq!(client.ops_done, 1, "GET is one one-sided RTT");
 
-        // drive to quiescence
+        client.put(&mut sim, &mut daemons[0]).unwrap();
+        quiesce(&mut sim, &mut daemons);
+        assert_eq!(drain_client(&mut sim, &mut daemons[0], &mut client), 1);
+        assert_eq!(client.ops_done, 2);
+        assert_eq!(client.puts_issued, 4, "burst of put_burst WRITEs");
+        // one doorbell group for the whole burst
+        assert_eq!(daemons[0].stats.window_flushes, 1);
+        assert_eq!(daemons[0].stats.writes_coalesced, 3);
+
+        // the server CPU never saw any of it
+        server.service(&mut sim, &mut daemons[1]);
+        assert_eq!(server.puts_applied, 0, "one-sided PUTs bypass the server");
+        assert_eq!(server.gets_served, 0);
+        assert_eq!(daemons[1].stats.msgs_delivered, 0);
+    }
+
+    #[test]
+    fn rpc_get_is_answered_and_put_is_applied() {
+        let (mut sim, mut daemons) = setup();
+        let layout = KvLayout { slots: 1024, slot_bytes: 1024 };
+        let mut server = KvServer::new(&mut daemons[1], 6000, layout, KvMode::Rpc, 9);
+        let capp = daemons[0].register_app();
+        let conn = connect_via(&mut sim, &mut daemons, 0, capp, 1, 6000).unwrap();
+        let mut client = KvClient::new(capp, conn, layout, 7, 0.99, KvMode::Rpc, 95, 2);
+        client.register(&mut sim, &mut daemons[0]).unwrap(); // no-op in RPC mode
+
+        client.get(&mut sim, &mut daemons[0]).unwrap();
+        // drive: request over, server turn, reply back
         for _ in 0..200_000 {
             for d in daemons.iter_mut() {
                 d.pump(&mut sim);
             }
+            server.service(&mut sim, &mut daemons[1]);
             if sim.step().is_none() {
                 for d in daemons.iter_mut() {
                     d.pump(&mut sim);
                 }
+                server.service(&mut sim, &mut daemons[1]);
                 if sim.pending_events() == 0 {
                     break;
                 }
             }
         }
-        client.drain(&mut sim, &mut daemons[0]);
+        assert_eq!(server.gets_served, 1, "request answered");
+        assert_eq!(drain_client(&mut sim, &mut daemons[0], &mut client), 1);
+        assert_eq!(client.ops_done, 1, "send completion + reply message");
+
+        client.put(&mut sim, &mut daemons[0]).unwrap();
+        quiesce(&mut sim, &mut daemons);
         server.service(&mut sim, &mut daemons[1]);
-        // 16 GET completions + 1 PUT send-completion
-        assert_eq!(client.gets_done, 17, "all ops complete");
-        assert_eq!(server.puts_applied, 1, "PUT delivered to server");
+        assert_eq!(server.puts_applied, 2, "both burst values applied");
+        assert_eq!(drain_client(&mut sim, &mut daemons[0], &mut client), 1);
+        assert_eq!(client.ops_done, 2);
     }
 
     #[test]
-    fn layout_offsets_in_bounds() {
-        let l = KvLayout { slots: 64, slot_bytes: 4096 };
+    fn layout_offsets_and_value_classes_in_bounds() {
+        let l = KvLayout { slots: 64, slot_bytes: 128 << 10 };
         for k in 0..1000u64 {
             let off = l.offset(k);
-            assert!(off + l.slot_bytes <= l.slots * l.slot_bytes);
+            assert!(off + l.slot_bytes <= l.bytes());
             assert_eq!(off % l.slot_bytes, 0);
+            let v = l.value_len(k);
+            assert!(VALUE_CLASSES.contains(&v), "{v}");
+            assert!(v > GET_REQ_BYTES && v <= l.slot_bytes);
         }
+        // small slots cap the classes
+        let small = KvLayout { slots: 64, slot_bytes: 1024 };
+        for k in 0..100u64 {
+            assert!(small.value_len(k) <= 1024);
+        }
+        // every class is actually drawn over a big enough key range
+        let mut seen = std::collections::BTreeSet::new();
+        for k in 0..10_000u64 {
+            seen.insert(l.value_len(k));
+        }
+        assert_eq!(seen.len(), VALUE_CLASSES.len(), "all classes exercised");
     }
 }

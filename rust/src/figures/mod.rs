@@ -21,8 +21,9 @@ use crate::fabric::verbs::capability_matrix;
 use crate::metrics::Series;
 use crate::util::parallel;
 use crate::workload::scenarios::{
-    chaos_send, locked_random_read, naive_random_read, raas_random_read, scale_send,
-    verbs_sweep_point, ChaosCfg, ChaosRun, RunStats, ScaleCfg, ScaleRun, ScenarioCfg,
+    chaos_send, kv_storm, locked_random_read, naive_random_read, raas_random_read, scale_send,
+    verbs_sweep_point, ChaosCfg, ChaosRun, KvCfg, KvRun, RunStats, ScaleCfg, ScaleRun,
+    ScenarioCfg,
 };
 
 /// Message sizes swept in Fig 1 (64 B … 1 MB).
@@ -663,6 +664,193 @@ pub fn fig10_series(rows: &[Fig10Row]) -> Series {
     s
 }
 
+// ------------------------------------------------------------------ Fig 11
+
+/// Client counts swept in the fig-11 KV experiment.
+pub const FIG11_CLIENTS: &[usize] = &[64, 256, 1024, 4096];
+
+/// The fig-11 client counts for a budget (shared with `bench kv`).
+pub fn fig11_clients(budget: Budget) -> Vec<usize> {
+    match budget {
+        Budget::Quick => vec![64, 1024],
+        Budget::Full => FIG11_CLIENTS.to_vec(),
+    }
+}
+
+/// The fig-11 [`KvCfg`] for one sweep point (shared with `bench kv` so
+/// BENCH_PR6.json times exactly the runs the figure makes).
+/// `write_heavy` flips the mix from read-mostly 95/5 to 50/50.
+pub fn fig11_cfg(clients: usize, budget: Budget, rpc: bool, write_heavy: bool) -> KvCfg {
+    let mut cfg = KvCfg::default();
+    cfg.clients = clients;
+    cfg.rpc = rpc;
+    cfg.read_pct = if write_heavy { 50 } else { 95 };
+    cfg.duration = match budget {
+        Budget::Quick => Ns::from_ms(4),
+        Budget::Full => Ns::from_ms(10),
+    };
+    cfg
+}
+
+/// One fig-11 sweep point: one-sided window GET/PUT vs the SEND-RPC
+/// ablation, at both workload mixes.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig11Row {
+    /// Closed-loop client count of this sweep point.
+    pub clients: usize,
+    /// One-sided, read-mostly 95/5 (None in the `--rc-only` ablation).
+    pub os_read: Option<KvRun>,
+    /// SEND-RPC, read-mostly 95/5.
+    pub rpc_read: KvRun,
+    /// One-sided, write-heavy 50/50 (None in the `--rc-only` ablation).
+    pub os_write: Option<KvRun>,
+    /// SEND-RPC, write-heavy 50/50.
+    pub rpc_write: KvRun,
+}
+
+/// Fig 11: the Zipfian KV tier — app-level ops/sec and tail latency vs
+/// client count, one-sided registered-window READ/WRITE vs the SEND-RPC
+/// ablation, at read-mostly (95/5) and write-heavy (50/50) mixes. Each
+/// (clients, mode, mix) triple is an independent `Sim` work item.
+pub fn fig11(budget: Budget, jobs: usize) -> Vec<Fig11Row> {
+    let clients = fig11_clients(budget);
+    let mut items = Vec::with_capacity(clients.len() * 4);
+    for &c in &clients {
+        items.push((c, false, false));
+        items.push((c, true, false));
+        items.push((c, false, true));
+        items.push((c, true, true));
+    }
+    let runs = parallel::map_indexed(items, jobs, |_, (c, rpc, heavy)| {
+        kv_storm(&fig11_cfg(c, budget, rpc, heavy))
+    });
+    clients
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| Fig11Row {
+            clients: c,
+            os_read: Some(runs[4 * i]),
+            rpc_read: runs[4 * i + 1],
+            os_write: Some(runs[4 * i + 2]),
+            rpc_write: runs[4 * i + 3],
+        })
+        .collect()
+}
+
+/// The SEND-RPC ablation alone (`--rc-only`: one-sided columns omitted —
+/// everything rides the two-sided RC path).
+pub fn fig11_rpc_only(budget: Budget, jobs: usize) -> Vec<Fig11Row> {
+    let clients = fig11_clients(budget);
+    let mut items = Vec::with_capacity(clients.len() * 2);
+    for &c in &clients {
+        items.push((c, false));
+        items.push((c, true));
+    }
+    let runs = parallel::map_indexed(items, jobs, |_, (c, heavy)| {
+        kv_storm(&fig11_cfg(c, budget, true, heavy))
+    });
+    clients
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| Fig11Row {
+            clients: c,
+            os_read: None,
+            rpc_read: runs[2 * i],
+            os_write: None,
+            rpc_write: runs[2 * i + 1],
+        })
+        .collect()
+}
+
+/// Render the Fig-11 table.
+pub fn print_fig11(rows: &[Fig11Row]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Fig 11: Zipfian KV — one-sided window GET/PUT vs SEND-RPC, 64B-128KB values\n",
+    );
+    out.push_str(&format!(
+        "{:>8} {:>10} {:>10} {:>9} {:>9} {:>10} {:>10} {:>10}\n",
+        "clients", "1s Mops", "rpc Mops", "1s p99", "rpc p99", "1s srvCPU", "rpc srvCPU", "coalesced"
+    ));
+    for r in rows {
+        let (om, op, oc, co) = match &r.os_read {
+            Some(o) => (
+                format!("{:.3}", o.mops),
+                format!("{:.1}", o.p99_us),
+                format!("{:.3}", o.server_cpu_cores),
+                format!("{}", o.writes_coalesced + r.os_write.map(|w| w.writes_coalesced).unwrap_or(0)),
+            ),
+            None => ("-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        out.push_str(&format!(
+            "{:>8} {:>10} {:>10.3} {:>9} {:>9.1} {:>10} {:>10.3} {:>10}\n",
+            r.clients,
+            om,
+            r.rpc_read.mops,
+            op,
+            r.rpc_read.p99_us,
+            oc,
+            r.rpc_read.server_cpu_cores,
+            co
+        ));
+    }
+    out
+}
+
+/// The Fig-11 [`Series`] (shared by the CLI and the determinism tests).
+pub fn fig11_series(rows: &[Fig11Row]) -> Series {
+    let mut s = Series::new(
+        "fig11_kv",
+        "clients",
+        &[
+            "onesided_read_mops",
+            "rpc_read_mops",
+            "onesided_write_mops",
+            "rpc_write_mops",
+            "onesided_read_p50_us",
+            "rpc_read_p50_us",
+            "onesided_read_p99_us",
+            "rpc_read_p99_us",
+            "onesided_write_p99_us",
+            "rpc_write_p99_us",
+            "onesided_gbps",
+            "rpc_gbps",
+            "onesided_server_cpu",
+            "rpc_server_cpu",
+            "writes_coalesced",
+            "window_flushes",
+        ],
+    );
+    for r in rows {
+        let or = r.os_read;
+        let ow = r.os_write;
+        let pr = |f: fn(&KvRun) -> f64| or.as_ref().map(f).unwrap_or(f64::NAN);
+        let pw = |f: fn(&KvRun) -> f64| ow.as_ref().map(f).unwrap_or(f64::NAN);
+        s.push(
+            r.clients as f64,
+            vec![
+                pr(|x| x.mops),
+                r.rpc_read.mops,
+                pw(|x| x.mops),
+                r.rpc_write.mops,
+                pr(|x| x.p50_us),
+                r.rpc_read.p50_us,
+                pr(|x| x.p99_us),
+                r.rpc_read.p99_us,
+                pw(|x| x.p99_us),
+                r.rpc_write.p99_us,
+                pr(|x| x.gbps),
+                r.rpc_read.gbps,
+                pr(|x| x.server_cpu_cores),
+                r.rpc_read.server_cpu_cores,
+                pw(|x| x.writes_coalesced as f64),
+                pw(|x| x.window_flushes as f64),
+            ],
+        );
+    }
+    s
+}
+
 // --------------------------------------------------------- figure runner
 
 /// Run one figure id end-to-end; returns its [`Series`] plus the rendered
@@ -747,6 +935,11 @@ pub fn run_fig(
             let rows = fig10(b, jobs);
             let table = print_fig10(&rows);
             Some((fig10_series(&rows), table))
+        }
+        11 => {
+            let rows = fig11(b, jobs);
+            let table = print_fig11(&rows);
+            Some((fig11_series(&rows), table))
         }
         _ => None,
     }

@@ -2,13 +2,14 @@
 //!
 //! One binary drives the whole reproduction. Subcommands:
 //!
-//! * `fig --id {1,5,6,7,8,9,10}` — regenerate a paper figure (9 = the
+//! * `fig --id {1,5,6,7,8,9,10,11}` — regenerate a paper figure (9 = the
 //!   RC↔UD-migration scale extension, 10 = the fault-injection chaos
-//!   sweep) and print the series as JSON on stdout (human-readable table
-//!   on stderr). `--all` runs every figure; `--quick` shrinks the
-//!   sweeps; `--rc-only` restricts figures 9/10 to the ablation;
-//!   `--jobs N` runs the independent sweep points on N threads (0 = all
-//!   cores) with byte-identical output; `--tsv DIR` also writes TSVs.
+//!   sweep, 11 = the one-sided KV tier) and print the series as JSON on
+//!   stdout (human-readable table on stderr). `--all` runs every figure;
+//!   `--quick` shrinks the sweeps; `--rc-only` restricts figures 9/10/11
+//!   to the ablation; `--jobs N` runs the independent sweep points on N
+//!   threads (0 = all cores) with byte-identical output; `--tsv DIR`
+//!   also writes TSVs.
 //! * `bench hotpath` — the hot-path microbenchmarks (SPSC ring, doorbell,
 //!   ICM cache, daemon submit) with JSON results.
 //! * `bench simstep` — raw discrete-event-scheduler throughput
@@ -19,6 +20,9 @@
 //! * `bench fig9 [--out FILE] [--jobs N]` — wall-clock of the Fig-9
 //!   scale sweep per connection count, written as `BENCH_PR5.json` (the
 //!   CI perf artifact; `bench pump` + `bench simstep` sections embedded).
+//! * `bench kv [--out FILE] [--jobs N]` — wall-clock of the fig-11 KV
+//!   sweep per client count (one-sided vs SEND-RPC), written as
+//!   `BENCH_PR6.json` (the CI perf artifact for the window data plane).
 //! * `bench` — one scenario run with explicit knobs (`--system
 //!   raas|naive|locked`, `--conns`, `--size`, …), JSON result on stdout.
 //! * `demo {kv,rpc,inference}` — the example applications end-to-end over
@@ -64,14 +68,15 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: rdmavisor <fig|figures|bench|demo|serve|init-config|info> [--help]\n\
-                 \n  fig --id 1|5|6|7|8|9|10 [--all] [--quick] [--rc-only] [--jobs N] [--tsv DIR]   (JSON on stdout)\
+                 \n  fig --id 1|5|6|7|8|9|10|11 [--all] [--quick] [--rc-only] [--jobs N] [--tsv DIR]   (JSON on stdout)\
                  \n  bench hotpath|simstep|pump [--quick]               (JSON on stdout)\
                  \n  bench fig9 [--quick] [--jobs N] [--out FILE]    (fig-9 wall clock -> BENCH_PR5.json)\
+                 \n  bench kv [--quick] [--jobs N] [--out FILE]      (fig-11 wall clock -> BENCH_PR6.json)\
                  \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
                  [--window N] [--duration-ms MS] [--q N] [--config FILE]\
                  \n  demo kv|rpc|inference [--gets N] [--calls N] [--requests N]\
                  \n  figures --all | --table1 --fig1 --fig5 --fig6 --fig7 --fig8 --fig9 \
-                 --fig10 --send-staging --batching [--quick] [--tsv DIR]\
+                 --fig10 --fig11 --send-staging --batching [--quick] [--tsv DIR]\
                  \n  serve [--clients N] [--requests N] [--artifacts DIR]\
                  \n  init-config [--out FILE]"
             );
@@ -124,7 +129,7 @@ fn fig_cmd(args: &Args) {
     let b = budget(args);
     let jobs = jobs(args);
     let mut ids: Vec<u64> = if args.flag("all") {
-        vec![1, 5, 6, 7, 8, 9, 10]
+        vec![1, 5, 6, 7, 8, 9, 10, 11]
     } else {
         args.u64_list("id", &[])
     };
@@ -139,7 +144,7 @@ fn fig_cmd(args: &Args) {
     ids.retain(|id| seen.insert(*id));
     if ids.is_empty() {
         eprintln!(
-            "usage: rdmavisor fig --id 1|5|6|7|8|9|10 [--all] [--quick] [--rc-only] \
+            "usage: rdmavisor fig --id 1|5|6|7|8|9|10|11 [--all] [--quick] [--rc-only] \
              [--jobs N] [--tsv DIR]"
         );
         std::process::exit(2);
@@ -157,11 +162,14 @@ fn fig_cmd(args: &Args) {
         } else if id == 10 && args.flag("rc-only") {
             let rows = figures::fig10_rc_only(b, jobs);
             (figures::fig10_series(&rows), figures::print_fig10(&rows))
+        } else if id == 11 && args.flag("rc-only") {
+            let rows = figures::fig11_rpc_only(b, jobs);
+            (figures::fig11_series(&rows), figures::print_fig11(&rows))
         } else {
             match figures::run_fig(id, b, &mut fig78_cache, jobs) {
                 Some(r) => r,
                 None => {
-                    eprintln!("unknown figure id {id}: expected 1, 5, 6, 7, 8, 9 or 10");
+                    eprintln!("unknown figure id {id}: expected 1, 5, 6, 7, 8, 9, 10 or 11");
                     std::process::exit(2);
                 }
             }
@@ -213,6 +221,7 @@ fn figures_cmd(args: &Args) {
         ("fig8", 8),
         ("fig9", 9),
         ("fig10", 10),
+        ("fig11", 11),
     ] {
         if all || args.flag(flag) {
             let (s, table) =
@@ -245,6 +254,7 @@ fn bench_cmd(args: &Args) {
         Some("simstep") => return bench_simstep(args),
         Some("pump") => return bench_pump(args),
         Some("fig9") => return bench_fig9(args),
+        Some("kv") => return bench_kv(args),
         _ => {}
     }
     let mut cfg = match args.get("config") {
@@ -565,6 +575,78 @@ fn bench_fig9(args: &Args) {
     println!("{text}");
 }
 
+/// `bench kv` — wall-clock of the fig-11 KV sweep per client count
+/// (one-sided window + SEND-RPC at the read-mostly mix, exactly the runs
+/// `fig --id 11` makes). Writes the result to `--out` (default
+/// BENCH_PR6.json) so CI archives a perf trajectory for the one-sided
+/// window data plane. As with `bench fig9`, recorded trajectories should
+/// stay at the serial `--jobs` default.
+fn bench_kv(args: &Args) {
+    use rdmavisor::workload::scenarios::kv_storm;
+
+    let b = budget(args);
+    let j = jobs(args);
+    let out_path = args.str_or("out", "BENCH_PR6.json");
+    let t_all = Instant::now();
+    let measured = parallel::map_indexed(figures::fig11_clients(b), j, |_, clients| {
+        let t0 = Instant::now();
+        let one_sided = kv_storm(&figures::fig11_cfg(clients, b, false, false));
+        let rpc = kv_storm(&figures::fig11_cfg(clients, b, true, false));
+        (clients, one_sided, rpc, t0.elapsed().as_secs_f64())
+    });
+    let mut points = Vec::new();
+    let mut total_wall = 0.0f64;
+    let (mut total_ops, mut total_events) = (0u64, 0u64);
+    for (clients, one_sided, rpc, wall) in measured {
+        total_wall += wall;
+        total_ops += one_sided.ops + rpc.ops;
+        total_events += one_sided.events + rpc.events;
+        eprintln!(
+            "kv clients={clients:>5}: one-sided {:.3} Mops vs rpc {:.3} Mops  \
+             ({:>8.1} ms wall)",
+            one_sided.mops,
+            rpc.mops,
+            wall * 1e3
+        );
+        points.push(obj(vec![
+            ("clients", Json::Num(clients as f64)),
+            ("servers", Json::Num(one_sided.servers as f64)),
+            ("wall_ms", num(wall * 1e3)),
+            ("events", Json::Num((one_sided.events + rpc.events) as f64)),
+            ("onesided_mops", num(one_sided.mops)),
+            ("rpc_mops", num(rpc.mops)),
+            ("onesided_p99_us", num(one_sided.p99_us)),
+            ("rpc_p99_us", num(rpc.p99_us)),
+            ("onesided_server_cpu", num(one_sided.server_cpu_cores)),
+            ("rpc_server_cpu", num(rpc.server_cpu_cores)),
+            ("writes_coalesced", Json::Num(one_sided.writes_coalesced as f64)),
+        ]));
+    }
+    // at --jobs 1 the sum of per-point walls IS the elapsed time; at
+    // jobs > 1 report the overlapped elapsed wall instead
+    if j > 1 {
+        total_wall = t_all.elapsed().as_secs_f64();
+    }
+    let budget_name = if b == Budget::Quick { "quick" } else { "full" };
+    let doc = obj(vec![
+        ("command", Json::Str("bench".into())),
+        ("mode", Json::Str("kv".into())),
+        ("budget", Json::Str(budget_name.to_string())),
+        ("jobs", Json::Num(j as f64)),
+        ("points", Json::Arr(points)),
+        ("total_wall_ms", num(total_wall * 1e3)),
+        ("total_events", Json::Num(total_events as f64)),
+        ("total_ops", Json::Num(total_ops as f64)),
+        ("ops_per_sec", num(total_ops as f64 / total_wall.max(1e-9))),
+    ]);
+    let text = doc.to_string();
+    match std::fs::write(&out_path, &text) {
+        Ok(()) => eprintln!("wrote {out_path}"),
+        Err(e) => eprintln!("write {out_path} failed: {e}"),
+    }
+    println!("{text}");
+}
+
 // ------------------------------------------------------------------ `demo`
 
 fn demo_cmd(args: &Args) {
@@ -577,24 +659,6 @@ fn demo_cmd(args: &Args) {
             std::process::exit(2);
         }
     }
-}
-
-/// Alternate sim progress and daemon pumps until the timeline drains.
-fn settle(sim: &mut rdmavisor::fabric::sim::Sim, daemons: &mut [rdmavisor::raas::daemon::Daemon]) {
-    for _ in 0..2_000_000 {
-        for d in daemons.iter_mut() {
-            d.pump(sim);
-        }
-        if sim.step().is_none() {
-            for d in daemons.iter_mut() {
-                d.pump(sim);
-            }
-            if sim.pending_events() == 0 {
-                return;
-            }
-        }
-    }
-    eprintln!("warning: demo did not quiesce");
 }
 
 fn two_node_cluster() -> (rdmavisor::fabric::sim::Sim, Vec<rdmavisor::raas::daemon::Daemon>) {
@@ -612,43 +676,71 @@ fn two_node_cluster() -> (rdmavisor::fabric::sim::Sim, Vec<rdmavisor::raas::daem
 }
 
 fn demo_kv(args: &Args) {
-    use rdmavisor::apps::kv::{KvClient, KvLayout, KvServer};
-    use rdmavisor::raas::daemon::connect_via;
+    use rdmavisor::apps::kv::{KvClient, KvLayout, KvMode, KvServer};
+    use rdmavisor::raas::daemon::{connect_via, Delivery};
 
     let gets = args.u64_or("gets", 512);
-    let puts = args.u64_or("puts", 16);
+    let put_rounds = args.u64_or("puts", 16);
     let seed = args.u64_or("seed", 7);
+    let mode = if args.flag("rpc") { KvMode::Rpc } else { KvMode::OneSided };
     let t0 = Instant::now();
 
     let (mut sim, mut daemons) = two_node_cluster();
     let layout = KvLayout { slots: 4096, slot_bytes: 1024 };
-    let mut server = KvServer::new(&mut daemons[1], 6000, layout);
+    let mut server = KvServer::new(&mut daemons[1], 6000, layout, mode, seed ^ 1);
     let capp = daemons[0].register_app();
     let conn = connect_via(&mut sim, &mut daemons, 0, capp, 1, 6000).unwrap();
-    let mut client = KvClient::new(capp, conn, layout, seed, 0.99);
+    let mut client = KvClient::new(capp, conn, layout, seed, 0.99, mode, 95, 4);
+    client.register(&mut sim, &mut daemons[0]).expect("register window");
 
     for _ in 0..gets {
         client.get(&mut sim, &mut daemons[0]).expect("kv get");
     }
-    for _ in 0..puts {
-        client.put(&mut sim, &mut daemons[0], 512).expect("kv put");
+    for _ in 0..put_rounds {
+        client.put(&mut sim, &mut daemons[0]).expect("kv put");
     }
-    settle(&mut sim, &mut daemons);
-    client.drain(&mut sim, &mut daemons[0]);
-    server.service(&mut sim, &mut daemons[1]);
+    // drive: RPC mode needs server service turns interleaved (one-sided
+    // mode leaves the server idle — that is the point)
+    for _ in 0..2_000_000 {
+        daemons[0].pump(&mut sim);
+        daemons[1].pump(&mut sim);
+        server.service(&mut sim, &mut daemons[1]);
+        daemons[1].pump(&mut sim);
+        if sim.step().is_none() {
+            daemons[0].pump(&mut sim);
+            daemons[1].pump(&mut sim);
+            server.service(&mut sim, &mut daemons[1]);
+            daemons[1].pump(&mut sim);
+            if sim.pending_events() == 0 {
+                break;
+            }
+        }
+    }
+    let mut completed = 0u64;
+    while let Some(d) = daemons[0].recv_zero_copy(&mut sim, capp) {
+        if matches!(d, Delivery::OpComplete { .. }) {
+            completed += 1;
+        }
+        let _ = client.on_delivery(&d);
+    }
 
     let sim_s = sim.now().as_secs_f64();
+    let mode_name = if mode == KvMode::Rpc { "rpc" } else { "one-sided" };
     let doc = obj(vec![
         ("command", Json::Str("demo".into())),
         ("app", Json::Str("kv".into())),
+        ("mode", Json::Str(mode_name.into())),
         ("gets_issued", Json::Num(client.gets_issued as f64)),
         ("puts_issued", Json::Num(client.puts_issued as f64)),
-        ("ops_completed", Json::Num(client.gets_done as f64)),
+        ("ops_completed", Json::Num(completed as f64)),
+        ("gets_served", Json::Num(server.gets_served as f64)),
         ("puts_applied", Json::Num(server.puts_applied as f64)),
+        ("window_flushes", Json::Num(daemons[0].stats.window_flushes as f64)),
+        ("writes_coalesced", Json::Num(daemons[0].stats.writes_coalesced as f64)),
         ("sim_ms", num(sim_s * 1e3)),
         (
             "mops",
-            num(if sim_s > 0.0 { client.gets_done as f64 / sim_s / 1e6 } else { 0.0 }),
+            num(if sim_s > 0.0 { completed as f64 / sim_s / 1e6 } else { 0.0 }),
         ),
         ("wall_ms", num(t0.elapsed().as_secs_f64() * 1e3)),
     ]);

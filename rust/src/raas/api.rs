@@ -167,6 +167,9 @@ pub enum RaasError {
     TooLong { len: u64, max: u64 },
     /// No registered buffer space available.
     PoolExhausted,
+    /// The window token does not name a live registered window (wrong
+    /// slot, stale generation, or the window was released/reclaimed).
+    StaleWindow,
     /// Nothing to receive (non-blocking recv).
     WouldBlock,
     /// An error surfaced by the fabric layer.
@@ -183,6 +186,7 @@ impl std::fmt::Display for RaasError {
             }
             RaasError::TooLong { len, max } => write!(f, "len {len} > max {max}"),
             RaasError::PoolExhausted => write!(f, "registered buffer pool exhausted"),
+            RaasError::StaleWindow => write!(f, "stale or released window token"),
             RaasError::WouldBlock => write!(f, "would block"),
             RaasError::Fabric(s) => write!(f, "fabric: {s}"),
         }

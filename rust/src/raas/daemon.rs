@@ -22,6 +22,16 @@
 //! per-vQPN sequence header in `imm_data` and reassembled by the peer's
 //! Poller before delivery.
 //!
+//! For repeat access to remote data structures the daemon offers
+//! **registered windows** ([`Daemon::register_window`]): one standing
+//! staging lease covers a span of the peer pool, and subsequent
+//! [`Daemon::window_read`] / [`Daemon::window_write`] calls skip the
+//! per-op lease machinery entirely (the Storm argument: one-sided READs
+//! beat RPC once the setup cost is amortized). Window WRITEs are
+//! doorbell-coalesced RDMAbox-style — consecutive WRITEs through one
+//! window post as a single batch whose tail WR alone is signaled, so N
+//! small PUTs cost one doorbell and one CQE. DESIGN.md §11.
+//!
 //! The data plane is **lookup- and allocation-free per op** (PR 5, the
 //! daemon-side twin of PR 3's fabric densification): per-remote state
 //! (shared QPs, peer pools, pending batches) lives in node-id-indexed
@@ -159,6 +169,20 @@ pub struct DaemonStats {
     /// completion (their CQE never arrived — e.g. a node restart cleared
     /// the queues under the op).
     pub leases_reclaimed: u64,
+    /// Remote windows registered (`register_window`).
+    pub windows_registered: u64,
+    /// Remote windows released by their owner (`release_window`).
+    pub windows_released: u64,
+    /// Remote windows force-reclaimed by the idle-window sweep (the
+    /// owning client restarted and never released the token).
+    pub windows_reclaimed: u64,
+    /// READ/WRITE ops issued through a registered window.
+    pub window_ops: u64,
+    /// Doorbell flushes of coalesced window-WRITE groups.
+    pub window_flushes: u64,
+    /// Window WRITEs that shared another WRITE's doorbell + CQE (group
+    /// size minus one, summed — the RDMAbox merging win).
+    pub writes_coalesced: u64,
 }
 
 /// Info about a peer daemon's pool we can one-sidedly address.
@@ -185,6 +209,59 @@ struct InflightOp {
     /// Logical message length of a fragmented UD send — the wire CQE
     /// only carries the last fragment's length.
     ud_msg_len: Option<u64>,
+    /// Window slot when the op went through a registered window: its
+    /// lease belongs to the window (NOT released per-op) and completion
+    /// decrements the window's in-flight count.
+    window: Option<u32>,
+    /// Coalesced-WRITE group: the signaled tail WR of a doorbell-batched
+    /// window-WRITE flush carries the whole group's (tag, len) pairs in
+    /// `Daemon::wgroups[g]` — one CQE fans out into one OpComplete per
+    /// logical WRITE.
+    wgroup: Option<u32>,
+}
+
+/// Handle a client holds on a registered remote window: an opaque
+/// (slot, generation) pair. The generation check makes tokens single-use
+/// across release/reclaim — an op through a released window fails with
+/// [`RaasError::StaleWindow`] instead of touching a recycled slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowToken {
+    slot: u32,
+    gen: u32,
+}
+
+/// Live state of one registered window.
+#[derive(Clone, Debug)]
+struct WindowEntry {
+    /// Owning connection (completion routing + restart reclaim).
+    conn: Vqpn,
+    /// Remote node the window addresses (resolved once at register).
+    remote: u32,
+    /// Offset of the window inside the peer pool.
+    remote_base: u64,
+    /// Window span in bytes.
+    span: u64,
+    /// The ONE standing staging lease every op through the window shares
+    /// (the whole point: repeat ops skip the per-op lease machinery).
+    lease: Lease,
+    /// Ops in flight through this window (defers teardown).
+    inflight: u32,
+    /// Last submit through the window — the restart-reclaim clock.
+    last_used: Ns,
+    /// Owner called `release_window`; slot is freed once drained.
+    closed: bool,
+    /// Pending coalesced WRITEs awaiting the next doorbell.
+    wbatch: Vec<SendWr>,
+    /// (user tag, len) of each pending WRITE, in submit order.
+    wtags: Vec<(u64, u64)>,
+}
+
+/// Slot in the window table: generation survives the entry so stale
+/// tokens stay detectable after reuse.
+#[derive(Clone, Debug, Default)]
+struct WindowSlot {
+    gen: u32,
+    entry: Option<WindowEntry>,
 }
 
 /// The per-machine RDMAvisor daemon.
@@ -254,6 +331,19 @@ pub struct Daemon {
     srq_wr_seq: u64,
     /// Poller scratch buffer reused across pumps (zero-alloc CQ drain).
     cqe_buf: Vec<Cqe>,
+    /// Registered remote windows, slot-indexed (tokens carry the slot).
+    windows: Vec<WindowSlot>,
+    /// Free window slots (LIFO reuse keeps the table dense).
+    window_free: Vec<u32>,
+    /// Windows whose WRITE batch went non-empty since the last pump, in
+    /// submission order (pump flushes O(dirty), mirroring
+    /// `dirty_remotes`).
+    dirty_windows: Vec<u32>,
+    /// Coalesced-WRITE group tag tables: `wgroups[g]` holds the (tag,
+    /// len) pairs the group's single signaled CQE fans out into.
+    wgroups: Vec<Vec<(u64, u64)>>,
+    /// Free wgroup slots (LIFO reuse keeps the table dense).
+    wgroup_free: Vec<u32>,
 }
 
 impl Daemon {
@@ -301,6 +391,11 @@ impl Daemon {
             accept_queues: Vec::new(),
             srq_wr_seq,
             cqe_buf: Vec::new(),
+            windows: Vec::new(),
+            window_free: Vec::new(),
+            dirty_windows: Vec::new(),
+            wgroups: Vec::new(),
+            wgroup_free: Vec::new(),
             cfg,
         }
     }
@@ -456,6 +551,8 @@ impl Daemon {
                 opened_at: sim.now(),
                 rc_remote: Some(remote.0),
                 ud_msg_len: None,
+                window: None,
+                wgroup: None,
             },
         );
         let wr = match verb {
@@ -465,6 +562,339 @@ impl Daemon {
         };
         self.enqueue_wr(sim, remote, wr, tag)?;
         Ok(tag)
+    }
+
+    // ------------------------------------------------- registered windows
+
+    /// Register a remote window: `[remote_offset, remote_offset + span)`
+    /// of `conn`'s peer pool, with ops through it capped at `max_op`
+    /// bytes. ONE staging lease of `max_op` bytes is taken here and held
+    /// for the window's lifetime — every subsequent READ/WRITE through
+    /// the returned token reuses it, skipping the per-op lease/release
+    /// round that dominates the small-op submit path (the Storm
+    /// repeat-access argument). Registration is control-plane work: it
+    /// charges CPU but does not count as a data-plane op.
+    pub fn register_window(
+        &mut self,
+        sim: &mut Sim,
+        conn: Vqpn,
+        remote_offset: u64,
+        span: u64,
+        max_op: u64,
+    ) -> Result<WindowToken, RaasError> {
+        let c = self.cfg.shm.ring_push_ns + self.cfg.shm.doorbell_ns / 8;
+        sim.node_mut(self.node).cpu.charge(c);
+        let entry = self.conns.lookup(conn).ok_or(RaasError::UnknownConnection)?;
+        let remote = entry.remote;
+        let rp = *self
+            .remote_pools
+            .get(remote.0)
+            .ok_or(RaasError::UnknownConnection)?;
+        if remote_offset + span > rp.len {
+            return Err(RaasError::TooLong { len: span, max: rp.len.saturating_sub(remote_offset) });
+        }
+        if max_op == 0 || max_op > span {
+            return Err(RaasError::TooLong { len: max_op, max: span });
+        }
+        let lease = self.pool.lease(max_op).ok_or(RaasError::PoolExhausted)?;
+        let slot = match self.window_free.pop() {
+            Some(s) => s,
+            None => {
+                self.windows.push(WindowSlot::default());
+                (self.windows.len() - 1) as u32
+            }
+        };
+        let gen = self.windows[slot as usize].gen;
+        self.windows[slot as usize].entry = Some(WindowEntry {
+            conn,
+            remote: remote.0,
+            remote_base: remote_offset,
+            span,
+            lease,
+            inflight: 0,
+            last_used: sim.now(),
+            closed: false,
+            wbatch: Vec::new(),
+            wtags: Vec::new(),
+        });
+        self.stats.windows_registered += 1;
+        Ok(WindowToken { slot, gen })
+    }
+
+    /// Is `win` a live, open window on this daemon?
+    pub fn check_window(&self, win: WindowToken) -> Result<(), RaasError> {
+        match self.windows.get(win.slot as usize) {
+            Some(s) if s.gen == win.gen => match &s.entry {
+                Some(w) if !w.closed => Ok(()),
+                _ => Err(RaasError::StaleWindow),
+            },
+            _ => Err(RaasError::StaleWindow),
+        }
+    }
+
+    /// Copy the scalars an op needs out of a checked-live window entry.
+    fn window_params(&self, slot: u32) -> (Vqpn, u32, u64, u64, Lease) {
+        let w = self.windows[slot as usize].entry.as_ref().expect("checked live");
+        (w.conn, w.remote, w.remote_base, w.span, w.lease)
+    }
+
+    /// One-sided READ of `len` bytes at `offset` inside a registered
+    /// window — the repeat-get primitive. No per-op lease: the payload
+    /// lands in the window's standing lease (the simulator tracks
+    /// extents, so concurrent reads sharing the slot cost nothing).
+    pub fn window_read(
+        &mut self,
+        sim: &mut Sim,
+        win: WindowToken,
+        len: u64,
+        offset: u64,
+        tag: u64,
+    ) -> Result<u64, RaasError> {
+        self.charge_submit(sim);
+        self.check_window(win)?;
+        let (conn, remote, remote_base, span, lease) = self.window_params(win.slot);
+        if offset + len > span {
+            return Err(RaasError::TooLong { len, max: span.saturating_sub(offset) });
+        }
+        if len > lease.len {
+            return Err(RaasError::TooLong { len, max: lease.len });
+        }
+        let rp = *self
+            .remote_pools
+            .get(remote)
+            .ok_or(RaasError::UnknownConnection)?;
+        let wr_id = self.ops.insert(
+            conn,
+            InflightOp {
+                lease,
+                deliver_copy: true,
+                opened_at: sim.now(),
+                rc_remote: Some(remote),
+                ud_msg_len: None,
+                window: Some(win.slot),
+                wgroup: None,
+            },
+        );
+        let wr = SendWr::read(
+            wr_id,
+            len,
+            self.pool.mr.key,
+            lease.addr,
+            rp.rkey,
+            rp.base + remote_base + offset,
+        );
+        self.enqueue_wr(sim, NodeId(remote), wr, tag)?;
+        let w = self.windows[win.slot as usize].entry.as_mut().expect("checked live");
+        w.inflight += 1;
+        w.last_used = sim.now();
+        self.stats.window_ops += 1;
+        Ok(tag)
+    }
+
+    /// One-sided WRITE of `len` bytes at `offset` inside a registered
+    /// window. WRITEs are **doorbell-coalesced** (RDMAbox-style request
+    /// merging): each call appends an *unsignaled* WR to the window's
+    /// pending group; the group posts as one batch whose tail WR alone is
+    /// signaled, so N WRITEs cost one doorbell and one CQE. The flush
+    /// happens at `batch_max`, on the next `pump`, or explicitly via
+    /// [`Daemon::window_flush`]. No immediate data travels: the WRITE is
+    /// truly one-sided — the responder consumes no recv WQE and raises no
+    /// CQE (the remote app polls the window memory, KV-style).
+    pub fn window_write(
+        &mut self,
+        sim: &mut Sim,
+        win: WindowToken,
+        len: u64,
+        offset: u64,
+        tag: u64,
+    ) -> Result<u64, RaasError> {
+        self.charge_submit(sim);
+        self.check_window(win)?;
+        let (conn, remote, remote_base, span, lease) = self.window_params(win.slot);
+        if offset + len > span {
+            return Err(RaasError::TooLong { len, max: span.saturating_sub(offset) });
+        }
+        if len > lease.len {
+            return Err(RaasError::TooLong { len, max: lease.len });
+        }
+        let rp = *self
+            .remote_pools
+            .get(remote)
+            .ok_or(RaasError::UnknownConnection)?;
+        let wr = SendWr::write(
+            untracked_wr_id(conn),
+            len,
+            self.pool.mr.key,
+            lease.addr,
+            rp.rkey,
+            rp.base + remote_base + offset,
+        )
+        .unsignaled();
+        self.telemetry.charge(self.cfg.shm.ring_pop_ns + self.cfg.wr_build_ns);
+        let (was_empty, batch_len) = {
+            let w = self.windows[win.slot as usize].entry.as_mut().expect("checked live");
+            let was_empty = w.wbatch.is_empty();
+            w.wbatch.push(wr);
+            w.wtags.push((tag, len));
+            w.inflight += 1;
+            w.last_used = sim.now();
+            (was_empty, w.wbatch.len())
+        };
+        if was_empty {
+            self.dirty_windows.push(win.slot);
+        }
+        self.stats.window_ops += 1;
+        if batch_len >= self.cfg.batch_max {
+            self.flush_window(sim, win.slot)?;
+        }
+        Ok(tag)
+    }
+
+    /// Explicitly flush a window's pending coalesced WRITEs (one doorbell
+    /// group). Closed-loop clients call this after a PUT burst.
+    pub fn window_flush(&mut self, sim: &mut Sim, win: WindowToken) -> Result<(), RaasError> {
+        self.check_window(win)?;
+        self.flush_window(sim, win.slot)
+    }
+
+    /// Release a registered window: pending WRITEs are flushed first
+    /// (accepted ops complete exactly once), the token is invalidated
+    /// immediately, and the standing lease returns to the pool once the
+    /// last in-flight op drains.
+    pub fn release_window(&mut self, sim: &mut Sim, win: WindowToken) -> Result<(), RaasError> {
+        self.check_window(win)?;
+        self.flush_window(sim, win.slot)?;
+        let done = {
+            let w = self.windows[win.slot as usize].entry.as_mut().expect("checked live");
+            w.closed = true;
+            w.inflight == 0 && w.wbatch.is_empty()
+        };
+        self.stats.windows_released += 1;
+        if done {
+            self.free_window(win.slot);
+        }
+        Ok(())
+    }
+
+    /// Live (registered, unreleased) windows on this daemon.
+    pub fn window_count(&self) -> usize {
+        self.windows.iter().filter(|s| s.entry.is_some()).count()
+    }
+
+    /// Post a window's pending WRITE group to the per-remote batch: ONE
+    /// slab entry (and ONE drain-ledger submit) for the whole group, the
+    /// tail WR re-stamped signaled with the slab wr_id — on the ordered
+    /// RC QP its completion implies every earlier unsignaled WRITE in the
+    /// group also completed.
+    fn flush_window(&mut self, sim: &mut Sim, slot: u32) -> Result<(), RaasError> {
+        let (conn, remote, lease, mut wrs, tags) = {
+            let Some(w) = self.windows.get_mut(slot as usize).and_then(|s| s.entry.as_mut())
+            else {
+                return Ok(());
+            };
+            if w.wbatch.is_empty() {
+                return Ok(());
+            }
+            (
+                w.conn,
+                w.remote,
+                w.lease,
+                std::mem::take(&mut w.wbatch),
+                std::mem::take(&mut w.wtags),
+            )
+        };
+        let n = tags.len() as u64;
+        let g = match self.wgroup_free.pop() {
+            Some(g) => {
+                self.wgroups[g as usize] = tags;
+                g
+            }
+            None => {
+                self.wgroups.push(tags);
+                (self.wgroups.len() - 1) as u32
+            }
+        };
+        let wr_id = self.ops.insert(
+            conn,
+            InflightOp {
+                lease,
+                deliver_copy: false,
+                opened_at: sim.now(),
+                rc_remote: Some(remote),
+                ud_msg_len: None,
+                window: Some(slot),
+                wgroup: Some(g),
+            },
+        );
+        let tail = wrs.last_mut().expect("non-empty group");
+        tail.wr_id = wr_id;
+        tail.signaled = true;
+        self.stats.window_flushes += 1;
+        self.stats.writes_coalesced += n - 1;
+        self.migrate.on_rc_submitted(remote);
+        let batch = self.pending.entry_or_default(remote);
+        if batch.is_empty() {
+            self.dirty_remotes.push(remote);
+        }
+        batch.extend(wrs);
+        if batch.len() >= self.cfg.batch_max {
+            self.flush_remote(sim, NodeId(remote))?;
+        }
+        Ok(())
+    }
+
+    /// Return a drained window slot to the pool: release the standing
+    /// lease, bump the generation (stale-token detection), recycle.
+    fn free_window(&mut self, slot: u32) {
+        if let Some(w) = self.windows[slot as usize].entry.take() {
+            self.pool.release(w.lease);
+            let s = &mut self.windows[slot as usize];
+            s.gen = s.gen.wrapping_add(1);
+            self.window_free.push(slot);
+        }
+    }
+
+    /// `n` ops through window `slot` finished; free the slot if its owner
+    /// already released it and nothing remains in flight.
+    fn window_op_done(&mut self, slot: u32, n: u32) {
+        let done = {
+            let Some(w) = self.windows.get_mut(slot as usize).and_then(|s| s.entry.as_mut())
+            else {
+                return;
+            };
+            w.inflight = w.inflight.saturating_sub(n);
+            w.closed && w.inflight == 0 && w.wbatch.is_empty()
+        };
+        if done {
+            self.free_window(slot);
+        }
+    }
+
+    /// Force-release windows whose owner went away without calling
+    /// `release_window` (a client restart): any window idle past the
+    /// lease-timeout horizon with nothing in flight gets its standing
+    /// lease back and its token invalidated. Shares the fault-hygiene
+    /// gate (`lease_timeout_ns == 0` disables it), so fault-free runs
+    /// never pay for the sweep. In-flight ops first age out through
+    /// [`Daemon::reclaim_stale_leases`], which drains `inflight` here.
+    fn reclaim_stale_windows(&mut self, sim: &Sim) {
+        if self.cfg.lease_timeout_ns == 0 || self.windows.is_empty() {
+            return;
+        }
+        let now = sim.now();
+        let timeout = Ns(self.cfg.lease_timeout_ns);
+        for slot in 0..self.windows.len() as u32 {
+            let idle = {
+                let Some(w) = self.windows[slot as usize].entry.as_ref() else { continue };
+                w.inflight == 0
+                    && w.wbatch.is_empty()
+                    && now.saturating_sub(w.last_used) >= timeout
+            };
+            if idle {
+                self.free_window(slot);
+                self.stats.windows_reclaimed += 1;
+            }
+        }
     }
 
     /// `send(fd, buf, len, FLAGS)` — Fig 3. Adaptive path: small → SEND,
@@ -507,6 +937,8 @@ impl Daemon {
                 opened_at: sim.now(),
                 rc_remote: Some(remote.0),
                 ud_msg_len: None,
+                window: None,
+                wgroup: None,
             },
         );
         // `send` pushes data: a READ preference from the selector (local
@@ -600,6 +1032,8 @@ impl Daemon {
                 opened_at: sim.now(),
                 rc_remote: None,
                 ud_msg_len: if nfrags > 1 { Some(len) } else { None },
+                window: None,
+                wgroup: None,
             },
         );
         for k in 0..nfrags {
@@ -696,7 +1130,14 @@ impl Daemon {
     /// Drivers call this each loop turn (it is what the daemon's service
     /// threads do continuously in the live implementation).
     pub fn pump(&mut self, sim: &mut Sim) {
-        // Worker: flush batches that received WRs since the last pump
+        // Worker: coalesced window-WRITE groups first — their doorbell
+        // flush appends to the per-remote batches the next loop posts
+        // (submission order, like everything below)
+        let wslots = std::mem::take(&mut self.dirty_windows);
+        for s in wslots {
+            let _ = self.flush_window(sim, s);
+        }
+        // flush batches that received WRs since the last pump
         // (submission order — deterministic); a batch the SQ couldn't
         // absorb stays dirty for the next pump
         let remotes = std::mem::take(&mut self.dirty_remotes);
@@ -737,6 +1178,7 @@ impl Daemon {
         self.reassembly
             .expire_stale(sim.now(), Ns(self.cfg.reassembly_timeout_ns));
         self.reclaim_stale_leases(sim);
+        self.reclaim_stale_windows(sim);
         // SRQ refill
         Self::fill_srq(sim, self.node, self.srq, &mut self.pool, &self.cfg, &mut self.srq_wr_seq);
         self.telemetry.pool_pressure = self.pool.pressure();
@@ -764,17 +1206,55 @@ impl Daemon {
             .collect();
         for wr_id in stale {
             let op = self.ops.take(wr_id).expect("stale id is live");
-            self.pool.release(op.lease);
-            self.stats.leases_reclaimed += 1;
-            self.stats.ops_failed += 1;
-            self.telemetry.ops_failed += 1;
             // keep the migration drain ledger honest: the RC WR is gone
             if let Some(remote) = op.rc_remote {
                 self.migrate.on_rc_completed(remote);
             }
             let vqpn = crate::raas::vqpn::unpack_vqpn(wr_id);
-            if let Some(entry) = self.conns.lookup(vqpn) {
-                let app = entry.app;
+            let app = self.conns.lookup(vqpn).map(|e| e.app);
+            if let Some(slot) = op.window {
+                // the lease belongs to the window, so nothing is released
+                // here (and `leases_reclaimed` does not count): report
+                // each logical op failed and let the window drain —
+                // `reclaim_stale_windows` frees abandoned slots later
+                if let Some(g) = op.wgroup {
+                    let tags = std::mem::take(&mut self.wgroups[g as usize]);
+                    self.wgroup_free.push(g);
+                    for &(tag, _wlen) in &tags {
+                        self.stats.ops_failed += 1;
+                        self.telemetry.ops_failed += 1;
+                        if let Some(app) = app {
+                            self.telemetry.charge(self.cfg.shm.ring_push_ns);
+                            self.inbox_mut(app).push_back(Delivery::OpComplete {
+                                conn: vqpn,
+                                tag,
+                                len: 0,
+                                ok: false,
+                            });
+                        }
+                    }
+                    self.window_op_done(slot, tags.len() as u32);
+                } else {
+                    self.stats.ops_failed += 1;
+                    self.telemetry.ops_failed += 1;
+                    if let Some(app) = app {
+                        self.telemetry.charge(self.cfg.shm.ring_push_ns);
+                        self.inbox_mut(app).push_back(Delivery::OpComplete {
+                            conn: vqpn,
+                            tag: wr_id,
+                            len: 0,
+                            ok: false,
+                        });
+                    }
+                    self.window_op_done(slot, 1);
+                }
+                continue;
+            }
+            self.pool.release(op.lease);
+            self.stats.leases_reclaimed += 1;
+            self.stats.ops_failed += 1;
+            self.telemetry.ops_failed += 1;
+            if let Some(app) = app {
                 self.telemetry.charge(self.cfg.shm.ring_push_ns);
                 self.inbox_mut(app).push_back(Delivery::OpComplete {
                     conn: vqpn,
@@ -835,6 +1315,9 @@ impl Daemon {
             // OpCompletes for one op
             return;
         };
+        if let Some(slot) = op.window {
+            return self.on_window_cqe(sim, cqe, op, slot);
+        }
         let vqpn = crate::raas::vqpn::unpack_vqpn(cqe.wr_id);
         let ok = cqe.status == WcStatus::Success;
         // a fragmented UD message's CQE carries only the last fragment's
@@ -865,6 +1348,67 @@ impl Daemon {
                 len,
                 ok,
             });
+        }
+    }
+
+    /// Window-op completion: the standing lease stays with the window
+    /// (nothing to release per-op). A coalesced-WRITE group's single CQE
+    /// fans out into one OpComplete per logical WRITE, stamped with the
+    /// user tags recorded at submit; a window READ completes like a plain
+    /// read minus the lease release. Either way the window's in-flight
+    /// count drops, which may finish a deferred teardown.
+    fn on_window_cqe(&mut self, sim: &mut Sim, cqe: Cqe, op: InflightOp, slot: u32) {
+        let vqpn = crate::raas::vqpn::unpack_vqpn(cqe.wr_id);
+        let ok = cqe.status == WcStatus::Success;
+        if let Some(remote) = op.rc_remote {
+            self.migrate.on_rc_completed(remote);
+        }
+        let app = self.conns.lookup(vqpn).map(|e| e.app);
+        if let Some(g) = op.wgroup {
+            let tags = std::mem::take(&mut self.wgroups[g as usize]);
+            self.wgroup_free.push(g);
+            for &(tag, wlen) in &tags {
+                self.stats.ops_completed += 1;
+                self.telemetry.ops_completed += 1;
+                if ok {
+                    self.stats.bytes_completed += wlen;
+                } else {
+                    self.stats.ops_failed += 1;
+                    self.telemetry.ops_failed += 1;
+                }
+                if let Some(app) = app {
+                    self.telemetry.charge(self.cfg.shm.ring_push_ns);
+                    self.inbox_mut(app).push_back(Delivery::OpComplete {
+                        conn: vqpn,
+                        tag,
+                        len: wlen,
+                        ok,
+                    });
+                }
+            }
+            self.window_op_done(slot, tags.len() as u32);
+        } else {
+            if op.deliver_copy && ok {
+                sim.node_mut(self.node).cpu.charge_memcpy(cqe.len, 10.0);
+            }
+            self.stats.ops_completed += 1;
+            self.telemetry.ops_completed += 1;
+            if ok {
+                self.stats.bytes_completed += cqe.len;
+            } else {
+                self.stats.ops_failed += 1;
+                self.telemetry.ops_failed += 1;
+            }
+            if let Some(app) = app {
+                self.telemetry.charge(self.cfg.shm.ring_push_ns);
+                self.inbox_mut(app).push_back(Delivery::OpComplete {
+                    conn: vqpn,
+                    tag: cqe.wr_id,
+                    len: cqe.len,
+                    ok,
+                });
+            }
+            self.window_op_done(slot, 1);
         }
     }
 
@@ -1423,5 +1967,132 @@ mod tests {
             }
         }
         assert!(got_exhausted, "tiny pool must exhaust");
+    }
+
+    #[test]
+    fn window_reads_reuse_one_standing_lease() {
+        let (mut sim, mut daemons) = cluster(2);
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+
+        let win = daemons[0]
+            .register_window(&mut sim, conn, 0, 1 << 20, 4096)
+            .unwrap();
+        assert_eq!(daemons[0].stats.windows_registered, 1);
+        let standing = daemons[0].pool.leased_bytes;
+        assert_eq!(standing, 4096, "one lease of the max-op class");
+
+        for i in 0..32u64 {
+            daemons[0].window_read(&mut sim, win, 4096, i * 4096, i).unwrap();
+        }
+        // repeat reads took NO additional leases
+        assert_eq!(daemons[0].pool.leased_bytes, standing);
+        pump_all(&mut sim, &mut daemons);
+        assert_eq!(daemons[0].stats.ops_completed, 32);
+        assert_eq!(daemons[0].stats.window_ops, 32);
+        let mut got = 0;
+        while let Some(d) = daemons[0].recv_zero_copy(&mut sim, app) {
+            assert!(matches!(d, Delivery::OpComplete { ok: true, len: 4096, .. }), "{d:?}");
+            got += 1;
+        }
+        assert_eq!(got, 32);
+        // the standing lease outlives the ops, and release returns it
+        assert_eq!(daemons[0].pool.leased_bytes, standing);
+        daemons[0].release_window(&mut sim, win).unwrap();
+        assert_eq!(daemons[0].pool.leased_bytes, 0);
+        assert_eq!(daemons[0].window_count(), 0);
+    }
+
+    #[test]
+    fn window_writes_coalesce_into_one_signaled_cqe() {
+        let (mut sim, mut daemons) = cluster(2);
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+
+        let win = daemons[0]
+            .register_window(&mut sim, conn, 0, 1 << 20, 4096)
+            .unwrap();
+        for i in 0..8u64 {
+            daemons[0].window_write(&mut sim, win, 512, i * 4096, 100 + i).unwrap();
+        }
+        daemons[0].window_flush(&mut sim, win).unwrap();
+        pump_all(&mut sim, &mut daemons);
+
+        // one doorbell group, one signaled tail: 7 WRITEs shared the CQE
+        assert_eq!(daemons[0].stats.window_flushes, 1);
+        assert_eq!(daemons[0].stats.writes_coalesced, 7);
+        assert_eq!(daemons[0].stats.wrs_posted, 8);
+        assert_eq!(daemons[0].stats.ops_completed, 8, "one OpComplete per WRITE");
+        // fan-out carries the user tags, in submit order
+        let mut tags = Vec::new();
+        while let Some(d) = daemons[0].recv_zero_copy(&mut sim, app) {
+            match d {
+                Delivery::OpComplete { tag, len: 512, ok: true, .. } => tags.push(tag),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(tags, (100..108).collect::<Vec<u64>>());
+        // truly one-sided: the responder daemon saw NO message
+        assert_eq!(daemons[1].stats.msgs_delivered, 0);
+        assert_eq!(daemons[1].inbox_len(s), 0);
+    }
+
+    #[test]
+    fn stale_window_tokens_fail_cleanly() {
+        let (mut sim, mut daemons) = cluster(2);
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+
+        let win = daemons[0]
+            .register_window(&mut sim, conn, 0, 64 << 10, 4096)
+            .unwrap();
+        daemons[0].release_window(&mut sim, win).unwrap();
+        assert_eq!(
+            daemons[0].window_read(&mut sim, win, 4096, 0, 0),
+            Err(RaasError::StaleWindow)
+        );
+        assert_eq!(
+            daemons[0].window_write(&mut sim, win, 4096, 0, 0),
+            Err(RaasError::StaleWindow)
+        );
+        // a recycled slot gets a new generation: the old token stays dead
+        let win2 = daemons[0]
+            .register_window(&mut sim, conn, 0, 64 << 10, 4096)
+            .unwrap();
+        assert_eq!(daemons[0].window_read(&mut sim, win, 4096, 0, 0), Err(RaasError::StaleWindow));
+        // and a never-issued token is rejected too
+        let bogus = WindowToken { slot: 99, gen: 0 };
+        assert_eq!(daemons[0].check_window(bogus), Err(RaasError::StaleWindow));
+        daemons[0].release_window(&mut sim, win2).unwrap();
+        assert_eq!(daemons[0].pool.leased_bytes, 0);
+    }
+
+    #[test]
+    fn release_with_inflight_ops_defers_lease_return() {
+        let (mut sim, mut daemons) = cluster(2);
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+
+        let win = daemons[0]
+            .register_window(&mut sim, conn, 0, 1 << 20, 4096)
+            .unwrap();
+        daemons[0].window_read(&mut sim, win, 4096, 0, 1).unwrap();
+        daemons[0].window_write(&mut sim, win, 256, 8192, 2).unwrap();
+        daemons[0].release_window(&mut sim, win).unwrap();
+        // token dead immediately, lease held until the ops drain
+        assert_eq!(daemons[0].window_read(&mut sim, win, 4096, 0, 3), Err(RaasError::StaleWindow));
+        assert!(daemons[0].pool.leased_bytes > 0, "lease deferred while in flight");
+        pump_all(&mut sim, &mut daemons);
+        assert_eq!(daemons[0].stats.ops_completed, 2, "accepted ops complete exactly once");
+        assert_eq!(daemons[0].pool.leased_bytes, 0, "drain returned the lease");
+        assert_eq!(daemons[0].window_count(), 0);
     }
 }

@@ -5,6 +5,7 @@
 //! from other machines". Each driver returns a [`RunStats`] row; the
 //! figure harnesses sweep parameters and print the paper-shaped series.
 
+use crate::apps::kv::{KvClient, KvLayout, KvMode, KvServer};
 use crate::baselines::locked::LockedSystem;
 use crate::baselines::naive::NaiveSystem;
 use crate::fabric::sim::{FabricConfig, Notification, Sim};
@@ -961,6 +962,303 @@ pub fn chaos_send(cfg: &ChaosCfg) -> ChaosRun {
     }
 }
 
+// -------------------------------------------------- Fig 11 (KV storm)
+
+/// Config for the KV-tier experiment (fig 11): thousands of closed-loop
+/// clients run Zipf-popular GET/PUT rounds against fixed-slot value
+/// tables sharded over the server daemons. The ablation axis is the
+/// access mode — one-sided registered-window READ/WRITE (the Storm
+/// repeat-get pattern + RDMAbox doorbell coalescing) vs SEND-RPC.
+#[derive(Clone, Debug)]
+pub struct KvCfg {
+    /// Closed-loop clients on the client machine.
+    pub clients: usize,
+    /// Cap on distinct server daemons the table is sharded across.
+    pub max_servers: usize,
+    /// Virtual run length.
+    pub duration: Ns,
+    /// Fraction of the run treated as warmup (excluded from stats).
+    pub warmup_frac: f64,
+    /// Workload RNG seed (runs replay bit-identically).
+    pub seed: u64,
+    /// Zipf skew of the key-popularity distribution.
+    pub theta: f64,
+    /// Percent of rounds that are GETs (95 read-mostly, 50 write-heavy).
+    pub read_pct: u32,
+    /// Value-table slots per server shard.
+    pub slots: u64,
+    /// Bytes per table slot — the largest value class and the window's
+    /// max-op bound.
+    pub slot_bytes: u64,
+    /// WRITEs per PUT round (the doorbell-coalescing group size).
+    pub put_burst: u32,
+    /// Ablation: SEND-RPC GET/PUT instead of the one-sided window path.
+    pub rpc: bool,
+}
+
+impl Default for KvCfg {
+    fn default() -> Self {
+        KvCfg {
+            clients: 1024,
+            max_servers: 64,
+            duration: Ns::from_ms(4),
+            warmup_frac: 0.25,
+            seed: 42,
+            theta: 0.99,
+            read_pct: 95,
+            slots: 512,
+            slot_bytes: 128 << 10,
+            put_burst: 4,
+            rpc: false,
+        }
+    }
+}
+
+/// One measured KV-storm point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvRun {
+    /// Closed-loop clients of this point.
+    pub clients: usize,
+    /// Server shards the table spans.
+    pub servers: usize,
+    /// App-level rounds (GET, or whole PUT burst) completed inside the
+    /// measured window — the ops fig 11 plots.
+    pub ops: u64,
+    /// GET rounds issued over the full run.
+    pub gets: u64,
+    /// PUT values issued over the full run.
+    pub puts: u64,
+    /// App-level rounds, millions per second.
+    pub mops: f64,
+    /// Wire-delivered payload throughput, Gb/s.
+    pub gbps: f64,
+    /// Median round latency, microseconds.
+    pub p50_us: f64,
+    /// 99th-percentile round latency, microseconds.
+    pub p99_us: f64,
+    /// Cores-equivalent burned by the server daemons — near zero in
+    /// one-sided mode (the paper's passive-server story).
+    pub server_cpu_cores: f64,
+    /// RPC GETs the servers answered (0 in one-sided mode).
+    pub server_gets_served: u64,
+    /// PUT values the servers applied (0 in one-sided mode).
+    pub server_puts_applied: u64,
+    /// Doorbell groups flushed by the client daemon.
+    pub window_flushes: u64,
+    /// WRITEs that rode an earlier WR's doorbell (saved CQEs).
+    pub writes_coalesced: u64,
+    /// Client ops that completed in failure.
+    pub ops_failed: u64,
+    /// Simulator events processed over the whole run.
+    pub events: u64,
+}
+
+/// Client daemon config for the KV storm: staging classes for every
+/// value size in play (4 KB covers the small classes), a recv ring able
+/// to land value-sized RPC replies, and migration off — the ablation
+/// must compare one-sided vs RPC on identical RC plumbing.
+fn kv_client_cfg(cfg: &KvCfg) -> DaemonConfig {
+    let mut d = DaemonConfig::default();
+    let n = cfg.clients as u32;
+    let mut pool = vec![(4096u64, (4 * n).max(1024))];
+    if cfg.slot_bytes > 16 << 10 {
+        pool.push((16 << 10, (4 * n).max(512)));
+    }
+    if cfg.slot_bytes > 4096 {
+        pool.push((cfg.slot_bytes, (4 * n).max(512)));
+    }
+    d.pool_layout = pool;
+    d.recv_slot_bytes = cfg.slot_bytes.max(16 << 10);
+    d.srq_capacity = (2 * cfg.clients).max(1024);
+    d.srq_watermark = (2 * cfg.clients).max(1024) / 4;
+    d.migration.enabled = false;
+    d
+}
+
+/// Server daemon config: the pool must cover the whole table span (the
+/// clients' window registrations bound-check against it) plus RPC reply
+/// staging headroom.
+fn kv_server_cfg(cfg: &KvCfg) -> DaemonConfig {
+    let mut d = DaemonConfig::default();
+    let mut pool = vec![(4096u64, 512u32)];
+    if cfg.slot_bytes > 16 << 10 {
+        pool.push((16 << 10, 256));
+    }
+    if cfg.slot_bytes > 4096 {
+        pool.push((cfg.slot_bytes, cfg.slots as u32 + 128));
+    } else {
+        pool[0].1 += cfg.slots as u32 + 128;
+    }
+    d.pool_layout = pool;
+    d.recv_slot_bytes = cfg.slot_bytes.max(4096);
+    d.srq_capacity = 512;
+    d.srq_watermark = 64;
+    d.service_threads = 1;
+    d.migration.enabled = false;
+    d
+}
+
+/// Fig 11: the Zipfian KV storm. Every client keeps one logical round in
+/// flight (closed loop): a GET with probability `read_pct`, else a PUT
+/// burst. One-sided mode registers one remote window per client up front
+/// — repeat GETs are single READ RTTs and PUT bursts coalesce into one
+/// doorbell group, with the server daemons fully passive; the `rpc`
+/// ablation pushes the same workload through SEND request/reply and pays
+/// two legs plus server CPU per GET.
+pub fn kv_storm(cfg: &KvCfg) -> KvRun {
+    let servers = cfg.clients.min(cfg.max_servers).max(1);
+    let mut fabric = FabricConfig::default();
+    fabric.nodes = servers + 1;
+    fabric.sq_depth = 1024;
+    let mut sim = Sim::new(fabric);
+
+    let mode = if cfg.rpc { KvMode::Rpc } else { KvMode::OneSided };
+    let layout = KvLayout { slots: cfg.slots, slot_bytes: cfg.slot_bytes };
+
+    let mut daemons: Vec<Daemon> = Vec::with_capacity(servers + 1);
+    daemons.push(Daemon::start(&mut sim, NodeId(0), kv_client_cfg(cfg)));
+    for s in 0..servers {
+        daemons.push(Daemon::start(&mut sim, NodeId(s as u32 + 1), kv_server_cfg(cfg)));
+    }
+    let mut kv_servers: Vec<KvServer> = Vec::with_capacity(servers);
+    for s in 0..servers {
+        let seed = cfg.seed ^ (s as u64 + 1);
+        kv_servers.push(KvServer::new(&mut daemons[s + 1], 6000, layout, mode, seed));
+    }
+    let capp = daemons[0].register_app();
+    let mut clients: Vec<KvClient> = Vec::with_capacity(cfg.clients);
+    // conn vqpn → client index (vqpns are dense per daemon)
+    let mut client_of: Vec<usize> = Vec::new();
+    for i in 0..cfg.clients {
+        let server = 1 + i % servers;
+        let conn = connect_via(&mut sim, &mut daemons, 0, capp, server, 6000).unwrap();
+        if conn.0 as usize >= client_of.len() {
+            client_of.resize(conn.0 as usize + 1, usize::MAX);
+        }
+        client_of[conn.0 as usize] = i;
+        let seed = cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut c =
+            KvClient::new(capp, conn, layout, seed, cfg.theta, mode, cfg.read_pct, cfg.put_burst);
+        c.register(&mut sim, &mut daemons[0]).unwrap();
+        clients.push(c);
+    }
+
+    let mut win = Window::new(&ScenarioCfg {
+        duration: cfg.duration,
+        warmup_frac: cfg.warmup_frac,
+        ..ScenarioCfg::default()
+    });
+    let mut issued_at: Vec<Ns> = vec![Ns::ZERO; cfg.clients];
+    // clients whose last issue hit transient pool backpressure — retried
+    // on the next client pump turn so the closed loop never strands one
+    let mut stalled: Vec<usize> = Vec::new();
+    let mut rounds = 0u64;
+    let (mut rounds0, mut win_snapped) = (0u64, false);
+
+    // first pump flushes registration-era work before the opening burst
+    daemons[0].pump(&mut sim);
+    for (i, c) in clients.iter_mut().enumerate() {
+        issued_at[i] = sim.now();
+        if c.issue(&mut sim, &mut daemons[0]).is_err() {
+            stalled.push(i);
+        }
+    }
+    daemons[0].pump(&mut sim);
+    sim.node_mut(NodeId(0)).cache.reset_stats();
+
+    let mut server_nodes: Vec<u32> = Vec::new();
+    let mut notes: Vec<Notification> = Vec::new();
+    while sim.now() < cfg.duration {
+        win.maybe_start(&sim);
+        if win.started && !win_snapped {
+            win_snapped = true;
+            rounds0 = rounds;
+        }
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
+        }
+        let mut client_cqe = false;
+        server_nodes.clear();
+        for n in &notes {
+            if let Notification::CqeReady { node, .. } = n {
+                if node.0 == 0 {
+                    client_cqe = true;
+                } else {
+                    server_nodes.push(node.0);
+                }
+            }
+        }
+        server_nodes.sort_unstable();
+        server_nodes.dedup();
+        for &s in &server_nodes {
+            let d = &mut daemons[s as usize];
+            d.pump(&mut sim);
+            kv_servers[s as usize - 1].service(&mut sim, d);
+            // a service turn enqueues reply WRs; flush them now instead of
+            // waiting for this server's next CQE — at low load the reply
+            // IS the next traffic, so that CQE would never come
+            d.pump(&mut sim);
+        }
+        if client_cqe {
+            daemons[0].pump(&mut sim);
+            if !stalled.is_empty() {
+                let retry = std::mem::take(&mut stalled);
+                for i in retry {
+                    issued_at[i] = sim.now();
+                    if clients[i].issue(&mut sim, &mut daemons[0]).is_err() {
+                        stalled.push(i);
+                    }
+                }
+            }
+            while let Some(del) = daemons[0].recv_zero_copy(&mut sim, capp) {
+                let conn = match &del {
+                    Delivery::OpComplete { conn, .. } | Delivery::Message { conn, .. } => *conn,
+                };
+                let Some(&i) = client_of.get(conn.0 as usize) else { continue };
+                if i == usize::MAX {
+                    continue;
+                }
+                if clients[i].on_delivery(&del) {
+                    win.record_latency(sim.now().saturating_sub(issued_at[i]).0);
+                    rounds += 1;
+                    issued_at[i] = sim.now();
+                    if clients[i].issue(&mut sim, &mut daemons[0]).is_err() {
+                        stalled.push(i);
+                    }
+                }
+            }
+            daemons[0].pump(&mut sim);
+        }
+    }
+
+    let (gbps_v, _, _, p50, p99) = win.finish(&sim);
+    let span = sim.now().saturating_sub(win.t0);
+    let ops = rounds - rounds0;
+    let mut server_cpu = 0.0;
+    for s in 1..=servers {
+        server_cpu += daemons[s].snapshot(&sim).cpu_cores;
+    }
+    KvRun {
+        clients: cfg.clients,
+        servers,
+        ops,
+        gets: clients.iter().map(|c| c.gets_issued).sum(),
+        puts: clients.iter().map(|c| c.puts_issued).sum(),
+        mops: if span.0 == 0 { 0.0 } else { ops as f64 * 1e3 / span.0 as f64 },
+        gbps: gbps_v,
+        p50_us: p50,
+        p99_us: p99,
+        server_cpu_cores: server_cpu,
+        server_gets_served: kv_servers.iter().map(|s| s.gets_served).sum(),
+        server_puts_applied: kv_servers.iter().map(|s| s.puts_applied).sum(),
+        window_flushes: daemons[0].stats.window_flushes,
+        writes_coalesced: daemons[0].stats.writes_coalesced,
+        ops_failed: daemons[0].stats.ops_failed,
+        events: sim.steps_processed(),
+    }
+}
+
 /// Scheduler microbench workload for `bench simstep`: `pairs` RC QPs on
 /// one client streaming closed-loop WRITEs of `msg_bytes` at `window`
 /// outstanding each, across the default 4-node fabric. No daemon layer —
@@ -1311,6 +1609,54 @@ mod tests {
         let rc = chaos_send(&cfg);
         assert!(rc.retransmits > 0, "RC must retransmit under loss: {rc:?}");
         assert_eq!(rc.ud_dropped + rc.ud_orphans, 0, "no UD traffic in the ablation");
+    }
+
+    fn kv_quick(clients: usize, rpc: bool) -> KvCfg {
+        let mut cfg = KvCfg::default();
+        cfg.clients = clients;
+        cfg.max_servers = 8;
+        cfg.duration = Ns::from_ms(3);
+        cfg.rpc = rpc;
+        cfg
+    }
+
+    #[test]
+    fn kv_storm_one_sided_beats_rpc_and_bypasses_servers() {
+        let os = kv_storm(&kv_quick(256, false));
+        let rpc = kv_storm(&kv_quick(256, true));
+        assert!(os.ops > 0, "{os:?}");
+        assert!(rpc.ops > 0, "{rpc:?}");
+        // the fig-11 claim: one READ RTT beats two SEND legs plus a
+        // server turn, at app-level ops
+        assert!(
+            os.ops > rpc.ops,
+            "one-sided ({}) must out-op SEND-RPC ({})",
+            os.ops,
+            rpc.ops
+        );
+        // one-sided ops never touch the server's service loop…
+        assert_eq!(os.server_gets_served + os.server_puts_applied, 0, "{os:?}");
+        // …and PUT bursts coalesce into doorbell groups
+        assert!(os.window_flushes > 0, "{os:?}");
+        assert!(os.writes_coalesced > 0, "{os:?}");
+        // the RPC baseline does the opposite on every count
+        assert!(rpc.server_gets_served > 0, "{rpc:?}");
+        assert!(rpc.server_puts_applied > 0, "{rpc:?}");
+        assert_eq!(rpc.window_flushes, 0, "{rpc:?}");
+        assert!(
+            rpc.server_cpu_cores > os.server_cpu_cores,
+            "RPC must burn more server CPU: {:.3} vs {:.3}",
+            rpc.server_cpu_cores,
+            os.server_cpu_cores
+        );
+    }
+
+    #[test]
+    fn kv_storm_replays_identically() {
+        let cfg = kv_quick(64, false);
+        let a = format!("{:?}", kv_storm(&cfg));
+        let b = format!("{:?}", kv_storm(&cfg));
+        assert_eq!(a, b, "kv_storm must replay identically");
     }
 
     #[test]

@@ -11,8 +11,8 @@
 use rdmavisor::fabric::time::Ns;
 use rdmavisor::figures::{self, Budget};
 use rdmavisor::workload::scenarios::{
-    chaos_send, locked_random_read, naive_random_read, raas_random_read, scale_send,
-    verbs_sweep_point, ChaosCfg, ScaleCfg, ScenarioCfg,
+    chaos_send, kv_storm, locked_random_read, naive_random_read, raas_random_read, scale_send,
+    verbs_sweep_point, ChaosCfg, KvCfg, ScaleCfg, ScenarioCfg,
 };
 
 /// Run one figure id end-to-end on `jobs` threads and serialize
@@ -107,6 +107,49 @@ fn fig10_chaos_point_exercises_both_failure_families() {
 }
 
 #[test]
+fn fig11_replays_byte_identically() {
+    // the KV tier end-to-end: window registration order, Zipf key streams,
+    // doorbell flush grouping and the RPC baseline all under one seed
+    assert_fig_deterministic(11);
+}
+
+#[test]
+fn fig11_rc_only_replays_byte_identically() {
+    // the `fig --id 11 --rc-only` CLI path (SEND-RPC ablation alone)
+    let run = || {
+        let rows = figures::fig11_rpc_only(Budget::Quick, 1);
+        format!(
+            "{}\n{}",
+            figures::fig11_series(&rows).to_json().to_string(),
+            figures::print_fig11(&rows)
+        )
+    };
+    assert_eq!(run(), run(), "fig --id 11 --rc-only differed between runs");
+}
+
+#[test]
+fn fig11_one_sided_beats_rpc_at_scale() {
+    // the PR-6 acceptance gate: at the biggest quick point (1024 clients)
+    // the one-sided data plane must beat SEND-RPC on app-level ops/sec
+    let rows = figures::fig11(Budget::Quick, 1);
+    let row = rows
+        .iter()
+        .find(|r| r.clients >= 1024)
+        .expect("quick sweep must include a >=1024-client point");
+    let os = row.os_read.as_ref().expect("one-sided column present");
+    assert!(
+        os.mops > row.rpc_read.mops,
+        "{} clients: one-sided {:.3} Mops must beat SEND-RPC {:.3} Mops",
+        row.clients,
+        os.mops,
+        row.rpc_read.mops
+    );
+    // and it must do so while leaving the server's service loop idle
+    assert_eq!(os.server_gets_served + os.server_puts_applied, 0);
+    assert!(row.rpc_read.server_gets_served > 0);
+}
+
+#[test]
 fn fig9_rc_only_replays_byte_identically() {
     // the `fig --id 9 --rc-only` CLI path (ablation series alone), at the
     // same quick budget the CI smoke uses
@@ -167,6 +210,24 @@ fn fig10_rc_only_parallel_matches_serial() {
         )
     };
     assert_eq!(run(1), run(4), "fig 10 --rc-only: --jobs 4 != --jobs 1");
+}
+
+#[test]
+fn fig11_parallel_matches_serial() {
+    assert_eq!(fig_bytes_jobs(11, 1), fig_bytes_jobs(11, 4), "fig 11: --jobs 4 != --jobs 1");
+}
+
+#[test]
+fn fig11_rc_only_parallel_matches_serial() {
+    let run = |jobs| {
+        let rows = figures::fig11_rpc_only(Budget::Quick, jobs);
+        format!(
+            "{}\n{}",
+            figures::fig11_series(&rows).to_json().to_string(),
+            figures::print_fig11(&rows)
+        )
+    };
+    assert_eq!(run(1), run(4), "fig 11 --rc-only: --jobs 4 != --jobs 1");
 }
 
 // ------------------------------------------------------ scenario drivers
@@ -246,6 +307,26 @@ fn chaos_scenario_replays_byte_identically() {
     let r = chaos_send(&cfg);
     assert_eq!(format!("{r:?}"), format!("{:?}", chaos_send(&cfg)));
     assert_eq!(r.frames_dropped + r.frames_delayed + r.retransmits + r.restarts, 0);
+}
+
+#[test]
+fn kv_scenario_replays_byte_identically() {
+    // the KV storm driver on its own (outside the figure harness): Zipf
+    // key streams, per-client windows, doorbell flushes and the stalled
+    // retry list must all replay from the seed — both modes
+    let mut cfg = KvCfg::default();
+    cfg.clients = 96;
+    cfg.max_servers = 4;
+    cfg.duration = Ns::from_ms(2);
+    let a = format!("{:?}", kv_storm(&cfg));
+    let b = format!("{:?}", kv_storm(&cfg));
+    assert_eq!(a, b);
+
+    // the SEND-RPC ablation too
+    cfg.rpc = true;
+    let a = format!("{:?}", kv_storm(&cfg));
+    let b = format!("{:?}", kv_storm(&cfg));
+    assert_eq!(a, b);
 }
 
 #[test]

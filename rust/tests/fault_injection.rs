@@ -368,6 +368,170 @@ fn client_restart_reclaims_stale_leases_and_fails_the_ops() {
     assert_eq!(failed, daemons[0].stats.leases_reclaimed, "failure deliveries match reclaims");
 }
 
+// ------------------------------------------------- window data plane
+
+#[test]
+fn window_reads_survive_loss_exactly_once() {
+    // one-sided READs through a registered window on a 10%-lossy fabric:
+    // the RC layer retransmits underneath, every op completes exactly
+    // once, and — the window contract — no per-op lease is ever taken,
+    // so loss cannot leak pool bytes
+    let (mut sim, mut daemons) = lossy_cluster(
+        FaultConfig { seed: 29, drop_p: 0.08, ..FaultConfig::default() },
+        DaemonConfig::default(),
+        DaemonConfig::default(),
+    );
+    let c_app = daemons[0].register_app();
+    let s_app = daemons[1].register_app();
+    daemons[1].listen(s_app, 1);
+    let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+
+    let win = daemons[0]
+        .register_window(&mut sim, conn, 0, 1 << 20, 16 << 10)
+        .unwrap();
+    let standing = daemons[0].pool.leased_bytes;
+    assert!(standing > 0, "registration holds one standing lease");
+
+    let n = 40u64;
+    for i in 0..n {
+        daemons[0]
+            .window_read(&mut sim, win, 4096, (i % 256) * 4096, i)
+            .unwrap();
+    }
+    pump_to_quiescence(&mut sim, &mut daemons);
+
+    assert_eq!(daemons[0].stats.ops_completed, n, "every READ completes exactly once");
+    assert_eq!(daemons[0].stats.window_ops, n);
+    assert!(sim.node(NodeId(0)).retransmits > 0, "8% loss must force retransmissions");
+    let mut delivered = 0u64;
+    let mut ok = 0u64;
+    while let Some(d) = daemons[0].recv_zero_copy(&mut sim, c_app) {
+        let Delivery::OpComplete { ok: o, .. } = d else { panic!("{d:?}") };
+        delivered += 1;
+        if o {
+            ok += 1;
+        }
+    }
+    assert_eq!(delivered, n, "one delivery per READ — no duplicates, no losses");
+    assert!(ok >= n - 2, "8% loss should rarely exhaust the retry budget: {ok}/{n}");
+    // repeat READs took no per-op leases, lossy or not
+    assert_eq!(daemons[0].pool.leased_bytes, standing);
+    daemons[0].release_window(&mut sim, win).unwrap();
+    assert_eq!(daemons[0].pool.leased_bytes, 0, "release returns the standing lease");
+}
+
+#[test]
+fn window_write_bursts_survive_a_link_flap() {
+    // doorbell-coalesced WRITE groups across a link that is dark for the
+    // first 100 µs: the group's single signaled tail either completes or
+    // retry-fails, and the daemon fans exactly one completion out to each
+    // coalesced WRITE's tag — exactly-once per logical op, under faults
+    let (mut sim, mut daemons) = lossy_cluster(
+        FaultConfig {
+            seed: 31,
+            flaps: vec![Flap { src: NodeId(0), dst: NodeId(1), from: Ns(0), until: Ns(100_000) }],
+            ..FaultConfig::default()
+        },
+        DaemonConfig::default(),
+        DaemonConfig::default(),
+    );
+    let c_app = daemons[0].register_app();
+    let s_app = daemons[1].register_app();
+    daemons[1].listen(s_app, 1);
+    let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+
+    let win = daemons[0].register_window(&mut sim, conn, 0, 1 << 20, 4096).unwrap();
+    let bursts = 20u64;
+    let per_burst = 4u64;
+    for b in 0..bursts {
+        for j in 0..per_burst {
+            let tag = b * per_burst + j;
+            daemons[0].window_write(&mut sim, win, 4096, tag * 4096, tag).unwrap();
+        }
+        daemons[0].window_flush(&mut sim, win).unwrap();
+    }
+    pump_to_quiescence(&mut sim, &mut daemons);
+
+    let n = bursts * per_burst;
+    assert_eq!(daemons[0].stats.window_flushes, bursts);
+    assert_eq!(daemons[0].stats.writes_coalesced, bursts * (per_burst - 1));
+    assert_eq!(daemons[0].stats.ops_completed, n, "every WRITE resolves exactly once");
+    assert!(sim.node(NodeId(0)).retransmits > 0, "the flap must force retransmissions");
+    // the group fan-out carries each user tag exactly once, ok or not
+    let mut seen = std::collections::HashSet::new();
+    while let Some(d) = daemons[0].recv_zero_copy(&mut sim, c_app) {
+        let Delivery::OpComplete { tag, .. } = d else { panic!("{d:?}") };
+        assert!(seen.insert(tag), "tag {tag} completed twice");
+    }
+    assert_eq!(seen.len() as u64, n, "one completion per coalesced WRITE");
+    daemons[0].release_window(&mut sim, win).unwrap();
+    assert_eq!(daemons[0].pool.leased_bytes, 0);
+}
+
+#[test]
+fn client_restart_reclaims_abandoned_windows() {
+    // the client restarts 5 µs in, stranding a registered window and its
+    // in-flight one-sided ops. The stale-lease sweep fails the in-flight
+    // ops (no lease released — the window owns it), then the idle-window
+    // sweep reclaims the slot and the standing lease, and the dead token
+    // is refused cleanly ever after
+    let mut client_cfg = DaemonConfig::default();
+    client_cfg.lease_timeout_ns = 200_000;
+    let (mut sim, mut daemons) = lossy_cluster(
+        FaultConfig { seed: 37, restarts: vec![(0, 5_000)], ..FaultConfig::default() },
+        client_cfg,
+        DaemonConfig::default(),
+    );
+    let c_app = daemons[0].register_app();
+    let s_app = daemons[1].register_app();
+    daemons[1].listen(s_app, 1);
+    let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+
+    let win = daemons[0].register_window(&mut sim, conn, 0, 1 << 20, 16 << 10).unwrap();
+    assert_eq!(daemons[0].window_count(), 1);
+    // in-flight READs plus a flushed WRITE group — all killed by the restart
+    for i in 0..16u64 {
+        daemons[0]
+            .window_read(&mut sim, win, 16 << 10, i * (16 << 10), i)
+            .unwrap();
+    }
+    for j in 0..4u64 {
+        daemons[0].window_write(&mut sim, win, 4096, j * 4096, 100 + j).unwrap();
+    }
+    daemons[0].window_flush(&mut sim, win).unwrap();
+    daemons[0].pump(&mut sim);
+    pump_to_quiescence(&mut sim, &mut daemons);
+    // advance virtual time past lease + window deadlines, then sweep
+    sim.schedule(Ns(1_000_000), 1);
+    while sim.step().is_some() {}
+    daemons[0].pump(&mut sim);
+
+    assert_eq!(sim.node(NodeId(0)).restarts, 1);
+    assert_eq!(daemons[0].window_count(), 0, "the abandoned window is swept");
+    assert!(daemons[0].stats.windows_reclaimed > 0, "{:?}", daemons[0].stats);
+    assert_eq!(daemons[0].pool.leased_bytes, 0, "standing lease back in the pool");
+    // window-op failures do NOT masquerade as pool-lease reclaims
+    assert!(daemons[0].stats.ops_failed > 0, "stranded window ops surface as failures");
+    // the dead token is refused, not misrouted to a recycled slot
+    assert_eq!(
+        daemons[0].window_read(&mut sim, win, 4096, 0, 0),
+        Err(RaasError::StaleWindow)
+    );
+    assert_eq!(
+        daemons[0].window_write(&mut sim, win, 4096, 0, 0),
+        Err(RaasError::StaleWindow)
+    );
+    assert_eq!(daemons[0].window_flush(&mut sim, win), Err(RaasError::StaleWindow));
+    // every stranded op surfaced to the app as a failed completion
+    let mut failed = 0u64;
+    while let Some(d) = daemons[0].recv_zero_copy(&mut sim, c_app) {
+        if matches!(d, Delivery::OpComplete { ok: false, .. }) {
+            failed += 1;
+        }
+    }
+    assert_eq!(failed, daemons[0].stats.ops_failed, "failure deliveries match the ledger");
+}
+
 #[test]
 fn server_restart_recovers_and_client_completes_everything() {
     // server soft-restarts mid-run; its daemon refills the SRQ on later

@@ -6,8 +6,8 @@ use rdmavisor::fabric::fault::FaultConfig;
 use rdmavisor::fabric::sim::{FabricConfig, Sim};
 use rdmavisor::fabric::time::Ns;
 use rdmavisor::fabric::types::{NodeId, QpTransport, Verb, WcStatus};
-use rdmavisor::raas::api::Flags;
-use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery};
+use rdmavisor::raas::api::{Flags, RaasError};
+use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery, WindowToken};
 use rdmavisor::raas::migrate::{decide, DestState, MigrationConfig, Reassembler};
 use rdmavisor::raas::opslab::{unpack_op_slot, untracked_wr_id, OpSlab};
 use rdmavisor::raas::shmem::SpscRing;
@@ -351,6 +351,163 @@ fn prop_daemon_batching_conserves_ops() {
         }
         if daemons[0].pool.leased_bytes != 0 {
             return Err(format!("leaked leases: {} bytes", daemons[0].pool.leased_bytes));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_window_lease_accounting_balances() {
+    // ∀ random interleavings of register / window READ / window WRITE /
+    // flush / release / plain READ:
+    //  - registering a window takes EXACTLY one standing lease (no
+    //    double-lease, ever);
+    //  - repeat READs/WRITEs through a live window never move the pool's
+    //    lease ledger at submit time (the tentpole claim: per-op lease
+    //    machinery is bypassed);
+    //  - a released token always fails with StaleWindow, even after its
+    //    slot is recycled by a later register;
+    //  - after quiescing and releasing everything, the pool balance is
+    //    exactly zero and every accepted op produced exactly one
+    //    completion delivery.
+    let gen = VecGen { elem: U64Range(0, 999), min_len: 1, max_len: 120 };
+    check(61, 20, &gen, |script: &Vec<u64>| {
+        let mut fcfg = FabricConfig::default();
+        fcfg.nodes = 2;
+        fcfg.sq_depth = 4096;
+        let mut sim = Sim::new(fcfg);
+        let mut daemons = vec![
+            Daemon::start(&mut sim, NodeId(0), DaemonConfig::default()),
+            Daemon::start(&mut sim, NodeId(1), DaemonConfig::default()),
+        ];
+        let sapp = daemons[1].register_app();
+        daemons[1].listen(sapp, 1);
+        let app = daemons[0].register_app();
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+
+        const SPAN: u64 = 64 << 10;
+        let mut live: Vec<WindowToken> = Vec::new();
+        let mut dead: Vec<WindowToken> = Vec::new();
+        let mut accepted = 0u64; // ops that returned Ok (≡ owed completions)
+        for (i, &op) in script.iter().enumerate() {
+            let pick = |v: &Vec<WindowToken>| v[(op as usize + i) % v.len()];
+            match op % 100 {
+                0..=14 => {
+                    if live.len() < 6 {
+                        let before = daemons[0].pool.leased_bytes;
+                        let w = daemons[0]
+                            .register_window(&mut sim, conn, (op % 16) * SPAN, SPAN, 4096)
+                            .map_err(|e| format!("register: {e}"))?;
+                        let took = daemons[0].pool.leased_bytes - before;
+                        if took != 4096 {
+                            return Err(format!("register leased {took} bytes, want 4096"));
+                        }
+                        live.push(w);
+                    }
+                }
+                15..=54 if !live.is_empty() => {
+                    let len = 1 + op % 4096;
+                    let off = (op * 37) % (SPAN - len + 1);
+                    let before = daemons[0].pool.leased_bytes;
+                    if daemons[0].window_read(&mut sim, pick(&live), len, off, op).is_ok() {
+                        accepted += 1;
+                    }
+                    if daemons[0].pool.leased_bytes != before {
+                        return Err("window READ moved the lease ledger at submit".into());
+                    }
+                }
+                55..=79 if !live.is_empty() => {
+                    let len = 1 + op % 4096;
+                    let off = (op * 53) % (SPAN - len + 1);
+                    let before = daemons[0].pool.leased_bytes;
+                    if daemons[0].window_write(&mut sim, pick(&live), len, off, op).is_ok() {
+                        accepted += 1;
+                    }
+                    if daemons[0].pool.leased_bytes != before {
+                        return Err("window WRITE moved the lease ledger at submit".into());
+                    }
+                }
+                80..=84 if !live.is_empty() => {
+                    daemons[0]
+                        .window_flush(&mut sim, pick(&live))
+                        .map_err(|e| format!("flush: {e}"))?;
+                }
+                85..=92 if !live.is_empty() => {
+                    let idx = (op as usize + i) % live.len();
+                    let w = live.swap_remove(idx);
+                    daemons[0]
+                        .release_window(&mut sim, w)
+                        .map_err(|e| format!("release: {e}"))?;
+                    dead.push(w);
+                }
+                93..=96 => {
+                    // plain READ: per-op lease machinery, interleaved with
+                    // the window path to catch cross-path double accounting
+                    if daemons[0].read(&mut sim, conn, 4096, (op * 4096) % (1 << 20), op).is_ok()
+                    {
+                        accepted += 1;
+                    }
+                }
+                _ => {
+                    // every dead token must be refused — released slots,
+                    // recycled slots, all of them
+                    if let Some(&w) = dead.last() {
+                        let r = daemons[0].window_read(&mut sim, w, 64, 0, 0);
+                        let wr = daemons[0].window_write(&mut sim, w, 64, 0, 0);
+                        let f = daemons[0].window_flush(&mut sim, w);
+                        if r != Err(RaasError::StaleWindow)
+                            || wr != Err(RaasError::StaleWindow)
+                            || f != Err(RaasError::StaleWindow)
+                        {
+                            return Err(format!("stale token accepted: {r:?} {wr:?} {f:?}"));
+                        }
+                    }
+                }
+            }
+        }
+        let live_count = live.len();
+        for w in live.drain(..) {
+            daemons[0]
+                .release_window(&mut sim, w)
+                .map_err(|e| format!("final release: {e}"))?;
+        }
+        if daemons[0].window_count() != 0 {
+            return Err(format!("{} windows survived release", daemons[0].window_count()));
+        }
+        if daemons[0].stats.windows_registered != daemons[0].stats.windows_released {
+            return Err(format!(
+                "register/release imbalance: {} vs {} (live was {live_count})",
+                daemons[0].stats.windows_registered, daemons[0].stats.windows_released
+            ));
+        }
+        for _ in 0..3_000_000 {
+            for d in daemons.iter_mut() {
+                d.pump(&mut sim);
+            }
+            if sim.step().is_none() {
+                for d in daemons.iter_mut() {
+                    d.pump(&mut sim);
+                }
+                if sim.pending_events() == 0 {
+                    break;
+                }
+            }
+        }
+        if daemons[0].pool.leased_bytes != 0 {
+            return Err(format!(
+                "pool balance nonzero after quiesce: {} bytes leased",
+                daemons[0].pool.leased_bytes
+            ));
+        }
+        let mut delivered = 0u64;
+        while let Some(d) = daemons[0].recv_zero_copy(&mut sim, app) {
+            match d {
+                Delivery::OpComplete { .. } => delivered += 1,
+                Delivery::Message { .. } => return Err("unexpected two-sided message".into()),
+            }
+        }
+        if delivered != accepted {
+            return Err(format!("{delivered} completions for {accepted} accepted ops"));
         }
         Ok(())
     });

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Produce BENCH_PR6.json: the fig-11 KV-tier wall-clock benchmark —
+# app-level ops/sec of the one-sided READ/WRITE data plane against the
+# SEND-RPC baseline at each client count, plus per-point p99 latencies,
+# server CPU and doorbell-coalescing counters. CI runs this with --quick
+# and uploads the JSON plus the rendered markdown (scripts/perf_table.py
+# takes any number of BENCH_*.json inputs); run it with no arguments on
+# a quiet machine for the full-sweep numbers quoted in README.md.
+# Measurement stays at --jobs 1 (the serial runner) so the per-point
+# wall clocks are uncontended.
+#
+#   scripts/bench_pr6.sh [--quick] [OUT.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+quick=""
+out="BENCH_PR6.json"
+for arg in "$@"; do
+    case "$arg" in
+        --quick) quick="--quick" ;;
+        *) out="$arg" ;;
+    esac
+done
+
+cargo build --release
+cargo run --quiet --release -- bench kv $quick --out "$out" >/dev/null
+
+echo "wrote $out"

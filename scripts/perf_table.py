@@ -1,9 +1,9 @@
 #!/usr/bin/env python3
 """Render one or more BENCH_*.json artifacts (from `rdmavisor bench
-fig9` / bench_pr3.sh / bench_pr5.sh) as the markdown perf tables
-README.md quotes. Stdlib only.
+fig9` / `rdmavisor bench kv` / bench_pr3.sh / bench_pr5.sh /
+bench_pr6.sh) as the markdown perf tables README.md quotes. Stdlib only.
 
-    python3 scripts/perf_table.py BENCH_PR3.json BENCH_PR5.json > BENCH_PR5.md
+    python3 scripts/perf_table.py BENCH_PR5.json BENCH_PR6.json > BENCH_PR6.md
 
 Each input gets its own section (headed by the file name), so one
 markdown artifact can carry the whole recorded perf trajectory. CI runs
@@ -14,23 +14,52 @@ import json
 import sys
 
 
-def render(path: str) -> bool:
-    try:
-        with open(path, encoding="utf-8") as f:
-            doc = json.load(f)
-    except (OSError, ValueError) as e:
-        print(f"error: cannot read {path}: {e}", file=sys.stderr)
-        return False
-
+def render_kv(doc: dict) -> None:
+    """The `bench kv` artifact: fig-11 app-level KV throughput."""
     budget = doc.get("budget", "?")
     jobs = doc.get("jobs")
-    points = doc.get("points", [])
-    print(f"## {path}\n")
+    suffix = f", jobs: {jobs:.0f}" if jobs is not None else ""
+    print(f"### Fig-11 KV tier: one-sided vs SEND-RPC (budget: {budget}{suffix})\n")
+    print(
+        "| clients | servers | wall ms | 1-sided Mops | RPC Mops "
+        "| 1-sided p99 µs | RPC p99 µs | 1-sided srv CPU | RPC srv CPU "
+        "| writes coalesced |"
+    )
+    print("|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|")
+    for p in doc.get("points", []):
+        print(
+            "| {clients:.0f} | {servers:.0f} | {wall_ms:.1f} | {om:.3f} | {rm:.3f} "
+            "| {op99:.1f} | {rp99:.1f} | {ocpu:.2f} | {rcpu:.2f} | {wc:.0f} |".format(
+                clients=p.get("clients", 0),
+                servers=p.get("servers", 0),
+                wall_ms=p.get("wall_ms", 0),
+                om=p.get("onesided_mops", 0) or 0,
+                rm=p.get("rpc_mops", 0) or 0,
+                op99=p.get("onesided_p99_us", 0) or 0,
+                rp99=p.get("rpc_p99_us", 0) or 0,
+                ocpu=p.get("onesided_server_cpu", 0) or 0,
+                rcpu=p.get("rpc_server_cpu", 0) or 0,
+                wc=p.get("writes_coalesced", 0) or 0,
+            )
+        )
+    total_ops = doc.get("total_ops", 0)
+    total_wall = doc.get("total_wall_ms", 0)
+    ops_s = doc.get("ops_per_sec", 0) or 0
+    print(
+        f"\nTotal: {total_ops:.0f} app-level KV ops in {total_wall:.0f} ms "
+        f"({ops_s:.0f} sim-ops/sec of host wall clock)."
+    )
+
+
+def render_fig9(doc: dict) -> None:
+    """The `bench fig9` artifact (PR-3/PR-5 trajectory)."""
+    budget = doc.get("budget", "?")
+    jobs = doc.get("jobs")
     suffix = f", jobs: {jobs:.0f}" if jobs is not None else ""
     print(f"### Fig-9 wall clock per connection count (budget: {budget}{suffix})\n")
     print("| conns | servers | wall ms | events | events/sec | adaptive Gb/s | rc-only Gb/s |")
     print("|---:|---:|---:|---:|---:|---:|---:|")
-    for p in points:
+    for p in doc.get("points", []):
         print(
             "| {conns:.0f} | {servers:.0f} | {wall_ms:.1f} | {events:.0f} "
             "| {eps:.0f} | {ag:.2f} | {rg:.2f} |".format(
@@ -82,11 +111,26 @@ def render(path: str) -> bool:
                 eps=ss.get("events_per_sec", 0) or 0,
             )
         )
+
+
+def render(path: str) -> bool:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        return False
+
+    print(f"## {path}\n")
+    if doc.get("mode") == "kv":
+        render_kv(doc)
+    else:
+        render_fig9(doc)
     return True
 
 
 def main() -> int:
-    paths = sys.argv[1:] if len(sys.argv) > 1 else ["BENCH_PR5.json"]
+    paths = sys.argv[1:] if len(sys.argv) > 1 else ["BENCH_PR5.json", "BENCH_PR6.json"]
     ok = True
     for i, path in enumerate(paths):
         if i:

@@ -107,6 +107,27 @@ case "$out10" in
     *) echo "FAIL: unexpected fig 10 output: ${out10:0:120}" >&2; exit 1 ;;
 esac
 
+echo "== smoke: fig 11 (one-sided KV tier vs SEND-RPC) =="
+out11="$(cargo run --quiet --release -- fig --id 11 --quick 2>/dev/null)"
+case "$out11" in
+    '{"budget"'*|'{'*'"command":"fig"'*)
+        case "$out11" in
+            *'"fig11_kv"'*) echo "ok: fig --id 11 printed the fig11_kv series" ;;
+            *) echo "FAIL: fig 11 JSON lacks the fig11_kv series: ${out11:0:160}" >&2; exit 1 ;;
+        esac ;;
+    *) echo "FAIL: unexpected fig 11 output: ${out11:0:120}" >&2; exit 1 ;;
+esac
+
+echo "== smoke: bench kv (app-level KV throughput -> JSON) =="
+# --out to a temp file so the smoke never clobbers a tracked BENCH_PR6.json
+kv_tmp="$(mktemp)"
+outkv="$(cargo run --quiet --release -- bench kv --quick --out "$kv_tmp" 2>/dev/null)"
+rm -f "$kv_tmp"
+case "$outkv" in
+    *'"mode":"kv"'*'"ops_per_sec"'*) echo "ok: bench kv printed ops/sec JSON" ;;
+    *) echo "FAIL: unexpected bench kv output: ${outkv:0:120}" >&2; exit 1 ;;
+esac
+
 echo "== smoke: bench simstep (DES scheduler throughput) =="
 outs="$(cargo run --quiet --release -- bench simstep --quick 2>/dev/null)"
 case "$outs" in
