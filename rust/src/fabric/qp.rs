@@ -110,6 +110,11 @@ pub struct Qp {
     pub posted_recv: u64,
     /// Lifetime send-side completions.
     pub completed: u64,
+    /// Torn down via [`crate::fabric::sim::Sim::destroy_qp`]. The dense
+    /// table never reuses the slot (ids stay stable), but a destroyed QP
+    /// accounts zero memory, rejects posts, and the engine/fabric drop
+    /// anything addressed to it.
+    pub destroyed: bool,
 }
 
 impl Qp {
@@ -143,6 +148,7 @@ impl Qp {
             posted_send: 0,
             posted_recv: 0,
             completed: 0,
+            destroyed: false,
         }
     }
 
@@ -226,8 +232,26 @@ impl Qp {
         self.issue_armed = false;
     }
 
+    /// Tear the QP down: rings freed, context deallocated, peer binding
+    /// severed. The slot stays in the dense table (ids are stable) but
+    /// every later touch — posts, frame delivery, memory accounting —
+    /// treats it as gone.
+    pub fn destroy(&mut self) {
+        self.destroyed = true;
+        self.state = QpState::Error;
+        self.peer = None;
+        self.sq.clear();
+        self.rq.clear();
+        self.outstanding = 0;
+        self.issue_armed = false;
+    }
+
     /// Memory footprint of the QP (ledger): SQ+RQ rings + on-NIC context.
+    /// Destroyed QPs have released their rings and QPC — zero bytes.
     pub fn mem_bytes(&self) -> u64 {
+        if self.destroyed {
+            return 0;
+        }
         self.sq_depth as u64 * SEND_WQE_BYTES
             + self.rq_depth as u64 * RECV_WQE_BYTES
             + QP_CONTEXT_BYTES

@@ -212,6 +212,9 @@ pub struct NodeState {
     /// path — the smooth wire-level goodput counter the scenario drivers
     /// measure (message-completion counters clump and bias short windows).
     pub rx_data_bytes: u64,
+    /// Frames that arrived addressed to a destroyed QP and died at the
+    /// NIC (tenant-isolation counter for the QP reuse pool).
+    pub frames_to_destroyed: u64,
 }
 
 impl NodeState {
@@ -241,6 +244,7 @@ impl NodeState {
             gbn_dup_acks: 0,
             restarts: 0,
             rx_data_bytes: 0,
+            frames_to_destroyed: 0,
         }
     }
 
@@ -404,6 +408,17 @@ impl Sim {
     pub fn set_sq_depth(&mut self, node: NodeId, qpn: Qpn, depth: usize) {
         let n = self.node_mut(node);
         n.qps.get_mut(qpn.0).expect("no such qp").sq_depth = depth;
+    }
+
+    /// Destroy a QP: rings and on-NIC context are freed (its
+    /// [`NodeState::fabric_mem_bytes`] contribution drops to zero) and any
+    /// frame still in flight toward it dies at the destination NIC. The
+    /// dense id table keeps the slot so QPNs stay stable; callers are
+    /// expected to destroy only quiesced QPs (no outstanding messages) —
+    /// the RaaS control plane drains before it parks or evicts.
+    pub fn destroy_qp(&mut self, node: NodeId, qpn: Qpn) {
+        let n = self.node_mut(node);
+        n.qps.get_mut(qpn.0).expect("no such qp").destroy();
     }
 
     /// Register a memory region on `node`.
@@ -1077,6 +1092,15 @@ impl Sim {
         let mut cost = nic.engine_frame_ns;
         // every frame needs the QP context — THE Fig 5 mechanism.
         cost += self.icm_touch(node, IcmKey::Qpc(frame.dst_qpn.0));
+
+        // a frame addressed to a destroyed QP (torn down by the control
+        // plane while stragglers were still in flight) dies at the NIC:
+        // no delivery, no ACK, no CQE — a prior tenant's late traffic can
+        // never surface once its QP is gone
+        if self.node(node).qps.get(frame.dst_qpn.0).map(|q| q.destroyed).unwrap_or(false) {
+            self.node_mut(node).frames_to_destroyed += 1;
+            return cost;
+        }
 
         match frame.kind {
             FrameKind::ReadReq => {

@@ -21,9 +21,9 @@ use crate::fabric::verbs::capability_matrix;
 use crate::metrics::Series;
 use crate::util::parallel;
 use crate::workload::scenarios::{
-    chaos_send, kv_storm, locked_random_read, naive_random_read, raas_random_read, scale_send,
-    verbs_sweep_point, ChaosCfg, ChaosRun, KvCfg, KvRun, RunStats, ScaleCfg, ScaleRun,
-    ScenarioCfg,
+    chaos_send, churn_storm, kv_storm, locked_random_read, naive_random_read, raas_random_read,
+    scale_send, verbs_sweep_point, ChaosCfg, ChaosRun, ChurnCfg, ChurnRun, KvCfg, KvRun,
+    RunStats, ScaleCfg, ScaleRun, ScenarioCfg,
 };
 
 /// Message sizes swept in Fig 1 (64 B … 1 MB).
@@ -851,6 +851,170 @@ pub fn fig11_series(rows: &[Fig11Row]) -> Series {
     s
 }
 
+// ------------------------------------------------------------------ Fig 12
+
+/// Tenant-arrival counts swept in the fig-12 churn experiment — toward
+/// the paper's 10^6-connection datacenter regime.
+pub const FIG12_CONNS: &[usize] = &[10_000, 100_000, 1_000_000];
+
+/// The fig-12 arrival counts for a budget (shared with `bench churn`).
+pub fn fig12_conns(budget: Budget) -> Vec<usize> {
+    match budget {
+        Budget::Quick => vec![1_000, 5_000, 20_000],
+        Budget::Full => FIG12_CONNS.to_vec(),
+    }
+}
+
+/// The fig-12 [`ChurnCfg`] for one sweep point (shared with `bench
+/// churn` so BENCH_PR7.json times exactly the runs the figure makes).
+pub fn fig12_cfg(conns: usize, cold: bool) -> ChurnCfg {
+    let mut cfg = ChurnCfg::default();
+    cfg.conns = conns;
+    cfg.cold = cold;
+    cfg
+}
+
+/// One fig-12 sweep point: the elastic control plane (QP reuse pool +
+/// lazy batched leases) vs the `--cold` ablation on the same seeded
+/// arrival tape.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig12Row {
+    /// Tenant arrivals of this sweep point.
+    pub conns: usize,
+    /// Warm mode: pool + lazy leases (None in the `--cold` ablation).
+    pub warm: Option<ChurnRun>,
+    /// Cold mode: no pool, eager leases.
+    pub cold: ChurnRun,
+}
+
+/// Fig 12: connection-setup rate, first-byte tail latency and
+/// per-registered-vQPN memory vs tenant arrivals. Each (conns, mode)
+/// pair is an independent `Sim` work item, interleaved so `--jobs N`
+/// merges byte-identically with the serial runner.
+pub fn fig12(budget: Budget, jobs: usize) -> Vec<Fig12Row> {
+    let conns = fig12_conns(budget);
+    let mut items = Vec::with_capacity(conns.len() * 2);
+    for &c in &conns {
+        items.push((c, false));
+        items.push((c, true));
+    }
+    let runs = parallel::map_indexed(items, jobs, |_, (c, cold)| churn_storm(&fig12_cfg(c, cold)));
+    conns
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| Fig12Row { conns: c, warm: Some(runs[2 * i]), cold: runs[2 * i + 1] })
+        .collect()
+}
+
+/// The `--cold` ablation alone: every reconnect full-handshakes and all
+/// leases establish eagerly at connect (warm columns omitted).
+pub fn fig12_cold_only(budget: Budget, jobs: usize) -> Vec<Fig12Row> {
+    let conns = fig12_conns(budget);
+    let runs =
+        parallel::map_indexed(conns.clone(), jobs, |_, c| churn_storm(&fig12_cfg(c, true)));
+    conns
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| Fig12Row { conns: c, warm: None, cold: runs[i] })
+        .collect()
+}
+
+/// Render the Fig-12 table.
+pub fn print_fig12(rows: &[Fig12Row]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Fig 12: tenant churn — setup rate, first-byte p99 and idle-vQPN memory, warm vs cold\n",
+    );
+    out.push_str(&format!(
+        "{:>9} {:>10} {:>10} {:>9} {:>9} {:>9} {:>9} {:>8} {:>8}\n",
+        "conns", "warm kcps", "cold kcps", "warm p99", "cold p99", "B/vqpn", "cold B/v", "reused",
+        "handshk"
+    ));
+    for r in rows {
+        let (wk, wp, wm, wr, wh) = match &r.warm {
+            Some(w) => (
+                format!("{:.1}", w.setup_kcps),
+                format!("{:.1}", w.p99_ttfb_us),
+                format!("{:.0}", w.mem_per_vqpn),
+                format!("{}", w.qp_reused),
+                format!("{}", w.handshakes_full),
+            ),
+            None => ("-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        out.push_str(&format!(
+            "{:>9} {:>10} {:>10.1} {:>9} {:>9.1} {:>9} {:>9.0} {:>8} {:>8}\n",
+            r.conns,
+            wk,
+            r.cold.setup_kcps,
+            wp,
+            r.cold.p99_ttfb_us,
+            wm,
+            r.cold.mem_per_vqpn,
+            wr,
+            wh
+        ));
+    }
+    out
+}
+
+/// The Fig-12 [`Series`] (shared by the CLI and the determinism tests).
+pub fn fig12_series(rows: &[Fig12Row]) -> Series {
+    let mut s = Series::new(
+        "fig12_churn",
+        "conns",
+        &[
+            "warm_setup_kcps",
+            "cold_setup_kcps",
+            "warm_p50_ttfb_us",
+            "cold_p50_ttfb_us",
+            "warm_p99_ttfb_us",
+            "cold_p99_ttfb_us",
+            "warm_mem_per_vqpn",
+            "cold_mem_per_vqpn",
+            "warm_table_bytes_per_vqpn",
+            "cold_table_bytes_per_vqpn",
+            "warm_handshakes_full",
+            "cold_handshakes_full",
+            "qp_reused",
+            "qp_parked",
+            "qp_evicted",
+            "lease_batches",
+            "leases_established",
+            "deferred_leases",
+            "stale_epoch_drops",
+        ],
+    );
+    for r in rows {
+        let w = r.warm;
+        let p = |f: fn(&ChurnRun) -> f64| w.as_ref().map(f).unwrap_or(f64::NAN);
+        s.push(
+            r.conns as f64,
+            vec![
+                p(|x| x.setup_kcps),
+                r.cold.setup_kcps,
+                p(|x| x.p50_ttfb_us),
+                r.cold.p50_ttfb_us,
+                p(|x| x.p99_ttfb_us),
+                r.cold.p99_ttfb_us,
+                p(|x| x.mem_per_vqpn),
+                r.cold.mem_per_vqpn,
+                p(|x| x.table_bytes_per_vqpn),
+                r.cold.table_bytes_per_vqpn,
+                p(|x| x.handshakes_full as f64),
+                r.cold.handshakes_full as f64,
+                p(|x| x.qp_reused as f64),
+                p(|x| x.qp_parked as f64),
+                p(|x| x.qp_evicted as f64),
+                p(|x| x.lease_batches as f64),
+                p(|x| x.leases_established as f64),
+                p(|x| x.deferred_leases as f64),
+                p(|x| x.stale_epoch_drops as f64),
+            ],
+        );
+    }
+    s
+}
+
 // --------------------------------------------------------- figure runner
 
 /// Run one figure id end-to-end; returns its [`Series`] plus the rendered
@@ -940,6 +1104,11 @@ pub fn run_fig(
             let rows = fig11(b, jobs);
             let table = print_fig11(&rows);
             Some((fig11_series(&rows), table))
+        }
+        12 => {
+            let rows = fig12(b, jobs);
+            let table = print_fig12(&rows);
+            Some((fig12_series(&rows), table))
         }
         _ => None,
     }

@@ -2,14 +2,15 @@
 //!
 //! One binary drives the whole reproduction. Subcommands:
 //!
-//! * `fig --id {1,5,6,7,8,9,10,11}` — regenerate a paper figure (9 = the
-//!   RC↔UD-migration scale extension, 10 = the fault-injection chaos
-//!   sweep, 11 = the one-sided KV tier) and print the series as JSON on
-//!   stdout (human-readable table on stderr). `--all` runs every figure;
-//!   `--quick` shrinks the sweeps; `--rc-only` restricts figures 9/10/11
-//!   to the ablation; `--jobs N` runs the independent sweep points on N
-//!   threads (0 = all cores) with byte-identical output; `--tsv DIR`
-//!   also writes TSVs.
+//! * `fig --id {1,5,6,7,8,9,10,11,12}` — regenerate a paper figure (9 =
+//!   the RC↔UD-migration scale extension, 10 = the fault-injection chaos
+//!   sweep, 11 = the one-sided KV tier, 12 = the tenant-churn setup-rate
+//!   sweep) and print the series as JSON on stdout (human-readable table
+//!   on stderr). `--all` runs every figure; `--quick` shrinks the
+//!   sweeps; `--rc-only` restricts figures 9/10/11 to the ablation;
+//!   `--cold` restricts figure 12 to the no-pool/eager-lease ablation;
+//!   `--jobs N` runs the independent sweep points on N threads (0 = all
+//!   cores) with byte-identical output; `--tsv DIR` also writes TSVs.
 //! * `bench hotpath` — the hot-path microbenchmarks (SPSC ring, doorbell,
 //!   ICM cache, daemon submit) with JSON results.
 //! * `bench simstep` — raw discrete-event-scheduler throughput
@@ -23,6 +24,10 @@
 //! * `bench kv [--out FILE] [--jobs N]` — wall-clock of the fig-11 KV
 //!   sweep per client count (one-sided vs SEND-RPC), written as
 //!   `BENCH_PR6.json` (the CI perf artifact for the window data plane).
+//! * `bench churn [--out FILE] [--jobs N]` — wall-clock of the fig-12
+//!   churn sweep per arrival count (warm vs cold), written as
+//!   `BENCH_PR7.json` (the CI perf artifact for the elastic control
+//!   plane).
 //! * `bench` — one scenario run with explicit knobs (`--system
 //!   raas|naive|locked`, `--conns`, `--size`, …), JSON result on stdout.
 //! * `demo {kv,rpc,inference}` — the example applications end-to-end over
@@ -68,15 +73,16 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: rdmavisor <fig|figures|bench|demo|serve|init-config|info> [--help]\n\
-                 \n  fig --id 1|5|6|7|8|9|10|11 [--all] [--quick] [--rc-only] [--jobs N] [--tsv DIR]   (JSON on stdout)\
+                 \n  fig --id 1|5|6|7|8|9|10|11|12 [--all] [--quick] [--rc-only] [--cold] [--jobs N] [--tsv DIR]   (JSON on stdout)\
                  \n  bench hotpath|simstep|pump [--quick]               (JSON on stdout)\
                  \n  bench fig9 [--quick] [--jobs N] [--out FILE]    (fig-9 wall clock -> BENCH_PR5.json)\
                  \n  bench kv [--quick] [--jobs N] [--out FILE]      (fig-11 wall clock -> BENCH_PR6.json)\
+                 \n  bench churn [--quick] [--jobs N] [--out FILE]   (fig-12 wall clock -> BENCH_PR7.json)\
                  \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
                  [--window N] [--duration-ms MS] [--q N] [--config FILE]\
                  \n  demo kv|rpc|inference [--gets N] [--calls N] [--requests N]\
                  \n  figures --all | --table1 --fig1 --fig5 --fig6 --fig7 --fig8 --fig9 \
-                 --fig10 --fig11 --send-staging --batching [--quick] [--tsv DIR]\
+                 --fig10 --fig11 --fig12 --send-staging --batching [--quick] [--tsv DIR]\
                  \n  serve [--clients N] [--requests N] [--artifacts DIR]\
                  \n  init-config [--out FILE]"
             );
@@ -129,7 +135,7 @@ fn fig_cmd(args: &Args) {
     let b = budget(args);
     let jobs = jobs(args);
     let mut ids: Vec<u64> = if args.flag("all") {
-        vec![1, 5, 6, 7, 8, 9, 10, 11]
+        vec![1, 5, 6, 7, 8, 9, 10, 11, 12]
     } else {
         args.u64_list("id", &[])
     };
@@ -144,8 +150,8 @@ fn fig_cmd(args: &Args) {
     ids.retain(|id| seen.insert(*id));
     if ids.is_empty() {
         eprintln!(
-            "usage: rdmavisor fig --id 1|5|6|7|8|9|10|11 [--all] [--quick] [--rc-only] \
-             [--jobs N] [--tsv DIR]"
+            "usage: rdmavisor fig --id 1|5|6|7|8|9|10|11|12 [--all] [--quick] [--rc-only] \
+             [--cold] [--jobs N] [--tsv DIR]"
         );
         std::process::exit(2);
     }
@@ -165,11 +171,14 @@ fn fig_cmd(args: &Args) {
         } else if id == 11 && args.flag("rc-only") {
             let rows = figures::fig11_rpc_only(b, jobs);
             (figures::fig11_series(&rows), figures::print_fig11(&rows))
+        } else if id == 12 && args.flag("cold") {
+            let rows = figures::fig12_cold_only(b, jobs);
+            (figures::fig12_series(&rows), figures::print_fig12(&rows))
         } else {
             match figures::run_fig(id, b, &mut fig78_cache, jobs) {
                 Some(r) => r,
                 None => {
-                    eprintln!("unknown figure id {id}: expected 1, 5, 6, 7, 8, 9, 10 or 11");
+                    eprintln!("unknown figure id {id}: expected 1, 5, 6, 7, 8, 9, 10, 11 or 12");
                     std::process::exit(2);
                 }
             }
@@ -222,6 +231,7 @@ fn figures_cmd(args: &Args) {
         ("fig9", 9),
         ("fig10", 10),
         ("fig11", 11),
+        ("fig12", 12),
     ] {
         if all || args.flag(flag) {
             let (s, table) =
@@ -255,6 +265,7 @@ fn bench_cmd(args: &Args) {
         Some("pump") => return bench_pump(args),
         Some("fig9") => return bench_fig9(args),
         Some("kv") => return bench_kv(args),
+        Some("churn") => return bench_churn(args),
         _ => {}
     }
     let mut cfg = match args.get("config") {
@@ -638,6 +649,82 @@ fn bench_kv(args: &Args) {
         ("total_events", Json::Num(total_events as f64)),
         ("total_ops", Json::Num(total_ops as f64)),
         ("ops_per_sec", num(total_ops as f64 / total_wall.max(1e-9))),
+    ]);
+    let text = doc.to_string();
+    match std::fs::write(&out_path, &text) {
+        Ok(()) => eprintln!("wrote {out_path}"),
+        Err(e) => eprintln!("write {out_path} failed: {e}"),
+    }
+    println!("{text}");
+}
+
+/// `bench churn` — wall-clock of the fig-12 churn sweep per arrival
+/// count (warm + cold, exactly the runs `fig --id 12` makes). Writes the
+/// result to `--out` (default BENCH_PR7.json) so CI archives a perf
+/// trajectory for the elastic control plane. As with `bench fig9`,
+/// recorded trajectories should stay at the serial `--jobs` default.
+fn bench_churn(args: &Args) {
+    use rdmavisor::workload::scenarios::churn_storm;
+
+    let b = budget(args);
+    let j = jobs(args);
+    let out_path = args.str_or("out", "BENCH_PR7.json");
+    let t_all = Instant::now();
+    let measured = parallel::map_indexed(figures::fig12_conns(b), j, |_, conns| {
+        let t0 = Instant::now();
+        let warm = churn_storm(&figures::fig12_cfg(conns, false));
+        let cold = churn_storm(&figures::fig12_cfg(conns, true));
+        (conns, warm, cold, t0.elapsed().as_secs_f64())
+    });
+    let mut points = Vec::new();
+    let mut total_wall = 0.0f64;
+    let (mut total_conns, mut total_events) = (0u64, 0u64);
+    for (conns, warm, cold, wall) in measured {
+        total_wall += wall;
+        total_conns += 2 * conns as u64;
+        total_events += warm.events + cold.events;
+        eprintln!(
+            "churn conns={conns:>8}: warm {:.1} kcps vs cold {:.1} kcps, \
+             {:.0} B/vqpn  ({:>8.1} ms wall)",
+            warm.setup_kcps,
+            cold.setup_kcps,
+            warm.mem_per_vqpn,
+            wall * 1e3
+        );
+        points.push(obj(vec![
+            ("conns", Json::Num(conns as f64)),
+            ("hosts", Json::Num(warm.hosts as f64)),
+            ("servers", Json::Num(warm.servers as f64)),
+            ("wall_ms", num(wall * 1e3)),
+            ("events", Json::Num((warm.events + cold.events) as f64)),
+            ("warm_setup_kcps", num(warm.setup_kcps)),
+            ("cold_setup_kcps", num(cold.setup_kcps)),
+            ("warm_p99_ttfb_us", num(warm.p99_ttfb_us)),
+            ("cold_p99_ttfb_us", num(cold.p99_ttfb_us)),
+            ("warm_mem_per_vqpn", num(warm.mem_per_vqpn)),
+            ("cold_mem_per_vqpn", num(cold.mem_per_vqpn)),
+            ("qp_reused", Json::Num(warm.qp_reused as f64)),
+            ("handshakes_full", Json::Num(warm.handshakes_full as f64)),
+            ("lease_batches", Json::Num(warm.lease_batches as f64)),
+            ("live_vqpns", Json::Num(warm.live_vqpns as f64)),
+        ]));
+    }
+    // at --jobs 1 the sum of per-point walls IS the elapsed time; at
+    // jobs > 1 report the overlapped elapsed wall instead
+    if j > 1 {
+        total_wall = t_all.elapsed().as_secs_f64();
+    }
+    let budget_name = if b == Budget::Quick { "quick" } else { "full" };
+    let doc = obj(vec![
+        ("command", Json::Str("bench".into())),
+        ("mode", Json::Str("churn".into())),
+        ("budget", Json::Str(budget_name.to_string())),
+        ("jobs", Json::Num(j as f64)),
+        ("points", Json::Arr(points)),
+        ("total_wall_ms", num(total_wall * 1e3)),
+        ("total_events", Json::Num(total_events as f64)),
+        ("total_conns", Json::Num(total_conns as f64)),
+        ("conns_per_sec", num(total_conns as f64 / total_wall.max(1e-9))),
     ]);
     let text = doc.to_string();
     match std::fs::write(&out_path, &text) {

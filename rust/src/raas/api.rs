@@ -7,6 +7,7 @@
 //! int send(int fd, void* buf, int len, int FLAGS);
 //! int recv(int fd, void* buf, int len, int FLAGS);
 //! int recv_zero_copy(int fd, void** buf_addr, int len, int FLAGS);
+//! int disconnect(int fd);
 //! ```
 //!
 //! Normal users call `send`/`recv` and let RDMAvisor pick the RDMA
@@ -56,6 +57,10 @@
 //! // recv(fd, ...) on the server: the message arrived on its conn
 //! let delivery = daemons[1].recv(&mut sim, server_app).unwrap();
 //! assert!(matches!(delivery, Delivery::Message { len: 256, .. }));
+//!
+//! // disconnect(fd): the vQPN is quarantined and the shared RC QP is
+//! // parked for reuse by the next tenant targeting the same node (§12)
+//! rdmavisor::raas::daemon::disconnect_via(&mut sim, &mut daemons, 0, conn).unwrap();
 //! # let _ = server_conn;
 //! ```
 

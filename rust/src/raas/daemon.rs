@@ -104,6 +104,32 @@ pub struct DaemonConfig {
     /// scenarios, where a dropped LAST fragment would otherwise pin the
     /// partial until the next message on that vQPN.
     pub reassembly_timeout_ns: u64,
+    /// Parked-QP reuse pool bound (PR 7 tentpole): when the last vQPN to
+    /// a remote closes and the shared RC QP drains, the QP is parked
+    /// instead of destroyed; the next connect to the same remote revives
+    /// it for `qp_reuse_ns` instead of a full `handshake_ns`. 0 disables
+    /// parking (the fig-12 `--cold` ablation) — drained QPs are
+    /// destroyed immediately.
+    pub qp_pool_max: usize,
+    /// Defer the pool-credential/lease exchange from connect to first
+    /// use: `connect` returns after vQPN registration alone, so an idle
+    /// tenant costs only its connection-table entry. Deferred remotes are
+    /// established in batches of up to `lease_batch_max` per control
+    /// message. Off by default (eager, the pre-PR-7 behavior).
+    pub lazy_leases: bool,
+    /// Max deferred lease establishments coalesced into one control
+    /// message (the RDMAbox request-merging argument applied to
+    /// control-plane verbs).
+    pub lease_batch_max: usize,
+    /// Control-plane cost of a full RC handshake: QP-pair create,
+    /// INIT→RTR→RTS transitions, and the QPN exchange round-trip.
+    pub handshake_ns: u64,
+    /// Control-plane cost of reviving a parked QP pair — bookkeeping and
+    /// an epoch bump, no wire round-trip.
+    pub qp_reuse_ns: u64,
+    /// Control-plane cost of one lease-establishment control message
+    /// (flat per message, so batching amortizes it).
+    pub lease_establish_ns: u64,
 }
 
 impl Default for DaemonConfig {
@@ -124,6 +150,12 @@ impl Default for DaemonConfig {
             ud_sq_depth: 8192,
             lease_timeout_ns: 0,
             reassembly_timeout_ns: 0,
+            qp_pool_max: 8,
+            lazy_leases: false,
+            lease_batch_max: 16,
+            handshake_ns: 12_000,
+            qp_reuse_ns: 900,
+            lease_establish_ns: 2_500,
         }
     }
 }
@@ -183,6 +215,28 @@ pub struct DaemonStats {
     /// Window WRITEs that shared another WRITE's doorbell + CQE (group
     /// size minus one, summed — the RDMAbox merging win).
     pub writes_coalesced: u64,
+    /// Connections torn down via `disconnect`.
+    pub conns_disconnected: u64,
+    /// Full RC handshakes performed at connect (a QP pair was created).
+    pub handshakes_full: u64,
+    /// Shared QPs parked into the reuse pool after their remote drained.
+    pub qp_parked: u64,
+    /// Parked QPs revived by a later connect — the handshake skipped.
+    pub qp_reused: u64,
+    /// Parked QPs actually destroyed: LRU bound, an unrevivable
+    /// one-sided leftover, or the pool-disabled cold path.
+    pub qp_evicted: u64,
+    /// Lease-establishment control messages sent (eager connects and
+    /// lazy batches alike).
+    pub lease_batches: u64,
+    /// Per-remote credential/lease sets established.
+    pub leases_established: u64,
+    /// Send CQEs dropped by the epoch gate: stamped under a previous
+    /// tenant generation of a since-reused QP.
+    pub stale_epoch_drops: u64,
+    /// Control-plane nanoseconds consumed (connect, disconnect, lease
+    /// establishment) — the fig-12 setup-rate denominator.
+    pub ctrl_ns: u64,
 }
 
 /// Info about a peer daemon's pool we can one-sidedly address.
@@ -191,6 +245,26 @@ struct RemotePool {
     rkey: crate::fabric::types::Mrkey,
     base: u64,
     len: u64,
+}
+
+/// A shared QP parked for reuse after its remote's last vQPN closed
+/// (PR 7 tentpole). The pair stays connected in the fabric; revival is
+/// pure bookkeeping.
+#[derive(Clone, Copy, Debug)]
+struct ParkedQp {
+    remote: u32,
+    qpn: Qpn,
+    /// Park-order LRU stamp (monotonic, virtual-time-free — parking
+    /// order alone decides eviction, which keeps it deterministic).
+    stamp: u64,
+}
+
+/// Peer credentials exchanged at connect but, under lazy leases, not yet
+/// installed: the tenant pays for them at first use, not at connect.
+#[derive(Clone, Copy, Debug)]
+struct OfferedCreds {
+    pool: RemotePool,
+    ud: Qpn,
 }
 
 /// Everything the Poller needs to finish one in-flight op, stored in the
@@ -218,6 +292,12 @@ struct InflightOp {
     /// `Daemon::wgroups[g]` — one CQE fans out into one OpComplete per
     /// logical WRITE.
     wgroup: Option<u32>,
+    /// QP epoch of `rc_remote` at submit time. The Poller drops any CQE
+    /// whose stamp predates the remote's current epoch (bumped when the
+    /// shared QP parks), so a revived QP can never deliver a previous
+    /// tenant's completion — DESIGN.md §12. 0 on the UD path (the
+    /// host-wide UD QP is never parked).
+    epoch: u32,
 }
 
 /// Handle a client holds on a registered remote window: an opaque
@@ -344,6 +424,27 @@ pub struct Daemon {
     wgroups: Vec<Vec<(u64, u64)>>,
     /// Free wgroup slots (LIFO reuse keeps the table dense).
     wgroup_free: Vec<u32>,
+    /// Parked shared QPs awaiting a same-destination reconnect, bounded
+    /// by `cfg.qp_pool_max` (LRU-evicted with a real destroy).
+    qp_pool: Vec<ParkedQp>,
+    /// Monotonic park counter — the reuse pool's LRU clock.
+    park_seq: u64,
+    /// Per-remote QP generation, bumped when the shared QP to that
+    /// remote parks. Ops are stamped with the epoch current at submit;
+    /// the Poller's epoch gate drops any CQE stamped under an earlier
+    /// generation (DESIGN.md §12), node-indexed.
+    qp_epoch: IdMap<u32>,
+    /// Remotes whose last vQPN closed, awaiting drain (zero in-flight
+    /// RC WRs, empty pending batch) before their shared QP parks —
+    /// submission order, swept each pump.
+    parting: Vec<u32>,
+    /// Lazy mode: peer credentials offered at connect but not yet
+    /// established, node-indexed.
+    offered_creds: IdMap<OfferedCreds>,
+    /// Lazy mode: deferred remotes in offer order — establishment
+    /// batches drain from the front (FIFO keeps the migration engine's
+    /// registration ranks deterministic).
+    lease_backlog: Vec<u32>,
 }
 
 impl Daemon {
@@ -396,6 +497,12 @@ impl Daemon {
             dirty_windows: Vec::new(),
             wgroups: Vec::new(),
             wgroup_free: Vec::new(),
+            qp_pool: Vec::new(),
+            park_seq: 0,
+            qp_epoch: IdMap::new(),
+            parting: Vec::new(),
+            offered_creds: IdMap::new(),
+            lease_backlog: Vec::new(),
             cfg,
         }
     }
@@ -485,6 +592,220 @@ impl Daemon {
         l
     }
 
+    // --------------------------------------- elastic control plane (PR 7)
+
+    /// Charge control-plane work: the host core pays in virtual time and
+    /// the fig-12 setup-rate ledger records it. Kept out of the daemon's
+    /// service-thread telemetry so the data-plane selector never sees
+    /// control churn as load.
+    fn charge_ctrl(&mut self, sim: &mut Sim, ns: u64) {
+        sim.node_mut(self.node).cpu.charge(ns);
+        self.stats.ctrl_ns += ns;
+    }
+
+    /// Current QP epoch for `remote` (bumped each time its shared QP
+    /// parks; 0 before the first park).
+    fn epoch_of(&self, remote: u32) -> u32 {
+        self.qp_epoch.get(remote).copied().unwrap_or(0)
+    }
+
+    /// Lazy-lease establishment: install the deferred pool credentials
+    /// for `remote` — plus up to `lease_batch_max - 1` more backlogged
+    /// remotes riding the same control message (coalesced control verbs,
+    /// the RDMAbox merging argument). Establishment is atomic per batch:
+    /// every remote in it lands fully (pool + UD + migration
+    /// registration) or the call fails before touching any ledger —
+    /// there is no partial state for a fault to observe. No-op when the
+    /// credentials are already live; eager daemons never reach the
+    /// deferred path.
+    fn ensure_creds(&mut self, sim: &mut Sim, remote: u32) -> Result<(), RaasError> {
+        if self.remote_pools.get(remote).is_some() {
+            return Ok(());
+        }
+        if self.offered_creds.get(remote).is_none() {
+            return Err(RaasError::UnknownConnection);
+        }
+        // one flat-cost control message covers the whole batch
+        self.charge_ctrl(sim, self.cfg.lease_establish_ns);
+        self.stats.lease_batches += 1;
+        let cap = self.cfg.lease_batch_max.max(1);
+        let mut batch = Vec::with_capacity(cap);
+        batch.push(remote);
+        self.lease_backlog.retain(|&r| r != remote);
+        while batch.len() < cap && !self.lease_backlog.is_empty() {
+            batch.push(self.lease_backlog.remove(0));
+        }
+        for r in batch {
+            let creds = self.offered_creds.remove(r).expect("backlogged remote has an offer");
+            self.remote_pools.insert(r, creds.pool);
+            self.remote_ud.insert(r, creds.ud);
+            self.migrate.register_dest(r);
+            self.stats.leases_established += 1;
+        }
+        Ok(())
+    }
+
+    /// `disconnect(fd)` — tear down one logical connection (PR 7
+    /// tentpole). The vQPN is quarantined (not recycled) until its
+    /// remote's shared QP drains; every op still in flight through the
+    /// connection is fail-fasted exactly like the stale-lease reclaim,
+    /// so its late CQE misses the slab and is dropped; windows the
+    /// connection owns are force-released; never-posted WRs bound to it
+    /// are dropped from the pending batch. When the last vQPN to a
+    /// remote closes, the remote queues for parking: once drained, its
+    /// shared QP enters the reuse pool (or is destroyed under the cold
+    /// ablation) and its credentials are torn down.
+    pub fn disconnect(&mut self, sim: &mut Sim, conn: Vqpn) -> Result<(), RaasError> {
+        let remote = match self.conns.lookup(conn) {
+            Some(e) => e.remote,
+            None => return Err(RaasError::ConnectionClosed),
+        };
+        self.charge_ctrl(sim, self.cfg.shm.ring_push_ns);
+        // fail-fast in-flight ops submitted through this connection
+        let doomed: Vec<u64> = self
+            .ops
+            .iter()
+            .filter(|(id, _)| crate::raas::vqpn::unpack_vqpn(*id) == conn)
+            .map(|(id, _)| id)
+            .collect();
+        for wr_id in doomed {
+            self.fail_op(wr_id, false);
+        }
+        // force-release windows the connection owns (pending coalesced
+        // WRITEs fail: never posted, so they cannot complete twice)
+        for slot in 0..self.windows.len() as u32 {
+            let owned = self.windows[slot as usize]
+                .entry
+                .as_ref()
+                .is_some_and(|w| w.conn == conn);
+            if owned {
+                self.fail_window(slot);
+            }
+        }
+        // drop never-posted WRs bound to this connection (their slab
+        // entries are already gone)
+        if let Some(batch) = self.pending.get_mut(remote.0) {
+            batch.retain(|wr| crate::raas::vqpn::unpack_vqpn(wr.wr_id) != conn);
+        }
+        // purge unclaimed accepts handing out this vQPN
+        for (_, q) in self.accept_queues.iter_mut() {
+            q.retain(|&v| v != conn);
+        }
+        self.conns.close_quarantined(conn).expect("checked live");
+        self.stats.conns_disconnected += 1;
+        if self.conns.conns_to(remote) == 0 && !self.parting.contains(&remote.0) {
+            self.parting.push(remote.0);
+        }
+        Ok(())
+    }
+
+    /// Parking sweep: a remote whose last vQPN closed parks its shared
+    /// QP once fully drained — zero in-flight RC WRs in the migration
+    /// ledger and an empty pending batch. Draining first means a parked
+    /// (or destroyed) QP has no WR whose CQE could still surface, and
+    /// the remote's quarantined vQPNs become safe to recycle: no frame
+    /// stamped with them remains in the fabric.
+    fn sweep_parting(&mut self, sim: &mut Sim) {
+        if self.parting.is_empty() {
+            return;
+        }
+        let parting = std::mem::take(&mut self.parting);
+        for r in parting {
+            if self.conns.conns_to(NodeId(r)) > 0 {
+                // a new tenant connected before the drain finished: the
+                // remote stays live (its quarantined vQPNs wait for the
+                // next full drain)
+                continue;
+            }
+            let drained = self.migrate.dest(r).map_or(true, |d| d.inflight_rc == 0)
+                && self.pending.get(r).map_or(true, |b| b.is_empty());
+            if !drained {
+                self.parting.push(r);
+                continue;
+            }
+            self.park_remote(sim, r);
+        }
+    }
+
+    /// Park (or, cold, destroy) the drained shared QP to `r` and tear
+    /// down the remote's per-destination state. The epoch bump happens
+    /// here — past this point any CQE or frame stamped under the old
+    /// epoch is provably a previous tenant's.
+    fn park_remote(&mut self, sim: &mut Sim, r: u32) {
+        self.conns.release_quarantined(NodeId(r));
+        self.migrate.unregister_dest(r);
+        self.remote_pools.remove(r);
+        self.remote_ud.remove(r);
+        self.offered_creds.remove(r);
+        self.lease_backlog.retain(|&x| x != r);
+        self.pending.remove(r);
+        let Some(qpn) = self.shared_qps.remove(r) else { return };
+        *self.qp_epoch.entry_or_default(r) += 1;
+        if self.cfg.qp_pool_max == 0 {
+            sim.destroy_qp(self.node, qpn);
+            self.stats.qp_evicted += 1;
+            return;
+        }
+        self.park_seq += 1;
+        self.qp_pool.push(ParkedQp { remote: r, qpn, stamp: self.park_seq });
+        self.stats.qp_parked += 1;
+        if self.qp_pool.len() > self.cfg.qp_pool_max {
+            // LRU: the smallest stamp goes (stamps are unique, so the
+            // victim is deterministic)
+            let lru = self
+                .qp_pool
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, p)| p.stamp)
+                .map(|(i, _)| i)
+                .expect("non-empty pool");
+            let victim = self.qp_pool.swap_remove(lru);
+            sim.destroy_qp(self.node, victim.qpn);
+            self.stats.qp_evicted += 1;
+        }
+    }
+
+    /// Pull the parked QP for `remote` out of the reuse pool, if any.
+    fn take_parked(&mut self, remote: u32) -> Option<Qpn> {
+        let i = self.qp_pool.iter().position(|p| p.remote == remote)?;
+        Some(self.qp_pool.swap_remove(i).qpn)
+    }
+
+    /// Parked QPs currently in the reuse pool.
+    pub fn pooled_qp_count(&self) -> usize {
+        self.qp_pool.len()
+    }
+
+    /// Ops currently tracked in the in-flight slab (tests/diagnostics).
+    pub fn inflight_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Are `remote`'s pool credentials established (eagerly at connect,
+    /// or lazily at first use)? Deferred and parted remotes answer no.
+    /// The credential ledger is all-or-nothing per remote by
+    /// construction; the debug assert keeps that honest.
+    pub fn creds_established(&self, remote: u32) -> bool {
+        debug_assert_eq!(
+            self.remote_pools.get(remote).is_some(),
+            self.remote_ud.get(remote).is_some(),
+            "partial credential ledger for remote {r}",
+            r = remote
+        );
+        self.remote_pools.get(remote).is_some()
+    }
+
+    /// Remotes whose credentials are offered but still deferred (lazy
+    /// backlog length).
+    pub fn deferred_lease_count(&self) -> usize {
+        self.lease_backlog.len()
+    }
+
+    /// Current QP epoch for `remote` (tests/diagnostics).
+    pub fn epoch(&self, remote: u32) -> u32 {
+        self.epoch_of(remote)
+    }
+
     // ------------------------------------------------------- data plane
 
     /// App-side submit cost (ring push + possible doorbell), charged to the
@@ -534,6 +855,7 @@ impl Daemon {
         self.charge_submit(sim);
         let entry = self.conns.lookup(conn).ok_or(RaasError::UnknownConnection)?;
         let remote = entry.remote;
+        self.ensure_creds(sim, remote.0)?;
         let rp = *self
             .remote_pools
             .get(remote.0)
@@ -542,6 +864,7 @@ impl Daemon {
             return Err(RaasError::TooLong { len, max: rp.len - remote_offset });
         }
         let lease = self.pool.lease(len).ok_or(RaasError::PoolExhausted)?;
+        let epoch = self.epoch_of(remote.0);
         // reads land in the lease; deliver (copy) unless app opted zero-copy
         let wr_id = self.ops.insert(
             conn,
@@ -553,6 +876,7 @@ impl Daemon {
                 ud_msg_len: None,
                 window: None,
                 wgroup: None,
+                epoch,
             },
         );
         let wr = match verb {
@@ -586,6 +910,7 @@ impl Daemon {
         sim.node_mut(self.node).cpu.charge(c);
         let entry = self.conns.lookup(conn).ok_or(RaasError::UnknownConnection)?;
         let remote = entry.remote;
+        self.ensure_creds(sim, remote.0)?;
         let rp = *self
             .remote_pools
             .get(remote.0)
@@ -663,6 +988,7 @@ impl Daemon {
             .remote_pools
             .get(remote)
             .ok_or(RaasError::UnknownConnection)?;
+        let epoch = self.epoch_of(remote);
         let wr_id = self.ops.insert(
             conn,
             InflightOp {
@@ -673,6 +999,7 @@ impl Daemon {
                 ud_msg_len: None,
                 window: Some(win.slot),
                 wgroup: None,
+                epoch,
             },
         );
         let wr = SendWr::read(
@@ -814,6 +1141,7 @@ impl Daemon {
                 (self.wgroups.len() - 1) as u32
             }
         };
+        let epoch = self.epoch_of(remote);
         let wr_id = self.ops.insert(
             conn,
             InflightOp {
@@ -824,6 +1152,7 @@ impl Daemon {
                 ud_msg_len: None,
                 window: Some(slot),
                 wgroup: Some(g),
+                epoch,
             },
         );
         let tail = wrs.last_mut().expect("non-empty group");
@@ -914,6 +1243,9 @@ impl Daemon {
         self.charge_submit(sim);
         let entry = self.conns.lookup(conn).ok_or(RaasError::UnknownConnection)?;
         let (remote, peer_vqpn) = (entry.remote, entry.peer_vqpn);
+        // first use establishes any lazily deferred leases (and thereby
+        // registers the destination with the migration engine)
+        self.ensure_creds(sim, remote.0)?;
         let local_load = self.load(sim);
         let mtu = sim.cfg.mtu;
         // only fully migrated destinations route new sends onto UD; a
@@ -929,6 +1261,7 @@ impl Daemon {
 
         let lease = self.stage_payload(sim, len)?;
 
+        let epoch = self.epoch_of(remote.0);
         let wr_id = self.ops.insert(
             conn,
             InflightOp {
@@ -939,6 +1272,7 @@ impl Daemon {
                 ud_msg_len: None,
                 window: None,
                 wgroup: None,
+                epoch,
             },
         );
         // `send` pushes data: a READ preference from the selector (local
@@ -1034,6 +1368,7 @@ impl Daemon {
                 ud_msg_len: if nfrags > 1 { Some(len) } else { None },
                 window: None,
                 wgroup: None,
+                epoch: 0, // the host-wide UD QP is never parked
             },
         );
         for k in 0..nfrags {
@@ -1179,6 +1514,8 @@ impl Daemon {
             .expire_stale(sim.now(), Ns(self.cfg.reassembly_timeout_ns));
         self.reclaim_stale_leases(sim);
         self.reclaim_stale_windows(sim);
+        // park drained remotes whose last vQPN closed (PR 7)
+        self.sweep_parting(sim);
         // SRQ refill
         Self::fill_srq(sim, self.node, self.srq, &mut self.pool, &self.cfg, &mut self.srq_wr_seq);
         self.telemetry.pool_pressure = self.pool.pressure();
@@ -1205,64 +1542,110 @@ impl Daemon {
             .map(|(id, _)| id)
             .collect();
         for wr_id in stale {
-            let op = self.ops.take(wr_id).expect("stale id is live");
-            // keep the migration drain ledger honest: the RC WR is gone
-            if let Some(remote) = op.rc_remote {
-                self.migrate.on_rc_completed(remote);
-            }
-            let vqpn = crate::raas::vqpn::unpack_vqpn(wr_id);
-            let app = self.conns.lookup(vqpn).map(|e| e.app);
-            if let Some(slot) = op.window {
-                // the lease belongs to the window, so nothing is released
-                // here (and `leases_reclaimed` does not count): report
-                // each logical op failed and let the window drain —
-                // `reclaim_stale_windows` frees abandoned slots later
-                if let Some(g) = op.wgroup {
-                    let tags = std::mem::take(&mut self.wgroups[g as usize]);
-                    self.wgroup_free.push(g);
-                    for &(tag, _wlen) in &tags {
-                        self.stats.ops_failed += 1;
-                        self.telemetry.ops_failed += 1;
-                        if let Some(app) = app {
-                            self.telemetry.charge(self.cfg.shm.ring_push_ns);
-                            self.inbox_mut(app).push_back(Delivery::OpComplete {
-                                conn: vqpn,
-                                tag,
-                                len: 0,
-                                ok: false,
-                            });
-                        }
-                    }
-                    self.window_op_done(slot, tags.len() as u32);
-                } else {
+            self.fail_op(wr_id, true);
+        }
+    }
+
+    /// Fail one in-flight op without a completion: take it from the slab
+    /// (bumping the slot generation, so its late CQE — if one ever
+    /// arrives — is dropped), keep the migration drain ledger honest,
+    /// release or route its lease, and report `ok: false` to the owning
+    /// app. Shared by the stale-lease reclaim (`reclaim` counts the
+    /// lease as reclaimed) and the disconnect fail-fast path.
+    fn fail_op(&mut self, wr_id: u64, reclaim: bool) {
+        let Some(op) = self.ops.take(wr_id) else { return };
+        // keep the migration drain ledger honest: the RC WR is gone
+        if let Some(remote) = op.rc_remote {
+            self.migrate.on_rc_completed(remote);
+        }
+        let vqpn = crate::raas::vqpn::unpack_vqpn(wr_id);
+        let app = self.conns.lookup(vqpn).map(|e| e.app);
+        if let Some(slot) = op.window {
+            // the lease belongs to the window, so nothing is released
+            // here (and `leases_reclaimed` does not count): report
+            // each logical op failed and let the window drain —
+            // `reclaim_stale_windows` frees abandoned slots later
+            if let Some(g) = op.wgroup {
+                let tags = std::mem::take(&mut self.wgroups[g as usize]);
+                self.wgroup_free.push(g);
+                for &(tag, _wlen) in &tags {
                     self.stats.ops_failed += 1;
                     self.telemetry.ops_failed += 1;
                     if let Some(app) = app {
                         self.telemetry.charge(self.cfg.shm.ring_push_ns);
                         self.inbox_mut(app).push_back(Delivery::OpComplete {
                             conn: vqpn,
-                            tag: wr_id,
+                            tag,
                             len: 0,
                             ok: false,
                         });
                     }
-                    self.window_op_done(slot, 1);
                 }
-                continue;
+                self.window_op_done(slot, tags.len() as u32);
+            } else {
+                self.stats.ops_failed += 1;
+                self.telemetry.ops_failed += 1;
+                if let Some(app) = app {
+                    self.telemetry.charge(self.cfg.shm.ring_push_ns);
+                    self.inbox_mut(app).push_back(Delivery::OpComplete {
+                        conn: vqpn,
+                        tag: wr_id,
+                        len: 0,
+                        ok: false,
+                    });
+                }
+                self.window_op_done(slot, 1);
             }
-            self.pool.release(op.lease);
+            return;
+        }
+        self.pool.release(op.lease);
+        if reclaim {
             self.stats.leases_reclaimed += 1;
+        }
+        self.stats.ops_failed += 1;
+        self.telemetry.ops_failed += 1;
+        if let Some(app) = app {
+            self.telemetry.charge(self.cfg.shm.ring_push_ns);
+            self.inbox_mut(app).push_back(Delivery::OpComplete {
+                conn: vqpn,
+                tag: wr_id,
+                len: 0,
+                ok: false,
+            });
+        }
+    }
+
+    /// Force-release a window at disconnect: pending (never-posted)
+    /// coalesced WRITEs fail, the token is invalidated, and the standing
+    /// lease returns once nothing remains in flight — the disconnect op
+    /// sweep has already drained the window's slab entries.
+    fn fail_window(&mut self, slot: u32) {
+        let (conn, tags, inflight) = {
+            let Some(w) = self.windows.get_mut(slot as usize).and_then(|s| s.entry.as_mut())
+            else {
+                return;
+            };
+            w.closed = true;
+            w.wbatch.clear();
+            (w.conn, std::mem::take(&mut w.wtags), w.inflight)
+        };
+        let app = self.conns.lookup(conn).map(|e| e.app);
+        for (tag, _wlen) in tags {
             self.stats.ops_failed += 1;
             self.telemetry.ops_failed += 1;
             if let Some(app) = app {
                 self.telemetry.charge(self.cfg.shm.ring_push_ns);
                 self.inbox_mut(app).push_back(Delivery::OpComplete {
-                    conn: vqpn,
-                    tag: wr_id,
+                    conn,
+                    tag,
                     len: 0,
                     ok: false,
                 });
             }
+        }
+        self.stats.windows_released += 1;
+        if inflight == 0 {
+            self.free_window(slot);
         }
     }
 
@@ -1315,6 +1698,25 @@ impl Daemon {
             // OpCompletes for one op
             return;
         };
+        if let Some(remote) = op.rc_remote {
+            if op.epoch != self.epoch_of(remote) {
+                // stamped under a previous tenant generation of a
+                // since-parked (possibly revived) QP: the epoch gate
+                // guarantees cross-tenant isolation even if the op
+                // somehow outlived its disconnect sweep. The drain
+                // ledger was settled when the op was failed, so no
+                // double decrement here.
+                self.stats.stale_epoch_drops += 1;
+                if op.window.is_none() {
+                    self.pool.release(op.lease);
+                }
+                if let Some(g) = op.wgroup {
+                    self.wgroups[g as usize].clear();
+                    self.wgroup_free.push(g);
+                }
+                return;
+            }
+        }
         if let Some(slot) = op.window {
             return self.on_window_cqe(sim, cqe, op, slot);
         }
@@ -1493,11 +1895,16 @@ impl Daemon {
         }
     }
 
-    /// Rolled-up resource usage (Figs 7/8).
+    /// Rolled-up resource usage (Figs 7/8/12).
     pub fn snapshot(&self, sim: &Sim) -> super::telemetry::ResourceSnapshot {
         let node = sim.node(self.node);
+        let conn_table_bytes = self.conns.table_mem_bytes();
         super::telemetry::ResourceSnapshot {
-            mem_bytes: self.telemetry.ring_bytes() + self.pool.hwm_bytes() + node.fabric_mem_bytes(),
+            mem_bytes: self.telemetry.ring_bytes()
+                + self.pool.hwm_bytes()
+                + node.fabric_mem_bytes()
+                + conn_table_bytes,
+            conn_table_bytes,
             cpu_cores: self.telemetry.cpu_cores(sim.now())
                 + node.cpu.busy_ns as f64 / sim.now().0.max(1) as f64,
             apps: self.telemetry.sessions.len() as u32,
@@ -1536,39 +1943,133 @@ pub fn connect_via(
         .map(|&(_, app)| app)
         .ok_or(RaasError::UnknownConnection)?;
 
-    // shared QP pair between the machines, created once
+    // shared QP pair between the machines, created once — or revived
+    // from both sides' reuse pools when the pair churned recently
+    // (PR 7 tentpole: the pooled path skips the full RC handshake)
     if da.shared_qps.get(db.node.0).is_none() {
-        let qa = sim.create_qp(da.node, crate::fabric::types::QpTransport::Rc, da.send_cq, da.recv_cq);
-        let qb = sim.create_qp(db.node, crate::fabric::types::QpTransport::Rc, db.send_cq, db.recv_cq);
-        sim.connect(da.node, qa, db.node, qb);
-        sim.attach_srq(da.node, qa, da.srq);
-        sim.attach_srq(db.node, qb, db.srq);
-        da.shared_qps.insert(db.node.0, qa);
-        db.shared_qps.insert(da.node.0, qb);
-        // exchange pool credentials (one-sided addressing)
-        da.remote_pools.insert(
-            db.node.0,
-            RemotePool { rkey: db.pool.mr.key, base: db.pool.mr.addr, len: db.pool.mr.len },
-        );
-        db.remote_pools.insert(
-            da.node.0,
-            RemotePool { rkey: da.pool.mr.key, base: da.pool.mr.addr, len: da.pool.mr.len },
-        );
-        // exchange UD addressing + register the destination with each
-        // side's migration engine (first-use rank)
-        da.remote_ud.insert(db.node.0, db.ud_qp);
-        db.remote_ud.insert(da.node.0, da.ud_qp);
-        da.migrate.register_dest(db.node.0);
-        db.migrate.register_dest(da.node.0);
+        match (da.take_parked(db.node.0), db.take_parked(da.node.0)) {
+            (Some(qa), Some(qb)) => {
+                // revival is pure bookkeeping: the pair is still
+                // connected in the fabric, and the park-time epoch bump
+                // already fenced off the previous tenants' completions
+                da.shared_qps.insert(db.node.0, qa);
+                db.shared_qps.insert(da.node.0, qb);
+                da.stats.qp_reused += 1;
+                db.stats.qp_reused += 1;
+                da.charge_ctrl(sim, da.cfg.qp_reuse_ns);
+                db.charge_ctrl(sim, db.cfg.qp_reuse_ns);
+            }
+            (pa, pb) => {
+                // a one-sided leftover cannot be revived (its peer half
+                // is gone): destroy it and do the full handshake
+                if let Some(q) = pa {
+                    sim.destroy_qp(da.node, q);
+                    da.stats.qp_evicted += 1;
+                }
+                if let Some(q) = pb {
+                    sim.destroy_qp(db.node, q);
+                    db.stats.qp_evicted += 1;
+                }
+                let qa = sim.create_qp(
+                    da.node,
+                    crate::fabric::types::QpTransport::Rc,
+                    da.send_cq,
+                    da.recv_cq,
+                );
+                let qb = sim.create_qp(
+                    db.node,
+                    crate::fabric::types::QpTransport::Rc,
+                    db.send_cq,
+                    db.recv_cq,
+                );
+                sim.connect(da.node, qa, db.node, qb);
+                sim.attach_srq(da.node, qa, da.srq);
+                sim.attach_srq(db.node, qb, db.srq);
+                da.shared_qps.insert(db.node.0, qa);
+                // an asymmetric teardown (faults) can leave `db` holding
+                // a half-pair whose peer is gone: replace and destroy it
+                if let Some(old) = db.shared_qps.insert(da.node.0, qb) {
+                    sim.destroy_qp(db.node, old);
+                    db.stats.qp_evicted += 1;
+                }
+                da.stats.handshakes_full += 1;
+                db.stats.handshakes_full += 1;
+                da.charge_ctrl(sim, da.cfg.handshake_ns);
+                db.charge_ctrl(sim, db.cfg.handshake_ns);
+            }
+        }
+        // credential/lease exchange (pool addressing + UD QPN +
+        // migration registration): eager daemons install now, lazy
+        // daemons stash the offer and pay at first use
+        offer_creds(sim, da, db);
+        offer_creds(sim, db, da);
     }
 
-    // allocate the vQPN pair
+    // allocate the vQPN pair — under lazy leases this registration is
+    // the ENTIRE marginal cost of an idle tenant
+    da.charge_ctrl(sim, da.cfg.shm.ring_push_ns);
+    db.charge_ctrl(sim, db.cfg.shm.ring_push_ns);
     let va = da.conns.open(a_app, db.node, Vqpn(0));
     let vb = db.conns.open(b_app, da.node, va);
     da.conns.set_peer(va, vb);
     db.accept_queue_mut(b_app, port).push_back(vb);
     db.inbox_mut(b_app);
     Ok(va)
+}
+
+/// Hand `from`'s pool/UD credentials to `to`. Eager daemons install and
+/// register the destination immediately (one lease-establishment control
+/// message); lazy daemons stash the offer in the deferred backlog, to be
+/// established — batched — on first use ([`Daemon::ensure_creds`]).
+fn offer_creds(sim: &mut Sim, to: &mut Daemon, from: &Daemon) {
+    let creds = OfferedCreds {
+        pool: RemotePool {
+            rkey: from.pool.mr.key,
+            base: from.pool.mr.addr,
+            len: from.pool.mr.len,
+        },
+        ud: from.ud_qp,
+    };
+    if to.cfg.lazy_leases {
+        if to.offered_creds.get(from.node.0).is_none() {
+            to.offered_creds.insert(from.node.0, creds);
+            to.lease_backlog.push(from.node.0);
+        }
+        return;
+    }
+    to.remote_pools.insert(from.node.0, creds.pool);
+    to.remote_ud.insert(from.node.0, creds.ud);
+    to.migrate.register_dest(from.node.0);
+    to.stats.lease_batches += 1;
+    to.stats.leases_established += 1;
+    to.charge_ctrl(sim, to.cfg.lease_establish_ns);
+}
+
+/// Tear down a logical connection end-to-end (the `disconnect(fd)` of
+/// Fig 3 for the in-sim deployment): both daemons fail-fast their
+/// in-flight ops, quarantine their vQPNs, and queue the shared QP for
+/// parking once their side drains.
+pub fn disconnect_via(
+    sim: &mut Sim,
+    daemons: &mut [Daemon],
+    a: usize,
+    conn: Vqpn,
+) -> Result<(), RaasError> {
+    let (remote, peer) = {
+        let e = daemons[a]
+            .conns
+            .lookup(conn)
+            .ok_or(RaasError::ConnectionClosed)?;
+        (e.remote, e.peer_vqpn)
+    };
+    daemons[a].disconnect(sim, conn)?;
+    let b = daemons
+        .iter()
+        .position(|d| d.node == remote)
+        .ok_or(RaasError::UnknownConnection)?;
+    // the peer half may already be gone (e.g. its daemon restarted)
+    let _ = daemons[b].disconnect(sim, peer);
+    Ok(())
 }
 
 /// Resolve a [`Target`] then connect (the public `connect(Target*, FLAGS)`
@@ -2094,5 +2595,183 @@ mod tests {
         assert_eq!(daemons[0].stats.ops_completed, 2, "accepted ops complete exactly once");
         assert_eq!(daemons[0].pool.leased_bytes, 0, "drain returned the lease");
         assert_eq!(daemons[0].window_count(), 0);
+    }
+
+    #[test]
+    fn disconnect_parks_and_reconnect_reuses_qp() {
+        let (mut sim, mut daemons) = cluster(2);
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+        assert_eq!(daemons[0].stats.handshakes_full, 1);
+        let qps_before = sim.node(NodeId(0)).qps.len();
+
+        disconnect_via(&mut sim, &mut daemons, 0, conn).unwrap();
+        // nothing was in flight, so the first pump drains and parks
+        daemons[0].pump(&mut sim);
+        daemons[1].pump(&mut sim);
+        assert_eq!(daemons[0].pooled_qp_count(), 1);
+        assert_eq!(daemons[1].pooled_qp_count(), 1);
+        assert_eq!(daemons[0].stats.qp_parked, 1);
+        assert_eq!(daemons[0].shared_qp_count(), 0);
+        assert_eq!(daemons[0].conns.active(), 0);
+        assert_eq!(daemons[0].conns.quarantined(), 0, "park releases the quarantine");
+        assert!(!daemons[0].creds_established(1), "parking tears leases down");
+        assert_eq!(daemons[0].epoch(1), 1, "park bumps the epoch");
+
+        // reconnect: revival is bookkeeping — no new fabric QP
+        let conn2 = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+        assert_eq!(daemons[0].stats.qp_reused, 1);
+        assert_eq!(daemons[0].stats.handshakes_full, 1, "handshake skipped");
+        assert_eq!(daemons[0].pooled_qp_count(), 0);
+        assert_eq!(sim.node(NodeId(0)).qps.len(), qps_before, "no QP created");
+
+        // the revived QP carries traffic for the new tenant
+        daemons[0]
+            .send(&mut sim, conn2, 512, Flags::default(), 7, HostLoad::default())
+            .unwrap();
+        pump_all(&mut sim, &mut daemons);
+        assert_eq!(daemons[0].stats.ops_completed, 1);
+        assert_eq!(daemons[1].stats.msgs_delivered, 1);
+        assert_eq!(daemons[0].stats.stale_epoch_drops, 0);
+    }
+
+    #[test]
+    fn cold_mode_destroys_instead_of_parking() {
+        let mut fcfg = FabricConfig::default();
+        fcfg.nodes = 2;
+        let mut sim = Sim::new(fcfg);
+        let mut cfg = DaemonConfig::default();
+        cfg.qp_pool_max = 0; // the fig-12 --cold ablation
+        let mut daemons = vec![
+            Daemon::start(&mut sim, NodeId(0), cfg.clone()),
+            Daemon::start(&mut sim, NodeId(1), cfg),
+        ];
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+        let qps_before = sim.node(NodeId(0)).qps.len();
+
+        disconnect_via(&mut sim, &mut daemons, 0, conn).unwrap();
+        daemons[0].pump(&mut sim);
+        daemons[1].pump(&mut sim);
+        assert_eq!(daemons[0].pooled_qp_count(), 0);
+        assert_eq!(daemons[0].stats.qp_parked, 0);
+        assert_eq!(daemons[0].stats.qp_evicted, 1, "cold path destroys");
+
+        // reconnect pays the full handshake again, with a fresh QP
+        connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+        assert_eq!(daemons[0].stats.handshakes_full, 2);
+        assert_eq!(daemons[0].stats.qp_reused, 0);
+        assert_eq!(sim.node(NodeId(0)).qps.len(), qps_before + 1);
+    }
+
+    #[test]
+    fn qp_pool_bound_evicts_lru() {
+        let mut fcfg = FabricConfig::default();
+        fcfg.nodes = 4;
+        let mut sim = Sim::new(fcfg);
+        let mut ccfg = DaemonConfig::default();
+        ccfg.qp_pool_max = 2;
+        let mut daemons = vec![Daemon::start(&mut sim, NodeId(0), ccfg)];
+        for i in 1..4u32 {
+            daemons.push(Daemon::start(&mut sim, NodeId(i), DaemonConfig::default()));
+        }
+        let app = daemons[0].register_app();
+        let mut conns = Vec::new();
+        for s in 1..4 {
+            let sapp = daemons[s].register_app();
+            daemons[s].listen(sapp, 1);
+            conns.push(connect_via(&mut sim, &mut daemons, 0, app, s, 1).unwrap());
+        }
+        for &c in &conns {
+            disconnect_via(&mut sim, &mut daemons, 0, c).unwrap();
+        }
+        for d in daemons.iter_mut() {
+            d.pump(&mut sim);
+        }
+        // three parks into a 2-slot pool: the LRU victim (remote 1,
+        // parked first) was destroyed
+        assert_eq!(daemons[0].stats.qp_parked, 3);
+        assert_eq!(daemons[0].stats.qp_evicted, 1);
+        assert_eq!(daemons[0].pooled_qp_count(), 2);
+
+        // remote 3 revives from the pool; remote 1 must re-handshake
+        // (and the server's now-unrevivable half is destroyed)
+        connect_via(&mut sim, &mut daemons, 0, app, 3, 1).unwrap();
+        assert_eq!(daemons[0].stats.qp_reused, 1);
+        connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+        assert_eq!(daemons[0].stats.handshakes_full, 4);
+        assert_eq!(daemons[0].stats.qp_reused, 1);
+        assert_eq!(daemons[1].stats.qp_evicted, 1, "stranded server half destroyed");
+    }
+
+    #[test]
+    fn lazy_leases_defer_and_batch_establishment() {
+        let mut fcfg = FabricConfig::default();
+        fcfg.nodes = 3;
+        let mut sim = Sim::new(fcfg);
+        let mut ccfg = DaemonConfig::default();
+        ccfg.lazy_leases = true;
+        let mut daemons = vec![Daemon::start(&mut sim, NodeId(0), ccfg)];
+        for i in 1..3u32 {
+            daemons.push(Daemon::start(&mut sim, NodeId(i), DaemonConfig::default()));
+        }
+        let app = daemons[0].register_app();
+        let mut conns = Vec::new();
+        for s in 1..3 {
+            let sapp = daemons[s].register_app();
+            daemons[s].listen(sapp, 1);
+            conns.push(connect_via(&mut sim, &mut daemons, 0, app, s, 1).unwrap());
+        }
+        // connect registered vQPNs only: no credentials, no migration
+        // registration, no lease control messages
+        assert!(!daemons[0].creds_established(1));
+        assert!(!daemons[0].creds_established(2));
+        assert_eq!(daemons[0].deferred_lease_count(), 2);
+        assert_eq!(daemons[0].stats.lease_batches, 0);
+        assert_eq!(daemons[0].migrate.state_counts(), (0, 0, 0));
+
+        // first use establishes BOTH deferred remotes in one batched
+        // control message (lease_batch_max = 16 covers them)
+        daemons[0].read(&mut sim, conns[0], 4096, 0, 1).unwrap();
+        assert!(daemons[0].creds_established(1));
+        assert!(daemons[0].creds_established(2));
+        assert_eq!(daemons[0].deferred_lease_count(), 0);
+        assert_eq!(daemons[0].stats.lease_batches, 1);
+        assert_eq!(daemons[0].stats.leases_established, 2);
+        assert_eq!(daemons[0].migrate.state_counts(), (2, 0, 0));
+
+        pump_all(&mut sim, &mut daemons);
+        assert_eq!(daemons[0].stats.ops_completed, 1);
+        assert_eq!(daemons[0].pool.leased_bytes, 0);
+    }
+
+    #[test]
+    fn disconnect_fail_fasts_inflight_ops() {
+        let (mut sim, mut daemons) = cluster(2);
+        let app = daemons[0].register_app();
+        let s = daemons[1].register_app();
+        daemons[1].listen(s, 1);
+        let conn = connect_via(&mut sim, &mut daemons, 0, app, 1, 1).unwrap();
+
+        // submit a read but disconnect before anything is posted
+        daemons[0].read(&mut sim, conn, 4096, 0, 42).unwrap();
+        assert_eq!(daemons[0].inflight_ops(), 1);
+        disconnect_via(&mut sim, &mut daemons, 0, conn).unwrap();
+        assert_eq!(daemons[0].inflight_ops(), 0, "op fail-fasted");
+        assert_eq!(daemons[0].pool.leased_bytes, 0, "lease released");
+        assert_eq!(daemons[0].stats.ops_failed, 1);
+        let d = daemons[0].recv(&mut sim, app).expect("failure delivered");
+        assert!(matches!(d, Delivery::OpComplete { ok: false, .. }), "{d:?}");
+        assert_eq!(daemons[0].conns.quarantined(), 1, "vQPN held until drain");
+
+        pump_all(&mut sim, &mut daemons);
+        assert_eq!(daemons[0].conns.quarantined(), 0);
+        assert_eq!(daemons[0].pooled_qp_count(), 1, "drained QP parked");
+        assert_eq!(daemons[0].stats.ops_completed, 0, "no ghost completion");
+        assert!(daemons[0].recv(&mut sim, app).is_none(), "exactly one delivery");
     }
 }

@@ -245,6 +245,14 @@ impl TransportManager {
         }
     }
 
+    /// Drop a destination whose last connection closed (tenant churn).
+    /// The entry leaves the pressure signal immediately; a later
+    /// reconnect re-registers it fresh on RC. No-op for unknown remotes,
+    /// so unregister/register interleavings are always safe.
+    pub fn unregister_dest(&mut self, remote: u32) {
+        self.dests.remove(remote);
+    }
+
     /// The structural working-set pressure against an ICM cache of
     /// `capacity` entries: `n` destinations need `n` resident RC
     /// contexts, which overflows the budget exactly when
@@ -263,7 +271,10 @@ impl TransportManager {
     pub fn pressure(&self, capacity: usize) -> f64 {
         let budget = (capacity as f64 * self.cfg.rc_share).max(1.0);
         let boost = if self.thrash { 2.0 } else { 1.0 };
-        self.next_rank.saturating_sub(1) as f64 * boost / budget
+        // live destinations, not lifetime registrations: under tenant
+        // churn departed destinations unregister, and counting ghosts
+        // would ratchet the pressure signal upward forever
+        self.dests.len().saturating_sub(1) as f64 * boost / budget
     }
 
     /// Feed the windowed ICM hit rate (None when the window had too few

@@ -39,6 +39,10 @@ pub struct ResourceSnapshot {
     pub conns: u32,
     /// Shared QPs (one per active remote node).
     pub shared_qps: u32,
+    /// Connection-table bytes (entry array + free/quarantine lists) —
+    /// under lazy leases this is the *entire* per-registered-vQPN cost of
+    /// an idle tenant, the fig-12 memory metric.
+    pub conn_table_bytes: u64,
 }
 
 /// The daemon's accounting state.

@@ -61,6 +61,13 @@ pub struct ConnEntry {
 pub struct ConnTable {
     entries: Vec<Option<ConnEntry>>,
     free: Vec<u32>,
+    /// vQPNs closed via [`ConnTable::close_quarantined`], held out of the
+    /// free list (with the remote they pointed at) until the daemon
+    /// declares that remote's shared QP drained. A quarantined vQPN can
+    /// never be re-issued while a frame stamped with it may still be in
+    /// flight — the recycled-vQPN half of the tenant-isolation argument
+    /// (DESIGN.md §12).
+    quarantine: Vec<(u32, u32)>,
     /// Connections per remote node (drives shared-QP reuse stats).
     per_remote: HashMap<u32, u32>,
     /// Lifetime opens.
@@ -122,6 +129,58 @@ impl ConnTable {
             }
             _ => false,
         }
+    }
+
+    /// Close a connection like [`ConnTable::close`], but quarantine the
+    /// vQPN instead of recycling it immediately: the entry is gone (demux
+    /// misses route to drop), yet the number cannot be re-issued until
+    /// [`ConnTable::release_quarantined`] declares its remote drained.
+    pub fn close_quarantined(&mut self, vqpn: Vqpn) -> Option<NodeId> {
+        match self.entries.get_mut(vqpn.0 as usize) {
+            Some(slot @ Some(_)) => {
+                let e = slot.take().unwrap();
+                self.closed += 1;
+                if let Some(c) = self.per_remote.get_mut(&e.remote.0) {
+                    *c -= 1;
+                }
+                self.quarantine.push((vqpn.0, e.remote.0));
+                Some(e.remote)
+            }
+            _ => None,
+        }
+    }
+
+    /// Return every quarantined vQPN that pointed at `remote` to the free
+    /// list (the daemon calls this once the remote's shared QP has no
+    /// in-flight WRs and no pending batch). Returns how many were freed.
+    pub fn release_quarantined(&mut self, remote: NodeId) -> usize {
+        let before = self.quarantine.len();
+        // order-preserving sweep keeps later free.pop() recycling
+        // deterministic across runs
+        let mut kept = Vec::with_capacity(before);
+        for (v, r) in self.quarantine.drain(..) {
+            if r == remote.0 {
+                self.free.push(v);
+            } else {
+                kept.push((v, r));
+            }
+        }
+        self.quarantine = kept;
+        before - self.quarantine.len()
+    }
+
+    /// vQPNs currently quarantined (awaiting their remote's drain).
+    pub fn quarantined(&self) -> usize {
+        self.quarantine.len()
+    }
+
+    /// Host memory the table itself occupies: the entry array plus the
+    /// free/quarantine lists. This is the entire per-registered-vQPN cost
+    /// of an idle tenant under lazy leases — the fig-12 memory metric.
+    pub fn table_mem_bytes(&self) -> u64 {
+        (self.entries.capacity() * std::mem::size_of::<Option<ConnEntry>>()
+            + self.free.capacity() * std::mem::size_of::<u32>()
+            + self.quarantine.capacity() * std::mem::size_of::<(u32, u32)>()) as u64
     }
 
     /// The Poller's demux: O(1).
@@ -217,5 +276,51 @@ mod tests {
         let a = t.open(1, NodeId(1), Vqpn(0));
         t.set_peer(a, Vqpn(42));
         assert_eq!(t.lookup(a).unwrap().peer_vqpn, Vqpn(42));
+    }
+
+    #[test]
+    fn quarantined_vqpn_is_not_recycled_until_release() {
+        let mut t = ConnTable::new();
+        let a = t.open(1, NodeId(1), Vqpn(0));
+        assert_eq!(t.close_quarantined(a), Some(NodeId(1)));
+        assert!(t.lookup(a).is_none(), "closed entry must not route");
+        assert_eq!(t.quarantined(), 1);
+        let b = t.open(1, NodeId(1), Vqpn(0));
+        assert_ne!(a, b, "quarantined vqpn must not be re-issued");
+        assert_eq!(t.release_quarantined(NodeId(1)), 1);
+        assert_eq!(t.quarantined(), 0);
+        t.close(b);
+        let c = t.open(1, NodeId(1), Vqpn(0));
+        // free list is LIFO: b was recycled after the release put a back
+        assert_eq!(c, b);
+        t.close(c);
+        let d = t.open(1, NodeId(1), Vqpn(0));
+        let e = t.open(1, NodeId(1), Vqpn(0));
+        assert_eq!(d, c);
+        assert_eq!(e, a, "released vqpn re-enters the allocator");
+    }
+
+    #[test]
+    fn release_only_frees_the_drained_remote() {
+        let mut t = ConnTable::new();
+        let a = t.open(1, NodeId(1), Vqpn(0));
+        let b = t.open(1, NodeId(2), Vqpn(0));
+        t.close_quarantined(a);
+        t.close_quarantined(b);
+        assert_eq!(t.quarantined(), 2);
+        assert_eq!(t.release_quarantined(NodeId(2)), 1);
+        assert_eq!(t.quarantined(), 1);
+        assert_eq!(t.release_quarantined(NodeId(2)), 0);
+        assert_eq!(t.release_quarantined(NodeId(1)), 1);
+    }
+
+    #[test]
+    fn double_close_quarantined_fails() {
+        let mut t = ConnTable::new();
+        let a = t.open(1, NodeId(1), Vqpn(0));
+        assert!(t.close_quarantined(a).is_some());
+        assert!(t.close_quarantined(a).is_none());
+        assert!(!t.close(a));
+        assert_eq!(t.active(), 0);
     }
 }

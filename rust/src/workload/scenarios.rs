@@ -12,7 +12,7 @@ use crate::fabric::sim::{FabricConfig, Notification, Sim};
 use crate::fabric::time::{gbps, Ns};
 use crate::fabric::types::NodeId;
 use crate::raas::api::Flags;
-use crate::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery};
+use crate::raas::daemon::{connect_via, disconnect_via, Daemon, DaemonConfig, Delivery};
 use crate::raas::transport::HostLoad;
 use crate::util::rng::Rng;
 use crate::util::stats::Histogram;
@@ -1259,6 +1259,300 @@ pub fn kv_storm(cfg: &KvCfg) -> KvRun {
     }
 }
 
+// ------------------------------------------------ Fig 12 (churn storm)
+
+/// Config for the tenant-churn experiment (fig 12): a seeded open-loop
+/// arrival process registers `conns` tenants across `hosts` client
+/// daemons. Most tenants go idle immediately (the multi-tenant reality
+/// the elastic control plane is built for); a working set issues a first
+/// READ, and a churning minority departs after a short lifetime and is
+/// replaced — the regime where QP reuse pools and lazy batched leases
+/// pay off. The clock of the arrival process is the *arrival index*, not
+/// fabric time: a million-tenant ramp cannot fit in a ms-scale fabric
+/// run, and what fig 12 measures is control-plane cost per connect
+/// (`DaemonStats::ctrl_ns`), which is charged CPU, not timeline events.
+#[derive(Clone, Debug)]
+pub struct ChurnCfg {
+    /// Total tenant arrivals — the fig-12 x axis, swept toward 10^6.
+    pub conns: usize,
+    /// Client daemons the arrivals round-robin across.
+    pub hosts: usize,
+    /// Destination daemons. Churners get the upper half of the server
+    /// range and the idle mass the lower half, so a churn destination's
+    /// connection count actually reaches zero (tenant locality); without
+    /// the split the idle mass would pin every shared QP forever and the
+    /// pool would never be exercised.
+    pub max_servers: usize,
+    /// Fraction of tenants that depart mid-run.
+    pub churn_frac: f64,
+    /// Churner lifetime in arrival counts (uniform on [1, 2·mean_life]).
+    pub mean_life: usize,
+    /// Fraction of tenants that issue a first READ on arrival.
+    pub active_frac: f64,
+    /// First-op payload.
+    pub msg_bytes: u64,
+    /// Workload RNG seed (runs replay bit-identically).
+    pub seed: u64,
+    /// Ablation: no QP pool (every reconnect is a full handshake) and
+    /// eager lease establishment at connect.
+    pub cold: bool,
+}
+
+impl Default for ChurnCfg {
+    fn default() -> Self {
+        ChurnCfg {
+            conns: 5_000,
+            hosts: 2,
+            max_servers: 16,
+            churn_frac: 0.25,
+            mean_life: 64,
+            active_frac: 0.05,
+            msg_bytes: 4096,
+            seed: 42,
+            cold: false,
+        }
+    }
+}
+
+/// One measured churn point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChurnRun {
+    /// Tenant arrivals of this point.
+    pub conns: usize,
+    /// Client daemons.
+    pub hosts: usize,
+    /// Destination daemons.
+    pub servers: usize,
+    /// Connection setup rate, thousands of conns/sec: arrivals divided
+    /// by the busiest host's setup control time (hosts run in parallel).
+    pub setup_kcps: f64,
+    /// Median time-to-first-byte for the working set, microseconds:
+    /// connect control cost + lazy-establishment cost + fabric RTT of
+    /// the first READ.
+    pub p50_ttfb_us: f64,
+    /// 99th-percentile time-to-first-byte, microseconds.
+    pub p99_ttfb_us: f64,
+    /// Host bytes per registered vQPN at end of run — the idle-tenant
+    /// footprint (client daemon memory over live connections).
+    pub mem_per_vqpn: f64,
+    /// Connection-table bytes per registered vQPN — the marginal cost
+    /// of one more idle tenant under lazy leases.
+    pub table_bytes_per_vqpn: f64,
+    /// Live registered vQPNs at end of run (the idle mass).
+    pub live_vqpns: u64,
+    /// Full RC handshakes the client hosts performed.
+    pub handshakes_full: u64,
+    /// Reconnects served from the QP reuse pool (no handshake).
+    pub qp_reused: u64,
+    /// Shared QPs parked into the pools.
+    pub qp_parked: u64,
+    /// Pooled QPs destroyed (LRU bound, unrevivable halves, cold mode).
+    pub qp_evicted: u64,
+    /// QPs parked in the pools at end of run.
+    pub pooled_qps: u64,
+    /// Lease-establishment control messages (each covers a batch).
+    pub lease_batches: u64,
+    /// Remotes whose pool credentials were established.
+    pub leases_established: u64,
+    /// Remotes still deferred (never sent) at end of run.
+    pub deferred_leases: u64,
+    /// CQEs dropped by the epoch gate (stale tenant generation).
+    pub stale_epoch_drops: u64,
+    /// Tenant departures processed.
+    pub disconnects: u64,
+    /// First-READ completions delivered.
+    pub ops_completed: u64,
+    /// Ops failed (first READ torn down by its tenant's departure).
+    pub ops_failed: u64,
+    /// Busiest host's total control-plane time, milliseconds.
+    pub ctrl_ms: f64,
+    /// Simulator events processed over the whole run.
+    pub events: u64,
+}
+
+/// Daemon config for the churn runs, both sides: migration off (the
+/// figure isolates the control plane), pool/lazy knobs per the ablation.
+/// Both endpoints must agree on pooling — a parked half is only
+/// revivable if the peer parked its half too.
+fn churn_daemon_cfg(cfg: &ChurnCfg) -> DaemonConfig {
+    let mut d = DaemonConfig::default();
+    d.migration.enabled = false;
+    d.lazy_leases = !cfg.cold;
+    d.qp_pool_max = if cfg.cold { 0 } else { 8 };
+    d
+}
+
+/// Drain the fabric: pump every daemon, deliver client completions
+/// (recording TTFB for first-READ tenants), step until the timeline is
+/// empty. Bounded so a logic bug can never hang the figure harness.
+fn churn_drain(
+    sim: &mut Sim,
+    daemons: &mut [Daemon],
+    hosts: usize,
+    apps: &[u32],
+    pending: &mut [Vec<Option<(Ns, u64)>>],
+    ttfb: &mut Histogram,
+) {
+    for _ in 0..100_000 {
+        for d in daemons.iter_mut() {
+            d.pump(sim);
+        }
+        for h in 0..hosts {
+            while let Some(del) = daemons[h].recv_zero_copy(sim, apps[h]) {
+                if let Delivery::OpComplete { conn, ok, .. } = del {
+                    if let Some(slot) = pending[h].get_mut(conn.0 as usize) {
+                        if let Some((t0, ctrl)) = slot.take() {
+                            if ok {
+                                ttfb.record(ctrl + sim.now().saturating_sub(t0).0);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if sim.step().is_none() {
+            for d in daemons.iter_mut() {
+                d.pump(sim);
+            }
+            if sim.pending_events() == 0 {
+                break;
+            }
+        }
+    }
+}
+
+/// Fig 12: the tenant churn storm. Warm mode (default) parks drained
+/// shared QPs for reuse and defers lease establishment to first use;
+/// `cold` replays the same seeded arrival tape with the pool disabled
+/// and eager leases — every churner reconnect pays the full RC
+/// handshake and every idle tenant pays lease state it never uses.
+pub fn churn_storm(cfg: &ChurnCfg) -> ChurnRun {
+    let hosts = cfg.hosts.max(1);
+    let servers = cfg.max_servers.max(2);
+    let mut fabric = FabricConfig::default();
+    fabric.nodes = hosts + servers;
+    fabric.sq_depth = 1024;
+    let mut sim = Sim::new(fabric);
+
+    let mut daemons: Vec<Daemon> = (0..hosts + servers)
+        .map(|i| Daemon::start(&mut sim, NodeId(i as u32), churn_daemon_cfg(cfg)))
+        .collect();
+    for d in daemons.iter_mut().skip(hosts) {
+        let app = d.register_app();
+        d.listen(app, 7000);
+    }
+    let apps: Vec<u32> = (0..hosts).map(|h| daemons[h].register_app()).collect();
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut offgen = OffsetGen::uniform(64 << 20, 4096);
+    let mut ttfb = Histogram::new();
+    // per-host: vqpn → (first-READ submit time, control ns already paid)
+    let mut pending: Vec<Vec<Option<(Ns, u64)>>> = vec![Vec::new(); hosts];
+    // departures bucketed by the arrival index they fire at
+    let life_span = 2 * cfg.mean_life.max(1) + 2;
+    let mut departs: Vec<Vec<(usize, crate::raas::vqpn::Vqpn)>> =
+        vec![Vec::new(); cfg.conns + life_span];
+    let mut setup_ns = vec![0u64; hosts];
+    let churn_servers = (servers / 2).max(1);
+
+    for k in 0..cfg.conns {
+        let h = k % hosts;
+        let churner = rng.chance(cfg.churn_frac);
+        // the k==0 pacer guarantees fabric traffic even at tiny scales
+        let active = rng.chance(cfg.active_frac) || k == 0;
+        // tenant locality: churners live on the upper server half
+        let s = if churner {
+            hosts + servers - churn_servers + rng.gen_range(churn_servers as u64) as usize
+        } else {
+            hosts + rng.gen_range((servers - churn_servers) as u64) as usize
+        };
+        let ctrl0 = daemons[h].stats.ctrl_ns + daemons[s].stats.ctrl_ns;
+        let conn = connect_via(&mut sim, &mut daemons, h, apps[h], s, 7000).unwrap();
+        let setup = daemons[h].stats.ctrl_ns + daemons[s].stats.ctrl_ns - ctrl0;
+        setup_ns[h] += setup;
+        if churner {
+            let life = 1 + rng.gen_range(2 * cfg.mean_life.max(1) as u64) as usize;
+            departs[k + life].push((h, conn));
+        }
+        if active {
+            let off = offgen.next(&mut rng, cfg.msg_bytes);
+            let c0 = daemons[h].stats.ctrl_ns;
+            if daemons[h].read(&mut sim, conn, cfg.msg_bytes, off, k as u64).is_ok() {
+                let first_use = daemons[h].stats.ctrl_ns - c0;
+                if conn.0 as usize >= pending[h].len() {
+                    pending[h].resize(conn.0 as usize + 1, None);
+                }
+                pending[h][conn.0 as usize] = Some((sim.now(), setup + first_use));
+            }
+        }
+        for (dh, dconn) in std::mem::take(&mut departs[k]) {
+            if let Some(slot) = pending[dh].get_mut(dconn.0 as usize) {
+                *slot = None; // the vQPN may be recycled; never misattribute
+            }
+            let _ = disconnect_via(&mut sim, &mut daemons, dh, dconn);
+        }
+        if k % 64 == 63 {
+            churn_drain(&mut sim, &mut daemons, hosts, &apps, &mut pending, &mut ttfb);
+        }
+    }
+    // late departures scheduled past the last arrival
+    for k in cfg.conns..cfg.conns + life_span {
+        for (dh, dconn) in std::mem::take(&mut departs[k]) {
+            if let Some(slot) = pending[dh].get_mut(dconn.0 as usize) {
+                *slot = None;
+            }
+            let _ = disconnect_via(&mut sim, &mut daemons, dh, dconn);
+        }
+    }
+    churn_drain(&mut sim, &mut daemons, hosts, &apps, &mut pending, &mut ttfb);
+
+    let mut live = 0u64;
+    let mut mem = 0u64;
+    let mut table = 0u64;
+    for h in 0..hosts {
+        let snap = daemons[h].snapshot(&sim);
+        live += snap.conns as u64;
+        mem += snap.mem_bytes;
+        table += snap.conn_table_bytes;
+    }
+    let worst_setup = setup_ns.iter().copied().max().unwrap_or(0);
+    let sum = |f: &dyn Fn(&Daemon) -> u64| daemons[..hosts].iter().map(|d| f(d)).sum::<u64>();
+    ChurnRun {
+        conns: cfg.conns,
+        hosts,
+        servers,
+        setup_kcps: if worst_setup == 0 {
+            0.0
+        } else {
+            cfg.conns as f64 / (worst_setup as f64 / 1e9) / 1e3
+        },
+        p50_ttfb_us: ttfb.p50() as f64 / 1e3,
+        p99_ttfb_us: ttfb.p99() as f64 / 1e3,
+        mem_per_vqpn: if live == 0 { 0.0 } else { mem as f64 / live as f64 },
+        table_bytes_per_vqpn: if live == 0 { 0.0 } else { table as f64 / live as f64 },
+        live_vqpns: live,
+        handshakes_full: sum(&|d| d.stats.handshakes_full),
+        qp_reused: sum(&|d| d.stats.qp_reused),
+        qp_parked: sum(&|d| d.stats.qp_parked),
+        qp_evicted: sum(&|d| d.stats.qp_evicted),
+        pooled_qps: sum(&|d| d.pooled_qp_count() as u64),
+        lease_batches: sum(&|d| d.stats.lease_batches),
+        leases_established: sum(&|d| d.stats.leases_established),
+        deferred_leases: sum(&|d| d.deferred_lease_count() as u64),
+        stale_epoch_drops: daemons.iter().map(|d| d.stats.stale_epoch_drops).sum(),
+        disconnects: sum(&|d| d.stats.conns_disconnected),
+        ops_completed: sum(&|d| d.stats.ops_completed),
+        ops_failed: sum(&|d| d.stats.ops_failed),
+        ctrl_ms: daemons[..hosts]
+            .iter()
+            .map(|d| d.stats.ctrl_ns)
+            .max()
+            .unwrap_or(0) as f64
+            / 1e6,
+        events: sim.steps_processed(),
+    }
+}
+
 /// Scheduler microbench workload for `bench simstep`: `pairs` RC QPs on
 /// one client streaming closed-loop WRITEs of `msg_bytes` at `window`
 /// outstanding each, across the default 4-node fabric. No daemon layer —
@@ -1649,6 +1943,51 @@ mod tests {
             rpc.server_cpu_cores,
             os.server_cpu_cores
         );
+    }
+
+    fn churn_quick(cold: bool) -> ChurnCfg {
+        let mut cfg = ChurnCfg::default();
+        cfg.conns = 2_000;
+        cfg.cold = cold;
+        cfg
+    }
+
+    #[test]
+    fn churn_storm_reuse_and_lazy_beat_cold() {
+        let warm = churn_storm(&churn_quick(false));
+        let cold = churn_storm(&churn_quick(true));
+        // the pool gets exercised and actually serves reconnects
+        assert!(warm.qp_parked > 0, "{warm:?}");
+        assert!(warm.qp_reused > 0, "{warm:?}");
+        assert_eq!(cold.qp_reused, 0, "cold mode must never revive: {cold:?}");
+        // every cold reconnect pays the full handshake
+        assert!(
+            cold.handshakes_full > warm.handshakes_full,
+            "cold must handshake more: {} vs {}",
+            cold.handshakes_full,
+            warm.handshakes_full
+        );
+        // …which is the fig-12 headline: warm setup rate wins
+        assert!(
+            warm.setup_kcps > cold.setup_kcps,
+            "reuse+lazy must beat cold setup rate: {:.1} vs {:.1} kcps",
+            warm.setup_kcps,
+            cold.setup_kcps
+        );
+        // lazy leases coalesce: never more control messages than remotes
+        // established; eager pays exactly one message per establishment
+        assert!(warm.lease_batches <= warm.leases_established, "{warm:?}");
+        assert_eq!(cold.lease_batches, cold.leases_established, "{cold:?}");
+        // the working set completed its first READs and the idle mass is
+        // registered at a per-vQPN cost far below any full connection
+        assert!(warm.ops_completed > 0, "{warm:?}");
+        assert!(warm.live_vqpns > 1000, "{warm:?}");
+        assert!(
+            warm.table_bytes_per_vqpn > 0.0 && warm.table_bytes_per_vqpn < 256.0,
+            "idle tenant must cost ~one table entry: {warm:?}"
+        );
+        // a late frame/CQE from a departed tenant never surfaces
+        assert_eq!(warm.disconnects, cold.disconnects, "same seeded tape");
     }
 
     #[test]

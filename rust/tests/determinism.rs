@@ -11,8 +11,8 @@
 use rdmavisor::fabric::time::Ns;
 use rdmavisor::figures::{self, Budget};
 use rdmavisor::workload::scenarios::{
-    chaos_send, kv_storm, locked_random_read, naive_random_read, raas_random_read, scale_send,
-    verbs_sweep_point, ChaosCfg, KvCfg, ScaleCfg, ScenarioCfg,
+    chaos_send, churn_storm, kv_storm, locked_random_read, naive_random_read, raas_random_read,
+    scale_send, verbs_sweep_point, ChaosCfg, ChurnCfg, KvCfg, ScaleCfg, ScenarioCfg,
 };
 
 /// Run one figure id end-to-end on `jobs` threads and serialize
@@ -150,6 +150,56 @@ fn fig11_one_sided_beats_rpc_at_scale() {
 }
 
 #[test]
+fn fig12_replays_byte_identically() {
+    // the elastic control plane end-to-end: seeded arrival/departure
+    // tape, QP park/revive bookkeeping, lazy lease batching, epoch
+    // stamps — all under one seed, warm and cold interleaved
+    assert_fig_deterministic(12);
+}
+
+#[test]
+fn fig12_cold_only_replays_byte_identically() {
+    // the `fig --id 12 --cold` CLI path (no-pool/eager-lease ablation)
+    let run = || {
+        let rows = figures::fig12_cold_only(Budget::Quick, 1);
+        format!(
+            "{}\n{}",
+            figures::fig12_series(&rows).to_json().to_string(),
+            figures::print_fig12(&rows)
+        )
+    };
+    assert_eq!(run(), run(), "fig --id 12 --cold differed between runs");
+}
+
+#[test]
+fn fig12_warm_beats_cold_at_scale() {
+    // the PR-7 acceptance gate: at the biggest quick point, QP reuse +
+    // lazy batched leases must beat the cold path on setup rate, and an
+    // idle registered vQPN must cost far less than any full connection
+    // (the fig-7 naive footprint is a QP ring pair — tens of KB)
+    let rows = figures::fig12(Budget::Quick, 1);
+    let row = rows.last().expect("non-empty sweep");
+    let warm = row.warm.as_ref().expect("warm column present");
+    assert!(
+        warm.setup_kcps > row.cold.setup_kcps,
+        "{} conns: warm {:.1} kcps must beat cold {:.1} kcps",
+        row.conns,
+        warm.setup_kcps,
+        row.cold.setup_kcps
+    );
+    assert!(warm.qp_reused > 0, "the pool must serve reconnects: {warm:?}");
+    assert_eq!(row.cold.qp_reused, 0, "cold mode must never revive: {:?}", row.cold);
+    assert!(
+        warm.table_bytes_per_vqpn > 0.0 && warm.table_bytes_per_vqpn < 1024.0,
+        "idle tenant must cost ~one table entry: {warm:?}"
+    );
+    assert!(
+        warm.mem_per_vqpn < 16_384.0,
+        "per-vQPN footprint must stay below a full connection's: {warm:?}"
+    );
+}
+
+#[test]
 fn fig9_rc_only_replays_byte_identically() {
     // the `fig --id 9 --rc-only` CLI path (ablation series alone), at the
     // same quick budget the CI smoke uses
@@ -228,6 +278,11 @@ fn fig11_rc_only_parallel_matches_serial() {
         )
     };
     assert_eq!(run(1), run(4), "fig 11 --rc-only: --jobs 4 != --jobs 1");
+}
+
+#[test]
+fn fig12_parallel_matches_serial() {
+    assert_eq!(fig_bytes_jobs(12, 1), fig_bytes_jobs(12, 4), "fig 12: --jobs 4 != --jobs 1");
 }
 
 // ------------------------------------------------------ scenario drivers
@@ -326,6 +381,24 @@ fn kv_scenario_replays_byte_identically() {
     cfg.rpc = true;
     let a = format!("{:?}", kv_storm(&cfg));
     let b = format!("{:?}", kv_storm(&cfg));
+    assert_eq!(a, b);
+}
+
+#[test]
+fn churn_scenario_replays_byte_identically() {
+    // the churn driver on its own (outside the figure harness): arrival
+    // RNG, departure buckets, park/revive order, lease backlog order and
+    // the TTFB histogram must all replay from the seed — both modes
+    let mut cfg = ChurnCfg::default();
+    cfg.conns = 1_500;
+    let a = format!("{:?}", churn_storm(&cfg));
+    let b = format!("{:?}", churn_storm(&cfg));
+    assert_eq!(a, b);
+
+    // the cold ablation too
+    cfg.cold = true;
+    let a = format!("{:?}", churn_storm(&cfg));
+    let b = format!("{:?}", churn_storm(&cfg));
     assert_eq!(a, b);
 }
 

@@ -11,7 +11,7 @@ use rdmavisor::fabric::types::{NodeId, QpTransport, WcStatus};
 use rdmavisor::fabric::verbs;
 use rdmavisor::fabric::wqe::SendWr;
 use rdmavisor::raas::api::{Flags, RaasError};
-use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery};
+use rdmavisor::raas::daemon::{connect_via, disconnect_via, Daemon, DaemonConfig, Delivery};
 use rdmavisor::raas::transport::HostLoad;
 
 /// Two-node RC harness: (cq0, cq1, qpn0, qpn1, local mr, remote mr).
@@ -561,6 +561,191 @@ fn server_restart_recovers_and_client_completes_everything() {
         "every op completes (ok or failed), none hangs"
     );
     assert_eq!(daemons[0].pool.leased_bytes, 0);
+}
+
+// ------------------------------------- elastic control plane × faults
+
+#[test]
+fn client_restart_mid_establishment_leaves_no_orphaned_qp_or_lease() {
+    // the client restarts 5 µs in — while the lazily-deferred lease batch
+    // and the first RC ops are still in flight. The stale-lease sweep
+    // fails the stranded ops, disconnect parks the drained QP, and the
+    // reuse pool must hold no orphan: a reconnect to the same remote
+    // revives the parked QP and completes new work on it
+    let mut cfg = DaemonConfig::default();
+    cfg.migration.enabled = false;
+    cfg.lazy_leases = true;
+    cfg.qp_pool_max = 4;
+    cfg.lease_timeout_ns = 200_000;
+    let (mut sim, mut daemons) = lossy_cluster(
+        FaultConfig { seed: 41, restarts: vec![(0, 5_000)], ..FaultConfig::default() },
+        cfg.clone(),
+        cfg,
+    );
+    let c_app = daemons[0].register_app();
+    let s_app = daemons[1].register_app();
+    daemons[1].listen(s_app, 1);
+    let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+    assert!(!daemons[0].creds_established(1), "lazy: connect must not establish");
+
+    // first read triggers the batched establishment; the 5 µs restart
+    // lands under this burst
+    for i in 0..32u64 {
+        daemons[0].read(&mut sim, conn, 2048, i * 4096, i).unwrap();
+    }
+    daemons[0].pump(&mut sim);
+    pump_to_quiescence(&mut sim, &mut daemons);
+    // advance past the lease deadline so the sweep reclaims strays
+    sim.schedule(Ns(1_000_000), 1);
+    while sim.step().is_some() {}
+    daemons[0].pump(&mut sim);
+    assert_eq!(sim.node(NodeId(0)).restarts, 1);
+    assert_eq!(daemons[0].pool.leased_bytes, 0, "no lease survives the reclaim");
+    assert_eq!(daemons[0].inflight_ops(), 0, "no op stuck in the slab");
+
+    // teardown parks the drained QP on both sides…
+    disconnect_via(&mut sim, &mut daemons, 0, conn).unwrap();
+    pump_to_quiescence(&mut sim, &mut daemons);
+    for d in &daemons {
+        assert!(d.pooled_qp_count() <= 4, "pool over bound: {}", d.pooled_qp_count());
+        assert_eq!(d.conns.active(), 0);
+        assert_eq!(d.conns.quarantined(), 0, "quarantine must drain after parting");
+    }
+    assert!(daemons[0].stats.qp_parked > 0, "the drained QP must be parked, not lost");
+
+    // …and the parked half is revivable, not an orphan: reconnect rides
+    // it and fresh work completes. Flush the stranded-op deliveries first
+    // so the post-reconnect inbox holds exactly the fresh op's completion
+    while daemons[0].recv_zero_copy(&mut sim, c_app).is_some() {}
+    let conn2 = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+    assert!(daemons[0].stats.qp_reused >= 1, "reconnect must revive the parked QP");
+    daemons[0].read(&mut sim, conn2, 2048, 0, 1_000).unwrap();
+    pump_to_quiescence(&mut sim, &mut daemons);
+    let mut fresh = Vec::new();
+    while let Some(d) = daemons[0].recv_zero_copy(&mut sim, c_app) {
+        fresh.push(d);
+    }
+    assert!(
+        matches!(fresh[..], [Delivery::OpComplete { ok: true, .. }]),
+        "work on the revived QP must complete exactly once: {fresh:?}"
+    );
+    disconnect_via(&mut sim, &mut daemons, 0, conn2).unwrap();
+    pump_to_quiescence(&mut sim, &mut daemons);
+    assert_eq!(daemons[0].pool.leased_bytes, 0);
+}
+
+#[test]
+fn link_flap_during_batched_lease_establishment_is_all_or_nothing() {
+    // the client↔server-1 link is dark while the deferred lease batch and
+    // the first ops go out. Whatever the fabric does, the credential
+    // ledger is never partial: the first use drains the whole backlog in
+    // ONE coalesced control message, both remotes end fully established
+    // (creds_established cross-checks both ledger halves internally), and
+    // every accepted op completes exactly once through the flap
+    let mut cfg = DaemonConfig::default();
+    cfg.migration.enabled = false;
+    cfg.lazy_leases = true;
+    cfg.lease_batch_max = 8;
+    let mut fcfg = FabricConfig::default();
+    fcfg.nodes = 3;
+    fcfg.sq_depth = 8192;
+    let mut sim = Sim::new(fcfg);
+    sim.install_faults(FaultConfig {
+        seed: 43,
+        flaps: vec![Flap { src: NodeId(0), dst: NodeId(1), from: Ns(0), until: Ns(300_000) }],
+        ..FaultConfig::default()
+    });
+    let mut daemons: Vec<Daemon> = (0..3)
+        .map(|i| Daemon::start(&mut sim, NodeId(i), cfg.clone()))
+        .collect();
+    let c_app = daemons[0].register_app();
+    for s in 1..3 {
+        let sapp = daemons[s].register_app();
+        daemons[s].listen(sapp, 1);
+    }
+    // two tenants per remote, all creds deferred at connect
+    let c1a = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+    let _c1b = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+    let _c2a = connect_via(&mut sim, &mut daemons, 0, c_app, 2, 1).unwrap();
+    assert_eq!(daemons[0].deferred_lease_count(), 2, "both remotes deferred");
+    assert!(!daemons[0].creds_established(1));
+    assert!(!daemons[0].creds_established(2));
+
+    // first use of remote 1 mid-flap: establishment + 12 reads
+    let n = 12u64;
+    for i in 0..n {
+        daemons[0].read(&mut sim, c1a, 2048, i * 4096, i).unwrap();
+    }
+    pump_to_quiescence(&mut sim, &mut daemons);
+
+    // all-or-nothing, batch-wide: one control message established BOTH
+    // backlogged remotes — no remote is ever left half-installed
+    assert!(daemons[0].creds_established(1), "touched remote must be fully established");
+    assert!(daemons[0].creds_established(2), "backlogged remote rides the same batch");
+    assert_eq!(daemons[0].deferred_lease_count(), 0, "the batch drains the backlog");
+    assert_eq!(daemons[0].stats.lease_batches, 1, "exactly one coalesced control message");
+    assert_eq!(daemons[0].stats.leases_established, 2);
+
+    // exactly-once through the flap: one completion per accepted op
+    // (ops_completed counts every CQE-resolved op, ok or retry-exhausted)
+    assert!(sim.node(NodeId(0)).retransmits > 0, "the flap must force retransmissions");
+    assert_eq!(daemons[0].stats.ops_completed, n);
+    let mut seen = std::collections::HashSet::new();
+    while let Some(d) = daemons[0].recv_zero_copy(&mut sim, c_app) {
+        let Delivery::OpComplete { tag, .. } = d else { panic!("{d:?}") };
+        assert!(seen.insert(tag), "tag {tag} completed twice");
+    }
+    assert_eq!(seen.len() as u64, n);
+    assert_eq!(daemons[0].pool.leased_bytes, 0);
+}
+
+#[test]
+fn churn_under_loss_keeps_exactly_once_completions() {
+    // connect → read burst → disconnect cycles on a 5%-lossy fabric, with
+    // the reuse pool reviving the parked QP every round: RC retransmission
+    // under the epoch-stamped QP must deliver exactly one completion per
+    // op — never a duplicate, never a prior tenant's — and park/revive
+    // must not strand a single lease
+    let mut cfg = DaemonConfig::default();
+    cfg.migration.enabled = false;
+    cfg.lazy_leases = true;
+    cfg.qp_pool_max = 2;
+    let (mut sim, mut daemons) = lossy_cluster(
+        FaultConfig { seed: 47, drop_p: 0.05, ..FaultConfig::default() },
+        cfg.clone(),
+        cfg,
+    );
+    let c_app = daemons[0].register_app();
+    let s_app = daemons[1].register_app();
+    daemons[1].listen(s_app, 1);
+
+    let rounds = 8u64;
+    let per_round = 6u64;
+    let mut seen = std::collections::HashSet::new();
+    for r in 0..rounds {
+        let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+        for i in 0..per_round {
+            daemons[0].read(&mut sim, conn, 2048, i * 4096, r * 100 + i).unwrap();
+        }
+        pump_to_quiescence(&mut sim, &mut daemons);
+        while let Some(d) = daemons[0].recv_zero_copy(&mut sim, c_app) {
+            let Delivery::OpComplete { tag, .. } = d else { panic!("{d:?}") };
+            assert!(seen.insert(tag), "tag {tag} delivered twice (round {r})");
+        }
+        disconnect_via(&mut sim, &mut daemons, 0, conn).unwrap();
+        pump_to_quiescence(&mut sim, &mut daemons);
+    }
+
+    assert_eq!(seen.len() as u64, rounds * per_round, "one completion per op, none lost");
+    assert_eq!(daemons[0].stats.ops_completed, rounds * per_round);
+    assert!(daemons[0].stats.qp_reused >= rounds - 1, "each round must revive the parked QP");
+    assert!(sim.node(NodeId(0)).retransmits > 0, "5% loss must force retransmissions");
+    for d in &daemons {
+        assert_eq!(d.pool.leased_bytes, 0, "park/revive churn must not strand leases");
+        assert_eq!(d.conns.active(), 0);
+        assert_eq!(d.conns.quarantined(), 0);
+        assert!(d.pooled_qp_count() <= 2);
+    }
 }
 
 #[test]

@@ -7,7 +7,9 @@ use rdmavisor::fabric::sim::{FabricConfig, Sim};
 use rdmavisor::fabric::time::Ns;
 use rdmavisor::fabric::types::{NodeId, QpTransport, Verb, WcStatus};
 use rdmavisor::raas::api::{Flags, RaasError};
-use rdmavisor::raas::daemon::{connect_via, Daemon, DaemonConfig, Delivery, WindowToken};
+use rdmavisor::raas::daemon::{
+    connect_via, disconnect_via, Daemon, DaemonConfig, Delivery, WindowToken,
+};
 use rdmavisor::raas::migrate::{decide, DestState, MigrationConfig, Reassembler};
 use rdmavisor::raas::opslab::{unpack_op_slot, untracked_wr_id, OpSlab};
 use rdmavisor::raas::shmem::SpscRing;
@@ -508,6 +510,175 @@ fn prop_window_lease_accounting_balances() {
         }
         if delivered != accepted {
             return Err(format!("{delivered} completions for {accepted} accepted ops"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qp_reuse_never_aliases_tenants() {
+    // ∀ random connect/read/disconnect/drain interleavings over a tiny
+    // pool (qp_pool_max = 2, lazy + batched leases) that parks, revives
+    // and evicts shared RC QPs constantly:
+    //  - the reuse pool never exceeds its configured bound, on any host;
+    //  - a completion is only ever attributed to the tenant that issued
+    //    the op — a recycled vQPN slot or a revived RC QP never surfaces
+    //    a prior tenant's frame, CQE or lease (the §12 epoch gate);
+    //  - after tearing every tenant down and quiescing, all ledgers are
+    //    zero: no live conns, no quarantined slots, no leased bytes, no
+    //    in-flight ops, no deferred lease offers.
+    // per-slot op ledger: `budget[v]` = completions the slot's CURRENT
+    // tenant is still owed. vQPN slots recycle verbatim (bare indices),
+    // so a prior tenant's frame surfacing on a recycled slot shows up as
+    // a completion the new tenant never paid for — budget underflow.
+    type Budget = std::collections::HashMap<u32, u64>;
+
+    fn pop_and_check(
+        sim: &mut Sim,
+        daemons: &mut [Daemon],
+        app: u32,
+        budget: &mut Budget,
+    ) -> Result<(), String> {
+        while let Some(d) = daemons[0].recv_zero_copy(sim, app) {
+            if let Delivery::OpComplete { conn, .. } = d {
+                // unowned slot = the issuer already departed (its own
+                // fail-fast or late completion) — harmless. An OWNED slot
+                // must be owed: zero budget means a prior tenant's CQE or
+                // frame leaked through the epoch gate.
+                if let Some(b) = budget.get_mut(&conn.0) {
+                    if *b == 0 {
+                        return Err(format!(
+                            "completion on {conn:?} its current tenant never \
+                             issued — prior-tenant leak through a recycled \
+                             vQPN or revived QP"
+                        ));
+                    }
+                    *b -= 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn quiesce(sim: &mut Sim, daemons: &mut [Daemon]) {
+        for _ in 0..200_000 {
+            for d in daemons.iter_mut() {
+                d.pump(sim);
+            }
+            if sim.step().is_none() {
+                for d in daemons.iter_mut() {
+                    d.pump(sim);
+                }
+                if sim.pending_events() == 0 {
+                    return;
+                }
+            }
+        }
+        panic!("cluster did not quiesce");
+    }
+
+    let gen = VecGen { elem: U64Range(0, 999), min_len: 20, max_len: 160 };
+    check(67, 20, &gen, |script: &Vec<u64>| {
+        const SERVERS: usize = 3;
+        let mut fcfg = FabricConfig::default();
+        fcfg.nodes = 1 + SERVERS as u32;
+        fcfg.sq_depth = 1024;
+        let mut sim = Sim::new(fcfg);
+        let mut dcfg = DaemonConfig::default();
+        dcfg.migration.enabled = false;
+        dcfg.qp_pool_max = 2; // tiny: force LRU eviction under churn
+        dcfg.lazy_leases = true;
+        dcfg.lease_batch_max = 4;
+        let mut daemons: Vec<Daemon> = (0..=SERVERS)
+            .map(|i| Daemon::start(&mut sim, NodeId(i as u32), dcfg.clone()))
+            .collect();
+        for s in 1..=SERVERS {
+            let sapp = daemons[s].register_app();
+            daemons[s].listen(sapp, 7);
+        }
+        let app = daemons[0].register_app();
+
+        let mut live: Vec<Vqpn> = Vec::new();
+        let mut budget: Budget = Budget::new();
+
+        for (i, &op) in script.iter().enumerate() {
+            match op % 100 {
+                0..=29 if live.len() < 12 => {
+                    let server = 1 + (op as usize % SERVERS);
+                    let conn = connect_via(&mut sim, &mut daemons, 0, app, server, 7)
+                        .map_err(|e| format!("connect: {e}"))?;
+                    budget.insert(conn.0, 0);
+                    live.push(conn);
+                }
+                30..=64 if !live.is_empty() => {
+                    let conn = live[(op as usize + i) % live.len()];
+                    // Err (pool pressure) is fine; an accepted op is owed
+                    // exactly one completion to exactly this tenant
+                    if daemons[0]
+                        .read(&mut sim, conn, 2048, (op * 4096) % (1 << 20), op)
+                        .is_ok()
+                    {
+                        *budget.get_mut(&conn.0).expect("live conn has a ledger") += 1;
+                    }
+                }
+                65..=84 if !live.is_empty() => {
+                    let idx = (op as usize + i) % live.len();
+                    let conn = live.swap_remove(idx);
+                    // flush deliveries already attributed to live slots,
+                    // THEN retire the ledger — the disconnect's fail-fast
+                    // completions land on a now-unowned slot
+                    pop_and_check(&mut sim, &mut daemons, app, &mut budget)?;
+                    budget.remove(&conn.0);
+                    disconnect_via(&mut sim, &mut daemons, 0, conn)
+                        .map_err(|e| format!("disconnect: {e}"))?;
+                    pop_and_check(&mut sim, &mut daemons, app, &mut budget)?;
+                }
+                _ => {
+                    quiesce(&mut sim, &mut daemons);
+                    pop_and_check(&mut sim, &mut daemons, app, &mut budget)?;
+                }
+            }
+            for d in daemons.iter() {
+                if d.pooled_qp_count() > 2 {
+                    return Err(format!(
+                        "reuse pool over bound: {} parked QPs",
+                        d.pooled_qp_count()
+                    ));
+                }
+            }
+        }
+
+        // full teardown: every tenant departs, then the fabric quiesces
+        pop_and_check(&mut sim, &mut daemons, app, &mut budget)?;
+        for conn in live.drain(..) {
+            budget.remove(&conn.0);
+            disconnect_via(&mut sim, &mut daemons, 0, conn)
+                .map_err(|e| format!("final disconnect: {e}"))?;
+        }
+        quiesce(&mut sim, &mut daemons);
+        pop_and_check(&mut sim, &mut daemons, app, &mut budget)?;
+        for (h, d) in daemons.iter().enumerate() {
+            if d.conns.active() != 0 {
+                return Err(format!("host {h}: {} conns survived teardown", d.conns.active()));
+            }
+            if d.conns.quarantined() != 0 {
+                return Err(format!(
+                    "host {h}: {} vQPN slots stuck in quarantine",
+                    d.conns.quarantined()
+                ));
+            }
+            if d.pool.leased_bytes != 0 {
+                return Err(format!("host {h}: {} leased bytes leaked", d.pool.leased_bytes));
+            }
+            if d.inflight_ops() != 0 {
+                return Err(format!("host {h}: {} ops stuck in flight", d.inflight_ops()));
+            }
+            if d.deferred_lease_count() != 0 {
+                return Err(format!(
+                    "host {h}: {} lease offers still deferred",
+                    d.deferred_lease_count()
+                ));
+            }
         }
         Ok(())
     });

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Produce BENCH_PR7.json: the fig-12 elastic-control-plane benchmark —
+# tenant setup rate (conns/sec) and p99 time-to-first-byte with the QP
+# reuse pool + lazy batched leases, against the cold ablation (full
+# handshake + eager leases per tenant), plus idle memory-per-vQPN and
+# the reuse/handshake/batching counters at each tenant count. CI runs
+# this with --quick and uploads the JSON plus the rendered markdown
+# (scripts/perf_table.py takes any number of BENCH_*.json inputs); run
+# it with no arguments on a quiet machine for the full-sweep numbers
+# quoted in README.md. Measurement stays at --jobs 1 (the serial
+# runner) so the per-point wall clocks are uncontended.
+#
+#   scripts/bench_pr7.sh [--quick] [OUT.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+quick=""
+out="BENCH_PR7.json"
+for arg in "$@"; do
+    case "$arg" in
+        --quick) quick="--quick" ;;
+        *) out="$arg" ;;
+    esac
+done
+
+cargo build --release
+cargo run --quiet --release -- bench churn $quick --out "$out" >/dev/null
+
+echo "wrote $out"

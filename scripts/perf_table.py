@@ -1,9 +1,10 @@
 #!/usr/bin/env python3
 """Render one or more BENCH_*.json artifacts (from `rdmavisor bench
-fig9` / `rdmavisor bench kv` / bench_pr3.sh / bench_pr5.sh /
-bench_pr6.sh) as the markdown perf tables README.md quotes. Stdlib only.
+fig9` / `rdmavisor bench kv` / `rdmavisor bench churn` / bench_pr3.sh /
+bench_pr5.sh / bench_pr6.sh / bench_pr7.sh) as the markdown perf tables
+README.md quotes. Stdlib only.
 
-    python3 scripts/perf_table.py BENCH_PR5.json BENCH_PR6.json > BENCH_PR6.md
+    python3 scripts/perf_table.py BENCH_PR5.json BENCH_PR6.json BENCH_PR7.json > BENCH_PR6.md
 
 Each input gets its own section (headed by the file name), so one
 markdown artifact can carry the whole recorded perf trajectory. CI runs
@@ -48,6 +49,46 @@ def render_kv(doc: dict) -> None:
     print(
         f"\nTotal: {total_ops:.0f} app-level KV ops in {total_wall:.0f} ms "
         f"({ops_s:.0f} sim-ops/sec of host wall clock)."
+    )
+
+
+def render_churn(doc: dict) -> None:
+    """The `bench churn` artifact: fig-12 elastic-control-plane sweep."""
+    budget = doc.get("budget", "?")
+    jobs = doc.get("jobs")
+    suffix = f", jobs: {jobs:.0f}" if jobs is not None else ""
+    print(f"### Fig-12 tenant churn: warm (QP reuse + lazy leases) vs cold (budget: {budget}{suffix})\n")
+    print(
+        "| conns | hosts | wall ms | warm kcps | cold kcps "
+        "| warm p99 TTFB µs | cold p99 TTFB µs | warm B/vQPN | cold B/vQPN "
+        "| QPs reused | full handshakes | lease batches |"
+    )
+    print("|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|")
+    for p in doc.get("points", []):
+        print(
+            "| {conns:.0f} | {hosts:.0f} | {wall_ms:.1f} | {wk:.1f} | {ck:.1f} "
+            "| {wp99:.1f} | {cp99:.1f} | {wmem:.0f} | {cmem:.0f} "
+            "| {reused:.0f} | {hs:.0f} | {lb:.0f} |".format(
+                conns=p.get("conns", 0),
+                hosts=p.get("hosts", 0),
+                wall_ms=p.get("wall_ms", 0),
+                wk=p.get("warm_setup_kcps", 0) or 0,
+                ck=p.get("cold_setup_kcps", 0) or 0,
+                wp99=p.get("warm_p99_ttfb_us", 0) or 0,
+                cp99=p.get("cold_p99_ttfb_us", 0) or 0,
+                wmem=p.get("warm_mem_per_vqpn", 0) or 0,
+                cmem=p.get("cold_mem_per_vqpn", 0) or 0,
+                reused=p.get("qp_reused", 0) or 0,
+                hs=p.get("handshakes_full", 0) or 0,
+                lb=p.get("lease_batches", 0) or 0,
+            )
+        )
+    total_conns = doc.get("total_conns", 0)
+    total_wall = doc.get("total_wall_ms", 0)
+    cps = doc.get("conns_per_sec", 0) or 0
+    print(
+        f"\nTotal: {total_conns:.0f} tenant setups in {total_wall:.0f} ms "
+        f"({cps:.0f} sim-conns/sec of host wall clock)."
     )
 
 
@@ -122,15 +163,22 @@ def render(path: str) -> bool:
         return False
 
     print(f"## {path}\n")
-    if doc.get("mode") == "kv":
+    mode = doc.get("mode")
+    if mode == "kv":
         render_kv(doc)
+    elif mode == "churn":
+        render_churn(doc)
     else:
         render_fig9(doc)
     return True
 
 
 def main() -> int:
-    paths = sys.argv[1:] if len(sys.argv) > 1 else ["BENCH_PR5.json", "BENCH_PR6.json"]
+    paths = (
+        sys.argv[1:]
+        if len(sys.argv) > 1
+        else ["BENCH_PR5.json", "BENCH_PR6.json", "BENCH_PR7.json"]
+    )
     ok = True
     for i, path in enumerate(paths):
         if i:

@@ -118,6 +118,28 @@ case "$out11" in
     *) echo "FAIL: unexpected fig 11 output: ${out11:0:120}" >&2; exit 1 ;;
 esac
 
+echo "== smoke: fig 12 (elastic control plane under tenant churn) =="
+out12="$(cargo run --quiet --release -- fig --id 12 --quick 2>/dev/null)"
+case "$out12" in
+    '{"budget"'*|'{'*'"command":"fig"'*)
+        case "$out12" in
+            *'"fig12_churn"'*) echo "ok: fig --id 12 printed the fig12_churn series" ;;
+            *) echo "FAIL: fig 12 JSON lacks the fig12_churn series: ${out12:0:160}" >&2; exit 1 ;;
+        esac ;;
+    *) echo "FAIL: unexpected fig 12 output: ${out12:0:120}" >&2; exit 1 ;;
+esac
+
+echo "== smoke: bench churn (tenant setup rate -> JSON) =="
+# --out to a temp file so the smoke never clobbers a tracked BENCH_PR7.json
+churn_tmp="$(mktemp)"
+outch="$(cargo run --quiet --release -- bench churn --quick --out "$churn_tmp" 2>/dev/null)"
+rm -f "$churn_tmp"
+# jsonmini sorts object keys, so "conns_per_sec" precedes "mode" in the doc
+case "$outch" in
+    *'"conns_per_sec"'*'"mode":"churn"'*) echo "ok: bench churn printed setup-rate JSON" ;;
+    *) echo "FAIL: unexpected bench churn output: ${outch:0:120}" >&2; exit 1 ;;
+esac
+
 echo "== smoke: bench kv (app-level KV throughput -> JSON) =="
 # --out to a temp file so the smoke never clobbers a tracked BENCH_PR6.json
 kv_tmp="$(mktemp)"
