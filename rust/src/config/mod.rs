@@ -47,6 +47,7 @@ const KNOWN_KEYS: &[&str] = &[
     "fabric.link_gbps",
     "fabric.mtu",
     "fabric.switch_latency_ns",
+    "fabric.shards",
     "fabric.sq_depth",
     "fabric.rq_depth",
     "fabric.max_outstanding",
@@ -85,6 +86,7 @@ fn apply(t: &Table, cfg: &mut Config) {
     f.link_gbps = t.float_or("fabric.link_gbps", f.link_gbps);
     f.mtu = t.int_or("fabric.mtu", f.mtu as i64) as u64;
     f.switch_latency_ns = t.int_or("fabric.switch_latency_ns", f.switch_latency_ns as i64) as u64;
+    f.shards = t.int_or("fabric.shards", f.shards as i64) as usize;
     f.sq_depth = t.int_or("fabric.sq_depth", f.sq_depth as i64) as usize;
     f.rq_depth = t.int_or("fabric.rq_depth", f.rq_depth as i64) as usize;
     f.max_outstanding = t.int_or("fabric.max_outstanding", f.max_outstanding as i64) as usize;
@@ -122,6 +124,7 @@ cores_per_node = 24     # 4x Xeon, 24 cores total
 link_gbps = 40.0        # 40 Gb ConnectX-3 RoCE
 mtu = 4096
 switch_latency_ns = 1000
+shards = 1              # parallel simulator partitions (0 = all cores)
 
 [nic]
 icm_cache_entries = 400 # QP-context cache capacity (Fig 5's knee)
@@ -165,6 +168,13 @@ mod tests {
     fn unknown_keys_rejected() {
         let err = from_str("[fabric]\nbogus = 1\n").unwrap_err();
         assert!(err.contains("unknown config key"), "{err}");
+    }
+
+    #[test]
+    fn shards_key_parses_and_inherits() {
+        let cfg = from_str("[fabric]\nshards = 4\n").unwrap();
+        assert_eq!(cfg.fabric.shards, 4);
+        assert_eq!(cfg.scenario.fabric.shards, 4);
     }
 
     #[test]

@@ -143,6 +143,20 @@ pub struct FaultStats {
     pub restarts: u64,
 }
 
+impl FaultStats {
+    /// Fold another counter block into this one. The sharded simulator
+    /// keeps one [`FaultState`] per destination node and sums the forks
+    /// (in node order) when asked for plan-wide totals.
+    pub fn absorb(&mut self, other: &FaultStats) {
+        self.frames_dropped += other.frames_dropped;
+        self.drops_iid += other.drops_iid;
+        self.drops_burst += other.drops_burst;
+        self.drops_flap += other.drops_flap;
+        self.frames_delayed += other.frames_delayed;
+        self.restarts += other.restarts;
+    }
+}
+
 /// The compiled, running fault plan. Owned by the simulator; consulted
 /// once per frame at delivery time.
 #[derive(Clone, Debug)]
@@ -164,6 +178,20 @@ impl FaultState {
     pub fn new(cfg: FaultConfig) -> Self {
         let rng = Rng::new(cfg.seed ^ 0xFA11_7EC7_0000_0001);
         FaultState { cfg, rng, burst_left: HashMap::new(), stats: FaultStats::default() }
+    }
+
+    /// Compile the per-destination-node fork of a (non-null) plan. The
+    /// sharded simulator consults faults where frames *land*, so each
+    /// destination node owns an independent RNG stream forked off the
+    /// plan seed and its node id — the draw sequence a node sees then
+    /// depends only on the frames delivered *to that node*, which the
+    /// conservative barriers order identically under every shard count.
+    /// (This re-keys the fault timeline relative to the old single-stream
+    /// simulator — a deliberate re-baseline; see DESIGN.md §13.)
+    pub fn for_node(cfg: &FaultConfig, node: NodeId) -> Self {
+        let lane = (node.0 as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let rng = Rng::new(cfg.seed ^ 0xFA11_7EC7_0000_0001 ^ lane);
+        FaultState { cfg: cfg.clone(), rng, burst_left: HashMap::new(), stats: FaultStats::default() }
     }
 
     /// The plan this state was compiled from.
@@ -330,6 +358,33 @@ mod tests {
             );
         }
         assert_eq!(s.stats.drops_burst, 3);
+    }
+
+    #[test]
+    fn per_node_forks_are_deterministic_and_independent() {
+        let cfg = FaultConfig { seed: 9, drop_p: 0.2, ..FaultConfig::default() };
+        // same fork → same stream
+        let mut a = FaultState::for_node(&cfg, NodeId(3));
+        let mut b = FaultState::for_node(&cfg, NodeId(3));
+        for i in 0..5_000u64 {
+            assert_eq!(
+                a.action(Ns(i), NodeId(0), NodeId(3)),
+                b.action(Ns(i), NodeId(0), NodeId(3)),
+                "fork replay diverged at {i}"
+            );
+        }
+        // different forks → different streams (overwhelmingly likely at
+        // p=0.2 over 5000 draws; equality would mean the lane mix failed)
+        let mut c = FaultState::for_node(&cfg, NodeId(4));
+        let mut same = true;
+        let mut a2 = FaultState::for_node(&cfg, NodeId(3));
+        for i in 0..5_000u64 {
+            if a2.action(Ns(i), NodeId(0), NodeId(3)) != c.action(Ns(i), NodeId(0), NodeId(4)) {
+                same = false;
+                break;
+            }
+        }
+        assert!(!same, "node forks produced identical fault streams");
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub mod cache;
 pub mod switchfab;
 pub mod cpu;
 pub mod nic;
+mod shard;
 pub mod sim;
 pub mod verbs;
 

@@ -1,0 +1,1858 @@
+//! One simulator shard: a node partition with its own timing wheel.
+//!
+//! The sharded simulator ([`super::sim::Sim`]) partitions the cluster's
+//! nodes round-robin over `P` shards ([`NodeId::shard_of`]). Each shard
+//! owns the full NIC engine state of its nodes — QPs, CQs, SRQs, ICM
+//! cache, engine queue, requester bookkeeping — plus its nodes' **egress**
+//! ports and a per-destination-node fork of the fault plan. A shard
+//! advances its own wheel through one conservative window
+//! (`[start, start+W)`, `W = switch_latency_ns.max(1)`) at a time via
+//! [`Shard::run_window`], completely independently of its peers.
+//!
+//! Everything that would touch another node crosses the shard boundary as
+//! **staged data**, never as a direct mutation:
+//!
+//! * data/ACK/NAK frames → [`StagedFrame`]s in [`Shard::out_wire`],
+//!   absorbed into the destination's ingress port (coordinator-owned) at
+//!   the next barrier and pushed into the destination shard's wheel;
+//! * RC retry-exhaustion sequence resyncs → [`Resync`]s in
+//!   [`Shard::out_resync`], applied (as a `max`) at the next barrier;
+//! * driver notifications → `(time, node, note)` triples in
+//!   [`Shard::out_notes`], merged by `(time, node)` at the barrier.
+//!
+//! Lookahead safety: a frame staged at shard-local time `t` has
+//! `link_at >= t + switch_latency_ns`, i.e. at or after the end of the
+//! current window — so no event a shard executes inside a window can
+//! depend on anything any other shard does in that same window. That is
+//! the whole conservative-PDES argument; DESIGN.md §13 spells it out.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use super::cache::{IcmCache, IcmKey};
+use super::cpu::CpuLedger;
+use super::cq::Cq;
+use super::event::EventQueue;
+use super::fault::{FaultAction, FaultConfig, FaultState, FaultStats};
+use super::mr::MrTable;
+use super::nic::{Frame, FrameKind, WorkItem, CTRL_FRAME_BYTES};
+use super::qp::{PostError, Qp};
+use super::sim::{FabricConfig, Notification};
+use super::srq::Srq;
+use super::switchfab::{Port, FRAME_OVERHEAD_BYTES, SWITCH_BUFFER_BYTES};
+use super::time::{wire_time, Ns};
+use super::types::{Cqn, DenseTable, NodeId, QpTransport, Qpn, Srqn, Verb, WcStatus};
+use super::wqe::{Cqe, CqeKind, RecvWr, SendWr};
+
+/// Events on one shard's timeline. Node-local by construction: every
+/// variant names (or carries a frame addressed to) a node this shard owns.
+pub enum Event {
+    /// The NIC engine should check its work queue.
+    EngineCheck(NodeId),
+    /// A frame's last bit arrived at its destination ingress port.
+    FrameDelivered(Frame),
+    /// A CQE becomes visible to the driver.
+    CqeDeliver {
+        /// Node owning the CQ.
+        node: NodeId,
+        /// The CQ.
+        cqn: Cqn,
+        /// The entry.
+        cqe: Cqe,
+    },
+    /// RNR backoff expired: repost the message at the head of the SQ.
+    RetrySend {
+        /// Requester node.
+        node: NodeId,
+        /// Requester QP.
+        qpn: Qpn,
+        /// The message to repost.
+        wr: SendWr,
+    },
+    /// Driver-scheduled timer (lock-grant wakeups, open-loop arrivals…).
+    /// Always routed to shard 0 so its pop order is shard-count-invariant.
+    AppTimer {
+        /// Opaque driver token.
+        token: u64,
+    },
+    /// A frame held back by injected delay jitter lands here; it already
+    /// passed the fault gate and must not be re-drawn.
+    FrameRedelivered(Frame),
+    /// RC requester ACK timeout for `(msg_id, attempt)` — armed only
+    /// under an installed fault plan. Stale timers (message acked, or a
+    /// newer attempt in flight) no-op.
+    AckTimeout {
+        /// Requester node.
+        node: NodeId,
+        /// Requester QP.
+        qpn: Qpn,
+        /// The in-flight message.
+        msg_id: u64,
+        /// Attempt the timer was armed under.
+        attempt: u32,
+    },
+    /// Fault-plan node soft-restart.
+    NodeRestart {
+        /// The restarting node.
+        node: NodeId,
+    },
+}
+
+impl Event {
+    /// `(node, kind)` trace key: the node whose state the event mutates
+    /// (timers use node 0 — they live on shard 0) and a stable per-variant
+    /// discriminant. The merged `(time, node, kind)` pop trace is the
+    /// shard-count-invariance witness the determinism proptest compares.
+    fn trace_key(&self) -> (u32, u8) {
+        match self {
+            Event::EngineCheck(n) => (n.0, 0),
+            Event::FrameDelivered(f) => (f.dst.0, 1),
+            Event::CqeDeliver { node, .. } => (node.0, 2),
+            Event::RetrySend { node, .. } => (node.0, 3),
+            Event::AppTimer { .. } => (0, 4),
+            Event::FrameRedelivered(f) => (f.dst.0, 5),
+            Event::AckTimeout { node, .. } => (node.0, 6),
+            Event::NodeRestart { node } => (node.0, 7),
+        }
+    }
+}
+
+/// A frame that left its source shard and awaits barrier absorption into
+/// the destination ingress port. `(link_at, frame.src, emit)` is a total
+/// order: per source node `link_at` never decreases (egress serialization)
+/// and `emit` strictly increases, so the coordinator's merge is
+/// deterministic under every shard count.
+pub struct StagedFrame {
+    /// First-bit-at-destination time (`tx_start + switch_latency`).
+    pub link_at: Ns,
+    /// Per-source-node emission counter (tie-break within one `link_at`).
+    pub emit: u64,
+    /// The frame itself (`frame.src`/`frame.dst` carry the endpoints).
+    pub frame: Frame,
+}
+
+/// A staged RC sequence resync: after a requester exhausts its retry
+/// budget, the responder's `expected_msg_seq` is advanced (as a `max`, so
+/// application order cannot matter) past every issued sequence. Crosses
+/// the barrier like a frame because the peer may live on another shard.
+pub struct Resync {
+    /// Shard-local time the retry budget died.
+    pub at: Ns,
+    /// Requester node (sort tie-break).
+    pub src: NodeId,
+    /// Per-source-node emission counter (shared with frames).
+    pub emit: u64,
+    /// Responder node.
+    pub peer: NodeId,
+    /// Responder QP.
+    pub peer_qpn: Qpn,
+    /// The requester's next unissued sequence.
+    pub next_seq: u64,
+}
+
+/// Per-message requester-side bookkeeping (ACK matching, RNR retry,
+/// go-back-N retransmission).
+struct InFlight {
+    wr: SendWr,
+    qpn: Qpn,
+    /// Go-back-N sequence assigned at first issue; retransmissions reuse
+    /// it (the responder's dedup key).
+    msg_seq: u64,
+    /// Transmissions so far minus one. An [`Event::AckTimeout`] only acts
+    /// when its recorded attempt still matches.
+    attempt: u32,
+    /// Fault mode, READs only: which response-frame indices have arrived
+    /// (bitmap for responses of <= 64 frames, plain count above that) —
+    /// the last response frame only completes the READ when the response
+    /// arrived with no holes.
+    resp_seen: u64,
+}
+
+/// One machine.
+pub struct NodeState {
+    /// This node's id.
+    pub id: NodeId,
+    /// Queue pairs, dense-indexed by QPN.
+    pub qps: DenseTable<Qp>,
+    /// Completion queues, dense-indexed by CQN.
+    pub cqs: DenseTable<Cq>,
+    /// Shared receive queues, dense-indexed by SRQN.
+    pub srqs: DenseTable<Srq>,
+    /// Registered memory regions.
+    pub mrs: MrTable,
+    /// The NIC's on-chip context cache (Fig 5's mechanism).
+    pub cache: IcmCache,
+    /// Per-node CPU accounting.
+    pub cpu: CpuLedger,
+    engine_busy_until: Ns,
+    engine_queue: VecDeque<WorkItem>,
+    engine_scheduled: bool,
+    next_msg_id: u64,
+    /// Requester-side in-flight messages keyed by msg_id.
+    inflight: HashMap<u64, InFlight>,
+    /// Responder-side recv WQE held from first to last frame of a message,
+    /// keyed by (src node, src qpn, msg id).
+    pending_recv: HashMap<(u32, u32, u64), RecvWr>,
+    /// Fault mode only: data frames of a multi-frame RC message seen so
+    /// far, keyed like `pending_recv`. The last frame only completes the
+    /// message when every frame of one attempt arrived — a lost MIDDLE
+    /// frame must not ACK a message with a hole in it.
+    rc_frames_seen: HashMap<(u32, u32, u64), u64>,
+    /// Messages dropped mid-flight (RNR/protection) — suppress completion.
+    dropped_msgs: HashSet<(u32, u32, u64)>,
+    /// Counters.
+    pub protection_errors: u64,
+    /// RNR NAKs this node's NIC generated.
+    pub rnr_naks_sent: u64,
+    /// RC message retransmissions this node's NIC performed (requester
+    /// side; go-back-N under an installed fault plan).
+    pub retransmits: u64,
+    /// RC messages that exhausted their retry budget and completed with
+    /// [`WcStatus::RetryExceeded`].
+    pub retry_exceeded: u64,
+    /// RC data frames discarded by the responder's go-back-N discipline
+    /// (sequence ahead of the expected one — an earlier message is lost).
+    pub gbn_discards: u64,
+    /// RC last-frames that arrived with earlier frames of their attempt
+    /// missing: the message was NOT delivered or ACKed (the requester
+    /// retransmits the whole message instead).
+    pub rc_incomplete_msgs: u64,
+    /// Duplicate RC messages re-ACKed without re-delivery (the original
+    /// ACK was lost; exactly-once delivery held).
+    pub gbn_dup_acks: u64,
+    /// Fault-plan soft-restarts executed on this node.
+    pub restarts: u64,
+    /// Payload bytes of data-bearing frames processed by this NIC's rx
+    /// path — the smooth wire-level goodput counter the scenario drivers
+    /// measure (message-completion counters clump and bias short windows).
+    pub rx_data_bytes: u64,
+    /// Frames that arrived addressed to a destroyed QP and died at the
+    /// NIC (tenant-isolation counter for the QP reuse pool).
+    pub frames_to_destroyed: u64,
+}
+
+impl NodeState {
+    pub(crate) fn new(id: NodeId, cfg: &FabricConfig) -> Self {
+        NodeState {
+            id,
+            qps: DenseTable::new(),
+            cqs: DenseTable::new(),
+            srqs: DenseTable::new(),
+            mrs: MrTable::new(),
+            cache: IcmCache::new(cfg.nic.icm_cache_entries),
+            cpu: CpuLedger::new(cfg.cores_per_node),
+            engine_busy_until: Ns::ZERO,
+            engine_queue: VecDeque::new(),
+            engine_scheduled: false,
+            next_msg_id: 1,
+            inflight: HashMap::new(),
+            pending_recv: HashMap::new(),
+            rc_frames_seen: HashMap::new(),
+            dropped_msgs: HashSet::new(),
+            protection_errors: 0,
+            rnr_naks_sent: 0,
+            retransmits: 0,
+            retry_exceeded: 0,
+            gbn_discards: 0,
+            rc_incomplete_msgs: 0,
+            gbn_dup_acks: 0,
+            restarts: 0,
+            rx_data_bytes: 0,
+            frames_to_destroyed: 0,
+        }
+    }
+
+    /// Engine work-queue depth (diagnostics).
+    pub fn engine_queue_len(&self) -> usize {
+        self.engine_queue.len()
+    }
+
+    /// Total fabric-level memory charged to this node (ledger for Fig 7):
+    /// QP rings + contexts, CQ rings, SRQ rings, registered regions' MTT.
+    pub fn fabric_mem_bytes(&self) -> u64 {
+        let qp: u64 = self.qps.iter().map(|q| q.mem_bytes()).sum();
+        let cq: u64 = self.cqs.iter().map(|c| c.mem_bytes()).sum();
+        let srq: u64 = self.srqs.iter().map(|s| s.mem_bytes()).sum();
+        let mtt = self.mrs.total_mtt_entries * 8; // 8 B per MTT entry
+        qp + cq + srq + mtt
+    }
+}
+
+/// One shard: a node partition, its timing wheel, its egress ports, and
+/// the staging buffers the coordinator drains at every barrier.
+pub struct Shard {
+    /// This shard's index in `0..nshards`.
+    pub id: usize,
+    nshards: usize,
+    /// Owned copy of the cluster config (makes `run_window` self-contained
+    /// so the worker pool can run shards without borrowing the `Sim`).
+    cfg: FabricConfig,
+    clock: Ns,
+    events: EventQueue<Event>,
+    /// Local node state, indexed by `NodeId::shard_local`.
+    nodes: Vec<NodeState>,
+    /// Egress ports of the local nodes (same local indexing).
+    egress: Vec<Port>,
+    /// Barrier snapshot of EVERY node's ingress busy horizon (global
+    /// indexing) — the PFC gate input; refreshed by the coordinator.
+    ingress_snap: Vec<Ns>,
+    /// Per-local-node fault-plan forks (None entries without a plan).
+    faults: Vec<Option<FaultState>>,
+    faults_on: bool,
+    /// Per-local-node emission counters (frame/resync staging tie-break).
+    emit_seq: Vec<u64>,
+    /// Events this shard has popped.
+    pub steps: u64,
+    /// Completed payload bytes (data verbs) on this shard's nodes.
+    pub completed_bytes: u64,
+    /// Completed data messages on this shard's nodes.
+    pub completed_msgs: u64,
+    /// Frames the fault layer discarded on this shard's nodes.
+    pub wire_drops: u64,
+    /// Staged outbound frames, drained by the coordinator at the barrier.
+    pub out_wire: Vec<StagedFrame>,
+    /// Staged RC sequence resyncs, drained at the barrier.
+    pub out_resync: Vec<Resync>,
+    /// Buffered driver notifications `(event time, node, note)`, merged
+    /// by `(time, node)` at the barrier.
+    pub out_notes: Vec<(Ns, NodeId, Notification)>,
+    /// Optional `(time, node, kind)` pop trace (determinism proptest).
+    trace: Option<Vec<(u64, u32, u8)>>,
+}
+
+impl Shard {
+    /// Build shard `id` of `nshards` for `cfg`: owns every node with
+    /// `node % nshards == id`, quiescent at virtual time zero.
+    pub fn new(id: usize, nshards: usize, cfg: &FabricConfig) -> Self {
+        let locals: Vec<NodeId> = (0..cfg.nodes as u32)
+            .map(NodeId)
+            .filter(|n| n.shard_of(nshards) == id)
+            .collect();
+        let nodes: Vec<NodeState> = locals.iter().map(|&n| NodeState::new(n, cfg)).collect();
+        Shard {
+            id,
+            nshards,
+            cfg: cfg.clone(),
+            clock: Ns::ZERO,
+            events: EventQueue::new(),
+            egress: vec![Port::default(); nodes.len()],
+            faults: (0..nodes.len()).map(|_| None).collect(),
+            emit_seq: vec![0; nodes.len()],
+            ingress_snap: vec![Ns::ZERO; cfg.nodes],
+            nodes,
+            faults_on: false,
+            steps: 0,
+            completed_bytes: 0,
+            completed_msgs: 0,
+            wire_drops: 0,
+            out_wire: Vec::new(),
+            out_resync: Vec::new(),
+            out_notes: Vec::new(),
+            trace: None,
+        }
+    }
+
+    #[inline]
+    fn li(&self, node: NodeId) -> usize {
+        debug_assert_eq!(node.shard_of(self.nshards), self.id, "foreign node");
+        node.shard_local(self.nshards)
+    }
+
+    /// State of a node this shard owns.
+    pub fn node(&self, id: NodeId) -> &NodeState {
+        &self.nodes[self.li(id)]
+    }
+
+    /// State of a node this shard owns, mutably.
+    pub fn node_mut(&mut self, id: NodeId) -> &mut NodeState {
+        let i = self.li(id);
+        &mut self.nodes[i]
+    }
+
+    /// The shard's local nodes, in local (striped) order.
+    pub fn local_nodes(&self) -> impl Iterator<Item = &NodeState> {
+        self.nodes.iter()
+    }
+
+    /// Earliest pending event on this shard's wheel.
+    pub fn peek(&self) -> Option<Ns> {
+        self.events.peek_time()
+    }
+
+    /// Events pending on this shard's wheel.
+    pub fn wheel_len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Advance the shard clock to a barrier/deadline without running
+    /// anything (the coordinator keeps every shard's clock at the global
+    /// boundary so driver calls between windows see consistent time).
+    pub fn sync_clock(&mut self, t: Ns) {
+        self.clock = self.clock.max(t);
+    }
+
+    /// Enable/disable the `(time, node, kind)` pop trace.
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace = if on { Some(Vec::new()) } else { None };
+    }
+
+    /// Drain this shard's pop trace into `out`.
+    pub fn drain_trace_into(&mut self, out: &mut Vec<(u64, u32, u8)>) {
+        if let Some(t) = self.trace.as_mut() {
+            out.append(t);
+        }
+    }
+
+    /// Refresh the barrier snapshot of every ingress port's busy horizon.
+    pub fn set_ingress_snap(&mut self, snap: &[Ns]) {
+        self.ingress_snap.clear();
+        self.ingress_snap.extend_from_slice(snap);
+    }
+
+    /// Push an absorbed cross-shard frame at its delivery time. The
+    /// coordinator calls this in global `(link_at, src, emit)` order, so
+    /// same-instant deliveries pop in that order on every shard count.
+    pub fn push_frame(&mut self, deliver: Ns, frame: Frame) {
+        self.events.push(deliver, Event::FrameDelivered(frame));
+    }
+
+    /// Schedule a driver timer (shard 0 only — see [`Event::AppTimer`]).
+    pub fn push_timer(&mut self, at: Ns, token: u64) {
+        debug_assert_eq!(self.id, 0, "timers live on shard 0");
+        self.events.push(at, Event::AppTimer { token });
+    }
+
+    /// Schedule a fault-plan soft-restart of a local node.
+    pub fn push_restart(&mut self, at: Ns, node: NodeId) {
+        debug_assert_eq!(node.shard_of(self.nshards), self.id);
+        self.events.push(at, Event::NodeRestart { node });
+    }
+
+    /// Apply a barrier-delivered RC sequence resync (max-merge, so the
+    /// application order of same-window resyncs cannot matter).
+    pub fn apply_resync(&mut self, peer: NodeId, peer_qpn: Qpn, next_seq: u64) {
+        if let Some(pq) = self.node_mut(peer).qps.get_mut(peer_qpn.0) {
+            pq.expected_msg_seq = pq.expected_msg_seq.max(next_seq);
+        }
+    }
+
+    /// Install the per-local-node fault-plan forks and the fault gate.
+    pub fn install_fault_forks(&mut self, cfg: &FaultConfig) {
+        for (i, slot) in self.faults.iter_mut().enumerate() {
+            let node = self.nodes[i].id;
+            *slot = Some(FaultState::for_node(cfg, node));
+        }
+        self.faults_on = true;
+    }
+
+    /// Fold this shard's fault counters (local-node order) into `into`.
+    pub fn fold_fault_stats(&self, into: &mut FaultStats) {
+        for f in self.faults.iter().flatten() {
+            into.absorb(&f.stats);
+        }
+    }
+
+    // ------------------------------------------------------------ window
+
+    /// Run every event strictly before `end`, then park the clock at the
+    /// barrier. Cross-shard effects land in the staging buffers; the
+    /// lookahead bound guarantees nothing staged here is consumable
+    /// before `end` (see the module docs).
+    pub fn run_window(&mut self, end: Ns) {
+        while let Some(t) = self.events.peek_time() {
+            if t >= end {
+                break;
+            }
+            let (at, ev) = self.events.pop().expect("peeked event");
+            debug_assert!(at >= self.clock, "time went backwards");
+            self.clock = at;
+            self.steps += 1;
+            if let Some(tr) = self.trace.as_mut() {
+                let (node, kind) = ev.trace_key();
+                tr.push((at.0, node, kind));
+            }
+            match ev {
+                Event::EngineCheck(node) => self.on_engine_check(node),
+                Event::FrameDelivered(frame) => self.deliver_frame(frame, true),
+                Event::FrameRedelivered(frame) => self.deliver_frame(frame, false),
+                Event::CqeDeliver { node, cqn, cqe } => {
+                    let pushed = match self.node_mut(node).cqs.get_mut(cqn.0) {
+                        Some(cq) => {
+                            cq.push(cqe);
+                            true
+                        }
+                        None => false,
+                    };
+                    if pushed {
+                        self.out_notes.push((at, node, Notification::CqeReady { node, cqn }));
+                    }
+                }
+                Event::RetrySend { node, qpn, wr } => {
+                    // RNR retry: put the message back at the head of the SQ.
+                    if let Some(qp) = self.node_mut(node).qps.get_mut(qpn.0) {
+                        qp.sq.push_front(wr);
+                    }
+                    self.rearm_issue(node, qpn);
+                }
+                Event::AppTimer { token } => {
+                    self.out_notes.push((at, NodeId(0), Notification::Timer { token }));
+                }
+                Event::AckTimeout { node, qpn, msg_id, attempt } => {
+                    self.on_ack_timeout(node, qpn, msg_id, attempt)
+                }
+                Event::NodeRestart { node } => self.on_node_restart(node),
+            }
+        }
+        self.clock = end;
+    }
+
+    // ---------------------------------------------------- wire staging
+
+    /// Number of MTU-sized frames a `len`-byte message needs.
+    #[inline]
+    fn frame_count(&self, len: u64) -> u64 {
+        len.div_ceil(self.cfg.mtu).max(1)
+    }
+
+    /// Payload bytes of frame `i` of an `n`-frame, `len`-byte message.
+    #[inline]
+    fn frame_bytes(&self, len: u64, i: u64, n: u64) -> u64 {
+        if i + 1 < n {
+            self.cfg.mtu
+        } else {
+            len - (n - 1) * self.cfg.mtu
+        }
+    }
+
+    /// Egress half of the split wire model: occupy the source's (shard-
+    /// owned) egress port no earlier than `earliest`, gated by the PFC
+    /// snapshot of the destination's ingress backlog, and stage the frame
+    /// with its first-bit-at-destination time. Returns that `link_at`;
+    /// the ingress half happens at the barrier ([`StagedFrame`]).
+    fn stage_frame(&mut self, earliest: Ns, frame: Frame) -> Ns {
+        debug_assert!(frame.bytes <= self.cfg.mtu, "frame exceeds MTU");
+        let wire_bytes = frame.bytes + FRAME_OVERHEAD_BYTES;
+        let frame_time = wire_time(wire_bytes, self.cfg.link_gbps);
+        let base = Ns(self.cfg.switch_latency_ns);
+        // PFC backpressure against the barrier snapshot: within a window
+        // the true ingress horizon can only grow by what this window's
+        // frames add AFTER the snapshot — those arrive next window, so
+        // gating on the snapshot is exact for everything already absorbed.
+        let buffer_time = wire_time(SWITCH_BUFFER_BYTES, self.cfg.link_gbps);
+        let pfc_gate = self.ingress_snap[frame.dst.0 as usize].saturating_sub(buffer_time + base);
+        let i = self.li(frame.src);
+        let tx_start = self.egress[i].busy_until().max(earliest).max(pfc_gate);
+        self.egress[i].occupy(tx_start, frame_time, wire_bytes);
+        let link_at = tx_start + base;
+        let emit = self.emit_seq[i];
+        self.emit_seq[i] += 1;
+        self.out_wire.push(StagedFrame { link_at, emit, frame });
+        link_at
+    }
+
+    /// Estimated delivery time of a frame whose first bit lands at
+    /// `link_at`: one ingress serialization later, assuming no fan-in
+    /// backlog. Used for requester-side ACK-timeout ETAs only (a source-
+    /// local estimate — the true ingress time is a barrier-side fact).
+    fn est_deliver(&self, link_at: Ns, bytes: u64) -> Ns {
+        link_at + wire_time(bytes + FRAME_OVERHEAD_BYTES, self.cfg.link_gbps)
+    }
+
+    /// Engine backpressure: extra stall (ns) before the engine can hand the
+    /// next frame to the egress port, given the tx FIFO depth.
+    fn tx_stall(&self, node: NodeId, at: Ns) -> u64 {
+        let fifo = Ns(self.cfg.nic.tx_fifo_frames
+            * wire_time(self.cfg.mtu + FRAME_OVERHEAD_BYTES, self.cfg.link_gbps).0);
+        let backlog = self.egress[self.li(node)].busy_until().saturating_sub(at);
+        backlog.saturating_sub(fifo).0
+    }
+
+    /// ICM cache touch: returns the stall cost (0 on hit).
+    fn icm_touch(&mut self, node: NodeId, key: IcmKey) -> u64 {
+        let miss_ns = self.cfg.nic.icm_miss_ns;
+        if self.node_mut(node).cache.touch(key) {
+            0
+        } else {
+            miss_ns
+        }
+    }
+
+    // ----------------------------------------------------- driver calls
+
+    /// Post a send WR and ring the doorbell. Charges driver CPU.
+    pub fn post_send(&mut self, node: NodeId, qpn: Qpn, wr: SendWr) -> Result<(), PostError> {
+        let mtu = self.cfg.mtu;
+        let post_cpu = self.cfg.post_cpu_ns;
+        let n = self.node_mut(node);
+        n.cpu.charge_post(post_cpu);
+        let qp = n.qps.get_mut(qpn.0).ok_or(PostError::BadState(super::qp::QpState::Error))?;
+        qp.post_send(wr, mtu)?;
+        self.ring_doorbell(node, qpn);
+        Ok(())
+    }
+
+    /// Post a chain of WRs with ONE doorbell (WR batching).
+    pub fn post_send_batch(
+        &mut self,
+        node: NodeId,
+        qpn: Qpn,
+        wrs: Vec<SendWr>,
+    ) -> Result<usize, PostError> {
+        let mtu = self.cfg.mtu;
+        let post_cpu = self.cfg.post_cpu_ns;
+        let n = self.node_mut(node);
+        // one syscall-ish driver cost + small per-WR marshalling cost
+        n.cpu.charge_post(post_cpu + 30 * wrs.len() as u64);
+        let qp = n.qps.get_mut(qpn.0).ok_or(PostError::BadState(super::qp::QpState::Error))?;
+        let mut accepted = 0;
+        for wr in wrs {
+            match qp.post_send(wr, mtu) {
+                Ok(()) => accepted += 1,
+                Err(e) => {
+                    if accepted == 0 {
+                        return Err(e);
+                    }
+                    break;
+                }
+            }
+        }
+        self.ring_doorbell(node, qpn);
+        Ok(accepted)
+    }
+
+    /// Post a receive WR on a QP's private RQ. Charges driver CPU.
+    pub fn post_recv(&mut self, node: NodeId, qpn: Qpn, wr: RecvWr) -> Result<(), PostError> {
+        let post_cpu = self.cfg.post_cpu_ns;
+        let n = self.node_mut(node);
+        n.cpu.charge_post(post_cpu);
+        n.qps
+            .get_mut(qpn.0)
+            .ok_or(PostError::BadState(super::qp::QpState::Error))?
+            .post_recv(wr)
+    }
+
+    /// Post a receive WR on an SRQ; false when full. Charges driver CPU.
+    pub fn post_srq_recv(&mut self, node: NodeId, srqn: Srqn, wr: RecvWr) -> bool {
+        let post_cpu = self.cfg.post_cpu_ns;
+        let n = self.node_mut(node);
+        n.cpu.charge_post(post_cpu);
+        n.srqs.get_mut(srqn.0).map(|s| s.post(wr)).unwrap_or(false)
+    }
+
+    /// Poll up to `max` CQEs into `out` (appended); returns the count.
+    /// Charges poller CPU.
+    pub fn poll_cq_into(&mut self, node: NodeId, cqn: Cqn, max: usize, out: &mut Vec<Cqe>) -> usize {
+        let (poll_cpu, per_cqe) = (self.cfg.poll_cpu_ns, self.cfg.per_cqe_cpu_ns);
+        let n = self.node_mut(node);
+        let got = match n.cqs.get_mut(cqn.0) {
+            Some(cq) => cq.poll_into(max, out),
+            None => 0,
+        };
+        n.cpu.charge_poll(poll_cpu + per_cqe * got as u64);
+        got
+    }
+
+    // -------------------------------------------------------------- engine
+
+    fn ring_doorbell(&mut self, node: NodeId, qpn: Qpn) {
+        let nic_doorbell = self.cfg.nic.doorbell_ns;
+        let clock = self.clock;
+        let n = self.node_mut(node);
+        let Some(qp) = n.qps.get_mut(qpn.0) else { return };
+        if !qp.issue_armed {
+            qp.issue_armed = true;
+            n.engine_queue.push_back(WorkItem::IssueFromQp(qpn));
+            // doorbell MMIO handling occupies the engine briefly
+            n.engine_busy_until = n.engine_busy_until.max(clock) + Ns(nic_doorbell);
+            self.kick_engine(node);
+        }
+    }
+
+    fn kick_engine(&mut self, node: NodeId) {
+        let clock = self.clock;
+        let n = self.node_mut(node);
+        if !n.engine_scheduled && !n.engine_queue.is_empty() {
+            n.engine_scheduled = true;
+            let at = n.engine_busy_until.max(clock);
+            self.events.push(at, Event::EngineCheck(node));
+        }
+    }
+
+    /// Re-arm a QP's issue item after a completion freed window space.
+    fn rearm_issue(&mut self, node: NodeId, qpn: Qpn) {
+        let n = self.node_mut(node);
+        let Some(qp) = n.qps.get_mut(qpn.0) else { return };
+        if qp.can_issue() && !qp.issue_armed {
+            qp.issue_armed = true;
+            n.engine_queue.push_back(WorkItem::IssueFromQp(qpn));
+            self.kick_engine(node);
+        }
+    }
+
+    fn on_engine_check(&mut self, node: NodeId) {
+        {
+            let clock = self.clock;
+            let n = self.node_mut(node);
+            n.engine_scheduled = false;
+            if clock < n.engine_busy_until {
+                // engine still busy (doorbell bumped the horizon): re-check.
+                self.kick_engine(node);
+                return;
+            }
+        }
+        let item = match self.node_mut(node).engine_queue.pop_front() {
+            Some(i) => i,
+            None => return,
+        };
+        let cost = self.process_item(node, item);
+        let clock = self.clock;
+        let n = self.node_mut(node);
+        n.engine_busy_until = clock + Ns(cost);
+        self.kick_engine(node);
+    }
+
+    /// Execute one engine work item; returns engine occupancy in ns.
+    fn process_item(&mut self, node: NodeId, item: WorkItem) -> u64 {
+        match item {
+            WorkItem::IssueFromQp(qpn) => self.issue_from_qp(node, qpn),
+            WorkItem::RxFrame(frame) => self.rx_frame(node, frame),
+            WorkItem::ReadRespond {
+                requester,
+                requester_qpn,
+                responder_qpn,
+                msg_id,
+                len,
+                wr_id,
+                idx,
+            } => self
+                .read_respond(node, requester, requester_qpn, responder_qpn, msg_id, len, wr_id, idx),
+            WorkItem::Retransmit { qpn, msg_id } => self.retransmit_msg(node, qpn, msg_id),
+        }
+    }
+
+    // -------------------------------------------------- requester-side tx
+
+    /// Issue ONE message from this QP's send queue, then re-enqueue the
+    /// issue item. Every frame of a multi-frame message stages eagerly
+    /// (port state advances at issue time, exactly like the retransmit
+    /// path) — the barrier absorbs them in global order.
+    fn issue_from_qp(&mut self, node: NodeId, qpn: Qpn) -> u64 {
+        let nic = self.cfg.nic;
+
+        // Pull the next WR if the window allows.
+        let (wr, peer, transport, msg_seq) = {
+            let n = self.node_mut(node);
+            let qp = match n.qps.get_mut(qpn.0) {
+                Some(qp) => qp,
+                None => return 0,
+            };
+            qp.issue_armed = false;
+            if !qp.can_issue() {
+                return 0; // window-blocked; re-armed on completion
+            }
+            let wr = qp.sq.pop_front().unwrap();
+            let peer = match qp.transport {
+                QpTransport::Ud => wr.ud_dest,
+                _ => qp.peer,
+            };
+            let msg_seq = if qp.transport == QpTransport::Rc {
+                qp.outstanding += 1;
+                let s = qp.next_msg_seq;
+                qp.next_msg_seq += 1;
+                s
+            } else {
+                0
+            };
+            (wr, peer, qp.transport, msg_seq)
+        };
+        let (peer_node, peer_qpn) = match peer {
+            Some(p) => p,
+            None => return nic.engine_wqe_ns, // unroutable; swallow
+        };
+
+        let mut cost = nic.engine_wqe_ns + nic.dma_setup_ns;
+        cost += self.icm_touch(node, IcmKey::Qpc(qpn.0));
+        // local buffer translation (MTT) once per message
+        if let Some(block) = self.node(node).mrs.mtt_block(wr.lkey, wr.laddr) {
+            cost += self.icm_touch(node, IcmKey::Mtt(wr.lkey.0, block));
+        }
+
+        let msg_id = {
+            let n = self.node_mut(node);
+            let id = n.next_msg_id;
+            n.next_msg_id += 1;
+            id
+        };
+
+        match wr.verb {
+            Verb::Read => {
+                // header-only request; the responder streams the data back.
+                let frame = Frame {
+                    kind: FrameKind::ReadReq,
+                    src: node,
+                    dst: peer_node,
+                    dst_qpn: peer_qpn,
+                    src_qpn: qpn,
+                    transport,
+                    msg_id,
+                    msg_seq,
+                    frame_idx: 0,
+                    bytes: CTRL_FRAME_BYTES,
+                    msg_len: wr.len,
+                    is_first: true,
+                    is_last: true,
+                    wr_id: wr.wr_id,
+                    imm: None,
+                    rkey: wr.rkey,
+                    raddr: wr.raddr,
+                };
+                cost += nic.engine_frame_ns;
+                let link_at = self.stage_frame(self.clock + Ns(cost), frame);
+                let eta = self.est_deliver(link_at, frame.bytes) + self.read_response_eta(wr.len);
+                self.node_mut(node)
+                    .inflight
+                    .insert(msg_id, InFlight { wr, qpn, msg_seq, attempt: 0, resp_seen: 0 });
+                self.arm_rc_timer(node, qpn, msg_id, 0, eta);
+            }
+            Verb::Write | Verb::Send => {
+                let kind = if wr.verb == Verb::Write {
+                    FrameKind::WriteData
+                } else {
+                    FrameKind::SendData
+                };
+                let payload_len = wr.len.max(1);
+                let total = self.frame_count(payload_len);
+                let template = Frame {
+                    kind,
+                    src: node,
+                    dst: peer_node,
+                    dst_qpn: peer_qpn,
+                    src_qpn: qpn,
+                    transport,
+                    msg_id,
+                    msg_seq,
+                    frame_idx: 0, // set per frame below
+                    bytes: 0,     // set per frame below
+                    msg_len: wr.len,
+                    is_first: false,
+                    is_last: false,
+                    wr_id: wr.wr_id,
+                    imm: wr.imm_data,
+                    rkey: wr.rkey,
+                    raddr: wr.raddr,
+                };
+                let mut handoff = self.clock + Ns(cost);
+                let mut last_link = self.clock;
+                let mut last_bytes = 0;
+                for i in 0..total {
+                    cost += nic.engine_frame_ns;
+                    handoff += Ns(nic.engine_frame_ns);
+                    // tx FIFO backpressure (see read_respond)
+                    let stall = self.tx_stall(node, handoff);
+                    cost += stall;
+                    handoff += Ns(stall);
+                    let mut frame = template;
+                    frame.frame_idx = i;
+                    frame.bytes = self.frame_bytes(payload_len, i, total);
+                    frame.is_first = i == 0;
+                    frame.is_last = i + 1 == total;
+                    last_bytes = frame.bytes;
+                    last_link = self.stage_frame(handoff, frame);
+                }
+                match transport {
+                    QpTransport::Rc => {
+                        // completion on ACK
+                        let done = self.est_deliver(last_link, last_bytes);
+                        self.node_mut(node)
+                            .inflight
+                            .insert(msg_id, InFlight { wr, qpn, msg_seq, attempt: 0, resp_seen: 0 });
+                        self.arm_rc_timer(node, qpn, msg_id, 0, done);
+                    }
+                    QpTransport::Uc | QpTransport::Ud => {
+                        // local completion once the message is on the wire
+                        if wr.signaled {
+                            let send_cq = self.node(node).qps[qpn.0].send_cq;
+                            let cqe = Cqe {
+                                wr_id: wr.wr_id,
+                                kind: CqeKind::SendDone(wr.verb),
+                                status: WcStatus::Success,
+                                len: wr.len,
+                                imm_data: None,
+                                qpn,
+                                src: None,
+                            };
+                            let at = self.clock + Ns(cost + nic.cqe_delay_ns);
+                            let cqc = self.icm_touch(node, IcmKey::Cqc(send_cq.0));
+                            cost += cqc;
+                            self.events
+                                .push(at + Ns(cqc), Event::CqeDeliver { node, cqn: send_cq, cqe });
+                            self.node_mut(node).qps.get_mut(qpn.0).unwrap().completed += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // round-robin: more WQEs pending? re-arm at the tail.
+        self.rearm_issue(node, qpn);
+        cost
+    }
+
+    // -------------------------------------------------- responder-side
+
+    /// Stream ONE frame of a READ response per engine pass; re-enqueue the
+    /// job until done. This interleaves concurrent responses frame-by-frame
+    /// (the access pattern that thrashes the requester's ICM cache).
+    #[allow(clippy::too_many_arguments)]
+    fn read_respond(
+        &mut self,
+        node: NodeId,
+        requester: NodeId,
+        requester_qpn: Qpn,
+        responder_qpn: Qpn,
+        msg_id: u64,
+        remaining: u64,
+        wr_id: u64,
+        idx: u64,
+    ) -> u64 {
+        let nic = self.cfg.nic;
+        let mtu = self.cfg.mtu;
+        // note: `remaining` is re-encoded in `len` across re-enqueues, so
+        // msg_len on response frames tracks bytes-left; completion uses the
+        // requester's in-flight record for the true length.
+        let total_len = remaining;
+        let bytes = remaining.min(mtu);
+        let left = remaining - bytes;
+        let mut cost = nic.engine_frame_ns;
+        cost += self.icm_touch(node, IcmKey::Qpc(responder_qpn.0));
+        // wire backpressure: stall until the tx FIFO has room — this paces
+        // response streaming to line rate so concurrent responses interleave
+        cost += self.tx_stall(node, self.clock + Ns(cost));
+
+        let frame = Frame {
+            kind: FrameKind::ReadResp,
+            src: node,
+            dst: requester,
+            dst_qpn: requester_qpn,
+            src_qpn: responder_qpn,
+            transport: QpTransport::Rc,
+            msg_id,
+            msg_seq: 0,
+            frame_idx: idx,
+            bytes,
+            msg_len: total_len,
+            is_first: false,
+            is_last: left == 0,
+            wr_id,
+            imm: None,
+            rkey: None,
+            raddr: 0,
+        };
+        self.stage_frame(self.clock + Ns(cost), frame);
+
+        if left > 0 {
+            self.node_mut(node).engine_queue.push_back(WorkItem::ReadRespond {
+                requester,
+                requester_qpn,
+                responder_qpn,
+                msg_id,
+                len: left,
+                wr_id,
+                idx: idx + 1,
+            });
+        }
+        cost
+    }
+
+    // ---------------------------------------------------------- rx path
+
+    /// Hand a frame to its destination NIC. `check_faults` is false only
+    /// for re-deliveries of jitter-delayed frames, which already passed
+    /// the gate — every frame consults the fault plan exactly once, so
+    /// the RNG stream stays aligned across replays.
+    fn deliver_frame(&mut self, frame: Frame, check_faults: bool) {
+        if self.faults_on {
+            let clock = self.clock;
+            let i = self.li(frame.dst);
+            if check_faults {
+                if let Some(f) = self.faults[i].as_mut() {
+                    match f.action(clock, frame.src, frame.dst) {
+                        Some(FaultAction::Drop) => {
+                            // transmitted, then lost in the switch/wire:
+                            // both ports already serialized it, only the
+                            // delivery (and goodput) is suppressed
+                            self.wire_drops += 1;
+                            return;
+                        }
+                        Some(FaultAction::Delay(extra)) => {
+                            let at = clock + extra;
+                            self.events.push(at, Event::FrameRedelivered(frame));
+                            return;
+                        }
+                        None => {}
+                    }
+                }
+            } else if let Some(f) = self.faults[i].as_mut() {
+                // jitter-redelivered frame: its probabilistic draws already
+                // happened, but a flap window is a property of the link at
+                // delivery time — a delayed frame landing inside one dies
+                if f.flap_drop(clock, frame.src, frame.dst) {
+                    self.wire_drops += 1;
+                    return;
+                }
+            }
+        }
+        let dst = frame.dst;
+        if frame.kind.carries_data() {
+            // wire-level goodput counter: counted at delivery, not at engine
+            // processing (the engine can burst-drain backlog and overshoot)
+            self.node_mut(dst).rx_data_bytes += frame.bytes;
+        }
+        self.node_mut(dst).engine_queue.push_back(WorkItem::RxFrame(frame));
+        self.kick_engine(dst);
+    }
+
+    fn rx_frame(&mut self, node: NodeId, frame: Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let mut cost = nic.engine_frame_ns;
+        // every frame needs the QP context — THE Fig 5 mechanism.
+        cost += self.icm_touch(node, IcmKey::Qpc(frame.dst_qpn.0));
+
+        // a frame addressed to a destroyed QP (torn down by the control
+        // plane while stragglers were still in flight) dies at the NIC:
+        // no delivery, no ACK, no CQE — a prior tenant's late traffic can
+        // never surface once its QP is gone
+        if self.node(node).qps.get(frame.dst_qpn.0).map(|q| q.destroyed).unwrap_or(false) {
+            self.node_mut(node).frames_to_destroyed += 1;
+            return cost;
+        }
+
+        match frame.kind {
+            FrameKind::ReadReq => {
+                // go-back-N: a READ request occupies a slot in its QP's
+                // ordered message stream like any other RC message. Ahead
+                // of the expected sequence → discard (an earlier message
+                // is missing; the requester retransmits in order). Behind
+                // it → a duplicate request whose response was lost:
+                // re-execute (idempotent; the requester dedups by msg_id).
+                if self.faults_on {
+                    let expected = self
+                        .node(node)
+                        .qps
+                        .get(frame.dst_qpn.0)
+                        .map(|q| q.expected_msg_seq)
+                        .unwrap_or(0);
+                    if frame.msg_seq > expected {
+                        self.node_mut(node).gbn_discards += 1;
+                        return cost;
+                    }
+                    self.gbn_advance(node, &frame);
+                }
+                // validate remote access then start streaming the response
+                let ok = frame
+                    .rkey
+                    .map(|k| self.node(node).mrs.check_remote(k, frame.raddr, frame.msg_len, false))
+                    .unwrap_or(false);
+                if !ok {
+                    self.node_mut(node).protection_errors += 1;
+                    // NAK → requester completes in error
+                    self.send_nak(node, &frame);
+                    return cost;
+                }
+                if let Some(rk) = frame.rkey {
+                    if let Some(block) = self.node(node).mrs.mtt_block(rk, frame.raddr) {
+                        cost += self.icm_touch(node, IcmKey::Mtt(rk.0, block));
+                    }
+                }
+                self.node_mut(node).engine_queue.push_back(WorkItem::ReadRespond {
+                    requester: frame.src,
+                    requester_qpn: frame.src_qpn,
+                    responder_qpn: frame.dst_qpn,
+                    msg_id: frame.msg_id,
+                    len: frame.msg_len,
+                    wr_id: frame.wr_id,
+                    idx: 0,
+                });
+            }
+            FrameKind::ReadResp => {
+                // under faults, the last frame only completes the READ
+                // when every response frame actually arrived
+                let complete = self.read_resp_complete(node, &frame);
+                if frame.is_last && complete {
+                    cost += self.complete_read(node, &frame);
+                }
+            }
+            FrameKind::WriteData => {
+                cost += self.rx_write_data(node, &frame);
+            }
+            FrameKind::SendData => {
+                cost += self.rx_send_data(node, &frame);
+            }
+            FrameKind::Ack => {
+                cost += self.rx_ack(node, &frame);
+            }
+            FrameKind::Nak => {
+                // remote-error NAK from the responder: complete the
+                // in-flight message at this requester in error
+                self.complete_requester_error(node, frame.msg_id, WcStatus::RemoteAccessError);
+            }
+            FrameKind::RnrNak => {
+                let key = frame.msg_id;
+                if self.faults_on {
+                    // fault mode: retransmit IN PLACE after the backoff —
+                    // same msg_id and msg_seq, through the ACK-timeout
+                    // machinery (counts against the retry budget). A
+                    // re-post with a fresh sequence would leave a hole
+                    // the responder's go-back-N discipline waits on
+                    // forever.
+                    let armed = self.node(node).inflight.get(&key).map(|inf| (inf.qpn, inf.attempt));
+                    if let Some((qpn, attempt)) = armed {
+                        self.events.push(
+                            self.clock + Ns(nic.rnr_retry_ns),
+                            Event::AckTimeout { node, qpn, msg_id: key, attempt },
+                        );
+                    }
+                } else if let Some(inf) = self.node_mut(node).inflight.remove(&key) {
+                    // lossless mode: retry the whole message after backoff
+                    // by re-posting it at the head of the SQ (it re-issues
+                    // with a fresh msg_id — fine when nothing is gated on
+                    // sequence numbers)
+                    if let Some(qp) = self.node_mut(node).qps.get_mut(inf.qpn.0) {
+                        qp.outstanding = qp.outstanding.saturating_sub(1);
+                    }
+                    self.events.push(
+                        self.clock + Ns(nic.rnr_retry_ns),
+                        Event::RetrySend { node, qpn: inf.qpn, wr: inf.wr },
+                    );
+                }
+            }
+        }
+        cost
+    }
+
+    fn rx_write_data(&mut self, node: NodeId, frame: &Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let mut cost = 0;
+        let (gcost, proceed) = self.gbn_admit(node, frame);
+        if !proceed {
+            return gcost;
+        }
+        let attempt_complete = self.rc_attempt_complete(node, frame);
+        let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
+        if frame.is_first {
+            let ok = frame
+                .rkey
+                .map(|k| self.node(node).mrs.check_remote(k, frame.raddr, frame.msg_len, true))
+                .unwrap_or(false);
+            if !ok {
+                self.node_mut(node).protection_errors += 1;
+                self.node_mut(node).dropped_msgs.insert(key);
+            } else if let Some(rk) = frame.rkey {
+                if let Some(block) = self.node(node).mrs.mtt_block(rk, frame.raddr) {
+                    cost += self.icm_touch(node, IcmKey::Mtt(rk.0, block));
+                }
+            }
+        }
+        if frame.is_last {
+            let dropped = self.node_mut(node).dropped_msgs.remove(&key);
+            if dropped {
+                // protection error: the requester completes in error, so
+                // this message's go-back-N slot is closed for good
+                self.gbn_advance(node, frame);
+                if frame.transport == QpTransport::Rc {
+                    self.send_nak(node, frame);
+                }
+                return cost;
+            }
+            if !attempt_complete {
+                // a non-terminal frame of this attempt was lost: no
+                // delivery, no ACK, no sequence advance — the requester's
+                // timer retransmits the whole message
+                return cost;
+            }
+            // write-with-imm consumes a receive WQE and raises a CQE
+            if frame.imm.is_some() {
+                if let Some((recv_cq, wr)) = self.consume_recv_wqe(node, frame) {
+                    let cqe = Cqe {
+                        wr_id: wr.map(|w| w.wr_id).unwrap_or(0),
+                        kind: CqeKind::RecvRdmaWithImm,
+                        status: WcStatus::Success,
+                        len: frame.msg_len,
+                        imm_data: frame.imm,
+                        qpn: frame.dst_qpn,
+                        src: Some((frame.src, frame.src_qpn)),
+                    };
+                    cost += self.icm_touch(node, IcmKey::Cqc(recv_cq.0));
+                    self.events.push(
+                        self.clock + Ns(cost + nic.cqe_delay_ns),
+                        Event::CqeDeliver { node, cqn: recv_cq, cqe },
+                    );
+                } else {
+                    // RNR on write-with-imm (no recv WQE)
+                    self.send_rnr_nak(node, frame);
+                    return cost;
+                }
+            }
+            if frame.transport == QpTransport::Rc {
+                self.gbn_advance(node, frame);
+                cost += self.send_ack(node, frame);
+            } else {
+                // UC: delivered without ACK — count at the receiver
+                self.completed_bytes += frame.msg_len;
+                self.completed_msgs += 1;
+            }
+        }
+        cost
+    }
+
+    fn rx_send_data(&mut self, node: NodeId, frame: &Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let mut cost = 0;
+        let (gcost, proceed) = self.gbn_admit(node, frame);
+        if !proceed {
+            return gcost;
+        }
+        let attempt_complete = self.rc_attempt_complete(node, frame);
+        let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
+        if frame.is_first {
+            // retransmitted first frames must be idempotent: clear any
+            // stale drop marker from a prior attempt, and never consume a
+            // second recv WQE for a message already mid-assembly
+            let already = if self.faults_on {
+                self.node_mut(node).dropped_msgs.remove(&key);
+                // WQE already held from a prior attempt? then skip consume
+                self.node(node).pending_recv.contains_key(&key)
+            } else {
+                false
+            };
+            if !already {
+                match self.consume_recv_wqe_wr(node, frame) {
+                    Some(wr) => {
+                        // local buffer translation for the landing buffer
+                        if let Some(block) = self.node(node).mrs.mtt_block(wr.lkey, wr.laddr) {
+                            cost += self.icm_touch(node, IcmKey::Mtt(wr.lkey.0, block));
+                        }
+                        self.node_mut(node).pending_recv.insert(key, wr);
+                    }
+                    None => {
+                        self.node_mut(node).dropped_msgs.insert(key);
+                        if frame.transport == QpTransport::Rc {
+                            self.send_rnr_nak(node, frame);
+                        }
+                        // UC/UD: silent drop
+                    }
+                }
+            }
+        }
+        if frame.is_last {
+            if self.node_mut(node).dropped_msgs.remove(&key) {
+                return cost;
+            }
+            if !attempt_complete {
+                // hole in this attempt (a middle frame was lost): keep
+                // the held recv WQE and wait for the retransmission
+                return cost;
+            }
+            let wr = match self.node_mut(node).pending_recv.remove(&key) {
+                Some(wr) => wr,
+                None => return cost, // first frame never consumed (shouldn't happen)
+            };
+            let recv_cq = self
+                .node(node)
+                .qps
+                .get(frame.dst_qpn.0)
+                .map(|qp| qp.recv_cq)
+                .unwrap_or(Cqn(0));
+            let cqe = Cqe {
+                wr_id: wr.wr_id,
+                kind: CqeKind::Recv,
+                status: WcStatus::Success,
+                len: frame.msg_len,
+                imm_data: frame.imm,
+                qpn: frame.dst_qpn,
+                src: Some((frame.src, frame.src_qpn)),
+            };
+            cost += self.icm_touch(node, IcmKey::Cqc(recv_cq.0));
+            self.events.push(
+                self.clock + Ns(cost + nic.cqe_delay_ns),
+                Event::CqeDeliver { node, cqn: recv_cq, cqe },
+            );
+            if frame.transport == QpTransport::Rc {
+                self.gbn_advance(node, frame);
+                cost += self.send_ack(node, frame);
+            } else {
+                // UC/UD: delivered without ACK — count at the receiver
+                self.completed_bytes += frame.msg_len;
+                self.completed_msgs += 1;
+            }
+        }
+        cost
+    }
+
+    /// Consume a recv WQE (SRQ if attached, else private RQ); returns the
+    /// recv CQ and the WR if one was available.
+    fn consume_recv_wqe(&mut self, node: NodeId, frame: &Frame) -> Option<(Cqn, Option<RecvWr>)> {
+        let (srq, recv_cq) = {
+            let qp = self.node(node).qps.get(frame.dst_qpn.0)?;
+            (qp.srq, qp.recv_cq)
+        };
+        let wr = match srq {
+            Some(srqn) => self.node_mut(node).srqs.get_mut(srqn.0)?.consume(),
+            None => {
+                let qp = self.node_mut(node).qps.get_mut(frame.dst_qpn.0)?;
+                qp.rq.pop_front()
+            }
+        };
+        wr.map(|w| (recv_cq, Some(w)))
+    }
+
+    fn consume_recv_wqe_wr(&mut self, node: NodeId, frame: &Frame) -> Option<RecvWr> {
+        self.consume_recv_wqe(node, frame).and_then(|(_, wr)| wr)
+    }
+
+    fn send_ack(&mut self, node: NodeId, frame: &Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let cost = nic.engine_frame_ns;
+        let ack = Frame {
+            kind: FrameKind::Ack,
+            src: node,
+            dst: frame.src,
+            dst_qpn: frame.src_qpn,
+            src_qpn: frame.dst_qpn,
+            transport: QpTransport::Rc,
+            msg_id: frame.msg_id,
+            msg_seq: frame.msg_seq,
+            frame_idx: 0,
+            bytes: CTRL_FRAME_BYTES,
+            msg_len: frame.msg_len,
+            is_first: true,
+            is_last: true,
+            wr_id: frame.wr_id,
+            imm: None,
+            rkey: None,
+            raddr: 0,
+        };
+        self.stage_frame(self.clock + Ns(cost), ack);
+        cost
+    }
+
+    fn send_rnr_nak(&mut self, node: NodeId, frame: &Frame) {
+        self.node_mut(node).rnr_naks_sent += 1;
+        let nak = Frame {
+            kind: FrameKind::RnrNak,
+            src: node,
+            dst: frame.src,
+            dst_qpn: frame.src_qpn,
+            src_qpn: frame.dst_qpn,
+            transport: QpTransport::Rc,
+            msg_id: frame.msg_id,
+            msg_seq: frame.msg_seq,
+            frame_idx: 0,
+            bytes: CTRL_FRAME_BYTES,
+            msg_len: frame.msg_len,
+            is_first: true,
+            is_last: true,
+            wr_id: frame.wr_id,
+            imm: None,
+            rkey: None,
+            raddr: 0,
+        };
+        self.stage_frame(self.clock, nak);
+    }
+
+    /// Remote-error NAK (protection/rkey failure at the responder): the
+    /// requester completes the message with `RemoteAccessError` when this
+    /// frame lands. Replaces the old simulator's direct requester-state
+    /// mutation — a shard may never touch another shard's nodes.
+    fn send_nak(&mut self, node: NodeId, frame: &Frame) {
+        let nak = Frame {
+            kind: FrameKind::Nak,
+            src: node,
+            dst: frame.src,
+            dst_qpn: frame.src_qpn,
+            src_qpn: frame.dst_qpn,
+            transport: QpTransport::Rc,
+            msg_id: frame.msg_id,
+            msg_seq: frame.msg_seq,
+            frame_idx: 0,
+            bytes: CTRL_FRAME_BYTES,
+            msg_len: frame.msg_len,
+            is_first: true,
+            is_last: true,
+            wr_id: frame.wr_id,
+            imm: None,
+            rkey: None,
+            raddr: 0,
+        };
+        self.stage_frame(self.clock, nak);
+    }
+
+    /// ACK received at the requester: complete the in-flight RC message.
+    fn rx_ack(&mut self, node: NodeId, frame: &Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let mut cost = 0;
+        let inf = match self.node_mut(node).inflight.remove(&frame.msg_id) {
+            Some(i) => i,
+            None => return 0, // duplicate/stale ack
+        };
+        let (send_cq, signaled) = {
+            let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
+            qp.outstanding = qp.outstanding.saturating_sub(1);
+            qp.completed += 1;
+            (qp.send_cq, inf.wr.signaled)
+        };
+        self.completed_bytes += inf.wr.len;
+        self.completed_msgs += 1;
+        if signaled {
+            let cqe = Cqe {
+                wr_id: inf.wr.wr_id,
+                kind: CqeKind::SendDone(inf.wr.verb),
+                status: WcStatus::Success,
+                len: inf.wr.len,
+                imm_data: None,
+                qpn: inf.qpn,
+                src: None,
+            };
+            cost += self.icm_touch(node, IcmKey::Cqc(send_cq.0));
+            self.events.push(
+                self.clock + Ns(cost + nic.cqe_delay_ns),
+                Event::CqeDeliver { node, cqn: send_cq, cqe },
+            );
+        }
+        self.rearm_issue(node, inf.qpn);
+        cost
+    }
+
+    /// Last READ response frame landed: complete at the requester.
+    fn complete_read(&mut self, node: NodeId, frame: &Frame) -> u64 {
+        let nic = self.cfg.nic;
+        let mut cost = 0;
+        let inf = match self.node_mut(node).inflight.remove(&frame.msg_id) {
+            Some(i) => i,
+            None => return 0,
+        };
+        let send_cq = {
+            let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
+            qp.outstanding = qp.outstanding.saturating_sub(1);
+            qp.completed += 1;
+            qp.send_cq
+        };
+        self.completed_bytes += inf.wr.len;
+        self.completed_msgs += 1;
+        if inf.wr.signaled {
+            let cqe = Cqe {
+                wr_id: inf.wr.wr_id,
+                kind: CqeKind::SendDone(Verb::Read),
+                status: WcStatus::Success,
+                len: inf.wr.len,
+                imm_data: None,
+                qpn: inf.qpn,
+                src: None,
+            };
+            cost += self.icm_touch(node, IcmKey::Cqc(send_cq.0));
+            self.events.push(
+                self.clock + Ns(cost + nic.cqe_delay_ns),
+                Event::CqeDeliver { node, cqn: send_cq, cqe },
+            );
+        }
+        self.rearm_issue(node, inf.qpn);
+        cost
+    }
+
+    /// Requester-side error completion, fired by an incoming remote-error
+    /// NAK ([`FrameKind::Nak`]) addressed to this node.
+    fn complete_requester_error(&mut self, node: NodeId, msg_id: u64, status: WcStatus) {
+        let inf = match self.node_mut(node).inflight.remove(&msg_id) {
+            Some(i) => i,
+            None => return, // duplicate/stale NAK
+        };
+        let send_cq = {
+            let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
+            qp.outstanding = qp.outstanding.saturating_sub(1);
+            qp.send_cq
+        };
+        let cqe = Cqe {
+            wr_id: inf.wr.wr_id,
+            kind: CqeKind::SendDone(inf.wr.verb),
+            status,
+            len: 0,
+            imm_data: None,
+            qpn: inf.qpn,
+            src: None,
+        };
+        let at = self.clock + Ns(self.cfg.nic.cqe_delay_ns);
+        self.events.push(at, Event::CqeDeliver { node, cqn: send_cq, cqe });
+        self.rearm_issue(node, inf.qpn);
+    }
+
+    // -------------------------------------- fault layer: RC go-back-N
+
+    /// Responder-side go-back-N admission for an RC data frame: `(extra
+    /// cost, may proceed)`. Dormant (always admit) without a fault plan —
+    /// on the lossless fabric frames cannot arrive out of sequence.
+    fn gbn_admit(&mut self, node: NodeId, frame: &Frame) -> (u64, bool) {
+        if !self.faults_on || frame.transport != QpTransport::Rc {
+            return (0, true);
+        }
+        let expected = self
+            .node(node)
+            .qps
+            .get(frame.dst_qpn.0)
+            .map(|q| q.expected_msg_seq)
+            .unwrap_or(0);
+        if frame.msg_seq > expected {
+            // an earlier message is missing: discard; the requester
+            // retransmits everything from the hole, in order
+            self.node_mut(node).gbn_discards += 1;
+            return (0, false);
+        }
+        if frame.msg_seq < expected {
+            // duplicate of a message this QP already consumed — its ACK
+            // was evidently lost. Re-ACK the last frame so the requester
+            // can complete; NEVER re-deliver (exactly-once).
+            let mut cost = 0;
+            if frame.is_last {
+                self.node_mut(node).gbn_dup_acks += 1;
+                cost += self.send_ack(node, frame);
+            }
+            return (cost, false);
+        }
+        (0, true)
+    }
+
+    /// An accepted RC message closed its go-back-N slot: the QP expects
+    /// the next sequence. No-op without a fault plan (counters would be
+    /// meaningless there — the lossless RNR path re-issues under fresh
+    /// sequences).
+    fn gbn_advance(&mut self, node: NodeId, frame: &Frame) {
+        if !self.faults_on || frame.transport != QpTransport::Rc {
+            return;
+        }
+        if let Some(qp) = self.node_mut(node).qps.get_mut(frame.dst_qpn.0) {
+            qp.expected_msg_seq = qp.expected_msg_seq.max(frame.msg_seq + 1);
+        }
+    }
+
+    /// Fault mode, RC multi-frame data messages: record one *admitted*
+    /// frame (call after [`Shard::gbn_admit`]) and, on the last frame,
+    /// report whether the message arrived with no holes — a lost MIDDLE
+    /// frame must not let the last frame deliver/ACK a message missing
+    /// bytes. Coverage is a per-index bitmap for messages of ≤ 64 frames
+    /// (every workload here; dropped duplicates stay idempotent) and a
+    /// plain frame count above that. The tracker is consumed on the last
+    /// frame either way; an incomplete attempt leaves the requester's
+    /// timer to retransmit the whole message.
+    fn rc_attempt_complete(&mut self, node: NodeId, frame: &Frame) -> bool {
+        if !self.faults_on || frame.transport != QpTransport::Rc {
+            return true;
+        }
+        let total = self.frame_count(frame.msg_len.max(1));
+        if total <= 1 {
+            return true;
+        }
+        let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
+        let n = self.node_mut(node);
+        let seen = {
+            let e = n.rc_frames_seen.entry(key).or_insert(0);
+            if total <= 64 {
+                *e |= 1u64 << frame.frame_idx.min(63);
+            } else {
+                *e += 1;
+            }
+            *e
+        };
+        if !frame.is_last {
+            return true;
+        }
+        n.rc_frames_seen.remove(&key);
+        let complete = if total <= 64 {
+            let mask = if total == 64 { u64::MAX } else { (1u64 << total) - 1 };
+            seen & mask == mask
+        } else {
+            seen >= total
+        };
+        if !complete {
+            n.rc_incomplete_msgs += 1;
+        }
+        complete
+    }
+
+    /// Fault mode: record one ReadResp frame against its in-flight READ;
+    /// on the last frame, true iff the response arrived complete (same
+    /// bitmap/count scheme as [`Shard::rc_attempt_complete`], accumulated
+    /// in the in-flight entry so duplicate response streams union up).
+    fn read_resp_complete(&mut self, node: NodeId, frame: &Frame) -> bool {
+        if !self.faults_on {
+            return true;
+        }
+        let len = match self.node(node).inflight.get(&frame.msg_id) {
+            Some(inf) => inf.wr.len.max(1),
+            None => return true, // stale duplicate; complete_read will no-op
+        };
+        let total = self.frame_count(len);
+        if total <= 1 {
+            return true;
+        }
+        let n = self.node_mut(node);
+        let complete = {
+            let inf = n.inflight.get_mut(&frame.msg_id).expect("checked above");
+            if total <= 64 {
+                inf.resp_seen |= 1u64 << frame.frame_idx.min(63);
+            } else {
+                inf.resp_seen += 1;
+            }
+            if !frame.is_last {
+                return true;
+            }
+            if total <= 64 {
+                let mask = if total == 64 { u64::MAX } else { (1u64 << total) - 1 };
+                inf.resp_seen & mask == mask
+            } else {
+                inf.resp_seen >= total
+            }
+        };
+        if !complete {
+            n.rc_incomplete_msgs += 1;
+        }
+        complete
+    }
+
+    /// Schedule the ACK timeout for `attempt` of an in-flight RC message.
+    /// `expected_done` is when its last frame lands (for READs: when the
+    /// response should have finished streaming); the margin backs off
+    /// exponentially per attempt, capped at 8×. Dormant without faults.
+    fn arm_rc_timer(&mut self, node: NodeId, qpn: Qpn, msg_id: u64, attempt: u32, expected_done: Ns) {
+        if !self.faults_on {
+            return;
+        }
+        let margin = self.cfg.nic.retransmit_timeout_ns << attempt.min(3);
+        let at = expected_done + Ns(2 * self.cfg.switch_latency_ns + margin);
+        self.events.push(at, Event::AckTimeout { node, qpn, msg_id, attempt });
+    }
+
+    /// Rough time for a READ response of `len` bytes to stream back:
+    /// serialization of payload + per-frame overhead, responder engine
+    /// touches, one-way propagation.
+    fn read_response_eta(&self, len: u64) -> Ns {
+        let payload = len.max(1);
+        let frames = self.frame_count(payload);
+        let wire = wire_time(payload + frames * FRAME_OVERHEAD_BYTES, self.cfg.link_gbps);
+        Ns(wire.0 + frames * self.cfg.nic.engine_frame_ns + self.cfg.switch_latency_ns)
+    }
+
+    /// An ACK timeout fired. Acts only when the message is still in
+    /// flight under the same attempt (otherwise it was acked, completed,
+    /// superseded by a newer attempt, or its node restarted).
+    fn on_ack_timeout(&mut self, node: NodeId, qpn: Qpn, msg_id: u64, attempt: u32) {
+        let retry_cnt = self.cfg.nic.retry_cnt;
+        {
+            let n = self.node_mut(node);
+            match n.inflight.get(&msg_id) {
+                Some(inf) if inf.attempt == attempt => {}
+                _ => return,
+            }
+        }
+        if attempt >= retry_cnt {
+            self.complete_retry_exceeded(node, msg_id);
+            return;
+        }
+        // bump the attempt NOW, not when the engine gets to the work item:
+        // a second timer armed under the same attempt (the RNR path arms
+        // one alongside the issue-time timer) must see the mismatch and
+        // no-op instead of double-retransmitting and burning the budget
+        if let Some(inf) = self.node_mut(node).inflight.get_mut(&msg_id) {
+            inf.attempt += 1;
+        }
+        // retransmission is engine work like everything else
+        self.node_mut(node).engine_queue.push_back(WorkItem::Retransmit { qpn, msg_id });
+        self.kick_engine(node);
+    }
+
+    /// Re-emit every frame of a timed-out RC message — go-back-N at
+    /// message granularity, same msg_id and msg_seq as the original
+    /// transmission so the responder can deduplicate. Returns engine
+    /// occupancy.
+    fn retransmit_msg(&mut self, node: NodeId, qpn: Qpn, msg_id: u64) -> u64 {
+        let nic = self.cfg.nic;
+        let (wr, msg_seq, attempt) = {
+            // the attempt was already bumped by the timeout that queued
+            // this work item — read, don't re-bump
+            let Some(inf) = self.node(node).inflight.get(&msg_id) else { return 0 };
+            (inf.wr.clone(), inf.msg_seq, inf.attempt)
+        };
+        let Some((peer_node, peer_qpn)) = self.node(node).qps.get(qpn.0).and_then(|q| q.peer)
+        else {
+            return 0;
+        };
+        self.node_mut(node).retransmits += 1;
+        let mut cost = nic.engine_wqe_ns;
+        cost += self.icm_touch(node, IcmKey::Qpc(qpn.0));
+
+        match wr.verb {
+            Verb::Read => {
+                let frame = Frame {
+                    kind: FrameKind::ReadReq,
+                    src: node,
+                    dst: peer_node,
+                    dst_qpn: peer_qpn,
+                    src_qpn: qpn,
+                    transport: QpTransport::Rc,
+                    msg_id,
+                    msg_seq,
+                    frame_idx: 0,
+                    bytes: CTRL_FRAME_BYTES,
+                    msg_len: wr.len,
+                    is_first: true,
+                    is_last: true,
+                    wr_id: wr.wr_id,
+                    imm: None,
+                    rkey: wr.rkey,
+                    raddr: wr.raddr,
+                };
+                cost += nic.engine_frame_ns;
+                let link_at = self.stage_frame(self.clock + Ns(cost), frame);
+                let eta = self.est_deliver(link_at, frame.bytes) + self.read_response_eta(wr.len);
+                self.arm_rc_timer(node, qpn, msg_id, attempt, eta);
+            }
+            Verb::Write | Verb::Send => {
+                let kind = if wr.verb == Verb::Write {
+                    FrameKind::WriteData
+                } else {
+                    FrameKind::SendData
+                };
+                let payload = wr.len.max(1);
+                let total = self.frame_count(payload);
+                let mut handoff = self.clock + Ns(cost);
+                let mut last_link = self.clock;
+                let mut last_bytes = 0;
+                for i in 0..total {
+                    cost += nic.engine_frame_ns;
+                    handoff += Ns(nic.engine_frame_ns);
+                    let stall = self.tx_stall(node, handoff);
+                    cost += stall;
+                    handoff += Ns(stall);
+                    let bytes = self.frame_bytes(payload, i, total);
+                    let frame = Frame {
+                        kind,
+                        src: node,
+                        dst: peer_node,
+                        dst_qpn: peer_qpn,
+                        src_qpn: qpn,
+                        transport: QpTransport::Rc,
+                        msg_id,
+                        msg_seq,
+                        frame_idx: i,
+                        bytes,
+                        msg_len: wr.len,
+                        is_first: i == 0,
+                        is_last: i + 1 == total,
+                        wr_id: wr.wr_id,
+                        imm: wr.imm_data,
+                        rkey: wr.rkey,
+                        raddr: wr.raddr,
+                    };
+                    last_bytes = bytes;
+                    last_link = self.stage_frame(handoff, frame);
+                }
+                self.arm_rc_timer(node, qpn, msg_id, attempt, self.est_deliver(last_link, last_bytes));
+            }
+        }
+        cost
+    }
+
+    /// The retry budget ran out. Real RC transitions the QP to Error and
+    /// FLUSHES every outstanding WR — modeled here by completing every
+    /// in-flight message of the QP with [`WcStatus::RetryExceeded`]. The
+    /// responder's expected sequence is then resynced to the requester's
+    /// next issue via a staged [`Resync`] (the out-of-band
+    /// re-establishment a daemon performs after a fatal retry): without
+    /// both, one dead message would make the responder discard everything
+    /// after it forever, and a partial resync could dup-ACK a message
+    /// that was never delivered.
+    fn complete_retry_exceeded(&mut self, node: NodeId, msg_id: u64) {
+        let qpn = match self.node(node).inflight.get(&msg_id) {
+            Some(inf) => inf.qpn,
+            None => return,
+        };
+        // flush in ascending msg_id order — never HashMap order
+        let mut ids: Vec<u64> = self
+            .node(node)
+            .inflight
+            .iter()
+            .filter(|(_, inf)| inf.qpn == qpn)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        for id in ids {
+            let inf = self.node_mut(node).inflight.remove(&id).expect("collected id");
+            let send_cq = {
+                let n = self.node_mut(node);
+                n.retry_exceeded += 1;
+                let qp = n.qps.get_mut(qpn.0).expect("qp of in-flight msg");
+                qp.outstanding = qp.outstanding.saturating_sub(1);
+                qp.send_cq
+            };
+            let cqe = Cqe {
+                wr_id: inf.wr.wr_id,
+                kind: CqeKind::SendDone(inf.wr.verb),
+                status: WcStatus::RetryExceeded,
+                len: 0,
+                imm_data: None,
+                qpn,
+                src: None,
+            };
+            let at = self.clock + Ns(self.cfg.nic.cqe_delay_ns);
+            self.events.push(at, Event::CqeDeliver { node, cqn: send_cq, cqe });
+        }
+        // resync the responder past every issued (now dead or delivered)
+        // sequence so post-recovery traffic is accepted again — staged,
+        // because the peer may live on another shard; post-recovery frames
+        // have link_at at or after the next barrier, so the max-merge
+        // lands before anything that depends on it
+        let (next_seq, peer) = {
+            let qp = self.node(node).qps.get(qpn.0).expect("qp exists");
+            (qp.next_msg_seq, qp.peer)
+        };
+        if let Some((peer_node, peer_qpn)) = peer {
+            let i = self.li(node);
+            let emit = self.emit_seq[i];
+            self.emit_seq[i] += 1;
+            self.out_resync.push(Resync {
+                at: self.clock,
+                src: node,
+                emit,
+                peer: peer_node,
+                peer_qpn,
+                next_seq,
+            });
+        }
+        self.rearm_issue(node, qpn);
+    }
+
+    /// Fault-plan node soft-restart: queued engine work, SQ/RQ/SRQ/CQ
+    /// contents and requester in-flight state vanish; connection state
+    /// (peer bindings, go-back-N counters) survives so peers recover by
+    /// retransmission. Work that died without a completion is what the
+    /// daemon's stale-lease reclaim exists for.
+    fn on_node_restart(&mut self, node: NodeId) {
+        let i = self.li(node);
+        if let Some(f) = self.faults[i].as_mut() {
+            f.note_restart();
+        }
+        let n = self.node_mut(node);
+        n.restarts += 1;
+        n.engine_queue.clear();
+        n.inflight.clear();
+        n.pending_recv.clear();
+        n.rc_frames_seen.clear();
+        n.dropped_msgs.clear();
+        for qp in n.qps.iter_mut() {
+            qp.reset_soft();
+        }
+        for srq in n.srqs.iter_mut() {
+            srq.clear();
+        }
+        for cq in n.cqs.iter_mut() {
+            cq.clear();
+        }
+    }
+}

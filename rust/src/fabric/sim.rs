@@ -1,46 +1,68 @@
-//! The discrete-event simulator: nodes, NIC engines, the event loop.
+//! The discrete-event simulator: a sharded coordinator over per-partition
+//! engines.
 //!
 //! Drivers (workload generators, the RaaS daemon, baselines) interact with
 //! the sim through the verbs-style API (`create_qp`, `post_send`,
 //! `poll_cq`, …) and advance virtual time by calling [`Sim::step`] (or the
-//! zero-alloc [`Sim::step_into`]), which processes one event and reports
-//! completion notifications. Everything is deterministic: same calls +
-//! same seeds ⇒ identical timelines.
+//! zero-alloc [`Sim::step_into`]), which processes one **conservative
+//! window** of events and reports completion notifications. Everything is
+//! deterministic: same calls + same seeds ⇒ identical timelines, for every
+//! shard count.
+//!
+//! ### Sharded execution model (DESIGN.md §13)
+//!
+//! The cluster's nodes are partitioned round-robin over
+//! [`FabricConfig::shards`] shards ([`super::shard::Shard`]), each owning
+//! its nodes' full NIC state, egress ports, and its own timing wheel.
+//! [`Sim::step_into`] is the barrier loop:
+//!
+//! 1. apply last window's staged RC sequence resyncs;
+//! 2. find the global minimum pending time `t` (shard wheels + staged
+//!    wire) and derive the window `[start, start + W)` containing it,
+//!    with `W = switch_latency_ns.max(1)`;
+//! 3. absorb every staged frame with `link_at < end` into its
+//!    destination's ingress port — in global `(link_at, src, emit)`
+//!    order, a total order — and push the deliveries into the owning
+//!    shards' wheels;
+//! 4. refresh each shard's ingress-busy snapshot (the PFC gate input);
+//! 5. run all shards through the window — in parallel on a persistent
+//!    worker pool when `shards > 1`, directly on the calling thread when
+//!    `shards == 1`;
+//! 6. merge staged outputs deterministically (sort frames/resyncs by
+//!    their total orders, notifications by `(time, node)` stably) and
+//!    advance the clock to the barrier.
+//!
+//! Conservative safety: a frame staged inside a window cannot have
+//! `link_at` before that window's end (lookahead = switch latency), so no
+//! shard can ever need another shard's same-window output. That makes the
+//! parallel run **byte-identical** to `shards = 1` — gated by
+//! `tests/determinism.rs`.
 //!
 //! ### Engine model
 //!
 //! Each NIC has one processing engine that serially executes
-//! [`WorkItem`]s with costs from [`NicConfig`]. Multi-frame messages are
-//! emitted **one frame per work item**, re-enqueuing the remainder at the
-//! tail — so concurrent messages interleave frame-by-frame exactly like a
-//! real RNIC's processing units, which is what makes the receiver's ICM
-//! cache thrash under high QP counts (Fig 5's mechanism).
-//!
-//! ### Hot-path layout
-//!
-//! The event queue is a hierarchical timing wheel ([`super::event`]);
-//! QPs/CQs/SRQs live in dense id-indexed vectors ([`DenseTable`]) so the
-//! per-frame context lookups are an index, not a hash; frames are `Copy`;
-//! and a requester-side multi-frame message occupies **one** pooled
-//! in-queue event that replays each frame at its precomputed delivery
-//! time under a reserved seq block — byte-identical pop order to the
-//! push-per-frame it replaces, at a fraction of the queue traffic.
+//! [`super::nic::WorkItem`]s with costs from [`NicConfig`]. Multi-frame
+//! messages are emitted **one frame per work item** on the responder's
+//! READ path, re-enqueuing the remainder at the tail — so concurrent
+//! responses interleave frame-by-frame exactly like a real RNIC's
+//! processing units, which is what makes the receiver's ICM cache thrash
+//! under high QP counts (Fig 5's mechanism). The engine itself lives in
+//! [`super::shard`]; this module is the coordinator plus the public API.
 
-use std::collections::{HashMap, VecDeque};
-
-use super::cache::{IcmCache, IcmKey};
 use super::cq::Cq;
-use super::cpu::CpuLedger;
-use super::event::EventQueue;
-use super::fault::{FaultAction, FaultConfig, FaultState, FaultStats};
-use super::mr::{Access, MemoryRegion, MrTable};
-use super::nic::{Frame, FrameKind, NicConfig, WorkItem, CTRL_FRAME_BYTES};
+use super::fault::{FaultConfig, FaultStats};
+use super::mr::{Access, MemoryRegion};
+use super::nic::NicConfig;
 use super::qp::{PostError, Qp};
+use super::shard::{Resync, Shard, StagedFrame};
 use super::srq::Srq;
 use super::switchfab::Fabric;
 use super::time::Ns;
-use super::types::{Cqn, DenseTable, NodeId, QpTransport, Qpn, Srqn, Verb, WcStatus};
-use super::wqe::{Cqe, CqeKind, RecvWr, SendWr};
+use super::types::{Cqn, NodeId, QpTransport, Qpn, Srqn};
+use super::wqe::{Cqe, RecvWr, SendWr};
+use crate::util::parallel::{effective_jobs, OwnedPool};
+
+pub use super::shard::NodeState;
 
 /// Whole-fabric configuration.
 #[derive(Clone, Debug)]
@@ -53,7 +75,8 @@ pub struct FabricConfig {
     pub link_gbps: f64,
     /// Maximum frame payload.
     pub mtu: u64,
-    /// One-way propagation + switch latency.
+    /// One-way propagation + switch latency — also the sharded
+    /// simulator's conservative lookahead (window width).
     pub switch_latency_ns: u64,
     /// RNIC engine cost/capacity model.
     pub nic: NicConfig,
@@ -69,6 +92,11 @@ pub struct FabricConfig {
     pub poll_cpu_ns: u64,
     /// CPU cost per CQE handled after a poll.
     pub per_cqe_cpu_ns: u64,
+    /// Simulator node partitions run in parallel (1 = serial, the
+    /// default; 0 = one per available core). Clamped to the node count.
+    /// Output is byte-identical for every value; `> 1` requires
+    /// `switch_latency_ns > 0` (the lookahead bound).
+    pub shards: usize,
 }
 
 impl Default for FabricConfig {
@@ -86,281 +114,181 @@ impl Default for FabricConfig {
             post_cpu_ns: 150,
             poll_cpu_ns: 80,
             per_cqe_cpu_ns: 50,
+            shards: 1,
         }
     }
-}
-
-/// Events on the simulator's timeline.
-enum Event {
-    EngineCheck(NodeId),
-    FrameDelivered(Frame),
-    /// One frame of a coalesced multi-frame message stream (see
-    /// [`FrameStreamState`]): replays `FrameDelivered` semantics at each
-    /// precomputed delivery time while keeping a single event in-queue.
-    FrameStream { stream: u32 },
-    CqeDeliver { node: NodeId, cqn: Cqn, cqe: Cqe },
-    RetrySend { node: NodeId, qpn: Qpn, wr: SendWr },
-    /// Driver-scheduled timer (lock-grant wakeups, open-loop arrivals…).
-    AppTimer { token: u64 },
-    /// A frame held back by injected delay jitter lands here; it already
-    /// passed the fault gate and must not be re-drawn.
-    FrameRedelivered(Frame),
-    /// RC requester ACK timeout for `(msg_id, attempt)` — armed only
-    /// under an installed fault plan. Stale timers (message acked, or a
-    /// newer attempt in flight) no-op.
-    AckTimeout { node: NodeId, qpn: Qpn, msg_id: u64, attempt: u32 },
-    /// Fault-plan node soft-restart.
-    NodeRestart { node: NodeId },
-}
-
-/// Requester-side multi-frame message in flight: the template frame plus
-/// the delivery schedule computed eagerly at issue time (port state is
-/// mutated then, so the times are fixed). Pooled in [`Sim::streams`] and
-/// reused — steady-state zero allocation. The seq block reserved at issue
-/// makes the replayed pops byte-identical to eager per-frame pushes.
-struct FrameStreamState {
-    template: Frame,
-    /// `wr.len.max(1)` — what the frames were sized from.
-    payload_len: u64,
-    deliveries: Vec<Ns>,
-    next: u64,
-    base_seq: u64,
 }
 
 /// What [`Sim::step`] reports back to the driver.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Notification {
     /// A CQE landed in (node, cqn) — the driver should poll it.
-    CqeReady { node: NodeId, cqn: Cqn },
+    CqeReady {
+        /// Node owning the CQ.
+        node: NodeId,
+        /// The CQ with a fresh entry.
+        cqn: Cqn,
+    },
     /// A timer scheduled via [`Sim::schedule`] fired.
-    Timer { token: u64 },
+    Timer {
+        /// The token passed to [`Sim::schedule`].
+        token: u64,
+    },
 }
 
-/// Per-message requester-side bookkeeping (ACK matching, RNR retry,
-/// go-back-N retransmission).
-struct InFlight {
-    wr: SendWr,
-    qpn: Qpn,
-    /// Go-back-N sequence assigned at first issue; retransmissions reuse
-    /// it (the responder's dedup key).
-    msg_seq: u64,
-    /// Transmissions so far minus one. An [`Event::AckTimeout`] only acts
-    /// when its recorded attempt still matches.
-    attempt: u32,
-    /// Fault mode, READs only: which response-frame indices have arrived
-    /// (bitmap for responses of <= 64 frames, plain count above that) —
-    /// the last response frame only completes the READ when the response
-    /// arrived with no holes.
-    resp_seen: u64,
-}
-
-/// One machine.
-pub struct NodeState {
-    /// This node's id.
-    pub id: NodeId,
-    /// Queue pairs, dense-indexed by QPN.
-    pub qps: DenseTable<Qp>,
-    /// Completion queues, dense-indexed by CQN.
-    pub cqs: DenseTable<Cq>,
-    /// Shared receive queues, dense-indexed by SRQN.
-    pub srqs: DenseTable<Srq>,
-    /// Registered memory regions.
-    pub mrs: MrTable,
-    /// The NIC's on-chip context cache (Fig 5's mechanism).
-    pub cache: IcmCache,
-    /// Per-node CPU accounting.
-    pub cpu: CpuLedger,
-    engine_busy_until: Ns,
-    engine_queue: VecDeque<WorkItem>,
-    engine_scheduled: bool,
-    next_msg_id: u64,
-    /// Requester-side in-flight messages keyed by msg_id.
-    inflight: HashMap<u64, InFlight>,
-    /// Responder-side recv WQE held from first to last frame of a message,
-    /// keyed by (src node, src qpn, msg id).
-    pending_recv: HashMap<(u32, u32, u64), RecvWr>,
-    /// Fault mode only: data frames of a multi-frame RC message seen so
-    /// far, keyed like `pending_recv`. The last frame only completes the
-    /// message when every frame of one attempt arrived — a lost MIDDLE
-    /// frame must not ACK a message with a hole in it.
-    rc_frames_seen: HashMap<(u32, u32, u64), u64>,
-    /// Messages dropped mid-flight (RNR/protection) — suppress completion.
-    dropped_msgs: std::collections::HashSet<(u32, u32, u64)>,
-    /// Counters.
-    pub protection_errors: u64,
-    /// RNR NAKs this node's NIC generated.
-    pub rnr_naks_sent: u64,
-    /// RC message retransmissions this node's NIC performed (requester
-    /// side; go-back-N under an installed fault plan).
-    pub retransmits: u64,
-    /// RC messages that exhausted their retry budget and completed with
-    /// [`WcStatus::RetryExceeded`].
-    pub retry_exceeded: u64,
-    /// RC data frames discarded by the responder's go-back-N discipline
-    /// (sequence ahead of the expected one — an earlier message is lost).
-    pub gbn_discards: u64,
-    /// RC last-frames that arrived with earlier frames of their attempt
-    /// missing: the message was NOT delivered or ACKed (the requester
-    /// retransmits the whole message instead).
-    pub rc_incomplete_msgs: u64,
-    /// Duplicate RC messages re-ACKed without re-delivery (the original
-    /// ACK was lost; exactly-once delivery held).
-    pub gbn_dup_acks: u64,
-    /// Fault-plan soft-restarts executed on this node.
-    pub restarts: u64,
-    /// Payload bytes of data-bearing frames processed by this NIC's rx
-    /// path — the smooth wire-level goodput counter the scenario drivers
-    /// measure (message-completion counters clump and bias short windows).
-    pub rx_data_bytes: u64,
-    /// Frames that arrived addressed to a destroyed QP and died at the
-    /// NIC (tenant-isolation counter for the QP reuse pool).
-    pub frames_to_destroyed: u64,
-}
-
-impl NodeState {
-    fn new(id: NodeId, cfg: &FabricConfig) -> Self {
-        NodeState {
-            id,
-            qps: DenseTable::new(),
-            cqs: DenseTable::new(),
-            srqs: DenseTable::new(),
-            mrs: MrTable::new(),
-            cache: IcmCache::new(cfg.nic.icm_cache_entries),
-            cpu: CpuLedger::new(cfg.cores_per_node),
-            engine_busy_until: Ns::ZERO,
-            engine_queue: VecDeque::new(),
-            engine_scheduled: false,
-            next_msg_id: 1,
-            inflight: HashMap::new(),
-            pending_recv: HashMap::new(),
-            rc_frames_seen: HashMap::new(),
-            dropped_msgs: std::collections::HashSet::new(),
-            protection_errors: 0,
-            rnr_naks_sent: 0,
-            retransmits: 0,
-            retry_exceeded: 0,
-            gbn_discards: 0,
-            rc_incomplete_msgs: 0,
-            gbn_dup_acks: 0,
-            restarts: 0,
-            rx_data_bytes: 0,
-            frames_to_destroyed: 0,
-        }
-    }
-
-    /// Engine work-queue depth (diagnostics).
-    pub fn engine_queue_len(&self) -> usize {
-        self.engine_queue.len()
-    }
-
-    /// Total fabric-level memory charged to this node (ledger for Fig 7):
-    /// QP rings + contexts, CQ rings, SRQ rings, registered regions' MTT.
-    pub fn fabric_mem_bytes(&self) -> u64 {
-        let qp: u64 = self.qps.iter().map(|q| q.mem_bytes()).sum();
-        let cq: u64 = self.cqs.iter().map(|c| c.mem_bytes()).sum();
-        let srq: u64 = self.srqs.iter().map(|s| s.mem_bytes()).sum();
-        let mtt = self.mrs.total_mtt_entries * 8; // 8 B per MTT entry
-        qp + cq + srq + mtt
-    }
-}
-
-/// The simulator.
+/// The simulator: shard coordinator + verbs API.
 pub struct Sim {
     /// The configuration the fabric was built from.
     pub cfg: FabricConfig,
     clock: Ns,
-    events: EventQueue<Event>,
-    /// Per-machine state, indexed by [`NodeId`].
-    pub nodes: Vec<NodeState>,
-    /// The switch + ports.
-    pub fabric: Fabric,
+    /// Conservative window width (`switch_latency_ns.max(1)`).
+    window: u64,
+    nshards: usize,
+    shards: Vec<Shard>,
+    /// Coordinator-owned network state: every node's **ingress** port
+    /// (egress ports live in the shards). Frames absorbed at barriers.
+    fabric: Fabric,
+    /// Persistent worker pool, spawned lazily on the first parallel
+    /// window (never for `shards == 1`).
+    pool: Option<OwnedPool<Shard>>,
+    /// Staged frames not yet absorbed, sorted by `(link_at, src, emit)`.
+    pending_wire: Vec<StagedFrame>,
+    /// Staged RC sequence resyncs, applied at the next barrier.
+    pending_resync: Vec<Resync>,
+    /// Scratch: this window's notifications, merged by `(time, node)`.
+    note_buf: Vec<(Ns, NodeId, Notification)>,
+    /// Scratch: ingress busy-horizon snapshot (index = node id).
+    snap_buf: Vec<Ns>,
     /// Completed payload bytes (data verbs), for quick aggregate throughput.
     pub completed_bytes: u64,
     /// Completed data messages (companion counter).
     pub completed_msgs: u64,
     steps: u64,
-    /// Pooled multi-frame message streams (slab + free list).
-    streams: Vec<FrameStreamState>,
-    free_streams: Vec<u32>,
-    /// Installed fault plan, if any. `None` (the default, and the result
-    /// of installing a null plan) keeps every fault hook dormant: no RNG,
-    /// no retransmission timers, no go-back-N gating — the lossless
-    /// simulator, byte for byte.
-    faults: Option<FaultState>,
+    faults_on: bool,
 }
 
 impl Sim {
-    /// Build a quiescent cluster at virtual time zero.
+    /// Build a quiescent cluster at virtual time zero, panicking on an
+    /// invalid sharding request (see [`Sim::try_new`]).
     pub fn new(cfg: FabricConfig) -> Self {
+        Sim::try_new(cfg).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Build a quiescent cluster at virtual time zero.
+    ///
+    /// Rejects `shards > 1` with `switch_latency_ns == 0`: conservative
+    /// parallel execution uses the switch latency as its lookahead bound,
+    /// and zero lookahead would degenerate every window to a single event
+    /// — serial execution with barrier overhead on top.
+    pub fn try_new(cfg: FabricConfig) -> Result<Self, String> {
+        let requested = if cfg.shards == 0 { effective_jobs(0) } else { cfg.shards };
+        let nshards = requested.clamp(1, cfg.nodes.max(1));
+        if nshards > 1 && cfg.switch_latency_ns == 0 {
+            return Err(format!(
+                "shards = {nshards} requires switch_latency_ns > 0: conservative parallel \
+                 execution uses the switch latency as its lookahead bound, and zero lookahead \
+                 degenerates to serial execution — run with shards = 1 instead"
+            ));
+        }
         let fabric = Fabric::new(cfg.nodes, cfg.link_gbps, cfg.mtu, Ns(cfg.switch_latency_ns));
-        let nodes = (0..cfg.nodes)
-            .map(|i| NodeState::new(NodeId(i as u32), &cfg))
-            .collect();
-        Sim {
+        let shards = (0..nshards).map(|i| Shard::new(i, nshards, &cfg)).collect();
+        Ok(Sim {
+            window: cfg.switch_latency_ns.max(1),
+            snap_buf: vec![Ns::ZERO; cfg.nodes],
             cfg,
             clock: Ns::ZERO,
-            events: EventQueue::new(),
-            nodes,
+            nshards,
+            shards,
             fabric,
+            pool: None,
+            pending_wire: Vec::new(),
+            pending_resync: Vec::new(),
+            note_buf: Vec::new(),
             completed_bytes: 0,
             completed_msgs: 0,
             steps: 0,
-            streams: Vec::new(),
-            free_streams: Vec::new(),
-            faults: None,
-        }
+            faults_on: false,
+        })
     }
 
     /// Install a seeded fault plan ([`super::fault`]). A null plan (zero
     /// rates, no flaps, no restarts) installs nothing, which is the
     /// loss-0 byte-identity guarantee. Must be called before any traffic
     /// is driven: the RC go-back-N discipline assumes sequence counters
-    /// and the fault gate switch on together.
+    /// and the fault gate switch on together. Each node gets an
+    /// independent deterministic fork of the plan's RNG
+    /// ([`super::fault::FaultState::for_node`]), so fault draws are a
+    /// function of the destination node alone — invariant under sharding.
     pub fn install_faults(&mut self, cfg: FaultConfig) {
         if cfg.is_null() {
             return;
         }
         assert!(
-            self.steps == 0 && self.events.is_empty(),
+            self.steps == 0 && self.shards.iter().all(|s| s.wheel_len() == 0),
             "install_faults must run before the first event"
         );
         for &(node, at) in &cfg.restarts {
-            debug_assert!((node as usize) < self.nodes.len(), "restart of unknown node");
-            self.events
-                .push(Ns(at).max(self.clock), Event::NodeRestart { node: NodeId(node) });
+            debug_assert!((node as usize) < self.cfg.nodes, "restart of unknown node");
+            let nid = NodeId(node);
+            let s = nid.shard_of(self.nshards);
+            self.shards[s].push_restart(Ns(at).max(self.clock), nid);
         }
-        self.faults = Some(FaultState::new(cfg));
+        for sh in &mut self.shards {
+            sh.install_fault_forks(&cfg);
+        }
+        self.faults_on = true;
     }
 
     /// Is a (non-null) fault plan installed?
     pub fn faults_active(&self) -> bool {
-        self.faults.is_some()
+        self.faults_on
     }
 
-    /// Snapshot of the fault layer's counters (None without a plan).
+    /// Snapshot of the fault layer's counters, summed over the per-node
+    /// forks (None without a plan).
     pub fn fault_stats(&self) -> Option<FaultStats> {
-        self.faults.as_ref().map(|f| f.stats)
+        if !self.faults_on {
+            return None;
+        }
+        let mut total = FaultStats::default();
+        for sh in &self.shards {
+            sh.fold_fault_stats(&mut total);
+        }
+        Some(total)
     }
 
-    /// Current virtual time.
+    /// Current virtual time (barrier-aligned: the end of the last
+    /// processed window, or the deadline of the last `run_until`).
     pub fn now(&self) -> Ns {
         self.clock
     }
 
     /// Events processed since construction (the DES throughput metric the
-    /// `bench simstep` / `bench fig9` targets report).
+    /// `bench simstep` / `bench fig9` targets report). Summed over shards;
+    /// invariant across shard counts.
     pub fn steps_processed(&self) -> u64 {
         self.steps
     }
 
+    /// Number of node partitions executing in parallel.
+    pub fn shard_count(&self) -> usize {
+        self.nshards
+    }
+
     /// A node's state.
     pub fn node(&self, id: NodeId) -> &NodeState {
-        &self.nodes[id.0 as usize]
+        self.shards[id.shard_of(self.nshards)].node(id)
     }
 
     /// A node's state, mutably.
     pub fn node_mut(&mut self, id: NodeId) -> &mut NodeState {
-        &mut self.nodes[id.0 as usize]
+        self.shards[id.shard_of(self.nshards)].node_mut(id)
+    }
+
+    /// Every node's state, in node-id order (replaces direct access to
+    /// the pre-sharding `nodes` vector).
+    pub fn nodes(&self) -> impl Iterator<Item = &NodeState> + '_ {
+        (0..self.cfg.nodes as u32).map(move |i| self.node(NodeId(i)))
     }
 
     // ------------------------------------------------------------ verbs API
@@ -450,14 +378,8 @@ impl Sim {
 
     /// Post a send WR and ring the doorbell. Charges driver CPU.
     pub fn post_send(&mut self, node: NodeId, qpn: Qpn, wr: SendWr) -> Result<(), PostError> {
-        let mtu = self.cfg.mtu;
-        let post_cpu = self.cfg.post_cpu_ns;
-        let n = self.node_mut(node);
-        n.cpu.charge_post(post_cpu);
-        let qp = n.qps.get_mut(qpn.0).ok_or(PostError::BadState(super::qp::QpState::Error))?;
-        qp.post_send(wr, mtu)?;
-        self.ring_doorbell(node, qpn);
-        Ok(())
+        let s = node.shard_of(self.nshards);
+        self.shards[s].post_send(node, qpn, wr)
     }
 
     /// Post a chain of WRs with ONE doorbell (WR batching — §2.3's
@@ -468,45 +390,20 @@ impl Sim {
         qpn: Qpn,
         wrs: Vec<SendWr>,
     ) -> Result<usize, PostError> {
-        let mtu = self.cfg.mtu;
-        let post_cpu = self.cfg.post_cpu_ns;
-        let n = self.node_mut(node);
-        // one syscall-ish driver cost + small per-WR marshalling cost
-        n.cpu.charge_post(post_cpu + 30 * wrs.len() as u64);
-        let qp = n.qps.get_mut(qpn.0).ok_or(PostError::BadState(super::qp::QpState::Error))?;
-        let mut accepted = 0;
-        for wr in wrs {
-            match qp.post_send(wr, mtu) {
-                Ok(()) => accepted += 1,
-                Err(e) => {
-                    if accepted == 0 {
-                        return Err(e);
-                    }
-                    break;
-                }
-            }
-        }
-        self.ring_doorbell(node, qpn);
-        Ok(accepted)
+        let s = node.shard_of(self.nshards);
+        self.shards[s].post_send_batch(node, qpn, wrs)
     }
 
     /// Post a receive WR on a QP's private RQ. Charges driver CPU.
     pub fn post_recv(&mut self, node: NodeId, qpn: Qpn, wr: RecvWr) -> Result<(), PostError> {
-        let post_cpu = self.cfg.post_cpu_ns;
-        let n = self.node_mut(node);
-        n.cpu.charge_post(post_cpu);
-        n.qps
-            .get_mut(qpn.0)
-            .ok_or(PostError::BadState(super::qp::QpState::Error))?
-            .post_recv(wr)
+        let s = node.shard_of(self.nshards);
+        self.shards[s].post_recv(node, qpn, wr)
     }
 
     /// Post a receive WR on an SRQ; false when full. Charges driver CPU.
     pub fn post_srq_recv(&mut self, node: NodeId, srqn: Srqn, wr: RecvWr) -> bool {
-        let post_cpu = self.cfg.post_cpu_ns;
-        let n = self.node_mut(node);
-        n.cpu.charge_post(post_cpu);
-        n.srqs.get_mut(srqn.0).map(|s| s.post(wr)).unwrap_or(false)
+        let s = node.shard_of(self.nshards);
+        self.shards[s].post_srq_recv(node, srqn, wr)
     }
 
     /// Free send-queue slots on a QP (drivers use this to size batches).
@@ -535,57 +432,15 @@ impl Sim {
         max: usize,
         out: &mut Vec<Cqe>,
     ) -> usize {
-        let (poll_cpu, per_cqe) = (self.cfg.poll_cpu_ns, self.cfg.per_cqe_cpu_ns);
-        let n = self.node_mut(node);
-        let got = match n.cqs.get_mut(cqn.0) {
-            Some(cq) => cq.poll_into(max, out),
-            None => 0,
-        };
-        n.cpu.charge_poll(poll_cpu + per_cqe * got as u64);
-        got
-    }
-
-    // -------------------------------------------------------------- engine
-
-    fn ring_doorbell(&mut self, node: NodeId, qpn: Qpn) {
-        let nic_doorbell = self.cfg.nic.doorbell_ns;
-        let clock = self.clock;
-        let n = self.node_mut(node);
-        let Some(qp) = n.qps.get_mut(qpn.0) else { return };
-        if !qp.issue_armed {
-            qp.issue_armed = true;
-            n.engine_queue.push_back(WorkItem::IssueFromQp(qpn));
-            // doorbell MMIO handling occupies the engine briefly
-            n.engine_busy_until = n.engine_busy_until.max(clock) + Ns(nic_doorbell);
-            self.kick_engine(node);
-        }
-    }
-
-    fn kick_engine(&mut self, node: NodeId) {
-        let clock = self.clock;
-        let n = self.node_mut(node);
-        if !n.engine_scheduled && !n.engine_queue.is_empty() {
-            n.engine_scheduled = true;
-            let at = n.engine_busy_until.max(clock);
-            self.events.push(at, Event::EngineCheck(node));
-        }
-    }
-
-    /// Re-arm a QP's issue item after a completion freed window space.
-    fn rearm_issue(&mut self, node: NodeId, qpn: Qpn) {
-        let n = self.node_mut(node);
-        let Some(qp) = n.qps.get_mut(qpn.0) else { return };
-        if qp.can_issue() && !qp.issue_armed {
-            qp.issue_armed = true;
-            n.engine_queue.push_back(WorkItem::IssueFromQp(qpn));
-            self.kick_engine(node);
-        }
+        let s = node.shard_of(self.nshards);
+        self.shards[s].poll_cq_into(node, cqn, max, out)
     }
 
     // ---------------------------------------------------------- event loop
 
-    /// Process one event; returns notifications, or None when the timeline
-    /// is exhausted. Allocating convenience form of [`Sim::step_into`].
+    /// Process one conservative window of events; returns notifications,
+    /// or None when the timeline is exhausted. Allocating convenience
+    /// form of [`Sim::step_into`].
     pub fn step(&mut self) -> Option<Vec<Notification>> {
         let mut notes = Vec::new();
         if self.step_into(&mut notes) {
@@ -595,61 +450,144 @@ impl Sim {
         }
     }
 
-    /// Process one event, **appending** notifications to `notes` (the
-    /// caller clears between steps and reuses the buffer — zero-alloc in
-    /// steady state). Returns false when the timeline is exhausted.
+    /// Process one conservative window `[start, start + W)` containing
+    /// the earliest pending event, **appending** its notifications to
+    /// `notes` (the caller clears between steps and reuses the buffer —
+    /// zero-alloc in steady state). Returns false when the timeline is
+    /// exhausted. See the module docs for the barrier protocol.
     pub fn step_into(&mut self, notes: &mut Vec<Notification>) -> bool {
-        let Some((at, ev)) = self.events.pop() else { return false };
-        debug_assert!(at >= self.clock, "time went backwards");
-        self.clock = at;
-        self.steps += 1;
-        match ev {
-            Event::EngineCheck(node) => self.on_engine_check(node),
-            Event::FrameDelivered(frame) => self.deliver_frame(frame, true),
-            Event::FrameRedelivered(frame) => self.deliver_frame(frame, false),
-            Event::FrameStream { stream } => {
-                let frame = self.next_stream_frame(stream);
-                self.deliver_frame(frame, true);
-            }
-            Event::CqeDeliver { node, cqn, cqe } => {
-                if let Some(cq) = self.node_mut(node).cqs.get_mut(cqn.0) {
-                    cq.push(cqe);
-                    notes.push(Notification::CqeReady { node, cqn });
-                }
-            }
-            Event::RetrySend { node, qpn, wr } => {
-                // RNR retry: put the message back at the head of the SQ.
-                if let Some(qp) = self.node_mut(node).qps.get_mut(qpn.0) {
-                    qp.sq.push_front(wr);
-                }
-                self.rearm_issue(node, qpn);
-            }
-            Event::AppTimer { token } => notes.push(Notification::Timer { token }),
-            Event::AckTimeout { node, qpn, msg_id, attempt } => {
-                self.on_ack_timeout(node, qpn, msg_id, attempt)
-            }
-            Event::NodeRestart { node } => self.on_node_restart(node),
-        }
+        self.apply_resyncs();
+        let Some(t) = self.next_event_time() else { return false };
+        let w = self.window;
+        let end = Ns(t.0 / w * w + w);
+        self.absorb_wire(end);
+        self.refresh_snaps();
+        self.run_shards(end);
+        self.collect(notes);
+        self.clock = end;
         true
     }
 
+    /// Earliest pending virtual time: shard wheels + staged wire (resyncs
+    /// are not events — they piggyback on the window that follows them).
+    fn next_event_time(&self) -> Option<Ns> {
+        let mut t = self.pending_wire.first().map(|f| f.link_at);
+        for sh in &self.shards {
+            if let Some(p) = sh.peek() {
+                t = Some(match t {
+                    Some(cur) => cur.min(p),
+                    None => p,
+                });
+            }
+        }
+        t
+    }
+
+    /// Apply last window's staged RC sequence resyncs (already sorted by
+    /// `(at, src, emit)`; applied as a max, so order is belt-and-braces).
+    fn apply_resyncs(&mut self) {
+        for r in self.pending_resync.drain(..) {
+            let s = r.peer.shard_of(self.nshards);
+            self.shards[s].apply_resync(r.peer, r.peer_qpn, r.next_seq);
+        }
+    }
+
+    /// Absorb every staged frame with `link_at < end` into its
+    /// destination's ingress port, in global `(link_at, src, emit)` order
+    /// (`pending_wire` is kept sorted by [`Sim::collect`]), and push the
+    /// deliveries into the owning shards' wheels.
+    fn absorb_wire(&mut self, end: Ns) {
+        let cut = self.pending_wire.partition_point(|f| f.link_at < end);
+        if cut == 0 {
+            return;
+        }
+        for sf in self.pending_wire.drain(..cut) {
+            let deliver = self.fabric.absorb_frame(sf.link_at, sf.frame.dst, sf.frame.bytes);
+            let s = sf.frame.dst.shard_of(self.nshards);
+            self.shards[s].push_frame(deliver, sf.frame);
+        }
+    }
+
+    /// Refresh every shard's snapshot of the ingress busy horizons (the
+    /// egress-side PFC gate input) — after absorption, so this window's
+    /// deliveries are visible to this window's transmitters.
+    fn refresh_snaps(&mut self) {
+        self.fabric.ingress_snapshot_into(&mut self.snap_buf);
+        for sh in &mut self.shards {
+            sh.set_ingress_snap(&self.snap_buf);
+        }
+    }
+
+    /// Run every shard through `[.., end)`. Serial (`shards == 1`) runs
+    /// on the calling thread — no pool, no channel hops, the exact
+    /// single-threaded path. Parallel scatters to the persistent pool.
+    fn run_shards(&mut self, end: Ns) {
+        if self.nshards == 1 {
+            self.shards[0].run_window(end);
+            return;
+        }
+        let workers = self.nshards.min(effective_jobs(0));
+        let pool = self.pool.get_or_insert_with(|| OwnedPool::new(workers));
+        let shards = std::mem::take(&mut self.shards);
+        self.shards = pool.scatter(shards, move |s| s.run_window(end));
+    }
+
+    /// Merge the window's staged outputs: frames and resyncs into the
+    /// pending queues (re-sorted by their total orders), notifications
+    /// stably sorted by `(time, node)` — per-node subsequences are
+    /// shard-count-invariant, so this merged order is too. Aggregate
+    /// counters are refreshed as sums over shards (commutative).
+    fn collect(&mut self, notes: &mut Vec<Notification>) {
+        for sh in &mut self.shards {
+            self.pending_wire.append(&mut sh.out_wire);
+            self.pending_resync.append(&mut sh.out_resync);
+            self.note_buf.append(&mut sh.out_notes);
+        }
+        self.pending_wire.sort_by_key(|f| (f.link_at.0, f.frame.src.0, f.emit));
+        self.pending_resync.sort_by_key(|r| (r.at.0, r.src.0, r.emit));
+        self.note_buf.sort_by_key(|&(t, n, _)| (t.0, n.0)); // stable
+        notes.extend(self.note_buf.drain(..).map(|(_, _, note)| note));
+        self.completed_bytes = self.shards.iter().map(|s| s.completed_bytes).sum();
+        self.completed_msgs = self.shards.iter().map(|s| s.completed_msgs).sum();
+        self.steps = self.shards.iter().map(|s| s.steps).sum();
+    }
+
     /// Schedule a driver timer at absolute time `at` (clamped to now).
+    /// Timers live on shard 0, so their firing order is shard-count
+    /// invariant by construction.
     pub fn schedule(&mut self, at: Ns, token: u64) {
-        self.events.push(at.max(self.clock), Event::AppTimer { token });
+        let at = at.max(self.clock);
+        self.shards[0].push_timer(at, token);
     }
 
     /// Run until the event queue drains or `deadline` passes; collect all
-    /// notifications.
+    /// notifications. Allocating convenience form of
+    /// [`Sim::run_until_into`].
     pub fn run_until(&mut self, deadline: Ns) -> Vec<Notification> {
         let mut out = Vec::new();
-        while let Some(t) = self.events.peek_time() {
-            if t > deadline {
-                break;
+        self.run_until_into(deadline, &mut out);
+        out
+    }
+
+    /// Run until the event queue drains or `deadline` passes, appending
+    /// notifications to `out` (caller-owned buffer — the zero-alloc form).
+    /// Window-quantized: events sharing the deadline's window are
+    /// processed with it (up to one window past the deadline), and the
+    /// clock parks at `max(deadline, last window end)` on every shard.
+    pub fn run_until_into(&mut self, deadline: Ns, out: &mut Vec<Notification>) {
+        loop {
+            match self.next_event_time() {
+                Some(t) if t <= deadline => {
+                    self.step_into(out);
+                }
+                _ => break,
             }
-            self.step_into(&mut out);
         }
         self.clock = self.clock.max(deadline);
-        out
+        let c = self.clock;
+        for sh in &mut self.shards {
+            sh.sync_clock(c);
+        }
     }
 
     /// Drain every pending event (quiescence).
@@ -659,1241 +597,159 @@ impl Sim {
         out
     }
 
-    /// Events still on the timeline.
+    /// Events still on the timeline (shard wheels + staged frames).
     pub fn pending_events(&self) -> usize {
-        self.events.len()
+        self.shards.iter().map(|s| s.wheel_len()).sum::<usize>() + self.pending_wire.len()
     }
 
     /// Total data payload delivered across all NICs (see
     /// [`NodeState::rx_data_bytes`]).
     pub fn total_rx_data_bytes(&self) -> u64 {
-        self.nodes.iter().map(|n| n.rx_data_bytes).sum()
+        self.nodes().map(|n| n.rx_data_bytes).sum()
     }
 
-    fn on_engine_check(&mut self, node: NodeId) {
-        {
-            let clock = self.clock;
-            let n = self.node_mut(node);
-            n.engine_scheduled = false;
-            if clock < n.engine_busy_until {
-                // engine still busy (doorbell bumped the horizon): re-check.
-                self.kick_engine(node);
-                return;
-            }
-        }
-        let item = match self.node_mut(node).engine_queue.pop_front() {
-            Some(i) => i,
-            None => return,
-        };
-        let cost = self.process_item(node, item);
-        let clock = self.clock;
-        let n = self.node_mut(node);
-        n.engine_busy_until = clock + Ns(cost);
-        self.kick_engine(node);
+    /// Frames discarded by the fault layer (injected wire loss), summed
+    /// over shards.
+    pub fn wire_drops(&self) -> u64 {
+        self.shards.iter().map(|s| s.wire_drops).sum()
     }
 
-    /// Execute one engine work item; returns engine occupancy in ns.
-    fn process_item(&mut self, node: NodeId, item: WorkItem) -> u64 {
-        match item {
-            WorkItem::IssueFromQp(qpn) => self.issue_from_qp(node, qpn),
-            WorkItem::RxFrame(frame) => self.rx_frame(node, frame),
-            WorkItem::ReadRespond {
-                requester,
-                requester_qpn,
-                responder_qpn,
-                msg_id,
-                len,
-                wr_id,
-                idx,
-            } => self
-                .read_respond(node, requester, requester_qpn, responder_qpn, msg_id, len, wr_id, idx),
-            WorkItem::Retransmit { qpn, msg_id } => self.retransmit_msg(node, qpn, msg_id),
+    /// Enable/disable the `(time, node, kind)` event pop trace on every
+    /// shard (the determinism property test's witness).
+    pub fn set_trace(&mut self, on: bool) {
+        for sh in &mut self.shards {
+            sh.set_trace(on);
         }
     }
 
-    /// Engine backpressure: extra stall (ns) before the engine can hand the
-    /// next frame to the egress port, given the tx FIFO depth.
-    fn tx_stall(&self, node: NodeId, at: Ns) -> u64 {
-        let fifo = Ns(self.cfg.nic.tx_fifo_frames
-            * super::time::wire_time(self.cfg.mtu + super::switchfab::FRAME_OVERHEAD_BYTES, self.cfg.link_gbps).0);
-        let backlog = self.fabric.egress_busy_until(node).saturating_sub(at);
-        backlog.saturating_sub(fifo).0
+    /// Drain the merged pop trace, stably sorted by `(time, node)` — the
+    /// order that is invariant across shard counts (same-instant events
+    /// of *different* nodes commute; same-node order is preserved).
+    pub fn take_trace(&mut self) -> Vec<(u64, u32, u8)> {
+        let mut out = Vec::new();
+        for sh in &mut self.shards {
+            sh.drain_trace_into(&mut out);
+        }
+        out.sort_by_key(|&(t, n, _)| (t, n)); // stable
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::types::Verb;
+    use crate::fabric::verbs;
+
+    #[test]
+    fn zero_latency_rejects_multiple_shards() {
+        let cfg = FabricConfig { switch_latency_ns: 0, shards: 4, ..FabricConfig::default() };
+        let err = Sim::try_new(cfg).unwrap_err();
+        assert!(err.contains("switch_latency_ns > 0"), "unexpected message: {err}");
+        assert!(err.contains("shards = 4"), "unexpected message: {err}");
     }
 
-    /// ICM cache touch: returns the stall cost (0 on hit).
-    fn icm_touch(&mut self, node: NodeId, key: IcmKey) -> u64 {
-        let miss_ns = self.cfg.nic.icm_miss_ns;
-        if self.node_mut(node).cache.touch(key) {
-            0
-        } else {
-            miss_ns
-        }
+    #[test]
+    fn zero_latency_serial_is_accepted() {
+        let cfg = FabricConfig { switch_latency_ns: 0, shards: 1, ..FabricConfig::default() };
+        let sim = Sim::try_new(cfg).expect("serial zero-latency is valid");
+        assert_eq!(sim.shard_count(), 1);
     }
 
-    // ----------------------------------------------------- frame streams
-
-    /// Pool a new stream slot (reusing a freed one when available).
-    fn alloc_stream(&mut self, template: Frame, payload_len: u64, base_seq: u64) -> u32 {
-        match self.free_streams.pop() {
-            Some(h) => {
-                let st = &mut self.streams[h as usize];
-                debug_assert!(st.deliveries.is_empty());
-                st.template = template;
-                st.payload_len = payload_len;
-                st.next = 0;
-                st.base_seq = base_seq;
-                h
-            }
-            None => {
-                self.streams.push(FrameStreamState {
-                    template,
-                    payload_len,
-                    deliveries: Vec::new(),
-                    next: 0,
-                    base_seq,
-                });
-                (self.streams.len() - 1) as u32
-            }
-        }
+    #[test]
+    #[should_panic(expected = "switch_latency_ns > 0")]
+    fn zero_latency_panics_through_new() {
+        let _ = Sim::new(FabricConfig {
+            switch_latency_ns: 0,
+            shards: 2,
+            ..FabricConfig::default()
+        });
     }
 
-    /// Materialize the stream's next frame; re-arm the stream's single
-    /// in-queue event at the following delivery time (with its reserved
-    /// seq) or retire the slot to the free list.
-    fn next_stream_frame(&mut self, handle: u32) -> Frame {
-        let (frame, next, base_seq, next_at) = {
-            let st = &mut self.streams[handle as usize];
-            let n = st.deliveries.len() as u64;
-            let i = st.next;
-            debug_assert!(i < n);
-            let mut frame = st.template;
-            frame.is_first = i == 0;
-            frame.is_last = i + 1 == n;
-            frame.frame_idx = i;
-            // same sizing the delivery schedule was computed from
-            frame.bytes = self.fabric.frame_bytes(st.payload_len, i, n);
-            st.next += 1;
-            let next_at =
-                if st.next < n { Some(st.deliveries[st.next as usize]) } else { None };
-            (frame, st.next, st.base_seq, next_at)
-        };
-        match next_at {
-            Some(at) => {
-                self.events
-                    .push_at_seq(at, base_seq + next, Event::FrameStream { stream: handle });
-            }
-            None => {
-                self.streams[handle as usize].deliveries.clear();
-                self.free_streams.push(handle);
-            }
-        }
-        frame
+    #[test]
+    fn shards_clamp_to_node_count_and_zero_means_cores() {
+        let sim = Sim::new(FabricConfig { nodes: 2, shards: 16, ..FabricConfig::default() });
+        assert_eq!(sim.shard_count(), 2);
+        let sim = Sim::new(FabricConfig { nodes: 4, shards: 0, ..FabricConfig::default() });
+        assert!(sim.shard_count() >= 1 && sim.shard_count() <= 4);
     }
 
-    // -------------------------------------------------- requester-side tx
-
-    /// Issue ONE message from this QP's send queue, then re-enqueue the
-    /// issue item (frame-level fairness is provided by message streaming —
-    /// large messages stream via `TxContinue`-style re-enqueue below).
-    fn issue_from_qp(&mut self, node: NodeId, qpn: Qpn) -> u64 {
-        let nic = self.cfg.nic;
-
-        // Pull the next WR if the window allows.
-        let (wr, peer, transport, msg_seq) = {
-            let n = self.node_mut(node);
-            let qp = match n.qps.get_mut(qpn.0) {
-                Some(qp) => qp,
-                None => return 0,
-            };
-            qp.issue_armed = false;
-            if !qp.can_issue() {
-                return 0; // window-blocked; re-armed on completion
-            }
-            let wr = qp.sq.pop_front().unwrap();
-            let peer = match qp.transport {
-                QpTransport::Ud => wr.ud_dest,
-                _ => qp.peer,
-            };
-            let msg_seq = if qp.transport == QpTransport::Rc {
-                qp.outstanding += 1;
-                let s = qp.next_msg_seq;
-                qp.next_msg_seq += 1;
-                s
-            } else {
-                0
-            };
-            (wr, peer, qp.transport, msg_seq)
-        };
-        let (peer_node, peer_qpn) = match peer {
-            Some(p) => p,
-            None => return nic.engine_wqe_ns, // unroutable; swallow
-        };
-
-        let mut cost = nic.engine_wqe_ns + nic.dma_setup_ns;
-        cost += self.icm_touch(node, IcmKey::Qpc(qpn.0));
-        // local buffer translation (MTT) once per message
-        if let Some(block) = self.node(node).mrs.mtt_block(wr.lkey, wr.laddr) {
-            cost += self.icm_touch(node, IcmKey::Mtt(wr.lkey.0, block));
+    /// Drive an all-to-all RC SEND/RECV ring and return every observable:
+    /// counters, final clock, and the merged pop trace.
+    fn drive(shards: usize) -> (u64, u64, u64, u64, Vec<(u64, u32, u8)>) {
+        let mut sim = Sim::new(FabricConfig { shards, ..FabricConfig::default() });
+        sim.set_trace(true);
+        let nodes = sim.cfg.nodes as u32;
+        let mut cqs = Vec::new();
+        let mut mrs = Vec::new();
+        for i in 0..nodes {
+            cqs.push(sim.create_cq(NodeId(i), 1024));
+            mrs.push(verbs::reg_buffer(&mut sim, NodeId(i), 1 << 20));
         }
-
-        let msg_id = {
-            let n = self.node_mut(node);
-            let id = n.next_msg_id;
-            n.next_msg_id += 1;
-            id
-        };
-
-        match wr.verb {
-            Verb::Read => {
-                // header-only request; the responder streams the data back.
-                let frame = Frame {
-                    kind: FrameKind::ReadReq,
-                    src: node,
-                    dst: peer_node,
-                    dst_qpn: peer_qpn,
-                    src_qpn: qpn,
-                    transport,
-                    msg_id,
-                    msg_seq,
-                    frame_idx: 0,
-                    bytes: CTRL_FRAME_BYTES,
-                    msg_len: wr.len,
-                    is_first: true,
-                    is_last: true,
-                    wr_id: wr.wr_id,
-                    imm: None,
-                    rkey: wr.rkey,
-                    raddr: wr.raddr,
-                };
-                cost += nic.engine_frame_ns;
-                let deliver = self.fabric.send_frame(self.clock + Ns(cost), node, peer_node, frame.bytes);
-                self.events.push(deliver, Event::FrameDelivered(frame));
-                let eta = deliver + self.read_response_eta(wr.len);
-                self.node_mut(node)
-                    .inflight
-                    .insert(msg_id, InFlight { wr, qpn, msg_seq, attempt: 0, resp_seen: 0 });
-                self.arm_rc_timer(node, qpn, msg_id, 0, eta);
-            }
-            Verb::Write | Verb::Send => {
-                let kind = if wr.verb == Verb::Write {
-                    FrameKind::WriteData
-                } else {
-                    FrameKind::SendData
-                };
-                let payload_len = wr.len.max(1);
-                let total = self.fabric.frame_count(payload_len);
-                let template = Frame {
-                    kind,
-                    src: node,
-                    dst: peer_node,
-                    dst_qpn: peer_qpn,
-                    src_qpn: qpn,
-                    transport,
-                    msg_id,
-                    msg_seq,
-                    frame_idx: 0, // set per frame (stream replay / single)
-                    bytes: 0, // set per frame
-                    msg_len: wr.len,
-                    is_first: false,
-                    is_last: false,
-                    wr_id: wr.wr_id,
-                    imm: wr.imm_data,
-                    rkey: wr.rkey,
-                    raddr: wr.raddr,
-                };
-                let mut handoff = self.clock + Ns(cost);
-                let last_deliver;
-                if total == 1 {
-                    cost += nic.engine_frame_ns;
-                    handoff += Ns(nic.engine_frame_ns);
-                    let stall = self.tx_stall(node, handoff);
-                    cost += stall;
-                    handoff += Ns(stall);
-                    let mut frame = template;
-                    frame.bytes = payload_len;
-                    frame.is_first = true;
-                    frame.is_last = true;
-                    let deliver = self.fabric.send_frame(handoff, node, peer_node, frame.bytes);
-                    self.events.push(deliver, Event::FrameDelivered(frame));
-                    last_deliver = deliver;
-                } else {
-                    // Coalesced stream: reserve the seq block the eager
-                    // per-frame pushes would have used, compute every
-                    // delivery time now (port state must advance at issue
-                    // time), and keep ONE event in-queue that replays them.
-                    let base_seq = self.events.reserve_seqs(total);
-                    let handle = self.alloc_stream(template, payload_len, base_seq);
-                    for i in 0..total {
-                        cost += nic.engine_frame_ns;
-                        handoff += Ns(nic.engine_frame_ns);
-                        // tx FIFO backpressure (see read_respond)
-                        let stall = self.tx_stall(node, handoff);
-                        cost += stall;
-                        handoff += Ns(stall);
-                        let bytes = self.fabric.frame_bytes(payload_len, i, total);
-                        let deliver = self.fabric.send_frame(handoff, node, peer_node, bytes);
-                        self.streams[handle as usize].deliveries.push(deliver);
-                    }
-                    let first_at = self.streams[handle as usize].deliveries[0];
-                    last_deliver = *self.streams[handle as usize].deliveries.last().unwrap();
-                    self.events
-                        .push_at_seq(first_at, base_seq, Event::FrameStream { stream: handle });
-                }
-                match transport {
-                    QpTransport::Rc => {
-                        // completion on ACK
-                        self.node_mut(node)
-                            .inflight
-                            .insert(msg_id, InFlight { wr, qpn, msg_seq, attempt: 0, resp_seen: 0 });
-                        self.arm_rc_timer(node, qpn, msg_id, 0, last_deliver);
-                    }
-                    QpTransport::Uc | QpTransport::Ud => {
-                        // local completion once the message is on the wire
-                        if wr.signaled {
-                            let send_cq = self.node(node).qps[qpn.0].send_cq;
-                            let cqe = Cqe {
-                                wr_id: wr.wr_id,
-                                kind: CqeKind::SendDone(wr.verb),
-                                status: WcStatus::Success,
-                                len: wr.len,
-                                imm_data: None,
-                                qpn,
-                                src: None,
-                            };
-                            let at = self.clock + Ns(cost + nic.cqe_delay_ns);
-                            let cqc = self.icm_touch(node, IcmKey::Cqc(send_cq.0));
-                            cost += cqc;
-                            self.events.push(at + Ns(cqc), Event::CqeDeliver { node, cqn: send_cq, cqe });
-                            self.node_mut(node).qps.get_mut(qpn.0).unwrap().completed += 1;
-                        }
-                    }
-                }
-            }
-        }
-
-        // round-robin: more WQEs pending? re-arm at the tail.
-        self.rearm_issue(node, qpn);
-        cost
-    }
-
-    // -------------------------------------------------- responder-side
-
-    /// Stream ONE frame of a READ response per engine pass; re-enqueue the
-    /// job until done. This interleaves concurrent responses frame-by-frame
-    /// (the access pattern that thrashes the requester's ICM cache).
-    #[allow(clippy::too_many_arguments)]
-    fn read_respond(
-        &mut self,
-        node: NodeId,
-        requester: NodeId,
-        requester_qpn: Qpn,
-        responder_qpn: Qpn,
-        msg_id: u64,
-        remaining: u64,
-        wr_id: u64,
-        idx: u64,
-    ) -> u64 {
-        let nic = self.cfg.nic;
-        let mtu = self.cfg.mtu;
-        // note: `remaining` is re-encoded in `len` across re-enqueues, so
-        // msg_len on response frames tracks bytes-left; completion uses the
-        // requester's in-flight record for the true length.
-        let total_len = remaining; // note: we re-encode remaining in `len`
-        let bytes = remaining.min(mtu);
-        let left = remaining - bytes;
-        let mut cost = nic.engine_frame_ns;
-        cost += self.icm_touch(node, IcmKey::Qpc(responder_qpn.0));
-        // wire backpressure: stall until the tx FIFO has room — this paces
-        // response streaming to line rate so concurrent responses interleave
-        cost += self.tx_stall(node, self.clock + Ns(cost));
-
-        let frame = Frame {
-            kind: FrameKind::ReadResp,
-            src: node,
-            dst: requester,
-            dst_qpn: requester_qpn,
-            src_qpn: responder_qpn,
-            transport: QpTransport::Rc,
-            msg_id,
-            msg_seq: 0,
-            frame_idx: idx,
-            bytes,
-            msg_len: total_len,
-            is_first: false,
-            is_last: left == 0,
-            wr_id,
-            imm: None,
-            rkey: None,
-            raddr: 0,
-        };
-        let deliver = self.fabric.send_frame(self.clock + Ns(cost), node, requester, bytes);
-        self.events.push(deliver, Event::FrameDelivered(frame));
-
-        if left > 0 {
-            self.node_mut(node).engine_queue.push_back(WorkItem::ReadRespond {
-                requester,
-                requester_qpn,
-                responder_qpn,
-                msg_id,
-                len: left,
-                wr_id,
-                idx: idx + 1,
-            });
-        }
-        cost
-    }
-
-    // ---------------------------------------------------------- rx path
-
-    /// Hand a frame to its destination NIC. `check_faults` is false only
-    /// for re-deliveries of jitter-delayed frames, which already passed
-    /// the gate — every frame consults the fault plan exactly once, so
-    /// the RNG stream stays aligned across replays.
-    fn deliver_frame(&mut self, frame: Frame, check_faults: bool) {
-        if check_faults {
-            if let Some(f) = self.faults.as_mut() {
-                match f.action(self.clock, frame.src, frame.dst) {
-                    Some(FaultAction::Drop) => {
-                        // transmitted, then lost in the switch/wire: both
-                        // ports already serialized it, only delivery (and
-                        // the goodput counter) is suppressed
-                        self.fabric.note_drop(frame.dst);
-                        return;
-                    }
-                    Some(FaultAction::Delay(extra)) => {
-                        let at = self.clock + extra;
-                        self.events.push(at, Event::FrameRedelivered(frame));
-                        return;
-                    }
-                    None => {}
-                }
-            }
-        } else if let Some(f) = self.faults.as_mut() {
-            // jitter-redelivered frame: its probabilistic draws already
-            // happened, but a flap window is a property of the link at
-            // delivery time — a delayed frame landing inside one dies too
-            if f.flap_drop(self.clock, frame.src, frame.dst) {
-                self.fabric.note_drop(frame.dst);
-                return;
-            }
-        }
-        let dst = frame.dst;
-        if frame.kind.carries_data() {
-            // wire-level goodput counter: counted at delivery, not at engine
-            // processing (the engine can burst-drain backlog and overshoot)
-            self.node_mut(dst).rx_data_bytes += frame.bytes;
-        }
-        self.node_mut(dst).engine_queue.push_back(WorkItem::RxFrame(frame));
-        self.kick_engine(dst);
-    }
-
-    fn rx_frame(&mut self, node: NodeId, frame: Frame) -> u64 {
-        let nic = self.cfg.nic;
-        let mut cost = nic.engine_frame_ns;
-        // every frame needs the QP context — THE Fig 5 mechanism.
-        cost += self.icm_touch(node, IcmKey::Qpc(frame.dst_qpn.0));
-
-        // a frame addressed to a destroyed QP (torn down by the control
-        // plane while stragglers were still in flight) dies at the NIC:
-        // no delivery, no ACK, no CQE — a prior tenant's late traffic can
-        // never surface once its QP is gone
-        if self.node(node).qps.get(frame.dst_qpn.0).map(|q| q.destroyed).unwrap_or(false) {
-            self.node_mut(node).frames_to_destroyed += 1;
-            return cost;
-        }
-
-        match frame.kind {
-            FrameKind::ReadReq => {
-                // go-back-N: a READ request occupies a slot in its QP's
-                // ordered message stream like any other RC message. Ahead
-                // of the expected sequence → discard (an earlier message
-                // is missing; the requester retransmits in order). Behind
-                // it → a duplicate request whose response was lost:
-                // re-execute (idempotent; the requester dedups by msg_id).
-                if self.faults.is_some() {
-                    let expected = self
-                        .node(node)
-                        .qps
-                        .get(frame.dst_qpn.0)
-                        .map(|q| q.expected_msg_seq)
-                        .unwrap_or(0);
-                    if frame.msg_seq > expected {
-                        self.node_mut(node).gbn_discards += 1;
-                        return cost;
-                    }
-                    self.gbn_advance(node, &frame);
-                }
-                // validate remote access then start streaming the response
-                let ok = frame
-                    .rkey
-                    .map(|k| self.node(node).mrs.check_remote(k, frame.raddr, frame.msg_len, false))
-                    .unwrap_or(false);
-                if !ok {
-                    self.node_mut(node).protection_errors += 1;
-                    // NAK → requester completes in error
-                    self.complete_requester_error(frame, WcStatus::RemoteAccessError);
-                    return cost;
-                }
-                if let Some(rk) = frame.rkey {
-                    if let Some(block) = self.node(node).mrs.mtt_block(rk, frame.raddr) {
-                        cost += self.icm_touch(node, IcmKey::Mtt(rk.0, block));
-                    }
-                }
-                self.node_mut(node).engine_queue.push_back(WorkItem::ReadRespond {
-                    requester: frame.src,
-                    requester_qpn: frame.src_qpn,
-                    responder_qpn: frame.dst_qpn,
-                    msg_id: frame.msg_id,
-                    len: frame.msg_len,
-                    wr_id: frame.wr_id,
-                    idx: 0,
-                });
-            }
-            FrameKind::ReadResp => {
-                // under faults, the last frame only completes the READ
-                // when every response frame actually arrived
-                let complete = self.read_resp_complete(node, &frame);
-                if frame.is_last && complete {
-                    cost += self.complete_read(node, &frame);
-                }
-            }
-            FrameKind::WriteData => {
-                cost += self.rx_write_data(node, &frame);
-            }
-            FrameKind::SendData => {
-                cost += self.rx_send_data(node, &frame);
-            }
-            FrameKind::Ack => {
-                cost += self.rx_ack(node, &frame);
-            }
-            FrameKind::RnrNak => {
-                let key = frame.msg_id;
-                if self.faults.is_some() {
-                    // fault mode: retransmit IN PLACE after the backoff —
-                    // same msg_id and msg_seq, through the ACK-timeout
-                    // machinery (counts against the retry budget). A
-                    // re-post with a fresh sequence would leave a hole
-                    // the responder's go-back-N discipline waits on
-                    // forever.
-                    let n = self.node_mut(node);
-                    if let Some(inf) = n.inflight.get(&key) {
-                        let (qpn, attempt) = (inf.qpn, inf.attempt);
-                        self.events.push(
-                            self.clock + Ns(nic.rnr_retry_ns),
-                            Event::AckTimeout { node, qpn, msg_id: key, attempt },
-                        );
-                    }
-                } else if let Some(inf) = self.node_mut(node).inflight.remove(&key) {
-                    // lossless mode: retry the whole message after backoff
-                    // by re-posting it at the head of the SQ (it re-issues
-                    // with a fresh msg_id — fine when nothing is gated on
-                    // sequence numbers)
-                    if let Some(qp) = self.node_mut(node).qps.get_mut(inf.qpn.0) {
-                        qp.outstanding = qp.outstanding.saturating_sub(1);
-                    }
-                    self.events.push(
-                        self.clock + Ns(nic.rnr_retry_ns),
-                        Event::RetrySend { node, qpn: inf.qpn, wr: inf.wr },
-                    );
-                }
-            }
-        }
-        cost
-    }
-
-    fn rx_write_data(&mut self, node: NodeId, frame: &Frame) -> u64 {
-        let nic = self.cfg.nic;
-        let mut cost = 0;
-        let (gcost, proceed) = self.gbn_admit(node, frame);
-        if !proceed {
-            return gcost;
-        }
-        let attempt_complete = self.rc_attempt_complete(node, frame);
-        let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
-        if frame.is_first {
-            let ok = frame
-                .rkey
-                .map(|k| self.node(node).mrs.check_remote(k, frame.raddr, frame.msg_len, true))
-                .unwrap_or(false);
-            if !ok {
-                self.node_mut(node).protection_errors += 1;
-                self.node_mut(node).dropped_msgs.insert(key);
-            } else if let Some(rk) = frame.rkey {
-                if let Some(block) = self.node(node).mrs.mtt_block(rk, frame.raddr) {
-                    cost += self.icm_touch(node, IcmKey::Mtt(rk.0, block));
-                }
-            }
-        }
-        if frame.is_last {
-            let dropped = self.node_mut(node).dropped_msgs.remove(&key);
-            if dropped {
-                // protection error: the requester completes in error, so
-                // this message's go-back-N slot is closed for good
-                self.gbn_advance(node, frame);
-                if frame.transport == QpTransport::Rc {
-                    self.complete_requester_error(*frame, WcStatus::RemoteAccessError);
-                }
-                return cost;
-            }
-            if !attempt_complete {
-                // a non-terminal frame of this attempt was lost: no
-                // delivery, no ACK, no sequence advance — the requester's
-                // timer retransmits the whole message
-                return cost;
-            }
-            // write-with-imm consumes a receive WQE and raises a CQE
-            if frame.imm.is_some() {
-                if let Some((recv_cq, wr)) = self.consume_recv_wqe(node, frame) {
-                    let cqe = Cqe {
-                        wr_id: wr.map(|w| w.wr_id).unwrap_or(0),
-                        kind: CqeKind::RecvRdmaWithImm,
-                        status: WcStatus::Success,
-                        len: frame.msg_len,
-                        imm_data: frame.imm,
-                        qpn: frame.dst_qpn,
-                        src: Some((frame.src, frame.src_qpn)),
-                    };
-                    cost += self.icm_touch(node, IcmKey::Cqc(recv_cq.0));
-                    self.events.push(
-                        self.clock + Ns(cost + nic.cqe_delay_ns),
-                        Event::CqeDeliver { node, cqn: recv_cq, cqe },
-                    );
-                } else {
-                    // RNR on write-with-imm (no recv WQE)
-                    self.send_rnr_nak(node, frame);
-                    return cost;
-                }
-            }
-            if frame.transport == QpTransport::Rc {
-                self.gbn_advance(node, frame);
-                cost += self.send_ack(node, frame);
-            } else {
-                // UC: delivered without ACK — count at the receiver
-                self.completed_bytes += frame.msg_len;
-                self.completed_msgs += 1;
-            }
-        }
-        cost
-    }
-
-    fn rx_send_data(&mut self, node: NodeId, frame: &Frame) -> u64 {
-        let nic = self.cfg.nic;
-        let mut cost = 0;
-        let (gcost, proceed) = self.gbn_admit(node, frame);
-        if !proceed {
-            return gcost;
-        }
-        let attempt_complete = self.rc_attempt_complete(node, frame);
-        let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
-        if frame.is_first {
-            // retransmitted first frames must be idempotent: clear any
-            // stale drop marker from a prior attempt, and never consume a
-            // second recv WQE for a message already mid-assembly
-            let already = if self.faults.is_some() {
-                self.node_mut(node).dropped_msgs.remove(&key);
-                // WQE already held from a prior attempt? then skip consume
-                self.node(node).pending_recv.contains_key(&key)
-            } else {
-                false
-            };
-            if !already {
-                match self.consume_recv_wqe_wr(node, frame) {
-                    Some(wr) => {
-                        // local buffer translation for the landing buffer
-                        if let Some(block) = self.node(node).mrs.mtt_block(wr.lkey, wr.laddr) {
-                            cost += self.icm_touch(node, IcmKey::Mtt(wr.lkey.0, block));
-                        }
-                        self.node_mut(node).pending_recv.insert(key, wr);
-                    }
-                    None => {
-                        self.node_mut(node).dropped_msgs.insert(key);
-                        if frame.transport == QpTransport::Rc {
-                            self.send_rnr_nak(node, frame);
-                        }
-                        // UC/UD: silent drop
-                    }
-                }
-            }
-        }
-        if frame.is_last {
-            if self.node_mut(node).dropped_msgs.remove(&key) {
-                return cost;
-            }
-            if !attempt_complete {
-                // hole in this attempt (a middle frame was lost): keep
-                // the held recv WQE and wait for the retransmission
-                return cost;
-            }
-            let wr = match self.node_mut(node).pending_recv.remove(&key) {
-                Some(wr) => wr,
-                None => return cost, // first frame never consumed (shouldn't happen)
-            };
-            let recv_cq = self
-                .node(node)
-                .qps
-                .get(frame.dst_qpn.0)
-                .map(|qp| qp.recv_cq)
-                .unwrap_or(Cqn(0));
-            let cqe = Cqe {
-                wr_id: wr.wr_id,
-                kind: CqeKind::Recv,
-                status: WcStatus::Success,
-                len: frame.msg_len,
-                imm_data: frame.imm,
-                qpn: frame.dst_qpn,
-                src: Some((frame.src, frame.src_qpn)),
-            };
-            cost += self.icm_touch(node, IcmKey::Cqc(recv_cq.0));
-            self.events.push(
-                self.clock + Ns(cost + nic.cqe_delay_ns),
-                Event::CqeDeliver { node, cqn: recv_cq, cqe },
+        // ring of RC pairs: i -> (i+1) % nodes, 8 sends each
+        for i in 0..nodes {
+            let j = (i + 1) % nodes;
+            let pair = verbs::create_connected_pair(
+                &mut sim,
+                QpTransport::Rc,
+                NodeId(i),
+                NodeId(j),
+                cqs[i as usize],
+                cqs[i as usize],
+                cqs[j as usize],
+                cqs[j as usize],
             );
-            if frame.transport == QpTransport::Rc {
-                self.gbn_advance(node, frame);
-                cost += self.send_ack(node, frame);
-            } else {
-                // UC/UD: delivered without ACK — count at the receiver
-                self.completed_bytes += frame.msg_len;
-                self.completed_msgs += 1;
-            }
-        }
-        cost
-    }
-
-    /// Consume a recv WQE (SRQ if attached, else private RQ); returns the
-    /// recv CQ and the WR if one was available.
-    fn consume_recv_wqe(&mut self, node: NodeId, frame: &Frame) -> Option<(Cqn, Option<RecvWr>)> {
-        let (srq, recv_cq) = {
-            let qp = self.node(node).qps.get(frame.dst_qpn.0)?;
-            (qp.srq, qp.recv_cq)
-        };
-        let wr = match srq {
-            Some(srqn) => self.node_mut(node).srqs.get_mut(srqn.0)?.consume(),
-            None => {
-                let qp = self.node_mut(node).qps.get_mut(frame.dst_qpn.0)?;
-                qp.rq.pop_front()
-            }
-        };
-        wr.map(|w| (recv_cq, Some(w)))
-    }
-
-    fn consume_recv_wqe_wr(&mut self, node: NodeId, frame: &Frame) -> Option<RecvWr> {
-        self.consume_recv_wqe(node, frame).and_then(|(_, wr)| wr)
-    }
-
-    fn send_ack(&mut self, node: NodeId, frame: &Frame) -> u64 {
-        let nic = self.cfg.nic;
-        let cost = nic.engine_frame_ns;
-        let ack = Frame {
-            kind: FrameKind::Ack,
-            src: node,
-            dst: frame.src,
-            dst_qpn: frame.src_qpn,
-            src_qpn: frame.dst_qpn,
-            transport: QpTransport::Rc,
-            msg_id: frame.msg_id,
-            msg_seq: frame.msg_seq,
-            frame_idx: 0,
-            bytes: CTRL_FRAME_BYTES,
-            msg_len: frame.msg_len,
-            is_first: true,
-            is_last: true,
-            wr_id: frame.wr_id,
-            imm: None,
-            rkey: None,
-            raddr: 0,
-        };
-        let deliver = self.fabric.send_frame(self.clock + Ns(cost), node, frame.src, ack.bytes);
-        self.events.push(deliver, Event::FrameDelivered(ack));
-        cost
-    }
-
-    fn send_rnr_nak(&mut self, node: NodeId, frame: &Frame) {
-        self.node_mut(node).rnr_naks_sent += 1;
-        let nak = Frame {
-            kind: FrameKind::RnrNak,
-            src: node,
-            dst: frame.src,
-            dst_qpn: frame.src_qpn,
-            src_qpn: frame.dst_qpn,
-            transport: QpTransport::Rc,
-            msg_id: frame.msg_id,
-            msg_seq: frame.msg_seq,
-            frame_idx: 0,
-            bytes: CTRL_FRAME_BYTES,
-            msg_len: frame.msg_len,
-            is_first: true,
-            is_last: true,
-            wr_id: frame.wr_id,
-            imm: None,
-            rkey: None,
-            raddr: 0,
-        };
-        let deliver = self.fabric.send_frame(self.clock, node, frame.src, nak.bytes);
-        self.events.push(deliver, Event::FrameDelivered(nak));
-    }
-
-    /// ACK received at the requester: complete the in-flight RC message.
-    fn rx_ack(&mut self, node: NodeId, frame: &Frame) -> u64 {
-        let nic = self.cfg.nic;
-        let mut cost = 0;
-        let inf = match self.node_mut(node).inflight.remove(&frame.msg_id) {
-            Some(i) => i,
-            None => return 0, // duplicate/stale ack
-        };
-        let (send_cq, signaled) = {
-            let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
-            qp.outstanding = qp.outstanding.saturating_sub(1);
-            qp.completed += 1;
-            (qp.send_cq, inf.wr.signaled)
-        };
-        self.completed_bytes += inf.wr.len;
-        self.completed_msgs += 1;
-        if signaled {
-            let cqe = Cqe {
-                wr_id: inf.wr.wr_id,
-                kind: CqeKind::SendDone(inf.wr.verb),
-                status: WcStatus::Success,
-                len: inf.wr.len,
-                imm_data: None,
-                qpn: inf.qpn,
-                src: None,
-            };
-            cost += self.icm_touch(node, IcmKey::Cqc(send_cq.0));
-            self.events.push(
-                self.clock + Ns(cost + nic.cqe_delay_ns),
-                Event::CqeDeliver { node, cqn: send_cq, cqe },
-            );
-        }
-        self.rearm_issue(node, inf.qpn);
-        cost
-    }
-
-    /// Last READ response frame landed: complete at the requester.
-    fn complete_read(&mut self, node: NodeId, frame: &Frame) -> u64 {
-        let nic = self.cfg.nic;
-        let mut cost = 0;
-        let inf = match self.node_mut(node).inflight.remove(&frame.msg_id) {
-            Some(i) => i,
-            None => return 0,
-        };
-        let send_cq = {
-            let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
-            qp.outstanding = qp.outstanding.saturating_sub(1);
-            qp.completed += 1;
-            qp.send_cq
-        };
-        self.completed_bytes += inf.wr.len;
-        self.completed_msgs += 1;
-        if inf.wr.signaled {
-            let cqe = Cqe {
-                wr_id: inf.wr.wr_id,
-                kind: CqeKind::SendDone(Verb::Read),
-                status: WcStatus::Success,
-                len: inf.wr.len,
-                imm_data: None,
-                qpn: inf.qpn,
-                src: None,
-            };
-            cost += self.icm_touch(node, IcmKey::Cqc(send_cq.0));
-            self.events.push(
-                self.clock + Ns(cost + nic.cqe_delay_ns),
-                Event::CqeDeliver { node, cqn: send_cq, cqe },
-            );
-        }
-        self.rearm_issue(node, inf.qpn);
-        cost
-    }
-
-    /// Requester-side error completion (protection/NAK). Takes the frame
-    /// by value — `Frame` is `Copy`, no clone on this path.
-    fn complete_requester_error(&mut self, frame: Frame, status: WcStatus) {
-        let node = frame.src;
-        let inf = match self.node_mut(node).inflight.remove(&frame.msg_id) {
-            Some(i) => i,
-            None => return,
-        };
-        let send_cq = {
-            let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
-            qp.outstanding = qp.outstanding.saturating_sub(1);
-            qp.send_cq
-        };
-        let cqe = Cqe {
-            wr_id: inf.wr.wr_id,
-            kind: CqeKind::SendDone(inf.wr.verb),
-            status,
-            len: 0,
-            imm_data: None,
-            qpn: inf.qpn,
-            src: None,
-        };
-        let at = self.clock + Ns(self.cfg.nic.cqe_delay_ns);
-        self.events.push(at, Event::CqeDeliver { node, cqn: send_cq, cqe });
-        self.rearm_issue(node, inf.qpn);
-    }
-
-    // -------------------------------------- fault layer: RC go-back-N
-
-    /// Responder-side go-back-N admission for an RC data frame: `(extra
-    /// cost, may proceed)`. Dormant (always admit) without a fault plan —
-    /// on the lossless fabric frames cannot arrive out of sequence.
-    fn gbn_admit(&mut self, node: NodeId, frame: &Frame) -> (u64, bool) {
-        if self.faults.is_none() || frame.transport != QpTransport::Rc {
-            return (0, true);
-        }
-        let expected = self
-            .node(node)
-            .qps
-            .get(frame.dst_qpn.0)
-            .map(|q| q.expected_msg_seq)
-            .unwrap_or(0);
-        if frame.msg_seq > expected {
-            // an earlier message is missing: discard; the requester
-            // retransmits everything from the hole, in order
-            self.node_mut(node).gbn_discards += 1;
-            return (0, false);
-        }
-        if frame.msg_seq < expected {
-            // duplicate of a message this QP already consumed — its ACK
-            // was evidently lost. Re-ACK the last frame so the requester
-            // can complete; NEVER re-deliver (exactly-once).
-            let mut cost = 0;
-            if frame.is_last {
-                self.node_mut(node).gbn_dup_acks += 1;
-                cost += self.send_ack(node, frame);
-            }
-            return (cost, false);
-        }
-        (0, true)
-    }
-
-    /// An accepted RC message closed its go-back-N slot: the QP expects
-    /// the next sequence. No-op without a fault plan (counters would be
-    /// meaningless there — the lossless RNR path re-issues under fresh
-    /// sequences).
-    fn gbn_advance(&mut self, node: NodeId, frame: &Frame) {
-        if self.faults.is_none() || frame.transport != QpTransport::Rc {
-            return;
-        }
-        if let Some(qp) = self.node_mut(node).qps.get_mut(frame.dst_qpn.0) {
-            qp.expected_msg_seq = qp.expected_msg_seq.max(frame.msg_seq + 1);
-        }
-    }
-
-    /// Fault mode, RC multi-frame data messages: record one *admitted*
-    /// frame (call after [`Sim::gbn_admit`]) and, on the last frame,
-    /// report whether the message arrived with no holes — a lost MIDDLE
-    /// frame must not let the last frame deliver/ACK a message missing
-    /// bytes. Coverage is a per-index bitmap for messages of ≤ 64 frames
-    /// (every workload here; dropped duplicates stay idempotent) and a
-    /// plain frame count above that. The tracker is consumed on the last
-    /// frame either way; an incomplete attempt leaves the requester's
-    /// timer to retransmit the whole message.
-    fn rc_attempt_complete(&mut self, node: NodeId, frame: &Frame) -> bool {
-        if self.faults.is_none() || frame.transport != QpTransport::Rc {
-            return true;
-        }
-        let total = self.fabric.frame_count(frame.msg_len.max(1));
-        if total <= 1 {
-            return true;
-        }
-        let key = (frame.src.0, frame.src_qpn.0, frame.msg_id);
-        let n = self.node_mut(node);
-        let seen = {
-            let e = n.rc_frames_seen.entry(key).or_insert(0);
-            if total <= 64 {
-                *e |= 1u64 << frame.frame_idx.min(63);
-            } else {
-                *e += 1;
-            }
-            *e
-        };
-        if !frame.is_last {
-            return true;
-        }
-        n.rc_frames_seen.remove(&key);
-        let complete = if total <= 64 {
-            let mask = if total == 64 { u64::MAX } else { (1u64 << total) - 1 };
-            seen & mask == mask
-        } else {
-            seen >= total
-        };
-        if !complete {
-            n.rc_incomplete_msgs += 1;
-        }
-        complete
-    }
-
-    /// Fault mode: record one ReadResp frame against its in-flight READ;
-    /// on the last frame, true iff the response arrived complete (same
-    /// bitmap/count scheme as [`Sim::rc_attempt_complete`], accumulated
-    /// in the in-flight entry so duplicate response streams union up).
-    fn read_resp_complete(&mut self, node: NodeId, frame: &Frame) -> bool {
-        if self.faults.is_none() {
-            return true;
-        }
-        let len = match self.node(node).inflight.get(&frame.msg_id) {
-            Some(inf) => inf.wr.len.max(1),
-            None => return true, // stale duplicate; complete_read will no-op
-        };
-        let total = self.fabric.frame_count(len);
-        if total <= 1 {
-            return true;
-        }
-        let n = self.node_mut(node);
-        let complete = {
-            let inf = n.inflight.get_mut(&frame.msg_id).expect("checked above");
-            if total <= 64 {
-                inf.resp_seen |= 1u64 << frame.frame_idx.min(63);
-            } else {
-                inf.resp_seen += 1;
-            }
-            if !frame.is_last {
-                return true;
-            }
-            if total <= 64 {
-                let mask = if total == 64 { u64::MAX } else { (1u64 << total) - 1 };
-                inf.resp_seen & mask == mask
-            } else {
-                inf.resp_seen >= total
-            }
-        };
-        if !complete {
-            n.rc_incomplete_msgs += 1;
-        }
-        complete
-    }
-
-    /// Schedule the ACK timeout for `attempt` of an in-flight RC message.
-    /// `expected_done` is when its last frame lands (for READs: when the
-    /// response should have finished streaming); the margin backs off
-    /// exponentially per attempt, capped at 8×. Dormant without faults.
-    fn arm_rc_timer(&mut self, node: NodeId, qpn: Qpn, msg_id: u64, attempt: u32, expected_done: Ns) {
-        if self.faults.is_none() {
-            return;
-        }
-        let margin = self.cfg.nic.retransmit_timeout_ns << attempt.min(3);
-        let at = expected_done + Ns(2 * self.cfg.switch_latency_ns + margin);
-        self.events.push(at, Event::AckTimeout { node, qpn, msg_id, attempt });
-    }
-
-    /// Rough time for a READ response of `len` bytes to stream back:
-    /// serialization of payload + per-frame overhead, responder engine
-    /// touches, one-way propagation.
-    fn read_response_eta(&self, len: u64) -> Ns {
-        let payload = len.max(1);
-        let frames = self.fabric.frame_count(payload);
-        let wire = super::time::wire_time(
-            payload + frames * super::switchfab::FRAME_OVERHEAD_BYTES,
-            self.cfg.link_gbps,
-        );
-        Ns(wire.0 + frames * self.cfg.nic.engine_frame_ns + self.cfg.switch_latency_ns)
-    }
-
-    /// An ACK timeout fired. Acts only when the message is still in
-    /// flight under the same attempt (otherwise it was acked, completed,
-    /// superseded by a newer attempt, or its node restarted).
-    fn on_ack_timeout(&mut self, node: NodeId, qpn: Qpn, msg_id: u64, attempt: u32) {
-        let retry_cnt = self.cfg.nic.retry_cnt;
-        {
-            let n = self.node_mut(node);
-            match n.inflight.get(&msg_id) {
-                Some(inf) if inf.attempt == attempt => {}
-                _ => return,
-            }
-        }
-        if attempt >= retry_cnt {
-            self.complete_retry_exceeded(node, msg_id);
-            return;
-        }
-        // bump the attempt NOW, not when the engine gets to the work item:
-        // a second timer armed under the same attempt (the RNR path arms
-        // one alongside the issue-time timer) must see the mismatch and
-        // no-op instead of double-retransmitting and burning the budget
-        if let Some(inf) = self.node_mut(node).inflight.get_mut(&msg_id) {
-            inf.attempt += 1;
-        }
-        // retransmission is engine work like everything else
-        self.node_mut(node).engine_queue.push_back(WorkItem::Retransmit { qpn, msg_id });
-        self.kick_engine(node);
-    }
-
-    /// Re-emit every frame of a timed-out RC message — go-back-N at
-    /// message granularity, same msg_id and msg_seq as the original
-    /// transmission so the responder can deduplicate. Returns engine
-    /// occupancy.
-    fn retransmit_msg(&mut self, node: NodeId, qpn: Qpn, msg_id: u64) -> u64 {
-        let nic = self.cfg.nic;
-        let (wr, msg_seq, attempt) = {
-            // the attempt was already bumped by the timeout that queued
-            // this work item — read, don't re-bump
-            let Some(inf) = self.node(node).inflight.get(&msg_id) else { return 0 };
-            (inf.wr.clone(), inf.msg_seq, inf.attempt)
-        };
-        let Some((peer_node, peer_qpn)) = self.node(node).qps.get(qpn.0).and_then(|q| q.peer)
-        else {
-            return 0;
-        };
-        self.node_mut(node).retransmits += 1;
-        let mut cost = nic.engine_wqe_ns;
-        cost += self.icm_touch(node, IcmKey::Qpc(qpn.0));
-
-        match wr.verb {
-            Verb::Read => {
-                let frame = Frame {
-                    kind: FrameKind::ReadReq,
-                    src: node,
-                    dst: peer_node,
-                    dst_qpn: peer_qpn,
-                    src_qpn: qpn,
-                    transport: QpTransport::Rc,
-                    msg_id,
-                    msg_seq,
-                    frame_idx: 0,
-                    bytes: CTRL_FRAME_BYTES,
-                    msg_len: wr.len,
-                    is_first: true,
-                    is_last: true,
-                    wr_id: wr.wr_id,
-                    imm: None,
-                    rkey: wr.rkey,
-                    raddr: wr.raddr,
+            let mut next = 0;
+            verbs::replenish_rq(&mut sim, NodeId(j), pair.b.1, &mrs[j as usize], 8192, 16, &mut next);
+            for k in 0..8u64 {
+                let wr = SendWr {
+                    wr_id: u64::from(i) * 100 + k,
+                    verb: Verb::Send,
+                    len: 6000, // two frames
+                    lkey: mrs[i as usize].key,
+                    laddr: mrs[i as usize].addr,
+                    rkey: None,
+                    raddr: 0,
+                    imm_data: Some(k as u32),
+                    ud_dest: None,
+                    signaled: true,
                 };
-                cost += nic.engine_frame_ns;
-                let deliver =
-                    self.fabric.send_frame(self.clock + Ns(cost), node, peer_node, frame.bytes);
-                self.events.push(deliver, Event::FrameDelivered(frame));
-                let eta = deliver + self.read_response_eta(wr.len);
-                self.arm_rc_timer(node, qpn, msg_id, attempt, eta);
-            }
-            Verb::Write | Verb::Send => {
-                let kind = if wr.verb == Verb::Write {
-                    FrameKind::WriteData
-                } else {
-                    FrameKind::SendData
-                };
-                let payload = wr.len.max(1);
-                let total = self.fabric.frame_count(payload);
-                let mut handoff = self.clock + Ns(cost);
-                let mut last = self.clock;
-                // retransmissions are rare: eager per-frame pushes, no
-                // stream coalescing
-                for i in 0..total {
-                    cost += nic.engine_frame_ns;
-                    handoff += Ns(nic.engine_frame_ns);
-                    let stall = self.tx_stall(node, handoff);
-                    cost += stall;
-                    handoff += Ns(stall);
-                    let bytes = self.fabric.frame_bytes(payload, i, total);
-                    let frame = Frame {
-                        kind,
-                        src: node,
-                        dst: peer_node,
-                        dst_qpn: peer_qpn,
-                        src_qpn: qpn,
-                        transport: QpTransport::Rc,
-                        msg_id,
-                        msg_seq,
-                        frame_idx: i,
-                        bytes,
-                        msg_len: wr.len,
-                        is_first: i == 0,
-                        is_last: i + 1 == total,
-                        wr_id: wr.wr_id,
-                        imm: wr.imm_data,
-                        rkey: wr.rkey,
-                        raddr: wr.raddr,
-                    };
-                    last = self.fabric.send_frame(handoff, node, peer_node, bytes);
-                    self.events.push(last, Event::FrameDelivered(frame));
-                }
-                self.arm_rc_timer(node, qpn, msg_id, attempt, last);
+                sim.post_send(NodeId(i), pair.a.1, wr).expect("post");
             }
         }
-        cost
+        sim.run_to_quiescence();
+        (
+            sim.completed_msgs,
+            sim.completed_bytes,
+            sim.steps_processed(),
+            sim.now().0,
+            sim.take_trace(),
+        )
     }
 
-    /// The retry budget ran out. Real RC transitions the QP to Error and
-    /// FLUSHES every outstanding WR — modeled here by completing every
-    /// in-flight message of the QP with [`WcStatus::RetryExceeded`]. The
-    /// responder's expected sequence is then resynced to the requester's
-    /// next issue (the out-of-band re-establishment a daemon performs
-    /// after a fatal retry): without both, one dead message would make
-    /// the responder discard everything after it forever, and a
-    /// partial resync could dup-ACK a message that was never delivered.
-    fn complete_retry_exceeded(&mut self, node: NodeId, msg_id: u64) {
-        let qpn = match self.node(node).inflight.get(&msg_id) {
-            Some(inf) => inf.qpn,
-            None => return,
-        };
-        // flush in ascending msg_id order — never HashMap order
-        let mut ids: Vec<u64> = self
-            .node(node)
-            .inflight
-            .iter()
-            .filter(|(_, inf)| inf.qpn == qpn)
-            .map(|(&id, _)| id)
-            .collect();
-        ids.sort_unstable();
-        for id in ids {
-            let inf = self.node_mut(node).inflight.remove(&id).expect("collected id");
-            let send_cq = {
-                let n = self.node_mut(node);
-                n.retry_exceeded += 1;
-                let qp = n.qps.get_mut(qpn.0).expect("qp of in-flight msg");
-                qp.outstanding = qp.outstanding.saturating_sub(1);
-                qp.send_cq
-            };
-            let cqe = Cqe {
-                wr_id: inf.wr.wr_id,
-                kind: CqeKind::SendDone(inf.wr.verb),
-                status: WcStatus::RetryExceeded,
-                len: 0,
-                imm_data: None,
-                qpn,
-                src: None,
-            };
-            let at = self.clock + Ns(self.cfg.nic.cqe_delay_ns);
-            self.events.push(at, Event::CqeDeliver { node, cqn: send_cq, cqe });
+    #[test]
+    fn sharded_ring_matches_serial() {
+        let serial = drive(1);
+        assert_eq!(serial.0, 32, "8 msgs on each of 4 ring edges");
+        for shards in [2, 4] {
+            let sharded = drive(shards);
+            assert_eq!(serial.0, sharded.0, "completed_msgs, shards={shards}");
+            assert_eq!(serial.1, sharded.1, "completed_bytes, shards={shards}");
+            assert_eq!(serial.2, sharded.2, "steps, shards={shards}");
+            assert_eq!(serial.3, sharded.3, "final clock, shards={shards}");
+            assert_eq!(serial.4, sharded.4, "pop trace, shards={shards}");
         }
-        // resync the responder past every issued (now dead or delivered)
-        // sequence so post-recovery traffic is accepted again
-        let (next_seq, peer) = {
-            let qp = self.node(node).qps.get(qpn.0).expect("qp exists");
-            (qp.next_msg_seq, qp.peer)
-        };
-        if let Some((peer_node, peer_qpn)) = peer {
-            if let Some(pq) = self.node_mut(peer_node).qps.get_mut(peer_qpn.0) {
-                pq.expected_msg_seq = pq.expected_msg_seq.max(next_seq);
-            }
-        }
-        self.rearm_issue(node, qpn);
     }
 
-    /// Fault-plan node soft-restart: queued engine work, SQ/RQ/SRQ/CQ
-    /// contents and requester in-flight state vanish; connection state
-    /// (peer bindings, go-back-N counters) survives so peers recover by
-    /// retransmission. Work that died without a completion is what the
-    /// daemon's stale-lease reclaim exists for.
-    fn on_node_restart(&mut self, node: NodeId) {
-        if let Some(f) = self.faults.as_mut() {
-            f.note_restart();
-        }
-        let n = self.node_mut(node);
-        n.restarts += 1;
-        n.engine_queue.clear();
-        n.inflight.clear();
-        n.pending_recv.clear();
-        n.rc_frames_seen.clear();
-        n.dropped_msgs.clear();
-        for qp in n.qps.iter_mut() {
-            qp.reset_soft();
-        }
-        for srq in n.srqs.iter_mut() {
-            srq.clear();
-        }
-        for cq in n.cqs.iter_mut() {
-            cq.clear();
-        }
+    #[test]
+    fn run_until_parks_every_clock_at_the_deadline() {
+        let mut sim = Sim::new(FabricConfig { shards: 2, ..FabricConfig::default() });
+        let notes = sim.run_until(Ns(50_000));
+        assert!(notes.is_empty());
+        assert_eq!(sim.now(), Ns(50_000));
+        sim.schedule(Ns(60_000), 7);
+        let notes = sim.run_until(Ns(70_000));
+        assert_eq!(notes, vec![Notification::Timer { token: 7 }]);
+        assert!(sim.now() >= Ns(70_000));
     }
 }

@@ -16,6 +16,11 @@ use super::types::NodeId;
 /// BTH(12) + ICRC(4) + preamble/IFG(20) = 82 B. We fold it into each frame.
 pub const FRAME_OVERHEAD_BYTES: u64 = 82;
 
+/// Per-port switch buffering before PFC pauses the senders (shared by
+/// [`Fabric::new`] and the sharded simulator's egress-side PFC gate so
+/// both stages of the split wire model agree on the threshold).
+pub const SWITCH_BUFFER_BYTES: u64 = 256 << 10;
+
 /// One direction of a port: models serialization as a busy-until horizon.
 #[derive(Clone, Debug, Default)]
 pub struct Port {
@@ -32,8 +37,10 @@ pub struct Port {
 
 impl Port {
     /// Occupy the port for `duration` starting no earlier than `earliest`;
-    /// returns the completion time.
-    fn occupy(&mut self, earliest: Ns, duration: Ns, wire_bytes: u64) -> Ns {
+    /// returns the completion time. Public because the sharded simulator
+    /// drives its shard-owned egress ports directly (the ingress half
+    /// stays behind [`Fabric::absorb_frame`]).
+    pub fn occupy(&mut self, earliest: Ns, duration: Ns, wire_bytes: u64) -> Ns {
         let start = self.busy_until.max(earliest);
         let done = start + duration;
         self.busy_until = done;
@@ -80,7 +87,7 @@ impl Fabric {
             gbps,
             mtu,
             base_latency,
-            switch_buffer_bytes: 256 << 10,
+            switch_buffer_bytes: SWITCH_BUFFER_BYTES,
             egress: vec![Port::default(); nodes],
             ingress: vec![Port::default(); nodes],
         }
@@ -138,6 +145,29 @@ impl Fabric {
     pub fn frames_for(&self, len: u64) -> Vec<u64> {
         let n = self.frame_count(len);
         (0..n).map(|i| self.frame_bytes(len, i, n)).collect()
+    }
+
+    /// Absorb one staged frame at `dst`'s ingress port: the frame's first
+    /// bit reaches the port at `link_at` (already paid for egress
+    /// serialization + switch latency on the source side); the port then
+    /// takes it in at line rate behind any fan-in backlog. Returns the
+    /// delivery (last-bit-in) time. This is the ingress half of
+    /// [`Fabric::send_frame`], split out so the sharded simulator can run
+    /// the egress half inside the owning shard and this half at the
+    /// conservative barrier, in one global deterministic frame order.
+    pub fn absorb_frame(&mut self, link_at: Ns, dst: NodeId, payload_bytes: u64) -> Ns {
+        debug_assert!(payload_bytes <= self.mtu, "frame exceeds MTU");
+        let wire_bytes = payload_bytes + FRAME_OVERHEAD_BYTES;
+        let frame_time = wire_time(wire_bytes, self.gbps);
+        self.ingress[dst.0 as usize].occupy(link_at, frame_time, wire_bytes)
+    }
+
+    /// Copy every ingress port's busy horizon into `out` (index = node
+    /// id). Refreshed into each shard at every barrier: the shards' PFC
+    /// gates read this snapshot instead of racing on the live ports.
+    pub fn ingress_snapshot_into(&self, out: &mut Vec<Ns>) {
+        out.clear();
+        out.extend(self.ingress.iter().map(|p| p.busy_until()));
     }
 
     /// Record an injected-loss discard at `dst`'s ingress port. The frame

@@ -6,6 +6,24 @@ use std::fmt;
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct NodeId(pub u32);
 
+impl NodeId {
+    /// Which of `shards` simulator shards owns this node (round-robin
+    /// partition, `node % shards`). Round-robin beats contiguous ranges
+    /// here because scenario drivers cluster servers at low ids and
+    /// clients above them — striping spreads both roles over all shards.
+    #[inline]
+    pub fn shard_of(self, shards: usize) -> usize {
+        self.0 as usize % shards.max(1)
+    }
+
+    /// This node's index within its owning shard's dense local arrays
+    /// (`node / shards`; the inverse of the round-robin stripe).
+    #[inline]
+    pub fn shard_local(self, shards: usize) -> usize {
+        self.0 as usize / shards.max(1)
+    }
+}
+
 impl fmt::Display for NodeId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "n{}", self.0)

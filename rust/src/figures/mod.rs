@@ -390,6 +390,13 @@ pub fn fig9_conns(budget: Budget) -> Vec<usize> {
 /// (connection count, ablation) pair is its own independent `Sim`, so
 /// the parallel runner schedules them as separate work items.
 pub fn fig9(budget: Budget, jobs: usize) -> Vec<Fig9Row> {
+    fig9_sharded(budget, jobs, 1)
+}
+
+/// [`fig9`] with each point's `Sim` split into `shards` partitions
+/// (conservative parallel execution; output bytes are shard-invariant,
+/// gated by `tests/determinism.rs`).
+pub fn fig9_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig9Row> {
     let conns = fig9_conns(budget);
     let mut items = Vec::with_capacity(conns.len() * 2);
     for &c in &conns {
@@ -397,7 +404,9 @@ pub fn fig9(budget: Budget, jobs: usize) -> Vec<Fig9Row> {
         items.push((c, true));
     }
     let runs = parallel::map_indexed(items, jobs, |_, (c, rc_only)| {
-        scale_send(&fig9_cfg(c, budget, rc_only))
+        let mut cfg = fig9_cfg(c, budget, rc_only);
+        cfg.shards = shards;
+        scale_send(&cfg)
     });
     conns
         .into_iter()
@@ -408,10 +417,15 @@ pub fn fig9(budget: Budget, jobs: usize) -> Vec<Fig9Row> {
 
 /// The `--rc-only` ablation alone (adaptive column omitted).
 pub fn fig9_rc_only(budget: Budget, jobs: usize) -> Vec<Fig9Row> {
-    parallel::map_indexed(fig9_conns(budget), jobs, |_, c| Fig9Row {
-        conns: c,
-        adaptive: None,
-        rc_only: scale_send(&fig9_cfg(c, budget, true)),
+    fig9_rc_only_sharded(budget, jobs, 1)
+}
+
+/// [`fig9_rc_only`] with a sharded `Sim` per point (shard-invariant).
+pub fn fig9_rc_only_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig9Row> {
+    parallel::map_indexed(fig9_conns(budget), jobs, |_, c| {
+        let mut cfg = fig9_cfg(c, budget, true);
+        cfg.shards = shards;
+        Fig9Row { conns: c, adaptive: None, rc_only: scale_send(&cfg) }
     })
 }
 
@@ -549,6 +563,11 @@ pub struct Fig10Row {
 /// RC pays for loss with retransmissions and (inside flap windows) retry
 /// exhaustion; UD pays with silently discarded fragmented messages.
 pub fn fig10(budget: Budget, jobs: usize) -> Vec<Fig10Row> {
+    fig10_sharded(budget, jobs, 1)
+}
+
+/// [`fig10`] with a sharded `Sim` per point (shard-invariant output).
+pub fn fig10_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig10Row> {
     let losses = fig10_loss_rates(budget);
     let mut items = Vec::with_capacity(losses.len() * 2);
     for &loss in &losses {
@@ -556,7 +575,9 @@ pub fn fig10(budget: Budget, jobs: usize) -> Vec<Fig10Row> {
         items.push((loss, true));
     }
     let runs = parallel::map_indexed(items, jobs, |_, (loss, rc_only)| {
-        chaos_send(&fig10_cfg(loss, budget, rc_only))
+        let mut cfg = fig10_cfg(loss, budget, rc_only);
+        cfg.shards = shards;
+        chaos_send(&cfg)
     });
     losses
         .into_iter()
@@ -571,10 +592,15 @@ pub fn fig10(budget: Budget, jobs: usize) -> Vec<Fig10Row> {
 
 /// The `--rc-only` ablation alone (adaptive column omitted).
 pub fn fig10_rc_only(budget: Budget, jobs: usize) -> Vec<Fig10Row> {
-    parallel::map_indexed(fig10_loss_rates(budget), jobs, |_, loss| Fig10Row {
-        loss,
-        adaptive: None,
-        rc_only: chaos_send(&fig10_cfg(loss, budget, true)),
+    fig10_rc_only_sharded(budget, jobs, 1)
+}
+
+/// [`fig10_rc_only`] with a sharded `Sim` per point (shard-invariant).
+pub fn fig10_rc_only_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig10Row> {
+    parallel::map_indexed(fig10_loss_rates(budget), jobs, |_, loss| {
+        let mut cfg = fig10_cfg(loss, budget, true);
+        cfg.shards = shards;
+        Fig10Row { loss, adaptive: None, rc_only: chaos_send(&cfg) }
     })
 }
 
@@ -713,6 +739,11 @@ pub struct Fig11Row {
 /// ablation, at read-mostly (95/5) and write-heavy (50/50) mixes. Each
 /// (clients, mode, mix) triple is an independent `Sim` work item.
 pub fn fig11(budget: Budget, jobs: usize) -> Vec<Fig11Row> {
+    fig11_sharded(budget, jobs, 1)
+}
+
+/// [`fig11`] with a sharded `Sim` per point (shard-invariant output).
+pub fn fig11_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig11Row> {
     let clients = fig11_clients(budget);
     let mut items = Vec::with_capacity(clients.len() * 4);
     for &c in &clients {
@@ -722,7 +753,9 @@ pub fn fig11(budget: Budget, jobs: usize) -> Vec<Fig11Row> {
         items.push((c, true, true));
     }
     let runs = parallel::map_indexed(items, jobs, |_, (c, rpc, heavy)| {
-        kv_storm(&fig11_cfg(c, budget, rpc, heavy))
+        let mut cfg = fig11_cfg(c, budget, rpc, heavy);
+        cfg.shards = shards;
+        kv_storm(&cfg)
     });
     clients
         .into_iter()
@@ -740,6 +773,11 @@ pub fn fig11(budget: Budget, jobs: usize) -> Vec<Fig11Row> {
 /// The SEND-RPC ablation alone (`--rc-only`: one-sided columns omitted —
 /// everything rides the two-sided RC path).
 pub fn fig11_rpc_only(budget: Budget, jobs: usize) -> Vec<Fig11Row> {
+    fig11_rpc_only_sharded(budget, jobs, 1)
+}
+
+/// [`fig11_rpc_only`] with a sharded `Sim` per point (shard-invariant).
+pub fn fig11_rpc_only_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig11Row> {
     let clients = fig11_clients(budget);
     let mut items = Vec::with_capacity(clients.len() * 2);
     for &c in &clients {
@@ -747,7 +785,9 @@ pub fn fig11_rpc_only(budget: Budget, jobs: usize) -> Vec<Fig11Row> {
         items.push((c, true));
     }
     let runs = parallel::map_indexed(items, jobs, |_, (c, heavy)| {
-        kv_storm(&fig11_cfg(c, budget, true, heavy))
+        let mut cfg = fig11_cfg(c, budget, true, heavy);
+        cfg.shards = shards;
+        kv_storm(&cfg)
     });
     clients
         .into_iter()
@@ -892,13 +932,22 @@ pub struct Fig12Row {
 /// pair is an independent `Sim` work item, interleaved so `--jobs N`
 /// merges byte-identically with the serial runner.
 pub fn fig12(budget: Budget, jobs: usize) -> Vec<Fig12Row> {
+    fig12_sharded(budget, jobs, 1)
+}
+
+/// [`fig12`] with a sharded `Sim` per point (shard-invariant output).
+pub fn fig12_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig12Row> {
     let conns = fig12_conns(budget);
     let mut items = Vec::with_capacity(conns.len() * 2);
     for &c in &conns {
         items.push((c, false));
         items.push((c, true));
     }
-    let runs = parallel::map_indexed(items, jobs, |_, (c, cold)| churn_storm(&fig12_cfg(c, cold)));
+    let runs = parallel::map_indexed(items, jobs, |_, (c, cold)| {
+        let mut cfg = fig12_cfg(c, cold);
+        cfg.shards = shards;
+        churn_storm(&cfg)
+    });
     conns
         .into_iter()
         .enumerate()
@@ -909,9 +958,17 @@ pub fn fig12(budget: Budget, jobs: usize) -> Vec<Fig12Row> {
 /// The `--cold` ablation alone: every reconnect full-handshakes and all
 /// leases establish eagerly at connect (warm columns omitted).
 pub fn fig12_cold_only(budget: Budget, jobs: usize) -> Vec<Fig12Row> {
+    fig12_cold_only_sharded(budget, jobs, 1)
+}
+
+/// [`fig12_cold_only`] with a sharded `Sim` per point (shard-invariant).
+pub fn fig12_cold_only_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig12Row> {
     let conns = fig12_conns(budget);
-    let runs =
-        parallel::map_indexed(conns.clone(), jobs, |_, c| churn_storm(&fig12_cfg(c, true)));
+    let runs = parallel::map_indexed(conns.clone(), jobs, |_, c| {
+        let mut cfg = fig12_cfg(c, true);
+        cfg.shards = shards;
+        churn_storm(&cfg)
+    });
     conns
         .into_iter()
         .enumerate()
@@ -1029,6 +1086,22 @@ pub fn run_fig(
     fig78_cache: &mut Option<Vec<Fig78Row>>,
     jobs: usize,
 ) -> Option<(Series, String)> {
+    run_fig_sharded(id, b, fig78_cache, jobs, 1)
+}
+
+/// [`run_fig`] with a sharded `Sim` per sweep point. Only the daemon-scale
+/// figures (9–12) thread the knob — figs 1–8 run tiny fabrics where
+/// partitioning has nothing to win, so they ignore it. The output bytes
+/// are identical for every `shards` value (the determinism suite gates
+/// figs 9–12 at `shards = 4` against serial), so the figure JSON never
+/// records the knob.
+pub fn run_fig_sharded(
+    id: u64,
+    b: Budget,
+    fig78_cache: &mut Option<Vec<Fig78Row>>,
+    jobs: usize,
+    shards: usize,
+) -> Option<(Series, String)> {
     match id {
         1 => {
             let rows = fig1(b, jobs);
@@ -1091,22 +1164,22 @@ pub fn run_fig(
             Some((s, table))
         }
         9 => {
-            let rows = fig9(b, jobs);
+            let rows = fig9_sharded(b, jobs, shards);
             let table = print_fig9(&rows);
             Some((fig9_series(&rows), table))
         }
         10 => {
-            let rows = fig10(b, jobs);
+            let rows = fig10_sharded(b, jobs, shards);
             let table = print_fig10(&rows);
             Some((fig10_series(&rows), table))
         }
         11 => {
-            let rows = fig11(b, jobs);
+            let rows = fig11_sharded(b, jobs, shards);
             let table = print_fig11(&rows);
             Some((fig11_series(&rows), table))
         }
         12 => {
-            let rows = fig12(b, jobs);
+            let rows = fig12_sharded(b, jobs, shards);
             let table = print_fig12(&rows);
             Some((fig12_series(&rows), table))
         }

@@ -10,17 +10,25 @@
 //!   sweeps; `--rc-only` restricts figures 9/10/11 to the ablation;
 //!   `--cold` restricts figure 12 to the no-pool/eager-lease ablation;
 //!   `--jobs N` runs the independent sweep points on N threads (0 = all
-//!   cores) with byte-identical output; `--tsv DIR` also writes TSVs.
+//!   cores) with byte-identical output; `--shards N` splits each
+//!   figure-9–12 `Sim` into N conservatively-synchronized partitions (0 =
+//!   all cores), also byte-identical; `--tsv DIR` also writes TSVs.
 //! * `bench hotpath` — the hot-path microbenchmarks (SPSC ring, doorbell,
 //!   ICM cache, daemon submit) with JSON results.
-//! * `bench simstep` — raw discrete-event-scheduler throughput
-//!   (events/sec) on a daemon-free QP storm.
+//! * `bench simstep [--shards N]` — raw discrete-event-scheduler
+//!   throughput (events/sec) on a daemon-free QP storm; `--shards N` adds
+//!   a shard-count sweep (1, 2, N) of the same storm for the
+//!   conservative-parallel scaling trajectory (BENCH_PR8.json via
+//!   `scripts/bench_pr8.sh`).
 //! * `bench pump` — daemon data-plane throughput (ops/sec through one
 //!   daemon's pump loop: batch flush, CQ drain, slab completion, SRQ
 //!   refill).
-//! * `bench fig9 [--out FILE] [--jobs N]` — wall-clock of the Fig-9
-//!   scale sweep per connection count, written as `BENCH_PR5.json` (the
-//!   CI perf artifact; `bench pump` + `bench simstep` sections embedded).
+//! * `bench fig9 [--out FILE] [--jobs N] [--shards N]` — wall-clock of
+//!   the Fig-9 scale sweep per connection count, written as
+//!   `BENCH_PR5.json` (the CI perf artifact; `bench pump` + `bench
+//!   simstep` sections embedded). With `--shards N` every point also runs
+//!   sharded, the output series is byte-compared against serial
+//!   (`identical_series`), and the artifact defaults to `BENCH_PR8.json`.
 //! * `bench kv [--out FILE] [--jobs N]` — wall-clock of the fig-11 KV
 //!   sweep per client count (one-sided vs SEND-RPC), written as
 //!   `BENCH_PR6.json` (the CI perf artifact for the window data plane).
@@ -73,9 +81,9 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: rdmavisor <fig|figures|bench|demo|serve|init-config|info> [--help]\n\
-                 \n  fig --id 1|5|6|7|8|9|10|11|12 [--all] [--quick] [--rc-only] [--cold] [--jobs N] [--tsv DIR]   (JSON on stdout)\
-                 \n  bench hotpath|simstep|pump [--quick]               (JSON on stdout)\
-                 \n  bench fig9 [--quick] [--jobs N] [--out FILE]    (fig-9 wall clock -> BENCH_PR5.json)\
+                 \n  fig --id 1|5|6|7|8|9|10|11|12 [--all] [--quick] [--rc-only] [--cold] [--jobs N] [--shards N] [--tsv DIR]   (JSON on stdout)\
+                 \n  bench hotpath|simstep|pump [--quick] [--shards N]  (JSON on stdout)\
+                 \n  bench fig9 [--quick] [--jobs N] [--shards N] [--out FILE]    (fig-9 wall clock -> BENCH_PR5.json; --shards -> BENCH_PR8.json)\
                  \n  bench kv [--quick] [--jobs N] [--out FILE]      (fig-11 wall clock -> BENCH_PR6.json)\
                  \n  bench churn [--quick] [--jobs N] [--out FILE]   (fig-12 wall clock -> BENCH_PR7.json)\
                  \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
@@ -102,6 +110,13 @@ fn budget(args: &Args) -> Budget {
 /// Resolve `--jobs N` (default 1 = the serial runner; 0 = all cores).
 fn jobs(args: &Args) -> usize {
     parallel::effective_jobs(args.usize_or("jobs", 1))
+}
+
+/// Resolve `--shards N` (default 1 = the serial simulator; 0 = all
+/// cores). The zero case is resolved here so the printed/recorded value
+/// matches what the `Sim` actually ran with.
+fn shards(args: &Args) -> usize {
+    parallel::effective_jobs(args.usize_or("shards", 1))
 }
 
 // ---------------------------------------------------------------- JSON glue
@@ -134,6 +149,7 @@ fn run_stats_json(st: &RunStats) -> Json {
 fn fig_cmd(args: &Args) {
     let b = budget(args);
     let jobs = jobs(args);
+    let shards = shards(args);
     let mut ids: Vec<u64> = if args.flag("all") {
         vec![1, 5, 6, 7, 8, 9, 10, 11, 12]
     } else {
@@ -151,7 +167,7 @@ fn fig_cmd(args: &Args) {
     if ids.is_empty() {
         eprintln!(
             "usage: rdmavisor fig --id 1|5|6|7|8|9|10|11|12 [--all] [--quick] [--rc-only] \
-             [--cold] [--jobs N] [--tsv DIR]"
+             [--cold] [--jobs N] [--shards N] [--tsv DIR]"
         );
         std::process::exit(2);
     }
@@ -163,19 +179,19 @@ fn fig_cmd(args: &Args) {
     for &id in &ids {
         // `fig --id 9|10 --rc-only` runs just the ablation series
         let (s, table) = if id == 9 && args.flag("rc-only") {
-            let rows = figures::fig9_rc_only(b, jobs);
+            let rows = figures::fig9_rc_only_sharded(b, jobs, shards);
             (figures::fig9_series(&rows), figures::print_fig9(&rows))
         } else if id == 10 && args.flag("rc-only") {
-            let rows = figures::fig10_rc_only(b, jobs);
+            let rows = figures::fig10_rc_only_sharded(b, jobs, shards);
             (figures::fig10_series(&rows), figures::print_fig10(&rows))
         } else if id == 11 && args.flag("rc-only") {
-            let rows = figures::fig11_rpc_only(b, jobs);
+            let rows = figures::fig11_rpc_only_sharded(b, jobs, shards);
             (figures::fig11_series(&rows), figures::print_fig11(&rows))
         } else if id == 12 && args.flag("cold") {
-            let rows = figures::fig12_cold_only(b, jobs);
+            let rows = figures::fig12_cold_only_sharded(b, jobs, shards);
             (figures::fig12_series(&rows), figures::print_fig12(&rows))
         } else {
-            match figures::run_fig(id, b, &mut fig78_cache, jobs) {
+            match figures::run_fig_sharded(id, b, &mut fig78_cache, jobs, shards) {
                 Some(r) => r,
                 None => {
                     eprintln!("unknown figure id {id}: expected 1, 5, 6, 7, 8, 9, 10, 11 or 12");
@@ -409,8 +425,15 @@ fn bench_hotpath(args: &Args) {
 /// port model + dense context tables and nothing else. Shared by `bench
 /// simstep` and the `simstep` section of `bench fig9`/BENCH_PR3.json.
 fn simstep_measure(quick: bool) -> Json {
+    simstep_measure_sharded(quick, 1)
+}
+
+/// [`simstep_measure`] on a `Sim` split into `n_shards` partitions: the
+/// same storm, same deterministic event count, the wall clock now
+/// measuring the conservative-parallel executor.
+fn simstep_measure_sharded(quick: bool, n_shards: usize) -> Json {
     use rdmavisor::fabric::time::Ns;
-    use rdmavisor::workload::scenarios::event_storm;
+    use rdmavisor::workload::scenarios::event_storm_sharded;
 
     let (pairs, window, msg, sim_ms, reps) =
         if quick { (64, 8, 4096, 2, 2) } else { (256, 8, 4096, 10, 3) };
@@ -421,20 +444,21 @@ fn simstep_measure(quick: bool) -> Json {
     let mut best_wall = f64::INFINITY;
     for _ in 0..reps {
         let t0 = Instant::now();
-        events = event_storm(pairs, window, msg, Ns::from_ms(sim_ms));
+        events = event_storm_sharded(pairs, window, msg, Ns::from_ms(sim_ms), n_shards);
         let w = t0.elapsed().as_secs_f64().max(1e-9);
         best_wall = best_wall.min(w);
         best_eps = best_eps.max(events as f64 / w);
     }
     eprintln!(
-        "simstep: {pairs} QPs × window {window} × {msg} B for {sim_ms} sim-ms -> \
-         {events} events, best {best_eps:.0} events/s"
+        "simstep: {pairs} QPs × window {window} × {msg} B for {sim_ms} sim-ms \
+         (shards {n_shards}) -> {events} events, best {best_eps:.0} events/s"
     );
     obj(vec![
         ("pairs", Json::Num(pairs as f64)),
         ("window", Json::Num(window as f64)),
         ("msg_bytes", Json::Num(msg as f64)),
         ("sim_ms", Json::Num(sim_ms as f64)),
+        ("shards", Json::Num(n_shards as f64)),
         ("events", Json::Num(events as f64)),
         ("events_per_sec", num(best_eps)),
         ("wall_ms", num(best_wall * 1e3)),
@@ -442,15 +466,28 @@ fn simstep_measure(quick: bool) -> Json {
 }
 
 /// `bench simstep` — the scheduler-throughput perf trajectory future
-/// scheduler changes regress against (see [`simstep_measure`]).
+/// scheduler changes regress against (see [`simstep_measure`]). With
+/// `--shards N` the same storm is re-timed at shard counts {1, 2, N}
+/// (deduped) and the sweep rides along as `shard_sweep` — the
+/// events-per-sec scaling record for the conservative-parallel executor.
 fn bench_simstep(args: &Args) {
     let quick = args.flag("quick") || std::env::var("RDMAVISOR_BENCH_QUICK").is_ok();
     let result = simstep_measure(quick);
-    let doc = obj(vec![
+    let mut pairs = vec![
         ("command", Json::Str("bench".into())),
         ("mode", Json::Str("simstep".into())),
         ("result", result),
-    ]);
+    ];
+    if args.get("shards").is_some() {
+        let n = shards(args);
+        let mut counts = vec![1usize, 2, n];
+        counts.sort_unstable();
+        counts.dedup();
+        let sweep: Vec<Json> =
+            counts.into_iter().map(|c| simstep_measure_sharded(quick, c)).collect();
+        pairs.push(("shard_sweep", Json::Arr(sweep)));
+    }
+    let doc = obj(pairs);
     println!("{}", doc.to_string());
 }
 
@@ -522,18 +559,33 @@ fn bench_fig9(args: &Args) {
 
     let b = budget(args);
     let j = jobs(args);
-    let out_path = args.str_or("out", "BENCH_PR5.json");
+    let n_shards = shards(args);
+    let out_path = args.str_or("out", if n_shards > 1 { "BENCH_PR8.json" } else { "BENCH_PR5.json" });
     let t_all = Instant::now();
     let measured = parallel::map_indexed(figures::fig9_conns(b), j, |_, conns| {
         let t0 = Instant::now();
         let adaptive = scale_send(&figures::fig9_cfg(conns, b, false));
         let rc_only = scale_send(&figures::fig9_cfg(conns, b, true));
-        (conns, adaptive, rc_only, t0.elapsed().as_secs_f64())
+        let serial_wall = t0.elapsed().as_secs_f64();
+        // same two runs again on the sharded executor: the wall ratio is
+        // the per-point speedup, the rows feed the byte-identity check
+        let sharded = (n_shards > 1).then(|| {
+            let t1 = Instant::now();
+            let mut a = figures::fig9_cfg(conns, b, false);
+            a.shards = n_shards;
+            let mut r = figures::fig9_cfg(conns, b, true);
+            r.shards = n_shards;
+            (scale_send(&a), scale_send(&r), t1.elapsed().as_secs_f64())
+        });
+        (conns, adaptive, rc_only, serial_wall, sharded)
     });
     let mut points = Vec::new();
     let mut total_wall = 0.0f64;
+    let mut total_sharded_wall = 0.0f64;
     let mut total_events = 0u64;
-    for (conns, adaptive, rc_only, wall) in measured {
+    let mut serial_rows = Vec::new();
+    let mut sharded_rows = Vec::new();
+    for (conns, adaptive, rc_only, wall, sharded) in measured {
         let events = adaptive.events + rc_only.events;
         total_wall += wall;
         total_events += events;
@@ -544,7 +596,7 @@ fn bench_fig9(args: &Args) {
             wall * 1e3,
             eps
         );
-        points.push(obj(vec![
+        let mut point = vec![
             ("conns", Json::Num(conns as f64)),
             ("servers", Json::Num(adaptive.servers as f64)),
             ("wall_ms", num(wall * 1e3)),
@@ -552,7 +604,21 @@ fn bench_fig9(args: &Args) {
             ("events_per_sec", num(eps)),
             ("adaptive_gbps", num(adaptive.gbps)),
             ("rc_only_gbps", num(rc_only.gbps)),
-        ]));
+        ];
+        serial_rows.push(figures::Fig9Row { conns, adaptive: Some(adaptive), rc_only });
+        if let Some((sa, sr, swall)) = sharded {
+            total_sharded_wall += swall;
+            eprintln!(
+                "fig9 conns={conns:>6}: sharded x{n_shards} {:>8.1} ms  (speedup {:.2}x)",
+                swall * 1e3,
+                wall / swall.max(1e-9)
+            );
+            point.push(("sharded_wall_ms", num(swall * 1e3)));
+            point.push(("sharded_events_per_sec", num(events as f64 / swall.max(1e-9))));
+            point.push(("speedup", num(wall / swall.max(1e-9))));
+            sharded_rows.push(figures::Fig9Row { conns, adaptive: Some(sa), rc_only: sr });
+        }
+        points.push(obj(point));
     }
     // at --jobs 1 the sum of per-point walls IS the elapsed time; at
     // jobs > 1 report the overlapped elapsed wall instead
@@ -560,11 +626,12 @@ fn bench_fig9(args: &Args) {
         total_wall = t_all.elapsed().as_secs_f64();
     }
     let budget_name = if b == Budget::Quick { "quick" } else { "full" };
-    let doc = obj(vec![
+    let mut doc_pairs = vec![
         ("command", Json::Str("bench".into())),
         ("mode", Json::Str("fig9".into())),
         ("budget", Json::Str(budget_name.to_string())),
         ("jobs", Json::Num(j as f64)),
+        ("shards", Json::Num(n_shards as f64)),
         ("points", Json::Arr(points)),
         ("total_wall_ms", num(total_wall * 1e3)),
         ("total_events", Json::Num(total_events as f64)),
@@ -572,12 +639,26 @@ fn bench_fig9(args: &Args) {
             "events_per_sec",
             num(total_events as f64 / total_wall.max(1e-9)),
         ),
-        // the daemon-pump and raw scheduler throughputs ride along so
-        // BENCH_PR5.json is one self-contained perf artifact (no
-        // external JSON merging)
-        ("pump", pump_measure(b == Budget::Quick)),
-        ("simstep", simstep_measure(b == Budget::Quick)),
-    ]);
+    ];
+    if n_shards > 1 {
+        // the whole point of the sharded executor is that these bytes
+        // cannot differ; record the check in the artifact
+        let identical = figures::fig9_series(&serial_rows).to_json().to_string()
+            == figures::fig9_series(&sharded_rows).to_json().to_string()
+            && figures::print_fig9(&serial_rows) == figures::print_fig9(&sharded_rows);
+        doc_pairs.push(("total_sharded_wall_ms", num(total_sharded_wall * 1e3)));
+        doc_pairs.push((
+            "sharded_events_per_sec",
+            num(total_events as f64 / total_sharded_wall.max(1e-9)),
+        ));
+        doc_pairs.push(("identical_series", Json::Bool(identical)));
+    }
+    // the daemon-pump and raw scheduler throughputs ride along so the
+    // artifact is one self-contained perf record (no external JSON
+    // merging)
+    doc_pairs.push(("pump", pump_measure(b == Budget::Quick)));
+    doc_pairs.push(("simstep", simstep_measure(b == Budget::Quick)));
+    let doc = obj(doc_pairs);
     let text = doc.to_string();
     match std::fs::write(&out_path, &text) {
         Ok(()) => eprintln!("wrote {out_path}"),

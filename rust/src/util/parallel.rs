@@ -19,7 +19,7 @@
 //! byte-for-byte.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Mutex};
 
 /// Resolve a `--jobs` request: `0` means "use every available core"
 /// (`std::thread::available_parallelism`), anything else is taken as-is.
@@ -90,6 +90,92 @@ where
         .collect()
 }
 
+/// One unit of pool work: `(slot index, owned item, closure to run on it)`.
+type Job<T> = (usize, T, Box<dyn FnOnce(&mut T) + Send>);
+
+/// A persistent pool of worker threads that take **ownership** of their
+/// work items for the duration of a call — built for the sharded
+/// simulator, whose barrier loop scatters the same `Shard` values to
+/// workers thousands of times per run. `std::thread::scope` per window
+/// would pay a spawn/join for every barrier; this pool spawns once and
+/// afterwards a scatter costs two channel hops per item.
+///
+/// Ordering contract: [`OwnedPool::scatter`] reassembles results by index,
+/// so the output order equals the input order no matter which worker ran
+/// what or how the completions interleaved — the same merge-by-index
+/// discipline [`map_indexed`] uses.
+pub struct OwnedPool<T: Send + 'static> {
+    txs: Vec<mpsc::Sender<Job<T>>>,
+    done_rx: mpsc::Receiver<(usize, T)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> OwnedPool<T> {
+    /// Spawn a pool of `workers.max(1)` threads. Threads idle on their
+    /// job channels until [`OwnedPool::scatter`] feeds them and exit when
+    /// the pool is dropped.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (done_tx, done_rx) = mpsc::channel::<(usize, T)>();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel::<Job<T>>();
+            let done = done_tx.clone();
+            txs.push(tx);
+            handles.push(std::thread::spawn(move || {
+                while let Ok((idx, mut item, job)) = rx.recv() {
+                    job(&mut item);
+                    if done.send((idx, item)).is_err() {
+                        break; // pool dropped mid-flight; nothing to return to
+                    }
+                }
+            }));
+        }
+        OwnedPool { txs, done_rx, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Hand every item to a worker (round-robin), run `f` on each, and
+    /// return the items — mutated in place — **in input order**. Blocks
+    /// until all items come back. Panics if a worker died (i.e. a prior
+    /// `f` panicked), which propagates failure instead of hanging.
+    pub fn scatter<F>(&mut self, items: Vec<T>, f: F) -> Vec<T>
+    where
+        F: Fn(&mut T) + Send + Clone + 'static,
+    {
+        let n = items.len();
+        for (i, item) in items.into_iter().enumerate() {
+            let g = f.clone();
+            self.txs[i % self.txs.len()]
+                .send((i, item, Box::new(move |t: &mut T| g(t))))
+                .expect("pool worker exited");
+        }
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, item) = self.done_rx.recv().expect("pool worker panicked");
+            slots[i] = Some(item);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every scattered index returns"))
+            .collect()
+    }
+}
+
+impl<T: Send + 'static> Drop for OwnedPool<T> {
+    fn drop(&mut self) {
+        self.txs.clear(); // hang up the job channels → workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join(); // a worker that panicked already surfaced in scatter
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +208,35 @@ mod tests {
     fn index_matches_item_position() {
         let got = map_indexed(vec![10, 20, 30], 2, |i, x| (i, x));
         assert_eq!(got, vec![(0, 10), (1, 20), (2, 30)]);
+    }
+
+    #[test]
+    fn owned_pool_preserves_order_and_state() {
+        let mut pool: OwnedPool<Vec<u64>> = OwnedPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        // items carry state across scatters: each round appends one value,
+        // and results must come back in input order every time
+        let mut items: Vec<Vec<u64>> = (0..8).map(|i| vec![i]).collect();
+        for round in 0..50u64 {
+            items = pool.scatter(items, move |v| {
+                let tag = v[0] * 1000 + round;
+                v.push(tag);
+            });
+            for (i, v) in items.iter().enumerate() {
+                assert_eq!(v[0], i as u64, "order broken in round {round}");
+                assert_eq!(*v.last().unwrap(), i as u64 * 1000 + round);
+            }
+        }
+        assert_eq!(items[5].len(), 51);
+    }
+
+    #[test]
+    fn owned_pool_single_worker_and_empty_scatter() {
+        let mut pool: OwnedPool<u32> = OwnedPool::new(0); // clamps to 1
+        assert_eq!(pool.workers(), 1);
+        let out = pool.scatter(vec![1, 2, 3], |x| *x *= 10);
+        assert_eq!(out, vec![10, 20, 30]);
+        let none = pool.scatter(Vec::new(), |_| {});
+        assert!(none.is_empty());
     }
 }

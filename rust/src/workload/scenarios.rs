@@ -390,6 +390,9 @@ pub struct ScaleCfg {
     pub seed: u64,
     /// Ablation: disable migration, everything stays on RC.
     pub rc_only: bool,
+    /// Simulator shard count (1 = serial; forwarded to
+    /// [`FabricConfig`]`::shards`, byte-identical output for any value).
+    pub shards: usize,
 }
 
 impl Default for ScaleCfg {
@@ -403,6 +406,7 @@ impl Default for ScaleCfg {
             warmup_frac: 0.3,
             seed: 42,
             rc_only: false,
+            shards: 1,
         }
     }
 }
@@ -476,6 +480,7 @@ pub fn scale_send(cfg: &ScaleCfg) -> ScaleRun {
     let mut fabric = FabricConfig::default();
     fabric.nodes = servers + 1;
     fabric.sq_depth = 1024;
+    fabric.shards = cfg.shards;
     assert!(
         cfg.msg_hi <= fabric.mtu,
         "msg_hi {} > MTU {}: fragmented UD messages would be counted once \
@@ -637,6 +642,9 @@ pub struct ChaosCfg {
     pub flaps: u32,
     /// Server soft-restarts scheduled mid-run.
     pub server_restarts: u32,
+    /// Simulator shard count (1 = serial; forwarded to
+    /// [`FabricConfig`]`::shards`, byte-identical output for any value).
+    pub shards: usize,
 }
 
 impl Default for ChaosCfg {
@@ -653,6 +661,7 @@ impl Default for ChaosCfg {
             loss: 0.0,
             flaps: 0,
             server_restarts: 0,
+            shards: 1,
         }
     }
 }
@@ -799,6 +808,7 @@ pub fn chaos_send(cfg: &ChaosCfg) -> ChaosRun {
     let mut fabric = FabricConfig::default();
     fabric.nodes = servers + 1;
     fabric.sq_depth = 1024;
+    fabric.shards = cfg.shards;
     let mut sim = Sim::new(fabric);
     // before any traffic: the go-back-N discipline and the fault gate
     // must switch on together
@@ -947,16 +957,16 @@ pub fn chaos_send(cfg: &ChaosCfg) -> ChaosRun {
         p99_us: win.lat.p99() as f64 / 1e3,
         ud_fraction: daemons[0].ud_send_fraction(),
         failed_ops: daemons[0].stats.ops_failed,
-        retransmits: sim.nodes.iter().map(|n| n.retransmits).sum(),
-        retry_exceeded: sim.nodes.iter().map(|n| n.retry_exceeded).sum(),
-        gbn_discards: sim.nodes.iter().map(|n| n.gbn_discards).sum(),
+        retransmits: sim.nodes().map(|n| n.retransmits).sum(),
+        retry_exceeded: sim.nodes().map(|n| n.retry_exceeded).sum(),
+        gbn_discards: sim.nodes().map(|n| n.gbn_discards).sum(),
         frames_dropped: fstats.frames_dropped,
         frames_delayed: fstats.frames_delayed,
         ud_dropped,
         ud_orphans,
         ud_expired,
         leases_reclaimed: daemons.iter().map(|d| d.stats.leases_reclaimed).sum(),
-        restarts: sim.nodes.iter().map(|n| n.restarts).sum(),
+        restarts: sim.nodes().map(|n| n.restarts).sum(),
         migrations_to_ud: daemons[0].migrate.to_ud,
         events: sim.steps_processed(),
     }
@@ -994,6 +1004,9 @@ pub struct KvCfg {
     pub put_burst: u32,
     /// Ablation: SEND-RPC GET/PUT instead of the one-sided window path.
     pub rpc: bool,
+    /// Simulator shard count (1 = serial; forwarded to
+    /// [`FabricConfig`]`::shards`, byte-identical output for any value).
+    pub shards: usize,
 }
 
 impl Default for KvCfg {
@@ -1010,6 +1023,7 @@ impl Default for KvCfg {
             slot_bytes: 128 << 10,
             put_burst: 4,
             rpc: false,
+            shards: 1,
         }
     }
 }
@@ -1110,6 +1124,7 @@ pub fn kv_storm(cfg: &KvCfg) -> KvRun {
     let mut fabric = FabricConfig::default();
     fabric.nodes = servers + 1;
     fabric.sq_depth = 1024;
+    fabric.shards = cfg.shards;
     let mut sim = Sim::new(fabric);
 
     let mode = if cfg.rpc { KvMode::Rpc } else { KvMode::OneSided };
@@ -1296,6 +1311,9 @@ pub struct ChurnCfg {
     /// Ablation: no QP pool (every reconnect is a full handshake) and
     /// eager lease establishment at connect.
     pub cold: bool,
+    /// Simulator shard count (1 = serial; forwarded to
+    /// [`FabricConfig`]`::shards`, byte-identical output for any value).
+    pub shards: usize,
 }
 
 impl Default for ChurnCfg {
@@ -1310,6 +1328,7 @@ impl Default for ChurnCfg {
             msg_bytes: 4096,
             seed: 42,
             cold: false,
+            shards: 1,
         }
     }
 }
@@ -1432,6 +1451,7 @@ pub fn churn_storm(cfg: &ChurnCfg) -> ChurnRun {
     let mut fabric = FabricConfig::default();
     fabric.nodes = hosts + servers;
     fabric.sq_depth = 1024;
+    fabric.shards = cfg.shards;
     let mut sim = Sim::new(fabric);
 
     let mut daemons: Vec<Daemon> = (0..hosts + servers)
@@ -1560,6 +1580,21 @@ pub fn churn_storm(cfg: &ChurnCfg) -> ChurnRun {
 /// tables. Returns events processed (deterministic; callers time the
 /// call and divide for events/sec).
 pub fn event_storm(pairs: usize, window: u32, msg_bytes: u64, duration: Ns) -> u64 {
+    event_storm_sharded(pairs, window, msg_bytes, duration, 1)
+}
+
+/// [`event_storm`] with an explicit simulator shard count — the workload,
+/// seedless and closed-loop, is identical; only the execution strategy
+/// changes, and the returned event count is byte-identical for any
+/// `shards` (`tests/determinism.rs` gates this). `bench simstep --shards`
+/// times this to measure conservative-parallel scaling.
+pub fn event_storm_sharded(
+    pairs: usize,
+    window: u32,
+    msg_bytes: u64,
+    duration: Ns,
+    shards: usize,
+) -> u64 {
     use crate::fabric::mr::Access;
     use crate::fabric::verbs as fv;
     use crate::fabric::wqe::SendWr;
@@ -1567,6 +1602,7 @@ pub fn event_storm(pairs: usize, window: u32, msg_bytes: u64, duration: Ns) -> u
     let mut fabric = FabricConfig::default();
     fabric.max_outstanding = window as usize;
     fabric.sq_depth = 4 * window as usize + 16;
+    fabric.shards = shards;
     let servers = fabric.nodes - 1;
     let mut sim = Sim::new(fabric);
     let cq0 = sim.create_cq(NodeId(0), 1 << 16);

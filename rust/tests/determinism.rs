@@ -285,6 +285,199 @@ fn fig12_parallel_matches_serial() {
     assert_eq!(fig_bytes_jobs(12, 1), fig_bytes_jobs(12, 4), "fig 12: --jobs 4 != --jobs 1");
 }
 
+// ------------------------------------------------- sharded simulator
+
+/// Run one figure id with every sweep point's `Sim` split into `shards`
+/// conservatively-synchronized partitions, and serialize everything it
+/// produces. `--jobs` stays at 1 so the only variable is the sharded
+/// executor inside each `Sim`.
+fn fig_bytes_sharded(id: u64, shards: usize) -> String {
+    let mut cache = None;
+    let (series, table) = figures::run_fig_sharded(id, Budget::Quick, &mut cache, 1, shards)
+        .expect("known figure id");
+    format!("{}\n{}", series.to_json().to_string(), table)
+}
+
+/// The PR-8 acceptance gate: splitting a `Sim` into shards must not move
+/// a single output byte. Figures 9–12 cover the four daemon-scale
+/// workload shapes (RC↔UD migration, fault injection with per-node
+/// forked fault RNG streams, the one-sided KV window plane, and the
+/// control-plane churn storm).
+#[test]
+fn fig9_sharded_matches_serial() {
+    assert_eq!(fig_bytes(9), fig_bytes_sharded(9, 4), "fig 9: --shards 4 != --shards 1");
+}
+
+#[test]
+fn fig10_sharded_matches_serial() {
+    assert_eq!(fig_bytes(10), fig_bytes_sharded(10, 4), "fig 10: --shards 4 != --shards 1");
+}
+
+#[test]
+fn fig11_sharded_matches_serial() {
+    assert_eq!(fig_bytes(11), fig_bytes_sharded(11, 4), "fig 11: --shards 4 != --shards 1");
+}
+
+#[test]
+fn fig12_sharded_matches_serial() {
+    assert_eq!(fig_bytes(12), fig_bytes_sharded(12, 4), "fig 12: --shards 4 != --shards 1");
+}
+
+#[test]
+fn fig9_rc_only_sharded_matches_serial() {
+    let run = |shards| {
+        let rows = figures::fig9_rc_only_sharded(Budget::Quick, 1, shards);
+        format!(
+            "{}\n{}",
+            figures::fig9_series(&rows).to_json().to_string(),
+            figures::print_fig9(&rows)
+        )
+    };
+    assert_eq!(run(1), run(4), "fig 9 --rc-only: --shards 4 != --shards 1");
+}
+
+#[test]
+fn fig10_rc_only_sharded_matches_serial() {
+    let run = |shards| {
+        let rows = figures::fig10_rc_only_sharded(Budget::Quick, 1, shards);
+        format!(
+            "{}\n{}",
+            figures::fig10_series(&rows).to_json().to_string(),
+            figures::print_fig10(&rows)
+        )
+    };
+    assert_eq!(run(1), run(4), "fig 10 --rc-only: --shards 4 != --shards 1");
+}
+
+#[test]
+fn fig11_rpc_only_sharded_matches_serial() {
+    let run = |shards| {
+        let rows = figures::fig11_rpc_only_sharded(Budget::Quick, 1, shards);
+        format!(
+            "{}\n{}",
+            figures::fig11_series(&rows).to_json().to_string(),
+            figures::print_fig11(&rows)
+        )
+    };
+    assert_eq!(run(1), run(4), "fig 11 --rc-only: --shards 4 != --shards 1");
+}
+
+#[test]
+fn fig12_cold_only_sharded_matches_serial() {
+    let run = |shards| {
+        let rows = figures::fig12_cold_only_sharded(Budget::Quick, 1, shards);
+        format!(
+            "{}\n{}",
+            figures::fig12_series(&rows).to_json().to_string(),
+            figures::print_fig12(&rows)
+        )
+    };
+    assert_eq!(run(1), run(4), "fig 12 --cold: --shards 4 != --shards 1");
+}
+
+/// One seeded random WRITE storm on a 6-node fabric with the event trace
+/// recorder on: random directed QP pairs, random burst sizes, random
+/// payloads and offsets — everything drawn from one `Rng` before the
+/// clock starts, so every shard count replays the same workload. Returns
+/// `(events, rx_bytes, trace)`; the trace is the full per-event `(time,
+/// node, kind)` pop order.
+fn random_write_storm(seed: u64, shards: usize) -> (u64, u64, Vec<(u64, u32, u8)>) {
+    use rdmavisor::fabric::mr::Access;
+    use rdmavisor::fabric::sim::{FabricConfig, Sim};
+    use rdmavisor::fabric::types::{NodeId, QpTransport};
+    use rdmavisor::fabric::verbs as fv;
+    use rdmavisor::fabric::wqe::SendWr;
+    use rdmavisor::util::rng::Rng;
+
+    const NODES: u64 = 6;
+    let mut fabric = FabricConfig::default();
+    fabric.nodes = NODES as usize;
+    fabric.sq_depth = 256;
+    fabric.shards = shards;
+    let mut sim = Sim::new(fabric);
+    sim.set_trace(true);
+    let mut rng = Rng::new(seed);
+
+    let cqs: Vec<_> = (0..NODES).map(|n| sim.create_cq(NodeId(n as u32), 4096)).collect();
+    let mrs: Vec<_> = (0..NODES)
+        .map(|n| sim.reg_mr(NodeId(n as u32), 8 << 20, Access::REMOTE_RW, true))
+        .collect();
+    let mut qps = Vec::new();
+    for _ in 0..12 {
+        let s = rng.gen_range(NODES) as u32;
+        let d = (s + 1 + rng.gen_range(NODES - 1) as u32) % NODES as u32;
+        let pair = fv::create_connected_pair(
+            &mut sim,
+            QpTransport::Rc,
+            NodeId(s),
+            NodeId(d),
+            cqs[s as usize],
+            cqs[s as usize],
+            cqs[d as usize],
+            cqs[d as usize],
+        );
+        qps.push((s as usize, d as usize, pair.a.1));
+    }
+    let mut wr_id = 0u64;
+    for &(s, d, qpn) in &qps {
+        for _ in 0..1 + rng.gen_range(6) {
+            let len = 64 + rng.gen_range(4000);
+            let off = rng.gen_range((4 << 20) - 4096);
+            wr_id += 1;
+            let wr = SendWr::write(
+                wr_id,
+                len,
+                mrs[s].key,
+                mrs[s].addr + off,
+                mrs[d].key,
+                mrs[d].addr + off,
+            );
+            fv::must_post(&mut sim, NodeId(s as u32), qpn, wr);
+        }
+    }
+    sim.run_to_quiescence();
+    (sim.steps_processed(), sim.total_rx_data_bytes(), sim.take_trace())
+}
+
+#[test]
+fn random_storm_trace_is_invariant_across_shard_counts() {
+    // the strongest form of the gate: not just the aggregate counters but
+    // the exact per-event pop order (time, node, kind) must match the
+    // serial executor for every shard count, across several seeds
+    for seed in [1u64, 42, 0xDEAD_BEEF] {
+        let serial = random_write_storm(seed, 1);
+        assert!(serial.0 > 0 && serial.1 > 0, "storm must move traffic: {serial:?}");
+        for shards in [2usize, 3, 4, 6] {
+            let sharded = random_write_storm(seed, shards);
+            assert_eq!(
+                serial.0, sharded.0,
+                "seed {seed}: event count differs at {shards} shards"
+            );
+            assert_eq!(
+                serial.1, sharded.1,
+                "seed {seed}: rx bytes differ at {shards} shards"
+            );
+            assert_eq!(
+                serial.2, sharded.2,
+                "seed {seed}: event pop order differs at {shards} shards"
+            );
+        }
+    }
+}
+
+#[test]
+fn event_storm_events_invariant_across_shard_counts() {
+    // the `bench simstep --shards` workload itself: same deterministic
+    // event count at every shard count (the wall clock is the only thing
+    // allowed to move)
+    use rdmavisor::workload::scenarios::{event_storm, event_storm_sharded};
+    let serial = event_storm(32, 4, 4096, Ns::from_ms(1));
+    assert!(serial > 0);
+    for shards in [2usize, 4] {
+        assert_eq!(serial, event_storm_sharded(32, 4, 4096, Ns::from_ms(1), shards));
+    }
+}
+
 // ------------------------------------------------------ scenario drivers
 
 fn tiny_scenario(conns: usize) -> ScenarioCfg {

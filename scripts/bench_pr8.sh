@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Produce BENCH_PR8.json: the sharded-simulator benchmark — the fig-9
+# scale sweep timed serial AND on the conservative-parallel executor
+# (per-point speedup + the `identical_series` byte-identity bit), with
+# the raw scheduler shard sweep (`bench simstep --shards`) spliced in as
+# `shard_sweep`. CI runs this with --quick and uploads the JSON plus the
+# rendered markdown (scripts/perf_table.py takes any number of
+# BENCH_*.json inputs); run it with no arguments on a quiet machine for
+# the full-sweep numbers quoted in README.md. Measurement stays at
+# --jobs 1 (the serial sweep runner) so the shard speedup is the only
+# parallelism being timed; --shards 0 means all cores.
+#
+#   scripts/bench_pr8.sh [--quick] [OUT.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+quick=""
+out="BENCH_PR8.json"
+for arg in "$@"; do
+    case "$arg" in
+        --quick) quick="--quick" ;;
+        *) out="$arg" ;;
+    esac
+done
+
+cargo build --release
+cargo run --quiet --release -- bench fig9 $quick --jobs 1 --shards 0 --out "$out" >/dev/null
+
+# splice the shard_sweep from `bench simstep --shards 0` into the same
+# artifact so BENCH_PR8.json is one self-contained perf record (stdlib
+# python only — no jq in the image)
+cargo run --quiet --release -- bench simstep $quick --shards 0 \
+    | python3 -c '
+import json, sys
+sweep = json.load(sys.stdin).get("shard_sweep", [])
+path = sys.argv[1]
+with open(path, encoding="utf-8") as f:
+    doc = json.load(f)
+doc["shard_sweep"] = sweep
+with open(path, "w", encoding="utf-8") as f:
+    json.dump(doc, f)
+' "$out"
+
+echo "wrote $out"

@@ -1,10 +1,11 @@
 #!/usr/bin/env python3
 """Render one or more BENCH_*.json artifacts (from `rdmavisor bench
-fig9` / `rdmavisor bench kv` / `rdmavisor bench churn` / bench_pr3.sh /
-bench_pr5.sh / bench_pr6.sh / bench_pr7.sh) as the markdown perf tables
-README.md quotes. Stdlib only.
+fig9` / `rdmavisor bench kv` / `rdmavisor bench churn` /
+bench_pr{3,5,6,7,8}.sh) as the markdown perf tables README.md quotes.
+Stdlib only.
 
-    python3 scripts/perf_table.py BENCH_PR5.json BENCH_PR6.json BENCH_PR7.json > BENCH_PR6.md
+    python3 scripts/perf_table.py BENCH_PR5.json BENCH_PR6.json \
+        BENCH_PR7.json BENCH_PR8.json > BENCH_PR6.md
 
 Each input gets its own section (headed by the file name), so one
 markdown artifact can carry the whole recorded perf trajectory. CI runs
@@ -93,15 +94,27 @@ def render_churn(doc: dict) -> None:
 
 
 def render_fig9(doc: dict) -> None:
-    """The `bench fig9` artifact (PR-3/PR-5 trajectory)."""
+    """The `bench fig9` artifact (PR-3/PR-5/PR-8 trajectory). With
+    `--shards N` (PR 8) each point carries sharded wall/speedup columns
+    and the doc carries the `identical_series` byte-identity bit plus an
+    optional `shard_sweep` (spliced in by bench_pr8.sh)."""
     budget = doc.get("budget", "?")
     jobs = doc.get("jobs")
+    shards = doc.get("shards")
+    sharded = shards is not None and shards > 1
     suffix = f", jobs: {jobs:.0f}" if jobs is not None else ""
+    if sharded:
+        suffix += f", shards: {shards:.0f}"
     print(f"### Fig-9 wall clock per connection count (budget: {budget}{suffix})\n")
-    print("| conns | servers | wall ms | events | events/sec | adaptive Gb/s | rc-only Gb/s |")
-    print("|---:|---:|---:|---:|---:|---:|---:|")
+    head = "| conns | servers | wall ms | events | events/sec | adaptive Gb/s | rc-only Gb/s |"
+    rule = "|---:|---:|---:|---:|---:|---:|---:|"
+    if sharded:
+        head += " sharded ms | sharded ev/s | speedup |"
+        rule += "---:|---:|---:|"
+    print(head)
+    print(rule)
     for p in doc.get("points", []):
-        print(
+        row = (
             "| {conns:.0f} | {servers:.0f} | {wall_ms:.1f} | {events:.0f} "
             "| {eps:.0f} | {ag:.2f} | {rg:.2f} |".format(
                 conns=p.get("conns", 0),
@@ -113,6 +126,13 @@ def render_fig9(doc: dict) -> None:
                 rg=p.get("rc_only_gbps", 0) or 0,
             )
         )
+        if sharded:
+            row += " {sw:.1f} | {seps:.0f} | {sp:.2f}x |".format(
+                sw=p.get("sharded_wall_ms", 0) or 0,
+                seps=p.get("sharded_events_per_sec", 0) or 0,
+                sp=p.get("speedup", 0) or 0,
+            )
+        print(row)
     total_events = doc.get("total_events", 0)
     total_wall = doc.get("total_wall_ms", 0)
     eps = doc.get("events_per_sec", 0) or 0
@@ -120,6 +140,40 @@ def render_fig9(doc: dict) -> None:
         f"\nTotal: {total_events:.0f} events in {total_wall:.0f} ms "
         f"({eps:.0f} events/sec aggregate)."
     )
+    if sharded:
+        swall = doc.get("total_sharded_wall_ms", 0) or 0
+        seps = doc.get("sharded_events_per_sec", 0) or 0
+        ident = doc.get("identical_series")
+        verdict = (
+            "byte-identical to serial"
+            if ident
+            else "**SERIES MISMATCH — determinism bug**"
+        )
+        print(
+            f"\nSharded x{shards:.0f}: {swall:.0f} ms ({seps:.0f} events/sec, "
+            f"{total_wall / swall if swall else 0:.2f}x aggregate speedup); "
+            f"output series {verdict}."
+        )
+    sweep = doc.get("shard_sweep")
+    if sweep:
+        print(
+            "\n### Scheduler events/sec vs shard count (`bench simstep --shards`)\n\n"
+            "| shards | QP pairs | window | sim ms | events | best events/sec | wall ms |\n"
+            "|---:|---:|---:|---:|---:|---:|---:|"
+        )
+        for s in sweep:
+            print(
+                "| {shards:.0f} | {pairs:.0f} | {window:.0f} | {sim_ms:.0f} "
+                "| {events:.0f} | {eps:.0f} | {wall:.1f} |".format(
+                    shards=s.get("shards", 1),
+                    pairs=s.get("pairs", 0),
+                    window=s.get("window", 0),
+                    sim_ms=s.get("sim_ms", 0),
+                    events=s.get("events", 0),
+                    eps=s.get("events_per_sec", 0) or 0,
+                    wall=s.get("wall_ms", 0) or 0,
+                )
+            )
     pump = doc.get("pump")
     if pump:
         print(
@@ -177,7 +231,7 @@ def main() -> int:
     paths = (
         sys.argv[1:]
         if len(sys.argv) > 1
-        else ["BENCH_PR5.json", "BENCH_PR6.json", "BENCH_PR7.json"]
+        else ["BENCH_PR5.json", "BENCH_PR6.json", "BENCH_PR7.json", "BENCH_PR8.json"]
     )
     ok = True
     for i, path in enumerate(paths):

@@ -96,6 +96,18 @@ if [[ "$(strip_wall "$out9j")" != "$(strip_wall "$out9")" ]]; then
 fi
 echo "ok: fig --id 9 --jobs 2 matches the serial series byte-for-byte"
 
+echo "== smoke: fig 9 --shards 2 (sharded simulator, byte-identical) =="
+# the conservative-parallel executor must not change a single output
+# byte either — same strip_wall treatment as the --jobs smoke; the real
+# gates (figs 9-12 x4, rc-only/cold ablations, trace property) live in
+# tests/determinism.rs, this is the end-to-end CLI path
+out9s="$(cargo run --quiet --release -- fig --id 9 --quick --shards 2 2>/dev/null)"
+if [[ "$(strip_wall "$out9s")" != "$(strip_wall "$out9")" ]]; then
+    echo "FAIL: fig 9 --shards 2 JSON differs from the serial simulator" >&2
+    exit 1
+fi
+echo "ok: fig --id 9 --shards 2 matches the serial simulator byte-for-byte"
+
 echo "== smoke: fig 10 (fault-injection chaos sweep) =="
 out10="$(cargo run --quiet --release -- fig --id 10 --quick 2>/dev/null)"
 case "$out10" in
@@ -155,6 +167,13 @@ outs="$(cargo run --quiet --release -- bench simstep --quick 2>/dev/null)"
 case "$outs" in
     *'"mode":"simstep"'*'"events_per_sec"'*) echo "ok: bench simstep printed events/sec JSON" ;;
     *) echo "FAIL: unexpected bench simstep output: ${outs:0:120}" >&2; exit 1 ;;
+esac
+
+echo "== smoke: bench simstep --shards 2 (shard scaling sweep) =="
+outss="$(cargo run --quiet --release -- bench simstep --quick --shards 2 2>/dev/null)"
+case "$outss" in
+    *'"mode":"simstep"'*'"shard_sweep"'*) echo "ok: bench simstep --shards printed the shard_sweep" ;;
+    *) echo "FAIL: unexpected bench simstep --shards output: ${outss:0:120}" >&2; exit 1 ;;
 esac
 
 echo "== smoke: bench pump (daemon data-plane throughput) =="
