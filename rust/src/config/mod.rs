@@ -7,6 +7,7 @@
 use crate::fabric::nic::NicConfig;
 use crate::fabric::sim::FabricConfig;
 use crate::fabric::time::Ns;
+use crate::fabric::topo::{CcMode, TopoConfig};
 use crate::raas::daemon::DaemonConfig;
 use crate::util::tomlmini::{parse, Table};
 use crate::workload::scenarios::ScenarioCfg;
@@ -57,6 +58,17 @@ const KNOWN_KEYS: &[&str] = &[
     "nic.icm_cache_entries",
     "nic.icm_miss_ns",
     "nic.cqe_delay_ns",
+    "topo.hosts_per_tor",
+    "topo.oversub",
+    "topo.mode",
+    "topo.hop_latency_ns",
+    "topo.ecn_threshold_bytes",
+    "topo.buffer_bytes",
+    "topo.cc_alpha",
+    "topo.cc_min_rate",
+    "topo.cc_ai_frac",
+    "topo.cc_recovery_ns",
+    "topo.cc_cnp_gap_ns",
     "daemon.srq_capacity",
     "daemon.srq_watermark",
     "daemon.recv_slot_bytes",
@@ -99,6 +111,29 @@ fn apply(t: &Table, cfg: &mut Config) {
     n.icm_miss_ns = t.int_or("nic.icm_miss_ns", n.icm_miss_ns as i64) as u64;
     n.cqe_delay_ns = t.int_or("nic.cqe_delay_ns", n.cqe_delay_ns as i64) as u64;
 
+    // Any `topo.*` key switches the fabric from the single non-blocking
+    // switch to the multi-switch Clos topology of DESIGN.md §14.
+    if t.keys().any(|k| k.starts_with("topo.")) {
+        let mut tc = TopoConfig::default();
+        tc.hosts_per_tor = t.int_or("topo.hosts_per_tor", tc.hosts_per_tor as i64) as usize;
+        tc.oversub = t.int_or("topo.oversub", tc.oversub as i64) as u32;
+        tc.mode = match t.str_or("topo.mode", "dcqcn").as_str() {
+            "nocc" => CcMode::NoCc,
+            "pfc" => CcMode::Pfc,
+            _ => CcMode::Dcqcn,
+        };
+        tc.hop_latency_ns = t.int_or("topo.hop_latency_ns", tc.hop_latency_ns as i64) as u64;
+        tc.ecn_threshold_bytes =
+            t.int_or("topo.ecn_threshold_bytes", tc.ecn_threshold_bytes as i64) as u64;
+        tc.buffer_bytes = t.int_or("topo.buffer_bytes", tc.buffer_bytes as i64) as u64;
+        tc.cc_alpha = t.float_or("topo.cc_alpha", tc.cc_alpha);
+        tc.cc_min_rate = t.float_or("topo.cc_min_rate", tc.cc_min_rate);
+        tc.cc_ai_frac = t.float_or("topo.cc_ai_frac", tc.cc_ai_frac);
+        tc.cc_recovery_ns = t.int_or("topo.cc_recovery_ns", tc.cc_recovery_ns as i64) as u64;
+        tc.cc_cnp_gap_ns = t.int_or("topo.cc_cnp_gap_ns", tc.cc_cnp_gap_ns as i64) as u64;
+        f.topo = Some(tc);
+    }
+
     let d = &mut cfg.daemon;
     d.srq_capacity = t.int_or("daemon.srq_capacity", d.srq_capacity as i64) as usize;
     d.srq_watermark = t.int_or("daemon.srq_watermark", d.srq_watermark as i64) as usize;
@@ -129,6 +164,15 @@ shards = 1              # parallel simulator partitions (0 = all cores)
 [nic]
 icm_cache_entries = 400 # QP-context cache capacity (Fig 5's knee)
 icm_miss_ns = 2500      # PCIe fetch + writeback pipeline stall
+
+# Uncomment to replace the single non-blocking switch with the fig-13
+# fat-tree/Clos fabric (ToR + spine, finite buffers, ECN/DCQCN).
+# [topo]
+# hosts_per_tor = 8
+# oversub = 4             # uplinks = hosts_per_tor / oversub
+# mode = "dcqcn"          # dcqcn | nocc | pfc
+# ecn_threshold_bytes = 65536
+# buffer_bytes = 262144
 
 [daemon]
 srq_capacity = 4096
@@ -181,5 +225,23 @@ mod tests {
     fn scenario_inherits_fabric() {
         let cfg = from_str("[fabric]\nlink_gbps = 100.0\n").unwrap();
         assert_eq!(cfg.scenario.fabric.link_gbps, 100.0);
+    }
+
+    #[test]
+    fn topo_keys_install_clos() {
+        let cfg = from_str("[topo]\nhosts_per_tor = 4\noversub = 2\nmode = \"pfc\"\n").unwrap();
+        let tc = cfg.fabric.topo.expect("topo section installs Clos");
+        assert_eq!(tc.hosts_per_tor, 4);
+        assert_eq!(tc.oversub, 2);
+        assert_eq!(tc.mode, CcMode::Pfc);
+        assert_eq!(tc.uplinks(), 2);
+        // the scenario fabric inherits the topology too
+        assert!(cfg.scenario.fabric.topo.is_some());
+    }
+
+    #[test]
+    fn no_topo_section_keeps_single_switch() {
+        let cfg = from_str(SAMPLE).unwrap();
+        assert!(cfg.fabric.topo.is_none());
     }
 }

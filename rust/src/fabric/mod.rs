@@ -12,7 +12,10 @@
 //! * **Transports** ([`qp`]) — RC / UC / UD with the capability matrix of
 //!   Table 1 enforced (UC: no READ; UD: max message = MTU).
 //! * **Links** ([`switchfab`]) — 40 Gb/s full-duplex ports, MTU framing,
-//!   per-frame wire overhead, propagation; a non-blocking switch.
+//!   per-frame wire overhead, propagation; a non-blocking switch — or,
+//!   with [`topo`] installed, a multi-switch fat-tree/Clos with
+//!   oversubscribed uplinks, ECN/DCQCN congestion control, and a PFC
+//!   pause ablation.
 //! * **Verbs** ([`verbs`]) — an ibverbs-like façade (`post_send`,
 //!   `post_recv`, `poll_cq`, …) the RaaS layer and baselines are written
 //!   against, exactly as the real prototype is written against libibverbs.
@@ -33,6 +36,7 @@ pub mod srq;
 pub mod qp;
 pub mod cache;
 pub mod switchfab;
+pub mod topo;
 pub mod cpu;
 pub mod nic;
 mod shard;
@@ -40,4 +44,5 @@ pub mod sim;
 pub mod verbs;
 
 pub use sim::{FabricConfig, Sim};
+pub use topo::{CcMode, TopoConfig};
 pub use types::{NodeId, QpTransport, Verb};

@@ -7,6 +7,7 @@
 use std::collections::VecDeque;
 
 use super::srq::RECV_WQE_BYTES;
+use super::time::Ns;
 use super::types::{max_msg_size, supports, NodeId, QpTransport, Qpn, Srqn, Cqn};
 use super::wqe::{RecvWr, SendWr};
 
@@ -115,6 +116,18 @@ pub struct Qp {
     /// accounts zero memory, rejects posts, and the engine/fabric drop
     /// anything addressed to it.
     pub destroyed: bool,
+    /// DCQCN sending rate, as a fraction of line rate. Only consulted
+    /// when the Clos fabric runs in `Dcqcn` mode ([`crate::fabric::topo`]);
+    /// 1.0 (line rate) otherwise and at rest.
+    pub cc_rate: f64,
+    /// DCQCN pacer horizon: the NIC may not *issue* the next message from
+    /// this SQ before this instant (message-level pacing — egress-port
+    /// serialization is left untouched so co-located QPs don't HOL-block).
+    pub cc_paced_until: Ns,
+    /// Last instant the lazy additive/hyper rate recovery was applied.
+    pub cc_last_update: Ns,
+    /// Last accepted rate cut (CNP coalescing gate).
+    pub cc_last_cut: Ns,
 }
 
 impl Qp {
@@ -149,6 +162,10 @@ impl Qp {
             posted_recv: 0,
             completed: 0,
             destroyed: false,
+            cc_rate: 1.0,
+            cc_paced_until: Ns::ZERO,
+            cc_last_update: Ns::ZERO,
+            cc_last_cut: Ns::ZERO,
         }
     }
 
@@ -219,6 +236,46 @@ impl Qp {
             && (self.transport != QpTransport::Rc || self.outstanding < self.max_outstanding)
     }
 
+    /// Lazily apply the DCQCN rate-recovery timer up to `now`: one
+    /// additive step of `ai_frac` per elapsed `recovery_ns` period for the
+    /// first five periods since the last cut, doubling per period beyond
+    /// that (hyper increase), clamped to line rate. Closed form — no
+    /// per-period events, so an idle QP costs nothing.
+    pub fn cc_advance(&mut self, now: Ns, recovery_ns: u64, ai_frac: f64) {
+        if recovery_ns == 0 || now <= self.cc_last_update || self.cc_rate >= 1.0 {
+            if now > self.cc_last_update {
+                self.cc_last_update = now;
+            }
+            return;
+        }
+        let steps = (now.0 - self.cc_last_update.0) / recovery_ns;
+        if steps == 0 {
+            return;
+        }
+        let add = if steps <= 5 {
+            ai_frac * steps as f64
+        } else {
+            // 5 additive steps, then 2, 4, 8, ... per step:
+            // 5 + sum_{i=1}^{steps-5} 2^i = 3 + 2^(steps-4)
+            ai_frac * (3.0 + 2f64.powi((steps - 4).min(32) as i32))
+        };
+        self.cc_rate = (self.cc_rate + add).min(1.0);
+        self.cc_last_update = Ns(self.cc_last_update.0 + steps * recovery_ns);
+    }
+
+    /// React to an echoed ECN mark (the CNP): multiplicative rate cut,
+    /// coalesced to at most one cut per `cnp_gap_ns`. Returns true when
+    /// the cut was taken.
+    pub fn cc_on_cnp(&mut self, now: Ns, alpha: f64, min_rate: f64, cnp_gap_ns: u64) -> bool {
+        if self.cc_last_cut.0 != 0 && now.0.saturating_sub(self.cc_last_cut.0) < cnp_gap_ns {
+            return false;
+        }
+        self.cc_rate = (self.cc_rate * (1.0 - alpha)).max(min_rate);
+        self.cc_last_cut = now;
+        self.cc_last_update = now;
+        true
+    }
+
     /// Node soft-restart ([`crate::fabric::fault`]): queued-but-unissued
     /// work and the requester window vanish; connection state (peer
     /// binding, RTS, go-back-N sequence counters) survives — the daemon
@@ -230,6 +287,10 @@ impl Qp {
         self.rq.clear();
         self.outstanding = 0;
         self.issue_armed = false;
+        self.cc_rate = 1.0;
+        self.cc_paced_until = Ns::ZERO;
+        self.cc_last_update = Ns::ZERO;
+        self.cc_last_cut = Ns::ZERO;
     }
 
     /// Tear the QP down: rings freed, context deallocated, peer binding
@@ -363,5 +424,26 @@ mod tests {
     fn mem_footprint() {
         let qp = Qp::new(Qpn(1), QpTransport::Rc, Cqn(0), Cqn(0), 128, 128, 16);
         assert_eq!(qp.mem_bytes(), 128 * 64 + 128 * 16 + 256);
+    }
+
+    #[test]
+    fn dcqcn_cut_recovers_additively_then_hyper() {
+        let mut qp = mk(QpTransport::Rc);
+        assert!(qp.cc_on_cnp(Ns(1000), 0.5, 1.0 / 32.0, 50_000));
+        assert!((qp.cc_rate - 0.5).abs() < 1e-12);
+        // coalescing: a second CNP inside the gap is ignored
+        assert!(!qp.cc_on_cnp(Ns(2000), 0.5, 1.0 / 32.0, 50_000));
+        assert!((qp.cc_rate - 0.5).abs() < 1e-12);
+        // 3 recovery periods later: 3 additive steps of 1/16
+        qp.cc_advance(Ns(1000 + 3 * 55_000), 55_000, 1.0 / 16.0);
+        assert!((qp.cc_rate - (0.5 + 3.0 / 16.0)).abs() < 1e-12);
+        // far in the future the hyper phase clamps to line rate
+        qp.cc_advance(Ns(10_000_000), 55_000, 1.0 / 16.0);
+        assert!((qp.cc_rate - 1.0).abs() < 1e-12);
+        // floor is respected
+        for i in 0..20 {
+            qp.cc_on_cnp(Ns(20_000_000 + i * 60_000), 0.5, 1.0 / 32.0, 50_000);
+        }
+        assert!(qp.cc_rate >= 1.0 / 32.0 - 1e-12);
     }
 }

@@ -40,6 +40,7 @@ use super::sim::{FabricConfig, Notification};
 use super::srq::Srq;
 use super::switchfab::{Port, FRAME_OVERHEAD_BYTES, SWITCH_BUFFER_BYTES};
 use super::time::{wire_time, Ns};
+use super::topo::{ecmp_hash, CcMode};
 use super::types::{Cqn, DenseTable, NodeId, QpTransport, Qpn, Srqn, Verb, WcStatus};
 use super::wqe::{Cqe, CqeKind, RecvWr, SendWr};
 
@@ -95,6 +96,16 @@ pub enum Event {
         /// The restarting node.
         node: NodeId,
     },
+    /// DCQCN pacer expiry: the QP's inter-message gap elapsed; try to
+    /// issue again. Only ever scheduled when a Clos topology with DCQCN
+    /// is installed ([`super::topo`]), so single-switch traces are
+    /// byte-identical with or without this variant existing.
+    CcPace {
+        /// Paced requester node.
+        node: NodeId,
+        /// Paced QP.
+        qpn: Qpn,
+    },
 }
 
 impl Event {
@@ -112,6 +123,7 @@ impl Event {
             Event::FrameRedelivered(f) => (f.dst.0, 5),
             Event::AckTimeout { node, .. } => (node.0, 6),
             Event::NodeRestart { node } => (node.0, 7),
+            Event::CcPace { node, .. } => (node.0, 8),
         }
     }
 }
@@ -295,6 +307,12 @@ pub struct Shard {
     /// Barrier snapshot of EVERY node's ingress busy horizon (global
     /// indexing) — the PFC gate input; refreshed by the coordinator.
     ingress_snap: Vec<Ns>,
+    /// Barrier snapshot of every Clos ToR-uplink port's busy horizon
+    /// (`tor * uplinks + u` indexing, mirroring [`super::topo::Clos`]).
+    /// Empty unless a topology in [`CcMode::Pfc`] is installed — the
+    /// host-side pause gate that chains switch backpressure down to the
+    /// sending NIC. Refreshed by the coordinator at every barrier.
+    uplink_snap: Vec<Ns>,
     /// Per-local-node fault-plan forks (None entries without a plan).
     faults: Vec<Option<FaultState>>,
     faults_on: bool,
@@ -338,8 +356,14 @@ impl Shard {
             faults: (0..nodes.len()).map(|_| None).collect(),
             emit_seq: vec![0; nodes.len()],
             ingress_snap: vec![Ns::ZERO; cfg.nodes],
+            uplink_snap: Vec::new(),
             nodes,
-            faults_on: false,
+            // a Clos fabric drops frames at full ports (tail-drop in the
+            // Dcqcn/NoCc modes), so the RC reliability machinery — go-
+            // back-N sequencing, ACK timers, retransmission — must be
+            // armed even without a fault plan. The fault FORKS stay None
+            // (no probabilistic draws); deliver_frame skips them safely.
+            faults_on: cfg.topo.is_some(),
             steps: 0,
             completed_bytes: 0,
             completed_msgs: 0,
@@ -406,6 +430,13 @@ impl Shard {
     pub fn set_ingress_snap(&mut self, snap: &[Ns]) {
         self.ingress_snap.clear();
         self.ingress_snap.extend_from_slice(snap);
+    }
+
+    /// Refresh the barrier snapshot of every Clos ToR-uplink port's busy
+    /// horizon (PFC mode only — see [`Shard::stage_frame`]'s uplink gate).
+    pub fn set_uplink_snap(&mut self, snap: &[Ns]) {
+        self.uplink_snap.clear();
+        self.uplink_snap.extend_from_slice(snap);
     }
 
     /// Push an absorbed cross-shard frame at its delivery time. The
@@ -500,6 +531,7 @@ impl Shard {
                     self.on_ack_timeout(node, qpn, msg_id, attempt)
                 }
                 Event::NodeRestart { node } => self.on_node_restart(node),
+                Event::CcPace { node, qpn } => self.rearm_issue(node, qpn),
             }
         }
         self.clock = end;
@@ -538,7 +570,29 @@ impl Shard {
         // frames add AFTER the snapshot — those arrive next window, so
         // gating on the snapshot is exact for everything already absorbed.
         let buffer_time = wire_time(SWITCH_BUFFER_BYTES, self.cfg.link_gbps);
-        let pfc_gate = self.ingress_snap[frame.dst.0 as usize].saturating_sub(buffer_time + base);
+        let mut pfc_gate =
+            self.ingress_snap[frame.dst.0 as usize].saturating_sub(buffer_time + base);
+        // Clos PFC mode: the first-hop pause chains down to the host NIC.
+        // Gate on the barrier snapshot of the ToR-uplink port this frame's
+        // ECMP hash selects — same window-exactness argument as above (the
+        // uplink horizon only grows by frames absorbed AFTER the snapshot,
+        // which arrive next window). Deterministic: the snapshot is a
+        // barrier-side fact and the hash is pure.
+        if let Some(t) = self.cfg.topo {
+            if t.mode == CcMode::Pfc && !self.uplink_snap.is_empty() {
+                let hosts = t.hosts_per_tor.max(1);
+                let src_tor = frame.src.0 as usize / hosts;
+                let dst_tor = frame.dst.0 as usize / hosts;
+                if src_tor != dst_tor {
+                    let uplinks = t.uplinks();
+                    let u = (ecmp_hash(frame.src, frame.dst, frame.src_qpn, frame.dst_qpn)
+                        % uplinks as u64) as usize;
+                    if let Some(&busy) = self.uplink_snap.get(src_tor * uplinks + u) {
+                        pfc_gate = pfc_gate.max(busy.saturating_sub(buffer_time + base));
+                    }
+                }
+            }
+        }
         let i = self.li(frame.src);
         let tx_start = self.egress[i].busy_until().max(earliest).max(pfc_gate);
         self.egress[i].occupy(tx_start, frame_time, wire_bytes);
@@ -737,9 +791,15 @@ impl Shard {
     /// path) — the barrier absorbs them in global order.
     fn issue_from_qp(&mut self, node: NodeId, qpn: Qpn) -> u64 {
         let nic = self.cfg.nic;
+        let cc = self.cfg.topo.filter(|t| t.mode == CcMode::Dcqcn);
 
-        // Pull the next WR if the window allows.
-        let (wr, peer, transport, msg_seq) = {
+        // DCQCN pacing gate: advance the lazy rate-recovery clock, then —
+        // if this QP's inter-message gap has not elapsed — park the issue
+        // until the pacer expires, WITHOUT popping the WR or mutating any
+        // window state. A duplicate [`Event::CcPace`] (a completion can
+        // re-arm the QP before the pacer fires) is a harmless no-op.
+        let paced = {
+            let clock = self.clock;
             let n = self.node_mut(node);
             let qp = match n.qps.get_mut(qpn.0) {
                 Some(qp) => qp,
@@ -749,6 +809,28 @@ impl Shard {
             if !qp.can_issue() {
                 return 0; // window-blocked; re-armed on completion
             }
+            if cc.is_some() && qp.transport == QpTransport::Rc {
+                if let Some(t) = cc {
+                    qp.cc_advance(clock, t.cc_recovery_ns, t.cc_ai_frac);
+                }
+                if clock < qp.cc_paced_until {
+                    Some(qp.cc_paced_until)
+                } else {
+                    None
+                }
+            } else {
+                None
+            }
+        };
+        if let Some(at) = paced {
+            self.events.push(at, Event::CcPace { node, qpn });
+            return 0;
+        }
+
+        // Pull the next WR (`can_issue` held above; nothing ran since).
+        let (wr, peer, transport, msg_seq) = {
+            let n = self.node_mut(node);
+            let qp = n.qps.get_mut(qpn.0).expect("checked above");
             let wr = qp.sq.pop_front().unwrap();
             let peer = match qp.transport {
                 QpTransport::Ud => wr.ud_dest,
@@ -783,6 +865,17 @@ impl Shard {
             id
         };
 
+        // DCQCN pacer charge input: this message's ideal wire occupancy
+        // (payload + per-frame overhead at line rate). READs charge their
+        // response size — the bytes they pull through the fabric.
+        let pace_wire_ns = if cc.is_some() && transport == QpTransport::Rc {
+            let payload = wr.len.max(1);
+            let frames = self.frame_count(payload);
+            wire_time(payload + frames * FRAME_OVERHEAD_BYTES, self.cfg.link_gbps).0
+        } else {
+            0
+        };
+
         match wr.verb {
             Verb::Read => {
                 // header-only request; the responder streams the data back.
@@ -804,6 +897,7 @@ impl Shard {
                     imm: None,
                     rkey: wr.rkey,
                     raddr: wr.raddr,
+                    ecn: false,
                 };
                 cost += nic.engine_frame_ns;
                 let link_at = self.stage_frame(self.clock + Ns(cost), frame);
@@ -839,6 +933,7 @@ impl Shard {
                     imm: wr.imm_data,
                     rkey: wr.rkey,
                     raddr: wr.raddr,
+                    ecn: false,
                 };
                 let mut handoff = self.clock + Ns(cost);
                 let mut last_link = self.clock;
@@ -889,6 +984,19 @@ impl Shard {
                         }
                     }
                 }
+            }
+        }
+
+        // DCQCN pacer charge: this QP's NEXT message may not issue before
+        // this one's wire time, stretched by the current rate cut, has
+        // elapsed. Message-granularity rate limiting on the QP itself —
+        // never dead time on the shared egress port, so co-located QPs
+        // pace independently (no head-of-line blocking between tenants).
+        if pace_wire_ns > 0 {
+            let clock = self.clock;
+            if let Some(qp) = self.node_mut(node).qps.get_mut(qpn.0) {
+                let gap = (pace_wire_ns as f64 / qp.cc_rate.max(1e-6)) as u64;
+                qp.cc_paced_until = qp.cc_paced_until.max(clock) + Ns(gap);
             }
         }
 
@@ -946,6 +1054,7 @@ impl Shard {
             imm: None,
             rkey: None,
             raddr: 0,
+            ecn: false,
         };
         self.stage_frame(self.clock + Ns(cost), frame);
 
@@ -1330,6 +1439,9 @@ impl Shard {
             imm: None,
             rkey: None,
             raddr: 0,
+            // CNP echo: the last data frame's congestion mark rides the
+            // message's ACK back to the requester's DCQCN rate limiter
+            ecn: frame.ecn,
         };
         self.stage_frame(self.clock + Ns(cost), ack);
         cost
@@ -1355,6 +1467,7 @@ impl Shard {
             imm: None,
             rkey: None,
             raddr: 0,
+            ecn: false,
         };
         self.stage_frame(self.clock, nak);
     }
@@ -1382,22 +1495,34 @@ impl Shard {
             imm: None,
             rkey: None,
             raddr: 0,
+            ecn: false,
         };
         self.stage_frame(self.clock, nak);
     }
 
     /// ACK received at the requester: complete the in-flight RC message.
+    /// An ECN-echoing ACK is the CNP — it cuts the QP's DCQCN rate here.
     fn rx_ack(&mut self, node: NodeId, frame: &Frame) -> u64 {
         let nic = self.cfg.nic;
+        let cc = self.cfg.topo.filter(|t| t.mode == CcMode::Dcqcn);
         let mut cost = 0;
         let inf = match self.node_mut(node).inflight.remove(&frame.msg_id) {
             Some(i) => i,
             None => return 0, // duplicate/stale ack
         };
         let (send_cq, signaled) = {
+            let clock = self.clock;
             let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
             qp.outstanding = qp.outstanding.saturating_sub(1);
             qp.completed += 1;
+            if frame.ecn {
+                if let Some(t) = cc {
+                    // settle any recovery earned so far, then cut
+                    // (coalesced: at most one cut per cc_cnp_gap_ns)
+                    qp.cc_advance(clock, t.cc_recovery_ns, t.cc_ai_frac);
+                    qp.cc_on_cnp(clock, t.cc_alpha, t.cc_min_rate, t.cc_cnp_gap_ns);
+                }
+            }
             (qp.send_cq, inf.wr.signaled)
         };
         self.completed_bytes += inf.wr.len;
@@ -1707,6 +1832,7 @@ impl Shard {
                     imm: None,
                     rkey: wr.rkey,
                     raddr: wr.raddr,
+                    ecn: false,
                 };
                 cost += nic.engine_frame_ns;
                 let link_at = self.stage_frame(self.clock + Ns(cost), frame);
@@ -1749,6 +1875,7 @@ impl Shard {
                         imm: wr.imm_data,
                         rkey: wr.rkey,
                         raddr: wr.raddr,
+                        ecn: false,
                     };
                     last_bytes = bytes;
                     last_link = self.stage_frame(handoff, frame);

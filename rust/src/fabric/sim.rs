@@ -58,6 +58,7 @@ use super::shard::{Resync, Shard, StagedFrame};
 use super::srq::Srq;
 use super::switchfab::Fabric;
 use super::time::Ns;
+use super::topo::{CcMode, Clos, ClosStats, ClosVerdict, TopoConfig};
 use super::types::{Cqn, NodeId, QpTransport, Qpn, Srqn};
 use super::wqe::{Cqe, RecvWr, SendWr};
 use crate::util::parallel::{effective_jobs, OwnedPool};
@@ -97,6 +98,12 @@ pub struct FabricConfig {
     /// Output is byte-identical for every value; `> 1` requires
     /// `switch_latency_ns > 0` (the lookahead bound).
     pub shards: usize,
+    /// Multi-switch Clos topology + congestion control ([`super::topo`]).
+    /// `None` (the default) keeps the single-switch fabric and every
+    /// pre-existing figure byte-identical. When set, the RC
+    /// retransmission machinery is armed (Clos ports tail-drop when full)
+    /// and cross-ToR frames pay uplink + spine hops at the barrier.
+    pub topo: Option<TopoConfig>,
 }
 
 impl Default for FabricConfig {
@@ -115,6 +122,7 @@ impl Default for FabricConfig {
             poll_cpu_ns: 80,
             per_cqe_cpu_ns: 50,
             shards: 1,
+            topo: None,
         }
     }
 }
@@ -148,6 +156,11 @@ pub struct Sim {
     /// Coordinator-owned network state: every node's **ingress** port
     /// (egress ports live in the shards). Frames absorbed at barriers.
     fabric: Fabric,
+    /// Coordinator-owned Clos switch tiers (uplink/spine ports, ECN/drop
+    /// counters); `None` on the single-switch fabric. Mutated only inside
+    /// [`Sim::absorb_wire`]'s global frame order — deterministic for
+    /// every shard count.
+    clos: Option<Clos>,
     /// Persistent worker pool, spawned lazily on the first parallel
     /// window (never for `shards == 1`).
     pool: Option<OwnedPool<Shard>>,
@@ -159,6 +172,8 @@ pub struct Sim {
     note_buf: Vec<(Ns, NodeId, Notification)>,
     /// Scratch: ingress busy-horizon snapshot (index = node id).
     snap_buf: Vec<Ns>,
+    /// Scratch: ToR-uplink busy-horizon snapshot (PFC mode only).
+    up_snap_buf: Vec<Ns>,
     /// Completed payload bytes (data verbs), for quick aggregate throughput.
     pub completed_bytes: u64,
     /// Completed data messages (companion counter).
@@ -190,7 +205,13 @@ impl Sim {
                  degenerates to serial execution — run with shards = 1 instead"
             ));
         }
+        if let Some(t) = &cfg.topo {
+            if t.hosts_per_tor == 0 {
+                return Err("topo.hosts_per_tor must be > 0".into());
+            }
+        }
         let fabric = Fabric::new(cfg.nodes, cfg.link_gbps, cfg.mtu, Ns(cfg.switch_latency_ns));
+        let clos = cfg.topo.map(|t| Clos::new(cfg.nodes, cfg.link_gbps, t));
         let shards = (0..nshards).map(|i| Shard::new(i, nshards, &cfg)).collect();
         Ok(Sim {
             window: cfg.switch_latency_ns.max(1),
@@ -200,10 +221,12 @@ impl Sim {
             nshards,
             shards,
             fabric,
+            clos,
             pool: None,
             pending_wire: Vec::new(),
             pending_resync: Vec::new(),
             note_buf: Vec::new(),
+            up_snap_buf: Vec::new(),
             completed_bytes: 0,
             completed_msgs: 0,
             steps: 0,
@@ -496,15 +519,60 @@ impl Sim {
     /// destination's ingress port, in global `(link_at, src, emit)` order
     /// (`pending_wire` is kept sorted by [`Sim::collect`]), and push the
     /// deliveries into the owning shards' wheels.
+    ///
+    /// With a Clos topology installed, a cross-ToR frame first crosses
+    /// its ECMP uplink + spine ports here (tail-drop / ECN-mark / pause
+    /// per [`CcMode`]), then the destination ingress applies the same
+    /// finite-buffer discipline. All of it happens in the one global
+    /// frame order, so the Clos state evolves identically for every
+    /// shard count; hops only ever push delivery *later* than the staged
+    /// `link_at`, so the conservative lookahead bound is untouched.
     fn absorb_wire(&mut self, end: Ns) {
         let cut = self.pending_wire.partition_point(|f| f.link_at < end);
         if cut == 0 {
             return;
         }
         for sf in self.pending_wire.drain(..cut) {
-            let deliver = self.fabric.absorb_frame(sf.link_at, sf.frame.dst, sf.frame.bytes);
-            let s = sf.frame.dst.shard_of(self.nshards);
-            self.shards[s].push_frame(deliver, sf.frame);
+            let mut frame = sf.frame;
+            let mut at = sf.link_at;
+            if let Some(clos) = self.clos.as_mut() {
+                if clos.tor_of(frame.src) != clos.tor_of(frame.dst) {
+                    let dst_busy = self.fabric.ingress_stats(frame.dst).busy_until();
+                    match clos.route(
+                        at,
+                        frame.src,
+                        frame.dst,
+                        frame.src_qpn,
+                        frame.dst_qpn,
+                        frame.bytes,
+                        frame.kind.carries_data(),
+                        dst_busy,
+                    ) {
+                        ClosVerdict::Deliver(t, marked) => {
+                            at = t;
+                            frame.ecn |= marked;
+                        }
+                        ClosVerdict::Drop => continue,
+                    }
+                }
+                // The destination host-ingress port is a queue too: same
+                // finite buffer + ECN threshold (the true incast hot spot).
+                if clos.topo.mode != CcMode::Pfc {
+                    let backlog =
+                        self.fabric.ingress_stats(frame.dst).busy_until().saturating_sub(at);
+                    if backlog > clos.buffer() {
+                        clos.note_ingress_drop();
+                        continue;
+                    }
+                    if frame.kind.carries_data() && !frame.ecn && backlog > clos.ecn_threshold() {
+                        frame.ecn = true;
+                        clos.note_ingress_mark();
+                    }
+                }
+            }
+            let deliver = self.fabric.absorb_frame(at, frame.dst, frame.bytes);
+            let s = frame.dst.shard_of(self.nshards);
+            self.shards[s].push_frame(deliver, frame);
         }
     }
 
@@ -515,6 +583,17 @@ impl Sim {
         self.fabric.ingress_snapshot_into(&mut self.snap_buf);
         for sh in &mut self.shards {
             sh.set_ingress_snap(&self.snap_buf);
+        }
+        // PFC chains all the way to the hosts: shards gate cross-ToR
+        // egress on a barrier-refreshed snapshot of their ToR's uplink
+        // horizons (deterministic — same staleness on every shard count).
+        if let Some(clos) = &self.clos {
+            if clos.topo.mode == CcMode::Pfc {
+                clos.uplink_snapshot_into(&mut self.up_snap_buf);
+                for sh in &mut self.shards {
+                    sh.set_uplink_snap(&self.up_snap_buf);
+                }
+            }
         }
     }
 
@@ -612,6 +691,17 @@ impl Sim {
     /// over shards.
     pub fn wire_drops(&self) -> u64 {
         self.shards.iter().map(|s| s.wire_drops).sum()
+    }
+
+    /// Clos congestion counters (ECN marks, tail-drops, pauses); all-zero
+    /// on the single-switch fabric.
+    pub fn clos_stats(&self) -> ClosStats {
+        self.clos.as_ref().map(|c| c.stats).unwrap_or_default()
+    }
+
+    /// The Clos switch tiers, when a topology is installed.
+    pub fn clos(&self) -> Option<&Clos> {
+        self.clos.as_ref()
     }
 
     /// Enable/disable the `(time, node, kind)` event pop trace on every

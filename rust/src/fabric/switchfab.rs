@@ -7,7 +7,10 @@
 //! For a 4-node cluster with a single ToR this is exact; per-port queues
 //! give us backpressure and fan-in contention (3 readers hitting one
 //! responder node share that node's egress on the response path — visible
-//! in Fig 5's plateau).
+//! in Fig 5's plateau). Installing [`crate::fabric::topo::TopoConfig`]
+//! (`FabricConfig::topo`) replaces the single non-blocking switch with a
+//! multi-switch fat-tree/Clos built from the same [`Port`] primitive —
+//! oversubscribed uplinks, ECN/DCQCN, PFC pause gating (DESIGN.md §14).
 
 use super::time::{wire_time, Ns};
 use super::types::NodeId;

@@ -1,0 +1,458 @@
+//! Multi-switch fat-tree/Clos topology with congestion control.
+//!
+//! The single-switch fabric ([`super::switchfab`]) models every node one
+//! hop from every other, which makes incast fan-in and oversubscribed
+//! uplinks — the regime where production RDMA actually dies — physically
+//! unrepresentable. This module adds a two-tier leaf/spine Clos on *top*
+//! of the per-node host ports: nodes attach to ToR switches in groups of
+//! [`TopoConfig::hosts_per_tor`]; each ToR has `hosts_per_tor / oversub`
+//! uplinks, one to each spine; a frame whose destination sits under a
+//! different ToR crosses ToR-uplink → spine-downlink before reaching the
+//! destination's host ingress port. Same-ToR traffic keeps the old
+//! single-hop timing exactly.
+//!
+//! ### Determinism
+//!
+//! All Clos port state is owned by the *coordinator* ([`super::sim::Sim`])
+//! and mutated only inside the conservative barrier, where staged frames
+//! are already processed in one global `(link_at, src, emit)` total order
+//! that is independent of the shard count. Path selection is ECMP by a
+//! pure [`ecmp_hash`] of `(src, dst, src_qpn, dst_qpn)` — one path per QP
+//! pair, so a QP's frames never reorder and the go-back-N discipline is
+//! untouched. Cross-switch hops only ever *add* latency after the staged
+//! `link_at`, so the shard lookahead bound (frames staged at local time
+//! `t` arrive no earlier than `t + switch_latency`) still holds and shard
+//! partitioning stays byte-identical to the serial schedule.
+//!
+//! ### Congestion control ([`CcMode`])
+//!
+//! * **`Dcqcn`** — each Clos port has a finite buffer
+//!   ([`TopoConfig::buffer_bytes`]); a data frame that finds more than
+//!   [`TopoConfig::ecn_threshold_bytes`] of backlog is ECN-marked, the
+//!   responder echoes the mark on its ACK (the CNP), and the requester QP
+//!   cuts its sending rate, recovering by additive then hyper increase on
+//!   a timer (the DCQCN-flavored limiter in [`super::qp::Qp`]). Frames
+//!   beyond the buffer are tail-dropped and recovered by the PR-4 RC
+//!   retransmission machinery.
+//! * **`NoCc`** — same finite buffers and drops, no marking reaction:
+//!   the congestion-collapse ablation.
+//! * **`Pfc`** — lossless instead: a port whose *downstream* queue
+//!   exceeds the buffer pauses (its service start is pushed back), the
+//!   pause chains hop by hop toward the hosts, and head-of-line blocking
+//!   emerges naturally from FIFO port service. No drops, no marks.
+
+use super::switchfab::{Port, FRAME_OVERHEAD_BYTES};
+use super::time::{wire_time, Ns};
+use super::types::{NodeId, Qpn};
+
+/// Congestion-control regime for the Clos fabric (fig 13's ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CcMode {
+    /// ECN marking above threshold + per-QP DCQCN rate limiter; tail-drop
+    /// above the buffer (recovered by RC retransmission).
+    Dcqcn,
+    /// Finite buffers and tail-drop with *no* rate reaction: the
+    /// congestion-collapse baseline.
+    NoCc,
+    /// Priority-flow-control ablation: lossless chained pauses instead of
+    /// drops/marks; HOL blocking is the cost.
+    Pfc,
+}
+
+/// Clos topology + congestion-control parameters. `None` in
+/// [`super::sim::FabricConfig::topo`] keeps the single-switch fabric and
+/// every pre-existing figure byte-identical.
+#[derive(Clone, Copy, Debug)]
+pub struct TopoConfig {
+    /// Hosts attached to each ToR switch (nodes are assigned to ToRs in
+    /// id order: ToR `t` owns nodes `[t*hosts_per_tor, (t+1)*hosts_per_tor)`).
+    pub hosts_per_tor: usize,
+    /// Oversubscription ratio: each ToR gets `hosts_per_tor / oversub`
+    /// uplinks (min 1), one per spine. 1 = full bisection.
+    pub oversub: u32,
+    /// Congestion-control regime.
+    pub mode: CcMode,
+    /// Per-hop propagation + switching delay between switch tiers.
+    pub hop_latency_ns: u64,
+    /// ECN marking threshold per Clos port (bytes of queued backlog).
+    pub ecn_threshold_bytes: u64,
+    /// Finite per-port buffer: tail-drop point in `Dcqcn`/`NoCc`, pause
+    /// threshold in `Pfc`.
+    pub buffer_bytes: u64,
+    /// DCQCN rate-cut factor: `rate *= 1 - alpha` per accepted CNP.
+    pub cc_alpha: f64,
+    /// DCQCN rate floor, as a fraction of line rate.
+    pub cc_min_rate: f64,
+    /// DCQCN additive-increase step per recovery period (fraction of line
+    /// rate); after five additive steps the step doubles per period
+    /// (hyper increase).
+    pub cc_ai_frac: f64,
+    /// DCQCN rate-recovery timer period.
+    pub cc_recovery_ns: u64,
+    /// CNP coalescing: a QP cuts at most once per this interval.
+    pub cc_cnp_gap_ns: u64,
+}
+
+impl Default for TopoConfig {
+    fn default() -> Self {
+        TopoConfig {
+            hosts_per_tor: 8,
+            oversub: 1,
+            mode: CcMode::Dcqcn,
+            hop_latency_ns: 500,
+            ecn_threshold_bytes: 64 << 10,
+            buffer_bytes: 256 << 10,
+            cc_alpha: 0.5,
+            cc_min_rate: 1.0 / 32.0,
+            cc_ai_frac: 1.0 / 16.0,
+            cc_recovery_ns: 55_000,
+            cc_cnp_gap_ns: 50_000,
+        }
+    }
+}
+
+impl TopoConfig {
+    /// Uplinks per ToR (= spine count): `hosts_per_tor / oversub`, min 1.
+    pub fn uplinks(&self) -> usize {
+        (self.hosts_per_tor / (self.oversub.max(1) as usize)).max(1)
+    }
+
+    /// True when the DCQCN rate limiter should react to echoed marks.
+    pub fn dcqcn(&self) -> bool {
+        self.mode == CcMode::Dcqcn
+    }
+}
+
+/// Stable ECMP path hash (splitmix64 finalizer over the packed flow key).
+/// Pure function of the QP pair, so a flow sticks to one uplink/spine for
+/// its lifetime — no intra-QP reordering, and the same path on every
+/// shard count and every replay.
+pub fn ecmp_hash(src: NodeId, dst: NodeId, src_qpn: Qpn, dst_qpn: Qpn) -> u64 {
+    let mut z = ((src.0 as u64) << 48)
+        ^ ((dst.0 as u64) << 32)
+        ^ ((src_qpn.0 as u64) << 16)
+        ^ (dst_qpn.0 as u64);
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Aggregate Clos counters (fig-13 columns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClosStats {
+    /// Data frames ECN-marked at any Clos port or the destination ingress.
+    pub ecn_marks: u64,
+    /// Frames tail-dropped at a full Clos port (`Dcqcn`/`NoCc` only).
+    pub switch_drops: u64,
+    /// Pause events: a frame whose port service was pushed back by a
+    /// congested downstream queue (`Pfc` only).
+    pub pauses: u64,
+}
+
+/// Coordinator-owned Clos switch state: one [`Port`] per ToR uplink and
+/// per spine downlink. Mutated only at the conservative barrier, in the
+/// global staged-frame order.
+#[derive(Debug)]
+pub struct Clos {
+    /// The topology + CC parameters this fabric was built from.
+    pub topo: TopoConfig,
+    tors: usize,
+    uplinks: usize,
+    gbps: f64,
+    hop_latency: Ns,
+    /// ECN threshold converted to backlog time at line rate.
+    ecn_threshold: Ns,
+    /// Buffer depth converted to backlog time at line rate.
+    buffer: Ns,
+    /// ToR uplink ports, indexed `[tor * uplinks + u]`; uplink `u` of
+    /// every ToR lands on spine `u`.
+    tor_up: Vec<Port>,
+    /// Spine downlink ports, indexed `[spine * tors + dst_tor]`.
+    spine_down: Vec<Port>,
+    /// Aggregate marking/drop/pause counters.
+    pub stats: ClosStats,
+}
+
+/// What the Clos decided for one staged frame.
+pub enum ClosVerdict {
+    /// Frame reaches the destination's host ingress at this time (first
+    /// bit); the `bool` is true when a Clos hop ECN-marked it.
+    Deliver(Ns, bool),
+    /// Frame tail-dropped at a full Clos port.
+    Drop,
+}
+
+impl Clos {
+    /// Build the Clos for `nodes` hosts. Spine count = uplinks per ToR.
+    pub fn new(nodes: usize, gbps: f64, topo: TopoConfig) -> Self {
+        let hosts = topo.hosts_per_tor.max(1);
+        let tors = nodes.div_ceil(hosts).max(1);
+        let uplinks = topo.uplinks();
+        Clos {
+            topo,
+            tors,
+            uplinks,
+            gbps,
+            hop_latency: Ns(topo.hop_latency_ns),
+            ecn_threshold: wire_time(topo.ecn_threshold_bytes, gbps),
+            buffer: wire_time(topo.buffer_bytes, gbps),
+            tor_up: vec![Port::default(); tors * uplinks],
+            spine_down: vec![Port::default(); tors * uplinks],
+            stats: ClosStats::default(),
+        }
+    }
+
+    /// ToR switch owning this node.
+    pub fn tor_of(&self, n: NodeId) -> usize {
+        (n.0 as usize / self.topo.hosts_per_tor.max(1)).min(self.tors - 1)
+    }
+
+    /// Number of ToR switches.
+    pub fn tors(&self) -> usize {
+        self.tors
+    }
+
+    /// Uplinks per ToR (= spine count).
+    pub fn uplinks(&self) -> usize {
+        self.uplinks
+    }
+
+    /// ECMP uplink/spine index for a flow (pure; same on every shard count).
+    pub fn path_of(&self, src: NodeId, dst: NodeId, src_qpn: Qpn, dst_qpn: Qpn) -> usize {
+        (ecmp_hash(src, dst, src_qpn, dst_qpn) % self.uplinks as u64) as usize
+    }
+
+    /// ECN threshold as backlog time at line rate (the destination-ingress
+    /// marking check in the coordinator uses the same constant).
+    pub fn ecn_threshold(&self) -> Ns {
+        self.ecn_threshold
+    }
+
+    /// Buffer depth as backlog time at line rate.
+    pub fn buffer(&self) -> Ns {
+        self.buffer
+    }
+
+    /// Snapshot every ToR-uplink port's busy horizon into `out`
+    /// (index = `tor * uplinks + u`). Refreshed into each shard at every
+    /// barrier so the PFC host-egress gate can see uplink congestion
+    /// without racing on the live ports.
+    pub fn uplink_snapshot_into(&self, out: &mut Vec<Ns>) {
+        out.clear();
+        out.extend(self.tor_up.iter().map(|p| p.busy_until()));
+    }
+
+    /// Route one cross-ToR frame through uplink + spine, in the global
+    /// staged-frame order. `link_at` is the first bit arriving at the
+    /// source ToR (the shard already paid host egress + switch latency);
+    /// `dst_ingress_busy` is the destination host-ingress horizon, used by
+    /// the PFC chain's last gate. Same-ToR frames must not be routed here.
+    ///
+    /// Returns where/whether the frame reaches the destination ingress;
+    /// `carries_data` gates ECN marking (marking an ACK would fabricate a
+    /// CNP at a node that never sent data).
+    pub fn route(
+        &mut self,
+        link_at: Ns,
+        src: NodeId,
+        dst: NodeId,
+        src_qpn: Qpn,
+        dst_qpn: Qpn,
+        payload_bytes: u64,
+        carries_data: bool,
+        dst_ingress_busy: Ns,
+    ) -> ClosVerdict {
+        let wire_bytes = payload_bytes + FRAME_OVERHEAD_BYTES;
+        let frame_time = wire_time(wire_bytes, self.gbps);
+        let u = self.path_of(src, dst, src_qpn, dst_qpn);
+        let st = self.tor_of(src);
+        let dt = self.tor_of(dst);
+        let mut marked = false;
+
+        // --- hop 1: source ToR uplink `u` (lands on spine `u`) ---
+        let down_busy = self.spine_down[u * self.tors + dt].busy_until();
+        let up = &mut self.tor_up[st * self.uplinks + u];
+        let mut earliest = link_at;
+        match self.topo.mode {
+            CcMode::Pfc => {
+                // Pause: don't start serializing while the downstream
+                // spine queue is more than a buffer ahead.
+                let gate = down_busy.saturating_sub(self.buffer + self.hop_latency);
+                if gate > earliest {
+                    earliest = gate;
+                    self.stats.pauses += 1;
+                }
+            }
+            CcMode::Dcqcn | CcMode::NoCc => {
+                let backlog = up.busy_until().saturating_sub(link_at);
+                if backlog > self.buffer {
+                    self.stats.switch_drops += 1;
+                    return ClosVerdict::Drop;
+                }
+                if carries_data && backlog > self.ecn_threshold {
+                    marked = true;
+                }
+            }
+        }
+        let up_done = up.occupy(earliest, frame_time, wire_bytes);
+        let at_spine = up_done + self.hop_latency;
+
+        // --- hop 2: spine `u` downlink to the destination ToR ---
+        let down = &mut self.spine_down[u * self.tors + dt];
+        let mut earliest = at_spine;
+        match self.topo.mode {
+            CcMode::Pfc => {
+                let gate = dst_ingress_busy.saturating_sub(self.buffer + self.hop_latency);
+                if gate > earliest {
+                    earliest = gate;
+                    self.stats.pauses += 1;
+                }
+            }
+            CcMode::Dcqcn | CcMode::NoCc => {
+                let backlog = down.busy_until().saturating_sub(at_spine);
+                if backlog > self.buffer {
+                    self.stats.switch_drops += 1;
+                    return ClosVerdict::Drop;
+                }
+                if carries_data && backlog > self.ecn_threshold {
+                    marked = true;
+                }
+            }
+        }
+        let down_done = down.occupy(earliest, frame_time, wire_bytes);
+        if marked {
+            self.stats.ecn_marks += 1;
+        }
+        ClosVerdict::Deliver(down_done + self.hop_latency, marked)
+    }
+
+    /// Record a destination-ingress ECN mark (the coordinator checks the
+    /// host ingress backlog itself; the counter lives here so fig 13 sees
+    /// one total).
+    pub fn note_ingress_mark(&mut self) {
+        self.stats.ecn_marks += 1;
+    }
+
+    /// Record a destination-ingress tail-drop.
+    pub fn note_ingress_drop(&mut self) {
+        self.stats.switch_drops += 1;
+    }
+
+    /// Aggregate utilization of all ToR uplink ports over `[0, horizon]`.
+    pub fn uplink_utilization(&self, horizon: Ns) -> f64 {
+        if self.tor_up.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .tor_up
+            .iter()
+            .map(|p| p.utilization(horizon, self.gbps))
+            .sum();
+        sum / self.tor_up.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo(oversub: u32, mode: CcMode) -> TopoConfig {
+        TopoConfig {
+            oversub,
+            mode,
+            ..TopoConfig::default()
+        }
+    }
+
+    #[test]
+    fn uplink_count_follows_oversubscription() {
+        assert_eq!(topo(1, CcMode::Dcqcn).uplinks(), 8);
+        assert_eq!(topo(2, CcMode::Dcqcn).uplinks(), 4);
+        assert_eq!(topo(8, CcMode::Dcqcn).uplinks(), 1);
+        assert_eq!(topo(64, CcMode::Dcqcn).uplinks(), 1);
+    }
+
+    #[test]
+    fn ecmp_is_stable_and_spreads() {
+        let h = |s: u32, q: u32| ecmp_hash(NodeId(s), NodeId(0), Qpn(q), Qpn(1));
+        assert_eq!(h(8, 3), h(8, 3), "pure function");
+        // 64 distinct flows should not all collapse onto one value
+        let mut seen = std::collections::HashSet::new();
+        for s in 0..8 {
+            for q in 0..8 {
+                seen.insert(h(8 + s, 100 + q) % 8);
+            }
+        }
+        assert!(seen.len() >= 4, "ECMP spread too narrow: {seen:?}");
+    }
+
+    #[test]
+    fn same_path_routes_serialize_cross_tor() {
+        let mut c = Clos::new(24, 40.0, topo(8, CcMode::NoCc));
+        assert_eq!(c.uplinks(), 1);
+        let d1 = match c.route(Ns(0), NodeId(8), NodeId(0), Qpn(1), Qpn(2), 4096, true, Ns(0)) {
+            ClosVerdict::Deliver(t, _) => t,
+            ClosVerdict::Drop => panic!("dropped"),
+        };
+        let d2 = match c.route(Ns(0), NodeId(9), NodeId(1), Qpn(1), Qpn(2), 4096, true, Ns(0)) {
+            ClosVerdict::Deliver(t, _) => t,
+            ClosVerdict::Drop => panic!("dropped"),
+        };
+        // both frames share ToR-1's single uplink: second serializes behind
+        let frame = wire_time(4096 + FRAME_OVERHEAD_BYTES, 40.0);
+        assert!(d2 >= d1 + frame, "d1={d1} d2={d2}");
+    }
+
+    #[test]
+    fn full_port_tail_drops_and_marks_before_that() {
+        let cfg = topo(8, CcMode::NoCc);
+        let mut c = Clos::new(24, 40.0, cfg);
+        let mut dropped = false;
+        let mut marked = false;
+        for i in 0..400 {
+            match c.route(
+                Ns(0),
+                NodeId(8),
+                NodeId(0),
+                Qpn(1),
+                Qpn(2),
+                4096,
+                true,
+                Ns(0),
+            ) {
+                ClosVerdict::Deliver(_, m) => marked |= m,
+                ClosVerdict::Drop => {
+                    dropped = true;
+                    assert!(i > 10, "dropped way too early at frame {i}");
+                    break;
+                }
+            }
+        }
+        assert!(marked, "no ECN mark before the buffer filled");
+        assert!(dropped, "queue never hit the finite buffer");
+        assert!(c.stats.ecn_marks > 0 && c.stats.switch_drops > 0);
+    }
+
+    #[test]
+    fn pfc_pauses_instead_of_dropping() {
+        let mut c = Clos::new(24, 40.0, topo(8, CcMode::Pfc));
+        for _ in 0..400 {
+            match c.route(
+                Ns(0),
+                NodeId(8),
+                NodeId(0),
+                Qpn(1),
+                Qpn(2),
+                4096,
+                true,
+                Ns(0),
+            ) {
+                ClosVerdict::Deliver(..) => {}
+                ClosVerdict::Drop => panic!("PFC must be lossless"),
+            }
+        }
+        assert_eq!(c.stats.switch_drops, 0);
+        assert_eq!(c.stats.ecn_marks, 0, "PFC ablation does not mark");
+    }
+}

@@ -20,10 +20,11 @@ use crate::fabric::types::{QpTransport, Verb};
 use crate::fabric::verbs::capability_matrix;
 use crate::metrics::Series;
 use crate::util::parallel;
+use crate::fabric::topo::CcMode;
 use crate::workload::scenarios::{
-    chaos_send, churn_storm, kv_storm, locked_random_read, naive_random_read, raas_random_read,
-    scale_send, verbs_sweep_point, ChaosCfg, ChaosRun, ChurnCfg, ChurnRun, KvCfg, KvRun,
-    RunStats, ScaleCfg, ScaleRun, ScenarioCfg,
+    chaos_send, churn_storm, incast_storm, kv_storm, locked_random_read, naive_random_read,
+    raas_random_read, scale_send, verbs_sweep_point, ChaosCfg, ChaosRun, ChurnCfg, ChurnRun,
+    IncastCfg, IncastRun, KvCfg, KvRun, RunStats, ScaleCfg, ScaleRun, ScenarioCfg,
 };
 
 /// Message sizes swept in Fig 1 (64 B … 1 MB).
@@ -1072,6 +1073,220 @@ pub fn fig12_series(rows: &[Fig12Row]) -> Series {
     s
 }
 
+// ------------------------------------------------------------------ Fig 13
+
+/// Oversubscription ratios swept in the fig-13 incast experiment: full
+/// bisection down to an 8:1 ToR uplink squeeze.
+pub const FIG13_OVERSUBS: &[u32] = &[1, 2, 4, 8];
+
+/// The fig-13 oversubscription ratios for a budget (shared with `bench
+/// incast`).
+pub fn fig13_oversubs(budget: Budget) -> Vec<u32> {
+    match budget {
+        Budget::Quick => vec![1, 8],
+        Budget::Full => FIG13_OVERSUBS.to_vec(),
+    }
+}
+
+/// The fig-13 [`IncastCfg`] for one sweep point (shared with `bench
+/// incast` so BENCH_PR9.json times exactly the runs the figure makes).
+pub fn fig13_cfg(oversub: u32, budget: Budget, mode: CcMode) -> IncastCfg {
+    let mut cfg = IncastCfg::default();
+    cfg.oversub = oversub;
+    cfg.mode = mode;
+    if budget == Budget::Quick {
+        cfg.writers = 8;
+        cfg.elephants = 2;
+        cfg.mice = 2;
+        cfg.window = 8;
+        cfg.duration = Ns::from_ms(2);
+    }
+    cfg
+}
+
+/// One fig-13 sweep point: the same incast tape through each
+/// congestion-control mode of the Clos fabric.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig13Row {
+    /// ToR uplink oversubscription ratio of this point.
+    pub oversub: u32,
+    /// DCQCN (ECN marks → CNP echo → per-QP rate cuts).
+    pub dcqcn: Option<IncastRun>,
+    /// No congestion control: tail-drops + go-back-N only.
+    pub no_cc: Option<IncastRun>,
+    /// PFC pause chaining: lossless, head-of-line blocking.
+    pub pfc: Option<IncastRun>,
+}
+
+/// Fig 13: incast goodput and mouse-FCT tail vs ToR oversubscription,
+/// DCQCN vs no-CC vs PFC. Each (oversub, mode) pair is an independent
+/// `Sim` work item, interleaved so `--jobs N` merges byte-identically
+/// with the serial runner.
+pub fn fig13(budget: Budget, jobs: usize) -> Vec<Fig13Row> {
+    fig13_sharded(budget, jobs, 1)
+}
+
+/// [`fig13`] with a sharded `Sim` per point (shard-invariant output).
+pub fn fig13_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig13Row> {
+    let oversubs = fig13_oversubs(budget);
+    let mut items = Vec::with_capacity(oversubs.len() * 3);
+    for &o in &oversubs {
+        items.push((o, CcMode::Dcqcn));
+        items.push((o, CcMode::NoCc));
+        items.push((o, CcMode::Pfc));
+    }
+    let runs = parallel::map_indexed(items, jobs, |_, (o, mode)| {
+        let mut cfg = fig13_cfg(o, budget, mode);
+        cfg.shards = shards;
+        incast_storm(&cfg)
+    });
+    oversubs
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| Fig13Row {
+            oversub: o,
+            dcqcn: Some(runs[3 * i]),
+            no_cc: Some(runs[3 * i + 1]),
+            pfc: Some(runs[3 * i + 2]),
+        })
+        .collect()
+}
+
+/// The `--no-cc` ablation alone: tail-drop + go-back-N, no rate control
+/// (DCQCN and PFC columns omitted).
+pub fn fig13_no_cc(budget: Budget, jobs: usize) -> Vec<Fig13Row> {
+    fig13_no_cc_sharded(budget, jobs, 1)
+}
+
+/// [`fig13_no_cc`] with a sharded `Sim` per point (shard-invariant).
+pub fn fig13_no_cc_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig13Row> {
+    let oversubs = fig13_oversubs(budget);
+    let runs = parallel::map_indexed(oversubs.clone(), jobs, |_, o| {
+        let mut cfg = fig13_cfg(o, budget, CcMode::NoCc);
+        cfg.shards = shards;
+        incast_storm(&cfg)
+    });
+    oversubs
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| Fig13Row { oversub: o, dcqcn: None, no_cc: Some(runs[i]), pfc: None })
+        .collect()
+}
+
+/// The `--pfc` ablation alone: lossless pause chaining (DCQCN and no-CC
+/// columns omitted).
+pub fn fig13_pfc(budget: Budget, jobs: usize) -> Vec<Fig13Row> {
+    fig13_pfc_sharded(budget, jobs, 1)
+}
+
+/// [`fig13_pfc`] with a sharded `Sim` per point (shard-invariant).
+pub fn fig13_pfc_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig13Row> {
+    let oversubs = fig13_oversubs(budget);
+    let runs = parallel::map_indexed(oversubs.clone(), jobs, |_, o| {
+        let mut cfg = fig13_cfg(o, budget, CcMode::Pfc);
+        cfg.shards = shards;
+        incast_storm(&cfg)
+    });
+    oversubs
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| Fig13Row { oversub: o, dcqcn: None, no_cc: None, pfc: Some(runs[i]) })
+        .collect()
+}
+
+/// Render the Fig-13 table.
+pub fn print_fig13(rows: &[Fig13Row]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Fig 13: Clos incast — goodput and mouse p99 FCT vs ToR oversubscription, by CC mode\n",
+    );
+    out.push_str(&format!(
+        "{:>7} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}\n",
+        "oversub", "dcqcn Gb", "nocc Gb", "pfc Gb", "dcqcn p99", "nocc p99", "pfc p99", "marks",
+        "drops", "pauses"
+    ));
+    for r in rows {
+        let g = |o: &Option<IncastRun>| match o {
+            Some(x) => format!("{:.2}", x.goodput_gbps),
+            None => "-".into(),
+        };
+        let p = |o: &Option<IncastRun>| match o {
+            Some(x) => format!("{:.1}", x.p99_fct_us),
+            None => "-".into(),
+        };
+        let marks = r.dcqcn.map(|x| x.ecn_marks).unwrap_or(0);
+        let drops = r.no_cc.or(r.dcqcn).map(|x| x.switch_drops).unwrap_or(0);
+        let pauses = r.pfc.map(|x| x.pauses).unwrap_or(0);
+        out.push_str(&format!(
+            "{:>7} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}\n",
+            r.oversub,
+            g(&r.dcqcn),
+            g(&r.no_cc),
+            g(&r.pfc),
+            p(&r.dcqcn),
+            p(&r.no_cc),
+            p(&r.pfc),
+            marks,
+            drops,
+            pauses
+        ));
+    }
+    out
+}
+
+/// The Fig-13 [`Series`] (shared by the CLI and the determinism tests).
+pub fn fig13_series(rows: &[Fig13Row]) -> Series {
+    let mut s = Series::new(
+        "fig13_incast",
+        "oversub",
+        &[
+            "dcqcn_goodput_gbps",
+            "nocc_goodput_gbps",
+            "pfc_goodput_gbps",
+            "dcqcn_p50_fct_us",
+            "nocc_p50_fct_us",
+            "pfc_p50_fct_us",
+            "dcqcn_p99_fct_us",
+            "nocc_p99_fct_us",
+            "pfc_p99_fct_us",
+            "dcqcn_ecn_marks",
+            "dcqcn_switch_drops",
+            "nocc_switch_drops",
+            "pfc_pauses",
+            "dcqcn_retransmits",
+            "nocc_retransmits",
+            "nocc_retry_exceeded",
+        ],
+    );
+    for r in rows {
+        let d = |f: fn(&IncastRun) -> f64| r.dcqcn.as_ref().map(f).unwrap_or(f64::NAN);
+        let n = |f: fn(&IncastRun) -> f64| r.no_cc.as_ref().map(f).unwrap_or(f64::NAN);
+        let pf = |f: fn(&IncastRun) -> f64| r.pfc.as_ref().map(f).unwrap_or(f64::NAN);
+        s.push(
+            r.oversub as f64,
+            vec![
+                d(|x| x.goodput_gbps),
+                n(|x| x.goodput_gbps),
+                pf(|x| x.goodput_gbps),
+                d(|x| x.p50_fct_us),
+                n(|x| x.p50_fct_us),
+                pf(|x| x.p50_fct_us),
+                d(|x| x.p99_fct_us),
+                n(|x| x.p99_fct_us),
+                pf(|x| x.p99_fct_us),
+                d(|x| x.ecn_marks as f64),
+                d(|x| x.switch_drops as f64),
+                n(|x| x.switch_drops as f64),
+                pf(|x| x.pauses as f64),
+                d(|x| x.retransmits as f64),
+                n(|x| x.retransmits as f64),
+                n(|x| x.retry_exceeded as f64),
+            ],
+        );
+    }
+    s
+}
+
 // --------------------------------------------------------- figure runner
 
 /// Run one figure id end-to-end; returns its [`Series`] plus the rendered
@@ -1090,10 +1305,10 @@ pub fn run_fig(
 }
 
 /// [`run_fig`] with a sharded `Sim` per sweep point. Only the daemon-scale
-/// figures (9–12) thread the knob — figs 1–8 run tiny fabrics where
+/// figures (9–13) thread the knob — figs 1–8 run tiny fabrics where
 /// partitioning has nothing to win, so they ignore it. The output bytes
 /// are identical for every `shards` value (the determinism suite gates
-/// figs 9–12 at `shards = 4` against serial), so the figure JSON never
+/// figs 9–13 at `shards = 4` against serial), so the figure JSON never
 /// records the knob.
 pub fn run_fig_sharded(
     id: u64,
@@ -1182,6 +1397,11 @@ pub fn run_fig_sharded(
             let rows = fig12_sharded(b, jobs, shards);
             let table = print_fig12(&rows);
             Some((fig12_series(&rows), table))
+        }
+        13 => {
+            let rows = fig13_sharded(b, jobs, shards);
+            let table = print_fig13(&rows);
+            Some((fig13_series(&rows), table))
         }
         _ => None,
     }

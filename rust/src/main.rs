@@ -2,13 +2,16 @@
 //!
 //! One binary drives the whole reproduction. Subcommands:
 //!
-//! * `fig --id {1,5,6,7,8,9,10,11,12}` — regenerate a paper figure (9 =
-//!   the RC↔UD-migration scale extension, 10 = the fault-injection chaos
-//!   sweep, 11 = the one-sided KV tier, 12 = the tenant-churn setup-rate
-//!   sweep) and print the series as JSON on stdout (human-readable table
-//!   on stderr). `--all` runs every figure; `--quick` shrinks the
+//! * `fig --id {1,5,6,7,8,9,10,11,12,13}` — regenerate a paper figure (9
+//!   = the RC↔UD-migration scale extension, 10 = the fault-injection
+//!   chaos sweep, 11 = the one-sided KV tier, 12 = the tenant-churn
+//!   setup-rate sweep, 13 = the Clos incast congestion sweep) and print
+//!   the series as JSON on stdout (human-readable table on stderr).
+//!   `--all` runs every figure; `--quick` shrinks the
 //!   sweeps; `--rc-only` restricts figures 9/10/11 to the ablation;
 //!   `--cold` restricts figure 12 to the no-pool/eager-lease ablation;
+//!   `--no-cc`/`--pfc` restrict figure 13 to one congestion-control
+//!   ablation;
 //!   `--jobs N` runs the independent sweep points on N threads (0 = all
 //!   cores) with byte-identical output; `--shards N` splits each
 //!   figure-9–12 `Sim` into N conservatively-synchronized partitions (0 =
@@ -36,6 +39,10 @@
 //!   churn sweep per arrival count (warm vs cold), written as
 //!   `BENCH_PR7.json` (the CI perf artifact for the elastic control
 //!   plane).
+//! * `bench incast [--out FILE] [--jobs N]` — wall-clock of the fig-13
+//!   incast sweep per oversubscription factor (DCQCN vs no-CC vs PFC),
+//!   written as `BENCH_PR9.json` (the CI perf artifact for the Clos
+//!   congestion-control fabric).
 //! * `bench` — one scenario run with explicit knobs (`--system
 //!   raas|naive|locked`, `--conns`, `--size`, …), JSON result on stdout.
 //! * `demo {kv,rpc,inference}` — the example applications end-to-end over
@@ -81,16 +88,17 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: rdmavisor <fig|figures|bench|demo|serve|init-config|info> [--help]\n\
-                 \n  fig --id 1|5|6|7|8|9|10|11|12 [--all] [--quick] [--rc-only] [--cold] [--jobs N] [--shards N] [--tsv DIR]   (JSON on stdout)\
+                 \n  fig --id 1|5|6|7|8|9|10|11|12|13 [--all] [--quick] [--rc-only] [--cold] [--no-cc] [--pfc] [--jobs N] [--shards N] [--tsv DIR]   (JSON on stdout)\
                  \n  bench hotpath|simstep|pump [--quick] [--shards N]  (JSON on stdout)\
                  \n  bench fig9 [--quick] [--jobs N] [--shards N] [--out FILE]    (fig-9 wall clock -> BENCH_PR5.json; --shards -> BENCH_PR8.json)\
                  \n  bench kv [--quick] [--jobs N] [--out FILE]      (fig-11 wall clock -> BENCH_PR6.json)\
                  \n  bench churn [--quick] [--jobs N] [--out FILE]   (fig-12 wall clock -> BENCH_PR7.json)\
+                 \n  bench incast [--quick] [--jobs N] [--out FILE]  (fig-13 wall clock -> BENCH_PR9.json)\
                  \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
                  [--window N] [--duration-ms MS] [--q N] [--config FILE]\
                  \n  demo kv|rpc|inference [--gets N] [--calls N] [--requests N]\
                  \n  figures --all | --table1 --fig1 --fig5 --fig6 --fig7 --fig8 --fig9 \
-                 --fig10 --fig11 --fig12 --send-staging --batching [--quick] [--tsv DIR]\
+                 --fig10 --fig11 --fig12 --fig13 --send-staging --batching [--quick] [--tsv DIR]\
                  \n  serve [--clients N] [--requests N] [--artifacts DIR]\
                  \n  init-config [--out FILE]"
             );
@@ -151,7 +159,7 @@ fn fig_cmd(args: &Args) {
     let jobs = jobs(args);
     let shards = shards(args);
     let mut ids: Vec<u64> = if args.flag("all") {
-        vec![1, 5, 6, 7, 8, 9, 10, 11, 12]
+        vec![1, 5, 6, 7, 8, 9, 10, 11, 12, 13]
     } else {
         args.u64_list("id", &[])
     };
@@ -166,8 +174,8 @@ fn fig_cmd(args: &Args) {
     ids.retain(|id| seen.insert(*id));
     if ids.is_empty() {
         eprintln!(
-            "usage: rdmavisor fig --id 1|5|6|7|8|9|10|11|12 [--all] [--quick] [--rc-only] \
-             [--cold] [--jobs N] [--shards N] [--tsv DIR]"
+            "usage: rdmavisor fig --id 1|5|6|7|8|9|10|11|12|13 [--all] [--quick] [--rc-only] \
+             [--cold] [--no-cc] [--pfc] [--jobs N] [--shards N] [--tsv DIR]"
         );
         std::process::exit(2);
     }
@@ -190,11 +198,19 @@ fn fig_cmd(args: &Args) {
         } else if id == 12 && args.flag("cold") {
             let rows = figures::fig12_cold_only_sharded(b, jobs, shards);
             (figures::fig12_series(&rows), figures::print_fig12(&rows))
+        } else if id == 13 && args.flag("no-cc") {
+            let rows = figures::fig13_no_cc_sharded(b, jobs, shards);
+            (figures::fig13_series(&rows), figures::print_fig13(&rows))
+        } else if id == 13 && args.flag("pfc") {
+            let rows = figures::fig13_pfc_sharded(b, jobs, shards);
+            (figures::fig13_series(&rows), figures::print_fig13(&rows))
         } else {
             match figures::run_fig_sharded(id, b, &mut fig78_cache, jobs, shards) {
                 Some(r) => r,
                 None => {
-                    eprintln!("unknown figure id {id}: expected 1, 5, 6, 7, 8, 9, 10, 11 or 12");
+                    eprintln!(
+                        "unknown figure id {id}: expected 1, 5, 6, 7, 8, 9, 10, 11, 12 or 13"
+                    );
                     std::process::exit(2);
                 }
             }
@@ -248,6 +264,7 @@ fn figures_cmd(args: &Args) {
         ("fig10", 10),
         ("fig11", 11),
         ("fig12", 12),
+        ("fig13", 13),
     ] {
         if all || args.flag(flag) {
             let (s, table) =
@@ -282,6 +299,7 @@ fn bench_cmd(args: &Args) {
         Some("fig9") => return bench_fig9(args),
         Some("kv") => return bench_kv(args),
         Some("churn") => return bench_churn(args),
+        Some("incast") => return bench_incast(args),
         _ => {}
     }
     let mut cfg = match args.get("config") {
@@ -806,6 +824,81 @@ fn bench_churn(args: &Args) {
         ("total_events", Json::Num(total_events as f64)),
         ("total_conns", Json::Num(total_conns as f64)),
         ("conns_per_sec", num(total_conns as f64 / total_wall.max(1e-9))),
+    ]);
+    let text = doc.to_string();
+    match std::fs::write(&out_path, &text) {
+        Ok(()) => eprintln!("wrote {out_path}"),
+        Err(e) => eprintln!("write {out_path} failed: {e}"),
+    }
+    println!("{text}");
+}
+
+/// `bench incast` — wall-clock of the fig-13 Clos incast sweep per
+/// oversubscription factor (DCQCN + no-CC + PFC, exactly the runs `fig
+/// --id 13` makes). Writes the result to `--out` (default
+/// BENCH_PR9.json) so CI archives a perf trajectory for the congested
+/// fabric. Recorded trajectories should stay at the serial `--jobs`
+/// default.
+fn bench_incast(args: &Args) {
+    use rdmavisor::fabric::topo::CcMode;
+    use rdmavisor::workload::scenarios::incast_storm;
+
+    let b = budget(args);
+    let j = jobs(args);
+    let out_path = args.str_or("out", "BENCH_PR9.json");
+    let t_all = Instant::now();
+    let measured = parallel::map_indexed(figures::fig13_oversubs(b), j, |_, oversub| {
+        let t0 = Instant::now();
+        let dcqcn = incast_storm(&figures::fig13_cfg(oversub, b, CcMode::Dcqcn));
+        let no_cc = incast_storm(&figures::fig13_cfg(oversub, b, CcMode::NoCc));
+        let pfc = incast_storm(&figures::fig13_cfg(oversub, b, CcMode::Pfc));
+        (oversub, dcqcn, no_cc, pfc, t0.elapsed().as_secs_f64())
+    });
+    let mut points = Vec::new();
+    let mut total_wall = 0.0f64;
+    let mut total_events = 0u64;
+    for (oversub, dcqcn, no_cc, pfc, wall) in measured {
+        total_wall += wall;
+        total_events += dcqcn.events + no_cc.events + pfc.events;
+        eprintln!(
+            "incast oversub={oversub}: dcqcn {:.2} Gb/s vs no-cc {:.2} Gb/s vs pfc {:.2} Gb/s, \
+             {} marks / {} drops  ({:>8.1} ms wall)",
+            dcqcn.goodput_gbps,
+            no_cc.goodput_gbps,
+            pfc.goodput_gbps,
+            dcqcn.ecn_marks,
+            no_cc.switch_drops,
+            wall * 1e3
+        );
+        points.push(obj(vec![
+            ("oversub", Json::Num(oversub as f64)),
+            ("wall_ms", num(wall * 1e3)),
+            ("events", Json::Num((dcqcn.events + no_cc.events + pfc.events) as f64)),
+            ("dcqcn_goodput_gbps", num(dcqcn.goodput_gbps)),
+            ("nocc_goodput_gbps", num(no_cc.goodput_gbps)),
+            ("pfc_goodput_gbps", num(pfc.goodput_gbps)),
+            ("dcqcn_p99_fct_us", num(dcqcn.p99_fct_us)),
+            ("nocc_p99_fct_us", num(no_cc.p99_fct_us)),
+            ("pfc_p99_fct_us", num(pfc.p99_fct_us)),
+            ("ecn_marks", Json::Num(dcqcn.ecn_marks as f64)),
+            ("switch_drops", Json::Num(no_cc.switch_drops as f64)),
+            ("pauses", Json::Num(pfc.pauses as f64)),
+            ("retransmits", Json::Num(no_cc.retransmits as f64)),
+        ]));
+    }
+    if j > 1 {
+        total_wall = t_all.elapsed().as_secs_f64();
+    }
+    let budget_name = if b == Budget::Quick { "quick" } else { "full" };
+    let doc = obj(vec![
+        ("command", Json::Str("bench".into())),
+        ("mode", Json::Str("incast".into())),
+        ("budget", Json::Str(budget_name.to_string())),
+        ("jobs", Json::Num(j as f64)),
+        ("points", Json::Arr(points)),
+        ("total_wall_ms", num(total_wall * 1e3)),
+        ("total_events", Json::Num(total_events as f64)),
+        ("events_per_sec", num(total_events as f64 / total_wall.max(1e-9))),
     ]);
     let text = doc.to_string();
     match std::fs::write(&out_path, &text) {

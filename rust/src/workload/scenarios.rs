@@ -10,6 +10,7 @@ use crate::baselines::locked::LockedSystem;
 use crate::baselines::naive::NaiveSystem;
 use crate::fabric::sim::{FabricConfig, Notification, Sim};
 use crate::fabric::time::{gbps, Ns};
+use crate::fabric::topo::CcMode;
 use crate::fabric::types::NodeId;
 use crate::raas::api::Flags;
 use crate::raas::daemon::{connect_via, disconnect_via, Daemon, DaemonConfig, Delivery};
@@ -1573,6 +1574,341 @@ pub fn churn_storm(cfg: &ChurnCfg) -> ChurnRun {
     }
 }
 
+// ------------------------------------------------ Fig 13 (incast storm)
+
+/// Config for the Clos incast experiment (fig 13): `writers` RC writers
+/// spread over the non-sink ToRs blast a single sink host through an
+/// oversubscribed fat-tree ([`crate::fabric::topo`]), over a background
+/// of cross-ToR elephants, while mice probe the congested spine path and
+/// report flow-completion time. The sweep variable is the ToR
+/// oversubscription ratio; the ablation variable is the congestion-
+/// control mode.
+#[derive(Clone, Copy, Debug)]
+pub struct IncastCfg {
+    /// Fan-in writers targeting the sink (spread over ToRs 1..).
+    pub writers: usize,
+    /// Hosts per ToR switch (sink is host 0 of ToR 0).
+    pub hosts_per_tor: usize,
+    /// ToR count; total nodes = `tors * hosts_per_tor`.
+    pub tors: usize,
+    /// ToR uplink oversubscription ratio (1 = full bisection).
+    pub oversub: u32,
+    /// Congestion-control mode under test.
+    pub mode: CcMode,
+    /// Incast and elephant message size.
+    pub msg_bytes: u64,
+    /// Outstanding WRITEs per incast writer (closed loop).
+    pub window: u32,
+    /// Cross-ToR background elephant flows (window 8 each).
+    pub elephants: usize,
+    /// Latency-probe mice (window 1, [`IncastCfg::mice_bytes`] each),
+    /// writing to a non-sink ToR-0 host through the congested spine.
+    pub mice: usize,
+    /// Mouse message size.
+    pub mice_bytes: u64,
+    /// Virtual run length.
+    pub duration: Ns,
+    /// Simulator shard count (byte-identical output for any value).
+    pub shards: usize,
+    /// Optional spine-link flap `(from_ns, until_ns)`: every incast flow
+    /// whose ECMP hash picked uplink 0 loses its frames inside the
+    /// window (PR-4 fault stream riding the Clos fabric).
+    pub spine_flap: Option<(u64, u64)>,
+}
+
+impl Default for IncastCfg {
+    fn default() -> Self {
+        IncastCfg {
+            writers: 12,
+            hosts_per_tor: 8,
+            tors: 3,
+            oversub: 4,
+            mode: CcMode::Dcqcn,
+            msg_bytes: 64 << 10,
+            window: 16,
+            elephants: 4,
+            mice: 4,
+            mice_bytes: 2 << 10,
+            duration: Ns::from_ms(4),
+            shards: 1,
+            spine_flap: None,
+        }
+    }
+}
+
+/// One measured incast point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IncastRun {
+    /// Incast goodput at the sink, Gb/s: ACK-completed writer bytes in
+    /// the measured window (unique per message — retransmitted duplicates
+    /// never count).
+    pub goodput_gbps: f64,
+    /// Incast messages completed inside the measured window.
+    pub ops: u64,
+    /// Median mouse flow-completion time, microseconds.
+    pub p50_fct_us: f64,
+    /// 99th-percentile mouse flow-completion time, microseconds.
+    pub p99_fct_us: f64,
+    /// Data frames ECN-marked by congested Clos ports.
+    pub ecn_marks: u64,
+    /// Frames tail-dropped at full Clos ports (0 in PFC mode).
+    pub switch_drops: u64,
+    /// Frames pause-gated by PFC backpressure (Pfc mode only).
+    pub pauses: u64,
+    /// RC messages retransmitted after ACK timeout, all nodes.
+    pub retransmits: u64,
+    /// RC messages that exhausted their retry budget, all nodes.
+    pub retry_exceeded: u64,
+    /// Frames dropped by the fault layer (spine-flap windows).
+    pub wire_drops: u64,
+    /// Simulator events processed over the whole run.
+    pub events: u64,
+}
+
+/// Fig 13: N-to-1 incast through an oversubscribed Clos fabric. Closed
+/// loop at three tiers — incast writers into one sink, cross-ToR
+/// elephants saturating the spine, single-message mice measuring FCT —
+/// all raw RC WRITEs (no daemon layer), so the figure isolates the
+/// fabric and its congestion control. Deterministic for every shard
+/// count (`tests/determinism.rs` gates fig 13's byte-identity).
+pub fn incast_storm(cfg: &IncastCfg) -> IncastRun {
+    use crate::fabric::fault::{FaultConfig, Flap};
+    use crate::fabric::mr::Access;
+    use crate::fabric::topo::{ecmp_hash, TopoConfig};
+    use crate::fabric::types::{QpTransport, Qpn};
+    use crate::fabric::verbs as fv;
+    use crate::fabric::wqe::SendWr;
+
+    assert!(cfg.tors >= 2 && cfg.hosts_per_tor >= 2, "need a sink ToR and a source ToR");
+    let nodes = cfg.tors * cfg.hosts_per_tor;
+    let hosts = cfg.hosts_per_tor;
+    let src_pool = (cfg.tors - 1) * hosts; // nodes on ToRs 1..
+
+    let mut topo = TopoConfig::default();
+    topo.hosts_per_tor = hosts;
+    topo.oversub = cfg.oversub;
+    topo.mode = cfg.mode;
+
+    let mut fabric = FabricConfig::default();
+    fabric.nodes = nodes;
+    fabric.shards = cfg.shards;
+    fabric.max_outstanding = cfg.window.max(8) as usize;
+    fabric.sq_depth = 4 * cfg.window as usize + 32;
+    // deep queues (and PFC pause chains) delay ACKs far beyond the
+    // lossless ETA; a tight timer would retransmit spuriously and a
+    // 7-retry budget would die under sustained incast drops
+    fabric.nic.retransmit_timeout_ns = 400_000;
+    fabric.nic.retry_cnt = 64;
+    fabric.topo = Some(topo);
+    let mut sim = Sim::new(fabric);
+
+    // one CQ + one registered region per node; actors multiplex by wr_id
+    let mut cqs = Vec::with_capacity(nodes);
+    let mut mrs = Vec::with_capacity(nodes);
+    for n in 0..nodes {
+        cqs.push(sim.create_cq(NodeId(n as u32), 1 << 16));
+        mrs.push(sim.reg_mr(NodeId(n as u32), 64 << 20, Access::REMOTE_RW, true));
+    }
+
+    // actor table: incast writers, then elephants, then mice
+    struct Actor {
+        src: NodeId,
+        dst: NodeId,
+        qpn: Qpn,
+        peer_qpn: Qpn,
+        len: u64,
+        window: u32,
+        is_writer: bool,
+        is_mouse: bool,
+        issued_at: Ns,
+    }
+    let sink = NodeId(0);
+    let mut actors: Vec<Actor> = Vec::new();
+    for w in 0..cfg.writers {
+        let src = NodeId((hosts + w % src_pool) as u32);
+        let pair = fv::create_connected_pair(
+            &mut sim,
+            QpTransport::Rc,
+            src,
+            sink,
+            cqs[src.0 as usize],
+            cqs[src.0 as usize],
+            cqs[0],
+            cqs[0],
+        );
+        actors.push(Actor {
+            src,
+            dst: sink,
+            qpn: pair.a.1,
+            peer_qpn: pair.b.1,
+            len: cfg.msg_bytes,
+            window: cfg.window,
+            is_writer: true,
+            is_mouse: false,
+            issued_at: Ns::ZERO,
+        });
+    }
+    for e in 0..cfg.elephants {
+        // cross-ToR background load, never touching the sink's ToR when
+        // there are enough ToRs; directions alternate
+        let (src, dst) = if cfg.tors >= 3 {
+            let a = NodeId((hosts + e % hosts) as u32);
+            let b = NodeId((2 * hosts + e % hosts) as u32);
+            if e % 2 == 0 { (a, b) } else { (b, a) }
+        } else {
+            (NodeId((hosts + e % hosts) as u32), NodeId(1 + (e % (hosts - 1)) as u32))
+        };
+        let pair = fv::create_connected_pair(
+            &mut sim,
+            QpTransport::Rc,
+            src,
+            dst,
+            cqs[src.0 as usize],
+            cqs[src.0 as usize],
+            cqs[dst.0 as usize],
+            cqs[dst.0 as usize],
+        );
+        actors.push(Actor {
+            src,
+            dst,
+            qpn: pair.a.1,
+            peer_qpn: pair.b.1,
+            len: cfg.msg_bytes,
+            window: 8,
+            is_writer: false,
+            is_mouse: false,
+            issued_at: Ns::ZERO,
+        });
+    }
+    for m in 0..cfg.mice {
+        // mice land on a NON-sink ToR-0 host: they share the congested
+        // spine→ToR-0 path with the incast but not the sink's NIC, so
+        // their FCT isolates fabric queueing
+        let src = NodeId((hosts + (m + 1) % src_pool) as u32);
+        let dst = NodeId(1 + (m % (hosts - 1)) as u32);
+        let pair = fv::create_connected_pair(
+            &mut sim,
+            QpTransport::Rc,
+            src,
+            dst,
+            cqs[src.0 as usize],
+            cqs[src.0 as usize],
+            cqs[dst.0 as usize],
+            cqs[dst.0 as usize],
+        );
+        actors.push(Actor {
+            src,
+            dst,
+            qpn: pair.a.1,
+            peer_qpn: pair.b.1,
+            len: cfg.mice_bytes,
+            window: 1,
+            is_writer: false,
+            is_mouse: true,
+            issued_at: Ns::ZERO,
+        });
+    }
+
+    // spine-link flap: kill the flows ECMP hashed onto uplink 0 — must be
+    // installed before the first event
+    if let Some((from, until)) = cfg.spine_flap {
+        let uplinks = topo.uplinks() as u64;
+        let flaps: Vec<Flap> = actors
+            .iter()
+            .filter(|a| a.is_writer)
+            .filter(|a| ecmp_hash(a.src, a.dst, a.qpn, a.peer_qpn) % uplinks == 0)
+            .map(|a| Flap { src: a.src, dst: a.dst, from: Ns(from), until: Ns(until) })
+            .collect();
+        if !flaps.is_empty() {
+            sim.install_faults(FaultConfig { flaps, ..FaultConfig::default() });
+        }
+    }
+
+    let post = |sim: &mut Sim, a: &Actor, i: usize| {
+        let off = (i as u64 * cfg.msg_bytes) % (32 << 20);
+        let wr = SendWr::write(
+            i as u64,
+            a.len,
+            mrs[a.src.0 as usize].key,
+            mrs[a.src.0 as usize].addr + off,
+            mrs[a.dst.0 as usize].key,
+            mrs[a.dst.0 as usize].addr + off,
+        );
+        let _ = sim.post_send(a.src, a.qpn, wr);
+    };
+    for i in 0..actors.len() {
+        actors[i].issued_at = sim.now();
+        for _ in 0..actors[i].window {
+            post(&mut sim, &actors[i], i);
+        }
+    }
+
+    // measurement: skip the first quarter as warmup
+    let warmup = Ns(cfg.duration.0 / 4);
+    let mut t0 = Ns::ZERO;
+    let mut measuring = false;
+    let mut goodput_bytes = 0u64;
+    let mut ops = 0u64;
+    let mut fct = Histogram::new();
+    let mut notes: Vec<Notification> = Vec::new();
+    let mut cqes: Vec<crate::fabric::wqe::Cqe> = Vec::new();
+    while sim.now() < cfg.duration {
+        if !measuring && sim.now() >= warmup {
+            measuring = true;
+            t0 = sim.now();
+        }
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
+        }
+        for n in notes.drain(..) {
+            let Notification::CqeReady { node, cqn } = n else { continue };
+            cqes.clear();
+            sim.poll_cq_into(node, cqn, 1024, &mut cqes);
+            for c in 0..cqes.len() {
+                let i = cqes[c].wr_id as usize;
+                if i >= actors.len() {
+                    continue;
+                }
+                let ok = cqes[c].status == crate::fabric::types::WcStatus::Success;
+                let now = sim.now();
+                if measuring && ok && actors[i].is_writer {
+                    goodput_bytes += actors[i].len;
+                    ops += 1;
+                }
+                if measuring && ok && actors[i].is_mouse {
+                    fct.record(now.saturating_sub(actors[i].issued_at).0);
+                }
+                // repost regardless of status: the closed loop must keep
+                // pressure on even through RetryExceeded flushes
+                actors[i].issued_at = now;
+                post(&mut sim, &actors[i], i);
+            }
+        }
+    }
+
+    let span = sim.now().saturating_sub(t0);
+    let clos = sim.clos_stats();
+    let (mut retransmits, mut retry_exceeded) = (0u64, 0u64);
+    for n in sim.nodes() {
+        retransmits += n.retransmits;
+        retry_exceeded += n.retry_exceeded;
+    }
+    IncastRun {
+        goodput_gbps: gbps(goodput_bytes, span),
+        ops,
+        p50_fct_us: fct.p50() as f64 / 1e3,
+        p99_fct_us: fct.p99() as f64 / 1e3,
+        ecn_marks: clos.ecn_marks,
+        switch_drops: clos.switch_drops,
+        pauses: clos.pauses,
+        retransmits,
+        retry_exceeded,
+        wire_drops: sim.wire_drops(),
+        events: sim.steps_processed(),
+    }
+}
+
 /// Scheduler microbench workload for `bench simstep`: `pairs` RC QPs on
 /// one client streaming closed-loop WRITEs of `msg_bytes` at `window`
 /// outstanding each, across the default 4-node fabric. No daemon layer —
@@ -2053,5 +2389,51 @@ mod tests {
     fn verbs_sweep_small_msgs_overhead_bound() {
         let g = verbs_sweep_point(QpTransport::Rc, Verb::Write, 64, 8, Ns::from_ms(2));
         assert!(g < 10.0, "64 B writes can't reach line rate: {g:.1}");
+    }
+
+    fn incast_quick(oversub: u32, mode: CcMode) -> IncastCfg {
+        let mut cfg = IncastCfg::default();
+        cfg.oversub = oversub;
+        cfg.mode = mode;
+        cfg.writers = 8;
+        cfg.elephants = 2;
+        cfg.mice = 2;
+        cfg.window = 8;
+        cfg.duration = Ns::from_ms(2);
+        cfg
+    }
+
+    #[test]
+    fn incast_storm_completes_and_replays() {
+        let cfg = incast_quick(4, CcMode::Dcqcn);
+        let a = incast_storm(&cfg);
+        let b = incast_storm(&cfg);
+        assert!(a.ops > 0 && a.goodput_gbps > 0.0, "{a:?}");
+        assert!(a.events > 0);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "incast must replay identically");
+    }
+
+    #[test]
+    fn incast_congestion_marks_and_drops_without_cc() {
+        let run = incast_storm(&incast_quick(8, CcMode::NoCc));
+        assert!(run.switch_drops > 0, "deep incast into one uplink must tail-drop: {run:?}");
+        assert!(run.retransmits > 0, "drops must drive go-back-N recovery: {run:?}");
+    }
+
+    #[test]
+    fn incast_pfc_never_drops_at_the_switch() {
+        let run = incast_storm(&incast_quick(8, CcMode::Pfc));
+        assert_eq!(run.switch_drops, 0, "PFC is lossless: {run:?}");
+        assert!(run.pauses > 0, "deep incast must pause somewhere: {run:?}");
+    }
+
+    #[test]
+    fn incast_spine_flap_recovers_deterministically() {
+        let mut cfg = incast_quick(2, CcMode::Dcqcn);
+        cfg.spine_flap = Some((500_000, 900_000));
+        let a = incast_storm(&cfg);
+        let b = incast_storm(&cfg);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "flap run must replay identically");
+        assert!(a.ops > 0, "flows must survive the flap window: {a:?}");
     }
 }

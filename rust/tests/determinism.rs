@@ -9,10 +9,12 @@
 //! single bit of f64 drift fails the test.
 
 use rdmavisor::fabric::time::Ns;
+use rdmavisor::fabric::topo::CcMode;
 use rdmavisor::figures::{self, Budget};
 use rdmavisor::workload::scenarios::{
-    chaos_send, churn_storm, kv_storm, locked_random_read, naive_random_read, raas_random_read,
-    scale_send, verbs_sweep_point, ChaosCfg, ChurnCfg, KvCfg, ScaleCfg, ScenarioCfg,
+    chaos_send, churn_storm, incast_storm, kv_storm, locked_random_read, naive_random_read,
+    raas_random_read, scale_send, verbs_sweep_point, ChaosCfg, ChurnCfg, IncastCfg, KvCfg,
+    ScaleCfg, ScenarioCfg,
 };
 
 /// Run one figure id end-to-end on `jobs` threads and serialize
@@ -475,6 +477,244 @@ fn event_storm_events_invariant_across_shard_counts() {
     assert!(serial > 0);
     for shards in [2usize, 4] {
         assert_eq!(serial, event_storm_sharded(32, 4, 4096, Ns::from_ms(1), shards));
+    }
+}
+
+// --------------------------------------------- Clos fabric + fig 13 (PR 9)
+
+/// A small fig-13-shaped incast (8 nodes on 2 ToRs) for the shard-count
+/// invariance sweeps — small enough to run at several shard counts per
+/// CC mode.
+fn small_incast(mode: CcMode, shards: usize) -> IncastCfg {
+    let mut cfg = IncastCfg::default();
+    cfg.writers = 6;
+    cfg.hosts_per_tor = 4;
+    cfg.tors = 2;
+    cfg.oversub = 4;
+    cfg.mode = mode;
+    cfg.elephants = 2;
+    cfg.mice = 2;
+    cfg.window = 8;
+    cfg.duration = Ns::from_ms(2);
+    cfg.shards = shards;
+    cfg
+}
+
+#[test]
+fn fig13_replays_byte_identically() {
+    // the Clos fabric end-to-end: ECMP path choice, per-port queue and
+    // buffer state, ECN marks, DCQCN rate state, GBN recovery of
+    // tail-dropped frames — all under one seed, three CC modes
+    assert_fig_deterministic(13);
+}
+
+#[test]
+fn fig13_parallel_matches_serial() {
+    assert_eq!(fig_bytes_jobs(13, 1), fig_bytes_jobs(13, 4), "fig 13: --jobs 4 != --jobs 1");
+}
+
+#[test]
+fn fig13_sharded_matches_serial() {
+    // cross-switch hops are resolved at the coordinator barrier, so the
+    // Clos port state must be invariant to how nodes are partitioned
+    assert_eq!(fig_bytes(13), fig_bytes_sharded(13, 4), "fig 13: --shards 4 != --shards 1");
+}
+
+#[test]
+fn fig13_no_cc_matches_serial_under_jobs_and_shards() {
+    let run = |jobs, shards| {
+        let rows = figures::fig13_no_cc_sharded(Budget::Quick, jobs, shards);
+        format!(
+            "{}\n{}",
+            figures::fig13_series(&rows).to_json().to_string(),
+            figures::print_fig13(&rows)
+        )
+    };
+    let serial = run(1, 1);
+    assert_eq!(serial, run(4, 1), "fig 13 --no-cc: --jobs 4 != --jobs 1");
+    assert_eq!(serial, run(1, 4), "fig 13 --no-cc: --shards 4 != --shards 1");
+}
+
+#[test]
+fn fig13_pfc_matches_serial_under_jobs_and_shards() {
+    // PFC is the delicate sharded case: the pause gate reads the
+    // barrier snapshot of uplink horizons, never live remote state
+    let run = |jobs, shards| {
+        let rows = figures::fig13_pfc_sharded(Budget::Quick, jobs, shards);
+        format!(
+            "{}\n{}",
+            figures::fig13_series(&rows).to_json().to_string(),
+            figures::print_fig13(&rows)
+        )
+    };
+    let serial = run(1, 1);
+    assert_eq!(serial, run(4, 1), "fig 13 --pfc: --jobs 4 != --jobs 1");
+    assert_eq!(serial, run(1, 4), "fig 13 --pfc: --shards 4 != --shards 1");
+}
+
+#[test]
+fn incast_storm_invariant_across_shard_counts() {
+    // every CC mode, every counter — 12 shards > the 8 nodes pins the
+    // shard-clamp edge case on the Clos path too
+    for mode in [CcMode::Dcqcn, CcMode::NoCc, CcMode::Pfc] {
+        let serial = format!("{:?}", incast_storm(&small_incast(mode, 1)));
+        for shards in [2usize, 4, 12] {
+            assert_eq!(
+                serial,
+                format!("{:?}", incast_storm(&small_incast(mode, shards))),
+                "mode {mode:?}: {shards} shards differ from serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn incast_spine_flap_replays_across_shard_counts() {
+    // PR-4 fault streams riding the Clos fabric: a spine-link flap window
+    // must drop the same frames and trigger the same GBN recoveries for
+    // every shard count
+    let run = |shards| {
+        let mut cfg = small_incast(CcMode::Dcqcn, shards);
+        cfg.spine_flap = Some((500_000, 900_000));
+        incast_storm(&cfg)
+    };
+    let serial = run(1);
+    assert!(serial.ops > 0, "flapped incast must still complete traffic: {serial:?}");
+    assert_eq!(format!("{serial:?}"), format!("{:?}", run(4)), "4 shards differ");
+}
+
+#[test]
+fn fig13_dcqcn_beats_no_cc_at_deepest_incast() {
+    // the PR-9 acceptance gate: at the most oversubscribed quick point
+    // the rate limiter must pay for itself — no-CC blasts the full
+    // closed-loop inventory into the finite switch buffers and burns the
+    // bottleneck on go-back-N duplicates, DCQCN paces to capacity
+    let deepest = *figures::fig13_oversubs(Budget::Quick).last().expect("non-empty sweep");
+    let dcqcn = incast_storm(&figures::fig13_cfg(deepest, Budget::Quick, CcMode::Dcqcn));
+    let no_cc = incast_storm(&figures::fig13_cfg(deepest, Budget::Quick, CcMode::NoCc));
+    assert!(
+        dcqcn.goodput_gbps > no_cc.goodput_gbps,
+        "oversub {deepest}: DCQCN {:.3} Gb/s must beat no-CC {:.3} Gb/s",
+        dcqcn.goodput_gbps,
+        no_cc.goodput_gbps
+    );
+    assert!(dcqcn.ecn_marks > 0, "congested DCQCN run must mark frames: {dcqcn:?}");
+    assert!(no_cc.switch_drops > 0, "uncontrolled incast must overflow buffers: {no_cc:?}");
+    assert!(no_cc.retransmits > 0, "dropped frames must force GBN recovery: {no_cc:?}");
+}
+
+#[test]
+fn fig13_no_cc_goodput_degrades_with_oversubscription() {
+    // with CC off, halving the uplinks at every step must never help:
+    // monotone (small slack for ECMP hash luck) and strictly worse at
+    // the deep end
+    let goodput: Vec<f64> = figures::FIG13_OVERSUBS
+        .iter()
+        .map(|&o| incast_storm(&figures::fig13_cfg(o, Budget::Quick, CcMode::NoCc)).goodput_gbps)
+        .collect();
+    for pair in goodput.windows(2) {
+        assert!(
+            pair[1] <= pair[0] * 1.05,
+            "no-CC goodput must not rise with oversubscription: {goodput:?}"
+        );
+    }
+    assert!(
+        *goodput.last().unwrap() < goodput[0],
+        "deepest oversubscription must cost goodput: {goodput:?}"
+    );
+}
+
+// ------------------------------------- event-queue horizon + shard clamps
+// (the PR-9 verification-debt sweep: regression-pins for the fig 9–12
+// full-budget hints — timing-wheel overflow past ~1.07 s, merged-counter
+// drift, shard counts above the node count)
+
+#[test]
+fn event_queue_orders_across_the_long_horizon() {
+    // timestamps straddling 2^30 (the ~1.07 s wheel horizon), 2^32 and
+    // 2^40, pushed scrambled, must pop in time order
+    use rdmavisor::fabric::event::EventQueue;
+    let times: [u64; 10] = [
+        0,
+        999,
+        1 << 20,
+        (1 << 30) - 1,
+        1 << 30,
+        (1 << 30) + 1,
+        (1u64 << 32) + 7,
+        3_000_000_000,
+        1u64 << 40,
+        (1u64 << 40) + 1,
+    ];
+    let scramble = [5usize, 0, 8, 3, 9, 1, 7, 2, 6, 4];
+    let mut q = EventQueue::new();
+    for &i in &scramble {
+        q.push(Ns(times[i]), i);
+    }
+    let mut popped = Vec::new();
+    while let Some((at, i)) = q.pop() {
+        assert_eq!(at.0, times[i], "payload must ride with its timestamp");
+        popped.push(at.0);
+    }
+    let mut sorted = popped.clone();
+    sorted.sort_unstable();
+    assert_eq!(popped, sorted, "pops must come out time-ordered across the horizon");
+    assert_eq!(popped.len(), times.len());
+}
+
+#[test]
+fn rc_timers_cross_the_wheel_horizon_identically_at_any_shard_count() {
+    // black-hole the wire so only retransmission timers advance the
+    // clock: three 1.5 s timeouts march the Sim far past the 2^30 ns
+    // wheel horizon on a handful of events, at 1, 2 and 5 (> nodes)
+    // shards — clock, step count and fault counters must all agree
+    use rdmavisor::fabric::fault::FaultConfig;
+    use rdmavisor::fabric::mr::Access;
+    use rdmavisor::fabric::sim::{FabricConfig, Sim};
+    use rdmavisor::fabric::types::{NodeId, QpTransport};
+    use rdmavisor::fabric::verbs as fv;
+    use rdmavisor::fabric::wqe::SendWr;
+
+    let run = |shards: usize| {
+        let mut fabric = FabricConfig::default();
+        fabric.nodes = 2;
+        fabric.shards = shards;
+        fabric.nic.retransmit_timeout_ns = 1_500_000_000;
+        fabric.nic.retry_cnt = 2;
+        let mut sim = Sim::new(fabric);
+        let mut faults = FaultConfig::default();
+        faults.drop_p = 1.0;
+        sim.install_faults(faults);
+        let cq_a = sim.create_cq(NodeId(0), 64);
+        let cq_b = sim.create_cq(NodeId(1), 64);
+        let mr_a = sim.reg_mr(NodeId(0), 1 << 20, Access::REMOTE_RW, true);
+        let mr_b = sim.reg_mr(NodeId(1), 1 << 20, Access::REMOTE_RW, true);
+        let pair = fv::create_connected_pair(
+            &mut sim,
+            QpTransport::Rc,
+            NodeId(0),
+            NodeId(1),
+            cq_a,
+            cq_a,
+            cq_b,
+            cq_b,
+        );
+        fv::must_post(
+            &mut sim,
+            NodeId(0),
+            pair.a.1,
+            SendWr::write(1, 4096, mr_a.key, mr_a.addr, mr_b.key, mr_b.addr),
+        );
+        sim.run_to_quiescence();
+        (sim.now().0, sim.steps_processed(), format!("{:?}", sim.fault_stats()))
+    };
+    let serial = run(1);
+    assert!(
+        serial.0 > (1u64 << 30),
+        "the run must outlive the 2^30 ns wheel horizon: {serial:?}"
+    );
+    for shards in [2usize, 5] {
+        assert_eq!(serial, run(shards), "{shards} shards differ from serial");
     }
 }
 

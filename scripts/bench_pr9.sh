@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Produce BENCH_PR9.json: the fig-13 Clos-incast benchmark — goodput at
+# the sink and mouse p99 flow-completion time per ToR oversubscription
+# factor, under DCQCN, the no-CC ablation (tail-drop collapse) and the
+# PFC ablation (lossless pause gating), plus the ECN-mark / switch-drop
+# / pause counters at each point. CI runs this with --quick and uploads
+# the JSON plus the rendered markdown (scripts/perf_table.py takes any
+# number of BENCH_*.json inputs); run it with no arguments on a quiet
+# machine for the full-sweep numbers quoted in README.md. Measurement
+# stays at --jobs 1 (the serial runner) so the per-point wall clocks
+# are uncontended.
+#
+#   scripts/bench_pr9.sh [--quick] [OUT.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+quick=""
+out="BENCH_PR9.json"
+for arg in "$@"; do
+    case "$arg" in
+        --quick) quick="--quick" ;;
+        *) out="$arg" ;;
+    esac
+done
+
+cargo build --release
+cargo run --quiet --release -- bench incast $quick --out "$out" >/dev/null
+
+echo "wrote $out"

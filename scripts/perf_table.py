@@ -1,11 +1,11 @@
 #!/usr/bin/env python3
 """Render one or more BENCH_*.json artifacts (from `rdmavisor bench
-fig9` / `rdmavisor bench kv` / `rdmavisor bench churn` /
-bench_pr{3,5,6,7,8}.sh) as the markdown perf tables README.md quotes.
-Stdlib only.
+fig9` / `rdmavisor bench kv` / `rdmavisor bench churn` / `rdmavisor
+bench incast` / bench_pr{3,5,6,7,8,9}.sh) as the markdown perf tables
+README.md quotes. Stdlib only.
 
     python3 scripts/perf_table.py BENCH_PR5.json BENCH_PR6.json \
-        BENCH_PR7.json BENCH_PR8.json > BENCH_PR6.md
+        BENCH_PR7.json BENCH_PR8.json BENCH_PR9.json > BENCH_PR6.md
 
 Each input gets its own section (headed by the file name), so one
 markdown artifact can carry the whole recorded perf trajectory. CI runs
@@ -90,6 +90,49 @@ def render_churn(doc: dict) -> None:
     print(
         f"\nTotal: {total_conns:.0f} tenant setups in {total_wall:.0f} ms "
         f"({cps:.0f} sim-conns/sec of host wall clock)."
+    )
+
+
+def render_incast(doc: dict) -> None:
+    """The `bench incast` artifact: fig-13 Clos congestion sweep."""
+    budget = doc.get("budget", "?")
+    jobs = doc.get("jobs")
+    suffix = f", jobs: {jobs:.0f}" if jobs is not None else ""
+    print(
+        f"### Fig-13 Clos incast: goodput + mouse p99 FCT vs oversubscription "
+        f"(budget: {budget}{suffix})\n"
+    )
+    print(
+        "| oversub | wall ms | dcqcn Gb/s | no-cc Gb/s | pfc Gb/s "
+        "| dcqcn p99 µs | no-cc p99 µs | pfc p99 µs "
+        "| ECN marks | switch drops | pauses | retransmits |"
+    )
+    print("|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|")
+    for p in doc.get("points", []):
+        print(
+            "| {oversub:.0f} | {wall_ms:.1f} | {dg:.2f} | {ng:.2f} | {pg:.2f} "
+            "| {dp99:.1f} | {np99:.1f} | {pp99:.1f} "
+            "| {marks:.0f} | {drops:.0f} | {pauses:.0f} | {rtx:.0f} |".format(
+                oversub=p.get("oversub", 0),
+                wall_ms=p.get("wall_ms", 0),
+                dg=p.get("dcqcn_goodput_gbps", 0) or 0,
+                ng=p.get("nocc_goodput_gbps", 0) or 0,
+                pg=p.get("pfc_goodput_gbps", 0) or 0,
+                dp99=p.get("dcqcn_p99_fct_us", 0) or 0,
+                np99=p.get("nocc_p99_fct_us", 0) or 0,
+                pp99=p.get("pfc_p99_fct_us", 0) or 0,
+                marks=p.get("ecn_marks", 0) or 0,
+                drops=p.get("switch_drops", 0) or 0,
+                pauses=p.get("pauses", 0) or 0,
+                rtx=p.get("retransmits", 0) or 0,
+            )
+        )
+    total_events = doc.get("total_events", 0)
+    total_wall = doc.get("total_wall_ms", 0)
+    eps = doc.get("events_per_sec", 0) or 0
+    print(
+        f"\nTotal: {total_events:.0f} events in {total_wall:.0f} ms "
+        f"({eps:.0f} events/sec aggregate)."
     )
 
 
@@ -222,6 +265,8 @@ def render(path: str) -> bool:
         render_kv(doc)
     elif mode == "churn":
         render_churn(doc)
+    elif mode == "incast":
+        render_incast(doc)
     else:
         render_fig9(doc)
     return True
@@ -231,7 +276,13 @@ def main() -> int:
     paths = (
         sys.argv[1:]
         if len(sys.argv) > 1
-        else ["BENCH_PR5.json", "BENCH_PR6.json", "BENCH_PR7.json", "BENCH_PR8.json"]
+        else [
+            "BENCH_PR5.json",
+            "BENCH_PR6.json",
+            "BENCH_PR7.json",
+            "BENCH_PR8.json",
+            "BENCH_PR9.json",
+        ]
     )
     ok = True
     for i, path in enumerate(paths):

@@ -99,8 +99,8 @@ echo "ok: fig --id 9 --jobs 2 matches the serial series byte-for-byte"
 echo "== smoke: fig 9 --shards 2 (sharded simulator, byte-identical) =="
 # the conservative-parallel executor must not change a single output
 # byte either — same strip_wall treatment as the --jobs smoke; the real
-# gates (figs 9-12 x4, rc-only/cold ablations, trace property) live in
-# tests/determinism.rs, this is the end-to-end CLI path
+# gates (figs 9-13 x4, rc-only/cold/no-cc/pfc ablations, trace property)
+# live in tests/determinism.rs, this is the end-to-end CLI path
 out9s="$(cargo run --quiet --release -- fig --id 9 --quick --shards 2 2>/dev/null)"
 if [[ "$(strip_wall "$out9s")" != "$(strip_wall "$out9")" ]]; then
     echo "FAIL: fig 9 --shards 2 JSON differs from the serial simulator" >&2
@@ -139,6 +139,36 @@ case "$out12" in
             *) echo "FAIL: fig 12 JSON lacks the fig12_churn series: ${out12:0:160}" >&2; exit 1 ;;
         esac ;;
     *) echo "FAIL: unexpected fig 12 output: ${out12:0:120}" >&2; exit 1 ;;
+esac
+
+echo "== smoke: fig 13 (Clos incast with congestion control) =="
+out13="$(cargo run --quiet --release -- fig --id 13 --quick 2>/dev/null)"
+case "$out13" in
+    '{"budget"'*|'{'*'"command":"fig"'*)
+        case "$out13" in
+            *'"fig13_incast"'*) echo "ok: fig --id 13 printed the fig13_incast series" ;;
+            *) echo "FAIL: fig 13 JSON lacks the fig13_incast series: ${out13:0:160}" >&2; exit 1 ;;
+        esac ;;
+    *) echo "FAIL: unexpected fig 13 output: ${out13:0:120}" >&2; exit 1 ;;
+esac
+
+echo "== smoke: fig 13 --shards 2 (Clos at the coordinator barrier, byte-identical) =="
+out13s="$(cargo run --quiet --release -- fig --id 13 --quick --shards 2 2>/dev/null)"
+if [[ "$(strip_wall "$out13s")" != "$(strip_wall "$out13")" ]]; then
+    echo "FAIL: fig 13 --shards 2 JSON differs from the serial simulator" >&2
+    exit 1
+fi
+echo "ok: fig --id 13 --shards 2 matches the serial simulator byte-for-byte"
+
+echo "== smoke: bench incast (Clos goodput sweep -> JSON) =="
+# --out to a temp file so the smoke never clobbers a tracked BENCH_PR9.json
+incast_tmp="$(mktemp)"
+outin="$(cargo run --quiet --release -- bench incast --quick --out "$incast_tmp" 2>/dev/null)"
+rm -f "$incast_tmp"
+# jsonmini sorts object keys, so "events_per_sec" precedes "mode" in the doc
+case "$outin" in
+    *'"events_per_sec"'*'"mode":"incast"'*) echo "ok: bench incast printed goodput JSON" ;;
+    *) echo "FAIL: unexpected bench incast output: ${outin:0:120}" >&2; exit 1 ;;
 esac
 
 echo "== smoke: bench churn (tenant setup rate -> JSON) =="
