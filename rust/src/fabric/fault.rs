@@ -88,6 +88,14 @@ pub struct FaultConfig {
     pub flaps: Vec<Flap>,
     /// Node soft-restart instants: `(node id, virtual time ns)`.
     pub restarts: Vec<(u32, u64)>,
+    /// Permanent ToR-uplink port deaths: `(tor, uplink, at ns)`. Applied
+    /// coordinator-side at the conservative barrier (switch state is
+    /// barrier-owned), so the timeline is byte-identical at every shard
+    /// count. Requires a Clos topology (`FabricConfig::topo`).
+    pub uplink_deaths: Vec<(u32, u32, u64)>,
+    /// Whole-spine-switch failure windows: `(spine, from ns, until ns)`.
+    /// Uplink `s` of every ToR dies for the window, then revives.
+    pub spine_windows: Vec<(u32, u64, u64)>,
 }
 
 impl Default for FaultConfig {
@@ -101,6 +109,8 @@ impl Default for FaultConfig {
             jitter_ns: (200, 2000),
             flaps: Vec::new(),
             restarts: Vec::new(),
+            uplink_deaths: Vec::new(),
+            spine_windows: Vec::new(),
         }
     }
 }
@@ -114,6 +124,8 @@ impl FaultConfig {
             && self.jitter_p <= 0.0
             && self.flaps.is_empty()
             && self.restarts.is_empty()
+            && self.uplink_deaths.is_empty()
+            && self.spine_windows.is_empty()
     }
 }
 
@@ -282,6 +294,13 @@ mod tests {
         assert!(!FaultConfig { restarts: vec![(0, 5)], ..FaultConfig::default() }.is_null());
         // burst knobs alone never fire without a drop probability
         assert!(FaultConfig { burst_p: 1.0, ..FaultConfig::default() }.is_null());
+        // switch-level events are real faults too
+        assert!(
+            !FaultConfig { uplink_deaths: vec![(0, 1, 100)], ..FaultConfig::default() }.is_null()
+        );
+        assert!(
+            !FaultConfig { spine_windows: vec![(0, 100, 200)], ..FaultConfig::default() }.is_null()
+        );
     }
 
     #[test]

@@ -128,6 +128,14 @@ pub struct Qp {
     pub cc_last_update: Ns,
     /// Last accepted rate cut (CNP coalescing gate).
     pub cc_last_cut: Ns,
+    /// ECMP path salt: stamped on every frame this QP originates, folded
+    /// into the Clos rendezvous pick. Bumped by the blackhole detector
+    /// (see `shard.rs`) to move the flow off a dead path before the retry
+    /// budget burns out. Never reset — the flow stays on its escape path.
+    pub path_salt: u32,
+    /// Consecutive ack-timeouts since the last successful completion on
+    /// this QP (the blackhole detector's evidence counter).
+    pub timeout_streak: u32,
 }
 
 impl Qp {
@@ -166,6 +174,8 @@ impl Qp {
             cc_paced_until: Ns::ZERO,
             cc_last_update: Ns::ZERO,
             cc_last_cut: Ns::ZERO,
+            path_salt: 0,
+            timeout_streak: 0,
         }
     }
 
@@ -291,6 +301,9 @@ impl Qp {
         self.cc_paced_until = Ns::ZERO;
         self.cc_last_update = Ns::ZERO;
         self.cc_last_cut = Ns::ZERO;
+        // the detector's evidence resets with the NIC; the path salt is
+        // link state, not NIC state, so the flow keeps its escape path
+        self.timeout_streak = 0;
     }
 
     /// Tear the QP down: rings freed, context deallocated, peer binding

@@ -40,7 +40,7 @@ use super::sim::{FabricConfig, Notification};
 use super::srq::Srq;
 use super::switchfab::{Port, FRAME_OVERHEAD_BYTES, SWITCH_BUFFER_BYTES};
 use super::time::{wire_time, Ns};
-use super::topo::{ecmp_hash, CcMode};
+use super::topo::{ecmp_hash, pick_uplink, CcMode};
 use super::types::{Cqn, DenseTable, NodeId, QpTransport, Qpn, Srqn, Verb, WcStatus};
 use super::wqe::{Cqe, CqeKind, RecvWr, SendWr};
 
@@ -240,6 +240,10 @@ pub struct NodeState {
     /// Frames that arrived addressed to a destroyed QP and died at the
     /// NIC (tenant-isolation counter for the QP reuse pool).
     pub frames_to_destroyed: u64,
+    /// Blackhole-detector firings on this node's QPs: `blackhole_k`
+    /// consecutive ACK timeouts on one QP re-salted its ECMP pick
+    /// (DESIGN.md §15). Zero unless a Clos topology with `repath` is on.
+    pub repaths: u64,
 }
 
 impl NodeState {
@@ -270,6 +274,7 @@ impl NodeState {
             restarts: 0,
             rx_data_bytes: 0,
             frames_to_destroyed: 0,
+            repaths: 0,
         }
     }
 
@@ -313,6 +318,13 @@ pub struct Shard {
     /// host-side pause gate that chains switch backpressure down to the
     /// sending NIC. Refreshed by the coordinator at every barrier.
     uplink_snap: Vec<Ns>,
+    /// Barrier snapshot of the Clos routing mask ([`super::topo::Clos::route_live`],
+    /// same `tor * uplinks + u` indexing): which uplinks the converged
+    /// route tables still use. Shards consult it so host-side path picks
+    /// (the PFC uplink gate) agree with the switch's own rendezvous pick.
+    /// Empty until a topology is installed; refreshed by the coordinator
+    /// only when the route epoch changes.
+    route_live: Vec<bool>,
     /// Per-local-node fault-plan forks (None entries without a plan).
     faults: Vec<Option<FaultState>>,
     faults_on: bool,
@@ -357,6 +369,10 @@ impl Shard {
             emit_seq: vec![0; nodes.len()],
             ingress_snap: vec![Ns::ZERO; cfg.nodes],
             uplink_snap: Vec::new(),
+            route_live: match cfg.topo {
+                Some(t) => vec![true; t.tors * t.uplinks()],
+                None => Vec::new(),
+            },
             nodes,
             // a Clos fabric drops frames at full ports (tail-drop in the
             // Dcqcn/NoCc modes), so the RC reliability machinery — go-
@@ -437,6 +453,15 @@ impl Shard {
     pub fn set_uplink_snap(&mut self, snap: &[Ns]) {
         self.uplink_snap.clear();
         self.uplink_snap.extend_from_slice(snap);
+    }
+
+    /// Refresh the barrier snapshot of the Clos routing mask. Called by
+    /// the coordinator whenever [`super::topo::Clos::reconverge`] bumps
+    /// the route epoch, so every shard count sees the same mask at the
+    /// same barrier.
+    pub fn set_route_live(&mut self, live: &[bool]) {
+        self.route_live.clear();
+        self.route_live.extend_from_slice(live);
     }
 
     /// Push an absorbed cross-shard frame at its delivery time. The
@@ -574,10 +599,13 @@ impl Shard {
             self.ingress_snap[frame.dst.0 as usize].saturating_sub(buffer_time + base);
         // Clos PFC mode: the first-hop pause chains down to the host NIC.
         // Gate on the barrier snapshot of the ToR-uplink port this frame's
-        // ECMP hash selects — same window-exactness argument as above (the
-        // uplink horizon only grows by frames absorbed AFTER the snapshot,
-        // which arrive next window). Deterministic: the snapshot is a
-        // barrier-side fact and the hash is pure.
+        // rendezvous pick selects — same window-exactness argument as
+        // above (the uplink horizon only grows by frames absorbed AFTER
+        // the snapshot, which arrive next window). Deterministic: both
+        // snapshots (busy horizons and routing mask) are barrier-side
+        // facts and the pick is pure. Dead ports snapshot as idle and the
+        // mask excludes them once converged, so a paused flow can never
+        // wait forever on a port that will never drain (DESIGN.md §15).
         if let Some(t) = self.cfg.topo {
             if t.mode == CcMode::Pfc && !self.uplink_snap.is_empty() {
                 let hosts = t.hosts_per_tor.max(1);
@@ -585,8 +613,9 @@ impl Shard {
                 let dst_tor = frame.dst.0 as usize / hosts;
                 if src_tor != dst_tor {
                     let uplinks = t.uplinks();
-                    let u = (ecmp_hash(frame.src, frame.dst, frame.src_qpn, frame.dst_qpn)
-                        % uplinks as u64) as usize;
+                    let hash = ecmp_hash(frame.src, frame.dst, frame.src_qpn, frame.dst_qpn);
+                    let live = &self.route_live[src_tor * uplinks..][..uplinks];
+                    let u = pick_uplink(hash, frame.path_salt, live);
                     if let Some(&busy) = self.uplink_snap.get(src_tor * uplinks + u) {
                         pfc_gate = pfc_gate.max(busy.saturating_sub(buffer_time + base));
                     }
@@ -777,8 +806,18 @@ impl Shard {
                 len,
                 wr_id,
                 idx,
-            } => self
-                .read_respond(node, requester, requester_qpn, responder_qpn, msg_id, len, wr_id, idx),
+                path_salt,
+            } => self.read_respond(
+                node,
+                requester,
+                requester_qpn,
+                responder_qpn,
+                msg_id,
+                len,
+                wr_id,
+                idx,
+                path_salt,
+            ),
             WorkItem::Retransmit { qpn, msg_id } => self.retransmit_msg(node, qpn, msg_id),
         }
     }
@@ -828,7 +867,7 @@ impl Shard {
         }
 
         // Pull the next WR (`can_issue` held above; nothing ran since).
-        let (wr, peer, transport, msg_seq) = {
+        let (wr, peer, transport, msg_seq, path_salt) = {
             let n = self.node_mut(node);
             let qp = n.qps.get_mut(qpn.0).expect("checked above");
             let wr = qp.sq.pop_front().unwrap();
@@ -844,7 +883,7 @@ impl Shard {
             } else {
                 0
             };
-            (wr, peer, qp.transport, msg_seq)
+            (wr, peer, qp.transport, msg_seq, qp.path_salt)
         };
         let (peer_node, peer_qpn) = match peer {
             Some(p) => p,
@@ -898,6 +937,7 @@ impl Shard {
                     rkey: wr.rkey,
                     raddr: wr.raddr,
                     ecn: false,
+                    path_salt,
                 };
                 cost += nic.engine_frame_ns;
                 let link_at = self.stage_frame(self.clock + Ns(cost), frame);
@@ -934,6 +974,7 @@ impl Shard {
                     rkey: wr.rkey,
                     raddr: wr.raddr,
                     ecn: false,
+                    path_salt,
                 };
                 let mut handoff = self.clock + Ns(cost);
                 let mut last_link = self.clock;
@@ -1021,6 +1062,7 @@ impl Shard {
         remaining: u64,
         wr_id: u64,
         idx: u64,
+        path_salt: u32,
     ) -> u64 {
         let nic = self.cfg.nic;
         let mtu = self.cfg.mtu;
@@ -1055,6 +1097,7 @@ impl Shard {
             rkey: None,
             raddr: 0,
             ecn: false,
+            path_salt,
         };
         self.stage_frame(self.clock + Ns(cost), frame);
 
@@ -1067,6 +1110,7 @@ impl Shard {
                 len: left,
                 wr_id,
                 idx: idx + 1,
+                path_salt,
             });
         }
         cost
@@ -1180,6 +1224,7 @@ impl Shard {
                     len: frame.msg_len,
                     wr_id: frame.wr_id,
                     idx: 0,
+                    path_salt: frame.path_salt,
                 });
             }
             FrameKind::ReadResp => {
@@ -1442,6 +1487,10 @@ impl Shard {
             // CNP echo: the last data frame's congestion mark rides the
             // message's ACK back to the requester's DCQCN rate limiter
             ecn: frame.ecn,
+            // salt echo: the ACK retraces the (possibly repathed) pick so
+            // a requester that escaped a dead uplink hears back on a
+            // live reverse path too
+            path_salt: frame.path_salt,
         };
         self.stage_frame(self.clock + Ns(cost), ack);
         cost
@@ -1468,6 +1517,7 @@ impl Shard {
             rkey: None,
             raddr: 0,
             ecn: false,
+            path_salt: frame.path_salt,
         };
         self.stage_frame(self.clock, nak);
     }
@@ -1496,6 +1546,7 @@ impl Shard {
             rkey: None,
             raddr: 0,
             ecn: false,
+            path_salt: frame.path_salt,
         };
         self.stage_frame(self.clock, nak);
     }
@@ -1515,6 +1566,8 @@ impl Shard {
             let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
             qp.outstanding = qp.outstanding.saturating_sub(1);
             qp.completed += 1;
+            // the path delivered: the blackhole detector's evidence resets
+            qp.timeout_streak = 0;
             if frame.ecn {
                 if let Some(t) = cc {
                     // settle any recovery earned so far, then cut
@@ -1559,6 +1612,7 @@ impl Shard {
             let qp = self.node_mut(node).qps.get_mut(inf.qpn.0).unwrap();
             qp.outstanding = qp.outstanding.saturating_sub(1);
             qp.completed += 1;
+            qp.timeout_streak = 0;
             qp.send_cq
         };
         self.completed_bytes += inf.wr.len;
@@ -1780,6 +1834,35 @@ impl Shard {
             self.complete_retry_exceeded(node, msg_id);
             return;
         }
+        // Blackhole detector (DESIGN.md §15): `blackhole_k` consecutive
+        // ACK timeouts on one QP — with zero successful completions in
+        // between — are read as "this ECMP pick leads into a dead port",
+        // not as congestion. Re-salt the QP's rendezvous pick BEFORE the
+        // retransmission below stages its frames, so the retry budget is
+        // spent probing paths instead of hammering one blackhole until
+        // RetryExceeded. The streak resets on every delivered ACK / READ
+        // completion ([`Shard::rx_ack`], [`Shard::complete_read`]).
+        if let Some(t) = self.cfg.topo {
+            if t.repath && t.blackhole_k > 0 {
+                let n = self.node_mut(node);
+                let fired = match n.qps.get_mut(qpn.0) {
+                    Some(qp) => {
+                        qp.timeout_streak += 1;
+                        if qp.timeout_streak >= t.blackhole_k {
+                            qp.path_salt += 1;
+                            qp.timeout_streak = 0;
+                            true
+                        } else {
+                            false
+                        }
+                    }
+                    None => false,
+                };
+                if fired {
+                    n.repaths += 1;
+                }
+            }
+        }
         // bump the attempt NOW, not when the engine gets to the work item:
         // a second timer armed under the same attempt (the RNR path arms
         // one alongside the issue-time timer) must see the mismatch and
@@ -1808,6 +1891,10 @@ impl Shard {
         else {
             return 0;
         };
+        // read the CURRENT salt, not the one the original transmission
+        // used: if the blackhole detector re-salted this QP, every frame
+        // of this attempt takes the escaped path
+        let path_salt = self.node(node).qps.get(qpn.0).map_or(0, |q| q.path_salt);
         self.node_mut(node).retransmits += 1;
         let mut cost = nic.engine_wqe_ns;
         cost += self.icm_touch(node, IcmKey::Qpc(qpn.0));
@@ -1833,6 +1920,7 @@ impl Shard {
                     rkey: wr.rkey,
                     raddr: wr.raddr,
                     ecn: false,
+                    path_salt,
                 };
                 cost += nic.engine_frame_ns;
                 let link_at = self.stage_frame(self.clock + Ns(cost), frame);
@@ -1876,6 +1964,7 @@ impl Shard {
                         rkey: wr.rkey,
                         raddr: wr.raddr,
                         ecn: false,
+                        path_salt,
                     };
                     last_bytes = bytes;
                     last_link = self.stage_frame(handoff, frame);

@@ -144,6 +144,26 @@ pub enum Notification {
     },
 }
 
+/// A scheduled switch-level topology fault (DESIGN.md §15), built from
+/// [`FaultConfig::uplink_deaths`] / [`FaultConfig::spine_windows`] and
+/// applied to the coordinator-owned [`Clos`] at window barriers — before
+/// any of that window's frames are absorbed. Window boundaries are
+/// shard-count-invariant, so failure/recovery instants land identically
+/// under every shard count (quantized to the barrier, ≤ one window).
+#[derive(Clone, Copy, Debug)]
+enum TopoEvent {
+    /// Permanent death of one ToR uplink port.
+    UplinkDown { tor: u32, u: u32 },
+    /// Whole-spine failure window opens.
+    SpineDown(u32),
+    /// Whole-spine failure window closes.
+    SpineUp(u32),
+    /// Control-plane reconvergence: fold the physical truth into the
+    /// routing mask ([`Clos::reconverge`]), `reroute_lag_ns` after the
+    /// change it reacts to. Not scheduled when `topo.repath` is off.
+    Reconverge,
+}
+
 /// The simulator: shard coordinator + verbs API.
 pub struct Sim {
     /// The configuration the fabric was built from.
@@ -174,6 +194,10 @@ pub struct Sim {
     snap_buf: Vec<Ns>,
     /// Scratch: ToR-uplink busy-horizon snapshot (PFC mode only).
     up_snap_buf: Vec<Ns>,
+    /// Scheduled switch-level faults, sorted by `(time, kind rank)`;
+    /// `topo_cursor` marks how far the barriers have applied them.
+    topo_events: Vec<(Ns, u8, TopoEvent)>,
+    topo_cursor: usize,
     /// Completed payload bytes (data verbs), for quick aggregate throughput.
     pub completed_bytes: u64,
     /// Completed data messages (companion counter).
@@ -227,6 +251,8 @@ impl Sim {
             pending_resync: Vec::new(),
             note_buf: Vec::new(),
             up_snap_buf: Vec::new(),
+            topo_events: Vec::new(),
+            topo_cursor: 0,
             completed_bytes: 0,
             completed_msgs: 0,
             steps: 0,
@@ -258,6 +284,36 @@ impl Sim {
         }
         for sh in &mut self.shards {
             sh.install_fault_forks(&cfg);
+        }
+        // Switch-level faults need a Clos to act on; on the single-switch
+        // fabric they are inert (the plan still arms the RC machinery).
+        if self.clos.is_some() && (!cfg.uplink_deaths.is_empty() || !cfg.spine_windows.is_empty()) {
+            let (repath, lag) = self
+                .cfg
+                .topo
+                .map(|t| (t.repath, t.reroute_lag_ns))
+                .unwrap_or((false, 0));
+            let mut ev: Vec<(Ns, u8, TopoEvent)> = Vec::new();
+            for &(tor, u, at) in &cfg.uplink_deaths {
+                ev.push((Ns(at), 1, TopoEvent::UplinkDown { tor, u }));
+                if repath {
+                    ev.push((Ns(at + lag), 3, TopoEvent::Reconverge));
+                }
+            }
+            for &(s, from, until) in &cfg.spine_windows {
+                debug_assert!(from < until, "empty spine window");
+                ev.push((Ns(from), 2, TopoEvent::SpineDown(s)));
+                ev.push((Ns(until), 0, TopoEvent::SpineUp(s)));
+                if repath {
+                    ev.push((Ns(from + lag), 3, TopoEvent::Reconverge));
+                    ev.push((Ns(until + lag), 3, TopoEvent::Reconverge));
+                }
+            }
+            // stable sort: same-instant ties resolve in config order —
+            // revive before kill before reconverge, so a window closing
+            // exactly when another opens never leaves a phantom death
+            ev.sort_by_key(|&(at, rank, _)| (at.0, rank));
+            self.topo_events = ev;
         }
         self.faults_on = true;
     }
@@ -483,6 +539,10 @@ impl Sim {
         let Some(t) = self.next_event_time() else { return false };
         let w = self.window;
         let end = Ns(t.0 / w * w + w);
+        // switch-level faults apply BEFORE absorption, so every frame of
+        // this window routes against the same topology — on every shard
+        // count (the barrier grid is shard-count-invariant)
+        self.apply_topo_events(end);
         self.absorb_wire(end);
         self.refresh_snaps();
         self.run_shards(end);
@@ -504,6 +564,39 @@ impl Sim {
             }
         }
         t
+    }
+
+    /// Apply every scheduled switch-level fault with `at < end` to the
+    /// coordinator-owned Clos, then — if a reconvergence changed the
+    /// routing mask — push the fresh mask to every shard (their host-side
+    /// path picks must agree with the switch's own rendezvous pick).
+    fn apply_topo_events(&mut self, end: Ns) {
+        if self.topo_cursor >= self.topo_events.len() {
+            return;
+        }
+        let Some(clos) = self.clos.as_mut() else {
+            self.topo_cursor = self.topo_events.len();
+            return;
+        };
+        let mut remasked = false;
+        while let Some(&(at, _, ev)) = self.topo_events.get(self.topo_cursor) {
+            if at >= end {
+                break;
+            }
+            self.topo_cursor += 1;
+            match ev {
+                TopoEvent::UplinkDown { tor, u } => clos.kill_uplink(tor as usize, u as usize),
+                TopoEvent::SpineDown(s) => clos.kill_spine(s as usize),
+                TopoEvent::SpineUp(s) => clos.revive_spine(s as usize),
+                TopoEvent::Reconverge => remasked |= clos.reconverge(),
+            }
+        }
+        if remasked {
+            let live = clos.route_live().to_vec();
+            for sh in &mut self.shards {
+                sh.set_route_live(&live);
+            }
+        }
     }
 
     /// Apply last window's staged RC sequence resyncs (already sorted by
@@ -544,6 +637,7 @@ impl Sim {
                         frame.dst,
                         frame.src_qpn,
                         frame.dst_qpn,
+                        frame.path_salt,
                         frame.bytes,
                         frame.kind.carries_data(),
                         dst_busy,
@@ -702,6 +796,18 @@ impl Sim {
     /// The Clos switch tiers, when a topology is installed.
     pub fn clos(&self) -> Option<&Clos> {
         self.clos.as_ref()
+    }
+
+    /// Blackhole-detector firings summed over every node (see
+    /// [`NodeState::repaths`]). Zero without a repathing Clos.
+    pub fn repaths(&self) -> u64 {
+        self.nodes().map(|n| n.repaths).sum()
+    }
+
+    /// The Clos routing-mask epoch: bumped by each reconvergence that
+    /// actually changed the mask. 0 on the single-switch fabric.
+    pub fn route_epoch(&self) -> u32 {
+        self.clos.as_ref().map(|c| c.route_epoch()).unwrap_or(0)
     }
 
     /// Enable/disable the `(time, node, kind)` event pop trace on every

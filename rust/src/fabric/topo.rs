@@ -40,6 +40,23 @@
 //!   exceeds the buffer pauses (its service start is pushed back), the
 //!   pause chains hop by hop toward the hosts, and head-of-line blocking
 //!   emerges naturally from FIFO port service. No drops, no marks.
+//!
+//! ### Failure survival (DESIGN.md §15)
+//!
+//! Switch-level faults ([`super::fault::FaultConfig::uplink_deaths`] /
+//! `spine_windows`) mark uplink ports dead ([`Clos::kill_uplink`] /
+//! [`Clos::kill_spine`]). Path selection is *rendezvous* (highest-random-
+//! weight) hashing over the live-port mask ([`pick_uplink`]): killing or
+//! reviving one port only moves the flows whose argmax that port was —
+//! every other flow keeps its path, so failure reconvergence never
+//! reorders healthy QPs. The mask itself lags the failure by
+//! [`TopoConfig::reroute_lag_ns`] (control-plane reconvergence); until it
+//! catches up, frames picked onto a dead port drop at the uplink
+//! ([`ClosStats::blackhole_drops`]) and the PR-4 go-back-N machinery
+//! recovers them. Each mask change bumps [`Clos::route_epoch`]. Endpoints
+//! escape faster than the fabric reconverges via the per-QP blackhole
+//! detector (K consecutive ack-timeouts bump the QP's `path_salt`, which
+//! reseeds the rendezvous pick — see `shard.rs`).
 
 use super::switchfab::{Port, FRAME_OVERHEAD_BYTES};
 use super::time::{wire_time, Ns};
@@ -91,6 +108,22 @@ pub struct TopoConfig {
     pub cc_recovery_ns: u64,
     /// CNP coalescing: a QP cuts at most once per this interval.
     pub cc_cnp_gap_ns: u64,
+    /// Failure reconvergence: when true, the ECMP live mask excludes dead
+    /// uplinks (after [`TopoConfig::reroute_lag_ns`]) and the endpoint
+    /// blackhole detector is armed. False = the fig-14 ablation: flows
+    /// stay pinned to their original path forever.
+    pub repath: bool,
+    /// Blackhole detector threshold: a QP that sees this many
+    /// *consecutive* ack-timeouts bumps its path salt and retransmits on
+    /// a fresh rendezvous pick, before the retry budget burns out.
+    /// 0 disables the detector.
+    pub blackhole_k: u32,
+    /// Delay between a port dying and the routing mask excluding it — the
+    /// fabric's control-plane reconvergence time. Kept long relative to
+    /// the RC retransmit timeout so the per-QP detector is what saves
+    /// in-flight flows (the paper's service-layer pitch), with mask
+    /// reconvergence as the slow backstop for future flows.
+    pub reroute_lag_ns: u64,
 }
 
 impl Default for TopoConfig {
@@ -107,6 +140,9 @@ impl Default for TopoConfig {
             cc_ai_frac: 1.0 / 16.0,
             cc_recovery_ns: 55_000,
             cc_cnp_gap_ns: 50_000,
+            repath: true,
+            blackhole_k: 3,
+            reroute_lag_ns: 200_000,
         }
     }
 }
@@ -138,6 +174,41 @@ pub fn ecmp_hash(src: NodeId, dst: NodeId, src_qpn: Qpn, dst_qpn: Qpn) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Rendezvous (highest-random-weight) uplink pick for one flow: among the
+/// ports marked live, take the one whose per-(flow, salt, port) weight is
+/// largest. Stability is the point — killing or reviving a port only
+/// moves the flows whose argmax that port was, so ECMP reconvergence
+/// after a failure never touches a healthy flow's path (no reordering,
+/// no spurious go-back-N). `salt` reseeds the weights: the endpoint
+/// blackhole detector bumps a QP's salt to escape a dead path before the
+/// routing mask has reconverged. Pure function, so every shard count and
+/// every replay picks identically. Falls back to `hash % len` over *all*
+/// ports when nothing is live (the frame then blackhole-drops at the
+/// dead uplink — a totally cut ToR stays cut).
+pub fn pick_uplink(hash: u64, salt: u32, live: &[bool]) -> usize {
+    let n = live.len().max(1);
+    let key = hash ^ (salt as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let mut best: Option<(u64, usize)> = None;
+    for (u, &ok) in live.iter().enumerate() {
+        if !ok {
+            continue;
+        }
+        // splitmix64 finalizer over (flow key, port): independent weight
+        // per port, so the argmax is uniform and per-port-stable
+        let mut z = key ^ (u as u64 + 1).wrapping_mul(0xd6e8_feb8_6659_fd93);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        if best.map(|(w, _)| z > w).unwrap_or(true) {
+            best = Some((z, u));
+        }
+    }
+    match best {
+        Some((_, u)) => u,
+        None => (key % n as u64) as usize,
+    }
+}
+
 /// Aggregate Clos counters (fig-13 columns).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ClosStats {
@@ -148,6 +219,9 @@ pub struct ClosStats {
     /// Pause events: a frame whose port service was pushed back by a
     /// congested downstream queue (`Pfc` only).
     pub pauses: u64,
+    /// Frames that picked a dead uplink (before the routing mask
+    /// reconverged, or on a totally cut ToR) and vanished into it.
+    pub blackhole_drops: u64,
 }
 
 /// Coordinator-owned Clos switch state: one [`Port`] per ToR uplink and
@@ -170,6 +244,19 @@ pub struct Clos {
     tor_up: Vec<Port>,
     /// Spine downlink ports, indexed `[spine * tors + dst_tor]`.
     spine_down: Vec<Port>,
+    /// Death refcount per uplink port (same indexing as `tor_up`): a
+    /// permanent uplink death and a spine failure window can overlap on
+    /// one port, so revival decrements instead of clearing. `> 0` = the
+    /// port eats frames *now* (physical truth).
+    up_dead: Vec<u8>,
+    /// ECMP selection mask (same indexing): what the *routing* believes
+    /// is alive. Lags `up_dead` by the reconvergence delay — the window
+    /// where in-flight flows blackhole and the endpoint detector earns
+    /// its keep. All-true when `TopoConfig::repath` is off.
+    route_live: Vec<bool>,
+    /// Bumped on every `route_live` change (the repath epoch: replays and
+    /// the determinism suite gate on it).
+    route_epoch: u32,
     /// Aggregate marking/drop/pause counters.
     pub stats: ClosStats,
 }
@@ -199,6 +286,9 @@ impl Clos {
             buffer: wire_time(topo.buffer_bytes, gbps),
             tor_up: vec![Port::default(); tors * uplinks],
             spine_down: vec![Port::default(); tors * uplinks],
+            up_dead: vec![0; tors * uplinks],
+            route_live: vec![true; tors * uplinks],
+            route_epoch: 0,
             stats: ClosStats::default(),
         }
     }
@@ -218,9 +308,89 @@ impl Clos {
         self.uplinks
     }
 
-    /// ECMP uplink/spine index for a flow (pure; same on every shard count).
+    /// ECMP uplink/spine index for an unsalted flow under the current
+    /// routing mask (same on every shard count; see [`pick_uplink`]).
     pub fn path_of(&self, src: NodeId, dst: NodeId, src_qpn: Qpn, dst_qpn: Qpn) -> usize {
-        (ecmp_hash(src, dst, src_qpn, dst_qpn) % self.uplinks as u64) as usize
+        let st = self.tor_of(src);
+        pick_uplink(
+            ecmp_hash(src, dst, src_qpn, dst_qpn),
+            0,
+            &self.route_live[st * self.uplinks..][..self.uplinks],
+        )
+    }
+
+    /// Kill one ToR uplink port (refcounted: overlapping spine windows
+    /// and permanent deaths stack). Takes effect on the *data* plane
+    /// immediately; the routing mask follows at the next
+    /// [`Clos::reconverge`].
+    pub fn kill_uplink(&mut self, tor: usize, u: usize) {
+        if tor < self.tors && u < self.uplinks {
+            let i = tor * self.uplinks + u;
+            self.up_dead[i] = self.up_dead[i].saturating_add(1);
+        }
+    }
+
+    /// Undo one [`Clos::kill_uplink`] on a port.
+    pub fn revive_uplink(&mut self, tor: usize, u: usize) {
+        if tor < self.tors && u < self.uplinks {
+            let i = tor * self.uplinks + u;
+            self.up_dead[i] = self.up_dead[i].saturating_sub(1);
+        }
+    }
+
+    /// Whole-spine failure: uplink `s` of every ToR dies (spine `s` is
+    /// only reachable through those ports, so this cuts the switch out
+    /// of the fabric entirely).
+    pub fn kill_spine(&mut self, s: usize) {
+        for t in 0..self.tors {
+            self.kill_uplink(t, s);
+        }
+    }
+
+    /// Spine `s` comes back.
+    pub fn revive_spine(&mut self, s: usize) {
+        for t in 0..self.tors {
+            self.revive_uplink(t, s);
+        }
+    }
+
+    /// Routing reconvergence: fold the current death state into the ECMP
+    /// selection mask; bumps the repath epoch and returns true when the
+    /// mask actually changed. No-op (mask stays all-true) when
+    /// `TopoConfig::repath` is off — the fig-14 ablation.
+    pub fn reconverge(&mut self) -> bool {
+        if !self.topo.repath {
+            return false;
+        }
+        let mut changed = false;
+        for i in 0..self.up_dead.len() {
+            let live = self.up_dead[i] == 0;
+            if self.route_live[i] != live {
+                self.route_live[i] = live;
+                changed = true;
+            }
+        }
+        if changed {
+            self.route_epoch += 1;
+        }
+        changed
+    }
+
+    /// Current repath epoch (0 until the first reconvergence).
+    pub fn route_epoch(&self) -> u32 {
+        self.route_epoch
+    }
+
+    /// The full ECMP selection mask, indexed `[tor * uplinks + u]`
+    /// (snapshotted into each shard at the barrier for the PFC gate's
+    /// path pick).
+    pub fn route_live(&self) -> &[bool] {
+        &self.route_live
+    }
+
+    /// True when this uplink port currently eats frames.
+    pub fn uplink_dead(&self, tor: usize, u: usize) -> bool {
+        tor < self.tors && u < self.uplinks && self.up_dead[tor * self.uplinks + u] > 0
     }
 
     /// ECN threshold as backlog time at line rate (the destination-ingress
@@ -240,18 +410,30 @@ impl Clos {
     /// without racing on the live ports.
     pub fn uplink_snapshot_into(&self, out: &mut Vec<Ns>) {
         out.clear();
-        out.extend(self.tor_up.iter().map(|p| p.busy_until()));
+        // a dead port's horizon is frozen at its moment of death; letting
+        // the PFC gate keep pausing on it would deadlock senders forever,
+        // so dead ports snapshot as idle (their frames die at the uplink
+        // instead — see `route`)
+        out.extend(
+            self.tor_up
+                .iter()
+                .zip(self.up_dead.iter())
+                .map(|(p, &d)| if d > 0 { Ns::ZERO } else { p.busy_until() }),
+        );
     }
 
     /// Route one cross-ToR frame through uplink + spine, in the global
     /// staged-frame order. `link_at` is the first bit arriving at the
     /// source ToR (the shard already paid host egress + switch latency);
-    /// `dst_ingress_busy` is the destination host-ingress horizon, used by
-    /// the PFC chain's last gate. Same-ToR frames must not be routed here.
+    /// `salt` is the sending QP's path salt (0 until its blackhole
+    /// detector fires); `dst_ingress_busy` is the destination host-ingress
+    /// horizon, used by the PFC chain's last gate. Same-ToR frames must
+    /// not be routed here.
     ///
     /// Returns where/whether the frame reaches the destination ingress;
     /// `carries_data` gates ECN marking (marking an ACK would fabricate a
     /// CNP at a node that never sent data).
+    #[allow(clippy::too_many_arguments)]
     pub fn route(
         &mut self,
         link_at: Ns,
@@ -259,15 +441,26 @@ impl Clos {
         dst: NodeId,
         src_qpn: Qpn,
         dst_qpn: Qpn,
+        salt: u32,
         payload_bytes: u64,
         carries_data: bool,
         dst_ingress_busy: Ns,
     ) -> ClosVerdict {
         let wire_bytes = payload_bytes + FRAME_OVERHEAD_BYTES;
         let frame_time = wire_time(wire_bytes, self.gbps);
-        let u = self.path_of(src, dst, src_qpn, dst_qpn);
         let st = self.tor_of(src);
         let dt = self.tor_of(dst);
+        let u = pick_uplink(
+            ecmp_hash(src, dst, src_qpn, dst_qpn),
+            salt,
+            &self.route_live[st * self.uplinks..][..self.uplinks],
+        );
+        // dead port (mask not yet reconverged, or the ToR is totally
+        // cut): the frame vanishes at the uplink; go-back-N recovers it
+        if self.up_dead[st * self.uplinks + u] > 0 {
+            self.stats.blackhole_drops += 1;
+            return ClosVerdict::Drop;
+        }
         let mut marked = false;
 
         // --- hop 1: source ToR uplink `u` (lands on spine `u`) ---
@@ -391,11 +584,11 @@ mod tests {
     fn same_path_routes_serialize_cross_tor() {
         let mut c = Clos::new(24, 40.0, topo(8, CcMode::NoCc));
         assert_eq!(c.uplinks(), 1);
-        let d1 = match c.route(Ns(0), NodeId(8), NodeId(0), Qpn(1), Qpn(2), 4096, true, Ns(0)) {
+        let d1 = match c.route(Ns(0), NodeId(8), NodeId(0), Qpn(1), Qpn(2), 0, 4096, true, Ns(0)) {
             ClosVerdict::Deliver(t, _) => t,
             ClosVerdict::Drop => panic!("dropped"),
         };
-        let d2 = match c.route(Ns(0), NodeId(9), NodeId(1), Qpn(1), Qpn(2), 4096, true, Ns(0)) {
+        let d2 = match c.route(Ns(0), NodeId(9), NodeId(1), Qpn(1), Qpn(2), 0, 4096, true, Ns(0)) {
             ClosVerdict::Deliver(t, _) => t,
             ClosVerdict::Drop => panic!("dropped"),
         };
@@ -417,6 +610,7 @@ mod tests {
                 NodeId(0),
                 Qpn(1),
                 Qpn(2),
+                0,
                 4096,
                 true,
                 Ns(0),
@@ -444,6 +638,7 @@ mod tests {
                 NodeId(0),
                 Qpn(1),
                 Qpn(2),
+                0,
                 4096,
                 true,
                 Ns(0),
@@ -454,5 +649,102 @@ mod tests {
         }
         assert_eq!(c.stats.switch_drops, 0);
         assert_eq!(c.stats.ecn_marks, 0, "PFC ablation does not mark");
+    }
+
+    #[test]
+    fn rendezvous_pick_is_stable_under_port_death() {
+        // killing one port must only move the flows that used it
+        let all = vec![true; 4];
+        let mut masked = all.clone();
+        masked[2] = false;
+        let mut moved = 0;
+        for f in 0..256u64 {
+            let h = ecmp_hash(NodeId(8), NodeId(0), Qpn(f as u32), Qpn(1));
+            let before = pick_uplink(h, 0, &all);
+            let after = pick_uplink(h, 0, &masked);
+            if before != 2 {
+                assert_eq!(before, after, "healthy flow {f} moved");
+            } else {
+                assert_ne!(after, 2, "flow {f} still on the dead port");
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "no flow ever used port 2");
+    }
+
+    #[test]
+    fn salt_escapes_a_port_and_spreads() {
+        // bumping the salt reshuffles the pick — within a few bumps every
+        // flow escapes any single port even with the mask unconverged
+        let all = vec![true; 2];
+        for f in 0..64u64 {
+            let h = ecmp_hash(NodeId(8), NodeId(0), Qpn(f as u32), Qpn(1));
+            let first = pick_uplink(h, 0, &all);
+            let escaped = (1..=8u32).any(|s| pick_uplink(h, s, &all) != first);
+            assert!(escaped, "flow {f} pinned across 8 salts");
+        }
+    }
+
+    #[test]
+    fn kill_reconverge_and_epoch() {
+        let mut c = Clos::new(24, 40.0, topo(4, CcMode::Dcqcn));
+        assert_eq!(c.uplinks(), 2);
+        assert_eq!(c.route_epoch(), 0);
+        c.kill_uplink(0, 1);
+        // data plane dies immediately, routing mask lags until reconverge
+        assert!(c.uplink_dead(0, 1));
+        assert!(c.route_live()[1]);
+        assert!(c.reconverge());
+        assert_eq!(c.route_epoch(), 1);
+        assert!(!c.route_live()[1]);
+        // idempotent: nothing changed, no epoch bump
+        assert!(!c.reconverge());
+        assert_eq!(c.route_epoch(), 1);
+        // overlapping spine window on the same port: refcounted
+        c.kill_spine(1);
+        c.revive_spine(1);
+        assert!(c.uplink_dead(0, 1), "permanent death must survive the window");
+        c.revive_uplink(0, 1);
+        assert!(c.reconverge());
+        assert_eq!(c.route_epoch(), 2);
+        assert!(c.route_live()[1]);
+    }
+
+    #[test]
+    fn repath_off_mask_never_moves() {
+        let mut cfg = topo(4, CcMode::Dcqcn);
+        cfg.repath = false;
+        let mut c = Clos::new(24, 40.0, cfg);
+        c.kill_spine(0);
+        assert!(!c.reconverge());
+        assert_eq!(c.route_epoch(), 0);
+        assert!(c.route_live().iter().all(|&l| l), "ablation mask must stay full");
+        // frames picked onto the dead spine blackhole instead
+        let mut holes = 0;
+        for q in 0..32u32 {
+            if let ClosVerdict::Drop =
+                c.route(Ns(0), NodeId(8), NodeId(0), Qpn(q), Qpn(1), 0, 4096, true, Ns(0))
+            {
+                holes += 1;
+            }
+        }
+        assert!(holes > 0, "no flow hashed onto the dead spine");
+        assert_eq!(c.stats.blackhole_drops, holes);
+        assert_eq!(c.stats.switch_drops, 0, "blackholes are not congestion drops");
+    }
+
+    #[test]
+    fn dead_port_snapshots_idle() {
+        let mut c = Clos::new(24, 40.0, topo(8, CcMode::Pfc));
+        // pile traffic onto ToR 1's single uplink, then kill it
+        for q in 0..64u32 {
+            let _ = c.route(Ns(0), NodeId(8), NodeId(0), Qpn(q), Qpn(1), 0, 4096, true, Ns(0));
+        }
+        let mut snap = Vec::new();
+        c.uplink_snapshot_into(&mut snap);
+        assert!(snap[1].0 > 0, "uplink had backlog");
+        c.kill_uplink(1, 0);
+        c.uplink_snapshot_into(&mut snap);
+        assert_eq!(snap[1], Ns::ZERO, "dead port must not pause senders on a frozen horizon");
     }
 }

@@ -7,8 +7,10 @@
 
 use super::types::{Mrkey, NodeId, Qpn, Verb, WcStatus};
 
-/// A send work request, as submitted via `post_send`.
-#[derive(Clone, Debug)]
+/// A send work request, as submitted via `post_send`. `Copy`: extents,
+/// keys, and ids only — no owned payload — so the daemon can retain the
+/// posted WR for self-healing replay at zero heap cost.
+#[derive(Clone, Copy, Debug)]
 pub struct SendWr {
     /// Opaque 64-bit id returned in the initiator's CQE. RDMAvisor packs the
     /// vQPN into the low 32 bits (Fig 4).

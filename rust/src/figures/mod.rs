@@ -22,9 +22,10 @@ use crate::metrics::Series;
 use crate::util::parallel;
 use crate::fabric::topo::CcMode;
 use crate::workload::scenarios::{
-    chaos_send, churn_storm, incast_storm, kv_storm, locked_random_read, naive_random_read,
-    raas_random_read, scale_send, verbs_sweep_point, ChaosCfg, ChaosRun, ChurnCfg, ChurnRun,
-    IncastCfg, IncastRun, KvCfg, KvRun, RunStats, ScaleCfg, ScaleRun, ScenarioCfg,
+    chaos_send, churn_storm, failover_storm, incast_storm, kv_storm, locked_random_read,
+    naive_random_read, raas_random_read, scale_send, verbs_sweep_point, ChaosCfg, ChaosRun,
+    ChurnCfg, ChurnRun, FailoverCfg, FailoverRun, IncastCfg, IncastRun, KvCfg, KvRun, RunStats,
+    ScaleCfg, ScaleRun, ScenarioCfg, FAILOVER_BIN_NS,
 };
 
 /// Message sizes swept in Fig 1 (64 B … 1 MB).
@@ -1287,6 +1288,183 @@ pub fn fig13_series(rows: &[Fig13Row]) -> Series {
     s
 }
 
+// ------------------------------------------------------------------ Fig 14
+
+/// The fig-14 [`FailoverCfg`] (shared with `bench failover` so
+/// BENCH_PR10.json times exactly the runs the figure makes).
+pub fn fig14_cfg(budget: Budget, repath: bool) -> FailoverCfg {
+    let mut cfg = FailoverCfg::default();
+    cfg.repath = repath;
+    if budget == Budget::Quick {
+        cfg.writers = 6;
+        cfg.mice = 2;
+        cfg.window = 4;
+        // the failure window must still outlast the ~1.2ms retry budget
+        // (so the ablation produces RetryExceeded) — shrink around it
+        cfg.fail_from = 1_000_000;
+        cfg.fail_until = 3_000_000;
+        cfg.duration = Ns::from_ms(6);
+    }
+    cfg
+}
+
+/// One fig-14 row: the same failover tape with the survivability
+/// machinery on (repath + heal) and off (the ablation).
+#[derive(Clone, Debug)]
+pub struct Fig14Row {
+    /// Repath + self-healing on.
+    pub repath: Option<FailoverRun>,
+    /// The ablation: frozen routing mask, no detector, no healing.
+    pub no_repath: Option<FailoverRun>,
+}
+
+/// Fig 14: goodput through a spine failure + uplink death, repath on vs
+/// off. Two independent `Sim`s, interleaved under `--jobs`.
+pub fn fig14(budget: Budget, jobs: usize) -> Vec<Fig14Row> {
+    fig14_sharded(budget, jobs, 1)
+}
+
+/// [`fig14`] with a sharded `Sim` per run (shard-invariant output).
+pub fn fig14_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig14Row> {
+    let runs = parallel::map_indexed(vec![true, false], jobs, |_, repath| {
+        let mut cfg = fig14_cfg(budget, repath);
+        cfg.shards = shards;
+        failover_storm(&cfg)
+    });
+    let mut it = runs.into_iter();
+    vec![Fig14Row { repath: it.next(), no_repath: it.next() }]
+}
+
+/// The `--repath-off` ablation alone.
+pub fn fig14_repath_off(budget: Budget, jobs: usize) -> Vec<Fig14Row> {
+    fig14_repath_off_sharded(budget, jobs, 1)
+}
+
+/// [`fig14_repath_off`] with a sharded `Sim` (shard-invariant).
+pub fn fig14_repath_off_sharded(budget: Budget, jobs: usize, shards: usize) -> Vec<Fig14Row> {
+    let runs = parallel::map_indexed(vec![false], jobs, |_, repath| {
+        let mut cfg = fig14_cfg(budget, repath);
+        cfg.shards = shards;
+        failover_storm(&cfg)
+    });
+    vec![Fig14Row { repath: None, no_repath: runs.into_iter().next() }]
+}
+
+/// Render the Fig-14 table: phase goodputs and recovery counters, then
+/// the goodput timeline of both runs.
+pub fn print_fig14(rows: &[Fig14Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 14: failover storm — goodput through a spine death, repath on vs off\n");
+    out.push_str(&format!(
+        "{:>10} {:>8} {:>8} {:>8} {:>9} {:>8} {:>7} {:>7} {:>8} {:>7}\n",
+        "mode", "pre Gb", "dip Gb", "post Gb", "p99 us", "repaths", "epochs", "heals", "retryex",
+        "alive"
+    ));
+    let line = |out: &mut String, label: &str, r: &FailoverRun| {
+        out.push_str(&format!(
+            "{:>10} {:>8.2} {:>8.2} {:>8.2} {:>9.1} {:>8} {:>7} {:>7} {:>8} {:>7}\n",
+            label,
+            r.pre_gbps,
+            r.dip_gbps,
+            r.post_gbps,
+            r.p99_fct_us,
+            r.repaths,
+            r.route_epoch,
+            r.qp_reestablished,
+            r.retry_exceeded,
+            r.flows_alive
+        ));
+    };
+    for row in rows {
+        if let Some(r) = &row.repath {
+            line(&mut out, "repath", r);
+        }
+        if let Some(r) = &row.no_repath {
+            line(&mut out, "no-repath", r);
+        }
+    }
+    // the goodput timeline, one bin per line (the figure's x axis)
+    let tl = |out: &mut String, label: &str, r: &FailoverRun| {
+        out.push_str(&format!("timeline ({label}), Gb/s per {}us bin:\n", FAILOVER_BIN_NS / 1000));
+        for (i, g) in r.timeline_gbps.iter().enumerate() {
+            out.push_str(&format!("  {:>6.2}ms {:>8.2}\n", (i as u64 * FAILOVER_BIN_NS) as f64 / 1e6, g));
+        }
+    };
+    for row in rows {
+        if let Some(r) = &row.repath {
+            tl(&mut out, "repath", r);
+        }
+        if let Some(r) = &row.no_repath {
+            tl(&mut out, "no-repath", r);
+        }
+    }
+    out
+}
+
+/// The Fig-14 [`Series`] (shared by the CLI and the determinism tests):
+/// one point per timeline bin, with the phase scalars repeated so the
+/// TSV stays self-describing.
+pub fn fig14_series(rows: &[Fig14Row]) -> Series {
+    let mut s = Series::new(
+        "fig14_failover",
+        "time_ms",
+        &[
+            "repath_gbps",
+            "norepath_gbps",
+            "repath_pre_gbps",
+            "repath_post_gbps",
+            "norepath_post_gbps",
+            "repath_p99_fct_us",
+            "norepath_p99_fct_us",
+            "repaths",
+            "route_epoch",
+            "qp_reestablished",
+            "heal_backoff_ms",
+            "repath_retry_exceeded",
+            "norepath_retry_exceeded",
+            "repath_flows_alive",
+            "norepath_flows_alive",
+        ],
+    );
+    for row in rows {
+        let on = row.repath.as_ref();
+        let off = row.no_repath.as_ref();
+        let nbins = on
+            .map(|r| r.timeline_gbps.len())
+            .max(off.map(|r| r.timeline_gbps.len()))
+            .unwrap_or(0);
+        for i in 0..nbins {
+            let bin = |r: Option<&FailoverRun>| {
+                r.and_then(|x| x.timeline_gbps.get(i)).copied().unwrap_or(f64::NAN)
+            };
+            let f = |r: Option<&FailoverRun>, g: fn(&FailoverRun) -> f64| {
+                r.map(g).unwrap_or(f64::NAN)
+            };
+            s.push(
+                (i as u64 * FAILOVER_BIN_NS) as f64 / 1e6,
+                vec![
+                    bin(on),
+                    bin(off),
+                    f(on, |x| x.pre_gbps),
+                    f(on, |x| x.post_gbps),
+                    f(off, |x| x.post_gbps),
+                    f(on, |x| x.p99_fct_us),
+                    f(off, |x| x.p99_fct_us),
+                    f(on, |x| x.repaths as f64),
+                    f(on, |x| x.route_epoch as f64),
+                    f(on, |x| x.qp_reestablished as f64),
+                    f(on, |x| x.heal_backoff_ns as f64 / 1e6),
+                    f(on, |x| x.retry_exceeded as f64),
+                    f(off, |x| x.retry_exceeded as f64),
+                    f(on, |x| x.flows_alive as f64),
+                    f(off, |x| x.flows_alive as f64),
+                ],
+            );
+        }
+    }
+    s
+}
+
 // --------------------------------------------------------- figure runner
 
 /// Run one figure id end-to-end; returns its [`Series`] plus the rendered
@@ -1305,10 +1483,10 @@ pub fn run_fig(
 }
 
 /// [`run_fig`] with a sharded `Sim` per sweep point. Only the daemon-scale
-/// figures (9–13) thread the knob — figs 1–8 run tiny fabrics where
+/// figures (9–14) thread the knob — figs 1–8 run tiny fabrics where
 /// partitioning has nothing to win, so they ignore it. The output bytes
 /// are identical for every `shards` value (the determinism suite gates
-/// figs 9–13 at `shards = 4` against serial), so the figure JSON never
+/// figs 9–14 at `shards = 4` against serial), so the figure JSON never
 /// records the knob.
 pub fn run_fig_sharded(
     id: u64,
@@ -1402,6 +1580,11 @@ pub fn run_fig_sharded(
             let rows = fig13_sharded(b, jobs, shards);
             let table = print_fig13(&rows);
             Some((fig13_series(&rows), table))
+        }
+        14 => {
+            let rows = fig14_sharded(b, jobs, shards);
+            let table = print_fig14(&rows);
+            Some((fig14_series(&rows), table))
         }
         _ => None,
     }

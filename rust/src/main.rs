@@ -2,15 +2,17 @@
 //!
 //! One binary drives the whole reproduction. Subcommands:
 //!
-//! * `fig --id {1,5,6,7,8,9,10,11,12,13}` — regenerate a paper figure (9
-//!   = the RC↔UD-migration scale extension, 10 = the fault-injection
+//! * `fig --id {1,5,6,7,8,9,10,11,12,13,14}` — regenerate a paper figure
+//!   (9 = the RC↔UD-migration scale extension, 10 = the fault-injection
 //!   chaos sweep, 11 = the one-sided KV tier, 12 = the tenant-churn
-//!   setup-rate sweep, 13 = the Clos incast congestion sweep) and print
+//!   setup-rate sweep, 13 = the Clos incast congestion sweep, 14 = the
+//!   failover storm through a spine death) and print
 //!   the series as JSON on stdout (human-readable table on stderr).
 //!   `--all` runs every figure; `--quick` shrinks the
 //!   sweeps; `--rc-only` restricts figures 9/10/11 to the ablation;
 //!   `--cold` restricts figure 12 to the no-pool/eager-lease ablation;
 //!   `--no-cc`/`--pfc` restrict figure 13 to one congestion-control
+//!   ablation; `--repath-off` restricts figure 14 to the frozen-routing
 //!   ablation;
 //!   `--jobs N` runs the independent sweep points on N threads (0 = all
 //!   cores) with byte-identical output; `--shards N` splits each
@@ -43,6 +45,11 @@
 //!   incast sweep per oversubscription factor (DCQCN vs no-CC vs PFC),
 //!   written as `BENCH_PR9.json` (the CI perf artifact for the Clos
 //!   congestion-control fabric).
+//! * `bench failover [--out FILE] [--jobs N] [--shards N]` — wall-clock
+//!   of the fig-14 failover storm (repath-on vs repath-off), written as
+//!   `BENCH_PR10.json` (the CI perf artifact for the survivable fabric).
+//!   With `--shards N` the repath run also executes sharded and its
+//!   series is byte-compared against serial (`identical_series`).
 //! * `bench` — one scenario run with explicit knobs (`--system
 //!   raas|naive|locked`, `--conns`, `--size`, …), JSON result on stdout.
 //! * `demo {kv,rpc,inference}` — the example applications end-to-end over
@@ -88,17 +95,18 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: rdmavisor <fig|figures|bench|demo|serve|init-config|info> [--help]\n\
-                 \n  fig --id 1|5|6|7|8|9|10|11|12|13 [--all] [--quick] [--rc-only] [--cold] [--no-cc] [--pfc] [--jobs N] [--shards N] [--tsv DIR]   (JSON on stdout)\
+                 \n  fig --id 1|5|6|7|8|9|10|11|12|13|14 [--all] [--quick] [--rc-only] [--cold] [--no-cc] [--pfc] [--repath-off] [--jobs N] [--shards N] [--tsv DIR]   (JSON on stdout)\
                  \n  bench hotpath|simstep|pump [--quick] [--shards N]  (JSON on stdout)\
                  \n  bench fig9 [--quick] [--jobs N] [--shards N] [--out FILE]    (fig-9 wall clock -> BENCH_PR5.json; --shards -> BENCH_PR8.json)\
                  \n  bench kv [--quick] [--jobs N] [--out FILE]      (fig-11 wall clock -> BENCH_PR6.json)\
                  \n  bench churn [--quick] [--jobs N] [--out FILE]   (fig-12 wall clock -> BENCH_PR7.json)\
                  \n  bench incast [--quick] [--jobs N] [--out FILE]  (fig-13 wall clock -> BENCH_PR9.json)\
+                 \n  bench failover [--quick] [--jobs N] [--shards N] [--out FILE]  (fig-14 wall clock -> BENCH_PR10.json)\
                  \n  bench [--system raas|naive|locked] [--conns N] [--size BYTES] \
                  [--window N] [--duration-ms MS] [--q N] [--config FILE]\
                  \n  demo kv|rpc|inference [--gets N] [--calls N] [--requests N]\
                  \n  figures --all | --table1 --fig1 --fig5 --fig6 --fig7 --fig8 --fig9 \
-                 --fig10 --fig11 --fig12 --fig13 --send-staging --batching [--quick] [--tsv DIR]\
+                 --fig10 --fig11 --fig12 --fig13 --fig14 --send-staging --batching [--quick] [--tsv DIR]\
                  \n  serve [--clients N] [--requests N] [--artifacts DIR]\
                  \n  init-config [--out FILE]"
             );
@@ -159,7 +167,7 @@ fn fig_cmd(args: &Args) {
     let jobs = jobs(args);
     let shards = shards(args);
     let mut ids: Vec<u64> = if args.flag("all") {
-        vec![1, 5, 6, 7, 8, 9, 10, 11, 12, 13]
+        vec![1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14]
     } else {
         args.u64_list("id", &[])
     };
@@ -174,8 +182,8 @@ fn fig_cmd(args: &Args) {
     ids.retain(|id| seen.insert(*id));
     if ids.is_empty() {
         eprintln!(
-            "usage: rdmavisor fig --id 1|5|6|7|8|9|10|11|12|13 [--all] [--quick] [--rc-only] \
-             [--cold] [--no-cc] [--pfc] [--jobs N] [--shards N] [--tsv DIR]"
+            "usage: rdmavisor fig --id 1|5|6|7|8|9|10|11|12|13|14 [--all] [--quick] [--rc-only] \
+             [--cold] [--no-cc] [--pfc] [--repath-off] [--jobs N] [--shards N] [--tsv DIR]"
         );
         std::process::exit(2);
     }
@@ -204,12 +212,15 @@ fn fig_cmd(args: &Args) {
         } else if id == 13 && args.flag("pfc") {
             let rows = figures::fig13_pfc_sharded(b, jobs, shards);
             (figures::fig13_series(&rows), figures::print_fig13(&rows))
+        } else if id == 14 && args.flag("repath-off") {
+            let rows = figures::fig14_repath_off_sharded(b, jobs, shards);
+            (figures::fig14_series(&rows), figures::print_fig14(&rows))
         } else {
             match figures::run_fig_sharded(id, b, &mut fig78_cache, jobs, shards) {
                 Some(r) => r,
                 None => {
                     eprintln!(
-                        "unknown figure id {id}: expected 1, 5, 6, 7, 8, 9, 10, 11, 12 or 13"
+                        "unknown figure id {id}: expected 1, 5, 6, 7, 8, 9, 10, 11, 12, 13 or 14"
                     );
                     std::process::exit(2);
                 }
@@ -265,6 +276,7 @@ fn figures_cmd(args: &Args) {
         ("fig11", 11),
         ("fig12", 12),
         ("fig13", 13),
+        ("fig14", 14),
     ] {
         if all || args.flag(flag) {
             let (s, table) =
@@ -300,6 +312,7 @@ fn bench_cmd(args: &Args) {
         Some("kv") => return bench_kv(args),
         Some("churn") => return bench_churn(args),
         Some("incast") => return bench_incast(args),
+        Some("failover") => return bench_failover(args),
         _ => {}
     }
     let mut cfg = match args.get("config") {
@@ -900,6 +913,131 @@ fn bench_incast(args: &Args) {
         ("total_events", Json::Num(total_events as f64)),
         ("events_per_sec", num(total_events as f64 / total_wall.max(1e-9))),
     ]);
+    let text = doc.to_string();
+    match std::fs::write(&out_path, &text) {
+        Ok(()) => eprintln!("wrote {out_path}"),
+        Err(e) => eprintln!("write {out_path} failed: {e}"),
+    }
+    println!("{text}");
+}
+
+/// `bench failover` — wall-clock of the fig-14 failover storm (repath-on
+/// vs repath-off, exactly the runs `fig --id 14` makes). Writes the
+/// result to `--out` (default BENCH_PR10.json) so CI archives a perf
+/// trajectory for the survivable fabric. With `--shards N` both modes
+/// also execute sharded and the fig-14 series is byte-compared against
+/// serial (`identical_series`). Recorded trajectories should stay at the
+/// serial `--jobs` default.
+fn bench_failover(args: &Args) {
+    use rdmavisor::workload::scenarios::failover_storm;
+
+    let b = budget(args);
+    let j = jobs(args);
+    let n_shards = shards(args);
+    let out_path = args.str_or("out", "BENCH_PR10.json");
+    let t_all = Instant::now();
+    let measured = parallel::map_indexed(vec![true, false], j, |_, repath| {
+        let t0 = Instant::now();
+        let run = failover_storm(&figures::fig14_cfg(b, repath));
+        let serial_wall = t0.elapsed().as_secs_f64();
+        // the same run on the sharded executor: the wall ratio is the
+        // speedup, the rows feed the byte-identity check
+        let sharded = (n_shards > 1).then(|| {
+            let t1 = Instant::now();
+            let mut cfg = figures::fig14_cfg(b, repath);
+            cfg.shards = n_shards;
+            (failover_storm(&cfg), t1.elapsed().as_secs_f64())
+        });
+        (repath, run, serial_wall, sharded)
+    });
+    let mut points = Vec::new();
+    let mut total_wall = 0.0f64;
+    let mut total_sharded_wall = 0.0f64;
+    let mut total_events = 0u64;
+    let mut serial_row = figures::Fig14Row { repath: None, no_repath: None };
+    let mut sharded_row = figures::Fig14Row { repath: None, no_repath: None };
+    for (repath, run, wall, sharded) in measured {
+        total_wall += wall;
+        total_events += run.events;
+        let mode = if repath { "repath" } else { "no-repath" };
+        eprintln!(
+            "failover {mode:>9}: pre {:.2} -> dip {:.2} -> post {:.2} Gb/s, \
+             {} repaths / {} heals / {} retry-exceeded  ({:>8.1} ms wall)",
+            run.pre_gbps,
+            run.dip_gbps,
+            run.post_gbps,
+            run.repaths,
+            run.qp_reestablished,
+            run.retry_exceeded,
+            wall * 1e3
+        );
+        let mut point = vec![
+            ("mode", Json::Str(mode.to_string())),
+            ("wall_ms", num(wall * 1e3)),
+            ("events", Json::Num(run.events as f64)),
+            ("events_per_sec", num(run.events as f64 / wall.max(1e-9))),
+            ("pre_gbps", num(run.pre_gbps)),
+            ("dip_gbps", num(run.dip_gbps)),
+            ("post_gbps", num(run.post_gbps)),
+            ("p99_fct_us", num(run.p99_fct_us)),
+            ("repaths", Json::Num(run.repaths as f64)),
+            ("route_epoch", Json::Num(run.route_epoch as f64)),
+            ("qp_reestablished", Json::Num(run.qp_reestablished as f64)),
+            ("heal_giveups", Json::Num(run.heal_giveups as f64)),
+            ("retry_exceeded", Json::Num(run.retry_exceeded as f64)),
+            ("retransmits", Json::Num(run.retransmits as f64)),
+            ("blackhole_drops", Json::Num(run.blackhole_drops as f64)),
+            ("flows_alive", Json::Num(run.flows_alive as f64)),
+        ];
+        if let Some((srun, swall)) = sharded {
+            total_sharded_wall += swall;
+            eprintln!(
+                "failover {mode:>9}: sharded x{n_shards} {:>8.1} ms  (speedup {:.2}x)",
+                swall * 1e3,
+                wall / swall.max(1e-9)
+            );
+            point.push(("sharded_wall_ms", num(swall * 1e3)));
+            point.push(("speedup", num(wall / swall.max(1e-9))));
+            if repath {
+                sharded_row.repath = Some(srun);
+            } else {
+                sharded_row.no_repath = Some(srun);
+            }
+        }
+        if repath {
+            serial_row.repath = Some(run);
+        } else {
+            serial_row.no_repath = Some(run);
+        }
+        points.push(obj(point));
+    }
+    if j > 1 {
+        total_wall = t_all.elapsed().as_secs_f64();
+    }
+    let budget_name = if b == Budget::Quick { "quick" } else { "full" };
+    let mut doc_pairs = vec![
+        ("command", Json::Str("bench".into())),
+        ("mode", Json::Str("failover".into())),
+        ("budget", Json::Str(budget_name.to_string())),
+        ("jobs", Json::Num(j as f64)),
+        ("shards", Json::Num(n_shards as f64)),
+        ("points", Json::Arr(points)),
+        ("total_wall_ms", num(total_wall * 1e3)),
+        ("total_events", Json::Num(total_events as f64)),
+        ("events_per_sec", num(total_events as f64 / total_wall.max(1e-9))),
+    ];
+    if n_shards > 1 {
+        // the sharded executor's whole contract is that these bytes
+        // cannot differ; record the check in the artifact
+        let serial_rows = vec![serial_row];
+        let sharded_rows = vec![sharded_row];
+        let identical = figures::fig14_series(&serial_rows).to_json().to_string()
+            == figures::fig14_series(&sharded_rows).to_json().to_string()
+            && figures::print_fig14(&serial_rows) == figures::print_fig14(&sharded_rows);
+        doc_pairs.push(("total_sharded_wall_ms", num(total_sharded_wall * 1e3)));
+        doc_pairs.push(("identical_series", Json::Bool(identical)));
+    }
+    let doc = obj(doc_pairs);
     let text = doc.to_string();
     match std::fs::write(&out_path, &text) {
         Ok(()) => eprintln!("wrote {out_path}"),

@@ -130,6 +130,17 @@ pub struct DaemonConfig {
     /// Control-plane cost of one lease-establishment control message
     /// (flat per message, so batching amortizes it).
     pub lease_establish_ns: u64,
+    /// Daemon self-healing (DESIGN.md §15): when an op on a shared RC QP
+    /// completes with `RetryExceeded`, pull the QP out of service, hold
+    /// the failed ops, and re-establish after a capped exponential
+    /// backoff instead of reporting `ok: false` immediately. This bounds
+    /// the re-establishment attempts per heal cycle; 0 disables healing
+    /// (the default — fault-free traces stay byte-identical).
+    pub heal_max_attempts: u32,
+    /// First re-establishment backoff; doubles per failed attempt.
+    pub heal_backoff_ns: u64,
+    /// Ceiling on the doubled backoff.
+    pub heal_backoff_cap_ns: u64,
 }
 
 impl Default for DaemonConfig {
@@ -156,6 +167,9 @@ impl Default for DaemonConfig {
             handshake_ns: 12_000,
             qp_reuse_ns: 900,
             lease_establish_ns: 2_500,
+            heal_max_attempts: 0,
+            heal_backoff_ns: 50_000,
+            heal_backoff_cap_ns: 800_000,
         }
     }
 }
@@ -237,6 +251,15 @@ pub struct DaemonStats {
     /// Control-plane nanoseconds consumed (connect, disconnect, lease
     /// establishment) — the fig-12 setup-rate denominator.
     pub ctrl_ns: u64,
+    /// Shared QPs re-established by the self-healing loop after a
+    /// `RetryExceeded` park (DESIGN.md §15).
+    pub qp_reestablished: u64,
+    /// Virtual nanoseconds ops spent parked waiting for re-establishment
+    /// (summed across heal cycles — the recovery-lag numerator).
+    pub backoff_ns: u64,
+    /// Heal cycles abandoned after `heal_max_attempts` re-establishments
+    /// all died again; only then do the stashed ops fail with `ok: false`.
+    pub heal_giveups: u64,
 }
 
 /// Info about a peer daemon's pool we can one-sidedly address.
@@ -298,6 +321,40 @@ struct InflightOp {
     /// tenant's completion — DESIGN.md §12. 0 on the UD path (the
     /// host-wide UD QP is never parked).
     epoch: u32,
+    /// The WR as posted, kept only when self-healing is enabled
+    /// (DESIGN.md §15): a `RetryExceeded` completion stashes the op and
+    /// this WR replays verbatim (new wr_id) once the QP re-establishes.
+    /// None on window/UD ops — those have their own recovery stories.
+    wr: Option<SendWr>,
+}
+
+/// One remote undergoing daemon self-healing (DESIGN.md §15): its shared
+/// QP hit `RetryExceeded`, was pulled out of `shared_qps` (pausing new
+/// posts — batches queue in `pending`), and re-establishes after a
+/// capped exponential backoff; the failed ops wait in `replay` and
+/// repost through the revived QP. The QP is held here rather than the
+/// LRU reuse pool, where an eviction mid-heal would destroy the only
+/// path back.
+#[derive(Clone, Debug)]
+struct HealState {
+    /// The remote whose shared QP is being healed.
+    remote: u32,
+    /// The parked QP, out of `shared_qps` while `parked`.
+    qpn: Qpn,
+    /// Re-establishments already tried this cycle (give-up threshold is
+    /// `heal_max_attempts`).
+    attempts: u32,
+    /// No re-establishment before this virtual time.
+    next_at: Ns,
+    /// When the current park began (feeds `DaemonStats::backoff_ns`).
+    parked_at: Ns,
+    /// Parked (waiting out the backoff) vs probing (re-established and
+    /// waiting for the first successful completion to conclude the heal).
+    parked: bool,
+    /// Failed ops awaiting replay, in CQE order. Their old slab slots
+    /// were generation-bumped at completion, so replay mints fresh
+    /// wr_ids; their leases and epochs ride along untouched.
+    replay: Vec<(Vqpn, InflightOp)>,
 }
 
 /// Handle a client holds on a registered remote window: an opaque
@@ -438,6 +495,9 @@ pub struct Daemon {
     /// RC WRs, empty pending batch) before their shared QP parks —
     /// submission order, swept each pump.
     parting: Vec<u32>,
+    /// Remotes under self-healing after a `RetryExceeded` (DESIGN.md
+    /// §15), failure order. Empty whenever `cfg.heal_max_attempts == 0`.
+    heals: Vec<HealState>,
     /// Lazy mode: peer credentials offered at connect but not yet
     /// established, node-indexed.
     offered_creds: IdMap<OfferedCreds>,
@@ -501,6 +561,7 @@ impl Daemon {
             park_seq: 0,
             qp_epoch: IdMap::new(),
             parting: Vec::new(),
+            heals: Vec::new(),
             offered_creds: IdMap::new(),
             lease_backlog: Vec::new(),
             cfg,
@@ -877,6 +938,7 @@ impl Daemon {
                 window: None,
                 wgroup: None,
                 epoch,
+                wr: None,
             },
         );
         let wr = match verb {
@@ -884,6 +946,13 @@ impl Daemon {
             Verb::Write => SendWr::write(wr_id, len, self.pool.mr.key, lease.addr, rp.rkey, rp.base + remote_offset),
             Verb::Send => unreachable!(),
         };
+        // the WR is built after `insert` (it needs the wr_id), so the
+        // heal stash is back-filled through the slab
+        if self.cfg.heal_max_attempts > 0 {
+            if let Some(op) = self.ops.get_mut(wr_id) {
+                op.wr = Some(wr);
+            }
+        }
         self.enqueue_wr(sim, remote, wr, tag)?;
         Ok(tag)
     }
@@ -1000,6 +1069,7 @@ impl Daemon {
                 window: Some(win.slot),
                 wgroup: None,
                 epoch,
+                wr: None,
             },
         );
         let wr = SendWr::read(
@@ -1153,6 +1223,7 @@ impl Daemon {
                 window: Some(slot),
                 wgroup: Some(g),
                 epoch,
+                wr: None,
             },
         );
         let tail = wrs.last_mut().expect("non-empty group");
@@ -1273,6 +1344,7 @@ impl Daemon {
                 window: None,
                 wgroup: None,
                 epoch,
+                wr: None,
             },
         );
         // `send` pushes data: a READ preference from the selector (local
@@ -1302,6 +1374,11 @@ impl Daemon {
             }
             Verb::Read => unreachable!("degraded above"),
         };
+        if self.cfg.heal_max_attempts > 0 {
+            if let Some(op) = self.ops.get_mut(wr_id) {
+                op.wr = Some(wr);
+            }
+        }
         self.stats.sent_rc += 1;
         self.enqueue_wr(sim, remote, wr, tag)?;
         Ok(verb)
@@ -1369,6 +1446,7 @@ impl Daemon {
                 window: None,
                 wgroup: None,
                 epoch: 0, // the host-wide UD QP is never parked
+                wr: None,
             },
         );
         for k in 0..nfrags {
@@ -1426,12 +1504,16 @@ impl Daemon {
     ) -> Result<(), RaasError> {
         self.telemetry.charge(self.cfg.shm.ring_pop_ns + self.cfg.wr_build_ns);
         self.migrate.on_rc_submitted(remote.0);
+        // a healing remote has no entry in `shared_qps` while parked, so
+        // the inline flush would error out the submit: queue instead —
+        // the batch drains once the heal re-establishes the QP
+        let healing = self.is_healing(remote.0);
         let batch = self.pending.entry_or_default(remote.0);
         if batch.is_empty() {
             self.dirty_remotes.push(remote.0);
         }
         batch.push(wr);
-        if batch.len() >= self.cfg.batch_max {
+        if batch.len() >= self.cfg.batch_max && !healing {
             self.flush_remote(sim, remote)?;
         }
         Ok(())
@@ -1465,6 +1547,10 @@ impl Daemon {
     /// Drivers call this each loop turn (it is what the daemon's service
     /// threads do continuously in the live implementation).
     pub fn pump(&mut self, sim: &mut Sim) {
+        // self-healing first: a due re-establishment puts the QP back in
+        // `shared_qps` and splices its replay WRs at the FRONT of the
+        // pending batch, so the flush loop below posts them this pump
+        self.heal_pump(sim);
         // Worker: coalesced window-WRITE groups first — their doorbell
         // flush appends to the per-remote batches the next loop posts
         // (submission order, like everything below)
@@ -1615,6 +1701,191 @@ impl Daemon {
         }
     }
 
+    // ------------------------------------------------------ self-healing
+
+    /// Is `remote`'s shared QP currently parked by a heal cycle?
+    fn is_healing(&self, remote: u32) -> bool {
+        self.heals.iter().any(|h| h.remote == remote && h.parked)
+    }
+
+    /// Remotes currently in a heal cycle, parked or probing (test hook).
+    pub fn heals_active(&self) -> usize {
+        self.heals.len()
+    }
+
+    /// Backoff before re-establishment attempt `attempts`: doubles per
+    /// attempt, capped at `heal_backoff_cap_ns`.
+    fn heal_backoff(&self, attempts: u32) -> u64 {
+        (self.cfg.heal_backoff_ns << attempts.min(16)).min(self.cfg.heal_backoff_cap_ns)
+    }
+
+    /// `RetryExceeded` intercept: move the op (already taken from the
+    /// slab) into the heal ledger instead of failing it. Returns the op
+    /// back when healing does not apply — disabled, a window op (windows
+    /// have their own teardown story), a WR-less op, or a remote with no
+    /// shared QP left to park — and the caller surfaces the plain
+    /// `ok: false`. None means the op was consumed: stashed for replay,
+    /// or settled by a give-up.
+    fn try_stash_heal(
+        &mut self,
+        sim: &mut Sim,
+        wr_id: u64,
+        op: InflightOp,
+    ) -> Option<InflightOp> {
+        if self.cfg.heal_max_attempts == 0 || op.window.is_some() || op.wr.is_none() {
+            return Some(op);
+        }
+        let Some(remote) = op.rc_remote else { return Some(op) };
+        let now = sim.now();
+        let vqpn = crate::raas::vqpn::unpack_vqpn(wr_id);
+        let Some(i) = self.heals.iter().position(|h| h.remote == remote) else {
+            // first failure of this cycle: pull the QP out of service —
+            // NOT into the LRU reuse pool, where an eviction mid-heal
+            // would destroy the only path back, and with NO epoch bump:
+            // sibling RetryExceeded CQEs from the same flushed batch
+            // must still pass the epoch gate to land here
+            let Some(qpn) = self.shared_qps.remove(remote) else {
+                return Some(op);
+            };
+            // the WR is off the wire either way; replay re-submits it
+            self.migrate.on_rc_completed(remote);
+            let backoff = self.heal_backoff(0);
+            self.heals.push(HealState {
+                remote,
+                qpn,
+                attempts: 0,
+                next_at: now + Ns(backoff),
+                parked_at: now,
+                parked: true,
+                replay: vec![(vqpn, op)],
+            });
+            return None;
+        };
+        self.migrate.on_rc_completed(remote);
+        if self.heals[i].parked {
+            // sibling failure from the same flushed batch
+            self.heals[i].replay.push((vqpn, op));
+            return None;
+        }
+        // the re-established QP died again: re-park with a doubled
+        // backoff, or give up once the attempt budget is spent
+        let attempts = self.heals[i].attempts + 1;
+        if attempts >= self.cfg.heal_max_attempts {
+            let h = self.heals.remove(i);
+            self.stats.heal_giveups += 1;
+            // only NOW does the failure surface (`ok: false`); the QP
+            // stays in service, so a later RetryExceeded starts a fresh
+            // cycle rather than wedging the remote forever
+            self.fail_healed_op(vqpn, op);
+            for (v, o) in h.replay {
+                self.fail_healed_op(v, o);
+            }
+            return None;
+        }
+        let backoff = self.heal_backoff(attempts);
+        self.shared_qps.remove(remote);
+        let h = &mut self.heals[i];
+        h.attempts = attempts;
+        h.parked = true;
+        h.parked_at = now;
+        h.next_at = now + Ns(backoff);
+        h.replay.push((vqpn, op));
+        None
+    }
+
+    /// Surface one heal-stashed op as failed. Its slab slot is long gone
+    /// and its drain-ledger entry was settled at stash time, so — unlike
+    /// [`Daemon::fail_op`] — only the lease release and the app delivery
+    /// happen here.
+    fn fail_healed_op(&mut self, vqpn: Vqpn, op: InflightOp) {
+        self.pool.release(op.lease);
+        self.stats.ops_failed += 1;
+        self.telemetry.ops_failed += 1;
+        let tag = op.wr.map_or(0, |w| w.wr_id);
+        if let Some(entry) = self.conns.lookup(vqpn) {
+            let app = entry.app;
+            self.telemetry.charge(self.cfg.shm.ring_push_ns);
+            self.inbox_mut(app).push_back(Delivery::OpComplete {
+                conn: vqpn,
+                tag,
+                len: 0,
+                ok: false,
+            });
+        }
+    }
+
+    /// A successful RC completion for `remote`: a heal in its probing
+    /// phase concludes — the re-established path carries traffic again.
+    fn heal_concluded(&mut self, remote: u32) {
+        if self.heals.is_empty() {
+            return;
+        }
+        if let Some(i) = self.heals.iter().position(|h| h.remote == remote && !h.parked) {
+            self.heals.remove(i);
+        }
+    }
+
+    /// Worker pre-step: re-establish healing QPs whose backoff expired
+    /// (failure order — deterministic).
+    fn heal_pump(&mut self, sim: &mut Sim) {
+        if self.heals.is_empty() {
+            return;
+        }
+        let now = sim.now();
+        let due: Vec<u32> = self
+            .heals
+            .iter()
+            .filter(|h| h.parked && now >= h.next_at)
+            .map(|h| h.remote)
+            .collect();
+        for remote in due {
+            self.revive_healed(sim, remote);
+        }
+    }
+
+    /// Put a healed QP back in service and queue its replay. The pair
+    /// never left the fabric, so revival is the same bookkeeping as a
+    /// reuse-pool hit (PR 7) and is priced as one.
+    fn revive_healed(&mut self, sim: &mut Sim, remote: u32) {
+        let now = sim.now();
+        let Some(i) = self.heals.iter().position(|h| h.remote == remote) else {
+            return;
+        };
+        let (qpn, replay, parked_at) = {
+            let h = &mut self.heals[i];
+            h.parked = false;
+            (h.qpn, std::mem::take(&mut h.replay), h.parked_at)
+        };
+        self.shared_qps.insert(remote, qpn);
+        self.charge_ctrl(sim, self.cfg.qp_reuse_ns);
+        self.stats.qp_reestablished += 1;
+        self.stats.backoff_ns += now.saturating_sub(parked_at).0;
+        let mut wrs: Vec<SendWr> = Vec::with_capacity(replay.len());
+        for (vqpn, mut op) in replay {
+            // fresh slab entry (the old slot's generation was bumped
+            // when the RetryExceeded CQE took it), fresh stale-lease
+            // clock; the lease and epoch stamp ride along untouched
+            op.opened_at = now;
+            let mut wr = op.wr.expect("heal-stashed ops carry their WR");
+            let id = self.ops.insert(vqpn, op);
+            wr.wr_id = id;
+            if let Some(stored) = self.ops.get_mut(id) {
+                stored.wr = Some(wr);
+            }
+            self.telemetry.charge(self.cfg.wr_build_ns);
+            self.migrate.on_rc_submitted(remote);
+            wrs.push(wr);
+        }
+        if !wrs.is_empty() {
+            let batch = self.pending.entry_or_default(remote);
+            if batch.is_empty() {
+                self.dirty_remotes.push(remote);
+            }
+            // replay goes ahead of anything queued during the park
+            batch.splice(0..0, wrs);
+        }
+    }
+
     /// Force-release a window at disconnect: pending (never-posted)
     /// coalesced WRITEs fail, the token is invalidated, and the standing
     /// lease returns once nothing remains in flight — the disconnect op
@@ -1717,6 +1988,17 @@ impl Daemon {
                 return;
             }
         }
+        let op = if cqe.status == WcStatus::RetryExceeded {
+            // self-healing (DESIGN.md §15): instead of surfacing the
+            // retry exhaustion, park the shared QP and stash the op for
+            // replay through the re-established pair
+            match self.try_stash_heal(sim, cqe.wr_id, op) {
+                Some(op) => op, // not healable: fall through to ok:false
+                None => return, // stashed (or settled by a heal give-up)
+            }
+        } else {
+            op
+        };
         if let Some(slot) = op.window {
             return self.on_window_cqe(sim, cqe, op, slot);
         }
@@ -1727,6 +2009,9 @@ impl Daemon {
         let len = op.ud_msg_len.unwrap_or(cqe.len);
         if let Some(remote) = op.rc_remote {
             self.migrate.on_rc_completed(remote);
+            if ok {
+                self.heal_concluded(remote);
+            }
         }
         if op.deliver_copy && ok {
             // copy read payload out to the app's private buffer
@@ -1764,6 +2049,9 @@ impl Daemon {
         let ok = cqe.status == WcStatus::Success;
         if let Some(remote) = op.rc_remote {
             self.migrate.on_rc_completed(remote);
+            if ok {
+                self.heal_concluded(remote);
+            }
         }
         let app = self.conns.lookup(vqpn).map(|e| e.app);
         if let Some(g) = op.wgroup {

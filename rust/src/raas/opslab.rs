@@ -133,6 +133,17 @@ impl<T> OpSlab<T> {
         slot.val.as_ref()
     }
 
+    /// Resolve a live op mutably (same validity rules as [`OpSlab::get`]).
+    #[inline]
+    pub fn get_mut(&mut self, wr_id: u64) -> Option<&mut T> {
+        let s = unpack_op_slot(wr_id)?;
+        let slot = self.slots.get_mut(s as usize)?;
+        if slot.gen != unpack_op_gen(wr_id) || slot.vqpn.0 != wr_id as u32 {
+            return None;
+        }
+        slot.val.as_mut()
+    }
+
     /// Complete an op: remove and return it, bumping the slot generation
     /// so any later CQE carrying this wr_id dies here.
     pub fn take(&mut self, wr_id: u64) -> Option<T> {

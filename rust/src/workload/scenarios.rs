@@ -758,6 +758,7 @@ fn chaos_fault_cfg(cfg: &ChaosCfg, servers: usize) -> crate::fabric::fault::Faul
         jitter_ns: (200, 4000),
         flaps,
         restarts,
+        ..FaultConfig::default()
     }
 }
 
@@ -1674,7 +1675,7 @@ pub struct IncastRun {
 pub fn incast_storm(cfg: &IncastCfg) -> IncastRun {
     use crate::fabric::fault::{FaultConfig, Flap};
     use crate::fabric::mr::Access;
-    use crate::fabric::topo::{ecmp_hash, TopoConfig};
+    use crate::fabric::topo::{ecmp_hash, pick_uplink, TopoConfig};
     use crate::fabric::types::{QpTransport, Qpn};
     use crate::fabric::verbs as fv;
     use crate::fabric::wqe::SendWr;
@@ -1812,11 +1813,11 @@ pub fn incast_storm(cfg: &IncastCfg) -> IncastRun {
     // spine-link flap: kill the flows ECMP hashed onto uplink 0 — must be
     // installed before the first event
     if let Some((from, until)) = cfg.spine_flap {
-        let uplinks = topo.uplinks() as u64;
+        let live = vec![true; topo.uplinks()];
         let flaps: Vec<Flap> = actors
             .iter()
             .filter(|a| a.is_writer)
-            .filter(|a| ecmp_hash(a.src, a.dst, a.qpn, a.peer_qpn) % uplinks == 0)
+            .filter(|a| pick_uplink(ecmp_hash(a.src, a.dst, a.qpn, a.peer_qpn), 0, &live) == 0)
             .map(|a| Flap { src: a.src, dst: a.dst, from: Ns(from), until: Ns(until) })
             .collect();
         if !flaps.is_empty() {
@@ -1905,6 +1906,438 @@ pub fn incast_storm(cfg: &IncastCfg) -> IncastRun {
         retransmits,
         retry_exceeded,
         wire_drops: sim.wire_drops(),
+        events: sim.steps_processed(),
+    }
+}
+
+// --------------------------------------------- Fig 14 (failover storm)
+
+/// Config for the survivability experiment (fig 14): cross-ToR RC
+/// writers and FCT mice ride an oversubscribed Clos while a spine
+/// switch dies for a window and one ToR-0 uplink dies permanently — so
+/// ToR 0 is fully cut during the window. A RaaS daemon tier on ToR 0
+/// exercises self-healing (its QPs exhaust the fabric retry budget and
+/// must be re-established), while the raw tier exercises the per-QP
+/// blackhole detector and the ECMP reconvergence epoch. Flows do NOT
+/// repost after a failed completion — a survivor is a flow the
+/// machinery actually saved.
+#[derive(Clone, Copy, Debug)]
+pub struct FailoverCfg {
+    /// Cross-ToR RC writers between the non-ToR-0 ToRs (half each way).
+    pub writers: usize,
+    /// Hosts per ToR switch.
+    pub hosts_per_tor: usize,
+    /// ToR count (≥ 3: ToR 0 hosts the daemon tier, ToRs 1.. the raw).
+    pub tors: usize,
+    /// ToR uplink oversubscription ratio.
+    pub oversub: u32,
+    /// Writer message size.
+    pub msg_bytes: u64,
+    /// Outstanding WRITEs per writer (closed loop).
+    pub window: u32,
+    /// Latency-probe mice (window 1) crossing the same spine tier.
+    pub mice: usize,
+    /// Mouse message size.
+    pub mice_bytes: u64,
+    /// Daemon-tier connections from the ToR-0 client (round-robin over
+    /// cross-ToR server daemons).
+    pub daemon_conns: usize,
+    /// Daemon-tier READ size.
+    pub daemon_msg_bytes: u64,
+    /// Outstanding READs per daemon connection.
+    pub daemon_window: usize,
+    /// Survivability on: ECMP repath epochs + blackhole detector in the
+    /// fabric, self-healing in the daemon. false is the fig-14 ablation
+    /// — the routing mask freezes and `RetryExceeded` surfaces to apps.
+    pub repath: bool,
+    /// Failure window start, ns: spine 0 dies and ToR 0's uplink 1 dies
+    /// permanently.
+    pub fail_from: u64,
+    /// Failure window end, ns: spine 0 revives (the uplink death stays).
+    pub fail_until: u64,
+    /// Post-failure goodput is measured from `fail_until + settle` on.
+    pub settle: u64,
+    /// Virtual run length.
+    pub duration: Ns,
+    /// Simulator shard count (byte-identical output for any value).
+    pub shards: usize,
+}
+
+impl Default for FailoverCfg {
+    fn default() -> Self {
+        FailoverCfg {
+            writers: 8,
+            hosts_per_tor: 8,
+            tors: 3,
+            oversub: 4,
+            msg_bytes: 64 << 10,
+            window: 8,
+            mice: 4,
+            mice_bytes: 2 << 10,
+            daemon_conns: 2,
+            daemon_msg_bytes: 16 << 10,
+            daemon_window: 4,
+            repath: true,
+            fail_from: 2_000_000,
+            fail_until: 4_000_000,
+            settle: 1_000_000,
+            duration: Ns::from_ms(8),
+            shards: 1,
+        }
+    }
+}
+
+/// Goodput-timeline bin width for [`FailoverRun::timeline_gbps`].
+pub const FAILOVER_BIN_NS: u64 = 250_000;
+
+/// One measured failover run.
+#[derive(Clone, Debug, Default)]
+pub struct FailoverRun {
+    /// Goodput (all tiers) before the failure window, Gb/s.
+    pub pre_gbps: f64,
+    /// Goodput inside the failure window, Gb/s.
+    pub dip_gbps: f64,
+    /// Goodput after `fail_until + settle`, Gb/s — the recovery gate
+    /// compares this against `pre_gbps`.
+    pub post_gbps: f64,
+    /// Median mouse flow-completion time across the whole run, µs.
+    pub p50_fct_us: f64,
+    /// 99th-percentile mouse flow-completion time, µs.
+    pub p99_fct_us: f64,
+    /// Blackhole-detector firings (QPs that bumped their path salt).
+    pub repaths: u64,
+    /// Routing-mask reconvergences applied by the fabric control plane.
+    pub route_epoch: u32,
+    /// Daemon QPs re-established by self-healing.
+    pub qp_reestablished: u64,
+    /// Virtual ns daemon ops spent parked awaiting re-establishment.
+    pub heal_backoff_ns: u64,
+    /// Heal cycles that exhausted their attempt budget.
+    pub heal_giveups: u64,
+    /// RC messages retransmitted after ACK timeout, all nodes.
+    pub retransmits: u64,
+    /// RC messages that exhausted their retry budget, all nodes.
+    pub retry_exceeded: u64,
+    /// Frames dropped at dead Clos ports.
+    pub blackhole_drops: u64,
+    /// Daemon-tier READs delivered `ok`.
+    pub daemon_ops_ok: u64,
+    /// Daemon-tier READs delivered failed (`ok: false`).
+    pub daemon_ops_failed: u64,
+    /// Raw-tier flows still alive at end of run (writers + mice).
+    pub flows_alive: u64,
+    /// Goodput per [`FAILOVER_BIN_NS`] bin, Gb/s — the fig-14 timeline.
+    pub timeline_gbps: Vec<f64>,
+    /// Simulator events processed over the whole run.
+    pub events: u64,
+}
+
+/// Fig 14: the failover storm. See [`FailoverCfg`] for the layout; the
+/// headline claims are (repath on) post-failure goodput recovering to
+/// ≥ 90% of pre-failure with `repaths > 0` and `qp_reestablished > 0`,
+/// and (repath off) `retry_exceeded > 0` with strictly lower
+/// post-failure goodput. Deterministic for every shard count
+/// (`tests/determinism.rs` gates fig 14's byte-identity).
+pub fn failover_storm(cfg: &FailoverCfg) -> FailoverRun {
+    use crate::fabric::fault::FaultConfig;
+    use crate::fabric::mr::Access;
+    use crate::fabric::topo::TopoConfig;
+    use crate::fabric::types::{QpTransport, Qpn, WcStatus};
+    use crate::fabric::verbs as fv;
+    use crate::fabric::wqe::SendWr;
+    use crate::raas::vqpn::Vqpn;
+
+    assert!(cfg.tors >= 3, "need ToR 0 (daemon tier) plus two raw-tier ToRs");
+    assert!(cfg.fail_from < cfg.fail_until && Ns(cfg.fail_until) < cfg.duration);
+    let hosts = cfg.hosts_per_tor;
+    let nodes = cfg.tors * hosts;
+
+    let mut topo = TopoConfig::default();
+    topo.hosts_per_tor = hosts;
+    topo.oversub = cfg.oversub;
+    topo.mode = CcMode::Dcqcn;
+    topo.repath = cfg.repath;
+    // reconvergence slower than the detector's three-timeout fuse
+    // (~350µs here), so the per-QP salt escape is load-bearing and the
+    // mask update is the backstop — but both well inside the ~1.2ms
+    // retry budget, so no raw flow dies when repath is on
+    topo.reroute_lag_ns = 400_000;
+
+    let mut fabric = FabricConfig::default();
+    fabric.nodes = nodes;
+    fabric.shards = cfg.shards;
+    fabric.max_outstanding = (cfg.window.max(8)) as usize;
+    fabric.sq_depth = 4 * cfg.window as usize + 32;
+    fabric.nic.retransmit_timeout_ns = 50_000;
+    fabric.nic.retry_cnt = 5;
+    fabric.topo = Some(topo);
+    let mut sim = Sim::new(fabric);
+
+    // the failure plan: spine 0 out for the window, ToR 0's uplink 1
+    // gone for good — ToR 0 is completely cut inside the window, which
+    // defeats the blackhole detector by design (there is no live port
+    // to repath onto) and leaves daemon self-healing as ToR 0's only
+    // recovery
+    sim.install_faults(FaultConfig {
+        uplink_deaths: vec![(0, 1, cfg.fail_from)],
+        spine_windows: vec![(0, cfg.fail_from, cfg.fail_until)],
+        ..FaultConfig::default()
+    });
+
+    // ---- raw tier: writers + mice between ToR 1 and ToR 2
+    let mut cqs = Vec::with_capacity(nodes);
+    let mut mrs = Vec::with_capacity(nodes);
+    for n in 0..nodes {
+        cqs.push(sim.create_cq(NodeId(n as u32), 1 << 16));
+        mrs.push(sim.reg_mr(NodeId(n as u32), 64 << 20, Access::REMOTE_RW, true));
+    }
+    struct Flow {
+        src: NodeId,
+        dst: NodeId,
+        qpn: Qpn,
+        len: u64,
+        window: u32,
+        is_mouse: bool,
+        alive: bool,
+        issued_at: Ns,
+    }
+    let mut flows: Vec<Flow> = Vec::new();
+    for w in 0..cfg.writers {
+        let a = NodeId((hosts + w % hosts) as u32);
+        let b = NodeId((2 * hosts + w % hosts) as u32);
+        let (src, dst) = if w % 2 == 0 { (a, b) } else { (b, a) };
+        let pair = fv::create_connected_pair(
+            &mut sim,
+            QpTransport::Rc,
+            src,
+            dst,
+            cqs[src.0 as usize],
+            cqs[src.0 as usize],
+            cqs[dst.0 as usize],
+            cqs[dst.0 as usize],
+        );
+        flows.push(Flow {
+            src,
+            dst,
+            qpn: pair.a.1,
+            len: cfg.msg_bytes,
+            window: cfg.window,
+            is_mouse: false,
+            alive: true,
+            issued_at: Ns::ZERO,
+        });
+    }
+    for m in 0..cfg.mice {
+        let src = NodeId((hosts + m % hosts) as u32);
+        let dst = NodeId((2 * hosts + (m + 3) % hosts) as u32);
+        let pair = fv::create_connected_pair(
+            &mut sim,
+            QpTransport::Rc,
+            src,
+            dst,
+            cqs[src.0 as usize],
+            cqs[src.0 as usize],
+            cqs[dst.0 as usize],
+            cqs[dst.0 as usize],
+        );
+        flows.push(Flow {
+            src,
+            dst,
+            qpn: pair.a.1,
+            len: cfg.mice_bytes,
+            window: 1,
+            is_mouse: true,
+            alive: true,
+            issued_at: Ns::ZERO,
+        });
+    }
+
+    // ---- daemon tier: ToR-0 client healing across the cut
+    let mut dcfg = DaemonConfig::default();
+    dcfg.migration.enabled = false; // no UD fallback masking the dead RC path
+    if cfg.repath {
+        dcfg.heal_max_attempts = 6;
+        // first revival lands just past the spine window; the doubled
+        // retry covers a replay that dies inside it
+        dcfg.heal_backoff_ns = 500_000;
+        dcfg.heal_backoff_cap_ns = 800_000;
+    }
+    // daemon node set: client is ToR-0 host 0; servers sit mid-ToR on
+    // the raw-tier ToRs (distinct hosts from the writer/mouse endpoints
+    // is not required — QPNs keep the ECMP hashes distinct)
+    let server_nodes: Vec<u32> =
+        (0..cfg.daemon_conns.max(1)).map(|c| (hosts + (c % 2) * hosts + 4 + c / 2) as u32).collect();
+    let mut daemons: Vec<Daemon> = Vec::new();
+    daemons.push(Daemon::start(&mut sim, NodeId(0), dcfg.clone()));
+    for &s in &server_nodes {
+        daemons.push(Daemon::start(&mut sim, NodeId(s), dcfg.clone()));
+    }
+    let app0 = daemons[0].register_app();
+    for (i, d) in daemons.iter_mut().enumerate().skip(1) {
+        let app = d.register_app();
+        d.listen(app, 7000 + i as u16);
+    }
+    struct DFlow {
+        conn: Vqpn,
+        alive: bool,
+        issued: u64,
+    }
+    let mut dflows: Vec<DFlow> = Vec::new();
+    for c in 0..cfg.daemon_conns {
+        let server = 1 + c % server_nodes.len();
+        let conn = connect_via(&mut sim, &mut daemons, 0, app0, server, 7000 + server as u16)
+            .expect("daemon connect");
+        dflows.push(DFlow { conn, alive: true, issued: 0 });
+    }
+
+    // ---- prime the closed loops
+    let post_raw = |sim: &mut Sim, f: &Flow, i: usize| {
+        let off = (i as u64 * f.len) % (32 << 20);
+        let wr = SendWr::write(
+            i as u64,
+            f.len,
+            mrs[f.src.0 as usize].key,
+            mrs[f.src.0 as usize].addr + off,
+            mrs[f.dst.0 as usize].key,
+            mrs[f.dst.0 as usize].addr + off,
+        );
+        let _ = sim.post_send(f.src, f.qpn, wr);
+    };
+    for i in 0..flows.len() {
+        flows[i].issued_at = sim.now();
+        for _ in 0..flows[i].window {
+            post_raw(&mut sim, &flows[i], i);
+        }
+    }
+    for (c, df) in dflows.iter_mut().enumerate() {
+        for k in 0..cfg.daemon_window {
+            let off = ((c * cfg.daemon_window + k) as u64 * cfg.daemon_msg_bytes) % (32 << 20);
+            if daemons[0].read(&mut sim, df.conn, cfg.daemon_msg_bytes, off, c as u64).is_ok() {
+                df.issued += 1;
+            }
+        }
+    }
+
+    // ---- measurement phases + goodput timeline
+    let warmup = Ns(cfg.fail_from / 2);
+    let post_from = Ns(cfg.fail_until + cfg.settle);
+    let nbins = (cfg.duration.0 / FAILOVER_BIN_NS + 1) as usize;
+    let mut bins = vec![0u64; nbins];
+    let (mut pre_bytes, mut dip_bytes, mut post_bytes) = (0u64, 0u64, 0u64);
+    let mut fct = Histogram::new();
+    let mut account = |now: Ns, bytes: u64, bins: &mut [u64]| {
+        bins[((now.0 / FAILOVER_BIN_NS) as usize).min(nbins - 1)] += bytes;
+        if now >= post_from {
+            post_bytes += bytes;
+        } else if now.0 >= cfg.fail_from && now.0 < cfg.fail_until {
+            dip_bytes += bytes;
+        } else if now >= warmup && now.0 < cfg.fail_from {
+            pre_bytes += bytes;
+        }
+    };
+
+    let mut notes: Vec<Notification> = Vec::new();
+    let mut cqes: Vec<crate::fabric::wqe::Cqe> = Vec::new();
+    let (mut d_ok, mut d_failed) = (0u64, 0u64);
+    while sim.now() < cfg.duration {
+        notes.clear();
+        if !sim.step_into(&mut notes) {
+            break;
+        }
+        for n in notes.drain(..) {
+            let Notification::CqeReady { node, cqn } = n else { continue };
+            if cqn != cqs[node.0 as usize] {
+                // a daemon-owned CQ: its pump below drains it — polling
+                // it here would steal the daemon's completions
+                continue;
+            }
+            cqes.clear();
+            sim.poll_cq_into(node, cqn, 1024, &mut cqes);
+            for c in 0..cqes.len() {
+                let i = cqes[c].wr_id as usize;
+                if i >= flows.len() || !flows[i].alive {
+                    continue;
+                }
+                let now = sim.now();
+                if cqes[c].status == WcStatus::Success {
+                    if !flows[i].is_mouse {
+                        account(now, flows[i].len, &mut bins);
+                    } else if now >= warmup {
+                        fct.record(now.saturating_sub(flows[i].issued_at).0);
+                    }
+                    flows[i].issued_at = now;
+                    post_raw(&mut sim, &flows[i], i);
+                } else {
+                    // no repost on failure: a dead flow stays dead, so
+                    // post-failure goodput measures real survival
+                    flows[i].alive = false;
+                }
+            }
+        }
+        // daemon tier: pump everyone, then run the client's closed loop
+        for d in daemons.iter_mut() {
+            d.pump(&mut sim);
+        }
+        let mut resubmit: Vec<(usize, bool)> = Vec::new();
+        while let Some(del) = daemons[0].recv_zero_copy(&mut sim, app0) {
+            let Delivery::OpComplete { conn, ok, .. } = del else { continue };
+            if let Some(c) = dflows.iter().position(|df| df.conn == conn && df.alive) {
+                resubmit.push((c, ok));
+            }
+        }
+        let mut daemon_ok = 0u64;
+        for (c, ok) in resubmit {
+            if !ok {
+                d_failed += 1;
+                dflows[c].alive = false;
+                continue;
+            }
+            d_ok += 1;
+            daemon_ok += 1;
+            let off = (dflows[c].issued * cfg.daemon_msg_bytes) % (32 << 20);
+            if daemons[0]
+                .read(&mut sim, dflows[c].conn, cfg.daemon_msg_bytes, off, c as u64)
+                .is_ok()
+            {
+                dflows[c].issued += 1;
+            }
+        }
+        if daemon_ok > 0 {
+            account(sim.now(), daemon_ok * cfg.daemon_msg_bytes, &mut bins);
+        }
+    }
+
+    let pre_span = Ns(cfg.fail_from).saturating_sub(warmup);
+    let dip_span = Ns(cfg.fail_until - cfg.fail_from);
+    let post_span = cfg.duration.saturating_sub(post_from);
+    let clos = sim.clos_stats();
+    let (mut retransmits, mut retry_exceeded) = (0u64, 0u64);
+    for n in sim.nodes() {
+        retransmits += n.retransmits;
+        retry_exceeded += n.retry_exceeded;
+    }
+    let ds = &daemons[0].stats;
+    FailoverRun {
+        pre_gbps: gbps(pre_bytes, pre_span),
+        dip_gbps: gbps(dip_bytes, dip_span),
+        post_gbps: gbps(post_bytes, post_span),
+        p50_fct_us: fct.p50() as f64 / 1e3,
+        p99_fct_us: fct.p99() as f64 / 1e3,
+        repaths: sim.repaths(),
+        route_epoch: sim.route_epoch(),
+        qp_reestablished: ds.qp_reestablished,
+        heal_backoff_ns: ds.backoff_ns,
+        heal_giveups: ds.heal_giveups,
+        retransmits,
+        retry_exceeded,
+        blackhole_drops: clos.blackhole_drops,
+        daemon_ops_ok: d_ok,
+        daemon_ops_failed: d_failed,
+        flows_alive: flows.iter().filter(|f| f.alive).count() as u64,
+        timeline_gbps: bins
+            .iter()
+            .map(|&b| gbps(b, Ns(FAILOVER_BIN_NS)))
+            .collect(),
         events: sim.steps_processed(),
     }
 }

@@ -12,9 +12,9 @@ use rdmavisor::fabric::time::Ns;
 use rdmavisor::fabric::topo::CcMode;
 use rdmavisor::figures::{self, Budget};
 use rdmavisor::workload::scenarios::{
-    chaos_send, churn_storm, incast_storm, kv_storm, locked_random_read, naive_random_read,
-    raas_random_read, scale_send, verbs_sweep_point, ChaosCfg, ChurnCfg, IncastCfg, KvCfg,
-    ScaleCfg, ScenarioCfg,
+    chaos_send, churn_storm, failover_storm, incast_storm, kv_storm, locked_random_read,
+    naive_random_read, raas_random_read, scale_send, verbs_sweep_point, ChaosCfg, ChurnCfg,
+    IncastCfg, KvCfg, ScaleCfg, ScenarioCfg,
 };
 
 /// Run one figure id end-to-end on `jobs` threads and serialize
@@ -621,6 +621,107 @@ fn fig13_no_cc_goodput_degrades_with_oversubscription() {
     assert!(
         *goodput.last().unwrap() < goodput[0],
         "deepest oversubscription must cost goodput: {goodput:?}"
+    );
+}
+
+// -------------------------------------------- survivable Clos + fig 14 (PR 10)
+
+#[test]
+fn fig14_replays_byte_identically() {
+    // the whole failover machinery — switch-fault events at the barrier,
+    // ECMP route epochs, blackhole salt bumps, daemon park/replay — under
+    // the determinism gate: same tape ⇒ byte-identical JSON
+    assert_fig_deterministic(14);
+}
+
+#[test]
+fn fig14_parallel_matches_serial() {
+    assert_eq!(fig_bytes_jobs(14, 1), fig_bytes_jobs(14, 4), "fig 14: --jobs 4 != --jobs 1");
+}
+
+#[test]
+fn fig14_sharded_matches_serial() {
+    // switch faults apply at the conservative barrier before absorption,
+    // so the post-failure timeline must be invariant to the partitioning
+    // — at 2 shards and 4
+    let serial = fig_bytes(14);
+    assert_eq!(serial, fig_bytes_sharded(14, 2), "fig 14: --shards 2 != --shards 1");
+    assert_eq!(serial, fig_bytes_sharded(14, 4), "fig 14: --shards 4 != --shards 1");
+}
+
+#[test]
+fn fig14_repath_off_matches_serial_under_jobs_and_shards() {
+    // the `fig --id 14 --repath-off` CLI path (frozen-routing ablation)
+    let run = |jobs, shards| {
+        let rows = figures::fig14_repath_off_sharded(Budget::Quick, jobs, shards);
+        format!(
+            "{}\n{}",
+            figures::fig14_series(&rows).to_json().to_string(),
+            figures::print_fig14(&rows)
+        )
+    };
+    let serial = run(1, 1);
+    assert_eq!(serial, run(4, 1), "fig 14 --repath-off: --jobs 4 != --jobs 1");
+    assert_eq!(serial, run(1, 4), "fig 14 --repath-off: --shards 4 != --shards 1");
+}
+
+#[test]
+fn repath_epochs_replay_across_shard_counts() {
+    // the repath-epoch gate: the route-epoch counter, the detector's salt
+    // bumps and the daemon's heal ledger are all coordinator-side state —
+    // a shard split must not move a single recovery event
+    let run = |shards| {
+        let mut cfg = figures::fig14_cfg(Budget::Quick, true);
+        cfg.shards = shards;
+        let r = failover_storm(&cfg);
+        (
+            r.route_epoch,
+            r.repaths,
+            r.qp_reestablished,
+            r.heal_giveups,
+            r.retry_exceeded,
+            r.blackhole_drops,
+            format!("{r:?}"),
+        )
+    };
+    let serial = run(1);
+    assert!(serial.0 > 0, "the failure tape must bump the route epoch: {serial:?}");
+    for shards in [2usize, 4] {
+        assert_eq!(serial, run(shards), "{shards} shards replay different recovery events");
+    }
+}
+
+#[test]
+fn fig14_repath_recovers_goodput_and_ablation_does_not() {
+    // the PR-10 acceptance gate, both halves on the quick tape:
+    // with repath + healing on, post-failure goodput returns to ≥90% of
+    // pre-failure and both recovery mechanisms demonstrably fired; with
+    // them off, flows die (retry_exceeded) and the fabric ends the run
+    // strictly worse
+    let on = failover_storm(&figures::fig14_cfg(Budget::Quick, true));
+    assert!(
+        on.post_gbps >= 0.9 * on.pre_gbps,
+        "repath-on must recover ≥90% of pre-failure goodput: pre {:.2} post {:.2}",
+        on.pre_gbps,
+        on.post_gbps
+    );
+    assert!(on.repaths > 0, "the blackhole detector must fire: {on:?}");
+    assert!(on.qp_reestablished > 0, "daemon healing must revive a QP: {on:?}");
+    assert!(on.route_epoch > 0, "reconvergence must bump the epoch: {on:?}");
+
+    let off = failover_storm(&figures::fig14_cfg(Budget::Quick, false));
+    assert!(off.retry_exceeded > 0, "frozen routing must kill flows: {off:?}");
+    assert!(
+        off.post_gbps < on.post_gbps,
+        "the ablation must end strictly worse: off {:.2} vs on {:.2} Gb/s",
+        off.post_gbps,
+        on.post_gbps
+    );
+    assert!(
+        off.flows_alive < on.flows_alive,
+        "dead flows must show in the survivor count: off {} vs on {}",
+        off.flows_alive,
+        on.flows_alive
     );
 }
 

@@ -748,6 +748,261 @@ fn churn_under_loss_keeps_exactly_once_completions() {
     }
 }
 
+// --------------------------------------------- survivable Clos (PR 10)
+
+/// A 3-ToR Clos (4 hosts per ToR, oversub 1 → 4 uplinks/spines) with the
+/// retransmit clock tightened so detector/retry ordering is exercised in
+/// microseconds, not milliseconds.
+fn clos_sim(repath: bool, reroute_lag_ns: u64, retry_cnt: u32) -> Sim {
+    use rdmavisor::fabric::topo::TopoConfig;
+    let mut topo = TopoConfig::default();
+    topo.hosts_per_tor = 4;
+    topo.oversub = 1;
+    topo.repath = repath;
+    topo.reroute_lag_ns = reroute_lag_ns;
+    let mut fcfg = FabricConfig::default();
+    fcfg.nodes = 12;
+    fcfg.sq_depth = 8192;
+    fcfg.nic.retransmit_timeout_ns = 50_000;
+    fcfg.nic.retry_cnt = retry_cnt;
+    fcfg.topo = Some(topo);
+    Sim::new(fcfg)
+}
+
+/// Draw RC pairs between `src` and `dst` until ECMP hashes one onto
+/// `spine` (each pair gets fresh QPNs, so each draw re-rolls the hash) —
+/// makes the spine-death tests deterministic instead of hoping some flow
+/// of a big population crossed the dead switch.
+fn pair_via_spine(
+    sim: &mut Sim,
+    cq_src: rdmavisor::fabric::types::Cqn,
+    cq_dst: rdmavisor::fabric::types::Cqn,
+    src: NodeId,
+    dst: NodeId,
+    spine: usize,
+) -> rdmavisor::fabric::types::Qpn {
+    for _ in 0..64 {
+        let pair = verbs::create_connected_pair(
+            sim,
+            QpTransport::Rc,
+            src,
+            dst,
+            cq_src,
+            cq_src,
+            cq_dst,
+            cq_dst,
+        );
+        if sim.clos().expect("topology installed").path_of(src, dst, pair.a.1, pair.b.1) == spine
+        {
+            return pair.a.1;
+        }
+    }
+    panic!("no QP pair hashed onto spine {spine} in 64 draws");
+}
+
+#[test]
+fn spine_window_death_recovers_exactly_once() {
+    // spine 0 dies at 50 µs and revives at 2 ms, under a transfer pinned
+    // to it. Between the per-QP blackhole escape (3 timeouts ≈ 150 µs)
+    // and the 200 µs reconvergence backstop, every WRITE must complete
+    // exactly once — GBN retransmission repaths, never duplicates
+    let mut sim = clos_sim(true, 200_000, 7);
+    sim.install_faults(FaultConfig {
+        spine_windows: vec![(0, 50_000, 2_000_000)],
+        ..FaultConfig::default()
+    });
+    let (src, dst) = (NodeId(4), NodeId(8)); // ToR 1 host → ToR 2 host
+    let cq_src = sim.create_cq(src, 1 << 14);
+    let cq_dst = sim.create_cq(dst, 1 << 14);
+    let qpn = pair_via_spine(&mut sim, cq_src, cq_dst, src, dst, 0);
+    let local = sim.reg_mr(src, 64 << 20, Access::REMOTE_RW, true);
+    let remote = sim.reg_mr(dst, 64 << 20, Access::REMOTE_RW, true);
+    let n = 40u64;
+    for i in 0..n {
+        sim.post_send(
+            src,
+            qpn,
+            SendWr::write(i, 64 << 10, local.key, local.addr, remote.key, remote.addr),
+        )
+        .unwrap();
+    }
+    drain(&mut sim);
+    let cqes = sim.poll_cq(src, cq_src, 1000);
+    assert_eq!(cqes.len() as u64, n, "every WRITE completes");
+    let mut seen = std::collections::HashSet::new();
+    for c in &cqes {
+        assert_eq!(c.status, WcStatus::Success, "{c:?}");
+        assert!(seen.insert(c.wr_id), "wr {} completed twice", c.wr_id);
+    }
+    assert!(sim.node(src).retransmits > 0, "the dead spine must force retransmissions");
+    assert!(sim.clos_stats().blackhole_drops > 0, "frames must have hit the dead port");
+    assert!(
+        sim.repaths() > 0 || sim.route_epoch() > 0,
+        "recovery must come from the repath machinery, not luck: repaths={} epoch={}",
+        sim.repaths(),
+        sim.route_epoch()
+    );
+    assert_eq!(sim.node(src).retry_exceeded, 0, "no flow may die inside the budget");
+}
+
+#[test]
+fn blackhole_detector_fires_before_retry_exhaustion() {
+    // reconvergence lagged to 600 µs, retry budget stretched to 12: the
+    // detector's three-timeout fuse (~150 µs of stall) is the first
+    // recovery to fire, and between it and the late mask update the flow
+    // must survive with the budget untouched
+    let mut sim = clos_sim(true, 600_000, 12);
+    sim.install_faults(FaultConfig {
+        spine_windows: vec![(0, 50_000, 100_000_000)],
+        ..FaultConfig::default()
+    });
+    let (src, dst) = (NodeId(4), NodeId(8));
+    let cq_src = sim.create_cq(src, 1 << 14);
+    let cq_dst = sim.create_cq(dst, 1 << 14);
+    let qpn = pair_via_spine(&mut sim, cq_src, cq_dst, src, dst, 0);
+    let local = sim.reg_mr(src, 64 << 20, Access::REMOTE_RW, true);
+    let remote = sim.reg_mr(dst, 64 << 20, Access::REMOTE_RW, true);
+    let n = 20u64;
+    for i in 0..n {
+        sim.post_send(
+            src,
+            qpn,
+            SendWr::write(i, 32 << 10, local.key, local.addr, remote.key, remote.addr),
+        )
+        .unwrap();
+    }
+    drain(&mut sim);
+    let cqes = sim.poll_cq(src, cq_src, 1000);
+    assert_eq!(cqes.len() as u64, n);
+    for c in &cqes {
+        assert_eq!(c.status, WcStatus::Success, "{c:?}");
+    }
+    assert!(sim.node(src).repaths >= 1, "the blackhole detector must fire");
+    assert_eq!(
+        sim.node(src).retry_exceeded,
+        0,
+        "the detector + remask must beat the 12-retry budget"
+    );
+
+    // the ablation: repath off freezes the mask AND disarms the detector,
+    // so the same pinned flow burns its whole budget and dies
+    let mut sim = clos_sim(false, 600_000, 7);
+    sim.install_faults(FaultConfig {
+        spine_windows: vec![(0, 50_000, 100_000_000)],
+        ..FaultConfig::default()
+    });
+    let cq_src = sim.create_cq(src, 1 << 14);
+    let cq_dst = sim.create_cq(dst, 1 << 14);
+    let qpn = pair_via_spine(&mut sim, cq_src, cq_dst, src, dst, 0);
+    let local = sim.reg_mr(src, 64 << 20, Access::REMOTE_RW, true);
+    let remote = sim.reg_mr(dst, 64 << 20, Access::REMOTE_RW, true);
+    for i in 0..n {
+        sim.post_send(
+            src,
+            qpn,
+            SendWr::write(i, 32 << 10, local.key, local.addr, remote.key, remote.addr),
+        )
+        .unwrap();
+    }
+    drain(&mut sim);
+    assert!(sim.node(src).retry_exceeded > 0, "without repath the pinned flow must die");
+    assert_eq!(sim.repaths(), 0, "the detector is disarmed when repath is off");
+    assert_eq!(sim.route_epoch(), 0, "the mask never reconverges when repath is off");
+}
+
+#[test]
+fn daemon_reestablishes_qp_after_retry_exhaustion() {
+    // a 2.3 ms link blackout outlasts the ~1.3 ms retry budget: the
+    // shared QP retry-fails, the daemon parks it (no ok:false yet),
+    // re-establishes after the 500 µs backoff, replays the stashed WRs,
+    // and once the link returns every op completes ok — exactly once,
+    // with the lease ledger balanced
+    let mut fcfg = FabricConfig::default();
+    fcfg.nodes = 2;
+    fcfg.sq_depth = 8192;
+    fcfg.nic.retransmit_timeout_ns = 50_000;
+    fcfg.nic.retry_cnt = 5;
+    let mut sim = Sim::new(fcfg);
+    sim.install_faults(FaultConfig {
+        seed: 53,
+        flaps: vec![Flap {
+            src: NodeId(0),
+            dst: NodeId(1),
+            from: Ns(200_000),
+            until: Ns(2_500_000),
+        }],
+        ..FaultConfig::default()
+    });
+    let mut cfg = DaemonConfig::default();
+    cfg.migration.enabled = false;
+    cfg.heal_max_attempts = 6;
+    cfg.heal_backoff_ns = 500_000;
+    cfg.heal_backoff_cap_ns = 800_000;
+    let mut daemons = vec![
+        Daemon::start(&mut sim, NodeId(0), cfg.clone()),
+        Daemon::start(&mut sim, NodeId(1), cfg),
+    ];
+    let c_app = daemons[0].register_app();
+    let s_app = daemons[1].register_app();
+    daemons[1].listen(s_app, 1);
+    // connect (and eagerly establish creds) before the link goes dark
+    let conn = connect_via(&mut sim, &mut daemons, 0, c_app, 1, 1).unwrap();
+    pump_to_quiescence(&mut sim, &mut daemons);
+
+    // step into the blackout, then issue the reads that must exhaust
+    sim.schedule(Ns(250_000), 1);
+    while sim.step().is_some() {}
+    let n = 8u64;
+    for i in 0..n {
+        daemons[0].read(&mut sim, conn, 2048, i * 4096, i).unwrap();
+    }
+    // drive idle ticks so retry timers and the heal backoff keep maturing
+    // even while every QP of the fabric is parked
+    let deadline = Ns::from_ms(10);
+    let mut saw_parked = false;
+    let mut guard = 0u32;
+    loop {
+        guard += 1;
+        assert!(guard < 500_000, "heal did not converge");
+        for d in daemons.iter_mut() {
+            d.pump(&mut sim);
+        }
+        saw_parked |= daemons[0].heals_active() > 0;
+        if sim.step().is_none() {
+            if sim.now() >= deadline {
+                break;
+            }
+            let t = sim.now() + Ns(50_000);
+            sim.schedule(t, 1);
+        }
+    }
+    for d in daemons.iter_mut() {
+        d.pump(&mut sim);
+    }
+
+    assert!(sim.node(NodeId(0)).retry_exceeded > 0, "the blackout must exhaust the budget");
+    assert!(saw_parked, "the daemon must park the dead QP in a heal cycle");
+    let ds = &daemons[0].stats;
+    assert!(ds.qp_reestablished >= 1, "heal must revive the QP: {ds:?}");
+    assert_eq!(ds.heal_giveups, 0, "the blackout ends inside the backoff budget");
+    assert_eq!(ds.ops_failed, 0, "no op surfaces as failed — the replay completed them");
+    assert!(ds.backoff_ns > 0, "parked time must be accounted");
+    assert_eq!(daemons[0].heals_active(), 0, "a concluded heal leaves no residue");
+    // exactly-once: one delivery per op, all ok, ledger balanced
+    let mut ok = 0u64;
+    let mut total = 0u64;
+    while let Some(d) = daemons[0].recv_zero_copy(&mut sim, c_app) {
+        let Delivery::OpComplete { ok: o, .. } = d else { panic!("{d:?}") };
+        total += 1;
+        if o {
+            ok += 1;
+        }
+    }
+    assert_eq!(total, n, "one delivery per op — no duplicates from the replay");
+    assert_eq!(ok, n, "every replayed op completes ok");
+    assert_eq!(daemons[0].pool.leased_bytes, 0, "lease balance intact through park/replay");
+}
+
 #[test]
 fn null_plan_is_not_installed() {
     let mut sim = Sim::new(FabricConfig::default());

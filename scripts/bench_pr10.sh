@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Produce BENCH_PR10.json: the fig-14 failover-storm benchmark — steady
+# Clos traffic through a scheduled spine death, measuring pre-failure /
+# dip / post-recovery goodput, mouse p99 FCT and the repath / heal /
+# retry-exceeded counters, with full repair (blackhole detector + ECMP
+# reconvergence + daemon self-healing) against the repath-off ablation.
+# With --shards N each mode is re-run on the conservative-parallel
+# executor and the artifact records the speedup plus the
+# identical_series byte-identity bit. CI runs this with --quick and
+# uploads the JSON plus the rendered markdown (scripts/perf_table.py
+# takes any number of BENCH_*.json inputs); run it with no arguments on
+# a quiet machine for the full-storm numbers quoted in README.md.
+#
+#   scripts/bench_pr10.sh [--quick] [OUT.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+quick=""
+out="BENCH_PR10.json"
+for arg in "$@"; do
+    case "$arg" in
+        --quick) quick="--quick" ;;
+        *) out="$arg" ;;
+    esac
+done
+
+cargo build --release
+cargo run --quiet --release -- bench failover $quick --shards 2 --out "$out" >/dev/null
+
+echo "wrote $out"

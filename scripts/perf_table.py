@@ -1,11 +1,12 @@
 #!/usr/bin/env python3
 """Render one or more BENCH_*.json artifacts (from `rdmavisor bench
 fig9` / `rdmavisor bench kv` / `rdmavisor bench churn` / `rdmavisor
-bench incast` / bench_pr{3,5,6,7,8,9}.sh) as the markdown perf tables
-README.md quotes. Stdlib only.
+bench incast` / `rdmavisor bench failover` / bench_pr{3,5,6,7,8,9,10}.sh)
+as the markdown perf tables README.md quotes. Stdlib only.
 
     python3 scripts/perf_table.py BENCH_PR5.json BENCH_PR6.json \
-        BENCH_PR7.json BENCH_PR8.json BENCH_PR9.json > BENCH_PR6.md
+        BENCH_PR7.json BENCH_PR8.json BENCH_PR9.json BENCH_PR10.json \
+        > BENCH_PR6.md
 
 Each input gets its own section (headed by the file name), so one
 markdown artifact can carry the whole recorded perf trajectory. CI runs
@@ -134,6 +135,79 @@ def render_incast(doc: dict) -> None:
         f"\nTotal: {total_events:.0f} events in {total_wall:.0f} ms "
         f"({eps:.0f} events/sec aggregate)."
     )
+
+
+def render_failover(doc: dict) -> None:
+    """The `bench failover` artifact: fig-14 survivable-Clos storm."""
+    budget = doc.get("budget", "?")
+    jobs = doc.get("jobs")
+    shards = doc.get("shards")
+    sharded = shards is not None and shards > 1
+    suffix = f", jobs: {jobs:.0f}" if jobs is not None else ""
+    if sharded:
+        suffix += f", shards: {shards:.0f}"
+    print(
+        f"### Fig-14 failover storm: goodput through a spine death, "
+        f"repair vs repath-off (budget: {budget}{suffix})\n"
+    )
+    head = (
+        "| mode | wall ms | pre Gb/s | dip Gb/s | post Gb/s | p99 FCT µs "
+        "| repaths | epochs | QPs healed | heal give-ups | retry-exceeded "
+        "| retransmits | blackhole drops | flows alive |"
+    )
+    rule = "|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|"
+    if sharded:
+        head += " sharded ms | speedup |"
+        rule += "---:|---:|"
+    print(head)
+    print(rule)
+    for p in doc.get("points", []):
+        row = (
+            "| {mode} | {wall_ms:.1f} | {pre:.2f} | {dip:.2f} | {post:.2f} "
+            "| {p99:.1f} | {rp:.0f} | {ep:.0f} | {heal:.0f} | {gu:.0f} "
+            "| {rx:.0f} | {rtx:.0f} | {bh:.0f} | {alive:.0f} |".format(
+                mode=p.get("mode", "?"),
+                wall_ms=p.get("wall_ms", 0),
+                pre=p.get("pre_gbps", 0) or 0,
+                dip=p.get("dip_gbps", 0) or 0,
+                post=p.get("post_gbps", 0) or 0,
+                p99=p.get("p99_fct_us", 0) or 0,
+                rp=p.get("repaths", 0) or 0,
+                ep=p.get("route_epoch", 0) or 0,
+                heal=p.get("qp_reestablished", 0) or 0,
+                gu=p.get("heal_giveups", 0) or 0,
+                rx=p.get("retry_exceeded", 0) or 0,
+                rtx=p.get("retransmits", 0) or 0,
+                bh=p.get("blackhole_drops", 0) or 0,
+                alive=p.get("flows_alive", 0) or 0,
+            )
+        )
+        if sharded:
+            row += " {sw:.1f} | {sp:.2f}x |".format(
+                sw=p.get("sharded_wall_ms", 0) or 0,
+                sp=p.get("speedup", 0) or 0,
+            )
+        print(row)
+    total_events = doc.get("total_events", 0)
+    total_wall = doc.get("total_wall_ms", 0)
+    eps = doc.get("events_per_sec", 0) or 0
+    print(
+        f"\nTotal: {total_events:.0f} events in {total_wall:.0f} ms "
+        f"({eps:.0f} events/sec aggregate)."
+    )
+    if sharded:
+        swall = doc.get("total_sharded_wall_ms", 0) or 0
+        ident = doc.get("identical_series")
+        verdict = (
+            "byte-identical to serial"
+            if ident
+            else "**SERIES MISMATCH — determinism bug**"
+        )
+        print(
+            f"\nSharded x{shards:.0f}: {swall:.0f} ms "
+            f"({total_wall / swall if swall else 0:.2f}x aggregate speedup); "
+            f"output series {verdict}."
+        )
 
 
 def render_fig9(doc: dict) -> None:
@@ -267,6 +341,8 @@ def render(path: str) -> bool:
         render_churn(doc)
     elif mode == "incast":
         render_incast(doc)
+    elif mode == "failover":
+        render_failover(doc)
     else:
         render_fig9(doc)
     return True
@@ -282,6 +358,7 @@ def main() -> int:
             "BENCH_PR7.json",
             "BENCH_PR8.json",
             "BENCH_PR9.json",
+            "BENCH_PR10.json",
         ]
     )
     ok = True

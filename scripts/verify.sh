@@ -160,6 +160,35 @@ if [[ "$(strip_wall "$out13s")" != "$(strip_wall "$out13")" ]]; then
 fi
 echo "ok: fig --id 13 --shards 2 matches the serial simulator byte-for-byte"
 
+echo "== smoke: fig 14 (failover storm through a spine death) =="
+out14="$(cargo run --quiet --release -- fig --id 14 --quick 2>/dev/null)"
+case "$out14" in
+    '{"budget"'*|'{'*'"command":"fig"'*)
+        case "$out14" in
+            *'"fig14_failover"'*) echo "ok: fig --id 14 printed the fig14_failover series" ;;
+            *) echo "FAIL: fig 14 JSON lacks the fig14_failover series: ${out14:0:160}" >&2; exit 1 ;;
+        esac ;;
+    *) echo "FAIL: unexpected fig 14 output: ${out14:0:120}" >&2; exit 1 ;;
+esac
+
+echo "== smoke: fig 14 --shards 2 (faults at the coordinator barrier, byte-identical) =="
+# switch deaths, repath epochs and daemon heals all replay through the
+# conservative barrier — same strip_wall treatment as the fig-9 smoke;
+# the full gates (jobs x shards x repath-off) live in tests/determinism.rs
+out14s="$(cargo run --quiet --release -- fig --id 14 --quick --shards 2 2>/dev/null)"
+if [[ "$(strip_wall "$out14s")" != "$(strip_wall "$out14")" ]]; then
+    echo "FAIL: fig 14 --shards 2 JSON differs from the serial simulator" >&2
+    exit 1
+fi
+echo "ok: fig --id 14 --shards 2 matches the serial simulator byte-for-byte"
+
+echo "== smoke: fig 14 --repath-off (survivability ablation) =="
+out14a="$(cargo run --quiet --release -- fig --id 14 --quick --repath-off 2>/dev/null)"
+case "$out14a" in
+    *'"fig14_failover"'*) echo "ok: fig --id 14 --repath-off printed the ablation series" ;;
+    *) echo "FAIL: unexpected fig 14 --repath-off output: ${out14a:0:120}" >&2; exit 1 ;;
+esac
+
 echo "== smoke: bench incast (Clos goodput sweep -> JSON) =="
 # --out to a temp file so the smoke never clobbers a tracked BENCH_PR9.json
 incast_tmp="$(mktemp)"
@@ -169,6 +198,19 @@ rm -f "$incast_tmp"
 case "$outin" in
     *'"events_per_sec"'*'"mode":"incast"'*) echo "ok: bench incast printed goodput JSON" ;;
     *) echo "FAIL: unexpected bench incast output: ${outin:0:120}" >&2; exit 1 ;;
+esac
+
+echo "== smoke: bench failover (fig-14 storm + shard identity bit -> JSON) =="
+# --out to a temp file so the smoke never clobbers a tracked BENCH_PR10.json
+failover_tmp="$(mktemp)"
+outfo="$(cargo run --quiet --release -- bench failover --quick --shards 2 --out "$failover_tmp" 2>/dev/null)"
+rm -f "$failover_tmp"
+# jsonmini sorts object keys, so "identical_series" precedes "mode"
+case "$outfo" in
+    *'"identical_series":true'*'"mode":"failover"'*) echo "ok: bench failover printed JSON with identical_series:true" ;;
+    *'"identical_series":false'*)
+        echo "FAIL: bench failover reports a serial/sharded series mismatch" >&2; exit 1 ;;
+    *) echo "FAIL: unexpected bench failover output: ${outfo:0:120}" >&2; exit 1 ;;
 esac
 
 echo "== smoke: bench churn (tenant setup rate -> JSON) =="
